@@ -1,0 +1,106 @@
+//! The coordinator as a network service: an EMA/ATA parameter server.
+//!
+//! Starts the TCP service in-process, then simulates a small training
+//! fleet: 4 "trainer" clients each push their layer's parameter vectors
+//! every step, while an "evaluator" client concurrently snapshots the
+//! anytime averages — the deployment shape for model-weight EMA serving
+//! (serve the tail-averaged weights while training continues).
+//!
+//! Run: `cargo run --release --example averaging_service`
+
+use ata::config::BackpressurePolicy;
+use ata::coordinator::{Client, Coordinator, Server};
+use ata::rng::{GaussianSource, Xoshiro256};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+fn main() {
+    let coordinator = Arc::new(Coordinator::new(4, 1024, BackpressurePolicy::Block));
+    let server = Server::start("127.0.0.1:0", coordinator, 8).expect("server");
+    let addr = server.addr().to_string();
+    println!("averaging service listening on {addr}");
+
+    // Register one stream per layer.
+    let layers = ["embed", "attn.0", "mlp.0", "head"];
+    let dim = 256;
+    {
+        let mut admin = Client::connect(&addr).expect("admin connect");
+        for layer in &layers {
+            admin
+                .register(&format!("{layer}.weight"), dim, "awa3(c=0.5)")
+                .expect("register");
+        }
+        println!("registered {} streams (dim {dim}, awa3(c=0.5))", layers.len());
+    }
+
+    let steps = 400u64;
+    // Trainer threads: each owns one layer and pushes a drifting
+    // parameter vector (simulated optimization trajectory).
+    let mut trainers = Vec::new();
+    for (li, layer) in layers.iter().enumerate() {
+        let addr = addr.clone();
+        let layer = layer.to_string();
+        trainers.push(thread::spawn(move || {
+            let mut cl = Client::connect(&addr).expect("trainer connect");
+            let mut g = GaussianSource::new(Xoshiro256::seed_from_u64(li as u64));
+            let mut w = vec![0.0f64; dim];
+            for t in 1..=steps {
+                // SGD-ish drift toward 1.0 plus noise.
+                for v in w.iter_mut() {
+                    *v += 0.05 * (1.0 - *v) + 0.1 * g.next_gaussian();
+                }
+                cl.push(&format!("{layer}.weight"), &w).expect("push");
+                if t % 100 == 0 {
+                    thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }));
+    }
+
+    // Evaluator: periodically reads the anytime averages.
+    let evaluator = {
+        let addr = addr.clone();
+        let layers: Vec<String> = layers.iter().map(|s| s.to_string()).collect();
+        thread::spawn(move || {
+            let mut cl = Client::connect(&addr).expect("eval connect");
+            for round in 1..=8 {
+                thread::sleep(Duration::from_millis(30));
+                let mut line = format!("eval round {round}:");
+                for layer in &layers {
+                    let snap = cl.snapshot(&format!("{layer}.weight")).expect("snap");
+                    let mean = snap
+                        .value
+                        .map(|v| v.iter().sum::<f64>() / v.len() as f64)
+                        .unwrap_or(f64::NAN);
+                    line.push_str(&format!("  {layer}: t={} w̄={mean:.3}", snap.t));
+                }
+                println!("{line}");
+            }
+        })
+    };
+
+    for t in trainers {
+        t.join().unwrap();
+    }
+    evaluator.join().unwrap();
+
+    // Final state + metrics.
+    let mut cl = Client::connect(&addr).expect("final connect");
+    cl.sync().expect("sync");
+    println!("\nfinal averaged weights (first 4 dims per layer):");
+    for layer in &layers {
+        let snap = cl.snapshot(&format!("{layer}.weight")).unwrap();
+        let v = snap.value.unwrap();
+        println!(
+            "  {layer:<8} t={} k_t={:>6.1}  w̄[0..4]={:?}",
+            snap.t,
+            snap.window_len,
+            &v[..4]
+                .iter()
+                .map(|x| (x * 1000.0).round() / 1000.0)
+                .collect::<Vec<_>>()
+        );
+    }
+    println!("\nservice metrics:\n{}", cl.metrics().unwrap().encode_pretty());
+}

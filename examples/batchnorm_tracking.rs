@@ -1,0 +1,108 @@
+//! BatchNorm-style statistics tracking — the paper-conclusion use case.
+//!
+//! The conclusion proposes replacing BatchNorm's fixed-decay EMA of
+//! activation statistics with a *growing* exponential average: early in
+//! training the activations drift fast (short window adapts), later they
+//! stabilize (the window grows with t, averaging away noise).
+//!
+//! This example simulates per-unit activation streams whose distribution
+//! drifts and then freezes, tracks (mean, variance) with a classic EMA
+//! vs GEA vs AWA3 via [`ata::stats::MomentTracker`], and reports the
+//! normalization error of each tracker in both phases.
+//!
+//! Run: `cargo run --release --example batchnorm_tracking`
+
+use ata::averagers::AveragerSpec;
+use ata::rng::{GaussianSource, Xoshiro256};
+use ata::stats::MomentTracker;
+
+/// True activation distribution at step t: drifts for the first half,
+/// then stationary (optimization converged).
+fn true_params(t: u64, unit: usize, drift_until: u64) -> (f64, f64) {
+    let u = unit as f64;
+    let progress = (t.min(drift_until) as f64) / drift_until as f64;
+    let mean = 2.0 * u * progress; // drifts to 2u
+    let std = 1.0 + 0.5 * u * progress; // drifts to 1 + u/2
+    (mean, std)
+}
+
+fn main() {
+    let d = 4; // units
+    let total: u64 = 20_000;
+    let drift_until: u64 = 10_000;
+
+    let trackers: Vec<(&str, AveragerSpec)> = vec![
+        ("ema(k=500)", AveragerSpec::ExpK { k: 500 }),
+        ("gea(c=0.25)", AveragerSpec::Gea { c: 0.25 }),
+        (
+            "awa3(c=0.25)",
+            AveragerSpec::parse("awa3(c=0.25)").unwrap(),
+        ),
+    ];
+    let mut trk: Vec<MomentTracker> = trackers
+        .iter()
+        .map(|(_, s)| MomentTracker::new(d, s).unwrap())
+        .collect();
+
+    let mut g = GaussianSource::new(Xoshiro256::seed_from_u64(7));
+    let mut x = vec![0.0; d];
+
+    // Accumulate the estimation error of (mean, var) in each phase.
+    let mut drift_err = vec![0.0f64; trackers.len()];
+    let mut stable_err = vec![0.0f64; trackers.len()];
+    let mut drift_n = 0u64;
+    let mut stable_n = 0u64;
+
+    for t in 1..=total {
+        for unit in 0..d {
+            let (m, s) = true_params(t, unit, drift_until);
+            x[unit] = m + s * g.next_gaussian();
+        }
+        let mut mean = vec![0.0; d];
+        let mut var = vec![0.0; d];
+        for (i, tr) in trk.iter_mut().enumerate() {
+            tr.observe(&x);
+            if t % 50 == 0 && tr.mean_into(&mut mean) && tr.variance_into(&mut var) {
+                let mut err = 0.0;
+                for unit in 0..d {
+                    let (tm, ts) = true_params(t, unit, drift_until);
+                    err += (mean[unit] - tm).powi(2) + (var[unit] - ts * ts).powi(2);
+                }
+                if t <= drift_until {
+                    drift_err[i] += err;
+                } else {
+                    stable_err[i] += err;
+                }
+            }
+        }
+        if t % 50 == 0 {
+            if t <= drift_until {
+                drift_n += 1;
+            } else {
+                stable_n += 1;
+            }
+        }
+    }
+
+    println!("BatchNorm statistics tracking over a drift→stable stream");
+    println!("({total} steps, drift ends at {drift_until}; error = squared (mean,var) misfit)\n");
+    println!(
+        "{:<14} {:>18} {:>18} {:>12}",
+        "tracker", "drift-phase err", "stable-phase err", "memory (f64)"
+    );
+    for (i, (name, _)) in trackers.iter().enumerate() {
+        println!(
+            "{:<14} {:>18.4} {:>18.6} {:>12}",
+            name,
+            drift_err[i] / drift_n as f64,
+            stable_err[i] / stable_n as f64,
+            trk[i].memory_floats()
+        );
+    }
+    println!(
+        "\nExpected shape: the fixed EMA is competitive during drift but its \
+         stable-phase error floors at the fixed window's variance; the \
+         growing-window trackers keep improving as t grows — the paper's \
+         conclusion, quantified."
+    );
+}

@@ -1,0 +1,176 @@
+//! END-TO-END driver: the paper's §4 experiment through the full stack.
+//!
+//! Rust samples the data (L3 substrate) → the AOT-compiled JAX/Pallas
+//! `sgd_chunk` artifact advances the optimizer 100 steps per PJRT call
+//! (L2+L1) → every iterate streams through a `Coordinator` whose streams
+//! run the paper's estimators (L3 contribution) → excess-error curves of
+//! Figure 3 are printed, with the PJRT trajectory cross-checked against
+//! the native Rust SGD.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example linreg_experiment -- --runs 20 --c 0.5
+//!
+//! Results recorded in EXPERIMENTS.md §End-to-end.
+
+use ata::averagers::AveragerSpec;
+use ata::config::BackpressurePolicy;
+use ata::coordinator::Coordinator;
+use ata::linreg::{LinRegProblem, Sgd, SgdConfig};
+use ata::report;
+use ata::rng::{GaussianSource, Xoshiro256};
+use ata::runtime::{artifacts_available, Runtime, DEFAULT_ARTIFACTS_DIR};
+use ata::util::cli::CommandSpec;
+use std::time::Instant;
+
+const CHUNK: usize = 100; // must match the exported sgd_chunk artifact
+
+fn main() {
+    let spec = CommandSpec::new("linreg_experiment", "end-to-end paper experiment via PJRT")
+        .opt("runs", "20", "independent runs")
+        .opt("steps", "1000", "SGD steps (multiple of 100)")
+        .opt("c", "0.5", "window fraction for figure 3")
+        .opt("artifacts", DEFAULT_ARTIFACTS_DIR, "artifacts directory");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p = match spec.parse(&args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}\n{}", spec.help_text("cargo run --example"));
+            std::process::exit(2);
+        }
+    };
+    let runs = p.u64("runs").unwrap();
+    let steps = p.u64("steps").unwrap() as usize;
+    let c = p.f64("c").unwrap();
+    let dir = p.str("artifacts");
+    assert!(steps % CHUNK == 0, "--steps must be a multiple of {CHUNK}");
+
+    if !artifacts_available(&dir) {
+        eprintln!("no artifacts in '{dir}' — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let rt = Runtime::from_dir(&dir).expect("runtime");
+    let chunk_name = format!("sgd_chunk_d50_b11_s{CHUNK}");
+    rt.load(&chunk_name).expect("compile chunk"); // warm the cache
+
+    let problem = LinRegProblem::paper_default();
+    let sgd_cfg = SgdConfig::paper_default();
+    let (d, b) = (problem.d, sgd_cfg.batch_size);
+
+    // The estimators of Figure 3, hosted in the coordinator.
+    let specs: Vec<AveragerSpec> = vec![
+        AveragerSpec::Raw {
+            c,
+            total_steps: steps as u64,
+        },
+        AveragerSpec::Gea { c },
+        AveragerSpec::parse(&format!("awa2(c={c})")).unwrap(),
+        AveragerSpec::parse(&format!("awa3(c={c})")).unwrap(),
+        AveragerSpec::parse(&format!("true(c={c})")).unwrap(),
+    ];
+    let labels: Vec<String> = specs
+        .iter()
+        .map(|s| s.label())
+        .chain(["iterate".to_string()])
+        .collect();
+
+    let eval_steps: Vec<u64> = ata::linreg::EvalSchedule::LogSpaced { points: 40 }
+        .steps(steps as u64);
+    let mut sums = vec![vec![0.0f64; eval_steps.len()]; labels.len()];
+    let t0 = Instant::now();
+    let mut max_divergence = 0.0f64;
+
+    for run in 0..runs {
+        // Fresh coordinator per run (streams keyed by estimator label).
+        let coord = Coordinator::new(2, 1024, BackpressurePolicy::Block);
+        for (i, s) in specs.iter().enumerate() {
+            coord.register(&format!("est{i}"), d, s.clone()).unwrap();
+        }
+        // Data stream — identical to what the native path would draw.
+        let mut gauss = GaussianSource::new(Xoshiro256::substream(20190221, run));
+        let mut native = Sgd::substream(problem.clone(), sgd_cfg, 20190221, run).unwrap();
+
+        let mut w = vec![0.0f32; d];
+        let mut xs = vec![0.0f64; CHUNK * b * d];
+        let mut ys = vec![0.0f64; CHUNK * b];
+        let mut eval_iter = eval_steps.iter().peekable();
+        for chunk_idx in 0..(steps / CHUNK) {
+            for i in 0..CHUNK {
+                problem.sample_batch(
+                    &mut gauss,
+                    &mut xs[i * b * d..(i + 1) * b * d],
+                    &mut ys[i * b..(i + 1) * b],
+                );
+            }
+            let xs32: Vec<f32> = xs.iter().map(|&v| v as f32).collect();
+            let ys32: Vec<f32> = ys.iter().map(|&v| v as f32).collect();
+            let out = rt
+                .call(
+                    &chunk_name,
+                    &[&w, &xs32, &ys32, &[sgd_cfg.step_size as f32]],
+                )
+                .expect("sgd_chunk");
+            w.copy_from_slice(&out[0]);
+            let iterates = &out[1]; // (CHUNK, d)
+
+            // Stream every iterate into the coordinator + evaluate.
+            for i in 0..CHUNK {
+                let t = (chunk_idx * CHUNK + i + 1) as u64;
+                let wi: Vec<f64> = iterates[i * d..(i + 1) * d]
+                    .iter()
+                    .map(|&x| x as f64)
+                    .collect();
+                // Cross-check against the native path (same data).
+                native.step();
+                if t % 250 == 0 {
+                    let div = wi
+                        .iter()
+                        .zip(native.w())
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f64, f64::max);
+                    max_divergence = max_divergence.max(div);
+                }
+                for e in 0..specs.len() {
+                    coord.push(&format!("est{e}"), wi.clone()).unwrap();
+                }
+                if eval_iter.peek() == Some(&&t) {
+                    eval_iter.next();
+                    coord.sync().unwrap();
+                    let idx = eval_steps.iter().position(|&s| s == t).unwrap();
+                    for e in 0..specs.len() {
+                        let snap = coord.snapshot(&format!("est{e}")).unwrap();
+                        let err = problem.excess_error(&snap.value.unwrap());
+                        sums[e][idx] += err;
+                    }
+                    sums[specs.len()][idx] += problem.excess_error(&wi);
+                }
+            }
+        }
+        eprintln!("run {}/{runs} done", run + 1);
+    }
+
+    let curves: Vec<ata::linreg::Curve> = labels
+        .iter()
+        .enumerate()
+        .map(|(i, label)| ata::linreg::Curve {
+            label: label.clone(),
+            mean: sums[i].iter().map(|s| s / runs as f64).collect(),
+            stderr: vec![0.0; eval_steps.len()],
+        })
+        .collect();
+    let res = ata::linreg::ExperimentResult {
+        steps: eval_steps,
+        curves,
+        runs,
+        wall: t0.elapsed(),
+    };
+
+    println!("\n=== Figure 3 (c={c}) — full stack: PJRT sgd_chunk + coordinator ===\n");
+    println!("{}", report::render_curves(&res, 20));
+    println!("{}", report::render_summary(&res));
+    println!(
+        "PJRT-vs-native max |Δw| at checkpoints: {max_divergence:.3e} (f32 drift)"
+    );
+    println!("wall: {:?} ({} runs x {steps} steps)", res.wall, runs);
+    let m = rt.metrics().export();
+    println!("runtime metrics: {}", m.encode());
+}

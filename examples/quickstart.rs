@@ -1,0 +1,89 @@
+//! Quickstart: anytime tail averages over a simple scalar stream.
+//!
+//! Streams a noisy two-phase signal (a level shift mid-stream — the
+//! situation the paper's estimators are built for) through every
+//! estimator and prints how fast each one locks onto the new level while
+//! keeping variance low, plus their memory cost.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ata::averagers::{Averager, AveragerSpec, WindowKind};
+use ata::rng::{GaussianSource, Xoshiro256};
+use ata::util::fmt;
+
+fn main() {
+    let total: u64 = 2000;
+    let shift_at: u64 = 1000;
+
+    let specs: Vec<AveragerSpec> = vec![
+        AveragerSpec::ExpK { k: 200 },
+        AveragerSpec::Gea { c: 0.2 },
+        AveragerSpec::Awa {
+            window: WindowKind::Growing { c: 0.2 },
+            accumulators: 2,
+        },
+        AveragerSpec::Awa {
+            window: WindowKind::Growing { c: 0.2 },
+            accumulators: 3,
+        },
+        AveragerSpec::True {
+            window: WindowKind::Growing { c: 0.2 },
+        },
+        AveragerSpec::Raw {
+            c: 0.2,
+            total_steps: total,
+        },
+    ];
+    let mut avgs: Vec<Box<dyn Averager>> =
+        specs.iter().map(|s| s.build(1).unwrap()).collect();
+
+    let mut g = GaussianSource::new(Xoshiro256::seed_from_u64(42));
+    let level = |t: u64| if t <= shift_at { 1.0 } else { 3.0 };
+
+    println!("two-phase stream: level 1.0 -> 3.0 at t={shift_at}, noise sigma=1\n");
+    println!(
+        "{:>6}  {:>10}{}",
+        "t",
+        "signal",
+        specs
+            .iter()
+            .map(|s| format!("{:>16}", s.label()))
+            .collect::<Vec<_>>()
+            .join("")
+    );
+    let checkpoints = [100, 500, 1000, 1010, 1050, 1100, 1250, 1500, 2000];
+    for t in 1..=total {
+        let x = level(t) + g.next_gaussian();
+        for a in &mut avgs {
+            a.observe_scalar(x);
+        }
+        if checkpoints.contains(&t) {
+            let row: String = avgs
+                .iter()
+                .map(|a| format!("{:>16.3}", a.value_scalar().unwrap()))
+                .collect();
+            println!("{t:>6}  {:>10.3}{row}", level(t));
+        }
+    }
+
+    println!("\nmemory cost (state bytes at d=1; scale by d for vectors):");
+    for (spec, a) in specs.iter().zip(&avgs) {
+        println!(
+            "  {:<18} {:>8}  ({} anytime)",
+            spec.label(),
+            fmt::bytes(a.memory_floats() * 8),
+            if matches!(spec, AveragerSpec::Raw { .. }) {
+                "NOT"
+            } else {
+                "fully"
+            }
+        );
+    }
+    println!(
+        "\nThe exact window (`true`) stores {} of samples while awa3 stores {} \
+         for a near-identical estimate — constant, t-independent memory is \
+         the paper's contribution.",
+        fmt::bytes(avgs[4].memory_floats() * 8),
+        fmt::bytes(avgs[3].memory_floats() * 8),
+    );
+}

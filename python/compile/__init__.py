@@ -1,0 +1,6 @@
+"""Build-time compile path: JAX model (L2) + Pallas kernels (L1) → AOT HLO.
+
+Nothing in this package is imported at runtime; `make artifacts` runs
+`compile.aot` once and the Rust coordinator executes the emitted HLO via
+PJRT thereafter.
+"""

@@ -1,0 +1,90 @@
+"""AOT export: lower every L2 entry point to HLO text + manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+Writes one `<name>.hlo.txt` per entry point plus `manifest.json`
+describing input/output shapes (consumed by rust/src/runtime).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_entry(s) -> list:
+    """[dtype, [dims...]] manifest entry for a ShapeDtypeStruct/array."""
+    return [str(s.dtype), list(s.shape)]
+
+
+def flatten_out_shapes(fn, example_args):
+    """Output ShapeDtypeStructs of fn(*example_args), flattened."""
+    out = jax.eval_shape(fn, *example_args)
+    return [shape_entry(leaf) for leaf in jax.tree_util.tree_leaves(out)]
+
+
+def export_all(out_dir: str, d: int, b: int, chunk: int, accumulators: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "entries": {}}
+    eps = model.entry_points(d=d, b=b, chunk=chunk, accumulators=accumulators)
+    for name, (fn, args) in sorted(eps.items()):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": [shape_entry(a) for a in args],
+            "outputs": flatten_out_shapes(fn, args),
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    manifest["meta"] = {
+        "d": d,
+        "b": b,
+        "chunk": chunk,
+        "accumulators": accumulators,
+        "jax": jax.__version__,
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath} ({len(manifest['entries'])} entries)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--d", type=int, default=50, help="feature dimension")
+    ap.add_argument("--b", type=int, default=11, help="batch size")
+    ap.add_argument("--chunk", type=int, default=100, help="scan length of sgd_chunk")
+    ap.add_argument(
+        "--accumulators", type=int, default=4, help="rows of the AWA combine entry"
+    )
+    args = ap.parse_args()
+    export_all(args.out_dir, args.d, args.b, args.chunk, args.accumulators)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,295 @@
+"""Pure-python mirror of the Rust averagers — golden-trace generator.
+
+Implements every estimator exactly as `rust/src/averagers` does (same
+clamping, same flush rules) in float64. `generate_golden()` runs them on
+deterministic streams and emits JSON consumed by the Rust integration
+test `rust/tests/averager_golden.rs`, giving a cross-language
+equivalence check of the paper's equations.
+
+Run directly (or via make golden) to regenerate:
+    python -m compile.averagers_ref ../rust/tests/golden/averager_golden.json
+"""
+
+import json
+import math
+import sys
+
+
+class ExpAverage:
+    """Fixed-decay EMA with debias-on-read (paper Eq. 2 / `expk`)."""
+
+    def __init__(self, gamma):
+        assert 0.0 <= gamma < 1.0
+        self.gamma = gamma
+        self.ema = 0.0
+        self.gamma_pow_t = 1.0
+        self.t = 0
+
+    @classmethod
+    def for_window(cls, k):
+        return cls((k - 1.0) / (k + 1.0))
+
+    def observe(self, x):
+        self.t += 1
+        self.gamma_pow_t *= self.gamma
+        self.ema = self.gamma * self.ema + (1.0 - self.gamma) * x
+
+    def value(self):
+        if self.t == 0:
+            return None
+        return self.ema / (1.0 - self.gamma_pow_t)
+
+
+def solve_gamma(v, s):
+    """Smaller root of (v+1)γ² − 2γ + (1−s) = 0, with min-variance fallback."""
+    a = v + 1.0
+    disc = 1.0 - a * (1.0 - s)
+    if disc >= 0.0:
+        g = (1.0 - math.sqrt(disc)) / a
+    else:
+        g = 1.0 / a
+    return min(max(g, 0.0), 1.0)
+
+
+class GrowingExp:
+    """Growing exponential average (paper §2, Eqs. 3–4)."""
+
+    def __init__(self, c):
+        assert 0.0 < c < 1.0
+        self.c = c
+        self.avg = 0.0
+        self.v = 0.0
+        self.t = 0
+
+    def observe(self, x):
+        self.t += 1
+        if self.t == 1:
+            self.avg = x
+            self.v = 1.0
+            return
+        k_target = min(max(self.c * self.t, 1.0), float(self.t))
+        g = solve_gamma(self.v, 1.0 / k_target)
+        self.avg = g * self.avg + (1.0 - g) * x
+        self.v = g * g * self.v + (1.0 - g) * (1.0 - g)
+
+    def value(self):
+        return self.avg if self.t > 0 else None
+
+
+def combine_gamma(n0, n1, k_t):
+    """Paper Eq. 6 recency weight, discriminant clamped at 0."""
+    disc = max(1.0 / (n0 * k_t) + 1.0 / (n1 * k_t) - 1.0 / (n0 * n1), 0.0)
+    gamma = (n1 + n0 * n1 * math.sqrt(disc)) / (n0 + n1)
+    return min(max(gamma, 0.0), 1.0)
+
+
+class AwaMulti:
+    """Anytime window average, z recent + 1 old accumulators (§3.1–3.4).
+
+    window: ("fixed", k) or ("growing", c). z=1 reproduces the paper's
+    two-accumulator `awa`.
+    """
+
+    def __init__(self, window, z):
+        assert z >= 1
+        self.window = window
+        self.z = z
+        self.means = [0.0] * (z + 1)
+        self.counts = [0] * (z + 1)
+        self.t = 0
+
+    def k_at(self, t):
+        kind, val = self.window
+        if t == 0:
+            return 0.0
+        if kind == "fixed":
+            return float(min(max(val, 1), t))
+        return min(max(val * t, 1.0), float(t))
+
+    def _chunk(self):
+        kind, val = self.window
+        assert kind == "fixed"
+        return (val + self.z - 1) // self.z
+
+    def _should_shift(self):
+        kind, val = self.window
+        if kind == "fixed":
+            return self.counts[self.z] >= self._chunk()
+        return sum(self.counts[1:]) >= val * self.t
+
+    def observe(self, x):
+        self.t += 1
+        z = self.z
+        self.counts[z] += 1
+        self.means[z] += (x - self.means[z]) / self.counts[z]
+        if self._should_shift():
+            self.means = self.means[1:] + [0.0]
+            self.counts = self.counts[1:] + [0]
+
+    def value(self):
+        if self.t == 0:
+            return None
+        n0 = self.counts[0]
+        nrec = sum(self.counts[1:])
+        if nrec == 0:
+            return self.means[0] if n0 > 0 else None
+        pooled = (
+            sum(c * m for c, m in zip(self.counts[1:], self.means[1:])) / nrec
+        )
+        if n0 == 0:
+            return pooled
+        k_t = self.k_at(self.t)
+        gamma0 = 1.0 - combine_gamma(float(n0), float(nrec), k_t)
+        return pooled + gamma0 * (self.means[0] - pooled)
+
+
+class TrueWindow:
+    """Exact sliding-window mean (the `true` baselines)."""
+
+    def __init__(self, window):
+        self.window = window
+        self.buf = []
+        self.t = 0
+
+    def observe(self, x):
+        self.t += 1
+        self.buf.append(x)
+        kind, val = self.window
+        if kind == "fixed":
+            k_t = max(val, 1)
+        else:
+            k_t = max(1, math.ceil(val * self.t))
+        while len(self.buf) > min(k_t, self.t):
+            self.buf.pop(0)
+
+    def value(self):
+        if not self.buf:
+            return None
+        return sum(self.buf) / len(self.buf)
+
+
+class RawTail:
+    """Classic tail average: waits until T(1−c) (the `raw` baseline)."""
+
+    def __init__(self, c, total_steps):
+        self.start = math.floor(total_steps * (1.0 - c)) + 1
+        self.mean = 0.0
+        self.n = 0
+        self.last = 0.0
+        self.t = 0
+
+    def observe(self, x):
+        self.t += 1
+        self.last = x
+        if self.t >= self.start:
+            self.n += 1
+            self.mean += (x - self.mean) / self.n
+
+    def value(self):
+        if self.t == 0:
+            return None
+        return self.mean if self.n > 0 else self.last
+
+
+class RestartTail:
+    """Block-restart tail average (paper §1 baseline)."""
+
+    def __init__(self, window):
+        self.window = window
+        self.cur = 0.0
+        self.n_cur = 0
+        self.published = 0.0
+        self.n_published = 0
+        self.last = 0.0
+        self.t = 0
+
+    def _complete(self):
+        kind, val = self.window
+        if kind == "fixed":
+            return self.n_cur >= val
+        return self.n_cur >= val * self.t
+
+    def observe(self, x):
+        self.t += 1
+        self.last = x
+        self.n_cur += 1
+        self.cur += (x - self.cur) / self.n_cur
+        if self._complete():
+            self.published = self.cur
+            self.n_published = self.n_cur
+            self.cur = 0.0
+            self.n_cur = 0
+
+    def value(self):
+        if self.t == 0:
+            return None
+        return self.published if self.n_published > 0 else self.last
+
+
+def stream(t):
+    """Deterministic, irrational-frequency test stream (no RNG needed)."""
+    return math.sin(0.37 * t) * 10.0 + math.cos(1.7 * t)
+
+
+def build_estimators(total_steps):
+    return {
+        "expk(k=10)": ExpAverage.for_window(10),
+        "expk(k=100)": ExpAverage.for_window(100),
+        "gea(c=0.25)": GrowingExp(0.25),
+        "gea(c=0.5)": GrowingExp(0.5),
+        "awa2(k=10)": AwaMulti(("fixed", 10), 1),
+        "awa2(c=0.5)": AwaMulti(("growing", 0.5), 1),
+        "awa3(c=0.5)": AwaMulti(("growing", 0.5), 2),
+        "awa5(c=0.25)": AwaMulti(("growing", 0.25), 4),
+        "true(k=10)": TrueWindow(("fixed", 10)),
+        "true(c=0.5)": TrueWindow(("growing", 0.5)),
+        "raw(c=0.5,T=%d)" % total_steps: RawTail(0.5, total_steps),
+        "restart(k=25)": RestartTail(("fixed", 25)),
+        "restart(c=0.5)": RestartTail(("growing", 0.5)),
+    }
+
+
+def generate_golden(total_steps=500):
+    """Trace every estimator over the deterministic stream.
+
+    Records values at checkpoints (powers-of-two-ish + final).
+    """
+    checkpoints = sorted(
+        {
+            cp
+            for cp in [1, 2, 3, 5, 8, 13, 21, 50, 64, 100, 127, 200, 333, 499, total_steps]
+            if cp <= total_steps
+        }
+    )
+    ests = build_estimators(total_steps)
+    out = {
+        "total_steps": total_steps,
+        "checkpoints": checkpoints,
+        "stream": "sin(0.37 t)*10 + cos(1.7 t), t = 1..T",
+        "traces": {},
+    }
+    traces = {name: [] for name in ests}
+    cps = set(checkpoints)
+    for t in range(1, total_steps + 1):
+        x = stream(t)
+        for name, est in ests.items():
+            est.observe(x)
+            if t in cps:
+                traces[name].append(est.value())
+    out["traces"] = traces
+    return out
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "../rust/tests/golden/averager_golden.json"
+    golden = generate_golden()
+    import os
+
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""L1 Pallas kernels (interpret=True on CPU; see DESIGN.md §Hardware).
+
+Each kernel has a pure-jnp oracle in `ref.py`; pytest + hypothesis sweep
+shapes and dtypes asserting allclose. The kernels are written TPU-shaped:
+feature-dimension blocking sized for VMEM via BlockSpec, dot-product
+contractions that map onto the MXU.
+"""
+
+from . import averaging, linreg, ref  # noqa: F401

@@ -1,0 +1,104 @@
+"""L1 Pallas kernels for the averager state updates.
+
+These are the O(d) vector ops on the coordinator's hot path when `d` is
+large (model-parameter streams): the two-accumulator combine (paper
+Eqs. 3, 5, 7 — all `γ·a + (1−γ)·b`) and the multi-accumulator pooled
+combine (Eqs. 8–9). Both block the feature dimension for VMEM residency;
+the pooled combine contracts the (m, BLOCK_D) accumulator tile against
+the (m,) weight vector on the MXU.
+
+The γ / weight *computation* (scalar, involves the variance-constraint
+square root) stays in Rust where the accumulator counts live; the kernels
+only consume the resulting coefficients.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .linreg import pick_block_d
+
+
+def _lerp_kernel(a_ref, b_ref, gamma_ref, o_ref):
+    g = gamma_ref[0]
+    o_ref[...] = g * a_ref[...] + (1.0 - g) * b_ref[...]
+
+
+def lerp_combine(a, b, gamma, *, block_d: int | None = None):
+    """`γ·a + (1−γ)·b` blocked over the vector dimension.
+
+    This single kernel implements the EMA update (Eq. 2/3 with a = old
+    average, b = new sample) and the AWA two-group combine (Eq. 5/7 with
+    a = recent accumulator, b = old accumulator).
+    """
+    (d,) = a.shape
+    blk = block_d or pick_block_d(d)
+    assert d % blk == 0
+    return pl.pallas_call(
+        _lerp_kernel,
+        grid=(d // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda j: (j,)),
+            pl.BlockSpec((blk,), lambda j: (j,)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((d,), a.dtype),
+        interpret=True,
+    )(a, b, gamma)
+
+
+def _pooled_kernel(means_ref, weights_ref, o_ref):
+    # (m, blk) tile contracted with (m,) weights → (blk,)
+    o_ref[...] = weights_ref[...] @ means_ref[...]
+
+
+def pooled_combine(means, weights, *, block_d: int | None = None):
+    """`Σ_i weights[i]·means[i]` for means (m, d) — the Eq. 8/9 pooling.
+
+    The caller passes the full per-accumulator weights (including the
+    old-accumulator correction), so this one contraction produces the
+    final AWA estimate for any number of accumulators.
+    """
+    m, d = means.shape
+    blk = block_d or pick_block_d(d)
+    assert d % blk == 0
+    return pl.pallas_call(
+        _pooled_kernel,
+        grid=(d // blk,),
+        in_specs=[
+            pl.BlockSpec((m, blk), lambda j: (0, j)),
+            pl.BlockSpec((m,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((d,), means.dtype),
+        interpret=True,
+    )(means, weights)
+
+
+def _mean_update_kernel(mean_ref, x_ref, invn_ref, o_ref):
+    inv = invn_ref[0]
+    m = mean_ref[...]
+    o_ref[...] = m + (x_ref[...] - m) * inv
+
+
+def mean_update(mean, x, inv_n, *, block_d: int | None = None):
+    """Incremental mean `mean + (x − mean)/n` with `inv_n = 1/n`, blocked.
+
+    The AWA accumulator ingest (paper §3.1 update equations).
+    """
+    (d,) = mean.shape
+    blk = block_d or pick_block_d(d)
+    assert d % blk == 0
+    return pl.pallas_call(
+        _mean_update_kernel,
+        grid=(d // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda j: (j,)),
+            pl.BlockSpec((blk,), lambda j: (j,)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((d,), mean.dtype),
+        interpret=True,
+    )(mean, x, inv_n)

@@ -1,0 +1,109 @@
+"""L1 Pallas kernels for the linear-regression SGD hot path.
+
+The update `w ← w − (η/b)·Xᵀ(Xw − y)` is two GEMV-shaped contractions
+over the feature dimension `d`. The TPU mapping (DESIGN.md
+§Hardware-Adaptation):
+
+* block the feature dimension with ``BlockSpec((b, BLOCK_D))`` tiles so
+  each tile of `X`, the matching `w` slice and the partial products fit
+  in VMEM;
+* phase 1 (`residual`) reduces across feature blocks into the (b,)
+  residual — an MXU dot per tile, accumulated across the grid (the grid
+  is sequential on TPU, making cross-step accumulation into the output
+  ref legal, and interpret mode preserves those semantics);
+* phase 2 (`apply_grad`) is embarrassingly parallel over feature blocks:
+  each grid step owns one `w` tile and contracts the residual against its
+  `X` tile.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; on a real TPU the same code lowers natively.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_block_d(d: int, target: int = 128) -> int:
+    """Largest divisor of ``d`` that is ≤ ``target``.
+
+    Pallas grids here require the feature dimension to split evenly into
+    blocks; for awkward `d` this degrades toward 1, which is still
+    correct (interpret mode) if slow — the AOT entry points all use
+    divisor-friendly shapes.
+    """
+    best = 1
+    for cand in range(1, min(d, target) + 1):
+        if d % cand == 0:
+            best = cand
+    return best
+
+
+def _residual_kernel(x_ref, w_ref, y_ref, o_ref):
+    """Grid step j: o += X[:, jB:(j+1)B] @ w[jB:(j+1)B]; init with −y."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = -y_ref[...]
+
+    o_ref[...] += x_ref[...] @ w_ref[...]
+
+
+def residual(x, w, y, *, block_d: int | None = None):
+    """Pallas residual `r = X·w − y` blocked over the feature dimension."""
+    b, d = x.shape
+    blk = block_d or pick_block_d(d)
+    assert d % blk == 0, f"block {blk} must divide d={d}"
+    grid = (d // blk,)
+    return pl.pallas_call(
+        _residual_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, blk), lambda j: (0, j)),
+            pl.BlockSpec((blk,), lambda j: (j,)),
+            pl.BlockSpec((b,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((b,), x.dtype),
+        interpret=True,
+    )(x, w, y)
+
+
+def _apply_grad_kernel(x_ref, r_ref, w_ref, eta_ref, o_ref, *, batch: int):
+    """Grid step j: o[jB:(j+1)B] = w_tile − (η/b)·(r @ X_tile)."""
+    scale = eta_ref[0] / batch
+    o_ref[...] = w_ref[...] - scale * (r_ref[...] @ x_ref[...])
+
+
+def apply_grad(x, r, w, eta, *, block_d: int | None = None):
+    """Pallas gradient application, parallel over feature blocks."""
+    b, d = x.shape
+    blk = block_d or pick_block_d(d)
+    assert d % blk == 0, f"block {blk} must divide d={d}"
+    grid = (d // blk,)
+    kernel = functools.partial(_apply_grad_kernel, batch=b)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, blk), lambda j: (0, j)),
+            pl.BlockSpec((b,), lambda j: (0,)),
+            pl.BlockSpec((blk,), lambda j: (j,)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((d,), w.dtype),
+        interpret=True,
+    )(x, r, w, eta)
+
+
+def sgd_step(w, x, y, eta, *, block_d: int | None = None):
+    """Fused (two-phase) Pallas SGD step — the L1 entry the L2 model calls.
+
+    `eta` is shape (1,) so the runtime can feed it as a rank-1 literal.
+    """
+    r = residual(x, w, y, block_d=block_d)
+    return apply_grad(x, r, w, eta, block_d=block_d)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: trivially-auditable jnp
+expressions with no blocking, no pallas, no cleverness.
+"""
+
+import jax.numpy as jnp
+
+
+def residual_ref(x, w, y):
+    """r = X·w − y for X (b,d), w (d,), y (b,)."""
+    return x @ w - y
+
+
+def sgd_step_ref(w, x, y, eta):
+    """One least-squares SGD step: w − (η/b)·Xᵀ(Xw − y).
+
+    ``eta`` has shape (1,) (the runtime feeds rank-1 f32 literals only).
+    """
+    b = x.shape[0]
+    r = residual_ref(x, w, y)
+    return w - (eta[0] / b) * (x.T @ r)
+
+
+def sgd_chunk_ref(w, xs, ys, eta):
+    """S sequential SGD steps over pre-sampled batches.
+
+    xs: (S, b, d), ys: (S, b). Returns (w_final, iterates (S, d)).
+    Reference implementation uses a plain Python loop (shapes are small
+    at test time); the L2 model uses lax.scan + the Pallas step.
+    """
+    iterates = []
+    for i in range(xs.shape[0]):
+        w = sgd_step_ref(w, xs[i], ys[i], eta)
+        iterates.append(w)
+    return w, jnp.stack(iterates)
+
+
+def lerp_ref(a, b, gamma):
+    """γ·a + (1−γ)·b — the shared averager combine (Eq. 3/5/7).
+
+    ``gamma`` has shape (1,).
+    """
+    g = gamma[0]
+    return g * a + (1.0 - g) * b
+
+
+def pooled_ref(means, weights):
+    """Σ_i weights[i]·means[i] for means (m, d), weights (m,) (Eq. 8/9
+    pooling step). Weights are the normalized per-accumulator weights."""
+    return weights @ means

@@ -1,0 +1,144 @@
+"""L2: the JAX compute graphs lowered to AOT artifacts.
+
+Every function here is shape-static, jittable, calls the L1 Pallas
+kernels for its dense work, and is exported to HLO text by `aot.py`.
+Randomness deliberately lives in Rust: `sgd_chunk` consumes pre-sampled
+batches, so the PJRT execution is bit-cross-checkable against the native
+Rust SGD on identical data.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import averaging as avg_k
+from .kernels import linreg as linreg_k
+
+
+def sgd_step(w, x, y, eta):
+    """One mini-batch least-squares SGD step (L1 Pallas inside).
+
+    w: (d,) f32, x: (b, d) f32, y: (b,) f32, eta: (1,) f32 → (d,) f32.
+    """
+    return linreg_k.sgd_step(w, x, y, eta)
+
+
+def sgd_chunk(w, xs, ys, eta):
+    """S sequential SGD steps in one compiled program (lax.scan).
+
+    This is the performance-critical L2 shape: one PJRT crossing runs a
+    whole chunk of steps and returns every iterate for the averagers.
+
+    w: (d,), xs: (S, b, d), ys: (S, b), eta: (1,)
+    → (w_final (d,), iterates (S, d)).
+    """
+
+    def body(w, batch):
+        x, y = batch
+        w_next = linreg_k.sgd_step(w, x, y, eta)
+        return w_next, w_next
+
+    w_final, iterates = jax.lax.scan(body, w, (xs, ys))
+    return w_final, iterates
+
+
+def lerp_combine(a, b, gamma):
+    """γ·a + (1−γ)·b (EMA/GEA update, AWA two-group combine)."""
+    return avg_k.lerp_combine(a, b, gamma)
+
+
+def pooled_combine(means, weights):
+    """Σ_i weights[i]·means[i] (multi-accumulator AWA combine)."""
+    return avg_k.pooled_combine(means, weights)
+
+
+def mean_update(mean, x, inv_n):
+    """Incremental accumulator ingest mean + (x−mean)/n."""
+    return avg_k.mean_update(mean, x, inv_n)
+
+
+def awa_snapshot(means, counts, k_t):
+    """Full AWA read path in one graph: counts → weights → combine.
+
+    means: (m, d) accumulator means, oldest first (row 0 = x̄⁰).
+    counts: (m,) f32 sample counts (0 allowed for empty accumulators).
+    k_t: (1,) f32 nominal window.
+    Returns the Eq. 8/9 estimate. Matches the Rust implementation's
+    clamped discriminant semantics (warmup → min-variance pooling).
+    """
+    n0 = counts[0]
+    nrec = jnp.sum(counts[1:])
+    kt = k_t[0]
+    # Eq. 6 recency weight with clamped discriminant (see Rust
+    # averagers::awa2::combine_gamma).
+    safe_n0 = jnp.maximum(n0, 1.0)
+    safe_nrec = jnp.maximum(nrec, 1.0)
+    disc = jnp.maximum(
+        1.0 / (safe_n0 * kt) + 1.0 / (safe_nrec * kt) - 1.0 / (safe_n0 * safe_nrec),
+        0.0,
+    )
+    gamma = (safe_nrec + safe_n0 * safe_nrec * jnp.sqrt(disc)) / (safe_n0 + safe_nrec)
+    gamma = jnp.clip(gamma, 0.0, 1.0)
+    # Degenerate cases: no old accumulator → all weight on recent pool;
+    # empty recent pool → all weight on the old accumulator.
+    gamma = jnp.where(n0 == 0.0, 1.0, gamma)
+    gamma = jnp.where(nrec == 0.0, 0.0, gamma)
+    rec_weights = jnp.where(
+        nrec > 0.0, counts[1:] / jnp.maximum(nrec, 1.0), jnp.zeros_like(counts[1:])
+    )
+    weights = jnp.concatenate([jnp.array([1.0 - gamma]), gamma * rec_weights])
+    return avg_k.pooled_combine(means, weights.astype(means.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Entry-point registry for AOT export: name → (fn, example_args builder).
+# ---------------------------------------------------------------------------
+
+def paper_shapes(d: int = 50, b: int = 11):
+    """ShapeDtypeStructs for the §4 workload."""
+    f32 = jnp.float32
+    return {
+        "w": jax.ShapeDtypeStruct((d,), f32),
+        "x": jax.ShapeDtypeStruct((b, d), f32),
+        "y": jax.ShapeDtypeStruct((b,), f32),
+        "eta": jax.ShapeDtypeStruct((1,), f32),
+    }
+
+
+def entry_points(d: int = 50, b: int = 11, chunk: int = 100, accumulators: int = 4):
+    """All AOT exports with their example-argument shapes.
+
+    Returns {name: (callable, [ShapeDtypeStruct, ...])}.
+    """
+    f32 = jnp.float32
+    s = paper_shapes(d, b)
+    return {
+        f"sgd_step_d{d}_b{b}": (sgd_step, [s["w"], s["x"], s["y"], s["eta"]]),
+        f"sgd_chunk_d{d}_b{b}_s{chunk}": (
+            sgd_chunk,
+            [
+                s["w"],
+                jax.ShapeDtypeStruct((chunk, b, d), f32),
+                jax.ShapeDtypeStruct((chunk, b), f32),
+                s["eta"],
+            ],
+        ),
+        f"lerp_combine_d{d}": (
+            lerp_combine,
+            [s["w"], s["w"], jax.ShapeDtypeStruct((1,), f32)],
+        ),
+        f"pooled_combine_m{accumulators}_d{d}": (
+            pooled_combine,
+            [
+                jax.ShapeDtypeStruct((accumulators, d), f32),
+                jax.ShapeDtypeStruct((accumulators,), f32),
+            ],
+        ),
+        f"awa_snapshot_m{accumulators}_d{d}": (
+            awa_snapshot,
+            [
+                jax.ShapeDtypeStruct((accumulators, d), f32),
+                jax.ShapeDtypeStruct((accumulators,), f32),
+                jax.ShapeDtypeStruct((1,), f32),
+            ],
+        ),
+    }

@@ -1,0 +1,60 @@
+"""AOT export smoke tests: HLO text emission and manifest integrity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_emits_parseable_module(tmp_path):
+    lowered = jax.jit(model.lerp_combine).lower(
+        jax.ShapeDtypeStruct((8,), jnp.float32),
+        jax.ShapeDtypeStruct((8,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # The runtime requires the tuple-return convention.
+    assert "tuple" in text.lower()
+
+
+def test_export_all_writes_everything(tmp_path):
+    out = str(tmp_path / "artifacts")
+    manifest = aot.export_all(out, d=10, b=3, chunk=4, accumulators=3)
+    mpath = os.path.join(out, "manifest.json")
+    assert os.path.exists(mpath)
+    with open(mpath) as f:
+        loaded = json.load(f)
+    assert loaded["entries"] == manifest["entries"]
+    assert len(loaded["entries"]) == 5
+    for name, entry in loaded["entries"].items():
+        path = os.path.join(out, entry["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert "HloModule" in text
+        assert entry["inputs"], name
+        assert entry["outputs"], name
+        # Shapes recorded as [dtype, dims]
+        for dt, dims in entry["inputs"] + entry["outputs"]:
+            assert dt == "float32"
+            assert isinstance(dims, list)
+
+
+def test_manifest_shapes_match_model(tmp_path):
+    out = str(tmp_path / "a")
+    manifest = aot.export_all(out, d=6, b=2, chunk=3, accumulators=3)
+    step = manifest["entries"]["sgd_step_d6_b2"]
+    assert step["inputs"] == [
+        ["float32", [6]],
+        ["float32", [2, 6]],
+        ["float32", [2]],
+        ["float32", [1]],
+    ]
+    assert step["outputs"] == [["float32", [6]]]
+    chunk = manifest["entries"]["sgd_chunk_d6_b2_s3"]
+    assert chunk["outputs"] == [["float32", [6]], ["float32", [3, 6]]]

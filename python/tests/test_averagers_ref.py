@@ -1,0 +1,101 @@
+"""Sanity tests of the python averager mirror + golden-file generation.
+
+The heavy cross-language check lives in rust/tests/averager_golden.rs;
+here we verify the mirror itself satisfies the paper's invariants and
+regenerate the golden file so `make golden` keeps it fresh.
+"""
+
+import json
+import math
+import os
+
+import pytest
+
+from compile import averagers_ref as m
+
+
+class TestMirrorInvariants:
+    def test_gea_variance_tracks_target(self):
+        c = 0.5
+        g = m.GrowingExp(c)
+        for t in range(1, 5001):
+            g.observe(float(t))
+            if t > 100:
+                assert abs(g.v - 1.0 / (c * t)) < 1e-9
+
+    def test_awa_equals_true_right_after_flush(self):
+        k = 5
+        awa = m.AwaMulti(("fixed", k), 1)
+        true = m.TrueWindow(("fixed", k))
+        for t in range(1, 41):
+            x = m.stream(t)
+            awa.observe(x)
+            true.observe(x)
+            if t % k == 0:
+                assert abs(awa.value() - true.value()) < 1e-12
+
+    def test_awa_multi_z1_equals_two_acc(self):
+        a1 = m.AwaMulti(("growing", 0.5), 1)
+        for t in range(1, 301):
+            a1.observe(m.stream(t))
+        # Variance constraint: γ²/N¹ + (1−γ)²/N⁰ = 1/(ct) when attainable
+        n0, nrec = a1.counts[0], sum(a1.counts[1:])
+        if n0 > 0 and nrec > 0 and n0 + nrec >= 0.5 * a1.t:
+            k_t = 0.5 * a1.t
+            gamma = m.combine_gamma(float(n0), float(nrec), k_t)
+            ss = gamma**2 / nrec + (1 - gamma) ** 2 / n0
+            assert abs(ss - 1.0 / k_t) < 1e-12
+
+    def test_expk_debias_first_sample(self):
+        e = m.ExpAverage.for_window(10)
+        e.observe(7.0)
+        assert abs(e.value() - 7.0) < 1e-12
+
+    def test_raw_waits(self):
+        r = m.RawTail(0.5, 10)
+        for t in range(1, 6):
+            r.observe(float(t) * 10)
+            assert r.value() == t * 10  # raw iterate pre-start
+        r.observe(60.0)
+        assert r.value() == 60.0  # first averaged sample
+
+    def test_true_growing_window_len(self):
+        tw = m.TrueWindow(("growing", 0.5))
+        for t in range(1, 101):
+            tw.observe(float(t))
+        assert len(tw.buf) == 50
+        assert abs(tw.value() - sum(range(51, 101)) / 50.0) < 1e-9
+
+
+class TestGolden:
+    def test_generate_golden_structure(self):
+        g = m.generate_golden(total_steps=100)
+        assert g["total_steps"] == 100
+        assert g["checkpoints"][-1] == 100
+        for name, trace in g["traces"].items():
+            assert len(trace) == len(g["checkpoints"]), name
+            assert all(
+                v is None or math.isfinite(v) for v in trace
+            ), name
+
+    def test_golden_file_is_current(self):
+        """Regenerate the golden file; fail if it drifted from the repo
+        copy (meaning either the mirror or the checked-in file changed
+        without the other)."""
+        here = os.path.dirname(__file__)
+        path = os.path.abspath(
+            os.path.join(here, "..", "..", "rust", "tests", "golden", "averager_golden.json")
+        )
+        fresh = m.generate_golden()
+        if not os.path.exists(path):
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            with open(path, "w") as f:
+                json.dump(fresh, f, indent=1, sort_keys=True)
+            pytest.skip(f"golden file created at {path}; rerun to verify")
+        with open(path) as f:
+            stored = json.load(f)
+        assert stored["checkpoints"] == fresh["checkpoints"]
+        for name, trace in fresh["traces"].items():
+            assert name in stored["traces"], f"missing {name} in stored golden"
+            for a, b in zip(stored["traces"][name], trace):
+                assert a == pytest.approx(b, rel=1e-12, abs=1e-12), name

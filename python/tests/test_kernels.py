@@ -1,0 +1,167 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and values; fixed cases cover the AOT shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import averaging, linreg, ref
+
+SEED = np.random.default_rng(0)
+
+
+def rand(shape, rng, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype=jnp.float32)
+
+
+# A block-friendly (b, d) strategy: d is a product of small factors so the
+# block picker exercises non-trivial grids.
+dims = st.tuples(
+    st.integers(min_value=1, max_value=16),  # batch
+    st.sampled_from([2, 4, 8, 12, 16, 30, 50, 64, 100, 128, 256]),  # d
+)
+
+
+class TestResidual:
+    @settings(max_examples=25, deadline=None)
+    @given(dims, st.integers(min_value=0, max_value=2**31 - 1))
+    def test_matches_ref(self, bd, seed):
+        b, d = bd
+        rng = np.random.default_rng(seed)
+        x, w, y = rand((b, d), rng), rand((d,), rng), rand((b,), rng)
+        got = linreg.residual(x, w, y)
+        want = ref.residual_ref(x, w, y)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_explicit_blocking(self):
+        rng = np.random.default_rng(7)
+        x, w, y = rand((11, 50), rng), rand((50,), rng), rand((11,), rng)
+        for blk in [1, 2, 5, 10, 25, 50]:
+            got = linreg.residual(x, w, y, block_d=blk)
+            np.testing.assert_allclose(
+                got, ref.residual_ref(x, w, y), rtol=1e-5, atol=1e-5
+            )
+
+
+class TestSgdStep:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        dims,
+        st.floats(min_value=0.01, max_value=1.0),
+        st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref(self, bd, eta, seed):
+        b, d = bd
+        rng = np.random.default_rng(seed)
+        x, w, y = rand((b, d), rng), rand((d,), rng), rand((b,), rng)
+        eta_arr = jnp.asarray([eta], dtype=jnp.float32)
+        got = linreg.sgd_step(w, x, y, eta_arr)
+        want = ref.sgd_step_ref(w, x, y, eta_arr)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_paper_shape(self):
+        rng = np.random.default_rng(1)
+        x, w, y = rand((11, 50), rng), rand((50,), rng), rand((11,), rng)
+        eta = jnp.asarray([0.2], dtype=jnp.float32)
+        got = linreg.sgd_step(w, x, y, eta)
+        want = ref.sgd_step_ref(w, x, y, eta)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_zero_eta_is_identity(self):
+        rng = np.random.default_rng(2)
+        x, w, y = rand((4, 8), rng), rand((8,), rng), rand((4,), rng)
+        eta = jnp.asarray([0.0], dtype=jnp.float32)
+        got = linreg.sgd_step(w, x, y, eta)
+        np.testing.assert_allclose(got, w, rtol=0, atol=0)
+
+
+class TestLerpCombine:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.sampled_from([2, 8, 50, 64, 100, 256, 1000]),
+        st.floats(min_value=0.0, max_value=1.0),
+        st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref(self, d, gamma, seed):
+        rng = np.random.default_rng(seed)
+        a, b = rand((d,), rng), rand((d,), rng)
+        g = jnp.asarray([gamma], dtype=jnp.float32)
+        got = averaging.lerp_combine(a, b, g)
+        want = ref.lerp_ref(a, b, g)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_endpoints(self):
+        rng = np.random.default_rng(3)
+        a, b = rand((16,), rng), rand((16,), rng)
+        one = jnp.asarray([1.0], dtype=jnp.float32)
+        zero = jnp.asarray([0.0], dtype=jnp.float32)
+        np.testing.assert_allclose(averaging.lerp_combine(a, b, one), a)
+        np.testing.assert_allclose(averaging.lerp_combine(a, b, zero), b)
+
+
+class TestPooledCombine:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.integers(min_value=1, max_value=8),
+        st.sampled_from([4, 50, 64, 128]),
+        st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref(self, m, d, seed):
+        rng = np.random.default_rng(seed)
+        means = rand((m, d), rng)
+        weights = jnp.asarray(rng.random(m), dtype=jnp.float32)
+        got = averaging.pooled_combine(means, weights)
+        want = ref.pooled_ref(means, weights)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_one_hot_selects_row(self):
+        rng = np.random.default_rng(4)
+        means = rand((3, 10), rng)
+        w = jnp.asarray([0.0, 1.0, 0.0], dtype=jnp.float32)
+        np.testing.assert_allclose(
+            averaging.pooled_combine(means, w), means[1], rtol=1e-6
+        )
+
+
+class TestMeanUpdate:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.sampled_from([2, 50, 128]),
+        st.integers(min_value=1, max_value=10_000),
+        st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_formula(self, d, n, seed):
+        rng = np.random.default_rng(seed)
+        mean, x = rand((d,), rng), rand((d,), rng)
+        inv_n = jnp.asarray([1.0 / n], dtype=jnp.float32)
+        got = averaging.mean_update(mean, x, inv_n)
+        want = mean + (x - mean) / n
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_incremental_mean_converges(self):
+        """Folding a constant stream drives the mean to the constant."""
+        d = 8
+        mean = jnp.zeros((d,), dtype=jnp.float32)
+        target = jnp.full((d,), 3.0, dtype=jnp.float32)
+        for n in range(1, 200):
+            mean = averaging.mean_update(
+                mean, target, jnp.asarray([1.0 / n], dtype=jnp.float32)
+            )
+        np.testing.assert_allclose(mean, target, rtol=1e-5)
+
+
+class TestBlockPicker:
+    def test_divides(self):
+        for d in [1, 2, 7, 50, 128, 1000, 1024, 999]:
+            blk = linreg.pick_block_d(d)
+            assert d % blk == 0
+            assert blk <= 128 or blk == d
+
+    def test_prefers_large(self):
+        assert linreg.pick_block_d(1024) == 128
+        assert linreg.pick_block_d(50) == 50
+        assert linreg.pick_block_d(100) == 100

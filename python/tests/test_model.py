@@ -1,0 +1,134 @@
+"""L2 correctness: the scan-fused chunk vs step-by-step, shape checks,
+and the jax-side AWA snapshot vs the python mirror."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import averagers_ref, model
+from compile.kernels import ref
+
+
+def sample_batches(rng, s, b, d):
+    xs = jnp.asarray(rng.standard_normal((s, b, d)), dtype=jnp.float32)
+    ys = jnp.asarray(rng.standard_normal((s, b)), dtype=jnp.float32)
+    return xs, ys
+
+
+class TestChunk:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        st.integers(min_value=1, max_value=8),  # steps
+        st.integers(min_value=1, max_value=6),  # batch
+        st.sampled_from([4, 10, 50]),  # d
+        st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_chunk_equals_sequential_steps(self, s, b, d, seed):
+        rng = np.random.default_rng(seed)
+        w0 = jnp.asarray(rng.standard_normal(d), dtype=jnp.float32)
+        xs, ys = sample_batches(rng, s, b, d)
+        eta = jnp.asarray([0.1], dtype=jnp.float32)
+        w_final, iterates = model.sgd_chunk(w0, xs, ys, eta)
+        w_ref, iters_ref = ref.sgd_chunk_ref(w0, xs, ys, eta)
+        np.testing.assert_allclose(w_final, w_ref, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(iterates, iters_ref, rtol=1e-4, atol=1e-5)
+
+    def test_paper_shape_and_final_matches_last_iterate(self):
+        rng = np.random.default_rng(0)
+        w0 = jnp.zeros((50,), dtype=jnp.float32)
+        xs, ys = sample_batches(rng, 20, 11, 50)
+        eta = jnp.asarray([0.2], dtype=jnp.float32)
+        w_final, iterates = model.sgd_chunk(w0, xs, ys, eta)
+        assert iterates.shape == (20, 50)
+        np.testing.assert_allclose(w_final, iterates[-1], rtol=0, atol=0)
+
+    def test_chunk_composes(self):
+        """Two 5-step chunks == one 10-step chunk on the same batches."""
+        rng = np.random.default_rng(5)
+        w0 = jnp.asarray(rng.standard_normal(10), dtype=jnp.float32)
+        xs, ys = sample_batches(rng, 10, 3, 10)
+        eta = jnp.asarray([0.05], dtype=jnp.float32)
+        w_full, _ = model.sgd_chunk(w0, xs, ys, eta)
+        w_half, _ = model.sgd_chunk(w0, xs[:5], ys[:5], eta)
+        w_two, _ = model.sgd_chunk(w_half, xs[5:], ys[5:], eta)
+        np.testing.assert_allclose(w_two, w_full, rtol=1e-4, atol=1e-6)
+
+    def test_descends_on_linreg(self):
+        """On an actual regression problem the chunk reduces the loss."""
+        rng = np.random.default_rng(9)
+        d, b, s = 20, 11, 200
+        w_star = np.ones(d)
+        scales = 1.0 / np.sqrt(np.arange(1, d + 1))
+        x_raw = rng.standard_normal((s, b, d)) * scales
+        y_raw = x_raw @ w_star + 0.1 * rng.standard_normal((s, b))
+        xs = jnp.asarray(x_raw, dtype=jnp.float32)
+        ys = jnp.asarray(y_raw, dtype=jnp.float32)
+        w0 = jnp.zeros((d,), dtype=jnp.float32)
+        eta = jnp.asarray([0.2], dtype=jnp.float32)
+        w_final, _ = model.sgd_chunk(w0, xs, ys, eta)
+        err0 = np.sum((scales**2) * (w_star - 0.0) ** 2)
+        err1 = np.sum((scales**2) * (w_star - np.asarray(w_final)) ** 2)
+        assert err1 < err0 / 10.0, f"excess {err0} -> {err1}"
+
+
+class TestAwaSnapshot:
+    def mirror(self, counts, k_t):
+        """Weights the python mirror would use (Eq. 8/9)."""
+        n0, nrec = counts[0], sum(counts[1:])
+        if nrec == 0:
+            return None
+        if n0 == 0:
+            gamma = 1.0
+        else:
+            gamma = averagers_ref.combine_gamma(float(n0), float(nrec), k_t)
+        w = [1.0 - gamma] + [gamma * c / nrec for c in counts[1:]]
+        return np.asarray(w)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.lists(st.integers(min_value=0, max_value=50), min_size=2, max_size=6),
+        st.floats(min_value=1.0, max_value=100.0),
+        st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_mirror_weights(self, counts, k_t, seed):
+        if sum(counts[1:]) == 0:
+            counts[1] = 1  # snapshot needs a nonempty recent group
+        m = len(counts)
+        rng = np.random.default_rng(seed)
+        means = jnp.asarray(rng.standard_normal((m, 8)), dtype=jnp.float32)
+        got = model.awa_snapshot(
+            means,
+            jnp.asarray(counts, dtype=jnp.float32),
+            jnp.asarray([k_t], dtype=jnp.float32),
+        )
+        w = self.mirror(counts, k_t)
+        want = w @ np.asarray(means)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_empty_old_accumulator(self):
+        means = jnp.asarray(
+            [[9.0, 9.0], [1.0, 2.0], [3.0, 4.0]], dtype=jnp.float32
+        )
+        counts = jnp.asarray([0.0, 1.0, 1.0], dtype=jnp.float32)
+        got = model.awa_snapshot(means, counts, jnp.asarray([2.0], dtype=jnp.float32))
+        # Pooled recent only: mean of rows 1 and 2.
+        np.testing.assert_allclose(got, [2.0, 3.0], rtol=1e-6)
+
+
+class TestEntryPoints:
+    def test_registry_is_complete_and_traceable(self):
+        eps = model.entry_points(d=50, b=11, chunk=10, accumulators=4)
+        assert len(eps) == 5
+        for name, (fn, args) in eps.items():
+            out = jax.eval_shape(fn, *args)
+            leaves = jax.tree_util.tree_leaves(out)
+            assert leaves, name
+            for leaf in leaves:
+                assert leaf.dtype == jnp.float32
+
+    def test_paper_shapes(self):
+        s = model.paper_shapes()
+        assert s["x"].shape == (11, 50)
+        assert s["w"].shape == (50,)

@@ -1,0 +1,112 @@
+//! Ablation B: update cost and memory of every estimator vs dimension.
+//!
+//! The estimators are the coordinator's per-sample hot path; this is the
+//! microbench the §Perf pass optimizes against. Reports ns/update,
+//! element throughput, and the memory table (the paper's other axis).
+//!
+//! Run: `cargo bench --bench averager_throughput` (`-- --quick`).
+
+use ata::averagers::{AveragerSpec, WindowKind};
+use ata::benchkit::Bench;
+use ata::util::fmt;
+
+fn specs(total: u64) -> Vec<AveragerSpec> {
+    vec![
+        AveragerSpec::ExpK { k: 100 },
+        AveragerSpec::Gea { c: 0.5 },
+        AveragerSpec::Awa {
+            window: WindowKind::Growing { c: 0.5 },
+            accumulators: 2,
+        },
+        AveragerSpec::Awa {
+            window: WindowKind::Growing { c: 0.5 },
+            accumulators: 3,
+        },
+        AveragerSpec::True {
+            window: WindowKind::Growing { c: 0.5 },
+        },
+        AveragerSpec::Raw {
+            c: 0.5,
+            total_steps: total,
+        },
+    ]
+}
+
+fn main() {
+    let mut bench = Bench::from_args("averager_throughput");
+    let quick = std::env::args().any(|a| a == "--quick");
+    let dims: &[usize] = if quick {
+        &[50, 4096]
+    } else {
+        &[50, 1024, 65_536, 1_048_576]
+    };
+
+    for &d in dims {
+        bench.section(&format!("observe() cost at d={d}"));
+        let x: Vec<f64> = (0..d).map(|i| (i as f64 * 0.001).sin()).collect();
+        for spec in specs(1_000_000) {
+            // Skip the O(k_t·d) exact window at large d — it would
+            // allocate gigabytes; that cliff IS the paper's motivation.
+            if matches!(spec, AveragerSpec::True { .. }) && d > 65_536 {
+                println!("{:<44} skipped (memory would exceed budget)", spec.label());
+                continue;
+            }
+            let mut avg = spec.build(d).unwrap();
+            // Pre-fill so growing windows hit their steady-state cost.
+            for _ in 0..64 {
+                avg.observe(&x);
+            }
+            bench.bench_elements(&format!("{} d={d} observe", spec.label()), d as u64, || {
+                avg.observe(&x);
+            });
+        }
+    }
+
+    bench.section("value_into() cost at d=65536");
+    {
+        let d = 65_536;
+        let x: Vec<f64> = vec![1.0; d];
+        let mut out = vec![0.0f64; d];
+        for spec in specs(1_000_000) {
+            if matches!(spec, AveragerSpec::True { .. }) {
+                continue;
+            }
+            let mut avg = spec.build(d).unwrap();
+            for _ in 0..256 {
+                avg.observe(&x);
+            }
+            bench.bench_elements(&format!("{} d={d} value", spec.label()), d as u64, || {
+                avg.value_into(&mut out);
+            });
+        }
+    }
+
+    bench.section("memory after 100k samples (d=1024) — the paper's axis");
+    {
+        let d = 1024;
+        let x = vec![0.5f64; d];
+        println!("{:<22} {:>14} {:>10}", "estimator", "state", "anytime");
+        for spec in specs(200_000) {
+            let mut avg = spec.build(d).unwrap();
+            let n = if matches!(spec, AveragerSpec::True { .. }) {
+                20_000 // enough to show the O(ct·d) growth
+            } else {
+                100_000
+            };
+            for _ in 0..n {
+                avg.observe(&x);
+            }
+            println!(
+                "{:<22} {:>14} {:>10}",
+                spec.label(),
+                fmt::bytes(avg.memory_floats() * 8),
+                if matches!(spec, AveragerSpec::Raw { .. }) {
+                    "no"
+                } else {
+                    "yes"
+                }
+            );
+        }
+    }
+    bench.finish();
+}

@@ -1,0 +1,96 @@
+//! Ablation C: coordinator service throughput and latency.
+//!
+//! Measures (i) in-process ingest throughput vs shard count and
+//! backpressure policy, (ii) snapshot latency under load, (iii) the TCP
+//! service round-trip. This is the L3 target of the §Perf pass: the
+//! coordinator must not be the bottleneck relative to the O(d) averager
+//! update it hosts.
+//!
+//! Run: `cargo bench --bench coordinator_throughput` (`-- --quick`).
+
+use ata::averagers::AveragerSpec;
+use ata::benchkit::Bench;
+use ata::config::BackpressurePolicy;
+use ata::coordinator::{Client, Coordinator, Server};
+use ata::util::fmt;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let mut bench = Bench::from_args("coordinator_throughput");
+    let quick = std::env::args().any(|a| a == "--quick");
+    let d = 256usize;
+    let n_streams = 16usize;
+    let pushes: u64 = if quick { 20_000 } else { 200_000 };
+
+    bench.section(&format!(
+        "in-process ingest: {n_streams} streams x d={d}, {pushes} pushes total"
+    ));
+    for shards in [1usize, 2, 4, 8] {
+        for policy in [BackpressurePolicy::Block, BackpressurePolicy::DropNewest] {
+            let c = Coordinator::new(shards, 4096, policy);
+            for i in 0..n_streams {
+                c.register(&format!("s{i}"), d, AveragerSpec::Gea { c: 0.5 })
+                    .unwrap();
+            }
+            let x = vec![0.5f64; d];
+            let t0 = Instant::now();
+            for t in 0..pushes {
+                let name = format!("s{}", t as usize % n_streams);
+                let _ = c.push(&name, x.clone());
+            }
+            c.sync().unwrap();
+            let dt = t0.elapsed();
+            let rate = pushes as f64 / dt.as_secs_f64();
+            let tag = match policy {
+                BackpressurePolicy::Block => "block",
+                BackpressurePolicy::DropNewest => "drop",
+                BackpressurePolicy::Reject => "reject",
+            };
+            println!(
+                "shards={shards} policy={tag:<6} {:>12} pushes/s  ({} floats/s)",
+                fmt::rate(rate),
+                fmt::rate(rate * d as f64),
+            );
+        }
+    }
+
+    bench.section("snapshot latency while ingesting (4 shards, block)");
+    {
+        let c = Arc::new(Coordinator::new(4, 4096, BackpressurePolicy::Block));
+        c.register("hot", d, AveragerSpec::parse("awa3(c=0.5)").unwrap())
+            .unwrap();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let producer = {
+            let c = c.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let x = vec![0.5f64; d];
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let _ = c.push("hot", x.clone());
+                }
+            })
+        };
+        bench.bench("snapshot under load (d=256)", || {
+            c.snapshot("hot").unwrap()
+        });
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        producer.join().unwrap();
+    }
+
+    bench.section("TCP service round-trips (localhost)");
+    {
+        let c = Arc::new(Coordinator::new(2, 4096, BackpressurePolicy::Block));
+        let server = Server::start("127.0.0.1:0", c, 4).expect("server");
+        let addr = server.addr().to_string();
+        let mut cl = Client::connect(&addr).expect("client");
+        cl.register("net", d, "gea(c=0.5)").unwrap();
+        let x = vec![0.5f64; d];
+        bench.bench("tcp push d=256 (roundtrip)", || cl.push("net", &x).unwrap());
+        bench.bench("tcp snapshot d=256 (roundtrip)", || {
+            cl.snapshot("net").unwrap()
+        });
+        bench.bench("tcp ping", || cl.ping().unwrap());
+    }
+    bench.finish();
+}

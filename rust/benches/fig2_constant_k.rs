@@ -1,0 +1,74 @@
+//! Regenerates paper Figure 2: constant-window estimators on the §4
+//! stochastic linear regression (expk vs awa vs truek, k ∈ {10, 100}).
+//!
+//! Run: `cargo bench --bench fig2_constant_k` (add `-- --quick` for a
+//! fast smoke pass, `-- --runs N` to change the run count).
+//!
+//! Prints the excess-error curves (log-spaced rows) plus the acceptance
+//! summary: the expk/truek and awa/truek tail ratios that encode the
+//! paper's claim ("the exponential average degrades faster as k grows").
+
+use ata::benchkit::Bench;
+use ata::linreg::{run_experiment, EvalSchedule, ExperimentConfig};
+use ata::report;
+use ata::util::pool::ThreadPool;
+
+fn arg_runs(default: u64) -> u64 {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--runs")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let mut bench = Bench::from_args("fig2_constant_k");
+    let quick = std::env::args().any(|a| a == "--quick");
+    let runs = arg_runs(if quick { 16 } else { 100 });
+    let pool = ThreadPool::with_default_size();
+
+    for k in [10u64, 100] {
+        let title = format!("figure 2, k={k} ({runs} runs x 1000 steps)");
+        bench.section(&title);
+        let mut cfg = ExperimentConfig::figure2(k, runs);
+        cfg.schedule = EvalSchedule::EveryStep;
+        let res = run_experiment(&cfg, Some(&pool)).expect("experiment");
+        println!("{}", report::render_curves(&res, 16));
+        println!("{}", report::render_summary(&res));
+        // The figure-2 claim concerns the transient-bias regime (the
+        // descent between ~2k and the noise ball), where the EMA's stale
+        // weight carries high-error early iterates. Report that window
+        // explicitly alongside the stationary tail.
+        let (lo, hi) = (2 * k, (6 * k).min(900));
+        let expk_tr = report::range_ratio(&res, "expk", "true(", lo, hi).unwrap();
+        let awa_tr = report::range_ratio(&res, "awa2", "true(", lo, hi).unwrap();
+        let expk_tail = report::tail_ratio(&res, "expk", "true(", 0.3).unwrap();
+        let awa_tail = report::tail_ratio(&res, "awa2", "true(", 0.3).unwrap();
+        bench.record_metric(
+            &format!("expk/truek transient [{lo},{hi}] @k={k}"),
+            expk_tr,
+            "x",
+        );
+        bench.record_metric(
+            &format!("awa/truek  transient [{lo},{hi}] @k={k}"),
+            awa_tr,
+            "x",
+        );
+        bench.record_metric(&format!("expk/truek tail @k={k}"), expk_tail, "x");
+        bench.record_metric(&format!("awa/truek  tail @k={k}"), awa_tail, "x");
+        let slope = report::loglog_slope(&res.steps, &res.curve("true(").unwrap().mean, 0.5);
+        bench.record_metric(&format!("truek log-log slope @k={k}"), slope, "");
+    }
+
+    bench.section("paper acceptance (Fig 2)");
+    println!(
+        "expected shape: transient ratios ≈ 1 at k=10; at k=100 the expk\n\
+         transient ratio exceeds awa's (EMA stale weight penalizes it as k\n\
+         grows; AWA stays on the window). At the stationary tail the EMA's\n\
+         longer weight tail decorrelates SGD noise and can flip the order —\n\
+         an autocorrelation effect outside the paper's iid analysis (see\n\
+         EXPERIMENTS.md §Deviations)."
+    );
+    bench.finish();
+}

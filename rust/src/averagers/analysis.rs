@@ -1,0 +1,178 @@
+//! Staleness and variance analysis of estimator weight profiles.
+//!
+//! The paper (§1) frames every tail-averaging method as a trade between
+//! *variance* (`Σα²`, lower = averaging more samples) and *staleness*
+//! (how much weight sits on old samples) and notes there is no universally
+//! accepted staleness measure. This module computes the candidates —
+//! weight-mean age, weight-tail mass, maximum effective age — from the
+//! exact weight vectors of [`super::reconstruct_weights`], so the
+//! ablation benches can quantify the §3.3 claim that more accumulators
+//! reduce staleness at equal variance.
+
+use super::{reconstruct_weights, AveragerSpec};
+
+/// Summary of one estimator's weight profile `α_{·,t}` at stream length `t`.
+#[derive(Clone, Debug)]
+pub struct StalenessReport {
+    /// `Σ_i α_i` — must be 1 for any sane estimator.
+    pub weight_sum: f64,
+    /// `Σ_i α_i²` — estimator variance in units of the sample variance.
+    pub variance: f64,
+    /// `1 / Σα²` — effective number of averaged samples.
+    pub effective_samples: f64,
+    /// `Σ_i α_i · (t − i)` — average age of the weight mass (staleness).
+    pub mean_age: f64,
+    /// Age of the oldest sample with non-negligible weight (`|α| > 1e-12`).
+    pub max_age: u64,
+    /// Total mass on samples older than the nominal window `k_t`
+    /// (the "uses old examples" penalty the paper attributes to EMA).
+    pub stale_mass: f64,
+    /// Mass of negative weights (0 for all methods in this crate).
+    pub negative_mass: f64,
+}
+
+/// Analyze `spec` at stream length `t` with nominal window `k_t`.
+pub fn staleness_report(
+    spec: &AveragerSpec,
+    t: u64,
+    k_t: f64,
+) -> Result<StalenessReport, String> {
+    let w = reconstruct_weights(spec, t)?;
+    Ok(report_from_weights(&w, t, k_t))
+}
+
+/// Analysis from a precomputed weight vector.
+pub fn report_from_weights(w: &[f64], t: u64, k_t: f64) -> StalenessReport {
+    let weight_sum: f64 = w.iter().sum();
+    let variance: f64 = w.iter().map(|a| a * a).sum();
+    let mean_age: f64 = w
+        .iter()
+        .enumerate()
+        .map(|(i, &a)| a * (t as f64 - 1.0 - i as f64))
+        .sum();
+    let max_age = w
+        .iter()
+        .position(|&a| a.abs() > 1e-12)
+        .map(|first| t - first as u64)
+        .unwrap_or(0);
+    let window_start = (t as f64 - k_t).max(0.0) as usize;
+    let stale_mass: f64 = w[..window_start.min(w.len())].iter().sum();
+    let negative_mass: f64 = w.iter().filter(|&&a| a < 0.0).map(|a| -a).sum();
+    StalenessReport {
+        weight_sum,
+        variance,
+        effective_samples: if variance > 0.0 { 1.0 / variance } else { 0.0 },
+        mean_age,
+        max_age,
+        stale_mass,
+        negative_mass,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::averagers::WindowKind;
+
+    #[test]
+    fn true_window_report_is_ideal() {
+        let spec = AveragerSpec::True {
+            window: WindowKind::Fixed { k: 10 },
+        };
+        let r = staleness_report(&spec, 50, 10.0).unwrap();
+        assert!((r.weight_sum - 1.0).abs() < 1e-12);
+        assert!((r.variance - 0.1).abs() < 1e-12);
+        assert!((r.effective_samples - 10.0).abs() < 1e-9);
+        // Uniform over the last 10: ages 0..9, mean 4.5.
+        assert!((r.mean_age - 4.5).abs() < 1e-9);
+        assert_eq!(r.max_age, 10);
+        assert!(r.stale_mass.abs() < 1e-12);
+        assert_eq!(r.negative_mass, 0.0);
+    }
+
+    #[test]
+    fn ema_has_stale_mass_awa_does_not() {
+        // The paper's Figure-2 explanation: EMA keeps weight on samples
+        // older than the window; AWA's support is bounded by ~2k.
+        let k = 10u64;
+        let t = 60;
+        let ema = staleness_report(&AveragerSpec::ExpK { k }, t, k as f64).unwrap();
+        let awa = staleness_report(
+            &AveragerSpec::Awa {
+                window: WindowKind::Fixed { k },
+                accumulators: 2,
+            },
+            t,
+            k as f64,
+        )
+        .unwrap();
+        assert!(
+            ema.stale_mass > 0.1,
+            "EMA stale mass should be sizable: {}",
+            ema.stale_mass
+        );
+        assert!(awa.max_age <= 2 * k, "AWA max age {} > 2k", awa.max_age);
+        assert_eq!(ema.max_age, t, "EMA touches every sample");
+    }
+
+    #[test]
+    fn matched_variance_across_methods() {
+        // At equal k_t the three anytime methods must report (near-)equal
+        // variance — that is the paper's design constraint.
+        let t = 64;
+        let k = 8u64;
+        let specs = [
+            AveragerSpec::ExpK { k },
+            AveragerSpec::Awa {
+                window: WindowKind::Fixed { k },
+                accumulators: 2,
+            },
+            AveragerSpec::True {
+                window: WindowKind::Fixed { k },
+            },
+        ];
+        for spec in &specs {
+            let r = staleness_report(spec, t, k as f64).unwrap();
+            // EMA's stationary variance is 1/k by the γ=(k−1)/(k+1) match;
+            // debiasing perturbs it at finite t, hence the loose band.
+            assert!(
+                (r.effective_samples - k as f64).abs() < 0.6,
+                "{}: eff samples {}",
+                spec.label(),
+                r.effective_samples
+            );
+        }
+    }
+
+    #[test]
+    fn more_accumulators_cut_max_age() {
+        let c = 0.5;
+        let t = 400;
+        let mut ages = Vec::new();
+        for accs in [2u32, 3, 5] {
+            let spec = AveragerSpec::Awa {
+                window: WindowKind::Growing { c },
+                accumulators: accs,
+            };
+            let r = staleness_report(&spec, t, c * t as f64).unwrap();
+            ages.push(r.max_age);
+            assert!((r.weight_sum - 1.0).abs() < 1e-9);
+        }
+        assert!(
+            ages[0] >= ages[1] && ages[1] >= ages[2],
+            "max age should fall with accumulators: {ages:?}"
+        );
+    }
+
+    #[test]
+    fn report_from_weights_direct() {
+        // Hand-built: weights [0, 0.5, 0.5] at t=3, k_t=2.
+        let r = report_from_weights(&[0.0, 0.5, 0.5], 3, 2.0);
+        assert_eq!(r.weight_sum, 1.0);
+        assert_eq!(r.variance, 0.5);
+        assert_eq!(r.effective_samples, 2.0);
+        assert_eq!(r.mean_age, 0.5);
+        assert_eq!(r.max_age, 2);
+        assert_eq!(r.stale_mass, 0.0);
+    }
+}

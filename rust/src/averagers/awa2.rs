@@ -1,0 +1,329 @@
+//! Anytime window average with two accumulators (paper §3.1–3.2).
+
+use super::{Averager, WindowKind};
+
+/// AWA with one *old* and one *recent* accumulator — the paper's `awa`.
+///
+/// Samples accumulate into the recent accumulator `x̄¹` (incremental mean).
+/// When it reaches the window size (`N¹ = k`, or `N¹ ≥ ct` for growing
+/// windows) it is *flushed*: copied into the old accumulator `x̄⁰` and
+/// reset. The reported average combines the two with the weight `γ*` that
+/// maximizes recency subject to the exact-window variance:
+///
+/// ```text
+/// γ* = max γ  s.t.  γ²/N¹ + (1−γ)²/N⁰ = 1/k_t
+///    = ( N¹ + N⁰N¹·√(1/(N⁰k_t) + 1/(N¹k_t) − 1/(N⁰N¹)) ) / (N¹ + N⁰)
+/// ```
+///
+/// (Eq. 6; for a fixed window, where `N⁰ = k`, this reduces to the paper's
+/// Eq. 5 form `γ* = 2N¹/(N¹+k)`.) When the target variance is unattainable
+/// (warmup: fewer than `k_t` samples pooled) the discriminant is clamped at
+/// zero, which degrades gracefully to the minimum-variance pooled mean.
+///
+/// Memory: `2d` floats, constant in `t`.
+#[derive(Clone, Debug)]
+pub struct Awa2 {
+    kind: WindowKind,
+    /// Old accumulator mean (`x̄⁰`) and its sample count (`N⁰`).
+    acc0: Vec<f64>,
+    n0: u64,
+    /// Recent accumulator mean (`x̄¹`) and its sample count (`N¹`).
+    acc1: Vec<f64>,
+    n1: u64,
+    t: u64,
+    /// Number of flushes so far (exposed for tests/metrics).
+    flushes: u64,
+    name: String,
+}
+
+impl Awa2 {
+    pub fn new(d: usize, kind: WindowKind) -> Awa2 {
+        let name = match kind {
+            WindowKind::Fixed { k } => format!("awa2(k={k})"),
+            WindowKind::Growing { c } => format!("awa2(c={c})"),
+        };
+        Awa2 {
+            kind,
+            acc0: vec![0.0; d],
+            n0: 0,
+            acc1: vec![0.0; d],
+            n1: 0,
+            t: 0,
+            flushes: 0,
+            name,
+        }
+    }
+
+    /// Sample counts `(N⁰, N¹)`.
+    pub fn counts(&self) -> (u64, u64) {
+        (self.n0, self.n1)
+    }
+
+    /// Flushes performed so far.
+    pub fn flushes(&self) -> u64 {
+        self.flushes
+    }
+
+    /// The recency weight `γ*` the current state would use (Eq. 5/6).
+    pub fn gamma(&self) -> f64 {
+        if self.n1 == 0 {
+            return 0.0;
+        }
+        if self.n0 == 0 {
+            return 1.0;
+        }
+        let k_t = self.kind.k_at(self.t);
+        combine_gamma(self.n0 as f64, self.n1 as f64, k_t)
+    }
+
+    fn should_flush(&self) -> bool {
+        match self.kind {
+            WindowKind::Fixed { k } => self.n1 >= k,
+            WindowKind::Growing { c } => self.n1 as f64 >= c * self.t as f64,
+        }
+    }
+
+    fn flush(&mut self) {
+        std::mem::swap(&mut self.acc0, &mut self.acc1);
+        self.n0 = self.n1;
+        self.acc1.iter_mut().for_each(|a| *a = 0.0);
+        self.n1 = 0;
+        self.flushes += 1;
+    }
+}
+
+/// Recency weight for combining two accumulators of `n0` (old, variance
+/// `1/n0`) and `n1` (recent, variance `1/n1`) samples to hit target
+/// variance `1/k_t` (paper Eq. 6, shared with the multi-accumulator case).
+///
+/// The discriminant is clamped at zero: a negative value means even the
+/// pooled mean cannot reach the target (warmup), and clamping yields
+/// exactly the minimum-variance pooling weight `n1/(n0+n1)`.
+pub(crate) fn combine_gamma(n0: f64, n1: f64, k_t: f64) -> f64 {
+    debug_assert!(n0 > 0.0 && n1 > 0.0 && k_t >= 1.0);
+    let disc = (1.0 / (n0 * k_t) + 1.0 / (n1 * k_t) - 1.0 / (n0 * n1)).max(0.0);
+    let gamma = (n1 + n0 * n1 * disc.sqrt()) / (n0 + n1);
+    gamma.clamp(0.0, 1.0)
+}
+
+impl Averager for Awa2 {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.acc1.len()
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn observe(&mut self, x: &[f64]) {
+        assert_eq!(x.len(), self.acc1.len(), "dimension mismatch");
+        self.t += 1;
+        self.n1 += 1;
+        super::mean_update(&mut self.acc1, x, self.n1 as f64);
+        if self.should_flush() {
+            self.flush();
+        }
+    }
+
+    fn value_into(&self, out: &mut [f64]) -> bool {
+        if self.t == 0 {
+            return false;
+        }
+        if self.n1 == 0 {
+            // Fresh flush: the old accumulator is exactly the last window.
+            out.copy_from_slice(&self.acc0);
+            return true;
+        }
+        if self.n0 == 0 {
+            out.copy_from_slice(&self.acc1);
+            return true;
+        }
+        let gamma = self.gamma();
+        super::lerp_into(out, &self.acc1, &self.acc0, gamma);
+        true
+    }
+
+    fn window_len(&self) -> f64 {
+        self.kind.k_at(self.t)
+    }
+
+    fn memory_floats(&self) -> usize {
+        self.acc0.len() + self.acc1.len()
+    }
+
+    fn reset(&mut self) {
+        self.acc0.iter_mut().for_each(|a| *a = 0.0);
+        self.acc1.iter_mut().for_each(|a| *a = 0.0);
+        self.n0 = 0;
+        self.n1 = 0;
+        self.t = 0;
+        self.flushes = 0;
+    }
+
+    fn clone_box(&self) -> Box<dyn Averager> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_gamma_reduces_to_eq5() {
+        // With N⁰ = k the general Eq. 6 weight must equal 2N¹/(N¹+k).
+        for k in [4u64, 10, 100] {
+            for n1 in 1..k {
+                let got = combine_gamma(k as f64, n1 as f64, k as f64);
+                let want = 2.0 * n1 as f64 / (n1 + k) as f64;
+                assert!(
+                    (got - want).abs() < 1e-12,
+                    "k={k} n1={n1}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn equals_exact_window_right_after_flush() {
+        // At N¹ = 0 (just flushed) AWA must equal the exact k-window mean.
+        let k = 5u64;
+        let mut a = Awa2::new(1, WindowKind::Fixed { k });
+        let xs: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        for (i, &x) in xs.iter().enumerate() {
+            a.observe_scalar(x);
+            let t = i + 1;
+            if t % k as usize == 0 {
+                let want: f64 =
+                    xs[t - k as usize..t].iter().sum::<f64>() / k as f64;
+                let got = a.value_scalar().unwrap();
+                assert!((got - want).abs() < 1e-12, "t={t}");
+            }
+        }
+        assert_eq!(a.flushes(), 4);
+    }
+
+    #[test]
+    fn warmup_is_running_mean() {
+        // Before the first flush there is no old accumulator; AWA reports
+        // the running mean of everything seen.
+        let mut a = Awa2::new(1, WindowKind::Fixed { k: 10 });
+        let mut sum = 0.0;
+        for i in 1..=9u64 {
+            let x = (i * i) as f64;
+            a.observe_scalar(x);
+            sum += x;
+            assert!((a.value_scalar().unwrap() - sum / i as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn variance_constraint_fixed_k() {
+        // After the first flush, the weights (γ/N¹ on each recent sample,
+        // (1−γ)/N⁰ on each old one) must satisfy Σα² = 1/k exactly.
+        let k = 8u64;
+        let mut a = Awa2::new(1, WindowKind::Fixed { k });
+        for t in 1..=100u64 {
+            a.observe_scalar(t as f64);
+            let (n0, n1) = a.counts();
+            if n0 == 0 || n1 == 0 {
+                continue;
+            }
+            let g = a.gamma();
+            let sum_sq = g * g / n1 as f64 + (1.0 - g) * (1.0 - g) / n0 as f64;
+            assert!(
+                (sum_sq - 1.0 / k as f64).abs() < 1e-12,
+                "t={t}: Σα²={sum_sq}"
+            );
+        }
+    }
+
+    #[test]
+    fn variance_constraint_growing_ct() {
+        // Whenever the target variance 1/(ct) is attainable
+        // (N⁰ + N¹ ≥ ct), the combined weights must satisfy
+        // γ²/N¹ + (1−γ)²/N⁰ = 1/(ct) exactly (Eq. 6).
+        let c = 0.5;
+        let mut a = Awa2::new(1, WindowKind::Growing { c });
+        let mut checked = 0u32;
+        for t in 1..=2000u64 {
+            a.observe_scalar((t as f64).cos());
+            let (n0, n1) = a.counts();
+            let k_t = (c * t as f64).max(1.0);
+            if n0 == 0 || n1 == 0 || ((n0 + n1) as f64) < k_t {
+                continue;
+            }
+            let g = a.gamma();
+            let sum_sq = g * g / n1 as f64 + (1.0 - g) * (1.0 - g) / n0 as f64;
+            assert!(
+                (sum_sq - 1.0 / k_t).abs() < 1e-12,
+                "t={t} n0={n0} n1={n1}: Σα²={sum_sq} vs 1/ct={}",
+                1.0 / k_t
+            );
+            checked += 1;
+        }
+        assert!(checked > 500, "constraint rarely checked: {checked}");
+    }
+
+    #[test]
+    fn gamma_maximizes_recency_over_pooling() {
+        // Eq. 6 takes the LARGER root: γ* must be ≥ the pooled-mean weight
+        // n1/(n0+n1) whenever the constraint is attainable.
+        for (n0, n1, kt) in [(10.0, 4.0, 7.0), (100.0, 30.0, 65.0), (50.0, 50.0, 80.0)] {
+            let g = combine_gamma(n0, n1, kt);
+            assert!(
+                g >= n1 / (n0 + n1) - 1e-12,
+                "n0={n0} n1={n1} kt={kt}: γ={g}"
+            );
+            assert!(g <= 1.0);
+        }
+    }
+
+    #[test]
+    fn growing_flush_counts_scale_with_t() {
+        let mut a = Awa2::new(1, WindowKind::Growing { c: 0.5 });
+        for t in 1..=1000u64 {
+            a.observe_scalar(t as f64);
+        }
+        // Flush happens whenever N¹ ≥ 0.5t — roughly log-many times.
+        assert!(a.flushes() >= 5, "flushes={}", a.flushes());
+        assert!(a.flushes() <= 30, "flushes={}", a.flushes());
+    }
+
+    #[test]
+    fn memory_constant_in_t() {
+        let mut a = Awa2::new(16, WindowKind::Growing { c: 0.5 });
+        let m = a.memory_floats();
+        for _ in 0..5000 {
+            a.observe(&[0.5; 16]);
+        }
+        assert_eq!(a.memory_floats(), m);
+        assert_eq!(m, 32);
+    }
+
+    #[test]
+    fn constant_stream_fixed_point() {
+        let mut a = Awa2::new(2, WindowKind::Growing { c: 0.25 });
+        for _ in 0..500 {
+            a.observe(&[4.0, -4.0]);
+        }
+        let v = a.value().unwrap();
+        assert!((v[0] - 4.0).abs() < 1e-12 && (v[1] + 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_reuse() {
+        let mut a = Awa2::new(1, WindowKind::Fixed { k: 3 });
+        for i in 0..10 {
+            a.observe_scalar(i as f64);
+        }
+        a.reset();
+        assert_eq!(a.t(), 0);
+        assert_eq!(a.counts(), (0, 0));
+        assert!(a.value_scalar().is_none());
+    }
+}

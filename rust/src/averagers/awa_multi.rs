@@ -1,0 +1,459 @@
+//! Anytime window average with an arbitrary number of accumulators
+//! (paper §3.3–3.4 — `awa3` and beyond).
+
+use super::awa2::combine_gamma;
+use super::{Averager, WindowKind};
+
+/// AWA with `z` recent accumulators plus one old accumulator (`z+1` total).
+///
+/// Accumulator index 0 is the *oldest*; samples enter the newest (`z`).
+/// When the newest fills (fixed window: `N^z = k/z`; growing window: when
+/// the recent group reaches `Σ_{i≥1} N^i ≥ ct`) every accumulator shifts
+/// one slot toward 0 and the newest resets. More accumulators mean the old
+/// accumulator covers a *shorter*, fresher chunk, reducing the maximum
+/// staleness — the paper shows `z = 2` (three accumulators, `awa3`) already
+/// matches the exact growing-window average at `c = 0.5`.
+///
+/// The reported average (Eqs. 8–9) pools the recent accumulators with
+/// weights proportional to their counts (the minimum-variance pooling) and
+/// then combines that pool with the old accumulator using the same optimal
+/// two-group weight as [`super::Awa2`], targeting variance `1/k_t`:
+///
+/// ```text
+/// x̄ = pooled + γ⁰·(x̄⁰ − pooled),
+/// γ⁰ = N⁰(1 − N^{-0}·√(1/(N⁰k_t) + 1/(N^{-0}k_t) − 1/(N⁰N^{-0})))
+///      / (N⁰ + N^{-0})
+/// ```
+///
+/// with `N^{-0} = Σ_{i=1..z} N^i`. Memory: `(z+1)·d` floats, constant in
+/// `t`. With `z = 1` this is exactly [`super::Awa2`] (tested).
+#[derive(Clone, Debug)]
+pub struct AwaMulti {
+    kind: WindowKind,
+    /// `accs[0]` oldest … `accs[z]` newest.
+    means: Vec<Vec<f64>>,
+    counts: Vec<u64>,
+    z: usize,
+    t: u64,
+    shifts: u64,
+    /// Scratch for the pooled recent mean (avoids allocation on read).
+    name: String,
+}
+
+impl AwaMulti {
+    /// `z ≥ 1` recent accumulators (total accumulators = `z + 1`).
+    pub fn new(d: usize, kind: WindowKind, z: u32) -> AwaMulti {
+        let z = z.max(1) as usize;
+        let name = match kind {
+            WindowKind::Fixed { k } => format!("awa{}(k={k})", z + 1),
+            WindowKind::Growing { c } => format!("awa{}(c={c})", z + 1),
+        };
+        AwaMulti {
+            kind,
+            means: (0..=z).map(|_| vec![0.0; d]).collect(),
+            counts: vec![0; z + 1],
+            z,
+            t: 0,
+            shifts: 0,
+            name,
+        }
+    }
+
+    /// Number of recent accumulators `z`.
+    pub fn z(&self) -> usize {
+        self.z
+    }
+
+    /// Per-accumulator sample counts, oldest first.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Shifts (flush events) so far.
+    pub fn shifts(&self) -> u64 {
+        self.shifts
+    }
+
+    /// Recent-group size `N^{-0} = Σ_{i≥1} N^i`.
+    pub fn recent_total(&self) -> u64 {
+        self.counts[1..].iter().sum()
+    }
+
+    /// The old-accumulator weight `γ⁰` the current state would use
+    /// (Eq. 8/9); 0 when no old accumulator exists.
+    pub fn gamma0(&self) -> f64 {
+        let n0 = self.counts[0];
+        let nrec = self.recent_total();
+        if n0 == 0 || nrec == 0 {
+            return if n0 > 0 { 1.0 } else { 0.0 };
+        }
+        let k_t = self.kind.k_at(self.t);
+        1.0 - combine_gamma(n0 as f64, nrec as f64, k_t)
+    }
+
+    fn chunk_size(&self) -> u64 {
+        match self.kind {
+            // Paper assumes k a multiple of z; we round up for the general
+            // case so the recent group never exceeds ~k samples.
+            WindowKind::Fixed { k } => (k + self.z as u64 - 1) / self.z as u64,
+            WindowKind::Growing { .. } => unreachable!("growing uses group trigger"),
+        }
+    }
+
+    fn should_shift(&self) -> bool {
+        match self.kind {
+            WindowKind::Fixed { .. } => self.counts[self.z] >= self.chunk_size(),
+            WindowKind::Growing { c } => self.recent_total() as f64 >= c * self.t as f64,
+        }
+    }
+
+    fn shift(&mut self) {
+        // Rotate: oldest slot's buffer is recycled as the new newest.
+        self.means.rotate_left(1);
+        self.counts.rotate_left(1);
+        let z = self.z;
+        self.means[z].iter_mut().for_each(|m| *m = 0.0);
+        self.counts[z] = 0;
+        self.shifts += 1;
+    }
+
+    /// Pooled recent mean written into `out`; returns `N^{-0}` (0 = empty).
+    fn pooled_recent_into(&self, out: &mut [f64]) -> u64 {
+        let nrec = self.recent_total();
+        if nrec == 0 {
+            return 0;
+        }
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let inv = 1.0 / nrec as f64;
+        for i in 1..=self.z {
+            let w = self.counts[i] as f64 * inv;
+            if w == 0.0 {
+                continue;
+            }
+            for (o, &m) in out.iter_mut().zip(&self.means[i]) {
+                *o += w * m;
+            }
+        }
+        nrec
+    }
+}
+
+/// `out[i] = Σ_j terms[j].0 · terms[j].1[i]` in one pass over `out`,
+/// specialized for the small accumulator counts AWA uses so the common
+/// cases compile to straight-line FMA streams.
+fn weighted_sum_into(out: &mut [f64], terms: &[(f64, &[f64])]) {
+    match terms {
+        [] => out.iter_mut().for_each(|o| *o = 0.0),
+        [(w, a)] => {
+            for (o, &av) in out.iter_mut().zip(*a) {
+                *o = w * av;
+            }
+        }
+        [(w1, a1), (w2, a2)] => {
+            for ((o, &v1), &v2) in out.iter_mut().zip(*a1).zip(*a2) {
+                *o = w1 * v1 + w2 * v2;
+            }
+        }
+        [(w1, a1), (w2, a2), (w3, a3)] => {
+            for (((o, &v1), &v2), &v3) in
+                out.iter_mut().zip(*a1).zip(*a2).zip(*a3)
+            {
+                *o = w1 * v1 + w2 * v2 + w3 * v3;
+            }
+        }
+        [(w1, a1), (w2, a2), (w3, a3), (w4, a4)] => {
+            for ((((o, &v1), &v2), &v3), &v4) in
+                out.iter_mut().zip(*a1).zip(*a2).zip(*a3).zip(*a4)
+            {
+                *o = w1 * v1 + w2 * v2 + w3 * v3 + w4 * v4;
+            }
+        }
+        [head @ .., (w, a)] => {
+            weighted_sum_into(out, head);
+            for (o, &av) in out.iter_mut().zip(*a) {
+                *o += w * av;
+            }
+        }
+    }
+}
+
+impl Averager for AwaMulti {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.means[0].len()
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn observe(&mut self, x: &[f64]) {
+        assert_eq!(x.len(), self.dim(), "dimension mismatch");
+        self.t += 1;
+        let z = self.z;
+        self.counts[z] += 1;
+        super::mean_update(&mut self.means[z], x, self.counts[z] as f64);
+        if self.should_shift() {
+            self.shift();
+        }
+    }
+
+    fn value_into(&self, out: &mut [f64]) -> bool {
+        if self.t == 0 {
+            return false;
+        }
+        let n0 = self.counts[0];
+        let nrec = self.recent_total();
+        if nrec == 0 {
+            if n0 == 0 {
+                return false;
+            }
+            out.copy_from_slice(&self.means[0]);
+            return true;
+        }
+        // Fused weighted sum out = Σ_j w_j·acc_j with the final
+        // per-accumulator weights (Eq. 8/9) in a SINGLE pass over the
+        // output: all accumulator streams are read simultaneously, so
+        // memory traffic is (m+1) streams instead of ~3 per accumulator
+        // for pooled-then-combine (measured 46µs → 19µs at z=2,
+        // d=65536 — see EXPERIMENTS.md §Perf).
+        let gamma0 = if n0 == 0 {
+            0.0
+        } else {
+            let k_t = self.kind.k_at(self.t);
+            1.0 - combine_gamma(n0 as f64, nrec as f64, k_t)
+        };
+        let rec_scale = (1.0 - gamma0) / nrec as f64;
+        // Stack buffer for the common z ≤ 7 (heap fallback above that) so
+        // scalar-stream reads stay allocation-free.
+        const STACK_TERMS: usize = 8;
+        let mut stack: [(f64, &[f64]); STACK_TERMS] = [(0.0, &[]); STACK_TERMS];
+        let mut heap: Vec<(f64, &[f64])> = Vec::new();
+        let mut n_terms = 0usize;
+        for j in 0..=self.z {
+            let w = if j == 0 {
+                gamma0
+            } else {
+                self.counts[j] as f64 * rec_scale
+            };
+            if w != 0.0 {
+                if self.z < STACK_TERMS {
+                    stack[n_terms] = (w, self.means[j].as_slice());
+                } else {
+                    heap.push((w, self.means[j].as_slice()));
+                }
+                n_terms += 1;
+            }
+        }
+        let terms: &[(f64, &[f64])] = if self.z < STACK_TERMS {
+            &stack[..n_terms]
+        } else {
+            &heap
+        };
+        weighted_sum_into(out, terms);
+        true
+    }
+
+    fn window_len(&self) -> f64 {
+        self.kind.k_at(self.t)
+    }
+
+    fn memory_floats(&self) -> usize {
+        self.means.iter().map(Vec::len).sum()
+    }
+
+    fn reset(&mut self) {
+        for m in &mut self.means {
+            m.iter_mut().for_each(|v| *v = 0.0);
+        }
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.t = 0;
+        self.shifts = 0;
+    }
+
+    fn clone_box(&self) -> Box<dyn Averager> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::averagers::Awa2;
+
+    #[test]
+    fn z1_equals_awa2_fixed() {
+        let k = 7u64;
+        let mut multi = AwaMulti::new(1, WindowKind::Fixed { k }, 1);
+        let mut two = Awa2::new(1, WindowKind::Fixed { k });
+        for t in 1..=200u64 {
+            let x = (t as f64 * 0.37).sin();
+            multi.observe_scalar(x);
+            two.observe_scalar(x);
+            let a = multi.value_scalar().unwrap();
+            let b = two.value_scalar().unwrap();
+            assert!((a - b).abs() < 1e-12, "t={t}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn z1_equals_awa2_growing() {
+        let c = 0.5;
+        let mut multi = AwaMulti::new(1, WindowKind::Growing { c }, 1);
+        let mut two = Awa2::new(1, WindowKind::Growing { c });
+        for t in 1..=500u64 {
+            let x = (t as f64 * 0.11).cos() * t as f64;
+            multi.observe_scalar(x);
+            two.observe_scalar(x);
+            let a = multi.value_scalar().unwrap();
+            let b = two.value_scalar().unwrap();
+            assert!(
+                (a - b).abs() < 1e-9 * b.abs().max(1.0),
+                "t={t}: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_k_chunks_fill_and_shift() {
+        // k=12, z=3 → chunk 4: after 12 samples the oldest accumulator
+        // holds samples 1–4.
+        let mut a = AwaMulti::new(1, WindowKind::Fixed { k: 12 }, 3);
+        for t in 1..=12u64 {
+            a.observe_scalar(t as f64);
+        }
+        assert_eq!(a.shifts(), 3);
+        assert_eq!(a.counts(), &[4, 4, 4, 0]);
+        // Oldest accumulator = mean(1..4) = 2.5
+        assert!((a.means[0][0] - 2.5).abs() < 1e-12);
+        // Recent pool = mean(5..12) = 8.5, which is a full 8 < k... the
+        // estimate must combine with the old chunk to reach variance 1/12.
+        let v = a.value_scalar().unwrap();
+        // Exact window mean of last 12 = 6.5; the estimator is unbiased
+        // for the window only in expectation, but with all weights known:
+        let nrec = 8.0;
+        let n0 = 4.0;
+        let g = combine_gamma(n0, nrec, 12.0);
+        let want = g * 8.5 + (1.0 - g) * 2.5;
+        assert!((v - want).abs() < 1e-12, "{v} vs {want}");
+    }
+
+    #[test]
+    fn variance_constraint_holds_when_attainable() {
+        // Weights: γ⁰/N⁰ per old sample, (1−γ⁰)·(N^i/N^{-0})/N^i =
+        // (1−γ⁰)/N^{-0} per recent sample →
+        // Σα² = (γ⁰)²/N⁰ + (1−γ⁰)²/N^{-0} = 1/k_t.
+        let c = 0.5;
+        let mut a = AwaMulti::new(1, WindowKind::Growing { c }, 2);
+        let mut checked = 0;
+        for t in 1..=3000u64 {
+            a.observe_scalar((t as f64).sin());
+            let n0 = a.counts()[0];
+            let nrec = a.recent_total();
+            let k_t = (c * t as f64).max(1.0);
+            if n0 == 0 || nrec == 0 || ((n0 + nrec) as f64) < k_t {
+                continue;
+            }
+            let g0 = a.gamma0();
+            let sum_sq = g0 * g0 / n0 as f64 + (1.0 - g0) * (1.0 - g0) / nrec as f64;
+            assert!(
+                (sum_sq - 1.0 / k_t).abs() < 1e-12,
+                "t={t}: Σα²={sum_sq} vs {}",
+                1.0 / k_t
+            );
+            checked += 1;
+        }
+        assert!(checked > 1000, "checked={checked}");
+    }
+
+    #[test]
+    fn correction_vanishes_when_recent_group_full_fixed() {
+        // Whenever N^{-0} = k the estimator must be exactly the pooled
+        // recent mean (γ⁰ = 0) — the classic non-anytime tail average.
+        let k = 12u64;
+        let mut a = AwaMulti::new(1, WindowKind::Fixed { k }, 3);
+        let xs: Vec<f64> = (1..=48).map(|i| (i as f64).sqrt()).collect();
+        for (i, &x) in xs.iter().enumerate() {
+            a.observe_scalar(x);
+            let t = i + 1;
+            if a.recent_total() == k {
+                let want: f64 =
+                    xs[t - k as usize..t].iter().sum::<f64>() / k as f64;
+                let got = a.value_scalar().unwrap();
+                assert!((got - want).abs() < 1e-12, "t={t}");
+                assert!(a.gamma0().abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn more_accumulators_reduce_old_chunk_size() {
+        // Growing window: with larger z the oldest accumulator holds a
+        // smaller (more recent) chunk on average.
+        let c = 0.5;
+        let mut sizes = Vec::new();
+        for z in [1u32, 2, 4] {
+            let mut a = AwaMulti::new(1, WindowKind::Growing { c }, z);
+            for t in 1..=4000u64 {
+                a.observe_scalar(t as f64);
+            }
+            sizes.push(a.counts()[0] as f64 / a.recent_total().max(1) as f64);
+        }
+        assert!(
+            sizes[0] > sizes[1] && sizes[1] > sizes[2],
+            "old-chunk ratio must shrink with z: {sizes:?}"
+        );
+    }
+
+    #[test]
+    fn memory_is_z_plus_one_times_d() {
+        for z in [1u32, 2, 5] {
+            let d = 10;
+            let mut a = AwaMulti::new(d, WindowKind::Growing { c: 0.25 }, z);
+            let m0 = a.memory_floats();
+            assert_eq!(m0, (z as usize + 1) * d);
+            for _ in 0..3000 {
+                a.observe(&vec![1.0; d]);
+            }
+            assert_eq!(a.memory_floats(), m0, "z={z}");
+        }
+    }
+
+    #[test]
+    fn constant_stream_fixed_point() {
+        let mut a = AwaMulti::new(3, WindowKind::Growing { c: 0.5 }, 2);
+        for _ in 0..1000 {
+            a.observe(&[2.0, 0.0, -2.0]);
+        }
+        let v = a.value().unwrap();
+        for (i, want) in [2.0, 0.0, -2.0].iter().enumerate() {
+            assert!((v[i] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn reset_reuse() {
+        let mut a = AwaMulti::new(1, WindowKind::Fixed { k: 6 }, 2);
+        for i in 0..20 {
+            a.observe_scalar(i as f64);
+        }
+        a.reset();
+        assert_eq!(a.t(), 0);
+        assert_eq!(a.shifts(), 0);
+        assert!(a.value_scalar().is_none());
+        a.observe_scalar(5.0);
+        assert_eq!(a.value_scalar().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn growing_first_shift_happens_at_t1() {
+        // t=1: recent total 1 ≥ c·1 for any c<1 → immediate shift; the
+        // estimator must still report sample 1 (from the old accumulator).
+        let mut a = AwaMulti::new(1, WindowKind::Growing { c: 0.5 }, 2);
+        a.observe_scalar(42.0);
+        assert_eq!(a.value_scalar().unwrap(), 42.0);
+    }
+}

@@ -1,0 +1,253 @@
+//! Fixed-decay exponential average (paper Eq. 2, the `expk` baseline).
+
+use super::{Averager, WindowKind};
+
+/// Exponential moving average `x̄_t = γ·x̄_{t−1} + (1−γ)·x_t`.
+///
+/// The classic constant-memory running average. Its stationary variance
+/// equals that of a window of `k = (1+γ)/(1−γ)` samples (paper footnote 2),
+/// so [`ExpAverage::for_window`] constructs the paper's `expk` comparator
+/// with `γ = (k−1)/(k+1)`.
+///
+/// The raw recursion started from `x̄_0 = 0` underweights early samples
+/// (weights sum to `1 − γ^t`, not 1); we store the raw recursion and
+/// *debias* on read by dividing by `1 − γ^t`, exactly as Adam does. This
+/// keeps the estimator linear with weights summing to one at every `t`.
+#[derive(Clone, Debug)]
+pub struct ExpAverage {
+    gamma: f64,
+    /// Raw (biased) EMA state.
+    ema: Vec<f64>,
+    /// `γ^t`, tracked multiplicatively for the debias factor.
+    gamma_pow_t: f64,
+    t: u64,
+    name: String,
+}
+
+impl ExpAverage {
+    /// Build with an explicit decay `γ ∈ [0, 1)`.
+    pub fn new(d: usize, gamma: f64) -> Result<ExpAverage, String> {
+        if !(0.0..1.0).contains(&gamma) {
+            return Err(format!("exp average requires 0 <= gamma < 1, got {gamma}"));
+        }
+        Ok(ExpAverage {
+            gamma,
+            ema: vec![0.0; d],
+            gamma_pow_t: 1.0,
+            t: 0,
+            name: format!("exp(g={gamma})"),
+        })
+    }
+
+    /// The paper's `expk`: decay matched to a `k`-sample window,
+    /// `γ = (k−1)/(k+1)` so that `(1+γ)/(1−γ) = k`.
+    pub fn for_window(d: usize, k: u64) -> Result<ExpAverage, String> {
+        if k == 0 {
+            return Err("expk requires k >= 1".into());
+        }
+        let kf = k as f64;
+        let gamma = (kf - 1.0) / (kf + 1.0);
+        let mut a = ExpAverage::new(d, gamma)?;
+        a.name = format!("expk(k={k})");
+        Ok(a)
+    }
+
+    /// The decay in use.
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+
+    /// Equivalent stationary window `(1+γ)/(1−γ)`.
+    pub fn equivalent_window(&self) -> f64 {
+        (1.0 + self.gamma) / (1.0 - self.gamma)
+    }
+
+    /// Debias factor `1/(1−γ^t)`.
+    fn debias(&self) -> f64 {
+        if self.t == 0 {
+            0.0
+        } else {
+            1.0 / (1.0 - self.gamma_pow_t)
+        }
+    }
+}
+
+impl Averager for ExpAverage {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.ema.len()
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn observe(&mut self, x: &[f64]) {
+        assert_eq!(x.len(), self.ema.len(), "dimension mismatch");
+        self.t += 1;
+        self.gamma_pow_t *= self.gamma;
+        let g = self.gamma;
+        let om = 1.0 - g;
+        for (e, &xv) in self.ema.iter_mut().zip(x) {
+            *e = g * *e + om * xv;
+        }
+    }
+
+    fn value_into(&self, out: &mut [f64]) -> bool {
+        if self.t == 0 {
+            return false;
+        }
+        let f = self.debias();
+        for (o, &e) in out.iter_mut().zip(&self.ema) {
+            *o = e * f;
+        }
+        true
+    }
+
+    fn window_len(&self) -> f64 {
+        WindowKind::Fixed {
+            k: self.equivalent_window().round() as u64,
+        }
+        .k_at(self.t)
+    }
+
+    fn memory_floats(&self) -> usize {
+        self.ema.len()
+    }
+
+    fn reset(&mut self) {
+        self.ema.iter_mut().for_each(|e| *e = 0.0);
+        self.gamma_pow_t = 1.0;
+        self.t = 0;
+    }
+
+    fn clone_box(&self) -> Box<dyn Averager> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_sample_is_exact() {
+        let mut a = ExpAverage::new(2, 0.9).unwrap();
+        a.observe(&[3.0, -1.0]);
+        assert_eq!(a.value().unwrap(), vec![3.0, -1.0]);
+    }
+
+    #[test]
+    fn matches_explicit_geometric_weights() {
+        let gamma: f64 = 0.8;
+        let mut a = ExpAverage::new(1, gamma).unwrap();
+        let xs = [1.0, 4.0, -2.0, 0.5, 3.0];
+        for &x in &xs {
+            a.observe_scalar(x);
+        }
+        let t = xs.len();
+        // α_i ∝ (1-γ)γ^{t-i}, normalized by (1-γ^t).
+        let norm = 1.0 - gamma.powi(t as i32);
+        let want: f64 = xs
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| (1.0 - gamma) * gamma.powi((t - 1 - i) as i32) * x / norm)
+            .sum();
+        let got = a.value_scalar().unwrap();
+        assert!((got - want).abs() < 1e-12, "got {got}, want {want}");
+    }
+
+    #[test]
+    fn constant_stream_is_fixed_point() {
+        let mut a = ExpAverage::for_window(3, 10).unwrap();
+        for _ in 0..100 {
+            a.observe(&[7.0, 7.0, 7.0]);
+        }
+        for v in a.value().unwrap() {
+            assert!((v - 7.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn expk_gamma_mapping() {
+        let a = ExpAverage::for_window(1, 10).unwrap();
+        assert!((a.gamma() - 9.0 / 11.0).abs() < 1e-15);
+        assert!((a.equivalent_window() - 10.0).abs() < 1e-9);
+        let b = ExpAverage::for_window(1, 1).unwrap();
+        assert_eq!(b.gamma(), 0.0); // k=1 → copy the last sample
+    }
+
+    #[test]
+    fn gamma_zero_tracks_last_sample() {
+        let mut a = ExpAverage::new(1, 0.0).unwrap();
+        for x in [5.0, 6.0, 7.0] {
+            a.observe_scalar(x);
+            assert_eq!(a.value_scalar().unwrap(), x);
+        }
+    }
+
+    #[test]
+    fn stationary_variance_matches_window() {
+        // Feed iid N(0,1); the debiased EMA's variance should approach
+        // 1/k = (1-γ)/(1+γ).
+        use crate::rng::{GaussianSource, Xoshiro256};
+        let k = 20u64;
+        let mut g = GaussianSource::new(Xoshiro256::seed_from_u64(1));
+        let mut a = ExpAverage::for_window(1, k).unwrap();
+        // Burn in, then sample the estimator across time.
+        let mut vals = Vec::new();
+        for t in 0..20_000 {
+            a.observe_scalar(g.next_gaussian());
+            if t > 500 {
+                vals.push(a.value_scalar().unwrap());
+            }
+        }
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+            / vals.len() as f64;
+        let want = 1.0 / k as f64;
+        assert!(
+            (var - want).abs() < 0.25 * want,
+            "var {var} vs 1/k {want}"
+        );
+    }
+
+    #[test]
+    fn reset_restores_initial_state() {
+        let mut a = ExpAverage::new(1, 0.5).unwrap();
+        a.observe_scalar(9.0);
+        a.reset();
+        assert_eq!(a.t(), 0);
+        assert_eq!(a.value_scalar(), None);
+        a.observe_scalar(2.0);
+        assert_eq!(a.value_scalar().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn rejects_bad_gamma() {
+        assert!(ExpAverage::new(1, 1.0).is_err());
+        assert!(ExpAverage::new(1, -0.1).is_err());
+        assert!(ExpAverage::for_window(1, 0).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn rejects_wrong_dim() {
+        let mut a = ExpAverage::new(2, 0.5).unwrap();
+        a.observe(&[1.0]);
+    }
+
+    #[test]
+    fn memory_constant_in_t() {
+        let mut a = ExpAverage::for_window(8, 100).unwrap();
+        let m0 = a.memory_floats();
+        for _ in 0..10_000 {
+            a.observe(&[0.0; 8]);
+        }
+        assert_eq!(a.memory_floats(), m0);
+        assert_eq!(m0, 8);
+    }
+}

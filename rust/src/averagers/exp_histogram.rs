@@ -1,0 +1,326 @@
+//! Exponential-histogram sliding-window mean (Datar, Gionis, Indyk &
+//! Motwani, 2002) — the related-work baseline the paper cites in §1 as
+//! the "solution with theoretical guarantees".
+//!
+//! DGIM maintains the window sum with buckets of geometrically growing
+//! size: at most `⌈1/(2ε)⌉ + 2` buckets per size class, merging the two
+//! oldest of a class when it overflows. Expired buckets (newest element
+//! older than the window) are dropped; the oldest surviving bucket
+//! straddles the window boundary, so its contribution is counted at half
+//! weight, giving a sum estimate with relative element-count error ≤ ε.
+//!
+//! Memory: `O((1/ε)·log(ε·k_t))` buckets of `d` floats — *logarithmic*
+//! in the window (vs AWA's constant, the exact window's linear), which
+//! is exactly the trade the paper's Figure-2/3 methods improve on. The
+//! `ablation_baselines` bench quantifies accuracy-vs-memory against AWA.
+
+use super::{Averager, WindowKind};
+use std::collections::VecDeque;
+
+#[derive(Clone, Debug)]
+struct Bucket {
+    /// Stream time of the NEWEST element folded into this bucket.
+    end_time: u64,
+    /// Number of elements folded in (a power of two).
+    count: u64,
+    /// Vector sum of the folded elements.
+    sum: Vec<f64>,
+}
+
+/// DGIM exponential-histogram estimator of the window mean.
+#[derive(Clone, Debug)]
+pub struct EhWindow {
+    kind: WindowKind,
+    eps: f64,
+    /// Max buckets per size class before a merge: `⌈1/(2ε)⌉ + 2`.
+    max_per_size: usize,
+    /// Oldest at the front, newest at the back.
+    buckets: VecDeque<Bucket>,
+    t: u64,
+    d: usize,
+    name: String,
+}
+
+impl EhWindow {
+    /// `eps ∈ (0, 1)` is the relative window-coverage error.
+    pub fn new(d: usize, kind: WindowKind, eps: f64) -> Result<EhWindow, String> {
+        kind.validate()?;
+        if !(eps > 0.0 && eps < 1.0) {
+            return Err(format!("eh requires 0 < eps < 1, got {eps}"));
+        }
+        let max_per_size = (1.0 / (2.0 * eps)).ceil() as usize + 2;
+        let name = match kind {
+            WindowKind::Fixed { k } => format!("eh(k={k},eps={eps})"),
+            WindowKind::Growing { c } => format!("eh(c={c},eps={eps})"),
+        };
+        Ok(EhWindow {
+            kind,
+            eps,
+            max_per_size,
+            buckets: VecDeque::new(),
+            t: 0,
+            d,
+            name,
+        })
+    }
+
+    /// Relative-error parameter.
+    pub fn eps(&self) -> f64 {
+        self.eps
+    }
+
+    /// Current bucket count (the memory axis; grows as `log k_t / ε`).
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Merge cascade: whenever a size class exceeds `max_per_size`,
+    /// merge its two OLDEST buckets into one of double size (which may
+    /// overflow the next class, hence the loop).
+    fn cascade(&mut self) {
+        let mut size = 1u64;
+        loop {
+            // Find the oldest two buckets of `size` and count the class.
+            let mut idxs: Vec<usize> = Vec::new();
+            for (i, b) in self.buckets.iter().enumerate() {
+                if b.count == size {
+                    idxs.push(i);
+                }
+            }
+            if idxs.len() <= self.max_per_size {
+                break;
+            }
+            // Oldest two are the smallest indices (front = oldest).
+            let (a, b) = (idxs[0], idxs[1]);
+            debug_assert!(a < b);
+            let merged_sum: Vec<f64> = {
+                let ba = &self.buckets[a];
+                let bb = &self.buckets[b];
+                ba.sum.iter().zip(&bb.sum).map(|(x, y)| x + y).collect()
+            };
+            let end_time = self.buckets[b].end_time;
+            self.buckets[b] = Bucket {
+                end_time,
+                count: size * 2,
+                sum: merged_sum,
+            };
+            self.buckets.remove(a);
+            size *= 2;
+        }
+    }
+
+    fn expire(&mut self) {
+        let k_t = self.kind.k_at(self.t).ceil() as u64;
+        while let Some(front) = self.buckets.front() {
+            // A bucket whose newest element left the window is useless.
+            if front.end_time + k_t <= self.t {
+                self.buckets.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+impl Averager for EhWindow {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn observe(&mut self, x: &[f64]) {
+        assert_eq!(x.len(), self.d, "dimension mismatch");
+        self.t += 1;
+        self.buckets.push_back(Bucket {
+            end_time: self.t,
+            count: 1,
+            sum: x.to_vec(),
+        });
+        self.cascade();
+        self.expire();
+    }
+
+    fn value_into(&self, out: &mut [f64]) -> bool {
+        if self.buckets.is_empty() {
+            return false;
+        }
+        out.iter_mut().for_each(|o| *o = 0.0);
+        let mut count = 0.0f64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            // The oldest bucket straddles the window boundary: count it
+            // at half weight (DGIM's estimator) unless it is the only one.
+            let w = if i == 0 && self.buckets.len() > 1 && b.count > 1 {
+                0.5
+            } else {
+                1.0
+            };
+            for (o, &s) in out.iter_mut().zip(&b.sum) {
+                *o += w * s;
+            }
+            count += w * b.count as f64;
+        }
+        let inv = 1.0 / count;
+        out.iter_mut().for_each(|o| *o *= inv);
+        true
+    }
+
+    fn window_len(&self) -> f64 {
+        self.kind.k_at(self.t)
+    }
+
+    fn memory_floats(&self) -> usize {
+        self.buckets.len() * self.d
+    }
+
+    fn reset(&mut self) {
+        self.buckets.clear();
+        self.t = 0;
+    }
+
+    fn clone_box(&self) -> Box<dyn Averager> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::averagers::TrueWindow;
+    use crate::rng::{GaussianSource, RngCore, Xoshiro256};
+
+    #[test]
+    fn small_stream_is_exact() {
+        // While no merges/expiries happen the histogram is exact.
+        let mut eh = EhWindow::new(1, WindowKind::Fixed { k: 100 }, 0.1).unwrap();
+        let mut sum = 0.0;
+        for i in 1..=5u64 {
+            eh.observe_scalar(i as f64);
+            sum += i as f64;
+            assert!((eh.value_scalar().unwrap() - sum / i as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tracks_true_window_within_eps() {
+        // |eh − true| over a bounded stream must be ≤ ~2ε·range.
+        let eps = 0.05;
+        let k = 200u64;
+        let mut eh = EhWindow::new(1, WindowKind::Fixed { k }, eps).unwrap();
+        let mut tw = TrueWindow::new(1, WindowKind::Fixed { k });
+        let mut g = GaussianSource::new(Xoshiro256::seed_from_u64(7));
+        let mut worst: f64 = 0.0;
+        for t in 1..=5000u64 {
+            // Bounded signal: level + clipped noise.
+            let x = (t as f64 * 0.002).sin() + g.next_gaussian().clamp(-3.0, 3.0) * 0.1;
+            eh.observe_scalar(x);
+            tw.observe_scalar(x);
+            if t > k {
+                let diff = (eh.value_scalar().unwrap() - tw.value_scalar().unwrap()).abs();
+                worst = worst.max(diff);
+            }
+        }
+        // Range ≈ 2.6; allow 2ε·range with slack.
+        assert!(worst < 2.0 * eps * 2.6, "worst error {worst}");
+    }
+
+    #[test]
+    fn memory_is_logarithmic_not_linear() {
+        let eps = 0.1;
+        let k = 10_000u64;
+        let mut eh = EhWindow::new(1, WindowKind::Fixed { k }, eps).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for _ in 0..30_000 {
+            eh.observe_scalar(rng.next_f64());
+        }
+        let buckets = eh.bucket_count();
+        // max_per_size = 7; log2(10000) ≈ 13.3 size classes → ≤ ~100
+        assert!(
+            buckets < 120,
+            "bucket count {buckets} should be O(log k / eps)"
+        );
+        assert!(buckets > 20, "suspiciously few buckets: {buckets}");
+        // Compare to the exact window's 10_000 floats.
+        assert!(eh.memory_floats() < 1_000);
+    }
+
+    #[test]
+    fn growing_window_tracks_ct() {
+        let c = 0.5;
+        let mut eh = EhWindow::new(1, WindowKind::Growing { c }, 0.05).unwrap();
+        let mut tw = TrueWindow::new(1, WindowKind::Growing { c });
+        for t in 1..=4000u64 {
+            let x = (t as f64).ln();
+            eh.observe_scalar(x);
+            tw.observe_scalar(x);
+        }
+        let a = eh.value_scalar().unwrap();
+        let b = tw.value_scalar().unwrap();
+        assert!((a - b).abs() < 0.02, "eh {a} vs true {b}");
+        // And the histogram holds far fewer samples than the window.
+        assert!(eh.memory_floats() < tw.memory_floats() / 10);
+    }
+
+    #[test]
+    fn bucket_counts_are_powers_of_two_with_bounded_classes() {
+        let eps = 0.1;
+        let mut eh = EhWindow::new(1, WindowKind::Fixed { k: 1000 }, eps).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for _ in 0..5000 {
+            eh.observe_scalar(rng.next_f64());
+        }
+        let mut per_size = std::collections::BTreeMap::new();
+        for b in &eh.buckets {
+            assert!(b.count.is_power_of_two(), "count {}", b.count);
+            *per_size.entry(b.count).or_insert(0usize) += 1;
+        }
+        for (size, n) in per_size {
+            assert!(
+                n <= eh.max_per_size,
+                "{n} buckets of size {size} exceeds {}",
+                eh.max_per_size
+            );
+        }
+        // Buckets are ordered oldest→newest.
+        let times: Vec<u64> = eh.buckets.iter().map(|b| b.end_time).collect();
+        assert!(times.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn vector_streams() {
+        let mut eh = EhWindow::new(3, WindowKind::Fixed { k: 50 }, 0.1).unwrap();
+        for t in 1..=500u64 {
+            eh.observe(&[t as f64, -(t as f64), 1.0]);
+        }
+        let v = eh.value().unwrap();
+        // Window mean of t over last 50 at t=500 is ≈ 475.5
+        assert!((v[0] - 475.5).abs() < 20.0, "v0={}", v[0]);
+        assert!((v[0] + v[1]).abs() < 1e-9);
+        assert!((v[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_eps() {
+        assert!(EhWindow::new(1, WindowKind::Fixed { k: 10 }, 0.0).is_err());
+        assert!(EhWindow::new(1, WindowKind::Fixed { k: 10 }, 1.0).is_err());
+    }
+
+    #[test]
+    fn reset_reuse() {
+        let mut eh = EhWindow::new(1, WindowKind::Fixed { k: 10 }, 0.1).unwrap();
+        for i in 0..100 {
+            eh.observe_scalar(i as f64);
+        }
+        eh.reset();
+        assert_eq!(eh.t(), 0);
+        assert!(eh.value_scalar().is_none());
+        eh.observe_scalar(4.0);
+        assert_eq!(eh.value_scalar().unwrap(), 4.0);
+    }
+}

@@ -1,0 +1,326 @@
+//! Growing exponential average (paper §2, Eqs. 3–4 — the `exp` method).
+
+use super::{Averager, WindowKind};
+
+/// Exponential average whose decay `γ_t` is re-solved at every step so that
+/// the estimator's variance equals `1/(ct)` — i.e. it emulates a window
+/// that *grows* with the stream, `k_t = ct`, in O(d) memory.
+///
+/// ## Derivation (paper §2)
+///
+/// With update `x̄_t = γ_t·x̄_{t−1} + (1−γ_t)·x_t`, the variance factor
+/// `v_t = Σ_i α²_{i,t}` obeys `v_t = γ_t²·v_{t−1} + (1−γ_t)²`. Demanding
+/// `v_t = 1/(ct)` given `v_{t−1} = 1/(c(t−1))` and taking the root that
+/// maximizes the weight of the newest sample yields Eq. 4:
+///
+/// ```text
+/// γ_t = c(t−1)/(1+c(t−1)) · (1 − (1/c)·√((1−c)/(t(t−1))))
+/// ```
+///
+/// ## This implementation
+///
+/// We track the *actual* variance factor `v_{t−1}` and solve the quadratic
+/// `(v_{t−1}+1)γ² − 2γ + (1 − 1/k_t) = 0` for the smaller root at each
+/// step. This is equivalent to Eq. 4 once `v_{t−1} = 1/(c(t−1))` holds, but
+/// it also handles the warmup regime gracefully: while `ct ≤ 1` the window
+/// target is `k_t = 1` and the estimator correctly tracks the last sample;
+/// if the tracked variance ever makes the target unattainable
+/// (discriminant < 0) we fall back to the variance-*minimizing* decay
+/// `γ = 1/(v+1)`. The paper notes `k_t/t → c` regardless of initial
+/// conditions; the property tests verify this.
+/// [`GrowingExp::gamma_closed_form`] exposes Eq. 4 verbatim and the tests
+/// check both agree once warmup ends.
+#[derive(Clone, Debug)]
+pub struct GrowingExp {
+    c: f64,
+    avg: Vec<f64>,
+    /// Variance factor `v_t = Σα²` of the current estimate.
+    v: f64,
+    t: u64,
+    name: String,
+}
+
+impl GrowingExp {
+    /// `c ∈ (0, 1)` is the window fraction: `k_t = c·t`.
+    pub fn new(d: usize, c: f64) -> Result<GrowingExp, String> {
+        WindowKind::Growing { c }.validate()?;
+        Ok(GrowingExp {
+            c,
+            avg: vec![0.0; d],
+            v: 0.0,
+            t: 0,
+            name: format!("gea(c={c})"),
+        })
+    }
+
+    /// Window fraction `c`.
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+
+    /// Effective window size `1/v_t` implied by the tracked variance.
+    pub fn effective_window(&self) -> f64 {
+        if self.v > 0.0 {
+            1.0 / self.v
+        } else {
+            0.0
+        }
+    }
+
+    /// Paper Eq. 4 verbatim (valid for `t ≥ 2` once the variance tracks
+    /// `1/(c(t−1))`); exposed for tests and analysis.
+    pub fn gamma_closed_form(c: f64, t: u64) -> f64 {
+        assert!(t >= 2);
+        let tf = t as f64;
+        let a = c * (tf - 1.0);
+        (a / (1.0 + a)) * (1.0 - (1.0 / c) * ((1.0 - c) / (tf * (tf - 1.0))).sqrt())
+    }
+
+    /// The decay used at the step that *just happened* (for analysis).
+    /// Recomputes from the pre-update variance, so callers wanting a trace
+    /// should call [`GrowingExp::next_gamma`] before `observe`.
+    pub fn next_gamma(&self) -> f64 {
+        if self.t == 0 {
+            return 0.0;
+        }
+        let t_next = self.t + 1;
+        let k_target = (self.c * t_next as f64).max(1.0).min(t_next as f64);
+        solve_gamma(self.v, 1.0 / k_target)
+    }
+}
+
+/// Smallest-γ solution of `(v+1)γ² − 2γ + (1 − s) = 0` where `s` is the
+/// target variance; falls back to the variance-minimizing `γ = 1/(v+1)`
+/// when the target is unattainable (discriminant < 0).
+fn solve_gamma(v: f64, s: f64) -> f64 {
+    let a = v + 1.0;
+    let disc = 1.0 - a * (1.0 - s);
+    if disc >= 0.0 {
+        ((1.0 - disc.sqrt()) / a).clamp(0.0, 1.0)
+    } else {
+        (1.0 / a).clamp(0.0, 1.0)
+    }
+}
+
+impl Averager for GrowingExp {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.avg.len()
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn observe(&mut self, x: &[f64]) {
+        assert_eq!(x.len(), self.avg.len(), "dimension mismatch");
+        self.t += 1;
+        if self.t == 1 {
+            self.avg.copy_from_slice(x);
+            self.v = 1.0;
+            return;
+        }
+        let k_target = (self.c * self.t as f64).max(1.0).min(self.t as f64);
+        let g = solve_gamma(self.v, 1.0 / k_target);
+        let om = 1.0 - g;
+        for (a, &xv) in self.avg.iter_mut().zip(x) {
+            *a = g * *a + om * xv;
+        }
+        self.v = g * g * self.v + om * om;
+    }
+
+    fn value_into(&self, out: &mut [f64]) -> bool {
+        if self.t == 0 {
+            return false;
+        }
+        out.copy_from_slice(&self.avg);
+        true
+    }
+
+    fn window_len(&self) -> f64 {
+        WindowKind::Growing { c: self.c }.k_at(self.t)
+    }
+
+    fn memory_floats(&self) -> usize {
+        self.avg.len()
+    }
+
+    fn reset(&mut self) {
+        self.avg.iter_mut().for_each(|a| *a = 0.0);
+        self.v = 0.0;
+        self.t = 0;
+    }
+
+    fn clone_box(&self) -> Box<dyn Averager> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_tracks_last_sample_while_ct_le_1() {
+        // While ct <= 1 the window target is k_t = 1: the tail average of
+        // one sample is the sample itself, so γ_t = 0 and GEA tracks the
+        // raw stream (variance 1 = 1/k_t, maximal recency).
+        let mut a = GrowingExp::new(1, 0.1).unwrap();
+        for (i, &x) in [2.0, 4.0, 6.0, 8.0].iter().enumerate() {
+            a.observe_scalar(x);
+            let got = a.value_scalar().unwrap();
+            assert!((got - x).abs() < 1e-12, "t={} got {got} want {x}", i + 1);
+            assert!((a.v - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn window_starts_growing_after_warmup() {
+        // Once ct > 1 the effective window must leave 1 and track ct.
+        let c = 0.1;
+        let mut a = GrowingExp::new(1, c).unwrap();
+        for t in 1..=200u64 {
+            a.observe_scalar(0.0);
+            if t > 20 {
+                let want = c * t as f64;
+                let got = a.effective_window();
+                assert!(
+                    (got - want).abs() < 1e-6 * want,
+                    "t={t}: k_eff={got} want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn variance_tracks_target_after_warmup() {
+        let c = 0.5;
+        let mut a = GrowingExp::new(1, c).unwrap();
+        for t in 1..=10_000u64 {
+            a.observe_scalar(t as f64);
+            if t > 100 {
+                let want = 1.0 / (c * t as f64);
+                let got = a.v;
+                assert!(
+                    (got - want).abs() < 1e-9 * want.max(1e-12) + 1e-12,
+                    "t={t}: v={got}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn effective_window_ratio_converges_to_c() {
+        for &c in &[0.1, 0.25, 0.5, 0.9] {
+            let mut a = GrowingExp::new(1, c).unwrap();
+            for _ in 0..20_000 {
+                a.observe_scalar(1.0);
+            }
+            let ratio = a.effective_window() / a.t() as f64;
+            assert!(
+                (ratio - c).abs() < 1e-6,
+                "c={c}: k_eff/t = {ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_gamma_matches_closed_form_after_warmup() {
+        let c = 0.25;
+        let mut a = GrowingExp::new(1, c).unwrap();
+        for t in 1..=5_000u64 {
+            a.observe_scalar(0.0);
+            if t >= 50 {
+                // After observing t samples, next_gamma() is the decay the
+                // step to t+1 will use; Eq. 4 evaluated at t+1.
+                let adaptive = a.next_gamma();
+                let closed = GrowingExp::gamma_closed_form(c, t + 1);
+                assert!(
+                    (adaptive - closed).abs() < 1e-8,
+                    "t={t}: adaptive {adaptive} vs closed {closed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn closed_form_sanity() {
+        // Eq. 4 at c=0.5, t=2: a=0.5, sqrt((0.5)/(2)) = 0.5 → γ = (1/3)(1-1) = 0...
+        // verify against direct quadratic solve with v = 1/(c(t-1)).
+        for &c in &[0.25, 0.5, 0.75] {
+            for t in 2..200u64 {
+                let v_prev = 1.0 / (c * (t - 1) as f64);
+                if v_prev > 1.0 {
+                    continue; // warmup region: closed form not applicable
+                }
+                let s = 1.0 / (c * t as f64);
+                let solved = solve_gamma(v_prev, s);
+                let closed = GrowingExp::gamma_closed_form(c, t);
+                assert!(
+                    (solved - closed).abs() < 1e-10,
+                    "c={c} t={t}: {solved} vs {closed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn constant_stream_is_fixed_point() {
+        let mut a = GrowingExp::new(2, 0.5).unwrap();
+        for _ in 0..1000 {
+            a.observe(&[3.0, -3.0]);
+        }
+        let v = a.value().unwrap();
+        assert!((v[0] - 3.0).abs() < 1e-12 && (v[1] + 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_constant_in_t() {
+        let mut a = GrowingExp::new(4, 0.5).unwrap();
+        let m = a.memory_floats();
+        for _ in 0..5000 {
+            a.observe(&[1.0; 4]);
+        }
+        assert_eq!(a.memory_floats(), m);
+        assert_eq!(m, 4);
+    }
+
+    #[test]
+    fn reset_and_reuse() {
+        let mut a = GrowingExp::new(1, 0.5).unwrap();
+        for _ in 0..100 {
+            a.observe_scalar(9.0);
+        }
+        a.reset();
+        assert_eq!(a.t(), 0);
+        assert!(a.value_scalar().is_none());
+        a.observe_scalar(1.0);
+        assert_eq!(a.value_scalar().unwrap(), 1.0);
+        assert_eq!(a.v, 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_c() {
+        assert!(GrowingExp::new(1, 0.0).is_err());
+        assert!(GrowingExp::new(1, 1.0).is_err());
+        assert!(GrowingExp::new(1, -0.5).is_err());
+    }
+
+    #[test]
+    fn recovers_from_adversarial_initial_variance() {
+        // Start the estimator, then check k_eff/t still converges to c
+        // even though the first samples made v=1 (paper: "regardless of
+        // the initial conditions").
+        let c = 0.3;
+        let mut a = GrowingExp::new(1, c).unwrap();
+        a.observe_scalar(1000.0); // v jumps to 1
+        for _ in 0..50_000 {
+            a.observe_scalar(0.0);
+        }
+        let ratio = a.effective_window() / a.t() as f64;
+        assert!((ratio - c).abs() < 1e-4, "ratio={ratio}");
+    }
+}

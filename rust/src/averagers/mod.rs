@@ -1,0 +1,472 @@
+//! The paper's contribution: anytime tail averages and their baselines.
+//!
+//! All estimators consume a stream of `d`-dimensional samples and expose,
+//! *at every timestep*, an estimate of the mean of the last `k_t` samples,
+//! where the window is either fixed (`k_t = k`) or grows with the stream
+//! (`k_t = ct`, `c < 1`) — see [`WindowKind`].
+//!
+//! | estimator | memory (floats) | anytime | window | paper |
+//! |---|---|---|---|---|
+//! | [`ExpAverage`] | `d` | yes | fixed (`k=(1+γ)/(1−γ)`) | Eq. 2 (`expk`) |
+//! | [`GrowingExp`] | `d` | yes | growing | §2, Eqs. 3–4 (`exp`) |
+//! | [`Awa2`] | `2d` | yes | fixed & growing | §3.1–3.2 (`awa`) |
+//! | [`AwaMulti`] | `(z+1)d` | yes | fixed & growing | §3.3–3.4 (`awa3`, …) |
+//! | [`TrueWindow`] | `k_t·d` | yes | fixed & growing | `truek`/`true` baseline |
+//! | [`RawTail`] | `d` | **no** | growing | `raw` baseline |
+//! | [`RestartTail`] | `3d` | stale (one block) | fixed & growing | §1 block-restart baseline |
+//! | [`EhWindow`] | `(1/ε)·log(εk_t)·d` | yes (ε-approx) | fixed & growing | Datar et al. [2002] baseline |
+//!
+//! The unifying design constraint (paper §1): every estimator keeps the
+//! variance of its average equal to that of the exact `k_t`-window mean,
+//! `Var = 1/k_t` (in units of the per-sample variance), while minimizing
+//! staleness subject to its memory budget.
+
+mod analysis;
+mod awa2;
+mod awa_multi;
+mod exp;
+mod exp_histogram;
+mod gea;
+mod raw_tail;
+mod restart;
+mod weights;
+mod window;
+
+pub use analysis::{report_from_weights, staleness_report, StalenessReport};
+pub use awa2::Awa2;
+pub use awa_multi::AwaMulti;
+pub use exp::ExpAverage;
+pub use exp_histogram::EhWindow;
+pub use gea::GrowingExp;
+pub use raw_tail::RawTail;
+pub use restart::RestartTail;
+pub use weights::{reconstruct_weight_history, reconstruct_weights};
+pub use window::TrueWindow;
+
+/// Which tail window the estimator tracks.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WindowKind {
+    /// Average of the last `k` samples.
+    Fixed { k: u64 },
+    /// Average of the last `⌈c·t⌉` samples, `0 < c < 1`.
+    Growing { c: f64 },
+}
+
+impl WindowKind {
+    /// The nominal window length `k_t` at stream position `t` (1-based).
+    /// Always at least 1 and at most `t`.
+    pub fn k_at(&self, t: u64) -> f64 {
+        if t == 0 {
+            return 0.0;
+        }
+        match *self {
+            WindowKind::Fixed { k } => (k.max(1) as f64).min(t as f64),
+            WindowKind::Growing { c } => (c * t as f64).max(1.0).min(t as f64),
+        }
+    }
+
+    /// Validate parameters.
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            WindowKind::Fixed { k } => {
+                if k == 0 {
+                    Err("fixed window requires k >= 1".into())
+                } else {
+                    Ok(())
+                }
+            }
+            WindowKind::Growing { c } => {
+                if c > 0.0 && c < 1.0 {
+                    Ok(())
+                } else {
+                    Err(format!("growing window requires 0 < c < 1, got {c}"))
+                }
+            }
+        }
+    }
+}
+
+/// A streaming tail-average estimator over `d`-dimensional samples.
+///
+/// Estimators are *linear*: the reported value is always a weighted sum
+/// `Σ_i α_{i,t}·x_i` of the observed samples with `Σ_i α_{i,t} = 1`
+/// (verified generically by [`reconstruct_weights`] in the property tests).
+pub trait Averager: Send {
+    /// Estimator name (matches the paper's figure legends where possible).
+    fn name(&self) -> &str;
+
+    /// Sample dimensionality.
+    fn dim(&self) -> usize;
+
+    /// Number of samples observed so far.
+    fn t(&self) -> u64;
+
+    /// Ingest the next sample (length must equal `dim()`).
+    fn observe(&mut self, x: &[f64]);
+
+    /// Write the current estimate into `out`; returns `false` when no
+    /// estimate is available yet (empty stream, or a non-anytime baseline
+    /// before its start point — in which case `out` is left untouched).
+    fn value_into(&self, out: &mut [f64]) -> bool;
+
+    /// Current nominal window `k_t`.
+    fn window_len(&self) -> f64;
+
+    /// Floats of state held (excludes `self`'s fixed fields); the paper's
+    /// memory-cost axis. Constant in `t` for every anytime estimator except
+    /// [`TrueWindow`].
+    fn memory_floats(&self) -> usize;
+
+    /// Forget everything.
+    fn reset(&mut self);
+
+    /// Clone into a boxed trait object.
+    fn clone_box(&self) -> Box<dyn Averager>;
+
+    /// Convenience: observe a scalar sample (dim-1 estimators).
+    fn observe_scalar(&mut self, x: f64) {
+        self.observe(std::slice::from_ref(&x));
+    }
+
+    /// Convenience: current scalar estimate (dim-1 estimators).
+    fn value_scalar(&self) -> Option<f64> {
+        let mut out = [0.0];
+        if self.value_into(&mut out) {
+            Some(out[0])
+        } else {
+            None
+        }
+    }
+
+    /// Convenience: allocate and return the estimate.
+    fn value(&self) -> Option<Vec<f64>> {
+        let mut out = vec![0.0; self.dim()];
+        if self.value_into(&mut out) {
+            Some(out)
+        } else {
+            None
+        }
+    }
+}
+
+impl Clone for Box<dyn Averager> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// Declarative estimator specification — the config-file / wire form.
+///
+/// `total_steps` is only needed by [`RawTail`] (it must know the horizon
+/// `T` to pick its start point, which is exactly the anytime limitation the
+/// paper's methods remove).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AveragerSpec {
+    /// Fixed-decay exponential average with explicit `gamma`.
+    Exp { gamma: f64 },
+    /// Exponential average matched to window `k`: `γ = (k−1)/(k+1)`.
+    ExpK { k: u64 },
+    /// Growing exponential average (paper §2) for window `ct`.
+    Gea { c: f64 },
+    /// Anytime window average with `accumulators = z+1` total accumulators
+    /// (`z >= 1` recent + 1 old). `accumulators = 2` is the paper's `awa`,
+    /// `3` is `awa3`.
+    Awa {
+        window: WindowKind,
+        accumulators: u32,
+    },
+    /// Exact sliding-window average (memory grows with `k_t`).
+    True { window: WindowKind },
+    /// Classic tail average: waits until `t = T·(1−c)`, then accumulates.
+    Raw { c: f64, total_steps: u64 },
+    /// Block-restart tail average (§1): publishes each completed block.
+    Restart { window: WindowKind },
+    /// DGIM exponential histogram (Datar et al. 2002): ε-approximate
+    /// window mean in logarithmic memory.
+    Eh { window: WindowKind, eps: f64 },
+}
+
+impl AveragerSpec {
+    /// Instantiate for dimension `d`.
+    pub fn build(&self, d: usize) -> Result<Box<dyn Averager>, String> {
+        match *self {
+            AveragerSpec::Exp { gamma } => Ok(Box::new(ExpAverage::new(d, gamma)?)),
+            AveragerSpec::ExpK { k } => Ok(Box::new(ExpAverage::for_window(d, k)?)),
+            AveragerSpec::Gea { c } => Ok(Box::new(GrowingExp::new(d, c)?)),
+            AveragerSpec::Awa {
+                window,
+                accumulators,
+            } => {
+                window.validate()?;
+                if accumulators < 2 {
+                    return Err("awa requires at least 2 accumulators".into());
+                }
+                if accumulators == 2 {
+                    Ok(Box::new(Awa2::new(d, window)))
+                } else {
+                    Ok(Box::new(AwaMulti::new(d, window, accumulators - 1)))
+                }
+            }
+            AveragerSpec::True { window } => {
+                window.validate()?;
+                Ok(Box::new(TrueWindow::new(d, window)))
+            }
+            AveragerSpec::Raw { c, total_steps } => {
+                Ok(Box::new(RawTail::new(d, c, total_steps)?))
+            }
+            AveragerSpec::Restart { window } => Ok(Box::new(RestartTail::new(d, window)?)),
+            AveragerSpec::Eh { window, eps } => Ok(Box::new(EhWindow::new(d, window, eps)?)),
+        }
+    }
+
+    /// Short identifier used in config files and reports.
+    pub fn label(&self) -> String {
+        match self {
+            AveragerSpec::Exp { gamma } => format!("exp(g={gamma})"),
+            AveragerSpec::ExpK { k } => format!("expk(k={k})"),
+            AveragerSpec::Gea { c } => format!("gea(c={c})"),
+            AveragerSpec::Awa {
+                window,
+                accumulators,
+            } => match window {
+                WindowKind::Fixed { k } => format!("awa{accumulators}(k={k})"),
+                WindowKind::Growing { c } => format!("awa{accumulators}(c={c})"),
+            },
+            AveragerSpec::True { window } => match window {
+                WindowKind::Fixed { k } => format!("true(k={k})"),
+                WindowKind::Growing { c } => format!("true(c={c})"),
+            },
+            AveragerSpec::Raw { c, total_steps } => format!("raw(c={c},T={total_steps})"),
+            AveragerSpec::Restart { window } => match window {
+                WindowKind::Fixed { k } => format!("restart(k={k})"),
+                WindowKind::Growing { c } => format!("restart(c={c})"),
+            },
+            AveragerSpec::Eh { window, eps } => match window {
+                WindowKind::Fixed { k } => format!("eh(k={k},eps={eps})"),
+                WindowKind::Growing { c } => format!("eh(c={c},eps={eps})"),
+            },
+        }
+    }
+
+    /// Parse a spec from its `label()`-style string form, e.g.
+    /// `"gea(c=0.5)"`, `"awa3(k=100)"`, `"true(c=0.25)"`,
+    /// `"raw(c=0.5,T=1000)"`, `"expk(k=10)"`, `"exp(g=0.9)"`.
+    pub fn parse(s: &str) -> Result<AveragerSpec, String> {
+        let s = s.trim();
+        let open = s.find('(').ok_or_else(|| format!("bad spec '{s}'"))?;
+        if !s.ends_with(')') {
+            return Err(format!("bad spec '{s}': missing ')'"));
+        }
+        let head = &s[..open];
+        let body = &s[open + 1..s.len() - 1];
+        let mut kv = std::collections::BTreeMap::new();
+        for part in body.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad spec field '{part}'"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let getf = |key: &str| -> Result<f64, String> {
+            kv.get(key)
+                .ok_or_else(|| format!("spec '{s}' missing '{key}'"))?
+                .parse::<f64>()
+                .map_err(|_| format!("spec '{s}': bad number for '{key}'"))
+        };
+        let getu = |key: &str| -> Result<u64, String> {
+            kv.get(key)
+                .ok_or_else(|| format!("spec '{s}' missing '{key}'"))?
+                .parse::<u64>()
+                .map_err(|_| format!("spec '{s}': bad integer for '{key}'"))
+        };
+        let window = || -> Result<WindowKind, String> {
+            if kv.contains_key("k") {
+                Ok(WindowKind::Fixed { k: getu("k")? })
+            } else if kv.contains_key("c") {
+                Ok(WindowKind::Growing { c: getf("c")? })
+            } else {
+                Err(format!("spec '{s}' needs 'k=' or 'c='"))
+            }
+        };
+        match head {
+            "exp" => Ok(AveragerSpec::Exp { gamma: getf("g")? }),
+            "expk" => Ok(AveragerSpec::ExpK { k: getu("k")? }),
+            "gea" => Ok(AveragerSpec::Gea { c: getf("c")? }),
+            "true" => Ok(AveragerSpec::True { window: window()? }),
+            "raw" => Ok(AveragerSpec::Raw {
+                c: getf("c")?,
+                total_steps: getu("T")?,
+            }),
+            "restart" => Ok(AveragerSpec::Restart { window: window()? }),
+            "eh" => Ok(AveragerSpec::Eh {
+                window: window()?,
+                eps: getf("eps")?,
+            }),
+            h if h.starts_with("awa") => {
+                let accs: u32 = if h == "awa" {
+                    2
+                } else {
+                    h[3..]
+                        .parse()
+                        .map_err(|_| format!("bad accumulator count in '{h}'"))?
+                };
+                Ok(AveragerSpec::Awa {
+                    window: window()?,
+                    accumulators: accs,
+                })
+            }
+            _ => Err(format!("unknown averager '{head}'")),
+        }
+    }
+}
+
+/// In-place `out[i] = gamma*a[i] + (1-gamma)*b[i]` — the shared combine
+/// primitive; kept in one place so the perf pass optimizes a single site.
+#[inline]
+pub(crate) fn lerp_into(out: &mut [f64], a: &[f64], b: &[f64], gamma: f64) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    let om = 1.0 - gamma;
+    for ((o, &av), &bv) in out.iter_mut().zip(a).zip(b) {
+        *o = gamma * av + om * bv;
+    }
+}
+
+/// In-place incremental-mean update `mean += (x - mean)/n`.
+#[inline]
+pub(crate) fn mean_update(mean: &mut [f64], x: &[f64], n: f64) {
+    debug_assert_eq!(mean.len(), x.len());
+    let inv = 1.0 / n;
+    for (m, &xv) in mean.iter_mut().zip(x) {
+        *m += (xv - *m) * inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_k_at_clamps() {
+        let f = WindowKind::Fixed { k: 10 };
+        assert_eq!(f.k_at(0), 0.0);
+        assert_eq!(f.k_at(5), 5.0);
+        assert_eq!(f.k_at(50), 10.0);
+        let g = WindowKind::Growing { c: 0.5 };
+        assert_eq!(g.k_at(1), 1.0);
+        assert_eq!(g.k_at(10), 5.0);
+        assert_eq!(g.k_at(1000), 500.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_params() {
+        assert!(WindowKind::Fixed { k: 0 }.validate().is_err());
+        assert!(WindowKind::Growing { c: 0.0 }.validate().is_err());
+        assert!(WindowKind::Growing { c: 1.0 }.validate().is_err());
+        assert!(WindowKind::Growing { c: 0.5 }.validate().is_ok());
+    }
+
+    #[test]
+    fn spec_build_all_variants() {
+        let specs = [
+            AveragerSpec::Exp { gamma: 0.9 },
+            AveragerSpec::ExpK { k: 10 },
+            AveragerSpec::Gea { c: 0.5 },
+            AveragerSpec::Awa {
+                window: WindowKind::Fixed { k: 10 },
+                accumulators: 2,
+            },
+            AveragerSpec::Awa {
+                window: WindowKind::Growing { c: 0.5 },
+                accumulators: 3,
+            },
+            AveragerSpec::True {
+                window: WindowKind::Fixed { k: 10 },
+            },
+            AveragerSpec::Raw {
+                c: 0.5,
+                total_steps: 100,
+            },
+            AveragerSpec::Restart {
+                window: WindowKind::Fixed { k: 10 },
+            },
+            AveragerSpec::Eh {
+                window: WindowKind::Growing { c: 0.5 },
+                eps: 0.1,
+            },
+        ];
+        for spec in specs {
+            let mut a = spec.build(3).expect("build");
+            a.observe(&[1.0, 2.0, 3.0]);
+            assert_eq!(a.dim(), 3);
+            assert_eq!(a.t(), 1);
+        }
+    }
+
+    #[test]
+    fn spec_build_rejects_invalid() {
+        assert!(AveragerSpec::Gea { c: 1.5 }.build(1).is_err());
+        assert!(AveragerSpec::Exp { gamma: 1.0 }.build(1).is_err());
+        assert!(AveragerSpec::Awa {
+            window: WindowKind::Fixed { k: 5 },
+            accumulators: 1
+        }
+        .build(1)
+        .is_err());
+    }
+
+    #[test]
+    fn spec_parse_roundtrip() {
+        for s in [
+            "exp(g=0.9)",
+            "expk(k=10)",
+            "gea(c=0.5)",
+            "awa2(k=100)",
+            "awa3(c=0.5)",
+            "awa(c=0.25)",
+            "true(k=10)",
+            "true(c=0.5)",
+            "raw(c=0.5,T=1000)",
+            "restart(k=20)",
+            "restart(c=0.5)",
+            "eh(k=100,eps=0.1)",
+            "eh(c=0.5,eps=0.05)",
+        ] {
+            let spec = AveragerSpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
+            // label→parse is stable for canonical labels
+            let relabel = AveragerSpec::parse(&spec.label());
+            assert!(relabel.is_ok(), "label {} reparses", spec.label());
+            assert_eq!(relabel.unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn spec_parse_rejects_garbage() {
+        for s in ["", "gea", "gea()", "gea(x=1)", "awaX(k=3)", "nope(c=0.5)"] {
+            assert!(AveragerSpec::parse(s).is_err(), "{s}");
+        }
+    }
+
+    #[test]
+    fn boxed_clone_is_independent() {
+        let spec = AveragerSpec::Gea { c: 0.5 };
+        let mut a = spec.build(1).unwrap();
+        a.observe_scalar(5.0);
+        let mut b = a.clone_box();
+        b.observe_scalar(100.0);
+        assert_eq!(a.t(), 1);
+        assert_eq!(b.t(), 2);
+        assert_ne!(a.value_scalar(), b.value_scalar());
+    }
+
+    #[test]
+    fn lerp_and_mean_update_primitives() {
+        let a = [2.0, 4.0];
+        let b = [0.0, 0.0];
+        let mut out = [0.0; 2];
+        lerp_into(&mut out, &a, &b, 0.25);
+        assert_eq!(out, [0.5, 1.0]);
+        let mut m = [1.0, 1.0];
+        mean_update(&mut m, &[3.0, 5.0], 2.0);
+        assert_eq!(m, [2.0, 3.0]);
+    }
+}

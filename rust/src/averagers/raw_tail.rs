@@ -1,0 +1,210 @@
+//! Classic (non-anytime) tail average — the paper's `raw` baseline.
+
+use super::{Averager, WindowKind};
+
+/// The standard way to tail-average with O(d) memory: decide the horizon
+/// `T` ahead of time, ignore everything before `t₀ = ⌊T·(1−c)⌋`, then keep
+/// the running mean of the samples from `t₀+1` onward.
+///
+/// Before the start point no average exists; following the paper's
+/// experiments we report the *raw last iterate* in that regime (this is
+/// what a practitioner has at hand), which is exactly why the method loses
+/// early in Figure 3 — it is not anytime.
+#[derive(Clone, Debug)]
+pub struct RawTail {
+    c: f64,
+    total_steps: u64,
+    /// First stream position (1-based) included in the average.
+    start: u64,
+    mean: Vec<f64>,
+    /// Samples accumulated into `mean`.
+    n: u64,
+    /// Last raw sample (reported before the start point).
+    last: Vec<f64>,
+    t: u64,
+    name: String,
+}
+
+impl RawTail {
+    /// `c` is the tail fraction, `total_steps` the pre-committed horizon T.
+    pub fn new(d: usize, c: f64, total_steps: u64) -> Result<RawTail, String> {
+        WindowKind::Growing { c }.validate()?;
+        if total_steps == 0 {
+            return Err("raw tail requires total_steps >= 1".into());
+        }
+        let start = ((total_steps as f64) * (1.0 - c)).floor() as u64 + 1;
+        Ok(RawTail {
+            c,
+            total_steps,
+            start,
+            mean: vec![0.0; d],
+            n: 0,
+            last: vec![0.0; d],
+            t: 0,
+            name: format!("raw(c={c})"),
+        })
+    }
+
+    /// The first (1-based) stream position included in the average.
+    pub fn start_step(&self) -> u64 {
+        self.start
+    }
+
+    /// Whether the averaging phase has begun.
+    pub fn averaging(&self) -> bool {
+        self.n > 0
+    }
+
+    /// The tail fraction `c` this baseline was configured with.
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+
+    /// The pre-committed horizon `T`.
+    pub fn horizon(&self) -> u64 {
+        self.total_steps
+    }
+}
+
+impl Averager for RawTail {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn observe(&mut self, x: &[f64]) {
+        assert_eq!(x.len(), self.mean.len(), "dimension mismatch");
+        self.t += 1;
+        self.last.copy_from_slice(x);
+        if self.t >= self.start {
+            self.n += 1;
+            super::mean_update(&mut self.mean, x, self.n as f64);
+        }
+    }
+
+    fn value_into(&self, out: &mut [f64]) -> bool {
+        if self.t == 0 {
+            return false;
+        }
+        if self.n > 0 {
+            out.copy_from_slice(&self.mean);
+        } else {
+            out.copy_from_slice(&self.last);
+        }
+        true
+    }
+
+    fn window_len(&self) -> f64 {
+        if self.n > 0 {
+            self.n as f64
+        } else {
+            1.0
+        }
+    }
+
+    fn memory_floats(&self) -> usize {
+        self.mean.len() + self.last.len()
+    }
+
+    fn reset(&mut self) {
+        self.mean.iter_mut().for_each(|m| *m = 0.0);
+        self.last.iter_mut().for_each(|l| *l = 0.0);
+        self.n = 0;
+        self.t = 0;
+    }
+
+    fn clone_box(&self) -> Box<dyn Averager> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_point_matches_paper() {
+        // T=1000, c=0.5 → averaging starts at t=501 (last 500 samples).
+        let r = RawTail::new(1, 0.5, 1000).unwrap();
+        assert_eq!(r.start_step(), 501);
+        let r = RawTail::new(1, 0.25, 1000).unwrap();
+        assert_eq!(r.start_step(), 751);
+    }
+
+    #[test]
+    fn reports_raw_iterate_before_start() {
+        let mut r = RawTail::new(1, 0.5, 10).unwrap(); // start=6
+        for i in 1..=5u64 {
+            r.observe_scalar(i as f64 * 10.0);
+            assert!(!r.averaging());
+            assert_eq!(r.value_scalar().unwrap(), i as f64 * 10.0);
+        }
+    }
+
+    #[test]
+    fn averages_exactly_the_tail() {
+        let mut r = RawTail::new(1, 0.5, 10).unwrap(); // start=6
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        for &x in &xs {
+            r.observe_scalar(x);
+        }
+        // Mean of samples 6..=10 = (6+7+8+9+10)/5 = 8
+        assert_eq!(r.value_scalar().unwrap(), 8.0);
+        assert_eq!(r.window_len(), 5.0);
+    }
+
+    #[test]
+    fn continues_past_horizon() {
+        // If the stream outlives T, raw keeps folding samples in (its
+        // window keeps growing — it can never restart, which is the
+        // limitation §1 describes).
+        let mut r = RawTail::new(1, 0.5, 4).unwrap(); // start=3
+        for &x in &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0] {
+            r.observe_scalar(x);
+        }
+        assert_eq!(r.value_scalar().unwrap(), (3.0 + 4.0 + 5.0 + 6.0) / 4.0);
+    }
+
+    #[test]
+    fn empty_stream_has_no_value() {
+        let r = RawTail::new(2, 0.5, 100).unwrap();
+        assert!(r.value().is_none());
+    }
+
+    #[test]
+    fn memory_constant_in_t() {
+        let mut r = RawTail::new(8, 0.5, 1000).unwrap();
+        let m = r.memory_floats();
+        for _ in 0..2000 {
+            r.observe(&[1.0; 8]);
+        }
+        assert_eq!(r.memory_floats(), m);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        assert!(RawTail::new(1, 0.0, 100).is_err());
+        assert!(RawTail::new(1, 1.0, 100).is_err());
+        assert!(RawTail::new(1, 0.5, 0).is_err());
+    }
+
+    #[test]
+    fn reset_restarts_prephase() {
+        let mut r = RawTail::new(1, 0.5, 4).unwrap();
+        for &x in &[1.0, 2.0, 3.0, 4.0] {
+            r.observe_scalar(x);
+        }
+        assert!(r.averaging());
+        r.reset();
+        assert!(!r.averaging());
+        r.observe_scalar(9.0);
+        assert_eq!(r.value_scalar().unwrap(), 9.0);
+    }
+}

@@ -1,0 +1,230 @@
+//! Restart tail averaging — the other "mainly used technique" of §1.
+//!
+//! The paper's introduction describes the standard constant-memory
+//! approach when the horizon is NOT fixed in advance: accumulate the
+//! mean over a block of `k_t` samples, publish it when the block
+//! completes, then reset and start the next block. The published average
+//! is up to one block stale — "there will be proportionately few
+//! iterations where we have access to an average" when `k_t` is large —
+//! which is precisely the gap the anytime estimators close.
+//!
+//! For `k_t = k` blocks have constant length `k`; for `k_t = ct` each
+//! block runs until it holds `c·t` samples (geometrically growing
+//! blocks, the natural doubling schedule of Hazan & Kale-style
+//! restarts). Memory: `2d` (current block + last published average).
+
+use super::{Averager, WindowKind};
+
+/// Block-restart tail average: constant memory, publishes the mean of
+/// the last *completed* block; reports the raw iterate before the first
+/// block completes.
+#[derive(Clone, Debug)]
+pub struct RestartTail {
+    kind: WindowKind,
+    /// Current (filling) block mean and count.
+    cur: Vec<f64>,
+    n_cur: u64,
+    /// Last completed block's mean and count (the published value).
+    published: Vec<f64>,
+    n_published: u64,
+    /// Stream time at which the published block completed.
+    published_at: u64,
+    /// Last raw sample (reported before the first publication).
+    last: Vec<f64>,
+    t: u64,
+    blocks: u64,
+    name: String,
+}
+
+impl RestartTail {
+    pub fn new(d: usize, kind: WindowKind) -> Result<RestartTail, String> {
+        kind.validate()?;
+        let name = match kind {
+            WindowKind::Fixed { k } => format!("restart(k={k})"),
+            WindowKind::Growing { c } => format!("restart(c={c})"),
+        };
+        Ok(RestartTail {
+            kind,
+            cur: vec![0.0; d],
+            n_cur: 0,
+            published: vec![0.0; d],
+            n_published: 0,
+            published_at: 0,
+            last: vec![0.0; d],
+            t: 0,
+            blocks: 0,
+            name,
+        })
+    }
+
+    /// Completed blocks so far.
+    pub fn blocks(&self) -> u64 {
+        self.blocks
+    }
+
+    /// Staleness of the published average (samples since it completed).
+    pub fn published_age(&self) -> u64 {
+        if self.n_published == 0 {
+            0
+        } else {
+            self.t - self.published_at
+        }
+    }
+
+    fn block_complete(&self) -> bool {
+        match self.kind {
+            WindowKind::Fixed { k } => self.n_cur >= k,
+            WindowKind::Growing { c } => self.n_cur as f64 >= c * self.t as f64,
+        }
+    }
+}
+
+impl Averager for RestartTail {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.cur.len()
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn observe(&mut self, x: &[f64]) {
+        assert_eq!(x.len(), self.cur.len(), "dimension mismatch");
+        self.t += 1;
+        self.last.copy_from_slice(x);
+        self.n_cur += 1;
+        super::mean_update(&mut self.cur, x, self.n_cur as f64);
+        if self.block_complete() {
+            std::mem::swap(&mut self.published, &mut self.cur);
+            self.n_published = self.n_cur;
+            self.published_at = self.t;
+            self.cur.iter_mut().for_each(|v| *v = 0.0);
+            self.n_cur = 0;
+            self.blocks += 1;
+        }
+    }
+
+    fn value_into(&self, out: &mut [f64]) -> bool {
+        if self.t == 0 {
+            return false;
+        }
+        if self.n_published > 0 {
+            out.copy_from_slice(&self.published);
+        } else {
+            out.copy_from_slice(&self.last);
+        }
+        true
+    }
+
+    fn window_len(&self) -> f64 {
+        if self.n_published > 0 {
+            self.n_published as f64
+        } else {
+            1.0
+        }
+    }
+
+    fn memory_floats(&self) -> usize {
+        self.cur.len() + self.published.len() + self.last.len()
+    }
+
+    fn reset(&mut self) {
+        self.cur.iter_mut().for_each(|v| *v = 0.0);
+        self.published.iter_mut().for_each(|v| *v = 0.0);
+        self.last.iter_mut().for_each(|v| *v = 0.0);
+        self.n_cur = 0;
+        self.n_published = 0;
+        self.published_at = 0;
+        self.t = 0;
+        self.blocks = 0;
+    }
+
+    fn clone_box(&self) -> Box<dyn Averager> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_blocks_publish_block_means() {
+        let mut r = RestartTail::new(1, WindowKind::Fixed { k: 4 }).unwrap();
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        for (i, &x) in xs.iter().enumerate() {
+            r.observe_scalar(x);
+            let t = i as u64 + 1;
+            let v = r.value_scalar().unwrap();
+            match t {
+                1..=3 => assert_eq!(v, x, "raw iterate before first block"),
+                4..=7 => assert_eq!(v, 2.5, "mean(1..4) at t={t}"),
+                8..=10 => assert_eq!(v, 6.5, "mean(5..8) at t={t}"),
+                _ => unreachable!(),
+            }
+        }
+        assert_eq!(r.blocks(), 2);
+        assert_eq!(r.published_age(), 2); // published at t=8, now t=10
+    }
+
+    #[test]
+    fn staleness_reaches_a_full_block() {
+        // Right before the next publication, the published average is a
+        // whole block old — §1's availability complaint, quantified.
+        let k = 10u64;
+        let mut r = RestartTail::new(1, WindowKind::Fixed { k }).unwrap();
+        for t in 1..=(3 * k - 1) {
+            r.observe_scalar(t as f64);
+        }
+        assert_eq!(r.published_age(), k - 1);
+    }
+
+    #[test]
+    fn growing_blocks_grow() {
+        let mut r = RestartTail::new(1, WindowKind::Growing { c: 0.5 }).unwrap();
+        let mut lens = Vec::new();
+        let mut last_blocks = 0;
+        let mut last_t = 0u64;
+        for t in 1..=2000u64 {
+            r.observe_scalar(1.0);
+            if r.blocks() > last_blocks {
+                lens.push(t - last_t);
+                last_blocks = r.blocks();
+                last_t = t;
+            }
+        }
+        assert!(lens.len() >= 4, "blocks: {lens:?}");
+        // Block lengths grow (geometric-ish schedule).
+        let late = lens[lens.len() - 1];
+        let early = lens[1.min(lens.len() - 1)];
+        assert!(late > early, "block lengths must grow: {lens:?}");
+    }
+
+    #[test]
+    fn constant_memory() {
+        let mut r = RestartTail::new(8, WindowKind::Growing { c: 0.5 }).unwrap();
+        let m = r.memory_floats();
+        for _ in 0..5000 {
+            r.observe(&[1.0; 8]);
+        }
+        assert_eq!(r.memory_floats(), m);
+        assert_eq!(m, 24);
+    }
+
+    #[test]
+    fn empty_then_reset() {
+        let mut r = RestartTail::new(1, WindowKind::Fixed { k: 3 }).unwrap();
+        assert!(r.value_scalar().is_none());
+        for i in 0..7 {
+            r.observe_scalar(i as f64);
+        }
+        r.reset();
+        assert_eq!(r.t(), 0);
+        assert_eq!(r.blocks(), 0);
+        assert!(r.value_scalar().is_none());
+    }
+}

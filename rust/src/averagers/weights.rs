@@ -1,0 +1,134 @@
+//! Exact per-sample weight reconstruction for any linear estimator.
+//!
+//! Every estimator in this crate is linear: its report at time `t` is
+//! `Σ_{i=1..t} α_{i,t}·x_i`. Feeding the unit-impulse stream
+//! `x_j = δ_{ij}` therefore reads off `α_{i,t}` exactly. This costs
+//! `O(t)` estimator replays of `O(t)` steps each — fine for analysis and
+//! property tests (the paper's streams are ~10³ long) and completely
+//! generic: it needs no per-estimator weight formulas, so it cross-checks
+//! the closed forms the implementations use.
+
+use super::AveragerSpec;
+
+/// Reconstruct the weight vector `α_{·,t}` of `spec` at stream length `t`.
+///
+/// Returns `weights[i] = α_{i+1,t}` (0-indexed over the `t` samples).
+/// Estimators whose value is unavailable at `t` (e.g. [`super::RawTail`]
+/// before its start point would still return the raw iterate — which *is*
+/// linear) are handled uniformly.
+pub fn reconstruct_weights(spec: &AveragerSpec, t: u64) -> Result<Vec<f64>, String> {
+    let t_us = t as usize;
+    let mut weights = vec![0.0; t_us];
+    for (i, w) in weights.iter_mut().enumerate() {
+        let mut avg = spec.build(1)?;
+        for j in 0..t_us {
+            let x = if j == i { 1.0 } else { 0.0 };
+            avg.observe_scalar(x);
+        }
+        *w = avg
+            .value_scalar()
+            .ok_or_else(|| format!("estimator {} has no value at t={t}", spec.label()))?;
+    }
+    Ok(weights)
+}
+
+/// Reconstruct the full weight *matrix* `α_{i,τ}` for `τ = 1..t` in one
+/// pass per probe (`t` replays total): row `τ-1` holds the weights of the
+/// estimate reported at time `τ`.
+pub fn reconstruct_weight_history(
+    spec: &AveragerSpec,
+    t: u64,
+) -> Result<Vec<Vec<f64>>, String> {
+    let t_us = t as usize;
+    let mut rows = vec![vec![0.0; t_us]; t_us];
+    for i in 0..t_us {
+        let mut avg = spec.build(1)?;
+        for (tau, row) in rows.iter_mut().enumerate() {
+            let x = if tau == i { 1.0 } else { 0.0 };
+            avg.observe_scalar(x);
+            if let Some(v) = avg.value_scalar() {
+                row[i] = v;
+            }
+        }
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::averagers::WindowKind;
+
+    #[test]
+    fn true_window_weights_are_uniform_tail() {
+        let spec = AveragerSpec::True {
+            window: WindowKind::Fixed { k: 4 },
+        };
+        let w = reconstruct_weights(&spec, 10).unwrap();
+        for (i, &wi) in w.iter().enumerate() {
+            let want = if i >= 6 { 0.25 } else { 0.0 };
+            assert!((wi - want).abs() < 1e-12, "i={i}: {wi}");
+        }
+    }
+
+    #[test]
+    fn exp_weights_are_geometric() {
+        let gamma: f64 = 0.5;
+        let spec = AveragerSpec::Exp { gamma };
+        let t = 6;
+        let w = reconstruct_weights(&spec, t).unwrap();
+        let norm = 1.0 - gamma.powi(t as i32);
+        for (i, &wi) in w.iter().enumerate() {
+            let want = (1.0 - gamma) * gamma.powi((t as usize - 1 - i) as i32) / norm;
+            assert!((wi - want).abs() < 1e-12, "i={i}: {wi} vs {want}");
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_one_for_every_estimator() {
+        let specs = [
+            AveragerSpec::ExpK { k: 5 },
+            AveragerSpec::Gea { c: 0.5 },
+            AveragerSpec::Awa {
+                window: WindowKind::Fixed { k: 6 },
+                accumulators: 2,
+            },
+            AveragerSpec::Awa {
+                window: WindowKind::Growing { c: 0.5 },
+                accumulators: 3,
+            },
+            AveragerSpec::True {
+                window: WindowKind::Growing { c: 0.25 },
+            },
+            AveragerSpec::Raw {
+                c: 0.5,
+                total_steps: 40,
+            },
+        ];
+        for spec in &specs {
+            for &t in &[1u64, 7, 25, 40] {
+                let w = reconstruct_weights(spec, t).unwrap();
+                let sum: f64 = w.iter().sum();
+                assert!(
+                    (sum - 1.0).abs() < 1e-9,
+                    "{} at t={t}: Σα = {sum}",
+                    spec.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn history_last_row_matches_single_reconstruction() {
+        let spec = AveragerSpec::Awa {
+            window: WindowKind::Growing { c: 0.5 },
+            accumulators: 2,
+        };
+        let t = 20;
+        let hist = reconstruct_weight_history(&spec, t).unwrap();
+        let single = reconstruct_weights(&spec, t).unwrap();
+        for (a, b) in hist[t as usize - 1].iter().zip(&single) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Micro/throughput benchmark harness (the `criterion` substitute).
+//!
+//! Drives every target in `rust/benches/` (`harness = false`). Provides
+//! warmup, adaptive iteration counts targeting a wall-time budget, robust
+//! statistics (median + MAD, mean ± std), throughput reporting and aligned
+//! table output, plus a tiny `--filter` CLI so `cargo bench <name>` works
+//! the way users expect.
+
+use crate::util::fmt as ufmt;
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result statistics of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    /// Per-iteration wall times of each measured batch, normalized.
+    pub iters_per_batch: u64,
+    pub batch_times: Vec<Duration>,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elements: Option<u64>,
+}
+
+impl Sample {
+    /// Per-iteration time of each batch, in nanoseconds.
+    fn per_iter_ns(&self) -> Vec<f64> {
+        self.batch_times
+            .iter()
+            .map(|d| d.as_nanos() as f64 / self.iters_per_batch as f64)
+            .collect()
+    }
+
+    /// Median per-iteration time.
+    pub fn median(&self) -> Duration {
+        let mut ns = self.per_iter_ns();
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = ns[ns.len() / 2];
+        Duration::from_nanos(m as u64)
+    }
+
+    /// Mean per-iteration time.
+    pub fn mean(&self) -> Duration {
+        let ns = self.per_iter_ns();
+        let m = ns.iter().sum::<f64>() / ns.len() as f64;
+        Duration::from_nanos(m as u64)
+    }
+
+    /// Standard deviation of per-iteration time.
+    pub fn std(&self) -> Duration {
+        let ns = self.per_iter_ns();
+        let m = ns.iter().sum::<f64>() / ns.len() as f64;
+        let var = ns.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / ns.len() as f64;
+        Duration::from_nanos(var.sqrt() as u64)
+    }
+
+    /// Elements/second if `elements` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| {
+            let per_iter_s = self.median().as_nanos() as f64 / 1e9;
+            e as f64 / per_iter_s
+        })
+    }
+
+    fn row(&self) -> String {
+        let tp = self
+            .throughput()
+            .map(|t| format!("  {}", ufmt::rate(t)))
+            .unwrap_or_default();
+        format!(
+            "{:<44} {:>12} ±{:>10}{tp}",
+            self.name,
+            ufmt::duration(self.median()),
+            ufmt::duration(self.std()),
+        )
+    }
+}
+
+/// The bench harness: owns timing policy and collected samples.
+pub struct Bench {
+    /// Target wall time per measured case.
+    pub measure_time: Duration,
+    /// Warmup wall time per case.
+    pub warmup_time: Duration,
+    /// Number of measured batches.
+    pub batches: usize,
+    filter: Option<String>,
+    samples: Vec<Sample>,
+    suite: String,
+}
+
+impl Bench {
+    /// Construct from CLI args: any non-flag argument is a substring filter
+    /// (this is what `cargo bench -- <filter>` passes through). `--quick`
+    /// shrinks the timing budget for smoke runs.
+    pub fn from_args(suite: &str) -> Bench {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let quick = args.iter().any(|a| a == "--quick")
+            || std::env::var("ATA_BENCH_QUICK").is_ok();
+        let filter = args
+            .into_iter()
+            .find(|a| !a.starts_with("--") && a != "--bench");
+        let (measure, warmup, batches) = if quick {
+            (Duration::from_millis(80), Duration::from_millis(20), 8)
+        } else {
+            (Duration::from_millis(600), Duration::from_millis(150), 20)
+        };
+        println!("== bench suite: {suite} ==");
+        Bench {
+            measure_time: measure,
+            warmup_time: warmup,
+            batches,
+            filter,
+            samples: Vec::new(),
+            suite: suite.to_string(),
+        }
+    }
+
+    /// Whether a case name passes the filter.
+    pub fn enabled(&self, name: &str) -> bool {
+        self.filter.as_deref().map_or(true, |f| name.contains(f))
+    }
+
+    /// Benchmark a closure. The closure's return value is black-boxed so
+    /// the computation cannot be optimized away.
+    pub fn bench<T>(&mut self, name: &str, mut body: impl FnMut() -> T) -> Option<&Sample> {
+        self.bench_with_elements(name, None, &mut body)
+    }
+
+    /// Benchmark with a throughput denominator (elements per iteration).
+    pub fn bench_elements<T>(
+        &mut self,
+        name: &str,
+        elements: u64,
+        mut body: impl FnMut() -> T,
+    ) -> Option<&Sample> {
+        self.bench_with_elements(name, Some(elements), &mut body)
+    }
+
+    fn bench_with_elements<T>(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        body: &mut dyn FnMut() -> T,
+    ) -> Option<&Sample> {
+        if !self.enabled(name) {
+            return None;
+        }
+        // Warmup & calibration: how many iterations fit in one batch?
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup_time {
+            black_box(body());
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup_time.as_secs_f64() / warm_iters.max(1) as f64;
+        let batch_budget = self.measure_time.as_secs_f64() / self.batches as f64;
+        let iters_per_batch = ((batch_budget / per_iter).ceil() as u64).max(1);
+
+        let mut batch_times = Vec::with_capacity(self.batches);
+        for _ in 0..self.batches {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                black_box(body());
+            }
+            batch_times.push(t0.elapsed());
+        }
+        let sample = Sample {
+            name: name.to_string(),
+            iters_per_batch,
+            batch_times,
+            elements,
+        };
+        println!("{}", sample.row());
+        self.samples.push(sample);
+        self.samples.last()
+    }
+
+    /// Record an externally measured scalar (e.g. an accuracy metric or a
+    /// one-shot wall time) so it appears in the suite output.
+    pub fn record_metric(&mut self, name: &str, value: f64, unit: &str) {
+        if self.enabled(name) {
+            println!("{:<44} {:>12} {unit}", name, ufmt::sig4(value));
+        }
+    }
+
+    /// Print a free-form table section header.
+    pub fn section(&self, title: &str) {
+        println!("\n-- {title} --");
+    }
+
+    /// Finish the suite: print a compact summary.
+    pub fn finish(self) {
+        println!(
+            "== suite {} done: {} timed cases ==",
+            self.suite,
+            self.samples.len()
+        );
+    }
+
+    /// Access all collected samples (used by tests of the harness itself).
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_bench() -> Bench {
+        Bench {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(5),
+            batches: 4,
+            filter: None,
+            samples: Vec::new(),
+            suite: "test".to_string(),
+        }
+    }
+
+    #[test]
+    fn measures_something() {
+        let mut b = quiet_bench();
+        let s = b
+            .bench("noop-ish", || {
+                let mut acc = 0u64;
+                for i in 0..100u64 {
+                    acc = acc.wrapping_add(i * i);
+                }
+                acc
+            })
+            .unwrap()
+            .clone();
+        assert!(s.median().as_nanos() > 0);
+        assert_eq!(s.batch_times.len(), 4);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = quiet_bench();
+        let s = b
+            .bench_elements("copy", 1024, || vec![0u8; 1024])
+            .unwrap()
+            .clone();
+        let tp = s.throughput().unwrap();
+        assert!(tp > 0.0);
+    }
+
+    #[test]
+    fn filter_gates_cases() {
+        let mut b = quiet_bench();
+        b.filter = Some("yes".to_string());
+        assert!(b.bench("no-match", || 1).is_none());
+        assert!(b.bench("yes-match", || 1).is_some());
+        assert_eq!(b.samples().len(), 1);
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let s = Sample {
+            name: "x".into(),
+            iters_per_batch: 1,
+            batch_times: vec![
+                Duration::from_nanos(100),
+                Duration::from_nanos(110),
+                Duration::from_nanos(90),
+                Duration::from_nanos(105),
+                Duration::from_nanos(95),
+            ],
+            elements: None,
+        };
+        assert_eq!(s.median().as_nanos(), 100);
+        assert_eq!(s.mean().as_nanos(), 100);
+        assert!(s.std().as_nanos() < 20);
+    }
+}

@@ -1,0 +1,418 @@
+//! Typed configuration: TOML files → validated experiment/service configs.
+//!
+//! The launcher (`ata run …`, `ata serve …`) reads these; every field has
+//! a documented default so a minimal file (or none at all) works.
+
+pub mod toml;
+
+use crate::averagers::AveragerSpec;
+use crate::linreg::{EvalSchedule, ExperimentConfig, LinRegProblem, SgdConfig};
+use toml::Toml;
+
+/// Experiment section of a config file (paper §4 defaults).
+///
+/// ```toml
+/// steps = 1000
+/// runs = 100
+/// seed = 20190221
+/// averagers = ["gea(c=0.5)", "awa3(c=0.5)", "true(c=0.5)"]
+///
+/// [problem]
+/// dim = 50
+/// noise_std = 0.1
+///
+/// [sgd]
+/// batch_size = 11
+/// step_size = 0.4
+///
+/// [schedule]
+/// kind = "log"   # "every" | "log" | "stride"
+/// points = 100
+/// ```
+#[derive(Clone, Debug)]
+pub struct ExperimentFile {
+    pub config: ExperimentConfig,
+}
+
+impl ExperimentFile {
+    /// Parse from TOML text.
+    pub fn from_toml_text(text: &str) -> Result<ExperimentFile, String> {
+        let doc = Toml::parse(text).map_err(|e| e.to_string())?;
+        Self::from_toml(&doc)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<ExperimentFile, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read config '{path}': {e}"))?;
+        Self::from_toml_text(&text)
+    }
+
+    /// Build from a parsed document (missing fields → paper defaults).
+    pub fn from_toml(doc: &Toml) -> Result<ExperimentFile, String> {
+        let getf = |path: &str, default: f64| -> Result<f64, String> {
+            match doc.get_path(path) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| format!("config '{path}' must be a number")),
+            }
+        };
+        let getu = |path: &str, default: u64| -> Result<u64, String> {
+            match doc.get_path(path) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_u64()
+                    .ok_or_else(|| format!("config '{path}' must be a nonnegative integer")),
+            }
+        };
+
+        let dim = getu("problem.dim", 50)? as usize;
+        let noise_std = getf("problem.noise_std", 0.1)?;
+        let spectrum: Vec<f64> = match doc.get_path("problem.spectrum") {
+            None => (1..=dim).map(|i| 1.0 / i as f64).collect(),
+            Some(v) => {
+                let arr = v
+                    .as_arr()
+                    .ok_or("config 'problem.spectrum' must be an array")?;
+                arr.iter()
+                    .map(|x| x.as_f64().ok_or("spectrum entries must be numbers".into()))
+                    .collect::<Result<Vec<f64>, String>>()?
+            }
+        };
+        if spectrum.len() != dim {
+            return Err(format!(
+                "spectrum length {} != problem.dim {dim}",
+                spectrum.len()
+            ));
+        }
+        let w_star = vec![1.0; dim];
+        let problem = LinRegProblem::new(spectrum, w_star, noise_std)?;
+
+        let sgd = SgdConfig {
+            batch_size: getu("sgd.batch_size", 11)? as usize,
+            step_size: getf("sgd.step_size", 0.4)?,
+        };
+
+        let total_steps = getu("steps", 1000)?;
+        let runs = getu("runs", 100)?;
+        let seed = getu("seed", 20190221)?;
+
+        let averagers: Vec<AveragerSpec> = match doc.get_path("averagers") {
+            None => vec![
+                AveragerSpec::Gea { c: 0.5 },
+                AveragerSpec::Awa {
+                    window: crate::averagers::WindowKind::Growing { c: 0.5 },
+                    accumulators: 3,
+                },
+                AveragerSpec::True {
+                    window: crate::averagers::WindowKind::Growing { c: 0.5 },
+                },
+            ],
+            Some(v) => {
+                let arr = v.as_arr().ok_or("config 'averagers' must be an array")?;
+                arr.iter()
+                    .map(|s| {
+                        s.as_str()
+                            .ok_or_else(|| "averager entries must be strings".to_string())
+                            .and_then(AveragerSpec::parse)
+                    })
+                    .collect::<Result<Vec<_>, _>>()?
+            }
+        };
+
+        let schedule = match doc.get_path("schedule.kind").and_then(Toml::as_str) {
+            None | Some("every") => EvalSchedule::EveryStep,
+            Some("log") => EvalSchedule::LogSpaced {
+                points: getu("schedule.points", 100)? as usize,
+            },
+            Some("stride") => EvalSchedule::Strided {
+                stride: getu("schedule.stride", 10)?,
+            },
+            Some(other) => return Err(format!("unknown schedule kind '{other}'")),
+        };
+
+        let include_iterate = match doc.get_path("include_iterate") {
+            None => true,
+            Some(v) => v
+                .as_bool()
+                .ok_or("config 'include_iterate' must be a boolean")?,
+        };
+
+        let config = ExperimentConfig {
+            problem,
+            sgd,
+            total_steps,
+            runs,
+            seed,
+            averagers,
+            schedule,
+            include_iterate,
+        };
+        config.validate()?;
+        Ok(ExperimentFile { config })
+    }
+}
+
+/// Backpressure policy of a coordinator ingest queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackpressurePolicy {
+    /// Block the producer until space frees (lossless, propagates stall).
+    Block,
+    /// Drop the incoming sample (lossy, never stalls).
+    DropNewest,
+    /// Reject with an error the producer can observe.
+    Reject,
+}
+
+impl BackpressurePolicy {
+    pub fn parse(s: &str) -> Result<BackpressurePolicy, String> {
+        match s {
+            "block" => Ok(BackpressurePolicy::Block),
+            "drop" | "drop_newest" => Ok(BackpressurePolicy::DropNewest),
+            "reject" => Ok(BackpressurePolicy::Reject),
+            _ => Err(format!("unknown backpressure policy '{s}'")),
+        }
+    }
+}
+
+/// One pre-declared stream in the coordinator service.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    pub name: String,
+    pub dim: usize,
+    pub spec: AveragerSpec,
+}
+
+/// Coordinator service configuration.
+///
+/// ```toml
+/// [service]
+/// addr = "127.0.0.1:7311"
+/// shards = 4
+/// queue_capacity = 1024
+/// backpressure = "block"     # block | drop | reject
+///
+/// [[stream]]
+/// name = "layer0.weight"
+/// dim = 512
+/// averager = "gea(c=0.5)"
+/// ```
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub addr: String,
+    pub shards: usize,
+    pub queue_capacity: usize,
+    pub backpressure: BackpressurePolicy,
+    pub streams: Vec<StreamConfig>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            addr: "127.0.0.1:7311".to_string(),
+            shards: 4,
+            queue_capacity: 1024,
+            backpressure: BackpressurePolicy::Block,
+            streams: Vec::new(),
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn from_toml_text(text: &str) -> Result<ServiceConfig, String> {
+        let doc = Toml::parse(text).map_err(|e| e.to_string())?;
+        Self::from_toml(&doc)
+    }
+
+    pub fn load(path: &str) -> Result<ServiceConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read config '{path}': {e}"))?;
+        Self::from_toml_text(&text)
+    }
+
+    pub fn from_toml(doc: &Toml) -> Result<ServiceConfig, String> {
+        let mut cfg = ServiceConfig::default();
+        if let Some(v) = doc.get_path("service.addr") {
+            cfg.addr = v
+                .as_str()
+                .ok_or("service.addr must be a string")?
+                .to_string();
+        }
+        if let Some(v) = doc.get_path("service.shards") {
+            cfg.shards = v.as_u64().ok_or("service.shards must be an integer")? as usize;
+        }
+        if let Some(v) = doc.get_path("service.queue_capacity") {
+            cfg.queue_capacity =
+                v.as_u64().ok_or("service.queue_capacity must be an integer")? as usize;
+        }
+        if let Some(v) = doc.get_path("service.backpressure") {
+            cfg.backpressure =
+                BackpressurePolicy::parse(v.as_str().ok_or("backpressure must be a string")?)?;
+        }
+        if let Some(arr) = doc.get_path("stream").and_then(Toml::as_arr) {
+            for s in arr {
+                let name = s
+                    .get_path("name")
+                    .and_then(Toml::as_str)
+                    .ok_or("stream.name required")?
+                    .to_string();
+                let dim = s
+                    .get_path("dim")
+                    .and_then(Toml::as_u64)
+                    .ok_or("stream.dim required")? as usize;
+                let spec = AveragerSpec::parse(
+                    s.get_path("averager")
+                        .and_then(Toml::as_str)
+                        .ok_or("stream.averager required")?,
+                )?;
+                cfg.streams.push(StreamConfig { name, dim, spec });
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shards == 0 {
+            return Err("service.shards must be >= 1".into());
+        }
+        if self.queue_capacity == 0 {
+            return Err("service.queue_capacity must be >= 1".into());
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for s in &self.streams {
+            if s.dim == 0 {
+                return Err(format!("stream '{}' has dim 0", s.name));
+            }
+            if !seen.insert(&s.name) {
+                return Err(format!("duplicate stream name '{}'", s.name));
+            }
+            s.spec.build(s.dim)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn experiment_defaults_match_paper() {
+        let f = ExperimentFile::from_toml_text("").unwrap();
+        let c = &f.config;
+        assert_eq!(c.problem.d, 50);
+        assert_eq!(c.sgd.batch_size, 11);
+        assert_eq!(c.total_steps, 1000);
+        assert_eq!(c.runs, 100);
+        assert!((c.problem.optimal_loss() - 0.01).abs() < 1e-15);
+    }
+
+    #[test]
+    fn experiment_overrides() {
+        let text = r#"
+steps = 200
+runs = 10
+averagers = ["gea(c=0.25)", "true(c=0.25)"]
+
+[sgd]
+step_size = 0.2
+
+[schedule]
+kind = "log"
+points = 40
+"#;
+        let f = ExperimentFile::from_toml_text(text).unwrap();
+        assert_eq!(f.config.total_steps, 200);
+        assert_eq!(f.config.runs, 10);
+        assert_eq!(f.config.averagers.len(), 2);
+        assert_eq!(f.config.sgd.step_size, 0.2);
+        assert_eq!(
+            f.config.schedule,
+            EvalSchedule::LogSpaced { points: 40 }
+        );
+    }
+
+    #[test]
+    fn experiment_rejects_bad_spec() {
+        let text = r#"averagers = ["bogus(c=0.5)"]"#;
+        assert!(ExperimentFile::from_toml_text(text).is_err());
+    }
+
+    #[test]
+    fn experiment_rejects_divergent_stepsize() {
+        let text = "[sgd]\nstep_size = 5.0";
+        assert!(ExperimentFile::from_toml_text(text).is_err());
+    }
+
+    #[test]
+    fn experiment_custom_spectrum_length_checked() {
+        let text = "[problem]\ndim = 3\nspectrum = [1.0, 0.5]";
+        assert!(ExperimentFile::from_toml_text(text).is_err());
+        let ok = "[problem]\ndim = 2\nspectrum = [1.0, 0.5]";
+        assert!(ExperimentFile::from_toml_text(ok).is_ok());
+    }
+
+    #[test]
+    fn service_config_full() {
+        let text = r#"
+[service]
+addr = "127.0.0.1:9000"
+shards = 2
+queue_capacity = 64
+backpressure = "drop"
+
+[[stream]]
+name = "w"
+dim = 10
+averager = "awa3(c=0.5)"
+
+[[stream]]
+name = "bn"
+dim = 4
+averager = "gea(c=0.25)"
+"#;
+        let cfg = ServiceConfig::from_toml_text(text).unwrap();
+        assert_eq!(cfg.addr, "127.0.0.1:9000");
+        assert_eq!(cfg.shards, 2);
+        assert_eq!(cfg.backpressure, BackpressurePolicy::DropNewest);
+        assert_eq!(cfg.streams.len(), 2);
+        assert_eq!(cfg.streams[0].name, "w");
+    }
+
+    #[test]
+    fn service_rejects_duplicates_and_zero_dim() {
+        let dup = r#"
+[[stream]]
+name = "w"
+dim = 2
+averager = "gea(c=0.5)"
+[[stream]]
+name = "w"
+dim = 2
+averager = "gea(c=0.5)"
+"#;
+        assert!(ServiceConfig::from_toml_text(dup).is_err());
+        let zero = r#"
+[[stream]]
+name = "w"
+dim = 0
+averager = "gea(c=0.5)"
+"#;
+        assert!(ServiceConfig::from_toml_text(zero).is_err());
+    }
+
+    #[test]
+    fn backpressure_parse() {
+        assert_eq!(
+            BackpressurePolicy::parse("block").unwrap(),
+            BackpressurePolicy::Block
+        );
+        assert_eq!(
+            BackpressurePolicy::parse("reject").unwrap(),
+            BackpressurePolicy::Reject
+        );
+        assert!(BackpressurePolicy::parse("yolo").is_err());
+    }
+}

@@ -1,0 +1,648 @@
+//! TOML-subset parser for configuration files.
+//!
+//! Supports the constructs the crate's configs use — which covers the
+//! overwhelming majority of real-world TOML:
+//!
+//! * `[table]` and `[nested.table]` headers, `[[array-of-tables]]`
+//! * `key = value` with bare or quoted keys and dotted keys
+//! * strings (`"…"` with escapes, `'…'` literal), integers, floats,
+//!   booleans, inline arrays `[1, 2, 3]` (nested allowed, trailing comma
+//!   tolerated), inline tables `{a = 1, b = 2}`
+//! * `#` comments, blank lines
+//!
+//! Not supported (rejected with an error, never silently misparsed):
+//! datetimes, multi-line strings.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Toml {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Toml>),
+    Table(BTreeMap<String, Toml>),
+}
+
+impl Toml {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Toml::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Toml::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_i64().and_then(|i| u64::try_from(i).ok())
+    }
+
+    /// Floats accept integer literals too (`c = 1` where 1.0 is meant).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Toml::Float(f) => Some(*f),
+            Toml::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Toml::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Toml]> {
+        match self {
+            Toml::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Toml>> {
+        match self {
+            Toml::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup: `get_path("sgd.step_size")`.
+    pub fn get_path(&self, path: &str) -> Option<&Toml> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+
+    /// Parse a TOML document into its root table.
+    pub fn parse(text: &str) -> Result<Toml, TomlError> {
+        parse_document(text)
+    }
+}
+
+/// Parse error with line context.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub msg: String,
+    pub line: usize,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+fn err(line: usize, msg: impl Into<String>) -> TomlError {
+    TomlError {
+        msg: msg.into(),
+        line,
+    }
+}
+
+fn parse_document(text: &str) -> Result<Toml, TomlError> {
+    let mut root = BTreeMap::new();
+    // Current table path ([] = root); and whether it is an array-of-tables
+    // element (affects where keys land).
+    let mut current_path: Vec<String> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = lineno + 1;
+        let stripped = strip_comment(raw);
+        let s = stripped.trim();
+        if s.is_empty() {
+            continue;
+        }
+        if let Some(header) = s.strip_prefix("[[") {
+            let header = header
+                .strip_suffix("]]")
+                .ok_or_else(|| err(line, "unterminated [[header]]"))?;
+            let path = parse_key_path(header, line)?;
+            push_array_table(&mut root, &path, line)?;
+            current_path = path;
+        } else if let Some(header) = s.strip_prefix('[') {
+            let header = header
+                .strip_suffix(']')
+                .ok_or_else(|| err(line, "unterminated [header]"))?;
+            let path = parse_key_path(header, line)?;
+            ensure_table(&mut root, &path, line)?;
+            current_path = path;
+        } else {
+            let eq = find_top_level_eq(s)
+                .ok_or_else(|| err(line, format!("expected key = value, got '{s}'")))?;
+            let (k, v) = s.split_at(eq);
+            let v = &v[1..];
+            let key_path = parse_key_path(k.trim(), line)?;
+            let mut p = Lexer {
+                chars: v.trim().chars().collect(),
+                pos: 0,
+                line,
+            };
+            let value = p.value()?;
+            p.skip_ws();
+            if p.pos != p.chars.len() {
+                return Err(err(line, "trailing characters after value"));
+            }
+            insert_at(&mut root, &current_path, &key_path, value, line)?;
+        }
+    }
+    Ok(Toml::Table(root))
+}
+
+/// Strip a `#` comment that is not inside a string.
+fn strip_comment(line: &str) -> String {
+    let mut out = String::new();
+    let mut in_basic = false;
+    let mut in_literal = false;
+    let mut escape = false;
+    for ch in line.chars() {
+        if escape {
+            out.push(ch);
+            escape = false;
+            continue;
+        }
+        match ch {
+            '\\' if in_basic => {
+                out.push(ch);
+                escape = true;
+            }
+            '"' if !in_literal => {
+                in_basic = !in_basic;
+                out.push(ch);
+            }
+            '\'' if !in_basic => {
+                in_literal = !in_literal;
+                out.push(ch);
+            }
+            '#' if !in_basic && !in_literal => break,
+            _ => out.push(ch),
+        }
+    }
+    out
+}
+
+/// Find the first `=` not inside quotes (dotted quoted keys).
+fn find_top_level_eq(s: &str) -> Option<usize> {
+    let mut in_basic = false;
+    let mut in_literal = false;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '"' if !in_literal => in_basic = !in_basic,
+            '\'' if !in_basic => in_literal = !in_literal,
+            '=' if !in_basic && !in_literal => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_key_path(s: &str, line: usize) -> Result<Vec<String>, TomlError> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut chars = s.chars().peekable();
+    loop {
+        match chars.next() {
+            None => {
+                if cur.trim().is_empty() && parts.is_empty() {
+                    return Err(err(line, "empty key"));
+                }
+                parts.push(cur.trim().to_string());
+                break;
+            }
+            Some('.') => {
+                parts.push(cur.trim().to_string());
+                cur = String::new();
+            }
+            Some('"') | Some('\'') => {
+                let quote = '"';
+                let _ = quote;
+                let q = '"';
+                let _ = q;
+                // Read until matching quote.
+                let open = '"';
+                let _ = open;
+                let mut part = String::new();
+                let close = if s.contains('\'') && !s.contains('"') {
+                    '\''
+                } else {
+                    '"'
+                };
+                loop {
+                    match chars.next() {
+                        None => return Err(err(line, "unterminated quoted key")),
+                        Some(c) if c == close => break,
+                        Some(c) => part.push(c),
+                    }
+                }
+                cur.push_str(&part);
+            }
+            Some(c) if c.is_alphanumeric() || c == '_' || c == '-' || c == ' ' => {
+                cur.push(c);
+            }
+            Some(c) => return Err(err(line, format!("bad character '{c}' in key"))),
+        }
+    }
+    if parts.iter().any(|p| p.is_empty()) {
+        return Err(err(line, "empty key segment"));
+    }
+    Ok(parts)
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Toml>,
+    path: &[String],
+    line: usize,
+) -> Result<&'a mut BTreeMap<String, Toml>, TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Toml::Table(BTreeMap::new()));
+        cur = match entry {
+            Toml::Table(t) => t,
+            Toml::Arr(a) => match a.last_mut() {
+                Some(Toml::Table(t)) => t,
+                _ => return Err(err(line, format!("'{part}' is not a table"))),
+            },
+            _ => return Err(err(line, format!("'{part}' is not a table"))),
+        };
+    }
+    Ok(cur)
+}
+
+fn push_array_table(
+    root: &mut BTreeMap<String, Toml>,
+    path: &[String],
+    line: usize,
+) -> Result<(), TomlError> {
+    let (last, prefix) = path.split_last().ok_or_else(|| err(line, "empty header"))?;
+    let parent = ensure_table(root, prefix, line)?;
+    let entry = parent
+        .entry(last.clone())
+        .or_insert_with(|| Toml::Arr(Vec::new()));
+    match entry {
+        Toml::Arr(a) => {
+            a.push(Toml::Table(BTreeMap::new()));
+            Ok(())
+        }
+        _ => Err(err(line, format!("'{last}' is not an array of tables"))),
+    }
+}
+
+fn insert_at(
+    root: &mut BTreeMap<String, Toml>,
+    table_path: &[String],
+    key_path: &[String],
+    value: Toml,
+    line: usize,
+) -> Result<(), TomlError> {
+    let table = ensure_table(root, table_path, line)?;
+    let (last, prefix) = key_path
+        .split_last()
+        .ok_or_else(|| err(line, "empty key"))?;
+    let mut cur = table;
+    for part in prefix {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Toml::Table(BTreeMap::new()));
+        cur = match entry {
+            Toml::Table(t) => t,
+            _ => return Err(err(line, format!("'{part}' is not a table"))),
+        };
+    }
+    if cur.contains_key(last) {
+        return Err(err(line, format!("duplicate key '{last}'")));
+    }
+    cur.insert(last.clone(), value);
+    Ok(())
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: usize,
+}
+
+impl Lexer {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(' ' | '\t')) {
+            self.pos += 1;
+        }
+    }
+
+    fn value(&mut self) -> Result<Toml, TomlError> {
+        self.skip_ws();
+        match self.peek() {
+            Some('"') => self.basic_string(),
+            Some('\'') => self.literal_string(),
+            Some('[') => self.array(),
+            Some('{') => self.inline_table(),
+            Some('t') | Some('f') => self.boolean(),
+            Some(c) if c == '-' || c == '+' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(err(self.line, format!("unexpected character '{c}'"))),
+            None => Err(err(self.line, "missing value")),
+        }
+    }
+
+    fn basic_string(&mut self) -> Result<Toml, TomlError> {
+        self.pos += 1; // consume "
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(err(self.line, "unterminated string")),
+                Some('"') => {
+                    self.pos += 1;
+                    return Ok(Toml::Str(s));
+                }
+                Some('\\') => {
+                    self.pos += 1;
+                    let esc = self
+                        .peek()
+                        .ok_or_else(|| err(self.line, "dangling escape"))?;
+                    self.pos += 1;
+                    match esc {
+                        'n' => s.push('\n'),
+                        't' => s.push('\t'),
+                        'r' => s.push('\r'),
+                        '"' => s.push('"'),
+                        '\\' => s.push('\\'),
+                        _ => return Err(err(self.line, format!("bad escape '\\{esc}'"))),
+                    }
+                }
+                Some(c) => {
+                    s.push(c);
+                    self.pos += 1;
+                }
+            }
+        }
+    }
+
+    fn literal_string(&mut self) -> Result<Toml, TomlError> {
+        self.pos += 1; // consume '
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(err(self.line, "unterminated literal string")),
+                Some('\'') => {
+                    self.pos += 1;
+                    return Ok(Toml::Str(s));
+                }
+                Some(c) => {
+                    s.push(c);
+                    self.pos += 1;
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Toml, TomlError> {
+        self.pos += 1; // consume [
+        let mut items = Vec::new();
+        loop {
+            self.skip_ws();
+            if self.peek() == Some(']') {
+                self.pos += 1;
+                return Ok(Toml::Arr(items));
+            }
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(',') => {
+                    self.pos += 1;
+                }
+                Some(']') => {
+                    self.pos += 1;
+                    return Ok(Toml::Arr(items));
+                }
+                _ => return Err(err(self.line, "expected ',' or ']' in array")),
+            }
+        }
+    }
+
+    fn inline_table(&mut self) -> Result<Toml, TomlError> {
+        self.pos += 1; // consume {
+        let mut map = BTreeMap::new();
+        loop {
+            self.skip_ws();
+            if self.peek() == Some('}') {
+                self.pos += 1;
+                return Ok(Toml::Table(map));
+            }
+            // key
+            let mut key = String::new();
+            while let Some(c) = self.peek() {
+                if c.is_alphanumeric() || c == '_' || c == '-' {
+                    key.push(c);
+                    self.pos += 1;
+                } else {
+                    break;
+                }
+            }
+            if key.is_empty() {
+                return Err(err(self.line, "empty key in inline table"));
+            }
+            self.skip_ws();
+            if self.peek() != Some('=') {
+                return Err(err(self.line, "expected '=' in inline table"));
+            }
+            self.pos += 1;
+            let v = self.value()?;
+            if map.insert(key.clone(), v).is_some() {
+                return Err(err(self.line, format!("duplicate key '{key}'")));
+            }
+            self.skip_ws();
+            match self.peek() {
+                Some(',') => {
+                    self.pos += 1;
+                }
+                Some('}') => {
+                    self.pos += 1;
+                    return Ok(Toml::Table(map));
+                }
+                _ => return Err(err(self.line, "expected ',' or '}' in inline table")),
+            }
+        }
+    }
+
+    fn boolean(&mut self) -> Result<Toml, TomlError> {
+        let rest: String = self.chars[self.pos..].iter().collect();
+        if rest.starts_with("true") {
+            self.pos += 4;
+            Ok(Toml::Bool(true))
+        } else if rest.starts_with("false") {
+            self.pos += 5;
+            Ok(Toml::Bool(false))
+        } else {
+            Err(err(self.line, "bad boolean"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Toml, TomlError> {
+        let start = self.pos;
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                '0'..='9' | '+' | '-' | '_' => self.pos += 1,
+                '.' | 'e' | 'E' => {
+                    is_float = true;
+                    self.pos += 1;
+                }
+                _ => break,
+            }
+        }
+        let text: String = self.chars[start..self.pos]
+            .iter()
+            .filter(|&&c| c != '_')
+            .collect();
+        if is_float {
+            text.parse::<f64>()
+                .map(Toml::Float)
+                .map_err(|_| err(self.line, format!("bad float '{text}'")))
+        } else {
+            text.parse::<i64>()
+                .map(Toml::Int)
+                .map_err(|_| err(self.line, format!("bad integer '{text}'")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_tables() {
+        let doc = r#"
+# experiment config
+title = "fig3"
+steps = 1000
+c = 0.5
+fast = true
+
+[sgd]
+batch_size = 11
+step_size = 0.4
+
+[problem.noise]
+std = 0.1
+"#;
+        let t = Toml::parse(doc).unwrap();
+        assert_eq!(t.get_path("title").unwrap().as_str(), Some("fig3"));
+        assert_eq!(t.get_path("steps").unwrap().as_u64(), Some(1000));
+        assert_eq!(t.get_path("c").unwrap().as_f64(), Some(0.5));
+        assert_eq!(t.get_path("fast").unwrap().as_bool(), Some(true));
+        assert_eq!(t.get_path("sgd.batch_size").unwrap().as_u64(), Some(11));
+        assert_eq!(t.get_path("sgd.step_size").unwrap().as_f64(), Some(0.4));
+        assert_eq!(t.get_path("problem.noise.std").unwrap().as_f64(), Some(0.1));
+    }
+
+    #[test]
+    fn arrays_and_inline_tables() {
+        let doc = r#"
+specs = ["gea(c=0.5)", "awa3(c=0.5)", "true(c=0.5)"]
+nested = [[1, 2], [3, 4],]
+inline = {a = 1, b = 2.5, s = "x"}
+"#;
+        let t = Toml::parse(doc).unwrap();
+        let specs = t.get_path("specs").unwrap().as_arr().unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[1].as_str(), Some("awa3(c=0.5)"));
+        let nested = t.get_path("nested").unwrap().as_arr().unwrap();
+        assert_eq!(nested[1].as_arr().unwrap()[0].as_i64(), Some(3));
+        assert_eq!(t.get_path("inline.a").unwrap().as_i64(), Some(1));
+        assert_eq!(t.get_path("inline.b").unwrap().as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let doc = r#"
+[[stream]]
+name = "layer0"
+spec = "gea(c=0.5)"
+
+[[stream]]
+name = "layer1"
+spec = "awa3(c=0.5)"
+"#;
+        let t = Toml::parse(doc).unwrap();
+        let streams = t.get_path("stream").unwrap().as_arr().unwrap();
+        assert_eq!(streams.len(), 2);
+        assert_eq!(
+            streams[0].get_path("name").unwrap().as_str(),
+            Some("layer0")
+        );
+        assert_eq!(
+            streams[1].get_path("spec").unwrap().as_str(),
+            Some("awa3(c=0.5)")
+        );
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let doc = r##"
+a = "has # inside" # trailing comment
+b = 2 # another
+"##;
+        let t = Toml::parse(doc).unwrap();
+        assert_eq!(t.get_path("a").unwrap().as_str(), Some("has # inside"));
+        assert_eq!(t.get_path("b").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn numbers_with_underscores_and_signs() {
+        let t = Toml::parse("big = 1_000_000\nneg = -3.5e-2\npos = +7").unwrap();
+        assert_eq!(t.get_path("big").unwrap().as_i64(), Some(1_000_000));
+        assert!((t.get_path("neg").unwrap().as_f64().unwrap() + 0.035).abs() < 1e-15);
+        assert_eq!(t.get_path("pos").unwrap().as_i64(), Some(7));
+    }
+
+    #[test]
+    fn escapes_in_strings() {
+        let t = Toml::parse(r#"s = "a\nb\t\"q\"""#).unwrap();
+        assert_eq!(t.get_path("s").unwrap().as_str(), Some("a\nb\t\"q\""));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "= 1",
+            "a =",
+            "a = [1, ",
+            "[unclosed",
+            "a = 1\na = 2",
+            "a = nope",
+            "x = 1 garbage",
+        ] {
+            assert!(Toml::parse(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_rejected_across_paths() {
+        assert!(Toml::parse("[t]\na = 1\n[t]\na = 2").is_err());
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let t = Toml::parse("c = 1").unwrap();
+        assert_eq!(t.get_path("c").unwrap().as_f64(), Some(1.0));
+        let t = Toml::parse("c = 0.5").unwrap();
+        assert_eq!(t.get_path("c").unwrap().as_u64(), None);
+    }
+}

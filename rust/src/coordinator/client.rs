@@ -1,0 +1,144 @@
+//! Client library for the coordinator TCP service.
+
+use super::core::Snapshot;
+use super::protocol::{read_frame, write_frame, Request};
+use crate::util::json::Json;
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Synchronous client over one TCP connection (request/response).
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    /// Connect to a server address.
+    pub fn connect(addr: &str) -> Result<Client, String> {
+        let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        stream
+            .set_nodelay(true)
+            .map_err(|e| format!("nodelay: {e}"))?;
+        Ok(Client { stream })
+    }
+
+    /// Set a read timeout (None = block forever).
+    pub fn set_timeout(&mut self, d: Option<Duration>) -> Result<(), String> {
+        self.stream.set_read_timeout(d).map_err(|e| e.to_string())
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<Json, String> {
+        write_frame(&mut self.stream, &req.to_json()).map_err(|e| format!("send: {e}"))?;
+        let resp = read_frame(&mut self.stream)
+            .map_err(|e| format!("recv: {e}"))?
+            .ok_or("server closed connection")?;
+        match resp.get("ok").and_then(Json::as_bool) {
+            Some(true) => Ok(resp),
+            Some(false) => Err(resp
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown server error")
+                .to_string()),
+            None => Err("malformed response (no 'ok')".into()),
+        }
+    }
+
+    /// Liveness check.
+    pub fn ping(&mut self) -> Result<(), String> {
+        self.roundtrip(&Request::Ping).map(|_| ())
+    }
+
+    /// Register a stream with an averager spec string (`"gea(c=0.5)"`…).
+    pub fn register(&mut self, stream: &str, dim: usize, spec: &str) -> Result<(), String> {
+        self.roundtrip(&Request::Register {
+            stream: stream.to_string(),
+            dim,
+            spec: spec.to_string(),
+        })
+        .map(|_| ())
+    }
+
+    /// Push one sample; returns whether it was accepted (vs dropped).
+    pub fn push(&mut self, stream: &str, data: &[f64]) -> Result<bool, String> {
+        let resp = self.roundtrip(&Request::Push {
+            stream: stream.to_string(),
+            data: data.to_vec(),
+        })?;
+        Ok(resp
+            .get("accepted")
+            .and_then(Json::as_bool)
+            .unwrap_or(false))
+    }
+
+    /// Push a batch of samples in one round-trip; `samples` is a flat
+    /// buffer of `count` consecutive d-dim vectors. Returns (accepted,
+    /// dropped) counts.
+    pub fn push_many(
+        &mut self,
+        stream: &str,
+        count: usize,
+        samples: &[f64],
+    ) -> Result<(u64, u64), String> {
+        let resp = self.roundtrip(&Request::PushMany {
+            stream: stream.to_string(),
+            count,
+            data: samples.to_vec(),
+        })?;
+        Ok((
+            resp.get("accepted").and_then(Json::as_u64).unwrap_or(0),
+            resp.get("dropped").and_then(Json::as_u64).unwrap_or(0),
+        ))
+    }
+
+    /// Fetch the current estimate.
+    pub fn snapshot(&mut self, stream: &str) -> Result<Snapshot, String> {
+        let resp = self.roundtrip(&Request::Snapshot {
+            stream: stream.to_string(),
+        })?;
+        let value = match resp.get("value") {
+            Some(Json::Null) | None => None,
+            Some(v) => Some(
+                v.as_arr()
+                    .ok_or("snapshot value must be an array")?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or("snapshot values must be numbers"))
+                    .collect::<Result<Vec<_>, _>>()
+                    .map_err(String::from)?,
+            ),
+        };
+        Ok(Snapshot {
+            stream: stream.to_string(),
+            t: resp.get("t").and_then(Json::as_u64).unwrap_or(0),
+            window_len: resp
+                .get("window_len")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            dropped: resp.get("dropped").and_then(Json::as_u64).unwrap_or(0),
+            value,
+        })
+    }
+
+    /// Barrier: all prior pushes applied.
+    pub fn sync(&mut self) -> Result<(), String> {
+        self.roundtrip(&Request::Sync).map(|_| ())
+    }
+
+    /// Server metrics JSON.
+    pub fn metrics(&mut self) -> Result<Json, String> {
+        self.roundtrip(&Request::Metrics)
+    }
+
+    /// Registered stream names.
+    pub fn list_streams(&mut self) -> Result<Vec<String>, String> {
+        let resp = self.roundtrip(&Request::ListStreams)?;
+        Ok(resp
+            .get("streams")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|s| s.as_str().map(String::from))
+            .collect())
+    }
+}
+
+// Integration tests (server + client over localhost) live in
+// rust/tests/service_protocol.rs.

@@ -1,0 +1,27 @@
+//! L3 coordinator: a multi-stream anytime-averaging service.
+//!
+//! The paper's estimators are *state machines over parameter streams*;
+//! this module is the production harness around them — the piece a
+//! training cluster or serving fleet would actually deploy:
+//!
+//! * [`stream`] — per-stream state: estimator + sequence/drop accounting.
+//! * [`Coordinator`] — the in-process core: stream registry, hash-sharded
+//!   ingest workers with bounded queues and configurable backpressure
+//!   ([`crate::config::BackpressurePolicy`]), snapshot reads at any time
+//!   (the paper's "anytime" property, operationalized), metrics.
+//! * [`protocol`] — length-prefixed JSON wire format.
+//! * [`server`]/[`client`] — TCP service and client library.
+//!
+//! Ordering guarantee: pushes to the *same stream* are applied in arrival
+//! order (each stream is pinned to one shard queue). Different streams
+//! proceed independently.
+
+pub mod client;
+mod core;
+pub mod protocol;
+pub mod server;
+pub mod stream;
+
+pub use self::core::{Coordinator, PushOutcome, Snapshot};
+pub use client::Client;
+pub use server::Server;

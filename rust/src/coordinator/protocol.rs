@@ -1,0 +1,292 @@
+//! Wire protocol: length-prefixed JSON over a byte stream.
+//!
+//! Frame = 4-byte big-endian payload length + UTF-8 JSON payload.
+//! Requests and responses are JSON objects; every response carries
+//! `"ok": true/false`. Max frame size guards against garbage input.
+
+use crate::util::json::Json;
+use std::io::{Read, Write};
+
+/// Upper bound on a frame payload (64 MiB — a 8M-float snapshot).
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Client → server requests.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Ping,
+    Register {
+        stream: String,
+        dim: usize,
+        spec: String,
+    },
+    Push {
+        stream: String,
+        data: Vec<f64>,
+    },
+    /// Batched push: `data` holds `count` consecutive samples.
+    PushMany {
+        stream: String,
+        count: usize,
+        data: Vec<f64>,
+    },
+    Snapshot {
+        stream: String,
+    },
+    Sync,
+    Metrics,
+    ListStreams,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Ping => Json::obj(vec![("op", Json::Str("ping".into()))]),
+            Request::Register { stream, dim, spec } => Json::obj(vec![
+                ("op", Json::Str("register".into())),
+                ("stream", Json::Str(stream.clone())),
+                ("dim", Json::Num(*dim as f64)),
+                ("spec", Json::Str(spec.clone())),
+            ]),
+            Request::Push { stream, data } => Json::obj(vec![
+                ("op", Json::Str("push".into())),
+                ("stream", Json::Str(stream.clone())),
+                ("data", Json::nums(data)),
+            ]),
+            Request::PushMany {
+                stream,
+                count,
+                data,
+            } => Json::obj(vec![
+                ("op", Json::Str("push_many".into())),
+                ("stream", Json::Str(stream.clone())),
+                ("count", Json::Num(*count as f64)),
+                ("data", Json::nums(data)),
+            ]),
+            Request::Snapshot { stream } => Json::obj(vec![
+                ("op", Json::Str("snapshot".into())),
+                ("stream", Json::Str(stream.clone())),
+            ]),
+            Request::Sync => Json::obj(vec![("op", Json::Str("sync".into()))]),
+            Request::Metrics => Json::obj(vec![("op", Json::Str("metrics".into()))]),
+            Request::ListStreams => Json::obj(vec![("op", Json::Str("list".into()))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request, String> {
+        let op = j
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or("request missing 'op'")?;
+        let stream = || -> Result<String, String> {
+            Ok(j.get("stream")
+                .and_then(Json::as_str)
+                .ok_or("request missing 'stream'")?
+                .to_string())
+        };
+        match op {
+            "ping" => Ok(Request::Ping),
+            "register" => Ok(Request::Register {
+                stream: stream()?,
+                dim: j
+                    .get("dim")
+                    .and_then(Json::as_u64)
+                    .ok_or("register missing 'dim'")? as usize,
+                spec: j
+                    .get("spec")
+                    .and_then(Json::as_str)
+                    .ok_or("register missing 'spec'")?
+                    .to_string(),
+            }),
+            "push" => {
+                let data = j
+                    .get("data")
+                    .and_then(Json::as_arr)
+                    .ok_or("push missing 'data'")?
+                    .iter()
+                    .map(|v| v.as_f64().ok_or("push data must be numbers".to_string()))
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(Request::Push {
+                    stream: stream()?,
+                    data,
+                })
+            }
+            "push_many" => {
+                let data = j
+                    .get("data")
+                    .and_then(Json::as_arr)
+                    .ok_or("push_many missing 'data'")?
+                    .iter()
+                    .map(|v| v.as_f64().ok_or("push_many data must be numbers".to_string()))
+                    .collect::<Result<Vec<_>, _>>()?;
+                let count = j
+                    .get("count")
+                    .and_then(Json::as_u64)
+                    .ok_or("push_many missing 'count'")? as usize;
+                if count == 0 || data.len() % count != 0 {
+                    return Err(format!(
+                        "push_many: {} values do not split into {count} samples",
+                        data.len()
+                    ));
+                }
+                Ok(Request::PushMany {
+                    stream: stream()?,
+                    count,
+                    data,
+                })
+            }
+            "snapshot" => Ok(Request::Snapshot { stream: stream()? }),
+            "sync" => Ok(Request::Sync),
+            "metrics" => Ok(Request::Metrics),
+            "list" => Ok(Request::ListStreams),
+            other => Err(format!("unknown op '{other}'")),
+        }
+    }
+}
+
+/// Write one frame.
+pub fn write_frame(w: &mut impl Write, payload: &Json) -> std::io::Result<()> {
+    let bytes = payload.encode().into_bytes();
+    let len = (bytes.len() as u32).to_be_bytes();
+    w.write_all(&len)?;
+    w.write_all(&bytes)?;
+    w.flush()
+}
+
+/// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Json>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds MAX_FRAME"),
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    let text = String::from_utf8(buf)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+    let json = Json::parse(&text)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+    Ok(Some(json))
+}
+
+/// Build a success response.
+pub fn ok_response(mut fields: Vec<(&str, Json)>) -> Json {
+    fields.insert(0, ("ok", Json::Bool(true)));
+    Json::obj(fields)
+}
+
+/// Build an error response.
+pub fn err_response(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_roundtrip_json() {
+        let reqs = vec![
+            Request::Ping,
+            Request::Register {
+                stream: "w".into(),
+                dim: 8,
+                spec: "gea(c=0.5)".into(),
+            },
+            Request::Push {
+                stream: "w".into(),
+                data: vec![1.0, -2.5, 3.25],
+            },
+            Request::PushMany {
+                stream: "w".into(),
+                count: 2,
+                data: vec![1.0, 2.0, 3.0, 4.0],
+            },
+            Request::Snapshot { stream: "w".into() },
+            Request::Sync,
+            Request::Metrics,
+            Request::ListStreams,
+        ];
+        for r in reqs {
+            let j = r.to_json();
+            let back = Request::from_json(&j).unwrap();
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn frames_roundtrip_over_buffer() {
+        let mut buf: Vec<u8> = Vec::new();
+        let a = Request::Push {
+            stream: "s".into(),
+            data: vec![0.5; 10],
+        }
+        .to_json();
+        let b = ok_response(vec![("t", Json::Num(3.0))]);
+        write_frame(&mut buf, &a).unwrap();
+        write_frame(&mut buf, &b).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        let ra = read_frame(&mut cursor).unwrap().unwrap();
+        let rb = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(ra, a);
+        assert_eq!(rb, b);
+        assert!(read_frame(&mut cursor).unwrap().is_none()); // clean EOF
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_be_bytes());
+        buf.extend_from_slice(b"xxxx");
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn truncated_frame_is_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Json::Num(1.0)).unwrap();
+        buf.truncate(buf.len() - 1);
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        for bad in [
+            Json::obj(vec![]),
+            Json::obj(vec![("op", Json::Str("zzz".into()))]),
+            Json::obj(vec![("op", Json::Str("push".into()))]),
+        ] {
+            assert!(Request::from_json(&bad).is_err());
+        }
+    }
+
+    #[test]
+    fn push_many_rejects_ragged_batches() {
+        let bad = Json::obj(vec![
+            ("op", Json::Str("push_many".into())),
+            ("stream", Json::Str("w".into())),
+            ("count", Json::Num(3.0)),
+            ("data", Json::nums(&[1.0, 2.0, 3.0, 4.0])),
+        ]);
+        assert!(Request::from_json(&bad).is_err());
+        let zero = Json::obj(vec![
+            ("op", Json::Str("push_many".into())),
+            ("stream", Json::Str("w".into())),
+            ("count", Json::Num(0.0)),
+            ("data", Json::nums(&[])),
+        ]);
+        assert!(Request::from_json(&zero).is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! TCP service exposing the coordinator over the wire protocol.
+
+use super::core::{Coordinator, PushOutcome};
+use super::protocol::{err_response, ok_response, read_frame, write_frame, Request};
+use crate::averagers::AveragerSpec;
+use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A running TCP server; drop (or call [`Server::shutdown`]) to stop.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    /// Clones of every live connection (keyed by id) so shutdown can
+    /// unblock their handler threads (which otherwise sit in a blocking
+    /// read). Handlers deregister on exit, so this holds only live fds.
+    conns: ConnRegistry,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+type ConnRegistry = Arc<std::sync::Mutex<std::collections::HashMap<u64, TcpStream>>>;
+
+impl Server {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve
+    /// `coordinator` with `workers` connection-handler threads.
+    pub fn start(
+        addr: &str,
+        coordinator: Arc<Coordinator>,
+        workers: usize,
+    ) -> Result<Server, String> {
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let local = listener.local_addr().map_err(|e| e.to_string())?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let conns: ConnRegistry =
+            Arc::new(std::sync::Mutex::new(std::collections::HashMap::new()));
+        let conns2 = conns.clone();
+        let pool = ThreadPool::new(workers.max(1));
+        let accept_thread = std::thread::Builder::new()
+            .name("ata-accept".to_string())
+            .spawn(move || {
+                let mut next_id: u64 = 0;
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            // Request/response framing: without NODELAY the
+                            // 4-byte length prefix waits on delayed ACKs
+                            // (~40ms per roundtrip — measured in
+                            // coordinator_throughput before this fix).
+                            let _ = stream.set_nodelay(true);
+                            let id = next_id;
+                            next_id += 1;
+                            if let Ok(clone) = stream.try_clone() {
+                                conns2.lock().expect("conn registry").insert(id, clone);
+                            }
+                            let c = coordinator.clone();
+                            let reg = conns2.clone();
+                            pool.execute(move || {
+                                handle_connection(stream, &c);
+                                reg.lock().expect("conn registry").remove(&id);
+                            });
+                        }
+                        Err(e) => {
+                            crate::log_warn!("server", "accept error: {e}");
+                        }
+                    }
+                }
+                // pool drops here, joining handler threads (connections
+                // were force-closed by shutdown, so handlers exit).
+            })
+            .map_err(|e| e.to_string())?;
+        crate::log_info!("server", "listening on {local}");
+        Ok(Server {
+            addr: local,
+            stop,
+            conns,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, force-close live connections, join all threads.
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock handlers stuck in read_frame on live connections.
+        {
+            let guard = self.conns.lock().expect("conn registry");
+            for s in guard.values() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        // Wake the blocking accept with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        crate::log_info!("server", "shut down");
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, coordinator: &Coordinator) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".to_string());
+    crate::log_debug!("server", "connection from {peer}");
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // clean EOF
+            Err(e) => {
+                crate::log_debug!("server", "{peer}: read error: {e}");
+                break;
+            }
+        };
+        let response = match Request::from_json(&frame) {
+            Ok(req) => dispatch(req, coordinator),
+            Err(e) => err_response(&e),
+        };
+        if let Err(e) = write_frame(&mut stream, &response) {
+            crate::log_debug!("server", "{peer}: write error: {e}");
+            break;
+        }
+    }
+}
+
+fn dispatch(req: Request, c: &Coordinator) -> Json {
+    match req {
+        Request::Ping => ok_response(vec![("pong", Json::Bool(true))]),
+        Request::Register { stream, dim, spec } => match AveragerSpec::parse(&spec)
+            .and_then(|s| c.register(&stream, dim, s))
+        {
+            Ok(()) => ok_response(vec![]),
+            Err(e) => err_response(&e),
+        },
+        Request::Push { stream, data } => match c.push(&stream, data) {
+            Ok(PushOutcome::Accepted) => {
+                ok_response(vec![("accepted", Json::Bool(true))])
+            }
+            Ok(PushOutcome::Dropped) => ok_response(vec![
+                ("accepted", Json::Bool(false)),
+                ("dropped", Json::Bool(true)),
+            ]),
+            Err(e) => err_response(&e),
+        },
+        Request::PushMany {
+            stream,
+            count,
+            data,
+        } => {
+            let dim = data.len() / count;
+            let mut accepted = 0u64;
+            let mut dropped = 0u64;
+            for chunk in data.chunks_exact(dim) {
+                match c.push(&stream, chunk.to_vec()) {
+                    Ok(PushOutcome::Accepted) => accepted += 1,
+                    Ok(PushOutcome::Dropped) => dropped += 1,
+                    Err(e) => return err_response(&e),
+                }
+            }
+            ok_response(vec![
+                ("accepted", Json::Num(accepted as f64)),
+                ("dropped", Json::Num(dropped as f64)),
+            ])
+        }
+        Request::Snapshot { stream } => match c.snapshot(&stream) {
+            Ok(snap) => {
+                let value = match snap.value {
+                    Some(v) => Json::nums(&v),
+                    None => Json::Null,
+                };
+                ok_response(vec![
+                    ("stream", Json::Str(snap.stream)),
+                    ("t", Json::Num(snap.t as f64)),
+                    ("window_len", Json::Num(snap.window_len)),
+                    ("dropped", Json::Num(snap.dropped as f64)),
+                    ("value", value),
+                ])
+            }
+            Err(e) => err_response(&e),
+        },
+        Request::Sync => match c.sync() {
+            Ok(()) => ok_response(vec![]),
+            Err(e) => err_response(&e),
+        },
+        Request::Metrics => {
+            let mut fields = vec![("metrics", c.metrics().export())];
+            let stats: Vec<Json> = c
+                .stream_stats()
+                .into_iter()
+                .map(|(name, applied, dropped, mem)| {
+                    Json::obj(vec![
+                        ("stream", Json::Str(name)),
+                        ("applied", Json::Num(applied as f64)),
+                        ("dropped", Json::Num(dropped as f64)),
+                        ("memory_floats", Json::Num(mem as f64)),
+                    ])
+                })
+                .collect();
+            fields.push(("streams", Json::Arr(stats)));
+            ok_response(fields)
+        }
+        Request::ListStreams => ok_response(vec![(
+            "streams",
+            Json::Arr(
+                c.stream_names()
+                    .into_iter()
+                    .map(Json::Str)
+                    .collect(),
+            ),
+        )]),
+    }
+}

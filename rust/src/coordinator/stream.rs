@@ -1,0 +1,106 @@
+//! Per-stream state: one estimator plus bookkeeping.
+
+use crate::averagers::{Averager, AveragerSpec};
+
+/// A named parameter stream with its tail-average estimator.
+pub struct StreamState {
+    pub name: String,
+    pub dim: usize,
+    pub spec: AveragerSpec,
+    averager: Box<dyn Averager>,
+    /// Samples applied (== averager.t(), kept separately for accounting).
+    pub applied: u64,
+    /// Samples dropped by backpressure policy.
+    pub dropped: u64,
+    /// Samples rejected for shape errors.
+    pub malformed: u64,
+}
+
+impl StreamState {
+    pub fn new(name: &str, dim: usize, spec: AveragerSpec) -> Result<StreamState, String> {
+        Ok(StreamState {
+            name: name.to_string(),
+            dim,
+            averager: spec.build(dim)?,
+            spec,
+            applied: 0,
+            dropped: 0,
+            malformed: 0,
+        })
+    }
+
+    /// Apply one sample; rejects wrong dimensionality.
+    pub fn apply(&mut self, data: &[f64]) -> Result<(), String> {
+        if data.len() != self.dim {
+            self.malformed += 1;
+            return Err(format!(
+                "stream '{}': sample has {} dims, stream declared {}",
+                self.name,
+                data.len(),
+                self.dim
+            ));
+        }
+        self.averager.observe(data);
+        self.applied += 1;
+        Ok(())
+    }
+
+    /// Current estimate (None before any sample).
+    pub fn value(&self) -> Option<Vec<f64>> {
+        self.averager.value()
+    }
+
+    pub fn t(&self) -> u64 {
+        self.averager.t()
+    }
+
+    pub fn window_len(&self) -> f64 {
+        self.averager.window_len()
+    }
+
+    pub fn memory_floats(&self) -> usize {
+        self.averager.memory_floats()
+    }
+
+    pub fn reset(&mut self) {
+        self.averager.reset();
+        self.applied = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> AveragerSpec {
+        AveragerSpec::Gea { c: 0.5 }
+    }
+
+    #[test]
+    fn apply_and_value() {
+        let mut s = StreamState::new("w", 2, spec()).unwrap();
+        assert!(s.value().is_none());
+        s.apply(&[1.0, 2.0]).unwrap();
+        assert_eq!(s.value().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(s.applied, 1);
+        assert_eq!(s.t(), 1);
+    }
+
+    #[test]
+    fn wrong_dim_counted_not_applied() {
+        let mut s = StreamState::new("w", 2, spec()).unwrap();
+        assert!(s.apply(&[1.0]).is_err());
+        assert_eq!(s.malformed, 1);
+        assert_eq!(s.applied, 0);
+        assert!(s.value().is_none());
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut s = StreamState::new("w", 1, spec()).unwrap();
+        s.apply(&[5.0]).unwrap();
+        s.reset();
+        assert_eq!(s.applied, 0);
+        assert!(s.value().is_none());
+    }
+}

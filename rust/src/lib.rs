@@ -1,0 +1,68 @@
+//! # ATA — Anytime Tail Averaging
+//!
+//! A streaming iterate-averaging framework reproducing and productionizing
+//! *Anytime Tail Averaging* (Nicolas Le Roux, 2019).
+//!
+//! Tail averaging keeps the mean of the last `k_t` samples of a stream
+//! (`k_t = k` fixed, or `k_t = ct` growing). Exact computation costs
+//! `O(k_t)` memory, which is prohibitive when each sample is the parameter
+//! vector of a large model. This crate implements the paper's two
+//! constant-memory *anytime* estimators —
+//!
+//! * the **growing exponential average** ([`averagers::GrowingExp`]), an EMA
+//!   whose decay is re-solved every step so the estimator variance tracks
+//!   `1/(ct)` exactly, and
+//! * the **anytime window average** ([`averagers::Awa2`],
+//!   [`averagers::AwaMulti`]), a bank of `z+1` accumulators whose optimal
+//!   recombination achieves the exact-window variance at every timestep —
+//!
+//! together with the exact and classical baselines the paper compares
+//! against, an analysis toolkit that reconstructs the per-sample weights of
+//! any estimator, a multi-stream coordinator service, and the paper's full
+//! stochastic-linear-regression evaluation harness.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: averager state management,
+//!   stream routing, backpressure, snapshots, metrics, CLI, experiment
+//!   harness. Everything on the request path is Rust.
+//! * **L2 (JAX, build time)** — the evaluation workload (batched SGD on the
+//!   paper's linear-regression problem) as jitted JAX functions, lowered
+//!   once to XLA HLO text by `python/compile/aot.py`.
+//! * **L1 (Pallas, build time)** — the dense kernels (batched gradient,
+//!   accumulator combines) called from L2, validated against a pure-jnp
+//!   oracle.
+//!
+//! [`runtime`] loads the AOT artifacts via the PJRT C API and executes them
+//! from Rust; Python never runs at serving/experiment time.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use ata::averagers::{Averager, AwaMulti, WindowKind};
+//!
+//! // Anytime average over a growing window k_t = 0.5·t, 3 accumulators.
+//! let mut avg = AwaMulti::new(1, WindowKind::Growing { c: 0.5 }, 2);
+//! for t in 0..1000u64 {
+//!     let x = (t as f64).sin();
+//!     avg.observe(&[x]);
+//! }
+//! let mut out = [0.0];
+//! avg.value_into(&mut out);
+//! assert!(out[0].abs() < 1.0);
+//! ```
+pub mod averagers;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod linreg;
+pub mod metrics;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod testkit;
+pub mod util;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

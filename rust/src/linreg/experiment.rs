@@ -1,0 +1,368 @@
+//! Multi-run experiment harness — regenerates the paper's Figures 2–3.
+//!
+//! For each of `runs` independent seeds: run constant-stepsize SGD, feed
+//! every iterate to every estimator under study, and record each
+//! estimator's excess error on the evaluation schedule. Curves are
+//! averaged across runs (the paper uses 100 runs) with standard errors.
+
+use super::problem::LinRegProblem;
+use super::schedule::EvalSchedule;
+use super::sgd::{Sgd, SgdConfig};
+use crate::averagers::AveragerSpec;
+use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Full experiment specification.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub problem: LinRegProblem,
+    pub sgd: SgdConfig,
+    /// Number of SGD steps (batches) per run — paper: 1000.
+    pub total_steps: u64,
+    /// Independent repetitions — paper: 100.
+    pub runs: u64,
+    /// Root seed; run `r` uses substream `r`.
+    pub seed: u64,
+    /// Estimators to evaluate.
+    pub averagers: Vec<AveragerSpec>,
+    pub schedule: EvalSchedule,
+    /// Also record the unaveraged iterate's excess error as a curve.
+    pub include_iterate: bool,
+}
+
+impl ExperimentConfig {
+    /// Paper Figure 2 (one panel): constant window `k`, estimators
+    /// `expk` / `awa` (2 accumulators) / `truek`, §4 workload.
+    pub fn figure2(k: u64, runs: u64) -> ExperimentConfig {
+        use crate::averagers::WindowKind::Fixed;
+        ExperimentConfig {
+            problem: LinRegProblem::paper_default(),
+            sgd: SgdConfig::paper_default(),
+            total_steps: 1000,
+            runs,
+            seed: 20190221, // paper date as default root seed
+            averagers: vec![
+                AveragerSpec::ExpK { k },
+                AveragerSpec::Awa {
+                    window: Fixed { k },
+                    accumulators: 2,
+                },
+                AveragerSpec::True { window: Fixed { k } },
+            ],
+            schedule: EvalSchedule::EveryStep,
+            include_iterate: true,
+        }
+    }
+
+    /// Paper Figure 3 (one panel): growing window `k_t = ct`, estimators
+    /// `raw` / `exp` (GEA) / `awa` / `awa3` / `true`, §4 workload.
+    pub fn figure3(c: f64, runs: u64) -> ExperimentConfig {
+        use crate::averagers::WindowKind::Growing;
+        let total_steps = 1000;
+        ExperimentConfig {
+            problem: LinRegProblem::paper_default(),
+            sgd: SgdConfig::paper_default(),
+            total_steps,
+            runs,
+            seed: 20190221,
+            averagers: vec![
+                AveragerSpec::Raw {
+                    c,
+                    total_steps,
+                },
+                AveragerSpec::Gea { c },
+                AveragerSpec::Awa {
+                    window: Growing { c },
+                    accumulators: 2,
+                },
+                AveragerSpec::Awa {
+                    window: Growing { c },
+                    accumulators: 3,
+                },
+                AveragerSpec::True {
+                    window: Growing { c },
+                },
+            ],
+            schedule: EvalSchedule::EveryStep,
+            include_iterate: true,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.sgd.validate(&self.problem)?;
+        if self.total_steps == 0 || self.runs == 0 {
+            return Err("total_steps and runs must be >= 1".into());
+        }
+        if self.averagers.is_empty() && !self.include_iterate {
+            return Err("nothing to evaluate".into());
+        }
+        for spec in &self.averagers {
+            spec.build(self.problem.d)?; // surfaces spec errors early
+        }
+        Ok(())
+    }
+}
+
+/// One estimator's mean excess-error curve with standard errors.
+#[derive(Clone, Debug)]
+pub struct Curve {
+    pub label: String,
+    pub mean: Vec<f64>,
+    pub stderr: Vec<f64>,
+}
+
+impl Curve {
+    /// Final mean excess error.
+    pub fn final_value(&self) -> f64 {
+        *self.mean.last().expect("nonempty curve")
+    }
+
+    /// JSON form (for dumps and golden comparisons).
+    pub fn to_json(&self, steps: &[u64]) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            (
+                "steps",
+                Json::Arr(steps.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ),
+            ("mean", Json::nums(&self.mean)),
+            ("stderr", Json::nums(&self.stderr)),
+        ])
+    }
+}
+
+/// Aggregated experiment output.
+#[derive(Clone, Debug)]
+pub struct ExperimentResult {
+    /// Evaluation steps (shared x-axis).
+    pub steps: Vec<u64>,
+    pub curves: Vec<Curve>,
+    pub runs: u64,
+    pub wall: Duration,
+}
+
+impl ExperimentResult {
+    /// Look up a curve by label substring.
+    pub fn curve(&self, label_part: &str) -> Option<&Curve> {
+        self.curves.iter().find(|c| c.label.contains(label_part))
+    }
+
+    /// JSON dump of the whole result.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("runs", Json::Num(self.runs as f64)),
+            ("wall_seconds", Json::Num(self.wall.as_secs_f64())),
+            (
+                "curves",
+                Json::Arr(
+                    self.curves
+                        .iter()
+                        .map(|c| c.to_json(&self.steps))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Excess-error trajectories of every estimator for ONE run.
+/// `out[est][eval_idx]`; estimator order = `cfg.averagers` (+ iterate last
+/// when `include_iterate`).
+fn run_single(cfg: &ExperimentConfig, run_index: u64, eval_steps: &[u64]) -> Vec<Vec<f64>> {
+    let d = cfg.problem.d;
+    let mut sgd = Sgd::substream(cfg.problem.clone(), cfg.sgd, cfg.seed, run_index)
+        .expect("validated config");
+    let mut avgs: Vec<_> = cfg
+        .averagers
+        .iter()
+        .map(|s| s.build(d).expect("validated config"))
+        .collect();
+    let n_series = avgs.len() + usize::from(cfg.include_iterate);
+    let mut out = vec![Vec::with_capacity(eval_steps.len()); n_series];
+    let mut wbar = vec![0.0; d];
+    let mut eval_iter = eval_steps.iter().peekable();
+    for t in 1..=cfg.total_steps {
+        let w = sgd.step();
+        for a in &mut avgs {
+            a.observe(w);
+        }
+        if eval_iter.peek() == Some(&&t) {
+            eval_iter.next();
+            for (i, a) in avgs.iter().enumerate() {
+                let err = if a.value_into(&mut wbar) {
+                    cfg.problem.excess_error(&wbar)
+                } else {
+                    f64::NAN
+                };
+                out[i].push(err);
+            }
+            if cfg.include_iterate {
+                let err = cfg.problem.excess_error(sgd.w());
+                out[n_series - 1].push(err);
+            }
+        }
+    }
+    out
+}
+
+/// Run the experiment, parallelizing runs over `pool` when provided.
+pub fn run_experiment(
+    cfg: &ExperimentConfig,
+    pool: Option<&ThreadPool>,
+) -> Result<ExperimentResult, String> {
+    cfg.validate()?;
+    let t0 = Instant::now();
+    let eval_steps = cfg.schedule.steps(cfg.total_steps);
+    let runs = cfg.runs as usize;
+
+    let per_run: Vec<Vec<Vec<f64>>> = match pool {
+        Some(pool) => {
+            let cfg_arc = Arc::new(cfg.clone());
+            let steps_arc = Arc::new(eval_steps.clone());
+            pool.map_indexed(runs, move |r| {
+                run_single(&cfg_arc, r as u64, &steps_arc)
+            })
+        }
+        None => (0..runs)
+            .map(|r| run_single(cfg, r as u64, &eval_steps))
+            .collect(),
+    };
+
+    // Aggregate across runs: mean and stderr per estimator per eval step.
+    let n_series = per_run[0].len();
+    let n_eval = eval_steps.len();
+    let mut labels: Vec<String> = cfg.averagers.iter().map(|s| s.label()).collect();
+    if cfg.include_iterate {
+        labels.push("iterate".to_string());
+    }
+    let mut curves = Vec::with_capacity(n_series);
+    for s in 0..n_series {
+        let mut mean = vec![0.0; n_eval];
+        let mut m2 = vec![0.0; n_eval];
+        for run in &per_run {
+            for (e, &v) in run[s].iter().enumerate() {
+                mean[e] += v;
+                m2[e] += v * v;
+            }
+        }
+        let n = runs as f64;
+        for e in 0..n_eval {
+            mean[e] /= n;
+            let var = (m2[e] / n - mean[e] * mean[e]).max(0.0);
+            m2[e] = (var / n).sqrt(); // standard error of the mean
+        }
+        curves.push(Curve {
+            label: labels[s].clone(),
+            mean,
+            stderr: m2,
+        });
+    }
+    Ok(ExperimentResult {
+        steps: eval_steps,
+        curves,
+        runs: cfg.runs,
+        wall: t0.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_fig3(c: f64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::figure3(c, 8);
+        cfg.total_steps = 300;
+        cfg.schedule = EvalSchedule::LogSpaced { points: 30 };
+        cfg
+    }
+
+    #[test]
+    fn shapes_are_consistent() {
+        let cfg = small_fig3(0.5);
+        let res = run_experiment(&cfg, None).unwrap();
+        assert_eq!(res.curves.len(), 6); // 5 estimators + iterate
+        for c in &res.curves {
+            assert_eq!(c.mean.len(), res.steps.len());
+            assert_eq!(c.stderr.len(), res.steps.len());
+            assert!(c.mean.iter().all(|v| v.is_finite()), "{}", c.label);
+        }
+    }
+
+    #[test]
+    fn averaged_curves_beat_iterate_at_end() {
+        // Needs the paper's full 1000-step horizon: the slow
+        // eigendirections (λ = 1/50) only leave their transient late, and
+        // tail averaging wins once the iterate sits in the noise ball.
+        // c = 0.25 so the window excludes most of the transient.
+        let mut cfg = ExperimentConfig::figure3(0.25, 8);
+        cfg.schedule = EvalSchedule::LogSpaced { points: 30 };
+        let res = run_experiment(&cfg, None).unwrap();
+        let iterate = res.curve("iterate").unwrap().final_value();
+        let truec = res.curve("true").unwrap().final_value();
+        let awa3 = res.curve("awa3").unwrap().final_value();
+        assert!(truec < iterate, "true {truec} vs iterate {iterate}");
+        assert!(awa3 < iterate, "awa3 {awa3} vs iterate {iterate}");
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let cfg = small_fig3(0.25);
+        let pool = ThreadPool::new(4);
+        let serial = run_experiment(&cfg, None).unwrap();
+        let parallel = run_experiment(&cfg, Some(&pool)).unwrap();
+        for (a, b) in serial.curves.iter().zip(&parallel.curves) {
+            assert_eq!(a.label, b.label);
+            for (x, y) in a.mean.iter().zip(&b.mean) {
+                assert_eq!(x, y, "parallel must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_invocations() {
+        let cfg = small_fig3(0.5);
+        let a = run_experiment(&cfg, None).unwrap();
+        let b = run_experiment(&cfg, None).unwrap();
+        for (ca, cb) in a.curves.iter().zip(&b.curves) {
+            assert_eq!(ca.mean, cb.mean);
+        }
+    }
+
+    #[test]
+    fn figure2_preset_shapes() {
+        let mut cfg = ExperimentConfig::figure2(10, 4);
+        cfg.total_steps = 200;
+        cfg.schedule = EvalSchedule::Strided { stride: 10 };
+        let res = run_experiment(&cfg, None).unwrap();
+        assert_eq!(res.curves.len(), 4); // expk, awa2, truek, iterate
+        assert!(res.curve("expk").is_some());
+        assert!(res.curve("awa2").is_some());
+        assert!(res.curve("true").is_some());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = small_fig3(0.5);
+        let res = run_experiment(&cfg, None).unwrap();
+        let j = res.to_json();
+        let parsed = Json::parse(&j.encode()).unwrap();
+        assert_eq!(
+            parsed.get("runs").and_then(Json::as_u64),
+            Some(cfg.runs)
+        );
+        assert_eq!(
+            parsed.get("curves").unwrap().as_arr().unwrap().len(),
+            res.curves.len()
+        );
+    }
+
+    #[test]
+    fn validation_rejects_empty() {
+        let mut cfg = small_fig3(0.5);
+        cfg.averagers.clear();
+        cfg.include_iterate = false;
+        assert!(run_experiment(&cfg, None).is_err());
+    }
+}

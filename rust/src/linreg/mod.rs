@@ -1,0 +1,24 @@
+//! The paper's evaluation workload: stochastic linear regression (§4).
+//!
+//! Minimize `ℓ(w) = E_{x,y}(xᵀw − y)²` with `x ~ N(0, H)`,
+//! `H = diag(1/i)` (`50×50`), `y ~ N(xᵀw*, ε)`, `ε² = 0.01`, by
+//! constant-stepsize mini-batch SGD (batch 11), averaging the iterates
+//! with each estimator under study and plotting the *excess error*
+//! `ℓ(w̄) − ℓ(w*) = (w̄−w*)ᵀH(w̄−w*)` over 1000 batches, mean of 100 runs.
+//!
+//! * [`problem`] — the data-generating process and exact excess error.
+//! * [`sgd`] — native constant-stepsize SGD (the pure-Rust reference
+//!   path; the AOT/PJRT path in [`crate::runtime`] executes the same
+//!   update compiled from JAX and is cross-checked against this).
+//! * [`experiment`] — the multi-run harness reproducing Figures 2–3.
+//! * [`schedule`] — evaluation-step schedules for curve sampling.
+
+pub mod experiment;
+pub mod problem;
+pub mod schedule;
+pub mod sgd;
+
+pub use experiment::{run_experiment, Curve, ExperimentConfig, ExperimentResult};
+pub use problem::LinRegProblem;
+pub use schedule::EvalSchedule;
+pub use sgd::{Sgd, SgdConfig};

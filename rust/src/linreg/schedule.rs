@@ -1,0 +1,86 @@
+//! Evaluation-step schedules for curve sampling.
+
+/// Which steps to evaluate (and plot) the estimators at.
+///
+/// The paper plots full curves on a log–log scale; `LogSpaced` reproduces
+/// the visually equivalent sampling at a fraction of the evaluation cost,
+/// while `EveryStep` gives exact curves for tests and small runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EvalSchedule {
+    /// Evaluate at every step `1..=total`.
+    EveryStep,
+    /// Evaluate at `points` log-spaced steps between 1 and `total`
+    /// (deduplicated, always includes both endpoints).
+    LogSpaced { points: usize },
+    /// Evaluate every `stride` steps (always includes the final step).
+    Strided { stride: u64 },
+}
+
+impl EvalSchedule {
+    /// Materialize the (sorted, unique, 1-based) evaluation steps.
+    pub fn steps(&self, total: u64) -> Vec<u64> {
+        assert!(total >= 1);
+        match *self {
+            EvalSchedule::EveryStep => (1..=total).collect(),
+            EvalSchedule::LogSpaced { points } => {
+                let points = points.max(2);
+                let lo = 0.0f64;
+                let hi = (total as f64).ln();
+                let mut out: Vec<u64> = (0..points)
+                    .map(|i| {
+                        let f = lo + (hi - lo) * i as f64 / (points - 1) as f64;
+                        f.exp().round().clamp(1.0, total as f64) as u64
+                    })
+                    .collect();
+                out.sort_unstable();
+                out.dedup();
+                out
+            }
+            EvalSchedule::Strided { stride } => {
+                let stride = stride.max(1);
+                let mut out: Vec<u64> = (1..=total).filter(|t| t % stride == 0).collect();
+                if out.last() != Some(&total) {
+                    out.push(total);
+                }
+                if out.first() != Some(&1) {
+                    out.insert(0, 1);
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_step_is_complete() {
+        assert_eq!(EvalSchedule::EveryStep.steps(5), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn log_spaced_includes_endpoints_and_is_sorted() {
+        let s = EvalSchedule::LogSpaced { points: 20 }.steps(1000);
+        assert_eq!(*s.first().unwrap(), 1);
+        assert_eq!(*s.last().unwrap(), 1000);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+        assert!(s.len() <= 20);
+        assert!(s.len() >= 10);
+    }
+
+    #[test]
+    fn log_spaced_handles_tiny_totals() {
+        assert_eq!(EvalSchedule::LogSpaced { points: 50 }.steps(1), vec![1]);
+        assert_eq!(EvalSchedule::LogSpaced { points: 50 }.steps(2), vec![1, 2]);
+    }
+
+    #[test]
+    fn strided_includes_first_and_last() {
+        let s = EvalSchedule::Strided { stride: 3 }.steps(10);
+        assert_eq!(s, vec![1, 3, 6, 9, 10]);
+        let s = EvalSchedule::Strided { stride: 5 }.steps(10);
+        assert_eq!(s, vec![1, 5, 10]);
+    }
+}

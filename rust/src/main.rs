@@ -1,0 +1,288 @@
+//! `ata` — launcher for the Anytime Tail Averaging framework.
+//!
+//! ```text
+//! ata experiment [--config f.toml] [--figure fig3] [--c 0.5] [--k 100]
+//!                [--runs 100] [--csv out.csv] [--json out.json]
+//! ata serve      [--config svc.toml] [--addr 127.0.0.1:7311]
+//! ata client     <ping|list|snapshot|metrics> [--addr ...] [--stream s]
+//! ata artifacts  [--dir artifacts]      # validate AOT artifacts load+run
+//! ata weights    --spec "gea(c=0.5)" --t 200   # weight-profile analysis
+//! ```
+
+use ata::averagers::{staleness_report, AveragerSpec};
+use ata::config::{ExperimentFile, ServiceConfig};
+use ata::coordinator::{Client, Coordinator, Server};
+use ata::linreg::{run_experiment, EvalSchedule, ExperimentConfig};
+use ata::report;
+use ata::runtime::{artifacts_available, Runtime, DEFAULT_ARTIFACTS_DIR};
+use ata::util::cli::{CliError, CommandSpec};
+use ata::util::pool::ThreadPool;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(CliRunError::Help(text)) => {
+            println!("{text}");
+            0
+        }
+        Err(CliRunError::Fail(msg)) => {
+            eprintln!("error: {msg}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+enum CliRunError {
+    Help(String),
+    Fail(String),
+}
+
+impl From<String> for CliRunError {
+    fn from(s: String) -> Self {
+        CliRunError::Fail(s)
+    }
+}
+
+fn top_help() -> String {
+    format!(
+        "ata {} — anytime tail averaging framework\n\n\
+         Commands:\n\
+         \x20 experiment   run the paper's §4 experiments (figures 2/3 or a config)\n\
+         \x20 serve        start the averaging coordinator TCP service\n\
+         \x20 client       talk to a running service\n\
+         \x20 artifacts    validate the AOT artifacts (load + execute)\n\
+         \x20 weights      weight/staleness analysis of an averager spec\n\n\
+         Run `ata <command> --help` for details.",
+        ata::VERSION
+    )
+}
+
+fn run(args: &[String]) -> Result<(), CliRunError> {
+    let Some(cmd) = args.first() else {
+        return Err(CliRunError::Help(top_help()));
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "experiment" => cmd_experiment(rest),
+        "serve" => cmd_serve(rest),
+        "client" => cmd_client(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "weights" => cmd_weights(rest),
+        "--help" | "-h" | "help" => Err(CliRunError::Help(top_help())),
+        other => Err(CliRunError::Fail(format!(
+            "unknown command '{other}'; try --help"
+        ))),
+    }
+}
+
+fn parse_with(spec: &CommandSpec, args: &[String]) -> Result<ata::util::cli::Parsed, CliRunError> {
+    spec.parse(args).map_err(|e| match e {
+        CliError::HelpRequested => CliRunError::Help(spec.help_text("ata")),
+        other => CliRunError::Fail(other.to_string()),
+    })
+}
+
+fn cmd_experiment(args: &[String]) -> Result<(), CliRunError> {
+    let spec = CommandSpec::new("experiment", "run the paper's linear-regression experiments")
+        .opt("config", "", "TOML experiment config (overrides presets)")
+        .opt("figure", "fig3", "preset: fig2 | fig3")
+        .opt("k", "100", "fig2 window size")
+        .opt("c", "0.5", "fig3 window fraction")
+        .opt("runs", "100", "independent runs")
+        .opt("steps", "1000", "SGD steps per run")
+        .opt("eval-points", "0", "log-spaced eval points (0 = every step)")
+        .opt("csv", "", "write full curves to CSV file")
+        .opt("json", "", "write full result to JSON file")
+        .opt("rows", "25", "table rows to print")
+        .flag("no-iterate", "omit the unaveraged iterate curve");
+    let p = parse_with(&spec, args)?;
+
+    let mut cfg: ExperimentConfig = if !p.str("config").is_empty() {
+        ExperimentFile::load(&p.str("config"))?.config
+    } else {
+        let runs = p.u64("runs").map_err(|e| e.to_string())?;
+        match p.str("figure").as_str() {
+            "fig2" => ExperimentConfig::figure2(p.u64("k").map_err(|e| e.to_string())?, runs),
+            "fig3" => ExperimentConfig::figure3(p.f64("c").map_err(|e| e.to_string())?, runs),
+            other => return Err(format!("unknown figure '{other}' (fig2|fig3)").into()),
+        }
+    };
+    if p.str("config").is_empty() {
+        cfg.total_steps = p.u64("steps").map_err(|e| e.to_string())?;
+        let pts = p.u64("eval-points").map_err(|e| e.to_string())?;
+        if pts > 0 {
+            cfg.schedule = EvalSchedule::LogSpaced {
+                points: pts as usize,
+            };
+        }
+        if p.flag("no-iterate") {
+            cfg.include_iterate = false;
+        }
+    }
+
+    let pool = ThreadPool::with_default_size();
+    eprintln!(
+        "running {} runs x {} steps on {} workers ...",
+        cfg.runs,
+        cfg.total_steps,
+        pool.size()
+    );
+    let res = run_experiment(&cfg, Some(&pool))?;
+    println!(
+        "{}",
+        report::render_curves(&res, p.usize("rows").map_err(|e| e.to_string())?)
+    );
+    println!("{}", report::render_summary(&res));
+    eprintln!("wall time: {:?}", res.wall);
+
+    let csv = p.str("csv");
+    if !csv.is_empty() {
+        std::fs::write(&csv, report::to_csv(&res)).map_err(|e| format!("write {csv}: {e}"))?;
+        eprintln!("wrote {csv}");
+    }
+    let json = p.str("json");
+    if !json.is_empty() {
+        std::fs::write(&json, res.to_json().encode_pretty())
+            .map_err(|e| format!("write {json}: {e}"))?;
+        eprintln!("wrote {json}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<(), CliRunError> {
+    let spec = CommandSpec::new("serve", "start the averaging coordinator service")
+        .opt("config", "", "TOML service config")
+        .opt("addr", "127.0.0.1:7311", "listen address")
+        .opt("shards", "4", "ingest worker shards")
+        .opt("workers", "8", "connection handler threads");
+    let p = parse_with(&spec, args)?;
+
+    let cfg = if !p.str("config").is_empty() {
+        ServiceConfig::load(&p.str("config"))?
+    } else {
+        ServiceConfig {
+            addr: p.str("addr"),
+            shards: p.usize("shards").map_err(|e| e.to_string())?,
+            ..Default::default()
+        }
+    };
+    let coordinator = Arc::new(Coordinator::from_config(&cfg)?);
+    let _server = Server::start(
+        &cfg.addr,
+        coordinator,
+        p.usize("workers").map_err(|e| e.to_string())?,
+    )?;
+    eprintln!("serving on {} — Ctrl-C to stop", cfg.addr);
+    // Block forever; the process is killed externally.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(args: &[String]) -> Result<(), CliRunError> {
+    let spec = CommandSpec::new("client", "talk to a running coordinator service")
+        .positional("action", "ping | list | snapshot | metrics")
+        .opt("addr", "127.0.0.1:7311", "server address")
+        .opt("stream", "", "stream name (snapshot)");
+    let p = parse_with(&spec, args)?;
+    let mut client = Client::connect(&p.str("addr"))?;
+    match p.positional(0).unwrap_or("") {
+        "ping" => {
+            client.ping()?;
+            println!("pong");
+        }
+        "list" => {
+            for s in client.list_streams()? {
+                println!("{s}");
+            }
+        }
+        "snapshot" => {
+            let stream = p.str("stream");
+            if stream.is_empty() {
+                return Err("snapshot requires --stream".to_string().into());
+            }
+            let snap = client.snapshot(&stream)?;
+            println!(
+                "stream={} t={} k_t={:.1} dropped={}",
+                snap.stream, snap.t, snap.window_len, snap.dropped
+            );
+            match snap.value {
+                Some(v) if v.len() <= 16 => println!("value={v:?}"),
+                Some(v) => println!("value=[{} floats]", v.len()),
+                None => println!("value=<none>"),
+            }
+        }
+        "metrics" => {
+            println!("{}", client.metrics()?.encode_pretty());
+        }
+        other => return Err(format!("unknown action '{other}'").into()),
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &[String]) -> Result<(), CliRunError> {
+    let spec = CommandSpec::new("artifacts", "validate the AOT artifacts: load, compile, run")
+        .opt("dir", DEFAULT_ARTIFACTS_DIR, "artifacts directory");
+    let p = parse_with(&spec, args)?;
+    let dir = p.str("dir");
+    if !artifacts_available(&dir) {
+        return Err(format!("no manifest in '{dir}' — run `make artifacts` first").into());
+    }
+    let rt = Runtime::from_dir(&dir)?;
+    let names: Vec<String> = rt.manifest().entries.keys().cloned().collect();
+    for name in names {
+        let entry = rt.load(&name)?;
+        // Execute with zero inputs of the declared shapes as a smoke run.
+        let zeros: Vec<Vec<f32>> = entry
+            .spec()
+            .inputs
+            .iter()
+            .map(|t| vec![0.0f32; t.elements()])
+            .collect();
+        let refs: Vec<&[f32]> = zeros.iter().map(Vec::as_slice).collect();
+        let out = entry.call(&refs)?;
+        println!(
+            "{name}: OK ({} inputs, {} outputs, first output {} floats)",
+            entry.spec().inputs.len(),
+            out.len(),
+            out[0].len()
+        );
+    }
+    println!("all artifacts load and execute");
+    Ok(())
+}
+
+fn cmd_weights(args: &[String]) -> Result<(), CliRunError> {
+    let spec = CommandSpec::new(
+        "weights",
+        "reconstruct an averager's weight profile and staleness report",
+    )
+    .req("spec", "averager spec, e.g. 'awa3(c=0.5)'")
+    .opt("t", "200", "stream length");
+    let p = parse_with(&spec, args)?;
+    let aspec = AveragerSpec::parse(&p.str("spec"))?;
+    let t = p.u64("t").map_err(|e| e.to_string())?;
+    let k_t = match &aspec {
+        AveragerSpec::ExpK { k } => *k as f64,
+        AveragerSpec::Exp { gamma } => (1.0 + gamma) / (1.0 - gamma),
+        AveragerSpec::Gea { c } | AveragerSpec::Raw { c, .. } => c * t as f64,
+        AveragerSpec::Awa { window, .. }
+        | AveragerSpec::True { window }
+        | AveragerSpec::Restart { window }
+        | AveragerSpec::Eh { window, .. } => window.k_at(t),
+    };
+    let r = staleness_report(&aspec, t, k_t)?;
+    println!("spec             : {}", aspec.label());
+    println!("stream length t  : {t}");
+    println!("nominal window   : {k_t:.2}");
+    println!("weight sum       : {:.9}", r.weight_sum);
+    println!("variance Σα²     : {:.6e}", r.variance);
+    println!("effective samples: {:.2}", r.effective_samples);
+    println!("mean age         : {:.2}", r.mean_age);
+    println!("max age          : {}", r.max_age);
+    println!("stale mass (>k_t): {:.4}", r.stale_mass);
+    Ok(())
+}

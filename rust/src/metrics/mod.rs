@@ -1,0 +1,286 @@
+//! Lightweight metrics: counters, gauges, log-bucketed histograms and a
+//! named registry with JSON export (scraped by the coordinator service's
+//! `metrics` command and printed by the benches).
+//!
+//! All instruments are lock-free (`AtomicU64`) so they can sit on the
+//! coordinator's hot path; floats are stored as bit patterns.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotone event counter.
+#[derive(Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge holding an `f64`.
+#[derive(Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Histogram with logarithmic buckets covering `[1ns, ~18s]` when used
+/// for nanosecond latencies (factor-2 buckets, 64 of them) — O(1) record,
+/// approximate quantiles.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record a nonnegative value (values < 1 land in bucket 0).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        let idx = (64 - v.max(1).leading_zeros() as usize).saturating_sub(1);
+        self.buckets[idx.min(63)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return f64::NAN;
+        }
+        self.sum.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Approximate quantile `q ∈ [0,1]`: returns the geometric midpoint of
+    /// the bucket containing the q-th sample.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = ((total as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                let lo = 1u64 << i;
+                let hi = lo << 1;
+                return ((lo as f64) * (hi as f64)).sqrt();
+            }
+        }
+        f64::NAN
+    }
+}
+
+/// Named instruments, shareable across threads.
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<RegistryInner>,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create a counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.inner.counters.lock().expect("metrics lock");
+        m.entry(name.to_string())
+            .or_insert_with(|| Arc::new(Counter::new()))
+            .clone()
+    }
+
+    /// Get or create a gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.inner.gauges.lock().expect("metrics lock");
+        m.entry(name.to_string())
+            .or_insert_with(|| Arc::new(Gauge::new()))
+            .clone()
+    }
+
+    /// Get or create a histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.inner.histograms.lock().expect("metrics lock");
+        m.entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    /// Snapshot all instruments as JSON.
+    pub fn export(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        {
+            let m = self.inner.counters.lock().expect("metrics lock");
+            for (k, v) in m.iter() {
+                obj.insert(format!("counter.{k}"), Json::Num(v.get() as f64));
+            }
+        }
+        {
+            let m = self.inner.gauges.lock().expect("metrics lock");
+            for (k, v) in m.iter() {
+                obj.insert(format!("gauge.{k}"), Json::Num(v.get()));
+            }
+        }
+        {
+            let m = self.inner.histograms.lock().expect("metrics lock");
+            for (k, v) in m.iter() {
+                obj.insert(
+                    format!("hist.{k}"),
+                    Json::obj(vec![
+                        ("count", Json::Num(v.count() as f64)),
+                        ("mean", Json::Num(v.mean())),
+                        ("p50", Json::Num(v.quantile(0.5))),
+                        ("p99", Json::Num(v.quantile(0.99))),
+                    ]),
+                );
+            }
+        }
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn counter_concurrent_increments() {
+        let reg = Registry::new();
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let reg = reg.clone();
+            handles.push(thread::spawn(move || {
+                let c = reg.counter("events");
+                for _ in 0..1000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(reg.counter("events").get(), 8000);
+    }
+
+    #[test]
+    fn gauge_set_get() {
+        let g = Gauge::new();
+        g.set(3.25);
+        assert_eq!(g.get(), 3.25);
+        g.set(-1.5);
+        assert_eq!(g.get(), -1.5);
+    }
+
+    #[test]
+    fn histogram_quantiles_bucket_accurate() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 40, 80, 1000, 2000, 100_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 7);
+        let p50 = h.quantile(0.5);
+        // 4th of 7 sorted values is 80 → bucket [64,128), geo-mid ≈ 90.5
+        assert!(p50 > 60.0 && p50 < 130.0, "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!(p99 > 65_000.0 && p99 < 190_000.0, "p99={p99}");
+        assert!((h.mean() - 14735.7).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_empty_is_nan() {
+        let h = Histogram::new();
+        assert!(h.quantile(0.5).is_nan());
+        assert!(h.mean().is_nan());
+    }
+
+    #[test]
+    fn histogram_extremes() {
+        let h = Histogram::new();
+        h.record(0); // clamps into bucket 0
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.0) >= 1.0);
+    }
+
+    #[test]
+    fn registry_same_instrument_shared() {
+        let reg = Registry::new();
+        reg.counter("x").add(5);
+        reg.counter("x").add(7);
+        assert_eq!(reg.counter("x").get(), 12);
+    }
+
+    #[test]
+    fn export_contains_everything() {
+        let reg = Registry::new();
+        reg.counter("pushes").add(3);
+        reg.gauge("depth").set(1.5);
+        reg.histogram("lat").record(100);
+        let j = reg.export();
+        assert_eq!(j.get("counter.pushes").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(j.get("gauge.depth").and_then(Json::as_f64), Some(1.5));
+        assert!(j.get("hist.lat").is_some());
+        // Export must be valid JSON text.
+        assert!(Json::parse(&j.encode()).is_ok());
+    }
+}

@@ -1,0 +1,263 @@
+//! Rendering experiment results: the paper's figures as terminal tables,
+//! CSV/JSON dumps, and shape summaries (orderings, ratios, slopes).
+//!
+//! The acceptance criteria for the reproduction are *shape* claims ("awa3
+//! matches true at c=0.5", "expk degrades at k=100"); [`ordering`] and
+//! [`ratio_to`] turn curves into those comparable facts, and
+//! [`render_curves`] prints the full log–log series the way the paper
+//! plots them.
+
+use crate::linreg::ExperimentResult;
+use crate::util::fmt::{pad_left, sig4};
+
+/// Render curves as an aligned table: one row per evaluation step, one
+/// column per estimator. `max_rows` subsamples long schedules for
+/// readability (log-spaced subsample, endpoints kept).
+pub fn render_curves(res: &ExperimentResult, max_rows: usize) -> String {
+    let mut out = String::new();
+    let labels: Vec<&str> = res.curves.iter().map(|c| c.label.as_str()).collect();
+    let width = labels.iter().map(|l| l.len()).max().unwrap_or(8).max(10);
+    out.push_str(&pad_left("step", 6));
+    for l in &labels {
+        out.push_str("  ");
+        out.push_str(&pad_left(l, width));
+    }
+    out.push('\n');
+    let rows = pick_rows(res.steps.len(), max_rows);
+    for &r in &rows {
+        out.push_str(&pad_left(&res.steps[r].to_string(), 6));
+        for c in &res.curves {
+            out.push_str("  ");
+            out.push_str(&pad_left(&sig4(c.mean[r]), width));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV dump (full resolution): `step,label1,label2,...`.
+pub fn to_csv(res: &ExperimentResult) -> String {
+    let mut out = String::from("step");
+    for c in &res.curves {
+        out.push(',');
+        out.push_str(&c.label);
+    }
+    out.push('\n');
+    for (i, &s) in res.steps.iter().enumerate() {
+        out.push_str(&s.to_string());
+        for c in &res.curves {
+            out.push(',');
+            out.push_str(&format!("{:e}", c.mean[i]));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Estimator labels sorted by final excess error (best first) —
+/// the "who wins" summary.
+pub fn ordering(res: &ExperimentResult) -> Vec<(String, f64)> {
+    let mut v: Vec<(String, f64)> = res
+        .curves
+        .iter()
+        .map(|c| (c.label.clone(), c.final_value()))
+        .collect();
+    v.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+    v
+}
+
+/// Final-value ratio of `label` to the reference curve `reference`
+/// (1.0 = identical accuracy; >1 = worse than reference).
+pub fn ratio_to(res: &ExperimentResult, label: &str, reference: &str) -> Option<f64> {
+    let a = res.curve(label)?.final_value();
+    let b = res.curve(reference)?.final_value();
+    if b > 0.0 {
+        Some(a / b)
+    } else {
+        None
+    }
+}
+
+/// Mean ratio of two curves over the tail fraction `tail` of evaluation
+/// points — more robust than the single final point.
+pub fn tail_ratio(res: &ExperimentResult, label: &str, reference: &str, tail: f64) -> Option<f64> {
+    let a = &res.curve(label)?.mean;
+    let b = &res.curve(reference)?.mean;
+    let start = ((a.len() as f64) * (1.0 - tail)).floor() as usize;
+    let start = start.min(a.len() - 1);
+    let mut num = 0.0;
+    let mut cnt = 0.0;
+    for i in start..a.len() {
+        if b[i] > 0.0 {
+            num += a[i] / b[i];
+            cnt += 1.0;
+        }
+    }
+    if cnt > 0.0 {
+        Some(num / cnt)
+    } else {
+        None
+    }
+}
+
+/// Mean ratio of two curves over an explicit step range `[lo, hi]`
+/// (inclusive). The figure-2 claim lives in the *transient* regime
+/// (`t ∈ [~2k, ~6k]` for `k = 100`), not the stationary tail, so the
+/// benches report this alongside [`tail_ratio`].
+pub fn range_ratio(
+    res: &ExperimentResult,
+    label: &str,
+    reference: &str,
+    lo: u64,
+    hi: u64,
+) -> Option<f64> {
+    let a = &res.curve(label)?.mean;
+    let b = &res.curve(reference)?.mean;
+    let mut num = 0.0;
+    let mut cnt = 0.0;
+    for (i, &t) in res.steps.iter().enumerate() {
+        if t >= lo && t <= hi && b[i] > 0.0 {
+            num += a[i] / b[i];
+            cnt += 1.0;
+        }
+    }
+    if cnt > 0.0 {
+        Some(num / cnt)
+    } else {
+        None
+    }
+}
+
+/// Least-squares slope of `log(mean)` vs `log(step)` over the last
+/// `fraction` of points — the log–log decay rate the figures display.
+pub fn loglog_slope(steps: &[u64], mean: &[f64], fraction: f64) -> f64 {
+    let n = steps.len();
+    let start = ((n as f64) * (1.0 - fraction)).floor() as usize;
+    let pts: Vec<(f64, f64)> = (start..n)
+        .filter(|&i| mean[i] > 0.0)
+        .map(|i| ((steps[i] as f64).ln(), mean[i].ln()))
+        .collect();
+    if pts.len() < 2 {
+        return f64::NAN;
+    }
+    let m = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let denom = m * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return f64::NAN;
+    }
+    (m * sxy - sx * sy) / denom
+}
+
+/// Render the "who wins" summary with ratios to the best.
+pub fn render_summary(res: &ExperimentResult) -> String {
+    let ord = ordering(res);
+    let best = ord.first().map(|o| o.1).unwrap_or(f64::NAN);
+    let mut out = String::from("final excess error (best first):\n");
+    for (label, v) in &ord {
+        let ratio = if best > 0.0 { v / best } else { f64::NAN };
+        out.push_str(&format!(
+            "  {:<18} {:>12}   ({:.2}x best)\n",
+            label,
+            sig4(*v),
+            ratio
+        ));
+    }
+    out
+}
+
+fn pick_rows(n: usize, max_rows: usize) -> Vec<usize> {
+    if n <= max_rows {
+        return (0..n).collect();
+    }
+    // Log-spaced subsample over indices, endpoints included.
+    let mut rows: Vec<usize> = (0..max_rows)
+        .map(|i| {
+            let f = (i as f64) / (max_rows - 1) as f64;
+            let x = ((n as f64).ln() * f).exp(); // 1..n
+            (x.round() as usize - 1).min(n - 1)
+        })
+        .collect();
+    rows.sort_unstable();
+    rows.dedup();
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linreg::experiment::Curve;
+    use std::time::Duration;
+
+    fn fake_result() -> ExperimentResult {
+        let steps: Vec<u64> = (1..=100).collect();
+        let curve = |label: &str, scale: f64| Curve {
+            label: label.to_string(),
+            mean: steps.iter().map(|&t| scale / t as f64).collect(),
+            stderr: vec![0.0; steps.len()],
+        };
+        let curves = vec![curve("good", 1.0), curve("bad", 3.0)];
+        ExperimentResult {
+            steps,
+            curves,
+            runs: 1,
+            wall: Duration::from_secs(0),
+        }
+    }
+
+    #[test]
+    fn ordering_sorts_by_final() {
+        let res = fake_result();
+        let ord = ordering(&res);
+        assert_eq!(ord[0].0, "good");
+        assert_eq!(ord[1].0, "bad");
+    }
+
+    #[test]
+    fn ratio_and_tail_ratio() {
+        let res = fake_result();
+        assert!((ratio_to(&res, "bad", "good").unwrap() - 3.0).abs() < 1e-12);
+        assert!((tail_ratio(&res, "bad", "good", 0.3).unwrap() - 3.0).abs() < 1e-12);
+        assert!((range_ratio(&res, "bad", "good", 20, 60).unwrap() - 3.0).abs() < 1e-12);
+        assert!(range_ratio(&res, "bad", "good", 2000, 3000).is_none());
+    }
+
+    #[test]
+    fn slope_of_one_over_t_is_minus_one() {
+        let res = fake_result();
+        let s = loglog_slope(&res.steps, &res.curves[0].mean, 0.8);
+        assert!((s + 1.0).abs() < 1e-9, "slope={s}");
+    }
+
+    #[test]
+    fn render_outputs_all_columns() {
+        let res = fake_result();
+        let table = render_curves(&res, 10);
+        assert!(table.contains("good"));
+        assert!(table.contains("bad"));
+        assert!(table.lines().count() <= 12);
+        let summary = render_summary(&res);
+        assert!(summary.contains("1.00x best"));
+        assert!(summary.contains("3.00x best"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let res = fake_result();
+        let csv = to_csv(&res);
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), "step,good,bad");
+        assert_eq!(csv.lines().count(), 101);
+    }
+
+    #[test]
+    fn pick_rows_endpoints() {
+        let rows = pick_rows(1000, 20);
+        assert_eq!(*rows.first().unwrap(), 0);
+        assert_eq!(*rows.last().unwrap(), 999);
+        assert!(rows.len() <= 20);
+    }
+}

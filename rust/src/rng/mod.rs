@@ -1,0 +1,136 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build environment does not ship the `rand` crate, and the
+//! experiments need *reproducible, splittable* randomness (100 independent
+//! runs, each with independent data streams, re-runnable bit-for-bit), so we
+//! implement the generators ourselves:
+//!
+//! * [`SplitMix64`] — the seeding/stream-splitting generator (Steele et al.,
+//!   2014). Used to expand a single `u64` seed into generator states and to
+//!   derive independent substreams.
+//! * [`Xoshiro256`] — xoshiro256++ (Blackman & Vigna, 2019), the workhorse
+//!   uniform generator: 256-bit state, sub-ns step, passes BigCrush.
+//! * Gaussian sampling via the polar (Marsaglia) method with a cached spare,
+//!   plus vectorized helpers for the diagonal-covariance draws the
+//!   linear-regression workload needs.
+
+mod gaussian;
+mod splitmix;
+mod xoshiro;
+
+pub use gaussian::GaussianSource;
+pub use splitmix::SplitMix64;
+pub use xoshiro::Xoshiro256;
+
+/// A uniform random bit source.
+///
+/// Implemented by both [`SplitMix64`] and [`Xoshiro256`]; all higher-level
+/// sampling (uniform floats, gaussians, permutations) is generic over it.
+pub trait RngCore {
+    /// Next 64 uniformly distributed bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        // Take the top 53 bits — the low bits of some generators are weaker.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)` with 24 bits of precision.
+    #[inline]
+    fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's multiply-shift rejection.
+    fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "next_below(0)");
+        // 128-bit multiply rejection sampling: unbiased.
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+}
+
+/// Fisher–Yates shuffle of a slice.
+pub fn shuffle<T, R: RngCore>(rng: &mut R, xs: &mut [T]) {
+    let n = xs.len();
+    for i in (1..n).rev() {
+        let j = rng.next_below((i + 1) as u64) as usize;
+        xs.swap(i, j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        for _ in 0..10_000 {
+            let u = rng.next_f64();
+            assert!((0.0..1.0).contains(&u), "u={u}");
+        }
+    }
+
+    #[test]
+    fn next_f32_in_unit_interval() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let u = rng.next_f32();
+            assert!((0.0..1.0).contains(&u), "u={u}");
+        }
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let n = 13u64;
+        let mut seen = vec![false; n as usize];
+        for _ in 0..10_000 {
+            let v = rng.next_below(n);
+            assert!(v < n);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues hit");
+    }
+
+    #[test]
+    fn next_below_one_is_zero() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for _ in 0..100 {
+            assert_eq!(rng.next_below(1), 0);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mut xs: Vec<u32> = (0..100).collect();
+        shuffle(&mut rng, &mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        // Overwhelmingly unlikely to be identity.
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+    }
+}

@@ -1,0 +1,203 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one tensor as recorded in `manifest.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    /// Numpy dtype name (only `float32` is produced today).
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec, String> {
+        let arr = j.as_arr().ok_or("tensor spec must be [dtype, dims]")?;
+        if arr.len() != 2 {
+            return Err("tensor spec must be [dtype, dims]".into());
+        }
+        let dtype = arr[0]
+            .as_str()
+            .ok_or("tensor dtype must be a string")?
+            .to_string();
+        let dims = arr[1]
+            .as_arr()
+            .ok_or("tensor dims must be an array")?
+            .iter()
+            .map(|d| {
+                d.as_u64()
+                    .map(|v| v as usize)
+                    .ok_or_else(|| "dims must be nonnegative integers".to_string())
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(TensorSpec { dtype, dims })
+    }
+}
+
+/// One AOT entry point.
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sha256: Option<String>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl Manifest {
+    /// Load from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest, String> {
+        let doc = Json::parse(text).map_err(|e| e.to_string())?;
+        let entries_json = doc
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or("manifest missing 'entries' object")?;
+        let mut entries = BTreeMap::new();
+        for (name, e) in entries_json {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("entry '{name}' missing 'file'"))?
+                .to_string();
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>, String> {
+                e.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| format!("entry '{name}' missing '{key}'"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name: name.clone(),
+                    file,
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    sha256: e.get("sha256").and_then(Json::as_str).map(String::from),
+                },
+            );
+        }
+        if entries.is_empty() {
+            return Err("manifest has no entries".into());
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    /// Entry lookup with a helpful error.
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec, String> {
+        self.entries.get(name).ok_or_else(|| {
+            format!(
+                "no artifact '{name}'; available: {:?}",
+                self.entries.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &EntrySpec) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Find an entry by prefix (e.g. `sgd_chunk` regardless of shapes).
+    pub fn entry_by_prefix(&self, prefix: &str) -> Result<&EntrySpec, String> {
+        let mut matches: Vec<&EntrySpec> = self
+            .entries
+            .values()
+            .filter(|e| e.name.starts_with(prefix))
+            .collect();
+        match matches.len() {
+            0 => Err(format!("no artifact starting with '{prefix}'")),
+            1 => Ok(matches.remove(0)),
+            n => Err(format!("{n} artifacts start with '{prefix}'; be specific")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "entries": {
+        "sgd_step_d6_b2": {
+          "file": "sgd_step_d6_b2.hlo.txt",
+          "inputs": [["float32",[6]],["float32",[2,6]],["float32",[2]],["float32",[1]]],
+          "outputs": [["float32",[6]]],
+          "sha256": "abc"
+        },
+        "sgd_chunk_d6_b2_s3": {
+          "file": "c.hlo.txt",
+          "inputs": [["float32",[6]],["float32",[3,2,6]],["float32",[3,2]],["float32",[1]]],
+          "outputs": [["float32",[6]],["float32",[3,6]]]
+        }
+      },
+      "format": "hlo-text"
+    }"#;
+
+    #[test]
+    fn parses_entries_and_specs() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.entry("sgd_step_d6_b2").unwrap();
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.inputs[1].dims, vec![2, 6]);
+        assert_eq!(e.inputs[1].elements(), 12);
+        assert_eq!(e.outputs[0].dims, vec![6]);
+        assert_eq!(e.sha256.as_deref(), Some("abc"));
+        assert_eq!(
+            m.hlo_path(e),
+            PathBuf::from("/tmp/a/sgd_step_d6_b2.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn prefix_lookup() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert!(m.entry_by_prefix("sgd_chunk").is_ok());
+        assert!(m.entry_by_prefix("sgd").is_err()); // ambiguous
+        assert!(m.entry_by_prefix("nope").is_err());
+    }
+
+    #[test]
+    fn missing_entry_error_lists_available() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        let err = m.entry("zzz").unwrap_err();
+        assert!(err.contains("sgd_step_d6_b2"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", PathBuf::from(".")).is_err());
+        assert!(Manifest::parse(r#"{"entries":{}}"#, PathBuf::from(".")).is_err());
+        assert!(Manifest::parse(
+            r#"{"entries":{"x":{"file":"f"}}}"#,
+            PathBuf::from(".")
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! PJRT client wrapper and typed execution of AOT entries.
+
+use super::artifact::{EntrySpec, Manifest};
+use crate::metrics::Registry;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A compiled entry point: the PJRT executable plus its manifest spec.
+pub struct CompiledEntry {
+    spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledEntry {
+    /// The manifest spec (shapes) of this entry.
+    pub fn spec(&self) -> &EntrySpec {
+        &self.spec
+    }
+
+    /// Execute with row-major `f32` buffers; returns one buffer per
+    /// output. Input lengths are validated against the manifest.
+    pub fn call(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>, String> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(format!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (buf, tspec)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if buf.len() != tspec.elements() {
+                return Err(format!(
+                    "{}: input {i} has {} elements, manifest says {:?} ({})",
+                    self.spec.name,
+                    buf.len(),
+                    tspec.dims,
+                    tspec.elements()
+                ));
+            }
+            let dims: Vec<i64> = tspec.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .map_err(|e| format!("{}: reshape input {i}: {e}", self.spec.name))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| format!("{}: execute: {e}", self.spec.name))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("{}: readback: {e}", self.spec.name))?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| format!("{}: tuple unwrap: {e}", self.spec.name))?;
+        if parts.len() != self.spec.outputs.len() {
+            return Err(format!(
+                "{}: manifest promises {} outputs, module returned {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, (part, tspec)) in parts.into_iter().zip(&self.spec.outputs).enumerate() {
+            let v: Vec<f32> = part
+                .to_vec()
+                .map_err(|e| format!("{}: output {i} to_vec: {e}", self.spec.name))?;
+            if v.len() != tspec.elements() {
+                return Err(format!(
+                    "{}: output {i} has {} elements, manifest says {}",
+                    self.spec.name,
+                    v.len(),
+                    tspec.elements()
+                ));
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// PJRT CPU runtime with a lazily populated executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<CompiledEntry>>>,
+    metrics: Registry,
+}
+
+impl Runtime {
+    /// Create over a loaded manifest.
+    pub fn new(manifest: Manifest) -> Result<Runtime, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+        crate::log_info!(
+            "runtime",
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(BTreeMap::new()),
+            metrics: Registry::new(),
+        })
+    }
+
+    /// Convenience: load the manifest from `dir` and build the runtime.
+    pub fn from_dir(dir: &str) -> Result<Runtime, String> {
+        Runtime::new(Manifest::load(dir)?)
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Runtime metrics (compile count/time, call count/time).
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// Get (compiling on first use) an entry point.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<CompiledEntry>, String> {
+        {
+            let cache = self.cache.lock().expect("runtime cache");
+            if let Some(e) = cache.get(name) {
+                return Ok(e.clone());
+            }
+        }
+        let spec = self.manifest.entry(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or("non-utf8 artifact path")?,
+        )
+        .map_err(|e| format!("{name}: parse HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("{name}: XLA compile: {e}"))?;
+        let compile_ms = t0.elapsed().as_millis();
+        crate::log_info!("runtime", "compiled {name} in {compile_ms}ms");
+        self.metrics.counter("compiles").inc();
+        self.metrics
+            .histogram("compile_ms")
+            .record(compile_ms as u64);
+        let entry = std::sync::Arc::new(CompiledEntry { spec, exe });
+        let mut cache = self.cache.lock().expect("runtime cache");
+        Ok(cache.entry(name.to_string()).or_insert(entry).clone())
+    }
+
+    /// One-shot: load (cached) and call.
+    pub fn call(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>, String> {
+        let entry = self.load(name)?;
+        let t0 = Instant::now();
+        let out = entry.call(inputs)?;
+        self.metrics.counter("calls").inc();
+        self.metrics
+            .histogram("call_us")
+            .record(t0.elapsed().as_micros() as u64);
+        Ok(out)
+    }
+}
+
+// Unit tests for the runtime need real artifacts; they live in
+// rust/tests/runtime_roundtrip.rs and skip (with a notice) when
+// `make artifacts` has not run.

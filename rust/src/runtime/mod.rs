@@ -1,0 +1,30 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! `make artifacts` (the only place Python runs) lowers the L2 graphs to
+//! HLO text; this module compiles them once on the PJRT CPU client and
+//! executes them from the coordinator hot path:
+//!
+//! ```text
+//! Manifest::load("artifacts")          — what was exported, with shapes
+//!   └─ Runtime::new(manifest)          — PJRT client + executable cache
+//!        └─ rt.call("sgd_step_d50_b11", &[w, x, y, eta])  — Vec<f32> I/O
+//! ```
+//!
+//! All tensors are `f32` row-major; shapes are validated against the
+//! manifest before every call so a drifted artifact fails loudly, not
+//! numerically.
+
+mod artifact;
+mod exec;
+
+pub use artifact::{EntrySpec, Manifest, TensorSpec};
+pub use exec::{CompiledEntry, Runtime};
+
+/// The default artifacts directory (crate-root relative).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// True when the artifacts directory exists with a manifest — used by
+/// tests/examples to skip gracefully with a pointer to `make artifacts`.
+pub fn artifacts_available(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.json").exists()
+}

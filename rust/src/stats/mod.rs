@@ -1,0 +1,323 @@
+//! Streaming statistics built on the averagers.
+//!
+//! * [`RunningStats`] — Welford mean/variance/min/max of a scalar stream
+//!   (used by metrics and benches).
+//! * [`MomentTracker`] — the paper-conclusion use case: BatchNorm-style
+//!   tracking of per-unit activation mean and variance where the averaging
+//!   window *grows* as training stabilizes, powered by any
+//!   [`crate::averagers::Averager`].
+
+use crate::averagers::{Averager, AveragerSpec};
+
+/// Numerically stable running scalar statistics (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct RunningStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl RunningStats {
+    pub fn new() -> RunningStats {
+        RunningStats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample variance (n−1 denominator).
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge another accumulator into this one (parallel reduction).
+    pub fn merge(&mut self, other: &RunningStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let delta = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// BatchNorm-style tracker of per-coordinate mean and variance of an
+/// activation stream, using a configurable tail-averaging estimator for
+/// both the first and second moment.
+///
+/// The paper's conclusion proposes exactly this: replace BatchNorm's fixed
+/// EMA with a growing-window estimator ([`AveragerSpec::Gea`]) so that the
+/// statistics are estimated over ever-longer horizons as optimization
+/// stabilizes.
+pub struct MomentTracker {
+    mean_avg: Box<dyn Averager>,
+    sq_avg: Box<dyn Averager>,
+    sq_buf: Vec<f64>,
+    d: usize,
+}
+
+impl MomentTracker {
+    pub fn new(d: usize, spec: &AveragerSpec) -> Result<MomentTracker, String> {
+        Ok(MomentTracker {
+            mean_avg: spec.build(d)?,
+            sq_avg: spec.build(d)?,
+            sq_buf: vec![0.0; d],
+            d,
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn t(&self) -> u64 {
+        self.mean_avg.t()
+    }
+
+    /// Ingest one activation vector.
+    pub fn observe(&mut self, x: &[f64]) {
+        assert_eq!(x.len(), self.d);
+        self.mean_avg.observe(x);
+        for (s, &xv) in self.sq_buf.iter_mut().zip(x) {
+            *s = xv * xv;
+        }
+        self.sq_avg.observe(&self.sq_buf);
+    }
+
+    /// Current mean estimate per coordinate.
+    pub fn mean_into(&self, out: &mut [f64]) -> bool {
+        self.mean_avg.value_into(out)
+    }
+
+    /// Current variance estimate per coordinate
+    /// (`E[x²] − E[x]²`, clamped at 0).
+    pub fn variance_into(&self, out: &mut [f64]) -> bool {
+        if !self.sq_avg.value_into(out) {
+            return false;
+        }
+        let mut mean = vec![0.0; self.d];
+        if !self.mean_avg.value_into(&mut mean) {
+            return false;
+        }
+        for (v, m) in out.iter_mut().zip(&mean) {
+            *v = (*v - m * m).max(0.0);
+        }
+        true
+    }
+
+    /// Normalize `x` in place with the current statistics:
+    /// `(x − μ)/√(σ² + eps)`. Returns `false` (leaving `x` unchanged)
+    /// until statistics exist.
+    pub fn normalize(&self, x: &mut [f64], eps: f64) -> bool {
+        assert_eq!(x.len(), self.d);
+        let mut mean = vec![0.0; self.d];
+        let mut var = vec![0.0; self.d];
+        if !self.mean_into(&mut mean) || !self.variance_into(&mut var) {
+            return false;
+        }
+        for ((xv, m), v) in x.iter_mut().zip(&mean).zip(&var) {
+            *xv = (*xv - m) / (v + eps).sqrt();
+        }
+        true
+    }
+
+    pub fn memory_floats(&self) -> usize {
+        self.mean_avg.memory_floats() + self.sq_avg.memory_floats() + self.sq_buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{GaussianSource, Xoshiro256};
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut s = RunningStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert_eq!(s.mean(), 5.0);
+        assert_eq!(s.variance(), 4.0);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn merge_equals_single_stream() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64 * 0.77).sin() * 3.0).collect();
+        let mut whole = RunningStats::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = RunningStats::new();
+        let mut b = RunningStats::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert!((a.variance() - whole.variance()).abs() < 1e-12);
+        assert_eq!(a.count(), whole.count());
+    }
+
+    #[test]
+    fn empty_stats_are_nan() {
+        let s = RunningStats::new();
+        assert!(s.mean().is_nan());
+        assert!(s.variance().is_nan());
+    }
+
+    #[test]
+    fn moment_tracker_estimates_gaussian_moments() {
+        let d = 4;
+        let spec = AveragerSpec::Gea { c: 0.5 };
+        let mut tr = MomentTracker::new(d, &spec).unwrap();
+        let mut g = GaussianSource::new(Xoshiro256::seed_from_u64(5));
+        let true_means = [0.0, 1.0, -2.0, 5.0];
+        let true_stds = [1.0, 0.5, 2.0, 0.1];
+        let mut x = vec![0.0; d];
+        for _ in 0..20_000 {
+            for i in 0..d {
+                x[i] = true_means[i] + true_stds[i] * g.next_gaussian();
+            }
+            tr.observe(&x);
+        }
+        let mut mean = vec![0.0; d];
+        let mut var = vec![0.0; d];
+        assert!(tr.mean_into(&mut mean));
+        assert!(tr.variance_into(&mut var));
+        for i in 0..d {
+            assert!(
+                (mean[i] - true_means[i]).abs() < 0.1,
+                "mean[{i}]={}",
+                mean[i]
+            );
+            let tv = true_stds[i] * true_stds[i];
+            assert!(
+                (var[i] - tv).abs() < 0.12 * tv.max(0.1),
+                "var[{i}]={} want {tv}",
+                var[i]
+            );
+        }
+    }
+
+    #[test]
+    fn normalize_whitens() {
+        let d = 2;
+        let spec = AveragerSpec::Gea { c: 0.5 };
+        let mut tr = MomentTracker::new(d, &spec).unwrap();
+        let mut g = GaussianSource::new(Xoshiro256::seed_from_u64(8));
+        let mut x = vec![0.0; d];
+        for _ in 0..5000 {
+            x[0] = 3.0 + 2.0 * g.next_gaussian();
+            x[1] = -1.0 + 0.5 * g.next_gaussian();
+            tr.observe(&x);
+        }
+        // Normalize a fresh stream and check its moments.
+        let mut s0 = RunningStats::new();
+        let mut s1 = RunningStats::new();
+        for _ in 0..5000 {
+            x[0] = 3.0 + 2.0 * g.next_gaussian();
+            x[1] = -1.0 + 0.5 * g.next_gaussian();
+            assert!(tr.normalize(&mut x, 1e-8));
+            s0.push(x[0]);
+            s1.push(x[1]);
+        }
+        assert!(s0.mean().abs() < 0.1);
+        assert!((s0.variance() - 1.0).abs() < 0.15);
+        assert!(s1.mean().abs() < 0.1);
+        assert!((s1.variance() - 1.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn tracker_unavailable_before_data() {
+        let tr = MomentTracker::new(3, &AveragerSpec::Gea { c: 0.5 }).unwrap();
+        let mut out = vec![0.0; 3];
+        assert!(!tr.mean_into(&mut out));
+        assert!(!tr.variance_into(&mut out));
+        let mut x = vec![1.0; 3];
+        assert!(!tr.normalize(&mut x, 1e-8));
+        assert_eq!(x, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn tracker_memory_constant() {
+        let spec = AveragerSpec::Awa {
+            window: crate::averagers::WindowKind::Growing { c: 0.5 },
+            accumulators: 3,
+        };
+        let mut tr = MomentTracker::new(8, &spec).unwrap();
+        let m = tr.memory_floats();
+        for _ in 0..2000 {
+            tr.observe(&[0.5; 8]);
+        }
+        assert_eq!(tr.memory_floats(), m);
+    }
+}

@@ -1,0 +1,236 @@
+//! Property-based testing mini-framework (the `proptest` substitute).
+//!
+//! A property test here is: a seeded generator producing random *cases*, a
+//! predicate over cases, and a runner that executes many cases, reports the
+//! first failing case with its seed (so it can be replayed), and attempts a
+//! simple shrink by re-running the failing generator with smaller size
+//! hints.
+//!
+//! ```
+//! use ata::testkit::{Gen, Runner};
+//!
+//! let mut runner = Runner::new("addition commutes", 0xA7A);
+//! runner.run(200, |g| {
+//!     let a = g.f64_range(-1e6, 1e6);
+//!     let b = g.f64_range(-1e6, 1e6);
+//!     ((a + b) - (b + a)).abs() < 1e-12
+//! });
+//! ```
+
+use crate::rng::{RngCore, SplitMix64, Xoshiro256};
+
+/// Random case generator handed to property bodies.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Size hint in `[0, 1]`: shrinking reruns with smaller sizes.
+    pub size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64, size: f64) -> Gen {
+        Gen {
+            rng: Xoshiro256::substream(seed, case),
+            size,
+        }
+    }
+
+    /// Uniform u64.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive), scaled down when shrinking.
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = (hi - lo) as f64;
+        let scaled_hi = lo + (span * self.size).round() as usize;
+        let scaled_hi = scaled_hi.max(lo);
+        lo + self.rng.next_below((scaled_hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    /// Uniform f64 in `[lo, hi)` with magnitude scaled by current size.
+    pub fn f64_sized(&mut self, lo: f64, hi: f64) -> f64 {
+        let mid = 0.5 * (lo + hi);
+        let half = 0.5 * (hi - lo) * self.size;
+        self.f64_range(mid - half, mid + half)
+    }
+
+    /// Bernoulli(p).
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// Pick a uniformly random element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.next_below(xs.len() as u64) as usize]
+    }
+
+    /// A vector of f64 drawn from `[lo, hi)`, length in `[min_len, max_len]`.
+    pub fn f64_vec(&mut self, min_len: usize, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize_range(min_len, max_len);
+        (0..n).map(|_| self.f64_range(lo, hi)).collect()
+    }
+
+    /// Standard-ish normal deviate (sum of uniforms — adequate for tests).
+    pub fn gaussian(&mut self) -> f64 {
+        // Irwin–Hall with 12 uniforms: mean 6, var 1.
+        let s: f64 = (0..12).map(|_| self.rng.next_f64()).sum();
+        s - 6.0
+    }
+}
+
+/// Outcome of a property body. `bool` works for simple predicates;
+/// `Result<(), String>` carries a failure message.
+pub trait Outcome {
+    fn failure(self) -> Option<String>;
+}
+
+impl Outcome for bool {
+    fn failure(self) -> Option<String> {
+        if self {
+            None
+        } else {
+            Some("property returned false".to_string())
+        }
+    }
+}
+
+impl Outcome for Result<(), String> {
+    fn failure(self) -> Option<String> {
+        self.err()
+    }
+}
+
+/// Property-test runner. Panics (test failure) on the first falsified case,
+/// printing the property name, case index, seed and shrink trace.
+pub struct Runner {
+    name: &'static str,
+    seed: u64,
+}
+
+impl Runner {
+    /// `seed` makes the whole run reproducible; derive per-case seeds
+    /// internally.
+    pub fn new(name: &'static str, seed: u64) -> Runner {
+        // Mix the name into the seed so distinct properties with the same
+        // literal seed do not see identical streams.
+        let mut h = SplitMix64::new(seed ^ 0x5EED);
+        let mut acc = h.next_u64();
+        for b in name.bytes() {
+            acc = acc.rotate_left(7) ^ (b as u64);
+        }
+        Runner { name, seed: acc }
+    }
+
+    /// Run `cases` random cases of the property `body`.
+    pub fn run<O: Outcome>(&mut self, cases: u64, mut body: impl FnMut(&mut Gen) -> O) {
+        for case in 0..cases {
+            let mut g = Gen::new(self.seed, case, 1.0);
+            if let Some(msg) = body(&mut g).failure() {
+                // Attempt shrink: rerun the same case stream at smaller
+                // sizes; report the smallest size that still fails.
+                let mut smallest = 1.0f64;
+                for &size in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                    let mut gs = Gen::new(self.seed, case, size);
+                    if body(&mut gs).failure().is_some() {
+                        smallest = size;
+                    }
+                }
+                panic!(
+                    "property '{}' falsified at case {case} (seed {:#x}, \
+                     smallest failing size {smallest}): {msg}",
+                    self.name, self.seed
+                );
+            }
+        }
+    }
+}
+
+/// Assert two floats are close (absolute + relative tolerance).
+pub fn assert_close(got: f64, want: f64, tol: f64, ctx: &str) -> Result<(), String> {
+    let scale = want.abs().max(1.0);
+    if (got - want).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: got {got}, want {want} (tol {tol})"))
+    }
+}
+
+/// Assert two slices are elementwise close.
+pub fn assert_slice_close(got: &[f64], want: &[f64], tol: f64, ctx: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!(
+            "{ctx}: length mismatch {} vs {}",
+            got.len(),
+            want.len()
+        ));
+    }
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        assert_close(g, w, tol, &format!("{ctx}[{i}]"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        Runner::new("abs is nonneg", 1).run(500, |g| g.f64_range(-10.0, 10.0).abs() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn failing_property_panics_with_context() {
+        Runner::new("all values below 0.5", 2).run(500, |g| g.f64_range(0.0, 1.0) < 0.5);
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut a = Gen::new(42, 0, 1.0);
+        let mut b = Gen::new(42, 0, 1.0);
+        for _ in 0..32 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn usize_range_respects_bounds() {
+        let mut g = Gen::new(9, 3, 1.0);
+        for _ in 0..1000 {
+            let v = g.usize_range(3, 17);
+            assert!((3..=17).contains(&v));
+        }
+    }
+
+    #[test]
+    fn shrunk_sizes_reduce_ranges() {
+        let mut g = Gen::new(10, 0, 0.01);
+        for _ in 0..100 {
+            // With size 0.01 over [0, 1000], values stay tiny.
+            assert!(g.usize_range(0, 1000) <= 10);
+        }
+    }
+
+    #[test]
+    fn result_outcome_carries_message() {
+        let r: Result<(), String> = Err("boom".to_string());
+        assert_eq!(r.failure(), Some("boom".to_string()));
+        assert_eq!(Ok::<(), String>(()).failure(), None);
+    }
+
+    #[test]
+    fn close_helpers() {
+        assert!(assert_close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
+        assert!(assert_close(1.0, 2.0, 1e-9, "x").is_err());
+        assert!(assert_slice_close(&[1.0, 2.0], &[1.0, 2.0], 1e-12, "v").is_ok());
+        assert!(assert_slice_close(&[1.0], &[1.0, 2.0], 1e-12, "v").is_err());
+    }
+}

@@ -1,0 +1,333 @@
+//! Declarative command-line parsing (the launcher's `clap` substitute).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options,
+//! typed accessors with defaults, required options, positional arguments and
+//! auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Specification of one option/flag.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` for boolean flags (no value), `false` for `--key value`.
+    pub is_flag: bool,
+    pub default: Option<&'static str>,
+    pub required: bool,
+}
+
+/// Specification of a (sub)command: its options and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            ..Default::default()
+        }
+    }
+
+    /// Add a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: true,
+            default: None,
+            required: false,
+        });
+        self
+    }
+
+    /// Add a valued option with a default.
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: false,
+            default: Some(default),
+            required: false,
+        });
+        self
+    }
+
+    /// Add a required valued option.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            is_flag: false,
+            default: None,
+            required: true,
+        });
+        self
+    }
+
+    /// Add a positional argument.
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Render help text.
+    pub fn help_text(&self, program: &str) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("{}\n\nUsage: {program} {}", self.about, self.name));
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [options]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nArguments:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOptions:\n");
+            for o in &self.opts {
+                let lhs = if o.is_flag {
+                    format!("--{}", o.name)
+                } else if let Some(d) = o.default {
+                    format!("--{} <v> (default {d})", o.name)
+                } else {
+                    format!("--{} <v> (required)", o.name)
+                };
+                s.push_str(&format!("  {lhs:<34} {}\n", o.help));
+            }
+        }
+        s
+    }
+
+    /// Parse `args` (not including the program/command names) against this
+    /// spec.
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positionals: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::UnknownOption(key.clone()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(CliError::Malformed(format!(
+                            "flag --{key} does not take a value"
+                        )));
+                    }
+                    flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    values.insert(key, val);
+                }
+            } else {
+                positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        if positionals.len() > self.positionals.len() {
+            return Err(CliError::Malformed(format!(
+                "unexpected positional argument '{}'",
+                positionals[self.positionals.len()]
+            )));
+        }
+        for o in &self.opts {
+            if o.required && !values.contains_key(o.name) {
+                return Err(CliError::MissingRequired(o.name.to_string()));
+            }
+            if let Some(d) = o.default {
+                values.entry(o.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(Parsed {
+            values,
+            flags,
+            positionals,
+        })
+    }
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name).unwrap_or_default().to_string()
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(String::as_str)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.typed(name, |s| s.parse::<u64>().ok())
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.typed(name, |s| s.parse::<usize>().ok())
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.typed(name, |s| s.parse::<f64>().ok())
+    }
+
+    fn typed<T>(&self, name: &str, conv: impl Fn(&str) -> Option<T>) -> Result<T, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError::MissingRequired(name.to_string()))?;
+        conv(raw).ok_or_else(|| CliError::Malformed(format!("--{name}: cannot parse '{raw}'")))
+    }
+}
+
+/// CLI parse failures.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CliError {
+    HelpRequested,
+    UnknownOption(String),
+    MissingValue(String),
+    MissingRequired(String),
+    Malformed(String),
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::HelpRequested => write!(f, "help requested"),
+            CliError::UnknownOption(o) => write!(f, "unknown option --{o}"),
+            CliError::MissingValue(o) => write!(f, "option --{o} requires a value"),
+            CliError::MissingRequired(o) => write!(f, "missing required option --{o}"),
+            CliError::Malformed(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CommandSpec {
+        CommandSpec::new("run", "run an experiment")
+            .opt("steps", "1000", "number of steps")
+            .opt("c", "0.5", "window fraction")
+            .flag("verbose", "chatty output")
+            .req("out", "output path")
+            .positional("config", "config file")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = spec()
+            .parse(&args(&["--steps", "50", "--out=/tmp/x", "cfg.toml"]))
+            .unwrap();
+        assert_eq!(p.u64("steps").unwrap(), 50);
+        assert_eq!(p.f64("c").unwrap(), 0.5);
+        assert_eq!(p.str("out"), "/tmp/x");
+        assert_eq!(p.positional(0), Some("cfg.toml"));
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn flags_parse() {
+        let p = spec()
+            .parse(&args(&["--verbose", "--out", "o"]))
+            .unwrap();
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        let e = spec().parse(&args(&["--steps", "5"])).unwrap_err();
+        assert_eq!(e, CliError::MissingRequired("out".to_string()));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let e = spec().parse(&args(&["--bogus", "--out", "o"])).unwrap_err();
+        assert_eq!(e, CliError::UnknownOption("bogus".to_string()));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let e = spec().parse(&args(&["--out"])).unwrap_err();
+        assert_eq!(e, CliError::MissingValue("out".to_string()));
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        let e = spec()
+            .parse(&args(&["--verbose=yes", "--out", "o"]))
+            .unwrap_err();
+        assert!(matches!(e, CliError::Malformed(_)));
+    }
+
+    #[test]
+    fn help_flag_surfaces() {
+        let e = spec().parse(&args(&["--help"])).unwrap_err();
+        assert_eq!(e, CliError::HelpRequested);
+        assert!(spec().help_text("ata").contains("--steps"));
+    }
+
+    #[test]
+    fn bad_typed_value_rejected() {
+        let p = spec()
+            .parse(&args(&["--steps", "abc", "--out", "o"]))
+            .unwrap();
+        assert!(p.u64("steps").is_err());
+    }
+
+    #[test]
+    fn excess_positionals_rejected() {
+        let e = spec()
+            .parse(&args(&["--out", "o", "a.toml", "b.toml"]))
+            .unwrap_err();
+        assert!(matches!(e, CliError::Malformed(_)));
+    }
+}

@@ -1,0 +1,108 @@
+//! Human-readable formatting for reports and benches.
+
+use std::time::Duration;
+
+/// Format a duration adaptively: `ns`, `µs`, `ms` or `s`.
+pub fn duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// Format a byte count adaptively (binary units).
+pub fn bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n}B")
+    } else {
+        format!("{v:.1}{}", UNITS[u])
+    }
+}
+
+/// Format a rate (events/sec) adaptively.
+pub fn rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2}G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2}M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2}k/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1}/s")
+    }
+}
+
+/// Scientific-ish compact float for tables: 4 significant digits.
+pub fn sig4(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let a = x.abs();
+    if (1e-3..1e5).contains(&a) {
+        format!("{x:.4}")
+    } else {
+        format!("{x:.3e}")
+    }
+}
+
+/// Left-pad / right-align a string to `w` columns.
+pub fn pad_left(s: &str, w: usize) -> String {
+    if s.len() >= w {
+        s.to_string()
+    } else {
+        format!("{}{}", " ".repeat(w - s.len()), s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations() {
+        assert_eq!(duration(Duration::from_nanos(500)), "500ns");
+        assert_eq!(duration(Duration::from_micros(12)), "12.00µs");
+        assert_eq!(duration(Duration::from_millis(3)), "3.00ms");
+        assert_eq!(duration(Duration::from_secs(2)), "2.00s");
+    }
+
+    #[test]
+    fn byte_counts() {
+        assert_eq!(bytes(512), "512B");
+        assert_eq!(bytes(2048), "2.0KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.0MiB");
+    }
+
+    #[test]
+    fn rates() {
+        assert_eq!(rate(500.0), "500.0/s");
+        assert_eq!(rate(2_500_000.0), "2.50M/s");
+    }
+
+    #[test]
+    fn sig4_ranges() {
+        assert_eq!(sig4(0.0), "0");
+        assert_eq!(sig4(1.23456), "1.2346");
+        assert!(sig4(1.0e-9).contains('e'));
+        assert!(sig4(3.2e7).contains('e'));
+    }
+
+    #[test]
+    fn padding() {
+        assert_eq!(pad_left("ab", 5), "   ab");
+        assert_eq!(pad_left("abcdef", 3), "abcdef");
+    }
+}

@@ -1,0 +1,172 @@
+//! Leveled, timestamped logging (the `log`/`env_logger` substitute).
+//!
+//! Global logger with a runtime-settable level (default `Info`, overridable
+//! via the `ATA_LOG` environment variable: `error|warn|info|debug|trace`).
+//! Thread-safe; writes to stderr so reports on stdout stay clean.
+
+use std::fmt;
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Log severity, ordered from most to least severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Trace,
+        }
+    }
+
+    /// Parse from a string, case-insensitive.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.tag().trim_end())
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // u8::MAX = uninitialized
+
+fn init_from_env() -> u8 {
+    let lvl = std::env::var("ATA_LOG")
+        .ok()
+        .and_then(|s| Level::parse(&s))
+        .unwrap_or(Level::Info);
+    let v = lvl as u8;
+    MAX_LEVEL.store(v, Ordering::Relaxed);
+    v
+}
+
+/// Current maximum level that will be emitted.
+pub fn max_level() -> Level {
+    let v = MAX_LEVEL.load(Ordering::Relaxed);
+    let v = if v == u8::MAX { init_from_env() } else { v };
+    Level::from_u8(v)
+}
+
+/// Override the level programmatically (wins over `ATA_LOG`).
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Whether `level` is currently enabled.
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level <= max_level()
+}
+
+/// Core emit function — prefer the [`crate::log_info!`]-style macros.
+pub fn emit(level: Level, module: &str, msg: fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let now = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default();
+    let secs = now.as_secs();
+    let millis = now.subsec_millis();
+    // Single write so concurrent threads do not interleave mid-line.
+    let line = format!(
+        "[{secs}.{millis:03} {} {module}] {msg}\n",
+        level.tag()
+    );
+    let _ = std::io::stderr().write_all(line.as_bytes());
+}
+
+/// `log_error!(module, fmt, args...)`
+#[macro_export]
+macro_rules! log_error {
+    ($module:expr, $($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Error, $module, format_args!($($arg)*))
+    };
+}
+
+/// `log_warn!(module, fmt, args...)`
+#[macro_export]
+macro_rules! log_warn {
+    ($module:expr, $($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Warn, $module, format_args!($($arg)*))
+    };
+}
+
+/// `log_info!(module, fmt, args...)`
+#[macro_export]
+macro_rules! log_info {
+    ($module:expr, $($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Info, $module, format_args!($($arg)*))
+    };
+}
+
+/// `log_debug!(module, fmt, args...)`
+#[macro_export]
+macro_rules! log_debug {
+    ($module:expr, $($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Debug, $module, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("ERROR"), Some(Level::Error));
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("Warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
+    fn set_level_gates_enabled() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Info); // restore default-ish for other tests
+    }
+}

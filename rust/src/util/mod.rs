@@ -1,0 +1,19 @@
+//! General-purpose substrates built from scratch.
+//!
+//! The offline registry ships only the `xla` crate's dependency closure —
+//! no `serde`, `clap`, `tokio`, `log` — so the framework's infrastructure
+//! lives here:
+//!
+//! * [`json`] — a complete JSON value model, parser and encoder (metrics
+//!   export, artifact manifests, golden test vectors, wire protocol).
+//! * [`cli`] — declarative command-line parsing for the launcher.
+//! * [`logging`] — leveled, timestamped logger with env control.
+//! * [`pool`] — a worker threadpool (parallel experiment runs, coordinator
+//!   shards, service connections).
+//! * [`fmt`] — human-readable number/duration/bytes formatting for reports.
+
+pub mod cli;
+pub mod fmt;
+pub mod json;
+pub mod logging;
+pub mod pool;

@@ -1,0 +1,189 @@
+//! Worker threadpool (the `tokio`/`rayon` substitute for this crate).
+//!
+//! A fixed-size pool executing boxed closures from a shared queue. Supports
+//! fire-and-forget jobs, scoped map over an input slice (used for the
+//! 100-run experiment fan-out), and graceful shutdown on drop.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    sender: mpsc::Sender<Message>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (sender, receiver) = mpsc::channel::<Message>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&receiver);
+            let handle = thread::Builder::new()
+                .name(format!("ata-worker-{i}"))
+                .spawn(move || loop {
+                    let msg = {
+                        let guard = rx.lock().expect("pool queue poisoned");
+                        guard.recv()
+                    };
+                    match msg {
+                        Ok(Message::Run(job)) => {
+                            // A panicking job must not kill the worker.
+                            let _ = catch_unwind(AssertUnwindSafe(job));
+                        }
+                        Ok(Message::Shutdown) | Err(_) => break,
+                    }
+                })
+                .expect("spawn worker");
+            workers.push(handle);
+        }
+        ThreadPool {
+            sender,
+            workers,
+            size,
+        }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`, capped).
+    pub fn with_default_size() -> ThreadPool {
+        let n = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(32);
+        ThreadPool::new(n)
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.sender
+            .send(Message::Run(Box::new(job)))
+            .expect("pool has shut down");
+    }
+
+    /// Apply `f` to `0..n` in parallel and collect results in input order.
+    ///
+    /// `f` must be `Sync` because all workers share it; results are sent
+    /// back over a channel tagged with their index.
+    pub fn map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.execute(move || {
+                let r = f(i);
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut received = 0usize;
+        while received < n {
+            match rx.recv() {
+                Ok((i, r)) => {
+                    slots[i] = Some(r);
+                    received += 1;
+                }
+                Err(_) => panic!(
+                    "worker dropped result channel — a parallel job panicked \
+                     ({received}/{n} results received)"
+                ),
+            }
+        }
+        slots.into_iter().map(|s| s.expect("slot filled")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.sender.send(Message::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map_indexed(64, |i| i * i);
+        assert_eq!(out, (0..64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_indexed_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<u32> = pool.map_indexed(0, |_| 1);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        // The pool must still process subsequent jobs.
+        let out = pool.map_indexed(8, |i| i + 1);
+        assert_eq!(out, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shutdown_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&c);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must not hang
+    }
+}

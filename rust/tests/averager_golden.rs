@@ -1,0 +1,89 @@
+//! Cross-language golden test: the Rust averagers must reproduce the
+//! python mirror (`python/compile/averagers_ref.py`) bit-for-bit (up to
+//! f64 round-off) on a deterministic stream.
+//!
+//! Regenerate the golden file with `make golden`.
+
+use ata::averagers::AveragerSpec;
+use ata::util::json::Json;
+
+const GOLDEN_PATH: &str = "rust/tests/golden/averager_golden.json";
+
+fn stream(t: u64) -> f64 {
+    (0.37 * t as f64).sin() * 10.0 + (1.7 * t as f64).cos()
+}
+
+fn load_golden() -> Json {
+    let text = std::fs::read_to_string(GOLDEN_PATH)
+        .unwrap_or_else(|e| panic!("cannot read {GOLDEN_PATH}: {e}; run `make golden`"));
+    Json::parse(&text).expect("golden file must be valid JSON")
+}
+
+#[test]
+fn golden_traces_match_python_mirror() {
+    let golden = load_golden();
+    let total = golden
+        .get("total_steps")
+        .and_then(Json::as_u64)
+        .expect("total_steps");
+    let checkpoints: Vec<u64> = golden
+        .get("checkpoints")
+        .and_then(Json::as_arr)
+        .expect("checkpoints")
+        .iter()
+        .map(|c| c.as_u64().expect("checkpoint int"))
+        .collect();
+    let traces = golden
+        .get("traces")
+        .and_then(Json::as_obj)
+        .expect("traces");
+    assert!(!traces.is_empty());
+
+    let mut compared = 0usize;
+    for (label, trace) in traces {
+        let spec = AveragerSpec::parse(label)
+            .unwrap_or_else(|e| panic!("golden label '{label}' unparseable: {e}"));
+        let mut avg = spec.build(1).expect("build");
+        let expected = trace.as_arr().expect("trace array");
+        assert_eq!(expected.len(), checkpoints.len(), "{label}");
+        let mut cp_idx = 0;
+        for t in 1..=total {
+            avg.observe_scalar(stream(t));
+            if cp_idx < checkpoints.len() && checkpoints[cp_idx] == t {
+                let got = avg.value_scalar();
+                match (&expected[cp_idx], got) {
+                    (Json::Null, None) => {}
+                    (Json::Num(want), Some(g)) => {
+                        assert!(
+                            (g - want).abs() <= 1e-9 * want.abs().max(1.0),
+                            "{label} at t={t}: rust {g} vs python {want}"
+                        );
+                        compared += 1;
+                    }
+                    (want, got) => {
+                        panic!("{label} at t={t}: python {want:?} vs rust {got:?}")
+                    }
+                }
+                cp_idx += 1;
+            }
+        }
+        assert_eq!(cp_idx, checkpoints.len(), "{label}: all checkpoints hit");
+    }
+    assert!(
+        compared > 100,
+        "golden comparison too thin: {compared} values"
+    );
+}
+
+#[test]
+fn golden_covers_every_estimator_family() {
+    let golden = load_golden();
+    let traces = golden.get("traces").and_then(Json::as_obj).unwrap();
+    let labels: Vec<&str> = traces.keys().map(String::as_str).collect();
+    for family in ["expk", "gea", "awa2", "awa3", "true", "raw"] {
+        assert!(
+            labels.iter().any(|l| l.starts_with(family)),
+            "golden file missing family '{family}' (have {labels:?})"
+        );
+    }
+}

@@ -1,0 +1,265 @@
+//! Property tests (via the in-crate testkit) of the paper's invariants,
+//! over randomized specs, dimensions and stream lengths.
+
+use ata::averagers::{
+    reconstruct_weights, report_from_weights, Averager, AveragerSpec, WindowKind,
+};
+use ata::testkit::{assert_close, Gen, Runner};
+
+/// Draw a random estimator spec (all families).
+fn arb_spec(g: &mut Gen, total_steps: u64) -> AveragerSpec {
+    match g.usize_range(0, 7) {
+        0 => AveragerSpec::ExpK {
+            k: g.usize_range(1, 40) as u64,
+        },
+        1 => AveragerSpec::Gea {
+            c: g.f64_range(0.05, 0.95),
+        },
+        2 => AveragerSpec::Awa {
+            window: arb_window(g),
+            accumulators: g.usize_range(2, 5) as u32,
+        },
+        3 => AveragerSpec::True {
+            window: arb_window(g),
+        },
+        4 => AveragerSpec::Raw {
+            c: g.f64_range(0.1, 0.9),
+            total_steps,
+        },
+        5 => AveragerSpec::Restart {
+            window: arb_window(g),
+        },
+        6 => AveragerSpec::Eh {
+            window: arb_window(g),
+            eps: g.f64_range(0.02, 0.3),
+        },
+        _ => AveragerSpec::Exp {
+            gamma: g.f64_range(0.0, 0.99),
+        },
+    }
+}
+
+fn arb_window(g: &mut Gen) -> WindowKind {
+    if g.bool(0.5) {
+        WindowKind::Fixed {
+            k: g.usize_range(1, 30) as u64,
+        }
+    } else {
+        WindowKind::Growing {
+            c: g.f64_range(0.05, 0.95),
+        }
+    }
+}
+
+#[test]
+fn weights_always_sum_to_one() {
+    Runner::new("Σα = 1 for every estimator/time", 0xA11).run(60, |g| {
+        let t = g.usize_range(1, 60) as u64;
+        let spec = arb_spec(g, t.max(4));
+        let w = reconstruct_weights(&spec, t).map_err(|e| e.to_string())?;
+        let sum: f64 = w.iter().sum();
+        assert_close(sum, 1.0, 1e-9, &format!("{} t={t}", spec.label()))
+    });
+}
+
+#[test]
+fn no_estimator_uses_negative_weights() {
+    Runner::new("α ≥ 0", 0xA12).run(40, |g| {
+        let t = g.usize_range(1, 50) as u64;
+        let spec = arb_spec(g, t.max(4));
+        let w = reconstruct_weights(&spec, t).map_err(|e| e.to_string())?;
+        for (i, &wi) in w.iter().enumerate() {
+            if wi < -1e-12 {
+                return Err(format!("{} t={t}: α[{i}]={wi}", spec.label()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn variance_never_beats_window_target_materially() {
+    // Σα² ≥ 1/t always, and for the anytime estimators Σα² ≤ ~1/k_t once
+    // enough samples exist (they never *exceed* the exact-window variance
+    // by more than round-off, i.e. are never noisier than promised).
+    Runner::new("variance bounded by design", 0xA13).run(40, |g| {
+        let t = g.usize_range(2, 60) as u64;
+        let c = g.f64_range(0.2, 0.8);
+        let accs = g.usize_range(1, 3) as u32 + 1;
+        let spec = AveragerSpec::Awa {
+            window: WindowKind::Growing { c },
+            accumulators: accs,
+        };
+        let w = reconstruct_weights(&spec, t).map_err(|e| e.to_string())?;
+        let var: f64 = w.iter().map(|a| a * a).sum();
+        let k_t = (c * t as f64).max(1.0).min(t as f64);
+        // Attainable once pooled samples ≥ k_t — always true for AWA after
+        // t ≥ 2 because it can use up to all t samples.
+        if var > 1.0 / k_t + 1e-9 {
+            return Err(format!(
+                "awa{accs}(c={c}) t={t}: Σα²={var} exceeds 1/k_t={}",
+                1.0 / k_t
+            ));
+        }
+        if var < 1.0 / t as f64 - 1e-12 {
+            return Err(format!("impossible variance {var} < 1/t"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn awa_support_is_bounded_unlike_ema() {
+    // AWA's oldest used sample is at most (z+1 chunks) old; EMA touches
+    // everything. Quantify on random fixed-k configs.
+    Runner::new("AWA bounded staleness", 0xA14).run(30, |g| {
+        let k = g.usize_range(2, 20) as u64;
+        let t = (3 * k + g.usize_range(0, 20) as u64).max(2 * k + 1);
+        let awa = AveragerSpec::Awa {
+            window: WindowKind::Fixed { k },
+            accumulators: 2,
+        };
+        let w = reconstruct_weights(&awa, t).map_err(|e| e.to_string())?;
+        let r = report_from_weights(&w, t, k as f64);
+        if r.max_age > 2 * k {
+            return Err(format!("awa2(k={k}) t={t}: max_age {} > 2k", r.max_age));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn estimators_are_translation_equivariant() {
+    // Averaging x+c must equal averaging x, plus c — linearity plus
+    // Σα = 1 in operational form, on the actual estimator (not the
+    // reconstruction).
+    Runner::new("translation equivariance", 0xA15).run(40, |g| {
+        let t = g.usize_range(1, 80) as u64;
+        let spec = arb_spec(g, t.max(4));
+        let shift = g.f64_range(-100.0, 100.0);
+        let mut a = spec.build(1).map_err(|e| e)?;
+        let mut b = spec.build(1).map_err(|e| e)?;
+        let mut xs = Vec::new();
+        for i in 0..t {
+            let x = g.gaussian() * 5.0 + (i as f64 * 0.3).sin();
+            xs.push(x);
+            a.observe_scalar(x);
+            b.observe_scalar(x + shift);
+        }
+        match (a.value_scalar(), b.value_scalar()) {
+            (Some(va), Some(vb)) => assert_close(
+                vb,
+                va + shift,
+                1e-9,
+                &format!("{} t={t}", spec.label()),
+            ),
+            (None, None) => Ok(()),
+            _ => Err("availability must not depend on shift".to_string()),
+        }
+    });
+}
+
+#[test]
+fn estimators_are_scale_equivariant() {
+    Runner::new("scale equivariance", 0xA16).run(40, |g| {
+        let t = g.usize_range(1, 80) as u64;
+        let spec = arb_spec(g, t.max(4));
+        let scale = g.f64_range(0.1, 50.0);
+        let mut a = spec.build(1)?;
+        let mut b = spec.build(1)?;
+        for i in 0..t {
+            let x = g.gaussian() + (i as f64 * 0.7).cos();
+            a.observe_scalar(x);
+            b.observe_scalar(x * scale);
+        }
+        match (a.value_scalar(), b.value_scalar()) {
+            (Some(va), Some(vb)) => assert_close(
+                vb,
+                va * scale,
+                1e-9,
+                &format!("{} t={t}", spec.label()),
+            ),
+            (None, None) => Ok(()),
+            _ => Err("availability must not depend on scale".to_string()),
+        }
+    });
+}
+
+#[test]
+fn vector_estimators_process_coordinates_independently() {
+    Runner::new("coordinatewise independence", 0xA17).run(25, |g| {
+        let t = g.usize_range(1, 50) as u64;
+        let d = g.usize_range(2, 6);
+        let spec = arb_spec(g, t.max(4));
+        let mut vector = spec.build(d)?;
+        let mut scalars: Vec<_> = (0..d).map(|_| spec.build(1).unwrap()).collect();
+        for _ in 0..t {
+            let x: Vec<f64> = (0..d).map(|_| g.gaussian() * 3.0).collect();
+            vector.observe(&x);
+            for (s, &xv) in scalars.iter_mut().zip(&x) {
+                s.observe_scalar(xv);
+            }
+        }
+        let vv = vector.value();
+        for (i, s) in scalars.iter().enumerate() {
+            let sv = s.value_scalar();
+            match (&vv, sv) {
+                (Some(v), Some(sv)) => {
+                    assert_close(v[i], sv, 1e-12, &format!("{} dim {i}", spec.label()))?
+                }
+                (None, None) => {}
+                _ => return Err("availability mismatch".to_string()),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn anytime_estimators_keep_constant_memory() {
+    Runner::new("O(1) memory for anytime estimators", 0xA18).run(20, |g| {
+        let spec = match g.usize_range(0, 3) {
+            0 => AveragerSpec::ExpK {
+                k: g.usize_range(1, 50) as u64,
+            },
+            1 => AveragerSpec::Gea {
+                c: g.f64_range(0.1, 0.9),
+            },
+            _ => AveragerSpec::Awa {
+                window: WindowKind::Growing {
+                    c: g.f64_range(0.1, 0.9),
+                },
+                accumulators: g.usize_range(2, 6) as u32,
+            },
+        };
+        let d = g.usize_range(1, 8);
+        let mut a = spec.build(d)?;
+        let x = vec![1.0; d];
+        a.observe(&x);
+        let m0 = a.memory_floats();
+        for _ in 0..2000 {
+            a.observe(&x);
+        }
+        if a.memory_floats() != m0 {
+            return Err(format!(
+                "{}: memory changed {m0} → {}",
+                spec.label(),
+                a.memory_floats()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gea_effective_window_converges_for_random_c() {
+    Runner::new("GEA k_eff/t → c", 0xA19).run(15, |g| {
+        let c = g.f64_range(0.05, 0.95);
+        let mut a = ata::averagers::GrowingExp::new(1, c)?;
+        for _ in 0..30_000 {
+            a.observe_scalar(g.gaussian());
+        }
+        let ratio = a.effective_window() / a.t() as f64;
+        assert_close(ratio, c, 1e-4, &format!("c={c}"))
+    });
+}

@@ -1,0 +1,107 @@
+//! Integration tests of the `ata` launcher binary itself.
+
+use std::process::Command;
+
+fn ata() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_ata"))
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = ata().args(args).output().expect("spawn ata");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+#[test]
+fn help_lists_commands() {
+    let (ok, stdout, _) = run(&["--help"]);
+    assert!(ok);
+    for cmd in ["experiment", "serve", "client", "artifacts", "weights"] {
+        assert!(stdout.contains(cmd), "help missing '{cmd}':\n{stdout}");
+    }
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let (ok, _, stderr) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"), "{stderr}");
+}
+
+#[test]
+fn experiment_smoke_run_with_csv_export() {
+    let csv = std::env::temp_dir().join("ata-cli-test.csv");
+    let _ = std::fs::remove_file(&csv);
+    let (ok, stdout, stderr) = run(&[
+        "experiment",
+        "--figure",
+        "fig3",
+        "--c",
+        "0.5",
+        "--runs",
+        "2",
+        "--steps",
+        "120",
+        "--eval-points",
+        "12",
+        "--csv",
+        csv.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("final excess error"), "{stdout}");
+    assert!(stdout.contains("gea(c=0.5)"), "{stdout}");
+    let contents = std::fs::read_to_string(&csv).expect("csv written");
+    assert!(contents.starts_with("step,"), "{contents}");
+    assert!(contents.lines().count() > 5);
+}
+
+#[test]
+fn experiment_rejects_bad_figure() {
+    let (ok, _, stderr) = run(&["experiment", "--figure", "fig9", "--runs", "1"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown figure"), "{stderr}");
+}
+
+#[test]
+fn weights_analysis_reports_invariants() {
+    let (ok, stdout, stderr) = run(&["weights", "--spec", "awa3(c=0.5)", "--t", "60"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("weight sum"), "{stdout}");
+    assert!(stdout.contains("effective samples"), "{stdout}");
+    // Σα = 1 printed with 9 decimals
+    assert!(stdout.contains("1.000000000"), "{stdout}");
+}
+
+#[test]
+fn weights_rejects_bad_spec() {
+    let (ok, _, stderr) = run(&["weights", "--spec", "bogus(c=0.5)"]);
+    assert!(!ok);
+    assert!(stderr.contains("bogus"), "{stderr}");
+}
+
+#[test]
+fn artifacts_validation_when_present() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let (ok, stdout, stderr) = run(&["artifacts"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("all artifacts load and execute"), "{stdout}");
+}
+
+#[test]
+fn experiment_config_file_via_cli() {
+    let path = std::env::temp_dir().join("ata-cli-exp.toml");
+    std::fs::write(
+        &path,
+        "steps = 60\nruns = 2\naveragers = [\"gea(c=0.5)\", \"true(c=0.5)\"]\n\n[schedule]\nkind = \"stride\"\nstride = 20\n",
+    )
+    .unwrap();
+    let (ok, stdout, stderr) = run(&["experiment", "--config", path.to_str().unwrap()]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("gea(c=0.5)"), "{stdout}");
+}

@@ -1,0 +1,81 @@
+//! Integration: config files on disk → validated runnable configs.
+
+use ata::config::{ExperimentFile, ServiceConfig};
+use ata::linreg::run_experiment;
+
+fn write_temp(name: &str, contents: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("ata-config-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    std::fs::write(&path, contents).unwrap();
+    path
+}
+
+#[test]
+fn experiment_config_file_runs() {
+    let path = write_temp(
+        "exp.toml",
+        r#"
+# tiny smoke experiment
+steps = 50
+runs = 3
+seed = 7
+averagers = ["gea(c=0.5)", "awa3(c=0.5)", "true(c=0.5)"]
+
+[sgd]
+batch_size = 11
+step_size = 0.2
+
+[schedule]
+kind = "stride"
+stride = 10
+"#,
+    );
+    let file = ExperimentFile::load(path.to_str().unwrap()).unwrap();
+    assert_eq!(file.config.total_steps, 50);
+    assert_eq!(file.config.runs, 3);
+    let res = run_experiment(&file.config, None).unwrap();
+    assert_eq!(res.curves.len(), 4); // 3 averagers + iterate
+    assert_eq!(*res.steps.last().unwrap(), 50);
+}
+
+#[test]
+fn service_config_file_loads() {
+    let path = write_temp(
+        "svc.toml",
+        r#"
+[service]
+addr = "127.0.0.1:0"
+shards = 2
+queue_capacity = 32
+backpressure = "reject"
+
+[[stream]]
+name = "layer0.weight"
+dim = 16
+averager = "awa3(c=0.5)"
+"#,
+    );
+    let cfg = ServiceConfig::load(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.shards, 2);
+    assert_eq!(cfg.streams.len(), 1);
+    assert_eq!(cfg.streams[0].dim, 16);
+    // And it boots a coordinator.
+    let c = ata::coordinator::Coordinator::from_config(&cfg).unwrap();
+    assert_eq!(c.stream_names(), vec!["layer0.weight".to_string()]);
+}
+
+#[test]
+fn missing_file_is_a_clean_error() {
+    let err = ExperimentFile::load("/nonexistent/nope.toml").unwrap_err();
+    assert!(err.contains("cannot read"), "{err}");
+    let err = ServiceConfig::load("/nonexistent/nope.toml").unwrap_err();
+    assert!(err.contains("cannot read"), "{err}");
+}
+
+#[test]
+fn malformed_file_is_a_clean_error() {
+    let path = write_temp("bad.toml", "steps = [unterminated");
+    let err = ExperimentFile::load(path.to_str().unwrap()).unwrap_err();
+    assert!(err.contains("toml error"), "{err}");
+}

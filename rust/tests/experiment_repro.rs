@@ -1,0 +1,141 @@
+//! Reproduction shape tests: small-scale versions of the paper's
+//! acceptance criteria (DESIGN.md §5). The full-scale numbers live in
+//! the benches; these run fast enough for `cargo test` and catch
+//! regressions in the figure-defining behaviour.
+
+use ata::linreg::{run_experiment, EvalSchedule, ExperimentConfig};
+use ata::report;
+use ata::util::pool::ThreadPool;
+
+fn pool() -> ThreadPool {
+    ThreadPool::with_default_size()
+}
+
+#[test]
+fn fig3_c50_ordering_exp_worse_than_awa3_and_true() {
+    // Paper Figure 3 right: at c = 0.5, exp (GEA) performs significantly
+    // worse than true; awa3 is indistinguishable from true.
+    let mut cfg = ExperimentConfig::figure3(0.5, 24);
+    cfg.schedule = EvalSchedule::LogSpaced { points: 50 };
+    let res = run_experiment(&cfg, Some(&pool())).unwrap();
+    let gea_ratio = report::tail_ratio(&res, "gea", "true(", 0.2).unwrap();
+    let awa3_ratio = report::tail_ratio(&res, "awa3", "true(", 0.2).unwrap();
+    assert!(
+        gea_ratio > 1.02,
+        "GEA should lag true at c=0.5: ratio {gea_ratio}"
+    );
+    assert!(
+        (awa3_ratio - 1.0).abs() < 0.05,
+        "awa3 should match true at c=0.5: ratio {awa3_ratio}"
+    );
+    assert!(
+        gea_ratio > awa3_ratio,
+        "ordering must be exp > awa3 ({gea_ratio} vs {awa3_ratio})"
+    );
+}
+
+#[test]
+fn fig3_c25_all_methods_indistinguishable() {
+    // Paper Figure 3 left: at c = 0.25 all proposed estimators closely
+    // match the true average.
+    let mut cfg = ExperimentConfig::figure3(0.25, 24);
+    cfg.schedule = EvalSchedule::LogSpaced { points: 50 };
+    let res = run_experiment(&cfg, Some(&pool())).unwrap();
+    for label in ["gea", "awa2", "awa3"] {
+        let ratio = report::tail_ratio(&res, label, "true(", 0.2).unwrap();
+        assert!(
+            (ratio - 1.0).abs() < 0.06,
+            "{label} should match true at c=0.25: ratio {ratio}"
+        );
+    }
+}
+
+#[test]
+fn fig2_expk_degrades_with_k_awa_does_not() {
+    // Paper Figure 2: as k grows the EMA's use of old samples penalizes
+    // it; AWA stays glued to the exact window. The effect lives in the
+    // transient-bias regime (t ∈ [2k, 6k]) — see EXPERIMENTS.md
+    // §Deviations for the stationary-tail autocorrelation caveat.
+    let runs = 40;
+    let sched = EvalSchedule::EveryStep;
+
+    let mut cfg10 = ExperimentConfig::figure2(10, runs);
+    cfg10.schedule = sched;
+    let res10 = run_experiment(&cfg10, Some(&pool())).unwrap();
+    let exp10 = report::range_ratio(&res10, "expk", "true(", 20, 60).unwrap();
+    let awa10 = report::range_ratio(&res10, "awa2", "true(", 20, 60).unwrap();
+
+    let mut cfg100 = ExperimentConfig::figure2(100, runs);
+    cfg100.schedule = sched;
+    let res100 = run_experiment(&cfg100, Some(&pool())).unwrap();
+    let exp100 = report::range_ratio(&res100, "expk", "true(", 200, 600).unwrap();
+    let awa100 = report::range_ratio(&res100, "awa2", "true(", 200, 600).unwrap();
+
+    // k=10: everything within a few percent of true in its transient.
+    assert!((exp10 - 1.0).abs() < 0.06, "expk@k=10 ratio {exp10}");
+    assert!((awa10 - 1.0).abs() < 0.06, "awa@k=10 ratio {awa10}");
+    // k=100: the EMA transient penalty is real and grows with k.
+    assert!(
+        exp100 > 1.02,
+        "expk@k=100 must lag true in the transient: {exp100}"
+    );
+    assert!(
+        exp100 > exp10 + 0.01,
+        "expk penalty must grow with k: {exp10} -> {exp100}"
+    );
+    assert!(
+        exp100 > awa100,
+        "EMA transient degradation ({exp100}) must exceed AWA's ({awa100})"
+    );
+}
+
+#[test]
+fn raw_is_not_anytime_but_converges_to_true() {
+    // raw has no average before T(1−c); from then on it is the exact
+    // tail average, so its FINAL point matches true — but early in the
+    // stream it reports the (much worse) raw iterate.
+    let mut cfg = ExperimentConfig::figure3(0.5, 16);
+    cfg.schedule = EvalSchedule::EveryStep;
+    let res = run_experiment(&cfg, Some(&pool())).unwrap();
+    let raw = res.curve("raw").unwrap();
+    let truec = res.curve("true(").unwrap();
+    let iterate = res.curve("iterate").unwrap();
+    // Final: raw == true (both average exactly the last 500 samples).
+    let rel = (raw.final_value() - truec.final_value()).abs() / truec.final_value();
+    assert!(rel < 1e-9, "raw and true must coincide at T: rel {rel}");
+    // Pre-start (t ≤ T(1−c) = 500): raw has NO average — it reports the
+    // raw iterate at every eval point (the anytime limitation the
+    // paper's methods remove); from t = 501 it starts averaging and
+    // departs from the iterate.
+    for (i, &t) in res.steps.iter().enumerate() {
+        if t <= 500 {
+            assert_eq!(raw.mean[i], iterate.mean[i], "raw = iterate at t={t}");
+        }
+    }
+    let after = res.steps.iter().position(|&t| t == 600).unwrap();
+    assert_ne!(
+        raw.mean[after], iterate.mean[after],
+        "raw must depart from the iterate once averaging starts"
+    );
+    // Meanwhile the anytime window is live the whole time.
+    assert!(truec.mean.iter().all(|v| v.is_finite() && *v > 0.0));
+}
+
+#[test]
+fn loglog_slopes_are_negative_for_all_averagers() {
+    // Every averaged curve decays on the log-log plot over the tail.
+    let mut cfg = ExperimentConfig::figure3(0.25, 12);
+    cfg.schedule = EvalSchedule::LogSpaced { points: 60 };
+    let res = run_experiment(&cfg, Some(&pool())).unwrap();
+    for c in &res.curves {
+        if c.label == "iterate" {
+            continue;
+        }
+        let slope = report::loglog_slope(&res.steps, &c.mean, 0.5);
+        assert!(
+            slope < -0.3,
+            "{}: slope {slope} should be decisively negative",
+            c.label
+        );
+    }
+}

@@ -1,0 +1,156 @@
+//! Fuzz-style property tests of the hand-written parsers: arbitrary
+//! byte soup must never panic, and valid documents must round-trip.
+
+use ata::config::toml::Toml;
+use ata::testkit::{Gen, Runner};
+use ata::util::json::Json;
+
+/// Random "almost JSON" text: tokens stitched together with mutations.
+fn arb_jsonish(g: &mut Gen) -> String {
+    let tokens = [
+        "{", "}", "[", "]", ",", ":", "\"", "null", "true", "false", "1",
+        "-2.5", "1e9", "\\u0041", "\\", "\"key\"", " ", "\n", "é", "0x1",
+        "NaN", "∞",
+    ];
+    let n = g.usize_range(0, 40);
+    let mut s = String::new();
+    for _ in 0..n {
+        s.push_str(*g.choose(&tokens[..]));
+    }
+    s
+}
+
+/// Structured random JSON value (always valid).
+fn arb_json(g: &mut Gen, depth: usize) -> Json {
+    if depth == 0 {
+        return match g.usize_range(0, 3) {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool(0.5)),
+            2 => Json::Num((g.gaussian() * 1e3 * 64.0).round() / 64.0),
+            _ => Json::Str(arb_string(g)),
+        };
+    }
+    match g.usize_range(0, 5) {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool(0.5)),
+        2 => Json::Num((g.gaussian() * 1e3 * 64.0).round() / 64.0),
+        3 => Json::Str(arb_string(g)),
+        4 => Json::Arr(
+            (0..g.usize_range(0, 5))
+                .map(|_| arb_json(g, depth - 1))
+                .collect(),
+        ),
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            for _ in 0..g.usize_range(0, 5) {
+                m.insert(arb_string(g), arb_json(g, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+fn arb_string(g: &mut Gen) -> String {
+    let chars = ['a', 'Z', '0', ' ', '"', '\\', '\n', '\t', 'é', '→', '😀', '\u{7}'];
+    (0..g.usize_range(0, 10)).map(|_| *g.choose(&chars[..])).collect()
+}
+
+#[test]
+fn json_parser_never_panics_on_garbage() {
+    Runner::new("json parse garbage", 0xF1).run(500, |g| {
+        let text = arb_jsonish(g);
+        let _ = Json::parse(&text); // must not panic; result irrelevant
+        true
+    });
+}
+
+#[test]
+fn json_roundtrip_any_value() {
+    Runner::new("json roundtrip", 0xF2).run(300, |g| {
+        let v = arb_json(g, 4);
+        let compact = Json::parse(&v.encode());
+        let pretty = Json::parse(&v.encode_pretty());
+        match (compact, pretty) {
+            (Ok(a), Ok(b)) if a == v && b == v => Ok(()),
+            (a, b) => Err(format!("roundtrip mismatch: {a:?} / {b:?} vs {v:?}")),
+        }
+    });
+}
+
+#[test]
+fn toml_parser_never_panics_on_garbage() {
+    Runner::new("toml parse garbage", 0xF3).run(500, |g| {
+        let tokens = [
+            "[", "]", "[[", "]]", "=", "\"", "'", "#", "a", "b.c", "1",
+            "-2.5", "true", "{", "}", ",", "\n", " ", "\t", "é", "1_000",
+        ];
+        let n = g.usize_range(0, 40);
+        let mut s = String::new();
+        for _ in 0..n {
+            s.push_str(*g.choose(&tokens[..]));
+        }
+        let _ = Toml::parse(&s); // must not panic
+        true
+    });
+}
+
+#[test]
+fn toml_random_valid_docs_parse() {
+    // Generate simple valid documents and check values survive.
+    Runner::new("toml valid docs", 0xF4).run(200, |g| {
+        let n_keys = g.usize_range(1, 8);
+        let mut doc = String::new();
+        let mut expected: Vec<(String, f64)> = Vec::new();
+        for i in 0..n_keys {
+            let key = format!("key_{i}");
+            let val = (g.gaussian() * 100.0 * 64.0).round() / 64.0;
+            doc.push_str(&format!("{key} = {val:?}\n"));
+            expected.push((key, val));
+        }
+        let parsed = Toml::parse(&doc).map_err(|e| e.to_string())?;
+        for (k, v) in expected {
+            let got = parsed
+                .get_path(&k)
+                .and_then(Toml::as_f64)
+                .ok_or_else(|| format!("missing {k}"))?;
+            if (got - v).abs() > 1e-9 {
+                return Err(format!("{k}: {got} != {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wire_frames_survive_arbitrary_payloads() {
+    use ata::coordinator::protocol::{read_frame, write_frame};
+    Runner::new("frame roundtrip", 0xF5).run(200, |g| {
+        let v = arb_json(g, 3);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &v).map_err(|e| e.to_string())?;
+        let mut cursor = std::io::Cursor::new(buf);
+        let back = read_frame(&mut cursor)
+            .map_err(|e| e.to_string())?
+            .ok_or("missing frame")?;
+        if back != v {
+            return Err(format!("{back:?} != {v:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_frames_error_not_panic() {
+    use ata::coordinator::protocol::{read_frame, write_frame};
+    Runner::new("truncated frames", 0xF6).run(200, |g| {
+        let v = arb_json(g, 2);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &v).map_err(|e| e.to_string())?;
+        let cut = g.usize_range(0, buf.len().saturating_sub(1));
+        buf.truncate(cut);
+        let mut cursor = std::io::Cursor::new(buf);
+        // Must be Ok(None) (clean EOF at len==0) or Err — never panic.
+        let _ = read_frame(&mut cursor);
+        Ok(())
+    });
+}

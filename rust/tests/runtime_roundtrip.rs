@@ -1,0 +1,247 @@
+//! Integration: the AOT artifacts load, compile and agree with the
+//! native Rust implementations on identical inputs.
+//!
+//! Skips (with a notice) when `make artifacts` has not been run.
+
+use ata::linreg::{LinRegProblem, Sgd, SgdConfig};
+use ata::rng::{GaussianSource, Xoshiro256};
+use ata::runtime::{artifacts_available, Runtime, DEFAULT_ARTIFACTS_DIR};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifacts_available(DEFAULT_ARTIFACTS_DIR) {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::from_dir(DEFAULT_ARTIFACTS_DIR).expect("runtime"))
+}
+
+fn f32s(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+#[test]
+fn all_manifest_entries_compile_and_run_on_zeros() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let names: Vec<String> = rt.manifest().entries.keys().cloned().collect();
+    assert!(names.len() >= 5, "expected ≥5 entries, got {names:?}");
+    for name in names {
+        let entry = rt.load(&name).expect("load");
+        let zeros: Vec<Vec<f32>> = entry
+            .spec()
+            .inputs
+            .iter()
+            .map(|t| vec![0.0f32; t.elements()])
+            .collect();
+        let refs: Vec<&[f32]> = zeros.iter().map(Vec::as_slice).collect();
+        let out = entry.call(&refs).expect("call");
+        assert_eq!(out.len(), entry.spec().outputs.len(), "{name}");
+        for (o, spec) in out.iter().zip(&entry.spec().outputs) {
+            assert_eq!(o.len(), spec.elements(), "{name}");
+            assert!(o.iter().all(|v| v.is_finite()), "{name}: non-finite");
+        }
+    }
+}
+
+#[test]
+fn sgd_step_matches_native_rust() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let problem = LinRegProblem::paper_default();
+    let cfg = SgdConfig::paper_default();
+    let mut gauss = GaussianSource::new(Xoshiro256::seed_from_u64(777));
+    let d = problem.d;
+    let b = cfg.batch_size;
+
+    // Native step on explicit data == PJRT step on the same data.
+    let mut xs = vec![0.0f64; b * d];
+    let mut ys = vec![0.0f64; b];
+    problem.sample_batch(&mut gauss, &mut xs, &mut ys);
+    let w0: Vec<f64> = (0..d).map(|i| (i as f64 * 0.1).sin()).collect();
+
+    // Native: replicate Sgd::step arithmetic on the given batch.
+    let mut resid = vec![0.0f64; b];
+    for i in 0..b {
+        let row = &xs[i * d..(i + 1) * d];
+        resid[i] = row.iter().zip(&w0).map(|(x, w)| x * w).sum::<f64>() - ys[i];
+    }
+    let scale = cfg.step_size / b as f64;
+    let mut w_native = w0.clone();
+    for i in 0..b {
+        let coeff = scale * resid[i];
+        let row = &xs[i * d..(i + 1) * d];
+        for (w, &x) in w_native.iter_mut().zip(row) {
+            *w -= coeff * x;
+        }
+    }
+
+    let out = rt
+        .call(
+            "sgd_step_d50_b11",
+            &[
+                &f32s(&w0),
+                &f32s(&xs),
+                &f32s(&ys),
+                &[cfg.step_size as f32],
+            ],
+        )
+        .expect("pjrt sgd_step");
+    let w_pjrt = &out[0];
+    for i in 0..d {
+        let diff = (w_pjrt[i] as f64 - w_native[i]).abs();
+        assert!(
+            diff < 1e-4 * w_native[i].abs().max(1.0),
+            "dim {i}: pjrt {} vs native {}",
+            w_pjrt[i],
+            w_native[i]
+        );
+    }
+}
+
+#[test]
+fn sgd_chunk_equals_repeated_steps_and_tracks_native_trajectory() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let problem = LinRegProblem::paper_default();
+    let cfg = SgdConfig::paper_default();
+    let d = problem.d;
+    let b = cfg.batch_size;
+    let s = 100usize; // must match the exported chunk length
+
+    // Sample S batches with the SAME generator stream the native SGD
+    // will consume, so trajectories are comparable.
+    let seed = 4242u64;
+    let mut gauss = GaussianSource::new(Xoshiro256::seed_from_u64(seed));
+    let mut xs_all = vec![0.0f64; s * b * d];
+    let mut ys_all = vec![0.0f64; s * b];
+    for i in 0..s {
+        let (xs, ys) = (
+            &mut xs_all[i * b * d..(i + 1) * b * d],
+            &mut ys_all[i * b..(i + 1) * b],
+        );
+        problem.sample_batch(&mut gauss, xs, ys);
+    }
+
+    // PJRT chunk from w0 = 0.
+    let w0 = vec![0.0f32; d];
+    let out = rt
+        .call(
+            "sgd_chunk_d50_b11_s100",
+            &[
+                &w0,
+                &f32s(&xs_all),
+                &f32s(&ys_all),
+                &[cfg.step_size as f32],
+            ],
+        )
+        .expect("pjrt chunk");
+    let (w_final, iterates) = (&out[0], &out[1]);
+    assert_eq!(iterates.len(), s * d);
+    // Final iterate consistency within the artifact.
+    for i in 0..d {
+        assert_eq!(w_final[i], iterates[(s - 1) * d + i]);
+    }
+
+    // Native trajectory on the same data stream (same seed => same data).
+    let mut native = Sgd::new(problem.clone(), cfg, seed).expect("sgd");
+    let mut max_rel = 0.0f64;
+    for step in 0..s {
+        native.step();
+        if step % 20 == 19 {
+            let w_n = native.w();
+            for i in 0..d {
+                let p = iterates[step * d + i] as f64;
+                let rel = (p - w_n[i]).abs() / w_n[i].abs().max(1.0);
+                max_rel = max_rel.max(rel);
+            }
+        }
+    }
+    // f32 vs f64 accumulation over 100 steps: loose but meaningful bound.
+    assert!(
+        max_rel < 5e-3,
+        "PJRT/native trajectory divergence: {max_rel}"
+    );
+    let final_excess_native = native.excess_error();
+    let w_final_f64: Vec<f64> = w_final.iter().map(|&x| x as f64).collect();
+    let final_excess_pjrt = native.problem().excess_error(&w_final_f64);
+    assert!(
+        (final_excess_native - final_excess_pjrt).abs()
+            < 0.05 * final_excess_native.max(1e-6),
+        "excess mismatch: native {final_excess_native} vs pjrt {final_excess_pjrt}"
+    );
+}
+
+#[test]
+fn lerp_combine_matches_rust_math() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let d = 50;
+    let a: Vec<f32> = (0..d).map(|i| (i as f32 * 0.3).sin()).collect();
+    let b: Vec<f32> = (0..d).map(|i| (i as f32 * 0.9).cos()).collect();
+    for gamma in [0.0f32, 0.25, 0.7, 1.0] {
+        let out = rt
+            .call("lerp_combine_d50", &[&a, &b, &[gamma]])
+            .expect("lerp");
+        for i in 0..d {
+            let want = gamma * a[i] + (1.0 - gamma) * b[i];
+            assert!((out[0][i] - want).abs() < 1e-6, "γ={gamma} i={i}");
+        }
+    }
+}
+
+#[test]
+fn awa_snapshot_matches_rust_averager() {
+    // Feed the same stream to the Rust AwaMulti and reconstruct the
+    // estimate via the AOT awa_snapshot graph from the accumulator state.
+    let Some(rt) = runtime_or_skip() else { return };
+    use ata::averagers::{Averager, AwaMulti, WindowKind};
+    let d = 50;
+    let c = 0.5;
+    let z = 3; // 4 accumulators total, matches awa_snapshot_m4_d50
+    let mut awa = AwaMulti::new(d, WindowKind::Growing { c }, z);
+    let mut gauss = GaussianSource::new(Xoshiro256::seed_from_u64(9));
+    let mut x = vec![0.0f64; d];
+    for _ in 0..300 {
+        gauss.fill_standard(&mut x);
+        awa.observe(&x);
+    }
+    let rust_value = awa.value().expect("value");
+
+    // Rebuild means matrix from a parallel replay (the accumulator means
+    // are internal; reconstruct by replaying into a fresh AwaMulti and
+    // reading its public state via counts + a probing trick is overkill —
+    // instead drive the snapshot graph with hand-built state and compare
+    // against the same combine in Rust).
+    let counts = awa.counts().to_vec();
+    // Hand-built means: deterministic values; compute expected combine in
+    // Rust with the same formula the averager uses.
+    let m = z as usize + 1;
+    let mut means = vec![0.0f32; m * d];
+    for (i, mv) in means.iter_mut().enumerate() {
+        *mv = ((i as f32) * 0.017).sin();
+    }
+    let counts_f: Vec<f32> = counts.iter().map(|&c| c as f32).collect();
+    let k_t = (c * awa.t() as f64) as f32;
+    let out = rt
+        .call("awa_snapshot_m4_d50", &[&means, &counts_f, &[k_t]])
+        .expect("awa_snapshot");
+
+    // Expected: pooled recent + γ⁰ correction (same math as AwaMulti).
+    let n0 = counts[0] as f64;
+    let nrec: f64 = counts[1..].iter().sum::<u64>() as f64;
+    assert!(nrec > 0.0, "test needs a nonempty recent group");
+    let disc = (1.0 / (n0 * k_t as f64) + 1.0 / (nrec * k_t as f64)
+        - 1.0 / (n0 * nrec))
+        .max(0.0);
+    let gamma = ((nrec + n0 * nrec * disc.sqrt()) / (n0 + nrec)).clamp(0.0, 1.0);
+    for i in 0..d {
+        let mut pooled = 0.0f64;
+        for j in 1..m {
+            pooled += (counts[j] as f64 / nrec) * means[j * d + i] as f64;
+        }
+        let want = gamma * pooled + (1.0 - gamma) * means[i] as f64;
+        assert!(
+            (out[0][i] as f64 - want).abs() < 1e-4,
+            "i={i}: pjrt {} vs rust {want}",
+            out[0][i]
+        );
+    }
+    // And the Rust averager value itself is finite and plausible.
+    assert!(rust_value.iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,150 @@
+//! Integration: TCP server + client over localhost.
+
+use ata::config::BackpressurePolicy;
+use ata::coordinator::{Client, Coordinator, Server};
+use std::sync::Arc;
+
+fn start_server() -> (Server, String) {
+    let c = Arc::new(Coordinator::new(2, 256, BackpressurePolicy::Block));
+    let server = Server::start("127.0.0.1:0", c, 4).expect("server");
+    let addr = server.addr().to_string();
+    (server, addr)
+}
+
+#[test]
+fn full_client_workflow() {
+    let (_server, addr) = start_server();
+    let mut cl = Client::connect(&addr).expect("connect");
+    cl.ping().expect("ping");
+
+    cl.register("layer0", 4, "awa3(c=0.5)").expect("register");
+    cl.register("bn", 2, "gea(c=0.25)").expect("register");
+    let mut names = cl.list_streams().expect("list");
+    names.sort();
+    assert_eq!(names, vec!["bn".to_string(), "layer0".to_string()]);
+
+    for t in 1..=100u64 {
+        assert!(cl.push("layer0", &[t as f64; 4]).expect("push"));
+        assert!(cl.push("bn", &[t as f64, -(t as f64)]).expect("push"));
+    }
+    cl.sync().expect("sync");
+
+    let snap = cl.snapshot("layer0").expect("snapshot");
+    assert_eq!(snap.t, 100);
+    assert_eq!(snap.value.as_ref().unwrap().len(), 4);
+    assert!(snap.window_len > 0.0);
+
+    let metrics = cl.metrics().expect("metrics");
+    assert_eq!(
+        metrics
+            .get("streams")
+            .and_then(|s| s.as_arr())
+            .map(<[_]>::len),
+        Some(2)
+    );
+}
+
+#[test]
+fn server_reports_errors_not_disconnects() {
+    let (_server, addr) = start_server();
+    let mut cl = Client::connect(&addr).expect("connect");
+
+    // Unknown stream
+    let err = cl.push("ghost", &[1.0]).unwrap_err();
+    assert!(err.contains("ghost"), "{err}");
+    // Bad spec
+    let err = cl.register("x", 2, "bogus(c=1)").unwrap_err();
+    assert!(err.contains("bogus"), "{err}");
+    // Wrong dims
+    cl.register("x", 2, "gea(c=0.5)").unwrap();
+    let err = cl.push("x", &[1.0]).unwrap_err();
+    assert!(err.contains("dims"), "{err}");
+    // Duplicate register
+    let err = cl.register("x", 2, "gea(c=0.5)").unwrap_err();
+    assert!(err.contains("already"), "{err}");
+    // Connection still healthy afterwards.
+    cl.ping().expect("connection survives errors");
+}
+
+#[test]
+fn multiple_concurrent_clients() {
+    let (_server, addr) = start_server();
+    let mut setup = Client::connect(&addr).unwrap();
+    setup.register("shared", 1, "true(k=1)").unwrap();
+    drop(setup);
+
+    let mut handles = Vec::new();
+    for i in 0..4 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut cl = Client::connect(&addr).unwrap();
+            for t in 0..250 {
+                cl.push("shared", &[(i * 1000 + t) as f64]).unwrap();
+            }
+            cl.sync().unwrap();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut cl = Client::connect(&addr).unwrap();
+    let snap = cl.snapshot("shared").unwrap();
+    assert_eq!(snap.t, 1000);
+}
+
+#[test]
+fn push_many_batches_apply_in_order() {
+    let (_server, addr) = start_server();
+    let mut cl = Client::connect(&addr).unwrap();
+    cl.register("batch", 2, "true(k=1)").unwrap();
+    // 100 samples in one round-trip; true(k=1) keeps only the last.
+    let mut flat = Vec::with_capacity(200);
+    for i in 1..=100u64 {
+        flat.push(i as f64);
+        flat.push(-(i as f64));
+    }
+    let (accepted, dropped) = cl.push_many("batch", 100, &flat).unwrap();
+    assert_eq!((accepted, dropped), (100, 0));
+    cl.sync().unwrap();
+    let snap = cl.snapshot("batch").unwrap();
+    assert_eq!(snap.t, 100);
+    assert_eq!(snap.value.unwrap(), vec![100.0, -100.0]);
+}
+
+#[test]
+fn push_many_rejects_wrong_dim() {
+    let (_server, addr) = start_server();
+    let mut cl = Client::connect(&addr).unwrap();
+    cl.register("b", 3, "gea(c=0.5)").unwrap();
+    // 10 floats, count 5 → dim 2 != 3.
+    let err = cl.push_many("b", 5, &[0.0; 10]).unwrap_err();
+    assert!(err.contains("dims"), "{err}");
+    cl.ping().unwrap();
+}
+
+#[test]
+fn snapshot_of_empty_stream_has_null_value() {
+    let (_server, addr) = start_server();
+    let mut cl = Client::connect(&addr).unwrap();
+    cl.register("empty", 3, "gea(c=0.5)").unwrap();
+    let snap = cl.snapshot("empty").unwrap();
+    assert_eq!(snap.t, 0);
+    assert!(snap.value.is_none());
+}
+
+#[test]
+fn server_shutdown_is_clean() {
+    let (mut server, addr) = start_server();
+    let mut cl = Client::connect(&addr).unwrap();
+    cl.ping().unwrap();
+    server.shutdown();
+    // New connections must fail after shutdown... the listener socket is
+    // closed; allow either immediate failure or failure on first use.
+    match Client::connect(&addr) {
+        Err(_) => {}
+        Ok(mut c2) => {
+            let _ = c2.set_timeout(Some(std::time::Duration::from_millis(200)));
+            assert!(c2.ping().is_err());
+        }
+    }
+}
