@@ -35,8 +35,11 @@ fn main() {
     }
 
     let steps = 400u64;
-    // Trainer threads: each owns one layer and pushes a drifting
-    // parameter vector (simulated optimization trajectory).
+    // Trainer threads: each owns one layer and streams a drifting
+    // parameter vector (simulated optimization trajectory), shipping
+    // BATCH steps per `push_many` round-trip — one wire frame and one
+    // pooled shard message per batch instead of one per step.
+    const BATCH: usize = 20;
     let mut trainers = Vec::new();
     for (li, layer) in layers.iter().enumerate() {
         let addr = addr.clone();
@@ -45,13 +48,18 @@ fn main() {
             let mut cl = Client::connect(&addr).expect("trainer connect");
             let mut g = GaussianSource::new(Xoshiro256::seed_from_u64(li as u64));
             let mut w = vec![0.0f64; dim];
+            let mut flat = Vec::with_capacity(BATCH * dim);
             for t in 1..=steps {
                 // SGD-ish drift toward 1.0 plus noise.
                 for v in w.iter_mut() {
                     *v += 0.05 * (1.0 - *v) + 0.1 * g.next_gaussian();
                 }
-                cl.push(&format!("{layer}.weight"), &w).expect("push");
-                if t % 100 == 0 {
+                flat.extend_from_slice(&w);
+                if flat.len() == BATCH * dim || t == steps {
+                    let n = flat.len() / dim;
+                    cl.push_many(&format!("{layer}.weight"), n, &flat)
+                        .expect("push_many");
+                    flat.clear();
                     thread::sleep(Duration::from_millis(1));
                 }
             }

@@ -62,6 +62,52 @@ fn main() {
         }
     }
 
+    bench.section("observe_many() batch sweep at d=256 — samples/s per batch size");
+    {
+        // The tentpole comparison: the SAME sample stream ingested in
+        // batches of 1/8/64/512. batch=1 is the non-regression guard
+        // (one dispatch per sample, like observe()); larger batches show
+        // the amortization of dispatch + per-call checks + (for the AWA
+        // family) the run-fused mean kernels.
+        let d = 256usize;
+        let sweep_specs = [
+            AveragerSpec::ExpK { k: 100 },
+            AveragerSpec::Gea { c: 0.5 },
+            AveragerSpec::Awa {
+                window: WindowKind::Growing { c: 0.5 },
+                accumulators: 2,
+            },
+            AveragerSpec::Awa {
+                window: WindowKind::Growing { c: 0.5 },
+                accumulators: 3,
+            },
+            AveragerSpec::Awa {
+                window: WindowKind::Fixed { k: 128 },
+                accumulators: 3,
+            },
+            AveragerSpec::True {
+                window: WindowKind::Fixed { k: 256 },
+            },
+            AveragerSpec::Restart {
+                window: WindowKind::Fixed { k: 128 },
+            },
+        ];
+        for spec in sweep_specs {
+            for batch in [1usize, 8, 64, 512] {
+                let flat: Vec<f64> = (0..batch * d)
+                    .map(|i| (i as f64 * 0.001).sin())
+                    .collect();
+                let mut avg = spec.build(d).unwrap();
+                avg.observe_many(&flat, batch); // steady state
+                bench.bench_elements(
+                    &format!("{} d={d} observe_many batch={batch}", spec.label()),
+                    batch as u64,
+                    || avg.observe_many(&flat, batch),
+                );
+            }
+        }
+    }
+
     bench.section("value_into() cost at d=65536");
     {
         let d = 65_536;

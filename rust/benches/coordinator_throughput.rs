@@ -55,6 +55,31 @@ fn main() {
         }
     }
 
+    bench.section(&format!(
+        "batched ingest: push_many batch sweep vs per-sample push (4 shards, block, d={d})"
+    ));
+    {
+        // The tentpole acceptance metric: samples/s through push_many at
+        // batch ∈ {1, 8, 64, 512} against the per-sample push path.
+        // Each push_many is ONE pooled shard message regardless of batch
+        // size; the per-sample path pays channel + dispatch + alloc per
+        // sample. batch=1 doubles as the non-regression guard.
+        let c = Coordinator::new(4, 4096, BackpressurePolicy::Block);
+        c.register("hot", d, AveragerSpec::Gea { c: 0.5 }).unwrap();
+        let x = vec![0.5f64; d];
+        bench.bench_elements("push per-sample baseline", 1, || {
+            c.push("hot", x.clone()).unwrap()
+        });
+        c.sync().unwrap();
+        for batch in [1usize, 8, 64, 512] {
+            let flat = vec![0.5f64; batch * d];
+            bench.bench_elements(&format!("push_many batch={batch}"), batch as u64, || {
+                c.push_many("hot", batch, &flat).unwrap()
+            });
+            c.sync().unwrap();
+        }
+    }
+
     bench.section("snapshot latency while ingesting (4 shards, block)");
     {
         let c = Arc::new(Coordinator::new(4, 4096, BackpressurePolicy::Block));

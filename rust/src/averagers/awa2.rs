@@ -1,5 +1,6 @@
 //! Anytime window average with two accumulators (paper §3.1–3.2).
 
+use super::kernels;
 use super::{Averager, WindowKind};
 
 /// AWA with one *old* and one *recent* accumulator — the paper's `awa`.
@@ -20,16 +21,22 @@ use super::{Averager, WindowKind};
 /// (warmup: fewer than `k_t` samples pooled) the discriminant is clamped at
 /// zero, which degrades gracefully to the minimum-variance pooled mean.
 ///
-/// Memory: `2d` floats, constant in `t`.
+/// Memory: `2d` floats in ONE contiguous SoA allocation, constant in `t`.
+/// The two halves of [`Awa2::bank`] are the physical accumulators;
+/// `old_phys` names the half currently holding `x̄⁰`, so a flush swaps an
+/// index instead of moving data.
 #[derive(Clone, Debug)]
 pub struct Awa2 {
     kind: WindowKind,
-    /// Old accumulator mean (`x̄⁰`) and its sample count (`N⁰`).
-    acc0: Vec<f64>,
+    /// Contiguous accumulator bank: halves `[0,d)` and `[d,2d)`.
+    bank: Vec<f64>,
+    /// Physical half (0 or 1) holding the old accumulator `x̄⁰`.
+    old_phys: usize,
+    /// Old accumulator sample count `N⁰`.
     n0: u64,
-    /// Recent accumulator mean (`x̄¹`) and its sample count (`N¹`).
-    acc1: Vec<f64>,
+    /// Recent accumulator sample count `N¹`.
     n1: u64,
+    d: usize,
     t: u64,
     /// Number of flushes so far (exposed for tests/metrics).
     flushes: u64,
@@ -44,14 +51,32 @@ impl Awa2 {
         };
         Awa2 {
             kind,
-            acc0: vec![0.0; d],
+            bank: vec![0.0; 2 * d],
+            old_phys: 0,
             n0: 0,
-            acc1: vec![0.0; d],
             n1: 0,
+            d,
             t: 0,
             flushes: 0,
             name,
         }
+    }
+
+    /// Old accumulator mean `x̄⁰`.
+    fn old(&self) -> &[f64] {
+        let o = self.old_phys * self.d;
+        &self.bank[o..o + self.d]
+    }
+
+    /// Recent accumulator mean `x̄¹`.
+    fn recent(&self) -> &[f64] {
+        let o = (1 - self.old_phys) * self.d;
+        &self.bank[o..o + self.d]
+    }
+
+    fn recent_mut(&mut self) -> &mut [f64] {
+        let o = (1 - self.old_phys) * self.d;
+        &mut self.bank[o..o + self.d]
     }
 
     /// Sample counts `(N⁰, N¹)`.
@@ -84,11 +109,12 @@ impl Awa2 {
     }
 
     fn flush(&mut self) {
-        std::mem::swap(&mut self.acc0, &mut self.acc1);
+        // SoA flush: swap which half is old, then clear the new recent.
+        self.old_phys = 1 - self.old_phys;
         self.n0 = self.n1;
-        self.acc1.iter_mut().for_each(|a| *a = 0.0);
         self.n1 = 0;
         self.flushes += 1;
+        self.recent_mut().iter_mut().for_each(|a| *a = 0.0);
     }
 }
 
@@ -112,7 +138,7 @@ impl Averager for Awa2 {
     }
 
     fn dim(&self) -> usize {
-        self.acc1.len()
+        self.d
     }
 
     fn t(&self) -> u64 {
@@ -120,12 +146,54 @@ impl Averager for Awa2 {
     }
 
     fn observe(&mut self, x: &[f64]) {
-        assert_eq!(x.len(), self.acc1.len(), "dimension mismatch");
+        assert_eq!(x.len(), self.d, "dimension mismatch");
         self.t += 1;
         self.n1 += 1;
-        super::mean_update(&mut self.acc1, x, self.n1 as f64);
+        let n = self.n1 as f64;
+        super::mean_update(self.recent_mut(), x, n);
         if self.should_flush() {
             self.flush();
+        }
+    }
+
+    fn observe_many(&mut self, data: &[f64], count: usize) {
+        let d = self.d;
+        assert_eq!(data.len(), count * d, "batch shape mismatch");
+        match self.kind {
+            WindowKind::Fixed { k } => {
+                // Between flushes the recent accumulator absorbs a
+                // contiguous run; fold each run with one mean kernel
+                // call (bit-identical to per-sample `observe`).
+                let k = k.max(1);
+                let mut offset = 0usize;
+                while offset < count {
+                    let room = (k - self.n1) as usize;
+                    let take = room.min(count - offset);
+                    let run = &data[offset * d..(offset + take) * d];
+                    let n1_start = self.n1;
+                    kernels::mean_update_run(self.recent_mut(), run, n1_start);
+                    self.n1 += take as u64;
+                    self.t += take as u64;
+                    offset += take;
+                    if self.n1 >= k {
+                        self.flush();
+                    }
+                }
+            }
+            WindowKind::Growing { .. } => {
+                // The flush trigger reads `t` at every sample, so the
+                // batch win is structural only: one dispatch and shape
+                // check per batch, same per-sample recurrence.
+                for x in data.chunks_exact(d) {
+                    self.t += 1;
+                    self.n1 += 1;
+                    let n = self.n1 as f64;
+                    super::mean_update(self.recent_mut(), x, n);
+                    if self.should_flush() {
+                        self.flush();
+                    }
+                }
+            }
         }
     }
 
@@ -135,15 +203,15 @@ impl Averager for Awa2 {
         }
         if self.n1 == 0 {
             // Fresh flush: the old accumulator is exactly the last window.
-            out.copy_from_slice(&self.acc0);
+            out.copy_from_slice(self.old());
             return true;
         }
         if self.n0 == 0 {
-            out.copy_from_slice(&self.acc1);
+            out.copy_from_slice(self.recent());
             return true;
         }
         let gamma = self.gamma();
-        super::lerp_into(out, &self.acc1, &self.acc0, gamma);
+        super::lerp_into(out, self.recent(), self.old(), gamma);
         true
     }
 
@@ -152,12 +220,12 @@ impl Averager for Awa2 {
     }
 
     fn memory_floats(&self) -> usize {
-        self.acc0.len() + self.acc1.len()
+        self.bank.len()
     }
 
     fn reset(&mut self) {
-        self.acc0.iter_mut().for_each(|a| *a = 0.0);
-        self.acc1.iter_mut().for_each(|a| *a = 0.0);
+        self.bank.iter_mut().for_each(|a| *a = 0.0);
+        self.old_phys = 0;
         self.n0 = 0;
         self.n1 = 0;
         self.t = 0;
@@ -313,6 +381,26 @@ mod tests {
         }
         let v = a.value().unwrap();
         assert!((v[0] - 4.0).abs() < 1e-12 && (v[1] + 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn observe_many_is_bit_identical_to_sequential() {
+        for kind in [WindowKind::Fixed { k: 7 }, WindowKind::Growing { c: 0.4 }] {
+            let mut seq = Awa2::new(2, kind);
+            let mut bat = Awa2::new(2, kind);
+            let data: Vec<f64> = (0..120).map(|i| (i as f64 * 0.19).sin() * 4.0).collect();
+            for x in data.chunks_exact(2) {
+                seq.observe(x);
+            }
+            // Batch splits that straddle several flush boundaries.
+            bat.observe_many(&data[..26], 13);
+            bat.observe_many(&data[26..30], 2);
+            bat.observe_many(&data[30..], 45);
+            assert_eq!(seq.t(), bat.t());
+            assert_eq!(seq.counts(), bat.counts());
+            assert_eq!(seq.flushes(), bat.flushes());
+            assert_eq!(seq.value().unwrap(), bat.value().unwrap());
+        }
     }
 
     #[test]

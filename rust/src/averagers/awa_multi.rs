@@ -2,6 +2,7 @@
 //! (paper §3.3–3.4 — `awa3` and beyond).
 
 use super::awa2::combine_gamma;
+use super::kernels;
 use super::{Averager, WindowKind};
 
 /// AWA with `z` recent accumulators plus one old accumulator (`z+1` total).
@@ -25,18 +26,24 @@ use super::{Averager, WindowKind};
 ///      / (N⁰ + N^{-0})
 /// ```
 ///
-/// with `N^{-0} = Σ_{i=1..z} N^i`. Memory: `(z+1)·d` floats, constant in
-/// `t`. With `z = 1` this is exactly [`super::Awa2`] (tested).
+/// with `N^{-0} = Σ_{i=1..z} N^i`. Memory: `(z+1)·d` floats in ONE
+/// contiguous SoA allocation ([`AwaMulti::bank`]), constant in `t`; a
+/// shift rotates the logical→physical index map instead of moving data.
+/// With `z = 1` this is exactly [`super::Awa2`] (tested).
 #[derive(Clone, Debug)]
 pub struct AwaMulti {
     kind: WindowKind,
-    /// `accs[0]` oldest … `accs[z]` newest.
-    means: Vec<Vec<f64>>,
+    /// Contiguous accumulator bank: `(z+1)` slots of `d` floats each.
+    bank: Vec<f64>,
+    /// `order[i]` = physical slot of logical accumulator `i`
+    /// (`0` oldest … `z` newest).
+    order: Vec<usize>,
+    /// Per-accumulator sample counts, logical (oldest first).
     counts: Vec<u64>,
+    d: usize,
     z: usize,
     t: u64,
     shifts: u64,
-    /// Scratch for the pooled recent mean (avoids allocation on read).
     name: String,
 }
 
@@ -50,13 +57,27 @@ impl AwaMulti {
         };
         AwaMulti {
             kind,
-            means: (0..=z).map(|_| vec![0.0; d]).collect(),
+            bank: vec![0.0; (z + 1) * d],
+            order: (0..=z).collect(),
             counts: vec![0; z + 1],
+            d,
             z,
             t: 0,
             shifts: 0,
             name,
         }
+    }
+
+    /// Logical accumulator `i`'s mean slice within the SoA bank.
+    fn slot(&self, i: usize) -> &[f64] {
+        let o = self.order[i] * self.d;
+        &self.bank[o..o + self.d]
+    }
+
+    /// Mutable newest-accumulator slice (the only one ever written).
+    fn newest_mut(&mut self) -> &mut [f64] {
+        let o = self.order[self.z] * self.d;
+        &mut self.bank[o..o + self.d]
     }
 
     /// Number of recent accumulators `z`.
@@ -108,33 +129,13 @@ impl AwaMulti {
     }
 
     fn shift(&mut self) {
-        // Rotate: oldest slot's buffer is recycled as the new newest.
-        self.means.rotate_left(1);
+        // Rotate the index map: the oldest slot's storage is recycled as
+        // the new newest — no data moves, only indices.
+        self.order.rotate_left(1);
         self.counts.rotate_left(1);
-        let z = self.z;
-        self.means[z].iter_mut().for_each(|m| *m = 0.0);
-        self.counts[z] = 0;
+        self.counts[self.z] = 0;
         self.shifts += 1;
-    }
-
-    /// Pooled recent mean written into `out`; returns `N^{-0}` (0 = empty).
-    fn pooled_recent_into(&self, out: &mut [f64]) -> u64 {
-        let nrec = self.recent_total();
-        if nrec == 0 {
-            return 0;
-        }
-        out.iter_mut().for_each(|o| *o = 0.0);
-        let inv = 1.0 / nrec as f64;
-        for i in 1..=self.z {
-            let w = self.counts[i] as f64 * inv;
-            if w == 0.0 {
-                continue;
-            }
-            for (o, &m) in out.iter_mut().zip(&self.means[i]) {
-                *o += w * m;
-            }
-        }
-        nrec
+        self.newest_mut().iter_mut().for_each(|m| *m = 0.0);
     }
 }
 
@@ -183,7 +184,7 @@ impl Averager for AwaMulti {
     }
 
     fn dim(&self) -> usize {
-        self.means[0].len()
+        self.d
     }
 
     fn t(&self) -> u64 {
@@ -191,13 +192,53 @@ impl Averager for AwaMulti {
     }
 
     fn observe(&mut self, x: &[f64]) {
-        assert_eq!(x.len(), self.dim(), "dimension mismatch");
+        assert_eq!(x.len(), self.d, "dimension mismatch");
         self.t += 1;
-        let z = self.z;
-        self.counts[z] += 1;
-        super::mean_update(&mut self.means[z], x, self.counts[z] as f64);
+        self.counts[self.z] += 1;
+        let n = self.counts[self.z] as f64;
+        super::mean_update(self.newest_mut(), x, n);
         if self.should_shift() {
             self.shift();
+        }
+    }
+
+    fn observe_many(&mut self, data: &[f64], count: usize) {
+        let d = self.d;
+        assert_eq!(data.len(), count * d, "batch shape mismatch");
+        match self.kind {
+            WindowKind::Fixed { .. } => {
+                // Fill the newest accumulator run-by-run up to each chunk
+                // boundary with one mean kernel call per run
+                // (bit-identical to per-sample `observe`).
+                let chunk = self.chunk_size().max(1);
+                let mut offset = 0usize;
+                while offset < count {
+                    let room = (chunk - self.counts[self.z]) as usize;
+                    let take = room.min(count - offset);
+                    let run = &data[offset * d..(offset + take) * d];
+                    let n_start = self.counts[self.z];
+                    kernels::mean_update_run(self.newest_mut(), run, n_start);
+                    self.counts[self.z] += take as u64;
+                    self.t += take as u64;
+                    offset += take;
+                    if self.counts[self.z] >= chunk {
+                        self.shift();
+                    }
+                }
+            }
+            WindowKind::Growing { .. } => {
+                // The shift trigger reads `t` per sample; batch win is
+                // structural (one dispatch/shape check per batch).
+                for x in data.chunks_exact(d) {
+                    self.t += 1;
+                    self.counts[self.z] += 1;
+                    let n = self.counts[self.z] as f64;
+                    super::mean_update(self.newest_mut(), x, n);
+                    if self.should_shift() {
+                        self.shift();
+                    }
+                }
+            }
         }
     }
 
@@ -211,7 +252,7 @@ impl Averager for AwaMulti {
             if n0 == 0 {
                 return false;
             }
-            out.copy_from_slice(&self.means[0]);
+            out.copy_from_slice(self.slot(0));
             return true;
         }
         // Fused weighted sum out = Σ_j w_j·acc_j with the final
@@ -241,9 +282,9 @@ impl Averager for AwaMulti {
             };
             if w != 0.0 {
                 if self.z < STACK_TERMS {
-                    stack[n_terms] = (w, self.means[j].as_slice());
+                    stack[n_terms] = (w, self.slot(j));
                 } else {
-                    heap.push((w, self.means[j].as_slice()));
+                    heap.push((w, self.slot(j)));
                 }
                 n_terms += 1;
             }
@@ -262,12 +303,13 @@ impl Averager for AwaMulti {
     }
 
     fn memory_floats(&self) -> usize {
-        self.means.iter().map(Vec::len).sum()
+        self.bank.len()
     }
 
     fn reset(&mut self) {
-        for m in &mut self.means {
-            m.iter_mut().for_each(|v| *v = 0.0);
+        self.bank.iter_mut().for_each(|v| *v = 0.0);
+        for (i, o) in self.order.iter_mut().enumerate() {
+            *o = i;
         }
         self.counts.iter_mut().for_each(|c| *c = 0);
         self.t = 0;
@@ -328,7 +370,7 @@ mod tests {
         assert_eq!(a.shifts(), 3);
         assert_eq!(a.counts(), &[4, 4, 4, 0]);
         // Oldest accumulator = mean(1..4) = 2.5
-        assert!((a.means[0][0] - 2.5).abs() < 1e-12);
+        assert!((a.slot(0)[0] - 2.5).abs() < 1e-12);
         // Recent pool = mean(5..12) = 8.5, which is a full 8 < k... the
         // estimate must combine with the old chunk to reach variance 1/12.
         let v = a.value_scalar().unwrap();
@@ -446,6 +488,26 @@ mod tests {
         assert!(a.value_scalar().is_none());
         a.observe_scalar(5.0);
         assert_eq!(a.value_scalar().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn observe_many_is_bit_identical_to_sequential() {
+        for kind in [WindowKind::Fixed { k: 12 }, WindowKind::Growing { c: 0.5 }] {
+            let mut seq = AwaMulti::new(2, kind, 3);
+            let mut bat = AwaMulti::new(2, kind, 3);
+            let data: Vec<f64> = (0..160).map(|i| (i as f64 * 0.23).sin() * 3.0).collect();
+            for x in data.chunks_exact(2) {
+                seq.observe(x);
+            }
+            // Splits chosen to straddle chunk/shift boundaries.
+            bat.observe_many(&data[..10], 5);
+            bat.observe_many(&data[10..70], 30);
+            bat.observe_many(&data[70..], 45);
+            assert_eq!(seq.t(), bat.t());
+            assert_eq!(seq.counts(), bat.counts());
+            assert_eq!(seq.shifts(), bat.shifts());
+            assert_eq!(seq.value().unwrap(), bat.value().unwrap());
+        }
     }
 
     #[test]

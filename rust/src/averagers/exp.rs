@@ -1,5 +1,6 @@
 //! Fixed-decay exponential average (paper Eq. 2, the `expk` baseline).
 
+use super::kernels;
 use super::{Averager, WindowKind};
 
 /// Exponential moving average `x̄_t = γ·x̄_{t−1} + (1−γ)·x_t`.
@@ -89,11 +90,34 @@ impl Averager for ExpAverage {
         assert_eq!(x.len(), self.ema.len(), "dimension mismatch");
         self.t += 1;
         self.gamma_pow_t *= self.gamma;
-        let g = self.gamma;
-        let om = 1.0 - g;
-        for (e, &xv) in self.ema.iter_mut().zip(x) {
-            *e = g * *e + om * xv;
+        kernels::ema_step(&mut self.ema, x, self.gamma);
+    }
+
+    fn observe_many(&mut self, data: &[f64], count: usize) {
+        let d = self.ema.len();
+        assert_eq!(data.len(), count * d, "batch shape mismatch");
+        if count == 0 {
+            return;
         }
+        // Closed-form fold (the exponential-family batch recursion of
+        // Luxenberg & Boyd, 2024): n sequential EMA steps collapse to
+        //
+        //   ema ← γⁿ·ema + (1−γ)·Σ_{i<n} γ^{n−1−i}·x_i,
+        //
+        // one scale pass plus one axpy per sample, walking the batch
+        // newest→oldest so the running weight only ever multiplies by γ
+        // (exact at γ = 0). The debias tracker advances as γ^t·γⁿ in a
+        // single multiplication.
+        let g = self.gamma;
+        let gn = g.powi(count as i32);
+        kernels::scale_in_place(&mut self.ema, gn);
+        let mut w = 1.0 - g;
+        for x in data.chunks_exact(d).rev() {
+            kernels::axpy(&mut self.ema, w, x);
+            w *= g;
+        }
+        self.gamma_pow_t *= gn;
+        self.t += count as u64;
     }
 
     fn value_into(&self, out: &mut [f64]) -> bool {
@@ -213,6 +237,25 @@ mod tests {
             (var - want).abs() < 0.25 * want,
             "var {var} vs 1/k {want}"
         );
+    }
+
+    #[test]
+    fn observe_many_matches_sequential() {
+        for gamma in [0.0, 0.5, 0.93] {
+            let mut seq = ExpAverage::new(2, gamma).unwrap();
+            let mut bat = ExpAverage::new(2, gamma).unwrap();
+            let data: Vec<f64> = (0..20).map(|i| (i as f64 * 0.31).sin() * 3.0).collect();
+            for x in data.chunks_exact(2) {
+                seq.observe(x);
+            }
+            bat.observe_many(&data[..8], 4);
+            bat.observe_many(&data[8..], 6);
+            assert_eq!(seq.t(), bat.t());
+            let (a, b) = (seq.value().unwrap(), bat.value().unwrap());
+            for i in 0..2 {
+                assert!((a[i] - b[i]).abs() < 1e-12, "gamma={gamma} dim {i}");
+            }
+        }
     }
 
     #[test]

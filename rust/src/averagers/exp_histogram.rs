@@ -109,6 +109,18 @@ impl EhWindow {
         }
     }
 
+    /// One sample of the shared scalar/batched path (no shape check).
+    fn insert(&mut self, x: &[f64]) {
+        self.t += 1;
+        self.buckets.push_back(Bucket {
+            end_time: self.t,
+            count: 1,
+            sum: x.to_vec(),
+        });
+        self.cascade();
+        self.expire();
+    }
+
     fn expire(&mut self) {
         let k_t = self.kind.k_at(self.t).ceil() as u64;
         while let Some(front) = self.buckets.front() {
@@ -137,14 +149,19 @@ impl Averager for EhWindow {
 
     fn observe(&mut self, x: &[f64]) {
         assert_eq!(x.len(), self.d, "dimension mismatch");
-        self.t += 1;
-        self.buckets.push_back(Bucket {
-            end_time: self.t,
-            count: 1,
-            sum: x.to_vec(),
-        });
-        self.cascade();
-        self.expire();
+        self.insert(x);
+    }
+
+    fn observe_many(&mut self, data: &[f64], count: usize) {
+        assert_eq!(data.len(), count * self.d, "batch shape mismatch");
+        // Bucket structure depends on the per-sample cascade/expiry
+        // order, so the batch path replays the exact per-sample
+        // pipeline; the saving is the per-sample dispatch and shape
+        // re-validation only (the histogram inherently allocates one
+        // bucket per insert).
+        for x in data.chunks_exact(self.d) {
+            self.insert(x);
+        }
     }
 
     fn value_into(&self, out: &mut [f64]) -> bool {

@@ -1,5 +1,6 @@
 //! Growing exponential average (paper §2, Eqs. 3–4 — the `exp` method).
 
+use super::kernels;
 use super::{Averager, WindowKind};
 
 /// Exponential average whose decay `γ_t` is re-solved at every step so that
@@ -76,6 +77,22 @@ impl GrowingExp {
         (a / (1.0 + a)) * (1.0 - (1.0 / c) * ((1.0 - c) / (tf * (tf - 1.0))).sqrt())
     }
 
+    /// One sample of the shared scalar/batched update path.
+    #[inline]
+    fn step(&mut self, x: &[f64]) {
+        self.t += 1;
+        if self.t == 1 {
+            self.avg.copy_from_slice(x);
+            self.v = 1.0;
+            return;
+        }
+        let k_target = (self.c * self.t as f64).max(1.0).min(self.t as f64);
+        let g = solve_gamma(self.v, 1.0 / k_target);
+        let om = 1.0 - g;
+        kernels::ema_step(&mut self.avg, x, g);
+        self.v = g * g * self.v + om * om;
+    }
+
     /// The decay used at the step that *just happened* (for analysis).
     /// Recomputes from the pre-update variance, so callers wanting a trace
     /// should call [`GrowingExp::next_gamma`] before `observe`.
@@ -117,19 +134,20 @@ impl Averager for GrowingExp {
 
     fn observe(&mut self, x: &[f64]) {
         assert_eq!(x.len(), self.avg.len(), "dimension mismatch");
-        self.t += 1;
-        if self.t == 1 {
-            self.avg.copy_from_slice(x);
-            self.v = 1.0;
-            return;
+        self.step(x);
+    }
+
+    fn observe_many(&mut self, data: &[f64], count: usize) {
+        let d = self.avg.len();
+        assert_eq!(data.len(), count * d, "batch shape mismatch");
+        // The decay is re-solved from the tracked variance before every
+        // sample (that is the anytime guarantee), so the batch cannot
+        // fold in closed form; the win is structural — one dispatch and
+        // one shape check per batch, with the same per-sample recurrence
+        // (bit-identical to sequential `observe`).
+        for x in data.chunks_exact(d) {
+            self.step(x);
         }
-        let k_target = (self.c * self.t as f64).max(1.0).min(self.t as f64);
-        let g = solve_gamma(self.v, 1.0 / k_target);
-        let om = 1.0 - g;
-        for (a, &xv) in self.avg.iter_mut().zip(x) {
-            *a = g * *a + om * xv;
-        }
-        self.v = g * g * self.v + om * om;
     }
 
     fn value_into(&self, out: &mut [f64]) -> bool {
@@ -265,6 +283,21 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn observe_many_is_bit_identical_to_sequential() {
+        let mut seq = GrowingExp::new(3, 0.4).unwrap();
+        let mut bat = GrowingExp::new(3, 0.4).unwrap();
+        let data: Vec<f64> = (0..60).map(|i| (i as f64 * 0.13).cos() * 5.0).collect();
+        for x in data.chunks_exact(3) {
+            seq.observe(x);
+        }
+        bat.observe_many(&data[..21], 7);
+        bat.observe_many(&data[21..], 13);
+        assert_eq!(seq.t(), bat.t());
+        assert_eq!(seq.value().unwrap(), bat.value().unwrap());
+        assert_eq!(seq.v, bat.v);
     }
 
     #[test]

@@ -1,0 +1,130 @@
+//! Chunked, autovectorizer-friendly numeric kernels shared by the
+//! averagers' scalar and batched ([`super::Averager::observe_many`])
+//! paths.
+//!
+//! Every batch kernel applies the *same per-sample recurrence* as its
+//! scalar counterpart, in the same order, so batched ingestion through
+//! these kernels is bit-identical to one-at-a-time ingestion; the
+//! closed-form EMA fold ([`scale_in_place`] + [`axpy`]) is the one
+//! documented exception, equal up to round-off (verified to 1e-12 by
+//! the `observe_many` equivalence property test).
+//!
+//! The inner loops are plain `iter_mut().zip(..)` over contiguous
+//! `f64` slices — exactly the shape LLVM's autovectorizer turns into
+//! packed SIMD without any unsafe or feature detection.
+
+/// In-place `out[i] = gamma*a[i] + (1-gamma)*b[i]` — the shared combine
+/// primitive; kept in one place so the perf pass optimizes a single site.
+#[inline]
+pub(crate) fn lerp_into(out: &mut [f64], a: &[f64], b: &[f64], gamma: f64) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    let om = 1.0 - gamma;
+    for ((o, &av), &bv) in out.iter_mut().zip(a).zip(b) {
+        *o = gamma * av + om * bv;
+    }
+}
+
+/// In-place EMA step `acc[i] = gamma*acc[i] + (1-gamma)*x[i]`.
+#[inline]
+pub(crate) fn ema_step(acc: &mut [f64], x: &[f64], gamma: f64) {
+    debug_assert_eq!(acc.len(), x.len());
+    let om = 1.0 - gamma;
+    for (a, &xv) in acc.iter_mut().zip(x) {
+        *a = gamma * *a + om * xv;
+    }
+}
+
+/// In-place incremental-mean update `mean += (x - mean)/n`.
+#[inline]
+pub(crate) fn mean_update(mean: &mut [f64], x: &[f64], n: f64) {
+    debug_assert_eq!(mean.len(), x.len());
+    let inv = 1.0 / n;
+    for (m, &xv) in mean.iter_mut().zip(x) {
+        *m += (xv - *m) * inv;
+    }
+}
+
+/// Fold `data.len()/mean.len()` consecutive samples into a running mean
+/// that already holds `n0` samples: the per-sample recurrence
+/// `mean += (x − mean)/n` for `n = n0+1, n0+2, …`, unrolled over the
+/// whole batch in one call (bit-identical to repeated [`mean_update`],
+/// with no per-call dispatch).
+#[inline]
+pub(crate) fn mean_update_run(mean: &mut [f64], data: &[f64], n0: u64) {
+    let d = mean.len();
+    debug_assert!(d > 0 && data.len() % d == 0);
+    let mut n = n0;
+    for x in data.chunks_exact(d) {
+        n += 1;
+        mean_update(mean, x, n as f64);
+    }
+}
+
+/// In-place scale `acc[i] *= scale` — the head of a closed-form EMA
+/// batch fold (`ema ← γⁿ·ema` before the per-sample weights land).
+#[inline]
+pub(crate) fn scale_in_place(acc: &mut [f64], scale: f64) {
+    for a in acc.iter_mut() {
+        *a *= scale;
+    }
+}
+
+/// `acc[i] += w*x[i]`.
+#[inline]
+pub(crate) fn axpy(acc: &mut [f64], w: f64, x: &[f64]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, &xv) in acc.iter_mut().zip(x) {
+        *a += w * xv;
+    }
+}
+
+/// `sum[i] += x[i]`.
+#[inline]
+pub(crate) fn add_assign(sum: &mut [f64], x: &[f64]) {
+    debug_assert_eq!(sum.len(), x.len());
+    for (s, &xv) in sum.iter_mut().zip(x) {
+        *s += xv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lerp_and_ema_agree() {
+        let a = [2.0, 4.0];
+        let b = [0.0, 1.0];
+        let mut out = [0.0; 2];
+        lerp_into(&mut out, &a, &b, 0.25);
+        assert_eq!(out, [0.5, 1.75]);
+        let mut acc = a;
+        ema_step(&mut acc, &b, 0.25);
+        assert_eq!(acc, out);
+    }
+
+    #[test]
+    fn mean_update_run_is_bit_identical_to_stepwise() {
+        let d = 3;
+        let data: Vec<f64> = (0..5 * d).map(|i| (i as f64 * 0.7).sin() * 10.0).collect();
+        let mut run = vec![1.0, -2.0, 3.0];
+        let mut step = run.clone();
+        mean_update_run(&mut run, &data, 4);
+        let mut n = 4u64;
+        for x in data.chunks_exact(d) {
+            n += 1;
+            mean_update(&mut step, x, n as f64);
+        }
+        assert_eq!(run, step);
+    }
+
+    #[test]
+    fn scale_axpy_build_a_weighted_sum() {
+        let mut acc = vec![1.0, 2.0];
+        scale_in_place(&mut acc, 0.5);
+        axpy(&mut acc, 2.0, &[1.0, 1.0]);
+        add_assign(&mut acc, &[0.5, -1.0]);
+        assert_eq!(acc, vec![3.0, 2.0]);
+    }
+}

@@ -5,21 +5,31 @@
 //! where the window is either fixed (`k_t = k`) or grows with the stream
 //! (`k_t = ct`, `c < 1`) — see [`WindowKind`].
 //!
-//! | estimator | memory (floats) | anytime | window | paper |
-//! |---|---|---|---|---|
-//! | [`ExpAverage`] | `d` | yes | fixed (`k=(1+γ)/(1−γ)`) | Eq. 2 (`expk`) |
-//! | [`GrowingExp`] | `d` | yes | growing | §2, Eqs. 3–4 (`exp`) |
-//! | [`Awa2`] | `2d` | yes | fixed & growing | §3.1–3.2 (`awa`) |
-//! | [`AwaMulti`] | `(z+1)d` | yes | fixed & growing | §3.3–3.4 (`awa3`, …) |
-//! | [`TrueWindow`] | `k_t·d` | yes | fixed & growing | `truek`/`true` baseline |
-//! | [`RawTail`] | `d` | **no** | growing | `raw` baseline |
-//! | [`RestartTail`] | `3d` | stale (one block) | fixed & growing | §1 block-restart baseline |
-//! | [`EhWindow`] | `(1/ε)·log(εk_t)·d` | yes (ε-approx) | fixed & growing | Datar et al. [2002] baseline |
+//! | estimator | memory (floats) | anytime | window | batched `observe_many` | paper |
+//! |---|---|---|---|---|---|
+//! | [`ExpAverage`] | `d` | yes | fixed (`k=(1+γ)/(1−γ)`) | closed-form `γⁿ` fold | Eq. 2 (`expk`) |
+//! | [`GrowingExp`] | `d` | yes | growing | per-sample decay, batch kernel | §2, Eqs. 3–4 (`exp`) |
+//! | [`Awa2`] | `2d` (one SoA bank) | yes | fixed & growing | run-to-flush mean kernels | §3.1–3.2 (`awa`) |
+//! | [`AwaMulti`] | `(z+1)d` (one SoA bank) | yes | fixed & growing | run-to-chunk mean kernels | §3.3–3.4 (`awa3`, …) |
+//! | [`TrueWindow`] | `k_t·d` | yes | fixed & growing | tail-block ring rebuild | `truek`/`true` baseline |
+//! | [`RawTail`] | `d` | **no** | growing | suffix fold past `t₀` | `raw` baseline |
+//! | [`RestartTail`] | `3d` | stale (one block) | fixed & growing | block-skipping runs | §1 block-restart baseline |
+//! | [`EhWindow`] | `(1/ε)·log(εk_t)·d` | yes (ε-approx) | fixed & growing | per-sample replay (structure-exact) | Datar et al. [2002] baseline |
 //!
 //! The unifying design constraint (paper §1): every estimator keeps the
 //! variance of its average equal to that of the exact `k_t`-window mean,
 //! `Var = 1/k_t` (in units of the per-sample variance), while minimizing
 //! staleness subject to its memory budget.
+//!
+//! ## Batched ingestion and memory layout
+//!
+//! [`Averager::observe_many`] ingests a flat `(count, d)` row-major
+//! block in one virtual call; the shared chunked primitives live in
+//! [`kernels`]. The AWA family stores its accumulator bank as a single
+//! contiguous structure-of-arrays allocation (`(z+1)·d` floats, one
+//! `Vec`), with an index map naming the oldest…newest slots so a shift
+//! is an index rotation, never a data move — accumulator combines then
+//! stream through one cache-friendly buffer.
 
 mod analysis;
 mod awa2;
@@ -27,6 +37,7 @@ mod awa_multi;
 mod exp;
 mod exp_histogram;
 mod gea;
+pub(crate) mod kernels;
 mod raw_tail;
 mod restart;
 mod weights;
@@ -103,6 +114,24 @@ pub trait Averager: Send {
 
     /// Ingest the next sample (length must equal `dim()`).
     fn observe(&mut self, x: &[f64]);
+
+    /// Ingest `count` consecutive samples packed back-to-back in `data`
+    /// (`data.len()` must equal `count * dim()`), applied in stream
+    /// order. Semantically equivalent to `count` calls to
+    /// [`Averager::observe`]; every shipped estimator overrides this
+    /// with a batched kernel ([`kernels`]) that enters dispatch once per
+    /// batch instead of once per sample — the coordinator's `PushMany`
+    /// hot path. Equivalence with the sequential path is enforced to
+    /// 1e-12 by the `observe_many` property test over every
+    /// [`AveragerSpec`] variant.
+    fn observe_many(&mut self, data: &[f64], count: usize) {
+        let d = self.dim();
+        assert!(d > 0, "observe_many requires dim >= 1");
+        assert_eq!(data.len(), count * d, "batch shape mismatch");
+        for x in data.chunks_exact(d) {
+            self.observe(x);
+        }
+    }
 
     /// Write the current estimate into `out`; returns `false` when no
     /// estimate is available yet (empty stream, or a non-anytime baseline
@@ -319,27 +348,10 @@ impl AveragerSpec {
     }
 }
 
-/// In-place `out[i] = gamma*a[i] + (1-gamma)*b[i]` — the shared combine
-/// primitive; kept in one place so the perf pass optimizes a single site.
-#[inline]
-pub(crate) fn lerp_into(out: &mut [f64], a: &[f64], b: &[f64], gamma: f64) {
-    debug_assert_eq!(out.len(), a.len());
-    debug_assert_eq!(out.len(), b.len());
-    let om = 1.0 - gamma;
-    for ((o, &av), &bv) in out.iter_mut().zip(a).zip(b) {
-        *o = gamma * av + om * bv;
-    }
-}
-
-/// In-place incremental-mean update `mean += (x - mean)/n`.
-#[inline]
-pub(crate) fn mean_update(mean: &mut [f64], x: &[f64], n: f64) {
-    debug_assert_eq!(mean.len(), x.len());
-    let inv = 1.0 / n;
-    for (m, &xv) in mean.iter_mut().zip(x) {
-        *m += (xv - *m) * inv;
-    }
-}
+// The shared per-sample primitives (`lerp_into`, `mean_update`) and their
+// chunked batch extensions live in [`kernels`]; re-exported here because
+// every estimator reaches them as `super::…`.
+pub(crate) use kernels::{lerp_into, mean_update};
 
 #[cfg(test)]
 mod tests {

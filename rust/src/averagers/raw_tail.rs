@@ -1,5 +1,6 @@
 //! Classic (non-anytime) tail average — the paper's `raw` baseline.
 
+use super::kernels;
 use super::{Averager, WindowKind};
 
 /// The standard way to tail-average with O(d) memory: decide the horizon
@@ -87,6 +88,28 @@ impl Averager for RawTail {
             self.n += 1;
             super::mean_update(&mut self.mean, x, self.n as f64);
         }
+    }
+
+    fn observe_many(&mut self, data: &[f64], count: usize) {
+        let d = self.mean.len();
+        assert_eq!(data.len(), count * d, "batch shape mismatch");
+        if count == 0 {
+            return;
+        }
+        // Samples strictly before the start point only advance the
+        // clock; the suffix past `t₀` folds into the running mean with
+        // one kernel call (bit-identical to sequential `observe`).
+        let first_avg = if self.start > self.t {
+            ((self.start - self.t - 1) as usize).min(count)
+        } else {
+            0
+        };
+        if first_avg < count {
+            kernels::mean_update_run(&mut self.mean, &data[first_avg * d..], self.n);
+            self.n += (count - first_avg) as u64;
+        }
+        self.t += count as u64;
+        self.last.copy_from_slice(&data[(count - 1) * d..]);
     }
 
     fn value_into(&self, out: &mut [f64]) -> bool {

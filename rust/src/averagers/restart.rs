@@ -13,6 +13,7 @@
 //! blocks, the natural doubling schedule of Hazan & Kale-style
 //! restarts). Memory: `2d` (current block + last published average).
 
+use super::kernels;
 use super::{Averager, WindowKind};
 
 /// Block-restart tail average: constant memory, publishes the mean of
@@ -77,6 +78,16 @@ impl RestartTail {
             WindowKind::Growing { c } => self.n_cur as f64 >= c * self.t as f64,
         }
     }
+
+    /// Publish the completed current block and start the next one.
+    fn publish(&mut self) {
+        std::mem::swap(&mut self.published, &mut self.cur);
+        self.n_published = self.n_cur;
+        self.published_at = self.t;
+        self.cur.iter_mut().for_each(|v| *v = 0.0);
+        self.n_cur = 0;
+        self.blocks += 1;
+    }
 }
 
 impl Averager for RestartTail {
@@ -99,12 +110,71 @@ impl Averager for RestartTail {
         self.n_cur += 1;
         super::mean_update(&mut self.cur, x, self.n_cur as f64);
         if self.block_complete() {
-            std::mem::swap(&mut self.published, &mut self.cur);
-            self.n_published = self.n_cur;
-            self.published_at = self.t;
-            self.cur.iter_mut().for_each(|v| *v = 0.0);
-            self.n_cur = 0;
-            self.blocks += 1;
+            self.publish();
+        }
+    }
+
+    fn observe_many(&mut self, data: &[f64], count: usize) {
+        let d = self.cur.len();
+        assert_eq!(data.len(), count * d, "batch shape mismatch");
+        if count == 0 {
+            return;
+        }
+        match self.kind {
+            WindowKind::Fixed { k } => {
+                // Block-aware: only the LAST block completed inside the
+                // batch can stay published, so earlier whole blocks just
+                // advance the clock — their means are never computed.
+                let k = k.max(1);
+                let mut offset = 0usize;
+                // 1. Finish the in-progress block.
+                if self.n_cur > 0 {
+                    let take = ((k - self.n_cur) as usize).min(count);
+                    kernels::mean_update_run(&mut self.cur, &data[..take * d], self.n_cur);
+                    self.n_cur += take as u64;
+                    self.t += take as u64;
+                    offset = take;
+                    if self.n_cur >= k {
+                        self.publish();
+                    }
+                }
+                let remaining = count - offset;
+                let full = remaining / k as usize;
+                let tail = remaining % k as usize;
+                // 2. Whole blocks: skip all but the last.
+                if full > 0 {
+                    let skipped = (full - 1) * k as usize;
+                    self.t += skipped as u64;
+                    self.blocks += (full - 1) as u64;
+                    let start = offset + skipped;
+                    let run = &data[start * d..(start + k as usize) * d];
+                    kernels::mean_update_run(&mut self.cur, run, 0);
+                    self.n_cur = k;
+                    self.t += k;
+                    self.publish();
+                    offset = start + k as usize;
+                }
+                // 3. Trailing partial block.
+                if tail > 0 {
+                    kernels::mean_update_run(&mut self.cur, &data[offset * d..], self.n_cur);
+                    self.n_cur += tail as u64;
+                    self.t += tail as u64;
+                }
+                self.last.copy_from_slice(&data[(count - 1) * d..]);
+            }
+            WindowKind::Growing { .. } => {
+                // Completion reads `t` per sample; per-sample replay
+                // without re-entering dispatch.
+                for x in data.chunks_exact(d) {
+                    self.t += 1;
+                    self.last.copy_from_slice(x);
+                    self.n_cur += 1;
+                    super::mean_update(&mut self.cur, x, self.n_cur as f64);
+                    if self.block_complete() {
+                        self.publish();
+                    }
+                }
+            }
         }
     }
 
@@ -202,6 +272,29 @@ mod tests {
         let late = lens[lens.len() - 1];
         let early = lens[1.min(lens.len() - 1)];
         assert!(late > early, "block lengths must grow: {lens:?}");
+    }
+
+    #[test]
+    fn observe_many_matches_sequential_incl_block_skips() {
+        for kind in [WindowKind::Fixed { k: 5 }, WindowKind::Growing { c: 0.5 }] {
+            let mut seq = RestartTail::new(2, kind).unwrap();
+            let mut bat = RestartTail::new(2, kind).unwrap();
+            let data: Vec<f64> = (0..120).map(|i| (i as f64 * 0.29).sin() * 3.0).collect();
+            for x in data.chunks_exact(2) {
+                seq.observe(x);
+            }
+            // 2nd batch spans several whole k=5 blocks (skip path).
+            bat.observe_many(&data[..6], 3);
+            bat.observe_many(&data[6..80], 37);
+            bat.observe_many(&data[80..], 20);
+            assert_eq!(seq.t(), bat.t());
+            assert_eq!(seq.blocks(), bat.blocks());
+            assert_eq!(seq.published_age(), bat.published_age());
+            let (a, b) = (seq.value().unwrap(), bat.value().unwrap());
+            for i in 0..2 {
+                assert!((a[i] - b[i]).abs() < 1e-12, "{kind:?} dim {i}");
+            }
+        }
     }
 
     #[test]

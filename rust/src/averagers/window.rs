@@ -1,5 +1,6 @@
 //! Exact sliding-window average (the `truek`/`true` baseline).
 
+use super::kernels;
 use super::{Averager, WindowKind};
 use std::collections::VecDeque;
 
@@ -65,6 +66,28 @@ impl TrueWindow {
         }
         self.ops_since_resum = 0;
     }
+
+    /// One sample of the shared scalar/batched path (no shape check).
+    fn push_sample(&mut self, x: &[f64]) {
+        self.t += 1;
+        kernels::add_assign(&mut self.sum, x);
+        let mut slot = self.free.pop().unwrap_or_else(|| vec![0.0; x.len()]);
+        slot.copy_from_slice(x);
+        self.buf.push_back(slot);
+        // Evict down to the current window size.
+        let k_t = self.kind.k_at(self.t).ceil() as usize;
+        while self.buf.len() > k_t.max(1) {
+            let old = self.buf.pop_front().expect("nonempty");
+            for (s, &ov) in self.sum.iter_mut().zip(&old) {
+                *s -= ov;
+            }
+            self.free.push(old);
+        }
+        self.ops_since_resum += 1;
+        if self.ops_since_resum >= RESUM_EVERY {
+            self.resum();
+        }
+    }
 }
 
 impl Averager for TrueWindow {
@@ -82,25 +105,40 @@ impl Averager for TrueWindow {
 
     fn observe(&mut self, x: &[f64]) {
         assert_eq!(x.len(), self.sum.len(), "dimension mismatch");
-        self.t += 1;
-        for (s, &xv) in self.sum.iter_mut().zip(x) {
-            *s += xv;
+        self.push_sample(x);
+    }
+
+    fn observe_many(&mut self, data: &[f64], count: usize) {
+        let d = self.sum.len();
+        assert_eq!(data.len(), count * d, "batch shape mismatch");
+        if count == 0 {
+            return;
         }
-        let mut slot = self.free.pop().unwrap_or_else(|| vec![0.0; x.len()]);
-        slot.copy_from_slice(x);
-        self.buf.push_back(slot);
-        // Evict down to the current window size.
-        let k_t = self.kind.k_at(self.t).ceil() as usize;
-        while self.buf.len() > k_t.max(1) {
-            let old = self.buf.pop_front().expect("nonempty");
-            for (s, &ov) in self.sum.iter_mut().zip(&old) {
-                *s -= ov;
+        // Block-aware fast path (fixed window): when the batch alone
+        // covers the whole window, everything currently buffered — and
+        // the batch prefix — would be evicted unread, so rebuild the
+        // ring straight from the tail block (one exact re-sum).
+        if let WindowKind::Fixed { k } = self.kind {
+            let k = k.max(1) as usize;
+            if count >= k {
+                self.t += count as u64;
+                while let Some(old) = self.buf.pop_front() {
+                    self.free.push(old);
+                }
+                self.sum.iter_mut().for_each(|s| *s = 0.0);
+                for x in data[(count - k) * d..].chunks_exact(d) {
+                    kernels::add_assign(&mut self.sum, x);
+                    let mut slot = self.free.pop().unwrap_or_else(|| vec![0.0; d]);
+                    slot.copy_from_slice(x);
+                    self.buf.push_back(slot);
+                }
+                // The rebuild IS a fresh exact sum.
+                self.ops_since_resum = 0;
+                return;
             }
-            self.free.push(old);
         }
-        self.ops_since_resum += 1;
-        if self.ops_since_resum >= RESUM_EVERY {
-            self.resum();
+        for x in data.chunks_exact(d) {
+            self.push_sample(x);
         }
     }
 
@@ -233,6 +271,28 @@ mod tests {
     fn empty_stream_has_no_value() {
         let w = TrueWindow::new(3, WindowKind::Fixed { k: 5 });
         assert!(w.value().is_none());
+    }
+
+    #[test]
+    fn observe_many_matches_sequential_incl_tail_rebuild() {
+        for kind in [WindowKind::Fixed { k: 6 }, WindowKind::Growing { c: 0.5 }] {
+            let mut seq = TrueWindow::new(2, kind);
+            let mut bat = TrueWindow::new(2, kind);
+            let data: Vec<f64> = (0..80).map(|i| (i as f64 * 0.41).cos() * 4.0).collect();
+            for x in data.chunks_exact(2) {
+                seq.observe(x);
+            }
+            // 15-sample batch >= k=6 exercises the tail-block rebuild.
+            bat.observe_many(&data[..10], 5);
+            bat.observe_many(&data[10..40], 15);
+            bat.observe_many(&data[40..], 20);
+            assert_eq!(seq.t(), bat.t());
+            assert_eq!(seq.len(), bat.len());
+            let (a, b) = (seq.value().unwrap(), bat.value().unwrap());
+            for i in 0..2 {
+                assert!((a[i] - b[i]).abs() < 1e-12, "{kind:?} dim {i}: {} vs {}", a[i], b[i]);
+            }
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! the way users expect.
 
 use crate::util::fmt as ufmt;
+use crate::util::json::Json;
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
@@ -85,6 +86,8 @@ pub struct Bench {
     pub batches: usize,
     filter: Option<String>,
     samples: Vec<Sample>,
+    /// Externally measured scalars recorded via [`Bench::record_metric`].
+    metrics: Vec<(String, f64, String)>,
     suite: String,
 }
 
@@ -111,6 +114,7 @@ impl Bench {
             batches,
             filter,
             samples: Vec::new(),
+            metrics: Vec::new(),
             suite: suite.to_string(),
         }
     }
@@ -176,10 +180,13 @@ impl Bench {
     }
 
     /// Record an externally measured scalar (e.g. an accuracy metric or a
-    /// one-shot wall time) so it appears in the suite output.
+    /// one-shot wall time) so it appears in the suite output and the
+    /// `BENCH_<suite>.json` dump.
     pub fn record_metric(&mut self, name: &str, value: f64, unit: &str) {
         if self.enabled(name) {
             println!("{:<44} {:>12} {unit}", name, ufmt::sig4(value));
+            self.metrics
+                .push((name.to_string(), value, unit.to_string()));
         }
     }
 
@@ -188,13 +195,63 @@ impl Bench {
         println!("\n-- {title} --");
     }
 
-    /// Finish the suite: print a compact summary.
+    /// Finish the suite: print a compact summary and dump every timed
+    /// case (median/mean/std ns, throughput) and recorded metric to
+    /// `BENCH_<suite>.json` in the working directory, so bench results
+    /// are machine-comparable across commits.
     pub fn finish(self) {
+        // A filtered run covers only a subset of cases; never let it
+        // clobber the full-suite dump used for cross-commit comparison.
+        if self.filter.is_none() {
+            let path = format!("BENCH_{}.json", self.suite);
+            match std::fs::write(&path, self.to_json().encode_pretty()) {
+                Ok(()) => println!("wrote {path}"),
+                Err(e) => eprintln!("could not write {path}: {e}"),
+            }
+        } else {
+            println!("(filtered run: BENCH json not written)");
+        }
         println!(
             "== suite {} done: {} timed cases ==",
             self.suite,
             self.samples.len()
         );
+    }
+
+    /// JSON form of every timed case and recorded metric.
+    pub fn to_json(&self) -> Json {
+        let cases: Vec<Json> = self
+            .samples
+            .iter()
+            .map(|s| {
+                let mut fields = vec![
+                    ("name", Json::Str(s.name.clone())),
+                    ("median_ns", Json::Num(s.median().as_nanos() as f64)),
+                    ("mean_ns", Json::Num(s.mean().as_nanos() as f64)),
+                    ("std_ns", Json::Num(s.std().as_nanos() as f64)),
+                ];
+                if let Some(tp) = s.throughput() {
+                    fields.push(("elements_per_sec", Json::Num(tp)));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        let metrics: Vec<Json> = self
+            .metrics
+            .iter()
+            .map(|(name, value, unit)| {
+                Json::obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("value", Json::Num(*value)),
+                    ("unit", Json::Str(unit.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("suite", Json::Str(self.suite.clone())),
+            ("cases", Json::Arr(cases)),
+            ("metrics", Json::Arr(metrics)),
+        ])
     }
 
     /// Access all collected samples (used by tests of the harness itself).
@@ -214,6 +271,7 @@ mod tests {
             batches: 4,
             filter: None,
             samples: Vec::new(),
+            metrics: Vec::new(),
             suite: "test".to_string(),
         }
     }
@@ -253,6 +311,24 @@ mod tests {
         assert!(b.bench("no-match", || 1).is_none());
         assert!(b.bench("yes-match", || 1).is_some());
         assert_eq!(b.samples().len(), 1);
+    }
+
+    #[test]
+    fn json_dump_has_cases_and_metrics() {
+        let mut b = quiet_bench();
+        b.bench_elements("case-a", 64, || 1 + 1);
+        b.record_metric("ratio", 1.5, "x");
+        let j = b.to_json();
+        assert_eq!(j.get("suite").and_then(Json::as_str), Some("test"));
+        let cases = j.get("cases").and_then(Json::as_arr).unwrap();
+        assert_eq!(cases.len(), 1);
+        assert!(cases[0].get("median_ns").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(cases[0].get("elements_per_sec").is_some());
+        let metrics = j.get("metrics").and_then(Json::as_arr).unwrap();
+        assert_eq!(metrics.len(), 1);
+        assert_eq!(metrics[0].get("value").and_then(Json::as_f64), Some(1.5));
+        // The dump must be valid JSON text.
+        assert!(Json::parse(&j.encode()).is_ok());
     }
 
     #[test]

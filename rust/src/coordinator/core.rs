@@ -3,7 +3,8 @@
 use super::stream::StreamState;
 use crate::averagers::AveragerSpec;
 use crate::config::{BackpressurePolicy, ServiceConfig};
-use crate::metrics::Registry;
+use crate::metrics::{Counter, Histogram, Registry};
+use crate::util::pool::{BufferPool, PooledBuf};
 use std::collections::HashMap;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
@@ -32,9 +33,13 @@ pub struct Snapshot {
 }
 
 enum ShardMsg {
+    /// `count` consecutive samples packed flat in `data` (one sample on
+    /// the `push` path, a whole client batch on the `push_many` path —
+    /// pooled, so the worker's drop recycles the allocation).
     Push {
         stream: Arc<StreamSlot>,
-        data: Vec<f64>,
+        count: usize,
+        data: PooledBuf,
     },
     /// Barrier: ack once every message enqueued before it is applied.
     Sync(SyncSender<()>),
@@ -42,6 +47,9 @@ enum ShardMsg {
 }
 
 struct StreamSlot {
+    /// Declared dimensionality — immutable after registration, read on
+    /// every push without touching the state mutex.
+    dim: usize,
     state: Mutex<StreamState>,
 }
 
@@ -61,6 +69,16 @@ pub struct Coordinator {
     shards: Vec<Shard>,
     policy: BackpressurePolicy,
     metrics: Registry,
+    /// Reusable flat-batch buffers for the `push_many` path.
+    buffers: BufferPool,
+    // Hot-path instruments, resolved once at construction so pushes and
+    // snapshots never touch the registry's name map (a mutex).
+    pushes_accepted: Arc<Counter>,
+    pushes_dropped: Arc<Counter>,
+    pushes_rejected: Arc<Counter>,
+    snapshots_taken: Arc<Counter>,
+    /// Distribution of samples-per-message on the ingest path.
+    push_batch_size: Arc<Histogram>,
 }
 
 impl Coordinator {
@@ -89,11 +107,18 @@ impl Coordinator {
                 handle: Some(handle),
             });
         }
+        let metrics = Registry::new();
         Coordinator {
             streams: RwLock::new(HashMap::new()),
             shards: v,
             policy,
-            metrics: Registry::new(),
+            pushes_accepted: metrics.counter("pushes_accepted"),
+            pushes_dropped: metrics.counter("pushes_dropped"),
+            pushes_rejected: metrics.counter("pushes_rejected"),
+            snapshots_taken: metrics.counter("snapshots"),
+            push_batch_size: metrics.histogram("push_batch_size"),
+            metrics,
+            buffers: BufferPool::new(64),
         }
     }
 
@@ -115,6 +140,7 @@ impl Coordinator {
         map.insert(
             name.to_string(),
             Arc::new(StreamSlot {
+                dim,
                 state: Mutex::new(state),
             }),
         );
@@ -154,21 +180,81 @@ impl Coordinator {
     /// `Dropped`, `Reject` returns an error.
     pub fn push(&self, name: &str, data: Vec<f64>) -> Result<PushOutcome, String> {
         let slot = self.slot(name)?;
-        {
-            // Early shape validation so callers get an error even under
-            // DropNewest (the worker also re-validates).
-            let st = slot.state.lock().expect("stream lock");
-            if data.len() != st.dim {
-                return Err(format!(
-                    "stream '{name}': sample has {} dims, stream declared {}",
-                    data.len(),
-                    st.dim
-                ));
-            }
+        // Early shape validation (lock-free: dim is immutable) so callers
+        // get an error even under DropNewest (the worker re-validates).
+        if data.len() != slot.dim {
+            return Err(format!(
+                "stream '{name}': sample has {} dims, stream declared {}",
+                data.len(),
+                slot.dim
+            ));
         }
+        self.enqueue(name, slot, 1, PooledBuf::unpooled(data))
+    }
+
+    /// Push `count` consecutive samples packed flat in `data` as ONE
+    /// shard message: they are applied atomically, in arrival order,
+    /// through the estimator's batched `observe_many` path. The batch is
+    /// copied into a pooled buffer, so steady-state batched ingest
+    /// allocates nothing per call. Under backpressure the whole batch is
+    /// accepted, dropped, or rejected as a unit; `count == 0` or a
+    /// `data` length not divisible into `count` samples is a structured
+    /// error.
+    pub fn push_many(&self, name: &str, count: usize, data: &[f64]) -> Result<PushOutcome, String> {
+        let slot = self.batch_slot(name, count, data.len())?;
+        let buf = self.buffers.take(data);
+        self.enqueue(name, slot, count, buf)
+    }
+
+    /// As [`Coordinator::push_many`], but takes ownership of an
+    /// already-allocated flat batch (e.g. one the wire parser just
+    /// built) and ships it as-is — no pool copy. Use `push_many` when
+    /// the caller reuses its own buffer across calls; use this when the
+    /// allocation is paid anyway.
+    pub fn push_many_owned(
+        &self,
+        name: &str,
+        count: usize,
+        data: Vec<f64>,
+    ) -> Result<PushOutcome, String> {
+        let slot = self.batch_slot(name, count, data.len())?;
+        self.enqueue(name, slot, count, PooledBuf::unpooled(data))
+    }
+
+    /// Shared batch validation: resolves the stream and checks that
+    /// `len` splits into exactly `count` samples of the stream's
+    /// declared dim. `checked_mul`: a hostile wire `count` must not
+    /// wrap into a spuriously matching length. dim is immutable per
+    /// slot, so the producer path takes no state lock.
+    fn batch_slot(
+        &self,
+        name: &str,
+        count: usize,
+        len: usize,
+    ) -> Result<Arc<StreamSlot>, String> {
+        let slot = self.slot(name)?;
+        let dim = slot.dim;
+        if count == 0 || count.checked_mul(dim) != Some(len) {
+            return Err(format!(
+                "stream '{name}': batch has {len} values for {count} samples, \
+                 stream declared {dim} dims"
+            ));
+        }
+        Ok(slot)
+    }
+
+    /// Shared backpressure-aware enqueue of a (possibly batched) push.
+    fn enqueue(
+        &self,
+        name: &str,
+        slot: Arc<StreamSlot>,
+        count: usize,
+        data: PooledBuf,
+    ) -> Result<PushOutcome, String> {
         let shard = self.shard_for(name);
         let msg = ShardMsg::Push {
             stream: slot.clone(),
+            count,
             data,
         };
         let outcome = match self.policy {
@@ -180,8 +266,8 @@ impl Coordinator {
                 Ok(()) => PushOutcome::Accepted,
                 Err(TrySendError::Full(_)) => {
                     let mut st = slot.state.lock().expect("stream lock");
-                    st.dropped += 1;
-                    self.metrics.counter("pushes_dropped").inc();
+                    st.dropped += count as u64;
+                    self.pushes_dropped.add(count as u64);
                     PushOutcome::Dropped
                 }
                 Err(TrySendError::Disconnected(_)) => return Err("shard down".into()),
@@ -189,14 +275,15 @@ impl Coordinator {
             BackpressurePolicy::Reject => match shard.sender.try_send(msg) {
                 Ok(()) => PushOutcome::Accepted,
                 Err(TrySendError::Full(_)) => {
-                    self.metrics.counter("pushes_rejected").inc();
+                    self.pushes_rejected.add(count as u64);
                     return Err(format!("stream '{name}': ingest queue full"));
                 }
                 Err(TrySendError::Disconnected(_)) => return Err("shard down".into()),
             },
         };
         if outcome == PushOutcome::Accepted {
-            self.metrics.counter("pushes_accepted").inc();
+            self.pushes_accepted.add(count as u64);
+            self.push_batch_size.record(count as u64);
         }
         Ok(outcome)
     }
@@ -206,7 +293,7 @@ impl Coordinator {
     pub fn snapshot(&self, name: &str) -> Result<Snapshot, String> {
         let slot = self.slot(name)?;
         let st = slot.state.lock().expect("stream lock");
-        self.metrics.counter("snapshots").inc();
+        self.snapshots_taken.inc();
         Ok(Snapshot {
             stream: name.to_string(),
             t: st.t(),
@@ -265,11 +352,20 @@ impl Drop for Coordinator {
 fn shard_loop(rx: Receiver<ShardMsg>) {
     while let Ok(msg) = rx.recv() {
         match msg {
-            ShardMsg::Push { stream, data } => {
-                let mut st = stream.state.lock().expect("stream lock");
-                // Shape validated at push; a failure here means a
-                // register/unregister race replaced the stream — count it.
-                let _ = st.apply(&data);
+            ShardMsg::Push {
+                stream,
+                count,
+                data,
+            } => {
+                {
+                    let mut st = stream.state.lock().expect("stream lock");
+                    // Shape validated at push; a failure here means a
+                    // register/unregister race replaced the stream —
+                    // count it.
+                    let _ = st.apply_many(&data, count);
+                }
+                // `data` drops here, returning its allocation to the
+                // coordinator's buffer pool.
             }
             ShardMsg::Sync(ack) => {
                 let _ = ack.send(());
@@ -432,6 +528,49 @@ mod tests {
         let snap = c.snapshot("a").unwrap();
         assert_eq!(snap.t + dropped, 10_000);
         assert_eq!(snap.dropped, dropped);
+    }
+
+    #[test]
+    fn push_many_agrees_with_per_sample_pushes() {
+        let c = Coordinator::new(2, 64, BackpressurePolicy::Block);
+        c.register("batched", 2, gea()).unwrap();
+        c.register("single", 2, gea()).unwrap();
+        let mut flat = Vec::new();
+        for i in 1..=40 {
+            flat.push(i as f64);
+            flat.push(-(i as f64));
+        }
+        // Same stream content: one path batched (uneven splits), one
+        // per-sample.
+        c.push_many("batched", 7, &flat[..14]).unwrap();
+        c.push_many("batched", 1, &flat[14..16]).unwrap();
+        c.push_many("batched", 32, &flat[16..]).unwrap();
+        for chunk in flat.chunks_exact(2) {
+            c.push("single", chunk.to_vec()).unwrap();
+        }
+        c.sync().unwrap();
+        let a = c.snapshot("batched").unwrap();
+        let b = c.snapshot("single").unwrap();
+        assert_eq!(a.t, 40);
+        assert_eq!(b.t, 40);
+        assert_eq!(a.value.unwrap(), b.value.unwrap());
+    }
+
+    #[test]
+    fn push_many_rejects_zero_count_and_ragged_batches() {
+        let c = Coordinator::new(1, 8, BackpressurePolicy::Block);
+        c.register("a", 3, gea()).unwrap();
+        let err = c.push_many("a", 0, &[]).unwrap_err();
+        assert!(err.contains("0 samples"), "{err}");
+        let err = c.push_many("a", 2, &[1.0; 5]).unwrap_err();
+        assert!(err.contains("dims"), "{err}");
+        // The ownership-taking variant validates identically.
+        assert!(c.push_many_owned("a", 0, vec![]).is_err());
+        assert!(c.push_many_owned("a", 2, vec![1.0; 5]).is_err());
+        assert!(c.push_many_owned("a", 2, vec![1.0; 6]).is_ok());
+        c.sync().unwrap();
+        // Only the one valid owned batch was applied.
+        assert_eq!(c.snapshot("a").unwrap().t, 2);
     }
 
     #[test]

@@ -274,19 +274,30 @@ mod tests {
 
     #[test]
     fn push_many_rejects_ragged_batches() {
-        let bad = Json::obj(vec![
-            ("op", Json::Str("push_many".into())),
-            ("stream", Json::Str("w".into())),
-            ("count", Json::Num(3.0)),
-            ("data", Json::nums(&[1.0, 2.0, 3.0, 4.0])),
-        ]);
-        assert!(Request::from_json(&bad).is_err());
-        let zero = Json::obj(vec![
-            ("op", Json::Str("push_many".into())),
-            ("stream", Json::Str("w".into())),
-            ("count", Json::Num(0.0)),
-            ("data", Json::nums(&[])),
-        ]);
-        assert!(Request::from_json(&zero).is_err());
+        let req = |count: Json, data: Json| {
+            Json::obj(vec![
+                ("op", Json::Str("push_many".into())),
+                ("stream", Json::Str("w".into())),
+                ("count", count),
+                ("data", data),
+            ])
+        };
+        // Ragged: 4 values do not split into 3 samples.
+        let err = Request::from_json(&req(Json::Num(3.0), Json::nums(&[1.0, 2.0, 3.0, 4.0])))
+            .unwrap_err();
+        assert!(err.contains("do not split"), "{err}");
+        // count == 0 must be an error even with empty data (a silent
+        // no-op would hide producer bugs).
+        let err = Request::from_json(&req(Json::Num(0.0), Json::nums(&[]))).unwrap_err();
+        assert!(err.contains("do not split"), "{err}");
+        // count == 0 with data is also ragged.
+        assert!(Request::from_json(&req(Json::Num(0.0), Json::nums(&[1.0]))).is_err());
+        // Missing / non-integer count.
+        assert!(Request::from_json(&req(Json::Null, Json::nums(&[1.0]))).is_err());
+        assert!(Request::from_json(&req(Json::Num(-2.0), Json::nums(&[1.0]))).is_err());
+        // And the error frames these produce are structured.
+        let frame = err_response("push_many: bad batch");
+        assert_eq!(frame.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(frame.get("error").and_then(Json::as_str).is_some());
     }
 }

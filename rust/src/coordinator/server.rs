@@ -165,20 +165,24 @@ fn dispatch(req: Request, c: &Coordinator) -> Json {
             count,
             data,
         } => {
-            let dim = data.len() / count;
-            let mut accepted = 0u64;
-            let mut dropped = 0u64;
-            for chunk in data.chunks_exact(dim) {
-                match c.push(&stream, chunk.to_vec()) {
-                    Ok(PushOutcome::Accepted) => accepted += 1,
-                    Ok(PushOutcome::Dropped) => dropped += 1,
-                    Err(e) => return err_response(&e),
-                }
+            // One coordinator call → one shard message; the batch is
+            // accepted or dropped as a unit. The parser already paid the
+            // allocation, so hand it over instead of pool-copying.
+            // (count == 0 and ragged lengths were already rejected as
+            // structured error frames by `Request::from_json`; the
+            // coordinator re-validates against the stream's declared
+            // dim.)
+            match c.push_many_owned(&stream, count, data) {
+                Ok(PushOutcome::Accepted) => ok_response(vec![
+                    ("accepted", Json::Num(count as f64)),
+                    ("dropped", Json::Num(0.0)),
+                ]),
+                Ok(PushOutcome::Dropped) => ok_response(vec![
+                    ("accepted", Json::Num(0.0)),
+                    ("dropped", Json::Num(count as f64)),
+                ]),
+                Err(e) => err_response(&e),
             }
-            ok_response(vec![
-                ("accepted", Json::Num(accepted as f64)),
-                ("dropped", Json::Num(dropped as f64)),
-            ])
         }
         Request::Snapshot { stream } => match c.snapshot(&stream) {
             Ok(snap) => {

@@ -29,19 +29,23 @@ impl StreamState {
         })
     }
 
-    /// Apply one sample; rejects wrong dimensionality.
-    pub fn apply(&mut self, data: &[f64]) -> Result<(), String> {
-        if data.len() != self.dim {
-            self.malformed += 1;
+    /// Apply `count` consecutive samples packed flat in `data` through
+    /// the estimator's batched [`Averager::observe_many`] path — one
+    /// virtual call and one shape check for the whole batch (single
+    /// pushes are a `count == 1` batch; there is no separate per-sample
+    /// path to drift from this one).
+    pub fn apply_many(&mut self, data: &[f64], count: usize) -> Result<(), String> {
+        if count == 0 || count.checked_mul(self.dim) != Some(data.len()) {
+            self.malformed += count.max(1) as u64;
             return Err(format!(
-                "stream '{}': sample has {} dims, stream declared {}",
+                "stream '{}': batch has {} values for {count} samples, stream declared {} dims",
                 self.name,
                 data.len(),
                 self.dim
             ));
         }
-        self.averager.observe(data);
-        self.applied += 1;
+        self.averager.observe_many(data, count);
+        self.applied += count as u64;
         Ok(())
     }
 
@@ -80,7 +84,7 @@ mod tests {
     fn apply_and_value() {
         let mut s = StreamState::new("w", 2, spec()).unwrap();
         assert!(s.value().is_none());
-        s.apply(&[1.0, 2.0]).unwrap();
+        s.apply_many(&[1.0, 2.0], 1).unwrap();
         assert_eq!(s.value().unwrap(), vec![1.0, 2.0]);
         assert_eq!(s.applied, 1);
         assert_eq!(s.t(), 1);
@@ -89,16 +93,29 @@ mod tests {
     #[test]
     fn wrong_dim_counted_not_applied() {
         let mut s = StreamState::new("w", 2, spec()).unwrap();
-        assert!(s.apply(&[1.0]).is_err());
+        assert!(s.apply_many(&[1.0], 1).is_err());
         assert_eq!(s.malformed, 1);
         assert_eq!(s.applied, 0);
         assert!(s.value().is_none());
     }
 
     #[test]
+    fn apply_many_batches_and_accounts() {
+        let mut s = StreamState::new("w", 2, spec()).unwrap();
+        s.apply_many(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 3).unwrap();
+        assert_eq!(s.applied, 3);
+        assert_eq!(s.t(), 3);
+        // Ragged and empty batches are malformed, not applied.
+        assert!(s.apply_many(&[1.0, 2.0, 3.0], 2).is_err());
+        assert!(s.apply_many(&[], 0).is_err());
+        assert_eq!(s.malformed, 3);
+        assert_eq!(s.applied, 3);
+    }
+
+    #[test]
     fn reset_clears() {
         let mut s = StreamState::new("w", 1, spec()).unwrap();
-        s.apply(&[5.0]).unwrap();
+        s.apply_many(&[5.0], 1).unwrap();
         s.reset();
         assert_eq!(s.applied, 0);
         assert!(s.value().is_none());

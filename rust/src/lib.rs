@@ -21,6 +21,20 @@
 //! any estimator, a multi-stream coordinator service, and the paper's full
 //! stochastic-linear-regression evaluation harness.
 //!
+//! ## Batched ingestion
+//!
+//! The ingest hot path is *batched end-to-end*: every estimator
+//! implements [`averagers::Averager::observe_many`] natively (closed-form
+//! decay folds, run-fused mean kernels, block-aware ring updates — see
+//! `averagers::kernels`), the AWA accumulator banks are single
+//! contiguous SoA allocations, and the coordinator carries `(count,
+//! flat-data)` batches through its shard queues in pooled, reusable
+//! buffers ([`util::pool::BufferPool`]) — one message, one lock, one
+//! virtual call per batch, zero steady-state allocation. The `PushMany`
+//! wire op, the [`linreg`] experiment harness, and the bench suites all
+//! ride this path; batched-vs-sequential equivalence is property-tested
+//! to 1e-12 for every estimator family.
+//!
 //! ## Architecture (three layers)
 //!
 //! * **L3 (this crate)** — the coordinator: averager state management,

@@ -157,6 +157,18 @@ impl Sgd {
         &self.w
     }
 
+    /// Advance `n` steps, appending each post-step iterate (`d` floats)
+    /// to `out` — the flat `(n, d)` row-major block the estimators'
+    /// batched `observe_many` path ingests without re-entering
+    /// per-sample dispatch. Reuses `out`'s capacity across calls.
+    pub fn steps_into(&mut self, n: usize, out: &mut Vec<f64>) {
+        out.reserve(n * self.problem.d);
+        for _ in 0..n {
+            self.step();
+            out.extend_from_slice(&self.w);
+        }
+    }
+
     /// Excess error of the current iterate.
     pub fn excess_error(&self) -> f64 {
         self.problem.excess_error(&self.w)
@@ -225,6 +237,25 @@ mod tests {
             avg_sum < last_sum / 2.0,
             "averaging should help: iterate {last_sum}, averaged {avg_sum}"
         );
+    }
+
+    #[test]
+    fn steps_into_matches_stepwise_iterates() {
+        let mut a = paper_sgd(3);
+        let mut b = paper_sgd(3);
+        let mut block = Vec::new();
+        a.steps_into(5, &mut block);
+        assert_eq!(block.len(), 5 * 50);
+        let mut last = Vec::new();
+        for _ in 0..5 {
+            last = b.step().to_vec();
+        }
+        assert_eq!(&block[4 * 50..], &last[..]);
+        assert_eq!(a.w(), b.w());
+        assert_eq!(a.step_count(), 5);
+        // Appends (does not clear) so callers can accumulate blocks.
+        a.steps_into(2, &mut block);
+        assert_eq!(block.len(), 7 * 50);
     }
 
     #[test]

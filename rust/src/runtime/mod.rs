@@ -15,6 +15,14 @@
 //! numerically.
 
 mod artifact;
+// The real executor binds to the offline-vendored `xla` crate; when the
+// `xla` cargo feature is off (the default in environments without the
+// vendored crate) an API-compatible stub takes its place whose
+// constructors report the missing backend.
+#[cfg(feature = "xla")]
+mod exec;
+#[cfg(not(feature = "xla"))]
+#[path = "stub.rs"]
 mod exec;
 
 pub use artifact::{EntrySpec, Manifest, TensorSpec};

@@ -1,0 +1,72 @@
+//! Stub executor used when the crate is built WITHOUT the `xla` feature.
+//!
+//! The PJRT bindings come from an offline-vendored `xla` crate that is
+//! not present in every build environment. This stub keeps the
+//! [`crate::runtime`] API shape — manifests still load and validate — so
+//! the launcher, examples and tests compile and degrade gracefully;
+//! every execution entry point returns an explanatory error instead.
+
+use super::artifact::{EntrySpec, Manifest};
+use crate::metrics::Registry;
+use std::sync::Arc;
+
+const NO_BACKEND: &str = "PJRT backend unavailable: built without the `xla` cargo feature \
+     (the vendored xla crate is not present in this build). Rebuild with \
+     `--features xla` to compile and execute AOT artifacts.";
+
+/// Stub compiled entry: never constructed (the stub [`Runtime`] cannot
+/// be built), present only to keep caller signatures compiling.
+pub struct CompiledEntry {
+    spec: EntrySpec,
+}
+
+impl CompiledEntry {
+    /// The manifest spec (shapes) of this entry.
+    pub fn spec(&self) -> &EntrySpec {
+        &self.spec
+    }
+
+    /// Always errors: no backend to execute on.
+    pub fn call(&self, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>, String> {
+        Err(NO_BACKEND.to_string())
+    }
+}
+
+/// Stub runtime: construction always fails with a pointer to the
+/// missing `xla` feature.
+pub struct Runtime {
+    manifest: Manifest,
+    metrics: Registry,
+}
+
+impl Runtime {
+    /// Always errors (no PJRT client without the `xla` feature).
+    pub fn new(_manifest: Manifest) -> Result<Runtime, String> {
+        Err(NO_BACKEND.to_string())
+    }
+
+    /// Loads (and validates) the manifest, then fails like [`Runtime::new`].
+    pub fn from_dir(dir: &str) -> Result<Runtime, String> {
+        Runtime::new(Manifest::load(dir)?)
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Runtime metrics registry.
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// Always errors: no backend to compile on.
+    pub fn load(&self, _name: &str) -> Result<Arc<CompiledEntry>, String> {
+        Err(NO_BACKEND.to_string())
+    }
+
+    /// Always errors: no backend to execute on.
+    pub fn call(&self, _name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>, String> {
+        Err(NO_BACKEND.to_string())
+    }
+}

