@@ -80,6 +80,69 @@ fn main() {
         }
     }
 
+    bench.section("planar bank sweep: streams x batch, banked vs per-slot (8 shards, block, d=32)");
+    {
+        // The tentpole acceptance sweep: aggregate samples/s with N
+        // same-spec streams ingesting round-robin at a given batch size,
+        // through the planar-bank path vs the per-slot mutex path
+        // (`with_banking(false)`). The banked path stages each drain
+        // cycle per bank and applies it row-sorted with one lock + one
+        // virtual dispatch, so its advantage grows with stream count —
+        // the `bank_speedup s=4096 ...` metrics are the headline.
+        let d = 32usize;
+        let shards = 8usize;
+        let target_samples: u64 = if quick { 120_000 } else { 1_500_000 };
+        for &n_streams in &[16usize, 256, 4096] {
+            for &batch in &[1usize, 64, 512] {
+                let case = format!("s={n_streams} b={batch}");
+                if !bench.enabled(&format!("bank_sweep {case}")) {
+                    continue;
+                }
+                let msgs =
+                    ((target_samples / batch as u64).max(n_streams as u64 * 2)) as usize;
+                let mut rates = [0.0f64; 2];
+                for (mode, &(tag, banked)) in
+                    [("bank", true), ("slot", false)].iter().enumerate()
+                {
+                    let c = Coordinator::with_banking(
+                        shards,
+                        4096,
+                        BackpressurePolicy::Block,
+                        banked,
+                    );
+                    let names: Vec<String> =
+                        (0..n_streams).map(|i| format!("s{i}")).collect();
+                    for name in &names {
+                        c.register(name, d, AveragerSpec::Gea { c: 0.5 }).unwrap();
+                    }
+                    let flat = vec![0.5f64; batch * d];
+                    // Warm the pools and queues off the clock.
+                    for name in names.iter().take(64) {
+                        c.push_many(name, batch, &flat).unwrap();
+                    }
+                    c.sync().unwrap();
+                    let t0 = Instant::now();
+                    for m in 0..msgs {
+                        c.push_many(&names[m % n_streams], batch, &flat).unwrap();
+                    }
+                    c.sync().unwrap();
+                    let dt = t0.elapsed();
+                    rates[mode] = (msgs * batch) as f64 / dt.as_secs_f64();
+                    bench.record_metric(
+                        &format!("bank_sweep {case} {tag}"),
+                        rates[mode],
+                        "samples/s",
+                    );
+                }
+                bench.record_metric(
+                    &format!("bank_speedup {case}"),
+                    rates[0] / rates[1],
+                    "x (bank/slot)",
+                );
+            }
+        }
+    }
+
     bench.section("snapshot latency while ingesting (4 shards, block)");
     {
         let c = Arc::new(Coordinator::new(4, 4096, BackpressurePolicy::Block));

@@ -141,8 +141,9 @@ impl AwaMulti {
 
 /// `out[i] = Σ_j terms[j].0 · terms[j].1[i]` in one pass over `out`,
 /// specialized for the small accumulator counts AWA uses so the common
-/// cases compile to straight-line FMA streams.
-fn weighted_sum_into(out: &mut [f64], terms: &[(f64, &[f64])]) {
+/// cases compile to straight-line FMA streams. Shared with the planar
+/// bank backend ([`super::banked::AwaMultiBank`]).
+pub(crate) fn weighted_sum_into(out: &mut [f64], terms: &[(f64, &[f64])]) {
     match terms {
         [] => out.iter_mut().for_each(|o| *o = 0.0),
         [(w, a)] => {

@@ -1,0 +1,921 @@
+//! Planar bank backends: many same-spec streams fused into one
+//! structure-of-arrays state arena.
+//!
+//! A [`BankState`] holds the accumulator state of *every* stream
+//! registered with one `(AveragerSpec, dim)` pair as contiguous
+//! row-major arenas — one `Vec<f64>` for the vector accumulators (row
+//! stride = the estimator's per-stream float count) plus per-stream
+//! scalar lanes (`t`, counts, decay trackers) in parallel `Vec`s. The
+//! coordinator's shard workers stage a whole drain cycle's batches and
+//! apply them through **one** [`BankState::apply_batches`] virtual
+//! dispatch per bank, with batches pre-sorted by row so the arena is
+//! walked in address order; reads for snapshot publication gather every
+//! dirty row in one [`BankState::values_rows_into`] call via the
+//! multi-row kernels in [`super::kernels`].
+//!
+//! Each backend applies the *identical per-sample recurrence* as its
+//! boxed [`super::Averager`] counterpart (they share `solve_gamma`,
+//! `combine_gamma`, `weighted_sum_into`, and the batch kernels), so a
+//! banked stream is equivalent to a per-slot stream to 1e-12 — enforced
+//! by the bank-vs-slot property test over every banked spec.
+//!
+//! Row lifecycle: [`BankState::push_row`] appends zeroed storage,
+//! [`BankState::reset_row`] returns a row to the empty state so the
+//! coordinator's free list can recycle it for a later registration.
+
+use super::awa2::combine_gamma;
+use super::awa_multi::weighted_sum_into;
+use super::gea::solve_gamma;
+use super::kernels;
+use super::{AveragerSpec, WindowKind};
+
+/// One stream's staged ingest for a drain cycle: `count` consecutive
+/// samples packed flat in `data`, bound for bank row `row`.
+pub struct RowBatch<'a> {
+    pub row: usize,
+    pub count: usize,
+    pub data: &'a [f64],
+}
+
+/// A planar multi-stream estimator bank (see module docs).
+///
+/// Callers guarantee: `row < rows()`, every batch's `data.len() ==
+/// count * dim()`, and batches in `apply_batches` are sorted by `row`
+/// with same-row batches in stream order.
+pub trait BankState: Send {
+    /// Sample dimensionality shared by every row.
+    fn dim(&self) -> usize;
+
+    /// Allocated rows (including recycled-but-free ones).
+    fn rows(&self) -> usize;
+
+    /// Arena floats per row — the estimator's memory cost, matching
+    /// [`super::Averager::memory_floats`].
+    fn row_stride(&self) -> usize;
+
+    /// Append zeroed storage for one more row; returns its index.
+    fn push_row(&mut self) -> usize;
+
+    /// Return `row` to the freshly-registered state.
+    fn reset_row(&mut self, row: usize);
+
+    /// Apply every staged batch — ONE virtual dispatch per bank per
+    /// drain cycle.
+    fn apply_batches(&mut self, batches: &[RowBatch<'_>]);
+
+    /// Samples observed by `row`.
+    fn t(&self, row: usize) -> u64;
+
+    /// Nominal window `k_t` of `row`.
+    fn window_len(&self, row: usize) -> f64;
+
+    /// Write the estimates of `rows` (ascending, deduplicated) into
+    /// `out` (`rows.len() * dim()` floats, row-major), setting
+    /// `present[j] = false` for rows with no estimate yet — one virtual
+    /// dispatch per publish cycle.
+    fn values_rows_into(&mut self, rows: &[usize], out: &mut [f64], present: &mut [bool]);
+
+    /// Write one row's estimate; `false` when it has none (tests and
+    /// the on-demand read path).
+    fn value_row_into(&self, row: usize, out: &mut [f64]) -> bool;
+}
+
+/// Build the banked backend for a spec, or `None` for specs that fall
+/// back to the per-stream slot path (`True`, `Raw`, `Restart`, `Eh` —
+/// their state is ragged or horizon-dependent, not planar).
+pub fn build_bank(spec: &AveragerSpec, d: usize) -> Option<Box<dyn BankState>> {
+    if d == 0 {
+        return None;
+    }
+    match *spec {
+        AveragerSpec::Exp { gamma } if (0.0..1.0).contains(&gamma) => {
+            let b: Box<dyn BankState> = Box::new(ExpBank::new(d, gamma));
+            Some(b)
+        }
+        AveragerSpec::ExpK { k } if k >= 1 => {
+            let kf = k as f64;
+            let b: Box<dyn BankState> = Box::new(ExpBank::new(d, (kf - 1.0) / (kf + 1.0)));
+            Some(b)
+        }
+        AveragerSpec::Gea { c } if c > 0.0 && c < 1.0 => {
+            let b: Box<dyn BankState> = Box::new(GeaBank::new(d, c));
+            Some(b)
+        }
+        AveragerSpec::Awa {
+            window,
+            accumulators,
+        } if accumulators >= 2 && window.validate().is_ok() => {
+            let b: Box<dyn BankState> = if accumulators == 2 {
+                Box::new(Awa2Bank::new(d, window))
+            } else {
+                Box::new(AwaMultiBank::new(d, window, accumulators - 1))
+            };
+            Some(b)
+        }
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ExpBank — planar ExpAverage (covers Exp and ExpK specs)
+// ---------------------------------------------------------------------------
+
+/// Planar [`super::ExpAverage`]: one `rows × d` EMA arena plus `γ^t`
+/// and `t` scalar lanes; batches collapse through the closed-form
+/// [`kernels::ema_fold_rows`], values read back via the multi-row
+/// debias gather [`kernels::scale_rows_into`].
+pub struct ExpBank {
+    gamma: f64,
+    d: usize,
+    ema: Vec<f64>,
+    gamma_pow_t: Vec<f64>,
+    t: Vec<u64>,
+    /// Reused job list for the gather kernel.
+    read_jobs: Vec<(usize, f64)>,
+}
+
+impl ExpBank {
+    pub fn new(d: usize, gamma: f64) -> ExpBank {
+        ExpBank {
+            gamma,
+            d,
+            ema: Vec::new(),
+            gamma_pow_t: Vec::new(),
+            t: Vec::new(),
+            read_jobs: Vec::new(),
+        }
+    }
+}
+
+impl BankState for ExpBank {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn rows(&self) -> usize {
+        self.t.len()
+    }
+
+    fn row_stride(&self) -> usize {
+        self.d
+    }
+
+    fn push_row(&mut self) -> usize {
+        self.ema.resize(self.ema.len() + self.d, 0.0);
+        self.gamma_pow_t.push(1.0);
+        self.t.push(0);
+        self.t.len() - 1
+    }
+
+    fn reset_row(&mut self, row: usize) {
+        let off = row * self.d;
+        self.ema[off..off + self.d].iter_mut().for_each(|v| *v = 0.0);
+        self.gamma_pow_t[row] = 1.0;
+        self.t[row] = 0;
+    }
+
+    fn apply_batches(&mut self, batches: &[RowBatch<'_>]) {
+        let d = self.d;
+        let mut jobs: Vec<(usize, &[f64])> = Vec::with_capacity(batches.len());
+        for b in batches {
+            jobs.push((b.row * d, b.data));
+        }
+        kernels::ema_fold_rows(&mut self.ema, d, self.gamma, &jobs);
+        for b in batches {
+            self.gamma_pow_t[b.row] *= self.gamma.powi(b.count as i32);
+            self.t[b.row] += b.count as u64;
+        }
+    }
+
+    fn t(&self, row: usize) -> u64 {
+        self.t[row]
+    }
+
+    fn window_len(&self, row: usize) -> f64 {
+        let k = ((1.0 + self.gamma) / (1.0 - self.gamma)).round() as u64;
+        WindowKind::Fixed { k }.k_at(self.t[row])
+    }
+
+    fn values_rows_into(&mut self, rows: &[usize], out: &mut [f64], present: &mut [bool]) {
+        self.read_jobs.clear();
+        for (j, &row) in rows.iter().enumerate() {
+            let t = self.t[row];
+            present[j] = t > 0;
+            let scale = if t == 0 {
+                0.0
+            } else {
+                1.0 / (1.0 - self.gamma_pow_t[row])
+            };
+            self.read_jobs.push((row * self.d, scale));
+        }
+        kernels::scale_rows_into(out, &self.ema, self.d, &self.read_jobs);
+    }
+
+    fn value_row_into(&self, row: usize, out: &mut [f64]) -> bool {
+        if self.t[row] == 0 {
+            return false;
+        }
+        let scale = 1.0 / (1.0 - self.gamma_pow_t[row]);
+        let off = row * self.d;
+        for (o, &e) in out.iter_mut().zip(&self.ema[off..off + self.d]) {
+            *o = e * scale;
+        }
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GeaBank — planar GrowingExp
+// ---------------------------------------------------------------------------
+
+/// Planar [`super::GrowingExp`]: one `rows × d` average arena plus
+/// variance-factor and `t` lanes. The decay is re-solved per sample
+/// (that *is* the anytime guarantee), so the batch win is structural —
+/// one dispatch per bank per drain — with the identical `solve_gamma`
+/// recurrence as the slot path.
+pub struct GeaBank {
+    c: f64,
+    d: usize,
+    avg: Vec<f64>,
+    v: Vec<f64>,
+    t: Vec<u64>,
+    read_offs: Vec<usize>,
+}
+
+impl GeaBank {
+    pub fn new(d: usize, c: f64) -> GeaBank {
+        GeaBank {
+            c,
+            d,
+            avg: Vec::new(),
+            v: Vec::new(),
+            t: Vec::new(),
+            read_offs: Vec::new(),
+        }
+    }
+}
+
+impl BankState for GeaBank {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn rows(&self) -> usize {
+        self.t.len()
+    }
+
+    fn row_stride(&self) -> usize {
+        self.d
+    }
+
+    fn push_row(&mut self) -> usize {
+        self.avg.resize(self.avg.len() + self.d, 0.0);
+        self.v.push(0.0);
+        self.t.push(0);
+        self.t.len() - 1
+    }
+
+    fn reset_row(&mut self, row: usize) {
+        let off = row * self.d;
+        self.avg[off..off + self.d].iter_mut().for_each(|x| *x = 0.0);
+        self.v[row] = 0.0;
+        self.t[row] = 0;
+    }
+
+    fn apply_batches(&mut self, batches: &[RowBatch<'_>]) {
+        let d = self.d;
+        for b in batches {
+            let off = b.row * d;
+            let avg = &mut self.avg[off..off + d];
+            let mut v = self.v[b.row];
+            let mut t = self.t[b.row];
+            for x in b.data.chunks_exact(d) {
+                t += 1;
+                if t == 1 {
+                    avg.copy_from_slice(x);
+                    v = 1.0;
+                    continue;
+                }
+                let k_target = (self.c * t as f64).max(1.0).min(t as f64);
+                let g = solve_gamma(v, 1.0 / k_target);
+                let om = 1.0 - g;
+                kernels::ema_step(avg, x, g);
+                v = g * g * v + om * om;
+            }
+            self.v[b.row] = v;
+            self.t[b.row] = t;
+        }
+    }
+
+    fn t(&self, row: usize) -> u64 {
+        self.t[row]
+    }
+
+    fn window_len(&self, row: usize) -> f64 {
+        WindowKind::Growing { c: self.c }.k_at(self.t[row])
+    }
+
+    fn values_rows_into(&mut self, rows: &[usize], out: &mut [f64], present: &mut [bool]) {
+        self.read_offs.clear();
+        for (j, &row) in rows.iter().enumerate() {
+            present[j] = self.t[row] > 0;
+            self.read_offs.push(row * self.d);
+        }
+        kernels::copy_rows_into(out, &self.avg, self.d, &self.read_offs);
+    }
+
+    fn value_row_into(&self, row: usize, out: &mut [f64]) -> bool {
+        if self.t[row] == 0 {
+            return false;
+        }
+        let off = row * self.d;
+        out.copy_from_slice(&self.avg[off..off + self.d]);
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Awa2Bank — planar Awa2
+// ---------------------------------------------------------------------------
+
+/// Planar [`super::Awa2`]: one `rows × 2d` accumulator arena (each row's
+/// two halves are the physical accumulators) plus `old_phys`/`N⁰`/`N¹`/
+/// `t` lanes. Fixed windows fold run-to-flush through
+/// [`kernels::mean_update_run`]; values read back through the multi-row
+/// combine [`kernels::lerp_rows_into`].
+pub struct Awa2Bank {
+    kind: WindowKind,
+    d: usize,
+    bank: Vec<f64>,
+    old_phys: Vec<u8>,
+    n0: Vec<u64>,
+    n1: Vec<u64>,
+    t: Vec<u64>,
+    read_jobs: Vec<(usize, usize, f64)>,
+}
+
+impl Awa2Bank {
+    pub fn new(d: usize, kind: WindowKind) -> Awa2Bank {
+        Awa2Bank {
+            kind,
+            d,
+            bank: Vec::new(),
+            old_phys: Vec::new(),
+            n0: Vec::new(),
+            n1: Vec::new(),
+            t: Vec::new(),
+            read_jobs: Vec::new(),
+        }
+    }
+
+    fn recent_off(&self, row: usize) -> usize {
+        row * 2 * self.d + (1 - self.old_phys[row] as usize) * self.d
+    }
+
+    fn flush_row(&mut self, row: usize) {
+        self.old_phys[row] ^= 1;
+        self.n0[row] = self.n1[row];
+        self.n1[row] = 0;
+        let off = self.recent_off(row);
+        let d = self.d;
+        self.bank[off..off + d].iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn should_flush(&self, row: usize) -> bool {
+        match self.kind {
+            WindowKind::Fixed { k } => self.n1[row] >= k.max(1),
+            WindowKind::Growing { c } => self.n1[row] as f64 >= c * self.t[row] as f64,
+        }
+    }
+}
+
+impl BankState for Awa2Bank {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn rows(&self) -> usize {
+        self.t.len()
+    }
+
+    fn row_stride(&self) -> usize {
+        2 * self.d
+    }
+
+    fn push_row(&mut self) -> usize {
+        self.bank.resize(self.bank.len() + 2 * self.d, 0.0);
+        self.old_phys.push(0);
+        self.n0.push(0);
+        self.n1.push(0);
+        self.t.push(0);
+        self.t.len() - 1
+    }
+
+    fn reset_row(&mut self, row: usize) {
+        let base = row * 2 * self.d;
+        self.bank[base..base + 2 * self.d]
+            .iter_mut()
+            .for_each(|x| *x = 0.0);
+        self.old_phys[row] = 0;
+        self.n0[row] = 0;
+        self.n1[row] = 0;
+        self.t[row] = 0;
+    }
+
+    fn apply_batches(&mut self, batches: &[RowBatch<'_>]) {
+        let d = self.d;
+        for b in batches {
+            let row = b.row;
+            match self.kind {
+                WindowKind::Fixed { k } => {
+                    // Run-to-flush fold, identical to Awa2::observe_many.
+                    let k = k.max(1);
+                    let mut offset = 0usize;
+                    while offset < b.count {
+                        let room = (k - self.n1[row]) as usize;
+                        let take = room.min(b.count - offset);
+                        let run = &b.data[offset * d..(offset + take) * d];
+                        let n1_start = self.n1[row];
+                        let rec = self.recent_off(row);
+                        kernels::mean_update_run(&mut self.bank[rec..rec + d], run, n1_start);
+                        self.n1[row] += take as u64;
+                        self.t[row] += take as u64;
+                        offset += take;
+                        if self.n1[row] >= k {
+                            self.flush_row(row);
+                        }
+                    }
+                }
+                WindowKind::Growing { .. } => {
+                    // The flush trigger reads `t` per sample.
+                    for x in b.data.chunks_exact(d) {
+                        self.t[row] += 1;
+                        self.n1[row] += 1;
+                        let n = self.n1[row] as f64;
+                        let rec = self.recent_off(row);
+                        kernels::mean_update(&mut self.bank[rec..rec + d], x, n);
+                        if self.should_flush(row) {
+                            self.flush_row(row);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn t(&self, row: usize) -> u64 {
+        self.t[row]
+    }
+
+    fn window_len(&self, row: usize) -> f64 {
+        self.kind.k_at(self.t[row])
+    }
+
+    fn values_rows_into(&mut self, rows: &[usize], out: &mut [f64], present: &mut [bool]) {
+        self.read_jobs.clear();
+        for (j, &row) in rows.iter().enumerate() {
+            let t = self.t[row];
+            present[j] = t > 0;
+            let base = row * 2 * self.d;
+            let old_off = base + self.old_phys[row] as usize * self.d;
+            let rec_off = base + (1 - self.old_phys[row] as usize) * self.d;
+            // γ ∈ {0, 1} degrades the lerp to an exact copy of the old /
+            // recent accumulator, matching Awa2::value_into's cases.
+            let gamma = if self.n1[row] == 0 {
+                0.0
+            } else if self.n0[row] == 0 {
+                1.0
+            } else {
+                combine_gamma(self.n0[row] as f64, self.n1[row] as f64, self.kind.k_at(t))
+            };
+            self.read_jobs.push((rec_off, old_off, gamma));
+        }
+        kernels::lerp_rows_into(out, &self.bank, self.d, &self.read_jobs);
+    }
+
+    fn value_row_into(&self, row: usize, out: &mut [f64]) -> bool {
+        let t = self.t[row];
+        if t == 0 {
+            return false;
+        }
+        let base = row * 2 * self.d;
+        let old = &self.bank[base + self.old_phys[row] as usize * self.d..][..self.d];
+        let recent = &self.bank[base + (1 - self.old_phys[row] as usize) * self.d..][..self.d];
+        if self.n1[row] == 0 {
+            out.copy_from_slice(old);
+            return true;
+        }
+        if self.n0[row] == 0 {
+            out.copy_from_slice(recent);
+            return true;
+        }
+        let gamma = combine_gamma(self.n0[row] as f64, self.n1[row] as f64, self.kind.k_at(t));
+        kernels::lerp_into(out, recent, old, gamma);
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AwaMultiBank — planar AwaMulti
+// ---------------------------------------------------------------------------
+
+/// Planar [`super::AwaMulti`]: one `rows × (z+1)d` accumulator arena
+/// plus flattened per-row logical→physical index maps and count lanes; a
+/// shift rotates a row's index window, never data.
+pub struct AwaMultiBank {
+    kind: WindowKind,
+    d: usize,
+    z: usize,
+    bank: Vec<f64>,
+    /// `order[row*(z+1) + i]` = physical slot of logical accumulator `i`.
+    order: Vec<u32>,
+    /// `counts[row*(z+1) + i]` = logical accumulator `i`'s sample count.
+    counts: Vec<u64>,
+    t: Vec<u64>,
+}
+
+impl AwaMultiBank {
+    pub fn new(d: usize, kind: WindowKind, z: u32) -> AwaMultiBank {
+        AwaMultiBank {
+            kind,
+            d,
+            z: z.max(1) as usize,
+            bank: Vec::new(),
+            order: Vec::new(),
+            counts: Vec::new(),
+            t: Vec::new(),
+        }
+    }
+
+    fn zp1(&self) -> usize {
+        self.z + 1
+    }
+
+    fn chunk_size(&self) -> u64 {
+        match self.kind {
+            WindowKind::Fixed { k } => (k + self.z as u64 - 1) / self.z as u64,
+            WindowKind::Growing { .. } => unreachable!("growing uses group trigger"),
+        }
+    }
+
+    fn recent_total(&self, row: usize) -> u64 {
+        let zp1 = self.zp1();
+        self.counts[row * zp1 + 1..(row + 1) * zp1].iter().sum()
+    }
+
+    fn newest_off(&self, row: usize) -> usize {
+        let zp1 = self.zp1();
+        row * zp1 * self.d + self.order[row * zp1 + self.z] as usize * self.d
+    }
+
+    fn should_shift(&self, row: usize) -> bool {
+        let zp1 = self.zp1();
+        match self.kind {
+            WindowKind::Fixed { .. } => self.counts[row * zp1 + self.z] >= self.chunk_size(),
+            WindowKind::Growing { c } => self.recent_total(row) as f64 >= c * self.t[row] as f64,
+        }
+    }
+
+    fn shift_row(&mut self, row: usize) {
+        let zp1 = self.zp1();
+        self.order[row * zp1..(row + 1) * zp1].rotate_left(1);
+        self.counts[row * zp1..(row + 1) * zp1].rotate_left(1);
+        self.counts[row * zp1 + self.z] = 0;
+        let off = self.newest_off(row);
+        let d = self.d;
+        self.bank[off..off + d].iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+impl BankState for AwaMultiBank {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn rows(&self) -> usize {
+        self.t.len()
+    }
+
+    fn row_stride(&self) -> usize {
+        self.zp1() * self.d
+    }
+
+    fn push_row(&mut self) -> usize {
+        let zp1 = self.zp1();
+        self.bank.resize(self.bank.len() + zp1 * self.d, 0.0);
+        for i in 0..zp1 {
+            self.order.push(i as u32);
+            self.counts.push(0);
+        }
+        self.t.push(0);
+        self.t.len() - 1
+    }
+
+    fn reset_row(&mut self, row: usize) {
+        let zp1 = self.zp1();
+        let base = row * zp1 * self.d;
+        self.bank[base..base + zp1 * self.d]
+            .iter_mut()
+            .for_each(|x| *x = 0.0);
+        for i in 0..zp1 {
+            self.order[row * zp1 + i] = i as u32;
+            self.counts[row * zp1 + i] = 0;
+        }
+        self.t[row] = 0;
+    }
+
+    fn apply_batches(&mut self, batches: &[RowBatch<'_>]) {
+        let d = self.d;
+        let zp1 = self.zp1();
+        for b in batches {
+            let row = b.row;
+            match self.kind {
+                WindowKind::Fixed { .. } => {
+                    // Run-to-chunk fold, identical to AwaMulti::observe_many.
+                    let chunk = self.chunk_size().max(1);
+                    let mut offset = 0usize;
+                    while offset < b.count {
+                        let newest = row * zp1 + self.z;
+                        let room = (chunk - self.counts[newest]) as usize;
+                        let take = room.min(b.count - offset);
+                        let run = &b.data[offset * d..(offset + take) * d];
+                        let n_start = self.counts[newest];
+                        let off = self.newest_off(row);
+                        kernels::mean_update_run(&mut self.bank[off..off + d], run, n_start);
+                        self.counts[newest] += take as u64;
+                        self.t[row] += take as u64;
+                        offset += take;
+                        if self.counts[newest] >= chunk {
+                            self.shift_row(row);
+                        }
+                    }
+                }
+                WindowKind::Growing { .. } => {
+                    for x in b.data.chunks_exact(d) {
+                        self.t[row] += 1;
+                        let newest = row * zp1 + self.z;
+                        self.counts[newest] += 1;
+                        let n = self.counts[newest] as f64;
+                        let off = self.newest_off(row);
+                        kernels::mean_update(&mut self.bank[off..off + d], x, n);
+                        if self.should_shift(row) {
+                            self.shift_row(row);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn t(&self, row: usize) -> u64 {
+        self.t[row]
+    }
+
+    fn window_len(&self, row: usize) -> f64 {
+        self.kind.k_at(self.t[row])
+    }
+
+    fn values_rows_into(&mut self, rows: &[usize], out: &mut [f64], present: &mut [bool]) {
+        let d = self.d;
+        for (j, &row) in rows.iter().enumerate() {
+            present[j] = self.value_row_into(row, &mut out[j * d..(j + 1) * d]);
+        }
+    }
+
+    fn value_row_into(&self, row: usize, out: &mut [f64]) -> bool {
+        let t = self.t[row];
+        if t == 0 {
+            return false;
+        }
+        let zp1 = self.zp1();
+        let counts = &self.counts[row * zp1..(row + 1) * zp1];
+        let order = &self.order[row * zp1..(row + 1) * zp1];
+        let base = row * zp1 * self.d;
+        let slot = |i: usize| -> &[f64] {
+            &self.bank[base + order[i] as usize * self.d..][..self.d]
+        };
+        let n0 = counts[0];
+        let nrec: u64 = counts[1..].iter().sum();
+        if nrec == 0 {
+            if n0 == 0 {
+                return false;
+            }
+            out.copy_from_slice(slot(0));
+            return true;
+        }
+        let gamma0 = if n0 == 0 {
+            0.0
+        } else {
+            1.0 - combine_gamma(n0 as f64, nrec as f64, self.kind.k_at(t))
+        };
+        let rec_scale = (1.0 - gamma0) / nrec as f64;
+        const STACK_TERMS: usize = 8;
+        let mut stack: [(f64, &[f64]); STACK_TERMS] = [(0.0, &[]); STACK_TERMS];
+        let mut heap: Vec<(f64, &[f64])> = Vec::new();
+        let mut n_terms = 0usize;
+        for j in 0..zp1 {
+            let w = if j == 0 {
+                gamma0
+            } else {
+                counts[j] as f64 * rec_scale
+            };
+            if w != 0.0 {
+                if self.z < STACK_TERMS {
+                    stack[n_terms] = (w, slot(j));
+                } else {
+                    heap.push((w, slot(j)));
+                }
+                n_terms += 1;
+            }
+        }
+        let terms: &[(f64, &[f64])] = if self.z < STACK_TERMS {
+            &stack[..n_terms]
+        } else {
+            &heap
+        };
+        weighted_sum_into(out, terms);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::averagers::Averager;
+
+    /// Every banked spec paired with its reference boxed averager.
+    fn banked_specs() -> Vec<AveragerSpec> {
+        vec![
+            AveragerSpec::Exp { gamma: 0.9 },
+            AveragerSpec::Exp { gamma: 0.0 },
+            AveragerSpec::ExpK { k: 10 },
+            AveragerSpec::Gea { c: 0.5 },
+            AveragerSpec::Gea { c: 0.1 },
+            AveragerSpec::Awa {
+                window: WindowKind::Fixed { k: 7 },
+                accumulators: 2,
+            },
+            AveragerSpec::Awa {
+                window: WindowKind::Growing { c: 0.4 },
+                accumulators: 2,
+            },
+            AveragerSpec::Awa {
+                window: WindowKind::Fixed { k: 12 },
+                accumulators: 3,
+            },
+            AveragerSpec::Awa {
+                window: WindowKind::Growing { c: 0.5 },
+                accumulators: 4,
+            },
+        ]
+    }
+
+    #[test]
+    fn non_planar_specs_have_no_bank() {
+        for spec in [
+            AveragerSpec::True {
+                window: WindowKind::Fixed { k: 5 },
+            },
+            AveragerSpec::Raw {
+                c: 0.5,
+                total_steps: 100,
+            },
+            AveragerSpec::Restart {
+                window: WindowKind::Fixed { k: 5 },
+            },
+            AveragerSpec::Eh {
+                window: WindowKind::Fixed { k: 100 },
+                eps: 0.1,
+            },
+        ] {
+            assert!(build_bank(&spec, 3).is_none(), "{}", spec.label());
+        }
+    }
+
+    #[test]
+    fn bank_rows_match_boxed_averagers_exactly() {
+        // Three interleaved rows per bank, batches straddling every
+        // flush/shift boundary; each row must agree with its own boxed
+        // averager to 1e-12 at every drain point.
+        let d = 3;
+        for spec in banked_specs() {
+            let mut bank = build_bank(&spec, d).expect("bankable");
+            assert_eq!(bank.dim(), d);
+            let mut refs: Vec<Box<dyn Averager>> =
+                (0..3).map(|_| spec.build(d).unwrap()).collect();
+            for _ in 0..3 {
+                bank.push_row();
+            }
+            assert_eq!(bank.rows(), 3);
+            let mut stream_pos = [0u64; 3];
+            // Deterministic per-row data, varying batch sizes.
+            for (cycle, &sizes) in [[1usize, 5, 2], [7, 1, 13], [4, 30, 3], [11, 2, 1]]
+                .iter()
+                .enumerate()
+            {
+                let mut datas: Vec<Vec<f64>> = Vec::new();
+                for (row, &n) in sizes.iter().enumerate() {
+                    let mut flat = Vec::with_capacity(n * d);
+                    for s in 0..n {
+                        for dim in 0..d {
+                            let i = stream_pos[row] + s as u64;
+                            flat.push(((i * 31 + row as u64 * 7 + dim as u64) as f64 * 0.17)
+                                .sin()
+                                * 4.0);
+                        }
+                    }
+                    stream_pos[row] += n as u64;
+                    datas.push(flat);
+                }
+                let batches: Vec<RowBatch> = sizes
+                    .iter()
+                    .enumerate()
+                    .map(|(row, &n)| RowBatch {
+                        row,
+                        count: n,
+                        data: &datas[row],
+                    })
+                    .collect();
+                bank.apply_batches(&batches);
+                for (row, &n) in sizes.iter().enumerate() {
+                    refs[row].observe_many(&datas[row], n);
+                }
+                // Per-row reads and the fused multi-row read both agree.
+                let mut out = vec![0.0; 3 * d];
+                let mut present = [false; 3];
+                bank.values_rows_into(&[0, 1, 2], &mut out, &mut present);
+                for row in 0..3 {
+                    assert_eq!(bank.t(row), refs[row].t(), "{} cycle {cycle}", spec.label());
+                    let want = refs[row].value().unwrap();
+                    let mut got = vec![0.0; d];
+                    assert!(bank.value_row_into(row, &mut got));
+                    assert!(present[row]);
+                    for i in 0..d {
+                        assert!(
+                            (got[i] - want[i]).abs() < 1e-12,
+                            "{} row {row} dim {i}: {} vs {}",
+                            spec.label(),
+                            got[i],
+                            want[i]
+                        );
+                        assert!(
+                            (out[row * d + i] - want[i]).abs() < 1e-12,
+                            "{} fused read row {row} dim {i}",
+                            spec.label()
+                        );
+                    }
+                    assert!(
+                        (bank.window_len(row) - refs[row].window_len()).abs() < 1e-9,
+                        "{} window_len",
+                        spec.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reset_row_recycles_to_fresh_state() {
+        let d = 2;
+        for spec in banked_specs() {
+            let mut bank = build_bank(&spec, d).expect("bankable");
+            let r0 = bank.push_row();
+            let r1 = bank.push_row();
+            let data: Vec<f64> = (0..10 * d).map(|i| i as f64).collect();
+            bank.apply_batches(&[
+                RowBatch {
+                    row: r0,
+                    count: 10,
+                    data: &data,
+                },
+                RowBatch {
+                    row: r1,
+                    count: 10,
+                    data: &data,
+                },
+            ]);
+            assert_eq!(bank.t(r0), 10);
+            bank.reset_row(r0);
+            assert_eq!(bank.t(r0), 0, "{}", spec.label());
+            let mut out = vec![0.0; d];
+            assert!(!bank.value_row_into(r0, &mut out), "{}", spec.label());
+            // The surviving row is untouched and matches a fresh replay.
+            let mut reference = spec.build(d).unwrap();
+            reference.observe_many(&data, 10);
+            assert!(bank.value_row_into(r1, &mut out));
+            let want = reference.value().unwrap();
+            for i in 0..d {
+                assert!((out[i] - want[i]).abs() < 1e-12, "{}", spec.label());
+            }
+            // A recycled row behaves like a brand-new stream.
+            bank.apply_batches(&[RowBatch {
+                row: r0,
+                count: 1,
+                data: &data[..d],
+            }]);
+            assert_eq!(bank.t(r0), 1);
+            assert!(bank.value_row_into(r0, &mut out));
+            assert_eq!(&out[..], &data[..d]);
+        }
+    }
+}

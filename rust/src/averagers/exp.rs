@@ -100,23 +100,13 @@ impl Averager for ExpAverage {
             return;
         }
         // Closed-form fold (the exponential-family batch recursion of
-        // Luxenberg & Boyd, 2024): n sequential EMA steps collapse to
-        //
-        //   ema ← γⁿ·ema + (1−γ)·Σ_{i<n} γ^{n−1−i}·x_i,
-        //
-        // one scale pass plus one axpy per sample, walking the batch
-        // newest→oldest so the running weight only ever multiplies by γ
-        // (exact at γ = 0). The debias tracker advances as γ^t·γⁿ in a
-        // single multiplication.
+        // Luxenberg & Boyd, 2024): n sequential EMA steps collapse to one
+        // `kernels::ema_fold` — shared with the planar bank backend so the
+        // slot and bank paths cannot drift. The debias tracker advances as
+        // γ^t·γⁿ in a single multiplication.
         let g = self.gamma;
-        let gn = g.powi(count as i32);
-        kernels::scale_in_place(&mut self.ema, gn);
-        let mut w = 1.0 - g;
-        for x in data.chunks_exact(d).rev() {
-            kernels::axpy(&mut self.ema, w, x);
-            w *= g;
-        }
-        self.gamma_pow_t *= gn;
+        kernels::ema_fold(&mut self.ema, data, g);
+        self.gamma_pow_t *= g.powi(count as i32);
         self.t += count as u64;
     }
 

@@ -108,8 +108,10 @@ impl GrowingExp {
 
 /// Smallest-γ solution of `(v+1)γ² − 2γ + (1 − s) = 0` where `s` is the
 /// target variance; falls back to the variance-minimizing `γ = 1/(v+1)`
-/// when the target is unattainable (discriminant < 0).
-fn solve_gamma(v: f64, s: f64) -> f64 {
+/// when the target is unattainable (discriminant < 0). Shared with the
+/// planar bank backend ([`super::banked::GeaBank`]) so both paths solve
+/// the identical recurrence.
+pub(crate) fn solve_gamma(v: f64, s: f64) -> f64 {
     let a = v + 1.0;
     let disc = 1.0 - a * (1.0 - s);
     if disc >= 0.0 {

@@ -88,6 +88,90 @@ pub(crate) fn add_assign(sum: &mut [f64], x: &[f64]) {
     }
 }
 
+/// Closed-form EMA fold of `data.len()/acc.len()` consecutive samples
+/// into `acc` (the batch form of [`ema_step`], equal up to round-off):
+///
+/// ```text
+/// acc ← γⁿ·acc + (1−γ)·Σ_{i<n} γ^{n−1−i}·x_i
+/// ```
+///
+/// One scale pass plus one [`axpy`] per sample, walking the batch
+/// newest→oldest so the running weight only ever multiplies by `γ`
+/// (exact at `γ = 0`).
+#[inline]
+pub(crate) fn ema_fold(acc: &mut [f64], data: &[f64], gamma: f64) {
+    let d = acc.len();
+    debug_assert!(d > 0 && data.len() % d == 0);
+    let n = (data.len() / d) as i32;
+    scale_in_place(acc, gamma.powi(n));
+    let mut w = 1.0 - gamma;
+    for x in data.chunks_exact(d).rev() {
+        axpy(acc, w, x);
+        w *= gamma;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-row variants: the same primitives applied across many rows of a
+// row-major structure-of-arrays arena in ONE call. These are the planar
+// stream-bank drain/publish kernels — the coordinator stages a whole
+// drain cycle's batches per bank and enters here once, so the inner
+// loops stream through the arena without per-stream dispatch.
+// ---------------------------------------------------------------------------
+
+/// Fold one batch per row: `jobs[i] = (offset, data)` applies
+/// [`ema_fold`] to `arena[offset..offset+d]`. Jobs sorted by offset walk
+/// the arena in address order (prefetch-friendly at thousands of rows).
+#[inline]
+pub(crate) fn ema_fold_rows(arena: &mut [f64], d: usize, gamma: f64, jobs: &[(usize, &[f64])]) {
+    for &(off, data) in jobs {
+        ema_fold(&mut arena[off..off + d], data, gamma);
+    }
+}
+
+/// Gather rows: `out` row `j` = `arena[offs[j]..offs[j]+d]`.
+#[inline]
+pub(crate) fn copy_rows_into(out: &mut [f64], arena: &[f64], d: usize, offs: &[usize]) {
+    debug_assert_eq!(out.len(), offs.len() * d);
+    for (j, &off) in offs.iter().enumerate() {
+        out[j * d..(j + 1) * d].copy_from_slice(&arena[off..off + d]);
+    }
+}
+
+/// Gather-and-scale rows: `out` row `j` = `scale_j · arena[off_j..]`
+/// (`jobs[j] = (off_j, scale_j)`) — the multi-row debias read of an EMA
+/// bank.
+#[inline]
+pub(crate) fn scale_rows_into(out: &mut [f64], arena: &[f64], d: usize, jobs: &[(usize, f64)]) {
+    debug_assert_eq!(out.len(), jobs.len() * d);
+    for (j, &(off, scale)) in jobs.iter().enumerate() {
+        for (o, &a) in out[j * d..(j + 1) * d].iter_mut().zip(&arena[off..off + d]) {
+            *o = a * scale;
+        }
+    }
+}
+
+/// Multi-row [`lerp_into`]: `out` row `j` = `γ_j·arena[a_j..] +
+/// (1−γ_j)·arena[b_j..]` (`jobs[j] = (a_j, b_j, γ_j)`) — the two-
+/// accumulator AWA combine read across every dirty row of a bank.
+#[inline]
+pub(crate) fn lerp_rows_into(
+    out: &mut [f64],
+    arena: &[f64],
+    d: usize,
+    jobs: &[(usize, usize, f64)],
+) {
+    debug_assert_eq!(out.len(), jobs.len() * d);
+    for (j, &(a_off, b_off, gamma)) in jobs.iter().enumerate() {
+        let om = 1.0 - gamma;
+        let a = &arena[a_off..a_off + d];
+        let b = &arena[b_off..b_off + d];
+        for ((o, &av), &bv) in out[j * d..(j + 1) * d].iter_mut().zip(a).zip(b) {
+            *o = gamma * av + om * bv;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,5 +210,59 @@ mod tests {
         axpy(&mut acc, 2.0, &[1.0, 1.0]);
         add_assign(&mut acc, &[0.5, -1.0]);
         assert_eq!(acc, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn ema_fold_matches_stepwise_to_roundoff() {
+        let d = 2;
+        let gamma = 0.85;
+        let data: Vec<f64> = (0..10 * d).map(|i| (i as f64 * 0.31).sin() * 3.0).collect();
+        let mut folded = vec![0.4, -0.7];
+        let mut stepped = folded.clone();
+        ema_fold(&mut folded, &data, gamma);
+        for x in data.chunks_exact(d) {
+            ema_step(&mut stepped, x, gamma);
+        }
+        for i in 0..d {
+            assert!((folded[i] - stepped[i]).abs() < 1e-12, "dim {i}");
+        }
+        // γ = 0 is exact: the fold must equal the last sample.
+        let mut z = vec![9.0, 9.0];
+        ema_fold(&mut z, &data, 0.0);
+        assert_eq!(&z[..], &data[data.len() - d..]);
+    }
+
+    #[test]
+    fn multi_row_kernels_match_single_row() {
+        let d = 3;
+        let rows = 4;
+        let mut arena: Vec<f64> = (0..rows * d).map(|i| i as f64 * 0.5).collect();
+        let batches: Vec<Vec<f64>> = (0..rows)
+            .map(|r| (0..2 * d).map(|i| ((r * 7 + i) as f64).cos()).collect())
+            .collect();
+        let mut expect = arena.clone();
+        for r in 0..rows {
+            ema_fold(&mut expect[r * d..(r + 1) * d], &batches[r], 0.6);
+        }
+        let jobs: Vec<(usize, &[f64])> =
+            (0..rows).map(|r| (r * d, batches[r].as_slice())).collect();
+        ema_fold_rows(&mut arena, d, 0.6, &jobs);
+        assert_eq!(arena, expect);
+
+        // Gather reads: copy, scale, lerp across rows in one call.
+        let mut out = vec![0.0; 2 * d];
+        copy_rows_into(&mut out, &arena, d, &[2 * d, 0]);
+        assert_eq!(&out[..d], &arena[2 * d..3 * d]);
+        assert_eq!(&out[d..], &arena[..d]);
+        scale_rows_into(&mut out, &arena, d, &[(0, 2.0), (d, 0.0)]);
+        for i in 0..d {
+            assert_eq!(out[i], 2.0 * arena[i]);
+            assert_eq!(out[d + i], 0.0);
+        }
+        lerp_rows_into(&mut out, &arena, d, &[(0, d, 0.25), (d, 0, 1.0)]);
+        for i in 0..d {
+            assert!((out[i] - (0.25 * arena[i] + 0.75 * arena[d + i])).abs() < 1e-15);
+            assert_eq!(out[d + i], arena[d + i]);
+        }
     }
 }

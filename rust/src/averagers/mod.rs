@@ -5,16 +5,16 @@
 //! where the window is either fixed (`k_t = k`) or grows with the stream
 //! (`k_t = ct`, `c < 1`) — see [`WindowKind`].
 //!
-//! | estimator | memory (floats) | anytime | window | batched `observe_many` | paper |
-//! |---|---|---|---|---|---|
-//! | [`ExpAverage`] | `d` | yes | fixed (`k=(1+γ)/(1−γ)`) | closed-form `γⁿ` fold | Eq. 2 (`expk`) |
-//! | [`GrowingExp`] | `d` | yes | growing | per-sample decay, batch kernel | §2, Eqs. 3–4 (`exp`) |
-//! | [`Awa2`] | `2d` (one SoA bank) | yes | fixed & growing | run-to-flush mean kernels | §3.1–3.2 (`awa`) |
-//! | [`AwaMulti`] | `(z+1)d` (one SoA bank) | yes | fixed & growing | run-to-chunk mean kernels | §3.3–3.4 (`awa3`, …) |
-//! | [`TrueWindow`] | `k_t·d` | yes | fixed & growing | tail-block ring rebuild | `truek`/`true` baseline |
-//! | [`RawTail`] | `d` | **no** | growing | suffix fold past `t₀` | `raw` baseline |
-//! | [`RestartTail`] | `3d` | stale (one block) | fixed & growing | block-skipping runs | §1 block-restart baseline |
-//! | [`EhWindow`] | `(1/ε)·log(εk_t)·d` | yes (ε-approx) | fixed & growing | per-sample replay (structure-exact) | Datar et al. [2002] baseline |
+//! | estimator | memory (floats) | anytime | window | batched `observe_many` | planar bank (arena stride) | paper |
+//! |---|---|---|---|---|---|---|
+//! | [`ExpAverage`] | `d` | yes | fixed (`k=(1+γ)/(1−γ)`) | closed-form `γⁿ` fold | [`banked::ExpBank`] (`d`) | Eq. 2 (`expk`) |
+//! | [`GrowingExp`] | `d` | yes | growing | per-sample decay, batch kernel | [`banked::GeaBank`] (`d`) | §2, Eqs. 3–4 (`exp`) |
+//! | [`Awa2`] | `2d` (one SoA bank) | yes | fixed & growing | run-to-flush mean kernels | [`banked::Awa2Bank`] (`2d`) | §3.1–3.2 (`awa`) |
+//! | [`AwaMulti`] | `(z+1)d` (one SoA bank) | yes | fixed & growing | run-to-chunk mean kernels | [`banked::AwaMultiBank`] (`(z+1)d`) | §3.3–3.4 (`awa3`, …) |
+//! | [`TrueWindow`] | `k_t·d` | yes | fixed & growing | tail-block ring rebuild | — (ragged state, slot fallback) | `truek`/`true` baseline |
+//! | [`RawTail`] | `d` | **no** | growing | suffix fold past `t₀` | — (horizon-bound, slot fallback) | `raw` baseline |
+//! | [`RestartTail`] | `3d` | stale (one block) | fixed & growing | block-skipping runs | — (slot fallback) | §1 block-restart baseline |
+//! | [`EhWindow`] | `(1/ε)·log(εk_t)·d` | yes (ε-approx) | fixed & growing | per-sample replay (structure-exact) | — (ragged state, slot fallback) | Datar et al. [2002] baseline |
 //!
 //! The unifying design constraint (paper §1): every estimator keeps the
 //! variance of its average equal to that of the exact `k_t`-window mean,
@@ -30,10 +30,26 @@
 //! `Vec`), with an index map naming the oldest…newest slots so a shift
 //! is an index rotation, never a data move — accumulator combines then
 //! stream through one cache-friendly buffer.
+//!
+//! ## Planar stream banks
+//!
+//! [`banked`] lifts the SoA idea across *streams*: every stream
+//! registered with the same `(spec, dim)` shares one [`banked::BankState`]
+//! whose vector accumulators live in a single row-major arena (row
+//! stride = the "memory (floats)" column above) with parallel scalar
+//! lanes for `t`, counts, and decay trackers. Stream registration
+//! appends (or recycles, via the coordinator's per-bank free list) a
+//! row; a drain cycle applies all staged batches in row order through
+//! one [`banked::BankState::apply_batches`] dispatch, and snapshot
+//! publication gathers every dirty row with one
+//! [`banked::BankState::values_rows_into`] call feeding the epoch-flip
+//! (seqlock) buffers in `coordinator::bank` — see that module for the
+//! wait-free read protocol.
 
 mod analysis;
 mod awa2;
 mod awa_multi;
+pub mod banked;
 mod exp;
 mod exp_histogram;
 mod gea;

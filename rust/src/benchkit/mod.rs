@@ -197,16 +197,21 @@ impl Bench {
 
     /// Finish the suite: print a compact summary and dump every timed
     /// case (median/mean/std ns, throughput) and recorded metric to
-    /// `BENCH_<suite>.json` in the working directory, so bench results
-    /// are machine-comparable across commits.
+    /// `BENCH_<suite>.json` at the **repo root** (anchored via
+    /// `CARGO_MANIFEST_DIR`, not the process cwd, so `cargo bench` run
+    /// from any subdirectory still lands the dump where the cross-commit
+    /// tooling looks for it).
     pub fn finish(self) {
         // A filtered run covers only a subset of cases; never let it
         // clobber the full-suite dump used for cross-commit comparison.
         if self.filter.is_none() {
-            let path = format!("BENCH_{}.json", self.suite);
+            let root = std::env::var("CARGO_MANIFEST_DIR")
+                .unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").to_string());
+            let path =
+                std::path::Path::new(&root).join(format!("BENCH_{}.json", self.suite));
             match std::fs::write(&path, self.to_json().encode_pretty()) {
-                Ok(()) => println!("wrote {path}"),
-                Err(e) => eprintln!("could not write {path}: {e}"),
+                Ok(()) => println!("wrote {}", path.display()),
+                Err(e) => eprintln!("could not write {}: {e}", path.display()),
             }
         } else {
             println!("(filtered run: BENCH json not written)");

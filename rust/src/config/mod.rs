@@ -192,6 +192,7 @@ pub struct StreamConfig {
 /// shards = 4
 /// queue_capacity = 1024
 /// backpressure = "block"     # block | drop | reject
+/// banked = true              # fuse same-spec streams into planar banks
 ///
 /// [[stream]]
 /// name = "layer0.weight"
@@ -204,6 +205,9 @@ pub struct ServiceConfig {
     pub shards: usize,
     pub queue_capacity: usize,
     pub backpressure: BackpressurePolicy,
+    /// Fuse same-spec streams into planar SoA banks (the hot path);
+    /// `false` keeps every stream on the per-slot mutex fallback.
+    pub banked: bool,
     pub streams: Vec<StreamConfig>,
 }
 
@@ -214,6 +218,7 @@ impl Default for ServiceConfig {
             shards: 4,
             queue_capacity: 1024,
             backpressure: BackpressurePolicy::Block,
+            banked: true,
             streams: Vec::new(),
         }
     }
@@ -249,6 +254,9 @@ impl ServiceConfig {
         if let Some(v) = doc.get_path("service.backpressure") {
             cfg.backpressure =
                 BackpressurePolicy::parse(v.as_str().ok_or("backpressure must be a string")?)?;
+        }
+        if let Some(v) = doc.get_path("service.banked") {
+            cfg.banked = v.as_bool().ok_or("service.banked must be a boolean")?;
         }
         if let Some(arr) = doc.get_path("stream").and_then(Toml::as_arr) {
             for s in arr {

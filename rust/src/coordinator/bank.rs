@@ -1,0 +1,365 @@
+//! Coordinator-side planar banks: row allocation, staged drain
+//! application, and the epoch-flip (seqlock) snapshot publication that
+//! makes `Coordinator::snapshot` a wait-free read.
+//!
+//! ## Epoch-flip snapshot protocol
+//!
+//! Every bank row owns a [`RowPub`]: the row's published estimate as a
+//! block of atomics plus an epoch counter. After a shard worker applies
+//! a drain cycle's staged batches it republishes each dirty row:
+//!
+//! ```text
+//! writer (bank mutex held, one at a time):
+//!   epoch += 1            (odd: write in progress)
+//!   store t, k_t, value   (relaxed stores into the back image)
+//!   epoch += 1            (even: flipped, stable)
+//!
+//! reader (no lock, any thread):
+//!   e1 = epoch; if odd retry
+//!   load t, k_t, value
+//!   acquire fence; if epoch != e1 retry
+//! ```
+//!
+//! Readers never touch the bank mutex the writer holds, so a snapshot
+//! cannot stall behind the ingest queue it is observing — the service
+//! form of the paper's anytime guarantee. Retries only happen when a
+//! publish overlaps the read (drain-cycle granularity, so rare).
+//!
+//! ## Row lifecycle
+//!
+//! `register` appends a row (or pops one from the free list);
+//! `unregister` resets the row and pushes it back. Each allocation gets
+//! a fresh generation and a fresh `RowPub`, so in-flight shard messages
+//! holding a stale `(row, generation)` are skipped rather than applied
+//! to the recycled row.
+
+use crate::averagers::banked::{BankState, RowBatch};
+use crate::util::pool::PooledBuf;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A bank row's published estimate: seqlock-guarded block of atomics.
+pub(super) struct RowPub {
+    /// Even = stable; odd = publish in progress.
+    epoch: AtomicU64,
+    t: AtomicU64,
+    /// `k_t` as f64 bits.
+    window_len: AtomicU64,
+    has_value: AtomicU64,
+    /// Estimate as f64 bits, `dim` entries.
+    value: Vec<AtomicU64>,
+}
+
+impl RowPub {
+    pub(super) fn new(dim: usize) -> RowPub {
+        RowPub {
+            epoch: AtomicU64::new(0),
+            t: AtomicU64::new(0),
+            window_len: AtomicU64::new(0f64.to_bits()),
+            has_value: AtomicU64::new(0),
+            value: (0..dim).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Writer side; callers serialize via the bank mutex.
+    fn publish(&self, t: u64, window_len: f64, value: Option<&[f64]>) {
+        let e = self.epoch.load(Ordering::Relaxed);
+        self.epoch.store(e.wrapping_add(1), Ordering::Relaxed);
+        // Release fence: the odd epoch is visible before any payload
+        // store can be observed.
+        fence(Ordering::Release);
+        self.t.store(t, Ordering::Relaxed);
+        self.window_len
+            .store(window_len.to_bits(), Ordering::Relaxed);
+        match value {
+            Some(v) => {
+                debug_assert_eq!(v.len(), self.value.len());
+                for (slot, &x) in self.value.iter().zip(v) {
+                    slot.store(x.to_bits(), Ordering::Relaxed);
+                }
+                self.has_value.store(1, Ordering::Relaxed);
+            }
+            None => self.has_value.store(0, Ordering::Relaxed),
+        }
+        self.epoch.store(e.wrapping_add(2), Ordering::Release);
+    }
+
+    /// Wait-free-in-practice torn-free read: loops only while a publish
+    /// overlaps. `out.len()` must equal the bank dim. Returns
+    /// `(t, window_len, has_value)`.
+    pub(super) fn read_into(&self, out: &mut [f64]) -> (u64, f64, bool) {
+        debug_assert_eq!(out.len(), self.value.len());
+        loop {
+            let e1 = self.epoch.load(Ordering::Acquire);
+            if e1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let t = self.t.load(Ordering::Relaxed);
+            let w = f64::from_bits(self.window_len.load(Ordering::Relaxed));
+            let has = self.has_value.load(Ordering::Relaxed) != 0;
+            if has {
+                for (o, slot) in out.iter_mut().zip(&self.value) {
+                    *o = f64::from_bits(slot.load(Ordering::Relaxed));
+                }
+            }
+            // Acquire fence: payload loads complete before the epoch
+            // re-check, so a match proves the read was not torn.
+            fence(Ordering::Acquire);
+            if self.epoch.load(Ordering::Relaxed) == e1 {
+                return (t, w, has);
+            }
+        }
+    }
+
+    /// Published sample count alone (metrics path; single atomic, never
+    /// torn).
+    pub(super) fn t(&self) -> u64 {
+        self.t.load(Ordering::Acquire)
+    }
+}
+
+/// One staged (stream → bank row) batch, owned until the drain applies
+/// it; dropping the [`PooledBuf`] recycles the allocation.
+pub(super) struct BankJob {
+    pub row: u32,
+    pub gen: u64,
+    pub count: u32,
+    pub data: PooledBuf,
+}
+
+struct BankInner {
+    state: Box<dyn BankState>,
+    /// Per-row publication blocks (fresh `Arc` per allocation).
+    pubs: Vec<Arc<RowPub>>,
+    /// Generation of each row's current allocation; a mismatch marks a
+    /// message for a since-unregistered stream.
+    gens: Vec<u64>,
+    next_gen: u64,
+    /// Recycled rows awaiting re-registration.
+    free: Vec<u32>,
+    active_rows: usize,
+    /// Publication scratch, reused across drain cycles.
+    scratch: Vec<f64>,
+    present: Vec<bool>,
+    dirty_rows: Vec<usize>,
+}
+
+/// All coordinator streams sharing one `(spec, dim)`: a planar
+/// [`BankState`] behind one mutex that writers take **once per drain
+/// cycle**, plus the lock-free per-row publication blocks readers use.
+///
+/// Arenas grow monotonically: `free_row` zeroes a row and recycles it
+/// for the next registration, but never shrinks the arena (and a bank
+/// outlives its last stream). This is deliberate — rows are small
+/// (`row_stride` floats), shrinking would invalidate row indices held
+/// by in-flight messages, and the register/unregister churn this is
+/// built for reuses rows rather than retiring specs.
+pub(super) struct Bank {
+    /// Stable creation index — the shard workers' staging key. Banks
+    /// are striped per shard (the coordinator keys them by
+    /// `(spec, dim, shard)`), so each bank has a single writer and its
+    /// mutex is uncontended in steady state.
+    pub(super) index: usize,
+    pub(super) dim: usize,
+    /// Arena floats per row (the estimator's memory cost) — immutable,
+    /// so metrics reads never touch the writer lock.
+    pub(super) row_floats: usize,
+    inner: Mutex<BankInner>,
+}
+
+impl Bank {
+    pub(super) fn new(index: usize, dim: usize, state: Box<dyn BankState>) -> Bank {
+        let row_floats = state.row_stride();
+        Bank {
+            index,
+            dim,
+            row_floats,
+            inner: Mutex::new(BankInner {
+                state,
+                pubs: Vec::new(),
+                gens: Vec::new(),
+                next_gen: 1,
+                free: Vec::new(),
+                active_rows: 0,
+                scratch: Vec::new(),
+                present: Vec::new(),
+                dirty_rows: Vec::new(),
+            }),
+        }
+    }
+
+    /// Allocate a row (recycling the free list), returning
+    /// `(row, generation, publication block)`.
+    pub(super) fn alloc_row(&self) -> (u32, u64, Arc<RowPub>) {
+        let mut g = self.inner.lock().expect("bank lock");
+        let row = match g.free.pop() {
+            Some(r) => {
+                g.state.reset_row(r as usize);
+                r
+            }
+            None => {
+                let r = g.state.push_row() as u32;
+                g.pubs.push(Arc::new(RowPub::new(self.dim)));
+                g.gens.push(0);
+                r
+            }
+        };
+        let gen = g.next_gen;
+        g.next_gen += 1;
+        g.gens[row as usize] = gen;
+        // Fresh publication block: a recycled row must not leak the
+        // previous stream's published estimate.
+        let p = Arc::new(RowPub::new(self.dim));
+        g.pubs[row as usize] = Arc::clone(&p);
+        g.active_rows += 1;
+        (row, gen, p)
+    }
+
+    /// Return a row to the free list; in-flight messages carrying its
+    /// old generation become no-ops.
+    pub(super) fn free_row(&self, row: u32, gen: u64) {
+        let mut g = self.inner.lock().expect("bank lock");
+        if g.gens.get(row as usize) != Some(&gen) {
+            return; // already recycled
+        }
+        g.gens[row as usize] = 0; // no live generation
+        g.state.reset_row(row as usize);
+        g.free.push(row);
+        g.active_rows -= 1;
+    }
+
+    /// Rows currently backing a registered stream.
+    pub(super) fn active_rows(&self) -> usize {
+        self.inner.lock().expect("bank lock").active_rows
+    }
+
+    /// Apply one drain cycle's staged jobs: ONE mutex acquisition and
+    /// one `apply_batches` + one `values_rows_into` virtual dispatch for
+    /// the whole bank, then republish every dirty row through its
+    /// epoch-flip block. Jobs are sorted by row (stable, so same-stream
+    /// order is preserved) to walk the arena in address order. Returns
+    /// the number of rows republished.
+    pub(super) fn apply(&self, jobs: &mut [BankJob]) -> usize {
+        jobs.sort_by_key(|j| j.row);
+        let mut guard = self.inner.lock().expect("bank lock");
+        let inner = &mut *guard;
+        let mut batches: Vec<RowBatch<'_>> = Vec::with_capacity(jobs.len());
+        for j in jobs.iter() {
+            if inner.gens.get(j.row as usize) == Some(&j.gen) {
+                batches.push(RowBatch {
+                    row: j.row as usize,
+                    count: j.count as usize,
+                    data: &j.data,
+                });
+            }
+        }
+        if batches.is_empty() {
+            return 0;
+        }
+        inner.state.apply_batches(&batches);
+        inner.dirty_rows.clear();
+        for b in &batches {
+            if inner.dirty_rows.last() != Some(&b.row) {
+                inner.dirty_rows.push(b.row);
+            }
+        }
+        let d = self.dim;
+        let n = inner.dirty_rows.len();
+        inner.scratch.resize(n * d, 0.0);
+        inner.present.clear();
+        inner.present.resize(n, false);
+        inner
+            .state
+            .values_rows_into(&inner.dirty_rows, &mut inner.scratch, &mut inner.present);
+        for (i, &row) in inner.dirty_rows.iter().enumerate() {
+            let t = inner.state.t(row);
+            let w = inner.state.window_len(row);
+            let value = if inner.present[i] {
+                Some(&inner.scratch[i * d..(i + 1) * d])
+            } else {
+                None
+            };
+            inner.pubs[row].publish(t, w, value);
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::averagers::{banked::build_bank, AveragerSpec};
+
+    fn mk(spec: &AveragerSpec, dim: usize) -> Bank {
+        Bank::new(0, dim, build_bank(spec, dim).expect("bankable"))
+    }
+
+    #[test]
+    fn alloc_apply_publish_read() {
+        let bank = mk(&AveragerSpec::Gea { c: 0.5 }, 2);
+        let (row, gen, p) = bank.alloc_row();
+        let mut out = [0.0; 2];
+        assert_eq!(p.read_into(&mut out), (0, 0.0, false));
+        let mut jobs = vec![BankJob {
+            row,
+            gen,
+            count: 2,
+            data: PooledBuf::unpooled(vec![1.0, -1.0, 3.0, -3.0]),
+        }];
+        assert_eq!(bank.apply(&mut jobs), 1);
+        let (t, w, has) = p.read_into(&mut out);
+        assert_eq!(t, 2);
+        assert!(has);
+        assert!(w > 0.0);
+        assert!((out[0] + out[1]).abs() < 1e-12);
+        assert_eq!(p.t(), 2);
+    }
+
+    #[test]
+    fn stale_generation_messages_are_skipped() {
+        let bank = mk(&AveragerSpec::Gea { c: 0.5 }, 1);
+        let (row, gen, _p) = bank.alloc_row();
+        bank.free_row(row, gen);
+        assert_eq!(bank.active_rows(), 0);
+        // Recycle the row for a new stream.
+        let (row2, gen2, p2) = bank.alloc_row();
+        assert_eq!(row2, row);
+        assert_ne!(gen2, gen);
+        // A late message from the old stream must not touch the row.
+        let mut jobs = vec![BankJob {
+            row,
+            gen,
+            count: 1,
+            data: PooledBuf::unpooled(vec![99.0]),
+        }];
+        assert_eq!(bank.apply(&mut jobs), 0);
+        let mut out = [0.0; 1];
+        assert_eq!(p2.read_into(&mut out), (0, 0.0, false));
+        // Double-free of the old generation is a no-op.
+        bank.free_row(row, gen);
+        assert_eq!(bank.active_rows(), 1);
+    }
+
+    #[test]
+    fn same_row_jobs_apply_in_stream_order() {
+        // TrueWindow-like check via ExpAverage γ=0: the estimate is the
+        // last applied sample, so order across jobs must hold.
+        let bank = mk(&AveragerSpec::Exp { gamma: 0.0 }, 1);
+        let (row, gen, p) = bank.alloc_row();
+        let mut jobs: Vec<BankJob> = (1..=5)
+            .map(|i| BankJob {
+                row,
+                gen,
+                count: 1,
+                data: PooledBuf::unpooled(vec![i as f64]),
+            })
+            .collect();
+        bank.apply(&mut jobs);
+        let mut out = [0.0; 1];
+        let (t, _, has) = p.read_into(&mut out);
+        assert_eq!(t, 5);
+        assert!(has);
+        assert_eq!(out[0], 5.0);
+    }
+}

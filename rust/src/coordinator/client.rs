@@ -106,14 +106,14 @@ impl Client {
             ),
         };
         Ok(Snapshot {
-            stream: stream.to_string(),
+            stream: stream.into(),
             t: resp.get("t").and_then(Json::as_u64).unwrap_or(0),
             window_len: resp
                 .get("window_len")
                 .and_then(Json::as_f64)
                 .unwrap_or(0.0),
             dropped: resp.get("dropped").and_then(Json::as_u64).unwrap_or(0),
-            value,
+            value: value.map(crate::util::pool::PooledBuf::unpooled),
         })
     }
 

@@ -4,18 +4,27 @@
 //! this module is the production harness around them — the piece a
 //! training cluster or serving fleet would actually deploy:
 //!
-//! * [`stream`] — per-stream state: estimator + sequence/drop accounting.
-//! * [`Coordinator`] — the in-process core: stream registry, hash-sharded
+//! * [`stream`] — per-stream state: estimator + sequence/drop accounting
+//!   (the fallback backing for specs without a planar bank).
+//! * `bank` — planar stream banks: same-spec streams fused into one
+//!   structure-of-arrays state arena
+//!   ([`crate::averagers::banked`]) with free-list row recycling and
+//!   epoch-flip (seqlock) snapshot publication.
+//! * [`Coordinator`] — the in-process core: stream registry, sharded
 //!   ingest workers with bounded queues and configurable backpressure
-//!   ([`crate::config::BackpressurePolicy`]), snapshot reads at any time
-//!   (the paper's "anytime" property, operationalized), metrics.
+//!   ([`crate::config::BackpressurePolicy`]), wait-free snapshot reads at
+//!   any time (the paper's "anytime" property, operationalized), metrics.
 //! * [`protocol`] — length-prefixed JSON wire format.
 //! * [`server`]/[`client`] — TCP service and client library.
 //!
 //! Ordering guarantee: pushes to the *same stream* are applied in arrival
-//! order (each stream is pinned to one shard queue). Different streams
-//! proceed independently.
+//! order (each stream is pinned to one shard queue by name hash; banks
+//! are striped per shard, so each bank has a single writer). Different
+//! streams proceed independently; a drain cycle applies each touched
+//! bank's staged batches with one lock acquisition and one virtual
+//! dispatch.
 
+mod bank;
 pub mod client;
 mod core;
 pub mod protocol;

@@ -191,7 +191,7 @@ fn dispatch(req: Request, c: &Coordinator) -> Json {
                     None => Json::Null,
                 };
                 ok_response(vec![
-                    ("stream", Json::Str(snap.stream)),
+                    ("stream", Json::Str(snap.stream.to_string())),
                     ("t", Json::Num(snap.t as f64)),
                     ("window_len", Json::Num(snap.window_len)),
                     ("dropped", Json::Num(snap.dropped as f64)),

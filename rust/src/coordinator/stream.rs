@@ -10,9 +10,8 @@ pub struct StreamState {
     averager: Box<dyn Averager>,
     /// Samples applied (== averager.t(), kept separately for accounting).
     pub applied: u64,
-    /// Samples dropped by backpressure policy.
-    pub dropped: u64,
-    /// Samples rejected for shape errors.
+    /// Samples rejected for shape errors. (Backpressure drops are
+    /// counted lock-free on the coordinator's stream slot, not here.)
     pub malformed: u64,
 }
 
@@ -24,7 +23,6 @@ impl StreamState {
             averager: spec.build(dim)?,
             spec,
             applied: 0,
-            dropped: 0,
             malformed: 0,
         })
     }
@@ -52,6 +50,12 @@ impl StreamState {
     /// Current estimate (None before any sample).
     pub fn value(&self) -> Option<Vec<f64>> {
         self.averager.value()
+    }
+
+    /// Write the current estimate into `out` (length `dim`); `false`
+    /// when none exists yet. The allocation-free snapshot read.
+    pub fn value_into(&self, out: &mut [f64]) -> bool {
+        self.averager.value_into(out)
     }
 
     pub fn t(&self) -> u64 {

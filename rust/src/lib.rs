@@ -29,11 +29,15 @@
 //! `averagers::kernels`), the AWA accumulator banks are single
 //! contiguous SoA allocations, and the coordinator carries `(count,
 //! flat-data)` batches through its shard queues in pooled, reusable
-//! buffers ([`util::pool::BufferPool`]) — one message, one lock, one
-//! virtual call per batch, zero steady-state allocation. The `PushMany`
-//! wire op, the [`linreg`] experiment harness, and the bench suites all
-//! ride this path; batched-vs-sequential equivalence is property-tested
-//! to 1e-12 for every estimator family.
+//! buffers ([`util::pool::BufferPool`]) — one message per batch, zero
+//! steady-state allocation. Same-spec streams fuse into **planar banks**
+//! ([`averagers::banked`]): one structure-of-arrays arena per
+//! `(spec, dim)`, applied with one lock acquisition and one virtual
+//! dispatch per bank per drain cycle and published through an epoch-flip
+//! (seqlock) protocol so snapshots are wait-free. The `PushMany` wire
+//! op, the [`linreg`] experiment harness, and the bench suites all ride
+//! this path; batched-vs-sequential and bank-vs-slot equivalence are
+//! property-tested to 1e-12 for every estimator family.
 //!
 //! ## Architecture (three layers)
 //!

@@ -53,6 +53,21 @@ impl BufferPool {
     /// A pooled buffer holding a copy of `data` (recycles a parked
     /// allocation when one is available).
     pub fn take(&self, data: &[f64]) -> PooledBuf {
+        let mut buf = self.take_empty();
+        buf.data.extend_from_slice(data);
+        buf
+    }
+
+    /// A pooled buffer of exactly `len` zeroed floats — the output-side
+    /// twin of [`BufferPool::take`], used by the coordinator's snapshot
+    /// path so steady-state reads allocate nothing.
+    pub fn take_len(&self, len: usize) -> PooledBuf {
+        let mut buf = self.take_empty();
+        buf.data.resize(len, 0.0);
+        buf
+    }
+
+    fn take_empty(&self) -> PooledBuf {
         let mut v = {
             let mut free = self.shared.free.lock().expect("buffer pool");
             match free.bufs.pop() {
@@ -64,7 +79,6 @@ impl BufferPool {
             }
         };
         v.clear();
-        v.extend_from_slice(data);
         PooledBuf {
             data: v,
             home: Some(Arc::clone(&self.shared)),
@@ -90,12 +104,66 @@ impl PooledBuf {
     pub fn unpooled(data: Vec<f64>) -> PooledBuf {
         PooledBuf { data, home: None }
     }
+
+    /// Take the contents out as a plain `Vec` (the allocation leaves the
+    /// pool for good).
+    pub fn into_vec(mut self) -> Vec<f64> {
+        self.home = None;
+        std::mem::take(&mut self.data)
+    }
 }
 
 impl std::ops::Deref for PooledBuf {
     type Target = [f64];
     fn deref(&self) -> &[f64] {
         &self.data
+    }
+}
+
+impl std::ops::DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+}
+
+/// Clones are unpooled: a copy escaping the hot path must not compete
+/// for the pool's parked allocations.
+impl Clone for PooledBuf {
+    fn clone(&self) -> PooledBuf {
+        PooledBuf {
+            data: self.data.clone(),
+            home: None,
+        }
+    }
+}
+
+impl std::fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.data.fmt(f)
+    }
+}
+
+impl PartialEq for PooledBuf {
+    fn eq(&self, other: &PooledBuf) -> bool {
+        self.data == other.data
+    }
+}
+
+impl PartialEq<Vec<f64>> for PooledBuf {
+    fn eq(&self, other: &Vec<f64>) -> bool {
+        self.data == *other
+    }
+}
+
+impl PartialEq<[f64]> for PooledBuf {
+    fn eq(&self, other: &[f64]) -> bool {
+        self.data[..] == *other
+    }
+}
+
+impl PartialEq<PooledBuf> for Vec<f64> {
+    fn eq(&self, other: &PooledBuf) -> bool {
+        *self == other.data
     }
 }
 
@@ -320,6 +388,26 @@ mod tests {
         let big = pool.take(&vec![0.0; MAX_POOLED_CAPACITY + 1]);
         drop(big);
         assert_eq!(pool.idle(), 0, "oversized buffers must not be parked");
+    }
+
+    #[test]
+    fn take_len_zeroes_and_clone_is_unpooled() {
+        let pool = BufferPool::new(2);
+        let mut b = pool.take_len(3);
+        assert_eq!(b, vec![0.0; 3]);
+        b[1] = 5.0;
+        let c = b.clone();
+        assert_eq!(c, b);
+        drop(b);
+        assert_eq!(pool.idle(), 1);
+        drop(c); // clone is unpooled: must not be parked
+        assert_eq!(pool.idle(), 1);
+        // Reuse must re-zero.
+        assert_eq!(pool.take_len(2), vec![0.0; 2]);
+        // into_vec removes the allocation from circulation.
+        let v = pool.take(&[1.0]).into_vec();
+        assert_eq!(v, vec![1.0]);
+        assert_eq!(pool.idle(), 0);
     }
 
     #[test]
