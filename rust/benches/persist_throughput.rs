@@ -1,0 +1,89 @@
+//! Durability cost: WAL-appended ingest vs in-memory ingest, and
+//! checkpoint wall time / snapshot size, at 16 / 256 / 4096 streams.
+//!
+//! The WAL append sits on the shard worker (one framed write per
+//! accepted batch, no fsync by default), so the number to watch is the
+//! delta between the `in-memory` and `wal-appended` rows at each stream
+//! count — that delta is the entire price of crash durability on the
+//! ingest hot path. Checkpoint cost is a one-shot metric per stream
+//! count (quiesce + bulk bank encode + atomic write + truncation).
+//!
+//! Run: `cargo bench --bench persist_throughput` (`-- --quick`).
+
+use ata::averagers::AveragerSpec;
+use ata::benchkit::Bench;
+use ata::config::{BackpressurePolicy, PersistConfig};
+use ata::coordinator::Coordinator;
+use std::time::Instant;
+
+fn main() {
+    let mut bench = Bench::from_args("persist_throughput");
+    let quick = std::env::args().any(|a| a == "--quick");
+    let d = 64usize;
+    let batch = 16usize;
+    for &n_streams in &[16usize, 256, 4096] {
+        if quick && n_streams > 256 {
+            continue;
+        }
+        bench.section(&format!(
+            "durable vs in-memory ingest: {n_streams} streams x d={d}, batch={batch}"
+        ));
+        let dir = std::env::temp_dir().join(format!(
+            "ata-bench-persist-{}-{n_streams}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let pcfg = PersistConfig {
+            dir: dir.display().to_string(),
+            segment_bytes: 64 << 20,
+            fsync: false,
+            checkpoint_interval_ms: 0,
+        };
+        let durable =
+            Coordinator::with_persist(4, 4096, BackpressurePolicy::Block, true, Some(&pcfg))
+                .expect("durable coordinator");
+        let plain = Coordinator::new(4, 4096, BackpressurePolicy::Block);
+        let names: Vec<String> = (0..n_streams).map(|i| format!("s{i}")).collect();
+        for c in [&plain, &durable] {
+            for name in &names {
+                c.register(name, d, AveragerSpec::Gea { c: 0.5 }).unwrap();
+            }
+        }
+        let flat = vec![0.5f64; batch * d];
+        let mut i = 0usize;
+        bench.bench_elements(
+            &format!("push_many in-memory    n={n_streams}"),
+            batch as u64,
+            || {
+                i = (i + 1) % n_streams;
+                plain.push_many(&names[i], batch, &flat).unwrap()
+            },
+        );
+        plain.sync().unwrap();
+        let mut j = 0usize;
+        bench.bench_elements(
+            &format!("push_many wal-appended n={n_streams}"),
+            batch as u64,
+            || {
+                j = (j + 1) % n_streams;
+                durable.push_many(&names[j], batch, &flat).unwrap()
+            },
+        );
+        durable.sync().unwrap();
+        let t0 = Instant::now();
+        let report = durable.checkpoint().expect("checkpoint");
+        bench.record_metric(
+            &format!("checkpoint wall n={n_streams}"),
+            t0.elapsed().as_secs_f64() * 1e3,
+            "ms",
+        );
+        bench.record_metric(
+            &format!("checkpoint size n={n_streams}"),
+            report.bytes as f64,
+            "bytes",
+        );
+        drop(durable);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    bench.finish();
+}

@@ -2,6 +2,7 @@
 
 use super::kernels;
 use super::{Averager, WindowKind};
+use crate::persist::codec::{self, Dec, Enc};
 
 /// AWA with one *old* and one *recent* accumulator — the paper's `awa`.
 ///
@@ -213,6 +214,84 @@ impl Averager for Awa2 {
         let gamma = self.gamma();
         super::lerp_into(out, self.recent(), self.old(), gamma);
         true
+    }
+
+    /// Payload: `AWA2` tag, dim, window, `t`, `N⁰`, `N¹`, flushes, then
+    /// the old and recent accumulator means in LOGICAL order (the
+    /// physical `old_phys` swap never reaches the wire).
+    fn export_state(&self, enc: &mut Enc) {
+        enc.put_u8(codec::tag::AWA2);
+        enc.put_u32(self.d as u32);
+        codec::put_window(enc, &self.kind);
+        enc.put_u64(self.t);
+        enc.put_u64(self.n0);
+        enc.put_u64(self.n1);
+        enc.put_u64(self.flushes);
+        enc.put_f64_slice(self.old());
+        enc.put_f64_slice(self.recent());
+    }
+
+    fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        codec::check_header(dec, codec::tag::AWA2, self.d)?;
+        codec::check_window(dec, &self.kind)?;
+        let t = dec.get_u64()?;
+        let n0 = dec.get_u64()?;
+        let n1 = dec.get_u64()?;
+        let flushes = dec.get_u64()?;
+        let old = codec::get_state_vec(dec, self.d)?;
+        let recent = codec::get_state_vec(dec, self.d)?;
+        self.old_phys = 0;
+        self.bank[..self.d].copy_from_slice(&old);
+        self.bank[self.d..].copy_from_slice(&recent);
+        self.t = t;
+        self.n0 = n0;
+        self.n1 = n1;
+        self.flushes = flushes;
+        Ok(())
+    }
+
+    /// Exact per-accumulator pooling: each accumulator is a plain
+    /// sample mean with a known count, so old pools with old and recent
+    /// with recent count-weighted — the merged accumulators are the
+    /// exact means of the unioned sample sets. (The *window* semantics
+    /// across the merged clocks is the documented approximation; a
+    /// pending flush fires immediately if the pooled recent group
+    /// crosses its threshold.)
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        codec::check_header(dec, codec::tag::AWA2, self.d)?;
+        codec::check_window(dec, &self.kind)?;
+        let t = dec.get_u64()?;
+        let n0 = dec.get_u64()?;
+        let n1 = dec.get_u64()?;
+        let flushes = dec.get_u64()?;
+        let old = codec::get_state_vec(dec, self.d)?;
+        let recent = codec::get_state_vec(dec, self.d)?;
+        if t == 0 {
+            return Ok(());
+        }
+        if self.t == 0 {
+            self.old_phys = 0;
+            self.bank[..self.d].copy_from_slice(&old);
+            self.bank[self.d..].copy_from_slice(&recent);
+            self.t = t;
+            self.n0 = n0;
+            self.n1 = n1;
+            self.flushes = flushes;
+            return Ok(());
+        }
+        let d = self.d;
+        let old_off = self.old_phys * d;
+        kernels::pool_means(&mut self.bank[old_off..old_off + d], &old, self.n0, n0);
+        self.n0 += n0;
+        let rec_off = (1 - self.old_phys) * d;
+        kernels::pool_means(&mut self.bank[rec_off..rec_off + d], &recent, self.n1, n1);
+        self.n1 += n1;
+        self.t += t;
+        self.flushes += flushes;
+        if self.n1 > 0 && self.should_flush() {
+            self.flush();
+        }
+        Ok(())
     }
 
     fn window_len(&self) -> f64 {

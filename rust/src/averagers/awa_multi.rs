@@ -4,6 +4,7 @@
 use super::awa2::combine_gamma;
 use super::kernels;
 use super::{Averager, WindowKind};
+use crate::persist::codec::{self, Dec, Enc};
 
 /// AWA with `z` recent accumulators plus one old accumulator (`z+1` total).
 ///
@@ -136,6 +137,34 @@ impl AwaMulti {
         self.counts[self.z] = 0;
         self.shifts += 1;
         self.newest_mut().iter_mut().for_each(|m| *m = 0.0);
+    }
+
+    /// Decode and validate an `AWA_MULTI` state payload against this
+    /// estimator's shape: `(t, counts, shifts, logical slot means)`.
+    fn parse_state(
+        &self,
+        dec: &mut Dec<'_>,
+    ) -> Result<(u64, Vec<u64>, u64, Vec<Vec<f64>>), String> {
+        codec::check_header(dec, codec::tag::AWA_MULTI, self.d)?;
+        codec::check_window(dec, &self.kind)?;
+        let z = dec.get_u32()? as usize;
+        if z != self.z {
+            return Err(format!(
+                "state payload has z={z} accumulators, estimator has z={}",
+                self.z
+            ));
+        }
+        let t = dec.get_u64()?;
+        let mut counts = Vec::with_capacity(self.z + 1);
+        for _ in 0..=self.z {
+            counts.push(dec.get_u64()?);
+        }
+        let shifts = dec.get_u64()?;
+        let mut slots = Vec::with_capacity(self.z + 1);
+        for _ in 0..=self.z {
+            slots.push(codec::get_state_vec(dec, self.d)?);
+        }
+        Ok((t, counts, shifts, slots))
     }
 }
 
@@ -297,6 +326,80 @@ impl Averager for AwaMulti {
         };
         weighted_sum_into(out, terms);
         true
+    }
+
+    /// Payload: `AWA_MULTI` tag, dim, window, `z`, `t`, per-accumulator
+    /// counts (oldest first), shifts, then the `z+1` accumulator means
+    /// in LOGICAL order (the rotation index map never reaches the wire).
+    fn export_state(&self, enc: &mut Enc) {
+        enc.put_u8(codec::tag::AWA_MULTI);
+        enc.put_u32(self.d as u32);
+        codec::put_window(enc, &self.kind);
+        enc.put_u32(self.z as u32);
+        enc.put_u64(self.t);
+        for &c in &self.counts {
+            enc.put_u64(c);
+        }
+        enc.put_u64(self.shifts);
+        for i in 0..=self.z {
+            enc.put_f64_slice(self.slot(i));
+        }
+    }
+
+    fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        let (t, counts, shifts, slots) = self.parse_state(dec)?;
+        self.t = t;
+        self.counts = counts;
+        self.shifts = shifts;
+        for (i, o) in self.order.iter_mut().enumerate() {
+            *o = i;
+        }
+        for (i, s) in slots.iter().enumerate() {
+            self.bank[i * self.d..(i + 1) * self.d].copy_from_slice(s);
+        }
+        Ok(())
+    }
+
+    /// Exact per-accumulator pooling, oldest-with-oldest: every
+    /// accumulator is a plain sample mean, so logical slot `i` pools
+    /// count-weighted with the peer's slot `i` — the merged accumulators
+    /// are exact means of the unioned chunks. (Chunk *boundaries* across
+    /// the merged clocks are the documented approximation; a pending
+    /// shift fires if the pooled newest chunk crosses its threshold.)
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        let (t, counts, shifts, slots) = self.parse_state(dec)?;
+        if t == 0 {
+            return Ok(());
+        }
+        if self.t == 0 {
+            self.t = t;
+            self.counts = counts;
+            self.shifts = shifts;
+            for (i, o) in self.order.iter_mut().enumerate() {
+                *o = i;
+            }
+            for (i, s) in slots.iter().enumerate() {
+                self.bank[i * self.d..(i + 1) * self.d].copy_from_slice(s);
+            }
+            return Ok(());
+        }
+        let d = self.d;
+        for i in 0..=self.z {
+            let n_mine = self.counts[i];
+            let n_theirs = counts[i];
+            if n_theirs == 0 {
+                continue;
+            }
+            let off = self.order[i] * d;
+            kernels::pool_means(&mut self.bank[off..off + d], &slots[i], n_mine, n_theirs);
+            self.counts[i] += n_theirs;
+        }
+        self.t += t;
+        self.shifts += shifts;
+        if self.should_shift() {
+            self.shift();
+        }
+        Ok(())
     }
 
     fn window_len(&self) -> f64 {

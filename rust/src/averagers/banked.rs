@@ -28,6 +28,7 @@ use super::awa_multi::weighted_sum_into;
 use super::gea::solve_gamma;
 use super::kernels;
 use super::{AveragerSpec, WindowKind};
+use crate::persist::codec::{self, Dec, Enc};
 
 /// One stream's staged ingest for a drain cycle: `count` consecutive
 /// samples packed flat in `data`, bound for bank row `row`.
@@ -78,6 +79,24 @@ pub trait BankState: Send {
     /// Write one row's estimate; `false` when it has none (tests and
     /// the on-demand read path).
     fn value_row_into(&self, row: usize, out: &mut [f64]) -> bool;
+
+    /// Append the canonical state payloads of `rows` back-to-back in
+    /// ONE bulk pass — a single virtual dispatch per bank per
+    /// checkpoint, gathering scalar lanes and arena rows together. Each
+    /// row's payload is byte-identical to what the matching slot
+    /// estimator's [`super::Averager::export_state`] would write for the
+    /// same state (accumulators in logical order; diagnostic-only
+    /// counters the bank does not track, e.g. AWA flush/shift counts,
+    /// are written as 0), so bank rows and slot estimators interchange
+    /// freely across snapshot, restore and merge.
+    fn export_rows(&self, rows: &[usize], enc: &mut Enc);
+
+    /// Restore one row from a canonical payload written by
+    /// [`BankState::export_rows`] or the matching slot estimator's
+    /// `export_state`. Errors — never panics — on kind/dim/parameter
+    /// mismatch or malformed bytes (the recovery cold path imports row
+    /// by row; only the checkpoint encode needs to be bulk).
+    fn import_row(&mut self, row: usize, dec: &mut Dec<'_>) -> Result<(), String>;
 }
 
 /// Build the banked backend for a spec, or `None` for specs that fall
@@ -222,6 +241,31 @@ impl BankState for ExpBank {
         }
         true
     }
+
+    fn export_rows(&self, rows: &[usize], enc: &mut Enc) {
+        for &row in rows {
+            enc.put_u8(codec::tag::EXP);
+            enc.put_u32(self.d as u32);
+            enc.put_f64(self.gamma);
+            enc.put_u64(self.t[row]);
+            enc.put_f64(self.gamma_pow_t[row]);
+            let off = row * self.d;
+            enc.put_f64_slice(&self.ema[off..off + self.d]);
+        }
+    }
+
+    fn import_row(&mut self, row: usize, dec: &mut Dec<'_>) -> Result<(), String> {
+        codec::check_header(dec, codec::tag::EXP, self.d)?;
+        codec::check_param("gamma", dec.get_f64()?, self.gamma)?;
+        let t = dec.get_u64()?;
+        let gamma_pow_t = dec.get_f64()?;
+        let ema = codec::get_state_vec(dec, self.d)?;
+        self.t[row] = t;
+        self.gamma_pow_t[row] = gamma_pow_t;
+        let off = row * self.d;
+        self.ema[off..off + self.d].copy_from_slice(&ema);
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -331,6 +375,31 @@ impl BankState for GeaBank {
         let off = row * self.d;
         out.copy_from_slice(&self.avg[off..off + self.d]);
         true
+    }
+
+    fn export_rows(&self, rows: &[usize], enc: &mut Enc) {
+        for &row in rows {
+            enc.put_u8(codec::tag::GEA);
+            enc.put_u32(self.d as u32);
+            enc.put_f64(self.c);
+            enc.put_u64(self.t[row]);
+            enc.put_f64(self.v[row]);
+            let off = row * self.d;
+            enc.put_f64_slice(&self.avg[off..off + self.d]);
+        }
+    }
+
+    fn import_row(&mut self, row: usize, dec: &mut Dec<'_>) -> Result<(), String> {
+        codec::check_header(dec, codec::tag::GEA, self.d)?;
+        codec::check_param("c", dec.get_f64()?, self.c)?;
+        let t = dec.get_u64()?;
+        let v = dec.get_f64()?;
+        let avg = codec::get_state_vec(dec, self.d)?;
+        self.t[row] = t;
+        self.v[row] = v;
+        let off = row * self.d;
+        self.avg[off..off + self.d].copy_from_slice(&avg);
+        Ok(())
     }
 }
 
@@ -512,6 +581,44 @@ impl BankState for Awa2Bank {
         let gamma = combine_gamma(self.n0[row] as f64, self.n1[row] as f64, self.kind.k_at(t));
         kernels::lerp_into(out, recent, old, gamma);
         true
+    }
+
+    fn export_rows(&self, rows: &[usize], enc: &mut Enc) {
+        let d = self.d;
+        for &row in rows {
+            enc.put_u8(codec::tag::AWA2);
+            enc.put_u32(d as u32);
+            codec::put_window(enc, &self.kind);
+            enc.put_u64(self.t[row]);
+            enc.put_u64(self.n0[row]);
+            enc.put_u64(self.n1[row]);
+            enc.put_u64(0); // flush counter: slot-path diagnostic only
+            let base = row * 2 * d;
+            let old_off = base + self.old_phys[row] as usize * d;
+            let rec_off = base + (1 - self.old_phys[row] as usize) * d;
+            enc.put_f64_slice(&self.bank[old_off..old_off + d]);
+            enc.put_f64_slice(&self.bank[rec_off..rec_off + d]);
+        }
+    }
+
+    fn import_row(&mut self, row: usize, dec: &mut Dec<'_>) -> Result<(), String> {
+        let d = self.d;
+        codec::check_header(dec, codec::tag::AWA2, d)?;
+        codec::check_window(dec, &self.kind)?;
+        let t = dec.get_u64()?;
+        let n0 = dec.get_u64()?;
+        let n1 = dec.get_u64()?;
+        let _flushes = dec.get_u64()?;
+        let old = codec::get_state_vec(dec, d)?;
+        let recent = codec::get_state_vec(dec, d)?;
+        let base = row * 2 * d;
+        self.old_phys[row] = 0;
+        self.bank[base..base + d].copy_from_slice(&old);
+        self.bank[base + d..base + 2 * d].copy_from_slice(&recent);
+        self.t[row] = t;
+        self.n0[row] = n0;
+        self.n1[row] = n1;
+        Ok(())
     }
 }
 
@@ -736,6 +843,59 @@ impl BankState for AwaMultiBank {
         weighted_sum_into(out, terms);
         true
     }
+
+    fn export_rows(&self, rows: &[usize], enc: &mut Enc) {
+        let d = self.d;
+        let zp1 = self.zp1();
+        for &row in rows {
+            enc.put_u8(codec::tag::AWA_MULTI);
+            enc.put_u32(d as u32);
+            codec::put_window(enc, &self.kind);
+            enc.put_u32(self.z as u32);
+            enc.put_u64(self.t[row]);
+            for i in 0..zp1 {
+                enc.put_u64(self.counts[row * zp1 + i]);
+            }
+            enc.put_u64(0); // shift counter: slot-path diagnostic only
+            let base = row * zp1 * d;
+            for i in 0..zp1 {
+                let off = base + self.order[row * zp1 + i] as usize * d;
+                enc.put_f64_slice(&self.bank[off..off + d]);
+            }
+        }
+    }
+
+    fn import_row(&mut self, row: usize, dec: &mut Dec<'_>) -> Result<(), String> {
+        let d = self.d;
+        let zp1 = self.zp1();
+        codec::check_header(dec, codec::tag::AWA_MULTI, d)?;
+        codec::check_window(dec, &self.kind)?;
+        let z = dec.get_u32()? as usize;
+        if z != self.z {
+            return Err(format!(
+                "state payload has z={z} accumulators, bank has z={}",
+                self.z
+            ));
+        }
+        let t = dec.get_u64()?;
+        let mut counts = Vec::with_capacity(zp1);
+        for _ in 0..zp1 {
+            counts.push(dec.get_u64()?);
+        }
+        let _shifts = dec.get_u64()?;
+        let mut slots = Vec::with_capacity(zp1);
+        for _ in 0..zp1 {
+            slots.push(codec::get_state_vec(dec, d)?);
+        }
+        let base = row * zp1 * d;
+        for i in 0..zp1 {
+            self.order[row * zp1 + i] = i as u32;
+            self.counts[row * zp1 + i] = counts[i];
+            self.bank[base + i * d..base + (i + 1) * d].copy_from_slice(&slots[i]);
+        }
+        self.t[row] = t;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -871,6 +1031,52 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn bank_row_payloads_roundtrip_and_interchange_with_slot_estimators() {
+        let d = 2;
+        for spec in banked_specs() {
+            let mut bank = build_bank(&spec, d).expect("bankable");
+            let r0 = bank.push_row();
+            let r1 = bank.push_row();
+            let data: Vec<f64> = (0..13 * d)
+                .map(|i| ((i * 13 + 5) as f64 * 0.21).sin() * 3.0)
+                .collect();
+            bank.apply_batches(&[RowBatch {
+                row: r0,
+                count: 13,
+                data: &data,
+            }]);
+            let mut enc = Enc::new();
+            bank.export_rows(&[r0], &mut enc);
+            let bytes = enc.into_bytes();
+            // Restores into another row of the same bank…
+            bank.import_row(r1, &mut Dec::new(&bytes)).unwrap();
+            let (mut a, mut b) = (vec![0.0; d], vec![0.0; d]);
+            assert_eq!(bank.t(r0), bank.t(r1), "{}", spec.label());
+            assert!(bank.value_row_into(r0, &mut a));
+            assert!(bank.value_row_into(r1, &mut b));
+            assert_eq!(a, b, "{}", spec.label());
+            // …and into the matching slot estimator, which re-exports
+            // the identical bytes (bitwise-stable interchange).
+            let mut slot = spec.build(d).unwrap();
+            slot.import_state(&mut Dec::new(&bytes)).unwrap();
+            assert_eq!(slot.t(), bank.t(r0), "{}", spec.label());
+            let want = slot.value().unwrap();
+            for i in 0..d {
+                assert!((want[i] - a[i]).abs() < 1e-15, "{}", spec.label());
+            }
+            let mut enc2 = Enc::new();
+            slot.export_state(&mut enc2);
+            assert_eq!(enc2.as_bytes(), &bytes[..], "{}", spec.label());
+            // Malformed payloads error, never panic, and leave t intact.
+            assert!(bank.import_row(r1, &mut Dec::new(&bytes[..6])).is_err());
+            assert!(bank
+                .import_row(r1, &mut Dec::new(b"garbage bytes here"))
+                .is_err());
+            assert_eq!(bank.t(r1), bank.t(r0), "{}", spec.label());
         }
     }
 

@@ -2,6 +2,7 @@
 
 use super::kernels;
 use super::{Averager, WindowKind};
+use crate::persist::codec::{self, Dec, Enc};
 
 /// Exponential moving average `x̄_t = γ·x̄_{t−1} + (1−γ)·x_t`.
 ///
@@ -119,6 +120,59 @@ impl Averager for ExpAverage {
             *o = e * f;
         }
         true
+    }
+
+    /// Payload: `EXP` tag, dim, `gamma`, `t`, `γ^t`, raw EMA vector.
+    fn export_state(&self, enc: &mut Enc) {
+        enc.put_u8(codec::tag::EXP);
+        enc.put_u32(self.ema.len() as u32);
+        enc.put_f64(self.gamma);
+        enc.put_u64(self.t);
+        enc.put_f64(self.gamma_pow_t);
+        enc.put_f64_slice(&self.ema);
+    }
+
+    fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        codec::check_header(dec, codec::tag::EXP, self.ema.len())?;
+        codec::check_param("gamma", dec.get_f64()?, self.gamma)?;
+        let t = dec.get_u64()?;
+        let gamma_pow_t = dec.get_f64()?;
+        let ema = codec::get_state_vec(dec, self.ema.len())?;
+        self.t = t;
+        self.gamma_pow_t = gamma_pow_t;
+        self.ema = ema;
+        Ok(())
+    }
+
+    /// Exact mass-weighted combine: with weight mass `w = 1 − γ^t`, the
+    /// merged estimate is `(w_a·x̄_a + w_b·x̄_b)/(w_a + w_b)` — and since
+    /// the raw recursion satisfies `ema = w·x̄`, the merged raw state is
+    /// simply `(ema_a + ema_b)` rescaled to the merged mass `1 −
+    /// γ^(t_a+t_b)`.
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        codec::check_header(dec, codec::tag::EXP, self.ema.len())?;
+        codec::check_param("gamma", dec.get_f64()?, self.gamma)?;
+        let t = dec.get_u64()?;
+        let gamma_pow_t = dec.get_f64()?;
+        let ema = codec::get_state_vec(dec, self.ema.len())?;
+        if t == 0 {
+            return Ok(());
+        }
+        if self.t == 0 {
+            self.t = t;
+            self.gamma_pow_t = gamma_pow_t;
+            self.ema = ema;
+            return Ok(());
+        }
+        let mass = (1.0 - self.gamma_pow_t) + (1.0 - gamma_pow_t);
+        let merged_pow = self.gamma_pow_t * gamma_pow_t;
+        let scale = (1.0 - merged_pow) / mass;
+        for (e, &o) in self.ema.iter_mut().zip(&ema) {
+            *e = (*e + o) * scale;
+        }
+        self.t += t;
+        self.gamma_pow_t = merged_pow;
+        Ok(())
     }
 
     fn window_len(&self) -> f64 {

@@ -15,6 +15,7 @@
 //! `ablation_baselines` bench quantifies accuracy-vs-memory against AWA.
 
 use super::{Averager, WindowKind};
+use crate::persist::codec::{self, Dec, Enc};
 use std::collections::VecDeque;
 
 #[derive(Clone, Debug)]
@@ -186,6 +187,61 @@ impl Averager for EhWindow {
         let inv = 1.0 / count;
         out.iter_mut().for_each(|o| *o *= inv);
         true
+    }
+
+    /// Payload: `EH` tag, dim, window, `eps`, `t`, bucket count, then
+    /// each bucket's end time, element count and vector sum (oldest
+    /// first).
+    fn export_state(&self, enc: &mut Enc) {
+        enc.put_u8(codec::tag::EH);
+        enc.put_u32(self.d as u32);
+        codec::put_window(enc, &self.kind);
+        enc.put_f64(self.eps);
+        enc.put_u64(self.t);
+        enc.put_u32(self.buckets.len() as u32);
+        for b in &self.buckets {
+            enc.put_u64(b.end_time);
+            enc.put_u64(b.count);
+            enc.put_f64_slice(&b.sum);
+        }
+    }
+
+    fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        codec::check_header(dec, codec::tag::EH, self.d)?;
+        codec::check_window(dec, &self.kind)?;
+        codec::check_param("eps", dec.get_f64()?, self.eps)?;
+        let t = dec.get_u64()?;
+        let n = dec.get_u32()? as usize;
+        let mut buckets = VecDeque::with_capacity(n.min(1024));
+        for _ in 0..n {
+            let end_time = dec.get_u64()?;
+            let count = dec.get_u64()?;
+            if count == 0 {
+                return Err("histogram bucket with zero count".into());
+            }
+            let sum = codec::get_state_vec(dec, self.d)?;
+            buckets.push_back(Bucket {
+                end_time,
+                count,
+                sum,
+            });
+        }
+        self.buckets = buckets;
+        self.t = t;
+        Ok(())
+    }
+
+    /// Precedence merge: bucket boundaries are positional within one
+    /// stream's history, so histograms from different shards cannot be
+    /// pooled — the longer stream's state wins.
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        let mut other =
+            EhWindow::new(self.d, self.kind, self.eps).expect("own params are valid");
+        other.import_state(dec)?;
+        if other.t > self.t {
+            *self = other;
+        }
+        Ok(())
     }
 
     fn window_len(&self) -> f64 {

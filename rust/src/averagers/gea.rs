@@ -2,6 +2,7 @@
 
 use super::kernels;
 use super::{Averager, WindowKind};
+use crate::persist::codec::{self, Dec, Enc};
 
 /// Exponential average whose decay `γ_t` is re-solved at every step so that
 /// the estimator's variance equals `1/(ct)` — i.e. it emulates a window
@@ -158,6 +159,62 @@ impl Averager for GrowingExp {
         }
         out.copy_from_slice(&self.avg);
         true
+    }
+
+    /// Payload: `GEA` tag, dim, `c`, `t`, variance factor `v`, average.
+    fn export_state(&self, enc: &mut Enc) {
+        enc.put_u8(codec::tag::GEA);
+        enc.put_u32(self.avg.len() as u32);
+        enc.put_f64(self.c);
+        enc.put_u64(self.t);
+        enc.put_f64(self.v);
+        enc.put_f64_slice(&self.avg);
+    }
+
+    fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        codec::check_header(dec, codec::tag::GEA, self.avg.len())?;
+        codec::check_param("c", dec.get_f64()?, self.c)?;
+        let t = dec.get_u64()?;
+        let v = dec.get_f64()?;
+        let avg = codec::get_state_vec(dec, self.avg.len())?;
+        self.t = t;
+        self.v = v;
+        self.avg = avg;
+        Ok(())
+    }
+
+    /// Exact inverse-variance pooling: the tracked `v = Σα²` makes both
+    /// partials' variances known, so the minimum-variance combine
+    /// `x̄ = (x̄_a/v_a + x̄_b/v_b)/(1/v_a + 1/v_b)` is exact and the
+    /// merged variance factor is the harmonic combination
+    /// `1/(1/v_a + 1/v_b)` — the merged state's `v` stays a true Σα².
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        codec::check_header(dec, codec::tag::GEA, self.avg.len())?;
+        codec::check_param("c", dec.get_f64()?, self.c)?;
+        let t = dec.get_u64()?;
+        let v = dec.get_f64()?;
+        let avg = codec::get_state_vec(dec, self.avg.len())?;
+        if t == 0 {
+            return Ok(());
+        }
+        if self.t == 0 {
+            self.t = t;
+            self.v = v;
+            self.avg = avg;
+            return Ok(());
+        }
+        if !(self.v > 0.0) || !(v > 0.0) {
+            return Err("gea merge requires positive variance factors".into());
+        }
+        let wa = 1.0 / self.v;
+        let wb = 1.0 / v;
+        let inv = 1.0 / (wa + wb);
+        for (a, &b) in self.avg.iter_mut().zip(&avg) {
+            *a = (wa * *a + wb * b) * inv;
+        }
+        self.v = inv;
+        self.t += t;
+        Ok(())
     }
 
     fn window_len(&self) -> f64 {

@@ -61,6 +61,29 @@ pub(crate) fn mean_update_run(mean: &mut [f64], data: &[f64], n0: u64) {
     }
 }
 
+/// Count-weighted mean pooling: `mine` (the mean of `n_mine` samples)
+/// absorbs `theirs` (the mean of `n_theirs`), becoming the exact mean
+/// of the unioned sample sets — the accumulator-combine primitive of
+/// the persist layer's `merge_state` (AWA slots, raw tail means).
+/// Empty sides degrade to keep/copy.
+#[inline]
+pub(crate) fn pool_means(mine: &mut [f64], theirs: &[f64], n_mine: u64, n_theirs: u64) {
+    debug_assert_eq!(mine.len(), theirs.len());
+    if n_theirs == 0 {
+        return;
+    }
+    if n_mine == 0 {
+        mine.copy_from_slice(theirs);
+        return;
+    }
+    let total = (n_mine + n_theirs) as f64;
+    let wa = n_mine as f64 / total;
+    let wb = n_theirs as f64 / total;
+    for (m, &o) in mine.iter_mut().zip(theirs) {
+        *m = wa * *m + wb * o;
+    }
+}
+
 /// In-place scale `acc[i] *= scale` — the head of a closed-form EMA
 /// batch fold (`ema ← γⁿ·ema` before the per-sample weights land).
 #[inline]

@@ -5,16 +5,28 @@
 //! where the window is either fixed (`k_t = k`) or grows with the stream
 //! (`k_t = ct`, `c < 1`) — see [`WindowKind`].
 //!
-//! | estimator | memory (floats) | anytime | window | batched `observe_many` | planar bank (arena stride) | paper |
-//! |---|---|---|---|---|---|---|
-//! | [`ExpAverage`] | `d` | yes | fixed (`k=(1+γ)/(1−γ)`) | closed-form `γⁿ` fold | [`banked::ExpBank`] (`d`) | Eq. 2 (`expk`) |
-//! | [`GrowingExp`] | `d` | yes | growing | per-sample decay, batch kernel | [`banked::GeaBank`] (`d`) | §2, Eqs. 3–4 (`exp`) |
-//! | [`Awa2`] | `2d` (one SoA bank) | yes | fixed & growing | run-to-flush mean kernels | [`banked::Awa2Bank`] (`2d`) | §3.1–3.2 (`awa`) |
-//! | [`AwaMulti`] | `(z+1)d` (one SoA bank) | yes | fixed & growing | run-to-chunk mean kernels | [`banked::AwaMultiBank`] (`(z+1)d`) | §3.3–3.4 (`awa3`, …) |
-//! | [`TrueWindow`] | `k_t·d` | yes | fixed & growing | tail-block ring rebuild | — (ragged state, slot fallback) | `truek`/`true` baseline |
-//! | [`RawTail`] | `d` | **no** | growing | suffix fold past `t₀` | — (horizon-bound, slot fallback) | `raw` baseline |
-//! | [`RestartTail`] | `3d` | stale (one block) | fixed & growing | block-skipping runs | — (slot fallback) | §1 block-restart baseline |
-//! | [`EhWindow`] | `(1/ε)·log(εk_t)·d` | yes (ε-approx) | fixed & growing | per-sample replay (structure-exact) | — (ragged state, slot fallback) | Datar et al. [2002] baseline |
+//! | estimator | memory (floats) | anytime | window | batched `observe_many` | planar bank (arena stride) | snapshot / merge | paper |
+//! |---|---|---|---|---|---|---|---|
+//! | [`ExpAverage`] | `d` | yes | fixed (`k=(1+γ)/(1−γ)`) | closed-form `γⁿ` fold | [`banked::ExpBank`] (`d`) | exact (mass-weighted combine) | Eq. 2 (`expk`) |
+//! | [`GrowingExp`] | `d` | yes | growing | per-sample decay, batch kernel | [`banked::GeaBank`] (`d`) | exact (inverse-variance pool) | §2, Eqs. 3–4 (`exp`) |
+//! | [`Awa2`] | `2d` (one SoA bank) | yes | fixed & growing | run-to-flush mean kernels | [`banked::Awa2Bank`] (`2d`) | exact (per-accumulator pool) | §3.1–3.2 (`awa`) |
+//! | [`AwaMulti`] | `(z+1)d` (one SoA bank) | yes | fixed & growing | run-to-chunk mean kernels | [`banked::AwaMultiBank`] (`(z+1)d`) | exact (per-accumulator pool) | §3.3–3.4 (`awa3`, …) |
+//! | [`TrueWindow`] | `k_t·d` | yes | fixed & growing | tail-block ring rebuild | — (ragged state, slot fallback) | precedence (longer stream wins) | `truek`/`true` baseline |
+//! | [`RawTail`] | `d` | **no** | growing | suffix fold past `t₀` | — (horizon-bound, slot fallback) | exact (tail-mean pool) | `raw` baseline |
+//! | [`RestartTail`] | `3d` | stale (one block) | fixed & growing | block-skipping runs | — (slot fallback) | precedence (longer stream wins) | §1 block-restart baseline |
+//! | [`EhWindow`] | `(1/ε)·log(εk_t)·d` | yes (ε-approx) | fixed & growing | per-sample replay (structure-exact) | — (ragged state, slot fallback) | precedence (longer stream wins) | Datar et al. [2002] baseline |
+//!
+//! The *snapshot / merge* column is the durability contract
+//! ([`crate::persist`]): every estimator serializes its full state into
+//! a canonical versioned payload ([`Averager::export_state`], restored
+//! by [`Averager::import_state`] — snapshot→restore mid-stream then
+//! continuing is 1e-12-equivalent to the uninterrupted stream, slot and
+//! banked alike) and combines a peer's payload with
+//! [`Averager::merge_state`] so shard-partial states roll up: *exact*
+//! estimators pool accumulators (count-/variance-weighted, the
+//! timescaledb-toolkit `combine` design); *precedence* estimators keep
+//! whichever state observed the longer stream (their ragged window
+//! contents cannot be pooled without the raw samples).
 //!
 //! The unifying design constraint (paper §1): every estimator keeps the
 //! variance of its average equal to that of the exact `k_t`-window mean,
@@ -69,6 +81,8 @@ pub use raw_tail::RawTail;
 pub use restart::RestartTail;
 pub use weights::{reconstruct_weight_history, reconstruct_weights};
 pub use window::TrueWindow;
+
+use crate::persist::codec::{Dec, Enc};
 
 /// Which tail window the estimator tracks.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -153,6 +167,30 @@ pub trait Averager: Send {
     /// estimate is available yet (empty stream, or a non-anytime baseline
     /// before its start point — in which case `out` is left untouched).
     fn value_into(&self, out: &mut [f64]) -> bool;
+
+    /// Append the estimator's complete state to `enc` as a canonical,
+    /// self-describing payload (kind tag + dim + params + counters +
+    /// accumulators in *logical* order — see [`crate::persist::codec`]
+    /// and the README's durable-state table). The payload restores via
+    /// [`Averager::import_state`] on an estimator built from the same
+    /// spec/dim, and the round trip is bitwise-stable: export → import →
+    /// export yields identical bytes.
+    fn export_state(&self, enc: &mut Enc);
+
+    /// Replace this estimator's state with a payload previously written
+    /// by [`Averager::export_state`] (or a planar bank row's
+    /// `export_rows` — the layouts are shared). Errors — never panics —
+    /// on kind/dim/parameter mismatch or malformed bytes, leaving the
+    /// estimator unchanged on error where practical.
+    fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String>;
+
+    /// Merge a peer's exported state (same spec/dim; e.g. another
+    /// shard's partial aggregate over a disjoint slice of the stream)
+    /// into this one. Exactness is per-estimator — accumulator
+    /// estimators pool exactly (count-/variance-weighted), windowed
+    /// estimators keep the longer stream's state — see the module
+    /// table's *snapshot / merge* column.
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String>;
 
     /// Current nominal window `k_t`.
     fn window_len(&self) -> f64;

@@ -2,6 +2,7 @@
 
 use super::kernels;
 use super::{Averager, WindowKind};
+use crate::persist::codec::{self, Dec, Enc};
 
 /// The standard way to tail-average with O(d) memory: decide the horizon
 /// `T` ahead of time, ignore everything before `t₀ = ⌊T·(1−c)⌋`, then keep
@@ -65,6 +66,29 @@ impl RawTail {
     pub fn horizon(&self) -> u64 {
         self.total_steps
     }
+
+    /// Decode and validate a `RAW_TAIL` state payload against this
+    /// estimator's parameters: `(t, n, mean, last)`.
+    fn parse_state(
+        &self,
+        dec: &mut Dec<'_>,
+    ) -> Result<(u64, u64, Vec<f64>, Vec<f64>), String> {
+        let d = self.mean.len();
+        codec::check_header(dec, codec::tag::RAW_TAIL, d)?;
+        codec::check_param("c", dec.get_f64()?, self.c)?;
+        let total_steps = dec.get_u64()?;
+        if total_steps != self.total_steps {
+            return Err(format!(
+                "state payload horizon T={total_steps} does not match estimator T={}",
+                self.total_steps
+            ));
+        }
+        let t = dec.get_u64()?;
+        let n = dec.get_u64()?;
+        let mean = codec::get_state_vec(dec, d)?;
+        let last = codec::get_state_vec(dec, d)?;
+        Ok((t, n, mean, last))
+    }
 }
 
 impl Averager for RawTail {
@@ -122,6 +146,57 @@ impl Averager for RawTail {
             out.copy_from_slice(&self.last);
         }
         true
+    }
+
+    /// Payload: `RAW_TAIL` tag, dim, `c`, horizon `T`, `t`, tail count
+    /// `n`, tail mean, last raw iterate (`start` is re-derived from the
+    /// parameters, so it never reaches the wire).
+    fn export_state(&self, enc: &mut Enc) {
+        enc.put_u8(codec::tag::RAW_TAIL);
+        enc.put_u32(self.mean.len() as u32);
+        enc.put_f64(self.c);
+        enc.put_u64(self.total_steps);
+        enc.put_u64(self.t);
+        enc.put_u64(self.n);
+        enc.put_f64_slice(&self.mean);
+        enc.put_f64_slice(&self.last);
+    }
+
+    fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        let (t, n, mean, last) = self.parse_state(dec)?;
+        self.t = t;
+        self.n = n;
+        self.mean = mean;
+        self.last = last;
+        Ok(())
+    }
+
+    /// The accumulated tail mean is a plain sample mean, so two shards'
+    /// averaging phases pool exactly (count-weighted). The clocks are
+    /// NOT additive — each shard measured its own progress toward the
+    /// shared horizon — so `t` takes the maximum and the raw pre-start
+    /// iterate follows the longer stream.
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        let (t, n, mean, last) = self.parse_state(dec)?;
+        if t == 0 {
+            return Ok(());
+        }
+        if self.t == 0 {
+            self.t = t;
+            self.n = n;
+            self.mean = mean;
+            self.last = last;
+            return Ok(());
+        }
+        if n > 0 {
+            kernels::pool_means(&mut self.mean, &mean, self.n, n);
+            self.n += n;
+        }
+        if t > self.t {
+            self.last = last;
+            self.t = t;
+        }
+        Ok(())
     }
 
     fn window_len(&self) -> f64 {

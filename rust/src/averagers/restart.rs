@@ -15,6 +15,7 @@
 
 use super::kernels;
 use super::{Averager, WindowKind};
+use crate::persist::codec::{self, Dec, Enc};
 
 /// Block-restart tail average: constant memory, publishes the mean of
 /// the last *completed* block; reports the raw iterate before the first
@@ -188,6 +189,59 @@ impl Averager for RestartTail {
             out.copy_from_slice(&self.last);
         }
         true
+    }
+
+    /// Payload: `RESTART` tag, dim, window, `t`, current-block count,
+    /// published count, publish time, blocks, then the current block,
+    /// published average, and last raw iterate.
+    fn export_state(&self, enc: &mut Enc) {
+        enc.put_u8(codec::tag::RESTART);
+        enc.put_u32(self.cur.len() as u32);
+        codec::put_window(enc, &self.kind);
+        enc.put_u64(self.t);
+        enc.put_u64(self.n_cur);
+        enc.put_u64(self.n_published);
+        enc.put_u64(self.published_at);
+        enc.put_u64(self.blocks);
+        enc.put_f64_slice(&self.cur);
+        enc.put_f64_slice(&self.published);
+        enc.put_f64_slice(&self.last);
+    }
+
+    fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        let d = self.cur.len();
+        codec::check_header(dec, codec::tag::RESTART, d)?;
+        codec::check_window(dec, &self.kind)?;
+        let t = dec.get_u64()?;
+        let n_cur = dec.get_u64()?;
+        let n_published = dec.get_u64()?;
+        let published_at = dec.get_u64()?;
+        let blocks = dec.get_u64()?;
+        let cur = codec::get_state_vec(dec, d)?;
+        let published = codec::get_state_vec(dec, d)?;
+        let last = codec::get_state_vec(dec, d)?;
+        self.t = t;
+        self.n_cur = n_cur;
+        self.n_published = n_published;
+        self.published_at = published_at;
+        self.blocks = blocks;
+        self.cur = cur;
+        self.published = published;
+        self.last = last;
+        Ok(())
+    }
+
+    /// Precedence merge: block boundaries are positional (a block is a
+    /// contiguous run of ONE stream), so partial blocks from different
+    /// shards cannot be pooled — the longer stream's state wins.
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        let mut other = RestartTail::new(self.cur.len(), self.kind)
+            .expect("own window kind is valid");
+        other.import_state(dec)?;
+        if other.t > self.t {
+            *self = other;
+        }
+        Ok(())
     }
 
     fn window_len(&self) -> f64 {

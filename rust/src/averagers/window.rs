@@ -2,6 +2,7 @@
 
 use super::kernels;
 use super::{Averager, WindowKind};
+use crate::persist::codec::{self, Dec, Enc};
 use std::collections::VecDeque;
 
 /// Exact mean of the last `k_t` samples, kept in a ring buffer.
@@ -151,6 +152,51 @@ impl Averager for TrueWindow {
             *o = s * inv;
         }
         true
+    }
+
+    /// Payload: `TRUE_WINDOW` tag, dim, window, `t`, live sample count,
+    /// then the buffered window samples oldest→newest (the running sum
+    /// is recomputed exactly on import, so it never reaches the wire).
+    fn export_state(&self, enc: &mut Enc) {
+        enc.put_u8(codec::tag::TRUE_WINDOW);
+        enc.put_u32(self.sum.len() as u32);
+        codec::put_window(enc, &self.kind);
+        enc.put_u64(self.t);
+        enc.put_u32(self.buf.len() as u32);
+        for x in &self.buf {
+            enc.put_f64_raw(x);
+        }
+    }
+
+    fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        let d = self.sum.len();
+        codec::check_header(dec, codec::tag::TRUE_WINDOW, d)?;
+        codec::check_window(dec, &self.kind)?;
+        let t = dec.get_u64()?;
+        let len = dec.get_u32()? as usize;
+        let mut buf = VecDeque::with_capacity(len);
+        for _ in 0..len {
+            let mut x = vec![0.0; d];
+            dec.get_f64_into(&mut x)?;
+            buf.push_back(x);
+        }
+        self.buf = buf;
+        self.free.clear();
+        self.t = t;
+        self.resum(); // fresh exact sum, ops counter reset inside
+        Ok(())
+    }
+
+    /// Precedence merge: the ring holds raw window samples that cannot
+    /// be pooled across shards without interleaving order, so the state
+    /// that observed the longer stream wins outright.
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        let mut other = TrueWindow::new(self.sum.len(), self.kind);
+        other.import_state(dec)?;
+        if other.t > self.t {
+            *self = other;
+        }
+        Ok(())
     }
 
     fn window_len(&self) -> f64 {

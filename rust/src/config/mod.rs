@@ -184,6 +184,39 @@ pub struct StreamConfig {
     pub spec: AveragerSpec,
 }
 
+/// Durability section of the coordinator service (`[persist]`).
+///
+/// When present, every accepted push batch is appended to a per-shard
+/// write-ahead log under `<dir>/wal/shard-<i>/` before it is applied,
+/// checkpoints write atomic snapshot files at `<dir>/snapshot-<n>.ata`,
+/// and `Coordinator::recover` restores the latest snapshot and replays
+/// the WAL tails after a crash.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PersistConfig {
+    /// Root state directory (snapshots at the top level, WAL beneath).
+    pub dir: String,
+    /// WAL segment rotation threshold in bytes.
+    pub segment_bytes: u64,
+    /// `true` fsyncs every WAL append (full durability, slower);
+    /// `false` syncs only on segment rotation and checkpoints
+    /// (OS-cache durability — survives process crashes, not power loss).
+    pub fsync: bool,
+    /// Background checkpoint interval in milliseconds (0 = only on
+    /// explicit `checkpoint` requests).
+    pub checkpoint_interval_ms: u64,
+}
+
+impl Default for PersistConfig {
+    fn default() -> Self {
+        PersistConfig {
+            dir: "ata-state".to_string(),
+            segment_bytes: 4 << 20,
+            fsync: false,
+            checkpoint_interval_ms: 0,
+        }
+    }
+}
+
 /// Coordinator service configuration.
 ///
 /// ```toml
@@ -193,6 +226,12 @@ pub struct StreamConfig {
 /// queue_capacity = 1024
 /// backpressure = "block"     # block | drop | reject
 /// banked = true              # fuse same-spec streams into planar banks
+///
+/// [persist]
+/// dir = "ata-state"          # enables durability (WAL + snapshots)
+/// segment_bytes = 4194304
+/// fsync = false
+/// checkpoint_interval_ms = 0 # 0 = manual checkpoints only
 ///
 /// [[stream]]
 /// name = "layer0.weight"
@@ -208,6 +247,9 @@ pub struct ServiceConfig {
     /// Fuse same-spec streams into planar SoA banks (the hot path);
     /// `false` keeps every stream on the per-slot mutex fallback.
     pub banked: bool,
+    /// Durability: WAL + checkpoints + crash recovery (None = in-memory
+    /// only, the pre-persist behaviour).
+    pub persist: Option<PersistConfig>,
     pub streams: Vec<StreamConfig>,
 }
 
@@ -219,6 +261,7 @@ impl Default for ServiceConfig {
             queue_capacity: 1024,
             backpressure: BackpressurePolicy::Block,
             banked: true,
+            persist: None,
             streams: Vec::new(),
         }
     }
@@ -258,6 +301,31 @@ impl ServiceConfig {
         if let Some(v) = doc.get_path("service.banked") {
             cfg.banked = v.as_bool().ok_or("service.banked must be a boolean")?;
         }
+        if let Some(v) = doc.get_path("persist.dir") {
+            let mut p = PersistConfig {
+                dir: v
+                    .as_str()
+                    .ok_or("persist.dir must be a string")?
+                    .to_string(),
+                ..Default::default()
+            };
+            if let Some(v) = doc.get_path("persist.segment_bytes") {
+                p.segment_bytes = v
+                    .as_u64()
+                    .ok_or("persist.segment_bytes must be an integer")?;
+            }
+            if let Some(v) = doc.get_path("persist.fsync") {
+                p.fsync = v.as_bool().ok_or("persist.fsync must be a boolean")?;
+            }
+            if let Some(v) = doc.get_path("persist.checkpoint_interval_ms") {
+                p.checkpoint_interval_ms = v
+                    .as_u64()
+                    .ok_or("persist.checkpoint_interval_ms must be an integer")?;
+            }
+            cfg.persist = Some(p);
+        } else if doc.get_path("persist").is_some() {
+            return Err("persist section requires persist.dir".into());
+        }
         if let Some(arr) = doc.get_path("stream").and_then(Toml::as_arr) {
             for s in arr {
                 let name = s
@@ -287,6 +355,14 @@ impl ServiceConfig {
         }
         if self.queue_capacity == 0 {
             return Err("service.queue_capacity must be >= 1".into());
+        }
+        if let Some(p) = &self.persist {
+            if p.dir.is_empty() {
+                return Err("persist.dir must not be empty".into());
+            }
+            if p.segment_bytes < 4096 {
+                return Err("persist.segment_bytes must be >= 4096".into());
+            }
         }
         let mut seen = std::collections::BTreeSet::new();
         for s in &self.streams {
@@ -409,6 +485,31 @@ dim = 0
 averager = "gea(c=0.5)"
 "#;
         assert!(ServiceConfig::from_toml_text(zero).is_err());
+    }
+
+    #[test]
+    fn persist_section_parses_and_validates() {
+        let text = r#"
+[persist]
+dir = "state"
+segment_bytes = 65536
+fsync = true
+checkpoint_interval_ms = 500
+"#;
+        let cfg = ServiceConfig::from_toml_text(text).unwrap();
+        let p = cfg.persist.unwrap();
+        assert_eq!(p.dir, "state");
+        assert_eq!(p.segment_bytes, 65536);
+        assert!(p.fsync);
+        assert_eq!(p.checkpoint_interval_ms, 500);
+        // Absent section → durability off.
+        assert!(ServiceConfig::from_toml_text("").unwrap().persist.is_none());
+        // A persist section without a dir is an error, not a silent
+        // in-memory fallback.
+        assert!(ServiceConfig::from_toml_text("[persist]\nfsync = true").is_err());
+        // Degenerate segment sizes are rejected.
+        let tiny = "[persist]\ndir = \"s\"\nsegment_bytes = 16";
+        assert!(ServiceConfig::from_toml_text(tiny).is_err());
     }
 
     #[test]

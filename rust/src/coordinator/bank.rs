@@ -34,6 +34,8 @@
 //! to the recycled row.
 
 use crate::averagers::banked::{BankState, RowBatch};
+use crate::averagers::{Averager, AveragerSpec};
+use crate::persist::codec::{Dec, Enc};
 use crate::util::pool::PooledBuf;
 use std::sync::atomic::{fence, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -284,6 +286,104 @@ impl Bank {
         }
         n
     }
+
+    /// Checkpoint export: write the snapshot record for the requested
+    /// `(name, row, generation)` members under ONE lock acquisition and
+    /// one bulk `export_rows` dispatch. Members whose generation no
+    /// longer matches (unregistered mid-checkpoint) are excluded. The
+    /// record is: valid-member count, then each member's name and
+    /// generation tag, then the members' canonical state payloads
+    /// back-to-back. Returns the number of members exported.
+    pub(super) fn export_members(
+        &self,
+        members: &[(Arc<str>, u32, u64)],
+        enc: &mut Enc,
+    ) -> usize {
+        let g = self.inner.lock().expect("bank lock");
+        let valid: Vec<&(Arc<str>, u32, u64)> = members
+            .iter()
+            .filter(|(_, row, gen)| g.gens.get(*row as usize) == Some(gen))
+            .collect();
+        enc.put_u32(valid.len() as u32);
+        for (name, _, gen) in &valid {
+            enc.put_str(name);
+            enc.put_u64(*gen);
+        }
+        let rows: Vec<usize> = valid.iter().map(|m| m.1 as usize).collect();
+        g.state.export_rows(&rows, enc);
+        valid.len()
+    }
+
+    /// Export one live row's canonical state payload (the wire
+    /// `export_state` op).
+    pub(super) fn export_row(&self, row: u32, gen: u64, enc: &mut Enc) -> Result<(), String> {
+        let g = self.inner.lock().expect("bank lock");
+        if g.gens.get(row as usize) != Some(&gen) {
+            return Err("stream's bank row was recycled".into());
+        }
+        g.state.export_rows(&[row as usize], enc);
+        Ok(())
+    }
+
+    /// Restore one live row from a canonical payload and republish its
+    /// estimate so wait-free snapshot readers see the restored state.
+    pub(super) fn import_row(&self, row: u32, gen: u64, dec: &mut Dec<'_>) -> Result<(), String> {
+        let mut guard = self.inner.lock().expect("bank lock");
+        let inner = &mut *guard;
+        if inner.gens.get(row as usize) != Some(&gen) {
+            return Err("stream's bank row was recycled".into());
+        }
+        inner.state.import_row(row as usize, dec)?;
+        republish_row(inner, self.dim, row as usize);
+        Ok(())
+    }
+
+    /// Merge a peer's canonical payload into one live row: the row's
+    /// state round-trips through a boxed estimator of the same spec
+    /// (the payload layouts are shared), which performs the documented
+    /// per-estimator combine, and the result is written back and
+    /// republished. Cold path — one boxed build per call.
+    pub(super) fn merge_row(
+        &self,
+        row: u32,
+        gen: u64,
+        spec: &AveragerSpec,
+        dec: &mut Dec<'_>,
+    ) -> Result<(), String> {
+        let mut guard = self.inner.lock().expect("bank lock");
+        let inner = &mut *guard;
+        if inner.gens.get(row as usize) != Some(&gen) {
+            return Err("stream's bank row was recycled".into());
+        }
+        let mut own = Enc::new();
+        inner.state.export_rows(&[row as usize], &mut own);
+        let mut avg = spec.build(self.dim)?;
+        avg.import_state(&mut Dec::new(own.as_bytes()))?;
+        avg.merge_state(dec)?;
+        let mut merged = Enc::new();
+        avg.export_state(&mut merged);
+        inner
+            .state
+            .import_row(row as usize, &mut Dec::new(merged.as_bytes()))?;
+        republish_row(inner, self.dim, row as usize);
+        Ok(())
+    }
+}
+
+/// Publish `row`'s current state through its epoch-flip block (used
+/// after an out-of-band state import/merge; the drain path publishes
+/// via [`Bank::apply`]).
+fn republish_row(inner: &mut BankInner, dim: usize, row: usize) {
+    inner.scratch.resize(dim, 0.0);
+    let has = inner.state.value_row_into(row, &mut inner.scratch[..dim]);
+    let t = inner.state.t(row);
+    let w = inner.state.window_len(row);
+    let value = if has {
+        Some(&inner.scratch[..dim])
+    } else {
+        None
+    };
+    inner.pubs[row].publish(t, w, value);
 }
 
 #[cfg(test)]

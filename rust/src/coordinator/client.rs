@@ -1,7 +1,8 @@
 //! Client library for the coordinator TCP service.
 
 use super::core::Snapshot;
-use super::protocol::{read_frame, write_frame, Request};
+use super::protocol::{read_frame, write_frame, Request, PROTOCOL_VERSION};
+use crate::persist::codec;
 use crate::util::json::Json;
 use std::net::TcpStream;
 use std::time::Duration;
@@ -31,6 +32,15 @@ impl Client {
         let resp = read_frame(&mut self.stream)
             .map_err(|e| format!("recv: {e}"))?
             .ok_or("server closed connection")?;
+        // Version gate mirrors the server's: an explicit mismatch is an
+        // error, a missing field is a pre-versioning server.
+        if let Some(v) = resp.get("v").and_then(Json::as_u64) {
+            if v != PROTOCOL_VERSION {
+                return Err(format!(
+                    "server speaks protocol version {v}, this client speaks {PROTOCOL_VERSION}"
+                ));
+            }
+        }
         match resp.get("ok").and_then(Json::as_bool) {
             Some(true) => Ok(resp),
             Some(false) => Err(resp
@@ -125,6 +135,54 @@ impl Client {
     /// Server metrics JSON.
     pub fn metrics(&mut self) -> Result<Json, String> {
         self.roundtrip(&Request::Metrics)
+    }
+
+    /// Ask the server to checkpoint (requires `[persist]` server-side);
+    /// returns `(snapshot path, streams captured)`.
+    pub fn checkpoint(&mut self) -> Result<(String, u64), String> {
+        let resp = self.roundtrip(&Request::Checkpoint)?;
+        Ok((
+            resp.get("path")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            resp.get("streams").and_then(Json::as_u64).unwrap_or(0),
+        ))
+    }
+
+    /// Fetch one stream's full estimator state as a framed binary
+    /// payload (feed to [`Client::restore`] / [`Client::merge_state`]
+    /// on any coordinator — e.g. rolling shard partials up to an
+    /// aggregator node).
+    pub fn export_state(&mut self, stream: &str) -> Result<Vec<u8>, String> {
+        let resp = self.roundtrip(&Request::ExportState {
+            stream: stream.to_string(),
+        })?;
+        let hex = resp
+            .get("state")
+            .and_then(Json::as_str)
+            .ok_or("export_state response missing 'state'")?;
+        codec::from_hex(hex)
+    }
+
+    /// Replace a stream's state from an exported payload; returns the
+    /// restored stream position `t`.
+    pub fn restore(&mut self, stream: &str, state: &[u8]) -> Result<u64, String> {
+        let resp = self.roundtrip(&Request::Restore {
+            stream: stream.to_string(),
+            state: codec::to_hex(state),
+        })?;
+        Ok(resp.get("t").and_then(Json::as_u64).unwrap_or(0))
+    }
+
+    /// Merge an exported payload into a stream's live state; returns
+    /// the merged stream position `t`.
+    pub fn merge_state(&mut self, stream: &str, state: &[u8]) -> Result<u64, String> {
+        let resp = self.roundtrip(&Request::MergeState {
+            stream: stream.to_string(),
+            state: codec::to_hex(state),
+        })?;
+        Ok(resp.get("t").and_then(Json::as_u64).unwrap_or(0))
     }
 
     /// Registered stream names.

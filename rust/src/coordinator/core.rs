@@ -4,14 +4,18 @@
 use super::bank::{Bank, BankJob, RowPub};
 use super::stream::StreamState;
 use crate::averagers::{banked, AveragerSpec};
-use crate::config::{BackpressurePolicy, ServiceConfig};
-use crate::metrics::{Counter, Histogram, Registry};
+use crate::config::{BackpressurePolicy, PersistConfig, ServiceConfig};
+use crate::metrics::{names, Counter, Histogram, Registry};
+use crate::persist::codec::{self, Dec, Enc};
+use crate::persist::{checkpoint as snapfile, wal};
 use crate::util::pool::{BufferPool, PooledBuf};
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread;
+use std::time::Instant;
 
 /// Result of a push under the configured backpressure policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -50,6 +54,26 @@ enum ShardMsg {
     },
     /// Barrier: ack once every message enqueued before it is applied.
     Sync(SyncSender<()>),
+    /// Durability only: record a registration in the shard's WAL so
+    /// recovery can re-register streams born after the last checkpoint.
+    /// Flows through the same queue as pushes, so WAL order equals
+    /// apply order. Sent only when persistence is configured.
+    WalRegister {
+        name: Arc<str>,
+        dim: usize,
+        spec: String,
+    },
+    /// Durability only: record an unregistration in the shard's WAL.
+    WalUnregister { name: Arc<str> },
+    /// Quiesce-and-export: apply everything staged so far, then write
+    /// this shard's snapshot section (WAL position + the given streams'
+    /// full state) and ack. The streams handed over are exactly this
+    /// shard's — each is applied only by this worker, so the export is
+    /// consistent without stopping other shards.
+    Checkpoint {
+        slots: Vec<Arc<StreamSlot>>,
+        ack: SyncSender<Result<Vec<u8>, String>>,
+    },
     Shutdown,
 }
 
@@ -74,6 +98,9 @@ struct StreamSlot {
     /// Declared dimensionality — immutable after registration, read on
     /// every push without touching any state lock.
     dim: usize,
+    /// The estimator spec this stream registered with (immutable;
+    /// snapshot sections and state merges need it).
+    spec: AveragerSpec,
     /// Samples dropped by backpressure (lock-free; `DropNewest` must not
     /// take a state lock to account a drop).
     dropped: AtomicU64,
@@ -85,12 +112,65 @@ struct Shard {
     handle: Option<thread::JoinHandle<()>>,
 }
 
+/// Coordinator-side durability state ([`PersistConfig`] resolved).
+struct PersistShared {
+    /// Root state directory: snapshots on top, WAL under `wal/shard-<i>`.
+    dir: PathBuf,
+    /// Serializes checkpoints (overlapping quiesces would interleave
+    /// their per-shard section acks).
+    checkpoint_lock: Mutex<()>,
+    checkpoint_duration: Arc<Counter>,
+}
+
+impl PersistShared {
+    fn wal_dir(&self, shard: usize) -> PathBuf {
+        self.dir.join("wal").join(format!("shard-{shard}"))
+    }
+}
+
+/// Result of an explicit or background checkpoint.
+#[derive(Clone, Debug)]
+pub struct CheckpointReport {
+    /// Snapshot file written (atomic tmp + rename).
+    pub path: PathBuf,
+    /// Snapshot sequence number.
+    pub seq: u64,
+    /// Bytes in the snapshot file.
+    pub bytes: u64,
+    /// Streams captured across all shards.
+    pub streams: usize,
+    /// WAL segments deleted as now-obsolete.
+    pub wal_segments_removed: usize,
+}
+
+/// Result of [`Coordinator::recover`].
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// Snapshot file loaded, if one was found and valid.
+    pub snapshot: Option<PathBuf>,
+    /// Streams restored from the snapshot.
+    pub restored_streams: usize,
+    /// WAL push batches replayed after the snapshot.
+    pub replayed_batches: u64,
+    /// Samples contained in the replayed batches.
+    pub replayed_samples: u64,
+    /// Stream registrations replayed from the WAL tail.
+    pub replayed_registers: u64,
+    /// `false` when any shard's WAL tail ended at a torn/corrupt record
+    /// (expected after a crash — everything before it was recovered).
+    pub wal_clean: bool,
+}
+
 /// Hot-path instruments the shard workers carry (resolved once so the
 /// drain loop never touches the registry's name map).
 #[derive(Clone)]
 struct ShardInstruments {
     drain_cycles: Arc<Counter>,
     bank_rows_published: Arc<Counter>,
+    /// WAL appends that failed (I/O error): the batch is still applied
+    /// — availability over durability — but its crash-durability is
+    /// gone, so operators must be able to see it happening.
+    wal_append_errors: Arc<Counter>,
 }
 
 /// Multi-stream anytime-averaging coordinator.
@@ -117,6 +197,8 @@ pub struct Coordinator {
     banking: bool,
     shards: Vec<Shard>,
     policy: BackpressurePolicy,
+    /// Durability state when a `[persist]` section is configured.
+    persist: Option<PersistShared>,
     metrics: Registry,
     /// Reusable flat-batch buffers for the `push_many` path.
     buffers: BufferPool,
@@ -134,14 +216,18 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Build from a service config (registers its pre-declared streams).
+    /// With a `[persist]` section this starts a fresh durable
+    /// coordinator; use [`Coordinator::recover`] to restore a previous
+    /// incarnation's state first.
     pub fn from_config(cfg: &ServiceConfig) -> Result<Coordinator, String> {
         cfg.validate()?;
-        let c = Coordinator::with_banking(
+        let c = Coordinator::with_persist(
             cfg.shards,
             cfg.queue_capacity,
             cfg.backpressure,
             cfg.banked,
-        );
+            cfg.persist.as_ref(),
+        )?;
         for s in &cfg.streams {
             c.register(&s.name, s.dim, s.spec.clone())?;
         }
@@ -164,31 +250,64 @@ impl Coordinator {
         policy: BackpressurePolicy,
         banking: bool,
     ) -> Coordinator {
+        Coordinator::with_persist(shards, queue_capacity, policy, banking, None)
+            .expect("in-memory coordinator construction is infallible")
+    }
+
+    /// As [`Coordinator::with_banking`], optionally durable: with a
+    /// [`PersistConfig`] every shard worker owns a write-ahead log it
+    /// appends each accepted message to before applying, and
+    /// [`Coordinator::checkpoint`] becomes available. Errors only on
+    /// WAL directory/segment creation failure.
+    pub fn with_persist(
+        shards: usize,
+        queue_capacity: usize,
+        policy: BackpressurePolicy,
+        banking: bool,
+        persist: Option<&PersistConfig>,
+    ) -> Result<Coordinator, String> {
         let shards = shards.max(1);
         let metrics = Registry::new();
         let instruments = ShardInstruments {
             drain_cycles: metrics.counter("drain_cycles"),
             bank_rows_published: metrics.counter("bank_rows_published"),
+            wal_append_errors: metrics.counter("wal_append_errors"),
         };
+        let persist_shared = persist.map(|p| PersistShared {
+            dir: PathBuf::from(&p.dir),
+            checkpoint_lock: Mutex::new(()),
+            checkpoint_duration: metrics.counter(names::CHECKPOINT_DURATION_NANOS),
+        });
         let mut v = Vec::with_capacity(shards);
         for i in 0..shards {
             let (tx, rx) = sync_channel::<ShardMsg>(queue_capacity.max(1));
             let inst = instruments.clone();
+            let shard_wal = match (persist, &persist_shared) {
+                (Some(p), Some(ps)) => Some(wal::WalWriter::open(
+                    &ps.wal_dir(i),
+                    p.segment_bytes,
+                    p.fsync,
+                    metrics.counter(names::WAL_APPENDED_BYTES),
+                    metrics.counter(names::WAL_FSYNC_NANOS),
+                )?),
+                _ => None,
+            };
             let handle = thread::Builder::new()
                 .name(format!("ata-shard-{i}"))
-                .spawn(move || shard_loop(rx, inst))
+                .spawn(move || shard_loop(rx, inst, shard_wal))
                 .expect("spawn shard");
             v.push(Shard {
                 sender: tx,
                 handle: Some(handle),
             });
         }
-        Coordinator {
+        Ok(Coordinator {
             streams: RwLock::new(HashMap::new()),
             banks: Mutex::new(HashMap::new()),
             banking,
             shards: v,
             policy,
+            persist: persist_shared,
             pushes_accepted: metrics.counter("pushes_accepted"),
             pushes_dropped: metrics.counter("pushes_dropped"),
             pushes_rejected: metrics.counter("pushes_rejected"),
@@ -197,7 +316,7 @@ impl Coordinator {
             metrics,
             buffers: BufferPool::new(64),
             snap_buffers: BufferPool::new(64),
-        }
+        })
     }
 
     /// Service metrics registry.
@@ -251,6 +370,7 @@ impl Coordinator {
         let slot = Arc::new(StreamSlot {
             name: Arc::from(name),
             dim,
+            spec: spec.clone(),
             dropped: AtomicU64::new(0),
             backing,
         });
@@ -262,7 +382,28 @@ impl Coordinator {
             }
             return Err(format!("stream '{name}' already registered"));
         }
-        map.insert(name.to_string(), slot);
+        map.insert(name.to_string(), Arc::clone(&slot));
+        // Durability: record the registration in the stream's shard WAL
+        // while the registry write lock is held — a checkpoint holds the
+        // read lock across collecting its stream list AND enqueueing its
+        // quiesce messages, so this record is strictly ordered against
+        // it: either the stream is in the snapshot, or its register
+        // record lands after the recorded WAL position and replays.
+        if self.persist.is_some() {
+            let sent = self.shards[shard].sender.send(ShardMsg::WalRegister {
+                name: Arc::clone(&slot.name),
+                dim,
+                spec: spec.label(),
+            });
+            if sent.is_err() {
+                map.remove(name);
+                drop(map);
+                if let Backing::Banked { bank, row, gen, .. } = &slot.backing {
+                    bank.free_row(*row, *gen);
+                }
+                return Err("shard down".into());
+            }
+        }
         drop(map);
         self.metrics.counter("streams_registered").inc();
         Ok(())
@@ -271,12 +412,17 @@ impl Coordinator {
     /// Remove a stream. A banked stream's bank row is recycled through
     /// the free list; messages still in flight for it become no-ops.
     pub fn unregister(&self, name: &str) -> Result<(), String> {
-        let removed = {
-            let mut map = self.streams.write().expect("streams lock");
-            map.remove(name)
-        };
-        match removed {
+        let mut map = self.streams.write().expect("streams lock");
+        match map.remove(name) {
             Some(slot) => {
+                // WAL record under the write lock (see `register`).
+                if self.persist.is_some() {
+                    let shard = fnv1a(slot.name.as_bytes()) as usize % self.shards.len();
+                    let _ = self.shards[shard].sender.send(ShardMsg::WalUnregister {
+                        name: Arc::clone(&slot.name),
+                    });
+                }
+                drop(map);
                 if let Backing::Banked { bank, row, gen, .. } = &slot.backing {
                     bank.free_row(*row, *gen);
                 }
@@ -501,6 +647,341 @@ impl Coordinator {
         out.sort();
         out
     }
+
+    // ------------------------------------------------------------------
+    // Durability: checkpoint, crash recovery, per-stream state ops
+    // ------------------------------------------------------------------
+
+    /// Whether a `[persist]` section is configured (WAL + checkpoints).
+    pub fn persistent(&self) -> bool {
+        self.persist.is_some()
+    }
+
+    /// Quiesce every shard at a drain-cycle boundary, write an atomic
+    /// snapshot of all stream state (bank arenas bulk-encoded, one
+    /// record per bank), and truncate WAL segments the snapshot makes
+    /// obsolete. Other shards keep ingesting while each shard exports —
+    /// per-shard state has exactly one writer, so each section is
+    /// consistent with its own recorded WAL position.
+    pub fn checkpoint(&self) -> Result<CheckpointReport, String> {
+        let p = self
+            .persist
+            .as_ref()
+            .ok_or("persistence not configured (no [persist] section)")?;
+        let _serial = p.checkpoint_lock.lock().expect("checkpoint lock");
+        let t0 = Instant::now();
+        // Collect each shard's streams and enqueue its quiesce message
+        // under ONE registry read guard: register/unregister write
+        // their WAL records under the write guard, so every stream is
+        // either in this snapshot or its lifecycle records replay from
+        // past the recorded positions — never neither.
+        let mut acks = Vec::with_capacity(self.shards.len());
+        let n_streams;
+        {
+            let map = self.streams.read().expect("streams lock");
+            let mut by_shard: Vec<Vec<Arc<StreamSlot>>> =
+                (0..self.shards.len()).map(|_| Vec::new()).collect();
+            for slot in map.values() {
+                let shard = fnv1a(slot.name.as_bytes()) as usize % self.shards.len();
+                by_shard[shard].push(Arc::clone(slot));
+            }
+            n_streams = map.len();
+            for (shard, slots) in self.shards.iter().zip(by_shard) {
+                let (tx, rx) = sync_channel(1);
+                shard
+                    .sender
+                    .send(ShardMsg::Checkpoint { slots, ack: tx })
+                    .map_err(|_| "shard down")?;
+                acks.push(rx);
+            }
+        }
+        let mut sections = Vec::with_capacity(acks.len());
+        let mut positions = Vec::with_capacity(acks.len());
+        for rx in acks {
+            let bytes = rx.recv().map_err(|_| "shard down during checkpoint")??;
+            let mut d = Dec::new(&bytes);
+            positions.push(wal::WalPosition {
+                segment: d.get_u64()?,
+                offset: d.get_u64()?,
+            });
+            sections.push(bytes);
+        }
+        let (path, seq, bytes) = snapfile::write_snapshot(&p.dir, &sections)?;
+        let mut removed = 0;
+        for (i, pos) in positions.iter().enumerate() {
+            removed += wal::truncate_before(&p.wal_dir(i), pos.segment);
+        }
+        p.checkpoint_duration.add(t0.elapsed().as_nanos() as u64);
+        Ok(CheckpointReport {
+            path,
+            seq,
+            bytes,
+            streams: n_streams,
+            wal_segments_removed: removed,
+        })
+    }
+
+    /// Rebuild a coordinator from its persist directory after a crash:
+    /// load the newest valid snapshot (torn files fall back to the
+    /// predecessor), re-register its streams and import their state,
+    /// replay every intact WAL record past the per-shard checkpoint
+    /// positions (register/unregister lifecycle included, so streams
+    /// born after the last checkpoint survive), then write a fresh
+    /// compaction checkpoint. Works across shard-count and banking-mode
+    /// changes — records replay through the normal ingest paths by
+    /// stream name.
+    pub fn recover(cfg: &ServiceConfig) -> Result<(Coordinator, RecoveryReport), String> {
+        cfg.validate()?;
+        let pcfg = cfg
+            .persist
+            .as_ref()
+            .ok_or("recover requires a [persist] section")?;
+        let dir = PathBuf::from(&pcfg.dir);
+        let snapshot = snapfile::latest_valid_snapshot(&dir);
+        // Pre-scan the WAL layout BEFORE constructing the coordinator:
+        // construction opens fresh writer segments in the same dirs, and
+        // replay must never read its own re-appended records.
+        let wal_root = dir.join("wal");
+        let mut old_shards: Vec<(usize, PathBuf, u64)> = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&wal_root) {
+            for e in entries.flatten() {
+                let name = e.file_name();
+                let Some(name) = name.to_str() else { continue };
+                if let Some(i) = name
+                    .strip_prefix("shard-")
+                    .and_then(|s| s.parse::<usize>().ok())
+                {
+                    let path = wal_root.join(name);
+                    if let Some(&max_seg) = wal::list_segments(&path).last() {
+                        old_shards.push((i, path, max_seg));
+                    }
+                }
+            }
+        }
+        old_shards.sort_by_key(|s| s.0);
+        let c = Coordinator::with_persist(
+            cfg.shards,
+            cfg.queue_capacity,
+            cfg.backpressure,
+            cfg.banked,
+            Some(pcfg),
+        )?;
+        let replayed_counter = c.metrics.counter(names::RECOVERY_REPLAYED_BATCHES);
+        let mut report = RecoveryReport {
+            wal_clean: true,
+            ..Default::default()
+        };
+        let mut positions: HashMap<usize, wal::WalPosition> = HashMap::new();
+        if let Some((_seq, path, sections)) = &snapshot {
+            for (i, section) in sections.iter().enumerate() {
+                let pos = c.restore_section(section, &mut report)?;
+                positions.insert(i, pos);
+            }
+            report.snapshot = Some(path.clone());
+        }
+        // Replay the tails. The satellite replay pool runs larger caps
+        // than the ingest default: replay streams every surviving batch
+        // buffer through the shard queues back-to-back, and the workers'
+        // drops recycle them straight back here.
+        let replay_pool = BufferPool::with_caps(64, 8 << 20, 64 << 20);
+        for (old_id, path, max_seg) in &old_shards {
+            let from = positions.get(old_id).copied().unwrap_or(wal::WalPosition {
+                segment: 0,
+                offset: 0,
+            });
+            let summary = wal::replay_bounded(path, from, *max_seg, |rec| {
+                c.apply_wal_record(rec, &replay_pool, &mut report, &replayed_counter);
+            })?;
+            if !summary.clean {
+                report.wal_clean = false;
+            }
+        }
+        c.sync()?;
+        // Config-declared streams the snapshot/WAL did not already have.
+        for s in &cfg.streams {
+            let exists = {
+                let map = c.streams.read().expect("streams lock");
+                map.contains_key(&s.name)
+            };
+            if !exists {
+                c.register(&s.name, s.dim, s.spec.clone())?;
+            }
+        }
+        // Compact: a fresh checkpoint supersedes everything replayed;
+        // shard dirs beyond the current count are fully retired.
+        c.checkpoint()?;
+        for (old_id, path, _) in &old_shards {
+            if *old_id >= c.shards.len() {
+                let _ = std::fs::remove_dir_all(path);
+            }
+        }
+        Ok((c, report))
+    }
+
+    /// Restore one snapshot section (see `build_shard_section` for the
+    /// layout); returns the section's recorded WAL position.
+    fn restore_section(
+        &self,
+        bytes: &[u8],
+        report: &mut RecoveryReport,
+    ) -> Result<wal::WalPosition, String> {
+        let mut dec = Dec::new(bytes);
+        let pos = wal::WalPosition {
+            segment: dec.get_u64()?,
+            offset: dec.get_u64()?,
+        };
+        let n_groups = dec.get_u32()? as usize;
+        for _ in 0..n_groups {
+            let label = dec.get_str()?;
+            let dim = dec.get_u32()? as usize;
+            let blob = dec.get_bytes()?;
+            let spec = AveragerSpec::parse(&label)?;
+            let mut bd = Dec::new(blob);
+            let n = bd.get_u32()? as usize;
+            let mut members = Vec::with_capacity(n);
+            for _ in 0..n {
+                let name = bd.get_str()?;
+                let _generation = bd.get_u64()?; // identity tag (forensics)
+                members.push(name);
+            }
+            for name in members {
+                self.register(&name, dim, spec.clone())?;
+                self.import_stream_payload(&name, &mut bd)?;
+                report.restored_streams += 1;
+            }
+        }
+        let n_slots = dec.get_u32()? as usize;
+        for _ in 0..n_slots {
+            let name = dec.get_str()?;
+            let dim = dec.get_u32()? as usize;
+            let label = dec.get_str()?;
+            let blob = dec.get_bytes()?;
+            let spec = AveragerSpec::parse(&label)?;
+            self.register(&name, dim, spec)?;
+            self.import_stream_payload(&name, &mut Dec::new(blob))?;
+            report.restored_streams += 1;
+        }
+        Ok(pos)
+    }
+
+    /// Import a canonical state payload into whichever backing `name`
+    /// landed on (payload layouts are shared between slot estimators
+    /// and bank rows, so snapshots restore across banking-mode changes).
+    fn import_stream_payload(&self, name: &str, dec: &mut Dec<'_>) -> Result<(), String> {
+        let slot = self.slot(name)?;
+        match &slot.backing {
+            Backing::Banked { bank, row, gen, .. } => bank.import_row(*row, *gen, dec),
+            Backing::Slot { state } => state.lock().expect("stream lock").import_state(dec),
+        }
+    }
+
+    /// Re-apply one replayed WAL record through the normal paths.
+    /// Pushes enqueue BLOCKING regardless of the backpressure policy:
+    /// replay must be lossless — these batches were already acknowledged
+    /// in a previous life.
+    fn apply_wal_record(
+        &self,
+        rec: wal::WalRecord,
+        pool: &BufferPool,
+        report: &mut RecoveryReport,
+        replayed: &Arc<Counter>,
+    ) {
+        match rec {
+            wal::WalRecord::Register { stream, dim, spec } => {
+                match AveragerSpec::parse(&spec).and_then(|sp| self.register(&stream, dim, sp)) {
+                    Ok(()) => report.replayed_registers += 1,
+                    Err(e) => {
+                        crate::log_debug!("persist", "replay register '{stream}': {e}");
+                    }
+                }
+            }
+            wal::WalRecord::Unregister { stream } => {
+                let _ = self.unregister(&stream);
+            }
+            wal::WalRecord::Push {
+                stream,
+                count,
+                data,
+            } => {
+                let slot = match self.batch_slot(&stream, count, data.len()) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        crate::log_warn!("persist", "replay push to '{stream}' skipped: {e}");
+                        return;
+                    }
+                };
+                let buf = pool.take(&data);
+                let shard = self.shard_for(&slot);
+                if shard
+                    .sender
+                    .send(ShardMsg::Push {
+                        stream: slot,
+                        count,
+                        data: buf,
+                    })
+                    .is_err()
+                {
+                    crate::log_warn!("persist", "replay push to '{stream}': shard down");
+                    return;
+                }
+                report.replayed_batches += 1;
+                report.replayed_samples += count as u64;
+                replayed.inc();
+            }
+        }
+    }
+
+    /// Export one stream's full estimator state as a framed, CRC-
+    /// protected payload (the wire `export_state` op; feed it to
+    /// [`Coordinator::restore_state`] or [`Coordinator::merge_state`]
+    /// on any coordinator — same spec/dim, slot or banked backing).
+    pub fn export_state(&self, name: &str) -> Result<Vec<u8>, String> {
+        let slot = self.slot(name)?;
+        let mut enc = Enc::new();
+        match &slot.backing {
+            Backing::Banked { bank, row, gen, .. } => bank.export_row(*row, *gen, &mut enc)?,
+            Backing::Slot { state } => state.lock().expect("stream lock").export_state(&mut enc),
+        }
+        Ok(codec::frame_state(enc.as_bytes()))
+    }
+
+    /// Replace one stream's state from a framed payload previously
+    /// produced by [`Coordinator::export_state`]. Returns the restored
+    /// stream position `t`.
+    pub fn restore_state(&self, name: &str, framed: &[u8]) -> Result<u64, String> {
+        let payload = codec::unframe_state(framed)?;
+        let slot = self.slot(name)?;
+        match &slot.backing {
+            Backing::Banked { bank, row, gen, .. } => {
+                bank.import_row(*row, *gen, &mut Dec::new(payload))?
+            }
+            Backing::Slot { state } => state
+                .lock()
+                .expect("stream lock")
+                .import_state(&mut Dec::new(payload))?,
+        }
+        Ok(self.snapshot(name)?.t)
+    }
+
+    /// Merge a framed payload into one stream's live state — the
+    /// shard/node rollup op. Exactness follows the estimator's
+    /// documented merge semantics (exact accumulator pooling for
+    /// exp/gea/awa, precedence for windowed estimators). Returns the
+    /// merged stream position `t`.
+    pub fn merge_state(&self, name: &str, framed: &[u8]) -> Result<u64, String> {
+        let payload = codec::unframe_state(framed)?;
+        let slot = self.slot(name)?;
+        match &slot.backing {
+            Backing::Banked { bank, row, gen, .. } => {
+                bank.merge_row(*row, *gen, &slot.spec, &mut Dec::new(payload))?
+            }
+            Backing::Slot { state } => state
+                .lock()
+                .expect("stream lock")
+                .merge_state(&mut Dec::new(payload))?,
+        }
+        Ok(self.snapshot(name)?.t)
+    }
 }
 
 impl Drop for Coordinator {
@@ -526,7 +1007,20 @@ const DRAIN_BATCH: usize = 1024;
 /// messages apply inline, exactly as before banks existed. Sync acks
 /// fire only after the cycle's staged work is applied, preserving the
 /// barrier guarantee.
-fn shard_loop(rx: Receiver<ShardMsg>, instruments: ShardInstruments) {
+///
+/// With persistence configured the worker owns this shard's WAL and
+/// appends every accepted message *before* staging/applying it, so WAL
+/// order equals apply order and the WAL tail is always a superset of
+/// unapplied work. A `Checkpoint` message quiesces inline: the staged
+/// batches flush (a drain-cycle boundary), then the shard's snapshot
+/// section is exported with the WAL position captured at that exact
+/// boundary — everything at or past the position is NOT in the section,
+/// everything before it is.
+fn shard_loop(
+    rx: Receiver<ShardMsg>,
+    instruments: ShardInstruments,
+    mut wal: Option<wal::WalWriter>,
+) {
     // Staging reused across cycles, keyed by bank index.
     let mut stage: HashMap<usize, (Arc<Bank>, Vec<BankJob>)> = HashMap::new();
     loop {
@@ -546,6 +1040,20 @@ fn shard_loop(rx: Receiver<ShardMsg>, instruments: ShardInstruments) {
                     data,
                 }) => {
                     drained += 1;
+                    if let Some(w) = wal.as_mut() {
+                        // An append failure degrades durability, not
+                        // availability: the batch still applies (it was
+                        // already acknowledged at enqueue), but the loss
+                        // of its crash-durability is counted and logged.
+                        if let Err(e) = w.append_push(&stream.name, count, &data) {
+                            instruments.wal_append_errors.inc();
+                            crate::log_warn!(
+                                "persist",
+                                "WAL append failed for '{}': {e}",
+                                stream.name
+                            );
+                        }
+                    }
                     match &stream.backing {
                         Backing::Banked { bank, row, gen, .. } => {
                             let entry = stage
@@ -567,6 +1075,38 @@ fn shard_loop(rx: Receiver<ShardMsg>, instruments: ShardInstruments) {
                         }
                     }
                 }
+                Some(ShardMsg::WalRegister { name, dim, spec }) => {
+                    drained += 1;
+                    if let Some(w) = wal.as_mut() {
+                        if let Err(e) = w.append_register(&name, dim, &spec) {
+                            instruments.wal_append_errors.inc();
+                            crate::log_warn!("persist", "WAL register failed for '{name}': {e}");
+                        }
+                    }
+                }
+                Some(ShardMsg::WalUnregister { name }) => {
+                    drained += 1;
+                    if let Some(w) = wal.as_mut() {
+                        if let Err(e) = w.append_unregister(&name) {
+                            instruments.wal_append_errors.inc();
+                            crate::log_warn!("persist", "WAL unregister failed for '{name}': {e}");
+                        }
+                    }
+                }
+                Some(ShardMsg::Checkpoint { slots, ack }) => {
+                    // Quiesce: everything drained so far this cycle must
+                    // be applied before the export, so the WAL position
+                    // and the exported state describe the same boundary.
+                    flush_stage(&mut stage, &instruments);
+                    let result = match wal.as_mut() {
+                        Some(w) => {
+                            let _ = w.flush();
+                            build_shard_section(&slots, w.position())
+                        }
+                        None => Err("persistence not configured".into()),
+                    };
+                    let _ = ack.send(result);
+                }
                 Some(ShardMsg::Sync(ack)) => acks.push(ack),
                 Some(ShardMsg::Shutdown) => shutdown = true,
                 None => {}
@@ -581,14 +1121,7 @@ fn shard_loop(rx: Receiver<ShardMsg>, instruments: ShardInstruments) {
                 Err(_) => break,
             }
         }
-        for (bank, jobs) in stage.values_mut() {
-            if !jobs.is_empty() {
-                let published = bank.apply(jobs);
-                instruments.bank_rows_published.add(published as u64);
-                // Dropping the jobs returns their buffers to the pool.
-                jobs.clear();
-            }
-        }
+        flush_stage(&mut stage, &instruments);
         instruments.drain_cycles.inc();
         for ack in acks {
             let _ = ack.send(());
@@ -597,6 +1130,84 @@ fn shard_loop(rx: Receiver<ShardMsg>, instruments: ShardInstruments) {
             break;
         }
     }
+}
+
+/// Apply every staged bank job (one lock + one dispatch per touched
+/// bank) and return the staging map to empty. Dropping the jobs returns
+/// their buffers to the pool.
+fn flush_stage(
+    stage: &mut HashMap<usize, (Arc<Bank>, Vec<BankJob>)>,
+    instruments: &ShardInstruments,
+) {
+    for (bank, jobs) in stage.values_mut() {
+        if !jobs.is_empty() {
+            let published = bank.apply(jobs);
+            instruments.bank_rows_published.add(published as u64);
+            jobs.clear();
+        }
+    }
+}
+
+/// One shard's snapshot section:
+///
+/// ```text
+/// [wal segment: u64] [wal offset: u64]
+/// [n_bank_groups: u32] × ( spec-label str, dim u32, record bytes )
+///   record = n_members u32, members × (name str, generation u64),
+///            members' canonical payloads back-to-back (bulk encode)
+/// [n_slot_streams: u32] × ( name str, dim u32, spec-label str,
+///                           canonical payload bytes )
+/// ```
+///
+/// Banked streams are grouped by bank and exported with ONE
+/// `export_members` call each — one lock and one bulk `export_rows`
+/// virtual dispatch per bank per checkpoint, never per row.
+fn build_shard_section(
+    slots: &[Arc<StreamSlot>],
+    pos: wal::WalPosition,
+) -> Result<Vec<u8>, String> {
+    let mut enc = Enc::new();
+    enc.put_u64(pos.segment);
+    enc.put_u64(pos.offset);
+    let mut group_order: Vec<usize> = Vec::new();
+    #[allow(clippy::type_complexity)]
+    let mut groups: HashMap<usize, (Arc<Bank>, String, usize, Vec<(Arc<str>, u32, u64)>)> =
+        HashMap::new();
+    let mut slot_backed: Vec<&Arc<StreamSlot>> = Vec::new();
+    for s in slots {
+        match &s.backing {
+            Backing::Banked { bank, row, gen, .. } => {
+                let entry = groups.entry(bank.index).or_insert_with(|| {
+                    group_order.push(bank.index);
+                    (Arc::clone(bank), s.spec.label(), s.dim, Vec::new())
+                });
+                entry.3.push((Arc::clone(&s.name), *row, *gen));
+            }
+            Backing::Slot { .. } => slot_backed.push(s),
+        }
+    }
+    enc.put_u32(group_order.len() as u32);
+    for idx in group_order {
+        let (bank, label, dim, members) = groups.get(&idx).expect("grouped above");
+        enc.put_str(label);
+        enc.put_u32(*dim as u32);
+        let mut tmp = Enc::new();
+        bank.export_members(members, &mut tmp);
+        enc.put_bytes(tmp.as_bytes());
+    }
+    enc.put_u32(slot_backed.len() as u32);
+    for s in slot_backed {
+        let Backing::Slot { state } = &s.backing else {
+            unreachable!("partitioned above")
+        };
+        enc.put_str(&s.name);
+        enc.put_u32(s.dim as u32);
+        enc.put_str(&s.spec.label());
+        let mut tmp = Enc::new();
+        state.lock().expect("stream lock").export_state(&mut tmp);
+        enc.put_bytes(tmp.as_bytes());
+    }
+    Ok(enc.into_bytes())
 }
 
 /// FNV-1a — tiny, stable stream→shard hash.

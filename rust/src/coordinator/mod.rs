@@ -14,8 +14,18 @@
 //!   ingest workers with bounded queues and configurable backpressure
 //!   ([`crate::config::BackpressurePolicy`]), wait-free snapshot reads at
 //!   any time (the paper's "anytime" property, operationalized), metrics.
-//! * [`protocol`] — length-prefixed JSON wire format.
+//! * [`protocol`] — length-prefixed, versioned JSON wire format.
 //! * [`server`]/[`client`] — TCP service and client library.
+//!
+//! With a `[persist]` config section the coordinator is **durable**
+//! ([`crate::persist`]): each shard worker write-ahead-logs every
+//! accepted message before applying it, [`Coordinator::checkpoint`]
+//! quiesces shards one drain-cycle boundary at a time and writes an
+//! atomic snapshot (bank arenas bulk-encoded per bank),
+//! [`Coordinator::recover`] restores the newest valid snapshot and
+//! replays the WAL tails, and the `checkpoint` / `export_state` /
+//! `restore` / `merge_state` wire ops expose per-stream state transfer
+//! and cross-shard rollups.
 //!
 //! Ordering guarantee: pushes to the *same stream* are applied in arrival
 //! order (each stream is pinned to one shard queue by name hash; banks
@@ -31,6 +41,6 @@ pub mod protocol;
 pub mod server;
 pub mod stream;
 
-pub use self::core::{Coordinator, PushOutcome, Snapshot};
+pub use self::core::{CheckpointReport, Coordinator, PushOutcome, RecoveryReport, Snapshot};
 pub use client::Client;
 pub use server::Server;

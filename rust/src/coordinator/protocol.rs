@@ -3,12 +3,23 @@
 //! Frame = 4-byte big-endian payload length + UTF-8 JSON payload.
 //! Requests and responses are JSON objects; every response carries
 //! `"ok": true/false`. Max frame size guards against garbage input.
+//!
+//! Every envelope carries a `"v"` protocol-version field
+//! ([`PROTOCOL_VERSION`]); a request with a *different* explicit
+//! version is rejected with a structured error naming both versions, so
+//! snapshot/WAL-bearing ops can evolve without silent misparses. A
+//! missing `"v"` is accepted (pre-versioning peers speak the version-1
+//! wire format).
 
 use crate::util::json::Json;
 use std::io::{Read, Write};
 
 /// Upper bound on a frame payload (64 MiB — a 8M-float snapshot).
 pub const MAX_FRAME: usize = 64 << 20;
+
+/// Version of the request/response envelope this build speaks. Bump on
+/// any incompatible change to the op set or field layouts.
+pub const PROTOCOL_VERSION: u64 = 1;
 
 /// Client → server requests.
 #[derive(Clone, Debug, PartialEq)]
@@ -35,44 +46,95 @@ pub enum Request {
     Sync,
     Metrics,
     ListStreams,
+    /// Quiesce all shards and write an atomic snapshot + truncate WAL
+    /// (requires a `[persist]` config section on the server).
+    Checkpoint,
+    /// Export one stream's full estimator state as a framed,
+    /// CRC-protected payload (hex-encoded on the wire).
+    ExportState {
+        stream: String,
+    },
+    /// Replace one stream's state from an exported payload.
+    Restore {
+        stream: String,
+        /// Hex-encoded framed state payload.
+        state: String,
+    },
+    /// Merge an exported payload into one stream's live state (shard /
+    /// node rollup; exactness per the estimator's merge semantics).
+    MergeState {
+        stream: String,
+        /// Hex-encoded framed state payload.
+        state: String,
+    },
 }
 
 impl Request {
     pub fn to_json(&self) -> Json {
-        match self {
-            Request::Ping => Json::obj(vec![("op", Json::Str("ping".into()))]),
-            Request::Register { stream, dim, spec } => Json::obj(vec![
+        let mut fields = match self {
+            Request::Ping => vec![("op", Json::Str("ping".into()))],
+            Request::Register { stream, dim, spec } => vec![
                 ("op", Json::Str("register".into())),
                 ("stream", Json::Str(stream.clone())),
                 ("dim", Json::Num(*dim as f64)),
                 ("spec", Json::Str(spec.clone())),
-            ]),
-            Request::Push { stream, data } => Json::obj(vec![
+            ],
+            Request::Push { stream, data } => vec![
                 ("op", Json::Str("push".into())),
                 ("stream", Json::Str(stream.clone())),
                 ("data", Json::nums(data)),
-            ]),
+            ],
             Request::PushMany {
                 stream,
                 count,
                 data,
-            } => Json::obj(vec![
+            } => vec![
                 ("op", Json::Str("push_many".into())),
                 ("stream", Json::Str(stream.clone())),
                 ("count", Json::Num(*count as f64)),
                 ("data", Json::nums(data)),
-            ]),
-            Request::Snapshot { stream } => Json::obj(vec![
+            ],
+            Request::Snapshot { stream } => vec![
                 ("op", Json::Str("snapshot".into())),
                 ("stream", Json::Str(stream.clone())),
-            ]),
-            Request::Sync => Json::obj(vec![("op", Json::Str("sync".into()))]),
-            Request::Metrics => Json::obj(vec![("op", Json::Str("metrics".into()))]),
-            Request::ListStreams => Json::obj(vec![("op", Json::Str("list".into()))]),
-        }
+            ],
+            Request::Sync => vec![("op", Json::Str("sync".into()))],
+            Request::Metrics => vec![("op", Json::Str("metrics".into()))],
+            Request::ListStreams => vec![("op", Json::Str("list".into()))],
+            Request::Checkpoint => vec![("op", Json::Str("checkpoint".into()))],
+            Request::ExportState { stream } => vec![
+                ("op", Json::Str("export_state".into())),
+                ("stream", Json::Str(stream.clone())),
+            ],
+            Request::Restore { stream, state } => vec![
+                ("op", Json::Str("restore".into())),
+                ("stream", Json::Str(stream.clone())),
+                ("state", Json::Str(state.clone())),
+            ],
+            Request::MergeState { stream, state } => vec![
+                ("op", Json::Str("merge_state".into())),
+                ("stream", Json::Str(stream.clone())),
+                ("state", Json::Str(state.clone())),
+            ],
+        };
+        fields.push(("v", Json::Num(PROTOCOL_VERSION as f64)));
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<Request, String> {
+        // Envelope version gate: an explicit mismatched version is a
+        // structured error naming both sides; a missing field means a
+        // pre-versioning peer and is accepted.
+        if let Some(v) = j.get("v") {
+            let v = v
+                .as_u64()
+                .ok_or("protocol version 'v' must be a nonnegative integer")?;
+            if v != PROTOCOL_VERSION {
+                return Err(format!(
+                    "unsupported protocol version {v} (this peer speaks {PROTOCOL_VERSION})"
+                ));
+            }
+        }
         let op = j
             .get("op")
             .and_then(Json::as_str)
@@ -138,6 +200,24 @@ impl Request {
             "sync" => Ok(Request::Sync),
             "metrics" => Ok(Request::Metrics),
             "list" => Ok(Request::ListStreams),
+            "checkpoint" => Ok(Request::Checkpoint),
+            "export_state" => Ok(Request::ExportState { stream: stream()? }),
+            "restore" => Ok(Request::Restore {
+                stream: stream()?,
+                state: j
+                    .get("state")
+                    .and_then(Json::as_str)
+                    .ok_or("restore missing 'state'")?
+                    .to_string(),
+            }),
+            "merge_state" => Ok(Request::MergeState {
+                stream: stream()?,
+                state: j
+                    .get("state")
+                    .and_then(Json::as_str)
+                    .ok_or("merge_state missing 'state'")?
+                    .to_string(),
+            }),
             other => Err(format!("unknown op '{other}'")),
         }
     }
@@ -176,17 +256,19 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Json>> {
     Ok(Some(json))
 }
 
-/// Build a success response.
+/// Build a success response (versioned envelope).
 pub fn ok_response(mut fields: Vec<(&str, Json)>) -> Json {
     fields.insert(0, ("ok", Json::Bool(true)));
+    fields.push(("v", Json::Num(PROTOCOL_VERSION as f64)));
     Json::obj(fields)
 }
 
-/// Build an error response.
+/// Build an error response (versioned envelope).
 pub fn err_response(msg: &str) -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(false)),
         ("error", Json::Str(msg.to_string())),
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
     ])
 }
 
@@ -216,12 +298,56 @@ mod tests {
             Request::Sync,
             Request::Metrics,
             Request::ListStreams,
+            Request::Checkpoint,
+            Request::ExportState { stream: "w".into() },
+            Request::Restore {
+                stream: "w".into(),
+                state: "41544145".into(),
+            },
+            Request::MergeState {
+                stream: "w".into(),
+                state: "41544145".into(),
+            },
         ];
         for r in reqs {
             let j = r.to_json();
+            assert_eq!(
+                j.get("v").and_then(Json::as_u64),
+                Some(PROTOCOL_VERSION),
+                "every request envelope carries the protocol version"
+            );
             let back = Request::from_json(&j).unwrap();
             assert_eq!(back, r);
         }
+    }
+
+    #[test]
+    fn version_gate_rejects_mismatch_accepts_missing() {
+        // An explicit foreign version is a structured error naming both.
+        let bad = Json::obj(vec![
+            ("op", Json::Str("ping".into())),
+            ("v", Json::Num(99.0)),
+        ]);
+        let err = Request::from_json(&bad).unwrap_err();
+        assert!(err.contains("99") && err.contains(&PROTOCOL_VERSION.to_string()), "{err}");
+        // Non-integer versions are rejected too.
+        let bad = Json::obj(vec![
+            ("op", Json::Str("ping".into())),
+            ("v", Json::Str("one".into())),
+        ]);
+        assert!(Request::from_json(&bad).is_err());
+        // A pre-versioning peer (no "v") still parses.
+        let legacy = Json::obj(vec![("op", Json::Str("ping".into()))]);
+        assert_eq!(Request::from_json(&legacy).unwrap(), Request::Ping);
+        // Responses carry the version as well.
+        assert_eq!(
+            ok_response(vec![]).get("v").and_then(Json::as_u64),
+            Some(PROTOCOL_VERSION)
+        );
+        assert_eq!(
+            err_response("x").get("v").and_then(Json::as_u64),
+            Some(PROTOCOL_VERSION)
+        );
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use super::core::{Coordinator, PushOutcome};
 use super::protocol::{err_response, ok_response, read_frame, write_frame, Request};
 use crate::averagers::AveragerSpec;
+use crate::persist::codec;
 use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
 use std::net::{TcpListener, TcpStream};
@@ -230,5 +231,37 @@ fn dispatch(req: Request, c: &Coordinator) -> Json {
                     .collect(),
             ),
         )]),
+        Request::Checkpoint => match c.checkpoint() {
+            Ok(r) => ok_response(vec![
+                ("path", Json::Str(r.path.display().to_string())),
+                ("seq", Json::Num(r.seq as f64)),
+                ("bytes", Json::Num(r.bytes as f64)),
+                ("streams", Json::Num(r.streams as f64)),
+                (
+                    "wal_segments_removed",
+                    Json::Num(r.wal_segments_removed as f64),
+                ),
+            ]),
+            Err(e) => err_response(&e),
+        },
+        Request::ExportState { stream } => match c.export_state(&stream) {
+            Ok(bytes) => ok_response(vec![
+                ("stream", Json::Str(stream)),
+                ("state", Json::Str(codec::to_hex(&bytes))),
+            ]),
+            Err(e) => err_response(&e),
+        },
+        Request::Restore { stream, state } => {
+            match codec::from_hex(&state).and_then(|b| c.restore_state(&stream, &b)) {
+                Ok(t) => ok_response(vec![("t", Json::Num(t as f64))]),
+                Err(e) => err_response(&e),
+            }
+        }
+        Request::MergeState { stream, state } => {
+            match codec::from_hex(&state).and_then(|b| c.merge_state(&stream, &b)) {
+                Ok(t) => ok_response(vec![("t", Json::Num(t as f64))]),
+                Err(e) => err_response(&e),
+            }
+        }
     }
 }

@@ -1,6 +1,7 @@
 //! Per-stream state: one estimator plus bookkeeping.
 
 use crate::averagers::{Averager, AveragerSpec};
+use crate::persist::codec::{Dec, Enc};
 
 /// A named parameter stream with its tail-average estimator.
 pub struct StreamState {
@@ -73,6 +74,26 @@ impl StreamState {
     pub fn reset(&mut self) {
         self.averager.reset();
         self.applied = 0;
+    }
+
+    /// Append the estimator's canonical state payload (durability path).
+    pub fn export_state(&self, enc: &mut Enc) {
+        self.averager.export_state(enc);
+    }
+
+    /// Restore the estimator from a canonical payload; the `applied`
+    /// accounting resyncs to the restored stream position.
+    pub fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        self.averager.import_state(dec)?;
+        self.applied = self.averager.t();
+        Ok(())
+    }
+
+    /// Merge a peer's canonical payload (shard rollup path).
+    pub fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        self.averager.merge_state(dec)?;
+        self.applied = self.averager.t();
+        Ok(())
     }
 }
 

@@ -39,6 +39,23 @@
 //! this path; batched-vs-sequential and bank-vs-slot equivalence are
 //! property-tested to 1e-12 for every estimator family.
 //!
+//! ## Durable state
+//!
+//! Constant-memory estimators cannot be recomputed after a crash
+//! without replaying the stream, so every estimator's state is a
+//! serializable, mergeable partial aggregate ([`persist`]):
+//! [`averagers::Averager::export_state`] / `import_state` round-trip
+//! the full state through a versioned binary codec (bitwise-stable,
+//! 1e-12-equivalent to the uninterrupted stream when restored
+//! mid-stream, banked and slot backings interchangeable), and
+//! `merge_state` combines shard partials (exact accumulator pooling
+//! for exp/gea/awa, precedence for windowed estimators). The
+//! coordinator layers a per-shard write-ahead log, atomic checkpoint
+//! snapshots with bulk per-bank arena encoding, and crash recovery
+//! (`Coordinator::recover`) on top — exposed through the versioned
+//! wire protocol (`checkpoint`/`export_state`/`restore`/`merge_state`)
+//! and the `ata checkpoint` / `ata restore` CLI.
+//!
 //! ## Architecture (three layers)
 //!
 //! * **L3 (this crate)** — the coordinator: averager state management,
@@ -75,6 +92,7 @@ pub mod config;
 pub mod coordinator;
 pub mod linreg;
 pub mod metrics;
+pub mod persist;
 pub mod report;
 pub mod rng;
 pub mod runtime;

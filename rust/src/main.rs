@@ -5,13 +5,16 @@
 //!                [--runs 100] [--csv out.csv] [--json out.json]
 //! ata serve      [--config svc.toml] [--addr 127.0.0.1:7311]
 //! ata client     <ping|list|snapshot|metrics> [--addr ...] [--stream s]
+//! ata checkpoint [--addr ...]           # snapshot a running service
+//! ata restore    --dir state [...]      # offline crash recovery + report
 //! ata artifacts  [--dir artifacts]      # validate AOT artifacts load+run
 //! ata weights    --spec "gea(c=0.5)" --t 200   # weight-profile analysis
 //! ```
 
 use ata::averagers::{staleness_report, AveragerSpec};
-use ata::config::{ExperimentFile, ServiceConfig};
+use ata::config::{ExperimentFile, PersistConfig, ServiceConfig};
 use ata::coordinator::{Client, Coordinator, Server};
+use ata::persist::checkpoint::Checkpointer;
 use ata::linreg::{run_experiment, EvalSchedule, ExperimentConfig};
 use ata::report;
 use ata::runtime::{artifacts_available, Runtime, DEFAULT_ARTIFACTS_DIR};
@@ -53,6 +56,8 @@ fn top_help() -> String {
          \x20 experiment   run the paper's §4 experiments (figures 2/3 or a config)\n\
          \x20 serve        start the averaging coordinator TCP service\n\
          \x20 client       talk to a running service\n\
+         \x20 checkpoint   snapshot a running durable service over the wire\n\
+         \x20 restore      offline crash recovery of a persist directory\n\
          \x20 artifacts    validate the AOT artifacts (load + execute)\n\
          \x20 weights      weight/staleness analysis of an averager spec\n\n\
          Run `ata <command> --help` for details.",
@@ -69,6 +74,8 @@ fn run(args: &[String]) -> Result<(), CliRunError> {
         "experiment" => cmd_experiment(rest),
         "serve" => cmd_serve(rest),
         "client" => cmd_client(rest),
+        "checkpoint" => cmd_checkpoint(rest),
+        "restore" => cmd_restore(rest),
         "artifacts" => cmd_artifacts(rest),
         "weights" => cmd_weights(rest),
         "--help" | "-h" | "help" => Err(CliRunError::Help(top_help())),
@@ -169,7 +176,38 @@ fn cmd_serve(args: &[String]) -> Result<(), CliRunError> {
             ..Default::default()
         }
     };
-    let coordinator = Arc::new(Coordinator::from_config(&cfg)?);
+    // A durable service recovers whatever its persist directory holds
+    // (snapshot + WAL tails) before listening; a fresh directory is
+    // simply an empty recovery.
+    let coordinator = if cfg.persist.is_some() {
+        let (c, report) = Coordinator::recover(&cfg)?;
+        eprintln!(
+            "recovered {} streams, replayed {} batches ({} samples){}",
+            report.restored_streams + report.replayed_registers as usize,
+            report.replayed_batches,
+            report.replayed_samples,
+            if report.wal_clean {
+                ""
+            } else {
+                " — WAL tail was truncated at a torn record (expected after a crash)"
+            }
+        );
+        Arc::new(c)
+    } else {
+        Arc::new(Coordinator::from_config(&cfg)?)
+    };
+    // Background checkpointing, when configured.
+    let _checkpointer = cfg
+        .persist
+        .as_ref()
+        .filter(|pc| pc.checkpoint_interval_ms > 0)
+        .map(|pc| {
+            let c = Arc::clone(&coordinator);
+            Checkpointer::start(
+                std::time::Duration::from_millis(pc.checkpoint_interval_ms),
+                move || c.checkpoint().map(|_| ()),
+            )
+        });
     let _server = Server::start(
         &cfg.addr,
         coordinator,
@@ -180,6 +218,62 @@ fn cmd_serve(args: &[String]) -> Result<(), CliRunError> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_checkpoint(args: &[String]) -> Result<(), CliRunError> {
+    let spec = CommandSpec::new("checkpoint", "snapshot a running durable service")
+        .opt("addr", "127.0.0.1:7311", "server address");
+    let p = parse_with(&spec, args)?;
+    let mut client = Client::connect(&p.str("addr"))?;
+    let (path, streams) = client.checkpoint()?;
+    println!("checkpoint written: {path} ({streams} streams)");
+    Ok(())
+}
+
+fn cmd_restore(args: &[String]) -> Result<(), CliRunError> {
+    let spec = CommandSpec::new(
+        "restore",
+        "offline crash recovery: load snapshot + WAL tails, report, re-checkpoint",
+    )
+    .opt("config", "", "TOML service config (must have a [persist] section)")
+    .opt("dir", "", "persist directory (shorthand for a minimal config)")
+    .opt("shards", "4", "ingest worker shards for the recovered state");
+    let p = parse_with(&spec, args)?;
+    let cfg = if !p.str("config").is_empty() {
+        ServiceConfig::load(&p.str("config"))?
+    } else {
+        let dir = p.str("dir");
+        if dir.is_empty() {
+            return Err("restore requires --config or --dir".to_string().into());
+        }
+        ServiceConfig {
+            shards: p.usize("shards").map_err(|e| e.to_string())?,
+            persist: Some(PersistConfig {
+                dir,
+                ..Default::default()
+            }),
+            ..Default::default()
+        }
+    };
+    let (c, report) = Coordinator::recover(&cfg)?;
+    match &report.snapshot {
+        Some(path) => println!("snapshot loaded : {}", path.display()),
+        None => println!("snapshot loaded : <none — replayed WAL from the beginning>"),
+    }
+    println!("restored streams: {}", report.restored_streams);
+    println!("replayed        : {} batches / {} samples / {} registrations",
+        report.replayed_batches, report.replayed_samples, report.replayed_registers);
+    println!(
+        "wal tail        : {}",
+        if report.wal_clean { "clean" } else { "truncated at a torn record (crash tail)" }
+    );
+    let mut stats = c.stream_stats();
+    stats.sort();
+    for (name, applied, dropped, mem) in stats {
+        println!("  {name}: t={applied} dropped={dropped} memory_floats={mem}");
+    }
+    println!("state re-checkpointed; `ata serve` will start from it");
+    Ok(())
 }
 
 fn cmd_client(args: &[String]) -> Result<(), CliRunError> {

@@ -10,6 +10,27 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+/// Canonical instrument names shared by the coordinator and the
+/// persist subsystem, so the stats endpoint, the benches and the docs
+/// all agree on spelling. All four appear under `counter.*` in
+/// [`Registry::export`] (scraped by the service's `metrics` op):
+///
+/// * [`names::WAL_APPENDED_BYTES`] — total framed bytes appended across
+///   every shard's WAL.
+/// * [`names::WAL_FSYNC_NANOS`] — cumulative nanoseconds spent in WAL
+///   `fsync` (per-append when `persist.fsync`, plus segment rotations).
+/// * [`names::CHECKPOINT_DURATION_NANOS`] — cumulative nanoseconds of
+///   completed checkpoints (quiesce + encode + atomic write + WAL
+///   truncation).
+/// * [`names::RECOVERY_REPLAYED_BATCHES`] — WAL records re-applied by
+///   `Coordinator::recover` after loading the snapshot.
+pub mod names {
+    pub const WAL_APPENDED_BYTES: &str = "wal_appended_bytes";
+    pub const WAL_FSYNC_NANOS: &str = "wal_fsync_nanos";
+    pub const CHECKPOINT_DURATION_NANOS: &str = "checkpoint_duration_nanos";
+    pub const RECOVERY_REPLAYED_BATCHES: &str = "recovery_replayed_batches";
+}
+
 /// Monotone event counter.
 #[derive(Default)]
 pub struct Counter {

@@ -1,0 +1,267 @@
+//! Snapshot files and the background checkpoint driver.
+//!
+//! A coordinator checkpoint is written as `snapshot-<seq>.ata` inside
+//! the persist directory:
+//!
+//! ```text
+//! [SNAPSHOT_MAGIC] [version: u16] [n_sections: u32]
+//! n_sections × ( [len: u32] [crc32(bytes): u32] [bytes] )
+//! ```
+//!
+//! Section bytes are opaque here — the coordinator packs one section per
+//! shard (WAL position + that shard's bank arenas and slot streams; see
+//! `coordinator::core`). Files are written atomically (`.tmp` +
+//! `rename`) and validated on read (magic, version, per-section CRC), so
+//! a crash mid-checkpoint leaves the previous snapshot authoritative and
+//! a torn file is skipped, never loaded. The two most recent snapshots
+//! are retained; older ones are pruned after a successful write.
+//!
+//! [`Checkpointer`] is the tiny interval driver `ata serve` uses for
+//! background checkpointing: a named thread that invokes the supplied
+//! checkpoint closure every `interval`, stopping promptly on drop.
+
+use super::codec::{crc32, FORMAT_VERSION, SNAPSHOT_MAGIC};
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn snapshot_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("snapshot-{seq:08}.ata"))
+}
+
+/// Snapshot sequence numbers present in `dir`, ascending.
+pub fn list_snapshots(dir: &Path) -> Vec<u64> {
+    let mut seqs = Vec::new();
+    let Ok(entries) = fs::read_dir(dir) else {
+        return seqs;
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(num) = name
+            .strip_prefix("snapshot-")
+            .and_then(|s| s.strip_suffix(".ata"))
+        {
+            if let Ok(seq) = num.parse::<u64>() {
+                seqs.push(seq);
+            }
+        }
+    }
+    seqs.sort_unstable();
+    seqs
+}
+
+/// Atomically write the next snapshot (tmp + fsync + rename), prune all
+/// but the two newest, and return `(path, seq, bytes_written)`.
+pub fn write_snapshot(dir: &Path, sections: &[Vec<u8>]) -> Result<(PathBuf, u64, u64), String> {
+    fs::create_dir_all(dir).map_err(|e| format!("create persist dir {}: {e}", dir.display()))?;
+    let seq = list_snapshots(dir).last().map_or(0, |s| s + 1);
+    let path = snapshot_path(dir, seq);
+    let tmp = path.with_extension("ata.tmp");
+    let mut buf = Vec::new();
+    buf.extend_from_slice(SNAPSHOT_MAGIC);
+    buf.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    buf.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    for s in sections {
+        buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&crc32(s).to_le_bytes());
+        buf.extend_from_slice(s);
+    }
+    let bytes = buf.len() as u64;
+    {
+        let mut f =
+            fs::File::create(&tmp).map_err(|e| format!("create {}: {e}", tmp.display()))?;
+        f.write_all(&buf)
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        f.sync_all()
+            .map_err(|e| format!("fsync {}: {e}", tmp.display()))?;
+    }
+    fs::rename(&tmp, &path).map_err(|e| format!("rename into {}: {e}", path.display()))?;
+    // Prune: keep this snapshot and its predecessor as a fallback.
+    for old in list_snapshots(dir) {
+        if old + 1 < seq {
+            let _ = fs::remove_file(snapshot_path(dir, old));
+        }
+    }
+    Ok((path, seq, bytes))
+}
+
+/// Parse one snapshot file into its sections; `Err` on any corruption
+/// (bad magic/version, torn section, CRC mismatch) — never panics.
+pub fn read_snapshot(path: &Path) -> Result<Vec<Vec<u8>>, String> {
+    let mut bytes = Vec::new();
+    fs::File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut bytes))
+        .map_err(|e| format!("read snapshot {}: {e}", path.display()))?;
+    if bytes.len() < 10 || &bytes[..4] != SNAPSHOT_MAGIC {
+        return Err("bad snapshot magic".into());
+    }
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    if version != FORMAT_VERSION {
+        return Err(format!(
+            "snapshot format version {version} unsupported (this build speaks {FORMAT_VERSION})"
+        ));
+    }
+    let n = u32::from_le_bytes([bytes[6], bytes[7], bytes[8], bytes[9]]) as usize;
+    let mut sections = Vec::new();
+    let mut pos = 10usize;
+    for i in 0..n {
+        if bytes.len() - pos < 8 {
+            return Err(format!("snapshot section {i} header truncated"));
+        }
+        let len = u32::from_le_bytes([bytes[pos], bytes[pos + 1], bytes[pos + 2], bytes[pos + 3]])
+            as usize;
+        let want = u32::from_le_bytes([
+            bytes[pos + 4],
+            bytes[pos + 5],
+            bytes[pos + 6],
+            bytes[pos + 7],
+        ]);
+        pos += 8;
+        if bytes.len() - pos < len {
+            return Err(format!("snapshot section {i} truncated"));
+        }
+        let body = &bytes[pos..pos + len];
+        if crc32(body) != want {
+            return Err(format!("snapshot section {i} CRC mismatch"));
+        }
+        sections.push(body.to_vec());
+        pos += len;
+    }
+    Ok(sections)
+}
+
+/// Newest snapshot in `dir` that parses and CRC-validates, if any —
+/// torn or bit-flipped files fall back to the predecessor.
+pub fn latest_valid_snapshot(dir: &Path) -> Option<(u64, PathBuf, Vec<Vec<u8>>)> {
+    for seq in list_snapshots(dir).into_iter().rev() {
+        let path = snapshot_path(dir, seq);
+        if let Ok(sections) = read_snapshot(&path) {
+            return Some((seq, path, sections));
+        }
+    }
+    None
+}
+
+/// Background checkpoint driver: runs `tick` every `interval` on a
+/// named thread until dropped (or [`Checkpointer::stop`]).
+pub struct Checkpointer {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Checkpointer {
+    /// `tick` returns `Err(reason)` to log a warning and keep going.
+    pub fn start(
+        interval: Duration,
+        tick: impl Fn() -> Result<(), String> + Send + 'static,
+    ) -> Checkpointer {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("ata-checkpoint".to_string())
+            .spawn(move || {
+                let step = Duration::from_millis(25).min(interval.max(Duration::from_millis(1)));
+                let mut elapsed = Duration::ZERO;
+                loop {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    std::thread::sleep(step);
+                    elapsed += step;
+                    if elapsed >= interval {
+                        elapsed = Duration::ZERO;
+                        if let Err(e) = tick() {
+                            crate::log_warn!("persist", "background checkpoint failed: {e}");
+                        }
+                    }
+                }
+            })
+            .expect("spawn checkpointer");
+        Checkpointer {
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Stop and join the driver thread.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Checkpointer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::temp_dir;
+
+    #[test]
+    fn snapshot_write_read_roundtrip_and_pruning() {
+        let dir = temp_dir("ckpt-roundtrip");
+        let sections = vec![vec![1u8, 2, 3], vec![], vec![0xFF; 100]];
+        let (path, seq, bytes) = write_snapshot(&dir, &sections).unwrap();
+        assert_eq!(seq, 0);
+        assert!(bytes > 0);
+        assert_eq!(read_snapshot(&path).unwrap(), sections);
+        // Subsequent snapshots increment and prune to the newest two.
+        for _ in 0..4 {
+            write_snapshot(&dir, &sections).unwrap();
+        }
+        let seqs = list_snapshots(&dir);
+        assert_eq!(seqs, vec![3, 4]);
+        let (latest, _, got) = latest_valid_snapshot(&dir).unwrap();
+        assert_eq!(latest, 4);
+        assert_eq!(got, sections);
+    }
+
+    #[test]
+    fn corrupt_latest_falls_back_to_predecessor() {
+        let dir = temp_dir("ckpt-fallback");
+        write_snapshot(&dir, &[vec![1, 1, 1]]).unwrap();
+        let (path, seq, _) = write_snapshot(&dir, &[vec![2, 2, 2]]).unwrap();
+        assert_eq!(seq, 1);
+        // Flip a byte inside the newest file's section body.
+        let mut bytes = fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        fs::write(&path, &bytes).unwrap();
+        let (seq, _, sections) = latest_valid_snapshot(&dir).unwrap();
+        assert_eq!(seq, 0);
+        assert_eq!(sections, vec![vec![1, 1, 1]]);
+        // Truncations of every snapshot never panic.
+        for cut in 0..bytes.len() {
+            fs::write(&path, &bytes[..cut]).unwrap();
+            let _ = read_snapshot(&path);
+        }
+    }
+
+    #[test]
+    fn checkpointer_ticks_and_stops() {
+        use std::sync::atomic::AtomicUsize;
+        let n = Arc::new(AtomicUsize::new(0));
+        let n2 = Arc::clone(&n);
+        let mut c = Checkpointer::start(Duration::from_millis(30), move || {
+            n2.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        });
+        std::thread::sleep(Duration::from_millis(200));
+        c.stop();
+        let ticks = n.load(Ordering::SeqCst);
+        assert!(ticks >= 2, "ticks={ticks}");
+        // Stopped: no further ticks.
+        std::thread::sleep(Duration::from_millis(80));
+        assert_eq!(n.load(Ordering::SeqCst), ticks);
+    }
+}

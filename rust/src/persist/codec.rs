@@ -1,0 +1,501 @@
+//! Versioned, length-prefixed binary codec for durable estimator state.
+//!
+//! Everything the persist layer writes — per-estimator state payloads,
+//! WAL records, snapshot sections — is built from the same two
+//! primitives: [`Enc`] (append-only little-endian writer) and [`Dec`]
+//! (bounds-checked reader that returns `Err` on any malformed input and
+//! **never** panics, which the codec fuzz target enforces).
+//!
+//! ## Canonical per-estimator state payloads
+//!
+//! Each estimator's state serializes to one self-describing payload:
+//!
+//! ```text
+//! [kind: u8] [dim: u32] [params…] [counters…] [f64 state slices…]
+//! ```
+//!
+//! The kind tags are [`tag`] constants; the per-estimator field layouts
+//! are documented in the README's "Durable state" section and written by
+//! `Averager::export_state` / `BankState::export_rows`. Accumulator
+//! slices are always written in *logical* order (oldest → newest), never
+//! physical arena order, so a payload exported from a planar bank row
+//! imports bit-identically into a slot estimator and vice versa.
+//!
+//! Standalone payloads (the wire `export_state`/`restore`/`merge_state`
+//! ops) wrap the payload in a tiny envelope: [`STATE_MAGIC`], format
+//! version, payload length, CRC32 — see [`frame_state`]/[`unframe_state`].
+
+/// Magic prefix of a framed standalone state payload.
+pub const STATE_MAGIC: &[u8; 4] = b"ATAE";
+/// Magic prefix of a coordinator snapshot file.
+pub const SNAPSHOT_MAGIC: &[u8; 4] = b"ATAS";
+/// Magic prefix of a WAL segment file.
+pub const WAL_MAGIC: &[u8; 4] = b"ATAW";
+/// Current on-disk format version (shared by snapshots, WAL and framed
+/// state payloads; bump on any layout change).
+pub const FORMAT_VERSION: u16 = 1;
+
+/// Estimator kind tags of the canonical state payloads.
+pub mod tag {
+    pub const EXP: u8 = 1;
+    pub const GEA: u8 = 2;
+    pub const AWA2: u8 = 3;
+    pub const AWA_MULTI: u8 = 4;
+    pub const TRUE_WINDOW: u8 = 5;
+    pub const RAW_TAIL: u8 = 6;
+    pub const RESTART: u8 = 7;
+    pub const EH: u8 = 8;
+}
+
+/// Append-only little-endian byte writer.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Reset to empty, keeping the allocation (hot-path reuse).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed (u32) raw bytes.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed (u32) UTF-8 string.
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    /// Length-prefixed (u32 element count) f64 slice.
+    pub fn put_f64_slice(&mut self, v: &[f64]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Raw f64 run with NO length prefix (callers that already framed
+    /// the element count, e.g. the bank arena gather).
+    pub fn put_f64_raw(&mut self, v: &[f64]) {
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Bounds-checked little-endian byte reader over a borrowed slice.
+///
+/// Every getter returns `Err` (never panics) on exhausted or malformed
+/// input; `Dec` is the only parser the persist layer uses, so "corrupt
+/// bytes are an error, not a crash" holds everywhere by construction.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Current cursor position.
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated input: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16, String> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64, String> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(f64::from_le_bytes(a))
+    }
+
+    /// Length-prefixed raw bytes (borrowed).
+    pub fn get_bytes(&mut self) -> Result<&'a [u8], String> {
+        let n = self.get_u32()? as usize;
+        // A hostile length must not trigger a huge allocation or wrap;
+        // take() bounds-checks against the actual remaining bytes.
+        self.take(n)
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn get_str(&mut self) -> Result<String, String> {
+        let b = self.get_bytes()?;
+        String::from_utf8(b.to_vec()).map_err(|_| "invalid UTF-8 string".to_string())
+    }
+
+    /// Length-prefixed f64 slice (owned).
+    pub fn get_f64_vec(&mut self) -> Result<Vec<f64>, String> {
+        let n = self.get_u32()? as usize;
+        self.get_f64_raw(n)
+    }
+
+    /// Exactly `n` raw f64s (no length prefix).
+    pub fn get_f64_raw(&mut self, n: usize) -> Result<Vec<f64>, String> {
+        let bytes = n
+            .checked_mul(8)
+            .ok_or_else(|| "f64 run length overflows".to_string())?;
+        let b = self.take(bytes)?;
+        let mut out = Vec::with_capacity(n);
+        for c in b.chunks_exact(8) {
+            let mut a = [0u8; 8];
+            a.copy_from_slice(c);
+            out.push(f64::from_le_bytes(a));
+        }
+        Ok(out)
+    }
+
+    /// Exactly `n` raw f64s written straight into `out` (no allocation).
+    pub fn get_f64_into(&mut self, out: &mut [f64]) -> Result<(), String> {
+        let bytes = out
+            .len()
+            .checked_mul(8)
+            .ok_or_else(|| "f64 run length overflows".to_string())?;
+        let b = self.take(bytes)?;
+        for (o, c) in out.iter_mut().zip(b.chunks_exact(8)) {
+            let mut a = [0u8; 8];
+            a.copy_from_slice(c);
+            *o = f64::from_le_bytes(a);
+        }
+        Ok(())
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected) over `bytes` — the integrity check on
+/// WAL records, snapshot sections and framed state payloads.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = !0;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Wrap a canonical state payload in the standalone envelope:
+/// magic + version + u32 length + payload + u32 CRC of the payload.
+pub fn frame_state(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 14);
+    out.extend_from_slice(STATE_MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out
+}
+
+/// Validate the standalone envelope and return the inner payload.
+pub fn unframe_state(bytes: &[u8]) -> Result<&[u8], String> {
+    let mut d = Dec::new(bytes);
+    let magic = d.take(4)?;
+    if magic != STATE_MAGIC {
+        return Err("bad state magic (not an exported estimator state)".into());
+    }
+    let version = d.get_u16()?;
+    if version != FORMAT_VERSION {
+        return Err(format!(
+            "state format version {version} unsupported (this build speaks {FORMAT_VERSION})"
+        ));
+    }
+    let len = d.get_u32()? as usize;
+    let payload = d.take(len)?;
+    let want = d.get_u32()?;
+    let got = crc32(payload);
+    if got != want {
+        return Err(format!("state CRC mismatch: {got:#010x} != {want:#010x}"));
+    }
+    Ok(payload)
+}
+
+/// Lowercase hex encoding (the JSON wire form of binary state).
+pub fn to_hex(bytes: &[u8]) -> String {
+    const DIGITS: &[u8; 16] = b"0123456789abcdef";
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(DIGITS[(b >> 4) as usize] as char);
+        s.push(DIGITS[(b & 0xf) as usize] as char);
+    }
+    s
+}
+
+/// Hex decoding; rejects odd lengths and non-hex characters.
+pub fn from_hex(s: &str) -> Result<Vec<u8>, String> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 2 != 0 {
+        return Err("hex string has odd length".into());
+    }
+    let nib = |c: u8| -> Result<u8, String> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(format!("invalid hex character {:?}", c as char)),
+        }
+    };
+    let mut out = Vec::with_capacity(bytes.len() / 2);
+    for pair in bytes.chunks_exact(2) {
+        out.push((nib(pair[0])? << 4) | nib(pair[1])?);
+    }
+    Ok(out)
+}
+
+/// Encode a [`crate::averagers::WindowKind`] (shared by several payloads).
+pub fn put_window(enc: &mut Enc, w: &crate::averagers::WindowKind) {
+    match *w {
+        crate::averagers::WindowKind::Fixed { k } => {
+            enc.put_u8(0);
+            enc.put_u64(k);
+        }
+        crate::averagers::WindowKind::Growing { c } => {
+            enc.put_u8(1);
+            enc.put_f64(c);
+        }
+    }
+}
+
+/// Decode a [`crate::averagers::WindowKind`].
+pub fn get_window(dec: &mut Dec<'_>) -> Result<crate::averagers::WindowKind, String> {
+    match dec.get_u8()? {
+        0 => Ok(crate::averagers::WindowKind::Fixed { k: dec.get_u64()? }),
+        1 => Ok(crate::averagers::WindowKind::Growing { c: dec.get_f64()? }),
+        other => Err(format!("unknown window kind tag {other}")),
+    }
+}
+
+/// Window echo check: consume the payload's [`crate::averagers::
+/// WindowKind`] and require it to match the estimator's (follows
+/// [`check_header`] in every windowed payload).
+pub fn check_window(
+    dec: &mut Dec<'_>,
+    want: &crate::averagers::WindowKind,
+) -> Result<(), String> {
+    let kind = get_window(dec)?;
+    if kind != *want {
+        return Err(format!(
+            "state payload window {kind:?} does not match estimator {want:?}"
+        ));
+    }
+    Ok(())
+}
+
+/// Shared payload-header check: kind tag and dimensionality must match
+/// the estimator the payload is being imported into.
+pub fn check_header(dec: &mut Dec<'_>, want_tag: u8, want_dim: usize) -> Result<(), String> {
+    let tag = dec.get_u8()?;
+    if tag != want_tag {
+        return Err(format!(
+            "state payload kind {tag} does not match estimator kind {want_tag}"
+        ));
+    }
+    let dim = dec.get_u32()? as usize;
+    if dim != want_dim {
+        return Err(format!(
+            "state payload dim {dim} does not match estimator dim {want_dim}"
+        ));
+    }
+    Ok(())
+}
+
+/// Length-prefixed state vector whose length must equal `want_len`
+/// (an estimator's dim or accumulator size).
+pub fn get_state_vec(dec: &mut Dec<'_>, want_len: usize) -> Result<Vec<f64>, String> {
+    let v = dec.get_f64_vec()?;
+    if v.len() != want_len {
+        return Err(format!(
+            "state vector length {} != expected {want_len}",
+            v.len()
+        ));
+    }
+    Ok(v)
+}
+
+/// Parameter echo check: an imported payload's spec parameter must be
+/// bit-identical to the live estimator's.
+pub fn check_param(name: &str, got: f64, want: f64) -> Result<(), String> {
+    if got.to_bits() != want.to_bits() {
+        return Err(format!(
+            "state payload {name}={got} does not match estimator {name}={want}"
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enc_dec_roundtrip_all_primitives() {
+        let mut e = Enc::new();
+        e.put_u8(7);
+        e.put_u16(300);
+        e.put_u32(1 << 20);
+        e.put_u64(u64::MAX - 3);
+        e.put_f64(-2.5);
+        e.put_str("stream/0");
+        e.put_bytes(&[1, 2, 3]);
+        e.put_f64_slice(&[1.0, -1.0]);
+        e.put_f64_raw(&[9.0]);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(d.get_u8().unwrap(), 7);
+        assert_eq!(d.get_u16().unwrap(), 300);
+        assert_eq!(d.get_u32().unwrap(), 1 << 20);
+        assert_eq!(d.get_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(d.get_f64().unwrap(), -2.5);
+        assert_eq!(d.get_str().unwrap(), "stream/0");
+        assert_eq!(d.get_bytes().unwrap(), &[1, 2, 3]);
+        assert_eq!(d.get_f64_vec().unwrap(), vec![1.0, -1.0]);
+        assert_eq!(d.get_f64_raw(1).unwrap(), vec![9.0]);
+        assert_eq!(d.remaining(), 0);
+        assert!(d.get_u8().is_err());
+    }
+
+    #[test]
+    fn dec_rejects_truncation_and_hostile_lengths() {
+        let mut e = Enc::new();
+        e.put_str("hello");
+        let mut bytes = e.into_bytes();
+        bytes.truncate(6); // cut inside the string body
+        assert!(Dec::new(&bytes).get_str().is_err());
+        // A length prefix far beyond the buffer must error, not allocate.
+        let huge = (u32::MAX).to_le_bytes();
+        assert!(Dec::new(&huge).get_bytes().is_err());
+        assert!(Dec::new(&huge).get_f64_vec().is_err());
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // IEEE CRC-32 of "123456789" is the classic check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn state_frame_roundtrip_and_corruption() {
+        let payload = b"estimator state bytes".to_vec();
+        let framed = frame_state(&payload);
+        assert_eq!(unframe_state(&framed).unwrap(), &payload[..]);
+        // Any single bit flip must be caught (magic, version, len, body
+        // or CRC).
+        for i in 0..framed.len() {
+            let mut bad = framed.clone();
+            bad[i] ^= 0x40;
+            assert!(unframe_state(&bad).is_err(), "bit flip at byte {i}");
+        }
+        // Truncations at every offset must error, never panic.
+        for cut in 0..framed.len() {
+            assert!(unframe_state(&framed[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn hex_roundtrip_and_rejects() {
+        let bytes = vec![0u8, 1, 0xAB, 0xFF, 0x10];
+        let s = to_hex(&bytes);
+        assert_eq!(s, "0001abff10");
+        assert_eq!(from_hex(&s).unwrap(), bytes);
+        assert_eq!(from_hex("ABCDEF").unwrap(), vec![0xAB, 0xCD, 0xEF]);
+        assert!(from_hex("abc").is_err());
+        assert!(from_hex("zz").is_err());
+    }
+
+    #[test]
+    fn window_kind_roundtrip() {
+        use crate::averagers::WindowKind;
+        for w in [WindowKind::Fixed { k: 17 }, WindowKind::Growing { c: 0.25 }] {
+            let mut e = Enc::new();
+            put_window(&mut e, &w);
+            let bytes = e.into_bytes();
+            let got = get_window(&mut Dec::new(&bytes)).unwrap();
+            assert_eq!(got, w);
+        }
+        assert!(get_window(&mut Dec::new(&[9])).is_err());
+    }
+}

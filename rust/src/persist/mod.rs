@@ -1,0 +1,30 @@
+//! Durable state: versioned snapshot codec, write-ahead log, and
+//! checkpoint files.
+//!
+//! The paper's whole point is that anytime tail averages live in O(1)
+//! memory — which also means a crash destroys state that took millions
+//! of observations to build and cannot be recomputed without replaying
+//! the stream. This subsystem makes every estimator's state a
+//! *serializable, mergeable partial aggregate* (the timescaledb-toolkit
+//! design) and gives the coordinator crash durability:
+//!
+//! * [`codec`] — the little-endian binary primitives ([`codec::Enc`],
+//!   [`codec::Dec`]), CRC32, hex, and the canonical per-estimator state
+//!   payload conventions used by `Averager::{export_state, import_state,
+//!   merge_state}` and the planar banks' bulk `export_rows`.
+//! * [`wal`] — per-shard write-ahead log segments with CRC-framed
+//!   records, rotation, position tracking, truncation and corruption-
+//!   tolerant replay.
+//! * [`checkpoint`] — atomic snapshot files (tmp + rename, per-section
+//!   CRC, keep-two retention) and the background [`checkpoint::
+//!   Checkpointer`] driver.
+//!
+//! The coordinator-side glue — quiescing shards at drain-cycle
+//! boundaries, `Coordinator::{checkpoint, recover}`, and the
+//! `checkpoint`/`restore`/`merge_state` wire ops — lives in
+//! [`crate::coordinator`]; this module is deliberately coordinator-
+//! agnostic so the codec and WAL can be reused (and fuzzed) standalone.
+
+pub mod checkpoint;
+pub mod codec;
+pub mod wal;

@@ -152,6 +152,25 @@ impl Runner {
     }
 }
 
+/// Create a fresh, unique temporary directory for a test. Callers that
+/// care about disk hygiene can `std::fs::remove_dir_all` it at the end;
+/// leaking it on test failure is deliberate (the artifacts help debug).
+pub fn temp_dir(label: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let dir = std::env::temp_dir().join(format!(
+        "ata-test-{label}-{}-{n}-{nanos}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    dir
+}
+
 /// Assert two floats are close (absolute + relative tolerance).
 pub fn assert_close(got: f64, want: f64, tol: f64, ctx: &str) -> Result<(), String> {
     let scale = want.abs().max(1.0);

@@ -24,6 +24,10 @@ struct PoolShared {
     free: Mutex<FreeList>,
     /// Buffers parked beyond this bound are dropped instead of pooled.
     max_pooled: usize,
+    /// Largest per-buffer capacity (floats) worth parking.
+    max_buf_floats: usize,
+    /// Total idle capacity budget (floats) across the pool.
+    max_total_floats: usize,
 }
 
 /// A pool of reusable `Vec<f64>` allocations.
@@ -40,12 +44,30 @@ pub struct BufferPool {
 }
 
 impl BufferPool {
-    /// A pool retaining at most `max_pooled` idle buffers.
+    /// A pool retaining at most `max_pooled` idle buffers, with the
+    /// default capacity caps ([`MAX_POOLED_CAPACITY`],
+    /// [`MAX_POOLED_TOTAL`]).
     pub fn new(max_pooled: usize) -> BufferPool {
+        BufferPool::with_caps(max_pooled, MAX_POOLED_CAPACITY, MAX_POOLED_TOTAL)
+    }
+
+    /// A pool with explicit retention caps: at most `max_pooled` idle
+    /// buffers, none larger than `max_buf_floats` capacity, totalling at
+    /// most `max_total_floats`. The WAL replay path uses this to run a
+    /// larger pool than the ingest default (recovery streams millions of
+    /// batch buffers through the shard queues back-to-back), without
+    /// patching the crate-wide constants.
+    pub fn with_caps(
+        max_pooled: usize,
+        max_buf_floats: usize,
+        max_total_floats: usize,
+    ) -> BufferPool {
         BufferPool {
             shared: Arc::new(PoolShared {
                 free: Mutex::new(FreeList::default()),
                 max_pooled: max_pooled.max(1),
+                max_buf_floats: max_buf_floats.max(1),
+                max_total_floats: max_total_floats.max(1),
             }),
         }
     }
@@ -167,25 +189,27 @@ impl PartialEq<PooledBuf> for Vec<f64> {
     }
 }
 
-/// Largest per-buffer capacity (in floats) worth parking: one burst of
-/// giant batches must not pin its allocations in the pool forever
-/// (8 MiB per buffer at f64).
-const MAX_POOLED_CAPACITY: usize = 1 << 20;
+/// Default largest per-buffer capacity (in floats) worth parking: one
+/// burst of giant batches must not pin its allocations in the pool
+/// forever (8 MiB per buffer at f64). Override per pool with
+/// [`BufferPool::with_caps`].
+pub const MAX_POOLED_CAPACITY: usize = 1 << 20;
 
-/// Total idle capacity budget (in floats) across the whole pool: even
+/// Default total idle capacity budget (in floats) across a pool: even
 /// `max_pooled` buffers individually under the cap must not add up to
-/// hundreds of retained MiB (4M floats = 32 MiB).
-const MAX_POOLED_TOTAL: usize = 4 << 20;
+/// hundreds of retained MiB (4M floats = 32 MiB). Override per pool
+/// with [`BufferPool::with_caps`].
+pub const MAX_POOLED_TOTAL: usize = 4 << 20;
 
 impl Drop for PooledBuf {
     fn drop(&mut self) {
         if let Some(home) = self.home.take() {
             let cap = self.data.capacity();
-            if cap > MAX_POOLED_CAPACITY {
+            if cap > home.max_buf_floats {
                 return; // oversized: let the allocation die
             }
             let mut free = home.free.lock().expect("buffer pool");
-            if free.bufs.len() < home.max_pooled && free.floats + cap <= MAX_POOLED_TOTAL {
+            if free.bufs.len() < home.max_pooled && free.floats + cap <= home.max_total_floats {
                 free.floats += cap;
                 free.bufs.push(std::mem::take(&mut self.data));
             }
@@ -388,6 +412,23 @@ mod tests {
         let big = pool.take(&vec![0.0; MAX_POOLED_CAPACITY + 1]);
         drop(big);
         assert_eq!(pool.idle(), 0, "oversized buffers must not be parked");
+    }
+
+    #[test]
+    fn with_caps_overrides_retention_bounds() {
+        // A replay-sized pool parks buffers the default caps would drop…
+        let big_pool = BufferPool::with_caps(4, 2 * MAX_POOLED_CAPACITY, 8 * MAX_POOLED_CAPACITY);
+        let big = big_pool.take(&vec![0.0; MAX_POOLED_CAPACITY + 1]);
+        drop(big);
+        assert_eq!(big_pool.idle(), 1);
+        // …and a tiny pool drops buffers the defaults would keep, both
+        // per-buffer and in total.
+        let tiny = BufferPool::with_caps(8, 4, 6);
+        drop(tiny.take(&[0.0; 5])); // over the per-buffer cap
+        assert_eq!(tiny.idle(), 0);
+        drop(tiny.take(&[0.0; 4]));
+        drop(tiny.take(&[0.0; 4])); // 4 + 4 > total budget of 6
+        assert_eq!(tiny.idle(), 1);
     }
 
     #[test]

@@ -19,7 +19,15 @@ fn run(args: &[&str]) -> (bool, String, String) {
 fn help_lists_commands() {
     let (ok, stdout, _) = run(&["--help"]);
     assert!(ok);
-    for cmd in ["experiment", "serve", "client", "artifacts", "weights"] {
+    for cmd in [
+        "experiment",
+        "serve",
+        "client",
+        "checkpoint",
+        "restore",
+        "artifacts",
+        "weights",
+    ] {
         assert!(stdout.contains(cmd), "help missing '{cmd}':\n{stdout}");
     }
 }

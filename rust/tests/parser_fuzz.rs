@@ -154,3 +154,130 @@ fn truncated_frames_error_not_panic() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Durable-state codec fuzz: snapshot payloads and WAL bytes
+// ---------------------------------------------------------------------------
+
+use ata::averagers::{Averager, AveragerSpec, WindowKind};
+use ata::persist::codec::{frame_state, unframe_state, Dec, Enc};
+
+fn fuzz_specs() -> Vec<AveragerSpec> {
+    vec![
+        AveragerSpec::Exp { gamma: 0.9 },
+        AveragerSpec::Gea { c: 0.5 },
+        AveragerSpec::Awa {
+            window: WindowKind::Fixed { k: 7 },
+            accumulators: 2,
+        },
+        AveragerSpec::Awa {
+            window: WindowKind::Growing { c: 0.4 },
+            accumulators: 3,
+        },
+        AveragerSpec::True {
+            window: WindowKind::Fixed { k: 5 },
+        },
+        AveragerSpec::Raw {
+            c: 0.5,
+            total_steps: 100,
+        },
+        AveragerSpec::Restart {
+            window: WindowKind::Fixed { k: 4 },
+        },
+        AveragerSpec::Eh {
+            window: WindowKind::Fixed { k: 30 },
+            eps: 0.1,
+        },
+    ]
+}
+
+fn arb_bytes(g: &mut Gen, max: usize) -> Vec<u8> {
+    let n = g.usize_range(0, max);
+    (0..n).map(|_| (g.u64() & 0xFF) as u8).collect()
+}
+
+#[test]
+fn state_codec_garbage_errors_never_panics() {
+    Runner::new("state codec garbage", 0xF7).run(200, |g| {
+        let bytes = arb_bytes(g, 256);
+        // Framed envelope parse on random bytes.
+        let _ = unframe_state(&bytes);
+        // Raw payload import/merge into every estimator kind.
+        for spec in fuzz_specs() {
+            let mut a = spec.build(2)?;
+            let _ = a.import_state(&mut Dec::new(&bytes));
+            let _ = a.merge_state(&mut Dec::new(&bytes));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn state_codec_truncated_and_bitflipped_exports_error_never_panic() {
+    Runner::new("state codec truncate/bitflip", 0xF8).run(60, |g| {
+        let d = g.usize_range(1, 3);
+        for spec in fuzz_specs() {
+            let mut a = spec.build(d)?;
+            let n = g.usize_range(1, 40);
+            let data: Vec<f64> = (0..n * d).map(|_| g.f64_range(-4.0, 4.0)).collect();
+            a.observe_many(&data, n);
+            let mut enc = Enc::new();
+            a.export_state(&mut enc);
+            let payload = enc.into_bytes();
+            // Truncation at any proper prefix must error (the payload is
+            // fully self-describing), never panic.
+            let cut = g.usize_range(0, payload.len() - 1);
+            let mut b = spec.build(d)?;
+            if b.import_state(&mut Dec::new(&payload[..cut])).is_ok() {
+                return Err(format!(
+                    "{}: truncated payload (cut {cut}/{}) imported",
+                    spec.label(),
+                    payload.len()
+                ));
+            }
+            // A bit flip anywhere in the FRAMED form fails the CRC.
+            let mut framed = frame_state(&payload);
+            let at = g.usize_range(0, framed.len() - 1);
+            let bit = 1u8 << g.usize_range(0, 7);
+            framed[at] ^= bit;
+            if unframe_state(&framed).is_ok() {
+                return Err(format!(
+                    "{}: bit flip at byte {at} survived the CRC",
+                    spec.label()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wal_and_snapshot_files_of_garbage_error_never_panic() {
+    use ata::persist::{checkpoint, wal};
+    use ata::testkit::temp_dir;
+    let dir = temp_dir("fuzz-wal-garbage");
+    Runner::new("wal/snapshot garbage files", 0xF9).run(60, |g| {
+        let bytes = arb_bytes(g, 400);
+        // A garbage WAL segment: replay must stop cleanly, not panic.
+        std::fs::write(dir.join("seg-00000000.wal"), &bytes).map_err(|e| e.to_string())?;
+        let mut n = 0u64;
+        let summary = wal::replay(
+            &dir,
+            wal::WalPosition {
+                segment: 0,
+                offset: 0,
+            },
+            |_| n += 1,
+        )?;
+        if summary.records != n {
+            return Err("replay miscounted".into());
+        }
+        // A garbage snapshot file: read must error or yield sections,
+        // never panic.
+        let snap = dir.join("snapshot-00000000.ata");
+        std::fs::write(&snap, &bytes).map_err(|e| e.to_string())?;
+        let _ = checkpoint::read_snapshot(&snap);
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,666 @@
+//! Durability integration tests: snapshot→restore equivalence for every
+//! estimator (slot and banked), state merges, checkpoint + WAL crash
+//! recovery, and WAL-truncation fault injection.
+
+use ata::averagers::{Averager, AveragerSpec, WindowKind};
+use ata::config::{BackpressurePolicy, PersistConfig, ServiceConfig};
+use ata::coordinator::Coordinator;
+use ata::persist::codec::{Dec, Enc};
+use ata::persist::wal;
+use ata::testkit::{temp_dir, Runner};
+use std::path::Path;
+
+/// Every `AveragerSpec` variant (both window kinds where applicable) —
+/// the first four build planar banks, the rest fall back to slots.
+fn all_specs() -> Vec<AveragerSpec> {
+    vec![
+        AveragerSpec::Exp { gamma: 0.9 },
+        AveragerSpec::ExpK { k: 10 },
+        AveragerSpec::Gea { c: 0.5 },
+        AveragerSpec::Awa {
+            window: WindowKind::Fixed { k: 7 },
+            accumulators: 2,
+        },
+        AveragerSpec::Awa {
+            window: WindowKind::Growing { c: 0.4 },
+            accumulators: 3,
+        },
+        AveragerSpec::True {
+            window: WindowKind::Fixed { k: 9 },
+        },
+        AveragerSpec::True {
+            window: WindowKind::Growing { c: 0.5 },
+        },
+        AveragerSpec::Raw {
+            c: 0.5,
+            total_steps: 200,
+        },
+        AveragerSpec::Restart {
+            window: WindowKind::Fixed { k: 6 },
+        },
+        AveragerSpec::Eh {
+            window: WindowKind::Fixed { k: 50 },
+            eps: 0.1,
+        },
+    ]
+}
+
+/// Deterministic sample value for stream `s`, step `t`, dimension `i`.
+fn sample(s: usize, t: u64, i: usize) -> f64 {
+    (((t as f64) * 0.37 + (s as f64) * 1.7 + (i as f64) * 0.41).sin()) * 3.0
+}
+
+fn flat_batch(s: usize, start_t: u64, count: usize, d: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(count * d);
+    for k in 0..count {
+        for i in 0..d {
+            out.push(sample(s, start_t + k as u64, i));
+        }
+    }
+    out
+}
+
+fn close(a: &[f64], b: &[f64], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-12 * y.abs().max(1.0),
+            "{ctx}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Estimator-level snapshot/restore properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn snapshot_restore_midstream_equals_uninterrupted_every_spec() {
+    Runner::new("snapshot/restore midstream equivalence", 0xD00D).run(20, |g| {
+        let d = g.usize_range(1, 4);
+        let n1 = g.usize_range(1, 60);
+        let n2 = g.usize_range(1, 60);
+        for spec in all_specs() {
+            let label = spec.label();
+            let mut reference = spec.build(d).unwrap();
+            let mut first = spec.build(d).unwrap();
+            let data1: Vec<f64> = (0..n1 * d).map(|_| g.f64_range(-5.0, 5.0)).collect();
+            let data2: Vec<f64> = (0..n2 * d).map(|_| g.f64_range(-5.0, 5.0)).collect();
+            reference.observe_many(&data1, n1);
+            first.observe_many(&data1, n1);
+            let mut enc = Enc::new();
+            first.export_state(&mut enc);
+            let bytes = enc.into_bytes();
+            // Restore into a fresh estimator…
+            let mut restored = spec.build(d).unwrap();
+            restored
+                .import_state(&mut Dec::new(&bytes))
+                .map_err(|e| format!("{label}: import: {e}"))?;
+            // …whose re-export is bitwise identical (two encode cycles).
+            let mut enc2 = Enc::new();
+            restored.export_state(&mut enc2);
+            if enc2.as_bytes() != &bytes[..] {
+                return Err(format!("{label}: re-export differs from original export"));
+            }
+            // Continuing the restored stream matches the uninterrupted one.
+            reference.observe_many(&data2, n2);
+            restored.observe_many(&data2, n2);
+            if restored.t() != reference.t() {
+                return Err(format!("{label}: t {} vs {}", restored.t(), reference.t()));
+            }
+            match (restored.value(), reference.value()) {
+                (Some(a), Some(b)) => {
+                    for i in 0..d {
+                        if (a[i] - b[i]).abs() > 1e-12 * b[i].abs().max(1.0) {
+                            return Err(format!("{label} dim {i}: {} vs {}", a[i], b[i]));
+                        }
+                    }
+                }
+                (None, None) => {}
+                (a, b) => return Err(format!("{label}: presence {a:?} vs {b:?}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn import_rejects_cross_spec_and_wrong_dim_payloads() {
+    let d = 2;
+    for spec in all_specs() {
+        let mut src = spec.build(d).unwrap();
+        src.observe_many(&flat_batch(0, 0, 8, d), 8);
+        let mut enc = Enc::new();
+        src.export_state(&mut enc);
+        let bytes = enc.into_bytes();
+        // Wrong dim: same spec, different dimensionality.
+        let mut other_dim = spec.build(d + 1).unwrap();
+        assert!(
+            other_dim.import_state(&mut Dec::new(&bytes)).is_err(),
+            "{}: wrong dim must be rejected",
+            spec.label()
+        );
+        // Wrong spec kind or parameters.
+        for other in all_specs() {
+            if other == spec {
+                continue;
+            }
+            let mut tgt = other.build(d).unwrap();
+            assert!(
+                tgt.import_state(&mut Dec::new(&bytes)).is_err(),
+                "{} payload must not import into {}",
+                spec.label(),
+                other.label()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Merge semantics
+// ---------------------------------------------------------------------------
+
+fn export_bytes(a: &dyn Averager) -> Vec<u8> {
+    let mut enc = Enc::new();
+    a.export_state(&mut enc);
+    enc.into_bytes()
+}
+
+#[test]
+fn gea_merge_is_exact_inverse_variance_pooling() {
+    let spec = AveragerSpec::Gea { c: 0.5 };
+    let mut a = spec.build(1).unwrap();
+    let mut b = spec.build(1).unwrap();
+    for t in 0..40u64 {
+        a.observe_scalar(sample(0, t, 0));
+    }
+    for t in 0..90u64 {
+        b.observe_scalar(sample(1, t, 0));
+    }
+    let (va, vb) = (a.value_scalar().unwrap(), b.value_scalar().unwrap());
+    let bytes = export_bytes(&*b);
+    a.merge_state(&mut Dec::new(&bytes)).unwrap();
+    assert_eq!(a.t(), 40 + 90);
+    // Inverse-variance weights: v tracks Σα² = 1/k_eff, so the combine
+    // weights are the effective window sizes.
+    let (ka, kb) = (0.5 * 40.0, 0.5 * 90.0); // k_eff = c·t after warmup
+    let want = (ka * va + kb * vb) / (ka + kb);
+    let got = a.value_scalar().unwrap();
+    assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+}
+
+#[test]
+fn awa_merge_pools_accumulators_exactly() {
+    for accumulators in [2u32, 3] {
+        let spec = AveragerSpec::Awa {
+            window: WindowKind::Fixed { k: 1000 }, // no flush: pure running means
+            accumulators,
+        };
+        let mut a = spec.build(1).unwrap();
+        let mut b = spec.build(1).unwrap();
+        let (na, nb) = (12u64, 30u64);
+        let mut sum = 0.0;
+        for t in 0..na {
+            let x = sample(0, t, 0);
+            sum += x;
+            a.observe_scalar(x);
+        }
+        for t in 0..nb {
+            let x = sample(1, t, 0);
+            sum += x;
+            b.observe_scalar(x);
+        }
+        let bytes = export_bytes(&*b);
+        a.merge_state(&mut Dec::new(&bytes)).unwrap();
+        assert_eq!(a.t(), na + nb);
+        // Below the window everything sits in the recent accumulators:
+        // the merged estimate is the exact pooled mean of all samples.
+        let want = sum / (na + nb) as f64;
+        let got = a.value_scalar().unwrap();
+        assert!(
+            (got - want).abs() < 1e-12,
+            "accumulators={accumulators}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn exp_merge_mass_weighted_combine() {
+    let spec = AveragerSpec::Exp { gamma: 0.8 };
+    // Two constant streams at the same level merge to that level…
+    let mut a = spec.build(1).unwrap();
+    let mut b = spec.build(1).unwrap();
+    for _ in 0..30 {
+        a.observe_scalar(5.0);
+        b.observe_scalar(5.0);
+    }
+    let bytes = export_bytes(&*b);
+    a.merge_state(&mut Dec::new(&bytes)).unwrap();
+    assert_eq!(a.t(), 60);
+    assert!((a.value_scalar().unwrap() - 5.0).abs() < 1e-12);
+    // …and differing levels land at the mass-weighted midpoint.
+    let mut c = spec.build(1).unwrap();
+    let mut d = spec.build(1).unwrap();
+    for _ in 0..200 {
+        c.observe_scalar(2.0); // mass ≈ 1 each at t=200
+        d.observe_scalar(4.0);
+    }
+    let bytes = export_bytes(&*d);
+    c.merge_state(&mut Dec::new(&bytes)).unwrap();
+    assert!((c.value_scalar().unwrap() - 3.0).abs() < 1e-9);
+}
+
+#[test]
+fn windowed_merges_take_precedence_of_longer_stream() {
+    for spec in [
+        AveragerSpec::True {
+            window: WindowKind::Fixed { k: 5 },
+        },
+        AveragerSpec::Restart {
+            window: WindowKind::Fixed { k: 5 },
+        },
+        AveragerSpec::Eh {
+            window: WindowKind::Fixed { k: 20 },
+            eps: 0.1,
+        },
+    ] {
+        let mut short = spec.build(1).unwrap();
+        let mut long = spec.build(1).unwrap();
+        for t in 0..8u64 {
+            short.observe_scalar(sample(0, t, 0));
+        }
+        for t in 0..40u64 {
+            long.observe_scalar(sample(1, t, 0));
+        }
+        let long_val = long.value_scalar().unwrap();
+        let long_t = long.t();
+        // Longer peer wins outright…
+        let bytes = export_bytes(&*long);
+        short.merge_state(&mut Dec::new(&bytes)).unwrap();
+        assert_eq!(short.t(), long_t, "{}", spec.label());
+        assert_eq!(short.value_scalar().unwrap(), long_val, "{}", spec.label());
+        // …and a shorter peer leaves the state untouched.
+        let mut tiny = spec.build(1).unwrap();
+        tiny.observe_scalar(9.0);
+        let tiny_bytes = export_bytes(&*tiny);
+        short.merge_state(&mut Dec::new(&tiny_bytes)).unwrap();
+        assert_eq!(short.t(), long_t, "{}", spec.label());
+        assert_eq!(short.value_scalar().unwrap(), long_val, "{}", spec.label());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator-level state transfer (slot AND banked backings)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn coordinator_export_restore_roundtrips_across_coordinators() {
+    let d = 3;
+    let a = Coordinator::new(2, 256, BackpressurePolicy::Block);
+    let b = Coordinator::new(3, 256, BackpressurePolicy::Block); // different sharding
+    let reference = Coordinator::new(1, 256, BackpressurePolicy::Block);
+    for (s, spec) in all_specs().into_iter().enumerate() {
+        let name = format!("s{s}");
+        for c in [&a, &b, &reference] {
+            c.register(&name, d, spec.clone()).unwrap();
+        }
+        // First half into A (and the uninterrupted reference).
+        let h1 = flat_batch(s, 0, 20, d);
+        a.push_many(&name, 20, &h1).unwrap();
+        reference.push_many(&name, 20, &h1).unwrap();
+    }
+    a.sync().unwrap();
+    for (s, spec) in all_specs().into_iter().enumerate() {
+        let name = format!("s{s}");
+        // Move the stream's state A → B over the framed payload.
+        let framed = a.export_state(&name).unwrap();
+        let t = b.restore_state(&name, &framed).unwrap();
+        assert_eq!(t, 20, "{}", spec.label());
+        // Continue on B; the reference runs uninterrupted.
+        let h2 = flat_batch(s, 20, 15, d);
+        b.push_many(&name, 15, &h2).unwrap();
+        reference.push_many(&name, 15, &h2).unwrap();
+    }
+    b.sync().unwrap();
+    reference.sync().unwrap();
+    for (s, spec) in all_specs().into_iter().enumerate() {
+        let name = format!("s{s}");
+        let got = b.snapshot(&name).unwrap();
+        let want = reference.snapshot(&name).unwrap();
+        assert_eq!(got.t, want.t, "{}", spec.label());
+        close(
+            &got.value.expect("value"),
+            &want.value.expect("value"),
+            &spec.label(),
+        );
+    }
+    // Malformed framed payloads are structured errors, never panics.
+    assert!(b.restore_state("s0", b"not a framed payload").is_err());
+    let mut framed = a.export_state("s0").unwrap();
+    let last = framed.len() - 1;
+    framed[last] ^= 0x01;
+    assert!(b.restore_state("s0", &framed).is_err());
+}
+
+#[test]
+fn coordinator_merge_rolls_up_shard_partials() {
+    // Two "shards" each averaged a disjoint half of a GEA stream; the
+    // rollup merge pools them exactly (banked backing on both sides).
+    let d = 2;
+    let spec = AveragerSpec::Gea { c: 0.5 };
+    let a = Coordinator::new(2, 256, BackpressurePolicy::Block);
+    let b = Coordinator::new(2, 256, BackpressurePolicy::Block);
+    for c in [&a, &b] {
+        c.register("w", d, spec.clone()).unwrap();
+    }
+    a.push_many("w", 30, &flat_batch(0, 0, 30, d)).unwrap();
+    b.push_many("w", 50, &flat_batch(1, 0, 50, d)).unwrap();
+    a.sync().unwrap();
+    b.sync().unwrap();
+    let partial = b.export_state("w").unwrap();
+    let t = a.merge_state("w", &partial).unwrap();
+    assert_eq!(t, 80);
+    let merged = a.snapshot("w").unwrap();
+    assert_eq!(merged.t, 80);
+    assert!(merged.value.is_some());
+    // Slot-backed merge too (True window → precedence).
+    let spec = AveragerSpec::True {
+        window: WindowKind::Fixed { k: 4 },
+    };
+    for c in [&a, &b] {
+        c.register("tw", 1, spec.clone()).unwrap();
+    }
+    a.push_many("tw", 3, &flat_batch(2, 0, 3, 1)).unwrap();
+    b.push_many("tw", 9, &flat_batch(3, 0, 9, 1)).unwrap();
+    a.sync().unwrap();
+    b.sync().unwrap();
+    let longer = b.export_state("tw").unwrap();
+    assert_eq!(a.merge_state("tw", &longer).unwrap(), 9);
+    let got = a.snapshot("tw").unwrap();
+    let want = b.snapshot("tw").unwrap();
+    assert_eq!(got.t, want.t);
+    assert_eq!(got.value.unwrap(), want.value.unwrap());
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint + WAL crash recovery
+// ---------------------------------------------------------------------------
+
+fn persist_cfg(dir: &Path, shards: usize) -> ServiceConfig {
+    ServiceConfig {
+        shards,
+        queue_capacity: 256,
+        persist: Some(PersistConfig {
+            dir: dir.display().to_string(),
+            segment_bytes: 16 << 10,
+            fsync: false,
+            checkpoint_interval_ms: 0,
+        }),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn kill_and_recover_restores_every_spec_exactly() {
+    let dir = temp_dir("persist-kill-recover");
+    let cfg = persist_cfg(&dir, 2);
+    let reference = Coordinator::new(2, 256, BackpressurePolicy::Block);
+    {
+        let durable = Coordinator::from_config(&cfg).unwrap();
+        let d = 3;
+        for (s, spec) in all_specs().into_iter().enumerate() {
+            let name = format!("s{s}");
+            durable.register(&name, d, spec.clone()).unwrap();
+            reference.register(&name, d, spec).unwrap();
+            let h1 = flat_batch(s, 0, 17, d);
+            durable.push_many(&name, 17, &h1).unwrap();
+            reference.push_many(&name, 17, &h1).unwrap();
+        }
+        durable.sync().unwrap();
+        // Checkpoint mid-stream, then keep pushing so the WAL has a
+        // live tail past the snapshot.
+        let report = durable.checkpoint().unwrap();
+        assert_eq!(report.streams, all_specs().len());
+        for s in 0..all_specs().len() {
+            let name = format!("s{s}");
+            let h2 = flat_batch(s, 17, 23, 3);
+            durable.push_many(&name, 23, &h2).unwrap();
+            reference.push_many(&name, 23, &h2).unwrap();
+        }
+        durable.sync().unwrap();
+        // "Crash": drop without another checkpoint.
+    }
+    let (recovered, report) = Coordinator::recover(&cfg).unwrap();
+    assert!(report.snapshot.is_some());
+    assert_eq!(report.restored_streams, all_specs().len());
+    assert!(report.replayed_batches > 0);
+    reference.sync().unwrap();
+    for (s, spec) in all_specs().into_iter().enumerate() {
+        let name = format!("s{s}");
+        let got = recovered.snapshot(&name).unwrap();
+        let want = reference.snapshot(&name).unwrap();
+        assert_eq!(got.t, want.t, "{}", spec.label());
+        close(
+            &got.value.expect("value"),
+            &want.value.expect("value"),
+            &format!("recovered {}", spec.label()),
+        );
+    }
+    // The recovered coordinator keeps working and stays equivalent.
+    for s in 0..all_specs().len() {
+        let name = format!("s{s}");
+        let h3 = flat_batch(s, 40, 11, 3);
+        recovered.push_many(&name, 11, &h3).unwrap();
+        reference.push_many(&name, 11, &h3).unwrap();
+    }
+    recovered.sync().unwrap();
+    reference.sync().unwrap();
+    for (s, spec) in all_specs().into_iter().enumerate() {
+        let name = format!("s{s}");
+        let got = recovered.snapshot(&name).unwrap();
+        let want = reference.snapshot(&name).unwrap();
+        assert_eq!(got.t, want.t);
+        close(
+            &got.value.expect("value"),
+            &want.value.expect("value"),
+            &format!("post-recovery {}", spec.label()),
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn recovery_without_any_checkpoint_replays_the_full_wal() {
+    // Crash before the FIRST checkpoint: no snapshot exists, and the
+    // replay fallback position {segment 0, offset 0} must still skip
+    // the segment header and recover every acknowledged record
+    // (regression: offset 0 used to parse the magic as a torn frame).
+    let dir = temp_dir("persist-no-checkpoint");
+    let cfg = persist_cfg(&dir, 2);
+    {
+        let durable = Coordinator::from_config(&cfg).unwrap();
+        durable
+            .register("banked", 2, AveragerSpec::Gea { c: 0.5 })
+            .unwrap();
+        durable
+            .register(
+                "slotted",
+                1,
+                AveragerSpec::True {
+                    window: WindowKind::Fixed { k: 4 },
+                },
+            )
+            .unwrap();
+        durable
+            .push_many("banked", 12, &flat_batch(0, 0, 12, 2))
+            .unwrap();
+        durable
+            .push_many("slotted", 7, &flat_batch(1, 0, 7, 1))
+            .unwrap();
+        durable.sync().unwrap();
+        // Crash: no checkpoint was ever written.
+    }
+    let (recovered, report) = Coordinator::recover(&cfg).unwrap();
+    assert!(report.snapshot.is_none());
+    assert_eq!(report.replayed_registers, 2, "{report:?}");
+    assert_eq!(report.replayed_batches, 2, "{report:?}");
+    assert_eq!(recovered.snapshot("banked").unwrap().t, 12);
+    assert_eq!(recovered.snapshot("slotted").unwrap().t, 7);
+    // Values match uninterrupted references.
+    let mut reference = AveragerSpec::Gea { c: 0.5 }.build(2).unwrap();
+    reference.observe_many(&flat_batch(0, 0, 12, 2), 12);
+    close(
+        &recovered.snapshot("banked").unwrap().value.expect("value"),
+        &reference.value().expect("value"),
+        "no-checkpoint banked",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn streams_registered_after_checkpoint_survive_via_wal() {
+    let dir = temp_dir("persist-late-register");
+    let cfg = persist_cfg(&dir, 2);
+    {
+        let durable = Coordinator::from_config(&cfg).unwrap();
+        durable
+            .register("early", 1, AveragerSpec::Gea { c: 0.5 })
+            .unwrap();
+        durable.push_many("early", 5, &flat_batch(0, 0, 5, 1)).unwrap();
+        durable.sync().unwrap();
+        durable.checkpoint().unwrap();
+        // Born after the checkpoint: only the WAL knows about these.
+        durable
+            .register("late-banked", 1, AveragerSpec::Exp { gamma: 0.5 })
+            .unwrap();
+        durable
+            .register(
+                "late-slot",
+                1,
+                AveragerSpec::True {
+                    window: WindowKind::Fixed { k: 3 },
+                },
+            )
+            .unwrap();
+        durable
+            .push_many("late-banked", 4, &flat_batch(1, 0, 4, 1))
+            .unwrap();
+        durable
+            .push_many("late-slot", 6, &flat_batch(2, 0, 6, 1))
+            .unwrap();
+        // And one unregistered after the checkpoint must stay gone.
+        durable
+            .register("doomed", 1, AveragerSpec::Gea { c: 0.5 })
+            .unwrap();
+        durable.sync().unwrap();
+        durable.unregister("doomed").unwrap();
+        durable.sync().unwrap();
+    }
+    let (recovered, report) = Coordinator::recover(&cfg).unwrap();
+    assert!(report.replayed_registers >= 2, "{report:?}");
+    assert_eq!(recovered.snapshot("early").unwrap().t, 5);
+    assert_eq!(recovered.snapshot("late-banked").unwrap().t, 4);
+    assert_eq!(recovered.snapshot("late-slot").unwrap().t, 6);
+    assert!(recovered.snapshot("doomed").is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Recursive dir copy (std-only) for fault-injection snapshots.
+fn copy_dir(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap().flatten() {
+        let ty = entry.file_type().unwrap();
+        let to = dst.join(entry.file_name());
+        if ty.is_dir() {
+            copy_dir(&entry.path(), &to);
+        } else {
+            std::fs::copy(entry.path(), &to).unwrap();
+        }
+    }
+}
+
+#[test]
+fn wal_truncation_never_panics_and_never_loses_surviving_batches() {
+    // Build a pristine durable state: a checkpoint plus a WAL tail of
+    // known per-stream batches, all on ONE shard so the truncation
+    // point maps to a deterministic batch prefix.
+    let dir = temp_dir("persist-truncate");
+    let cfg = persist_cfg(&dir, 1);
+    let d = 2;
+    let specs = [
+        ("g", AveragerSpec::Gea { c: 0.5 }),
+        (
+            "t",
+            AveragerSpec::True {
+                window: WindowKind::Fixed { k: 5 },
+            },
+        ),
+    ];
+    // Per-stream batch schedule after the checkpoint: (stream, count).
+    let schedule: Vec<(usize, usize)> =
+        vec![(0, 3), (1, 2), (0, 5), (1, 7), (0, 1), (1, 4), (0, 6)];
+    {
+        let durable = Coordinator::from_config(&cfg).unwrap();
+        for (name, spec) in &specs {
+            durable.register(name, d, spec.clone()).unwrap();
+        }
+        durable.push_many("g", 10, &flat_batch(0, 0, 10, d)).unwrap();
+        durable.push_many("t", 10, &flat_batch(1, 0, 10, d)).unwrap();
+        durable.sync().unwrap();
+        durable.checkpoint().unwrap();
+        let mut pos = [10u64, 10u64];
+        for &(s, count) in &schedule {
+            let name = specs[s].0;
+            durable
+                .push_many(name, count, &flat_batch(s, pos[s], count, d))
+                .unwrap();
+            pos[s] += count as u64;
+        }
+        durable.sync().unwrap();
+    }
+    let pristine = temp_dir("persist-truncate-pristine");
+    copy_dir(&dir, &pristine);
+    // The post-checkpoint records live in the highest segment(s) of the
+    // single shard's WAL.
+    let shard_dir = dir.join("wal").join("shard-0");
+    let last_seg = *wal::list_segments(&shard_dir).last().unwrap();
+    let seg_path = shard_dir.join(format!("seg-{last_seg:08}.wal"));
+    let seg_bytes = std::fs::read(&seg_path).unwrap();
+    // Truncate the tail segment at a spread of arbitrary byte offsets.
+    let cuts: Vec<usize> = (0..=12).map(|i| i * seg_bytes.len() / 12).collect();
+    for cut in cuts {
+        let _ = std::fs::remove_dir_all(&dir);
+        copy_dir(&pristine, &dir);
+        std::fs::write(&seg_path, &seg_bytes[..cut.min(seg_bytes.len())]).unwrap();
+        let (recovered, _report) = Coordinator::recover(&cfg).unwrap();
+        // Work out, per stream, how many whole batches survived, from
+        // the recovered t — then the state must match a reference fed
+        // exactly that batch prefix (same batch boundaries).
+        for (s, (name, spec)) in specs.iter().enumerate() {
+            let snap = recovered.snapshot(name).unwrap();
+            assert!(snap.t >= 10, "checkpointed state lost at cut {cut}");
+            let mut reference = spec.build(d).unwrap();
+            reference.observe_many(&flat_batch(s, 0, 10, d), 10);
+            let mut pos = 10u64;
+            for &(bs, count) in &schedule {
+                if bs != s || pos >= snap.t {
+                    continue;
+                }
+                reference.observe_many(&flat_batch(s, pos, count, d), count);
+                pos += count as u64;
+            }
+            assert_eq!(
+                snap.t, pos,
+                "cut {cut}: stream {name} t={} is not a whole-batch prefix",
+                snap.t
+            );
+            close(
+                &snap.value.expect("value"),
+                &reference.value().expect("value"),
+                &format!("cut {cut} stream {name}"),
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&pristine);
+}

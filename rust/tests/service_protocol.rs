@@ -237,3 +237,76 @@ fn server_shutdown_is_clean() {
         }
     }
 }
+
+#[test]
+fn state_transfer_ops_over_the_wire() {
+    // export_state → restore moves a stream's estimator state between
+    // two independent servers; merge_state rolls a partial in.
+    let (_sa, addr_a) = start_server();
+    let (_sb, addr_b) = start_server();
+    let mut ca = Client::connect(&addr_a).expect("connect a");
+    let mut cb = Client::connect(&addr_b).expect("connect b");
+    for cl in [&mut ca, &mut cb] {
+        cl.register("w", 2, "gea(c=0.5)").unwrap();
+        cl.register("tw", 1, "true(k=3)").unwrap();
+    }
+    let flat: Vec<f64> = (0..40).map(|i| (i as f64 * 0.3).sin()).collect();
+    ca.push_many("w", 20, &flat).unwrap();
+    ca.sync().unwrap();
+    // Banked stream state over the wire.
+    let state = ca.export_state("w").expect("export");
+    assert!(!state.is_empty());
+    assert_eq!(cb.restore("w", &state).expect("restore"), 20);
+    let (sa, sb) = (ca.snapshot("w").unwrap(), cb.snapshot("w").unwrap());
+    assert_eq!(sa.t, sb.t);
+    assert_eq!(sa.value.unwrap(), sb.value.unwrap());
+    // Slot-backed stream too.
+    for t in 1..=5u64 {
+        ca.push("tw", &[t as f64]).unwrap();
+    }
+    ca.sync().unwrap();
+    let state = ca.export_state("tw").expect("export tw");
+    assert_eq!(cb.restore("tw", &state).expect("restore tw"), 5);
+    // merge_state: a longer 'true' window takes precedence.
+    for t in 1..=9u64 {
+        cb.push("tw", &[100.0 + t as f64]).unwrap();
+    }
+    cb.sync().unwrap();
+    let partial = cb.export_state("tw").unwrap();
+    assert_eq!(ca.merge_state("tw", &partial).expect("merge"), 14);
+    // Corrupt payloads come back as structured errors, not disconnects.
+    let err = ca.restore("w", b"junk").unwrap_err();
+    assert!(!err.is_empty());
+    ca.ping().expect("connection still alive");
+}
+
+#[test]
+fn checkpoint_op_requires_persist_and_works_with_it() {
+    use ata::config::{PersistConfig, ServiceConfig};
+    // Without a [persist] section the op is a structured error.
+    let (_server, addr) = start_server();
+    let mut cl = Client::connect(&addr).expect("connect");
+    let err = cl.checkpoint().unwrap_err();
+    assert!(err.contains("persist"), "{err}");
+    cl.ping().expect("still alive");
+    // With one, the snapshot lands on disk and reports its streams.
+    let dir = ata::testkit::temp_dir("svc-checkpoint");
+    let cfg = ServiceConfig {
+        shards: 2,
+        persist: Some(PersistConfig {
+            dir: dir.display().to_string(),
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let c = Arc::new(Coordinator::from_config(&cfg).unwrap());
+    let server = Server::start("127.0.0.1:0", c, 2).expect("server");
+    let mut cl = Client::connect(&server.addr().to_string()).expect("connect");
+    cl.register("w", 2, "gea(c=0.5)").unwrap();
+    cl.push_many("w", 4, &[1.0; 8]).unwrap();
+    cl.sync().unwrap();
+    let (path, streams) = cl.checkpoint().expect("checkpoint");
+    assert_eq!(streams, 1);
+    assert!(std::path::Path::new(&path).exists(), "{path}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
