@@ -1,0 +1,137 @@
+//! Wire protocol bench: v1 JSON vs v2 binary codec cost, and
+//! end-to-end push throughput over TCP at 16/256/4096 streams.
+//!
+//! Exports `BENCH_protocol.json` at the repo root. Run `--quick` (or
+//! `ATA_BENCH_QUICK=1`) for the CI smoke configuration.
+
+use ata::benchkit::Bench;
+use ata::config::BackpressurePolicy;
+use ata::coordinator::protocol::{
+    self, OpKind, ProtocolChoice, Request, Response, StreamRef, Wire,
+};
+use ata::coordinator::{Client, Coordinator, Server};
+use ata::rng::{RngCore, Xoshiro256};
+use std::sync::Arc;
+
+fn main() {
+    let mut bench = Bench::from_args("protocol");
+    let quick = std::env::args().any(|a| a == "--quick") || std::env::var("ATA_BENCH_QUICK").is_ok();
+
+    // ---- Codec microbenches: one 64-sample × dim-4 push_many frame ----
+    bench.section("codec: encode/decode one push_many frame (64 samples × dim 4)");
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let data: Vec<f64> = (0..256)
+        .map(|_| (rng.next_u64() as f64 / u64::MAX as f64) * 2.0 - 1.0)
+        .collect();
+    let req_v1 = Request::PushMany {
+        stream: StreamRef::Name("layer0.weight".into()),
+        count: 64,
+        data: data.clone(),
+    };
+    let req_v2 = Request::PushMany {
+        stream: StreamRef::Handle(17),
+        count: 64,
+        data: data.clone(),
+    };
+    let mut buf = Vec::new();
+    bench.bench_elements("v1 json   encode push_many", 256, || {
+        protocol::encode_request(Wire::V1Json, 1, &req_v1, &mut buf).unwrap();
+        buf.len()
+    });
+    protocol::encode_request(Wire::V1Json, 1, &req_v1, &mut buf).unwrap();
+    let v1_frame = buf.clone();
+    bench.bench_elements("v1 json   decode push_many", 256, || {
+        protocol::decode_request(Wire::V1Json, &v1_frame).unwrap()
+    });
+    bench.bench_elements("v2 binary encode push_many", 256, || {
+        protocol::encode_request(Wire::V2Binary, 1, &req_v2, &mut buf).unwrap();
+        buf.len()
+    });
+    protocol::encode_request(Wire::V2Binary, 1, &req_v2, &mut buf).unwrap();
+    let v2_frame = buf.clone();
+    bench.bench_elements("v2 binary decode push_many", 256, || {
+        protocol::decode_request(Wire::V2Binary, &v2_frame).unwrap()
+    });
+    bench.record_metric("v1 frame bytes (256 floats)", v1_frame.len() as f64, "bytes");
+    bench.record_metric("v2 frame bytes (256 floats)", v2_frame.len() as f64, "bytes");
+
+    // Snapshot responses: the read-side hot frame.
+    let snap = Response::Snap {
+        stream: "layer0.weight".into(),
+        t: 123_456,
+        window_len: 512.0,
+        dropped: 3,
+        value: Some(data.clone()),
+    };
+    bench.bench_elements("v1 json   encode snapshot", 256, || {
+        protocol::encode_response(Wire::V1Json, 1, &snap, &mut buf).unwrap();
+        buf.len()
+    });
+    bench.bench_elements("v2 binary encode snapshot", 256, || {
+        protocol::encode_response(Wire::V2Binary, 1, &snap, &mut buf).unwrap();
+        buf.len()
+    });
+    protocol::encode_response(Wire::V2Binary, 1, &snap, &mut buf).unwrap();
+    let v2_snap = buf.clone();
+    bench.bench_elements("v2 binary decode snapshot", 256, || {
+        protocol::decode_response(Wire::V2Binary, OpKind::Snapshot, &v2_snap).unwrap()
+    });
+
+    // ---- End-to-end: push throughput over localhost TCP ----
+    let d = 4usize;
+    let batch = 64usize;
+    let stream_counts: &[usize] = if quick { &[16, 256] } else { &[16, 256, 4096] };
+    for &n_streams in stream_counts {
+        bench.section(&format!(
+            "end-to-end TCP: {batch}-sample batches, dim {d}, {n_streams} streams"
+        ));
+        let c = Arc::new(Coordinator::new(4, 4096, BackpressurePolicy::Block));
+        let names: Vec<String> = (0..n_streams).map(|i| format!("s{i}")).collect();
+        for name in &names {
+            c.register(name, d, ata::averagers::AveragerSpec::Gea { c: 0.5 })
+                .unwrap();
+        }
+        let server = Server::start("127.0.0.1:0", Arc::clone(&c), 4).expect("server");
+        let addr = server.addr().to_string();
+        let flat = vec![0.5f64; batch * d];
+
+        let mut v1 = Client::connect_with(&addr, ProtocolChoice::V1).expect("v1 client");
+        let mut i = 0usize;
+        bench.bench_elements(&format!("v1 json   push_many n={n_streams}"), batch as u64, || {
+            i = (i + 1) % n_streams;
+            v1.push_many(&names[i], batch, &flat).unwrap()
+        });
+        v1.sync().unwrap();
+
+        let mut v2 = Client::connect(&addr).expect("v2 client");
+        assert_eq!(v2.protocol_version(), 2);
+        let mut j = 0usize;
+        bench.bench_elements(&format!("v2 binary push_many n={n_streams}"), batch as u64, || {
+            j = (j + 1) % n_streams;
+            v2.push_many(&names[j], batch, &flat).unwrap()
+        });
+        v2.sync().unwrap();
+
+        // Fan-in shapes: 16 streams per wire interaction.
+        let fan = 16.min(n_streams);
+        let group: Vec<(&str, usize, &[f64])> = (0..fan)
+            .map(|k| (names[k].as_str(), batch, flat.as_slice()))
+            .collect();
+        bench.bench_elements(
+            &format!("v2 pipelined push_many ×{fan} n={n_streams}"),
+            (batch * fan) as u64,
+            || v2.push_many_pipelined(&group).unwrap(),
+        );
+        v2.sync().unwrap();
+        bench.bench_elements(
+            &format!("v2 multi_push ×{fan} (1 frame) n={n_streams}"),
+            (batch * fan) as u64,
+            || v2.multi_push(&group).unwrap(),
+        );
+        v2.sync().unwrap();
+        drop(v1);
+        drop(v2);
+        drop(server);
+    }
+    bench.finish();
+}

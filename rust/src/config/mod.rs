@@ -226,6 +226,7 @@ impl Default for PersistConfig {
 /// queue_capacity = 1024
 /// backpressure = "block"     # block | drop | reject
 /// banked = true              # fuse same-spec streams into planar banks
+/// protocol = "auto"          # auto | v1 | v2 (wire codec policy)
 ///
 /// [persist]
 /// dir = "ata-state"          # enables durability (WAL + snapshots)
@@ -247,6 +248,9 @@ pub struct ServiceConfig {
     /// Fuse same-spec streams into planar SoA banks (the hot path);
     /// `false` keeps every stream on the per-slot mutex fallback.
     pub banked: bool,
+    /// Wire codec policy: `Auto` negotiates v2 and auto-detects legacy
+    /// JSON peers, `V1` pins the legacy codec, `V2` refuses it.
+    pub protocol: crate::coordinator::protocol::ProtocolChoice,
     /// Durability: WAL + checkpoints + crash recovery (None = in-memory
     /// only, the pre-persist behaviour).
     pub persist: Option<PersistConfig>,
@@ -261,6 +265,7 @@ impl Default for ServiceConfig {
             queue_capacity: 1024,
             backpressure: BackpressurePolicy::Block,
             banked: true,
+            protocol: crate::coordinator::protocol::ProtocolChoice::Auto,
             persist: None,
             streams: Vec::new(),
         }
@@ -300,6 +305,11 @@ impl ServiceConfig {
         }
         if let Some(v) = doc.get_path("service.banked") {
             cfg.banked = v.as_bool().ok_or("service.banked must be a boolean")?;
+        }
+        if let Some(v) = doc.get_path("service.protocol") {
+            cfg.protocol = crate::coordinator::protocol::ProtocolChoice::parse(
+                v.as_str().ok_or("service.protocol must be a string")?,
+            )?;
         }
         if let Some(v) = doc.get_path("persist.dir") {
             let mut p = PersistConfig {
@@ -446,6 +456,7 @@ addr = "127.0.0.1:9000"
 shards = 2
 queue_capacity = 64
 backpressure = "drop"
+protocol = "v2"
 
 [[stream]]
 name = "w"
@@ -461,8 +472,18 @@ averager = "gea(c=0.25)"
         assert_eq!(cfg.addr, "127.0.0.1:9000");
         assert_eq!(cfg.shards, 2);
         assert_eq!(cfg.backpressure, BackpressurePolicy::DropNewest);
+        assert_eq!(
+            cfg.protocol,
+            crate::coordinator::protocol::ProtocolChoice::V2
+        );
         assert_eq!(cfg.streams.len(), 2);
         assert_eq!(cfg.streams[0].name, "w");
+        // Default is negotiated (v2-preferring) auto.
+        assert_eq!(
+            ServiceConfig::default().protocol,
+            crate::coordinator::protocol::ProtocolChoice::Auto
+        );
+        assert!(ServiceConfig::from_toml_text("[service]\nprotocol = \"v9\"").is_err());
     }
 
     #[test]

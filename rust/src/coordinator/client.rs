@@ -1,202 +1,668 @@
 //! Client library for the coordinator TCP service.
+//!
+//! [`Client::connect`] negotiates protocol v2 (binary, handle-
+//! addressed) and transparently falls back to v1 JSON when the server
+//! commits to it; [`Client::connect_with`] pins a generation —
+//! [`ProtocolChoice::V1`] is required against pre-v2 servers, which
+//! drop the connection on a binary hello.
+//!
+//! Stream-addressed methods keep their name-based signatures: under v2
+//! the client resolves each name to its `u64` handle once (`register`
+//! primes the cache; `resolve` fills misses) and addresses the stream
+//! by handle from then on. [`Client::push_many_pipelined`] ships
+//! batches back-to-back in windows of [`PIPELINE_WINDOW`] requests in
+//! flight — round-trip latency is paid per window, not per batch — and
+//! [`Client::multi_push`] packs batches for many streams into ONE v2
+//! frame (on a v1 connection it degrades to sequential `push_many`
+//! round-trips). Both hot paths encode straight from the caller's
+//! slices; no intermediate owned copy.
 
 use super::core::Snapshot;
-use super::protocol::{read_frame, write_frame, Request, PROTOCOL_VERSION};
-use crate::persist::codec;
+use super::protocol::{
+    self, wire, MultiOutcome, OpKind, ProtocolChoice, Request, Response, StreamInfo, StreamRef,
+    Wire,
+};
 use crate::util::json::Json;
+use crate::util::pool::PooledBuf;
+use std::collections::HashMap;
 use std::net::TcpStream;
 use std::time::Duration;
 
-/// Synchronous client over one TCP connection (request/response).
+/// Typed client failure: what broke decides how to react.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClientError {
+    /// Transport failure (connect, send, receive, closed socket). The
+    /// connection is unusable; reconnect.
+    Io(String),
+    /// The server processed the request and answered with a structured
+    /// error frame. The connection is fine; the request was wrong.
+    Server(String),
+    /// Codec violation: handshake failure, version mismatch, a frame
+    /// that does not decode, or a response that answers the wrong op.
+    Protocol(String),
+}
+
+impl ClientError {
+    fn msg(&self) -> &str {
+        match self {
+            ClientError::Io(m) | ClientError::Server(m) | ClientError::Protocol(m) => m,
+        }
+    }
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.msg())
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<ClientError> for String {
+    fn from(e: ClientError) -> String {
+        e.to_string()
+    }
+}
+
+fn unexpected(resp: &Response) -> ClientError {
+    ClientError::Protocol(format!("unexpected response variant: {resp:?}"))
+}
+
+/// Classify a send failure: the frame layer refuses oversized frames
+/// with `InvalidData` BEFORE writing anything — the connection is
+/// fine and the request was wrong ([`ClientError::Protocol`]), not a
+/// transport failure that warrants a reconnect.
+fn send_error(e: std::io::Error) -> ClientError {
+    if e.kind() == std::io::ErrorKind::InvalidData {
+        ClientError::Protocol(format!("send: {e}"))
+    } else {
+        ClientError::Io(format!("send: {e}"))
+    }
+}
+
+/// Most requests in flight per connection during a pipelined train.
+/// Acks are ~30 bytes, so a full window holds well under 8 KiB of
+/// unread responses — far below any socket buffer — while still
+/// amortizing the round-trip latency hundreds of times over.
+pub const PIPELINE_WINDOW: usize = 256;
+
+/// Synchronous client over one TCP connection. One request/response
+/// per call by default; the pipelined APIs put many requests in flight.
 pub struct Client {
     stream: TcpStream,
+    wire: Wire,
+    next_seq: u64,
+    /// Name → handle cache (v2). Handles outlive the connection (they
+    /// die only on unregister, and are never recycled).
+    handles: HashMap<String, u64>,
+    /// Reused encode/read scratch: steady-state requests allocate only
+    /// what the payload itself needs.
+    buf: Vec<u8>,
 }
 
 impl Client {
-    /// Connect to a server address.
-    pub fn connect(addr: &str) -> Result<Client, String> {
-        let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    /// Connect and negotiate ([`ProtocolChoice::Auto`]: v2 preferred,
+    /// v1 accepted if that is all the server will speak).
+    pub fn connect(addr: &str) -> Result<Client, ClientError> {
+        Client::connect_with(addr, ProtocolChoice::Auto)
+    }
+
+    /// Connect with an explicit protocol policy.
+    pub fn connect_with(addr: &str, choice: ProtocolChoice) -> Result<Client, ClientError> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| ClientError::Io(format!("connect {addr}: {e}")))?;
         stream
             .set_nodelay(true)
-            .map_err(|e| format!("nodelay: {e}"))?;
-        Ok(Client { stream })
+            .map_err(|e| ClientError::Io(format!("nodelay: {e}")))?;
+        let mut c = Client {
+            stream,
+            wire: Wire::V1Json,
+            next_seq: 1,
+            handles: HashMap::new(),
+            buf: Vec::new(),
+        };
+        if choice == ProtocolChoice::V1 {
+            return Ok(c); // legacy mode: no hello (pre-v2 servers drop on one)
+        }
+        wire::write_frame_bytes(&mut c.stream, &protocol::hello_frame(protocol::WIRE_V2))
+            .map_err(|e| ClientError::Io(format!("send hello: {e}")))?;
+        match wire::read_frame_into(&mut c.stream, &mut c.buf) {
+            Ok(Some(())) => {}
+            Ok(None) => {
+                return Err(ClientError::Protocol(
+                    "server closed the connection during the hello handshake — a pre-v2 \
+                     server? retry with protocol v1"
+                        .into(),
+                ))
+            }
+            Err(e) => {
+                return Err(ClientError::Io(format!(
+                    "no hello ack ({e}) — a pre-v2 server drops on a binary hello; retry \
+                     with protocol v1"
+                )))
+            }
+        }
+        let chosen = protocol::parse_hello(&c.buf)
+            .ok_or_else(|| ClientError::Protocol("malformed hello ack".into()))?;
+        c.wire = match chosen {
+            protocol::WIRE_V2 => Wire::V2Binary,
+            protocol::WIRE_V1 => {
+                if choice == ProtocolChoice::V2 {
+                    return Err(ClientError::Protocol(
+                        "server will only speak protocol v1, but v2 was required".into(),
+                    ));
+                }
+                Wire::V1Json
+            }
+            other => {
+                return Err(ClientError::Protocol(format!(
+                    "server committed to unknown protocol version {other}"
+                )))
+            }
+        };
+        Ok(c)
+    }
+
+    /// The negotiated protocol generation (1 or 2).
+    pub fn protocol_version(&self) -> u16 {
+        self.wire.version()
     }
 
     /// Set a read timeout (None = block forever).
-    pub fn set_timeout(&mut self, d: Option<Duration>) -> Result<(), String> {
-        self.stream.set_read_timeout(d).map_err(|e| e.to_string())
+    pub fn set_timeout(&mut self, d: Option<Duration>) -> Result<(), ClientError> {
+        self.stream
+            .set_read_timeout(d)
+            .map_err(|e| ClientError::Io(e.to_string()))
     }
 
-    fn roundtrip(&mut self, req: &Request) -> Result<Json, String> {
-        write_frame(&mut self.stream, &req.to_json()).map_err(|e| format!("send: {e}"))?;
-        let resp = read_frame(&mut self.stream)
-            .map_err(|e| format!("recv: {e}"))?
-            .ok_or("server closed connection")?;
-        // Version gate mirrors the server's: an explicit mismatch is an
-        // error, a missing field is a pre-versioning server.
-        if let Some(v) = resp.get("v").and_then(Json::as_u64) {
-            if v != PROTOCOL_VERSION {
-                return Err(format!(
-                    "server speaks protocol version {v}, this client speaks {PROTOCOL_VERSION}"
-                ));
+    /// Encode and send `req`; returns the (seq, op) bookkeeping the
+    /// response collector needs. Does NOT wait for the response.
+    fn send_request(&mut self, req: &Request) -> Result<(u64, OpKind), ClientError> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        protocol::encode_request(self.wire, seq, req, &mut self.buf)
+            .map_err(ClientError::Protocol)?;
+        wire::write_frame_bytes(&mut self.stream, &self.buf).map_err(send_error)?;
+        Ok((seq, req.kind()))
+    }
+
+    /// Receive ONE response frame for an op of the given kind, whatever
+    /// request it answers; returns `(seq, response)` with error frames
+    /// still inline (the pipelined collectors match seqs themselves).
+    fn recv_any(&mut self, kind: OpKind) -> Result<(u64, Response), ClientError> {
+        // Trim before reuse: one outsized frame (a 64 MiB state
+        // transfer) must not pin its capacity for the client lifetime.
+        wire::trim_buf(&mut self.buf);
+        match wire::read_frame_into(&mut self.stream, &mut self.buf) {
+            Ok(Some(())) => {}
+            Ok(None) => return Err(ClientError::Io("server closed connection".into())),
+            Err(e) => return Err(ClientError::Io(format!("recv: {e}"))),
+        }
+        protocol::decode_response(self.wire, kind, &self.buf).map_err(ClientError::Protocol)
+    }
+
+    /// Receive the response for `seq` (single-request-in-flight path).
+    fn recv_response(&mut self, seq: u64, kind: OpKind) -> Result<Response, ClientError> {
+        let (got, resp) = self.recv_any(kind)?;
+        if self.wire == Wire::V2Binary && got != seq {
+            return Err(ClientError::Protocol(format!(
+                "response for request {got} arrived while waiting for {seq}"
+            )));
+        }
+        match resp {
+            Response::Err(e) => Err(ClientError::Server(e)),
+            ok => Ok(ok),
+        }
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<Response, ClientError> {
+        let (seq, kind) = self.send_request(req)?;
+        self.recv_response(seq, kind)
+    }
+
+    /// The stream ref hot ops should use: the bare name under v1, the
+    /// cached (or freshly resolved) handle under v2.
+    fn ref_for(&mut self, stream: &str) -> Result<StreamRef, ClientError> {
+        match self.wire {
+            Wire::V1Json => Ok(StreamRef::Name(stream.to_string())),
+            Wire::V2Binary => {
+                if let Some(&h) = self.handles.get(stream) {
+                    return Ok(StreamRef::Handle(h));
+                }
+                let resp = self.roundtrip(&Request::Resolve {
+                    stream: stream.to_string(),
+                })?;
+                let Response::Resolved { handle, .. } = resp else {
+                    return Err(unexpected(&resp));
+                };
+                self.handles.insert(stream.to_string(), handle);
+                Ok(StreamRef::Handle(handle))
             }
         }
-        match resp.get("ok").and_then(Json::as_bool) {
-            Some(true) => Ok(resp),
-            Some(false) => Err(resp
-                .get("error")
-                .and_then(Json::as_str)
-                .unwrap_or("unknown server error")
-                .to_string()),
-            None => Err("malformed response (no 'ok')".into()),
+    }
+
+    /// Whether `err` means the cached handle for `stream` went stale
+    /// (the stream was unregistered — and possibly re-registered under
+    /// a fresh handle — server-side). Drops the cache entry so the next
+    /// attempt re-resolves.
+    fn is_stale_handle(&mut self, stream: &str, err: &ClientError) -> bool {
+        if self.wire != Wire::V2Binary {
+            return false;
         }
+        match err {
+            ClientError::Server(msg) => {
+                msg.contains(protocol::STALE_HANDLE_MARKER)
+                    && self.handles.remove(stream).is_some()
+            }
+            _ => false,
+        }
+    }
+
+    /// Run one stream-addressed round-trip with stale-handle recovery:
+    /// if the server reports the cached handle dead, re-resolve the
+    /// name once and retry — a server-side unregister + re-register
+    /// must not wedge every name-addressed op on this client forever.
+    fn stream_roundtrip(
+        &mut self,
+        stream: &str,
+        build: impl Fn(StreamRef) -> Request,
+    ) -> Result<Response, ClientError> {
+        let sref = self.ref_for(stream)?;
+        let first = self.roundtrip(&build(sref));
+        if let Err(e) = &first {
+            if self.is_stale_handle(stream, e) {
+                let sref = self.ref_for(stream)?;
+                return self.roundtrip(&build(sref));
+            }
+        }
+        first
+    }
+
+    /// Encode and send one `push_many` straight from the borrowed
+    /// sample slice (no owned `Request` intermediate — the hot path
+    /// pays exactly one copy, into the wire buffer).
+    fn send_push_many(
+        &mut self,
+        stream: &str,
+        count: usize,
+        samples: &[f64],
+    ) -> Result<(u64, OpKind), ClientError> {
+        let sref = self.ref_for(stream)?;
+        self.send_push_many_ref(&sref, count, samples)
+    }
+
+    /// As [`Client::send_push_many`] with a pre-resolved ref — the
+    /// pipelined train uses this so a cache purge mid-train can never
+    /// trigger a blocking resolve round-trip while push responses are
+    /// still in flight (which would desynchronize the connection).
+    fn send_push_many_ref(
+        &mut self,
+        sref: &StreamRef,
+        count: usize,
+        samples: &[f64],
+    ) -> Result<(u64, OpKind), ClientError> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        match sref {
+            StreamRef::Handle(handle) => {
+                protocol::v2::encode_push_many(seq, *handle, count, samples, &mut self.buf)
+                    .map_err(ClientError::Protocol)?;
+            }
+            StreamRef::Name(name) => {
+                let json = protocol::v1::push_many_to_json(name, count, samples);
+                self.buf.clear();
+                self.buf.extend_from_slice(json.encode().as_bytes());
+            }
+        }
+        wire::write_frame_bytes(&mut self.stream, &self.buf).map_err(send_error)?;
+        Ok((seq, OpKind::PushMany))
     }
 
     /// Liveness check.
-    pub fn ping(&mut self) -> Result<(), String> {
+    pub fn ping(&mut self) -> Result<(), ClientError> {
         self.roundtrip(&Request::Ping).map(|_| ())
     }
 
-    /// Register a stream with an averager spec string (`"gea(c=0.5)"`…).
-    pub fn register(&mut self, stream: &str, dim: usize, spec: &str) -> Result<(), String> {
-        self.roundtrip(&Request::Register {
+    /// Register a stream with an averager spec string (`"gea(c=0.5)"`…);
+    /// returns the stream's wire handle (0 from a pre-handle v1 server).
+    pub fn register(&mut self, stream: &str, dim: usize, spec: &str) -> Result<u64, ClientError> {
+        let resp = self.roundtrip(&Request::Register {
             stream: stream.to_string(),
             dim,
             spec: spec.to_string(),
-        })
-        .map(|_| ())
+        })?;
+        let Response::Registered { handle } = resp else {
+            return Err(unexpected(&resp));
+        };
+        if handle != 0 {
+            self.handles.insert(stream.to_string(), handle);
+        }
+        Ok(handle)
+    }
+
+    /// Name → handle lookup. Always asks the server and REFRESHES the
+    /// cache — this is the explicit recovery call when a cached handle
+    /// may have gone stale; hot ops resolve lazily through the cache.
+    /// On v1 connections a current server reports the stream's real
+    /// handle over JSON (handles just are not used to address v1 ops);
+    /// a genuinely pre-v2 server rejects the op with "unknown op".
+    pub fn resolve(&mut self, stream: &str) -> Result<u64, ClientError> {
+        let resp = self.roundtrip(&Request::Resolve {
+            stream: stream.to_string(),
+        })?;
+        match resp {
+            Response::Resolved { handle, .. } => {
+                if handle != 0 {
+                    self.handles.insert(stream.to_string(), handle);
+                }
+                Ok(handle)
+            }
+            other => Err(unexpected(&other)),
+        }
     }
 
     /// Push one sample; returns whether it was accepted (vs dropped).
-    pub fn push(&mut self, stream: &str, data: &[f64]) -> Result<bool, String> {
-        let resp = self.roundtrip(&Request::Push {
-            stream: stream.to_string(),
+    pub fn push(&mut self, stream: &str, data: &[f64]) -> Result<bool, ClientError> {
+        let resp = self.stream_roundtrip(stream, |sref| Request::Push {
+            stream: sref,
             data: data.to_vec(),
         })?;
-        Ok(resp
-            .get("accepted")
-            .and_then(Json::as_bool)
-            .unwrap_or(false))
+        match resp {
+            Response::Pushed { accepted } => Ok(accepted),
+            other => Err(unexpected(&other)),
+        }
     }
 
     /// Push a batch of samples in one round-trip; `samples` is a flat
-    /// buffer of `count` consecutive d-dim vectors. Returns (accepted,
+    /// buffer of `count` consecutive d-dim vectors, encoded straight
+    /// from this slice (no intermediate copy). Returns (accepted,
     /// dropped) counts.
     pub fn push_many(
         &mut self,
         stream: &str,
         count: usize,
         samples: &[f64],
-    ) -> Result<(u64, u64), String> {
-        let resp = self.roundtrip(&Request::PushMany {
-            stream: stream.to_string(),
-            count,
-            data: samples.to_vec(),
-        })?;
-        Ok((
-            resp.get("accepted").and_then(Json::as_u64).unwrap_or(0),
-            resp.get("dropped").and_then(Json::as_u64).unwrap_or(0),
-        ))
+    ) -> Result<(u64, u64), ClientError> {
+        let mut retried = false;
+        loop {
+            let (seq, kind) = self.send_push_many(stream, count, samples)?;
+            match self.recv_response(seq, kind) {
+                Ok(Response::PushedMany { accepted, dropped }) => return Ok((accepted, dropped)),
+                Ok(other) => return Err(unexpected(&other)),
+                Err(e) => {
+                    if !retried && self.is_stale_handle(stream, &e) {
+                        retried = true;
+                        continue;
+                    }
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    /// Pipelined batch ingest: ship `(stream, count, samples)` batches
+    /// back-to-back WITHOUT waiting on each ack — round-trip latency is
+    /// paid once per window, not once per batch. Under v2 responses are
+    /// matched by sequence id (the server may answer out of order);
+    /// under v1 they arrive strictly in request order. Returns
+    /// per-batch `(accepted, dropped)` in input order; per-batch server
+    /// errors abort with the first one AFTER all in-flight responses
+    /// are drained, so the connection stays usable.
+    ///
+    /// At most [`PIPELINE_WINDOW`] requests are in flight at once: the
+    /// server answers each frame as it reads it, so an unbounded train
+    /// would eventually fill both sockets' buffers with unread acks and
+    /// deadlock writer against writer.
+    pub fn push_many_pipelined(
+        &mut self,
+        batches: &[(&str, usize, &[f64])],
+    ) -> Result<Vec<(u64, u64)>, ClientError> {
+        // Resolve every ref up front and send from THOSE for the whole
+        // train: cache misses cost their own round-trips, and a
+        // stale-handle purge in an earlier window must not make a later
+        // window consult the cache and issue a resolve round-trip while
+        // push responses are still in flight.
+        let mut refs = Vec::with_capacity(batches.len());
+        for (stream, _, _) in batches {
+            refs.push(self.ref_for(stream)?);
+        }
+        let mut out = vec![(0u64, 0u64); batches.len()];
+        let mut first_err: Option<ClientError> = None;
+        for (window_idx, window) in batches.chunks(PIPELINE_WINDOW).enumerate() {
+            let base = window_idx * PIPELINE_WINDOW;
+            let mut pending: Vec<u64> = Vec::with_capacity(window.len());
+            for (i, (_, count, samples)) in window.iter().enumerate() {
+                let (seq, _) = self.send_push_many_ref(&refs[base + i], *count, samples)?;
+                pending.push(seq);
+            }
+            let index: HashMap<u64, usize> = pending
+                .iter()
+                .enumerate()
+                .map(|(i, seq)| (*seq, base + i))
+                .collect();
+            for i in 0..pending.len() {
+                let (seq, resp) = self.recv_any(OpKind::PushMany)?;
+                // v1 frames carry no seq: responses are positional.
+                let at = if self.wire == Wire::V1Json {
+                    base + i
+                } else {
+                    match index.get(&seq) {
+                        Some(&at) => at,
+                        None => {
+                            return Err(ClientError::Protocol(format!(
+                                "response for unknown request {seq} in pipelined batch"
+                            )))
+                        }
+                    }
+                };
+                match resp {
+                    Response::PushedMany { accepted, dropped } => out[at] = (accepted, dropped),
+                    Response::Err(e) => {
+                        let err = ClientError::Server(e);
+                        // Purge a stale cached handle so the NEXT call
+                        // self-heals (this one still reports the error).
+                        let _ = self.is_stale_handle(batches[at].0, &err);
+                        first_err.get_or_insert(err);
+                    }
+                    other => {
+                        first_err.get_or_insert(unexpected(&other));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+
+    /// Fan-in push: batches for many streams in ONE frame (v2). Under
+    /// v1 this degrades to one `push_many` round-trip per batch, so the
+    /// call works against any peer with the same per-entry semantics —
+    /// a bad entry (unknown stream, shape mismatch) is `Rejected` while
+    /// its siblings still apply; only the syscall count differs.
+    /// Returns per-batch outcomes in input order. Stale cached handles
+    /// come back `Rejected` AND are purged from the cache, so the next
+    /// call re-resolves.
+    pub fn multi_push(
+        &mut self,
+        batches: &[(&str, usize, &[f64])],
+    ) -> Result<Vec<MultiOutcome>, ClientError> {
+        if self.wire == Wire::V1Json {
+            let mut out = Vec::with_capacity(batches.len());
+            for (stream, count, samples) in batches {
+                match self.push_many(stream, *count, samples) {
+                    Ok((accepted, _)) if accepted > 0 => out.push(MultiOutcome::Accepted),
+                    Ok(_) => out.push(MultiOutcome::Dropped),
+                    Err(ClientError::Server(e)) => out.push(MultiOutcome::Rejected(e)),
+                    Err(e) => return Err(e),
+                }
+            }
+            return Ok(out);
+        }
+        // Resolve entries individually: an unknown NAME becomes that
+        // entry's Rejected outcome (matching the v1 degradation), not a
+        // whole-call abort. Transport/protocol failures still abort.
+        let mut out: Vec<Option<MultiOutcome>> = vec![None; batches.len()];
+        let mut wire_entries: Vec<(u64, usize, &[f64])> = Vec::with_capacity(batches.len());
+        let mut wire_pos: Vec<usize> = Vec::with_capacity(batches.len());
+        for (i, (stream, count, samples)) in batches.iter().enumerate() {
+            match self.ref_for(stream) {
+                Ok(StreamRef::Handle(handle)) => {
+                    wire_entries.push((handle, *count, *samples));
+                    wire_pos.push(i);
+                }
+                Ok(StreamRef::Name(_)) => unreachable!("v2 refs are handles"),
+                Err(ClientError::Server(e)) => out[i] = Some(MultiOutcome::Rejected(e)),
+                Err(e) => return Err(e),
+            }
+        }
+        if !wire_entries.is_empty() {
+            // Borrowed fast path: the frame is built straight from the
+            // caller's slices.
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            protocol::v2::encode_multi_push(seq, &wire_entries, &mut self.buf)
+                .map_err(ClientError::Protocol)?;
+            wire::write_frame_bytes(&mut self.stream, &self.buf).map_err(send_error)?;
+            match self.recv_response(seq, OpKind::MultiPush)? {
+                Response::MultiPushed { outcomes } => {
+                    // One outcome per sent entry, in order; a skewed
+                    // server must surface as a protocol error, not as
+                    // silently misattributed per-stream outcomes.
+                    if outcomes.len() != wire_entries.len() {
+                        return Err(ClientError::Protocol(format!(
+                            "multi_push returned {} outcomes for {} entries",
+                            outcomes.len(),
+                            wire_entries.len()
+                        )));
+                    }
+                    for (&pos, outcome) in wire_pos.iter().zip(outcomes) {
+                        if let MultiOutcome::Rejected(msg) = &outcome {
+                            if msg.contains(protocol::STALE_HANDLE_MARKER) {
+                                self.handles.remove(batches[pos].0);
+                            }
+                        }
+                        out[pos] = Some(outcome);
+                    }
+                }
+                other => return Err(unexpected(&other)),
+            }
+        }
+        Ok(out
+            .into_iter()
+            .map(|o| o.expect("every entry resolved or rejected"))
+            .collect())
     }
 
     /// Fetch the current estimate.
-    pub fn snapshot(&mut self, stream: &str) -> Result<Snapshot, String> {
-        let resp = self.roundtrip(&Request::Snapshot {
-            stream: stream.to_string(),
-        })?;
-        let value = match resp.get("value") {
-            Some(Json::Null) | None => None,
-            Some(v) => Some(
-                v.as_arr()
-                    .ok_or("snapshot value must be an array")?
-                    .iter()
-                    .map(|x| x.as_f64().ok_or("snapshot values must be numbers"))
-                    .collect::<Result<Vec<_>, _>>()
-                    .map_err(String::from)?,
-            ),
-        };
-        Ok(Snapshot {
-            stream: stream.into(),
-            t: resp.get("t").and_then(Json::as_u64).unwrap_or(0),
-            window_len: resp
-                .get("window_len")
-                .and_then(Json::as_f64)
-                .unwrap_or(0.0),
-            dropped: resp.get("dropped").and_then(Json::as_u64).unwrap_or(0),
-            value: value.map(crate::util::pool::PooledBuf::unpooled),
-        })
+    pub fn snapshot(&mut self, stream: &str) -> Result<Snapshot, ClientError> {
+        let resp = self.stream_roundtrip(stream, |sref| Request::Snapshot { stream: sref })?;
+        match resp {
+            Response::Snap {
+                t,
+                window_len,
+                dropped,
+                value,
+                ..
+            } => Ok(Snapshot {
+                stream: stream.into(),
+                t,
+                window_len,
+                dropped,
+                value: value.map(PooledBuf::unpooled),
+            }),
+            other => Err(unexpected(&other)),
+        }
     }
 
     /// Barrier: all prior pushes applied.
-    pub fn sync(&mut self) -> Result<(), String> {
-        self.roundtrip(&Request::Sync).map(|_| ())
+    pub fn sync(&mut self) -> Result<(), ClientError> {
+        match self.roundtrip(&Request::Sync)? {
+            Response::Synced => Ok(()),
+            other => Err(unexpected(&other)),
+        }
     }
 
-    /// Server metrics JSON.
-    pub fn metrics(&mut self) -> Result<Json, String> {
-        self.roundtrip(&Request::Metrics)
+    /// Server metrics document (registry export + per-stream stats).
+    pub fn metrics(&mut self) -> Result<Json, ClientError> {
+        match self.roundtrip(&Request::Metrics)? {
+            Response::Metrics { body } => Ok(body),
+            other => Err(unexpected(&other)),
+        }
     }
 
     /// Ask the server to checkpoint (requires `[persist]` server-side);
     /// returns `(snapshot path, streams captured)`.
-    pub fn checkpoint(&mut self) -> Result<(String, u64), String> {
-        let resp = self.roundtrip(&Request::Checkpoint)?;
-        Ok((
-            resp.get("path")
-                .and_then(Json::as_str)
-                .unwrap_or_default()
-                .to_string(),
-            resp.get("streams").and_then(Json::as_u64).unwrap_or(0),
-        ))
+    pub fn checkpoint(&mut self) -> Result<(String, u64), ClientError> {
+        match self.roundtrip(&Request::Checkpoint)? {
+            Response::Checkpointed { path, streams, .. } => Ok((path, streams)),
+            other => Err(unexpected(&other)),
+        }
     }
 
     /// Fetch one stream's full estimator state as a framed binary
     /// payload (feed to [`Client::restore`] / [`Client::merge_state`]
     /// on any coordinator — e.g. rolling shard partials up to an
-    /// aggregator node).
-    pub fn export_state(&mut self, stream: &str) -> Result<Vec<u8>, String> {
-        let resp = self.roundtrip(&Request::ExportState {
-            stream: stream.to_string(),
-        })?;
-        let hex = resp
-            .get("state")
-            .and_then(Json::as_str)
-            .ok_or("export_state response missing 'state'")?;
-        codec::from_hex(hex)
+    /// aggregator node). Raw bytes on the v2 wire; hex only under v1.
+    pub fn export_state(&mut self, stream: &str) -> Result<Vec<u8>, ClientError> {
+        match self.stream_roundtrip(stream, |sref| Request::ExportState { stream: sref })? {
+            Response::State { state, .. } => Ok(state),
+            other => Err(unexpected(&other)),
+        }
     }
 
     /// Replace a stream's state from an exported payload; returns the
     /// restored stream position `t`.
-    pub fn restore(&mut self, stream: &str, state: &[u8]) -> Result<u64, String> {
-        let resp = self.roundtrip(&Request::Restore {
-            stream: stream.to_string(),
-            state: codec::to_hex(state),
-        })?;
-        Ok(resp.get("t").and_then(Json::as_u64).unwrap_or(0))
+    pub fn restore(&mut self, stream: &str, state: &[u8]) -> Result<u64, ClientError> {
+        match self.stream_roundtrip(stream, |sref| Request::Restore {
+            stream: sref,
+            state: state.to_vec(),
+        })? {
+            Response::Restored { t } => Ok(t),
+            other => Err(unexpected(&other)),
+        }
     }
 
     /// Merge an exported payload into a stream's live state; returns
     /// the merged stream position `t`.
-    pub fn merge_state(&mut self, stream: &str, state: &[u8]) -> Result<u64, String> {
-        let resp = self.roundtrip(&Request::MergeState {
-            stream: stream.to_string(),
-            state: codec::to_hex(state),
-        })?;
-        Ok(resp.get("t").and_then(Json::as_u64).unwrap_or(0))
+    pub fn merge_state(&mut self, stream: &str, state: &[u8]) -> Result<u64, ClientError> {
+        match self.stream_roundtrip(stream, |sref| Request::MergeState {
+            stream: sref,
+            state: state.to_vec(),
+        })? {
+            Response::Merged { t } => Ok(t),
+            other => Err(unexpected(&other)),
+        }
     }
 
-    /// Registered stream names.
-    pub fn list_streams(&mut self) -> Result<Vec<String>, String> {
-        let resp = self.roundtrip(&Request::ListStreams)?;
-        Ok(resp
-            .get("streams")
-            .and_then(Json::as_arr)
-            .unwrap_or(&[])
-            .iter()
-            .filter_map(|s| s.as_str().map(String::from))
+    /// Registered stream names (sorted server-side).
+    pub fn list_streams(&mut self) -> Result<Vec<String>, ClientError> {
+        Ok(self
+            .list_streams_full()?
+            .into_iter()
+            .map(|s| s.name)
             .collect())
+    }
+
+    /// The full stream directory. Under v2 every row carries the
+    /// stream's handle and dim (and primes this client's handle cache
+    /// in one round-trip); v1 servers report names only.
+    pub fn list_streams_full(&mut self) -> Result<Vec<StreamInfo>, ClientError> {
+        match self.roundtrip(&Request::ListStreams)? {
+            Response::Streams { streams } => {
+                for s in &streams {
+                    if s.handle != 0 {
+                        self.handles.insert(s.name.clone(), s.handle);
+                    }
+                }
+                Ok(streams)
+            }
+            other => Err(unexpected(&other)),
+        }
     }
 }
 
-// Integration tests (server + client over localhost) live in
+// Integration tests (server + client over localhost, both protocol
+// generations and the cross-version matrix) live in
 // rust/tests/service_protocol.rs.

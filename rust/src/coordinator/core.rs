@@ -2,6 +2,7 @@
 //! banks, and wait-free anytime snapshots.
 
 use super::bank::{Bank, BankJob, RowPub};
+use super::protocol::{MultiOutcome, MultiPushEntry, STALE_HANDLE_MARKER};
 use super::stream::StreamState;
 use crate::averagers::{banked, AveragerSpec};
 use crate::config::{BackpressurePolicy, PersistConfig, ServiceConfig};
@@ -95,6 +96,13 @@ enum Backing {
 struct StreamSlot {
     /// Interned name, shared with every snapshot taken of this stream.
     name: Arc<str>,
+    /// The `u64` wire handle `register` returned — protocol v2's hot
+    /// ops address the stream by it, skipping the name map entirely.
+    /// Never recycled within a coordinator, and the counter is
+    /// time-seeded per incarnation ([`initial_handle`]), so a stale
+    /// handle — after unregister OR across a crash-recovery restart —
+    /// errors instead of hitting a different stream.
+    handle: u64,
     /// Declared dimensionality — immutable after registration, read on
     /// every push without touching any state lock.
     dim: usize,
@@ -110,6 +118,15 @@ struct StreamSlot {
 struct Shard {
     sender: SyncSender<ShardMsg>,
     handle: Option<thread::JoinHandle<()>>,
+}
+
+/// The stream registry: one map per addressing mode, always mutated
+/// together under the same write guard. `by_handle` is what protocol
+/// v2's hot ops hit — a u64 key lookup, no string hashing.
+#[derive(Default)]
+struct StreamMap {
+    by_name: HashMap<String, Arc<StreamSlot>>,
+    by_handle: HashMap<u64, Arc<StreamSlot>>,
 }
 
 /// Coordinator-side durability state ([`PersistConfig`] resolved).
@@ -186,7 +203,11 @@ struct ShardInstruments {
 /// touched rows through the epoch-flip protocol in `super::bank` so
 /// [`Coordinator::snapshot`] never waits on a writer lock.
 pub struct Coordinator {
-    streams: RwLock<HashMap<String, Arc<StreamSlot>>>,
+    streams: RwLock<StreamMap>,
+    /// Next wire handle to hand out (time-seeded per incarnation, see
+    /// [`initial_handle`]; 0 is never a valid handle, so clients can
+    /// use it as an "unknown" sentinel).
+    next_handle: AtomicU64,
     /// Planar banks keyed by `(spec label, dim, shard)`; cold path
     /// (register only), so a plain mutex. Banks are striped per shard so
     /// each is drained by exactly ONE worker — bank applies never
@@ -210,6 +231,8 @@ pub struct Coordinator {
     pushes_dropped: Arc<Counter>,
     pushes_rejected: Arc<Counter>,
     snapshots_taken: Arc<Counter>,
+    /// Entries staged through the `multi_push` fan-in op.
+    multi_push_entries: Arc<Counter>,
     /// Distribution of samples-per-message on the ingest path.
     push_batch_size: Arc<Histogram>,
 }
@@ -302,7 +325,8 @@ impl Coordinator {
             });
         }
         Ok(Coordinator {
-            streams: RwLock::new(HashMap::new()),
+            streams: RwLock::new(StreamMap::default()),
+            next_handle: AtomicU64::new(initial_handle()),
             banks: Mutex::new(HashMap::new()),
             banking,
             shards: v,
@@ -312,6 +336,7 @@ impl Coordinator {
             pushes_dropped: metrics.counter("pushes_dropped"),
             pushes_rejected: metrics.counter("pushes_rejected"),
             snapshots_taken: metrics.counter("snapshots"),
+            multi_push_entries: metrics.counter(names::MULTI_PUSH_ENTRIES),
             push_batch_size: metrics.histogram("push_batch_size"),
             metrics,
             buffers: BufferPool::new(64),
@@ -344,8 +369,10 @@ impl Coordinator {
         Some(bank)
     }
 
-    /// Register a new stream. Errors on duplicates or invalid specs.
-    pub fn register(&self, name: &str, dim: usize, spec: AveragerSpec) -> Result<(), String> {
+    /// Register a new stream; returns its wire **handle** (the key
+    /// protocol v2's hot ops address it by). Errors on duplicates or
+    /// invalid specs.
+    pub fn register(&self, name: &str, dim: usize, spec: AveragerSpec) -> Result<u64, String> {
         if dim == 0 {
             return Err("dim must be >= 1".into());
         }
@@ -367,22 +394,25 @@ impl Coordinator {
                 state: Mutex::new(state),
             },
         };
+        let handle = self.next_handle.fetch_add(1, Ordering::Relaxed);
         let slot = Arc::new(StreamSlot {
             name: Arc::from(name),
+            handle,
             dim,
             spec: spec.clone(),
             dropped: AtomicU64::new(0),
             backing,
         });
         let mut map = self.streams.write().expect("streams lock");
-        if map.contains_key(name) {
+        if map.by_name.contains_key(name) {
             drop(map);
             if let Backing::Banked { bank, row, gen, .. } = &slot.backing {
                 bank.free_row(*row, *gen);
             }
             return Err(format!("stream '{name}' already registered"));
         }
-        map.insert(name.to_string(), Arc::clone(&slot));
+        map.by_name.insert(name.to_string(), Arc::clone(&slot));
+        map.by_handle.insert(handle, Arc::clone(&slot));
         // Durability: record the registration in the stream's shard WAL
         // while the registry write lock is held — a checkpoint holds the
         // read lock across collecting its stream list AND enqueueing its
@@ -396,7 +426,8 @@ impl Coordinator {
                 spec: spec.label(),
             });
             if sent.is_err() {
-                map.remove(name);
+                map.by_name.remove(name);
+                map.by_handle.remove(&handle);
                 drop(map);
                 if let Backing::Banked { bank, row, gen, .. } = &slot.backing {
                     bank.free_row(*row, *gen);
@@ -406,15 +437,18 @@ impl Coordinator {
         }
         drop(map);
         self.metrics.counter("streams_registered").inc();
-        Ok(())
+        Ok(handle)
     }
 
     /// Remove a stream. A banked stream's bank row is recycled through
-    /// the free list; messages still in flight for it become no-ops.
+    /// the free list; messages still in flight for it become no-ops,
+    /// and its handle goes permanently stale (handles are never
+    /// recycled).
     pub fn unregister(&self, name: &str) -> Result<(), String> {
         let mut map = self.streams.write().expect("streams lock");
-        match map.remove(name) {
+        match map.by_name.remove(name) {
             Some(slot) => {
+                map.by_handle.remove(&slot.handle);
                 // WAL record under the write lock (see `register`).
                 if self.persist.is_some() {
                     let shard = fnv1a(slot.name.as_bytes()) as usize % self.shards.len();
@@ -435,16 +469,45 @@ impl Coordinator {
     /// Registered stream names (sorted).
     pub fn stream_names(&self) -> Vec<String> {
         let map = self.streams.read().expect("streams lock");
-        let mut names: Vec<String> = map.keys().cloned().collect();
+        let mut names: Vec<String> = map.by_name.keys().cloned().collect();
         names.sort();
         names
     }
 
+    /// The full stream directory — `(name, handle, dim)` sorted by name
+    /// (the v2 `list` op, so clients can prime their handle caches in
+    /// one round-trip).
+    pub fn stream_directory(&self) -> Vec<(String, u64, usize)> {
+        let map = self.streams.read().expect("streams lock");
+        let mut out: Vec<(String, u64, usize)> = map
+            .by_name
+            .values()
+            .map(|s| (s.name.to_string(), s.handle, s.dim))
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// Name → `(handle, dim)` lookup (the v2 `resolve` op — the one
+    /// string lookup a well-behaved v2 client pays per stream).
+    pub fn resolve(&self, name: &str) -> Result<(u64, usize), String> {
+        let slot = self.slot(name)?;
+        Ok((slot.handle, slot.dim))
+    }
+
     fn slot(&self, name: &str) -> Result<Arc<StreamSlot>, String> {
         let map = self.streams.read().expect("streams lock");
-        map.get(name)
+        map.by_name
+            .get(name)
             .cloned()
             .ok_or_else(|| format!("no stream '{name}' (register it first)"))
+    }
+
+    fn slot_h(&self, handle: u64) -> Result<Arc<StreamSlot>, String> {
+        let map = self.streams.read().expect("streams lock");
+        map.by_handle.get(&handle).cloned().ok_or_else(|| {
+            format!("{STALE_HANDLE_MARKER} {handle} (stale after unregister, or never issued)")
+        })
     }
 
     /// Every stream pins to one shard by name hash (its ordering
@@ -460,16 +523,28 @@ impl Coordinator {
     /// `Dropped`, `Reject` returns an error.
     pub fn push(&self, name: &str, data: Vec<f64>) -> Result<PushOutcome, String> {
         let slot = self.slot(name)?;
+        self.push_slot(slot, data)
+    }
+
+    /// Handle-addressed [`Coordinator::push`] — the protocol v2 hot
+    /// path: one u64 map hit, no string hashing.
+    pub fn push_handle(&self, handle: u64, data: Vec<f64>) -> Result<PushOutcome, String> {
+        let slot = self.slot_h(handle)?;
+        self.push_slot(slot, data)
+    }
+
+    fn push_slot(&self, slot: Arc<StreamSlot>, data: Vec<f64>) -> Result<PushOutcome, String> {
         // Early shape validation (lock-free: dim is immutable) so callers
         // get an error even under DropNewest (the worker re-validates).
         if data.len() != slot.dim {
             return Err(format!(
-                "stream '{name}': sample has {} dims, stream declared {}",
+                "stream '{}': sample has {} dims, stream declared {}",
+                slot.name,
                 data.len(),
                 slot.dim
             ));
         }
-        self.enqueue(name, slot, 1, PooledBuf::unpooled(data))
+        self.enqueue(slot, 1, PooledBuf::unpooled(data))
     }
 
     /// Push `count` consecutive samples packed flat in `data` as ONE
@@ -480,9 +555,10 @@ impl Coordinator {
     /// or rejected as a unit; `count == 0` or a `data` length not
     /// divisible into `count` samples is a structured error.
     pub fn push_many(&self, name: &str, count: usize, data: &[f64]) -> Result<PushOutcome, String> {
-        let slot = self.batch_slot(name, count, data.len())?;
+        let slot = self.slot(name)?;
+        check_batch(&slot, count, data.len())?;
         let buf = self.buffers.take(data);
-        self.enqueue(name, slot, count, buf)
+        self.enqueue(slot, count, buf)
     }
 
     /// As [`Coordinator::push_many`], but takes ownership of an
@@ -496,36 +572,65 @@ impl Coordinator {
         count: usize,
         data: Vec<f64>,
     ) -> Result<PushOutcome, String> {
-        let slot = self.batch_slot(name, count, data.len())?;
-        self.enqueue(name, slot, count, PooledBuf::unpooled(data))
+        let slot = self.slot(name)?;
+        check_batch(&slot, count, data.len())?;
+        self.enqueue(slot, count, PooledBuf::unpooled(data))
     }
 
-    /// Shared batch validation: resolves the stream and checks that
-    /// `len` splits into exactly `count` samples of the stream's
-    /// declared dim. `checked_mul`: a hostile wire `count` must not
-    /// wrap into a spuriously matching length. dim is immutable per
-    /// slot, so the producer path takes no state lock.
-    fn batch_slot(
+    /// Handle-addressed [`Coordinator::push_many_owned`].
+    pub fn push_many_handle_owned(
         &self,
-        name: &str,
+        handle: u64,
         count: usize,
-        len: usize,
-    ) -> Result<Arc<StreamSlot>, String> {
-        let slot = self.slot(name)?;
-        let dim = slot.dim;
-        if count == 0 || count.checked_mul(dim) != Some(len) {
-            return Err(format!(
-                "stream '{name}': batch has {len} values for {count} samples, \
-                 stream declared {dim} dims"
-            ));
-        }
-        Ok(slot)
+        data: Vec<f64>,
+    ) -> Result<PushOutcome, String> {
+        let slot = self.slot_h(handle)?;
+        check_batch(&slot, count, data.len())?;
+        self.enqueue(slot, count, PooledBuf::unpooled(data))
+    }
+
+    /// Staged multi-stream push — the wire `multi_push` op. All entry
+    /// handles are resolved under ONE registry read guard (a fan-in
+    /// frame for 64 streams pays one lock acquisition, not 64), then
+    /// each batch is validated and enqueued independently: entries are
+    /// accepted, dropped, or rejected per stream, in frame order, and
+    /// one bad handle never rejects its siblings. Per-stream
+    /// application order is entry order, exactly as if each entry had
+    /// been its own `push_many`.
+    pub fn multi_push(&self, entries: Vec<MultiPushEntry>) -> Vec<MultiOutcome> {
+        self.multi_push_entries.add(entries.len() as u64);
+        let slots: Vec<Option<Arc<StreamSlot>>> = {
+            let map = self.streams.read().expect("streams lock");
+            entries
+                .iter()
+                .map(|e| map.by_handle.get(&e.handle).cloned())
+                .collect()
+        };
+        entries
+            .into_iter()
+            .zip(slots)
+            .map(|(e, slot)| {
+                let Some(slot) = slot else {
+                    return MultiOutcome::Rejected(format!(
+                        "{STALE_HANDLE_MARKER} {} (stale after unregister, or never issued)",
+                        e.handle
+                    ));
+                };
+                if let Err(err) = check_batch(&slot, e.count, e.data.len()) {
+                    return MultiOutcome::Rejected(err);
+                }
+                match self.enqueue(slot, e.count, PooledBuf::unpooled(e.data)) {
+                    Ok(PushOutcome::Accepted) => MultiOutcome::Accepted,
+                    Ok(PushOutcome::Dropped) => MultiOutcome::Dropped,
+                    Err(err) => MultiOutcome::Rejected(err),
+                }
+            })
+            .collect()
     }
 
     /// Shared backpressure-aware enqueue of a (possibly batched) push.
     fn enqueue(
         &self,
-        name: &str,
         slot: Arc<StreamSlot>,
         count: usize,
         data: PooledBuf,
@@ -556,7 +661,7 @@ impl Coordinator {
                 Ok(()) => PushOutcome::Accepted,
                 Err(TrySendError::Full(_)) => {
                     self.pushes_rejected.add(count as u64);
-                    return Err(format!("stream '{name}': ingest queue full"));
+                    return Err(format!("stream '{}': ingest queue full", slot.name));
                 }
                 Err(TrySendError::Disconnected(_)) => return Err("shard down".into()),
             },
@@ -577,6 +682,16 @@ impl Coordinator {
     /// buffer recycled when the returned [`Snapshot`] drops.
     pub fn snapshot(&self, name: &str) -> Result<Snapshot, String> {
         let slot = self.slot(name)?;
+        self.snapshot_slot(&slot)
+    }
+
+    /// Handle-addressed [`Coordinator::snapshot`] (the v2 hot read).
+    pub fn snapshot_handle(&self, handle: u64) -> Result<Snapshot, String> {
+        let slot = self.slot_h(handle)?;
+        self.snapshot_slot(&slot)
+    }
+
+    fn snapshot_slot(&self, slot: &Arc<StreamSlot>) -> Result<Snapshot, String> {
         self.snapshots_taken.inc();
         let dropped = slot.dropped.load(Ordering::Relaxed);
         let mut buf = self.snap_buffers.take_len(slot.dim);
@@ -624,7 +739,7 @@ impl Coordinator {
     pub fn stream_stats(&self) -> Vec<(String, u64, u64, usize)> {
         let slots: Vec<Arc<StreamSlot>> = {
             let map = self.streams.read().expect("streams lock");
-            map.values().cloned().collect()
+            map.by_name.values().cloned().collect()
         };
         let mut out: Vec<(String, u64, u64, usize)> = slots
             .iter()
@@ -681,11 +796,11 @@ impl Coordinator {
             let map = self.streams.read().expect("streams lock");
             let mut by_shard: Vec<Vec<Arc<StreamSlot>>> =
                 (0..self.shards.len()).map(|_| Vec::new()).collect();
-            for slot in map.values() {
+            for slot in map.by_name.values() {
                 let shard = fnv1a(slot.name.as_bytes()) as usize % self.shards.len();
                 by_shard[shard].push(Arc::clone(slot));
             }
-            n_streams = map.len();
+            n_streams = map.by_name.len();
             for (shard, slots) in self.shards.iter().zip(by_shard) {
                 let (tx, rx) = sync_channel(1);
                 shard
@@ -801,7 +916,7 @@ impl Coordinator {
         for s in &cfg.streams {
             let exists = {
                 let map = c.streams.read().expect("streams lock");
-                map.contains_key(&s.name)
+                map.by_name.contains_key(&s.name)
             };
             if !exists {
                 c.register(&s.name, s.dim, s.spec.clone())?;
@@ -889,7 +1004,7 @@ impl Coordinator {
         match rec {
             wal::WalRecord::Register { stream, dim, spec } => {
                 match AveragerSpec::parse(&spec).and_then(|sp| self.register(&stream, dim, sp)) {
-                    Ok(()) => report.replayed_registers += 1,
+                    Ok(_handle) => report.replayed_registers += 1,
                     Err(e) => {
                         crate::log_debug!("persist", "replay register '{stream}': {e}");
                     }
@@ -903,7 +1018,10 @@ impl Coordinator {
                 count,
                 data,
             } => {
-                let slot = match self.batch_slot(&stream, count, data.len()) {
+                let slot = match self
+                    .slot(&stream)
+                    .and_then(|s| check_batch(&s, count, data.len()).map(|()| s))
+                {
                     Ok(s) => s,
                     Err(e) => {
                         crate::log_warn!("persist", "replay push to '{stream}' skipped: {e}");
@@ -937,6 +1055,17 @@ impl Coordinator {
     /// on any coordinator — same spec/dim, slot or banked backing).
     pub fn export_state(&self, name: &str) -> Result<Vec<u8>, String> {
         let slot = self.slot(name)?;
+        self.export_state_slot(&slot)
+    }
+
+    /// Handle-addressed [`Coordinator::export_state`]; also returns the
+    /// stream's name so wire responses can label the payload.
+    pub fn export_state_handle(&self, handle: u64) -> Result<(String, Vec<u8>), String> {
+        let slot = self.slot_h(handle)?;
+        Ok((slot.name.to_string(), self.export_state_slot(&slot)?))
+    }
+
+    fn export_state_slot(&self, slot: &Arc<StreamSlot>) -> Result<Vec<u8>, String> {
         let mut enc = Enc::new();
         match &slot.backing {
             Backing::Banked { bank, row, gen, .. } => bank.export_row(*row, *gen, &mut enc)?,
@@ -949,8 +1078,18 @@ impl Coordinator {
     /// produced by [`Coordinator::export_state`]. Returns the restored
     /// stream position `t`.
     pub fn restore_state(&self, name: &str, framed: &[u8]) -> Result<u64, String> {
-        let payload = codec::unframe_state(framed)?;
         let slot = self.slot(name)?;
+        self.restore_state_slot(&slot, framed)
+    }
+
+    /// Handle-addressed [`Coordinator::restore_state`].
+    pub fn restore_state_handle(&self, handle: u64, framed: &[u8]) -> Result<u64, String> {
+        let slot = self.slot_h(handle)?;
+        self.restore_state_slot(&slot, framed)
+    }
+
+    fn restore_state_slot(&self, slot: &Arc<StreamSlot>, framed: &[u8]) -> Result<u64, String> {
+        let payload = codec::unframe_state(framed)?;
         match &slot.backing {
             Backing::Banked { bank, row, gen, .. } => {
                 bank.import_row(*row, *gen, &mut Dec::new(payload))?
@@ -960,7 +1099,7 @@ impl Coordinator {
                 .expect("stream lock")
                 .import_state(&mut Dec::new(payload))?,
         }
-        Ok(self.snapshot(name)?.t)
+        Ok(self.snapshot_slot(slot)?.t)
     }
 
     /// Merge a framed payload into one stream's live state — the
@@ -969,8 +1108,18 @@ impl Coordinator {
     /// exp/gea/awa, precedence for windowed estimators). Returns the
     /// merged stream position `t`.
     pub fn merge_state(&self, name: &str, framed: &[u8]) -> Result<u64, String> {
-        let payload = codec::unframe_state(framed)?;
         let slot = self.slot(name)?;
+        self.merge_state_slot(&slot, framed)
+    }
+
+    /// Handle-addressed [`Coordinator::merge_state`].
+    pub fn merge_state_handle(&self, handle: u64, framed: &[u8]) -> Result<u64, String> {
+        let slot = self.slot_h(handle)?;
+        self.merge_state_slot(&slot, framed)
+    }
+
+    fn merge_state_slot(&self, slot: &Arc<StreamSlot>, framed: &[u8]) -> Result<u64, String> {
+        let payload = codec::unframe_state(framed)?;
         match &slot.backing {
             Backing::Banked { bank, row, gen, .. } => {
                 bank.merge_row(*row, *gen, &slot.spec, &mut Dec::new(payload))?
@@ -980,8 +1129,24 @@ impl Coordinator {
                 .expect("stream lock")
                 .merge_state(&mut Dec::new(payload))?,
         }
-        Ok(self.snapshot(name)?.t)
+        Ok(self.snapshot_slot(slot)?.t)
     }
+}
+
+/// Shared batch validation: `len` must split into exactly `count`
+/// samples of the stream's declared dim. `checked_mul`: a hostile wire
+/// `count` must not wrap into a spuriously matching length. dim is
+/// immutable per slot, so producer paths take no state lock.
+fn check_batch(slot: &StreamSlot, count: usize, len: usize) -> Result<(), String> {
+    let dim = slot.dim;
+    if count == 0 || count.checked_mul(dim) != Some(len) {
+        return Err(format!(
+            "stream '{}': batch has {len} values for {count} samples, \
+             stream declared {dim} dims",
+            slot.name
+        ));
+    }
+    Ok(())
 }
 
 impl Drop for Coordinator {
@@ -1208,6 +1373,32 @@ fn build_shard_section(
         enc.put_bytes(tmp.as_bytes());
     }
     Ok(enc.into_bytes())
+}
+
+/// First handle a coordinator incarnation hands out. Seeded from a
+/// SplitMix64 mix of wall-clock nanoseconds, the process id, and an
+/// in-process salt, so handle ranges from different incarnations land
+/// in distant regions of the u64 space: recovery re-registers streams
+/// in snapshot order, and a handle a peer cached from the PREVIOUS
+/// incarnation must come back as a structured stale-handle error —
+/// never silently address a different stream. (Raw nanoseconds alone
+/// would break on a backwards clock step; the pid covers clock resets
+/// across restarts, the salt covers same-process construction within
+/// one clock tick, and the mixer turns range overlap into a ~n/2^64
+/// probability event instead of a likely one.)
+fn initial_handle() -> u64 {
+    use crate::rng::{RngCore, SplitMix64};
+    static SALT: AtomicU64 = AtomicU64::new(0);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let seed = nanos
+        ^ ((std::process::id() as u64) << 32)
+        ^ (SALT.fetch_add(1, Ordering::Relaxed) << 56);
+    SplitMix64::new(seed)
+        .next_u64()
+        .max(1) // 0 stays reserved as the "unknown" sentinel
 }
 
 /// FNV-1a — tiny, stable stream→shard hash.
@@ -1482,5 +1673,135 @@ mod tests {
         let snap = c.snapshot("keep").unwrap();
         assert_eq!(snap.t, 1);
         assert_eq!(snap.value.unwrap()[0], 7.0);
+    }
+
+    #[test]
+    fn handles_address_streams_without_names() {
+        let c = Coordinator::new(2, 64, BackpressurePolicy::Block);
+        let h = c.register("w", 2, gea()).unwrap();
+        assert!(h > 0, "handle 0 is the 'unknown' sentinel");
+        assert_eq!(c.resolve("w").unwrap(), (h, 2));
+        assert_eq!(c.push_handle(h, vec![1.0, 2.0]).unwrap(), PushOutcome::Accepted);
+        assert_eq!(
+            c.push_many_handle_owned(h, 2, vec![3.0, 4.0, 5.0, 6.0]).unwrap(),
+            PushOutcome::Accepted
+        );
+        c.sync().unwrap();
+        let by_handle = c.snapshot_handle(h).unwrap();
+        let by_name = c.snapshot("w").unwrap();
+        assert_eq!(by_handle.t, 3);
+        assert_eq!(by_handle.t, by_name.t);
+        assert_eq!(by_handle.value.unwrap(), by_name.value.unwrap());
+        // Directory pairs names with handles.
+        assert_eq!(c.stream_directory(), vec![("w".to_string(), h, 2)]);
+        // Shape errors name the stream even on the handle path.
+        let err = c.push_handle(h, vec![1.0]).unwrap_err();
+        assert!(err.contains("'w'") && err.contains("dims"), "{err}");
+    }
+
+    #[test]
+    fn stale_handles_error_and_are_never_recycled() {
+        let c = Coordinator::new(1, 8, BackpressurePolicy::Block);
+        let h1 = c.register("a", 1, gea()).unwrap();
+        c.unregister("a").unwrap();
+        let err = c.push_handle(h1, vec![1.0]).unwrap_err();
+        assert!(err.contains("handle"), "{err}");
+        assert!(c.snapshot_handle(h1).is_err());
+        // Re-registering the same NAME mints a fresh handle; the stale
+        // one must not resurrect onto the new stream.
+        let h2 = c.register("a", 1, gea()).unwrap();
+        assert_ne!(h1, h2);
+        assert!(c.push_handle(h1, vec![1.0]).is_err());
+        assert_eq!(c.push_handle(h2, vec![1.0]).unwrap(), PushOutcome::Accepted);
+    }
+
+    #[test]
+    fn handles_are_unique_across_incarnations() {
+        // A handle cached against one coordinator incarnation must be a
+        // structured error on the next (e.g. after crash recovery) —
+        // never silently address whatever stream re-registered first.
+        let a = Coordinator::new(1, 8, BackpressurePolicy::Block);
+        let ha = a.register("w", 1, gea()).unwrap();
+        drop(a);
+        let b = Coordinator::new(1, 8, BackpressurePolicy::Block);
+        let hb = b.register("w", 1, gea()).unwrap();
+        assert_ne!(ha, hb);
+        let err = b.push_handle(ha, vec![1.0]).unwrap_err();
+        assert!(err.contains("handle"), "{err}");
+    }
+
+    #[test]
+    fn multi_push_matches_per_stream_push_many() {
+        use crate::coordinator::protocol::{MultiOutcome, MultiPushEntry};
+        let c = Coordinator::new(2, 64, BackpressurePolicy::Block);
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            handles.push(c.register(&format!("m{i}"), 2, gea()).unwrap());
+            c.register(&format!("r{i}"), 2, gea()).unwrap();
+        }
+        let batch = |i: usize| -> Vec<f64> {
+            (0..12).map(|k| ((i * 12 + k) as f64 * 0.31).sin()).collect()
+        };
+        let entries: Vec<MultiPushEntry> = (0..4)
+            .map(|i| MultiPushEntry {
+                handle: handles[i],
+                count: 6,
+                data: batch(i),
+            })
+            .collect();
+        let outcomes = c.multi_push(entries);
+        assert_eq!(outcomes, vec![MultiOutcome::Accepted; 4]);
+        for i in 0..4 {
+            c.push_many(&format!("r{i}"), 6, &batch(i)).unwrap();
+        }
+        c.sync().unwrap();
+        for i in 0..4 {
+            let a = c.snapshot(&format!("m{i}")).unwrap();
+            let b = c.snapshot(&format!("r{i}")).unwrap();
+            assert_eq!(a.t, 6);
+            assert_eq!(a.t, b.t);
+            let (va, vb) = (a.value.unwrap(), b.value.unwrap());
+            for d in 0..2 {
+                assert!((va[d] - vb[d]).abs() < 1e-12, "stream {i} dim {d}");
+            }
+        }
+        assert_eq!(c.metrics().counter(names::MULTI_PUSH_ENTRIES).get(), 4);
+    }
+
+    #[test]
+    fn multi_push_entries_fail_independently() {
+        use crate::coordinator::protocol::{MultiOutcome, MultiPushEntry};
+        let c = Coordinator::new(1, 64, BackpressurePolicy::Block);
+        let h = c.register("ok", 2, gea()).unwrap();
+        let outcomes = c.multi_push(vec![
+            MultiPushEntry {
+                handle: h,
+                count: 1,
+                data: vec![1.0, 2.0],
+            },
+            MultiPushEntry {
+                handle: 999_999,
+                count: 1,
+                data: vec![1.0, 2.0],
+            },
+            MultiPushEntry {
+                handle: h,
+                count: 3, // ragged: 3 samples × dim 2 != 4 values
+                data: vec![1.0; 4],
+            },
+            MultiPushEntry {
+                handle: h,
+                count: 1,
+                data: vec![3.0, 4.0],
+            },
+        ]);
+        assert_eq!(outcomes.len(), 4);
+        assert_eq!(outcomes[0], MultiOutcome::Accepted);
+        assert!(matches!(&outcomes[1], MultiOutcome::Rejected(e) if e.contains("handle")));
+        assert!(matches!(&outcomes[2], MultiOutcome::Rejected(e) if e.contains("dims")));
+        assert_eq!(outcomes[3], MultiOutcome::Accepted);
+        c.sync().unwrap();
+        // Only the two good entries applied, in entry order.
+        assert_eq!(c.snapshot("ok").unwrap().t, 2);
     }
 }

@@ -14,8 +14,17 @@
 //!   ingest workers with bounded queues and configurable backpressure
 //!   ([`crate::config::BackpressurePolicy`]), wait-free snapshot reads at
 //!   any time (the paper's "anytime" property, operationalized), metrics.
-//! * [`protocol`] — length-prefixed, versioned JSON wire format.
-//! * [`server`]/[`client`] — TCP service and client library.
+//! * [`protocol`] — negotiated wire formats: the legacy length-prefixed
+//!   JSON codec (v1) and the binary handle-addressed codec (v2) behind
+//!   one frame layer and one typed op model. v2 is the default: streams
+//!   are addressed by the `u64` handle `register`/`resolve` returns,
+//!   every frame carries a pipelining sequence id, and `multi_push`
+//!   ships batches for many streams in one frame. Legacy JSON peers are
+//!   auto-detected per connection (no hello frame → v1) and served
+//!   unchanged.
+//! * [`server`]/[`client`] — TCP service and client library over the
+//!   negotiated codec (pooled frame buffers, out-of-order completion
+//!   for v2 barrier ops, typed [`ClientError`]).
 //!
 //! With a `[persist]` config section the coordinator is **durable**
 //! ([`crate::persist`]): each shard worker write-ahead-logs every
@@ -42,5 +51,6 @@ pub mod server;
 pub mod stream;
 
 pub use self::core::{CheckpointReport, Coordinator, PushOutcome, RecoveryReport, Snapshot};
-pub use client::Client;
+pub use client::{Client, ClientError};
+pub use protocol::{MultiOutcome, ProtocolChoice, StreamInfo};
 pub use server::Server;

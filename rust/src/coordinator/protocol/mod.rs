@@ -1,0 +1,427 @@
+//! Wire protocol: codec-negotiated request/response framing.
+//!
+//! Two codecs share one frame layer ([`wire`]) and one typed op model
+//! ([`Request`]/[`Response`]):
+//!
+//! * **v1** ([`v1`]) — length-prefixed JSON, stream ops addressed by
+//!   name, strict request→response ordering. The legacy format, kept
+//!   bit-compatible for old peers.
+//! * **v2** ([`v2`]) — length-prefixed binary built on the persist
+//!   layer's [`Enc`]/[`Dec`] primitives: little-endian f64 payloads (no
+//!   number re-parsing), raw state bytes (no hex doubling), hot ops
+//!   addressed by `u64` stream **handles** returned by
+//!   `register`/`resolve` (no per-request string hash/lookup), a
+//!   client-chosen sequence id on every frame so requests **pipeline**
+//!   (many in flight per connection, responses matched by id, and a
+//!   [`Request::MultiPush`] op carrying batches for many handles in one
+//!   frame.
+//!
+//! The codec is chosen per connection by a `hello` handshake: a v2-aware
+//! client opens with a [`hello_frame`]; the server answers with the
+//! version it commits to ([`parse_hello`]) and both sides switch. A peer
+//! whose first frame is NOT a hello is a legacy v1 peer and is served
+//! JSON transparently — auto-detection costs one 4-byte prefix check.
+//!
+//! ## Pipelining rules (v2)
+//!
+//! * Every request carries a client-chosen `seq`; the matching response
+//!   echoes it. Ids need not be ordered or dense, only unique among the
+//!   requests currently in flight on the connection.
+//! * Responses may arrive in any order. In practice the server answers
+//!   ordering-sensitive ops (pushes) in receive order — per-stream
+//!   application order is always request send order — but barrier-like
+//!   ops (`sync`, `checkpoint`) complete out of order so a pipelined
+//!   producer is never stalled behind them.
+//! * A handle is valid from the `register`/`resolve` response until the
+//!   stream is unregistered; it is not connection-scoped. Handle
+//!   values are never recycled and the space is time-seeded per server
+//!   incarnation, so a stale handle — after unregister, or cached
+//!   across a crash-recovery restart — is always a structured error,
+//!   never a different stream.
+//!
+//! [`Enc`]: crate::persist::codec::Enc
+//! [`Dec`]: crate::persist::codec::Dec
+
+pub mod v1;
+pub mod v2;
+pub mod wire;
+
+pub use v1::{err_response, ok_response, PROTOCOL_VERSION};
+pub use wire::{read_frame, read_frame_into, write_frame, write_frame_bytes, MAX_FRAME};
+
+use crate::util::json::Json;
+
+/// Version tag of the legacy JSON codec.
+pub const WIRE_V1: u16 = 1;
+/// Version tag of the binary handle-addressed codec.
+pub const WIRE_V2: u16 = 2;
+
+/// Magic prefix of a `hello` handshake frame payload.
+pub const HELLO_MAGIC: &[u8; 4] = b"ATAH";
+
+/// Marker the coordinator puts in every dead-handle error message, and
+/// the ONLY thing clients key stale-handle recovery (cache purge +
+/// retry) on. Wire-visible contract: reword the error, break the
+/// self-healing — so both ends reference this constant.
+pub const STALE_HANDLE_MARKER: &str = "no stream with handle";
+
+/// The codec a connection speaks after negotiation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Wire {
+    V1Json,
+    V2Binary,
+}
+
+impl Wire {
+    pub fn version(self) -> u16 {
+        match self {
+            Wire::V1Json => WIRE_V1,
+            Wire::V2Binary => WIRE_V2,
+        }
+    }
+}
+
+/// Operator-facing protocol selection (config / CLI flags).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ProtocolChoice {
+    /// Negotiate: prefer v2, auto-detect no-hello legacy peers as v1.
+    #[default]
+    Auto,
+    /// JSON only. A server never answers a hello with v2; a client
+    /// skips the hello entirely (required against pre-v2 servers, which
+    /// drop the connection on a binary hello).
+    V1,
+    /// Binary only. A server rejects no-hello peers with a structured
+    /// JSON error; a client fails if the server will not speak v2.
+    V2,
+}
+
+impl ProtocolChoice {
+    pub fn parse(s: &str) -> Result<ProtocolChoice, String> {
+        match s {
+            "auto" => Ok(ProtocolChoice::Auto),
+            "v1" | "1" | "json" => Ok(ProtocolChoice::V1),
+            "v2" | "2" | "binary" => Ok(ProtocolChoice::V2),
+            other => Err(format!("unknown protocol '{other}' (auto | v1 | v2)")),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ProtocolChoice::Auto => "auto",
+            ProtocolChoice::V1 => "v1",
+            ProtocolChoice::V2 => "v2",
+        }
+    }
+}
+
+/// Build a hello (or hello-ack) frame payload advertising `version` as
+/// the highest (client) / committed (server) protocol generation.
+pub fn hello_frame(version: u16) -> Vec<u8> {
+    let mut out = Vec::with_capacity(6);
+    out.extend_from_slice(HELLO_MAGIC);
+    out.extend_from_slice(&version.to_le_bytes());
+    out
+}
+
+/// Parse a hello / hello-ack payload; `None` when the payload is not a
+/// hello (for the server that means: a legacy v1 peer's first request).
+pub fn parse_hello(payload: &[u8]) -> Option<u16> {
+    if payload.len() == 6 && &payload[..4] == HELLO_MAGIC {
+        Some(u16::from_le_bytes([payload[4], payload[5]]))
+    } else {
+        None
+    }
+}
+
+/// How a request addresses a stream: by name (v1, and the cold
+/// `register`/`resolve` ops) or by the `u64` handle `register`/`resolve`
+/// returned (v2 hot ops — no string hash, no name-map lookup).
+#[derive(Clone, Debug, PartialEq)]
+pub enum StreamRef {
+    Name(String),
+    Handle(u64),
+}
+
+/// One stream's batch inside a [`Request::MultiPush`] frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MultiPushEntry {
+    pub handle: u64,
+    /// Consecutive samples packed flat in `data`.
+    pub count: usize,
+    pub data: Vec<f64>,
+}
+
+/// Per-entry outcome of a `multi_push` (entries are independent: one
+/// bad handle must not reject its siblings' batches).
+#[derive(Clone, Debug, PartialEq)]
+pub enum MultiOutcome {
+    Accepted,
+    /// Dropped whole by `DropNewest` backpressure.
+    Dropped,
+    /// Rejected with a structured per-entry error (unknown handle,
+    /// shape mismatch, queue full under `Reject`).
+    Rejected(String),
+}
+
+/// One row of the stream directory (`list` under v2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamInfo {
+    pub name: String,
+    pub handle: u64,
+    pub dim: usize,
+}
+
+/// Client → server requests (codec-independent op model).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Ping,
+    /// Returns the new stream's handle.
+    Register {
+        stream: String,
+        dim: usize,
+        spec: String,
+    },
+    /// Name → handle lookup (the one string op a v2 hot path ever pays,
+    /// once per stream per client).
+    Resolve {
+        stream: String,
+    },
+    Push {
+        stream: StreamRef,
+        data: Vec<f64>,
+    },
+    /// Batched push: `data` holds `count` consecutive samples.
+    PushMany {
+        stream: StreamRef,
+        count: usize,
+        data: Vec<f64>,
+    },
+    /// Batches for many handles in ONE frame — fan-in producers pay one
+    /// syscall per drain interval. v2 only.
+    MultiPush {
+        entries: Vec<MultiPushEntry>,
+    },
+    Snapshot {
+        stream: StreamRef,
+    },
+    Sync,
+    Metrics,
+    ListStreams,
+    /// Quiesce all shards and write an atomic snapshot + truncate WAL
+    /// (requires a `[persist]` config section on the server).
+    Checkpoint,
+    /// Export one stream's full estimator state as a framed,
+    /// CRC-protected payload (raw bytes under v2, hex text under v1).
+    ExportState {
+        stream: StreamRef,
+    },
+    /// Replace one stream's state from an exported payload.
+    Restore {
+        stream: StreamRef,
+        state: Vec<u8>,
+    },
+    /// Merge an exported payload into one stream's live state (shard /
+    /// node rollup; exactness per the estimator's merge semantics).
+    MergeState {
+        stream: StreamRef,
+        state: Vec<u8>,
+    },
+}
+
+/// Which op a request is — used to pick v2 tags and to interpret v1
+/// responses (JSON responses carry no op marker, so the client decodes
+/// them against the op it sent).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Ping,
+    Register,
+    Resolve,
+    Push,
+    PushMany,
+    MultiPush,
+    Snapshot,
+    Sync,
+    Metrics,
+    List,
+    Checkpoint,
+    ExportState,
+    Restore,
+    MergeState,
+}
+
+impl Request {
+    pub fn kind(&self) -> OpKind {
+        match self {
+            Request::Ping => OpKind::Ping,
+            Request::Register { .. } => OpKind::Register,
+            Request::Resolve { .. } => OpKind::Resolve,
+            Request::Push { .. } => OpKind::Push,
+            Request::PushMany { .. } => OpKind::PushMany,
+            Request::MultiPush { .. } => OpKind::MultiPush,
+            Request::Snapshot { .. } => OpKind::Snapshot,
+            Request::Sync => OpKind::Sync,
+            Request::Metrics => OpKind::Metrics,
+            Request::ListStreams => OpKind::List,
+            Request::Checkpoint => OpKind::Checkpoint,
+            Request::ExportState { .. } => OpKind::ExportState,
+            Request::Restore { .. } => OpKind::Restore,
+            Request::MergeState { .. } => OpKind::MergeState,
+        }
+    }
+}
+
+/// Server → client responses (codec-independent op model). `Err` is the
+/// structured-error frame; everything else answers the matching op.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Err(String),
+    Pong,
+    Registered {
+        handle: u64,
+    },
+    Resolved {
+        handle: u64,
+        dim: usize,
+    },
+    Pushed {
+        accepted: bool,
+    },
+    PushedMany {
+        accepted: u64,
+        dropped: u64,
+    },
+    MultiPushed {
+        outcomes: Vec<MultiOutcome>,
+    },
+    Snap {
+        stream: String,
+        t: u64,
+        window_len: f64,
+        dropped: u64,
+        value: Option<Vec<f64>>,
+    },
+    Synced,
+    /// The metrics document (registry export + per-stream stats).
+    Metrics {
+        body: Json,
+    },
+    Streams {
+        streams: Vec<StreamInfo>,
+    },
+    Checkpointed {
+        path: String,
+        seq: u64,
+        bytes: u64,
+        streams: u64,
+        wal_segments_removed: u64,
+    },
+    State {
+        stream: String,
+        state: Vec<u8>,
+    },
+    Restored {
+        t: u64,
+    },
+    Merged {
+        t: u64,
+    },
+}
+
+/// Encode a request for the negotiated codec into `out` (cleared
+/// first; pooled buffers keep their allocation). `seq` is ignored by
+/// v1, which has no pipelining ids.
+pub fn encode_request(
+    wire: Wire,
+    seq: u64,
+    req: &Request,
+    out: &mut Vec<u8>,
+) -> Result<(), String> {
+    match wire {
+        Wire::V1Json => {
+            let json = v1::request_to_json(req)?;
+            out.clear();
+            out.extend_from_slice(json.encode().as_bytes());
+            Ok(())
+        }
+        Wire::V2Binary => v2::encode_request(seq, req, out),
+    }
+}
+
+/// Decode a request payload; v1 requests report `seq = 0`.
+pub fn decode_request(wire: Wire, payload: &[u8]) -> Result<(u64, Request), String> {
+    match wire {
+        Wire::V1Json => {
+            let text =
+                std::str::from_utf8(payload).map_err(|_| "request is not UTF-8".to_string())?;
+            let json = Json::parse(text).map_err(|e| e.to_string())?;
+            Ok((0, v1::request_from_json(&json)?))
+        }
+        Wire::V2Binary => v2::decode_request(payload),
+    }
+}
+
+/// Encode a response for the negotiated codec into `out` (cleared
+/// first). `seq` must echo the request's id (ignored by v1).
+pub fn encode_response(
+    wire: Wire,
+    seq: u64,
+    resp: &Response,
+    out: &mut Vec<u8>,
+) -> Result<(), String> {
+    match wire {
+        Wire::V1Json => {
+            let json = v1::response_to_json(resp);
+            out.clear();
+            out.extend_from_slice(json.encode().as_bytes());
+            Ok(())
+        }
+        Wire::V2Binary => v2::encode_response(seq, resp, out),
+    }
+}
+
+/// Decode a response payload. `kind` names the op the response answers:
+/// v1 responses carry no op marker at all, and a v2 success frame's op
+/// tag is cross-checked against it (a mismatch means the pipeline
+/// bookkeeping is broken). v1 responses report `seq = 0`.
+pub fn decode_response(
+    wire: Wire,
+    kind: OpKind,
+    payload: &[u8],
+) -> Result<(u64, Response), String> {
+    match wire {
+        Wire::V1Json => {
+            let text =
+                std::str::from_utf8(payload).map_err(|_| "response is not UTF-8".to_string())?;
+            let json = Json::parse(text).map_err(|e| e.to_string())?;
+            Ok((0, v1::response_from_json(kind, &json)?))
+        }
+        Wire::V2Binary => v2::decode_response(kind, payload),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_frames_roundtrip_and_reject_non_hellos() {
+        for v in [WIRE_V1, WIRE_V2, 9] {
+            assert_eq!(parse_hello(&hello_frame(v)), Some(v));
+        }
+        assert_eq!(parse_hello(b""), None);
+        assert_eq!(parse_hello(b"ATAH"), None); // missing version
+        assert_eq!(parse_hello(b"ATAH\x02\x00\x00"), None); // trailing byte
+        assert_eq!(parse_hello(br#"{"op":"ping"}"#), None); // legacy JSON
+    }
+
+    #[test]
+    fn protocol_choice_parses() {
+        assert_eq!(ProtocolChoice::parse("auto").unwrap(), ProtocolChoice::Auto);
+        assert_eq!(ProtocolChoice::parse("v1").unwrap(), ProtocolChoice::V1);
+        assert_eq!(ProtocolChoice::parse("v2").unwrap(), ProtocolChoice::V2);
+        assert_eq!(ProtocolChoice::parse("binary").unwrap(), ProtocolChoice::V2);
+        assert!(ProtocolChoice::parse("v3").is_err());
+        assert_eq!(ProtocolChoice::default(), ProtocolChoice::Auto);
+    }
+}

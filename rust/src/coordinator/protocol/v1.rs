@@ -1,0 +1,706 @@
+//! Protocol v1: the legacy length-prefixed JSON codec.
+//!
+//! Requests and responses are JSON objects; every response carries
+//! `"ok": true/false`. Stream ops address streams by **name**, state
+//! payloads travel hex-encoded, and responses answer requests strictly
+//! in order (there are no sequence ids). This module must stay
+//! bit-compatible with pre-v2 peers: the full legacy suite runs against
+//! it unchanged.
+//!
+//! Every envelope carries a `"v"` protocol-version field
+//! ([`PROTOCOL_VERSION`]); a request with a *different* explicit
+//! version is rejected with a structured error naming both versions, so
+//! snapshot/WAL-bearing ops can evolve without silent misparses. A
+//! missing `"v"` is accepted (pre-versioning peers speak the version-1
+//! wire format).
+
+use super::{OpKind, Request, Response, StreamInfo, StreamRef};
+use crate::persist::codec;
+use crate::util::json::Json;
+
+/// Version of the request/response envelope this codec speaks.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Name of a v1 stream ref; `Err` on a handle (handles are a v2
+/// concept — a v1 frame cannot carry one).
+fn name_of(r: &StreamRef) -> Result<&str, String> {
+    match r {
+        StreamRef::Name(n) => Ok(n),
+        StreamRef::Handle(h) => Err(format!(
+            "protocol v1 addresses streams by name (cannot encode handle {h})"
+        )),
+    }
+}
+
+/// Encode a request as a legacy JSON envelope.
+pub fn request_to_json(req: &Request) -> Result<Json, String> {
+    let mut fields = match req {
+        Request::Ping => vec![("op", Json::Str("ping".into()))],
+        Request::Register { stream, dim, spec } => vec![
+            ("op", Json::Str("register".into())),
+            ("stream", Json::Str(stream.clone())),
+            ("dim", Json::Num(*dim as f64)),
+            ("spec", Json::Str(spec.clone())),
+        ],
+        Request::Resolve { stream } => vec![
+            ("op", Json::Str("resolve".into())),
+            ("stream", Json::Str(stream.clone())),
+        ],
+        Request::Push { stream, data } => vec![
+            ("op", Json::Str("push".into())),
+            ("stream", Json::Str(name_of(stream)?.to_string())),
+            ("data", Json::nums(data)),
+        ],
+        Request::PushMany {
+            stream,
+            count,
+            data,
+        } => vec![
+            ("op", Json::Str("push_many".into())),
+            ("stream", Json::Str(name_of(stream)?.to_string())),
+            ("count", Json::Num(*count as f64)),
+            ("data", Json::nums(data)),
+        ],
+        Request::MultiPush { .. } => {
+            return Err("multi_push requires protocol v2".into());
+        }
+        Request::Snapshot { stream } => vec![
+            ("op", Json::Str("snapshot".into())),
+            ("stream", Json::Str(name_of(stream)?.to_string())),
+        ],
+        Request::Sync => vec![("op", Json::Str("sync".into()))],
+        Request::Metrics => vec![("op", Json::Str("metrics".into()))],
+        Request::ListStreams => vec![("op", Json::Str("list".into()))],
+        Request::Checkpoint => vec![("op", Json::Str("checkpoint".into()))],
+        Request::ExportState { stream } => vec![
+            ("op", Json::Str("export_state".into())),
+            ("stream", Json::Str(name_of(stream)?.to_string())),
+        ],
+        Request::Restore { stream, state } => vec![
+            ("op", Json::Str("restore".into())),
+            ("stream", Json::Str(name_of(stream)?.to_string())),
+            ("state", Json::Str(codec::to_hex(state))),
+        ],
+        Request::MergeState { stream, state } => vec![
+            ("op", Json::Str("merge_state".into())),
+            ("stream", Json::Str(name_of(stream)?.to_string())),
+            ("state", Json::Str(codec::to_hex(state))),
+        ],
+    };
+    fields.push(("v", Json::Num(PROTOCOL_VERSION as f64)));
+    Ok(Json::obj(fields))
+}
+
+/// Borrowed fast-path builder for the hot `push_many` op: the envelope
+/// straight from the caller's slice, skipping the owned [`Request`]
+/// intermediate. Identical to encoding `Request::PushMany` by name.
+pub fn push_many_to_json(stream: &str, count: usize, data: &[f64]) -> Json {
+    Json::obj(vec![
+        ("op", Json::Str("push_many".into())),
+        ("stream", Json::Str(stream.to_string())),
+        ("count", Json::Num(count as f64)),
+        ("data", Json::nums(data)),
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
+    ])
+}
+
+/// Decode a legacy JSON request envelope.
+pub fn request_from_json(j: &Json) -> Result<Request, String> {
+    // Envelope version gate: an explicit mismatched version is a
+    // structured error naming both sides; a missing field means a
+    // pre-versioning peer and is accepted.
+    if let Some(v) = j.get("v") {
+        let v = v
+            .as_u64()
+            .ok_or("protocol version 'v' must be a nonnegative integer")?;
+        if v != PROTOCOL_VERSION {
+            return Err(format!(
+                "unsupported protocol version {v} (this peer speaks {PROTOCOL_VERSION})"
+            ));
+        }
+    }
+    let op = j
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or("request missing 'op'")?;
+    let stream = || -> Result<String, String> {
+        Ok(j.get("stream")
+            .and_then(Json::as_str)
+            .ok_or("request missing 'stream'")?
+            .to_string())
+    };
+    let stream_ref = || -> Result<StreamRef, String> { Ok(StreamRef::Name(stream()?)) };
+    let state = || -> Result<Vec<u8>, String> {
+        codec::from_hex(
+            j.get("state")
+                .and_then(Json::as_str)
+                .ok_or("request missing 'state'")?,
+        )
+    };
+    match op {
+        "ping" => Ok(Request::Ping),
+        "register" => Ok(Request::Register {
+            stream: stream()?,
+            dim: j
+                .get("dim")
+                .and_then(Json::as_u64)
+                .ok_or("register missing 'dim'")? as usize,
+            spec: j
+                .get("spec")
+                .and_then(Json::as_str)
+                .ok_or("register missing 'spec'")?
+                .to_string(),
+        }),
+        "resolve" => Ok(Request::Resolve { stream: stream()? }),
+        "push" => {
+            let data = j
+                .get("data")
+                .and_then(Json::as_arr)
+                .ok_or("push missing 'data'")?
+                .iter()
+                .map(|v| v.as_f64().ok_or("push data must be numbers".to_string()))
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Request::Push {
+                stream: stream_ref()?,
+                data,
+            })
+        }
+        "push_many" => {
+            let data = j
+                .get("data")
+                .and_then(Json::as_arr)
+                .ok_or("push_many missing 'data'")?
+                .iter()
+                .map(|v| v.as_f64().ok_or("push_many data must be numbers".to_string()))
+                .collect::<Result<Vec<_>, _>>()?;
+            let count = j
+                .get("count")
+                .and_then(Json::as_u64)
+                .ok_or("push_many missing 'count'")? as usize;
+            if count == 0 || data.len() % count != 0 {
+                return Err(format!(
+                    "push_many: {} values do not split into {count} samples",
+                    data.len()
+                ));
+            }
+            Ok(Request::PushMany {
+                stream: stream_ref()?,
+                count,
+                data,
+            })
+        }
+        "snapshot" => Ok(Request::Snapshot {
+            stream: stream_ref()?,
+        }),
+        "sync" => Ok(Request::Sync),
+        "metrics" => Ok(Request::Metrics),
+        "list" => Ok(Request::ListStreams),
+        "checkpoint" => Ok(Request::Checkpoint),
+        "export_state" => Ok(Request::ExportState {
+            stream: stream_ref()?,
+        }),
+        "restore" => Ok(Request::Restore {
+            stream: stream_ref()?,
+            state: state()?,
+        }),
+        "merge_state" => Ok(Request::MergeState {
+            stream: stream_ref()?,
+            state: state()?,
+        }),
+        other => Err(format!("unknown op '{other}'")),
+    }
+}
+
+/// Build a success response (versioned envelope).
+pub fn ok_response(mut fields: Vec<(&str, Json)>) -> Json {
+    fields.insert(0, ("ok", Json::Bool(true)));
+    fields.push(("v", Json::Num(PROTOCOL_VERSION as f64)));
+    Json::obj(fields)
+}
+
+/// Build an error response (versioned envelope).
+pub fn err_response(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+        ("v", Json::Num(PROTOCOL_VERSION as f64)),
+    ])
+}
+
+/// Encode a response as a legacy JSON envelope. Field layouts are the
+/// pre-v2 ones verbatim; v2-era data a v1 frame cannot carry (handles
+/// on `list`, `multi_push` outcomes) is dropped or reported as an
+/// error, never silently mis-encoded.
+pub fn response_to_json(resp: &Response) -> Json {
+    match resp {
+        Response::Err(msg) => err_response(msg),
+        Response::Pong => ok_response(vec![("pong", Json::Bool(true))]),
+        Response::Registered { handle } => {
+            // The legacy register ack plus the (ignored-by-old-clients)
+            // handle, so a v1 client library can still cache it.
+            // Handles are time-seeded u64s far above 2^53, so they
+            // travel as decimal STRINGS — a JSON number would round
+            // them to a different (wrong) handle.
+            ok_response(vec![("handle", Json::Str(handle.to_string()))])
+        }
+        Response::Resolved { handle, dim } => ok_response(vec![
+            ("handle", Json::Str(handle.to_string())),
+            ("dim", Json::Num(*dim as f64)),
+        ]),
+        Response::Pushed { accepted } => {
+            if *accepted {
+                ok_response(vec![("accepted", Json::Bool(true))])
+            } else {
+                ok_response(vec![
+                    ("accepted", Json::Bool(false)),
+                    ("dropped", Json::Bool(true)),
+                ])
+            }
+        }
+        Response::PushedMany { accepted, dropped } => ok_response(vec![
+            ("accepted", Json::Num(*accepted as f64)),
+            ("dropped", Json::Num(*dropped as f64)),
+        ]),
+        Response::MultiPushed { .. } => err_response("multi_push requires protocol v2"),
+        Response::Snap {
+            stream,
+            t,
+            window_len,
+            dropped,
+            value,
+        } => {
+            let value = match value {
+                Some(v) => Json::nums(v),
+                None => Json::Null,
+            };
+            ok_response(vec![
+                ("stream", Json::Str(stream.clone())),
+                ("t", Json::Num(*t as f64)),
+                ("window_len", Json::Num(*window_len)),
+                ("dropped", Json::Num(*dropped as f64)),
+                ("value", value),
+            ])
+        }
+        Response::Synced => ok_response(vec![]),
+        Response::Metrics { body } => {
+            // Splice the document's fields into the legacy envelope
+            // (the old responses were flat: metrics + streams on top).
+            let mut map = match body {
+                Json::Obj(m) => m.clone(),
+                other => {
+                    let mut m = std::collections::BTreeMap::new();
+                    m.insert("metrics".to_string(), other.clone());
+                    m
+                }
+            };
+            map.insert("ok".to_string(), Json::Bool(true));
+            map.insert("v".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+            Json::Obj(map)
+        }
+        Response::Streams { streams } => ok_response(vec![(
+            "streams",
+            Json::Arr(
+                streams
+                    .iter()
+                    .map(|s| Json::Str(s.name.clone()))
+                    .collect(),
+            ),
+        )]),
+        Response::Checkpointed {
+            path,
+            seq,
+            bytes,
+            streams,
+            wal_segments_removed,
+        } => ok_response(vec![
+            ("path", Json::Str(path.clone())),
+            ("seq", Json::Num(*seq as f64)),
+            ("bytes", Json::Num(*bytes as f64)),
+            ("streams", Json::Num(*streams as f64)),
+            (
+                "wal_segments_removed",
+                Json::Num(*wal_segments_removed as f64),
+            ),
+        ]),
+        Response::State { stream, state } => ok_response(vec![
+            ("stream", Json::Str(stream.clone())),
+            ("state", Json::Str(codec::to_hex(state))),
+        ]),
+        Response::Restored { t } | Response::Merged { t } => {
+            ok_response(vec![("t", Json::Num(*t as f64))])
+        }
+    }
+}
+
+/// Decode a legacy JSON response against the op it answers (v1 frames
+/// carry no op marker). Mirrors the version gate the old client
+/// applied: an explicit foreign `"v"` is an error, a missing one is a
+/// pre-versioning server.
+pub fn response_from_json(kind: OpKind, j: &Json) -> Result<Response, String> {
+    if let Some(v) = j.get("v").and_then(Json::as_u64) {
+        if v != PROTOCOL_VERSION {
+            return Err(format!(
+                "server speaks protocol version {v}, this client speaks {PROTOCOL_VERSION}"
+            ));
+        }
+    }
+    match j.get("ok").and_then(Json::as_bool) {
+        Some(true) => {}
+        Some(false) => {
+            return Ok(Response::Err(
+                j.get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown server error")
+                    .to_string(),
+            ))
+        }
+        None => return Err("malformed response (no 'ok')".into()),
+    }
+    let t = || j.get("t").and_then(Json::as_u64).unwrap_or(0);
+    // Handles travel as decimal strings (they exceed 2^53 — see
+    // `response_to_json`); accept a number too for forgiving parsing
+    // of small hand-written values.
+    let handle_field = || -> Option<u64> {
+        match j.get("handle") {
+            Some(Json::Str(s)) => s.parse().ok(),
+            Some(v) => v.as_u64(),
+            None => None,
+        }
+    };
+    match kind {
+        OpKind::Ping => Ok(Response::Pong),
+        OpKind::Register => Ok(Response::Registered {
+            // Pre-v2 servers ack a register with no handle; report 0
+            // ("unknown") rather than failing the op.
+            handle: handle_field().unwrap_or(0),
+        }),
+        OpKind::Resolve => Ok(Response::Resolved {
+            handle: handle_field().ok_or("resolve response missing 'handle'")?,
+            dim: j
+                .get("dim")
+                .and_then(Json::as_u64)
+                .ok_or("resolve response missing 'dim'")? as usize,
+        }),
+        OpKind::Push => Ok(Response::Pushed {
+            accepted: j
+                .get("accepted")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+        }),
+        OpKind::PushMany => Ok(Response::PushedMany {
+            accepted: j.get("accepted").and_then(Json::as_u64).unwrap_or(0),
+            dropped: j.get("dropped").and_then(Json::as_u64).unwrap_or(0),
+        }),
+        OpKind::MultiPush => Err("multi_push responses require protocol v2".into()),
+        OpKind::Snapshot => {
+            let value = match j.get("value") {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(
+                    v.as_arr()
+                        .ok_or("snapshot value must be an array")?
+                        .iter()
+                        .map(|x| {
+                            x.as_f64()
+                                .ok_or_else(|| "snapshot values must be numbers".to_string())
+                        })
+                        .collect::<Result<Vec<_>, _>>()?,
+                ),
+            };
+            Ok(Response::Snap {
+                stream: j
+                    .get("stream")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+                t: t(),
+                window_len: j
+                    .get("window_len")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
+                dropped: j.get("dropped").and_then(Json::as_u64).unwrap_or(0),
+                value,
+            })
+        }
+        OpKind::Sync => Ok(Response::Synced),
+        OpKind::Metrics => Ok(Response::Metrics { body: j.clone() }),
+        OpKind::List => Ok(Response::Streams {
+            streams: j
+                .get("streams")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|s| s.as_str())
+                .map(|name| StreamInfo {
+                    name: name.to_string(),
+                    // v1 directories carry names only.
+                    handle: 0,
+                    dim: 0,
+                })
+                .collect(),
+        }),
+        OpKind::Checkpoint => Ok(Response::Checkpointed {
+            path: j
+                .get("path")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            seq: j.get("seq").and_then(Json::as_u64).unwrap_or(0),
+            bytes: j.get("bytes").and_then(Json::as_u64).unwrap_or(0),
+            streams: j.get("streams").and_then(Json::as_u64).unwrap_or(0),
+            wal_segments_removed: j
+                .get("wal_segments_removed")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+        }),
+        OpKind::ExportState => Ok(Response::State {
+            stream: j
+                .get("stream")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            state: codec::from_hex(
+                j.get("state")
+                    .and_then(Json::as_str)
+                    .ok_or("export_state response missing 'state'")?,
+            )?,
+        }),
+        OpKind::Restore => Ok(Response::Restored { t: t() }),
+        OpKind::MergeState => Ok(Response::Merged { t: t() }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nref(s: &str) -> StreamRef {
+        StreamRef::Name(s.into())
+    }
+
+    #[test]
+    fn requests_roundtrip_json() {
+        let reqs = vec![
+            Request::Ping,
+            Request::Register {
+                stream: "w".into(),
+                dim: 8,
+                spec: "gea(c=0.5)".into(),
+            },
+            Request::Resolve { stream: "w".into() },
+            Request::Push {
+                stream: nref("w"),
+                data: vec![1.0, -2.5, 3.25],
+            },
+            Request::PushMany {
+                stream: nref("w"),
+                count: 2,
+                data: vec![1.0, 2.0, 3.0, 4.0],
+            },
+            Request::Snapshot { stream: nref("w") },
+            Request::Sync,
+            Request::Metrics,
+            Request::ListStreams,
+            Request::Checkpoint,
+            Request::ExportState { stream: nref("w") },
+            Request::Restore {
+                stream: nref("w"),
+                state: vec![0x41, 0x54],
+            },
+            Request::MergeState {
+                stream: nref("w"),
+                state: vec![0x41, 0x54],
+            },
+        ];
+        for r in reqs {
+            let j = request_to_json(&r).unwrap();
+            assert_eq!(
+                j.get("v").and_then(Json::as_u64),
+                Some(PROTOCOL_VERSION),
+                "every request envelope carries the protocol version"
+            );
+            let back = request_from_json(&j).unwrap();
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn borrowed_push_many_builder_matches_owned_encoding() {
+        let data = vec![1.0, 2.0, 3.0, 4.0];
+        let fast = push_many_to_json("w", 2, &data);
+        let owned = request_to_json(&Request::PushMany {
+            stream: nref("w"),
+            count: 2,
+            data: data.clone(),
+        })
+        .unwrap();
+        assert_eq!(fast, owned);
+    }
+
+    #[test]
+    fn handle_refs_and_multi_push_are_not_encodable() {
+        let err = request_to_json(&Request::Push {
+            stream: StreamRef::Handle(7),
+            data: vec![1.0],
+        })
+        .unwrap_err();
+        assert!(err.contains("name"), "{err}");
+        assert!(request_to_json(&Request::MultiPush { entries: vec![] }).is_err());
+    }
+
+    #[test]
+    fn version_gate_rejects_mismatch_accepts_missing() {
+        // An explicit foreign version is a structured error naming both.
+        let bad = Json::obj(vec![
+            ("op", Json::Str("ping".into())),
+            ("v", Json::Num(99.0)),
+        ]);
+        let err = request_from_json(&bad).unwrap_err();
+        assert!(err.contains("99") && err.contains(&PROTOCOL_VERSION.to_string()), "{err}");
+        // Non-integer versions are rejected too.
+        let bad = Json::obj(vec![
+            ("op", Json::Str("ping".into())),
+            ("v", Json::Str("one".into())),
+        ]);
+        assert!(request_from_json(&bad).is_err());
+        // A pre-versioning peer (no "v") still parses.
+        let legacy = Json::obj(vec![("op", Json::Str("ping".into()))]);
+        assert_eq!(request_from_json(&legacy).unwrap(), Request::Ping);
+        // Responses carry the version as well.
+        assert_eq!(
+            ok_response(vec![]).get("v").and_then(Json::as_u64),
+            Some(PROTOCOL_VERSION)
+        );
+        assert_eq!(
+            err_response("x").get("v").and_then(Json::as_u64),
+            Some(PROTOCOL_VERSION)
+        );
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        for bad in [
+            Json::obj(vec![]),
+            Json::obj(vec![("op", Json::Str("zzz".into()))]),
+            Json::obj(vec![("op", Json::Str("push".into()))]),
+        ] {
+            assert!(request_from_json(&bad).is_err());
+        }
+    }
+
+    #[test]
+    fn push_many_rejects_ragged_batches() {
+        let req = |count: Json, data: Json| {
+            Json::obj(vec![
+                ("op", Json::Str("push_many".into())),
+                ("stream", Json::Str("w".into())),
+                ("count", count),
+                ("data", data),
+            ])
+        };
+        // Ragged: 4 values do not split into 3 samples.
+        let err = request_from_json(&req(Json::Num(3.0), Json::nums(&[1.0, 2.0, 3.0, 4.0])))
+            .unwrap_err();
+        assert!(err.contains("do not split"), "{err}");
+        // count == 0 must be an error even with empty data (a silent
+        // no-op would hide producer bugs).
+        let err = request_from_json(&req(Json::Num(0.0), Json::nums(&[]))).unwrap_err();
+        assert!(err.contains("do not split"), "{err}");
+        // count == 0 with data is also ragged.
+        assert!(request_from_json(&req(Json::Num(0.0), Json::nums(&[1.0]))).is_err());
+        // Missing / non-integer count.
+        assert!(request_from_json(&req(Json::Null, Json::nums(&[1.0]))).is_err());
+        assert!(request_from_json(&req(Json::Num(-2.0), Json::nums(&[1.0]))).is_err());
+        // And the error frames these produce are structured.
+        let frame = err_response("push_many: bad batch");
+        assert_eq!(frame.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(frame.get("error").and_then(Json::as_str).is_some());
+    }
+
+    #[test]
+    fn responses_keep_the_legacy_field_layout() {
+        // Pushed/accepted
+        let j = response_to_json(&Response::Pushed { accepted: true });
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("accepted").and_then(Json::as_bool), Some(true));
+        // Dropped push carries the legacy dropped flag.
+        let j = response_to_json(&Response::Pushed { accepted: false });
+        assert_eq!(j.get("dropped").and_then(Json::as_bool), Some(true));
+        // Snapshot with no value encodes JSON null.
+        let j = response_to_json(&Response::Snap {
+            stream: "s".into(),
+            t: 0,
+            window_len: 0.0,
+            dropped: 0,
+            value: None,
+        });
+        assert_eq!(j.get("value"), Some(&Json::Null));
+        // State payloads hex-encode.
+        let j = response_to_json(&Response::State {
+            stream: "s".into(),
+            state: vec![0xAB, 0x01],
+        });
+        assert_eq!(j.get("state").and_then(Json::as_str), Some("ab01"));
+        // Streams directory flattens to names.
+        let j = response_to_json(&Response::Streams {
+            streams: vec![StreamInfo {
+                name: "a".into(),
+                handle: 3,
+                dim: 2,
+            }],
+        });
+        assert_eq!(
+            j.get("streams").and_then(Json::as_arr).map(<[_]>::len),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn handles_roundtrip_exactly_above_f64_precision() {
+        // Time-seeded handles exceed 2^53; a JSON number would round
+        // them. They must survive the v1 envelope bit-exactly.
+        let h = (1u64 << 60) | 12_345;
+        for (resp, kind) in [
+            (Response::Registered { handle: h }, OpKind::Register),
+            (Response::Resolved { handle: h, dim: 4 }, OpKind::Resolve),
+        ] {
+            let j = response_to_json(&resp);
+            assert_eq!(response_from_json(kind, &j).unwrap(), resp);
+        }
+        // Small numeric handles are still accepted (forgiving parse).
+        let j = ok_response(vec![("handle", Json::Num(7.0)), ("dim", Json::Num(2.0))]);
+        assert_eq!(
+            response_from_json(OpKind::Resolve, &j).unwrap(),
+            Response::Resolved { handle: 7, dim: 2 }
+        );
+    }
+
+    #[test]
+    fn response_decode_matches_op_kind() {
+        let j = response_to_json(&Response::PushedMany {
+            accepted: 7,
+            dropped: 2,
+        });
+        assert_eq!(
+            response_from_json(OpKind::PushMany, &j).unwrap(),
+            Response::PushedMany {
+                accepted: 7,
+                dropped: 2
+            }
+        );
+        // Error envelopes decode regardless of kind.
+        let e = err_response("nope");
+        assert_eq!(
+            response_from_json(OpKind::Snapshot, &e).unwrap(),
+            Response::Err("nope".into())
+        );
+        // Foreign version on a response is a client-side error.
+        let mut bad = match response_to_json(&Response::Pong) {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        bad.insert("v".into(), Json::Num(42.0));
+        assert!(response_from_json(OpKind::Ping, &Json::Obj(bad)).is_err());
+        // A response with no 'ok' is malformed.
+        assert!(response_from_json(OpKind::Ping, &Json::obj(vec![])).is_err());
+    }
+}

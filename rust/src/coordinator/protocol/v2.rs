@@ -1,0 +1,765 @@
+//! Protocol v2: the binary handle-addressed codec.
+//!
+//! Frames are built from the persist layer's bounds-checked [`Enc`] /
+//! [`Dec`] primitives — little-endian integers and raw-bit f64 runs, so
+//! a `push_many` batch is `memcpy`-shaped on both ends and state
+//! payloads travel as raw CRC-framed bytes instead of hex text.
+//!
+//! ## Request frame payload
+//!
+//! ```text
+//! [seq: u64] [op: u8] [op-specific fields]
+//! ```
+//!
+//! `seq` is the client-chosen pipelining id; the matching response
+//! echoes it. Hot ops carry the `u64` stream handle `register` /
+//! `resolve` returned instead of a name.
+//!
+//! ## Response frame payload
+//!
+//! ```text
+//! [seq: u64] [status: u8]            status 1 (error): [message: str]
+//!                                    status 0 (ok):    [op: u8] [body]
+//! ```
+//!
+//! The op tag on success frames lets a pipelined client cross-check
+//! that the response it matched by id answers the op it recorded.
+//!
+//! Every getter is bounds-checked by [`Dec`]; hostile lengths error
+//! before allocating (the frame layer already capped the payload at
+//! [`super::MAX_FRAME`]), and trailing garbage after a well-formed
+//! request is rejected — the fuzz suite drives both properties.
+
+use super::{MultiOutcome, MultiPushEntry, OpKind, Request, Response, StreamInfo, StreamRef};
+use crate::persist::codec::{Dec, Enc};
+use crate::util::json::Json;
+
+// Op tags (request op byte; echoed on success responses).
+const OP_PING: u8 = 1;
+const OP_REGISTER: u8 = 2;
+const OP_RESOLVE: u8 = 3;
+const OP_PUSH: u8 = 4;
+const OP_PUSH_MANY: u8 = 5;
+const OP_MULTI_PUSH: u8 = 6;
+const OP_SNAPSHOT: u8 = 7;
+const OP_SYNC: u8 = 8;
+const OP_METRICS: u8 = 9;
+const OP_LIST: u8 = 10;
+const OP_CHECKPOINT: u8 = 11;
+const OP_EXPORT_STATE: u8 = 12;
+const OP_RESTORE: u8 = 13;
+const OP_MERGE_STATE: u8 = 14;
+
+const STATUS_OK: u8 = 0;
+const STATUS_ERR: u8 = 1;
+
+fn op_tag(kind: OpKind) -> u8 {
+    match kind {
+        OpKind::Ping => OP_PING,
+        OpKind::Register => OP_REGISTER,
+        OpKind::Resolve => OP_RESOLVE,
+        OpKind::Push => OP_PUSH,
+        OpKind::PushMany => OP_PUSH_MANY,
+        OpKind::MultiPush => OP_MULTI_PUSH,
+        OpKind::Snapshot => OP_SNAPSHOT,
+        OpKind::Sync => OP_SYNC,
+        OpKind::Metrics => OP_METRICS,
+        OpKind::List => OP_LIST,
+        OpKind::Checkpoint => OP_CHECKPOINT,
+        OpKind::ExportState => OP_EXPORT_STATE,
+        OpKind::Restore => OP_RESTORE,
+        OpKind::MergeState => OP_MERGE_STATE,
+    }
+}
+
+/// A `usize` that must fit the wire's u32 fields (counts, lengths,
+/// dims). `Err` instead of the silent truncation `as u32` would do —
+/// a caller's bookkeeping bug must not turn into a validly-shaped
+/// (wrong) batch.
+fn u32_field(label: &str, v: usize) -> Result<u32, String> {
+    u32::try_from(v).map_err(|_| format!("{label} {v} exceeds the wire's u32 field"))
+}
+
+/// The handle of a v2 stream ref; `Err` on a name — hot ops must have
+/// resolved it already (that is the whole point of the redesign).
+fn handle_of(r: &StreamRef) -> Result<u64, String> {
+    match r {
+        StreamRef::Handle(h) => Ok(*h),
+        StreamRef::Name(n) => Err(format!(
+            "protocol v2 addresses stream '{n}' by handle — register or resolve it first"
+        )),
+    }
+}
+
+/// Encode a request into `out` (cleared first; the allocation is
+/// reused, so pooled buffers stay pooled).
+pub fn encode_request(seq: u64, req: &Request, out: &mut Vec<u8>) -> Result<(), String> {
+    let mut e = Enc::with_buf(std::mem::take(out));
+    e.put_u64(seq);
+    e.put_u8(op_tag(req.kind()));
+    match req {
+        Request::Ping
+        | Request::Sync
+        | Request::Metrics
+        | Request::ListStreams
+        | Request::Checkpoint => {}
+        Request::Register { stream, dim, spec } => {
+            e.put_str(stream);
+            e.put_u32(u32_field("dim", *dim)?);
+            e.put_str(spec);
+        }
+        Request::Resolve { stream } => e.put_str(stream),
+        Request::Push { stream, data } => {
+            e.put_u64(handle_of(stream)?);
+            e.put_u32(u32_field("sample length", data.len())?);
+            e.put_f64_raw(data);
+        }
+        Request::PushMany {
+            stream,
+            count,
+            data,
+        } => {
+            e.put_u64(handle_of(stream)?);
+            e.put_u32(u32_field("batch count", *count)?);
+            e.put_u32(u32_field("batch length", data.len())?);
+            e.put_f64_raw(data);
+        }
+        Request::MultiPush { entries } => {
+            e.put_u32(u32_field("entry count", entries.len())?);
+            for ent in entries {
+                e.put_u64(ent.handle);
+                e.put_u32(u32_field("batch count", ent.count)?);
+                e.put_u32(u32_field("batch length", ent.data.len())?);
+                e.put_f64_raw(&ent.data);
+            }
+        }
+        Request::Snapshot { stream } | Request::ExportState { stream } => {
+            e.put_u64(handle_of(stream)?);
+        }
+        Request::Restore { stream, state } | Request::MergeState { stream, state } => {
+            e.put_u64(handle_of(stream)?);
+            e.put_bytes(state);
+        }
+    }
+    *out = e.into_bytes();
+    Ok(())
+}
+
+/// Borrowed fast-path encoder for the hot `push_many` op: frames the
+/// caller's slice straight into `out` — no intermediate owned
+/// [`Request`], no second O(batch) copy. Byte-identical to encoding
+/// `Request::PushMany { stream: Handle(handle), .. }`.
+pub fn encode_push_many(
+    seq: u64,
+    handle: u64,
+    count: usize,
+    data: &[f64],
+    out: &mut Vec<u8>,
+) -> Result<(), String> {
+    let count = u32_field("batch count", count)?;
+    let len = u32_field("batch length", data.len())?;
+    let mut e = Enc::with_buf(std::mem::take(out));
+    e.put_u64(seq);
+    e.put_u8(OP_PUSH_MANY);
+    e.put_u64(handle);
+    e.put_u32(count);
+    e.put_u32(len);
+    e.put_f64_raw(data);
+    *out = e.into_bytes();
+    Ok(())
+}
+
+/// Borrowed fast-path encoder for `multi_push`: one frame, many
+/// borrowed `(handle, count, samples)` batches. Byte-identical to
+/// encoding the equivalent [`Request::MultiPush`].
+pub fn encode_multi_push(
+    seq: u64,
+    entries: &[(u64, usize, &[f64])],
+    out: &mut Vec<u8>,
+) -> Result<(), String> {
+    let n = u32_field("entry count", entries.len())?;
+    let mut e = Enc::with_buf(std::mem::take(out));
+    e.put_u64(seq);
+    e.put_u8(OP_MULTI_PUSH);
+    e.put_u32(n);
+    for (handle, count, data) in entries {
+        e.put_u64(*handle);
+        e.put_u32(u32_field("batch count", *count)?);
+        e.put_u32(u32_field("batch length", data.len())?);
+        e.put_f64_raw(data);
+    }
+    *out = e.into_bytes();
+    Ok(())
+}
+
+/// Decode a request payload into `(seq, request)`.
+pub fn decode_request(payload: &[u8]) -> Result<(u64, Request), String> {
+    let mut d = Dec::new(payload);
+    let seq = d.get_u64()?;
+    let op = d.get_u8()?;
+    let req = match op {
+        OP_PING => Request::Ping,
+        OP_REGISTER => Request::Register {
+            stream: d.get_str()?,
+            dim: d.get_u32()? as usize,
+            spec: d.get_str()?,
+        },
+        OP_RESOLVE => Request::Resolve {
+            stream: d.get_str()?,
+        },
+        OP_PUSH => {
+            let handle = d.get_u64()?;
+            let len = d.get_u32()? as usize;
+            Request::Push {
+                stream: StreamRef::Handle(handle),
+                data: d.get_f64_raw(len)?,
+            }
+        }
+        OP_PUSH_MANY => {
+            let handle = d.get_u64()?;
+            let count = d.get_u32()? as usize;
+            let len = d.get_u32()? as usize;
+            Request::PushMany {
+                stream: StreamRef::Handle(handle),
+                count,
+                data: d.get_f64_raw(len)?,
+            }
+        }
+        OP_MULTI_PUSH => {
+            let n = d.get_u32()? as usize;
+            // No pre-reservation from the wire-claimed count: a hostile
+            // n must run out of payload bytes, not of memory.
+            let mut entries = Vec::new();
+            for _ in 0..n {
+                let handle = d.get_u64()?;
+                let count = d.get_u32()? as usize;
+                let len = d.get_u32()? as usize;
+                entries.push(MultiPushEntry {
+                    handle,
+                    count,
+                    data: d.get_f64_raw(len)?,
+                });
+            }
+            Request::MultiPush { entries }
+        }
+        OP_SNAPSHOT => Request::Snapshot {
+            stream: StreamRef::Handle(d.get_u64()?),
+        },
+        OP_SYNC => Request::Sync,
+        OP_METRICS => Request::Metrics,
+        OP_LIST => Request::ListStreams,
+        OP_CHECKPOINT => Request::Checkpoint,
+        OP_EXPORT_STATE => Request::ExportState {
+            stream: StreamRef::Handle(d.get_u64()?),
+        },
+        OP_RESTORE => Request::Restore {
+            stream: StreamRef::Handle(d.get_u64()?),
+            state: d.get_bytes()?.to_vec(),
+        },
+        OP_MERGE_STATE => Request::MergeState {
+            stream: StreamRef::Handle(d.get_u64()?),
+            state: d.get_bytes()?.to_vec(),
+        },
+        other => return Err(format!("unknown v2 op tag {other}")),
+    };
+    if d.remaining() != 0 {
+        return Err(format!(
+            "{} trailing bytes after a well-formed request",
+            d.remaining()
+        ));
+    }
+    Ok((seq, req))
+}
+
+/// Encode a response into `out` (cleared first).
+pub fn encode_response(seq: u64, resp: &Response, out: &mut Vec<u8>) -> Result<(), String> {
+    let mut e = Enc::with_buf(std::mem::take(out));
+    e.put_u64(seq);
+    match resp {
+        Response::Err(msg) => {
+            e.put_u8(STATUS_ERR);
+            e.put_str(msg);
+        }
+        ok => {
+            e.put_u8(STATUS_OK);
+            match ok {
+                Response::Err(_) => unreachable!("handled above"),
+                Response::Pong => e.put_u8(OP_PING),
+                Response::Registered { handle } => {
+                    e.put_u8(OP_REGISTER);
+                    e.put_u64(*handle);
+                }
+                Response::Resolved { handle, dim } => {
+                    e.put_u8(OP_RESOLVE);
+                    e.put_u64(*handle);
+                    e.put_u32(*dim as u32);
+                }
+                Response::Pushed { accepted } => {
+                    e.put_u8(OP_PUSH);
+                    e.put_u8(*accepted as u8);
+                }
+                Response::PushedMany { accepted, dropped } => {
+                    e.put_u8(OP_PUSH_MANY);
+                    e.put_u64(*accepted);
+                    e.put_u64(*dropped);
+                }
+                Response::MultiPushed { outcomes } => {
+                    e.put_u8(OP_MULTI_PUSH);
+                    e.put_u32(outcomes.len() as u32);
+                    for o in outcomes {
+                        match o {
+                            MultiOutcome::Accepted => e.put_u8(0),
+                            MultiOutcome::Dropped => e.put_u8(1),
+                            MultiOutcome::Rejected(msg) => {
+                                e.put_u8(2);
+                                e.put_str(msg);
+                            }
+                        }
+                    }
+                }
+                Response::Snap {
+                    stream,
+                    t,
+                    window_len,
+                    dropped,
+                    value,
+                } => {
+                    e.put_u8(OP_SNAPSHOT);
+                    e.put_str(stream);
+                    e.put_u64(*t);
+                    e.put_f64(*window_len);
+                    e.put_u64(*dropped);
+                    match value {
+                        Some(v) => {
+                            e.put_u8(1);
+                            e.put_u32(v.len() as u32);
+                            e.put_f64_raw(v);
+                        }
+                        None => e.put_u8(0),
+                    }
+                }
+                Response::Synced => e.put_u8(OP_SYNC),
+                Response::Metrics { body } => {
+                    e.put_u8(OP_METRICS);
+                    e.put_str(&body.encode());
+                }
+                Response::Streams { streams } => {
+                    e.put_u8(OP_LIST);
+                    e.put_u32(streams.len() as u32);
+                    for s in streams {
+                        e.put_str(&s.name);
+                        e.put_u64(s.handle);
+                        e.put_u32(s.dim as u32);
+                    }
+                }
+                Response::Checkpointed {
+                    path,
+                    seq: snap_seq,
+                    bytes,
+                    streams,
+                    wal_segments_removed,
+                } => {
+                    e.put_u8(OP_CHECKPOINT);
+                    e.put_str(path);
+                    e.put_u64(*snap_seq);
+                    e.put_u64(*bytes);
+                    e.put_u64(*streams);
+                    e.put_u64(*wal_segments_removed);
+                }
+                Response::State { stream, state } => {
+                    e.put_u8(OP_EXPORT_STATE);
+                    e.put_str(stream);
+                    e.put_bytes(state);
+                }
+                Response::Restored { t } => {
+                    e.put_u8(OP_RESTORE);
+                    e.put_u64(*t);
+                }
+                Response::Merged { t } => {
+                    e.put_u8(OP_MERGE_STATE);
+                    e.put_u64(*t);
+                }
+            }
+        }
+    }
+    *out = e.into_bytes();
+    Ok(())
+}
+
+/// Decode a response payload into `(seq, response)`, cross-checking a
+/// success frame's op tag against the op `kind` the caller recorded for
+/// that seq (error frames carry no tag and decode for any kind).
+pub fn decode_response(kind: OpKind, payload: &[u8]) -> Result<(u64, Response), String> {
+    let mut d = Dec::new(payload);
+    let seq = d.get_u64()?;
+    let status = d.get_u8()?;
+    if status == STATUS_ERR {
+        let msg = d.get_str()?;
+        if d.remaining() != 0 {
+            return Err(format!(
+                "{} trailing bytes after a well-formed error response",
+                d.remaining()
+            ));
+        }
+        return Ok((seq, Response::Err(msg)));
+    }
+    if status != STATUS_OK {
+        return Err(format!("unknown response status {status}"));
+    }
+    let tag = d.get_u8()?;
+    let want = op_tag(kind);
+    if tag != want {
+        return Err(format!(
+            "response op tag {tag} does not answer the recorded op (tag {want}) — \
+             pipeline bookkeeping is broken"
+        ));
+    }
+    let resp = match tag {
+        OP_PING => Response::Pong,
+        OP_REGISTER => Response::Registered {
+            handle: d.get_u64()?,
+        },
+        OP_RESOLVE => Response::Resolved {
+            handle: d.get_u64()?,
+            dim: d.get_u32()? as usize,
+        },
+        OP_PUSH => Response::Pushed {
+            accepted: d.get_u8()? != 0,
+        },
+        OP_PUSH_MANY => Response::PushedMany {
+            accepted: d.get_u64()?,
+            dropped: d.get_u64()?,
+        },
+        OP_MULTI_PUSH => {
+            let n = d.get_u32()? as usize;
+            let mut outcomes = Vec::new();
+            for _ in 0..n {
+                outcomes.push(match d.get_u8()? {
+                    0 => MultiOutcome::Accepted,
+                    1 => MultiOutcome::Dropped,
+                    2 => MultiOutcome::Rejected(d.get_str()?),
+                    other => return Err(format!("unknown multi_push outcome tag {other}")),
+                });
+            }
+            Response::MultiPushed { outcomes }
+        }
+        OP_SNAPSHOT => {
+            let stream = d.get_str()?;
+            let t = d.get_u64()?;
+            let window_len = d.get_f64()?;
+            let dropped = d.get_u64()?;
+            let value = match d.get_u8()? {
+                0 => None,
+                _ => {
+                    let len = d.get_u32()? as usize;
+                    Some(d.get_f64_raw(len)?)
+                }
+            };
+            Response::Snap {
+                stream,
+                t,
+                window_len,
+                dropped,
+                value,
+            }
+        }
+        OP_SYNC => Response::Synced,
+        OP_METRICS => {
+            let text = d.get_str()?;
+            Response::Metrics {
+                body: Json::parse(&text).map_err(|e| e.to_string())?,
+            }
+        }
+        OP_LIST => {
+            let n = d.get_u32()? as usize;
+            let mut streams = Vec::new();
+            for _ in 0..n {
+                streams.push(StreamInfo {
+                    name: d.get_str()?,
+                    handle: d.get_u64()?,
+                    dim: d.get_u32()? as usize,
+                });
+            }
+            Response::Streams { streams }
+        }
+        OP_CHECKPOINT => Response::Checkpointed {
+            path: d.get_str()?,
+            seq: d.get_u64()?,
+            bytes: d.get_u64()?,
+            streams: d.get_u64()?,
+            wal_segments_removed: d.get_u64()?,
+        },
+        OP_EXPORT_STATE => Response::State {
+            stream: d.get_str()?,
+            state: d.get_bytes()?.to_vec(),
+        },
+        OP_RESTORE => Response::Restored { t: d.get_u64()? },
+        OP_MERGE_STATE => Response::Merged { t: d.get_u64()? },
+        other => return Err(format!("unknown v2 response op tag {other}")),
+    };
+    if d.remaining() != 0 {
+        return Err(format!(
+            "{} trailing bytes after a well-formed response",
+            d.remaining()
+        ));
+    }
+    Ok((seq, resp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn href(h: u64) -> StreamRef {
+        StreamRef::Handle(h)
+    }
+
+    #[test]
+    fn every_request_roundtrips_bytewise() {
+        let reqs = vec![
+            Request::Ping,
+            Request::Register {
+                stream: "layer0.weight".into(),
+                dim: 8,
+                spec: "awa3(c=0.5)".into(),
+            },
+            Request::Resolve {
+                stream: "layer0.weight".into(),
+            },
+            Request::Push {
+                stream: href(7),
+                data: vec![1.0, -2.5, f64::MIN_POSITIVE],
+            },
+            Request::PushMany {
+                stream: href(9),
+                count: 2,
+                data: vec![1.0, 2.0, 3.0, 4.0],
+            },
+            Request::MultiPush {
+                entries: vec![
+                    MultiPushEntry {
+                        handle: 1,
+                        count: 1,
+                        data: vec![0.5, 0.25],
+                    },
+                    MultiPushEntry {
+                        handle: 2,
+                        count: 3,
+                        data: vec![9.0, 8.0, 7.0],
+                    },
+                ],
+            },
+            Request::Snapshot { stream: href(1) },
+            Request::Sync,
+            Request::Metrics,
+            Request::ListStreams,
+            Request::Checkpoint,
+            Request::ExportState { stream: href(3) },
+            Request::Restore {
+                stream: href(3),
+                state: vec![0x41, 0x54, 0x41, 0x45],
+            },
+            Request::MergeState {
+                stream: href(3),
+                state: vec![],
+            },
+        ];
+        for (i, r) in reqs.into_iter().enumerate() {
+            let seq = 1000 + i as u64;
+            let mut buf = Vec::new();
+            encode_request(seq, &r, &mut buf).unwrap();
+            let (got_seq, back) = decode_request(&buf).unwrap();
+            assert_eq!(got_seq, seq);
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn every_response_roundtrips_bytewise() {
+        let cases: Vec<(OpKind, Response)> = vec![
+            (OpKind::Ping, Response::Pong),
+            (OpKind::Register, Response::Registered { handle: 42 }),
+            (OpKind::Resolve, Response::Resolved { handle: 42, dim: 16 }),
+            (OpKind::Push, Response::Pushed { accepted: true }),
+            (
+                OpKind::PushMany,
+                Response::PushedMany {
+                    accepted: 100,
+                    dropped: 3,
+                },
+            ),
+            (
+                OpKind::MultiPush,
+                Response::MultiPushed {
+                    outcomes: vec![
+                        MultiOutcome::Accepted,
+                        MultiOutcome::Dropped,
+                        MultiOutcome::Rejected("no stream with handle 9".into()),
+                    ],
+                },
+            ),
+            (
+                OpKind::Snapshot,
+                Response::Snap {
+                    stream: "w".into(),
+                    t: 7,
+                    window_len: 3.5,
+                    dropped: 1,
+                    value: Some(vec![1.0, -0.0, f64::MAX]),
+                },
+            ),
+            (
+                OpKind::Snapshot,
+                Response::Snap {
+                    stream: "empty".into(),
+                    t: 0,
+                    window_len: 0.0,
+                    dropped: 0,
+                    value: None,
+                },
+            ),
+            (OpKind::Sync, Response::Synced),
+            (
+                OpKind::List,
+                Response::Streams {
+                    streams: vec![StreamInfo {
+                        name: "a".into(),
+                        handle: 5,
+                        dim: 3,
+                    }],
+                },
+            ),
+            (
+                OpKind::Checkpoint,
+                Response::Checkpointed {
+                    path: "/x/snap-7".into(),
+                    seq: 7,
+                    bytes: 1024,
+                    streams: 3,
+                    wal_segments_removed: 2,
+                },
+            ),
+            (
+                OpKind::ExportState,
+                Response::State {
+                    stream: "w".into(),
+                    state: vec![1, 2, 3],
+                },
+            ),
+            (OpKind::Restore, Response::Restored { t: 20 }),
+            (OpKind::MergeState, Response::Merged { t: 33 }),
+        ];
+        for (kind, resp) in cases {
+            let mut buf = Vec::new();
+            encode_response(5, &resp, &mut buf).unwrap();
+            let (seq, back) = decode_response(kind, &buf).unwrap();
+            assert_eq!(seq, 5);
+            assert_eq!(back, resp);
+        }
+        // Error frames decode under any kind.
+        let mut buf = Vec::new();
+        encode_response(9, &Response::Err("boom".into()), &mut buf).unwrap();
+        for kind in [OpKind::Ping, OpKind::Snapshot, OpKind::MultiPush] {
+            assert_eq!(
+                decode_response(kind, &buf).unwrap(),
+                (9, Response::Err("boom".into()))
+            );
+        }
+    }
+
+    #[test]
+    fn borrowed_fast_paths_are_byte_identical_to_owned_encoding() {
+        let data = vec![1.5, -2.5, 3.25, -4.75];
+        let mut fast = Vec::new();
+        encode_push_many(42, 7, 2, &data, &mut fast).unwrap();
+        let mut owned = Vec::new();
+        encode_request(
+            42,
+            &Request::PushMany {
+                stream: href(7),
+                count: 2,
+                data: data.clone(),
+            },
+            &mut owned,
+        )
+        .unwrap();
+        assert_eq!(fast, owned);
+
+        let entries = [(1u64, 1usize, &data[..2]), (2u64, 2usize, &data[..])];
+        encode_multi_push(43, &entries, &mut fast).unwrap();
+        encode_request(
+            43,
+            &Request::MultiPush {
+                entries: entries
+                    .iter()
+                    .map(|(h, n, d)| MultiPushEntry {
+                        handle: *h,
+                        count: *n,
+                        data: d.to_vec(),
+                    })
+                    .collect(),
+            },
+            &mut owned,
+        )
+        .unwrap();
+        assert_eq!(fast, owned);
+    }
+
+    #[test]
+    fn name_refs_are_not_encodable_on_hot_ops() {
+        let mut buf = Vec::new();
+        let err = encode_request(
+            1,
+            &Request::Push {
+                stream: StreamRef::Name("w".into()),
+                data: vec![1.0],
+            },
+            &mut buf,
+        )
+        .unwrap_err();
+        assert!(err.contains("handle"), "{err}");
+    }
+
+    #[test]
+    fn trailing_and_truncated_bytes_are_errors() {
+        let mut buf = Vec::new();
+        encode_request(3, &Request::Ping, &mut buf).unwrap();
+        let mut padded = buf.clone();
+        padded.push(0);
+        assert!(decode_request(&padded).is_err());
+        // Every truncation of a data-bearing frame errors, never panics.
+        encode_request(
+            4,
+            &Request::PushMany {
+                stream: href(1),
+                count: 2,
+                data: vec![1.0, 2.0, 3.0, 4.0],
+            },
+            &mut buf,
+        )
+        .unwrap();
+        for cut in 0..buf.len() {
+            assert!(decode_request(&buf[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn op_tag_mismatch_is_a_pipeline_error() {
+        let mut buf = Vec::new();
+        encode_response(2, &Response::Pong, &mut buf).unwrap();
+        let err = decode_response(OpKind::Snapshot, &buf).unwrap_err();
+        assert!(err.contains("pipeline"), "{err}");
+    }
+
+    #[test]
+    fn hostile_multi_push_count_runs_out_of_bytes_not_memory() {
+        // Claim u32::MAX entries with a near-empty payload: the decoder
+        // must fail on exhausted input without a giant pre-reservation.
+        let mut e = Enc::new();
+        e.put_u64(1);
+        e.put_u8(OP_MULTI_PUSH);
+        e.put_u32(u32::MAX);
+        e.put_u64(7); // one partial entry
+        assert!(decode_request(e.as_bytes()).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! Frame layer shared by both protocol generations.
+//!
+//! A frame is a 4-byte big-endian payload length followed by the
+//! payload bytes: UTF-8 JSON text under protocol v1, an `Enc`-built
+//! binary record under protocol v2. The frame layer is codec-agnostic —
+//! it moves byte payloads and enforces [`MAX_FRAME`] in **both**
+//! directions: a hostile length prefix must not trigger a giant
+//! allocation, and an oversized response must surface as a structured
+//! error instead of being written and killing the peer's read loop.
+
+use crate::util::json::Json;
+use std::io::{Read, Write};
+
+/// Upper bound on a frame payload (64 MiB — an 8M-float snapshot).
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Write one frame. Payloads over [`MAX_FRAME`] are refused with
+/// `InvalidData` *before* any byte hits the socket, so the connection
+/// stays at a clean frame boundary and the caller can send a structured
+/// error instead.
+pub fn write_frame_bytes(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!(
+                "frame of {} bytes exceeds MAX_FRAME ({MAX_FRAME})",
+                payload.len()
+            ),
+        ));
+    }
+    let len = (payload.len() as u32).to_be_bytes();
+    w.write_all(&len)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame's payload into `buf` (cleared and resized to the
+/// payload length, so a pooled buffer's allocation is reused across
+/// frames); `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame_into(r: &mut impl Read, buf: &mut Vec<u8>) -> std::io::Result<Option<()>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds MAX_FRAME"),
+        ));
+    }
+    buf.clear();
+    buf.resize(len, 0);
+    r.read_exact(buf)?;
+    Ok(Some(()))
+}
+
+/// Largest capacity worth keeping in a long-lived frame buffer between
+/// frames. `read_frame_into`/encode paths grow a reused buffer to each
+/// frame's size; without a trim, ONE outsized state-transfer frame
+/// (up to [`MAX_FRAME`] = 64 MiB) would pin that capacity for the rest
+/// of the connection.
+pub const BUF_HIGH_WATER: usize = 1 << 20;
+
+/// Trim a reused frame buffer back to [`BUF_HIGH_WATER`] if an
+/// outsized frame grew it past that — call between frames on
+/// long-lived connections. The buffer's CONTENTS are not preserved;
+/// only call it when the previous frame has been fully consumed.
+pub fn trim_buf(buf: &mut Vec<u8>) {
+    if buf.capacity() > BUF_HIGH_WATER {
+        buf.truncate(BUF_HIGH_WATER);
+        buf.shrink_to(BUF_HIGH_WATER);
+    }
+}
+
+/// Write one v1 JSON frame (the legacy helper, kept as the public
+/// surface for driving a v1 peer byte-by-byte in tests and tools).
+pub fn write_frame(w: &mut impl Write, payload: &Json) -> std::io::Result<()> {
+    write_frame_bytes(w, payload.encode().as_bytes())
+}
+
+/// Read one v1 JSON frame; `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Json>> {
+    let mut buf = Vec::new();
+    match read_frame_into(r, &mut buf)? {
+        None => Ok(None),
+        Some(()) => {
+            let text = std::str::from_utf8(&buf)
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+            let json = Json::parse(text)
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+            Ok(Some(json))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip_over_buffer() {
+        let mut buf: Vec<u8> = Vec::new();
+        let a = Json::obj(vec![("op", Json::Str("ping".into()))]);
+        let b = Json::nums(&[0.5; 10]);
+        write_frame(&mut buf, &a).unwrap();
+        write_frame(&mut buf, &b).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cursor).unwrap().unwrap(), a);
+        assert_eq!(read_frame(&mut cursor).unwrap().unwrap(), b);
+        assert!(read_frame(&mut cursor).unwrap().is_none()); // clean EOF
+    }
+
+    #[test]
+    fn oversized_inbound_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_be_bytes());
+        buf.extend_from_slice(b"xxxx");
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn oversized_outbound_frame_refused_before_writing() {
+        // The write side must check BEFORE emitting anything: a partial
+        // giant frame would desynchronize the peer's read loop.
+        let payload = vec![0u8; MAX_FRAME + 1];
+        let mut out: Vec<u8> = Vec::new();
+        let err = write_frame_bytes(&mut out, &payload).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(out.is_empty(), "nothing may be written for an oversized frame");
+        // At the bound it goes through.
+        let ok = vec![0u8; 8];
+        write_frame_bytes(&mut out, &ok).unwrap();
+        assert_eq!(out.len(), 4 + 8);
+    }
+
+    #[test]
+    fn truncated_frame_is_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Json::Num(1.0)).unwrap();
+        buf.truncate(buf.len() - 1);
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn trim_buf_releases_outsized_capacity_only() {
+        let mut small = Vec::with_capacity(128);
+        small.extend_from_slice(b"abc");
+        trim_buf(&mut small);
+        assert_eq!(small, b"abc", "under the high-water mark: untouched");
+        let mut big: Vec<u8> = Vec::with_capacity(BUF_HIGH_WATER * 4);
+        big.resize(BUF_HIGH_WATER * 2, 7);
+        trim_buf(&mut big);
+        assert!(
+            big.capacity() <= BUF_HIGH_WATER * 2,
+            "outsized capacity released (got {})",
+            big.capacity()
+        );
+    }
+
+    #[test]
+    fn read_frame_into_reuses_the_buffer() {
+        let mut wire = Vec::new();
+        write_frame_bytes(&mut wire, b"abcdef").unwrap();
+        write_frame_bytes(&mut wire, b"xy").unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        let mut buf = Vec::with_capacity(64);
+        assert!(read_frame_into(&mut cursor, &mut buf).unwrap().is_some());
+        assert_eq!(&buf, b"abcdef");
+        let cap = buf.capacity();
+        assert!(read_frame_into(&mut cursor, &mut buf).unwrap().is_some());
+        assert_eq!(&buf, b"xy");
+        assert_eq!(buf.capacity(), cap, "no reallocation for a smaller frame");
+        assert!(read_frame_into(&mut cursor, &mut buf).unwrap().is_none());
+    }
+}

@@ -1,14 +1,26 @@
-//! TCP service exposing the coordinator over the wire protocol.
+//! TCP service exposing the coordinator over the negotiated wire
+//! protocol.
+//!
+//! Each connection negotiates its codec once ([`protocol`] hello
+//! auto-detection), then loops: read a frame into a pooled buffer,
+//! decode, dispatch, encode into a pooled buffer, write. Under v2 the
+//! response writer is shared behind a mutex so barrier-like ops
+//! (`sync`, `checkpoint`) can complete **out of order** on a side pool
+//! — a pipelined producer's pushes are never stalled behind a barrier's
+//! latency, while v1 connections keep the strict request→response
+//! order legacy clients match positionally.
 
 use super::core::{Coordinator, PushOutcome};
-use super::protocol::{err_response, ok_response, read_frame, write_frame, Request};
+use super::protocol::{
+    self, v1, wire, ProtocolChoice, Request, Response, StreamInfo, StreamRef, Wire,
+};
 use crate::averagers::AveragerSpec;
-use crate::persist::codec;
+use crate::metrics::{names, Counter};
 use crate::util::json::Json;
-use crate::util::pool::ThreadPool;
+use crate::util::pool::{BufferPool, ThreadPool};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// A running TCP server; drop (or call [`Server::shutdown`]) to stop.
 pub struct Server {
@@ -21,28 +33,83 @@ pub struct Server {
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
-type ConnRegistry = Arc<std::sync::Mutex<std::collections::HashMap<u64, TcpStream>>>;
+type ConnRegistry = Arc<Mutex<std::collections::HashMap<u64, TcpStream>>>;
+
+/// Per-server state shared by every connection handler.
+struct ConnShared {
+    coordinator: Arc<Coordinator>,
+    choice: ProtocolChoice,
+    /// Pooled frame read/encode scratch, shared across connections and
+    /// the out-of-order completion jobs — connection churn and response
+    /// encoding reuse parked byte buffers instead of allocating.
+    bytes: BufferPool<u8>,
+    /// Side pool completing v2 `sync`/`checkpoint` out of order. Behind
+    /// a mutex only for submission (`mpsc::Sender` is not `Sync` on
+    /// older toolchains); the jobs themselves run unlocked.
+    slow: Mutex<ThreadPool>,
+    frames_in: Arc<Counter>,
+    frames_out: Arc<Counter>,
+    conns_v1: Arc<Counter>,
+    conns_v2: Arc<Counter>,
+    oversized: Arc<Counter>,
+}
 
 impl Server {
     /// Bind `addr` (use port 0 for an ephemeral port) and serve
-    /// `coordinator` with `workers` connection-handler threads.
+    /// `coordinator` with `workers` connection-handler threads,
+    /// negotiating the protocol per connection ([`ProtocolChoice::Auto`]).
     pub fn start(
         addr: &str,
         coordinator: Arc<Coordinator>,
         workers: usize,
+    ) -> Result<Server, String> {
+        Server::start_with(addr, coordinator, workers, ProtocolChoice::Auto)
+    }
+
+    /// As [`Server::start`] with an explicit protocol policy: `V1`
+    /// never answers a hello with v2 (legacy emulation / staged
+    /// rollouts), `V2` refuses no-hello JSON peers with a structured
+    /// error.
+    pub fn start_with(
+        addr: &str,
+        coordinator: Arc<Coordinator>,
+        workers: usize,
+        choice: ProtocolChoice,
     ) -> Result<Server, String> {
         let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
         let local = listener.local_addr().map_err(|e| e.to_string())?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let conns: ConnRegistry =
-            Arc::new(std::sync::Mutex::new(std::collections::HashMap::new()));
+            Arc::new(Mutex::new(std::collections::HashMap::new()));
         let conns2 = conns.clone();
-        let pool = ThreadPool::new(workers.max(1));
+        let frames_in = coordinator.metrics().counter(names::FRAMES_IN);
+        let frames_out = coordinator.metrics().counter(names::FRAMES_OUT);
+        let conns_v1 = coordinator.metrics().counter(names::CONNECTIONS_V1);
+        let conns_v2 = coordinator.metrics().counter(names::CONNECTIONS_V2);
+        let oversized = coordinator.metrics().counter(names::OVERSIZED_RESPONSES);
+        let shared = Arc::new(ConnShared {
+            coordinator,
+            choice,
+            bytes: BufferPool::new(64),
+            // One barrier slot per connection-handler thread: a slow
+            // checkpoint on one connection must not head-of-line block
+            // another connection's instant sync.
+            slow: Mutex::new(ThreadPool::new(workers.max(2))),
+            frames_in,
+            frames_out,
+            conns_v1,
+            conns_v2,
+            oversized,
+        });
         let accept_thread = std::thread::Builder::new()
             .name("ata-accept".to_string())
             .spawn(move || {
                 let mut next_id: u64 = 0;
+                // Handler pool declared AFTER `shared` is in scope so it
+                // drops first on exit: handlers join before the slow
+                // pool inside `shared` winds down.
+                let pool = ThreadPool::new(workers.max(1));
                 for conn in listener.incoming() {
                     if stop2.load(Ordering::SeqCst) {
                         break;
@@ -59,10 +126,10 @@ impl Server {
                             if let Ok(clone) = stream.try_clone() {
                                 conns2.lock().expect("conn registry").insert(id, clone);
                             }
-                            let c = coordinator.clone();
+                            let sh = Arc::clone(&shared);
                             let reg = conns2.clone();
                             pool.execute(move || {
-                                handle_connection(stream, &c);
+                                handle_connection(stream, &sh);
                                 reg.lock().expect("conn registry").remove(&id);
                             });
                         }
@@ -71,11 +138,13 @@ impl Server {
                         }
                     }
                 }
-                // pool drops here, joining handler threads (connections
-                // were force-closed by shutdown, so handlers exit).
+                // `pool` drops here, joining handler threads (connections
+                // were force-closed by shutdown, so handlers exit); then
+                // the last `shared` Arc drops and the slow pool joins
+                // (its queued jobs write to closed sockets and bail).
             })
             .map_err(|e| e.to_string())?;
-        crate::log_info!("server", "listening on {local}");
+        crate::log_info!("server", "listening on {local} (protocol {})", choice.label());
         Ok(Server {
             addr: local,
             stop,
@@ -116,51 +185,243 @@ impl Drop for Server {
     }
 }
 
-fn handle_connection(mut stream: TcpStream, coordinator: &Coordinator) {
-    let peer = stream
-        .peer_addr()
-        .map(|a| a.to_string())
-        .unwrap_or_else(|_| "?".to_string());
-    crate::log_debug!("server", "connection from {peer}");
-    loop {
-        let frame = match read_frame(&mut stream) {
-            Ok(Some(f)) => f,
-            Ok(None) => break, // clean EOF
-            Err(e) => {
-                crate::log_debug!("server", "{peer}: read error: {e}");
-                break;
-            }
+/// Write one already-encoded frame under the shared writer lock.
+fn send_frame(writer: &Mutex<TcpStream>, payload: &[u8]) -> std::io::Result<()> {
+    let mut w = writer.lock().expect("conn writer");
+    wire::write_frame_bytes(&mut *w, payload)
+}
+
+/// Encode `resp` for the connection's codec and write it. An encoding
+/// that exceeds `MAX_FRAME` is replaced by a structured error frame
+/// (same seq) — writing it would kill the peer's read loop. Returns
+/// `false` when the socket is gone.
+fn send_response(
+    frames_out: &Counter,
+    oversized: &Counter,
+    writer: &Mutex<TcpStream>,
+    wp: Wire,
+    seq: u64,
+    resp: &Response,
+    buf: &mut Vec<u8>,
+) -> bool {
+    let encoded = protocol::encode_response(wp, seq, resp, buf);
+    let too_big = buf.len() > wire::MAX_FRAME;
+    if encoded.is_err() || too_big {
+        if too_big {
+            oversized.inc();
+        }
+        let msg = match encoded {
+            Err(e) => format!("cannot encode response: {e}"),
+            Ok(()) => format!(
+                "response of {} bytes exceeds the {}-byte frame limit",
+                buf.len(),
+                wire::MAX_FRAME
+            ),
         };
-        let response = match Request::from_json(&frame) {
-            Ok(req) => dispatch(req, coordinator),
-            Err(e) => err_response(&e),
-        };
-        if let Err(e) = write_frame(&mut stream, &response) {
-            crate::log_debug!("server", "{peer}: write error: {e}");
-            break;
+        if protocol::encode_response(wp, seq, &Response::Err(msg), buf).is_err() {
+            return false;
+        }
+    }
+    match send_frame(writer, buf) {
+        Ok(()) => {
+            frames_out.inc();
+            true
+        }
+        Err(e) => {
+            crate::log_debug!("server", "write error: {e}");
+            false
         }
     }
 }
 
-fn dispatch(req: Request, c: &Coordinator) -> Json {
-    match req {
-        Request::Ping => ok_response(vec![("pong", Json::Bool(true))]),
-        Request::Register { stream, dim, spec } => match AveragerSpec::parse(&spec)
-            .and_then(|s| c.register(&stream, dim, s))
-        {
-            Ok(()) => ok_response(vec![]),
-            Err(e) => err_response(&e),
-        },
-        Request::Push { stream, data } => match c.push(&stream, data) {
-            Ok(PushOutcome::Accepted) => {
-                ok_response(vec![("accepted", Json::Bool(true))])
+fn handle_connection(mut reader: TcpStream, shared: &Arc<ConnShared>) {
+    let peer = reader
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".to_string());
+    crate::log_debug!("server", "connection from {peer}");
+    let writer = match reader.try_clone() {
+        Ok(w) => {
+            // Bounded writes: offloaded barrier responses run on a
+            // SHARED pool, so a peer that stops reading its socket must
+            // error out of write_all instead of pinning a pool thread
+            // (and with it every other connection's barriers) forever.
+            let _ = w.set_write_timeout(Some(std::time::Duration::from_secs(30)));
+            Arc::new(Mutex::new(w))
+        }
+        Err(e) => {
+            crate::log_warn!("server", "{peer}: cannot clone socket: {e}");
+            return;
+        }
+    };
+    let mut rbuf = shared.bytes.take_empty();
+    let mut wbuf = shared.bytes.take_empty();
+
+    // ---- First frame: a hello, or a legacy v1 peer's first request ----
+    match wire::read_frame_into(&mut reader, rbuf.as_mut_vec()) {
+        Ok(Some(())) => {}
+        Ok(None) => return, // connected and left
+        Err(e) => {
+            crate::log_debug!("server", "{peer}: read error: {e}");
+            return;
+        }
+    }
+    shared.frames_in.inc();
+    let wp: Wire;
+    // `true` while rbuf still holds an unprocessed request (the legacy
+    // auto-detect path: the first frame IS the first request).
+    let mut pending_first = false;
+    if let Some(client_max) = protocol::parse_hello(&rbuf) {
+        let chosen = match shared.choice {
+            ProtocolChoice::V1 => protocol::WIRE_V1,
+            ProtocolChoice::Auto => client_max.clamp(protocol::WIRE_V1, protocol::WIRE_V2),
+            // Strict: commit to v2; a client that cannot follow fails
+            // its own handshake check instead of silently downgrading.
+            ProtocolChoice::V2 => protocol::WIRE_V2,
+        };
+        wp = if chosen >= protocol::WIRE_V2 {
+            Wire::V2Binary
+        } else {
+            Wire::V1Json
+        };
+        if send_frame(&writer, &protocol::hello_frame(chosen)).is_err() {
+            return;
+        }
+        shared.frames_out.inc();
+    } else if shared.choice == ProtocolChoice::V2 {
+        // Strict v2 server, no hello: reject readably — the peer is a
+        // JSON speaker, so the error frame is JSON.
+        let err = v1::err_response(
+            "this server speaks protocol v2 only — open the connection with a hello frame",
+        );
+        let _ = send_frame(&writer, err.encode().as_bytes());
+        return;
+    } else {
+        wp = Wire::V1Json;
+        pending_first = true;
+    }
+    match wp {
+        Wire::V1Json => shared.conns_v1.inc(),
+        Wire::V2Binary => shared.conns_v2.inc(),
+    }
+
+    // ---- Steady state ----
+    loop {
+        // One outsized frame (a 64 MiB state transfer) must not pin its
+        // capacity in these reused buffers for the connection lifetime.
+        // (rbuf still holds the unprocessed first request on the legacy
+        // auto-detect path — don't touch it until it's consumed.)
+        if !pending_first {
+            wire::trim_buf(rbuf.as_mut_vec());
+        }
+        wire::trim_buf(wbuf.as_mut_vec());
+        if !pending_first {
+            match wire::read_frame_into(&mut reader, rbuf.as_mut_vec()) {
+                Ok(Some(())) => shared.frames_in.inc(),
+                Ok(None) => break, // clean EOF
+                Err(e) => {
+                    crate::log_debug!("server", "{peer}: read error: {e}");
+                    break;
+                }
             }
-            Ok(PushOutcome::Dropped) => ok_response(vec![
-                ("accepted", Json::Bool(false)),
-                ("dropped", Json::Bool(true)),
-            ]),
-            Err(e) => err_response(&e),
+        }
+        pending_first = false;
+        match protocol::decode_request(wp, &rbuf) {
+            Ok((seq, req)) => {
+                // v2 barrier ops complete on the side pool so pipelined
+                // pushes behind them are answered immediately; v1 has
+                // no ids, so everything stays strictly in order.
+                let offload = wp == Wire::V2Binary
+                    && matches!(req, Request::Sync | Request::Checkpoint);
+                if offload {
+                    // The job captures ONLY what it writes with — never
+                    // an Arc<ConnShared>: a queued job must not end up
+                    // as the last owner of the pool it runs on (its
+                    // worker would join itself on drop).
+                    let coordinator = Arc::clone(&shared.coordinator);
+                    let pool = shared.bytes.clone();
+                    let frames_out = Arc::clone(&shared.frames_out);
+                    let oversized = Arc::clone(&shared.oversized);
+                    let w = Arc::clone(&writer);
+                    shared.slow.lock().expect("slow pool").execute(move || {
+                        let resp = dispatch(req, &coordinator);
+                        let mut buf = pool.take_empty();
+                        let _ = send_response(
+                            &frames_out,
+                            &oversized,
+                            &w,
+                            wp,
+                            seq,
+                            &resp,
+                            buf.as_mut_vec(),
+                        );
+                    });
+                } else {
+                    let resp = dispatch(req, &shared.coordinator);
+                    if !send_response(
+                        &shared.frames_out,
+                        &shared.oversized,
+                        &writer,
+                        wp,
+                        seq,
+                        &resp,
+                        wbuf.as_mut_vec(),
+                    ) {
+                        break;
+                    }
+                }
+            }
+            Err(e) => {
+                // Framing is intact (the frame layer delivered a whole
+                // payload), so a garbage request gets a structured
+                // error and the connection lives on. Under v2 the seq
+                // is echoed when the header was readable.
+                let seq = if wp == Wire::V2Binary && rbuf.len() >= 8 {
+                    u64::from_le_bytes(rbuf[..8].try_into().expect("8 bytes"))
+                } else {
+                    0
+                };
+                if !send_response(
+                    &shared.frames_out,
+                    &shared.oversized,
+                    &writer,
+                    wp,
+                    seq,
+                    &Response::Err(e),
+                    wbuf.as_mut_vec(),
+                ) {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Execute one request against the coordinator (codec-independent).
+fn dispatch(req: Request, c: &Coordinator) -> Response {
+    match req {
+        Request::Ping => Response::Pong,
+        Request::Register { stream, dim, spec } => {
+            match AveragerSpec::parse(&spec).and_then(|s| c.register(&stream, dim, s)) {
+                Ok(handle) => Response::Registered { handle },
+                Err(e) => Response::Err(e),
+            }
+        }
+        Request::Resolve { stream } => match c.resolve(&stream) {
+            Ok((handle, dim)) => Response::Resolved { handle, dim },
+            Err(e) => Response::Err(e),
         },
+        Request::Push { stream, data } => {
+            let outcome = match &stream {
+                StreamRef::Name(n) => c.push(n, data),
+                StreamRef::Handle(h) => c.push_handle(*h, data),
+            };
+            match outcome {
+                Ok(PushOutcome::Accepted) => Response::Pushed { accepted: true },
+                Ok(PushOutcome::Dropped) => Response::Pushed { accepted: false },
+                Err(e) => Response::Err(e),
+            }
+        }
         Request::PushMany {
             stream,
             count,
@@ -168,42 +429,50 @@ fn dispatch(req: Request, c: &Coordinator) -> Json {
         } => {
             // One coordinator call → one shard message; the batch is
             // accepted or dropped as a unit. The parser already paid the
-            // allocation, so hand it over instead of pool-copying.
-            // (count == 0 and ragged lengths were already rejected as
-            // structured error frames by `Request::from_json`; the
-            // coordinator re-validates against the stream's declared
-            // dim.)
-            match c.push_many_owned(&stream, count, data) {
-                Ok(PushOutcome::Accepted) => ok_response(vec![
-                    ("accepted", Json::Num(count as f64)),
-                    ("dropped", Json::Num(0.0)),
-                ]),
-                Ok(PushOutcome::Dropped) => ok_response(vec![
-                    ("accepted", Json::Num(0.0)),
-                    ("dropped", Json::Num(count as f64)),
-                ]),
-                Err(e) => err_response(&e),
+            // allocation, so hand it over instead of pool-copying. (The
+            // coordinator validates count/shape against the stream's
+            // declared dim; v1 additionally pre-rejected ragged frames
+            // at parse time, keeping its legacy error text.)
+            let outcome = match &stream {
+                StreamRef::Name(n) => c.push_many_owned(n, count, data),
+                StreamRef::Handle(h) => c.push_many_handle_owned(*h, count, data),
+            };
+            match outcome {
+                Ok(PushOutcome::Accepted) => Response::PushedMany {
+                    accepted: count as u64,
+                    dropped: 0,
+                },
+                Ok(PushOutcome::Dropped) => Response::PushedMany {
+                    accepted: 0,
+                    dropped: count as u64,
+                },
+                Err(e) => Response::Err(e),
             }
         }
-        Request::Snapshot { stream } => match c.snapshot(&stream) {
-            Ok(snap) => {
-                let value = match snap.value {
-                    Some(v) => Json::nums(&v),
-                    None => Json::Null,
-                };
-                ok_response(vec![
-                    ("stream", Json::Str(snap.stream.to_string())),
-                    ("t", Json::Num(snap.t as f64)),
-                    ("window_len", Json::Num(snap.window_len)),
-                    ("dropped", Json::Num(snap.dropped as f64)),
-                    ("value", value),
-                ])
-            }
-            Err(e) => err_response(&e),
+        Request::MultiPush { entries } => Response::MultiPushed {
+            outcomes: c.multi_push(entries),
         },
+        Request::Snapshot { stream } => {
+            let snap = match &stream {
+                StreamRef::Name(n) => c.snapshot(n),
+                StreamRef::Handle(h) => c.snapshot_handle(*h),
+            };
+            match snap {
+                Ok(snap) => Response::Snap {
+                    stream: snap.stream.to_string(),
+                    t: snap.t,
+                    window_len: snap.window_len,
+                    dropped: snap.dropped,
+                    // Copy out of the pooled buffer (it returns to the
+                    // coordinator's snapshot pool on drop).
+                    value: snap.value.as_deref().map(<[f64]>::to_vec),
+                },
+                Err(e) => Response::Err(e),
+            }
+        }
         Request::Sync => match c.sync() {
-            Ok(()) => ok_response(vec![]),
-            Err(e) => err_response(&e),
+            Ok(()) => Response::Synced,
+            Err(e) => Response::Err(e),
         },
         Request::Metrics => {
             let mut fields = vec![("metrics", c.metrics().export())];
@@ -220,47 +489,61 @@ fn dispatch(req: Request, c: &Coordinator) -> Json {
                 })
                 .collect();
             fields.push(("streams", Json::Arr(stats)));
-            ok_response(fields)
+            Response::Metrics {
+                body: Json::obj(fields),
+            }
         }
-        Request::ListStreams => ok_response(vec![(
-            "streams",
-            Json::Arr(
-                c.stream_names()
-                    .into_iter()
-                    .map(Json::Str)
-                    .collect(),
-            ),
-        )]),
-        Request::Checkpoint => match c.checkpoint() {
-            Ok(r) => ok_response(vec![
-                ("path", Json::Str(r.path.display().to_string())),
-                ("seq", Json::Num(r.seq as f64)),
-                ("bytes", Json::Num(r.bytes as f64)),
-                ("streams", Json::Num(r.streams as f64)),
-                (
-                    "wal_segments_removed",
-                    Json::Num(r.wal_segments_removed as f64),
-                ),
-            ]),
-            Err(e) => err_response(&e),
+        Request::ListStreams => Response::Streams {
+            streams: c
+                .stream_directory()
+                .into_iter()
+                .map(|(name, handle, dim)| StreamInfo { name, handle, dim })
+                .collect(),
         },
-        Request::ExportState { stream } => match c.export_state(&stream) {
-            Ok(bytes) => ok_response(vec![
-                ("stream", Json::Str(stream)),
-                ("state", Json::Str(codec::to_hex(&bytes))),
-            ]),
-            Err(e) => err_response(&e),
+        Request::Checkpoint => match c.checkpoint() {
+            Ok(r) => Response::Checkpointed {
+                path: r.path.display().to_string(),
+                seq: r.seq,
+                bytes: r.bytes,
+                streams: r.streams as u64,
+                wal_segments_removed: r.wal_segments_removed as u64,
+            },
+            Err(e) => Response::Err(e),
+        },
+        Request::ExportState { stream } => match &stream {
+            StreamRef::Name(n) => match c.export_state(n) {
+                Ok(bytes) => Response::State {
+                    stream: n.clone(),
+                    state: bytes,
+                },
+                Err(e) => Response::Err(e),
+            },
+            StreamRef::Handle(h) => match c.export_state_handle(*h) {
+                Ok((name, bytes)) => Response::State {
+                    stream: name,
+                    state: bytes,
+                },
+                Err(e) => Response::Err(e),
+            },
         },
         Request::Restore { stream, state } => {
-            match codec::from_hex(&state).and_then(|b| c.restore_state(&stream, &b)) {
-                Ok(t) => ok_response(vec![("t", Json::Num(t as f64))]),
-                Err(e) => err_response(&e),
+            let t = match &stream {
+                StreamRef::Name(n) => c.restore_state(n, &state),
+                StreamRef::Handle(h) => c.restore_state_handle(*h, &state),
+            };
+            match t {
+                Ok(t) => Response::Restored { t },
+                Err(e) => Response::Err(e),
             }
         }
         Request::MergeState { stream, state } => {
-            match codec::from_hex(&state).and_then(|b| c.merge_state(&stream, &b)) {
-                Ok(t) => ok_response(vec![("t", Json::Num(t as f64))]),
-                Err(e) => err_response(&e),
+            let t = match &stream {
+                StreamRef::Name(n) => c.merge_state(n, &state),
+                StreamRef::Handle(h) => c.merge_state_handle(*h, &state),
+            };
+            match t {
+                Ok(t) => Response::Merged { t },
+                Err(e) => Response::Err(e),
             }
         }
     }

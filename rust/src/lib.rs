@@ -52,9 +52,25 @@
 //! for exp/gea/awa, precedence for windowed estimators). The
 //! coordinator layers a per-shard write-ahead log, atomic checkpoint
 //! snapshots with bulk per-bank arena encoding, and crash recovery
-//! (`Coordinator::recover`) on top — exposed through the versioned
-//! wire protocol (`checkpoint`/`export_state`/`restore`/`merge_state`)
-//! and the `ata checkpoint` / `ata restore` CLI.
+//! (`Coordinator::recover`) on top — exposed through the wire protocol
+//! (`checkpoint`/`export_state`/`restore`/`merge_state`) and the
+//! `ata checkpoint` / `ata restore` CLI.
+//!
+//! ## Wire protocol v2
+//!
+//! The serving surface ([`coordinator::protocol`]) negotiates its codec
+//! per connection: **v2** (default) is a binary format built on the
+//! persist layer's `Enc`/`Dec` primitives — `register`/`resolve` return
+//! a `u64` stream **handle** every hot op addresses streams by (no
+//! per-request string hashing), every frame carries a client-chosen
+//! sequence id so requests **pipeline** (responses matched by id;
+//! barrier ops complete out of order on a server side-pool), and
+//! `multi_push` carries batches for many handles in one frame. f64
+//! payloads travel as raw little-endian bits and state transfers as raw
+//! CRC-framed bytes. **v1** (the legacy length-prefixed JSON codec) is
+//! auto-detected for peers whose first frame is not a `hello`, and kept
+//! bit-compatible. Frame I/O enforces `MAX_FRAME` in both directions
+//! and runs through pooled buffers ([`util::pool::BufferPool`]).
 //!
 //! ## Architecture (three layers)
 //!

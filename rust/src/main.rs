@@ -13,7 +13,7 @@
 
 use ata::averagers::{staleness_report, AveragerSpec};
 use ata::config::{ExperimentFile, PersistConfig, ServiceConfig};
-use ata::coordinator::{Client, Coordinator, Server};
+use ata::coordinator::{Client, ClientError, Coordinator, ProtocolChoice, Server};
 use ata::persist::checkpoint::Checkpointer;
 use ata::linreg::{run_experiment, EvalSchedule, ExperimentConfig};
 use ata::report;
@@ -46,6 +46,12 @@ enum CliRunError {
 impl From<String> for CliRunError {
     fn from(s: String) -> Self {
         CliRunError::Fail(s)
+    }
+}
+
+impl From<ClientError> for CliRunError {
+    fn from(e: ClientError) -> Self {
+        CliRunError::Fail(e.to_string())
     }
 }
 
@@ -164,10 +170,15 @@ fn cmd_serve(args: &[String]) -> Result<(), CliRunError> {
         .opt("config", "", "TOML service config")
         .opt("addr", "127.0.0.1:7311", "listen address")
         .opt("shards", "4", "ingest worker shards")
-        .opt("workers", "8", "connection handler threads");
+        .opt("workers", "8", "connection handler threads")
+        .opt(
+            "protocol",
+            "",
+            "wire codec policy: auto | v1 | v2 (default from config, else auto)",
+        );
     let p = parse_with(&spec, args)?;
 
-    let cfg = if !p.str("config").is_empty() {
+    let mut cfg = if !p.str("config").is_empty() {
         ServiceConfig::load(&p.str("config"))?
     } else {
         ServiceConfig {
@@ -176,6 +187,9 @@ fn cmd_serve(args: &[String]) -> Result<(), CliRunError> {
             ..Default::default()
         }
     };
+    if !p.str("protocol").is_empty() {
+        cfg.protocol = ProtocolChoice::parse(&p.str("protocol"))?;
+    }
     // A durable service recovers whatever its persist directory holds
     // (snapshot + WAL tails) before listening; a fresh directory is
     // simply an empty recovery.
@@ -208,12 +222,17 @@ fn cmd_serve(args: &[String]) -> Result<(), CliRunError> {
                 move || c.checkpoint().map(|_| ()),
             )
         });
-    let _server = Server::start(
+    let _server = Server::start_with(
         &cfg.addr,
         coordinator,
         p.usize("workers").map_err(|e| e.to_string())?,
+        cfg.protocol,
     )?;
-    eprintln!("serving on {} — Ctrl-C to stop", cfg.addr);
+    eprintln!(
+        "serving on {} (protocol {}) — Ctrl-C to stop",
+        cfg.addr,
+        cfg.protocol.label()
+    );
     // Block forever; the process is killed externally.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -222,9 +241,13 @@ fn cmd_serve(args: &[String]) -> Result<(), CliRunError> {
 
 fn cmd_checkpoint(args: &[String]) -> Result<(), CliRunError> {
     let spec = CommandSpec::new("checkpoint", "snapshot a running durable service")
-        .opt("addr", "127.0.0.1:7311", "server address");
+        .opt("addr", "127.0.0.1:7311", "server address")
+        .opt("protocol", "auto", "wire codec: auto | v1 | v2");
     let p = parse_with(&spec, args)?;
-    let mut client = Client::connect(&p.str("addr"))?;
+    let mut client = Client::connect_with(
+        &p.str("addr"),
+        ProtocolChoice::parse(&p.str("protocol"))?,
+    )?;
     let (path, streams) = client.checkpoint()?;
     println!("checkpoint written: {path} ({streams} streams)");
     Ok(())
@@ -280,17 +303,29 @@ fn cmd_client(args: &[String]) -> Result<(), CliRunError> {
     let spec = CommandSpec::new("client", "talk to a running coordinator service")
         .positional("action", "ping | list | snapshot | metrics")
         .opt("addr", "127.0.0.1:7311", "server address")
-        .opt("stream", "", "stream name (snapshot)");
+        .opt("stream", "", "stream name (snapshot)")
+        .opt(
+            "protocol",
+            "auto",
+            "wire codec: auto | v1 | v2 (use v1 against pre-v2 servers)",
+        );
     let p = parse_with(&spec, args)?;
-    let mut client = Client::connect(&p.str("addr"))?;
+    let mut client = Client::connect_with(
+        &p.str("addr"),
+        ProtocolChoice::parse(&p.str("protocol"))?,
+    )?;
     match p.positional(0).unwrap_or("") {
         "ping" => {
             client.ping()?;
-            println!("pong");
+            println!("pong (protocol v{})", client.protocol_version());
         }
         "list" => {
-            for s in client.list_streams()? {
-                println!("{s}");
+            for s in client.list_streams_full()? {
+                if s.handle != 0 {
+                    println!("{}\thandle={} dim={}", s.name, s.handle, s.dim);
+                } else {
+                    println!("{}", s.name);
+                }
             }
         }
         "snapshot" => {

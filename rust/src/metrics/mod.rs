@@ -24,11 +24,31 @@ use std::sync::{Arc, Mutex};
 ///   truncation).
 /// * [`names::RECOVERY_REPLAYED_BATCHES`] — WAL records re-applied by
 ///   `Coordinator::recover` after loading the snapshot.
+///
+/// The wire layer adds its own family (recorded by the TCP server into
+/// the coordinator's registry):
+///
+/// * [`names::CONNECTIONS_V1`] / [`names::CONNECTIONS_V2`] —
+///   connections by negotiated protocol generation (auto-detected
+///   legacy JSON peers count under v1).
+/// * [`names::FRAMES_IN`] / [`names::FRAMES_OUT`] — wire frames read
+///   from / written to peers.
+/// * [`names::OVERSIZED_RESPONSES`] — responses that exceeded
+///   `MAX_FRAME` and were replaced by a structured error frame instead
+///   of being written (which would have killed the peer's read loop).
+/// * [`names::MULTI_PUSH_ENTRIES`] — per-stream batches staged through
+///   the v2 `multi_push` fan-in op.
 pub mod names {
     pub const WAL_APPENDED_BYTES: &str = "wal_appended_bytes";
     pub const WAL_FSYNC_NANOS: &str = "wal_fsync_nanos";
     pub const CHECKPOINT_DURATION_NANOS: &str = "checkpoint_duration_nanos";
     pub const RECOVERY_REPLAYED_BATCHES: &str = "recovery_replayed_batches";
+    pub const CONNECTIONS_V1: &str = "wire_connections_v1";
+    pub const CONNECTIONS_V2: &str = "wire_connections_v2";
+    pub const FRAMES_IN: &str = "wire_frames_in";
+    pub const FRAMES_OUT: &str = "wire_frames_out";
+    pub const OVERSIZED_RESPONSES: &str = "wire_oversized_responses";
+    pub const MULTI_PUSH_ENTRIES: &str = "multi_push_entries";
 }
 
 /// Monotone event counter.

@@ -58,6 +58,13 @@ impl Enc {
         Enc { buf: Vec::new() }
     }
 
+    /// Wrap an existing buffer (cleared first), reusing its allocation —
+    /// the wire codec encodes into pooled buffers through this.
+    pub fn with_buf(mut buf: Vec<u8>) -> Enc {
+        buf.clear();
+        Enc { buf }
+    }
+
     pub fn into_bytes(self) -> Vec<u8> {
         self.buf
     }

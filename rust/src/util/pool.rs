@@ -12,89 +12,96 @@ use std::thread;
 
 /// Parked buffers plus a running total of their capacity, so the
 /// hot-path park/unpark decisions are O(1).
-#[derive(Default)]
-struct FreeList {
-    bufs: Vec<Vec<f64>>,
-    /// Total capacity (in floats) across `bufs`.
-    floats: usize,
+struct FreeList<T> {
+    bufs: Vec<Vec<T>>,
+    /// Total capacity (in elements) across `bufs`.
+    elems: usize,
+}
+
+impl<T> Default for FreeList<T> {
+    fn default() -> FreeList<T> {
+        FreeList {
+            bufs: Vec::new(),
+            elems: 0,
+        }
+    }
 }
 
 /// Shared free-list behind a [`BufferPool`].
-struct PoolShared {
-    free: Mutex<FreeList>,
+struct PoolShared<T> {
+    free: Mutex<FreeList<T>>,
     /// Buffers parked beyond this bound are dropped instead of pooled.
     max_pooled: usize,
-    /// Largest per-buffer capacity (floats) worth parking.
-    max_buf_floats: usize,
-    /// Total idle capacity budget (floats) across the pool.
-    max_total_floats: usize,
+    /// Largest per-buffer capacity (elements) worth parking.
+    max_buf_elems: usize,
+    /// Total idle capacity budget (elements) across the pool.
+    max_total_elems: usize,
 }
 
-/// A pool of reusable `Vec<f64>` allocations.
+/// A pool of reusable `Vec<T>` allocations (`T = f64` by default).
 ///
 /// The coordinator's batched ingest ([`push_many`]) copies each wire
-/// batch into a pooled buffer, ships it through a shard queue, and the
-/// worker's drop returns the allocation here — so steady-state batched
-/// ingest performs **zero** heap allocation per message, regardless of
-/// batch size (capacity is retained across reuses).
+/// batch into a pooled `f64` buffer, ships it through a shard queue, and
+/// the worker's drop returns the allocation here — so steady-state
+/// batched ingest performs **zero** heap allocation per message,
+/// regardless of batch size (capacity is retained across reuses). The
+/// TCP server routes its per-connection frame read/write scratch through
+/// a `BufferPool<u8>` of the same design, so connection churn and
+/// response encoding reuse parked byte buffers too.
+///
+/// Clones share the same free list, so one pool can serve producers on
+/// many threads.
 ///
 /// [`push_many`]: crate::coordinator::Coordinator::push_many
-pub struct BufferPool {
-    shared: Arc<PoolShared>,
+pub struct BufferPool<T = f64> {
+    shared: Arc<PoolShared<T>>,
 }
 
-impl BufferPool {
+impl<T> Clone for BufferPool<T> {
+    fn clone(&self) -> BufferPool<T> {
+        BufferPool {
+            shared: Arc::clone(&self.shared),
+        }
+    }
+}
+
+impl<T> BufferPool<T> {
     /// A pool retaining at most `max_pooled` idle buffers, with the
     /// default capacity caps ([`MAX_POOLED_CAPACITY`],
     /// [`MAX_POOLED_TOTAL`]).
-    pub fn new(max_pooled: usize) -> BufferPool {
+    pub fn new(max_pooled: usize) -> BufferPool<T> {
         BufferPool::with_caps(max_pooled, MAX_POOLED_CAPACITY, MAX_POOLED_TOTAL)
     }
 
     /// A pool with explicit retention caps: at most `max_pooled` idle
-    /// buffers, none larger than `max_buf_floats` capacity, totalling at
-    /// most `max_total_floats`. The WAL replay path uses this to run a
+    /// buffers, none larger than `max_buf_elems` capacity, totalling at
+    /// most `max_total_elems`. The WAL replay path uses this to run a
     /// larger pool than the ingest default (recovery streams millions of
     /// batch buffers through the shard queues back-to-back), without
     /// patching the crate-wide constants.
     pub fn with_caps(
         max_pooled: usize,
-        max_buf_floats: usize,
-        max_total_floats: usize,
-    ) -> BufferPool {
+        max_buf_elems: usize,
+        max_total_elems: usize,
+    ) -> BufferPool<T> {
         BufferPool {
             shared: Arc::new(PoolShared {
                 free: Mutex::new(FreeList::default()),
                 max_pooled: max_pooled.max(1),
-                max_buf_floats: max_buf_floats.max(1),
-                max_total_floats: max_total_floats.max(1),
+                max_buf_elems: max_buf_elems.max(1),
+                max_total_elems: max_total_elems.max(1),
             }),
         }
     }
 
-    /// A pooled buffer holding a copy of `data` (recycles a parked
-    /// allocation when one is available).
-    pub fn take(&self, data: &[f64]) -> PooledBuf {
-        let mut buf = self.take_empty();
-        buf.data.extend_from_slice(data);
-        buf
-    }
-
-    /// A pooled buffer of exactly `len` zeroed floats — the output-side
-    /// twin of [`BufferPool::take`], used by the coordinator's snapshot
-    /// path so steady-state reads allocate nothing.
-    pub fn take_len(&self, len: usize) -> PooledBuf {
-        let mut buf = self.take_empty();
-        buf.data.resize(len, 0.0);
-        buf
-    }
-
-    fn take_empty(&self) -> PooledBuf {
+    /// A pooled empty buffer (recycles a parked allocation when one is
+    /// available); fill through [`PooledBuf::as_mut_vec`].
+    pub fn take_empty(&self) -> PooledBuf<T> {
         let mut v = {
             let mut free = self.shared.free.lock().expect("buffer pool");
             match free.bufs.pop() {
                 Some(v) => {
-                    free.floats -= v.capacity();
+                    free.elems -= v.capacity();
                     v
                 }
                 None => Vec::new(),
@@ -113,45 +120,74 @@ impl BufferPool {
     }
 }
 
-/// An `f64` buffer that returns its allocation to its [`BufferPool`] on
-/// drop. Dereferences to `[f64]`.
-pub struct PooledBuf {
-    data: Vec<f64>,
-    home: Option<Arc<PoolShared>>,
+impl<T: Clone> BufferPool<T> {
+    /// A pooled buffer holding a copy of `data` (recycles a parked
+    /// allocation when one is available).
+    pub fn take(&self, data: &[T]) -> PooledBuf<T> {
+        let mut buf = self.take_empty();
+        buf.data.extend_from_slice(data);
+        buf
+    }
 }
 
-impl PooledBuf {
+impl<T: Clone + Default> BufferPool<T> {
+    /// A pooled buffer of exactly `len` default-valued (zeroed) elements
+    /// — the output-side twin of [`BufferPool::take`], used by the
+    /// coordinator's snapshot path so steady-state reads allocate
+    /// nothing.
+    pub fn take_len(&self, len: usize) -> PooledBuf<T> {
+        let mut buf = self.take_empty();
+        buf.data.resize(len, T::default());
+        buf
+    }
+}
+
+/// A buffer that returns its allocation to its [`BufferPool`] on drop.
+/// Dereferences to `[T]` (`T = f64` by default).
+pub struct PooledBuf<T = f64> {
+    data: Vec<T>,
+    home: Option<Arc<PoolShared<T>>>,
+}
+
+impl<T> PooledBuf<T> {
     /// Wrap an owned vector without pooling (the allocation is simply
     /// dropped at the end) — the single-sample `push` path.
-    pub fn unpooled(data: Vec<f64>) -> PooledBuf {
+    pub fn unpooled(data: Vec<T>) -> PooledBuf<T> {
         PooledBuf { data, home: None }
     }
 
     /// Take the contents out as a plain `Vec` (the allocation leaves the
     /// pool for good).
-    pub fn into_vec(mut self) -> Vec<f64> {
+    pub fn into_vec(mut self) -> Vec<T> {
         self.home = None;
         std::mem::take(&mut self.data)
     }
+
+    /// The backing `Vec`, for callers that need to grow/shrink in place
+    /// (the wire framing path resizes to each frame's payload length).
+    /// Capacity changes are accounted when the buffer is parked.
+    pub fn as_mut_vec(&mut self) -> &mut Vec<T> {
+        &mut self.data
+    }
 }
 
-impl std::ops::Deref for PooledBuf {
-    type Target = [f64];
-    fn deref(&self) -> &[f64] {
+impl<T> std::ops::Deref for PooledBuf<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
         &self.data
     }
 }
 
-impl std::ops::DerefMut for PooledBuf {
-    fn deref_mut(&mut self) -> &mut [f64] {
+impl<T> std::ops::DerefMut for PooledBuf<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
         &mut self.data
     }
 }
 
 /// Clones are unpooled: a copy escaping the hot path must not compete
 /// for the pool's parked allocations.
-impl Clone for PooledBuf {
-    fn clone(&self) -> PooledBuf {
+impl<T: Clone> Clone for PooledBuf<T> {
+    fn clone(&self) -> PooledBuf<T> {
         PooledBuf {
             data: self.data.clone(),
             home: None,
@@ -159,58 +195,58 @@ impl Clone for PooledBuf {
     }
 }
 
-impl std::fmt::Debug for PooledBuf {
+impl<T: std::fmt::Debug> std::fmt::Debug for PooledBuf<T> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         self.data.fmt(f)
     }
 }
 
-impl PartialEq for PooledBuf {
-    fn eq(&self, other: &PooledBuf) -> bool {
+impl<T: PartialEq> PartialEq for PooledBuf<T> {
+    fn eq(&self, other: &PooledBuf<T>) -> bool {
         self.data == other.data
     }
 }
 
-impl PartialEq<Vec<f64>> for PooledBuf {
-    fn eq(&self, other: &Vec<f64>) -> bool {
+impl<T: PartialEq> PartialEq<Vec<T>> for PooledBuf<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
         self.data == *other
     }
 }
 
-impl PartialEq<[f64]> for PooledBuf {
-    fn eq(&self, other: &[f64]) -> bool {
+impl<T: PartialEq> PartialEq<[T]> for PooledBuf<T> {
+    fn eq(&self, other: &[T]) -> bool {
         self.data[..] == *other
     }
 }
 
-impl PartialEq<PooledBuf> for Vec<f64> {
-    fn eq(&self, other: &PooledBuf) -> bool {
+impl<T: PartialEq> PartialEq<PooledBuf<T>> for Vec<T> {
+    fn eq(&self, other: &PooledBuf<T>) -> bool {
         *self == other.data
     }
 }
 
-/// Default largest per-buffer capacity (in floats) worth parking: one
+/// Default largest per-buffer capacity (in elements) worth parking: one
 /// burst of giant batches must not pin its allocations in the pool
 /// forever (8 MiB per buffer at f64). Override per pool with
 /// [`BufferPool::with_caps`].
 pub const MAX_POOLED_CAPACITY: usize = 1 << 20;
 
-/// Default total idle capacity budget (in floats) across a pool: even
+/// Default total idle capacity budget (in elements) across a pool: even
 /// `max_pooled` buffers individually under the cap must not add up to
 /// hundreds of retained MiB (4M floats = 32 MiB). Override per pool
 /// with [`BufferPool::with_caps`].
 pub const MAX_POOLED_TOTAL: usize = 4 << 20;
 
-impl Drop for PooledBuf {
+impl<T> Drop for PooledBuf<T> {
     fn drop(&mut self) {
         if let Some(home) = self.home.take() {
             let cap = self.data.capacity();
-            if cap > home.max_buf_floats {
+            if cap > home.max_buf_elems {
                 return; // oversized: let the allocation die
             }
             let mut free = home.free.lock().expect("buffer pool");
-            if free.bufs.len() < home.max_pooled && free.floats + cap <= home.max_total_floats {
-                free.floats += cap;
+            if free.bufs.len() < home.max_pooled && free.elems + cap <= home.max_total_elems {
+                free.elems += cap;
                 free.bufs.push(std::mem::take(&mut self.data));
             }
         }
@@ -449,6 +485,22 @@ mod tests {
         let v = pool.take(&[1.0]).into_vec();
         assert_eq!(v, vec![1.0]);
         assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn byte_pool_recycles_through_as_mut_vec() {
+        // The wire framing path: resize/extend through the Vec handle,
+        // park on drop, reuse without leaking prior contents.
+        let pool: BufferPool<u8> = BufferPool::new(2);
+        let mut b = pool.take_empty();
+        b.as_mut_vec().resize(4, 0);
+        b.as_mut_vec().extend_from_slice(b"xy");
+        assert_eq!(&*b, &[0, 0, 0, 0, b'x', b'y']);
+        drop(b);
+        assert_eq!(pool.idle(), 1);
+        let c = pool.take(b"z");
+        assert_eq!(pool.idle(), 0);
+        assert_eq!(&*c, b"z");
     }
 
     #[test]

@@ -281,3 +281,195 @@ fn wal_and_snapshot_files_of_garbage_error_never_panic() {
     });
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+// ---------------------------------------------------------------------------
+// Protocol v2 binary frames and the hello handshake
+// ---------------------------------------------------------------------------
+
+use ata::coordinator::protocol::{self, MultiPushEntry, OpKind, Request, StreamRef, Wire};
+
+fn arb_v2_request(g: &mut Gen) -> Request {
+    let data = |g: &mut Gen, n: usize| -> Vec<f64> {
+        (0..n).map(|_| g.f64_range(-1e6, 1e6)).collect()
+    };
+    match g.usize_range(0, 9) {
+        0 => Request::Ping,
+        1 => Request::Register {
+            stream: format!("s{}", g.usize_range(0, 1000)),
+            dim: g.usize_range(1, 64),
+            spec: "gea(c=0.5)".into(),
+        },
+        2 => Request::Resolve {
+            stream: format!("s{}", g.usize_range(0, 1000)),
+        },
+        3 => {
+            let n = g.usize_range(0, 16);
+            Request::Push {
+                stream: StreamRef::Handle(g.u64()),
+                data: data(g, n),
+            }
+        }
+        4 => {
+            let count = g.usize_range(0, 8);
+            let len = g.usize_range(0, 32);
+            Request::PushMany {
+                stream: StreamRef::Handle(g.u64()),
+                count,
+                data: data(g, len),
+            }
+        }
+        5 => {
+            let n = g.usize_range(0, 5);
+            Request::MultiPush {
+                entries: (0..n)
+                    .map(|_| {
+                        let len = g.usize_range(0, 12);
+                        MultiPushEntry {
+                            handle: g.u64(),
+                            count: g.usize_range(0, 6),
+                            data: data(g, len),
+                        }
+                    })
+                    .collect(),
+            }
+        }
+        6 => Request::Snapshot {
+            stream: StreamRef::Handle(g.u64()),
+        },
+        7 => Request::Sync,
+        8 => Request::Restore {
+            stream: StreamRef::Handle(g.u64()),
+            state: (0..g.usize_range(0, 64))
+                .map(|_| (g.u64() & 0xFF) as u8)
+                .collect(),
+        },
+        _ => Request::ExportState {
+            stream: StreamRef::Handle(g.u64()),
+        },
+    }
+}
+
+#[test]
+fn v2_decoder_never_panics_on_garbage() {
+    Runner::new("v2 decode garbage", 0xFA).run(500, |g| {
+        let bytes = arb_bytes(g, 300);
+        // Request and response decoders on byte soup: Err, never panic,
+        // never a giant allocation (Dec bounds-checks before allocating).
+        let _ = protocol::decode_request(Wire::V2Binary, &bytes);
+        for kind in [
+            OpKind::Ping,
+            OpKind::PushMany,
+            OpKind::MultiPush,
+            OpKind::Snapshot,
+            OpKind::List,
+            OpKind::ExportState,
+        ] {
+            let _ = protocol::decode_response(Wire::V2Binary, kind, &bytes);
+        }
+        true
+    });
+}
+
+#[test]
+fn v2_request_roundtrip_and_mutations_never_panic() {
+    Runner::new("v2 request roundtrip", 0xFB).run(300, |g| {
+        let req = arb_v2_request(g);
+        let seq = g.u64();
+        let mut buf = Vec::new();
+        protocol::encode_request(Wire::V2Binary, seq, &req, &mut buf)
+            .map_err(|e| e.to_string())?;
+        let (got_seq, back) =
+            protocol::decode_request(Wire::V2Binary, &buf).map_err(|e| e.to_string())?;
+        if got_seq != seq || back != req {
+            return Err(format!("roundtrip mismatch: {back:?} vs {req:?}"));
+        }
+        // A random mutation of a valid frame must decode-or-error,
+        // never panic (truncation, bit flips, trailing bytes).
+        let mut mutated = buf.clone();
+        match g.usize_range(0, 3) {
+            0 => {
+                let cut = g.usize_range(0, mutated.len());
+                mutated.truncate(cut);
+            }
+            1 => {
+                if !mutated.is_empty() {
+                    let at = g.usize_range(0, mutated.len() - 1);
+                    mutated[at] ^= 1 << g.usize_range(0, 7);
+                }
+            }
+            _ => mutated.push((g.u64() & 0xFF) as u8),
+        }
+        let _ = protocol::decode_request(Wire::V2Binary, &mutated);
+        Ok(())
+    });
+}
+
+#[test]
+fn handshake_parser_never_panics_and_only_accepts_hellos() {
+    Runner::new("hello handshake fuzz", 0xFC).run(500, |g| {
+        // Byte soup is never a hello…
+        let bytes = arb_bytes(g, 16);
+        let parsed = protocol::parse_hello(&bytes);
+        if let Some(v) = parsed {
+            // …unless it structurally IS one: 6 bytes starting "ATAH".
+            if bytes.len() != 6 || &bytes[..4] != b"ATAH" {
+                return Err(format!("accepted a non-hello: {bytes:?} -> {v}"));
+            }
+        }
+        // Valid hellos always parse back to their version…
+        let version = (g.u64() & 0xFFFF) as u16;
+        let hello = protocol::hello_frame(version);
+        if protocol::parse_hello(&hello) != Some(version) {
+            return Err("hello roundtrip failed".into());
+        }
+        // …and any single-byte corruption either still parses (payload
+        // version flip) or is cleanly rejected.
+        let mut bad = hello.clone();
+        let at = g.usize_range(0, bad.len() - 1);
+        bad[at] ^= 1 << g.usize_range(0, 7);
+        let _ = protocol::parse_hello(&bad);
+        Ok(())
+    });
+}
+
+#[test]
+fn v2_frames_over_a_live_connection_never_kill_the_server() {
+    use ata::config::BackpressurePolicy;
+    use ata::coordinator::{Coordinator, Server};
+    use std::io::Write;
+    use std::sync::Arc;
+    // End-to-end fuzz: a handshaken connection fed random frames must
+    // always get a structured response (or a clean close on transport
+    // abuse), and the server must keep serving other clients.
+    let c = Arc::new(Coordinator::new(1, 64, BackpressurePolicy::Block));
+    let server = Server::start("127.0.0.1:0", c, 2).expect("server");
+    let addr = server.addr().to_string();
+    Runner::new("live v2 garbage frames", 0xFD).run(40, |g| {
+        let mut s = std::net::TcpStream::connect(&addr).map_err(|e| e.to_string())?;
+        protocol::write_frame_bytes(&mut s, &protocol::hello_frame(protocol::WIRE_V2))
+            .map_err(|e| e.to_string())?;
+        let mut buf = Vec::new();
+        protocol::read_frame_into(&mut s, &mut buf)
+            .map_err(|e| e.to_string())?
+            .ok_or("no hello ack")?;
+        for _ in 0..g.usize_range(1, 6) {
+            let garbage = arb_bytes(g, 64);
+            protocol::write_frame_bytes(&mut s, &garbage).map_err(|e| e.to_string())?;
+            // Every garbage frame is answered (framing stays intact).
+            protocol::read_frame_into(&mut s, &mut buf)
+                .map_err(|e| e.to_string())?
+                .ok_or("server dropped a garbage frame without answering")?;
+        }
+        // Raw non-frame bytes (a torn length prefix) may close the
+        // connection — but must not take the server down.
+        let _ = s.write_all(&[0xFF]);
+        drop(s);
+        let mut check = std::net::TcpStream::connect(&addr).map_err(|e| e.to_string())?;
+        protocol::write_frame_bytes(&mut check, &protocol::hello_frame(protocol::WIRE_V2))
+            .map_err(|e| e.to_string())?;
+        protocol::read_frame_into(&mut check, &mut buf)
+            .map_err(|e| e.to_string())?
+            .ok_or("server gone after garbage session")?;
+        Ok(())
+    });
+}

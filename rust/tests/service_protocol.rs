@@ -1,20 +1,71 @@
-//! Integration: TCP server + client over localhost.
+//! Integration: TCP server + client over localhost — both protocol
+//! generations, the cross-version matrix, pipelining, and multi_push.
 
 use ata::config::BackpressurePolicy;
-use ata::coordinator::{Client, Coordinator, Server};
+use ata::coordinator::protocol::{
+    self, wire, MultiOutcome, OpKind, ProtocolChoice, Request, Response, StreamRef, Wire,
+};
+use ata::coordinator::{Client, ClientError, Coordinator, Server};
+use ata::util::json::Json;
+use std::net::TcpStream;
 use std::sync::Arc;
 
 fn start_server() -> (Server, String) {
+    start_server_with(ProtocolChoice::Auto)
+}
+
+fn start_server_with(choice: ProtocolChoice) -> (Server, String) {
     let c = Arc::new(Coordinator::new(2, 256, BackpressurePolicy::Block));
-    let server = Server::start("127.0.0.1:0", c, 4).expect("server");
+    let server = Server::start_with("127.0.0.1:0", c, 4, choice).expect("server");
     let addr = server.addr().to_string();
     (server, addr)
 }
 
-#[test]
-fn full_client_workflow() {
-    let (_server, addr) = start_server();
-    let mut cl = Client::connect(&addr).expect("connect");
+/// A raw protocol-v2 connection: does the hello handshake by hand and
+/// moves byte-level frames — the tests that must see the wire itself.
+struct RawV2 {
+    s: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl RawV2 {
+    fn connect(addr: &str) -> RawV2 {
+        let mut s = TcpStream::connect(addr).expect("raw connect");
+        s.set_nodelay(true).unwrap();
+        wire::write_frame_bytes(&mut s, &protocol::hello_frame(protocol::WIRE_V2))
+            .expect("send hello");
+        let mut buf = Vec::new();
+        wire::read_frame_into(&mut s, &mut buf)
+            .expect("hello ack io")
+            .expect("hello ack frame");
+        assert_eq!(
+            protocol::parse_hello(&buf),
+            Some(protocol::WIRE_V2),
+            "server must commit to v2"
+        );
+        RawV2 { s, buf }
+    }
+
+    fn send(&mut self, seq: u64, req: &Request) {
+        protocol::encode_request(Wire::V2Binary, seq, req, &mut self.buf).expect("encode");
+        wire::write_frame_bytes(&mut self.s, &self.buf).expect("send frame");
+    }
+
+    fn send_raw(&mut self, payload: &[u8]) {
+        wire::write_frame_bytes(&mut self.s, payload).expect("send raw frame");
+    }
+
+    fn recv(&mut self, kind: OpKind) -> (u64, Response) {
+        wire::read_frame_into(&mut self.s, &mut self.buf)
+            .expect("recv io")
+            .expect("recv frame");
+        protocol::decode_response(Wire::V2Binary, kind, &self.buf).expect("decode response")
+    }
+}
+
+/// The original end-to-end workflow, reusable across protocol
+/// generations so the legacy suite literally runs on both.
+fn full_workflow(cl: &mut Client) {
     cl.ping().expect("ping");
 
     cl.register("layer0", 4, "awa3(c=0.5)").expect("register");
@@ -45,22 +96,58 @@ fn full_client_workflow() {
 }
 
 #[test]
+fn full_client_workflow_negotiates_v2_by_default() {
+    let (_server, addr) = start_server();
+    let mut cl = Client::connect(&addr).expect("connect");
+    assert_eq!(
+        cl.protocol_version(),
+        2,
+        "the binary protocol must be the default client↔server codec"
+    );
+    full_workflow(&mut cl);
+}
+
+#[test]
+fn full_client_workflow_on_legacy_v1() {
+    // The legacy suite, unchanged, over the legacy codec (no hello).
+    let (_server, addr) = start_server();
+    let mut cl = Client::connect_with(&addr, ProtocolChoice::V1).expect("connect");
+    assert_eq!(cl.protocol_version(), 1);
+    full_workflow(&mut cl);
+}
+
+#[test]
+fn register_returns_handles_and_resolve_matches() {
+    let (_server, addr) = start_server();
+    let mut cl = Client::connect(&addr).expect("connect");
+    let h = cl.register("w", 3, "gea(c=0.5)").expect("register");
+    assert!(h > 0);
+    assert_eq!(cl.resolve("w").expect("resolve"), h);
+    // The v2 directory pairs names with handles and dims.
+    let infos = cl.list_streams_full().expect("list");
+    assert_eq!(infos.len(), 1);
+    assert_eq!((infos[0].handle, infos[0].dim), (h, 3));
+    let err = cl.resolve("ghost").unwrap_err();
+    assert!(err.to_string().contains("ghost"), "{err}");
+}
+
+#[test]
 fn server_reports_errors_not_disconnects() {
     let (_server, addr) = start_server();
     let mut cl = Client::connect(&addr).expect("connect");
 
     // Unknown stream
-    let err = cl.push("ghost", &[1.0]).unwrap_err();
+    let err = cl.push("ghost", &[1.0]).unwrap_err().to_string();
     assert!(err.contains("ghost"), "{err}");
     // Bad spec
-    let err = cl.register("x", 2, "bogus(c=1)").unwrap_err();
+    let err = cl.register("x", 2, "bogus(c=1)").unwrap_err().to_string();
     assert!(err.contains("bogus"), "{err}");
     // Wrong dims
     cl.register("x", 2, "gea(c=0.5)").unwrap();
-    let err = cl.push("x", &[1.0]).unwrap_err();
+    let err = cl.push("x", &[1.0]).unwrap_err().to_string();
     assert!(err.contains("dims"), "{err}");
     // Duplicate register
-    let err = cl.register("x", 2, "gea(c=0.5)").unwrap_err();
+    let err = cl.register("x", 2, "gea(c=0.5)").unwrap_err().to_string();
     assert!(err.contains("already"), "{err}");
     // Connection still healthy afterwards.
     cl.ping().expect("connection survives errors");
@@ -117,23 +204,23 @@ fn push_many_rejects_wrong_dim() {
     let mut cl = Client::connect(&addr).unwrap();
     cl.register("b", 3, "gea(c=0.5)").unwrap();
     // 10 floats, count 5 → dim 2 != 3.
-    let err = cl.push_many("b", 5, &[0.0; 10]).unwrap_err();
+    let err = cl.push_many("b", 5, &[0.0; 10]).unwrap_err().to_string();
     assert!(err.contains("dims"), "{err}");
     cl.ping().unwrap();
 }
 
 #[test]
 fn push_many_zero_count_and_ragged_get_structured_error_frames() {
-    use ata::coordinator::protocol::{read_frame, write_frame, Request};
-    use ata::util::json::Json;
+    use ata::coordinator::protocol::{read_frame, write_frame};
     let (_server, addr) = start_server();
     {
         let mut cl = Client::connect(&addr).expect("connect");
         cl.register("w", 2, "gea(c=0.5)").unwrap();
     }
-    // Drive the wire protocol directly so malformed batches actually
-    // cross the server round-trip (the Client would pre-validate).
-    let mut raw = std::net::TcpStream::connect(&addr).expect("raw connect");
+    // Drive the legacy JSON wire directly so malformed batches actually
+    // cross the server round-trip (the Client would pre-validate). No
+    // hello: the server must auto-detect a legacy peer.
+    let mut raw = TcpStream::connect(&addr).expect("raw connect");
     raw.set_nodelay(true).unwrap();
     for (count, data_len) in [(0.0, 0usize), (0.0, 4), (3.0, 4)] {
         let req = Json::obj(vec![
@@ -154,12 +241,12 @@ fn push_many_zero_count_and_ragged_get_structured_error_frames() {
     }
     // A batch whose shape is self-consistent but wrong for the stream's
     // declared dim is also a structured error, not a disconnect.
-    let req = Request::PushMany {
-        stream: "w".into(),
+    let req = protocol::v1::request_to_json(&Request::PushMany {
+        stream: StreamRef::Name("w".into()),
         count: 2,
         data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], // dim 3 != 2
-    }
-    .to_json();
+    })
+    .unwrap();
     write_frame(&mut raw, &req).unwrap();
     let resp = read_frame(&mut raw).unwrap().unwrap();
     assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
@@ -169,7 +256,7 @@ fn push_many_zero_count_and_ragged_get_structured_error_frames() {
         .unwrap()
         .contains("dims"));
     // Connection still healthy afterwards; nothing was applied.
-    write_frame(&mut raw, &Request::Ping.to_json()).unwrap();
+    write_frame(&mut raw, &protocol::v1::request_to_json(&Request::Ping).unwrap()).unwrap();
     let pong = read_frame(&mut raw).unwrap().unwrap();
     assert_eq!(pong.get("ok").and_then(Json::as_bool), Some(true));
     let mut cl = Client::connect(&addr).unwrap();
@@ -212,6 +299,365 @@ fn push_many_batched_path_matches_per_sample_path() {
 }
 
 #[test]
+fn multi_push_matches_per_stream_push_many_over_the_wire() {
+    let (_server, addr) = start_server();
+    let mut cl = Client::connect(&addr).unwrap();
+    assert_eq!(cl.protocol_version(), 2);
+    let d = 3;
+    for i in 0..6 {
+        cl.register(&format!("m{i}"), d, "awa3(c=0.5)").unwrap();
+        cl.register(&format!("r{i}"), d, "awa3(c=0.5)").unwrap();
+    }
+    let batch = |i: usize| -> Vec<f64> {
+        (0..8 * d)
+            .map(|k| ((i * 97 + k) as f64 * 0.173).sin() * 2.0)
+            .collect()
+    };
+    let batches: Vec<Vec<f64>> = (0..6).map(batch).collect();
+    let names: Vec<String> = (0..6).map(|i| format!("m{i}")).collect();
+    let multi: Vec<(&str, usize, &[f64])> = (0..6)
+        .map(|i| (names[i].as_str(), 8, batches[i].as_slice()))
+        .collect();
+    // ONE frame for all six streams…
+    let outcomes = cl.multi_push(&multi).expect("multi_push");
+    assert_eq!(outcomes, vec![MultiOutcome::Accepted; 6]);
+    // …vs one push_many per twin stream.
+    for i in 0..6 {
+        cl.push_many(&format!("r{i}"), 8, &batches[i]).unwrap();
+    }
+    cl.sync().unwrap();
+    for i in 0..6 {
+        let a = cl.snapshot(&format!("m{i}")).unwrap();
+        let b = cl.snapshot(&format!("r{i}")).unwrap();
+        assert_eq!(a.t, 8);
+        assert_eq!(a.t, b.t);
+        let (va, vb) = (a.value.unwrap(), b.value.unwrap());
+        for k in 0..d {
+            assert!(
+                (va[k] - vb[k]).abs() < 1e-12,
+                "stream {i} dim {k}: {} vs {}",
+                va[k],
+                vb[k]
+            );
+        }
+    }
+    // Entries fail independently: an unknown name rejects only itself
+    // (same per-entry semantics as the v1 degradation), siblings apply.
+    let bogus: Vec<(&str, usize, &[f64])> = vec![
+        ("m0", 8, batches[0].as_slice()),
+        ("nope", 8, batches[1].as_slice()),
+    ];
+    let outcomes = cl.multi_push(&bogus).expect("per-entry rejection, not an abort");
+    assert_eq!(outcomes[0], MultiOutcome::Accepted);
+    assert!(
+        matches!(&outcomes[1], MultiOutcome::Rejected(e) if e.contains("nope")),
+        "{outcomes:?}"
+    );
+    cl.sync().unwrap();
+    assert_eq!(cl.snapshot("m0").unwrap().t, 16, "the good entry applied");
+    cl.ping().unwrap();
+}
+
+#[test]
+fn multi_push_degrades_gracefully_on_v1() {
+    let (_server, addr) = start_server_with(ProtocolChoice::V1);
+    let mut cl = Client::connect(&addr).unwrap();
+    assert_eq!(cl.protocol_version(), 1);
+    cl.register("a", 1, "gea(c=0.5)").unwrap();
+    cl.register("b", 1, "gea(c=0.5)").unwrap();
+    let xs = [1.0, 2.0, 3.0];
+    let outcomes = cl
+        .multi_push(&[("a", 3, &xs[..]), ("b", 3, &xs[..])])
+        .expect("multi_push degrades to per-stream round-trips");
+    assert_eq!(outcomes, vec![MultiOutcome::Accepted; 2]);
+    cl.sync().unwrap();
+    assert_eq!(cl.snapshot("a").unwrap().t, 3);
+    assert_eq!(cl.snapshot("b").unwrap().t, 3);
+}
+
+#[test]
+fn byte_level_v2_roundtrips_over_tcp() {
+    let (_server, addr) = start_server();
+    let mut raw = RawV2::connect(&addr);
+    // Register → handle, all at the frame level.
+    raw.send(
+        7,
+        &Request::Register {
+            stream: "w".into(),
+            dim: 2,
+            spec: "gea(c=0.5)".into(),
+        },
+    );
+    let (seq, resp) = raw.recv(OpKind::Register);
+    assert_eq!(seq, 7);
+    let Response::Registered { handle } = resp else {
+        panic!("expected Registered, got {resp:?}");
+    };
+    assert!(handle > 0);
+    // Handle-addressed batched push with exact little-endian f64s.
+    raw.send(
+        8,
+        &Request::PushMany {
+            stream: StreamRef::Handle(handle),
+            count: 3,
+            data: vec![1.5, -2.5, 3.25, -4.75, 0.125, 9.0],
+        },
+    );
+    assert_eq!(
+        raw.recv(OpKind::PushMany),
+        (
+            8,
+            Response::PushedMany {
+                accepted: 3,
+                dropped: 0
+            }
+        )
+    );
+    raw.send(9, &Request::Sync);
+    assert_eq!(raw.recv(OpKind::Sync), (9, Response::Synced));
+    raw.send(10, &Request::Snapshot {
+        stream: StreamRef::Handle(handle),
+    });
+    let (seq, resp) = raw.recv(OpKind::Snapshot);
+    assert_eq!(seq, 10);
+    let Response::Snap { stream, t, value, .. } = resp else {
+        panic!("expected Snap, got {resp:?}");
+    };
+    assert_eq!(stream, "w");
+    assert_eq!(t, 3);
+    assert_eq!(value.expect("value").len(), 2);
+    // A stale/unknown handle is a structured per-request error.
+    raw.send(11, &Request::Snapshot {
+        stream: StreamRef::Handle(handle + 999),
+    });
+    let (seq, resp) = raw.recv(OpKind::Snapshot);
+    assert_eq!(seq, 11);
+    assert!(matches!(resp, Response::Err(e) if e.contains("handle")));
+    // Binary state transfer: raw bytes on the wire, no hex.
+    raw.send(12, &Request::ExportState {
+        stream: StreamRef::Handle(handle),
+    });
+    let (_, resp) = raw.recv(OpKind::ExportState);
+    let Response::State { state, .. } = resp else {
+        panic!("expected State, got {resp:?}");
+    };
+    assert_eq!(&state[..4], b"ATAE", "framed state payload travels raw");
+}
+
+#[test]
+fn pipelined_requests_complete_out_of_order() {
+    // A sync barrier behind a deep apply backlog must NOT stall the
+    // pipelined ping sent after it: the ping's response arrives first,
+    // matched by id. Determinism: ONE multi-million-sample batch is
+    // enqueued as a single shard message, so the barrier message queued
+    // behind it cannot be acked before the whole batch applies
+    // (milliseconds of estimator work), while the inline ping answers
+    // in microseconds.
+    const N: usize = 4_000_000;
+    let c = Arc::new(Coordinator::new(1, 64, BackpressurePolicy::Block));
+    let server = Server::start("127.0.0.1:0", c, 4).expect("server");
+    let addr = server.addr().to_string();
+    {
+        let mut cl = Client::connect(&addr).unwrap();
+        cl.register("big", 1, "gea(c=0.5)").unwrap();
+    }
+    let mut raw = RawV2::connect(&addr);
+    raw.send(1, &Request::Resolve {
+        stream: "big".into(),
+    });
+    let (_, resp) = raw.recv(OpKind::Resolve);
+    let Response::Resolved { handle, .. } = resp else {
+        panic!("expected Resolved, got {resp:?}");
+    };
+    raw.send(100, &Request::PushMany {
+        stream: StreamRef::Handle(handle),
+        count: N,
+        data: vec![0.5; N],
+    });
+    // Pipeline the barrier and a ping behind it WITHOUT reading acks.
+    raw.send(500, &Request::Sync);
+    raw.send(501, &Request::Ping);
+    // Collect all 3 responses; the ping must overtake the sync.
+    let mut order: Vec<u64> = Vec::new();
+    for _ in 0..3 {
+        wire::read_frame_into(&mut raw.s, &mut raw.buf)
+            .expect("recv io")
+            .expect("recv frame");
+        // Peek the seq, then decode with the right op kind.
+        let seq = u64::from_le_bytes(raw.buf[..8].try_into().unwrap());
+        let kind = match seq {
+            100 => OpKind::PushMany,
+            500 => OpKind::Sync,
+            501 => OpKind::Ping,
+            other => panic!("unexpected seq {other}"),
+        };
+        let (got, resp) = protocol::decode_response(Wire::V2Binary, kind, &raw.buf).unwrap();
+        assert_eq!(got, seq);
+        match seq {
+            100 => assert_eq!(
+                resp,
+                Response::PushedMany {
+                    accepted: N as u64,
+                    dropped: 0
+                }
+            ),
+            500 => assert_eq!(resp, Response::Synced),
+            _ => assert_eq!(resp, Response::Pong),
+        }
+        order.push(seq);
+    }
+    let ping_at = order.iter().position(|&s| s == 501).unwrap();
+    let sync_at = order.iter().position(|&s| s == 500).unwrap();
+    assert!(
+        ping_at < sync_at,
+        "ping (seq 501) must complete before the sync barrier (seq 500): {order:?}"
+    );
+    // And the barrier really waited: everything is applied.
+    raw.send(502, &Request::Snapshot {
+        stream: StreamRef::Handle(handle),
+    });
+    let (_, resp) = raw.recv(OpKind::Snapshot);
+    let Response::Snap { t, .. } = resp else {
+        panic!("expected Snap, got {resp:?}");
+    };
+    assert_eq!(t, N as u64);
+}
+
+#[test]
+fn client_pipelined_push_many_matches_sequential() {
+    let (_server, addr) = start_server();
+    let mut cl = Client::connect(&addr).unwrap();
+    cl.register("pipe", 2, "awa3(c=0.5)").unwrap();
+    cl.register("seq", 2, "awa3(c=0.5)").unwrap();
+    let chunks: Vec<Vec<f64>> = (0..10)
+        .map(|i| (0..12).map(|k| ((i * 12 + k) as f64 * 0.41).cos()).collect())
+        .collect();
+    let batches: Vec<(&str, usize, &[f64])> =
+        chunks.iter().map(|c| ("pipe", 6, c.as_slice())).collect();
+    let acks = cl.push_many_pipelined(&batches).expect("pipelined");
+    assert_eq!(acks, vec![(6, 0); 10]);
+    for c in &chunks {
+        cl.push_many("seq", 6, c).unwrap();
+    }
+    cl.sync().unwrap();
+    let a = cl.snapshot("pipe").unwrap();
+    let b = cl.snapshot("seq").unwrap();
+    assert_eq!(a.t, 60);
+    assert_eq!(b.t, 60);
+    let (va, vb) = (a.value.unwrap(), b.value.unwrap());
+    for k in 0..2 {
+        assert!((va[k] - vb[k]).abs() < 1e-12, "dim {k}");
+    }
+    // The pipelined API also runs on v1 (positional matching).
+    let mut v1 = Client::connect_with(&addr, ProtocolChoice::V1).unwrap();
+    let acks = v1.push_many_pipelined(&batches).expect("v1 pipelined");
+    assert_eq!(acks, vec![(6, 0); 10]);
+    v1.sync().unwrap();
+    assert_eq!(v1.snapshot("pipe").unwrap().t, 120);
+}
+
+// ---------------------------------------------------------------------------
+// Cross-version compatibility matrix
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v2_client_against_v1_only_server_falls_back() {
+    let (_server, addr) = start_server_with(ProtocolChoice::V1);
+    // Auto client: hello answered with v1 → transparent fallback.
+    let mut cl = Client::connect(&addr).expect("connect");
+    assert_eq!(cl.protocol_version(), 1);
+    full_workflow(&mut cl);
+    // A client REQUIRING v2 fails loudly instead of downgrading.
+    let err = Client::connect_with(&addr, ProtocolChoice::V2).unwrap_err();
+    assert!(matches!(err, ClientError::Protocol(_)), "{err}");
+}
+
+#[test]
+fn v1_client_against_v2_default_server_works() {
+    let (_server, addr) = start_server();
+    let mut cl = Client::connect_with(&addr, ProtocolChoice::V1).expect("connect");
+    assert_eq!(cl.protocol_version(), 1);
+    full_workflow(&mut cl);
+}
+
+#[test]
+fn missing_hello_legacy_peer_is_auto_detected() {
+    use ata::coordinator::protocol::{read_frame, write_frame};
+    let (_server, addr) = start_server();
+    let mut raw = TcpStream::connect(&addr).expect("raw connect");
+    raw.set_nodelay(true).unwrap();
+    // First frame is a bare legacy JSON request — no hello at all.
+    write_frame(
+        &mut raw,
+        &protocol::v1::request_to_json(&Request::Ping).unwrap(),
+    )
+    .unwrap();
+    let pong = read_frame(&mut raw).unwrap().expect("pong frame");
+    assert_eq!(pong.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(pong.get("pong").and_then(Json::as_bool), Some(true));
+    // The whole connection stays v1.
+    write_frame(
+        &mut raw,
+        &protocol::v1::request_to_json(&Request::ListStreams).unwrap(),
+    )
+    .unwrap();
+    let resp = read_frame(&mut raw).unwrap().expect("list frame");
+    assert!(resp.get("streams").is_some());
+}
+
+#[test]
+fn strict_v2_server_rejects_legacy_json_peers_readably() {
+    use ata::coordinator::protocol::{read_frame, write_frame};
+    let (_server, addr) = start_server_with(ProtocolChoice::V2);
+    // A v2 client is fine…
+    let mut cl = Client::connect(&addr).expect("connect");
+    assert_eq!(cl.protocol_version(), 2);
+    cl.ping().unwrap();
+    // …a legacy JSON peer gets ONE structured JSON error, then EOF.
+    let mut raw = TcpStream::connect(&addr).expect("raw connect");
+    write_frame(
+        &mut raw,
+        &protocol::v1::request_to_json(&Request::Ping).unwrap(),
+    )
+    .unwrap();
+    let resp = read_frame(&mut raw).unwrap().expect("error frame");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(resp
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap()
+        .contains("hello"));
+    // Server closes after rejecting: clean EOF or a reset, never a
+    // further response frame.
+    assert!(
+        matches!(read_frame(&mut raw), Ok(None) | Err(_)),
+        "server closes after rejecting a legacy peer in strict v2 mode"
+    );
+}
+
+#[test]
+fn mid_connection_garbage_after_handshake_is_survivable() {
+    let (_server, addr) = start_server();
+    let mut raw = RawV2::connect(&addr);
+    // Garbage too short to even carry a seq: error echoed with seq 0.
+    raw.send_raw(&[0xFF; 5]);
+    let (seq, resp) = raw.recv(OpKind::Ping);
+    assert_eq!(seq, 0);
+    assert!(matches!(resp, Response::Err(_)), "{resp:?}");
+    // Garbage with a readable seq header: the seq is echoed so a
+    // pipelined client can fail just that request.
+    let mut junk = 77u64.to_le_bytes().to_vec();
+    junk.extend_from_slice(&[0xEE, 0xDD, 0xCC]);
+    raw.send_raw(&junk);
+    let (seq, resp) = raw.recv(OpKind::Ping);
+    assert_eq!(seq, 77);
+    assert!(matches!(resp, Response::Err(_)), "{resp:?}");
+    // Framing never desynchronized: a real request still works.
+    raw.send(9, &Request::Ping);
+    assert_eq!(raw.recv(OpKind::Ping), (9, Response::Pong));
+}
+
+#[test]
 fn snapshot_of_empty_stream_has_null_value() {
     let (_server, addr) = start_server();
     let mut cl = Client::connect(&addr).unwrap();
@@ -241,7 +687,8 @@ fn server_shutdown_is_clean() {
 #[test]
 fn state_transfer_ops_over_the_wire() {
     // export_state → restore moves a stream's estimator state between
-    // two independent servers; merge_state rolls a partial in.
+    // two independent servers; merge_state rolls a partial in. Runs on
+    // the default (v2) codec: state bytes travel raw, handle-addressed.
     let (_sa, addr_a) = start_server();
     let (_sb, addr_b) = start_server();
     let mut ca = Client::connect(&addr_a).expect("connect a");
@@ -276,7 +723,7 @@ fn state_transfer_ops_over_the_wire() {
     assert_eq!(ca.merge_state("tw", &partial).expect("merge"), 14);
     // Corrupt payloads come back as structured errors, not disconnects.
     let err = ca.restore("w", b"junk").unwrap_err();
-    assert!(!err.is_empty());
+    assert!(matches!(err, ClientError::Server(_)), "{err:?}");
     ca.ping().expect("connection still alive");
 }
 
@@ -286,7 +733,7 @@ fn checkpoint_op_requires_persist_and_works_with_it() {
     // Without a [persist] section the op is a structured error.
     let (_server, addr) = start_server();
     let mut cl = Client::connect(&addr).expect("connect");
-    let err = cl.checkpoint().unwrap_err();
+    let err = cl.checkpoint().unwrap_err().to_string();
     assert!(err.contains("persist"), "{err}");
     cl.ping().expect("still alive");
     // With one, the snapshot lands on disk and reports its streams.
@@ -309,4 +756,48 @@ fn checkpoint_op_requires_persist_and_works_with_it() {
     assert_eq!(streams, 1);
     assert!(std::path::Path::new(&path).exists(), "{path}");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_cached_handles_recover_after_reregistration() {
+    // Server-side unregister + re-register mints a fresh handle; a v2
+    // client holding the old one in its cache must transparently
+    // re-resolve instead of failing forever.
+    let c = Arc::new(Coordinator::new(1, 64, BackpressurePolicy::Block));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+    let mut cl = Client::connect(&server.addr().to_string()).unwrap();
+    let h1 = cl.register("w", 1, "gea(c=0.5)").unwrap();
+    assert!(cl.push("w", &[1.0]).unwrap());
+    // Churn the stream behind the client's back.
+    c.unregister("w").unwrap();
+    let h2 = c.register("w", 1, ata::averagers::AveragerSpec::Gea { c: 0.5 }).unwrap();
+    assert_ne!(h1, h2);
+    // Every handle-addressed op recovers via one re-resolve.
+    assert!(cl.push("w", &[2.0]).unwrap());
+    cl.sync().unwrap();
+    assert_eq!(cl.snapshot("w").unwrap().t, 1); // fresh stream: only the retried push
+    assert_eq!(cl.push_many("w", 2, &[3.0, 4.0]).unwrap(), (2, 0));
+    cl.sync().unwrap();
+    assert_eq!(cl.snapshot("w").unwrap().t, 3);
+    // A genuinely missing stream still errors (no infinite retries).
+    c.unregister("w").unwrap();
+    assert!(cl.push("w", &[5.0]).is_err());
+}
+
+#[test]
+fn wire_metrics_count_connections_and_frames() {
+    let c = Arc::new(Coordinator::new(1, 64, BackpressurePolicy::Block));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+    let addr = server.addr().to_string();
+    {
+        let mut v2 = Client::connect(&addr).unwrap();
+        v2.ping().unwrap();
+        let mut v1 = Client::connect_with(&addr, ProtocolChoice::V1).unwrap();
+        v1.ping().unwrap();
+    }
+    let m = c.metrics();
+    assert_eq!(m.counter("wire_connections_v2").get(), 1);
+    assert_eq!(m.counter("wire_connections_v1").get(), 1);
+    assert!(m.counter("wire_frames_in").get() >= 3);
+    assert!(m.counter("wire_frames_out").get() >= 3);
 }
