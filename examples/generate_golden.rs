@@ -1,0 +1,98 @@
+//! Golden-file generator, Rust side: reproduces the document the python
+//! mirror (`python/compile/averagers_ref.py`) writes — estimator value
+//! traces plus the `[variance, ess]` moment columns — so golden drift
+//! is diagnosable and regenerable from either language.
+//!
+//! ```text
+//! cargo run --example generate_golden [path]
+//! ```
+//!
+//! defaults to `rust/tests/golden/averager_golden.json` (anchored at the
+//! repo root via CARGO_MANIFEST_DIR). The checked-in file is normally
+//! produced by the python mirror — regenerating from Rust and diffing
+//! is how you localize a cross-language divergence.
+
+use ata::averagers::AveragerSpec;
+use ata::util::json::Json;
+use std::collections::BTreeMap;
+
+const TOTAL_STEPS: u64 = 500;
+
+/// The python mirror's deterministic test stream.
+fn stream(t: u64) -> f64 {
+    (0.37 * t as f64).sin() * 10.0 + (1.7 * t as f64).cos()
+}
+
+/// The python mirror's estimator roster (labels must match verbatim).
+fn labels() -> Vec<String> {
+    vec![
+        "expk(k=10)".into(),
+        "expk(k=100)".into(),
+        "gea(c=0.25)".into(),
+        "gea(c=0.5)".into(),
+        "awa2(k=10)".into(),
+        "awa2(c=0.5)".into(),
+        "awa3(c=0.5)".into(),
+        "awa5(c=0.25)".into(),
+        "true(k=10)".into(),
+        "true(c=0.5)".into(),
+        format!("raw(c=0.5,T={TOTAL_STEPS})"),
+        "restart(k=25)".into(),
+        "restart(c=0.5)".into(),
+    ]
+}
+
+fn main() {
+    let path = std::env::args().nth(1).unwrap_or_else(|| {
+        format!(
+            "{}/rust/tests/golden/averager_golden.json",
+            env!("CARGO_MANIFEST_DIR")
+        )
+    });
+    let checkpoints: Vec<u64> = [1u64, 2, 3, 5, 8, 13, 21, 50, 64, 100, 127, 200, 333, 499, 500]
+        .into_iter()
+        .filter(|&cp| cp <= TOTAL_STEPS)
+        .collect();
+    let cps: std::collections::BTreeSet<u64> = checkpoints.iter().copied().collect();
+
+    let mut traces: BTreeMap<String, Json> = BTreeMap::new();
+    let mut moments: BTreeMap<String, Json> = BTreeMap::new();
+    for label in labels() {
+        let spec = AveragerSpec::parse(&label).expect("label parses");
+        let mut avg = spec.build(1).expect("build");
+        let mut values: Vec<Json> = Vec::new();
+        let mut cols: Vec<Json> = Vec::new();
+        for t in 1..=TOTAL_STEPS {
+            avg.observe_scalar(stream(t));
+            if cps.contains(&t) {
+                values.push(match avg.value_scalar() {
+                    Some(v) => Json::Num(v),
+                    None => Json::Null,
+                });
+                let (mut m, mut v) = ([0.0], [0.0]);
+                cols.push(match avg.moments_into(&mut m, &mut v) {
+                    Some(ess) => Json::Arr(vec![Json::Num(v[0]), Json::Num(ess)]),
+                    None => Json::Null,
+                });
+            }
+        }
+        traces.insert(label.clone(), Json::Arr(values));
+        moments.insert(label, Json::Arr(cols));
+    }
+
+    let doc = Json::obj(vec![
+        ("total_steps", Json::Num(TOTAL_STEPS as f64)),
+        (
+            "checkpoints",
+            Json::Arr(checkpoints.iter().map(|&c| Json::Num(c as f64)).collect()),
+        ),
+        (
+            "stream",
+            Json::Str("sin(0.37 t)*10 + cos(1.7 t), t = 1..T".into()),
+        ),
+        ("traces", Json::Obj(traces)),
+        ("moments", Json::Obj(moments)),
+    ]);
+    std::fs::write(&path, doc.encode_pretty()).expect("write golden file");
+    println!("wrote {path}");
+}

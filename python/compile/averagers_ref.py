@@ -1,13 +1,18 @@
 """Pure-python mirror of the Rust averagers — golden-trace generator.
 
 Implements every estimator exactly as `rust/src/averagers` does (same
-clamping, same flush rules) in float64. `generate_golden()` runs them on
-deterministic streams and emits JSON consumed by the Rust integration
-test `rust/tests/averager_golden.rs`, giving a cross-language
-equivalence check of the paper's equations.
+clamping, same flush rules) in float64, INCLUDING the moment side state
+(weighted mean of x², effective sample size) behind the analytics
+layer's `moments_into`. `generate_golden()` runs them on deterministic
+streams and emits JSON consumed by the Rust integration test
+`rust/tests/averager_golden.rs`, giving a cross-language equivalence
+check of the paper's equations and of the variance/ESS columns.
 
-Run directly (or via make golden) to regenerate:
+Run directly to regenerate:
     python -m compile.averagers_ref ../rust/tests/golden/averager_golden.json
+
+(`cargo run --example generate_golden` writes the same document from the
+Rust side, so golden drift is reproducible from either language.)
 """
 
 import json
@@ -22,6 +27,7 @@ class ExpAverage:
         assert 0.0 <= gamma < 1.0
         self.gamma = gamma
         self.ema = 0.0
+        self.ema2 = 0.0  # raw EMA of x² (moment side state)
         self.gamma_pow_t = 1.0
         self.t = 0
 
@@ -33,11 +39,24 @@ class ExpAverage:
         self.t += 1
         self.gamma_pow_t *= self.gamma
         self.ema = self.gamma * self.ema + (1.0 - self.gamma) * x
+        self.ema2 = self.gamma * self.ema2 + (1.0 - self.gamma) * x * x
 
     def value(self):
         if self.t == 0:
             return None
         return self.ema / (1.0 - self.gamma_pow_t)
+
+    def moments(self):
+        """(variance, ess) of the debiased geometric weight profile."""
+        if self.t == 0:
+            return None
+        f = 1.0 / (1.0 - self.gamma_pow_t)
+        mean = self.ema * f
+        var = max(self.ema2 * f - mean * mean, 0.0)
+        mass = 1.0 - self.gamma_pow_t
+        sq_mass = 1.0 - self.gamma_pow_t * self.gamma_pow_t
+        ess = (1.0 + self.gamma) / (1.0 - self.gamma) * mass * mass / sq_mass
+        return var, ess
 
 
 def solve_gamma(v, s):
@@ -58,6 +77,7 @@ class GrowingExp:
         assert 0.0 < c < 1.0
         self.c = c
         self.avg = 0.0
+        self.avg2 = 0.0  # same-decay mean of x² (moment side state)
         self.v = 0.0
         self.t = 0
 
@@ -65,15 +85,24 @@ class GrowingExp:
         self.t += 1
         if self.t == 1:
             self.avg = x
+            self.avg2 = x * x
             self.v = 1.0
             return
         k_target = min(max(self.c * self.t, 1.0), float(self.t))
         g = solve_gamma(self.v, 1.0 / k_target)
         self.avg = g * self.avg + (1.0 - g) * x
+        self.avg2 = g * self.avg2 + (1.0 - g) * x * x
         self.v = g * g * self.v + (1.0 - g) * (1.0 - g)
 
     def value(self):
         return self.avg if self.t > 0 else None
+
+    def moments(self):
+        if self.t == 0:
+            return None
+        var = max(self.avg2 - self.avg * self.avg, 0.0)
+        ess = 1.0 / self.v if self.v > 0.0 else 0.0
+        return var, ess
 
 
 def combine_gamma(n0, n1, k_t):
@@ -95,6 +124,7 @@ class AwaMulti:
         self.window = window
         self.z = z
         self.means = [0.0] * (z + 1)
+        self.means2 = [0.0] * (z + 1)  # per-accumulator mean of x²
         self.counts = [0] * (z + 1)
         self.t = 0
 
@@ -122,25 +152,52 @@ class AwaMulti:
         z = self.z
         self.counts[z] += 1
         self.means[z] += (x - self.means[z]) / self.counts[z]
+        self.means2[z] += (x * x - self.means2[z]) / self.counts[z]
         if self._should_shift():
             self.means = self.means[1:] + [0.0]
+            self.means2 = self.means2[1:] + [0.0]
             self.counts = self.counts[1:] + [0]
 
-    def value(self):
-        if self.t == 0:
-            return None
+    def _combine(self, means):
+        """Weighted combine of per-accumulator means (shared by the
+        value and its x² twin — identical weights)."""
         n0 = self.counts[0]
         nrec = sum(self.counts[1:])
         if nrec == 0:
-            return self.means[0] if n0 > 0 else None
-        pooled = (
-            sum(c * m for c, m in zip(self.counts[1:], self.means[1:])) / nrec
-        )
+            return means[0] if n0 > 0 else None
+        pooled = sum(c * m for c, m in zip(self.counts[1:], means[1:])) / nrec
         if n0 == 0:
             return pooled
         k_t = self.k_at(self.t)
         gamma0 = 1.0 - combine_gamma(float(n0), float(nrec), k_t)
-        return pooled + gamma0 * (self.means[0] - pooled)
+        return pooled + gamma0 * (means[0] - pooled)
+
+    def value(self):
+        if self.t == 0:
+            return None
+        return self._combine(self.means)
+
+    def moments(self):
+        if self.t == 0:
+            return None
+        n0 = self.counts[0]
+        nrec = sum(self.counts[1:])
+        mean = self._combine(self.means)
+        m2 = self._combine(self.means2)
+        if mean is None:
+            return None
+        var = max(m2 - mean * mean, 0.0)
+        if nrec == 0:
+            return var, float(n0)
+        gamma0 = (
+            0.0
+            if n0 == 0
+            else 1.0 - combine_gamma(float(n0), float(nrec), self.k_at(self.t))
+        )
+        sum_sq = (1.0 - gamma0) * (1.0 - gamma0) / nrec
+        if n0 > 0:
+            sum_sq += gamma0 * gamma0 / n0
+        return var, 1.0 / sum_sq
 
 
 class TrueWindow:
@@ -167,6 +224,14 @@ class TrueWindow:
             return None
         return sum(self.buf) / len(self.buf)
 
+    def moments(self):
+        if not self.buf:
+            return None
+        n = len(self.buf)
+        mean = sum(self.buf) / n
+        m2 = sum(x * x for x in self.buf) / n
+        return max(m2 - mean * mean, 0.0), float(n)
+
 
 class RawTail:
     """Classic tail average: waits until T(1−c) (the `raw` baseline)."""
@@ -174,6 +239,7 @@ class RawTail:
     def __init__(self, c, total_steps):
         self.start = math.floor(total_steps * (1.0 - c)) + 1
         self.mean = 0.0
+        self.mean2 = 0.0  # tail mean of x² (moment side state)
         self.n = 0
         self.last = 0.0
         self.t = 0
@@ -184,11 +250,19 @@ class RawTail:
         if self.t >= self.start:
             self.n += 1
             self.mean += (x - self.mean) / self.n
+            self.mean2 += (x * x - self.mean2) / self.n
 
     def value(self):
         if self.t == 0:
             return None
         return self.mean if self.n > 0 else self.last
+
+    def moments(self):
+        if self.t == 0:
+            return None
+        if self.n == 0:
+            return 0.0, 1.0  # raw last iterate: a point mass
+        return max(self.mean2 - self.mean * self.mean, 0.0), float(self.n)
 
 
 class RestartTail:
@@ -197,8 +271,10 @@ class RestartTail:
     def __init__(self, window):
         self.window = window
         self.cur = 0.0
+        self.cur2 = 0.0  # current block's mean of x²
         self.n_cur = 0
         self.published = 0.0
+        self.published2 = 0.0  # published block's mean of x²
         self.n_published = 0
         self.last = 0.0
         self.t = 0
@@ -214,16 +290,27 @@ class RestartTail:
         self.last = x
         self.n_cur += 1
         self.cur += (x - self.cur) / self.n_cur
+        self.cur2 += (x * x - self.cur2) / self.n_cur
         if self._complete():
             self.published = self.cur
+            self.published2 = self.cur2
             self.n_published = self.n_cur
             self.cur = 0.0
+            self.cur2 = 0.0
             self.n_cur = 0
 
     def value(self):
         if self.t == 0:
             return None
         return self.published if self.n_published > 0 else self.last
+
+    def moments(self):
+        if self.t == 0:
+            return None
+        if self.n_published == 0:
+            return 0.0, 1.0  # raw last iterate: a point mass
+        var = max(self.published2 - self.published * self.published, 0.0)
+        return var, float(self.n_published)
 
 
 def stream(t):
@@ -252,7 +339,9 @@ def build_estimators(total_steps):
 def generate_golden(total_steps=500):
     """Trace every estimator over the deterministic stream.
 
-    Records values at checkpoints (powers-of-two-ish + final).
+    Records values AND moment columns (weighted variance, effective
+    sample size — each checkpoint entry is `[var, ess]` or null) at
+    checkpoints (powers-of-two-ish + final).
     """
     checkpoints = sorted(
         {
@@ -267,8 +356,10 @@ def generate_golden(total_steps=500):
         "checkpoints": checkpoints,
         "stream": "sin(0.37 t)*10 + cos(1.7 t), t = 1..T",
         "traces": {},
+        "moments": {},
     }
     traces = {name: [] for name in ests}
+    moments = {name: [] for name in ests}
     cps = set(checkpoints)
     for t in range(1, total_steps + 1):
         x = stream(t)
@@ -276,7 +367,10 @@ def generate_golden(total_steps=500):
             est.observe(x)
             if t in cps:
                 traces[name].append(est.value())
+                m = est.moments()
+                moments[name].append(None if m is None else [m[0], m[1]])
     out["traces"] = traces
+    out["moments"] = moments
     return out
 
 

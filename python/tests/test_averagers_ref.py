@@ -1,8 +1,11 @@
 """Sanity tests of the python averager mirror + golden-file generation.
 
 The heavy cross-language check lives in rust/tests/averager_golden.rs;
-here we verify the mirror itself satisfies the paper's invariants and
-regenerate the golden file so `make golden` keeps it fresh.
+here we verify the mirror itself satisfies the paper's invariants
+(values AND the variance/ESS moment columns) and that the checked-in
+golden file is current (regenerate with
+`python3 -m compile.averagers_ref ../rust/tests/golden/averager_golden.json`
+or `cargo run --example generate_golden`).
 """
 
 import json
@@ -65,6 +68,56 @@ class TestMirrorInvariants:
             tw.observe(float(t))
         assert len(tw.buf) == 50
         assert abs(tw.value() - sum(range(51, 101)) / 50.0) < 1e-9
+
+    def test_moments_match_reconstructed_weights(self):
+        """Streamed (variance, ess) equals the direct computation over
+        each estimator's impulse-reconstructed weight profile."""
+        T = 50
+
+        def reconstruct(make):
+            w = []
+            for i in range(T):
+                est = make()
+                for j in range(T):
+                    est.observe(1.0 if j == i else 0.0)
+                w.append(est.value())
+            return w
+
+        makers = {
+            "expk": lambda: m.ExpAverage.for_window(10),
+            "gea": lambda: m.GrowingExp(0.5),
+            "awa3": lambda: m.AwaMulti(("growing", 0.5), 2),
+            "true": lambda: m.TrueWindow(("fixed", 10)),
+            "restart": lambda: m.RestartTail(("fixed", 7)),
+            "raw": lambda: m.RawTail(0.5, 80),
+        }
+        for name, make in makers.items():
+            est = make()
+            xs = [m.stream(t) for t in range(1, T + 1)]
+            for x in xs:
+                est.observe(x)
+            w = reconstruct(make)
+            mean = sum(a * x for a, x in zip(w, xs))
+            want_var = sum(a * (x - mean) ** 2 for a, x in zip(w, xs))
+            want_ess = 1.0 / sum(a * a for a in w)
+            var, ess = est.moments()
+            assert var == pytest.approx(want_var, rel=1e-9, abs=1e-9), name
+            assert ess == pytest.approx(want_ess, rel=1e-9), name
+
+    def test_constant_stream_moments(self):
+        for make in [
+            lambda: m.ExpAverage.for_window(8),
+            lambda: m.GrowingExp(0.5),
+            lambda: m.AwaMulti(("fixed", 6), 1),
+            lambda: m.TrueWindow(("fixed", 5)),
+            lambda: m.RestartTail(("fixed", 4)),
+        ]:
+            est = make()
+            for _ in range(100):
+                est.observe(3.25)
+            var, ess = est.moments()
+            assert var < 1e-12
+            assert 1.0 - 1e-9 <= ess <= 101.0
 
 
 class TestGolden:

@@ -1,0 +1,109 @@
+//! Anytime analytics throughput: stat snapshots, multi_snapshot fan-in
+//! and prefix queries at 16 / 256 / 4096 streams — the acceptance sweep
+//! of the analytics engine. Exports `BENCH_query.json`.
+//!
+//! Run: `cargo bench --bench query_throughput` (`-- --quick`).
+
+use ata::analytics::Query;
+use ata::averagers::AveragerSpec;
+use ata::benchkit::Bench;
+use ata::config::BackpressurePolicy;
+use ata::coordinator::protocol::StreamRef;
+use ata::coordinator::{Client, Coordinator, Server};
+use std::sync::Arc;
+
+fn main() {
+    let mut bench = Bench::from_args("query");
+    let quick = std::env::args().any(|a| a == "--quick");
+    let d = 16usize;
+
+    bench.section(&format!(
+        "in-process analytics: d={d}, mixed banked (gea) + slot (true) streams"
+    ));
+    for &n_streams in &[16usize, 256, 4096] {
+        let case = format!("s={n_streams}");
+        if !bench.enabled(&case) {
+            continue;
+        }
+        let c = Coordinator::new(4, 4096, BackpressurePolicy::Block);
+        let mut handles = Vec::with_capacity(n_streams);
+        for i in 0..n_streams {
+            // Every 8th stream exercises the slot fallback path.
+            let spec = if i % 8 == 7 {
+                AveragerSpec::parse("true(k=32)").unwrap()
+            } else {
+                AveragerSpec::Gea { c: 0.5 }
+            };
+            handles.push(c.register(&format!("q/s{i:05}"), d, spec).unwrap());
+        }
+        let batch = 32usize;
+        let flat = vec![0.5f64; batch * d];
+        let warm = if quick { 2 } else { 8 };
+        for _ in 0..warm {
+            for i in 0..n_streams {
+                c.push_many(&format!("q/s{i:05}"), batch, &flat).unwrap();
+            }
+        }
+        c.sync().unwrap();
+
+        // Single-stream stat read (the per-call floor).
+        bench.bench(&format!("stat_snapshot {case}"), || {
+            c.stat_snapshot("q/s00000").unwrap()
+        });
+        // Fan-in: every stream's stats via ONE registry read guard.
+        let refs: Vec<StreamRef> = handles.iter().map(|&h| StreamRef::Handle(h)).collect();
+        bench.bench_elements(&format!("multi_stat all {case}"), n_streams as u64, || {
+            c.multi_stat(&refs)
+        });
+        // Prefix query with aggregation (the dashboard shape).
+        let q = Query {
+            prefix: "q/".into(),
+            aggregate: true,
+            ..Query::default()
+        };
+        bench.bench_elements(&format!("query aggregate {case}"), n_streams as u64, || {
+            c.query(&q)
+        });
+        // Top-K by deviation (adds the scoring pass).
+        let qk = Query {
+            prefix: "q/".into(),
+            top_k: 8,
+            ..Query::default()
+        };
+        bench.bench_elements(&format!("query top8 {case}"), n_streams as u64, || {
+            c.query(&qk)
+        });
+    }
+
+    bench.section("TCP round-trips: query / multi_snapshot over both codecs (64 streams)");
+    {
+        let c = Arc::new(Coordinator::new(2, 4096, BackpressurePolicy::Block));
+        let n = 64usize;
+        for i in 0..n {
+            c.register(&format!("q/s{i:03}"), d, AveragerSpec::Gea { c: 0.5 })
+                .unwrap();
+        }
+        let flat = vec![0.5f64; 16 * d];
+        for i in 0..n {
+            c.push_many(&format!("q/s{i:03}"), 16, &flat).unwrap();
+        }
+        c.sync().unwrap();
+        let server = Server::start("127.0.0.1:0", Arc::clone(&c), 4).expect("server");
+        let addr = server.addr().to_string();
+        let names: Vec<String> = (0..n).map(|i| format!("q/s{i:03}")).collect();
+        let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        for proto in ["v2", "v1"] {
+            let choice = ata::coordinator::ProtocolChoice::parse(proto).unwrap();
+            let mut cl = Client::connect_with(&addr, choice).expect("client");
+            bench.bench_elements(&format!("tcp query {proto} (64 streams)"), n as u64, || {
+                cl.query("q/", 1.96, 0, true).unwrap()
+            });
+            bench.bench_elements(
+                &format!("tcp multi_snapshot {proto} (64 streams)"),
+                n as u64,
+                || cl.multi_snapshot(&name_refs).unwrap(),
+            );
+        }
+    }
+    bench.finish();
+}

@@ -1,0 +1,385 @@
+//! Anytime analytics: confidence-band stat snapshots, cross-stream
+//! aggregation, and the multi-stream query model.
+//!
+//! The estimators expose streamed weighted moments
+//! ([`crate::averagers::Averager::moments_into`]): the weighted mean
+//! (the estimate itself), the weighted variance under the estimator's
+//! own weight profile, and the effective sample size `ESS = 1/Σα²`.
+//! This module turns those raw moments into the serving-side answer
+//! shape — "mean ± band, over which effective window, for these
+//! streams" — in the stats-aggregate style of timescaledb-toolkit:
+//!
+//! * [`StatSnapshot`] — one stream's point-in-time statistics with a
+//!   confidence band.
+//! * [`merge_snapshots`] — the parallel-Welford (Chan) combine rule,
+//!   weighting each side by its ESS, so per-stream partials roll up
+//!   into one pooled snapshot exactly like `merge_state` rolls up
+//!   shard partials. Associative to floating-point round-off
+//!   (property-tested to 1e-9).
+//! * [`Query`]/[`QueryResult`] — the multi-stream selection model
+//!   (prefix match, optional aggregate, top-K by deviation) executed
+//!   by [`crate::coordinator::Coordinator::query`] and exposed through
+//!   the wire `query` op and the `ata query` CLI.
+//!
+//! ## The confidence band, and what it assumes
+//!
+//! The half-width reported per dimension is
+//!
+//! ```text
+//! band = z · stddev / √ESS
+//! ```
+//!
+//! i.e. a normal-approximation interval for the *tail mean*, treating
+//! the estimator's weighted variance as the per-sample variance and the
+//! ESS as the equivalent number of independent samples. Assumptions
+//! (documented rather than hidden): samples are treated as independent
+//! draws from the windowed distribution (no autocorrelation
+//! correction), the weight profile is treated as fixed (not
+//! data-dependent), and the variance is the biased (population)
+//! weighted estimate — honest for `ESS ≫ 1`, conservative to read as
+//! approximate below that. `z` defaults to [`DEFAULT_Z`] (the 97.5%
+//! normal quantile → a two-sided 95% band); the paper's `Var = 1/k_t`
+//! design constraint is exactly why `ESS` tracks the nominal window for
+//! the anytime estimators, which makes these bands comparable across
+//! estimator families.
+
+use std::sync::Arc;
+
+/// Two-sided 95% normal band: the 97.5% quantile of N(0,1).
+pub const DEFAULT_Z: f64 = 1.959963984540054;
+
+/// One stream's point-in-time analytics read: the streamed weighted
+/// moments plus the derived uncertainty columns. `ess == 0.0` marks a
+/// stream with no samples yet (all moment columns are zeros).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatSnapshot {
+    /// Stream name (interned; aggregates use a synthetic name).
+    pub stream: Arc<str>,
+    /// Samples applied when the snapshot was taken (summed across
+    /// streams for an aggregate).
+    pub t: u64,
+    /// Nominal window `k_t` (summed for an aggregate).
+    pub effective_window: f64,
+    /// Effective sample size `1/Σα²` of the weight profile.
+    pub ess: f64,
+    /// Per-dim weighted mean — identical to the stream's estimate.
+    pub mean: Vec<f64>,
+    /// Per-dim weighted variance (biased, under the stream's weights).
+    pub variance: Vec<f64>,
+    /// Per-dim standard deviation `√variance`.
+    pub stddev: Vec<f64>,
+    /// Per-dim confidence half-width `z·stddev/√ess` (see module docs).
+    pub confidence_band: Vec<f64>,
+}
+
+impl StatSnapshot {
+    /// Derive the uncertainty columns from raw moments. An empty stream
+    /// (`ess == 0`) gets all-zero bands rather than NaNs.
+    pub fn from_moments(
+        stream: Arc<str>,
+        t: u64,
+        effective_window: f64,
+        ess: f64,
+        mean: Vec<f64>,
+        variance: Vec<f64>,
+        z: f64,
+    ) -> StatSnapshot {
+        let stddev: Vec<f64> = variance.iter().map(|&v| v.max(0.0).sqrt()).collect();
+        let band_scale = if ess > 0.0 { z / ess.sqrt() } else { 0.0 };
+        let confidence_band: Vec<f64> = stddev.iter().map(|&s| s * band_scale).collect();
+        StatSnapshot {
+            stream,
+            t,
+            effective_window,
+            ess,
+            mean,
+            variance,
+            stddev,
+            confidence_band,
+        }
+    }
+
+    /// Sample dimensionality.
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// Whether the stream had any samples when snapped.
+    pub fn has_samples(&self) -> bool {
+        self.ess > 0.0
+    }
+}
+
+/// Parallel-Welford (Chan et al.) combine of two stat snapshots,
+/// weighting each side by its ESS: with `δ = mean_b − mean_a`,
+///
+/// ```text
+/// n      = n_a + n_b
+/// mean   = mean_a + δ·n_b/n
+/// M2     = n_a·var_a + n_b·var_b + δ²·n_a·n_b/n
+/// var    = M2/n
+/// ```
+///
+/// which is exactly the pooled weighted moment of the union when the
+/// sides' weight masses are proportional to their ESS. The pooled ESS
+/// is the sum — exact for independent streams. Associative up to
+/// floating-point round-off; empty sides are identity elements.
+pub fn merge_snapshots(a: &StatSnapshot, b: &StatSnapshot, z: f64) -> StatSnapshot {
+    assert_eq!(a.dim(), b.dim(), "cannot merge stats of different dims");
+    if !a.has_samples() {
+        return b.clone();
+    }
+    if !b.has_samples() {
+        return a.clone();
+    }
+    let (na, nb) = (a.ess, b.ess);
+    let n = na + nb;
+    let d = a.dim();
+    let mut mean = vec![0.0; d];
+    let mut variance = vec![0.0; d];
+    for i in 0..d {
+        let delta = b.mean[i] - a.mean[i];
+        mean[i] = a.mean[i] + delta * nb / n;
+        let m2 = na * a.variance[i] + nb * b.variance[i] + delta * delta * na * nb / n;
+        variance[i] = (m2 / n).max(0.0);
+    }
+    StatSnapshot::from_moments(
+        Arc::from("<aggregate>"),
+        a.t + b.t,
+        a.effective_window + b.effective_window,
+        n,
+        mean,
+        variance,
+        z,
+    )
+}
+
+/// Fold [`merge_snapshots`] over every non-empty, dim-matching snapshot
+/// (dims are keyed off the first non-empty entry; mismatching streams
+/// are skipped — the caller reports how many pooled via the returned
+/// count). `None` when nothing mergeable was found.
+pub fn aggregate(stats: &[StatSnapshot], z: f64) -> (Option<StatSnapshot>, usize) {
+    let mut acc: Option<StatSnapshot> = None;
+    let mut pooled = 0usize;
+    for s in stats {
+        if !s.has_samples() {
+            continue;
+        }
+        match &acc {
+            None => {
+                pooled = 1;
+                let mut first = s.clone();
+                first.stream = Arc::from("<aggregate>");
+                acc = Some(first);
+            }
+            Some(cur) if cur.dim() == s.dim() => {
+                pooled += 1;
+                acc = Some(merge_snapshots(cur, s, z));
+            }
+            Some(_) => {} // dim mismatch: skipped, counted by the caller
+        }
+    }
+    (acc, pooled)
+}
+
+/// How far a stream's mean sits from the pooled mean, in units of the
+/// stream's own standard error: `max_d |mean_d − pooled_d| / (σ_d/√ess
+/// + ε)` with a tiny `ε = 1e-12` so zero-variance streams rank by raw
+/// deviation instead of dividing by zero. The top-K-by-deviation
+/// ranking key.
+pub fn deviation_score(s: &StatSnapshot, pooled: &StatSnapshot) -> f64 {
+    if !s.has_samples() || s.dim() != pooled.dim() {
+        return 0.0;
+    }
+    let mut worst = 0.0f64;
+    for i in 0..s.dim() {
+        let se = s.stddev[i] / s.ess.sqrt() + 1e-12;
+        let z = (s.mean[i] - pooled.mean[i]).abs() / se;
+        worst = worst.max(z);
+    }
+    worst
+}
+
+/// Keep the `k` most deviant snapshots (score descending, name
+/// ascending on ties — fully deterministic, so protocol v1 and v2
+/// return identical orderings).
+pub fn top_k_by_deviation(
+    mut stats: Vec<StatSnapshot>,
+    pooled: &StatSnapshot,
+    k: usize,
+) -> Vec<StatSnapshot> {
+    let mut scored: Vec<(f64, StatSnapshot)> = stats
+        .drain(..)
+        .map(|s| (deviation_score(&s, pooled), s))
+        .collect();
+    scored.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.1.stream.cmp(&b.1.stream))
+    });
+    scored.truncate(k);
+    scored.into_iter().map(|(_, s)| s).collect()
+}
+
+/// A multi-stream analytics query (the wire `query` op's model).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Query {
+    /// Stream-name prefix filter; empty selects every stream.
+    pub prefix: String,
+    /// Confidence-band multiplier (see module docs).
+    pub z: f64,
+    /// Keep only the `top_k` most deviant streams (0 = all).
+    pub top_k: usize,
+    /// Also return the cross-stream pooled aggregate.
+    pub aggregate: bool,
+}
+
+impl Default for Query {
+    fn default() -> Query {
+        Query {
+            prefix: String::new(),
+            z: DEFAULT_Z,
+            top_k: 0,
+            aggregate: false,
+        }
+    }
+}
+
+/// Result of a [`Query`]: per-stream snapshots sorted by name (then
+/// filtered/reordered by top-K when requested), the pooled aggregate
+/// when requested, and how many streams the pool actually absorbed
+/// (empty and dim-mismatched streams are excluded from the pool but
+/// still listed).
+#[derive(Clone, Debug, Default)]
+pub struct QueryResult {
+    pub stats: Vec<StatSnapshot>,
+    pub aggregate: Option<StatSnapshot>,
+    pub aggregated: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(name: &str, ess: f64, mean: Vec<f64>, variance: Vec<f64>) -> StatSnapshot {
+        let t = ess as u64;
+        StatSnapshot::from_moments(
+            Arc::from(name),
+            t,
+            ess,
+            ess,
+            mean,
+            variance,
+            DEFAULT_Z,
+        )
+    }
+
+    /// Direct pooled moments of weighted groups — the oracle the Chan
+    /// combine must reproduce.
+    fn pooled_oracle(groups: &[(f64, f64, f64)]) -> (f64, f64) {
+        // (weight, mean, var) per group, dim 1.
+        let w: f64 = groups.iter().map(|g| g.0).sum();
+        let mean = groups.iter().map(|g| g.0 * g.1).sum::<f64>() / w;
+        let m2 = groups
+            .iter()
+            .map(|g| g.0 * (g.2 + (g.1 - mean) * (g.1 - mean)))
+            .sum::<f64>();
+        (mean, m2 / w)
+    }
+
+    #[test]
+    fn band_formula_and_empty_handling() {
+        let s = snap("a", 16.0, vec![2.0], vec![4.0]);
+        assert_eq!(s.stddev, vec![2.0]);
+        // band = z·2/4 = z/2
+        assert!((s.confidence_band[0] - DEFAULT_Z / 2.0).abs() < 1e-12);
+        let empty = StatSnapshot::from_moments(
+            Arc::from("e"),
+            0,
+            0.0,
+            0.0,
+            vec![0.0],
+            vec![0.0],
+            DEFAULT_Z,
+        );
+        assert!(!empty.has_samples());
+        assert_eq!(empty.confidence_band, vec![0.0]);
+    }
+
+    #[test]
+    fn merge_matches_direct_pooling_and_is_associative() {
+        let groups = [(5.0, 1.0, 0.5), (12.0, -2.0, 2.0), (3.0, 4.0, 0.1)];
+        let snaps: Vec<StatSnapshot> = groups
+            .iter()
+            .enumerate()
+            .map(|(i, &(n, m, v))| snap(&format!("s{i}"), n, vec![m], vec![v]))
+            .collect();
+        let (want_mean, want_var) = pooled_oracle(&groups);
+        let left = merge_snapshots(&merge_snapshots(&snaps[0], &snaps[1], DEFAULT_Z), &snaps[2], DEFAULT_Z);
+        let right = merge_snapshots(&snaps[0], &merge_snapshots(&snaps[1], &snaps[2], DEFAULT_Z), DEFAULT_Z);
+        for m in [&left, &right] {
+            assert!((m.ess - 20.0).abs() < 1e-12);
+            assert!((m.mean[0] - want_mean).abs() < 1e-12, "{}", m.mean[0]);
+            assert!((m.variance[0] - want_var).abs() < 1e-9, "{}", m.variance[0]);
+        }
+        assert!((left.mean[0] - right.mean[0]).abs() < 1e-12);
+        assert!((left.variance[0] - right.variance[0]).abs() < 1e-9);
+        // Identity: merging with an empty side changes nothing.
+        let empty = StatSnapshot::from_moments(
+            Arc::from("e"),
+            0,
+            0.0,
+            0.0,
+            vec![0.0],
+            vec![0.0],
+            DEFAULT_Z,
+        );
+        let same = merge_snapshots(&snaps[0], &empty, DEFAULT_Z);
+        assert_eq!(same.mean, snaps[0].mean);
+        assert_eq!(same.ess, snaps[0].ess);
+    }
+
+    #[test]
+    fn aggregate_skips_empty_and_mismatched_dims() {
+        let stats = vec![
+            snap("a", 4.0, vec![1.0], vec![1.0]),
+            StatSnapshot::from_moments(
+                Arc::from("empty"),
+                0,
+                0.0,
+                0.0,
+                vec![0.0],
+                vec![0.0],
+                DEFAULT_Z,
+            ),
+            snap("wide", 4.0, vec![1.0, 2.0], vec![1.0, 1.0]),
+            snap("b", 4.0, vec![3.0], vec![1.0]),
+        ];
+        let (agg, pooled) = aggregate(&stats, DEFAULT_Z);
+        let agg = agg.expect("aggregate");
+        assert_eq!(pooled, 2, "only the two dim-1 non-empty streams pool");
+        assert!((agg.mean[0] - 2.0).abs() < 1e-12);
+        assert_eq!(&*agg.stream, "<aggregate>");
+    }
+
+    #[test]
+    fn top_k_ranks_by_deviation_deterministically() {
+        let pooled = snap("<aggregate>", 30.0, vec![0.0], vec![1.0]);
+        let stats = vec![
+            snap("near", 10.0, vec![0.1], vec![1.0]),
+            snap("far", 10.0, vec![5.0], vec![1.0]),
+            snap("mid", 10.0, vec![1.0], vec![1.0]),
+            snap("mid2", 10.0, vec![-1.0], vec![1.0]), // tie with mid by |dev|
+        ];
+        let top = top_k_by_deviation(stats, &pooled, 3);
+        assert_eq!(&*top[0].stream, "far");
+        // Tie between mid and mid2 breaks by name.
+        assert_eq!(&*top[1].stream, "mid");
+        assert_eq!(&*top[2].stream, "mid2");
+        // Zero-variance streams rank by raw deviation, no NaNs.
+        let spike = vec![snap("const", 8.0, vec![9.0], vec![0.0])];
+        let top = top_k_by_deviation(spike, &pooled, 1);
+        assert_eq!(top.len(), 1);
+        assert!(deviation_score(&top[0], &pooled).is_finite());
+    }
+}

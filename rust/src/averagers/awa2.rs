@@ -31,6 +31,9 @@ pub struct Awa2 {
     kind: WindowKind,
     /// Contiguous accumulator bank: halves `[0,d)` and `[d,2d)`.
     bank: Vec<f64>,
+    /// Parallel accumulator bank of `x²` means (same halves, same
+    /// `old_phys` indexing) — the moment side state (`moments_into`).
+    bank2: Vec<f64>,
     /// Physical half (0 or 1) holding the old accumulator `x̄⁰`.
     old_phys: usize,
     /// Old accumulator sample count `N⁰`.
@@ -53,6 +56,7 @@ impl Awa2 {
         Awa2 {
             kind,
             bank: vec![0.0; 2 * d],
+            bank2: vec![0.0; 2 * d],
             old_phys: 0,
             n0: 0,
             n1: 0,
@@ -78,6 +82,23 @@ impl Awa2 {
     fn recent_mut(&mut self) -> &mut [f64] {
         let o = (1 - self.old_phys) * self.d;
         &mut self.bank[o..o + self.d]
+    }
+
+    /// Old accumulator's `x²` mean.
+    fn old2(&self) -> &[f64] {
+        let o = self.old_phys * self.d;
+        &self.bank2[o..o + self.d]
+    }
+
+    /// Recent accumulator's `x²` mean.
+    fn recent2(&self) -> &[f64] {
+        let o = (1 - self.old_phys) * self.d;
+        &self.bank2[o..o + self.d]
+    }
+
+    fn recent2_mut(&mut self) -> &mut [f64] {
+        let o = (1 - self.old_phys) * self.d;
+        &mut self.bank2[o..o + self.d]
     }
 
     /// Sample counts `(N⁰, N¹)`.
@@ -116,6 +137,29 @@ impl Awa2 {
         self.n1 = 0;
         self.flushes += 1;
         self.recent_mut().iter_mut().for_each(|a| *a = 0.0);
+        self.recent2_mut().iter_mut().for_each(|a| *a = 0.0);
+    }
+}
+
+/// Effective sample size of the two-group AWA weight profile: recent
+/// samples carry weight `γ/N¹` each and old samples `(1−γ)/N⁰`, so
+/// `ESS = 1/Σα² = 1/(γ²/N¹ + (1−γ)²/N⁰)` — with empty groups (γ pinned
+/// to 0/1) degrading to the other group's exact count. Shared by
+/// [`Awa2`], [`super::AwaMulti`] (recent pool as one group) and both
+/// planar banks.
+pub(crate) fn awa_ess(n0: u64, nrec: u64, gamma: f64) -> f64 {
+    let mut sum_sq = 0.0;
+    if nrec > 0 {
+        sum_sq += gamma * gamma / nrec as f64;
+    }
+    if n0 > 0 {
+        let om = 1.0 - gamma;
+        sum_sq += om * om / n0 as f64;
+    }
+    if sum_sq > 0.0 {
+        1.0 / sum_sq
+    } else {
+        0.0
     }
 }
 
@@ -152,6 +196,7 @@ impl Averager for Awa2 {
         self.n1 += 1;
         let n = self.n1 as f64;
         super::mean_update(self.recent_mut(), x, n);
+        kernels::mean_update_sq(self.recent2_mut(), x, n);
         if self.should_flush() {
             self.flush();
         }
@@ -173,6 +218,7 @@ impl Averager for Awa2 {
                     let run = &data[offset * d..(offset + take) * d];
                     let n1_start = self.n1;
                     kernels::mean_update_run(self.recent_mut(), run, n1_start);
+                    kernels::mean_update_run_sq(self.recent2_mut(), run, n1_start);
                     self.n1 += take as u64;
                     self.t += take as u64;
                     offset += take;
@@ -190,6 +236,7 @@ impl Averager for Awa2 {
                     self.n1 += 1;
                     let n = self.n1 as f64;
                     super::mean_update(self.recent_mut(), x, n);
+                    kernels::mean_update_sq(self.recent2_mut(), x, n);
                     if self.should_flush() {
                         self.flush();
                     }
@@ -216,9 +263,35 @@ impl Averager for Awa2 {
         true
     }
 
+    fn moments_into(&self, mean: &mut [f64], variance: &mut [f64]) -> Option<f64> {
+        if self.t == 0 {
+            return None;
+        }
+        // Mirror value_into's three cases on BOTH moment orders, then
+        // derive the variance from the raw pair. gamma() already pins
+        // the empty-group cases to 0/1.
+        let gamma = self.gamma();
+        if self.n1 == 0 {
+            mean.copy_from_slice(self.old());
+            variance.copy_from_slice(self.old2());
+        } else if self.n0 == 0 {
+            mean.copy_from_slice(self.recent());
+            variance.copy_from_slice(self.recent2());
+        } else {
+            super::lerp_into(mean, self.recent(), self.old(), gamma);
+            super::lerp_into(variance, self.recent2(), self.old2(), gamma);
+        }
+        // `variance` currently holds E[x²]; finish in place.
+        for (v, &m) in variance.iter_mut().zip(mean.iter()) {
+            *v = (*v - m * m).max(0.0);
+        }
+        Some(awa_ess(self.n0, self.n1, gamma))
+    }
+
     /// Payload: `AWA2` tag, dim, window, `t`, `N⁰`, `N¹`, flushes, then
-    /// the old and recent accumulator means in LOGICAL order (the
-    /// physical `old_phys` swap never reaches the wire).
+    /// the old and recent accumulator means and their `x²` twins in
+    /// LOGICAL order (the physical `old_phys` swap never reaches the
+    /// wire).
     fn export_state(&self, enc: &mut Enc) {
         enc.put_u8(codec::tag::AWA2);
         enc.put_u32(self.d as u32);
@@ -229,6 +302,8 @@ impl Averager for Awa2 {
         enc.put_u64(self.flushes);
         enc.put_f64_slice(self.old());
         enc.put_f64_slice(self.recent());
+        enc.put_f64_slice(self.old2());
+        enc.put_f64_slice(self.recent2());
     }
 
     fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
@@ -240,9 +315,13 @@ impl Averager for Awa2 {
         let flushes = dec.get_u64()?;
         let old = codec::get_state_vec(dec, self.d)?;
         let recent = codec::get_state_vec(dec, self.d)?;
+        let old2 = codec::get_state_vec(dec, self.d)?;
+        let recent2 = codec::get_state_vec(dec, self.d)?;
         self.old_phys = 0;
         self.bank[..self.d].copy_from_slice(&old);
         self.bank[self.d..].copy_from_slice(&recent);
+        self.bank2[..self.d].copy_from_slice(&old2);
+        self.bank2[self.d..].copy_from_slice(&recent2);
         self.t = t;
         self.n0 = n0;
         self.n1 = n1;
@@ -266,6 +345,8 @@ impl Averager for Awa2 {
         let flushes = dec.get_u64()?;
         let old = codec::get_state_vec(dec, self.d)?;
         let recent = codec::get_state_vec(dec, self.d)?;
+        let old2 = codec::get_state_vec(dec, self.d)?;
+        let recent2 = codec::get_state_vec(dec, self.d)?;
         if t == 0 {
             return Ok(());
         }
@@ -273,6 +354,8 @@ impl Averager for Awa2 {
             self.old_phys = 0;
             self.bank[..self.d].copy_from_slice(&old);
             self.bank[self.d..].copy_from_slice(&recent);
+            self.bank2[..self.d].copy_from_slice(&old2);
+            self.bank2[self.d..].copy_from_slice(&recent2);
             self.t = t;
             self.n0 = n0;
             self.n1 = n1;
@@ -280,11 +363,14 @@ impl Averager for Awa2 {
             return Ok(());
         }
         let d = self.d;
+        // Pool the x² means with the same pre-merge counts as the means.
         let old_off = self.old_phys * d;
         kernels::pool_means(&mut self.bank[old_off..old_off + d], &old, self.n0, n0);
+        kernels::pool_means(&mut self.bank2[old_off..old_off + d], &old2, self.n0, n0);
         self.n0 += n0;
         let rec_off = (1 - self.old_phys) * d;
         kernels::pool_means(&mut self.bank[rec_off..rec_off + d], &recent, self.n1, n1);
+        kernels::pool_means(&mut self.bank2[rec_off..rec_off + d], &recent2, self.n1, n1);
         self.n1 += n1;
         self.t += t;
         self.flushes += flushes;
@@ -299,11 +385,12 @@ impl Averager for Awa2 {
     }
 
     fn memory_floats(&self) -> usize {
-        self.bank.len()
+        self.bank.len() + self.bank2.len()
     }
 
     fn reset(&mut self) {
         self.bank.iter_mut().for_each(|a| *a = 0.0);
+        self.bank2.iter_mut().for_each(|a| *a = 0.0);
         self.old_phys = 0;
         self.n0 = 0;
         self.n1 = 0;
@@ -449,7 +536,44 @@ mod tests {
             a.observe(&[0.5; 16]);
         }
         assert_eq!(a.memory_floats(), m);
-        assert_eq!(m, 32);
+        assert_eq!(m, 64); // 2d value + 2d moment accumulators
+    }
+
+    #[test]
+    fn moments_match_group_weights_exactly() {
+        // After a flush + partial refill the weights are piecewise
+        // constant: γ/N¹ per recent sample, (1−γ)/N⁰ per old one. The
+        // streamed moments must equal the direct weighted computation.
+        let k = 6u64;
+        let mut a = Awa2::new(1, WindowKind::Fixed { k });
+        let xs: Vec<f64> = (1..=9).map(|i| (i as f64 * 1.3).sin() * 2.0).collect();
+        for &x in &xs {
+            a.observe_scalar(x);
+        }
+        let (n0, n1) = a.counts();
+        assert_eq!((n0, n1), (6, 3));
+        let g = a.gamma();
+        let w = |i: usize| {
+            if i < 6 {
+                (1.0 - g) / 6.0
+            } else {
+                g / 3.0
+            }
+        };
+        let mean: f64 = xs.iter().enumerate().map(|(i, &x)| w(i) * x).sum();
+        let var: f64 = xs
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| w(i) * (x - mean) * (x - mean))
+            .sum();
+        let sum_sq: f64 = (0..9).map(|i| w(i) * w(i)).sum();
+        let (mut m, mut v) = ([0.0], [0.0]);
+        let ess = a.moments_into(&mut m, &mut v).expect("moments");
+        assert!((m[0] - mean).abs() < 1e-12);
+        assert!((v[0] - var).abs() < 1e-9, "{} vs {var}", v[0]);
+        assert!((ess - 1.0 / sum_sq).abs() < 1e-9);
+        // And the moment mean always equals the reported value.
+        assert_eq!(m[0], a.value_scalar().unwrap());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Anytime window average with an arbitrary number of accumulators
 //! (paper §3.3–3.4 — `awa3` and beyond).
 
-use super::awa2::combine_gamma;
+use super::awa2::{awa_ess, combine_gamma};
 use super::kernels;
 use super::{Averager, WindowKind};
 use crate::persist::codec::{self, Dec, Enc};
@@ -36,6 +36,9 @@ pub struct AwaMulti {
     kind: WindowKind,
     /// Contiguous accumulator bank: `(z+1)` slots of `d` floats each.
     bank: Vec<f64>,
+    /// Parallel bank of per-accumulator `x²` means (same slots, same
+    /// index map) — the moment side state (`moments_into`).
+    bank2: Vec<f64>,
     /// `order[i]` = physical slot of logical accumulator `i`
     /// (`0` oldest … `z` newest).
     order: Vec<usize>,
@@ -59,6 +62,7 @@ impl AwaMulti {
         AwaMulti {
             kind,
             bank: vec![0.0; (z + 1) * d],
+            bank2: vec![0.0; (z + 1) * d],
             order: (0..=z).collect(),
             counts: vec![0; z + 1],
             d,
@@ -79,6 +83,17 @@ impl AwaMulti {
     fn newest_mut(&mut self) -> &mut [f64] {
         let o = self.order[self.z] * self.d;
         &mut self.bank[o..o + self.d]
+    }
+
+    /// Logical accumulator `i`'s `x²` mean slice.
+    fn slot2(&self, i: usize) -> &[f64] {
+        let o = self.order[i] * self.d;
+        &self.bank2[o..o + self.d]
+    }
+
+    fn newest2_mut(&mut self) -> &mut [f64] {
+        let o = self.order[self.z] * self.d;
+        &mut self.bank2[o..o + self.d]
     }
 
     /// Number of recent accumulators `z`.
@@ -137,14 +152,17 @@ impl AwaMulti {
         self.counts[self.z] = 0;
         self.shifts += 1;
         self.newest_mut().iter_mut().for_each(|m| *m = 0.0);
+        self.newest2_mut().iter_mut().for_each(|m| *m = 0.0);
     }
 
     /// Decode and validate an `AWA_MULTI` state payload against this
-    /// estimator's shape: `(t, counts, shifts, logical slot means)`.
+    /// estimator's shape: `(t, counts, shifts, logical slot means,
+    /// logical slot x² means)`.
+    #[allow(clippy::type_complexity)]
     fn parse_state(
         &self,
         dec: &mut Dec<'_>,
-    ) -> Result<(u64, Vec<u64>, u64, Vec<Vec<f64>>), String> {
+    ) -> Result<(u64, Vec<u64>, u64, Vec<Vec<f64>>, Vec<Vec<f64>>), String> {
         codec::check_header(dec, codec::tag::AWA_MULTI, self.d)?;
         codec::check_window(dec, &self.kind)?;
         let z = dec.get_u32()? as usize;
@@ -164,7 +182,35 @@ impl AwaMulti {
         for _ in 0..=self.z {
             slots.push(codec::get_state_vec(dec, self.d)?);
         }
-        Ok((t, counts, shifts, slots))
+        let mut slots2 = Vec::with_capacity(self.z + 1);
+        for _ in 0..=self.z {
+            slots2.push(codec::get_state_vec(dec, self.d)?);
+        }
+        Ok((t, counts, shifts, slots, slots2))
+    }
+
+    /// Write a decoded `(counts, slots, slots2)` state into the banks in
+    /// identity order (import / merge-into-empty shared tail).
+    fn load_state(
+        &mut self,
+        t: u64,
+        counts: Vec<u64>,
+        shifts: u64,
+        slots: &[Vec<f64>],
+        slots2: &[Vec<f64>],
+    ) {
+        self.t = t;
+        self.counts = counts;
+        self.shifts = shifts;
+        for (i, o) in self.order.iter_mut().enumerate() {
+            *o = i;
+        }
+        for (i, s) in slots.iter().enumerate() {
+            self.bank[i * self.d..(i + 1) * self.d].copy_from_slice(s);
+        }
+        for (i, s) in slots2.iter().enumerate() {
+            self.bank2[i * self.d..(i + 1) * self.d].copy_from_slice(s);
+        }
     }
 }
 
@@ -227,6 +273,7 @@ impl Averager for AwaMulti {
         self.counts[self.z] += 1;
         let n = self.counts[self.z] as f64;
         super::mean_update(self.newest_mut(), x, n);
+        kernels::mean_update_sq(self.newest2_mut(), x, n);
         if self.should_shift() {
             self.shift();
         }
@@ -248,6 +295,7 @@ impl Averager for AwaMulti {
                     let run = &data[offset * d..(offset + take) * d];
                     let n_start = self.counts[self.z];
                     kernels::mean_update_run(self.newest_mut(), run, n_start);
+                    kernels::mean_update_run_sq(self.newest2_mut(), run, n_start);
                     self.counts[self.z] += take as u64;
                     self.t += take as u64;
                     offset += take;
@@ -264,6 +312,7 @@ impl Averager for AwaMulti {
                     self.counts[self.z] += 1;
                     let n = self.counts[self.z] as f64;
                     super::mean_update(self.newest_mut(), x, n);
+                    kernels::mean_update_sq(self.newest2_mut(), x, n);
                     if self.should_shift() {
                         self.shift();
                     }
@@ -328,9 +377,58 @@ impl Averager for AwaMulti {
         true
     }
 
+    fn moments_into(&self, mean: &mut [f64], variance: &mut [f64]) -> Option<f64> {
+        if self.t == 0 {
+            return None;
+        }
+        let n0 = self.counts[0];
+        let nrec = self.recent_total();
+        if nrec == 0 {
+            if n0 == 0 {
+                return None;
+            }
+            mean.copy_from_slice(self.slot(0));
+            variance.copy_from_slice(self.slot2(0));
+            for (v, &m) in variance.iter_mut().zip(mean.iter()) {
+                *v = (*v - m * m).max(0.0);
+            }
+            return Some(n0 as f64);
+        }
+        let gamma0 = if n0 == 0 {
+            0.0
+        } else {
+            let k_t = self.kind.k_at(self.t);
+            1.0 - combine_gamma(n0 as f64, nrec as f64, k_t)
+        };
+        let rec_scale = (1.0 - gamma0) / nrec as f64;
+        // Same per-accumulator weights as value_into, applied to the
+        // mean bank AND its x² twin (cold path: a small heap Vec is
+        // fine here, unlike the fused hot read above).
+        let mut terms1: Vec<(f64, &[f64])> = Vec::with_capacity(self.z + 1);
+        let mut terms2: Vec<(f64, &[f64])> = Vec::with_capacity(self.z + 1);
+        for j in 0..=self.z {
+            let w = if j == 0 {
+                gamma0
+            } else {
+                self.counts[j] as f64 * rec_scale
+            };
+            if w != 0.0 {
+                terms1.push((w, self.slot(j)));
+                terms2.push((w, self.slot2(j)));
+            }
+        }
+        weighted_sum_into(mean, &terms1);
+        weighted_sum_into(variance, &terms2);
+        for (v, &m) in variance.iter_mut().zip(mean.iter()) {
+            *v = (*v - m * m).max(0.0);
+        }
+        Some(awa_ess(n0, nrec, 1.0 - gamma0))
+    }
+
     /// Payload: `AWA_MULTI` tag, dim, window, `z`, `t`, per-accumulator
     /// counts (oldest first), shifts, then the `z+1` accumulator means
-    /// in LOGICAL order (the rotation index map never reaches the wire).
+    /// and their `z+1` `x²` twins in LOGICAL order (the rotation index
+    /// map never reaches the wire).
     fn export_state(&self, enc: &mut Enc) {
         enc.put_u8(codec::tag::AWA_MULTI);
         enc.put_u32(self.d as u32);
@@ -344,19 +442,14 @@ impl Averager for AwaMulti {
         for i in 0..=self.z {
             enc.put_f64_slice(self.slot(i));
         }
+        for i in 0..=self.z {
+            enc.put_f64_slice(self.slot2(i));
+        }
     }
 
     fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
-        let (t, counts, shifts, slots) = self.parse_state(dec)?;
-        self.t = t;
-        self.counts = counts;
-        self.shifts = shifts;
-        for (i, o) in self.order.iter_mut().enumerate() {
-            *o = i;
-        }
-        for (i, s) in slots.iter().enumerate() {
-            self.bank[i * self.d..(i + 1) * self.d].copy_from_slice(s);
-        }
+        let (t, counts, shifts, slots, slots2) = self.parse_state(dec)?;
+        self.load_state(t, counts, shifts, &slots, &slots2);
         Ok(())
     }
 
@@ -367,20 +460,12 @@ impl Averager for AwaMulti {
     /// the merged clocks are the documented approximation; a pending
     /// shift fires if the pooled newest chunk crosses its threshold.)
     fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
-        let (t, counts, shifts, slots) = self.parse_state(dec)?;
+        let (t, counts, shifts, slots, slots2) = self.parse_state(dec)?;
         if t == 0 {
             return Ok(());
         }
         if self.t == 0 {
-            self.t = t;
-            self.counts = counts;
-            self.shifts = shifts;
-            for (i, o) in self.order.iter_mut().enumerate() {
-                *o = i;
-            }
-            for (i, s) in slots.iter().enumerate() {
-                self.bank[i * self.d..(i + 1) * self.d].copy_from_slice(s);
-            }
+            self.load_state(t, counts, shifts, &slots, &slots2);
             return Ok(());
         }
         let d = self.d;
@@ -392,6 +477,7 @@ impl Averager for AwaMulti {
             }
             let off = self.order[i] * d;
             kernels::pool_means(&mut self.bank[off..off + d], &slots[i], n_mine, n_theirs);
+            kernels::pool_means(&mut self.bank2[off..off + d], &slots2[i], n_mine, n_theirs);
             self.counts[i] += n_theirs;
         }
         self.t += t;
@@ -407,11 +493,12 @@ impl Averager for AwaMulti {
     }
 
     fn memory_floats(&self) -> usize {
-        self.bank.len()
+        self.bank.len() + self.bank2.len()
     }
 
     fn reset(&mut self) {
         self.bank.iter_mut().for_each(|v| *v = 0.0);
+        self.bank2.iter_mut().for_each(|v| *v = 0.0);
         for (i, o) in self.order.iter_mut().enumerate() {
             *o = i;
         }
@@ -555,12 +642,12 @@ mod tests {
     }
 
     #[test]
-    fn memory_is_z_plus_one_times_d() {
+    fn memory_is_two_z_plus_one_times_d() {
         for z in [1u32, 2, 5] {
             let d = 10;
             let mut a = AwaMulti::new(d, WindowKind::Growing { c: 0.25 }, z);
             let m0 = a.memory_floats();
-            assert_eq!(m0, (z as usize + 1) * d);
+            assert_eq!(m0, 2 * (z as usize + 1) * d); // value + moment banks
             for _ in 0..3000 {
                 a.observe(&vec![1.0; d]);
             }
@@ -612,6 +699,26 @@ mod tests {
             assert_eq!(seq.shifts(), bat.shifts());
             assert_eq!(seq.value().unwrap(), bat.value().unwrap());
         }
+    }
+
+    #[test]
+    fn moments_mean_equals_value_and_ess_matches_two_group_weights() {
+        let mut a = AwaMulti::new(2, WindowKind::Growing { c: 0.5 }, 2);
+        for t in 1..=777u64 {
+            let x = (t as f64 * 0.21).sin() * 3.0;
+            a.observe(&[x, -x]);
+        }
+        let (mut m, mut v) = ([0.0; 2], [0.0; 2]);
+        let ess = a.moments_into(&mut m, &mut v).expect("moments");
+        assert_eq!(m.to_vec(), a.value().unwrap(), "moment mean IS the value");
+        let n0 = a.counts()[0];
+        let nrec = a.recent_total();
+        let g0 = a.gamma0();
+        let sum_sq = g0 * g0 / n0 as f64 + (1.0 - g0) * (1.0 - g0) / nrec as f64;
+        assert!((ess - 1.0 / sum_sq).abs() < 1e-9 * ess, "{ess}");
+        // Symmetric stream: both dims carry identical spread.
+        assert!((v[0] - v[1]).abs() < 1e-9, "{v:?}");
+        assert!(v[0] > 0.0);
     }
 
     #[test]

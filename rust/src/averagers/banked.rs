@@ -23,8 +23,9 @@
 //! [`BankState::reset_row`] returns a row to the empty state so the
 //! coordinator's free list can recycle it for a later registration.
 
-use super::awa2::combine_gamma;
+use super::awa2::{awa_ess, combine_gamma};
 use super::awa_multi::weighted_sum_into;
+use super::exp::exp_ess;
 use super::gea::solve_gamma;
 use super::kernels;
 use super::{AveragerSpec, WindowKind};
@@ -79,6 +80,16 @@ pub trait BankState: Send {
     /// Write one row's estimate; `false` when it has none (tests and
     /// the on-demand read path).
     fn value_row_into(&self, row: usize, out: &mut [f64]) -> bool;
+
+    /// Write one row's weighted mean and variance (the bank form of
+    /// [`super::Averager::moments_into`], same semantics: `mean` is
+    /// bit-identical to the row's estimate, `variance` is the weighted
+    /// second central moment under the row's weight profile) and return
+    /// its effective sample size, or `None` when the row has no
+    /// estimate yet. The analytics query path — cold relative to the
+    /// drain, so per-row dispatch is fine.
+    fn moments_row_into(&self, row: usize, mean: &mut [f64], variance: &mut [f64])
+        -> Option<f64>;
 
     /// Append the canonical state payloads of `rows` back-to-back in
     /// ONE bulk pass — a single virtual dispatch per bank per
@@ -147,6 +158,9 @@ pub struct ExpBank {
     gamma: f64,
     d: usize,
     ema: Vec<f64>,
+    /// Parallel `x²` EMA arena (moment side state), folded with the
+    /// same closed-form batch kernel as `ema`.
+    ema2: Vec<f64>,
     gamma_pow_t: Vec<f64>,
     t: Vec<u64>,
     /// Reused job list for the gather kernel.
@@ -159,6 +173,7 @@ impl ExpBank {
             gamma,
             d,
             ema: Vec::new(),
+            ema2: Vec::new(),
             gamma_pow_t: Vec::new(),
             t: Vec::new(),
             read_jobs: Vec::new(),
@@ -176,11 +191,12 @@ impl BankState for ExpBank {
     }
 
     fn row_stride(&self) -> usize {
-        self.d
+        2 * self.d
     }
 
     fn push_row(&mut self) -> usize {
         self.ema.resize(self.ema.len() + self.d, 0.0);
+        self.ema2.resize(self.ema2.len() + self.d, 0.0);
         self.gamma_pow_t.push(1.0);
         self.t.push(0);
         self.t.len() - 1
@@ -189,6 +205,7 @@ impl BankState for ExpBank {
     fn reset_row(&mut self, row: usize) {
         let off = row * self.d;
         self.ema[off..off + self.d].iter_mut().for_each(|v| *v = 0.0);
+        self.ema2[off..off + self.d].iter_mut().for_each(|v| *v = 0.0);
         self.gamma_pow_t[row] = 1.0;
         self.t[row] = 0;
     }
@@ -200,6 +217,9 @@ impl BankState for ExpBank {
             jobs.push((b.row * d, b.data));
         }
         kernels::ema_fold_rows(&mut self.ema, d, self.gamma, &jobs);
+        for &(off, data) in &jobs {
+            kernels::ema_fold_sq(&mut self.ema2[off..off + d], data, self.gamma);
+        }
         for b in batches {
             self.gamma_pow_t[b.row] *= self.gamma.powi(b.count as i32);
             self.t[b.row] += b.count as u64;
@@ -242,6 +262,30 @@ impl BankState for ExpBank {
         true
     }
 
+    fn moments_row_into(
+        &self,
+        row: usize,
+        mean: &mut [f64],
+        variance: &mut [f64],
+    ) -> Option<f64> {
+        if self.t[row] == 0 {
+            return None;
+        }
+        let scale = 1.0 / (1.0 - self.gamma_pow_t[row]);
+        let off = row * self.d;
+        for (m, &e) in mean.iter_mut().zip(&self.ema[off..off + self.d]) {
+            *m = e * scale;
+        }
+        for ((v, &e2), &m) in variance
+            .iter_mut()
+            .zip(&self.ema2[off..off + self.d])
+            .zip(mean.iter())
+        {
+            *v = (e2 * scale - m * m).max(0.0);
+        }
+        Some(exp_ess(self.gamma, self.gamma_pow_t[row]))
+    }
+
     fn export_rows(&self, rows: &[usize], enc: &mut Enc) {
         for &row in rows {
             enc.put_u8(codec::tag::EXP);
@@ -251,6 +295,7 @@ impl BankState for ExpBank {
             enc.put_f64(self.gamma_pow_t[row]);
             let off = row * self.d;
             enc.put_f64_slice(&self.ema[off..off + self.d]);
+            enc.put_f64_slice(&self.ema2[off..off + self.d]);
         }
     }
 
@@ -260,10 +305,12 @@ impl BankState for ExpBank {
         let t = dec.get_u64()?;
         let gamma_pow_t = dec.get_f64()?;
         let ema = codec::get_state_vec(dec, self.d)?;
+        let ema2 = codec::get_state_vec(dec, self.d)?;
         self.t[row] = t;
         self.gamma_pow_t[row] = gamma_pow_t;
         let off = row * self.d;
         self.ema[off..off + self.d].copy_from_slice(&ema);
+        self.ema2[off..off + self.d].copy_from_slice(&ema2);
         Ok(())
     }
 }
@@ -281,6 +328,9 @@ pub struct GeaBank {
     c: f64,
     d: usize,
     avg: Vec<f64>,
+    /// Parallel `x²` average arena (moment side state), stepped with
+    /// the identical per-sample decay.
+    avg2: Vec<f64>,
     v: Vec<f64>,
     t: Vec<u64>,
     read_offs: Vec<usize>,
@@ -292,6 +342,7 @@ impl GeaBank {
             c,
             d,
             avg: Vec::new(),
+            avg2: Vec::new(),
             v: Vec::new(),
             t: Vec::new(),
             read_offs: Vec::new(),
@@ -309,11 +360,12 @@ impl BankState for GeaBank {
     }
 
     fn row_stride(&self) -> usize {
-        self.d
+        2 * self.d
     }
 
     fn push_row(&mut self) -> usize {
         self.avg.resize(self.avg.len() + self.d, 0.0);
+        self.avg2.resize(self.avg2.len() + self.d, 0.0);
         self.v.push(0.0);
         self.t.push(0);
         self.t.len() - 1
@@ -322,6 +374,7 @@ impl BankState for GeaBank {
     fn reset_row(&mut self, row: usize) {
         let off = row * self.d;
         self.avg[off..off + self.d].iter_mut().for_each(|x| *x = 0.0);
+        self.avg2[off..off + self.d].iter_mut().for_each(|x| *x = 0.0);
         self.v[row] = 0.0;
         self.t[row] = 0;
     }
@@ -330,13 +383,18 @@ impl BankState for GeaBank {
         let d = self.d;
         for b in batches {
             let off = b.row * d;
+            // Split borrows: `avg` and `avg2` are distinct arenas.
             let avg = &mut self.avg[off..off + d];
+            let avg2 = &mut self.avg2[off..off + d];
             let mut v = self.v[b.row];
             let mut t = self.t[b.row];
             for x in b.data.chunks_exact(d) {
                 t += 1;
                 if t == 1 {
                     avg.copy_from_slice(x);
+                    for (a, &xv) in avg2.iter_mut().zip(x) {
+                        *a = xv * xv;
+                    }
                     v = 1.0;
                     continue;
                 }
@@ -344,6 +402,7 @@ impl BankState for GeaBank {
                 let g = solve_gamma(v, 1.0 / k_target);
                 let om = 1.0 - g;
                 kernels::ema_step(avg, x, g);
+                kernels::ema_step_sq(avg2, x, g);
                 v = g * g * v + om * om;
             }
             self.v[b.row] = v;
@@ -377,6 +436,22 @@ impl BankState for GeaBank {
         true
     }
 
+    fn moments_row_into(
+        &self,
+        row: usize,
+        mean: &mut [f64],
+        variance: &mut [f64],
+    ) -> Option<f64> {
+        if self.t[row] == 0 {
+            return None;
+        }
+        let off = row * self.d;
+        mean.copy_from_slice(&self.avg[off..off + self.d]);
+        kernels::variance_from_raw(mean, &self.avg2[off..off + self.d], variance);
+        let v = self.v[row];
+        Some(if v > 0.0 { 1.0 / v } else { 0.0 })
+    }
+
     fn export_rows(&self, rows: &[usize], enc: &mut Enc) {
         for &row in rows {
             enc.put_u8(codec::tag::GEA);
@@ -386,6 +461,7 @@ impl BankState for GeaBank {
             enc.put_f64(self.v[row]);
             let off = row * self.d;
             enc.put_f64_slice(&self.avg[off..off + self.d]);
+            enc.put_f64_slice(&self.avg2[off..off + self.d]);
         }
     }
 
@@ -395,10 +471,12 @@ impl BankState for GeaBank {
         let t = dec.get_u64()?;
         let v = dec.get_f64()?;
         let avg = codec::get_state_vec(dec, self.d)?;
+        let avg2 = codec::get_state_vec(dec, self.d)?;
         self.t[row] = t;
         self.v[row] = v;
         let off = row * self.d;
         self.avg[off..off + self.d].copy_from_slice(&avg);
+        self.avg2[off..off + self.d].copy_from_slice(&avg2);
         Ok(())
     }
 }
@@ -416,6 +494,8 @@ pub struct Awa2Bank {
     kind: WindowKind,
     d: usize,
     bank: Vec<f64>,
+    /// Parallel `x²` accumulator arena (same row/half layout as `bank`).
+    bank2: Vec<f64>,
     old_phys: Vec<u8>,
     n0: Vec<u64>,
     n1: Vec<u64>,
@@ -429,6 +509,7 @@ impl Awa2Bank {
             kind,
             d,
             bank: Vec::new(),
+            bank2: Vec::new(),
             old_phys: Vec::new(),
             n0: Vec::new(),
             n1: Vec::new(),
@@ -448,6 +529,7 @@ impl Awa2Bank {
         let off = self.recent_off(row);
         let d = self.d;
         self.bank[off..off + d].iter_mut().for_each(|x| *x = 0.0);
+        self.bank2[off..off + d].iter_mut().for_each(|x| *x = 0.0);
     }
 
     fn should_flush(&self, row: usize) -> bool {
@@ -468,11 +550,12 @@ impl BankState for Awa2Bank {
     }
 
     fn row_stride(&self) -> usize {
-        2 * self.d
+        4 * self.d
     }
 
     fn push_row(&mut self) -> usize {
         self.bank.resize(self.bank.len() + 2 * self.d, 0.0);
+        self.bank2.resize(self.bank2.len() + 2 * self.d, 0.0);
         self.old_phys.push(0);
         self.n0.push(0);
         self.n1.push(0);
@@ -483,6 +566,9 @@ impl BankState for Awa2Bank {
     fn reset_row(&mut self, row: usize) {
         let base = row * 2 * self.d;
         self.bank[base..base + 2 * self.d]
+            .iter_mut()
+            .for_each(|x| *x = 0.0);
+        self.bank2[base..base + 2 * self.d]
             .iter_mut()
             .for_each(|x| *x = 0.0);
         self.old_phys[row] = 0;
@@ -507,6 +593,11 @@ impl BankState for Awa2Bank {
                         let n1_start = self.n1[row];
                         let rec = self.recent_off(row);
                         kernels::mean_update_run(&mut self.bank[rec..rec + d], run, n1_start);
+                        kernels::mean_update_run_sq(
+                            &mut self.bank2[rec..rec + d],
+                            run,
+                            n1_start,
+                        );
                         self.n1[row] += take as u64;
                         self.t[row] += take as u64;
                         offset += take;
@@ -523,6 +614,7 @@ impl BankState for Awa2Bank {
                         let n = self.n1[row] as f64;
                         let rec = self.recent_off(row);
                         kernels::mean_update(&mut self.bank[rec..rec + d], x, n);
+                        kernels::mean_update_sq(&mut self.bank2[rec..rec + d], x, n);
                         if self.should_flush(row) {
                             self.flush_row(row);
                         }
@@ -583,6 +675,54 @@ impl BankState for Awa2Bank {
         true
     }
 
+    fn moments_row_into(
+        &self,
+        row: usize,
+        mean: &mut [f64],
+        variance: &mut [f64],
+    ) -> Option<f64> {
+        let t = self.t[row];
+        if t == 0 {
+            return None;
+        }
+        let d = self.d;
+        let base = row * 2 * d;
+        let old_off = base + self.old_phys[row] as usize * d;
+        let rec_off = base + (1 - self.old_phys[row] as usize) * d;
+        let (n0, n1) = (self.n0[row], self.n1[row]);
+        let gamma = if n1 == 0 {
+            0.0
+        } else if n0 == 0 {
+            1.0
+        } else {
+            combine_gamma(n0 as f64, n1 as f64, self.kind.k_at(t))
+        };
+        if n1 == 0 {
+            mean.copy_from_slice(&self.bank[old_off..old_off + d]);
+            variance.copy_from_slice(&self.bank2[old_off..old_off + d]);
+        } else if n0 == 0 {
+            mean.copy_from_slice(&self.bank[rec_off..rec_off + d]);
+            variance.copy_from_slice(&self.bank2[rec_off..rec_off + d]);
+        } else {
+            kernels::lerp_into(
+                mean,
+                &self.bank[rec_off..rec_off + d],
+                &self.bank[old_off..old_off + d],
+                gamma,
+            );
+            kernels::lerp_into(
+                variance,
+                &self.bank2[rec_off..rec_off + d],
+                &self.bank2[old_off..old_off + d],
+                gamma,
+            );
+        }
+        for (v, &m) in variance.iter_mut().zip(mean.iter()) {
+            *v = (*v - m * m).max(0.0);
+        }
+        Some(awa_ess(n0, n1, gamma))
+    }
+
     fn export_rows(&self, rows: &[usize], enc: &mut Enc) {
         let d = self.d;
         for &row in rows {
@@ -598,6 +738,8 @@ impl BankState for Awa2Bank {
             let rec_off = base + (1 - self.old_phys[row] as usize) * d;
             enc.put_f64_slice(&self.bank[old_off..old_off + d]);
             enc.put_f64_slice(&self.bank[rec_off..rec_off + d]);
+            enc.put_f64_slice(&self.bank2[old_off..old_off + d]);
+            enc.put_f64_slice(&self.bank2[rec_off..rec_off + d]);
         }
     }
 
@@ -611,10 +753,14 @@ impl BankState for Awa2Bank {
         let _flushes = dec.get_u64()?;
         let old = codec::get_state_vec(dec, d)?;
         let recent = codec::get_state_vec(dec, d)?;
+        let old2 = codec::get_state_vec(dec, d)?;
+        let recent2 = codec::get_state_vec(dec, d)?;
         let base = row * 2 * d;
         self.old_phys[row] = 0;
         self.bank[base..base + d].copy_from_slice(&old);
         self.bank[base + d..base + 2 * d].copy_from_slice(&recent);
+        self.bank2[base..base + d].copy_from_slice(&old2);
+        self.bank2[base + d..base + 2 * d].copy_from_slice(&recent2);
         self.t[row] = t;
         self.n0[row] = n0;
         self.n1[row] = n1;
@@ -634,6 +780,9 @@ pub struct AwaMultiBank {
     d: usize,
     z: usize,
     bank: Vec<f64>,
+    /// Parallel `x²` accumulator arena (same row/slot layout, same
+    /// index map as `bank`).
+    bank2: Vec<f64>,
     /// `order[row*(z+1) + i]` = physical slot of logical accumulator `i`.
     order: Vec<u32>,
     /// `counts[row*(z+1) + i]` = logical accumulator `i`'s sample count.
@@ -648,6 +797,7 @@ impl AwaMultiBank {
             d,
             z: z.max(1) as usize,
             bank: Vec::new(),
+            bank2: Vec::new(),
             order: Vec::new(),
             counts: Vec::new(),
             t: Vec::new(),
@@ -691,6 +841,7 @@ impl AwaMultiBank {
         let off = self.newest_off(row);
         let d = self.d;
         self.bank[off..off + d].iter_mut().for_each(|x| *x = 0.0);
+        self.bank2[off..off + d].iter_mut().for_each(|x| *x = 0.0);
     }
 }
 
@@ -704,12 +855,13 @@ impl BankState for AwaMultiBank {
     }
 
     fn row_stride(&self) -> usize {
-        self.zp1() * self.d
+        2 * self.zp1() * self.d
     }
 
     fn push_row(&mut self) -> usize {
         let zp1 = self.zp1();
         self.bank.resize(self.bank.len() + zp1 * self.d, 0.0);
+        self.bank2.resize(self.bank2.len() + zp1 * self.d, 0.0);
         for i in 0..zp1 {
             self.order.push(i as u32);
             self.counts.push(0);
@@ -722,6 +874,9 @@ impl BankState for AwaMultiBank {
         let zp1 = self.zp1();
         let base = row * zp1 * self.d;
         self.bank[base..base + zp1 * self.d]
+            .iter_mut()
+            .for_each(|x| *x = 0.0);
+        self.bank2[base..base + zp1 * self.d]
             .iter_mut()
             .for_each(|x| *x = 0.0);
         for i in 0..zp1 {
@@ -749,6 +904,11 @@ impl BankState for AwaMultiBank {
                         let n_start = self.counts[newest];
                         let off = self.newest_off(row);
                         kernels::mean_update_run(&mut self.bank[off..off + d], run, n_start);
+                        kernels::mean_update_run_sq(
+                            &mut self.bank2[off..off + d],
+                            run,
+                            n_start,
+                        );
                         self.counts[newest] += take as u64;
                         self.t[row] += take as u64;
                         offset += take;
@@ -765,6 +925,7 @@ impl BankState for AwaMultiBank {
                         let n = self.counts[newest] as f64;
                         let off = self.newest_off(row);
                         kernels::mean_update(&mut self.bank[off..off + d], x, n);
+                        kernels::mean_update_sq(&mut self.bank2[off..off + d], x, n);
                         if self.should_shift(row) {
                             self.shift_row(row);
                         }
@@ -844,6 +1005,67 @@ impl BankState for AwaMultiBank {
         true
     }
 
+    fn moments_row_into(
+        &self,
+        row: usize,
+        mean: &mut [f64],
+        variance: &mut [f64],
+    ) -> Option<f64> {
+        let t = self.t[row];
+        if t == 0 {
+            return None;
+        }
+        let d = self.d;
+        let zp1 = self.zp1();
+        let counts = &self.counts[row * zp1..(row + 1) * zp1];
+        let order = &self.order[row * zp1..(row + 1) * zp1];
+        let base = row * zp1 * d;
+        let slot = |i: usize| -> &[f64] {
+            &self.bank[base + order[i] as usize * d..][..d]
+        };
+        let slot2 = |i: usize| -> &[f64] {
+            &self.bank2[base + order[i] as usize * d..][..d]
+        };
+        let n0 = counts[0];
+        let nrec: u64 = counts[1..].iter().sum();
+        if nrec == 0 {
+            if n0 == 0 {
+                return None;
+            }
+            mean.copy_from_slice(slot(0));
+            variance.copy_from_slice(slot2(0));
+            for (v, &m) in variance.iter_mut().zip(mean.iter()) {
+                *v = (*v - m * m).max(0.0);
+            }
+            return Some(n0 as f64);
+        }
+        let gamma0 = if n0 == 0 {
+            0.0
+        } else {
+            1.0 - combine_gamma(n0 as f64, nrec as f64, self.kind.k_at(t))
+        };
+        let rec_scale = (1.0 - gamma0) / nrec as f64;
+        let mut terms1: Vec<(f64, &[f64])> = Vec::with_capacity(zp1);
+        let mut terms2: Vec<(f64, &[f64])> = Vec::with_capacity(zp1);
+        for j in 0..zp1 {
+            let w = if j == 0 {
+                gamma0
+            } else {
+                counts[j] as f64 * rec_scale
+            };
+            if w != 0.0 {
+                terms1.push((w, slot(j)));
+                terms2.push((w, slot2(j)));
+            }
+        }
+        weighted_sum_into(mean, &terms1);
+        weighted_sum_into(variance, &terms2);
+        for (v, &m) in variance.iter_mut().zip(mean.iter()) {
+            *v = (*v - m * m).max(0.0);
+        }
+        Some(awa_ess(n0, nrec, 1.0 - gamma0))
+    }
+
     fn export_rows(&self, rows: &[usize], enc: &mut Enc) {
         let d = self.d;
         let zp1 = self.zp1();
@@ -861,6 +1083,10 @@ impl BankState for AwaMultiBank {
             for i in 0..zp1 {
                 let off = base + self.order[row * zp1 + i] as usize * d;
                 enc.put_f64_slice(&self.bank[off..off + d]);
+            }
+            for i in 0..zp1 {
+                let off = base + self.order[row * zp1 + i] as usize * d;
+                enc.put_f64_slice(&self.bank2[off..off + d]);
             }
         }
     }
@@ -887,11 +1113,16 @@ impl BankState for AwaMultiBank {
         for _ in 0..zp1 {
             slots.push(codec::get_state_vec(dec, d)?);
         }
+        let mut slots2 = Vec::with_capacity(zp1);
+        for _ in 0..zp1 {
+            slots2.push(codec::get_state_vec(dec, d)?);
+        }
         let base = row * zp1 * d;
         for i in 0..zp1 {
             self.order[row * zp1 + i] = i as u32;
             self.counts[row * zp1 + i] = counts[i];
             self.bank[base + i * d..base + (i + 1) * d].copy_from_slice(&slots[i]);
+            self.bank2[base + i * d..base + (i + 1) * d].copy_from_slice(&slots2[i]);
         }
         self.t[row] = t;
         Ok(())
@@ -1029,6 +1260,34 @@ mod tests {
                         "{} window_len",
                         spec.label()
                     );
+                    // Streamed moments agree with the boxed estimator too.
+                    let (mut bm, mut bv) = (vec![0.0; d], vec![0.0; d]);
+                    let (mut sm, mut sv) = (vec![0.0; d], vec![0.0; d]);
+                    let bank_ess = bank.moments_row_into(row, &mut bm, &mut bv);
+                    let slot_ess = refs[row].moments_into(&mut sm, &mut sv);
+                    match (bank_ess, slot_ess) {
+                        (Some(a), Some(b)) => {
+                            assert!(
+                                (a - b).abs() < 1e-9 * b.max(1.0),
+                                "{} row {row} ess {a} vs {b}",
+                                spec.label()
+                            );
+                            for i in 0..d {
+                                assert!(
+                                    (bm[i] - sm[i]).abs() < 1e-12,
+                                    "{} moments mean row {row} dim {i}",
+                                    spec.label()
+                                );
+                                assert!(
+                                    (bv[i] - sv[i]).abs()
+                                        < 1e-12 * sv[i].abs().max(1.0),
+                                    "{} moments var row {row} dim {i}",
+                                    spec.label()
+                                );
+                            }
+                        }
+                        (a, b) => panic!("{} moments presence {a:?} vs {b:?}", spec.label()),
+                    }
                 }
             }
         }

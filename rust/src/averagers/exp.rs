@@ -20,6 +20,10 @@ pub struct ExpAverage {
     gamma: f64,
     /// Raw (biased) EMA state.
     ema: Vec<f64>,
+    /// Raw EMA of `x²` — the second-raw-moment twin of `ema`, updated
+    /// with the identical recurrence so `moments_into` streams the
+    /// weighted variance without replay.
+    ema2: Vec<f64>,
     /// `γ^t`, tracked multiplicatively for the debias factor.
     gamma_pow_t: f64,
     t: u64,
@@ -35,6 +39,7 @@ impl ExpAverage {
         Ok(ExpAverage {
             gamma,
             ema: vec![0.0; d],
+            ema2: vec![0.0; d],
             gamma_pow_t: 1.0,
             t: 0,
             name: format!("exp(g={gamma})"),
@@ -74,6 +79,25 @@ impl ExpAverage {
     }
 }
 
+/// Effective sample size of the debiased EMA's geometric weight profile,
+/// in closed form from the tracked `γ^t`:
+///
+/// ```text
+/// ESS = 1/Σα² = (1+γ)/(1−γ) · (1−γ^t)² / (1−γ^{2t})
+/// ```
+///
+/// (1 at `t = 1`, monotone in `t`, limit `(1+γ)/(1−γ) = k` — the paper's
+/// footnote-2 window equivalence, recovered exactly.) Shared with the
+/// planar bank backend ([`super::banked::ExpBank`]).
+pub(crate) fn exp_ess(gamma: f64, gamma_pow_t: f64) -> f64 {
+    let mass = 1.0 - gamma_pow_t;
+    let sq_mass = 1.0 - gamma_pow_t * gamma_pow_t;
+    if sq_mass <= 0.0 {
+        return 0.0;
+    }
+    (1.0 + gamma) / (1.0 - gamma) * mass * mass / sq_mass
+}
+
 impl Averager for ExpAverage {
     fn name(&self) -> &str {
         &self.name
@@ -92,6 +116,7 @@ impl Averager for ExpAverage {
         self.t += 1;
         self.gamma_pow_t *= self.gamma;
         kernels::ema_step(&mut self.ema, x, self.gamma);
+        kernels::ema_step_sq(&mut self.ema2, x, self.gamma);
     }
 
     fn observe_many(&mut self, data: &[f64], count: usize) {
@@ -107,6 +132,7 @@ impl Averager for ExpAverage {
         // γ^t·γⁿ in a single multiplication.
         let g = self.gamma;
         kernels::ema_fold(&mut self.ema, data, g);
+        kernels::ema_fold_sq(&mut self.ema2, data, g);
         self.gamma_pow_t *= g.powi(count as i32);
         self.t += count as u64;
     }
@@ -122,7 +148,22 @@ impl Averager for ExpAverage {
         true
     }
 
-    /// Payload: `EXP` tag, dim, `gamma`, `t`, `γ^t`, raw EMA vector.
+    fn moments_into(&self, mean: &mut [f64], variance: &mut [f64]) -> Option<f64> {
+        if self.t == 0 {
+            return None;
+        }
+        let f = self.debias();
+        for (m, &e) in mean.iter_mut().zip(&self.ema) {
+            *m = e * f;
+        }
+        for ((v, &e2), &m) in variance.iter_mut().zip(&self.ema2).zip(mean.iter()) {
+            *v = (e2 * f - m * m).max(0.0);
+        }
+        Some(exp_ess(self.gamma, self.gamma_pow_t))
+    }
+
+    /// Payload: `EXP` tag, dim, `gamma`, `t`, `γ^t`, raw EMA vector,
+    /// raw `x²` EMA vector (the moment side state).
     fn export_state(&self, enc: &mut Enc) {
         enc.put_u8(codec::tag::EXP);
         enc.put_u32(self.ema.len() as u32);
@@ -130,6 +171,7 @@ impl Averager for ExpAverage {
         enc.put_u64(self.t);
         enc.put_f64(self.gamma_pow_t);
         enc.put_f64_slice(&self.ema);
+        enc.put_f64_slice(&self.ema2);
     }
 
     fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
@@ -138,9 +180,11 @@ impl Averager for ExpAverage {
         let t = dec.get_u64()?;
         let gamma_pow_t = dec.get_f64()?;
         let ema = codec::get_state_vec(dec, self.ema.len())?;
+        let ema2 = codec::get_state_vec(dec, self.ema.len())?;
         self.t = t;
         self.gamma_pow_t = gamma_pow_t;
         self.ema = ema;
+        self.ema2 = ema2;
         Ok(())
     }
 
@@ -155,6 +199,7 @@ impl Averager for ExpAverage {
         let t = dec.get_u64()?;
         let gamma_pow_t = dec.get_f64()?;
         let ema = codec::get_state_vec(dec, self.ema.len())?;
+        let ema2 = codec::get_state_vec(dec, self.ema.len())?;
         if t == 0 {
             return Ok(());
         }
@@ -162,12 +207,18 @@ impl Averager for ExpAverage {
             self.t = t;
             self.gamma_pow_t = gamma_pow_t;
             self.ema = ema;
+            self.ema2 = ema2;
             return Ok(());
         }
         let mass = (1.0 - self.gamma_pow_t) + (1.0 - gamma_pow_t);
         let merged_pow = self.gamma_pow_t * gamma_pow_t;
         let scale = (1.0 - merged_pow) / mass;
         for (e, &o) in self.ema.iter_mut().zip(&ema) {
+            *e = (*e + o) * scale;
+        }
+        // The raw x² state satisfies the same `ema2 = mass·E[x²]`
+        // identity, so it pools with the identical rescale.
+        for (e, &o) in self.ema2.iter_mut().zip(&ema2) {
             *e = (*e + o) * scale;
         }
         self.t += t;
@@ -183,11 +234,12 @@ impl Averager for ExpAverage {
     }
 
     fn memory_floats(&self) -> usize {
-        self.ema.len()
+        self.ema.len() + self.ema2.len()
     }
 
     fn reset(&mut self) {
         self.ema.iter_mut().for_each(|e| *e = 0.0);
+        self.ema2.iter_mut().for_each(|e| *e = 0.0);
         self.gamma_pow_t = 1.0;
         self.t = 0;
     }
@@ -335,6 +387,49 @@ mod tests {
             a.observe(&[0.0; 8]);
         }
         assert_eq!(a.memory_floats(), m0);
-        assert_eq!(m0, 8);
+        assert_eq!(m0, 16); // d value accumulators + d moment accumulators
+    }
+
+    #[test]
+    fn moments_match_explicit_geometric_weights() {
+        let gamma: f64 = 0.8;
+        let mut a = ExpAverage::new(1, gamma).unwrap();
+        let xs = [1.0, 4.0, -2.0, 0.5, 3.0];
+        for &x in &xs {
+            a.observe_scalar(x);
+        }
+        let t = xs.len();
+        let norm = 1.0 - gamma.powi(t as i32);
+        let w =
+            |i: usize| (1.0 - gamma) * gamma.powi((t - 1 - i) as i32) / norm;
+        let mean: f64 = xs.iter().enumerate().map(|(i, &x)| w(i) * x).sum();
+        let var: f64 = xs
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| w(i) * (x - mean) * (x - mean))
+            .sum();
+        let sum_sq: f64 = (0..t).map(|i| w(i) * w(i)).sum();
+        let (mut m, mut v) = ([0.0], [0.0]);
+        let ess = a.moments_into(&mut m, &mut v).expect("moments");
+        assert!((m[0] - mean).abs() < 1e-12, "{} vs {mean}", m[0]);
+        assert!((v[0] - var).abs() < 1e-9, "{} vs {var}", v[0]);
+        assert!((ess - 1.0 / sum_sq).abs() < 1e-9, "{ess} vs {}", 1.0 / sum_sq);
+    }
+
+    #[test]
+    fn ess_starts_at_one_and_converges_to_k() {
+        let k = 15u64;
+        let mut a = ExpAverage::for_window(1, k).unwrap();
+        a.observe_scalar(2.0);
+        let (mut m, mut v) = ([0.0], [0.0]);
+        let ess1 = a.moments_into(&mut m, &mut v).unwrap();
+        assert!((ess1 - 1.0).abs() < 1e-12, "ess at t=1 is {ess1}");
+        assert_eq!(v[0], 0.0, "one sample has zero spread");
+        for _ in 0..20_000 {
+            a.observe_scalar(2.0);
+        }
+        let ess = a.moments_into(&mut m, &mut v).unwrap();
+        assert!((ess - k as f64).abs() < 1e-6, "ess → k: {ess}");
+        assert!(v[0].abs() < 1e-12, "constant stream variance: {}", v[0]);
     }
 }

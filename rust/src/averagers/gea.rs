@@ -36,6 +36,9 @@ use crate::persist::codec::{self, Dec, Enc};
 pub struct GrowingExp {
     c: f64,
     avg: Vec<f64>,
+    /// Weighted mean of `x²` under the identical decay sequence — the
+    /// second-raw-moment twin of `avg` (`moments_into`).
+    avg2: Vec<f64>,
     /// Variance factor `v_t = Σα²` of the current estimate.
     v: f64,
     t: u64,
@@ -49,6 +52,7 @@ impl GrowingExp {
         Ok(GrowingExp {
             c,
             avg: vec![0.0; d],
+            avg2: vec![0.0; d],
             v: 0.0,
             t: 0,
             name: format!("gea(c={c})"),
@@ -84,6 +88,9 @@ impl GrowingExp {
         self.t += 1;
         if self.t == 1 {
             self.avg.copy_from_slice(x);
+            for (a, &xv) in self.avg2.iter_mut().zip(x) {
+                *a = xv * xv;
+            }
             self.v = 1.0;
             return;
         }
@@ -91,6 +98,7 @@ impl GrowingExp {
         let g = solve_gamma(self.v, 1.0 / k_target);
         let om = 1.0 - g;
         kernels::ema_step(&mut self.avg, x, g);
+        kernels::ema_step_sq(&mut self.avg2, x, g);
         self.v = g * g * self.v + om * om;
     }
 
@@ -161,7 +169,19 @@ impl Averager for GrowingExp {
         true
     }
 
-    /// Payload: `GEA` tag, dim, `c`, `t`, variance factor `v`, average.
+    fn moments_into(&self, mean: &mut [f64], variance: &mut [f64]) -> Option<f64> {
+        if self.t == 0 {
+            return None;
+        }
+        mean.copy_from_slice(&self.avg);
+        kernels::variance_from_raw(&self.avg, &self.avg2, variance);
+        // `v = Σα²` is tracked exactly — that is the estimator's whole
+        // design — so the ESS needs no approximation at all.
+        Some(if self.v > 0.0 { 1.0 / self.v } else { 0.0 })
+    }
+
+    /// Payload: `GEA` tag, dim, `c`, `t`, variance factor `v`, average,
+    /// `x²` average (the moment side state).
     fn export_state(&self, enc: &mut Enc) {
         enc.put_u8(codec::tag::GEA);
         enc.put_u32(self.avg.len() as u32);
@@ -169,6 +189,7 @@ impl Averager for GrowingExp {
         enc.put_u64(self.t);
         enc.put_f64(self.v);
         enc.put_f64_slice(&self.avg);
+        enc.put_f64_slice(&self.avg2);
     }
 
     fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
@@ -177,9 +198,11 @@ impl Averager for GrowingExp {
         let t = dec.get_u64()?;
         let v = dec.get_f64()?;
         let avg = codec::get_state_vec(dec, self.avg.len())?;
+        let avg2 = codec::get_state_vec(dec, self.avg.len())?;
         self.t = t;
         self.v = v;
         self.avg = avg;
+        self.avg2 = avg2;
         Ok(())
     }
 
@@ -194,6 +217,7 @@ impl Averager for GrowingExp {
         let t = dec.get_u64()?;
         let v = dec.get_f64()?;
         let avg = codec::get_state_vec(dec, self.avg.len())?;
+        let avg2 = codec::get_state_vec(dec, self.avg.len())?;
         if t == 0 {
             return Ok(());
         }
@@ -201,6 +225,7 @@ impl Averager for GrowingExp {
             self.t = t;
             self.v = v;
             self.avg = avg;
+            self.avg2 = avg2;
             return Ok(());
         }
         if !(self.v > 0.0) || !(v > 0.0) {
@@ -210,6 +235,11 @@ impl Averager for GrowingExp {
         let wb = 1.0 / v;
         let inv = 1.0 / (wa + wb);
         for (a, &b) in self.avg.iter_mut().zip(&avg) {
+            *a = (wa * *a + wb * b) * inv;
+        }
+        // The x² average pools with the identical weights, so the merged
+        // second raw moment stays E[x²] under the merged weight profile.
+        for (a, &b) in self.avg2.iter_mut().zip(&avg2) {
             *a = (wa * *a + wb * b) * inv;
         }
         self.v = inv;
@@ -222,11 +252,12 @@ impl Averager for GrowingExp {
     }
 
     fn memory_floats(&self) -> usize {
-        self.avg.len()
+        self.avg.len() + self.avg2.len()
     }
 
     fn reset(&mut self) {
         self.avg.iter_mut().for_each(|a| *a = 0.0);
+        self.avg2.iter_mut().for_each(|a| *a = 0.0);
         self.v = 0.0;
         self.t = 0;
     }
@@ -377,7 +408,28 @@ mod tests {
             a.observe(&[1.0; 4]);
         }
         assert_eq!(a.memory_floats(), m);
-        assert_eq!(m, 4);
+        assert_eq!(m, 8); // d value + d moment accumulators
+    }
+
+    #[test]
+    fn moments_ess_is_exactly_the_tracked_effective_window() {
+        let mut a = GrowingExp::new(1, 0.5).unwrap();
+        for t in 1..=500u64 {
+            a.observe_scalar((t as f64 * 0.3).sin());
+        }
+        let (mut m, mut v) = ([0.0], [0.0]);
+        let ess = a.moments_into(&mut m, &mut v).unwrap();
+        assert_eq!(ess, a.effective_window());
+        assert_eq!(m[0], a.value_scalar().unwrap());
+        assert!(v[0] > 0.0, "sinusoid stream has spread");
+        // Constant stream: variance collapses to exactly zero (clamped).
+        let mut c = GrowingExp::new(2, 0.25).unwrap();
+        for _ in 0..200 {
+            c.observe(&[3.0, -1.5]);
+        }
+        let (mut m, mut v) = ([0.0; 2], [0.0; 2]);
+        c.moments_into(&mut m, &mut v).unwrap();
+        assert!(v[0] < 1e-12 && v[1] < 1e-12, "{v:?}");
     }
 
     #[test]

@@ -135,6 +135,85 @@ pub(crate) fn ema_fold(acc: &mut [f64], data: &[f64], gamma: f64) {
 }
 
 // ---------------------------------------------------------------------------
+// Squared-moment variants: the same recurrences applied to x², the side
+// state behind every estimator's streamed weighted variance (the
+// analytics layer's `moments_into`). Each mirrors its first-moment twin
+// exactly — same order, same weights — so the tracked E[x²] is the
+// weighted second raw moment under the estimator's own weight profile.
+// ---------------------------------------------------------------------------
+
+/// In-place EMA step on squares `acc[i] = gamma*acc[i] + (1-gamma)*x[i]²`.
+#[inline]
+pub(crate) fn ema_step_sq(acc: &mut [f64], x: &[f64], gamma: f64) {
+    debug_assert_eq!(acc.len(), x.len());
+    let om = 1.0 - gamma;
+    for (a, &xv) in acc.iter_mut().zip(x) {
+        *a = gamma * *a + om * xv * xv;
+    }
+}
+
+/// In-place incremental mean of squares `m += (x² − m)/n`.
+#[inline]
+pub(crate) fn mean_update_sq(mean: &mut [f64], x: &[f64], n: f64) {
+    debug_assert_eq!(mean.len(), x.len());
+    let inv = 1.0 / n;
+    for (m, &xv) in mean.iter_mut().zip(x) {
+        *m += (xv * xv - *m) * inv;
+    }
+}
+
+/// Batch form of [`mean_update_sq`] (bit-identical to the per-sample
+/// recurrence), mirroring [`mean_update_run`].
+#[inline]
+pub(crate) fn mean_update_run_sq(mean: &mut [f64], data: &[f64], n0: u64) {
+    let d = mean.len();
+    debug_assert!(d > 0 && data.len() % d == 0);
+    let mut n = n0;
+    for x in data.chunks_exact(d) {
+        n += 1;
+        mean_update_sq(mean, x, n as f64);
+    }
+}
+
+/// `sum[i] += x[i]²`.
+#[inline]
+pub(crate) fn add_assign_sq(sum: &mut [f64], x: &[f64]) {
+    debug_assert_eq!(sum.len(), x.len());
+    for (s, &xv) in sum.iter_mut().zip(x) {
+        *s += xv * xv;
+    }
+}
+
+/// Closed-form EMA fold of squares — the batch form of [`ema_step_sq`],
+/// equal up to round-off, mirroring [`ema_fold`]'s newest→oldest walk.
+#[inline]
+pub(crate) fn ema_fold_sq(acc: &mut [f64], data: &[f64], gamma: f64) {
+    let d = acc.len();
+    debug_assert!(d > 0 && data.len() % d == 0);
+    let n = (data.len() / d) as i32;
+    scale_in_place(acc, gamma.powi(n));
+    let mut w = 1.0 - gamma;
+    for x in data.chunks_exact(d).rev() {
+        for (a, &xv) in acc.iter_mut().zip(x) {
+            *a += w * xv * xv;
+        }
+        w *= gamma;
+    }
+}
+
+/// Per-dim weighted variance from the tracked raw moments:
+/// `var[i] = max(0, m2[i] − mean[i]²)` — the cancellation is clamped so
+/// a constant stream reports exactly zero instead of `-1e-16`.
+#[inline]
+pub(crate) fn variance_from_raw(mean: &[f64], m2: &[f64], var: &mut [f64]) {
+    debug_assert_eq!(mean.len(), m2.len());
+    debug_assert_eq!(mean.len(), var.len());
+    for ((v, &m), &s) in var.iter_mut().zip(mean).zip(m2) {
+        *v = (s - m * m).max(0.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Multi-row variants: the same primitives applied across many rows of a
 // row-major structure-of-arrays arena in ONE call. These are the planar
 // stream-bank drain/publish kernels — the coordinator stages a whole
@@ -253,6 +332,53 @@ mod tests {
         let mut z = vec![9.0, 9.0];
         ema_fold(&mut z, &data, 0.0);
         assert_eq!(&z[..], &data[data.len() - d..]);
+    }
+
+    #[test]
+    fn squared_kernels_track_second_raw_moments() {
+        let d = 2;
+        let gamma = 0.7;
+        let data: Vec<f64> = (0..8 * d).map(|i| (i as f64 * 0.23).cos() * 2.0).collect();
+        // Fold vs step on squares agree to round-off.
+        let mut folded = vec![0.3, -0.4];
+        let mut stepped = folded.clone();
+        ema_fold_sq(&mut folded, &data, gamma);
+        for x in data.chunks_exact(d) {
+            ema_step_sq(&mut stepped, x, gamma);
+        }
+        for i in 0..d {
+            assert!((folded[i] - stepped[i]).abs() < 1e-12, "dim {i}");
+        }
+        // Mean-of-squares run is bit-identical to per-sample updates.
+        let mut run = vec![0.0; d];
+        let mut step = vec![0.0; d];
+        mean_update_run_sq(&mut run, &data, 0);
+        let mut n = 0u64;
+        for x in data.chunks_exact(d) {
+            n += 1;
+            mean_update_sq(&mut step, x, n as f64);
+        }
+        assert_eq!(run, step);
+        // And both equal the plain mean of x².
+        let mut want = vec![0.0; d];
+        for x in data.chunks_exact(d) {
+            for (w, &xv) in want.iter_mut().zip(x) {
+                *w += xv * xv;
+            }
+        }
+        for i in 0..d {
+            assert!((run[i] - want[i] / 8.0).abs() < 1e-12);
+        }
+        // Variance clamp: a constant stream is exactly zero.
+        let mean = [3.0, -2.0];
+        let m2 = [9.0 - 1e-17, 4.0 + 0.25];
+        let mut var = [0.0; 2];
+        variance_from_raw(&mean, &m2, &mut var);
+        assert_eq!(var[0], 0.0);
+        assert!((var[1] - 0.25).abs() < 1e-12);
+        let mut sumsq = vec![0.0; d];
+        add_assign_sq(&mut sumsq, &[2.0, -3.0]);
+        assert_eq!(sumsq, vec![4.0, 9.0]);
     }
 
     #[test]

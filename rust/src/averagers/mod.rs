@@ -5,16 +5,25 @@
 //! where the window is either fixed (`k_t = k`) or grows with the stream
 //! (`k_t = ct`, `c < 1`) — see [`WindowKind`].
 //!
-//! | estimator | memory (floats) | anytime | window | batched `observe_many` | planar bank (arena stride) | snapshot / merge | paper |
-//! |---|---|---|---|---|---|---|---|
-//! | [`ExpAverage`] | `d` | yes | fixed (`k=(1+γ)/(1−γ)`) | closed-form `γⁿ` fold | [`banked::ExpBank`] (`d`) | exact (mass-weighted combine) | Eq. 2 (`expk`) |
-//! | [`GrowingExp`] | `d` | yes | growing | per-sample decay, batch kernel | [`banked::GeaBank`] (`d`) | exact (inverse-variance pool) | §2, Eqs. 3–4 (`exp`) |
-//! | [`Awa2`] | `2d` (one SoA bank) | yes | fixed & growing | run-to-flush mean kernels | [`banked::Awa2Bank`] (`2d`) | exact (per-accumulator pool) | §3.1–3.2 (`awa`) |
-//! | [`AwaMulti`] | `(z+1)d` (one SoA bank) | yes | fixed & growing | run-to-chunk mean kernels | [`banked::AwaMultiBank`] (`(z+1)d`) | exact (per-accumulator pool) | §3.3–3.4 (`awa3`, …) |
-//! | [`TrueWindow`] | `k_t·d` | yes | fixed & growing | tail-block ring rebuild | — (ragged state, slot fallback) | precedence (longer stream wins) | `truek`/`true` baseline |
-//! | [`RawTail`] | `d` | **no** | growing | suffix fold past `t₀` | — (horizon-bound, slot fallback) | exact (tail-mean pool) | `raw` baseline |
-//! | [`RestartTail`] | `3d` | stale (one block) | fixed & growing | block-skipping runs | — (slot fallback) | precedence (longer stream wins) | §1 block-restart baseline |
-//! | [`EhWindow`] | `(1/ε)·log(εk_t)·d` | yes (ε-approx) | fixed & growing | per-sample replay (structure-exact) | — (ragged state, slot fallback) | precedence (longer stream wins) | Datar et al. [2002] baseline |
+//! | estimator | memory (floats) | anytime | window | batched `observe_many` | planar bank (arena stride) | snapshot / merge | moments / ESS | paper |
+//! |---|---|---|---|---|---|---|---|---|
+//! | [`ExpAverage`] | `2d` | yes | fixed (`k=(1+γ)/(1−γ)`) | closed-form `γⁿ` fold | [`banked::ExpBank`] (`2d`) | exact (mass-weighted combine) | EW `E[x²]` fold; closed-form `ESS → (1+γ)/(1−γ)` | Eq. 2 (`expk`) |
+//! | [`GrowingExp`] | `2d` | yes | growing | per-sample decay, batch kernel | [`banked::GeaBank`] (`2d`) | exact (inverse-variance pool) | same-decay `E[x²]`; `ESS = 1/v` exactly | §2, Eqs. 3–4 (`exp`) |
+//! | [`Awa2`] | `4d` (one SoA bank) | yes | fixed & growing | run-to-flush mean kernels | [`banked::Awa2Bank`] (`4d`) | exact (per-accumulator pool) | per-accumulator `E[x²]`; `ESS = 1/(γ²/N¹+(1−γ)²/N⁰)` | §3.1–3.2 (`awa`) |
+//! | [`AwaMulti`] | `2(z+1)d` (one SoA bank) | yes | fixed & growing | run-to-chunk mean kernels | [`banked::AwaMultiBank`] (`2(z+1)d`) | exact (per-accumulator pool) | per-accumulator `E[x²]`; two-group `ESS` | §3.3–3.4 (`awa3`, …) |
+//! | [`TrueWindow`] | `k_t·d + 2d` | yes | fixed & growing | tail-block ring rebuild | — (ragged state, slot fallback) | precedence (longer stream wins) | windowed `Σx²` (re-summed); `ESS = k_t` exactly | `truek`/`true` baseline |
+//! | [`RawTail`] | `3d` | **no** | growing | suffix fold past `t₀` | — (horizon-bound, slot fallback) | exact (tail-mean pool) | tail mean of `x²`; `ESS = n` (1 pre-start) | `raw` baseline |
+//! | [`RestartTail`] | `5d` | stale (one block) | fixed & growing | block-skipping runs | — (slot fallback) | precedence (longer stream wins) | per-block mean of `x²`; `ESS = N_published` | §1 block-restart baseline |
+//! | [`EhWindow`] | `2·(1/ε)·log(εk_t)·d` | yes (ε-approx) | fixed & growing | per-sample replay (structure-exact) | — (ragged state, slot fallback) | precedence (longer stream wins) | per-bucket `Σx²`; `ESS = C²/Σw²n` | Datar et al. [2002] baseline |
+//!
+//! The *moments / ESS* column is the analytics contract
+//! ([`Averager::moments_into`], [`crate::analytics`]): every estimator
+//! tracks the second raw moment of its weighted tail with the *same*
+//! recurrence (and weights) as the mean — an exponentially weighted /
+//! Welford-style side state in the spirit of Luxenberg & Boyd's moving
+//! models — so `variance = E_α[x²] − mean²` and `ESS = 1/Σα²` stream in
+//! O(d) without replay. The memory column includes this side state
+//! (exactly one extra copy of the value-path accumulators).
 //!
 //! The *snapshot / merge* column is the durability contract
 //! ([`crate::persist`]): every estimator serializes its full state into
@@ -167,6 +176,23 @@ pub trait Averager: Send {
     /// estimate is available yet (empty stream, or a non-anytime baseline
     /// before its start point — in which case `out` is left untouched).
     fn value_into(&self, out: &mut [f64]) -> bool;
+
+    /// Streamed second-moment diagnostics of the weighted tail: write
+    /// the estimator's weighted mean (identical to [`Averager::value_into`])
+    /// into `mean` and the weighted variance `Σ_i α_i·(x_i − mean)²`
+    /// (biased, under the estimator's own normalized weight profile
+    /// `α_{·,t}` — see [`reconstruct_weights`]) into `variance`, both of
+    /// length `dim()`. Returns the effective sample size
+    /// `ESS = 1/Σ_i α²_i` (so an exact `k`-window reports `k` and a
+    /// point-mass last-iterate reports 1), or `None` when no estimate
+    /// exists yet (in which case both slices are left untouched).
+    ///
+    /// Every estimator tracks the second raw moment `E_α[x²]` natively
+    /// — O(1)-per-sample Welford/West-style updates mirroring the mean
+    /// recurrence exactly ([`kernels`]'s `*_sq` twins) — so this read
+    /// never replays the stream; streamed-vs-batch agreement to 1e-9 is
+    /// enforced for all 8 estimators by `analytics_properties.rs`.
+    fn moments_into(&self, mean: &mut [f64], variance: &mut [f64]) -> Option<f64>;
 
     /// Append the estimator's complete state to `enc` as a canonical,
     /// self-describing payload (kind tag + dim + params + counters +

@@ -19,6 +19,8 @@ pub struct RawTail {
     /// First stream position (1-based) included in the average.
     start: u64,
     mean: Vec<f64>,
+    /// Running mean of `x²` over the same tail (moment side state).
+    mean2: Vec<f64>,
     /// Samples accumulated into `mean`.
     n: u64,
     /// Last raw sample (reported before the start point).
@@ -40,6 +42,7 @@ impl RawTail {
             total_steps,
             start,
             mean: vec![0.0; d],
+            mean2: vec![0.0; d],
             n: 0,
             last: vec![0.0; d],
             t: 0,
@@ -68,11 +71,12 @@ impl RawTail {
     }
 
     /// Decode and validate a `RAW_TAIL` state payload against this
-    /// estimator's parameters: `(t, n, mean, last)`.
+    /// estimator's parameters: `(t, n, mean, last, mean2)`.
+    #[allow(clippy::type_complexity)]
     fn parse_state(
         &self,
         dec: &mut Dec<'_>,
-    ) -> Result<(u64, u64, Vec<f64>, Vec<f64>), String> {
+    ) -> Result<(u64, u64, Vec<f64>, Vec<f64>, Vec<f64>), String> {
         let d = self.mean.len();
         codec::check_header(dec, codec::tag::RAW_TAIL, d)?;
         codec::check_param("c", dec.get_f64()?, self.c)?;
@@ -87,7 +91,8 @@ impl RawTail {
         let n = dec.get_u64()?;
         let mean = codec::get_state_vec(dec, d)?;
         let last = codec::get_state_vec(dec, d)?;
-        Ok((t, n, mean, last))
+        let mean2 = codec::get_state_vec(dec, d)?;
+        Ok((t, n, mean, last, mean2))
     }
 }
 
@@ -111,6 +116,7 @@ impl Averager for RawTail {
         if self.t >= self.start {
             self.n += 1;
             super::mean_update(&mut self.mean, x, self.n as f64);
+            kernels::mean_update_sq(&mut self.mean2, x, self.n as f64);
         }
     }
 
@@ -130,6 +136,7 @@ impl Averager for RawTail {
         };
         if first_avg < count {
             kernels::mean_update_run(&mut self.mean, &data[first_avg * d..], self.n);
+            kernels::mean_update_run_sq(&mut self.mean2, &data[first_avg * d..], self.n);
             self.n += (count - first_avg) as u64;
         }
         self.t += count as u64;
@@ -148,9 +155,25 @@ impl Averager for RawTail {
         true
     }
 
+    fn moments_into(&self, mean: &mut [f64], variance: &mut [f64]) -> Option<f64> {
+        if self.t == 0 {
+            return None;
+        }
+        if self.n > 0 {
+            mean.copy_from_slice(&self.mean);
+            kernels::variance_from_raw(&self.mean, &self.mean2, variance);
+            Some(self.n as f64)
+        } else {
+            // Pre-start the report is the raw last iterate: a point mass.
+            mean.copy_from_slice(&self.last);
+            variance.iter_mut().for_each(|v| *v = 0.0);
+            Some(1.0)
+        }
+    }
+
     /// Payload: `RAW_TAIL` tag, dim, `c`, horizon `T`, `t`, tail count
-    /// `n`, tail mean, last raw iterate (`start` is re-derived from the
-    /// parameters, so it never reaches the wire).
+    /// `n`, tail mean, last raw iterate, tail `x²` mean (`start` is
+    /// re-derived from the parameters, so it never reaches the wire).
     fn export_state(&self, enc: &mut Enc) {
         enc.put_u8(codec::tag::RAW_TAIL);
         enc.put_u32(self.mean.len() as u32);
@@ -160,14 +183,16 @@ impl Averager for RawTail {
         enc.put_u64(self.n);
         enc.put_f64_slice(&self.mean);
         enc.put_f64_slice(&self.last);
+        enc.put_f64_slice(&self.mean2);
     }
 
     fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
-        let (t, n, mean, last) = self.parse_state(dec)?;
+        let (t, n, mean, last, mean2) = self.parse_state(dec)?;
         self.t = t;
         self.n = n;
         self.mean = mean;
         self.last = last;
+        self.mean2 = mean2;
         Ok(())
     }
 
@@ -177,7 +202,7 @@ impl Averager for RawTail {
     /// shared horizon — so `t` takes the maximum and the raw pre-start
     /// iterate follows the longer stream.
     fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
-        let (t, n, mean, last) = self.parse_state(dec)?;
+        let (t, n, mean, last, mean2) = self.parse_state(dec)?;
         if t == 0 {
             return Ok(());
         }
@@ -186,10 +211,12 @@ impl Averager for RawTail {
             self.n = n;
             self.mean = mean;
             self.last = last;
+            self.mean2 = mean2;
             return Ok(());
         }
         if n > 0 {
             kernels::pool_means(&mut self.mean, &mean, self.n, n);
+            kernels::pool_means(&mut self.mean2, &mean2, self.n, n);
             self.n += n;
         }
         if t > self.t {
@@ -208,11 +235,12 @@ impl Averager for RawTail {
     }
 
     fn memory_floats(&self) -> usize {
-        self.mean.len() + self.last.len()
+        self.mean.len() + self.last.len() + self.mean2.len()
     }
 
     fn reset(&mut self) {
         self.mean.iter_mut().for_each(|m| *m = 0.0);
+        self.mean2.iter_mut().for_each(|m| *m = 0.0);
         self.last.iter_mut().for_each(|l| *l = 0.0);
         self.n = 0;
         self.t = 0;
@@ -291,6 +319,24 @@ mod tests {
         assert!(RawTail::new(1, 0.0, 100).is_err());
         assert!(RawTail::new(1, 1.0, 100).is_err());
         assert!(RawTail::new(1, 0.5, 0).is_err());
+    }
+
+    #[test]
+    fn moments_are_point_mass_before_start_and_tail_stats_after() {
+        let mut r = RawTail::new(1, 0.5, 10).unwrap(); // start=6
+        r.observe_scalar(4.0);
+        let (mut m, mut v) = ([0.0], [0.0]);
+        assert_eq!(r.moments_into(&mut m, &mut v), Some(1.0));
+        assert_eq!((m[0], v[0]), (4.0, 0.0));
+        let xs: Vec<f64> = (2..=10).map(|i| i as f64).collect();
+        for &x in &xs {
+            r.observe_scalar(x);
+        }
+        // Tail = 6..=10, mean 8, var = mean((x-8)²) = 2.
+        let ess = r.moments_into(&mut m, &mut v).unwrap();
+        assert_eq!(ess, 5.0);
+        assert!((m[0] - 8.0).abs() < 1e-12);
+        assert!((v[0] - 2.0).abs() < 1e-9, "{}", v[0]);
     }
 
     #[test]

@@ -25,9 +25,13 @@ pub struct RestartTail {
     kind: WindowKind,
     /// Current (filling) block mean and count.
     cur: Vec<f64>,
+    /// Current block's mean of `x²` (moment side state).
+    cur2: Vec<f64>,
     n_cur: u64,
     /// Last completed block's mean and count (the published value).
     published: Vec<f64>,
+    /// Published block's mean of `x²`.
+    published2: Vec<f64>,
     n_published: u64,
     /// Stream time at which the published block completed.
     published_at: u64,
@@ -48,8 +52,10 @@ impl RestartTail {
         Ok(RestartTail {
             kind,
             cur: vec![0.0; d],
+            cur2: vec![0.0; d],
             n_cur: 0,
             published: vec![0.0; d],
+            published2: vec![0.0; d],
             n_published: 0,
             published_at: 0,
             last: vec![0.0; d],
@@ -83,9 +89,11 @@ impl RestartTail {
     /// Publish the completed current block and start the next one.
     fn publish(&mut self) {
         std::mem::swap(&mut self.published, &mut self.cur);
+        std::mem::swap(&mut self.published2, &mut self.cur2);
         self.n_published = self.n_cur;
         self.published_at = self.t;
         self.cur.iter_mut().for_each(|v| *v = 0.0);
+        self.cur2.iter_mut().for_each(|v| *v = 0.0);
         self.n_cur = 0;
         self.blocks += 1;
     }
@@ -110,6 +118,7 @@ impl Averager for RestartTail {
         self.last.copy_from_slice(x);
         self.n_cur += 1;
         super::mean_update(&mut self.cur, x, self.n_cur as f64);
+        kernels::mean_update_sq(&mut self.cur2, x, self.n_cur as f64);
         if self.block_complete() {
             self.publish();
         }
@@ -132,6 +141,7 @@ impl Averager for RestartTail {
                 if self.n_cur > 0 {
                     let take = ((k - self.n_cur) as usize).min(count);
                     kernels::mean_update_run(&mut self.cur, &data[..take * d], self.n_cur);
+                    kernels::mean_update_run_sq(&mut self.cur2, &data[..take * d], self.n_cur);
                     self.n_cur += take as u64;
                     self.t += take as u64;
                     offset = take;
@@ -142,7 +152,8 @@ impl Averager for RestartTail {
                 let remaining = count - offset;
                 let full = remaining / k as usize;
                 let tail = remaining % k as usize;
-                // 2. Whole blocks: skip all but the last.
+                // 2. Whole blocks: skip all but the last (their moments
+                // are skipped with them — they could never be published).
                 if full > 0 {
                     let skipped = (full - 1) * k as usize;
                     self.t += skipped as u64;
@@ -150,6 +161,7 @@ impl Averager for RestartTail {
                     let start = offset + skipped;
                     let run = &data[start * d..(start + k as usize) * d];
                     kernels::mean_update_run(&mut self.cur, run, 0);
+                    kernels::mean_update_run_sq(&mut self.cur2, run, 0);
                     self.n_cur = k;
                     self.t += k;
                     self.publish();
@@ -158,6 +170,7 @@ impl Averager for RestartTail {
                 // 3. Trailing partial block.
                 if tail > 0 {
                     kernels::mean_update_run(&mut self.cur, &data[offset * d..], self.n_cur);
+                    kernels::mean_update_run_sq(&mut self.cur2, &data[offset * d..], self.n_cur);
                     self.n_cur += tail as u64;
                     self.t += tail as u64;
                 }
@@ -171,6 +184,7 @@ impl Averager for RestartTail {
                     self.last.copy_from_slice(x);
                     self.n_cur += 1;
                     super::mean_update(&mut self.cur, x, self.n_cur as f64);
+                    kernels::mean_update_sq(&mut self.cur2, x, self.n_cur as f64);
                     if self.block_complete() {
                         self.publish();
                     }
@@ -191,9 +205,27 @@ impl Averager for RestartTail {
         true
     }
 
+    fn moments_into(&self, mean: &mut [f64], variance: &mut [f64]) -> Option<f64> {
+        if self.t == 0 {
+            return None;
+        }
+        if self.n_published > 0 {
+            mean.copy_from_slice(&self.published);
+            kernels::variance_from_raw(&self.published, &self.published2, variance);
+            Some(self.n_published as f64)
+        } else {
+            // Before the first publication the report is the raw last
+            // iterate: a point mass.
+            mean.copy_from_slice(&self.last);
+            variance.iter_mut().for_each(|v| *v = 0.0);
+            Some(1.0)
+        }
+    }
+
     /// Payload: `RESTART` tag, dim, window, `t`, current-block count,
     /// published count, publish time, blocks, then the current block,
-    /// published average, and last raw iterate.
+    /// published average, last raw iterate, and the current/published
+    /// `x²` means.
     fn export_state(&self, enc: &mut Enc) {
         enc.put_u8(codec::tag::RESTART);
         enc.put_u32(self.cur.len() as u32);
@@ -206,6 +238,8 @@ impl Averager for RestartTail {
         enc.put_f64_slice(&self.cur);
         enc.put_f64_slice(&self.published);
         enc.put_f64_slice(&self.last);
+        enc.put_f64_slice(&self.cur2);
+        enc.put_f64_slice(&self.published2);
     }
 
     fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
@@ -220,6 +254,8 @@ impl Averager for RestartTail {
         let cur = codec::get_state_vec(dec, d)?;
         let published = codec::get_state_vec(dec, d)?;
         let last = codec::get_state_vec(dec, d)?;
+        let cur2 = codec::get_state_vec(dec, d)?;
+        let published2 = codec::get_state_vec(dec, d)?;
         self.t = t;
         self.n_cur = n_cur;
         self.n_published = n_published;
@@ -228,6 +264,8 @@ impl Averager for RestartTail {
         self.cur = cur;
         self.published = published;
         self.last = last;
+        self.cur2 = cur2;
+        self.published2 = published2;
         Ok(())
     }
 
@@ -253,12 +291,18 @@ impl Averager for RestartTail {
     }
 
     fn memory_floats(&self) -> usize {
-        self.cur.len() + self.published.len() + self.last.len()
+        self.cur.len()
+            + self.published.len()
+            + self.last.len()
+            + self.cur2.len()
+            + self.published2.len()
     }
 
     fn reset(&mut self) {
         self.cur.iter_mut().for_each(|v| *v = 0.0);
+        self.cur2.iter_mut().for_each(|v| *v = 0.0);
         self.published.iter_mut().for_each(|v| *v = 0.0);
+        self.published2.iter_mut().for_each(|v| *v = 0.0);
         self.last.iter_mut().for_each(|v| *v = 0.0);
         self.n_cur = 0;
         self.n_published = 0;
@@ -359,7 +403,27 @@ mod tests {
             r.observe(&[1.0; 8]);
         }
         assert_eq!(r.memory_floats(), m);
-        assert_eq!(m, 24);
+        assert_eq!(m, 40); // 3d value-path + 2d moment accumulators
+    }
+
+    #[test]
+    fn moments_are_the_published_block_statistics() {
+        let mut r = RestartTail::new(1, WindowKind::Fixed { k: 4 }).unwrap();
+        r.observe_scalar(9.0);
+        let (mut m, mut v) = ([0.0], [0.0]);
+        assert_eq!(r.moments_into(&mut m, &mut v), Some(1.0));
+        assert_eq!((m[0], v[0]), (9.0, 0.0), "raw iterate is a point mass");
+        for &x in &[1.0, 3.0, 5.0, 100.0, 200.0] {
+            r.observe_scalar(x);
+        }
+        // Published block = [9, 1, 3, 5]: mean 4.5, var = mean((x-4.5)²).
+        let block = [9.0, 1.0, 3.0, 5.0];
+        let mean = 4.5;
+        let var = block.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / 4.0;
+        let ess = r.moments_into(&mut m, &mut v).unwrap();
+        assert_eq!(ess, 4.0);
+        assert!((m[0] - mean).abs() < 1e-12);
+        assert!((v[0] - var).abs() < 1e-9, "{} vs {var}", v[0]);
     }
 
     #[test]

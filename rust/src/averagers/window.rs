@@ -25,6 +25,10 @@ pub struct TrueWindow {
     /// necessity.
     free: Vec<Vec<f64>>,
     sum: Vec<f64>,
+    /// Running sum of `x²` over the window (moment side state), updated
+    /// add/subtract alongside `sum` and re-accumulated by the same
+    /// periodic exact re-sum.
+    sum2: Vec<f64>,
     t: u64,
     ops_since_resum: u32,
     name: String,
@@ -43,6 +47,7 @@ impl TrueWindow {
             buf: VecDeque::new(),
             free: Vec::new(),
             sum: vec![0.0; d],
+            sum2: vec![0.0; d],
             t: 0,
             ops_since_resum: 0,
             name,
@@ -60,9 +65,11 @@ impl TrueWindow {
 
     fn resum(&mut self) {
         self.sum.iter_mut().for_each(|s| *s = 0.0);
+        self.sum2.iter_mut().for_each(|s| *s = 0.0);
         for x in &self.buf {
-            for (s, &xv) in self.sum.iter_mut().zip(x) {
+            for ((s, s2), &xv) in self.sum.iter_mut().zip(self.sum2.iter_mut()).zip(x) {
                 *s += xv;
+                *s2 += xv * xv;
             }
         }
         self.ops_since_resum = 0;
@@ -72,6 +79,7 @@ impl TrueWindow {
     fn push_sample(&mut self, x: &[f64]) {
         self.t += 1;
         kernels::add_assign(&mut self.sum, x);
+        kernels::add_assign_sq(&mut self.sum2, x);
         let mut slot = self.free.pop().unwrap_or_else(|| vec![0.0; x.len()]);
         slot.copy_from_slice(x);
         self.buf.push_back(slot);
@@ -79,8 +87,9 @@ impl TrueWindow {
         let k_t = self.kind.k_at(self.t).ceil() as usize;
         while self.buf.len() > k_t.max(1) {
             let old = self.buf.pop_front().expect("nonempty");
-            for (s, &ov) in self.sum.iter_mut().zip(&old) {
+            for ((s, s2), &ov) in self.sum.iter_mut().zip(self.sum2.iter_mut()).zip(&old) {
                 *s -= ov;
+                *s2 -= ov * ov;
             }
             self.free.push(old);
         }
@@ -127,8 +136,10 @@ impl Averager for TrueWindow {
                     self.free.push(old);
                 }
                 self.sum.iter_mut().for_each(|s| *s = 0.0);
+                self.sum2.iter_mut().for_each(|s| *s = 0.0);
                 for x in data[(count - k) * d..].chunks_exact(d) {
                     kernels::add_assign(&mut self.sum, x);
+                    kernels::add_assign_sq(&mut self.sum2, x);
                     let mut slot = self.free.pop().unwrap_or_else(|| vec![0.0; d]);
                     slot.copy_from_slice(x);
                     self.buf.push_back(slot);
@@ -154,9 +165,30 @@ impl Averager for TrueWindow {
         true
     }
 
+    fn moments_into(&self, mean: &mut [f64], variance: &mut [f64]) -> Option<f64> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let n = self.buf.len() as f64;
+        let inv = 1.0 / n;
+        for (m, &s) in mean.iter_mut().zip(&self.sum) {
+            *m = s * inv;
+        }
+        for ((v, &s2), &m) in variance.iter_mut().zip(&self.sum2).zip(mean.iter()) {
+            *v = (s2 * inv - m * m).max(0.0);
+        }
+        // Uniform weights over the exact window: ESS is the live count.
+        Some(n)
+    }
+
     /// Payload: `TRUE_WINDOW` tag, dim, window, `t`, live sample count,
-    /// then the buffered window samples oldest→newest (the running sum
-    /// is recomputed exactly on import, so it never reaches the wire).
+    /// the buffered window samples oldest→newest, then the LIVE running
+    /// `Σx`/`Σx²` and the resum countdown. Carrying the sums (instead
+    /// of recomputing on import, as earlier versions did) keeps a
+    /// restored estimator *bitwise* identical to the exporter — an
+    /// incrementally maintained sum and a fresh re-sum round
+    /// differently, which would break the recovery soak's
+    /// bitwise-stability contract.
     fn export_state(&self, enc: &mut Enc) {
         enc.put_u8(codec::tag::TRUE_WINDOW);
         enc.put_u32(self.sum.len() as u32);
@@ -166,6 +198,9 @@ impl Averager for TrueWindow {
         for x in &self.buf {
             enc.put_f64_raw(x);
         }
+        enc.put_f64_slice(&self.sum);
+        enc.put_f64_slice(&self.sum2);
+        enc.put_u32(self.ops_since_resum);
     }
 
     fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
@@ -180,10 +215,15 @@ impl Averager for TrueWindow {
             dec.get_f64_into(&mut x)?;
             buf.push_back(x);
         }
+        let sum = codec::get_state_vec(dec, d)?;
+        let sum2 = codec::get_state_vec(dec, d)?;
+        let ops = dec.get_u32()?;
         self.buf = buf;
         self.free.clear();
         self.t = t;
-        self.resum(); // fresh exact sum, ops counter reset inside
+        self.sum = sum;
+        self.sum2 = sum2;
+        self.ops_since_resum = ops;
         Ok(())
     }
 
@@ -204,13 +244,14 @@ impl Averager for TrueWindow {
     }
 
     fn memory_floats(&self) -> usize {
-        (self.buf.len() + self.free.len()) * self.dim() + self.sum.len()
+        (self.buf.len() + self.free.len()) * self.dim() + self.sum.len() + self.sum2.len()
     }
 
     fn reset(&mut self) {
         self.buf.clear();
         self.free.clear();
         self.sum.iter_mut().for_each(|s| *s = 0.0);
+        self.sum2.iter_mut().for_each(|s| *s = 0.0);
         self.t = 0;
         self.ops_since_resum = 0;
     }
@@ -294,8 +335,29 @@ mod tests {
             w.observe_scalar(i as f64);
         }
         assert_eq!(w.len(), 10);
-        // 10 live samples + 1 recycled slot + the running sum.
-        assert_eq!(w.memory_floats(), 10 + 1 + 1);
+        // 10 live samples + 1 recycled slot + the running sum + Σx².
+        assert_eq!(w.memory_floats(), 10 + 1 + 1 + 1);
+    }
+
+    #[test]
+    fn moments_are_the_exact_window_statistics() {
+        let k = 7usize;
+        let mut w = TrueWindow::new(1, WindowKind::Fixed { k: k as u64 });
+        let mut xs = Vec::new();
+        for i in 0..40 {
+            let x = ((i * 13) % 9) as f64 - 4.0;
+            xs.push(x);
+            w.observe_scalar(x);
+            let tail = &xs[xs.len().saturating_sub(k)..];
+            let n = tail.len() as f64;
+            let mean = tail.iter().sum::<f64>() / n;
+            let var = tail.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+            let (mut m, mut v) = ([0.0], [0.0]);
+            let ess = w.moments_into(&mut m, &mut v).expect("moments");
+            assert_eq!(ess, n, "i={i}");
+            assert!((m[0] - mean).abs() < 1e-12, "i={i}");
+            assert!((v[0] - var).abs() < 1e-9, "i={i}: {} vs {var}", v[0]);
+        }
     }
 
     #[test]

@@ -314,6 +314,29 @@ impl Bank {
         valid.len()
     }
 
+    /// Read one live row's stat snapshot under the bank mutex: stream
+    /// position, nominal window, and the streamed weighted moments
+    /// (mean into `mean`, variance into `variance`, ESS returned) — all
+    /// from one consistent view of the row. The analytics query path;
+    /// cold relative to the drain, so the brief lock is fine (queries
+    /// take it once per row, the drain once per cycle).
+    pub(super) fn stat_row(
+        &self,
+        row: u32,
+        gen: u64,
+        mean: &mut [f64],
+        variance: &mut [f64],
+    ) -> Result<(u64, f64, Option<f64>), String> {
+        let g = self.inner.lock().expect("bank lock");
+        if g.gens.get(row as usize) != Some(&gen) {
+            return Err("stream's bank row was recycled".into());
+        }
+        let t = g.state.t(row as usize);
+        let w = g.state.window_len(row as usize);
+        let ess = g.state.moments_row_into(row as usize, mean, variance);
+        Ok((t, w, ess))
+    }
+
     /// Export one live row's canonical state payload (the wire
     /// `export_state` op).
     pub(super) fn export_row(&self, row: u32, gen: u64, enc: &mut Enc) -> Result<(), String> {

@@ -19,8 +19,8 @@
 
 use super::core::Snapshot;
 use super::protocol::{
-    self, wire, MultiOutcome, OpKind, ProtocolChoice, Request, Response, StreamInfo, StreamRef,
-    Wire,
+    self, wire, MultiOutcome, OpKind, ProtocolChoice, Request, Response, StatEntry, StatOutcome,
+    StreamInfo, StreamRef, Wire,
 };
 use crate::util::json::Json;
 use crate::util::pool::PooledBuf;
@@ -634,6 +634,88 @@ impl Client {
             Response::Merged { t } => Ok(t),
             other => Err(unexpected(&other)),
         }
+    }
+
+    /// Multi-stream analytics query: stat snapshots (mean, variance,
+    /// ESS, `z`-band) for every stream whose name starts with `prefix`
+    /// (empty = all), name-sorted; with `top_k > 0` only the most
+    /// deviant streams (vs the pooled mean) come back, and with
+    /// `aggregate` the cross-stream pooled snapshot rides along.
+    /// Identical results over protocol v1 and v2 (the compat matrix
+    /// enforces 1e-12).
+    pub fn query(
+        &mut self,
+        prefix: &str,
+        z: f64,
+        top_k: u64,
+        aggregate: bool,
+    ) -> Result<(Vec<StatEntry>, Option<StatEntry>), ClientError> {
+        match self.roundtrip(&Request::Query {
+            prefix: prefix.to_string(),
+            z,
+            top_k,
+            aggregate,
+        })? {
+            Response::QueryStats {
+                stats, aggregate, ..
+            } => Ok((stats, aggregate)),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Fan-in stat read: snapshots for an explicit stream list in ONE
+    /// frame (handle-addressed under v2; name-addressed round-trip
+    /// semantics under v1 ride the same op). Per-entry results in input
+    /// order: a stale handle or unknown name errors only its own entry
+    /// (and purges the stale cache entry so the next call re-resolves).
+    pub fn multi_snapshot(
+        &mut self,
+        streams: &[&str],
+    ) -> Result<Vec<Result<StatEntry, String>>, ClientError> {
+        // Resolve entries individually; an unknown NAME becomes that
+        // entry's error (matching multi_push), not a whole-call abort.
+        let mut out: Vec<Option<Result<StatEntry, String>>> = vec![None; streams.len()];
+        let mut refs: Vec<StreamRef> = Vec::with_capacity(streams.len());
+        let mut positions: Vec<usize> = Vec::with_capacity(streams.len());
+        for (i, stream) in streams.iter().enumerate() {
+            match self.ref_for(stream) {
+                Ok(r) => {
+                    refs.push(r);
+                    positions.push(i);
+                }
+                Err(ClientError::Server(e)) => out[i] = Some(Err(e)),
+                Err(e) => return Err(e),
+            }
+        }
+        if !refs.is_empty() {
+            match self.roundtrip(&Request::MultiSnapshot { streams: refs })? {
+                Response::MultiStats { stats } => {
+                    if stats.len() != positions.len() {
+                        return Err(ClientError::Protocol(format!(
+                            "multi_snapshot returned {} outcomes for {} entries",
+                            stats.len(),
+                            positions.len()
+                        )));
+                    }
+                    for (&pos, outcome) in positions.iter().zip(stats) {
+                        out[pos] = Some(match outcome {
+                            StatOutcome::Stat(s) => Ok(s),
+                            StatOutcome::Missing(e) => {
+                                if e.contains(protocol::STALE_HANDLE_MARKER) {
+                                    self.handles.remove(streams[pos]);
+                                }
+                                Err(e)
+                            }
+                        });
+                    }
+                }
+                other => return Err(unexpected(&other)),
+            }
+        }
+        Ok(out
+            .into_iter()
+            .map(|o| o.expect("every entry resolved or rejected"))
+            .collect())
     }
 
     /// Registered stream names (sorted server-side).

@@ -2,8 +2,9 @@
 //! banks, and wait-free anytime snapshots.
 
 use super::bank::{Bank, BankJob, RowPub};
-use super::protocol::{MultiOutcome, MultiPushEntry, STALE_HANDLE_MARKER};
+use super::protocol::{MultiOutcome, MultiPushEntry, StreamRef, STALE_HANDLE_MARKER};
 use super::stream::StreamState;
+use crate::analytics::{self, Query, QueryResult, StatSnapshot};
 use crate::averagers::{banked, AveragerSpec};
 use crate::config::{BackpressurePolicy, PersistConfig, ServiceConfig};
 use crate::metrics::{names, Counter, Histogram, Registry};
@@ -233,6 +234,12 @@ pub struct Coordinator {
     snapshots_taken: Arc<Counter>,
     /// Entries staged through the `multi_push` fan-in op.
     multi_push_entries: Arc<Counter>,
+    /// Per-stream stat snapshots computed by the analytics paths.
+    stat_queries: Arc<Counter>,
+    /// Entries served through the `multi_snapshot` fan-in op.
+    multi_snapshot_entries: Arc<Counter>,
+    /// Streams matched by `query` selections.
+    query_streams: Arc<Counter>,
     /// Distribution of samples-per-message on the ingest path.
     push_batch_size: Arc<Histogram>,
 }
@@ -337,6 +344,9 @@ impl Coordinator {
             pushes_rejected: metrics.counter("pushes_rejected"),
             snapshots_taken: metrics.counter("snapshots"),
             multi_push_entries: metrics.counter(names::MULTI_PUSH_ENTRIES),
+            stat_queries: metrics.counter(names::STAT_QUERIES),
+            multi_snapshot_entries: metrics.counter(names::MULTI_SNAPSHOT_ENTRIES),
+            query_streams: metrics.counter(names::QUERY_STREAMS_MATCHED),
             push_batch_size: metrics.histogram("push_batch_size"),
             metrics,
             buffers: BufferPool::new(64),
@@ -761,6 +771,135 @@ impl Coordinator {
             .collect();
         out.sort();
         out
+    }
+
+    // ------------------------------------------------------------------
+    // Anytime analytics: stat snapshots, multi-stream fan-in, queries
+    // ------------------------------------------------------------------
+
+    /// One stream's [`StatSnapshot`] from a consistent view of its
+    /// backing: banked rows read `t`/`k_t`/moments under one bank-mutex
+    /// acquisition, slot streams under their state mutex. Cold relative
+    /// to ingest — the drain takes the same locks once per cycle.
+    fn stat_slot(&self, slot: &Arc<StreamSlot>, z: f64) -> Result<StatSnapshot, String> {
+        self.stat_queries.inc();
+        let d = slot.dim;
+        let mut mean = vec![0.0; d];
+        let mut variance = vec![0.0; d];
+        let (t, window_len, ess) = match &slot.backing {
+            Backing::Banked { bank, row, gen, .. } => {
+                bank.stat_row(*row, *gen, &mut mean, &mut variance)?
+            }
+            Backing::Slot { state } => {
+                let st = state.lock().expect("stream lock");
+                (
+                    st.t(),
+                    st.window_len(),
+                    st.moments_into(&mut mean, &mut variance),
+                )
+            }
+        };
+        // `ess == 0` marks an empty stream; the moment slices were left
+        // zeroed by the estimator in that case.
+        Ok(StatSnapshot::from_moments(
+            Arc::clone(&slot.name),
+            t,
+            window_len,
+            ess.unwrap_or(0.0),
+            mean,
+            variance,
+            z,
+        ))
+    }
+
+    /// Moment-tracking stat read of one stream: mean, variance, stddev,
+    /// ESS, effective window and confidence band (default `z`).
+    pub fn stat_snapshot(&self, name: &str) -> Result<StatSnapshot, String> {
+        let slot = self.slot(name)?;
+        self.stat_slot(&slot, analytics::DEFAULT_Z)
+    }
+
+    /// Handle-addressed [`Coordinator::stat_snapshot`] (the v2 path).
+    pub fn stat_snapshot_handle(&self, handle: u64) -> Result<StatSnapshot, String> {
+        let slot = self.slot_h(handle)?;
+        self.stat_slot(&slot, analytics::DEFAULT_Z)
+    }
+
+    /// Fan-in stat read — the wire `multi_snapshot` op. Every entry is
+    /// resolved under ONE registry read guard (like `multi_push`), then
+    /// each stream's stats are computed independently: entries fail
+    /// independently (a stale handle or unknown name rejects only
+    /// itself), in frame order.
+    pub fn multi_stat(&self, refs: &[StreamRef]) -> Vec<Result<StatSnapshot, String>> {
+        self.multi_stat_z(refs, analytics::DEFAULT_Z)
+    }
+
+    /// As [`Coordinator::multi_stat`] with an explicit band multiplier.
+    pub fn multi_stat_z(&self, refs: &[StreamRef], z: f64) -> Vec<Result<StatSnapshot, String>> {
+        self.multi_snapshot_entries.add(refs.len() as u64);
+        let slots: Vec<Result<Arc<StreamSlot>, String>> = {
+            let map = self.streams.read().expect("streams lock");
+            refs.iter()
+                .map(|r| match r {
+                    StreamRef::Name(n) => map
+                        .by_name
+                        .get(n)
+                        .cloned()
+                        .ok_or_else(|| format!("no stream '{n}' (register it first)")),
+                    StreamRef::Handle(h) => map.by_handle.get(h).cloned().ok_or_else(|| {
+                        format!("{STALE_HANDLE_MARKER} {h} (stale after unregister, or never issued)")
+                    }),
+                })
+                .collect()
+        };
+        slots
+            .into_iter()
+            .map(|r| r.and_then(|slot| self.stat_slot(&slot, z)))
+            .collect()
+    }
+
+    /// Multi-stream analytics query: select by name prefix (one
+    /// registry read guard), compute every matching stream's
+    /// [`StatSnapshot`], sort by name, then optionally pool
+    /// the cross-stream aggregate (parallel-Welford combine, ESS-
+    /// weighted) and keep only the `top_k` most deviant streams.
+    /// Streams unregistered between selection and read are skipped.
+    pub fn query(&self, q: &Query) -> QueryResult {
+        let slots: Vec<Arc<StreamSlot>> = {
+            let map = self.streams.read().expect("streams lock");
+            map.by_name
+                .iter()
+                .filter(|(name, _)| q.prefix.is_empty() || name.starts_with(&q.prefix))
+                .map(|(_, s)| Arc::clone(s))
+                .collect()
+        };
+        self.query_streams.add(slots.len() as u64);
+        let mut stats: Vec<StatSnapshot> = slots
+            .iter()
+            .filter_map(|slot| self.stat_slot(slot, q.z).ok())
+            .collect();
+        stats.sort_by(|a, b| a.stream.cmp(&b.stream));
+        let want_pool = q.aggregate || q.top_k > 0;
+        let (pooled, aggregated) = if want_pool {
+            analytics::aggregate(&stats, q.z)
+        } else {
+            (None, 0)
+        };
+        if q.top_k > 0 && q.top_k < stats.len() {
+            stats = match &pooled {
+                Some(p) => analytics::top_k_by_deviation(stats, p, q.top_k),
+                None => {
+                    // Nothing pooled (all streams empty): keep name order.
+                    stats.truncate(q.top_k);
+                    stats
+                }
+            };
+        }
+        QueryResult {
+            stats,
+            aggregate: if q.aggregate { pooled } else { None },
+            aggregated: if q.aggregate { aggregated } else { 0 },
+        }
     }
 
     // ------------------------------------------------------------------
@@ -1803,5 +1942,109 @@ mod tests {
         c.sync().unwrap();
         // Only the two good entries applied, in entry order.
         assert_eq!(c.snapshot("ok").unwrap().t, 2);
+    }
+
+    #[test]
+    fn stat_snapshot_reports_moments_on_both_backings() {
+        let c = Coordinator::new(2, 64, BackpressurePolicy::Block);
+        let h = c.register("banked", 2, gea()).unwrap();
+        c.register(
+            "slotted",
+            2,
+            AveragerSpec::True {
+                window: WindowKind::Fixed { k: 8 },
+            },
+        )
+        .unwrap();
+        let flat: Vec<f64> = (0..32).map(|i| (i as f64 * 0.4).sin() * 2.0).collect();
+        for name in ["banked", "slotted"] {
+            c.push_many(name, 16, &flat).unwrap();
+        }
+        c.sync().unwrap();
+        for name in ["banked", "slotted"] {
+            let stat = c.stat_snapshot(name).unwrap();
+            assert_eq!(stat.t, 16, "{name}");
+            assert!(stat.ess > 0.0, "{name}");
+            // The stat mean IS the snapshot value.
+            let snap = c.snapshot(name).unwrap();
+            assert_eq!(&stat.mean[..], &snap.value.unwrap()[..], "{name}");
+            assert!(stat.variance.iter().all(|&v| v > 0.0), "{name}");
+            assert_eq!(stat.stddev[0], stat.variance[0].sqrt());
+            assert!(stat.confidence_band[0] > 0.0);
+        }
+        // Handle-addressed path agrees; empty streams report ess 0.
+        let by_handle = c.stat_snapshot_handle(h).unwrap();
+        assert_eq!(by_handle, c.stat_snapshot("banked").unwrap());
+        c.register("empty", 1, gea()).unwrap();
+        let empty = c.stat_snapshot("empty").unwrap();
+        assert!(!empty.has_samples());
+        assert_eq!(empty.mean, vec![0.0]);
+    }
+
+    #[test]
+    fn multi_stat_resolves_entries_independently() {
+        let c = Coordinator::new(1, 64, BackpressurePolicy::Block);
+        let h = c.register("a", 1, gea()).unwrap();
+        c.push("a", vec![2.0]).unwrap();
+        c.sync().unwrap();
+        let out = c.multi_stat(&[
+            StreamRef::Handle(h),
+            StreamRef::Handle(h + 999),
+            StreamRef::Name("a".into()),
+            StreamRef::Name("ghost".into()),
+        ]);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].as_ref().unwrap().mean, vec![2.0]);
+        assert!(out[1].as_ref().unwrap_err().contains("handle"));
+        assert_eq!(out[2].as_ref().unwrap(), out[0].as_ref().unwrap());
+        assert!(out[3].as_ref().unwrap_err().contains("ghost"));
+        assert_eq!(
+            c.metrics().counter(names::MULTI_SNAPSHOT_ENTRIES).get(),
+            4
+        );
+    }
+
+    #[test]
+    fn query_selects_aggregates_and_ranks() {
+        use crate::analytics::Query;
+        let c = Coordinator::new(2, 256, BackpressurePolicy::Block);
+        // Three query-prefixed streams around level 0 and one outlier.
+        for (name, level) in [("q/a", 0.1), ("q/b", -0.1), ("q/outlier", 50.0)] {
+            c.register(name, 1, gea()).unwrap();
+            for i in 0..40 {
+                c.push(name, vec![level + (i as f64 * 0.7).sin() * 0.5]).unwrap();
+            }
+        }
+        c.register("other", 1, gea()).unwrap();
+        c.push("other", vec![9.0]).unwrap();
+        c.sync().unwrap();
+        // Prefix selection, sorted by name.
+        let r = c.query(&Query {
+            prefix: "q/".into(),
+            ..Query::default()
+        });
+        let names_got: Vec<&str> = r.stats.iter().map(|s| &*s.stream).collect();
+        assert_eq!(names_got, vec!["q/a", "q/b", "q/outlier"]);
+        assert!(r.aggregate.is_none());
+        // Aggregate pools all three; the pooled t is the total.
+        let r = c.query(&Query {
+            prefix: "q/".into(),
+            aggregate: true,
+            ..Query::default()
+        });
+        let agg = r.aggregate.expect("aggregate");
+        assert_eq!(r.aggregated, 3);
+        assert_eq!(agg.t, 120);
+        // Top-1 by deviation finds the outlier.
+        let r = c.query(&Query {
+            prefix: "q/".into(),
+            top_k: 1,
+            ..Query::default()
+        });
+        assert_eq!(r.stats.len(), 1);
+        assert_eq!(&*r.stats[0].stream, "q/outlier");
+        // Empty prefix selects everything.
+        let r = c.query(&Query::default());
+        assert_eq!(r.stats.len(), 4);
     }
 }

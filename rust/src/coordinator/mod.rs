@@ -52,5 +52,5 @@ pub mod stream;
 
 pub use self::core::{CheckpointReport, Coordinator, PushOutcome, RecoveryReport, Snapshot};
 pub use client::{Client, ClientError};
-pub use protocol::{MultiOutcome, ProtocolChoice, StreamInfo};
+pub use protocol::{MultiOutcome, ProtocolChoice, StatEntry, StatOutcome, StreamInfo};
 pub use server::Server;

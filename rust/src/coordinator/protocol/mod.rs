@@ -172,6 +172,48 @@ pub struct StreamInfo {
     pub dim: usize,
 }
 
+/// One stream's analytics row on the wire (`query`/`multi_snapshot`):
+/// the streamed weighted moments plus the server-computed confidence
+/// half-widths (`band = z·√(variance/ess)` per dim — the z the request
+/// carried). `ess == 0` marks a stream with no samples yet.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatEntry {
+    pub stream: String,
+    pub t: u64,
+    /// Nominal window `k_t` (summed across streams for an aggregate).
+    pub effective_window: f64,
+    /// Effective sample size `1/Σα²`.
+    pub ess: f64,
+    pub mean: Vec<f64>,
+    pub variance: Vec<f64>,
+    pub band: Vec<f64>,
+}
+
+impl StatEntry {
+    /// Wire form of an analytics [`crate::analytics::StatSnapshot`]
+    /// (stddev is derivable as `√variance`, so it stays off the wire).
+    pub fn from_snapshot(s: &crate::analytics::StatSnapshot) -> StatEntry {
+        StatEntry {
+            stream: s.stream.to_string(),
+            t: s.t,
+            effective_window: s.effective_window,
+            ess: s.ess,
+            mean: s.mean.clone(),
+            variance: s.variance.clone(),
+            band: s.confidence_band.clone(),
+        }
+    }
+}
+
+/// Per-entry outcome of a `multi_snapshot` (entries are independent:
+/// one stale handle must not reject its siblings).
+#[derive(Clone, Debug, PartialEq)]
+pub enum StatOutcome {
+    Stat(StatEntry),
+    /// Structured per-entry error (unknown name, stale handle).
+    Missing(String),
+}
+
 /// Client → server requests (codec-independent op model).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
@@ -227,6 +269,23 @@ pub enum Request {
         stream: StreamRef,
         state: Vec<u8>,
     },
+    /// Multi-stream analytics query: select streams by name prefix
+    /// (empty = all), compute moment stats with confidence bands at
+    /// multiplier `z`, optionally pool the cross-stream aggregate and
+    /// keep only the `top_k` most deviant streams (0 = all).
+    Query {
+        prefix: String,
+        z: f64,
+        top_k: u64,
+        aggregate: bool,
+    },
+    /// Stat snapshots for an explicit stream list in ONE frame —
+    /// handle-addressed under v2 (one registry read guard per frame,
+    /// like `multi_push`), name-addressed under v1. Entries succeed or
+    /// fail independently.
+    MultiSnapshot {
+        streams: Vec<StreamRef>,
+    },
 }
 
 /// Which op a request is — used to pick v2 tags and to interpret v1
@@ -248,6 +307,8 @@ pub enum OpKind {
     ExportState,
     Restore,
     MergeState,
+    Query,
+    MultiSnapshot,
 }
 
 impl Request {
@@ -267,6 +328,8 @@ impl Request {
             Request::ExportState { .. } => OpKind::ExportState,
             Request::Restore { .. } => OpKind::Restore,
             Request::MergeState { .. } => OpKind::MergeState,
+            Request::Query { .. } => OpKind::Query,
+            Request::MultiSnapshot { .. } => OpKind::MultiSnapshot,
         }
     }
 }
@@ -325,6 +388,19 @@ pub enum Response {
     },
     Merged {
         t: u64,
+    },
+    /// `query` answer: per-stream stats (name-sorted, or top-K order),
+    /// the pooled aggregate when requested, and how many streams the
+    /// pool absorbed.
+    QueryStats {
+        stats: Vec<StatEntry>,
+        aggregate: Option<StatEntry>,
+        aggregated: u64,
+    },
+    /// `multi_snapshot` answer: one independent outcome per entry, in
+    /// frame order.
+    MultiStats {
+        stats: Vec<StatOutcome>,
     },
 }
 

@@ -14,9 +14,47 @@
 //! missing `"v"` is accepted (pre-versioning peers speak the version-1
 //! wire format).
 
-use super::{OpKind, Request, Response, StreamInfo, StreamRef};
+use super::{OpKind, Request, Response, StatEntry, StatOutcome, StreamInfo, StreamRef};
 use crate::persist::codec;
 use crate::util::json::Json;
+
+/// JSON form of one analytics stat row (shared by `query` and
+/// `multi_snapshot` responses).
+fn stat_to_json(s: &StatEntry) -> Json {
+    Json::obj(vec![
+        ("stream", Json::Str(s.stream.clone())),
+        ("t", Json::Num(s.t as f64)),
+        ("effective_window", Json::Num(s.effective_window)),
+        ("ess", Json::Num(s.ess)),
+        ("mean", Json::nums(&s.mean)),
+        ("variance", Json::nums(&s.variance)),
+        ("band", Json::nums(&s.band)),
+    ])
+}
+
+fn stat_from_json(j: &Json) -> Result<StatEntry, String> {
+    let floats = |key: &str| -> Result<Vec<f64>, String> {
+        j.get(key)
+            .and_then(Json::to_f64_vec)
+            .ok_or_else(|| format!("stat entry missing '{key}'"))
+    };
+    Ok(StatEntry {
+        stream: j
+            .get("stream")
+            .and_then(Json::as_str)
+            .ok_or("stat entry missing 'stream'")?
+            .to_string(),
+        t: j.get("t").and_then(Json::as_u64).unwrap_or(0),
+        effective_window: j
+            .get("effective_window")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0),
+        ess: j.get("ess").and_then(Json::as_f64).unwrap_or(0.0),
+        mean: floats("mean")?,
+        variance: floats("variance")?,
+        band: floats("band")?,
+    })
+}
 
 /// Version of the request/response envelope this codec speaks.
 pub const PROTOCOL_VERSION: u64 = 1;
@@ -86,6 +124,28 @@ pub fn request_to_json(req: &Request) -> Result<Json, String> {
             ("stream", Json::Str(name_of(stream)?.to_string())),
             ("state", Json::Str(codec::to_hex(state))),
         ],
+        Request::Query {
+            prefix,
+            z,
+            top_k,
+            aggregate,
+        } => vec![
+            ("op", Json::Str("query".into())),
+            ("prefix", Json::Str(prefix.clone())),
+            ("z", Json::Num(*z)),
+            ("top_k", Json::Num(*top_k as f64)),
+            ("aggregate", Json::Bool(*aggregate)),
+        ],
+        Request::MultiSnapshot { streams } => {
+            let names = streams
+                .iter()
+                .map(|r| Ok(Json::Str(name_of(r)?.to_string())))
+                .collect::<Result<Vec<_>, String>>()?;
+            vec![
+                ("op", Json::Str("multi_snapshot".into())),
+                ("streams", Json::Arr(names)),
+            ]
+        }
     };
     fields.push(("v", Json::Num(PROTOCOL_VERSION as f64)));
     Ok(Json::obj(fields))
@@ -206,6 +266,34 @@ pub fn request_from_json(j: &Json) -> Result<Request, String> {
         "merge_state" => Ok(Request::MergeState {
             stream: stream_ref()?,
             state: state()?,
+        }),
+        "query" => Ok(Request::Query {
+            prefix: j
+                .get("prefix")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            z: j.get("z")
+                .and_then(Json::as_f64)
+                .unwrap_or(crate::analytics::DEFAULT_Z),
+            top_k: j.get("top_k").and_then(Json::as_u64).unwrap_or(0),
+            aggregate: j
+                .get("aggregate")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+        }),
+        "multi_snapshot" => Ok(Request::MultiSnapshot {
+            streams: j
+                .get("streams")
+                .and_then(Json::as_arr)
+                .ok_or("multi_snapshot missing 'streams'")?
+                .iter()
+                .map(|s| {
+                    s.as_str()
+                        .map(|n| StreamRef::Name(n.to_string()))
+                        .ok_or_else(|| "multi_snapshot streams must be names".to_string())
+                })
+                .collect::<Result<Vec<_>, _>>()?,
         }),
         other => Err(format!("unknown op '{other}'")),
     }
@@ -329,6 +417,43 @@ pub fn response_to_json(resp: &Response) -> Json {
         Response::Restored { t } | Response::Merged { t } => {
             ok_response(vec![("t", Json::Num(*t as f64))])
         }
+        Response::QueryStats {
+            stats,
+            aggregate,
+            aggregated,
+        } => ok_response(vec![
+            ("stats", Json::Arr(stats.iter().map(stat_to_json).collect())),
+            (
+                "aggregate",
+                match aggregate {
+                    Some(a) => stat_to_json(a),
+                    None => Json::Null,
+                },
+            ),
+            ("aggregated", Json::Num(*aggregated as f64)),
+        ]),
+        Response::MultiStats { stats } => ok_response(vec![(
+            "stats",
+            Json::Arr(
+                stats
+                    .iter()
+                    .map(|o| match o {
+                        StatOutcome::Stat(s) => {
+                            let mut obj = match stat_to_json(s) {
+                                Json::Obj(m) => m,
+                                _ => unreachable!("stat_to_json builds objects"),
+                            };
+                            obj.insert("ok".to_string(), Json::Bool(true));
+                            Json::Obj(obj)
+                        }
+                        StatOutcome::Missing(e) => Json::obj(vec![
+                            ("ok", Json::Bool(false)),
+                            ("error", Json::Str(e.clone())),
+                        ]),
+                    })
+                    .collect(),
+            ),
+        )]),
     }
 }
 
@@ -466,6 +591,38 @@ pub fn response_from_json(kind: OpKind, j: &Json) -> Result<Response, String> {
         }),
         OpKind::Restore => Ok(Response::Restored { t: t() }),
         OpKind::MergeState => Ok(Response::Merged { t: t() }),
+        OpKind::Query => Ok(Response::QueryStats {
+            stats: j
+                .get("stats")
+                .and_then(Json::as_arr)
+                .ok_or("query response missing 'stats'")?
+                .iter()
+                .map(stat_from_json)
+                .collect::<Result<Vec<_>, _>>()?,
+            aggregate: match j.get("aggregate") {
+                Some(Json::Null) | None => None,
+                Some(a) => Some(stat_from_json(a)?),
+            },
+            aggregated: j.get("aggregated").and_then(Json::as_u64).unwrap_or(0),
+        }),
+        OpKind::MultiSnapshot => Ok(Response::MultiStats {
+            stats: j
+                .get("stats")
+                .and_then(Json::as_arr)
+                .ok_or("multi_snapshot response missing 'stats'")?
+                .iter()
+                .map(|o| match o.get("ok").and_then(Json::as_bool) {
+                    Some(true) => Ok(StatOutcome::Stat(stat_from_json(o)?)),
+                    Some(false) => Ok(StatOutcome::Missing(
+                        o.get("error")
+                            .and_then(Json::as_str)
+                            .unwrap_or("unknown server error")
+                            .to_string(),
+                    )),
+                    None => Err("multi_snapshot entry missing 'ok'".to_string()),
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+        }),
     }
 }
 
@@ -509,6 +666,15 @@ mod tests {
             Request::MergeState {
                 stream: nref("w"),
                 state: vec![0x41, 0x54],
+            },
+            Request::Query {
+                prefix: "layer".into(),
+                z: 2.5,
+                top_k: 3,
+                aggregate: true,
+            },
+            Request::MultiSnapshot {
+                streams: vec![nref("a"), nref("b")],
             },
         ];
         for r in reqs {
@@ -672,6 +838,47 @@ mod tests {
             response_from_json(OpKind::Resolve, &j).unwrap(),
             Response::Resolved { handle: 7, dim: 2 }
         );
+    }
+
+    #[test]
+    fn analytics_responses_roundtrip_with_full_float_precision() {
+        // The 1e-12 cross-protocol equivalence rests on the JSON number
+        // encoder being shortest-roundtrip: these exact values must
+        // survive the envelope bit-for-bit.
+        let entry = StatEntry {
+            stream: "q/a".into(),
+            t: 41,
+            effective_window: 20.5,
+            ess: 17.333333333333332,
+            mean: vec![0.1 + 0.2, -1.0 / 3.0],
+            variance: vec![2.0_f64.sqrt(), 1e-17],
+            band: vec![0.123456789012345678, 4.0],
+        };
+        let resp = Response::QueryStats {
+            stats: vec![entry.clone()],
+            aggregate: Some(entry.clone()),
+            aggregated: 1,
+        };
+        let j = response_to_json(&resp);
+        assert_eq!(response_from_json(OpKind::Query, &j).unwrap(), resp);
+        // No-aggregate form keeps the JSON null.
+        let resp = Response::QueryStats {
+            stats: vec![],
+            aggregate: None,
+            aggregated: 0,
+        };
+        let j = response_to_json(&resp);
+        assert_eq!(j.get("aggregate"), Some(&Json::Null));
+        assert_eq!(response_from_json(OpKind::Query, &j).unwrap(), resp);
+        // Mixed multi_snapshot outcomes survive per entry.
+        let resp = Response::MultiStats {
+            stats: vec![
+                StatOutcome::Stat(entry),
+                StatOutcome::Missing("no stream 'ghost' (register it first)".into()),
+            ],
+        };
+        let j = response_to_json(&resp);
+        assert_eq!(response_from_json(OpKind::MultiSnapshot, &j).unwrap(), resp);
     }
 
     #[test]

@@ -30,7 +30,10 @@
 //! [`super::MAX_FRAME`]), and trailing garbage after a well-formed
 //! request is rejected — the fuzz suite drives both properties.
 
-use super::{MultiOutcome, MultiPushEntry, OpKind, Request, Response, StreamInfo, StreamRef};
+use super::{
+    MultiOutcome, MultiPushEntry, OpKind, Request, Response, StatEntry, StatOutcome, StreamInfo,
+    StreamRef,
+};
 use crate::persist::codec::{Dec, Enc};
 use crate::util::json::Json;
 
@@ -49,6 +52,8 @@ const OP_CHECKPOINT: u8 = 11;
 const OP_EXPORT_STATE: u8 = 12;
 const OP_RESTORE: u8 = 13;
 const OP_MERGE_STATE: u8 = 14;
+const OP_QUERY: u8 = 15;
+const OP_MULTI_SNAPSHOT: u8 = 16;
 
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
@@ -69,7 +74,43 @@ fn op_tag(kind: OpKind) -> u8 {
         OpKind::ExportState => OP_EXPORT_STATE,
         OpKind::Restore => OP_RESTORE,
         OpKind::MergeState => OP_MERGE_STATE,
+        OpKind::Query => OP_QUERY,
+        OpKind::MultiSnapshot => OP_MULTI_SNAPSHOT,
     }
+}
+
+/// Binary form of one analytics stat row: name, `t`, window, ESS, dim,
+/// then mean/variance/band as raw little-endian f64 runs.
+fn put_stat(e: &mut Enc, s: &StatEntry) -> Result<(), String> {
+    e.put_str(&s.stream);
+    e.put_u64(s.t);
+    e.put_f64(s.effective_window);
+    e.put_f64(s.ess);
+    e.put_u32(u32_field("stat dim", s.mean.len())?);
+    if s.variance.len() != s.mean.len() || s.band.len() != s.mean.len() {
+        return Err("stat entry has mismatched column lengths".into());
+    }
+    e.put_f64_raw(&s.mean);
+    e.put_f64_raw(&s.variance);
+    e.put_f64_raw(&s.band);
+    Ok(())
+}
+
+fn get_stat(d: &mut Dec<'_>) -> Result<StatEntry, String> {
+    let stream = d.get_str()?;
+    let t = d.get_u64()?;
+    let effective_window = d.get_f64()?;
+    let ess = d.get_f64()?;
+    let dim = d.get_u32()? as usize;
+    Ok(StatEntry {
+        stream,
+        t,
+        effective_window,
+        ess,
+        mean: d.get_f64_raw(dim)?,
+        variance: d.get_f64_raw(dim)?,
+        band: d.get_f64_raw(dim)?,
+    })
 }
 
 /// A `usize` that must fit the wire's u32 fields (counts, lengths,
@@ -139,6 +180,23 @@ pub fn encode_request(seq: u64, req: &Request, out: &mut Vec<u8>) -> Result<(), 
         Request::Restore { stream, state } | Request::MergeState { stream, state } => {
             e.put_u64(handle_of(stream)?);
             e.put_bytes(state);
+        }
+        Request::Query {
+            prefix,
+            z,
+            top_k,
+            aggregate,
+        } => {
+            e.put_str(prefix);
+            e.put_f64(*z);
+            e.put_u64(*top_k);
+            e.put_u8(*aggregate as u8);
+        }
+        Request::MultiSnapshot { streams } => {
+            e.put_u32(u32_field("entry count", streams.len())?);
+            for s in streams {
+                e.put_u64(handle_of(s)?);
+            }
         }
     }
     *out = e.into_bytes();
@@ -260,6 +318,22 @@ pub fn decode_request(payload: &[u8]) -> Result<(u64, Request), String> {
             stream: StreamRef::Handle(d.get_u64()?),
             state: d.get_bytes()?.to_vec(),
         },
+        OP_QUERY => Request::Query {
+            prefix: d.get_str()?,
+            z: d.get_f64()?,
+            top_k: d.get_u64()?,
+            aggregate: d.get_u8()? != 0,
+        },
+        OP_MULTI_SNAPSHOT => {
+            let n = d.get_u32()? as usize;
+            // No pre-reservation from the wire-claimed count (hostile n
+            // must run out of payload bytes, not memory).
+            let mut streams = Vec::new();
+            for _ in 0..n {
+                streams.push(StreamRef::Handle(d.get_u64()?));
+            }
+            Request::MultiSnapshot { streams }
+        }
         other => return Err(format!("unknown v2 op tag {other}")),
     };
     if d.remaining() != 0 {
@@ -379,6 +453,41 @@ pub fn encode_response(seq: u64, resp: &Response, out: &mut Vec<u8>) -> Result<(
                     e.put_u8(OP_MERGE_STATE);
                     e.put_u64(*t);
                 }
+                Response::QueryStats {
+                    stats,
+                    aggregate,
+                    aggregated,
+                } => {
+                    e.put_u8(OP_QUERY);
+                    e.put_u32(u32_field("stat count", stats.len())?);
+                    for s in stats {
+                        put_stat(&mut e, s)?;
+                    }
+                    match aggregate {
+                        Some(a) => {
+                            e.put_u8(1);
+                            put_stat(&mut e, a)?;
+                        }
+                        None => e.put_u8(0),
+                    }
+                    e.put_u64(*aggregated);
+                }
+                Response::MultiStats { stats } => {
+                    e.put_u8(OP_MULTI_SNAPSHOT);
+                    e.put_u32(u32_field("outcome count", stats.len())?);
+                    for o in stats {
+                        match o {
+                            StatOutcome::Stat(s) => {
+                                e.put_u8(0);
+                                put_stat(&mut e, s)?;
+                            }
+                            StatOutcome::Missing(msg) => {
+                                e.put_u8(1);
+                                e.put_str(msg);
+                            }
+                        }
+                    }
+                }
             }
         }
     }
@@ -495,6 +604,36 @@ pub fn decode_response(kind: OpKind, payload: &[u8]) -> Result<(u64, Response), 
         },
         OP_RESTORE => Response::Restored { t: d.get_u64()? },
         OP_MERGE_STATE => Response::Merged { t: d.get_u64()? },
+        OP_QUERY => {
+            let n = d.get_u32()? as usize;
+            let mut stats = Vec::new();
+            for _ in 0..n {
+                stats.push(get_stat(&mut d)?);
+            }
+            let aggregate = match d.get_u8()? {
+                0 => None,
+                _ => Some(get_stat(&mut d)?),
+            };
+            Response::QueryStats {
+                stats,
+                aggregate,
+                aggregated: d.get_u64()?,
+            }
+        }
+        OP_MULTI_SNAPSHOT => {
+            let n = d.get_u32()? as usize;
+            let mut stats = Vec::new();
+            for _ in 0..n {
+                stats.push(match d.get_u8()? {
+                    0 => StatOutcome::Stat(get_stat(&mut d)?),
+                    1 => StatOutcome::Missing(d.get_str()?),
+                    other => {
+                        return Err(format!("unknown multi_snapshot outcome tag {other}"))
+                    }
+                });
+            }
+            Response::MultiStats { stats }
+        }
         other => return Err(format!("unknown v2 response op tag {other}")),
     };
     if d.remaining() != 0 {
@@ -562,6 +701,15 @@ mod tests {
             Request::MergeState {
                 stream: href(3),
                 state: vec![],
+            },
+            Request::Query {
+                prefix: "layer0.".into(),
+                z: 1.959963984540054,
+                top_k: 5,
+                aggregate: true,
+            },
+            Request::MultiSnapshot {
+                streams: vec![href(1), href(u64::MAX), href(3)],
             },
         ];
         for (i, r) in reqs.into_iter().enumerate() {
@@ -648,6 +796,55 @@ mod tests {
             ),
             (OpKind::Restore, Response::Restored { t: 20 }),
             (OpKind::MergeState, Response::Merged { t: 33 }),
+            (
+                OpKind::Query,
+                Response::QueryStats {
+                    stats: vec![StatEntry {
+                        stream: "q/a".into(),
+                        t: 40,
+                        effective_window: 20.0,
+                        ess: 19.5,
+                        mean: vec![1.5, -2.5],
+                        variance: vec![0.25, f64::MIN_POSITIVE],
+                        band: vec![0.125, 0.0],
+                    }],
+                    aggregate: Some(StatEntry {
+                        stream: "<aggregate>".into(),
+                        t: 40,
+                        effective_window: 20.0,
+                        ess: 19.5,
+                        mean: vec![1.5, -2.5],
+                        variance: vec![0.25, 0.0],
+                        band: vec![0.125, 0.0],
+                    }),
+                    aggregated: 1,
+                },
+            ),
+            (
+                OpKind::Query,
+                Response::QueryStats {
+                    stats: vec![],
+                    aggregate: None,
+                    aggregated: 0,
+                },
+            ),
+            (
+                OpKind::MultiSnapshot,
+                Response::MultiStats {
+                    stats: vec![
+                        StatOutcome::Stat(StatEntry {
+                            stream: "w".into(),
+                            t: 3,
+                            effective_window: 3.0,
+                            ess: 3.0,
+                            mean: vec![2.0],
+                            variance: vec![0.5],
+                            band: vec![0.8],
+                        }),
+                        StatOutcome::Missing("no stream with handle 9".into()),
+                    ],
+                },
+            ),
         ];
         for (kind, resp) in cases {
             let mut buf = Vec::new();

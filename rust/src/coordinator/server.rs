@@ -12,7 +12,8 @@
 
 use super::core::{Coordinator, PushOutcome};
 use super::protocol::{
-    self, v1, wire, ProtocolChoice, Request, Response, StreamInfo, StreamRef, Wire,
+    self, v1, wire, ProtocolChoice, Request, Response, StatEntry, StatOutcome, StreamInfo,
+    StreamRef, Wire,
 };
 use crate::averagers::AveragerSpec;
 use crate::metrics::{names, Counter};
@@ -546,5 +547,38 @@ fn dispatch(req: Request, c: &Coordinator) -> Response {
                 Err(e) => Response::Err(e),
             }
         }
+        Request::Query {
+            prefix,
+            z,
+            top_k,
+            aggregate,
+        } => {
+            if !z.is_finite() || z < 0.0 {
+                return Response::Err(format!(
+                    "query requires a finite nonnegative z, got {z}"
+                ));
+            }
+            let r = c.query(&crate::analytics::Query {
+                prefix,
+                z,
+                top_k: top_k as usize,
+                aggregate,
+            });
+            Response::QueryStats {
+                stats: r.stats.iter().map(StatEntry::from_snapshot).collect(),
+                aggregate: r.aggregate.as_ref().map(StatEntry::from_snapshot),
+                aggregated: r.aggregated as u64,
+            }
+        }
+        Request::MultiSnapshot { streams } => Response::MultiStats {
+            stats: c
+                .multi_stat(&streams)
+                .into_iter()
+                .map(|r| match r {
+                    Ok(s) => StatOutcome::Stat(StatEntry::from_snapshot(&s)),
+                    Err(e) => StatOutcome::Missing(e),
+                })
+                .collect(),
+        },
     }
 }

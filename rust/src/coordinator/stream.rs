@@ -59,6 +59,13 @@ impl StreamState {
         self.averager.value_into(out)
     }
 
+    /// Streamed weighted moments (see [`Averager::moments_into`]):
+    /// writes mean + variance, returns the effective sample size, or
+    /// `None` before any sample. The analytics query path.
+    pub fn moments_into(&self, mean: &mut [f64], variance: &mut [f64]) -> Option<f64> {
+        self.averager.moments_into(mean, variance)
+    }
+
     pub fn t(&self) -> u64 {
         self.averager.t()
     }

@@ -39,6 +39,19 @@
 //! this path; batched-vs-sequential and bank-vs-slot equivalence are
 //! property-tested to 1e-12 for every estimator family.
 //!
+//! ## Anytime analytics
+//!
+//! Every estimator natively tracks the second raw moment of its
+//! weighted tail ([`averagers::Averager::moments_into`]): an `x²` twin
+//! of the value accumulators updated with the identical recurrence, so
+//! weighted variance and effective sample size (`ESS = 1/Σα²`) stream
+//! in O(d) without replay. The [`analytics`] layer turns those moments
+//! into [`analytics::StatSnapshot`]s (mean ± confidence band over the
+//! effective window), pools them across streams with the ESS-weighted
+//! parallel-Welford combine, and ranks deviants — served through the
+//! coordinator's `query`/`multi_snapshot` wire ops (both protocol
+//! generations, results identical to 1e-12) and the `ata query` CLI.
+//!
 //! ## Durable state
 //!
 //! Constant-memory estimators cannot be recomputed after a crash
@@ -102,6 +115,7 @@
 //! avg.value_into(&mut out);
 //! assert!(out[0].abs() < 1.0);
 //! ```
+pub mod analytics;
 pub mod averagers;
 pub mod benchkit;
 pub mod config;

@@ -5,6 +5,8 @@
 //!                [--runs 100] [--csv out.csv] [--json out.json]
 //! ata serve      [--config svc.toml] [--addr 127.0.0.1:7311]
 //! ata client     <ping|list|snapshot|metrics> [--addr ...] [--stream s]
+//! ata query      [--prefix p] [--streams a,b] [--z 1.96] [--top-k 5]
+//!                [--aggregate]          # moment stats + confidence bands
 //! ata checkpoint [--addr ...]           # snapshot a running service
 //! ata restore    --dir state [...]      # offline crash recovery + report
 //! ata artifacts  [--dir artifacts]      # validate AOT artifacts load+run
@@ -62,6 +64,7 @@ fn top_help() -> String {
          \x20 experiment   run the paper's §4 experiments (figures 2/3 or a config)\n\
          \x20 serve        start the averaging coordinator TCP service\n\
          \x20 client       talk to a running service\n\
+         \x20 query        anytime analytics: mean ± band, ESS, top-K deviants\n\
          \x20 checkpoint   snapshot a running durable service over the wire\n\
          \x20 restore      offline crash recovery of a persist directory\n\
          \x20 artifacts    validate the AOT artifacts (load + execute)\n\
@@ -80,6 +83,7 @@ fn run(args: &[String]) -> Result<(), CliRunError> {
         "experiment" => cmd_experiment(rest),
         "serve" => cmd_serve(rest),
         "client" => cmd_client(rest),
+        "query" => cmd_query(rest),
         "checkpoint" => cmd_checkpoint(rest),
         "restore" => cmd_restore(rest),
         "artifacts" => cmd_artifacts(rest),
@@ -237,6 +241,91 @@ fn cmd_serve(args: &[String]) -> Result<(), CliRunError> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_query(args: &[String]) -> Result<(), CliRunError> {
+    let spec = CommandSpec::new(
+        "query",
+        "anytime analytics over a running service: mean ± confidence band, ESS, top-K deviants",
+    )
+    .opt("addr", "127.0.0.1:7311", "server address")
+    .opt("prefix", "", "stream-name prefix filter (empty = every stream)")
+    .opt(
+        "streams",
+        "",
+        "comma-separated explicit stream list (one multi_snapshot frame; \
+         overrides --prefix and ignores --z/--top-k/--aggregate)",
+    )
+    .opt("z", "1.96", "confidence-band multiplier (prefix mode)")
+    .opt("top-k", "0", "keep only the K most deviant streams (0 = all; prefix mode)")
+    .flag("aggregate", "also report the cross-stream pooled aggregate (prefix mode)")
+    .opt("protocol", "auto", "wire codec: auto | v1 | v2");
+    let p = parse_with(&spec, args)?;
+    let mut client = Client::connect_with(
+        &p.str("addr"),
+        ProtocolChoice::parse(&p.str("protocol"))?,
+    )?;
+    let streams = p.str("streams");
+    if !streams.is_empty() {
+        if p.flag("aggregate") || p.u64("top-k").map_err(|e| e.to_string())? > 0 {
+            eprintln!(
+                "note: --aggregate/--top-k apply to prefix queries only and are \
+                 ignored with --streams"
+            );
+        }
+        let names: Vec<&str> = streams
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .collect();
+        for (name, r) in names.iter().zip(client.multi_snapshot(&names)?) {
+            match r {
+                Ok(s) => print_stat(&s),
+                Err(e) => println!("{name}\terror: {e}"),
+            }
+        }
+        return Ok(());
+    }
+    let (stats, aggregate) = client.query(
+        &p.str("prefix"),
+        p.f64("z").map_err(|e| e.to_string())?,
+        p.u64("top-k").map_err(|e| e.to_string())?,
+        p.flag("aggregate"),
+    )?;
+    if stats.is_empty() {
+        println!("no streams matched");
+    }
+    for s in &stats {
+        print_stat(s);
+    }
+    if let Some(a) = aggregate {
+        println!("--");
+        print_stat(&a);
+    }
+    Ok(())
+}
+
+/// One analytics row: `name  t/k_eff/ess  mean±band per dim`.
+fn print_stat(s: &ata::coordinator::StatEntry) {
+    if s.ess <= 0.0 {
+        println!("{}\tt=0 <no samples>", s.stream);
+        return;
+    }
+    let cols = s.mean.len().min(4);
+    let mut vals = String::new();
+    for i in 0..cols {
+        if i > 0 {
+            vals.push_str("  ");
+        }
+        vals.push_str(&format!("{:+.5}±{:.5}", s.mean[i], s.band[i]));
+    }
+    if s.mean.len() > cols {
+        vals.push_str(&format!("  … ({} dims)", s.mean.len()));
+    }
+    println!(
+        "{}\tt={} k_eff={:.1} ess={:.1}\t{}",
+        s.stream, s.t, s.effective_window, s.ess, vals
+    );
 }
 
 fn cmd_checkpoint(args: &[String]) -> Result<(), CliRunError> {

@@ -38,6 +38,16 @@ use std::sync::{Arc, Mutex};
 ///   of being written (which would have killed the peer's read loop).
 /// * [`names::MULTI_PUSH_ENTRIES`] — per-stream batches staged through
 ///   the v2 `multi_push` fan-in op.
+///
+/// The analytics layer adds its own family:
+///
+/// * [`names::STAT_QUERIES`] — per-stream stat snapshots computed
+///   (every `stat_snapshot`/`multi_snapshot` entry and every stream a
+///   `query` read).
+/// * [`names::MULTI_SNAPSHOT_ENTRIES`] — entries carried by
+///   `multi_snapshot` fan-in frames.
+/// * [`names::QUERY_STREAMS_MATCHED`] — streams matched by `query`
+///   prefix selections.
 pub mod names {
     pub const WAL_APPENDED_BYTES: &str = "wal_appended_bytes";
     pub const WAL_FSYNC_NANOS: &str = "wal_fsync_nanos";
@@ -49,6 +59,9 @@ pub mod names {
     pub const FRAMES_OUT: &str = "wire_frames_out";
     pub const OVERSIZED_RESPONSES: &str = "wire_oversized_responses";
     pub const MULTI_PUSH_ENTRIES: &str = "multi_push_entries";
+    pub const STAT_QUERIES: &str = "stat_queries";
+    pub const MULTI_SNAPSHOT_ENTRIES: &str = "multi_snapshot_entries";
+    pub const QUERY_STREAMS_MATCHED: &str = "query_streams_matched";
 }
 
 /// Monotone event counter.

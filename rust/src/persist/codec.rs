@@ -33,7 +33,14 @@ pub const SNAPSHOT_MAGIC: &[u8; 4] = b"ATAS";
 pub const WAL_MAGIC: &[u8; 4] = b"ATAW";
 /// Current on-disk format version (shared by snapshots, WAL and framed
 /// state payloads; bump on any layout change).
-pub const FORMAT_VERSION: u16 = 1;
+///
+/// v2: every estimator payload carries its moment side state (`x²`
+/// accumulator twins; TrueWindow additionally ships its live `Σx`/`Σx²`
+/// and resum countdown). v1 payloads decode differently, so they are
+/// rejected with a version error instead of misparsing — a v1 persist
+/// directory needs the previous release to drain (checkpoint, export)
+/// before upgrading.
+pub const FORMAT_VERSION: u16 = 2;
 
 /// Estimator kind tags of the canonical state payloads.
 pub mod tag {

@@ -1,0 +1,353 @@
+//! Property tests of the anytime analytics layer: every estimator's
+//! STREAMED moments (mean, weighted variance, ESS) must match an O(n)
+//! batch recomputation over its reconstructed weight profile to 1e-9,
+//! be shift/scale-equivariant, collapse to zero variance on constant
+//! streams, and combine associatively under the parallel-Welford merge.
+
+use ata::analytics::{self, StatSnapshot, DEFAULT_Z};
+use ata::averagers::{reconstruct_weights, AveragerSpec, WindowKind};
+use ata::testkit::Runner;
+use std::sync::Arc;
+
+/// Every `AveragerSpec` variant, both window kinds where applicable —
+/// the full 8-estimator matrix the acceptance criteria name.
+fn all_specs() -> Vec<AveragerSpec> {
+    vec![
+        AveragerSpec::Exp { gamma: 0.85 },
+        AveragerSpec::ExpK { k: 12 },
+        AveragerSpec::Gea { c: 0.5 },
+        AveragerSpec::Awa {
+            window: WindowKind::Fixed { k: 9 },
+            accumulators: 2,
+        },
+        AveragerSpec::Awa {
+            window: WindowKind::Growing { c: 0.4 },
+            accumulators: 3,
+        },
+        AveragerSpec::True {
+            window: WindowKind::Fixed { k: 11 },
+        },
+        AveragerSpec::True {
+            window: WindowKind::Growing { c: 0.5 },
+        },
+        AveragerSpec::Raw {
+            c: 0.5,
+            total_steps: 200,
+        },
+        AveragerSpec::Restart {
+            window: WindowKind::Fixed { k: 7 },
+        },
+        AveragerSpec::Eh {
+            window: WindowKind::Fixed { k: 40 },
+            eps: 0.1,
+        },
+    ]
+}
+
+/// Deterministic dim-`d` test stream (same value per dim offset).
+fn sample(t: u64, i: usize) -> f64 {
+    ((t as f64) * 0.379 + (i as f64) * 1.1).sin() * 3.0 + ((t as f64) * 0.05).cos()
+}
+
+fn close(got: f64, want: f64, tol: f64, ctx: &str) {
+    assert!(
+        (got - want).abs() <= tol * want.abs().max(1.0),
+        "{ctx}: got {got}, want {want}"
+    );
+}
+
+/// The acceptance criterion: streamed variance/ESS equal an O(n) batch
+/// recomputation of the same weighted tail — the weights reconstructed
+/// generically by unit-impulse replay, so the closed forms inside each
+/// estimator are cross-checked against ground truth.
+#[test]
+fn streamed_moments_match_batch_recomputation_every_spec() {
+    let d = 2usize;
+    let checkpoints = [1u64, 2, 3, 5, 13, 40, 90, 160];
+    for spec in all_specs() {
+        let label = spec.label();
+        let mut avg = spec.build(d).unwrap();
+        // Mixed scalar/batched feeding so both ingest paths contribute.
+        let mut fed = 0u64;
+        let mut xs: Vec<Vec<f64>> = Vec::new(); // per-step samples
+        for &cp in &checkpoints {
+            let run_len = (cp - fed) as usize;
+            let mut flat = Vec::with_capacity(run_len * d);
+            for s in 0..run_len {
+                let t = fed + s as u64 + 1;
+                let x: Vec<f64> = (0..d).map(|i| sample(t, i)).collect();
+                flat.extend_from_slice(&x);
+                xs.push(x);
+            }
+            if run_len % 2 == 1 && run_len > 0 {
+                avg.observe(&flat[..d]);
+                if run_len > 1 {
+                    avg.observe_many(&flat[d..], run_len - 1);
+                }
+            } else if run_len > 0 {
+                avg.observe_many(&flat, run_len);
+            }
+            fed = cp;
+
+            // Batch oracle: α from unit-impulse reconstruction.
+            let w = reconstruct_weights(&spec, cp)
+                .unwrap_or_else(|e| panic!("{label}: weights at t={cp}: {e}"));
+            assert_eq!(w.len(), cp as usize);
+            let sum_sq: f64 = w.iter().map(|&a| a * a).sum();
+            let want_ess = 1.0 / sum_sq;
+            let (mut mean, mut var) = (vec![0.0; d], vec![0.0; d]);
+            let ess = avg
+                .moments_into(&mut mean, &mut var)
+                .unwrap_or_else(|| panic!("{label}: no moments at t={cp}"));
+            close(ess, want_ess, 1e-9, &format!("{label} t={cp} ess"));
+            for dim in 0..d {
+                let want_mean: f64 =
+                    w.iter().zip(&xs).map(|(&a, x)| a * x[dim]).sum();
+                let want_var: f64 = w
+                    .iter()
+                    .zip(&xs)
+                    .map(|(&a, x)| a * (x[dim] - want_mean) * (x[dim] - want_mean))
+                    .sum();
+                close(
+                    mean[dim],
+                    want_mean,
+                    1e-9,
+                    &format!("{label} t={cp} mean[{dim}]"),
+                );
+                close(
+                    var[dim],
+                    want_var,
+                    1e-9,
+                    &format!("{label} t={cp} var[{dim}]"),
+                );
+            }
+            // The moment mean is the estimate itself.
+            let value = avg.value().expect("value");
+            for dim in 0..d {
+                close(
+                    mean[dim],
+                    value[dim],
+                    1e-12,
+                    &format!("{label} t={cp} mean==value[{dim}]"),
+                );
+            }
+        }
+    }
+}
+
+/// x → a·x + b must map mean → a·mean + b, variance → a²·variance, and
+/// leave the ESS untouched (the weights don't see the data).
+#[test]
+fn moments_are_shift_scale_equivariant() {
+    let transforms = [(2.5, -1.75), (-0.5, 3.0), (1.0, 100.0)];
+    for spec in all_specs() {
+        let label = spec.label();
+        for &(a, b) in &transforms {
+            let mut base = spec.build(1).unwrap();
+            let mut mapped = spec.build(1).unwrap();
+            for t in 1..=150u64 {
+                let x = sample(t, 0);
+                base.observe_scalar(x);
+                mapped.observe_scalar(a * x + b);
+            }
+            let (mut m0, mut v0) = ([0.0], [0.0]);
+            let (mut m1, mut v1) = ([0.0], [0.0]);
+            let e0 = base.moments_into(&mut m0, &mut v0).expect("base moments");
+            let e1 = mapped.moments_into(&mut m1, &mut v1).expect("mapped moments");
+            close(e1, e0, 1e-12, &format!("{label} a={a} ess"));
+            close(m1[0], a * m0[0] + b, 1e-9, &format!("{label} a={a} mean"));
+            close(v1[0], a * a * v0[0], 1e-7, &format!("{label} a={a} var"));
+        }
+    }
+}
+
+/// A constant stream is a fixed point with exactly zero spread.
+#[test]
+fn constant_stream_variance_is_zero_every_spec() {
+    for spec in all_specs() {
+        let label = spec.label();
+        let mut avg = spec.build(2).unwrap();
+        for _ in 0..300 {
+            avg.observe(&[7.5, -2.25]);
+        }
+        let (mut m, mut v) = ([0.0; 2], [0.0; 2]);
+        let ess = avg.moments_into(&mut m, &mut v).expect("moments");
+        close(m[0], 7.5, 1e-9, &format!("{label} mean[0]"));
+        close(m[1], -2.25, 1e-9, &format!("{label} mean[1]"));
+        assert!(
+            v[0] < 1e-9 && v[1] < 1e-9,
+            "{label}: constant stream variance {v:?}"
+        );
+        assert!(
+            ess >= 1.0 - 1e-9 && ess <= 301.0,
+            "{label}: ess {ess} out of range"
+        );
+    }
+}
+
+/// The cross-stream aggregation rule: ESS-weighted parallel-Welford
+/// combine must equal the direct pooled computation over the weighted
+/// union, and fold associatively (left fold == right fold == oracle) —
+/// the property the coordinator's `query` aggregation rests on.
+#[test]
+fn welford_merge_is_associative_and_matches_direct_pooling() {
+    Runner::new("welford merge associativity", 0xA66).run(120, |g| {
+        let d = g.usize_range(1, 3);
+        let k = g.usize_range(2, 6);
+        // Random per-group (ess, mean, var) snapshots.
+        let snaps: Vec<StatSnapshot> = (0..k)
+            .map(|j| {
+                let ess = g.f64_range(0.5, 40.0);
+                let mean: Vec<f64> = (0..d).map(|_| g.f64_range(-5.0, 5.0)).collect();
+                let var: Vec<f64> = (0..d).map(|_| g.f64_range(0.0, 4.0)).collect();
+                StatSnapshot::from_moments(
+                    Arc::from(format!("s{j}").as_str()),
+                    10,
+                    10.0,
+                    ess,
+                    mean,
+                    var,
+                    DEFAULT_Z,
+                )
+            })
+            .collect();
+        // Direct pooled oracle over the weighted union.
+        let w_total: f64 = snaps.iter().map(|s| s.ess).sum();
+        let mut want_mean = vec![0.0; d];
+        let mut want_var = vec![0.0; d];
+        for i in 0..d {
+            want_mean[i] =
+                snaps.iter().map(|s| s.ess * s.mean[i]).sum::<f64>() / w_total;
+            want_var[i] = snaps
+                .iter()
+                .map(|s| {
+                    s.ess
+                        * (s.variance[i]
+                            + (s.mean[i] - want_mean[i]) * (s.mean[i] - want_mean[i]))
+                })
+                .sum::<f64>()
+                / w_total;
+        }
+        // Left fold, right fold, and the aggregate() helper.
+        let left = snaps
+            .iter()
+            .skip(1)
+            .fold(snaps[0].clone(), |acc, s| {
+                analytics::merge_snapshots(&acc, s, DEFAULT_Z)
+            });
+        let right = snaps
+            .iter()
+            .rev()
+            .skip(1)
+            .fold(snaps[k - 1].clone(), |acc, s| {
+                analytics::merge_snapshots(s, &acc, DEFAULT_Z)
+            });
+        let (agg, pooled) = analytics::aggregate(&snaps, DEFAULT_Z);
+        let agg = agg.ok_or("aggregate missing")?;
+        if pooled != k {
+            return Err(format!("pooled {pooled} of {k}"));
+        }
+        for m in [&left, &right, &agg] {
+            ata::testkit::assert_close(m.ess, w_total, 1e-9, "ess")?;
+            for i in 0..d {
+                ata::testkit::assert_close(m.mean[i], want_mean[i], 1e-9, "mean")?;
+                ata::testkit::assert_close(m.variance[i], want_var[i], 1e-9, "var")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Banked rows must stream the identical moments as their boxed slot
+/// twins (1e-12) — the bank-vs-slot equivalence, extended to the
+/// analytics read.
+#[test]
+fn banked_moments_match_slot_moments() {
+    use ata::averagers::banked::{build_bank, RowBatch};
+    let bankable = [
+        AveragerSpec::Exp { gamma: 0.9 },
+        AveragerSpec::ExpK { k: 10 },
+        AveragerSpec::Gea { c: 0.5 },
+        AveragerSpec::Awa {
+            window: WindowKind::Fixed { k: 7 },
+            accumulators: 2,
+        },
+        AveragerSpec::Awa {
+            window: WindowKind::Growing { c: 0.5 },
+            accumulators: 3,
+        },
+    ];
+    let d = 3usize;
+    for spec in bankable {
+        let label = spec.label();
+        let mut bank = build_bank(&spec, d).expect("bankable");
+        let row = bank.push_row();
+        let mut slot = spec.build(d).unwrap();
+        let mut pos = 0u64;
+        for &n in &[1usize, 6, 13, 40, 2] {
+            let mut flat = Vec::with_capacity(n * d);
+            for s in 0..n {
+                for i in 0..d {
+                    flat.push(sample(pos + s as u64 + 1, i));
+                }
+            }
+            pos += n as u64;
+            bank.apply_batches(&[RowBatch {
+                row,
+                count: n,
+                data: &flat,
+            }]);
+            slot.observe_many(&flat, n);
+            let (mut bm, mut bv) = (vec![0.0; d], vec![0.0; d]);
+            let (mut sm, mut sv) = (vec![0.0; d], vec![0.0; d]);
+            let be = bank.moments_row_into(row, &mut bm, &mut bv).expect("bank");
+            let se = slot.moments_into(&mut sm, &mut sv).expect("slot");
+            close(be, se, 1e-12, &format!("{label} ess at t={pos}"));
+            for i in 0..d {
+                close(bm[i], sm[i], 1e-12, &format!("{label} mean[{i}]"));
+                close(bv[i], sv[i], 1e-12, &format!("{label} var[{i}]"));
+            }
+        }
+    }
+}
+
+/// End-to-end through the coordinator: stat snapshots survive the
+/// export→restore round trip bitwise, on both backings.
+#[test]
+fn stat_snapshots_survive_state_transfer_bitwise() {
+    use ata::config::BackpressurePolicy;
+    use ata::coordinator::Coordinator;
+    let d = 2;
+    let a = Coordinator::new(2, 64, BackpressurePolicy::Block);
+    let b = Coordinator::new(1, 64, BackpressurePolicy::Block);
+    for (i, spec) in all_specs().into_iter().enumerate() {
+        let name = format!("s{i}");
+        a.register(&name, d, spec.clone()).unwrap();
+        b.register(&name, d, spec).unwrap();
+        let mut flat = Vec::new();
+        for t in 1..=33u64 {
+            for k in 0..d {
+                flat.push(sample(t + i as u64, k));
+            }
+        }
+        a.push_many(&name, 33, &flat).unwrap();
+    }
+    a.sync().unwrap();
+    for i in 0..all_specs().len() {
+        let name = format!("s{i}");
+        let state = a.export_state(&name).unwrap();
+        b.restore_state(&name, &state).unwrap();
+        let sa = a.stat_snapshot(&name).unwrap();
+        let sb = b.stat_snapshot(&name).unwrap();
+        assert_eq!(sa.t, sb.t, "{name}");
+        assert_eq!(sa.ess.to_bits(), sb.ess.to_bits(), "{name} ess");
+        for k in 0..d {
+            assert_eq!(sa.mean[k].to_bits(), sb.mean[k].to_bits(), "{name} mean");
+            assert_eq!(
+                sa.variance[k].to_bits(),
+                sb.variance[k].to_bits(),
+                "{name} variance"
+            );
+        }
+    }
+}

@@ -1,8 +1,11 @@
 //! Cross-language golden test: the Rust averagers must reproduce the
 //! python mirror (`python/compile/averagers_ref.py`) bit-for-bit (up to
-//! f64 round-off) on a deterministic stream.
+//! f64 round-off) on a deterministic stream — values AND the moment
+//! columns (weighted variance, effective sample size).
 //!
-//! Regenerate the golden file with `make golden`.
+//! Regenerate the golden file from either language:
+//!   python3 -m compile.averagers_ref ../rust/tests/golden/averager_golden.json
+//!   cargo run --example generate_golden
 
 use ata::averagers::AveragerSpec;
 use ata::util::json::Json;
@@ -15,7 +18,12 @@ fn stream(t: u64) -> f64 {
 
 fn load_golden() -> Json {
     let text = std::fs::read_to_string(GOLDEN_PATH)
-        .unwrap_or_else(|e| panic!("cannot read {GOLDEN_PATH}: {e}; run `make golden`"));
+        .unwrap_or_else(|e| {
+            panic!(
+                "cannot read {GOLDEN_PATH}: {e}; regenerate with \
+                 `cargo run --example generate_golden`"
+            )
+        });
     Json::parse(&text).expect("golden file must be valid JSON")
 }
 
@@ -73,6 +81,70 @@ fn golden_traces_match_python_mirror() {
         compared > 100,
         "golden comparison too thin: {compared} values"
     );
+}
+
+#[test]
+fn golden_moment_columns_match_python_mirror() {
+    use ata::averagers::Averager;
+    let golden = load_golden();
+    let total = golden
+        .get("total_steps")
+        .and_then(Json::as_u64)
+        .expect("total_steps");
+    let checkpoints: Vec<u64> = golden
+        .get("checkpoints")
+        .and_then(Json::as_arr)
+        .expect("checkpoints")
+        .iter()
+        .map(|c| c.as_u64().expect("checkpoint int"))
+        .collect();
+    let moments = golden
+        .get("moments")
+        .and_then(Json::as_obj)
+        .expect("moment traces (regenerate the golden file)");
+    assert!(!moments.is_empty());
+    let mut compared = 0usize;
+    for (label, trace) in moments {
+        let spec = AveragerSpec::parse(label)
+            .unwrap_or_else(|e| panic!("golden label '{label}' unparseable: {e}"));
+        let mut avg: Box<dyn Averager> = spec.build(1).expect("build");
+        let expected = trace.as_arr().expect("moment array");
+        assert_eq!(expected.len(), checkpoints.len(), "{label}");
+        let mut cp_idx = 0;
+        for t in 1..=total {
+            avg.observe_scalar(stream(t));
+            if cp_idx < checkpoints.len() && checkpoints[cp_idx] == t {
+                let (mut m, mut v) = ([0.0], [0.0]);
+                let got = avg.moments_into(&mut m, &mut v);
+                match (&expected[cp_idx], got) {
+                    (Json::Null, None) => {}
+                    (pair @ Json::Arr(_), Some(ess)) => {
+                        let cols = pair.to_f64_vec().expect("[var, ess]");
+                        assert_eq!(cols.len(), 2, "{label}");
+                        let (want_var, want_ess) = (cols[0], cols[1]);
+                        assert!(
+                            (v[0] - want_var).abs() <= 1e-9 * want_var.abs().max(1.0),
+                            "{label} at t={t}: rust var {} vs python {want_var}",
+                            v[0]
+                        );
+                        assert!(
+                            (ess - want_ess).abs() <= 1e-9 * want_ess.max(1.0),
+                            "{label} at t={t}: rust ess {ess} vs python {want_ess}"
+                        );
+                        // The moment mean must be the traced value.
+                        let val = avg.value_scalar().expect("value");
+                        assert!((m[0] - val).abs() <= 1e-12 * val.abs().max(1.0));
+                        compared += 1;
+                    }
+                    (want, got) => {
+                        panic!("{label} at t={t}: python {want:?} vs rust {got:?}")
+                    }
+                }
+                cp_idx += 1;
+            }
+        }
+    }
+    assert!(compared > 100, "moment comparison too thin: {compared}");
 }
 
 #[test]

@@ -23,6 +23,7 @@ fn help_lists_commands() {
         "experiment",
         "serve",
         "client",
+        "query",
         "checkpoint",
         "restore",
         "artifacts",
@@ -30,6 +31,39 @@ fn help_lists_commands() {
     ] {
         assert!(stdout.contains(cmd), "help missing '{cmd}':\n{stdout}");
     }
+}
+
+#[test]
+fn query_command_reports_stats_and_bands() {
+    use ata::config::BackpressurePolicy;
+    use ata::coordinator::{Coordinator, Server};
+    use std::sync::Arc;
+    let c = Arc::new(Coordinator::new(2, 64, BackpressurePolicy::Block));
+    for (name, level) in [("q/a", 1.0), ("q/b", -1.0)] {
+        c.register(name, 1, ata::averagers::AveragerSpec::Gea { c: 0.5 })
+            .unwrap();
+        for i in 0..30 {
+            c.push(name, vec![level + (i as f64 * 0.3).sin() * 0.2]).unwrap();
+        }
+    }
+    c.sync().unwrap();
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+    let addr = server.addr().to_string();
+    // Prefix query with aggregate.
+    let (ok, stdout, stderr) = run(&[
+        "query", "--addr", &addr, "--prefix", "q/", "--aggregate",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("q/a") && stdout.contains("q/b"), "{stdout}");
+    assert!(stdout.contains("±"), "bands printed: {stdout}");
+    assert!(stdout.contains("<aggregate>"), "{stdout}");
+    // Explicit list → multi_snapshot; unknown entries error per row.
+    let (ok, stdout, _) = run(&[
+        "query", "--addr", &addr, "--streams", "q/a,ghost",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("q/a") && stdout.contains("ghost"), "{stdout}");
+    assert!(stdout.contains("error"), "{stdout}");
 }
 
 #[test]

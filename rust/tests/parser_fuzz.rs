@@ -292,7 +292,7 @@ fn arb_v2_request(g: &mut Gen) -> Request {
     let data = |g: &mut Gen, n: usize| -> Vec<f64> {
         (0..n).map(|_| g.f64_range(-1e6, 1e6)).collect()
     };
-    match g.usize_range(0, 9) {
+    match g.usize_range(0, 11) {
         0 => Request::Ping,
         1 => Request::Register {
             stream: format!("s{}", g.usize_range(0, 1000)),
@@ -343,6 +343,17 @@ fn arb_v2_request(g: &mut Gen) -> Request {
                 .map(|_| (g.u64() & 0xFF) as u8)
                 .collect(),
         },
+        9 => Request::Query {
+            prefix: format!("p{}", g.usize_range(0, 50)),
+            z: g.f64_range(0.0, 5.0),
+            top_k: g.u64() & 0xFF,
+            aggregate: g.bool(0.5),
+        },
+        10 => Request::MultiSnapshot {
+            streams: (0..g.usize_range(0, 8))
+                .map(|_| StreamRef::Handle(g.u64()))
+                .collect(),
+        },
         _ => Request::ExportState {
             stream: StreamRef::Handle(g.u64()),
         },
@@ -363,10 +374,79 @@ fn v2_decoder_never_panics_on_garbage() {
             OpKind::Snapshot,
             OpKind::List,
             OpKind::ExportState,
+            OpKind::Query,
+            OpKind::MultiSnapshot,
         ] {
             let _ = protocol::decode_response(Wire::V2Binary, kind, &bytes);
         }
         true
+    });
+}
+
+#[test]
+fn v2_analytics_responses_roundtrip_and_mutations_never_panic() {
+    use ata::coordinator::protocol::{Response, StatEntry, StatOutcome};
+    Runner::new("v2 analytics response roundtrip", 0xFE).run(200, |g| {
+        let entry = |g: &mut Gen| -> StatEntry {
+            let d = g.usize_range(0, 5);
+            StatEntry {
+                stream: format!("s{}", g.usize_range(0, 100)),
+                t: g.u64() & 0xFFFF,
+                effective_window: g.f64_range(0.0, 1e4),
+                ess: g.f64_range(0.0, 1e4),
+                mean: (0..d).map(|_| g.f64_range(-1e3, 1e3)).collect(),
+                variance: (0..d).map(|_| g.f64_range(0.0, 1e3)).collect(),
+                band: (0..d).map(|_| g.f64_range(0.0, 1e2)).collect(),
+            }
+        };
+        let n = g.usize_range(0, 4);
+        let resp = if g.bool(0.5) {
+            Response::QueryStats {
+                stats: (0..n).map(|_| entry(g)).collect(),
+                aggregate: if g.bool(0.5) { Some(entry(g)) } else { None },
+                aggregated: g.u64() & 0xFF,
+            }
+        } else {
+            Response::MultiStats {
+                stats: (0..n)
+                    .map(|_| {
+                        if g.bool(0.7) {
+                            StatOutcome::Stat(entry(g))
+                        } else {
+                            StatOutcome::Missing(format!("no stream with handle {}", g.u64()))
+                        }
+                    })
+                    .collect(),
+            }
+        };
+        let kind = match &resp {
+            Response::QueryStats { .. } => OpKind::Query,
+            _ => OpKind::MultiSnapshot,
+        };
+        let mut buf = Vec::new();
+        protocol::encode_response(Wire::V2Binary, 7, &resp, &mut buf)
+            .map_err(|e| e.to_string())?;
+        let (seq, back) =
+            protocol::decode_response(Wire::V2Binary, kind, &buf).map_err(|e| e.to_string())?;
+        if seq != 7 || back != resp {
+            return Err(format!("roundtrip mismatch: {back:?} vs {resp:?}"));
+        }
+        // Truncations and bit flips error, never panic.
+        let mut mutated = buf.clone();
+        match g.usize_range(0, 2) {
+            0 => {
+                let cut = g.usize_range(0, mutated.len());
+                mutated.truncate(cut);
+            }
+            _ => {
+                if !mutated.is_empty() {
+                    let at = g.usize_range(0, mutated.len() - 1);
+                    mutated[at] ^= 1 << g.usize_range(0, 7);
+                }
+            }
+        }
+        let _ = protocol::decode_response(Wire::V2Binary, kind, &mutated);
+        Ok(())
     });
 }
 

@@ -565,6 +565,150 @@ fn streams_registered_after_checkpoint_survive_via_wal() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+// ---------------------------------------------------------------------------
+// Deterministic kill-and-query soak: analytics stats are bitwise-stable
+// across checkpoint/crash/recover
+// ---------------------------------------------------------------------------
+
+/// Streams, banked AND slot-backed, the soak interleaves over.
+fn soak_specs() -> Vec<(&'static str, AveragerSpec)> {
+    vec![
+        ("b/gea", AveragerSpec::Gea { c: 0.5 }),
+        ("b/exp", AveragerSpec::ExpK { k: 10 }),
+        (
+            "b/awa",
+            AveragerSpec::Awa {
+                window: WindowKind::Growing { c: 0.4 },
+                accumulators: 3,
+            },
+        ),
+        (
+            "s/true",
+            AveragerSpec::True {
+                window: WindowKind::Fixed { k: 9 },
+            },
+        ),
+        (
+            "s/eh",
+            AveragerSpec::Eh {
+                window: WindowKind::Fixed { k: 30 },
+                eps: 0.1,
+            },
+        ),
+    ]
+}
+
+/// Every stream's StatSnapshot on `got` must be BITWISE identical to
+/// `want`'s — mean, variance, ESS and effective window compared by
+/// to_bits, not tolerance. This is what makes the confidence bands
+/// trustworthy across crashes: recovery replays the same whole-batch
+/// boundaries through the same kernels, and state imports are
+/// byte-exact (TrueWindow ships its live running sums for exactly this
+/// reason).
+fn assert_stats_bitwise(
+    got: &Coordinator,
+    want: &Coordinator,
+    specs: &[(&'static str, AveragerSpec)],
+    round: u64,
+) {
+    for (name, spec) in specs {
+        let a = got.stat_snapshot(name).unwrap();
+        let b = want.stat_snapshot(name).unwrap();
+        let ctx = format!("round {round} stream {name} ({})", spec.label());
+        assert_eq!(a.t, b.t, "{ctx}: t");
+        assert_eq!(a.ess.to_bits(), b.ess.to_bits(), "{ctx}: ess {} vs {}", a.ess, b.ess);
+        assert_eq!(
+            a.effective_window.to_bits(),
+            b.effective_window.to_bits(),
+            "{ctx}: k_eff"
+        );
+        for i in 0..a.mean.len() {
+            assert_eq!(
+                a.mean[i].to_bits(),
+                b.mean[i].to_bits(),
+                "{ctx}: mean[{i}] {} vs {}",
+                a.mean[i],
+                b.mean[i]
+            );
+            assert_eq!(
+                a.variance[i].to_bits(),
+                b.variance[i].to_bits(),
+                "{ctx}: variance[{i}] {} vs {}",
+                a.variance[i],
+                b.variance[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn kill_and_query_soak_stat_snapshots_bitwise_stable() {
+    use ata::analytics::Query;
+    use ata::rng::{RngCore, Xoshiro256};
+    let dir = temp_dir("persist-query-soak");
+    let cfg = persist_cfg(&dir, 2);
+    let d = 2usize;
+    let specs = soak_specs();
+    let reference = Coordinator::new(2, 256, BackpressurePolicy::Block);
+    let mut durable = Coordinator::from_config(&cfg).unwrap();
+    for (name, spec) in &specs {
+        durable.register(name, d, spec.clone()).unwrap();
+        reference.register(name, d, spec.clone()).unwrap();
+    }
+    // Seeded schedule: which stream, how many samples, and when to
+    // sync/query/checkpoint/crash — fully reproducible.
+    let mut rng = Xoshiro256::seed_from_u64(0x50AC);
+    let mut pos = vec![0u64; specs.len()];
+    for round in 0..120u64 {
+        let s = rng.next_below(specs.len() as u64) as usize;
+        let count = 1 + rng.next_below(7) as usize;
+        let batch = flat_batch(s, pos[s], count, d);
+        pos[s] += count as u64;
+        durable.push_many(specs[s].0, count, &batch).unwrap();
+        reference.push_many(specs[s].0, count, &batch).unwrap();
+        if round % 5 == 4 {
+            durable.sync().unwrap();
+            reference.sync().unwrap();
+            assert_stats_bitwise(&durable, &reference, &specs, round);
+        }
+        if round % 13 == 12 {
+            durable.checkpoint().unwrap();
+        }
+        if round % 40 == 39 {
+            // "Kill": drop without a final checkpoint; recover from the
+            // snapshot + WAL tail and re-check every stream bitwise.
+            drop(durable);
+            let (recovered, _report) = Coordinator::recover(&cfg).unwrap();
+            durable = recovered;
+            reference.sync().unwrap();
+            assert_stats_bitwise(&durable, &reference, &specs, round);
+        }
+    }
+    // The query layer sees identical numbers too (aggregate pools in
+    // name order on both sides).
+    durable.sync().unwrap();
+    reference.sync().unwrap();
+    let qa = durable.query(&Query {
+        prefix: "b/".into(),
+        aggregate: true,
+        ..Query::default()
+    });
+    let qb = reference.query(&Query {
+        prefix: "b/".into(),
+        aggregate: true,
+        ..Query::default()
+    });
+    assert_eq!(qa.aggregated, 3);
+    assert_eq!(qa.aggregated, qb.aggregated);
+    let (a, b) = (qa.aggregate.unwrap(), qb.aggregate.unwrap());
+    assert_eq!(a.ess.to_bits(), b.ess.to_bits());
+    for i in 0..d {
+        assert_eq!(a.mean[i].to_bits(), b.mean[i].to_bits());
+        assert_eq!(a.variance[i].to_bits(), b.variance[i].to_bits());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Recursive dir copy (std-only) for fault-injection snapshots.
 fn copy_dir(src: &Path, dst: &Path) {
     std::fs::create_dir_all(dst).unwrap();

@@ -784,6 +784,152 @@ fn stale_cached_handles_recover_after_reregistration() {
     assert!(cl.push("w", &[5.0]).is_err());
 }
 
+// ---------------------------------------------------------------------------
+// Anytime analytics over the wire: query / multi_snapshot, both codecs
+// ---------------------------------------------------------------------------
+
+/// Seed a server with banked + slot streams carrying known data.
+fn seed_analytics_server() -> (Server, String) {
+    let (server, addr) = start_server();
+    let mut cl = Client::connect(&addr).expect("connect");
+    cl.register("q/gea", 2, "gea(c=0.5)").unwrap();
+    cl.register("q/awa", 2, "awa3(c=0.5)").unwrap();
+    cl.register("q/true", 2, "true(k=8)").unwrap();
+    cl.register("other", 1, "gea(c=0.5)").unwrap();
+    for (i, name) in ["q/gea", "q/awa", "q/true"].iter().enumerate() {
+        let flat: Vec<f64> = (0..50 * 2)
+            .map(|k| ((i * 131 + k) as f64 * 0.217).sin() * 2.0 + i as f64)
+            .collect();
+        cl.push_many(name, 50, &flat).unwrap();
+    }
+    cl.sync().unwrap();
+    (server, addr)
+}
+
+#[test]
+fn query_returns_identical_results_over_v1_and_v2() {
+    let (_server, addr) = seed_analytics_server();
+    let mut v2 = Client::connect(&addr).expect("v2");
+    let mut v1 = Client::connect_with(&addr, ProtocolChoice::V1).expect("v1");
+    assert_eq!(v2.protocol_version(), 2);
+    assert_eq!(v1.protocol_version(), 1);
+    for (top_k, aggregate) in [(0u64, false), (0, true), (2, true)] {
+        let (s2, a2) = v2.query("q/", 1.96, top_k, aggregate).expect("v2 query");
+        let (s1, a1) = v1.query("q/", 1.96, top_k, aggregate).expect("v1 query");
+        assert_eq!(s1.len(), s2.len(), "top_k={top_k}");
+        for (e1, e2) in s1.iter().zip(&s2) {
+            assert_eq!(e1.stream, e2.stream);
+            assert_eq!(e1.t, e2.t);
+            assert!((e1.ess - e2.ess).abs() <= 1e-12 * e2.ess.abs().max(1.0));
+            for d in 0..e2.mean.len() {
+                assert!(
+                    (e1.mean[d] - e2.mean[d]).abs() <= 1e-12 * e2.mean[d].abs().max(1.0),
+                    "{} mean[{d}]: v1 {} vs v2 {}",
+                    e1.stream,
+                    e1.mean[d],
+                    e2.mean[d]
+                );
+                assert!(
+                    (e1.variance[d] - e2.variance[d]).abs()
+                        <= 1e-12 * e2.variance[d].abs().max(1.0),
+                    "{} variance[{d}]",
+                    e1.stream
+                );
+                assert!(
+                    (e1.band[d] - e2.band[d]).abs() <= 1e-12 * e2.band[d].abs().max(1.0),
+                    "{} band[{d}]",
+                    e1.stream
+                );
+            }
+        }
+        match (a1, a2, aggregate) {
+            (None, None, false) => {}
+            (Some(a1), Some(a2), true) => {
+                assert_eq!(a1.t, a2.t);
+                for d in 0..a2.mean.len() {
+                    assert!(
+                        (a1.mean[d] - a2.mean[d]).abs()
+                            <= 1e-12 * a2.mean[d].abs().max(1.0)
+                    );
+                }
+            }
+            (a1, a2, _) => panic!("aggregate presence differs: {a1:?} vs {a2:?}"),
+        }
+    }
+    // The stat mean must equal the plain snapshot value, both codecs.
+    for cl in [&mut v2, &mut v1] {
+        let (stats, _) = cl.query("q/gea", 1.96, 0, false).unwrap();
+        assert_eq!(stats.len(), 1);
+        let snap = cl.snapshot("q/gea").unwrap();
+        assert_eq!(stats[0].mean, &snap.value.unwrap()[..]);
+        assert_eq!(stats[0].t, 50);
+        assert!(stats[0].ess > 1.0);
+        assert!(stats[0].variance.iter().all(|&v| v > 0.0));
+    }
+}
+
+#[test]
+fn multi_snapshot_matches_across_protocols_with_per_entry_errors() {
+    let (_server, addr) = seed_analytics_server();
+    let mut v2 = Client::connect(&addr).expect("v2");
+    let mut v1 = Client::connect_with(&addr, ProtocolChoice::V1).expect("v1");
+    let names = ["q/awa", "ghost", "q/true"];
+    let r2 = v2.multi_snapshot(&names).expect("v2 multi_snapshot");
+    let r1 = v1.multi_snapshot(&names).expect("v1 multi_snapshot");
+    assert_eq!(r1.len(), 3);
+    assert_eq!(r2.len(), 3);
+    for (i, (e1, e2)) in r1.iter().zip(&r2).enumerate() {
+        match (e1, e2) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a.stream, b.stream);
+                assert_eq!(a.t, b.t);
+                for d in 0..b.mean.len() {
+                    assert!(
+                        (a.mean[d] - b.mean[d]).abs() <= 1e-12 * b.mean[d].abs().max(1.0),
+                        "entry {i} mean[{d}]"
+                    );
+                    assert!(
+                        (a.variance[d] - b.variance[d]).abs()
+                            <= 1e-12 * b.variance[d].abs().max(1.0),
+                        "entry {i} variance[{d}]"
+                    );
+                }
+            }
+            (Err(a), Err(b)) => {
+                assert!(a.contains("ghost"), "{a}");
+                assert!(b.contains("ghost"), "{b}");
+            }
+            (a, b) => panic!("entry {i} outcome differs: {a:?} vs {b:?}"),
+        }
+    }
+    // Both connections stay healthy after the mixed-outcome frame.
+    v2.ping().unwrap();
+    v1.ping().unwrap();
+}
+
+#[test]
+fn multi_snapshot_purges_stale_handles_per_entry() {
+    let c = Arc::new(Coordinator::new(1, 64, BackpressurePolicy::Block));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&c), 2).expect("server");
+    let mut cl = Client::connect(&server.addr().to_string()).unwrap();
+    cl.register("w", 1, "gea(c=0.5)").unwrap();
+    cl.push("w", &[4.0]).unwrap();
+    cl.sync().unwrap();
+    assert!(cl.multi_snapshot(&["w"]).unwrap()[0].is_ok());
+    // Churn the stream server-side: the cached handle goes stale.
+    c.unregister("w").unwrap();
+    c.register("w", 1, ata::averagers::AveragerSpec::Gea { c: 0.5 })
+        .unwrap();
+    let out = cl.multi_snapshot(&["w"]).unwrap();
+    assert!(
+        matches!(&out[0], Err(e) if e.contains("handle")),
+        "stale entry reported: {out:?}"
+    );
+    // The purge made the NEXT call re-resolve and succeed.
+    let out = cl.multi_snapshot(&["w"]).unwrap();
+    assert!(out[0].is_ok(), "{out:?}");
+}
+
 #[test]
 fn wire_metrics_count_connections_and_frames() {
     let c = Arc::new(Coordinator::new(1, 64, BackpressurePolicy::Block));
