@@ -17,7 +17,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
-    let mut bench = Bench::from_args("coordinator_throughput");
+    let mut bench = Bench::from_args("ingest");
     let quick = std::env::args().any(|a| a == "--quick");
     let d = 256usize;
     let n_streams = 16usize;

@@ -17,7 +17,7 @@ use ata::coordinator::Coordinator;
 use std::time::Instant;
 
 fn main() {
-    let mut bench = Bench::from_args("persist_throughput");
+    let mut bench = Bench::from_args("persist");
     let quick = std::env::args().any(|a| a == "--quick");
     let d = 64usize;
     let batch = 16usize;
@@ -38,6 +38,7 @@ fn main() {
             segment_bytes: 64 << 20,
             fsync: false,
             checkpoint_interval_ms: 0,
+            group_commit_micros: 0,
         };
         let durable =
             Coordinator::with_persist(4, 4096, BackpressurePolicy::Block, true, Some(&pcfg))

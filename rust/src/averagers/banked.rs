@@ -152,8 +152,9 @@ pub fn build_bank(spec: &AveragerSpec, d: usize) -> Option<Box<dyn BankState>> {
 
 /// Planar [`super::ExpAverage`]: one `rows × d` EMA arena plus `γ^t`
 /// and `t` scalar lanes; batches collapse through the closed-form
-/// [`kernels::ema_fold_rows`], values read back via the multi-row
-/// debias gather [`kernels::scale_rows_into`].
+/// fused fold [`kernels::ema_fold_fused`] (value + x² moment rows in
+/// one pass), values read back via the multi-row debias gather
+/// [`kernels::scale_rows_into`].
 pub struct ExpBank {
     gamma: f64,
     d: usize,
@@ -212,15 +213,19 @@ impl BankState for ExpBank {
 
     fn apply_batches(&mut self, batches: &[RowBatch<'_>]) {
         let d = self.d;
-        let mut jobs: Vec<(usize, &[f64])> = Vec::with_capacity(batches.len());
+        // One fused closed-form fold per batch updates the value row AND
+        // its x² moment row in a single pass over the samples (batches
+        // arrive row-sorted, so both arenas are walked in address
+        // order); bit-identical to the former two-pass drain, with no
+        // per-cycle job allocation.
         for b in batches {
-            jobs.push((b.row * d, b.data));
-        }
-        kernels::ema_fold_rows(&mut self.ema, d, self.gamma, &jobs);
-        for &(off, data) in &jobs {
-            kernels::ema_fold_sq(&mut self.ema2[off..off + d], data, self.gamma);
-        }
-        for b in batches {
+            let off = b.row * d;
+            kernels::ema_fold_fused(
+                &mut self.ema[off..off + d],
+                &mut self.ema2[off..off + d],
+                b.data,
+                self.gamma,
+            );
             self.gamma_pow_t[b.row] *= self.gamma.powi(b.count as i32);
             self.t[b.row] += b.count as u64;
         }
@@ -401,8 +406,7 @@ impl BankState for GeaBank {
                 let k_target = (self.c * t as f64).max(1.0).min(t as f64);
                 let g = solve_gamma(v, 1.0 / k_target);
                 let om = 1.0 - g;
-                kernels::ema_step(avg, x, g);
-                kernels::ema_step_sq(avg2, x, g);
+                kernels::ema_step_fused(avg, avg2, x, g);
                 v = g * g * v + om * om;
             }
             self.v[b.row] = v;
@@ -592,8 +596,8 @@ impl BankState for Awa2Bank {
                         let run = &b.data[offset * d..(offset + take) * d];
                         let n1_start = self.n1[row];
                         let rec = self.recent_off(row);
-                        kernels::mean_update_run(&mut self.bank[rec..rec + d], run, n1_start);
-                        kernels::mean_update_run_sq(
+                        kernels::mean_update_run_fused(
+                            &mut self.bank[rec..rec + d],
                             &mut self.bank2[rec..rec + d],
                             run,
                             n1_start,
@@ -613,8 +617,12 @@ impl BankState for Awa2Bank {
                         self.n1[row] += 1;
                         let n = self.n1[row] as f64;
                         let rec = self.recent_off(row);
-                        kernels::mean_update(&mut self.bank[rec..rec + d], x, n);
-                        kernels::mean_update_sq(&mut self.bank2[rec..rec + d], x, n);
+                        kernels::mean_update_fused(
+                            &mut self.bank[rec..rec + d],
+                            &mut self.bank2[rec..rec + d],
+                            x,
+                            n,
+                        );
                         if self.should_flush(row) {
                             self.flush_row(row);
                         }
@@ -903,8 +911,8 @@ impl BankState for AwaMultiBank {
                         let run = &b.data[offset * d..(offset + take) * d];
                         let n_start = self.counts[newest];
                         let off = self.newest_off(row);
-                        kernels::mean_update_run(&mut self.bank[off..off + d], run, n_start);
-                        kernels::mean_update_run_sq(
+                        kernels::mean_update_run_fused(
+                            &mut self.bank[off..off + d],
                             &mut self.bank2[off..off + d],
                             run,
                             n_start,
@@ -924,8 +932,12 @@ impl BankState for AwaMultiBank {
                         self.counts[newest] += 1;
                         let n = self.counts[newest] as f64;
                         let off = self.newest_off(row);
-                        kernels::mean_update(&mut self.bank[off..off + d], x, n);
-                        kernels::mean_update_sq(&mut self.bank2[off..off + d], x, n);
+                        kernels::mean_update_fused(
+                            &mut self.bank[off..off + d],
+                            &mut self.bank2[off..off + d],
+                            x,
+                            n,
+                        );
                         if self.should_shift(row) {
                             self.shift_row(row);
                         }

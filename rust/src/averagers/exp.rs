@@ -115,8 +115,7 @@ impl Averager for ExpAverage {
         assert_eq!(x.len(), self.ema.len(), "dimension mismatch");
         self.t += 1;
         self.gamma_pow_t *= self.gamma;
-        kernels::ema_step(&mut self.ema, x, self.gamma);
-        kernels::ema_step_sq(&mut self.ema2, x, self.gamma);
+        kernels::ema_step_fused(&mut self.ema, &mut self.ema2, x, self.gamma);
     }
 
     fn observe_many(&mut self, data: &[f64], count: usize) {
@@ -131,8 +130,7 @@ impl Averager for ExpAverage {
         // slot and bank paths cannot drift. The debias tracker advances as
         // γ^t·γⁿ in a single multiplication.
         let g = self.gamma;
-        kernels::ema_fold(&mut self.ema, data, g);
-        kernels::ema_fold_sq(&mut self.ema2, data, g);
+        kernels::ema_fold_fused(&mut self.ema, &mut self.ema2, data, g);
         self.gamma_pow_t *= g.powi(count as i32);
         self.t += count as u64;
     }

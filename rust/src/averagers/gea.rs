@@ -97,8 +97,7 @@ impl GrowingExp {
         let k_target = (self.c * self.t as f64).max(1.0).min(self.t as f64);
         let g = solve_gamma(self.v, 1.0 / k_target);
         let om = 1.0 - g;
-        kernels::ema_step(&mut self.avg, x, g);
-        kernels::ema_step_sq(&mut self.avg2, x, g);
+        kernels::ema_step_fused(&mut self.avg, &mut self.avg2, x, g);
         self.v = g * g * self.v + om * om;
     }
 

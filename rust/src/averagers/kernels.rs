@@ -1,4 +1,4 @@
-//! Chunked, autovectorizer-friendly numeric kernels shared by the
+//! Lane-tiled, autovectorizer-friendly numeric kernels shared by the
 //! averagers' scalar and batched ([`super::Averager::observe_many`])
 //! paths.
 //!
@@ -9,40 +9,134 @@
 //! documented exception, equal up to round-off (verified to 1e-12 by
 //! the `observe_many` equivalence property test).
 //!
-//! The inner loops are plain `iter_mut().zip(..)` over contiguous
-//! `f64` slices — exactly the shape LLVM's autovectorizer turns into
-//! packed SIMD without any unsafe or feature detection.
+//! # Lane layout
+//!
+//! Every inner loop runs through one of the `tile*` drivers below: the
+//! slices are split into a head of [`LANES`]-wide `f64` tiles
+//! (`chunks_exact`, so the trip count is known per tile) and a scalar
+//! tail of `len % LANES` elements. The per-lane body is a
+//! straight-line FMA-shaped update with no cross-lane dependence, which
+//! is exactly the shape LLVM turns into packed SIMD (`-C
+//! target-cpu=native` upgrades the 2-wide SSE default to AVX2/AVX-512)
+//! — no `unsafe`, no feature detection, and the scalar tail keeps every
+//! length exact. Fused `*_fused` kernels update a value row and its
+//! `x²` moment twin in ONE pass over the batch, halving passes over the
+//! sample data; per element they perform the identical operations in
+//! the identical order as the split kernels, so fused and unfused
+//! drains are bit-identical (enforced by the tests below).
+
+/// Tile width of the vectorized heads: 4 × f64 = one AVX2 register
+/// (two SSE2 registers; half an AVX-512 register — the autovectorizer
+/// is free to unroll further).
+pub(crate) const LANES: usize = 4;
+
+/// Drive `f` over one mutable slice in lane tiles + scalar tail.
+#[inline(always)]
+fn tile1(a: &mut [f64], f: impl Fn(&mut f64) + Copy) {
+    let split = a.len() - a.len() % LANES;
+    let (head, tail) = a.split_at_mut(split);
+    for a in head.chunks_exact_mut(LANES) {
+        for i in 0..LANES {
+            f(&mut a[i]);
+        }
+    }
+    for a in tail {
+        f(a);
+    }
+}
+
+/// Drive `f(acc, x)` over an accumulator/input pair in lane tiles +
+/// scalar tail.
+#[inline(always)]
+fn tile2(a: &mut [f64], x: &[f64], f: impl Fn(&mut f64, f64) + Copy) {
+    debug_assert_eq!(a.len(), x.len());
+    let split = a.len() - a.len() % LANES;
+    let (ah, at) = a.split_at_mut(split);
+    let (xh, xt) = x.split_at(split);
+    for (a, x) in ah.chunks_exact_mut(LANES).zip(xh.chunks_exact(LANES)) {
+        for i in 0..LANES {
+            f(&mut a[i], x[i]);
+        }
+    }
+    for (a, &xv) in at.iter_mut().zip(xt) {
+        f(a, xv);
+    }
+}
+
+/// Drive `f(acc, acc2, x)` over a fused value/moment accumulator pair
+/// and one input in lane tiles + scalar tail — the single-pass drain
+/// shape.
+#[inline(always)]
+fn tile3(a: &mut [f64], b: &mut [f64], x: &[f64], f: impl Fn(&mut f64, &mut f64, f64) + Copy) {
+    debug_assert_eq!(a.len(), x.len());
+    debug_assert_eq!(b.len(), x.len());
+    let split = a.len() - a.len() % LANES;
+    let (ah, at) = a.split_at_mut(split);
+    let (bh, bt) = b.split_at_mut(split);
+    let (xh, xt) = x.split_at(split);
+    for ((a, b), x) in ah
+        .chunks_exact_mut(LANES)
+        .zip(bh.chunks_exact_mut(LANES))
+        .zip(xh.chunks_exact(LANES))
+    {
+        for i in 0..LANES {
+            f(&mut a[i], &mut b[i], x[i]);
+        }
+    }
+    for ((a, b), &xv) in at.iter_mut().zip(bt.iter_mut()).zip(xt) {
+        f(a, b, xv);
+    }
+}
+
+/// Drive `f(out, a, b)` over an output and two inputs in lane tiles +
+/// scalar tail.
+#[inline(always)]
+fn tile_out2(out: &mut [f64], a: &[f64], b: &[f64], f: impl Fn(&mut f64, f64, f64) + Copy) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    let split = out.len() - out.len() % LANES;
+    let (oh, ot) = out.split_at_mut(split);
+    let (ah, at) = a.split_at(split);
+    let (bh, bt) = b.split_at(split);
+    for ((o, a), b) in oh
+        .chunks_exact_mut(LANES)
+        .zip(ah.chunks_exact(LANES))
+        .zip(bh.chunks_exact(LANES))
+    {
+        for i in 0..LANES {
+            f(&mut o[i], a[i], b[i]);
+        }
+    }
+    for ((o, &av), &bv) in ot.iter_mut().zip(at).zip(bt) {
+        f(o, av, bv);
+    }
+}
 
 /// In-place `out[i] = gamma*a[i] + (1-gamma)*b[i]` — the shared combine
 /// primitive; kept in one place so the perf pass optimizes a single site.
 #[inline]
 pub(crate) fn lerp_into(out: &mut [f64], a: &[f64], b: &[f64], gamma: f64) {
-    debug_assert_eq!(out.len(), a.len());
-    debug_assert_eq!(out.len(), b.len());
     let om = 1.0 - gamma;
-    for ((o, &av), &bv) in out.iter_mut().zip(a).zip(b) {
-        *o = gamma * av + om * bv;
-    }
+    tile_out2(out, a, b, |o, av, bv| *o = gamma * av + om * bv);
 }
 
 /// In-place EMA step `acc[i] = gamma*acc[i] + (1-gamma)*x[i]`.
+///
+/// The production EMA paths run the fused twin ([`ema_step_fused`]);
+/// this split form is the reference implementation the bit-equality
+/// tests diff against.
+#[cfg_attr(not(test), allow(dead_code))]
 #[inline]
 pub(crate) fn ema_step(acc: &mut [f64], x: &[f64], gamma: f64) {
-    debug_assert_eq!(acc.len(), x.len());
     let om = 1.0 - gamma;
-    for (a, &xv) in acc.iter_mut().zip(x) {
-        *a = gamma * *a + om * xv;
-    }
+    tile2(acc, x, |a, xv| *a = gamma * *a + om * xv);
 }
 
 /// In-place incremental-mean update `mean += (x - mean)/n`.
 #[inline]
 pub(crate) fn mean_update(mean: &mut [f64], x: &[f64], n: f64) {
-    debug_assert_eq!(mean.len(), x.len());
     let inv = 1.0 / n;
-    for (m, &xv) in mean.iter_mut().zip(x) {
-        *m += (xv - *m) * inv;
-    }
+    tile2(mean, x, |m, xv| *m += (xv - *m) * inv);
 }
 
 /// Fold `data.len()/mean.len()` consecutive samples into a running mean
@@ -79,36 +173,26 @@ pub(crate) fn pool_means(mine: &mut [f64], theirs: &[f64], n_mine: u64, n_theirs
     let total = (n_mine + n_theirs) as f64;
     let wa = n_mine as f64 / total;
     let wb = n_theirs as f64 / total;
-    for (m, &o) in mine.iter_mut().zip(theirs) {
-        *m = wa * *m + wb * o;
-    }
+    tile2(mine, theirs, |m, o| *m = wa * *m + wb * o);
 }
 
 /// In-place scale `acc[i] *= scale` — the head of a closed-form EMA
 /// batch fold (`ema ← γⁿ·ema` before the per-sample weights land).
 #[inline]
 pub(crate) fn scale_in_place(acc: &mut [f64], scale: f64) {
-    for a in acc.iter_mut() {
-        *a *= scale;
-    }
+    tile1(acc, |a| *a *= scale);
 }
 
 /// `acc[i] += w*x[i]`.
 #[inline]
 pub(crate) fn axpy(acc: &mut [f64], w: f64, x: &[f64]) {
-    debug_assert_eq!(acc.len(), x.len());
-    for (a, &xv) in acc.iter_mut().zip(x) {
-        *a += w * xv;
-    }
+    tile2(acc, x, |a, xv| *a += w * xv);
 }
 
 /// `sum[i] += x[i]`.
 #[inline]
 pub(crate) fn add_assign(sum: &mut [f64], x: &[f64]) {
-    debug_assert_eq!(sum.len(), x.len());
-    for (s, &xv) in sum.iter_mut().zip(x) {
-        *s += xv;
-    }
+    tile2(sum, x, |s, xv| *s += xv);
 }
 
 /// Closed-form EMA fold of `data.len()/acc.len()` consecutive samples
@@ -142,24 +226,20 @@ pub(crate) fn ema_fold(acc: &mut [f64], data: &[f64], gamma: f64) {
 // weighted second raw moment under the estimator's own weight profile.
 // ---------------------------------------------------------------------------
 
-/// In-place EMA step on squares `acc[i] = gamma*acc[i] + (1-gamma)*x[i]²`.
+/// In-place EMA step on squares `acc[i] = gamma*acc[i] + (1-gamma)*x[i]²`
+/// — split reference twin of [`ema_step_fused`].
+#[cfg_attr(not(test), allow(dead_code))]
 #[inline]
 pub(crate) fn ema_step_sq(acc: &mut [f64], x: &[f64], gamma: f64) {
-    debug_assert_eq!(acc.len(), x.len());
     let om = 1.0 - gamma;
-    for (a, &xv) in acc.iter_mut().zip(x) {
-        *a = gamma * *a + om * xv * xv;
-    }
+    tile2(acc, x, |a, xv| *a = gamma * *a + om * xv * xv);
 }
 
 /// In-place incremental mean of squares `m += (x² − m)/n`.
 #[inline]
 pub(crate) fn mean_update_sq(mean: &mut [f64], x: &[f64], n: f64) {
-    debug_assert_eq!(mean.len(), x.len());
     let inv = 1.0 / n;
-    for (m, &xv) in mean.iter_mut().zip(x) {
-        *m += (xv * xv - *m) * inv;
-    }
+    tile2(mean, x, |m, xv| *m += (xv * xv - *m) * inv);
 }
 
 /// Batch form of [`mean_update_sq`] (bit-identical to the per-sample
@@ -178,14 +258,19 @@ pub(crate) fn mean_update_run_sq(mean: &mut [f64], data: &[f64], n0: u64) {
 /// `sum[i] += x[i]²`.
 #[inline]
 pub(crate) fn add_assign_sq(sum: &mut [f64], x: &[f64]) {
-    debug_assert_eq!(sum.len(), x.len());
-    for (s, &xv) in sum.iter_mut().zip(x) {
-        *s += xv * xv;
-    }
+    tile2(sum, x, |s, xv| *s += xv * xv);
+}
+
+/// `acc[i] += w*x[i]²` — the squared-moment twin of [`axpy`].
+#[inline]
+pub(crate) fn axpy_sq(acc: &mut [f64], w: f64, x: &[f64]) {
+    tile2(acc, x, |a, xv| *a += w * xv * xv);
 }
 
 /// Closed-form EMA fold of squares — the batch form of [`ema_step_sq`],
 /// equal up to round-off, mirroring [`ema_fold`]'s newest→oldest walk.
+/// Split reference twin of [`ema_fold_fused`].
+#[cfg_attr(not(test), allow(dead_code))]
 #[inline]
 pub(crate) fn ema_fold_sq(acc: &mut [f64], data: &[f64], gamma: f64) {
     let d = acc.len();
@@ -194,9 +279,7 @@ pub(crate) fn ema_fold_sq(acc: &mut [f64], data: &[f64], gamma: f64) {
     scale_in_place(acc, gamma.powi(n));
     let mut w = 1.0 - gamma;
     for x in data.chunks_exact(d).rev() {
-        for (a, &xv) in acc.iter_mut().zip(x) {
-            *a += w * xv * xv;
-        }
+        axpy_sq(acc, w, x);
         w *= gamma;
     }
 }
@@ -206,10 +289,78 @@ pub(crate) fn ema_fold_sq(acc: &mut [f64], data: &[f64], gamma: f64) {
 /// a constant stream reports exactly zero instead of `-1e-16`.
 #[inline]
 pub(crate) fn variance_from_raw(mean: &[f64], m2: &[f64], var: &mut [f64]) {
-    debug_assert_eq!(mean.len(), m2.len());
-    debug_assert_eq!(mean.len(), var.len());
-    for ((v, &m), &s) in var.iter_mut().zip(mean).zip(m2) {
-        *v = (s - m * m).max(0.0);
+    tile_out2(var, mean, m2, |v, m, s| *v = (s - m * m).max(0.0));
+}
+
+// ---------------------------------------------------------------------------
+// Fused value + moment kernels: one pass over the sample data updates
+// BOTH the value accumulator and its x² moment twin. Per element each
+// accumulator sees the identical operations in the identical order as
+// the split kernels above, so a fused drain is bit-identical to the
+// two-pass drain it replaces — it just reads the batch once instead of
+// twice (and keeps both destination rows hot in one trip through the
+// arena).
+// ---------------------------------------------------------------------------
+
+/// Fused [`ema_step`] + [`ema_step_sq`]:
+/// `acc = γ·acc + (1−γ)·x`, `acc2 = γ·acc2 + (1−γ)·x²` in one pass.
+#[inline]
+pub(crate) fn ema_step_fused(acc: &mut [f64], acc2: &mut [f64], x: &[f64], gamma: f64) {
+    let om = 1.0 - gamma;
+    tile3(acc, acc2, x, |a, a2, xv| {
+        *a = gamma * *a + om * xv;
+        *a2 = gamma * *a2 + om * xv * xv;
+    });
+}
+
+/// Fused [`mean_update`] + [`mean_update_sq`]:
+/// `m += (x − m)/n`, `m2 += (x² − m2)/n` in one pass.
+#[inline]
+pub(crate) fn mean_update_fused(mean: &mut [f64], mean2: &mut [f64], x: &[f64], n: f64) {
+    let inv = 1.0 / n;
+    tile3(mean, mean2, x, |m, m2, xv| {
+        *m += (xv - *m) * inv;
+        *m2 += (xv * xv - *m2) * inv;
+    });
+}
+
+/// Fused [`mean_update_run`] + [`mean_update_run_sq`] — one walk over
+/// the batch updates both running means (bit-identical to the split
+/// runs).
+#[inline]
+pub(crate) fn mean_update_run_fused(mean: &mut [f64], mean2: &mut [f64], data: &[f64], n0: u64) {
+    let d = mean.len();
+    debug_assert!(d > 0 && data.len() % d == 0);
+    let mut n = n0;
+    for x in data.chunks_exact(d) {
+        n += 1;
+        mean_update_fused(mean, mean2, x, n as f64);
+    }
+}
+
+/// Fused [`axpy`] + [`axpy_sq`]: `acc += w·x`, `acc2 += w·x²`.
+#[inline]
+pub(crate) fn axpy_fused(acc: &mut [f64], acc2: &mut [f64], w: f64, x: &[f64]) {
+    tile3(acc, acc2, x, |a, a2, xv| {
+        *a += w * xv;
+        *a2 += w * xv * xv;
+    });
+}
+
+/// Fused closed-form EMA fold: [`ema_fold`] + [`ema_fold_sq`] in ONE
+/// newest→oldest walk over the batch — the planar bank drain kernel.
+#[inline]
+pub(crate) fn ema_fold_fused(acc: &mut [f64], acc2: &mut [f64], data: &[f64], gamma: f64) {
+    let d = acc.len();
+    debug_assert!(d > 0 && data.len() % d == 0);
+    let n = (data.len() / d) as i32;
+    let s = gamma.powi(n);
+    scale_in_place(acc, s);
+    scale_in_place(acc2, s);
+    let mut w = 1.0 - gamma;
+    for x in data.chunks_exact(d).rev() {
+        axpy_fused(acc, acc2, w, x);
+        w *= gamma;
     }
 }
 
@@ -224,6 +375,10 @@ pub(crate) fn variance_from_raw(mean: &[f64], m2: &[f64], var: &mut [f64]) {
 /// Fold one batch per row: `jobs[i] = (offset, data)` applies
 /// [`ema_fold`] to `arena[offset..offset+d]`. Jobs sorted by offset walk
 /// the arena in address order (prefetch-friendly at thousands of rows).
+/// The EMA bank drain now runs [`ema_fold_fused`] per batch (value +
+/// moment rows together); this value-only form remains the reference
+/// the multi-row tests diff against.
+#[cfg_attr(not(test), allow(dead_code))]
 #[inline]
 pub(crate) fn ema_fold_rows(arena: &mut [f64], d: usize, gamma: f64, jobs: &[(usize, &[f64])]) {
     for &(off, data) in jobs {
@@ -247,9 +402,9 @@ pub(crate) fn copy_rows_into(out: &mut [f64], arena: &[f64], d: usize, offs: &[u
 pub(crate) fn scale_rows_into(out: &mut [f64], arena: &[f64], d: usize, jobs: &[(usize, f64)]) {
     debug_assert_eq!(out.len(), jobs.len() * d);
     for (j, &(off, scale)) in jobs.iter().enumerate() {
-        for (o, &a) in out[j * d..(j + 1) * d].iter_mut().zip(&arena[off..off + d]) {
-            *o = a * scale;
-        }
+        tile2(&mut out[j * d..(j + 1) * d], &arena[off..off + d], |o, a| {
+            *o = a * scale
+        });
     }
 }
 
@@ -265,18 +420,29 @@ pub(crate) fn lerp_rows_into(
 ) {
     debug_assert_eq!(out.len(), jobs.len() * d);
     for (j, &(a_off, b_off, gamma)) in jobs.iter().enumerate() {
-        let om = 1.0 - gamma;
-        let a = &arena[a_off..a_off + d];
-        let b = &arena[b_off..b_off + d];
-        for ((o, &av), &bv) in out[j * d..(j + 1) * d].iter_mut().zip(a).zip(b) {
-            *o = gamma * av + om * bv;
-        }
+        lerp_into(
+            &mut out[j * d..(j + 1) * d],
+            &arena[a_off..a_off + d],
+            &arena[b_off..b_off + d],
+            gamma,
+        );
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Deterministic pseudo-data exercising both lane tiles and tails.
+    fn data(len: usize, seed: u64) -> Vec<f64> {
+        (0..len)
+            .map(|i| ((i as u64 * 31 + seed * 7 + 3) as f64 * 0.173).sin() * 4.0)
+            .collect()
+    }
+
+    /// Dims straddling the LANES boundary: tails of every length plus
+    /// exact multiples.
+    const DIMS: &[usize] = &[1, 3, 4, 5, 8, 11];
 
     #[test]
     fn lerp_and_ema_agree() {
@@ -288,6 +454,102 @@ mod tests {
         let mut acc = a;
         ema_step(&mut acc, &b, 0.25);
         assert_eq!(acc, out);
+    }
+
+    #[test]
+    fn tiled_kernels_match_scalar_reference_at_every_length() {
+        // The lane-tiled drivers must be exactly the scalar loop at every
+        // head/tail split — same elementwise ops, just grouped.
+        for &d in DIMS {
+            let x = data(d, 1);
+            let init = data(d, 2);
+
+            let mut a = init.clone();
+            ema_step(&mut a, &x, 0.8);
+            let want: Vec<f64> = init
+                .iter()
+                .zip(&x)
+                .map(|(&i, &xv)| 0.8 * i + 0.2 * xv)
+                .collect();
+            assert_eq!(a, want, "ema_step d={d}");
+
+            let mut m = init.clone();
+            mean_update(&mut m, &x, 3.0);
+            let want: Vec<f64> = init
+                .iter()
+                .zip(&x)
+                .map(|(&i, &xv)| i + (xv - i) * (1.0 / 3.0))
+                .collect();
+            assert_eq!(m, want, "mean_update d={d}");
+
+            let mut s = init.clone();
+            scale_in_place(&mut s, 0.5);
+            assert_eq!(s, init.iter().map(|&v| v * 0.5).collect::<Vec<_>>());
+
+            let mut acc = init.clone();
+            axpy(&mut acc, 1.5, &x);
+            let want: Vec<f64> = init.iter().zip(&x).map(|(&i, &xv)| i + 1.5 * xv).collect();
+            assert_eq!(acc, want, "axpy d={d}");
+
+            let mut sum = init.clone();
+            add_assign(&mut sum, &x);
+            assert_eq!(
+                sum,
+                init.iter().zip(&x).map(|(&i, &xv)| i + xv).collect::<Vec<_>>()
+            );
+
+            let mut sq = init.clone();
+            add_assign_sq(&mut sq, &x);
+            assert_eq!(
+                sq,
+                init.iter()
+                    .zip(&x)
+                    .map(|(&i, &xv)| i + xv * xv)
+                    .collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn fused_kernels_are_bit_identical_to_split_passes() {
+        // The single-pass fused drains must produce the exact bits of
+        // the two-pass versions, across lane-boundary dims and batch
+        // sizes — this is what lets the banks fuse without disturbing
+        // the 1e-12 slot-vs-bank equivalence.
+        for &d in DIMS {
+            for n in [1usize, 2, 7] {
+                let batch = data(n * d, 3);
+                for gamma in [0.0, 0.5, 0.93] {
+                    let mut a = data(d, 4);
+                    let mut a2 = data(d, 5);
+                    let (mut fa, mut fa2) = (a.clone(), a2.clone());
+                    for x in batch.chunks_exact(d) {
+                        ema_step(&mut a, x, gamma);
+                        ema_step_sq(&mut a2, x, gamma);
+                        ema_step_fused(&mut fa, &mut fa2, x, gamma);
+                    }
+                    assert_eq!(a, fa, "ema_step_fused d={d} n={n} g={gamma}");
+                    assert_eq!(a2, fa2, "ema_step_fused sq d={d} n={n} g={gamma}");
+
+                    let mut b = data(d, 6);
+                    let mut b2 = data(d, 7);
+                    let (mut fb, mut fb2) = (b.clone(), b2.clone());
+                    ema_fold(&mut b, &batch, gamma);
+                    ema_fold_sq(&mut b2, &batch, gamma);
+                    ema_fold_fused(&mut fb, &mut fb2, &batch, gamma);
+                    assert_eq!(b, fb, "ema_fold_fused d={d} n={n} g={gamma}");
+                    assert_eq!(b2, fb2, "ema_fold_fused sq d={d} n={n} g={gamma}");
+                }
+                let mut m = data(d, 8);
+                let mut m2 = data(d, 9);
+                let (mut fm, mut fm2) = (m.clone(), m2.clone());
+                mean_update_run(&mut m, &batch, 4);
+                mean_update_run_sq(&mut m2, &batch, 4);
+                mean_update_run_fused(&mut fm, &mut fm2, &batch, 4);
+                assert_eq!(m, fm, "mean_update_run_fused d={d} n={n}");
+                assert_eq!(m2, fm2, "mean_update_run_fused sq d={d} n={n}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,297 @@
+//! Cross-commit benchmark comparison.
+//!
+//! The repo commits one `BENCH_<suite>.json` per suite at the repo root
+//! (written by [`super::Bench::finish`]). This module diffs a freshly
+//! generated dump against the committed baseline and flags throughput
+//! regressions beyond a threshold, so CI can fail a PR that slows the
+//! hot paths down. Only *throughput-like* figures are compared — timed
+//! cases with an `elements_per_sec` field and recorded metrics whose unit
+//! contains `/s` — because wall times for fixed budgets are noisy while
+//! normalized rates are stable across runs on the same machine.
+//!
+//! Comparisons across different machines or build flags are unreliable;
+//! the `bench_env` block in each dump is echoed in the report so a
+//! mismatch is visible instead of silently trusted.
+
+use crate::util::json::Json;
+
+/// Default allowed relative throughput drop before a case is a regression.
+pub const DEFAULT_THRESHOLD: f64 = 0.15;
+
+/// One compared throughput figure.
+#[derive(Clone, Debug)]
+pub struct Delta {
+    /// Case or metric name.
+    pub name: String,
+    /// Baseline throughput (elements or units per second).
+    pub baseline: f64,
+    /// Current throughput.
+    pub current: f64,
+}
+
+impl Delta {
+    /// current / baseline; > 1 is an improvement.
+    pub fn ratio(&self) -> f64 {
+        if self.baseline == 0.0 {
+            return 1.0;
+        }
+        self.current / self.baseline
+    }
+
+    /// Whether this delta breaches the threshold (throughput dropped by
+    /// more than `threshold` relative to baseline).
+    pub fn regressed(&self, threshold: f64) -> bool {
+        self.ratio() < 1.0 - threshold
+    }
+}
+
+/// Full comparison result for one suite.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Suite name (from the baseline document).
+    pub suite: String,
+    /// Allowed relative drop.
+    pub threshold: f64,
+    /// Every throughput figure present in both documents.
+    pub deltas: Vec<Delta>,
+    /// Throughput figures in the baseline that the current run lost.
+    /// A vanished case is treated as a failure: a rename must refresh
+    /// the committed baseline in the same PR.
+    pub missing: Vec<String>,
+    /// True when the two dumps' `bench_env` blocks differ (different
+    /// machine, cpu count, or compiled target features). Informational:
+    /// the comparison still runs, but the report calls it out.
+    pub env_mismatch: bool,
+}
+
+impl Report {
+    /// Names of deltas breaching the threshold.
+    pub fn regressions(&self) -> Vec<&Delta> {
+        self.deltas
+            .iter()
+            .filter(|d| d.regressed(self.threshold))
+            .collect()
+    }
+
+    /// Whether the suite passes the guard.
+    pub fn passed(&self) -> bool {
+        self.missing.is_empty() && self.regressions().is_empty()
+    }
+
+    /// Human-readable multi-line summary.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "suite {}: {} figures compared, threshold {:.0}%\n",
+            self.suite,
+            self.deltas.len(),
+            self.threshold * 100.0
+        );
+        if self.env_mismatch {
+            out.push_str("WARNING: bench_env differs between baseline and current run\n");
+        }
+        for d in &self.deltas {
+            let flag = if d.regressed(self.threshold) {
+                "REGRESSION"
+            } else if d.ratio() > 1.0 + self.threshold {
+                "improved"
+            } else {
+                "ok"
+            };
+            out.push_str(&format!(
+                "  {:<44} {:>12.3e} -> {:>12.3e}  ({:+.1}%)  {flag}\n",
+                d.name,
+                d.baseline,
+                d.current,
+                (d.ratio() - 1.0) * 100.0
+            ));
+        }
+        for name in &self.missing {
+            out.push_str(&format!("  {name:<44} MISSING from current run\n"));
+        }
+        out.push_str(if self.passed() { "PASS\n" } else { "FAIL\n" });
+        out
+    }
+}
+
+/// Pull `(name, throughput)` pairs out of a `BENCH_<suite>.json` document:
+/// cases with `elements_per_sec` plus metrics whose unit contains `/s`.
+fn throughputs(doc: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    if let Some(cases) = doc.get("cases").and_then(Json::as_arr) {
+        for c in cases {
+            if let (Some(name), Some(tp)) = (
+                c.get("name").and_then(Json::as_str),
+                c.get("elements_per_sec").and_then(Json::as_f64),
+            ) {
+                out.push((name.to_string(), tp));
+            }
+        }
+    }
+    if let Some(metrics) = doc.get("metrics").and_then(Json::as_arr) {
+        for m in metrics {
+            let unit = m.get("unit").and_then(Json::as_str).unwrap_or("");
+            if !unit.contains("/s") {
+                continue;
+            }
+            if let (Some(name), Some(v)) = (
+                m.get("name").and_then(Json::as_str),
+                m.get("value").and_then(Json::as_f64),
+            ) {
+                out.push((name.to_string(), v));
+            }
+        }
+    }
+    out
+}
+
+/// Compare a current bench dump against a committed baseline.
+///
+/// Both arguments are parsed `BENCH_<suite>.json` documents. Errors only
+/// on structural problems (suite mismatch); regressions are reported in
+/// the returned [`Report`], not as `Err`.
+pub fn compare(baseline: &Json, current: &Json, threshold: f64) -> Result<Report, String> {
+    let base_suite = baseline
+        .get("suite")
+        .and_then(Json::as_str)
+        .ok_or("baseline has no suite field")?;
+    let cur_suite = current
+        .get("suite")
+        .and_then(Json::as_str)
+        .ok_or("current dump has no suite field")?;
+    if base_suite != cur_suite {
+        return Err(format!(
+            "suite mismatch: baseline is {base_suite}, current is {cur_suite}"
+        ));
+    }
+    let env_mismatch = match (baseline.get("bench_env"), current.get("bench_env")) {
+        (Some(a), Some(b)) => a.encode() != b.encode(),
+        // Older baselines predate the bench_env block; don't warn on them.
+        _ => false,
+    };
+    let cur: Vec<(String, f64)> = throughputs(current);
+    let mut deltas = Vec::new();
+    let mut missing = Vec::new();
+    for (name, base_tp) in throughputs(baseline) {
+        match cur.iter().find(|(n, _)| *n == name) {
+            Some((_, cur_tp)) => deltas.push(Delta {
+                name,
+                baseline: base_tp,
+                current: *cur_tp,
+            }),
+            None => missing.push(name),
+        }
+    }
+    Ok(Report {
+        suite: base_suite.to_string(),
+        threshold,
+        deltas,
+        missing,
+        env_mismatch,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(suite: &str, cases: Vec<(&str, f64)>, metrics: Vec<(&str, f64, &str)>) -> Json {
+        let cases = cases
+            .into_iter()
+            .map(|(name, tp)| {
+                Json::obj(vec![
+                    ("name", Json::Str(name.to_string())),
+                    ("median_ns", Json::Num(100.0)),
+                    ("elements_per_sec", Json::Num(tp)),
+                ])
+            })
+            .collect();
+        let metrics = metrics
+            .into_iter()
+            .map(|(name, v, unit)| {
+                Json::obj(vec![
+                    ("name", Json::Str(name.to_string())),
+                    ("value", Json::Num(v)),
+                    ("unit", Json::Str(unit.to_string())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("suite", Json::Str(suite.to_string())),
+            ("cases", Json::Arr(cases)),
+            ("metrics", Json::Arr(metrics)),
+        ])
+    }
+
+    #[test]
+    fn flags_regressions_beyond_threshold() {
+        let base = doc("ingest", vec![("a", 1000.0), ("b", 1000.0)], vec![]);
+        let cur = doc("ingest", vec![("a", 840.0), ("b", 860.0)], vec![]);
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD).unwrap();
+        // a dropped 16% (fails), b dropped 14% (passes).
+        let regs = r.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].name, "a");
+        assert!(!r.passed());
+        assert!(r.render().contains("REGRESSION"));
+    }
+
+    #[test]
+    fn passes_on_improvement_and_small_noise() {
+        let base = doc("ingest", vec![("a", 1000.0)], vec![("rate", 50.0, "op/s")]);
+        let cur = doc("ingest", vec![("a", 990.0)], vec![("rate", 75.0, "op/s")]);
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD).unwrap();
+        assert_eq!(r.deltas.len(), 2);
+        assert!(r.passed());
+        assert!(r.render().contains("PASS"));
+    }
+
+    #[test]
+    fn metric_units_without_per_second_are_ignored() {
+        let base = doc("persist", vec![], vec![("ratio", 1.5, "x"), ("tp", 10.0, "MB/s")]);
+        let cur = doc("persist", vec![], vec![("ratio", 0.1, "x"), ("tp", 9.5, "MB/s")]);
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD).unwrap();
+        // Only the MB/s metric is compared; the dimensionless ratio is not.
+        assert_eq!(r.deltas.len(), 1);
+        assert_eq!(r.deltas[0].name, "tp");
+        assert!(r.passed());
+    }
+
+    #[test]
+    fn missing_case_fails_the_guard() {
+        let base = doc("query", vec![("a", 1000.0), ("gone", 500.0)], vec![]);
+        let cur = doc("query", vec![("a", 1000.0)], vec![]);
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD).unwrap();
+        assert_eq!(r.missing, vec!["gone".to_string()]);
+        assert!(!r.passed());
+        assert!(r.render().contains("MISSING"));
+    }
+
+    #[test]
+    fn suite_mismatch_is_an_error() {
+        let base = doc("ingest", vec![], vec![]);
+        let cur = doc("query", vec![], vec![]);
+        assert!(compare(&base, &cur, DEFAULT_THRESHOLD).is_err());
+    }
+
+    #[test]
+    fn env_mismatch_is_flagged_but_not_fatal() {
+        let mut base = doc("ingest", vec![("a", 100.0)], vec![]);
+        let mut cur = doc("ingest", vec![("a", 100.0)], vec![]);
+        if let Json::Obj(m) = &mut base {
+            m.insert(
+                "bench_env".to_string(),
+                Json::obj(vec![("cpus", Json::Num(4.0))]),
+            );
+        }
+        if let Json::Obj(m) = &mut cur {
+            m.insert(
+                "bench_env".to_string(),
+                Json::obj(vec![("cpus", Json::Num(32.0))]),
+            );
+        }
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD).unwrap();
+        assert!(r.env_mismatch);
+        assert!(r.passed());
+        assert!(r.render().contains("WARNING"));
+    }
+}

@@ -6,10 +6,60 @@
 //! table output, plus a tiny `--filter` CLI so `cargo bench <name>` works
 //! the way users expect.
 
+pub mod compare;
+
 use crate::util::fmt as ufmt;
 use crate::util::json::Json;
 use std::hint::black_box;
 use std::time::{Duration, Instant};
+
+/// Compile-time detected target features relevant to the f64 row kernels.
+/// These come from `cfg!(target_feature = ...)`, so they describe what the
+/// *binary* was compiled for (e.g. `-Ctarget-cpu=native` lights more up),
+/// not what the host CPU happens to support at runtime.
+fn target_features() -> Vec<&'static str> {
+    let mut out = Vec::new();
+    if cfg!(target_feature = "sse2") {
+        out.push("sse2");
+    }
+    if cfg!(target_feature = "avx") {
+        out.push("avx");
+    }
+    if cfg!(target_feature = "avx2") {
+        out.push("avx2");
+    }
+    if cfg!(target_feature = "fma") {
+        out.push("fma");
+    }
+    if cfg!(target_feature = "avx512f") {
+        out.push("avx512f");
+    }
+    if cfg!(target_feature = "neon") {
+        out.push("neon");
+    }
+    out
+}
+
+/// Machine/build description embedded in every `BENCH_<suite>.json` so a
+/// committed baseline is self-describing: comparisons across different
+/// machines or build flags can be spotted instead of silently trusted.
+pub fn bench_env() -> Json {
+    Json::obj(vec![
+        ("cpus", Json::Num(crate::util::cpu::logical_cpus() as f64)),
+        ("arch", Json::Str(std::env::consts::ARCH.to_string())),
+        ("os", Json::Str(std::env::consts::OS.to_string())),
+        (
+            "target_features",
+            Json::Arr(
+                target_features()
+                    .into_iter()
+                    .map(|f| Json::Str(f.to_string()))
+                    .collect(),
+            ),
+        ),
+        ("debug_build", Json::Bool(cfg!(debug_assertions))),
+    ])
+}
 
 /// Result statistics of one benchmark case.
 #[derive(Clone, Debug)]
@@ -234,6 +284,8 @@ impl Bench {
                     ("median_ns", Json::Num(s.median().as_nanos() as f64)),
                     ("mean_ns", Json::Num(s.mean().as_nanos() as f64)),
                     ("std_ns", Json::Num(s.std().as_nanos() as f64)),
+                    ("iters_per_batch", Json::Num(s.iters_per_batch as f64)),
+                    ("batches", Json::Num(s.batch_times.len() as f64)),
                 ];
                 if let Some(tp) = s.throughput() {
                     fields.push(("elements_per_sec", Json::Num(tp)));
@@ -254,6 +306,18 @@ impl Bench {
             .collect();
         Json::obj(vec![
             ("suite", Json::Str(self.suite.clone())),
+            ("bench_env", bench_env()),
+            (
+                "timing",
+                Json::obj(vec![
+                    (
+                        "measure_ms",
+                        Json::Num(self.measure_time.as_millis() as f64),
+                    ),
+                    ("warmup_ms", Json::Num(self.warmup_time.as_millis() as f64)),
+                    ("batches", Json::Num(self.batches as f64)),
+                ]),
+            ),
             ("cases", Json::Arr(cases)),
             ("metrics", Json::Arr(metrics)),
         ])
@@ -329,6 +393,13 @@ mod tests {
         assert_eq!(cases.len(), 1);
         assert!(cases[0].get("median_ns").and_then(Json::as_f64).unwrap() > 0.0);
         assert!(cases[0].get("elements_per_sec").is_some());
+        assert!(cases[0].get("iters_per_batch").and_then(Json::as_f64).unwrap() >= 1.0);
+        assert_eq!(cases[0].get("batches").and_then(Json::as_f64), Some(4.0));
+        let env = j.get("bench_env").expect("bench_env block");
+        assert!(env.get("cpus").and_then(Json::as_f64).unwrap() >= 1.0);
+        assert!(env.get("target_features").and_then(Json::as_arr).is_some());
+        let timing = j.get("timing").expect("timing block");
+        assert_eq!(timing.get("batches").and_then(Json::as_f64), Some(4.0));
         let metrics = j.get("metrics").and_then(Json::as_arr).unwrap();
         assert_eq!(metrics.len(), 1);
         assert_eq!(metrics[0].get("value").and_then(Json::as_f64), Some(1.5));

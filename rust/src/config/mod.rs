@@ -204,6 +204,11 @@ pub struct PersistConfig {
     /// Background checkpoint interval in milliseconds (0 = only on
     /// explicit `checkpoint` requests).
     pub checkpoint_interval_ms: u64,
+    /// Group-commit window in microseconds when `fsync = true`: shard
+    /// appends inside the window share one fsync instead of paying one
+    /// each, and `sync` acks still wait for the group to reach disk.
+    /// 0 disables grouping (every append fsyncs individually).
+    pub group_commit_micros: u64,
 }
 
 impl Default for PersistConfig {
@@ -213,6 +218,7 @@ impl Default for PersistConfig {
             segment_bytes: 4 << 20,
             fsync: false,
             checkpoint_interval_ms: 0,
+            group_commit_micros: 0,
         }
     }
 }
@@ -227,12 +233,14 @@ impl Default for PersistConfig {
 /// backpressure = "block"     # block | drop | reject
 /// banked = true              # fuse same-spec streams into planar banks
 /// protocol = "auto"          # auto | v1 | v2 (wire codec policy)
+/// pin_cores = false          # pin shard workers to logical cores
 ///
 /// [persist]
 /// dir = "ata-state"          # enables durability (WAL + snapshots)
 /// segment_bytes = 4194304
 /// fsync = false
 /// checkpoint_interval_ms = 0 # 0 = manual checkpoints only
+/// group_commit_micros = 0    # batch fsyncs across shards (0 = off)
 ///
 /// [[stream]]
 /// name = "layer0.weight"
@@ -254,6 +262,10 @@ pub struct ServiceConfig {
     /// Durability: WAL + checkpoints + crash recovery (None = in-memory
     /// only, the pre-persist behaviour).
     pub persist: Option<PersistConfig>,
+    /// Pin shard workers to logical cores (Linux `sched_setaffinity`;
+    /// graceful no-op on other targets). Off by default — pinning only
+    /// helps when the service owns the machine.
+    pub pin_cores: bool,
     pub streams: Vec<StreamConfig>,
 }
 
@@ -267,6 +279,7 @@ impl Default for ServiceConfig {
             banked: true,
             protocol: crate::coordinator::protocol::ProtocolChoice::Auto,
             persist: None,
+            pin_cores: false,
             streams: Vec::new(),
         }
     }
@@ -311,6 +324,9 @@ impl ServiceConfig {
                 v.as_str().ok_or("service.protocol must be a string")?,
             )?;
         }
+        if let Some(v) = doc.get_path("service.pin_cores") {
+            cfg.pin_cores = v.as_bool().ok_or("service.pin_cores must be a boolean")?;
+        }
         if let Some(v) = doc.get_path("persist.dir") {
             let mut p = PersistConfig {
                 dir: v
@@ -331,6 +347,11 @@ impl ServiceConfig {
                 p.checkpoint_interval_ms = v
                     .as_u64()
                     .ok_or("persist.checkpoint_interval_ms must be an integer")?;
+            }
+            if let Some(v) = doc.get_path("persist.group_commit_micros") {
+                p.group_commit_micros = v
+                    .as_u64()
+                    .ok_or("persist.group_commit_micros must be an integer")?;
             }
             cfg.persist = Some(p);
         } else if doc.get_path("persist").is_some() {
@@ -372,6 +393,9 @@ impl ServiceConfig {
             }
             if p.segment_bytes < 4096 {
                 return Err("persist.segment_bytes must be >= 4096".into());
+            }
+            if p.group_commit_micros > 1_000_000 {
+                return Err("persist.group_commit_micros must be <= 1000000 (1s)".into());
             }
         }
         let mut seen = std::collections::BTreeSet::new();
@@ -478,6 +502,10 @@ averager = "gea(c=0.25)"
         );
         assert_eq!(cfg.streams.len(), 2);
         assert_eq!(cfg.streams[0].name, "w");
+        // Pinning is opt-in and defaults off.
+        assert!(!cfg.pin_cores);
+        let pinned = ServiceConfig::from_toml_text("[service]\npin_cores = true").unwrap();
+        assert!(pinned.pin_cores);
         // Default is negotiated (v2-preferring) auto.
         assert_eq!(
             ServiceConfig::default().protocol,
@@ -523,6 +551,14 @@ checkpoint_interval_ms = 500
         assert_eq!(p.segment_bytes, 65536);
         assert!(p.fsync);
         assert_eq!(p.checkpoint_interval_ms, 500);
+        // Group commit defaults to off and parses when given.
+        assert_eq!(p.group_commit_micros, 0);
+        let grouped = "[persist]\ndir = \"s\"\nfsync = true\ngroup_commit_micros = 250";
+        let g = ServiceConfig::from_toml_text(grouped).unwrap().persist.unwrap();
+        assert_eq!(g.group_commit_micros, 250);
+        // Absurd windows (>1s) are rejected.
+        let huge = "[persist]\ndir = \"s\"\ngroup_commit_micros = 2000000";
+        assert!(ServiceConfig::from_toml_text(huge).is_err());
         // Absent section → durability off.
         assert!(ServiceConfig::from_toml_text("").unwrap().persist.is_none());
         // A persist section without a dir is an error, not a silent

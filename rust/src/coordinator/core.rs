@@ -10,11 +10,13 @@ use crate::config::{BackpressurePolicy, PersistConfig, ServiceConfig};
 use crate::metrics::{names, Counter, Histogram, Registry};
 use crate::persist::codec::{self, Dec, Enc};
 use crate::persist::{checkpoint as snapfile, wal};
+use crate::util::cpu;
+use crate::util::json::Json;
 use crate::util::pool::{BufferPool, PooledBuf};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread;
 use std::time::Instant;
@@ -191,6 +193,25 @@ struct ShardInstruments {
     wal_append_errors: Arc<Counter>,
 }
 
+/// Everything [`Coordinator::with_options`] needs — the named-field
+/// form of the positional constructors, so adding a knob never ripples
+/// through every call site again.
+#[derive(Clone, Debug)]
+pub struct CoordinatorOptions {
+    /// Worker threads (min 1 enforced).
+    pub shards: usize,
+    /// Bounded per-shard queue depth (min 1 enforced).
+    pub queue_capacity: usize,
+    pub policy: BackpressurePolicy,
+    /// Fuse same-spec streams into planar banks.
+    pub banking: bool,
+    /// Durability (WAL + checkpoints) when set.
+    pub persist: Option<PersistConfig>,
+    /// Pin shard worker `i` to logical core `i % cores` (best-effort;
+    /// see [`crate::util::cpu::pin_current_thread`]).
+    pub pin_cores: bool,
+}
+
 /// Multi-stream anytime-averaging coordinator.
 ///
 /// Streams are pinned to shards by name hash; each shard is one worker
@@ -251,13 +272,14 @@ impl Coordinator {
     /// incarnation's state first.
     pub fn from_config(cfg: &ServiceConfig) -> Result<Coordinator, String> {
         cfg.validate()?;
-        let c = Coordinator::with_persist(
-            cfg.shards,
-            cfg.queue_capacity,
-            cfg.backpressure,
-            cfg.banked,
-            cfg.persist.as_ref(),
-        )?;
+        let c = Coordinator::with_options(CoordinatorOptions {
+            shards: cfg.shards,
+            queue_capacity: cfg.queue_capacity,
+            policy: cfg.backpressure,
+            banking: cfg.banked,
+            persist: cfg.persist.clone(),
+            pin_cores: cfg.pin_cores,
+        })?;
         for s in &cfg.streams {
             c.register(&s.name, s.dim, s.spec.clone())?;
         }
@@ -296,6 +318,27 @@ impl Coordinator {
         banking: bool,
         persist: Option<&PersistConfig>,
     ) -> Result<Coordinator, String> {
+        Coordinator::with_options(CoordinatorOptions {
+            shards,
+            queue_capacity,
+            policy,
+            banking,
+            persist: persist.cloned(),
+            pin_cores: false,
+        })
+    }
+
+    /// The full-option constructor every other constructor funnels into.
+    pub fn with_options(opts: CoordinatorOptions) -> Result<Coordinator, String> {
+        let CoordinatorOptions {
+            shards,
+            queue_capacity,
+            policy,
+            banking,
+            persist,
+            pin_cores,
+        } = opts;
+        let persist = persist.as_ref();
         let shards = shards.max(1);
         let metrics = Registry::new();
         let instruments = ShardInstruments {
@@ -308,23 +351,47 @@ impl Coordinator {
             checkpoint_lock: Mutex::new(()),
             checkpoint_duration: metrics.counter(names::CHECKPOINT_DURATION_NANOS),
         });
+        let cores = cpu::logical_cpus();
+        let pinned_counter = metrics.counter("shards_pinned");
         let mut v = Vec::with_capacity(shards);
         for i in 0..shards {
             let (tx, rx) = sync_channel::<ShardMsg>(queue_capacity.max(1));
             let inst = instruments.clone();
             let shard_wal = match (persist, &persist_shared) {
-                (Some(p), Some(ps)) => Some(wal::WalWriter::open(
-                    &ps.wal_dir(i),
-                    p.segment_bytes,
-                    p.fsync,
-                    metrics.counter(names::WAL_APPENDED_BYTES),
-                    metrics.counter(names::WAL_FSYNC_NANOS),
-                )?),
+                (Some(p), Some(ps)) => {
+                    let mut w = wal::WalWriter::open(
+                        &ps.wal_dir(i),
+                        p.segment_bytes,
+                        p.fsync,
+                        metrics.counter(names::WAL_APPENDED_BYTES),
+                        metrics.counter(names::WAL_FSYNC_NANOS),
+                    )?;
+                    if p.fsync && p.group_commit_micros > 0 {
+                        w.set_group_commit(
+                            p.group_commit_micros,
+                            metrics.counter(names::WAL_GROUP_COMMITS),
+                            metrics.counter(names::WAL_GROUP_APPENDS),
+                            metrics.counter(names::WAL_GROUP_STALL_NANOS),
+                        );
+                    }
+                    Some(w)
+                }
                 _ => None,
             };
+            let pin_to = pin_cores.then_some(i % cores);
+            let pinned = Arc::clone(&pinned_counter);
             let handle = thread::Builder::new()
                 .name(format!("ata-shard-{i}"))
-                .spawn(move || shard_loop(rx, inst, shard_wal))
+                .spawn(move || {
+                    // Best-effort: a refused mask (cgroup limits, exotic
+                    // targets) just leaves this worker unpinned.
+                    if let Some(core) = pin_to {
+                        if cpu::pin_current_thread(core) {
+                            pinned.inc();
+                        }
+                    }
+                    shard_loop(rx, inst, shard_wal)
+                })
                 .expect("spawn shard");
             v.push(Shard {
                 sender: tx,
@@ -357,6 +424,24 @@ impl Coordinator {
     /// Service metrics registry.
     pub fn metrics(&self) -> &Registry {
         &self.metrics
+    }
+
+    /// Snapshot every instrument as JSON (the wire `metrics` op),
+    /// refreshing the derived buffer-pool gauges first: the pools count
+    /// hits/misses internally (lock-free), and this is the one place
+    /// they surface.
+    pub fn export_metrics(&self) -> Json {
+        let hits = self.buffers.hits() + self.snap_buffers.hits();
+        let misses = self.buffers.misses() + self.snap_buffers.misses();
+        let total = hits + misses;
+        self.metrics.gauge(names::POOL_HITS).set(hits as f64);
+        self.metrics.gauge(names::POOL_MISSES).set(misses as f64);
+        self.metrics.gauge(names::POOL_REUSE_RATIO).set(if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        });
+        self.metrics.export()
     }
 
     /// The bank stripe for `(spec, dim)` on `shard`, if the spec has a
@@ -1013,13 +1098,14 @@ impl Coordinator {
             }
         }
         old_shards.sort_by_key(|s| s.0);
-        let c = Coordinator::with_persist(
-            cfg.shards,
-            cfg.queue_capacity,
-            cfg.backpressure,
-            cfg.banked,
-            Some(pcfg),
-        )?;
+        let c = Coordinator::with_options(CoordinatorOptions {
+            shards: cfg.shards,
+            queue_capacity: cfg.queue_capacity,
+            policy: cfg.backpressure,
+            banking: cfg.banked,
+            persist: Some(pcfg.clone()),
+            pin_cores: cfg.pin_cores,
+        })?;
         let replayed_counter = c.metrics.counter(names::RECOVERY_REPLAYED_BATCHES);
         let mut report = RecoveryReport {
             wal_clean: true,
@@ -1320,6 +1406,11 @@ const DRAIN_BATCH: usize = 1024;
 /// section is exported with the WAL position captured at that exact
 /// boundary — everything at or past the position is NOT in the section,
 /// everything before it is.
+///
+/// Under `persist.group_commit_micros` the WAL defers its fsyncs into
+/// bounded-window groups; the loop wakes at the group deadline when
+/// idle and forces a commit before any sync/shutdown ack, so grouping
+/// changes fsync *timing* only, never the ack guarantees.
 fn shard_loop(
     rx: Receiver<ShardMsg>,
     instruments: ShardInstruments,
@@ -1328,9 +1419,26 @@ fn shard_loop(
     // Staging reused across cycles, keyed by bank index.
     let mut stage: HashMap<usize, (Arc<Bank>, Vec<BankJob>)> = HashMap::new();
     loop {
-        let first = match rx.recv() {
-            Ok(m) => m,
-            Err(_) => break,
+        // With an open WAL group, block only until its commit deadline:
+        // an idle shard must still sync acked appends within the window.
+        let first = match wal.as_ref().and_then(wal::WalWriter::group_due_in) {
+            Some(due) => match rx.recv_timeout(due) {
+                Ok(m) => m,
+                Err(RecvTimeoutError::Timeout) => {
+                    if let Some(w) = wal.as_mut() {
+                        if let Err(e) = w.commit(true) {
+                            instruments.wal_append_errors.inc();
+                            crate::log_warn!("persist", "WAL group commit: {e}");
+                        }
+                    }
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+            },
+            None => match rx.recv() {
+                Ok(m) => m,
+                Err(_) => break,
+            },
         };
         let mut acks: Vec<SyncSender<()>> = Vec::new();
         let mut shutdown = false;
@@ -1427,6 +1535,18 @@ fn shard_loop(
         }
         flush_stage(&mut stage, &instruments);
         instruments.drain_cycles.inc();
+        // Durable-ack contract: a sync barrier (and shutdown) promises
+        // everything before it is applied AND — under fsync — on disk,
+        // so any open WAL group commits before the acks fire. No-op
+        // when nothing is dirty.
+        if !acks.is_empty() || shutdown {
+            if let Some(w) = wal.as_mut() {
+                if let Err(e) = w.commit(true) {
+                    instruments.wal_append_errors.inc();
+                    crate::log_warn!("persist", "WAL group commit at barrier: {e}");
+                }
+            }
+        }
         for ack in acks {
             let _ = ack.send(());
         }
@@ -2046,5 +2166,51 @@ mod tests {
         // Empty prefix selects everything.
         let r = c.query(&Query::default());
         assert_eq!(r.stats.len(), 4);
+    }
+
+    #[test]
+    fn export_metrics_refreshes_pool_reuse_gauges() {
+        let c = Coordinator::new(1, 64, BackpressurePolicy::Block);
+        c.register("a", 2, gea()).unwrap();
+        for i in 0..4 {
+            c.push_many("a", 1, &[i as f64, 1.0]).unwrap();
+            c.sync().unwrap();
+            let _ = c.snapshot("a").unwrap();
+        }
+        let j = c.export_metrics();
+        let ratio = j
+            .get("gauge.pool_reuse_ratio")
+            .and_then(Json::as_f64)
+            .expect("reuse ratio exported");
+        assert!((0.0..=1.0).contains(&ratio), "ratio={ratio}");
+        let hits = j.get("gauge.pool_hits").and_then(Json::as_f64).unwrap();
+        let misses = j.get("gauge.pool_misses").and_then(Json::as_f64).unwrap();
+        assert!(hits + misses >= 8.0, "push + snapshot both take buffers");
+        // Synced pushes recycle their batch buffers, so reuse is real.
+        assert!(hits > 0.0);
+    }
+
+    #[test]
+    fn with_options_pinning_is_transparent() {
+        // Pinning is best-effort and must never change behaviour —
+        // the full ingest/snapshot/sync surface works identically.
+        let c = Coordinator::with_options(CoordinatorOptions {
+            shards: 2,
+            queue_capacity: 64,
+            policy: BackpressurePolicy::Block,
+            banking: true,
+            persist: None,
+            pin_cores: true,
+        })
+        .unwrap();
+        c.register("w", 3, gea()).unwrap();
+        for i in 1..=20 {
+            c.push("w", vec![i as f64; 3]).unwrap();
+        }
+        c.sync().unwrap();
+        assert_eq!(c.snapshot("w").unwrap().t, 20);
+        // On Linux both workers pin; elsewhere the counter stays 0.
+        let pinned = c.metrics().counter("shards_pinned").get();
+        assert!(pinned <= 2);
     }
 }

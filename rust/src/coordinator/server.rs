@@ -476,7 +476,7 @@ fn dispatch(req: Request, c: &Coordinator) -> Response {
             Err(e) => Response::Err(e),
         },
         Request::Metrics => {
-            let mut fields = vec![("metrics", c.metrics().export())];
+            let mut fields = vec![("metrics", c.export_metrics())];
             let stats: Vec<Json> = c
                 .stream_stats()
                 .into_iter()

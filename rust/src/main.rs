@@ -11,6 +11,7 @@
 //! ata restore    --dir state [...]      # offline crash recovery + report
 //! ata artifacts  [--dir artifacts]      # validate AOT artifacts load+run
 //! ata weights    --spec "gea(c=0.5)" --t 200   # weight-profile analysis
+//! ata bench-compare <baseline.json> <current.json> [--threshold 0.15]
 //! ```
 
 use ata::averagers::{staleness_report, AveragerSpec};
@@ -68,7 +69,8 @@ fn top_help() -> String {
          \x20 checkpoint   snapshot a running durable service over the wire\n\
          \x20 restore      offline crash recovery of a persist directory\n\
          \x20 artifacts    validate the AOT artifacts (load + execute)\n\
-         \x20 weights      weight/staleness analysis of an averager spec\n\n\
+         \x20 weights      weight/staleness analysis of an averager spec\n\
+         \x20 bench-compare  diff a fresh BENCH json against a committed baseline\n\n\
          Run `ata <command> --help` for details.",
         ata::VERSION
     )
@@ -88,6 +90,7 @@ fn run(args: &[String]) -> Result<(), CliRunError> {
         "restore" => cmd_restore(rest),
         "artifacts" => cmd_artifacts(rest),
         "weights" => cmd_weights(rest),
+        "bench-compare" => cmd_bench_compare(rest),
         "--help" | "-h" | "help" => Err(CliRunError::Help(top_help())),
         other => Err(CliRunError::Fail(format!(
             "unknown command '{other}'; try --help"
@@ -471,6 +474,48 @@ fn cmd_artifacts(args: &[String]) -> Result<(), CliRunError> {
     }
     println!("all artifacts load and execute");
     Ok(())
+}
+
+fn cmd_bench_compare(args: &[String]) -> Result<(), CliRunError> {
+    let spec = CommandSpec::new(
+        "bench-compare",
+        "compare a fresh bench dump against a committed BENCH_<suite>.json baseline",
+    )
+    .positional("baseline", "committed baseline (e.g. BENCH_ingest.json)")
+    .positional("current", "freshly generated dump to check")
+    .opt(
+        "threshold",
+        "0.15",
+        "allowed relative throughput drop before failing (0.15 = 15%)",
+    );
+    let p = parse_with(&spec, args)?;
+    let load = |idx: usize, role: &str| -> Result<ata::util::json::Json, CliRunError> {
+        let path = p
+            .positional(idx)
+            .ok_or_else(|| format!("bench-compare requires a {role} path"))?;
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        ata::util::json::Json::parse(&text)
+            .map_err(|e| CliRunError::Fail(format!("parse {path}: {e}")))
+    };
+    let baseline = load(0, "baseline")?;
+    let current = load(1, "current")?;
+    let threshold = p.f64("threshold").map_err(|e| e.to_string())?;
+    if !(0.0..1.0).contains(&threshold) {
+        return Err("--threshold must be in [0, 1)".to_string().into());
+    }
+    let report = ata::benchkit::compare::compare(&baseline, &current, threshold)?;
+    print!("{}", report.render());
+    if report.passed() {
+        Ok(())
+    } else {
+        Err(format!(
+            "{} throughput regression(s), {} missing figure(s)",
+            report.regressions().len(),
+            report.missing.len()
+        )
+        .into())
+    }
 }
 
 fn cmd_weights(args: &[String]) -> Result<(), CliRunError> {

@@ -5,6 +5,7 @@
 //! All instruments are lock-free (`AtomicU64`) so they can sit on the
 //! coordinator's hot path; floats are stored as bit patterns.
 
+use crate::util::cpu::CachePadded;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -51,6 +52,22 @@ use std::sync::{Arc, Mutex};
 pub mod names {
     pub const WAL_APPENDED_BYTES: &str = "wal_appended_bytes";
     pub const WAL_FSYNC_NANOS: &str = "wal_fsync_nanos";
+    /// Group commits executed (one fsync each) when
+    /// `persist.group_commit_micros > 0`.
+    pub const WAL_GROUP_COMMITS: &str = "wal_group_commits";
+    /// Appends amortized across those group commits (group size =
+    /// `wal_group_appends / wal_group_commits`).
+    pub const WAL_GROUP_APPENDS: &str = "wal_group_appends";
+    /// Cumulative nanoseconds appends spent waiting dirty before their
+    /// group's fsync landed (commit stall).
+    pub const WAL_GROUP_STALL_NANOS: &str = "wal_group_stall_nanos";
+    /// Buffer-pool takes served by a recycled allocation vs fresh ones.
+    /// All three surface as `gauge.*` — the pools account internally and
+    /// `Coordinator::export_metrics` refreshes the gauges at scrape
+    /// time; `pool_reuse_ratio` is hits / (hits + misses).
+    pub const POOL_HITS: &str = "pool_hits";
+    pub const POOL_MISSES: &str = "pool_misses";
+    pub const POOL_REUSE_RATIO: &str = "pool_reuse_ratio";
     pub const CHECKPOINT_DURATION_NANOS: &str = "checkpoint_duration_nanos";
     pub const RECOVERY_REPLAYED_BATCHES: &str = "recovery_replayed_batches";
     pub const CONNECTIONS_V1: &str = "wire_connections_v1";
@@ -64,10 +81,13 @@ pub mod names {
     pub const QUERY_STREAMS_MATCHED: &str = "query_streams_matched";
 }
 
-/// Monotone event counter.
+/// Monotone event counter. The atomic is padded to its own cache line:
+/// counters are handed out as individual `Arc`s and bumped from
+/// different shard workers, so two hot counters packed into one line by
+/// the allocator would false-share on every increment.
 #[derive(Default)]
 pub struct Counter {
-    value: AtomicU64,
+    value: CachePadded<AtomicU64>,
 }
 
 impl Counter {
@@ -90,10 +110,11 @@ impl Counter {
     }
 }
 
-/// Last-write-wins gauge holding an `f64`.
+/// Last-write-wins gauge holding an `f64`, cache-line padded like
+/// [`Counter`] (same shared-`Arc`, cross-thread write pattern).
 #[derive(Default)]
 pub struct Gauge {
-    bits: AtomicU64,
+    bits: CachePadded<AtomicU64>,
 }
 
 impl Gauge {

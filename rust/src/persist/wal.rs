@@ -25,6 +25,19 @@
 //! panicking — at the first torn, truncated, or bit-flipped record,
 //! which is exactly the crash-recovery contract: every fully-framed
 //! record before the corruption point is recovered, nothing after.
+//!
+//! ## Group commit
+//!
+//! With `fsync = true` every append pays a disk sync — the durability
+//! ceiling of the whole service. [`WalWriter::set_group_commit`] opens a
+//! bounded window (`persist.group_commit_micros`): appends inside it are
+//! written immediately but share ONE deferred `sync_data`, issued when
+//! the window elapses, on segment rotation, or when a caller forces a
+//! [`WalWriter::commit`] (the coordinator forces one before acking
+//! `sync` and before checkpoints, so the durable-ack contract is
+//! unchanged). Grouping only re-times fsyncs — the bytes written are
+//! identical to per-append mode, so replay and recovery are oblivious
+//! to it.
 
 use super::codec::{crc32, Dec, Enc, FORMAT_VERSION, WAL_MAGIC};
 use crate::metrics::Counter;
@@ -32,7 +45,7 @@ use std::fs::{self, File, OpenOptions};
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Byte length of the segment header (magic + version).
 const HEADER_LEN: u64 = 6;
@@ -168,6 +181,15 @@ pub struct WalWriter {
     frame: Vec<u8>,
     appended_bytes: Arc<Counter>,
     fsync_nanos: Arc<Counter>,
+    /// Group-commit window (µs); 0 = fsync every append (when `fsync`).
+    group_commit_micros: u64,
+    /// Appends written since the last sync while grouping.
+    dirty_appends: u64,
+    /// When the oldest un-synced append of the open group was written.
+    group_opened: Option<Instant>,
+    group_commits: Arc<Counter>,
+    group_appends: Arc<Counter>,
+    group_stall_nanos: Arc<Counter>,
 }
 
 impl WalWriter {
@@ -196,7 +218,93 @@ impl WalWriter {
             frame: Vec::new(),
             appended_bytes,
             fsync_nanos,
+            group_commit_micros: 0,
+            dirty_appends: 0,
+            group_opened: None,
+            group_commits: Arc::new(Counter::new()),
+            group_appends: Arc::new(Counter::new()),
+            group_stall_nanos: Arc::new(Counter::new()),
         })
+    }
+
+    /// Enable group commit: appends stop fsyncing individually and
+    /// instead share one sync per `micros` window (see module docs).
+    /// Only meaningful with `fsync = true`; `micros = 0` restores
+    /// per-append syncing. The counters record fsyncs issued, appends
+    /// covered (size = appends/commits), and oldest-append stall time.
+    pub fn set_group_commit(
+        &mut self,
+        micros: u64,
+        commits: Arc<Counter>,
+        appends: Arc<Counter>,
+        stall_nanos: Arc<Counter>,
+    ) {
+        self.group_commit_micros = micros;
+        self.group_commits = commits;
+        self.group_appends = appends;
+        self.group_stall_nanos = stall_nanos;
+    }
+
+    /// `true` while appends are awaiting a group sync — the shard loop
+    /// polls with a timeout instead of blocking indefinitely so an idle
+    /// shard still commits within the window.
+    pub fn dirty(&self) -> bool {
+        self.dirty_appends > 0
+    }
+
+    /// The grouping window, when group commit is active.
+    pub fn group_window(&self) -> Option<Duration> {
+        (self.fsync && self.group_commit_micros > 0)
+            .then(|| Duration::from_micros(self.group_commit_micros))
+    }
+
+    /// Time until the open group is due (zero when already past due);
+    /// `None` when nothing is dirty or grouping is off. The shard loop
+    /// uses this as its receive timeout so an idle worker wakes exactly
+    /// at the commit deadline.
+    pub fn group_due_in(&self) -> Option<Duration> {
+        let window = self.group_window()?;
+        let opened = self.group_opened?;
+        Some(window.saturating_sub(opened.elapsed()))
+    }
+
+    /// Sync the open group to disk. `force` commits immediately (Sync
+    /// acks, checkpoints); otherwise the sync happens only once the
+    /// window has elapsed. Returns whether an fsync was issued. No-op
+    /// when nothing is dirty.
+    pub fn commit(&mut self, force: bool) -> Result<bool, String> {
+        if self.dirty_appends == 0 {
+            return Ok(false);
+        }
+        let window = Duration::from_micros(self.group_commit_micros);
+        let due = force || self.group_opened.map_or(true, |t| t.elapsed() >= window);
+        if !due {
+            return Ok(false);
+        }
+        self.sync_group()?;
+        Ok(true)
+    }
+
+    /// Fsync the file and settle the open group's accounting.
+    fn sync_group(&mut self) -> Result<(), String> {
+        let t0 = Instant::now();
+        self.file
+            .sync_data()
+            .map_err(|e| format!("WAL fsync: {e}"))?;
+        self.fsync_nanos.add(t0.elapsed().as_nanos() as u64);
+        self.settle_group();
+        Ok(())
+    }
+
+    /// Record group metrics and reset dirty state (the file is synced —
+    /// by [`WalWriter::sync_group`] or a rotation's segment sync).
+    fn settle_group(&mut self) {
+        if let Some(opened) = self.group_opened.take() {
+            self.group_stall_nanos.add(opened.elapsed().as_nanos() as u64);
+        }
+        self.group_commits.add(1);
+        self.group_appends.add(self.dirty_appends);
+        self.dirty_appends = 0;
     }
 
     /// The position the NEXT record will be written at; everything
@@ -262,11 +370,22 @@ impl WalWriter {
         self.offset += self.frame.len() as u64;
         self.appended_bytes.add(self.frame.len() as u64);
         if self.fsync {
-            let t0 = Instant::now();
-            self.file
-                .sync_data()
-                .map_err(|e| format!("WAL fsync: {e}"))?;
-            self.fsync_nanos.add(t0.elapsed().as_nanos() as u64);
+            if self.group_commit_micros == 0 {
+                let t0 = Instant::now();
+                self.file
+                    .sync_data()
+                    .map_err(|e| format!("WAL fsync: {e}"))?;
+                self.fsync_nanos.add(t0.elapsed().as_nanos() as u64);
+            } else {
+                // Defer: join (or open) the group; sync only once the
+                // window has elapsed so a sustained burst still bounds
+                // the oldest append's time-to-durability.
+                self.dirty_appends += 1;
+                let opened = *self.group_opened.get_or_insert_with(Instant::now);
+                if opened.elapsed() >= Duration::from_micros(self.group_commit_micros) {
+                    self.sync_group()?;
+                }
+            }
         }
         if self.offset >= self.segment_bytes {
             self.rotate()?;
@@ -275,8 +394,12 @@ impl WalWriter {
     }
 
     /// Flush written bytes to the OS (cheap; full durability needs the
-    /// `fsync` mode). Called at checkpoint boundaries.
+    /// `fsync` mode). Called at checkpoint boundaries; settles any open
+    /// group first so a checkpoint never records an un-synced position.
     pub fn flush(&mut self) -> Result<(), String> {
+        if self.dirty_appends > 0 {
+            self.sync_group()?;
+        }
         self.file.flush().map_err(|e| format!("WAL flush: {e}"))
     }
 
@@ -286,6 +409,10 @@ impl WalWriter {
         let t0 = Instant::now();
         let _ = self.file.sync_data();
         self.fsync_nanos.add(t0.elapsed().as_nanos() as u64);
+        // That sync also covered any open group on this segment.
+        if self.dirty_appends > 0 {
+            self.settle_group();
+        }
         // Open first, bump after: a failed open must leave the writer
         // consistent (still appending to the old segment), or the
         // reported position would point at a file holding none of the
@@ -551,6 +678,80 @@ mod tests {
         assert!(summary.clean);
         assert_eq!(summary.records, 3);
         assert_eq!(got[0], push("s", &[0.0]));
+    }
+
+    #[test]
+    fn group_commit_defers_fsync_and_keeps_bytes_identical() {
+        // Same records through per-append fsync and a grouped writer:
+        // the on-disk bytes must match exactly (grouping re-times
+        // syncs, it never re-frames), and the group metrics must
+        // account for every append.
+        let per_dir = temp_dir("wal-group-per");
+        let grp_dir = temp_dir("wal-group-grp");
+        let (ab1, fs1) = counters();
+        let (ab2, fs2) = counters();
+        let mut per = WalWriter::open(&per_dir, 1 << 20, true, ab1, fs1).unwrap();
+        let mut grp = WalWriter::open(&grp_dir, 1 << 20, true, ab2, fs2).unwrap();
+        let (commits, appends) = counters();
+        let stall = Arc::new(Counter::new());
+        // A wide window: nothing syncs until the forced commit below.
+        grp.set_group_commit(500_000, commits.clone(), appends.clone(), stall.clone());
+        for i in 0..8 {
+            let rec = push("s", &[i as f64, 0.5 * i as f64]);
+            per.append(&rec).unwrap();
+            grp.append(&rec).unwrap();
+        }
+        assert!(grp.dirty());
+        assert!(grp.group_window().is_some());
+        // Window not elapsed → unforced commit declines.
+        assert!(!grp.commit(false).unwrap());
+        assert!(grp.commit(true).unwrap());
+        assert!(!grp.dirty());
+        assert_eq!(commits.get(), 1);
+        assert_eq!(appends.get(), 8);
+        assert!(stall.get() > 0);
+        let a = fs::read(segment_path(&per_dir, 0)).unwrap();
+        let b = fs::read(segment_path(&grp_dir, 0)).unwrap();
+        assert_eq!(a, b, "group commit must not change WAL bytes");
+        // Replay sees every grouped record.
+        let mut n = 0u64;
+        let summary = replay(
+            &grp_dir,
+            WalPosition {
+                segment: 0,
+                offset: 0,
+            },
+            |_| n += 1,
+        )
+        .unwrap();
+        assert!(summary.clean);
+        assert_eq!(n, 8);
+    }
+
+    #[test]
+    fn group_commit_settles_on_flush_and_rotation() {
+        let dir = temp_dir("wal-group-flush");
+        let (ab, fs_) = counters();
+        let mut w = WalWriter::open(&dir, 1 << 20, true, ab, fs_).unwrap();
+        let (commits, appends) = counters();
+        w.set_group_commit(500_000, commits.clone(), appends.clone(), Arc::new(Counter::new()));
+        w.append(&push("s", &[1.0])).unwrap();
+        assert!(w.dirty());
+        // flush (the checkpoint path) must never leave a dirty group.
+        w.flush().unwrap();
+        assert!(!w.dirty());
+        assert_eq!(commits.get(), 1);
+        // Tiny segments: rotation's segment sync settles the group too.
+        let dir2 = temp_dir("wal-group-rotate");
+        let (ab2, fs2) = counters();
+        let mut w2 = WalWriter::open(&dir2, 16, true, ab2, fs2).unwrap();
+        let (c2, a2) = counters();
+        w2.set_group_commit(500_000, c2.clone(), a2.clone(), Arc::new(Counter::new()));
+        for i in 0..4 {
+            w2.append(&push("s", &[i as f64])).unwrap();
+        }
+        assert!(!w2.dirty(), "every append rotated, settling its group");
+        assert_eq!(a2.get(), 4);
     }
 
     #[test]

@@ -1,0 +1,142 @@
+//! CPU topology helpers for the coordinator's hot path: cache-line
+//! padding to kill false sharing, and opt-in worker→core pinning.
+//!
+//! The offline registry ships no `libc`, so pinning talks to the kernel
+//! directly through the `sched_setaffinity` syscall on Linux
+//! x86_64/aarch64 and degrades to a graceful no-op everywhere else
+//! (macOS has no public affinity API; other targets simply skip it).
+//! Pinning is best-effort by design: a `false` return means the shard
+//! keeps running unpinned, never that it fails.
+
+/// Pads (and aligns) `T` to a 64-byte cache line so two instances can
+/// never share a line — the fix for false sharing between per-shard
+/// counters that are written from different worker threads. `Deref`
+/// keeps call sites transparent.
+#[derive(Default, Debug)]
+#[repr(align(64))]
+pub struct CachePadded<T>(T);
+
+impl<T> CachePadded<T> {
+    pub const fn new(value: T) -> CachePadded<T> {
+        CachePadded(value)
+    }
+
+    /// Consume the padding, returning the inner value.
+    pub fn into_inner(self) -> T {
+        self.0
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.0
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.0
+    }
+}
+
+/// CPU-set capacity of the raw affinity mask (bits). Matches the
+/// kernel's default `CONFIG_NR_CPUS` ceiling on the targets we pin.
+const MASK_BITS: usize = 1024;
+
+/// Pin the calling thread to `core` (a logical CPU index). Returns
+/// `true` when the kernel accepted the mask; `false` on unsupported
+/// targets, out-of-range cores, or kernel refusal — callers treat a
+/// `false` as "run unpinned", never as an error.
+pub fn pin_current_thread(core: usize) -> bool {
+    if core >= MASK_BITS {
+        return false;
+    }
+    pin_impl(core)
+}
+
+/// Number of logical CPUs (for choosing pin targets); 1 when unknown.
+pub fn logical_cpus() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn pin_impl(core: usize) -> bool {
+    let mut mask = [0u64; MASK_BITS / 64];
+    mask[core / 64] = 1u64 << (core % 64);
+    // sched_setaffinity(pid = 0 /* self */, len, mask) — syscall 203.
+    let ret: isize;
+    unsafe {
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") 203isize => ret,
+            in("rdi") 0usize,
+            in("rsi") std::mem::size_of_val(&mask),
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack, readonly)
+        );
+    }
+    ret == 0
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+fn pin_impl(core: usize) -> bool {
+    let mut mask = [0u64; MASK_BITS / 64];
+    mask[core / 64] = 1u64 << (core % 64);
+    // sched_setaffinity(pid = 0 /* self */, len, mask) — syscall 122.
+    let ret: isize;
+    unsafe {
+        core::arch::asm!(
+            "svc 0",
+            in("x8") 122isize,
+            inlateout("x0") 0isize => ret,
+            in("x1") std::mem::size_of_val(&mask),
+            in("x2") mask.as_ptr(),
+            options(nostack, readonly)
+        );
+    }
+    ret == 0
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn pin_impl(_core: usize) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn cache_padded_is_line_sized_and_transparent() {
+        assert_eq!(std::mem::align_of::<CachePadded<AtomicU64>>(), 64);
+        assert!(std::mem::size_of::<CachePadded<AtomicU64>>() >= 64);
+        let c = CachePadded::new(7u64);
+        assert_eq!(*c, 7);
+        let mut m = CachePadded::new(vec![1]);
+        m.push(2);
+        assert_eq!(m.into_inner(), vec![1, 2]);
+    }
+
+    #[test]
+    fn pinning_is_best_effort() {
+        // On Linux this genuinely pins to core 0 (always present); on
+        // other targets it must return false without side effects.
+        let ok = pin_current_thread(0);
+        if cfg!(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))) {
+            assert!(ok, "pinning to core 0 should succeed on linux");
+        } else {
+            assert!(!ok);
+        }
+        // Out-of-range cores are rejected locally, never passed down.
+        assert!(!pin_current_thread(usize::MAX));
+        assert!(logical_cpus() >= 1);
+    }
+}

@@ -10,9 +10,12 @@
 //! * [`logging`] — leveled, timestamped logger with env control.
 //! * [`pool`] — a worker threadpool (parallel experiment runs, coordinator
 //!   shards, service connections).
+//! * [`cpu`] — cache-line padding and opt-in shard→core pinning (raw
+//!   `sched_setaffinity`, graceful no-op off Linux).
 //! * [`fmt`] — human-readable number/duration/bytes formatting for reports.
 
 pub mod cli;
+pub mod cpu;
 pub mod fmt;
 pub mod json;
 pub mod logging;

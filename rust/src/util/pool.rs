@@ -6,6 +6,7 @@
 //! 100-run experiment fan-out), and graceful shutdown on drop.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -36,6 +37,11 @@ struct PoolShared<T> {
     max_buf_elems: usize,
     /// Total idle capacity budget (elements) across the pool.
     max_total_elems: usize,
+    /// Takes served by a recycled allocation (vs fresh `Vec`s below) —
+    /// `reuse_ratio` is the pool's effectiveness gauge.
+    hits: AtomicU64,
+    /// Takes that had to allocate fresh.
+    misses: AtomicU64,
 }
 
 /// A pool of reusable `Vec<T>` allocations (`T = f64` by default).
@@ -90,6 +96,8 @@ impl<T> BufferPool<T> {
                 max_pooled: max_pooled.max(1),
                 max_buf_elems: max_buf_elems.max(1),
                 max_total_elems: max_total_elems.max(1),
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
             }),
         }
     }
@@ -102,9 +110,13 @@ impl<T> BufferPool<T> {
             match free.bufs.pop() {
                 Some(v) => {
                     free.elems -= v.capacity();
+                    self.shared.hits.fetch_add(1, Ordering::Relaxed);
                     v
                 }
-                None => Vec::new(),
+                None => {
+                    self.shared.misses.fetch_add(1, Ordering::Relaxed);
+                    Vec::new()
+                }
             }
         };
         v.clear();
@@ -117,6 +129,29 @@ impl<T> BufferPool<T> {
     /// Buffers currently parked (tests/metrics).
     pub fn idle(&self) -> usize {
         self.shared.free.lock().expect("buffer pool").bufs.len()
+    }
+
+    /// Takes served by a recycled allocation.
+    pub fn hits(&self) -> u64 {
+        self.shared.hits.load(Ordering::Relaxed)
+    }
+
+    /// Takes that allocated fresh.
+    pub fn misses(&self) -> u64 {
+        self.shared.misses.load(Ordering::Relaxed)
+    }
+
+    /// `hits / (hits + misses)` — 0.0 before the first take. The
+    /// coordinator exports this as `gauge.pool_reuse_ratio`; sustained
+    /// low values mean the retention caps are too tight for the load.
+    pub fn reuse_ratio(&self) -> f64 {
+        let h = self.hits();
+        let total = h + self.misses();
+        if total == 0 {
+            0.0
+        } else {
+            h as f64 / total as f64
+        }
     }
 }
 
@@ -137,6 +172,17 @@ impl<T: Clone + Default> BufferPool<T> {
     /// nothing.
     pub fn take_len(&self, len: usize) -> PooledBuf<T> {
         let mut buf = self.take_empty();
+        if buf.data.capacity() < len {
+            // Fresh (or growing) allocation: write the WHOLE capacity
+            // once, here, then trim. A plain `resize(len)` would leave
+            // the spare capacity's pages untouched, deferring their
+            // soft page faults to the first hot-path write; pre-touching
+            // moves that cost to the (already slow) miss path. Recycled
+            // buffers skip this — their pages are already mapped.
+            buf.data.reserve_exact(len);
+            let cap = buf.data.capacity();
+            buf.data.resize(cap, T::default());
+        }
         buf.data.resize(len, T::default());
         buf
     }
@@ -465,6 +511,26 @@ mod tests {
         drop(tiny.take(&[0.0; 4]));
         drop(tiny.take(&[0.0; 4])); // 4 + 4 > total budget of 6
         assert_eq!(tiny.idle(), 1);
+    }
+
+    #[test]
+    fn pool_counts_hits_misses_and_reuse_ratio() {
+        let pool = BufferPool::new(4);
+        assert_eq!(pool.reuse_ratio(), 0.0);
+        drop(pool.take(&[1.0])); // miss (cold), then parked
+        let b = pool.take(&[2.0]); // hit
+        assert_eq!(pool.hits(), 1);
+        assert_eq!(pool.misses(), 1);
+        assert_eq!(pool.reuse_ratio(), 0.5);
+        let c = pool.take(&[3.0]); // miss (the only parked buf is out)
+        drop(b);
+        drop(c);
+        drop(pool.take_len(8)); // hit, and pre-touches its grown capacity
+        assert_eq!(pool.hits(), 2);
+        assert_eq!(pool.misses(), 2);
+        // Clones share the free list AND the accounting.
+        let alias = pool.clone();
+        assert_eq!(alias.hits(), 2);
     }
 
     #[test]

@@ -395,6 +395,7 @@ fn persist_cfg(dir: &Path, shards: usize) -> ServiceConfig {
             segment_bytes: 16 << 10,
             fsync: false,
             checkpoint_interval_ms: 0,
+            group_commit_micros: 0,
         }),
         ..Default::default()
     }
@@ -467,6 +468,128 @@ fn kill_and_recover_restores_every_spec_exactly() {
         );
     }
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A durable config with `fsync = true` and a wide group-commit window
+/// (everything rides on forced commits at sync barriers).
+fn group_commit_cfg(dir: &Path, micros: u64) -> ServiceConfig {
+    ServiceConfig {
+        shards: 1,
+        queue_capacity: 256,
+        persist: Some(PersistConfig {
+            dir: dir.display().to_string(),
+            segment_bytes: 1 << 20,
+            fsync: true,
+            checkpoint_interval_ms: 0,
+            group_commit_micros: micros,
+        }),
+        ..Default::default()
+    }
+}
+
+/// Concatenated bytes of every WAL segment under `dir/wal/shard-0`.
+fn shard0_wal_segments(dir: &Path) -> Vec<u8> {
+    let shard = dir.join("wal").join("shard-0");
+    let mut out = Vec::new();
+    for seg in wal::list_segments(&shard) {
+        let path = shard.join(format!("seg-{seg:08}.wal"));
+        out.extend_from_slice(&std::fs::read(path).unwrap());
+    }
+    out
+}
+
+#[test]
+fn group_commit_crash_recovers_every_acked_batch() {
+    // Fault injection: acked (sync-barrier) batches ride a forced group
+    // commit, so they must survive even when the crash tears off the
+    // un-acked WAL tail written after the last barrier.
+    let dir = temp_dir("persist-group-kill");
+    let cfg = group_commit_cfg(&dir, 100_000);
+    let d = 2;
+    let acked_batches = 10usize;
+    let per_batch = 4usize;
+    {
+        let durable = Coordinator::from_config(&cfg).unwrap();
+        durable.register("g", d, AveragerSpec::Gea { c: 0.5 }).unwrap();
+        for b in 0..acked_batches {
+            let data = flat_batch(0, (b * per_batch) as u64, per_batch, d);
+            durable.push_many("g", per_batch, &data).unwrap();
+            durable.sync().unwrap(); // ack: forces the group's fsync
+        }
+        // A tail of extra batches the simulated crash below will tear
+        // into (the first ten barriers' batches must stay untouched).
+        for b in acked_batches..acked_batches + 6 {
+            let data = flat_batch(0, (b * per_batch) as u64, per_batch, d);
+            durable.push_many("g", per_batch, &data).unwrap();
+        }
+        durable.sync().unwrap();
+    }
+    // Simulate the kill mid-group: chop bytes off the WAL tail (the
+    // un-synced page-cache writes a real crash would lose). 100 bytes
+    // is within the post-barrier records — the acked prefix is intact.
+    let shard = dir.join("wal").join("shard-0");
+    let last = *wal::list_segments(&shard).last().unwrap();
+    let seg_path = shard.join(format!("seg-{last:08}.wal"));
+    let pristine = std::fs::read(&seg_path).unwrap();
+    std::fs::write(&seg_path, &pristine[..pristine.len() - 100]).unwrap();
+    let (recovered, report) = Coordinator::recover(&cfg).unwrap();
+    assert!(!report.wal_clean, "the torn tail must be detected");
+    let snap = recovered.snapshot("g").unwrap();
+    let survived = snap.t as usize;
+    assert!(
+        survived >= acked_batches * per_batch,
+        "acked batches lost: {survived} < {}",
+        acked_batches * per_batch
+    );
+    // Whatever prefix survived must match an uninterrupted reference
+    // fed exactly those samples.
+    let mut reference = AveragerSpec::Gea { c: 0.5 }.build(d).unwrap();
+    reference.observe_many(&flat_batch(0, 0, survived, d), survived);
+    close(
+        &snap.value.expect("value"),
+        &reference.value().expect("value"),
+        "group-commit crash prefix",
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn group_commit_wal_bytes_match_per_append_mode() {
+    // Grouping re-times fsyncs; it must never re-frame. The same push
+    // sequence through a grouped coordinator and a per-append-fsync one
+    // must produce byte-identical WAL segments.
+    let dir_grp = temp_dir("persist-group-bytes");
+    let dir_per = temp_dir("persist-perappend-bytes");
+    let cfg_grp = group_commit_cfg(&dir_grp, 100_000);
+    let cfg_per = group_commit_cfg(&dir_per, 0);
+    {
+        let grp = Coordinator::from_config(&cfg_grp).unwrap();
+        let per = Coordinator::from_config(&cfg_per).unwrap();
+        for c in [&grp, &per] {
+            c.register("a", 2, AveragerSpec::Gea { c: 0.5 }).unwrap();
+            c.register("b", 1, AveragerSpec::ExpK { k: 8 }).unwrap();
+        }
+        for b in 0..12 {
+            let batch_a = flat_batch(0, b * 3, 3, 2);
+            let batch_b = flat_batch(1, b * 2, 2, 1);
+            for c in [&grp, &per] {
+                c.push_many("a", 3, &batch_a).unwrap();
+                c.push_many("b", 2, &batch_b).unwrap();
+                if b % 4 == 3 {
+                    c.sync().unwrap();
+                }
+            }
+        }
+        for c in [&grp, &per] {
+            c.sync().unwrap();
+        }
+    }
+    let a = shard0_wal_segments(&dir_grp);
+    let b = shard0_wal_segments(&dir_per);
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "group commit changed WAL bytes");
+    let _ = std::fs::remove_dir_all(&dir_grp);
+    let _ = std::fs::remove_dir_all(&dir_per);
 }
 
 #[test]
