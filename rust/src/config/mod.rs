@@ -176,12 +176,48 @@ impl BackpressurePolicy {
     }
 }
 
+/// Policy for NaN/Inf components in pushed samples.
+///
+/// Every estimator here is an O(1) recurrence: a single non-finite
+/// sample propagates into the running state and corrupts every
+/// downstream estimate permanently (there is no way to "forget" it).
+/// The default therefore refuses such samples at the ingest boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NonFinitePolicy {
+    /// Refuse the whole batch with an error the producer observes.
+    Reject,
+    /// Silently skip the offending samples, apply the rest, and count
+    /// the skips under `non_finite_rejected`.
+    Ignore,
+    /// Pre-hygiene behaviour: let NaN/Inf flow into the estimator.
+    Propagate,
+}
+
+impl NonFinitePolicy {
+    pub fn parse(s: &str) -> Result<NonFinitePolicy, String> {
+        match s {
+            "reject" => Ok(NonFinitePolicy::Reject),
+            "ignore" => Ok(NonFinitePolicy::Ignore),
+            "propagate" => Ok(NonFinitePolicy::Propagate),
+            _ => Err(format!("unknown non_finite policy '{s}'")),
+        }
+    }
+}
+
+impl Default for NonFinitePolicy {
+    fn default() -> Self {
+        NonFinitePolicy::Reject
+    }
+}
+
 /// One pre-declared stream in the coordinator service.
 #[derive(Clone, Debug)]
 pub struct StreamConfig {
     pub name: String,
     pub dim: usize,
     pub spec: AveragerSpec,
+    /// Per-stream override of `service.non_finite` (None = inherit).
+    pub non_finite: Option<NonFinitePolicy>,
 }
 
 /// Durability section of the coordinator service (`[persist]`).
@@ -234,6 +270,12 @@ impl Default for PersistConfig {
 /// banked = true              # fuse same-spec streams into planar banks
 /// protocol = "auto"          # auto | v1 | v2 (wire codec policy)
 /// pin_cores = false          # pin shard workers to logical cores
+/// read_timeout_ms = 30000    # per-connection read deadline (0 = none)
+/// write_timeout_ms = 30000   # per-connection write deadline (0 = none)
+/// idle_timeout_ms = 0        # close idle connections (0 = never)
+/// max_connections = 0        # admission gate (0 = unlimited)
+/// non_finite = "reject"      # reject | ignore | propagate NaN/Inf samples
+/// poison_threshold = 3       # quarantines before a stream is isolated
 ///
 /// [persist]
 /// dir = "ata-state"          # enables durability (WAL + snapshots)
@@ -266,6 +308,24 @@ pub struct ServiceConfig {
     /// graceful no-op on other targets). Off by default — pinning only
     /// helps when the service owns the machine.
     pub pin_cores: bool,
+    /// Per-connection read deadline in milliseconds: a peer that stops
+    /// mid-frame is disconnected after this long (0 = wait forever).
+    pub read_timeout_ms: u64,
+    /// Per-connection write deadline in milliseconds (0 = wait forever).
+    pub write_timeout_ms: u64,
+    /// Idle timeout in milliseconds: a connection with no complete
+    /// frame for this long is closed (0 = never).
+    pub idle_timeout_ms: u64,
+    /// Admission gate: refuse new connections beyond this many live
+    /// ones (0 = unlimited).
+    pub max_connections: usize,
+    /// Default NaN/Inf sample policy for all streams (per-stream
+    /// `non_finite` overrides it).
+    pub non_finite: NonFinitePolicy,
+    /// Poison-stream policy: after this many quarantined batches are
+    /// attributed to one stream, the stream is isolated (further pushes
+    /// rejected) instead of letting it keep killing its shard worker.
+    pub poison_threshold: u32,
     pub streams: Vec<StreamConfig>,
 }
 
@@ -280,6 +340,12 @@ impl Default for ServiceConfig {
             protocol: crate::coordinator::protocol::ProtocolChoice::Auto,
             persist: None,
             pin_cores: false,
+            read_timeout_ms: 30_000,
+            write_timeout_ms: 30_000,
+            idle_timeout_ms: 0,
+            max_connections: 0,
+            non_finite: NonFinitePolicy::Reject,
+            poison_threshold: 3,
             streams: Vec::new(),
         }
     }
@@ -327,6 +393,35 @@ impl ServiceConfig {
         if let Some(v) = doc.get_path("service.pin_cores") {
             cfg.pin_cores = v.as_bool().ok_or("service.pin_cores must be a boolean")?;
         }
+        if let Some(v) = doc.get_path("service.read_timeout_ms") {
+            cfg.read_timeout_ms = v
+                .as_u64()
+                .ok_or("service.read_timeout_ms must be an integer")?;
+        }
+        if let Some(v) = doc.get_path("service.write_timeout_ms") {
+            cfg.write_timeout_ms = v
+                .as_u64()
+                .ok_or("service.write_timeout_ms must be an integer")?;
+        }
+        if let Some(v) = doc.get_path("service.idle_timeout_ms") {
+            cfg.idle_timeout_ms = v
+                .as_u64()
+                .ok_or("service.idle_timeout_ms must be an integer")?;
+        }
+        if let Some(v) = doc.get_path("service.max_connections") {
+            cfg.max_connections =
+                v.as_u64().ok_or("service.max_connections must be an integer")? as usize;
+        }
+        if let Some(v) = doc.get_path("service.non_finite") {
+            cfg.non_finite =
+                NonFinitePolicy::parse(v.as_str().ok_or("service.non_finite must be a string")?)?;
+        }
+        if let Some(v) = doc.get_path("service.poison_threshold") {
+            cfg.poison_threshold = v
+                .as_u64()
+                .ok_or("service.poison_threshold must be an integer")?
+                as u32;
+        }
         if let Some(v) = doc.get_path("persist.dir") {
             let mut p = PersistConfig {
                 dir: v
@@ -373,7 +468,18 @@ impl ServiceConfig {
                         .and_then(Toml::as_str)
                         .ok_or("stream.averager required")?,
                 )?;
-                cfg.streams.push(StreamConfig { name, dim, spec });
+                let non_finite = match s.get_path("non_finite") {
+                    None => None,
+                    Some(v) => Some(NonFinitePolicy::parse(
+                        v.as_str().ok_or("stream.non_finite must be a string")?,
+                    )?),
+                };
+                cfg.streams.push(StreamConfig {
+                    name,
+                    dim,
+                    spec,
+                    non_finite,
+                });
             }
         }
         cfg.validate()?;
@@ -386,6 +492,18 @@ impl ServiceConfig {
         }
         if self.queue_capacity == 0 {
             return Err("service.queue_capacity must be >= 1".into());
+        }
+        if self.poison_threshold == 0 {
+            return Err("service.poison_threshold must be >= 1".into());
+        }
+        for (name, v) in [
+            ("service.read_timeout_ms", self.read_timeout_ms),
+            ("service.write_timeout_ms", self.write_timeout_ms),
+            ("service.idle_timeout_ms", self.idle_timeout_ms),
+        ] {
+            if v > 86_400_000 {
+                return Err(format!("{name} must be <= 86400000 (24h)"));
+            }
         }
         if let Some(p) = &self.persist {
             if p.dir.is_empty() {
@@ -567,6 +685,65 @@ checkpoint_interval_ms = 500
         // Degenerate segment sizes are rejected.
         let tiny = "[persist]\ndir = \"s\"\nsegment_bytes = 16";
         assert!(ServiceConfig::from_toml_text(tiny).is_err());
+    }
+
+    #[test]
+    fn survivability_knobs_parse_and_validate() {
+        let text = r#"
+[service]
+read_timeout_ms = 5000
+write_timeout_ms = 1500
+idle_timeout_ms = 60000
+max_connections = 32
+non_finite = "ignore"
+poison_threshold = 5
+
+[[stream]]
+name = "w"
+dim = 2
+averager = "gea(c=0.5)"
+non_finite = "propagate"
+"#;
+        let cfg = ServiceConfig::from_toml_text(text).unwrap();
+        assert_eq!(cfg.read_timeout_ms, 5000);
+        assert_eq!(cfg.write_timeout_ms, 1500);
+        assert_eq!(cfg.idle_timeout_ms, 60000);
+        assert_eq!(cfg.max_connections, 32);
+        assert_eq!(cfg.non_finite, NonFinitePolicy::Ignore);
+        assert_eq!(cfg.poison_threshold, 5);
+        assert_eq!(cfg.streams[0].non_finite, Some(NonFinitePolicy::Propagate));
+        // Defaults: deadlines on at 30s, no idle/admission caps, reject
+        // NaN/Inf, three strikes before a stream is poisoned.
+        let d = ServiceConfig::default();
+        assert_eq!(d.read_timeout_ms, 30_000);
+        assert_eq!(d.write_timeout_ms, 30_000);
+        assert_eq!(d.idle_timeout_ms, 0);
+        assert_eq!(d.max_connections, 0);
+        assert_eq!(d.non_finite, NonFinitePolicy::Reject);
+        assert_eq!(d.poison_threshold, 3);
+        // Garbage policies and degenerate thresholds are refused.
+        assert!(ServiceConfig::from_toml_text("[service]\nnon_finite = \"nope\"").is_err());
+        assert!(ServiceConfig::from_toml_text("[service]\npoison_threshold = 0").is_err());
+        assert!(
+            ServiceConfig::from_toml_text("[service]\nread_timeout_ms = 90000000000").is_err()
+        );
+    }
+
+    #[test]
+    fn non_finite_policy_parse() {
+        assert_eq!(
+            NonFinitePolicy::parse("reject").unwrap(),
+            NonFinitePolicy::Reject
+        );
+        assert_eq!(
+            NonFinitePolicy::parse("ignore").unwrap(),
+            NonFinitePolicy::Ignore
+        );
+        assert_eq!(
+            NonFinitePolicy::parse("propagate").unwrap(),
+            NonFinitePolicy::Propagate
+        );
+        assert!(NonFinitePolicy::parse("drop").is_err());
     }
 
     #[test]

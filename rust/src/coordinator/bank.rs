@@ -171,6 +171,17 @@ pub(super) struct Bank {
 }
 
 impl Bank {
+    /// Bank lock with poison recovery: shard supervision restarts a
+    /// worker that panicked mid-`apply`, and the poisoned mutex it may
+    /// leave must not cascade into every later drain, snapshot export,
+    /// or row allocation. The arena holds whatever the batched kernel
+    /// committed before the panic (partial application of the dying
+    /// cycle is possible — availability over exactness for the one
+    /// quarantined batch).
+    fn lock_inner(&self) -> std::sync::MutexGuard<'_, BankInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub(super) fn new(index: usize, dim: usize, state: Box<dyn BankState>) -> Bank {
         let row_floats = state.row_stride();
         Bank {
@@ -194,7 +205,7 @@ impl Bank {
     /// Allocate a row (recycling the free list), returning
     /// `(row, generation, publication block)`.
     pub(super) fn alloc_row(&self) -> (u32, u64, Arc<RowPub>) {
-        let mut g = self.inner.lock().expect("bank lock");
+        let mut g = self.lock_inner();
         let row = match g.free.pop() {
             Some(r) => {
                 g.state.reset_row(r as usize);
@@ -221,7 +232,7 @@ impl Bank {
     /// Return a row to the free list; in-flight messages carrying its
     /// old generation become no-ops.
     pub(super) fn free_row(&self, row: u32, gen: u64) {
-        let mut g = self.inner.lock().expect("bank lock");
+        let mut g = self.lock_inner();
         if g.gens.get(row as usize) != Some(&gen) {
             return; // already recycled
         }
@@ -233,7 +244,7 @@ impl Bank {
 
     /// Rows currently backing a registered stream.
     pub(super) fn active_rows(&self) -> usize {
-        self.inner.lock().expect("bank lock").active_rows
+        self.lock_inner().active_rows
     }
 
     /// Apply one drain cycle's staged jobs: ONE mutex acquisition and
@@ -244,7 +255,7 @@ impl Bank {
     /// the number of rows republished.
     pub(super) fn apply(&self, jobs: &mut [BankJob]) -> usize {
         jobs.sort_by_key(|j| j.row);
-        let mut guard = self.inner.lock().expect("bank lock");
+        let mut guard = self.lock_inner();
         let inner = &mut *guard;
         let mut batches: Vec<RowBatch<'_>> = Vec::with_capacity(jobs.len());
         for j in jobs.iter() {
@@ -299,7 +310,7 @@ impl Bank {
         members: &[(Arc<str>, u32, u64)],
         enc: &mut Enc,
     ) -> usize {
-        let g = self.inner.lock().expect("bank lock");
+        let g = self.lock_inner();
         let valid: Vec<&(Arc<str>, u32, u64)> = members
             .iter()
             .filter(|(_, row, gen)| g.gens.get(*row as usize) == Some(gen))
@@ -327,7 +338,7 @@ impl Bank {
         mean: &mut [f64],
         variance: &mut [f64],
     ) -> Result<(u64, f64, Option<f64>), String> {
-        let g = self.inner.lock().expect("bank lock");
+        let g = self.lock_inner();
         if g.gens.get(row as usize) != Some(&gen) {
             return Err("stream's bank row was recycled".into());
         }
@@ -340,7 +351,7 @@ impl Bank {
     /// Export one live row's canonical state payload (the wire
     /// `export_state` op).
     pub(super) fn export_row(&self, row: u32, gen: u64, enc: &mut Enc) -> Result<(), String> {
-        let g = self.inner.lock().expect("bank lock");
+        let g = self.lock_inner();
         if g.gens.get(row as usize) != Some(&gen) {
             return Err("stream's bank row was recycled".into());
         }
@@ -351,7 +362,7 @@ impl Bank {
     /// Restore one live row from a canonical payload and republish its
     /// estimate so wait-free snapshot readers see the restored state.
     pub(super) fn import_row(&self, row: u32, gen: u64, dec: &mut Dec<'_>) -> Result<(), String> {
-        let mut guard = self.inner.lock().expect("bank lock");
+        let mut guard = self.lock_inner();
         let inner = &mut *guard;
         if inner.gens.get(row as usize) != Some(&gen) {
             return Err("stream's bank row was recycled".into());
@@ -373,7 +384,7 @@ impl Bank {
         spec: &AveragerSpec,
         dec: &mut Dec<'_>,
     ) -> Result<(), String> {
-        let mut guard = self.inner.lock().expect("bank lock");
+        let mut guard = self.lock_inner();
         let inner = &mut *guard;
         if inner.gens.get(row as usize) != Some(&gen) {
             return Err("stream's bank row was recycled".into());

@@ -37,6 +37,10 @@ pub enum ClientError {
     /// The server processed the request and answered with a structured
     /// error frame. The connection is fine; the request was wrong.
     Server(String),
+    /// The server is shedding load (ingest queue full under `reject`,
+    /// or draining). The connection is fine and the request was NOT
+    /// applied; back off and resend. [`RetryingClient`] does.
+    Overloaded(String),
     /// Codec violation: handshake failure, version mismatch, a frame
     /// that does not decode, or a response that answers the wrong op.
     Protocol(String),
@@ -45,7 +49,10 @@ pub enum ClientError {
 impl ClientError {
     fn msg(&self) -> &str {
         match self {
-            ClientError::Io(m) | ClientError::Server(m) | ClientError::Protocol(m) => m,
+            ClientError::Io(m)
+            | ClientError::Server(m)
+            | ClientError::Overloaded(m)
+            | ClientError::Protocol(m) => m,
         }
     }
 }
@@ -86,6 +93,13 @@ fn send_error(e: std::io::Error) -> ClientError {
 /// amortizing the round-trip latency hundreds of times over.
 pub const PIPELINE_WINDOW: usize = 256;
 
+/// Default per-read socket timeout. Without one, a half-closed socket
+/// (server host gone, FIN lost — no RST ever arrives) parks the client
+/// in `read` forever; with it, the read surfaces [`ClientError::Io`]
+/// and the caller (or [`RetryingClient`]) can reconnect. Override with
+/// [`Client::set_timeout`].
+pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
 /// Synchronous client over one TCP connection. One request/response
 /// per call by default; the pipelined APIs put many requests in flight.
 pub struct Client {
@@ -114,6 +128,9 @@ impl Client {
         stream
             .set_nodelay(true)
             .map_err(|e| ClientError::Io(format!("nodelay: {e}")))?;
+        stream
+            .set_read_timeout(Some(DEFAULT_READ_TIMEOUT))
+            .map_err(|e| ClientError::Io(format!("read timeout: {e}")))?;
         let mut c = Client {
             stream,
             wire: Wire::V1Json,
@@ -211,6 +228,7 @@ impl Client {
         }
         match resp {
             Response::Err(e) => Err(ClientError::Server(e)),
+            Response::Overloaded(e) => Err(ClientError::Overloaded(e)),
             ok => Ok(ok),
         }
     }
@@ -457,6 +475,9 @@ impl Client {
                 };
                 match resp {
                     Response::PushedMany { accepted, dropped } => out[at] = (accepted, dropped),
+                    Response::Overloaded(e) => {
+                        first_err.get_or_insert(ClientError::Overloaded(e));
+                    }
                     Response::Err(e) => {
                         let err = ClientError::Server(e);
                         // Purge a stale cached handle so the NEXT call
@@ -494,7 +515,13 @@ impl Client {
                 match self.push_many(stream, *count, samples) {
                     Ok((accepted, _)) if accepted > 0 => out.push(MultiOutcome::Accepted),
                     Ok(_) => out.push(MultiOutcome::Dropped),
-                    Err(ClientError::Server(e)) => out.push(MultiOutcome::Rejected(e)),
+                    // Per-entry rejection mirrors the v2 frame: under v2
+                    // a queue-full entry is `Rejected` while its
+                    // siblings apply, so the v1 degradation must not
+                    // abort the whole call either.
+                    Err(ClientError::Server(e) | ClientError::Overloaded(e)) => {
+                        out.push(MultiOutcome::Rejected(e))
+                    }
                     Err(e) => return Err(e),
                 }
             }
@@ -741,6 +768,295 @@ impl Client {
                 Ok(streams)
             }
             other => Err(unexpected(&other)),
+        }
+    }
+}
+
+/// Backoff/retry policy for [`RetryingClient`].
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Attempts per operation (>= 1; the first try counts).
+    pub max_attempts: u32,
+    /// First backoff sleep.
+    pub base_backoff_ms: u64,
+    /// Backoff cap (decorrelated jitter grows toward it).
+    pub max_backoff_ms: u64,
+    /// Seeds the jitter stream — a fixed seed makes a retry schedule
+    /// reproducible in tests.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 6,
+            base_backoff_ms: 10,
+            max_backoff_ms: 2_000,
+            seed: 0x5EED_CAFE,
+        }
+    }
+}
+
+/// A [`Client`] wrapper that survives connection loss and shed load.
+///
+/// * **Retryable:** [`ClientError::Io`] (reconnect + re-handshake, the
+///   handle cache rebuilds lazily through `resolve`) and
+///   [`ClientError::Overloaded`] (same connection, backoff first).
+/// * **Fatal:** [`ClientError::Server`] and [`ClientError::Protocol`]
+///   — the request itself is wrong; retrying cannot fix it.
+/// * **Safe to retry:** reads (`snapshot`, `query`, `metrics`,
+///   `list_streams`), barriers (`sync`), and idempotent control ops
+///   (`ping`, `resolve`; `register` treats "already registered" after a
+///   reconnect as success). **Pushes** retry only when the failure
+///   struck before the request frame was fully sent, or on an
+///   `Overloaded` rejection (the server applied nothing). A connection
+///   that dies *after* a push frame went out leaves the outcome
+///   unknown — the push may be applied server-side — so it surfaces as
+///   [`ClientError::Io`] instead of silently double-applying.
+///
+/// Backoff is exponential with decorrelated jitter:
+/// `sleep = min(cap, uniform(base, prev * 3))` — retry storms from many
+/// clients decorrelate instead of synchronizing.
+pub struct RetryingClient {
+    addr: String,
+    choice: ProtocolChoice,
+    policy: RetryPolicy,
+    read_timeout: Option<Duration>,
+    inner: Option<Client>,
+    rng: crate::rng::SplitMix64,
+    prev_backoff_ms: u64,
+    /// Reconnects performed (observability for soak assertions).
+    reconnects: u64,
+    /// Backoff sleeps taken after `Overloaded` rejections.
+    overload_backoffs: u64,
+}
+
+impl RetryingClient {
+    /// Wrap `addr` with the default policy ([`ProtocolChoice::Auto`]).
+    /// Connects lazily on first use.
+    pub fn connect(addr: &str) -> RetryingClient {
+        RetryingClient::with_policy(addr, ProtocolChoice::Auto, RetryPolicy::default())
+    }
+
+    /// Full-control constructor. Connects lazily on first use.
+    pub fn with_policy(addr: &str, choice: ProtocolChoice, policy: RetryPolicy) -> RetryingClient {
+        use crate::rng::RngCore as _;
+        let mut rng = crate::rng::SplitMix64::new(policy.seed);
+        // Burn one output so two clients with adjacent seeds decorrelate
+        // from their first sleep.
+        let _ = rng.next_u64();
+        RetryingClient {
+            addr: addr.to_string(),
+            choice,
+            prev_backoff_ms: policy.base_backoff_ms,
+            policy,
+            read_timeout: Some(DEFAULT_READ_TIMEOUT),
+            inner: None,
+            rng,
+            reconnects: 0,
+            overload_backoffs: 0,
+        }
+    }
+
+    /// Per-read socket timeout applied to every (re)connection.
+    pub fn set_timeout(&mut self, d: Option<Duration>) {
+        self.read_timeout = d;
+        if let Some(c) = self.inner.as_mut() {
+            let _ = c.set_timeout(d);
+        }
+    }
+
+    /// Reconnections performed so far.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// Backoff sleeps taken after `Overloaded` rejections so far.
+    pub fn overload_backoffs(&self) -> u64 {
+        self.overload_backoffs
+    }
+
+    /// Decorrelated-jitter sleep: `min(cap, uniform(base, prev * 3))`.
+    fn backoff(&mut self) {
+        use crate::rng::RngCore as _;
+        let lo = self.policy.base_backoff_ms.max(1);
+        let hi = self.prev_backoff_ms.saturating_mul(3).max(lo + 1);
+        let ms = (lo + self.rng.next_u64() % (hi - lo)).min(self.policy.max_backoff_ms);
+        self.prev_backoff_ms = ms;
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+
+    /// The live connection, (re)established as needed.
+    fn connected(&mut self) -> Result<&mut Client, ClientError> {
+        if self.inner.is_none() {
+            let mut c = Client::connect_with(&self.addr, self.choice)?;
+            c.set_timeout(self.read_timeout)?;
+            self.reconnects += 1;
+            self.inner = Some(c);
+        }
+        Ok(self.inner.as_mut().expect("just connected"))
+    }
+
+    /// Run an idempotent operation with the full retry policy.
+    fn with_retry<T>(
+        &mut self,
+        mut op: impl FnMut(&mut Client) -> Result<T, ClientError>,
+    ) -> Result<T, ClientError> {
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            let result = match self.connected() {
+                Ok(c) => op(c),
+                Err(e) => Err(e),
+            };
+            match result {
+                Ok(v) => {
+                    self.prev_backoff_ms = self.policy.base_backoff_ms;
+                    return Ok(v);
+                }
+                Err(ClientError::Overloaded(e)) => {
+                    if attempt >= self.policy.max_attempts.max(1) {
+                        return Err(ClientError::Overloaded(e));
+                    }
+                    self.overload_backoffs += 1;
+                    self.backoff();
+                }
+                Err(ClientError::Io(e)) => {
+                    // The connection is unusable; reconnect next attempt
+                    // (the handshake renegotiates, handles re-resolve
+                    // lazily through the fresh cache).
+                    self.inner = None;
+                    if attempt >= self.policy.max_attempts.max(1) {
+                        return Err(ClientError::Io(e));
+                    }
+                    self.backoff();
+                }
+                Err(fatal) => return Err(fatal),
+            }
+        }
+    }
+
+    /// Liveness check (retries).
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        self.with_retry(|c| c.ping())
+    }
+
+    /// Register a stream (idempotent under retry: an "already
+    /// registered" rejection after a reconnect means an earlier attempt
+    /// landed — the handle is recovered via `resolve`).
+    pub fn register(&mut self, stream: &str, dim: usize, spec: &str) -> Result<u64, ClientError> {
+        self.with_retry(|c| match c.register(stream, dim, spec) {
+            Err(ClientError::Server(e)) if e.contains("already registered") => c.resolve(stream),
+            other => other,
+        })
+    }
+
+    /// Name → handle lookup (retries; refreshes the cache).
+    pub fn resolve(&mut self, stream: &str) -> Result<u64, ClientError> {
+        self.with_retry(|c| c.resolve(stream))
+    }
+
+    /// Fetch the current estimate (read — always safe to retry).
+    pub fn snapshot(&mut self, stream: &str) -> Result<Snapshot, ClientError> {
+        self.with_retry(|c| c.snapshot(stream))
+    }
+
+    /// Barrier (idempotent — always safe to retry).
+    pub fn sync(&mut self) -> Result<(), ClientError> {
+        self.with_retry(|c| c.sync())
+    }
+
+    /// Server metrics document (read — always safe to retry).
+    pub fn metrics(&mut self) -> Result<Json, ClientError> {
+        self.with_retry(|c| c.metrics())
+    }
+
+    /// Analytics query (read — always safe to retry).
+    pub fn query(
+        &mut self,
+        prefix: &str,
+        z: f64,
+        top_k: u64,
+        aggregate: bool,
+    ) -> Result<(Vec<StatEntry>, Option<StatEntry>), ClientError> {
+        self.with_retry(|c| c.query(prefix, z, top_k, aggregate))
+    }
+
+    /// Registered stream names (read — always safe to retry).
+    pub fn list_streams(&mut self) -> Result<Vec<String>, ClientError> {
+        self.with_retry(|c| c.list_streams())
+    }
+
+    /// Push one sample with push retry semantics (see type docs).
+    pub fn push(&mut self, stream: &str, data: &[f64]) -> Result<bool, ClientError> {
+        self.push_many(stream, 1, data).map(|(accepted, _)| accepted > 0)
+    }
+
+    /// Push a batch with push retry semantics: retry on pre-send
+    /// failures and `Overloaded` rejections; a connection that dies
+    /// after the frame went out reports [`ClientError::Io`] (outcome
+    /// unknown — retrying could double-apply).
+    pub fn push_many(
+        &mut self,
+        stream: &str,
+        count: usize,
+        samples: &[f64],
+    ) -> Result<(u64, u64), ClientError> {
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            // Connect + resolve + send: failures here are pre-apply and
+            // safe to retry.
+            let sent = match self.connected() {
+                Ok(c) => c.send_push_many(stream, count, samples),
+                Err(e) => Err(e),
+            };
+            let (seq, kind) = match sent {
+                Ok(ok) => ok,
+                Err(ClientError::Io(e)) => {
+                    self.inner = None;
+                    if attempt >= self.policy.max_attempts.max(1) {
+                        return Err(ClientError::Io(e));
+                    }
+                    self.backoff();
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            // The frame is out: only an explicit server rejection is
+            // retryable from here.
+            let c = self.inner.as_mut().expect("connected above");
+            match c.recv_response(seq, kind) {
+                Ok(Response::PushedMany { accepted, dropped }) => {
+                    self.prev_backoff_ms = self.policy.base_backoff_ms;
+                    return Ok((accepted, dropped));
+                }
+                Ok(other) => return Err(unexpected(&other)),
+                Err(ClientError::Overloaded(e)) => {
+                    if attempt >= self.policy.max_attempts.max(1) {
+                        return Err(ClientError::Overloaded(e));
+                    }
+                    self.overload_backoffs += 1;
+                    self.backoff();
+                }
+                Err(ClientError::Io(e)) => {
+                    self.inner = None;
+                    return Err(ClientError::Io(format!(
+                        "connection died after a push frame was sent — the batch may or may \
+                         not be applied server-side; not retrying ({e})"
+                    )));
+                }
+                Err(e) => {
+                    // A stale cached handle is safe to retry: the server
+                    // rejected the frame without applying anything.
+                    let stale = self.inner.as_mut().expect("connected above")
+                        .is_stale_handle(stream, &e);
+                    if stale && attempt < self.policy.max_attempts.max(1) {
+                        continue;
+                    }
+                    return Err(e);
+                }
+            }
         }
     }
 }

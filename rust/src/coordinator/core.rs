@@ -2,20 +2,24 @@
 //! banks, and wait-free anytime snapshots.
 
 use super::bank::{Bank, BankJob, RowPub};
-use super::protocol::{MultiOutcome, MultiPushEntry, StreamRef, STALE_HANDLE_MARKER};
+use super::protocol::{
+    MultiOutcome, MultiPushEntry, StreamRef, OVERLOAD_MARKER, STALE_HANDLE_MARKER,
+};
 use super::stream::StreamState;
+use super::supervisor;
 use crate::analytics::{self, Query, QueryResult, StatSnapshot};
 use crate::averagers::{banked, AveragerSpec};
-use crate::config::{BackpressurePolicy, PersistConfig, ServiceConfig};
+use crate::config::{BackpressurePolicy, NonFinitePolicy, PersistConfig, ServiceConfig};
 use crate::metrics::{names, Counter, Histogram, Registry};
 use crate::persist::codec::{self, Dec, Enc};
 use crate::persist::{checkpoint as snapfile, wal};
+use crate::testkit::chaos;
 use crate::util::cpu;
 use crate::util::json::Json;
 use crate::util::pool::{BufferPool, PooledBuf};
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread;
@@ -115,6 +119,16 @@ struct StreamSlot {
     /// Samples dropped by backpressure (lock-free; `DropNewest` must not
     /// take a state lock to account a drop).
     dropped: AtomicU64,
+    /// NaN/Inf sample policy (service default or per-stream override),
+    /// enforced at the producer boundary before a batch is enqueued.
+    non_finite: NonFinitePolicy,
+    /// Quarantined batches attributed to this stream by the shard
+    /// supervisor (its "strike" count under the poison-stream policy).
+    strikes: AtomicU64,
+    /// Set once strikes reach the poison threshold: the stream is
+    /// isolated (pushes rejected) instead of repeatedly killing its
+    /// shard worker. Snapshots of whatever state it had keep working.
+    poisoned: AtomicBool,
     backing: Backing,
 }
 
@@ -179,6 +193,10 @@ pub struct RecoveryReport {
     /// `false` when any shard's WAL tail ended at a torn/corrupt record
     /// (expected after a crash — everything before it was recovered).
     pub wal_clean: bool,
+    /// Corrupt mid-WAL segment tails the replay skipped past (each one
+    /// a failed append the writer rotated away from; the loss was
+    /// counted at append time — see `wal_append_errors`).
+    pub wal_skipped_tails: u64,
 }
 
 /// Hot-path instruments the shard workers carry (resolved once so the
@@ -210,6 +228,28 @@ pub struct CoordinatorOptions {
     /// Pin shard worker `i` to logical core `i % cores` (best-effort;
     /// see [`crate::util::cpu::pin_current_thread`]).
     pub pin_cores: bool,
+    /// Default NaN/Inf sample policy (per-stream overrides via
+    /// [`Coordinator::register_with_policy`]).
+    pub non_finite: NonFinitePolicy,
+    /// Quarantined batches attributed to one stream before the
+    /// poison-stream policy isolates it (min 1 enforced).
+    pub poison_threshold: u32,
+}
+
+impl Default for CoordinatorOptions {
+    /// Mirrors [`ServiceConfig`]'s defaults.
+    fn default() -> Self {
+        CoordinatorOptions {
+            shards: 4,
+            queue_capacity: 1024,
+            policy: BackpressurePolicy::Block,
+            banking: true,
+            persist: None,
+            pin_cores: false,
+            non_finite: NonFinitePolicy::Reject,
+            poison_threshold: 3,
+        }
+    }
 }
 
 /// Multi-stream anytime-averaging coordinator.
@@ -240,6 +280,9 @@ pub struct Coordinator {
     banking: bool,
     shards: Vec<Shard>,
     policy: BackpressurePolicy,
+    /// Default NaN/Inf sample policy for streams registered without an
+    /// explicit override.
+    non_finite: NonFinitePolicy,
     /// Durability state when a `[persist]` section is configured.
     persist: Option<PersistShared>,
     metrics: Registry,
@@ -261,6 +304,8 @@ pub struct Coordinator {
     multi_snapshot_entries: Arc<Counter>,
     /// Streams matched by `query` selections.
     query_streams: Arc<Counter>,
+    /// Samples refused or skipped by the NaN/Inf hygiene boundary.
+    non_finite_rejected: Arc<Counter>,
     /// Distribution of samples-per-message on the ingest path.
     push_batch_size: Arc<Histogram>,
 }
@@ -279,9 +324,11 @@ impl Coordinator {
             banking: cfg.banked,
             persist: cfg.persist.clone(),
             pin_cores: cfg.pin_cores,
+            non_finite: cfg.non_finite,
+            poison_threshold: cfg.poison_threshold,
         })?;
         for s in &cfg.streams {
-            c.register(&s.name, s.dim, s.spec.clone())?;
+            c.register_with_policy(&s.name, s.dim, s.spec.clone(), s.non_finite)?;
         }
         Ok(c)
     }
@@ -324,7 +371,7 @@ impl Coordinator {
             policy,
             banking,
             persist: persist.cloned(),
-            pin_cores: false,
+            ..Default::default()
         })
     }
 
@@ -337,6 +384,8 @@ impl Coordinator {
             banking,
             persist,
             pin_cores,
+            non_finite,
+            poison_threshold,
         } = opts;
         let persist = persist.as_ref();
         let shards = shards.max(1);
@@ -353,6 +402,10 @@ impl Coordinator {
         });
         let cores = cpu::logical_cpus();
         let pinned_counter = metrics.counter("shards_pinned");
+        let restarts_counter = metrics.counter(names::SHARD_RESTARTS);
+        let quarantined_counter = metrics.counter(names::QUARANTINED_BATCHES);
+        let poisoned_counter = metrics.counter(names::POISONED_STREAMS);
+        let poison_threshold = poison_threshold.max(1) as u64;
         let mut v = Vec::with_capacity(shards);
         for i in 0..shards {
             let (tx, rx) = sync_channel::<ShardMsg>(queue_capacity.max(1));
@@ -380,6 +433,11 @@ impl Coordinator {
             };
             let pin_to = pin_cores.then_some(i % cores);
             let pinned = Arc::clone(&pinned_counter);
+            let sup = supervisor::Supervisor {
+                restarts: Arc::clone(&restarts_counter),
+                quarantined: Arc::clone(&quarantined_counter),
+            };
+            let poisoned_streams = Arc::clone(&poisoned_counter);
             let handle = thread::Builder::new()
                 .name(format!("ata-shard-{i}"))
                 .spawn(move || {
@@ -390,7 +448,35 @@ impl Coordinator {
                             pinned.inc();
                         }
                     }
-                    shard_loop(rx, inst, shard_wal)
+                    // Queue, WAL writer, and bank staging live OUTSIDE
+                    // the supervised frame: a worker restart keeps every
+                    // already-acknowledged message (queued or staged)
+                    // and its durability log; only the batch that
+                    // panicked mid-processing is quarantined.
+                    let mut wal = shard_wal;
+                    let mut stage: HashMap<usize, (Arc<Bank>, Vec<BankJob>)> = HashMap::new();
+                    let attribute = move |(slot, count): (Arc<StreamSlot>, u64)| {
+                        let strikes = slot.strikes.fetch_add(1, Ordering::Relaxed) + 1;
+                        // The quarantined samples are lost to the live
+                        // state; surface them with the drop accounting.
+                        slot.dropped.fetch_add(count, Ordering::Relaxed);
+                        if strikes >= poison_threshold
+                            && !slot.poisoned.swap(true, Ordering::Relaxed)
+                        {
+                            poisoned_streams.inc();
+                            crate::log_warn!(
+                                "supervisor",
+                                "stream '{}' isolated after {strikes} worker-killing batches",
+                                slot.name
+                            );
+                        }
+                    };
+                    supervisor::supervise(
+                        &format!("ata-shard-{i}"),
+                        &sup,
+                        attribute,
+                        |inflight| shard_loop(&rx, &inst, &mut wal, &mut stage, inflight),
+                    );
                 })
                 .expect("spawn shard");
             v.push(Shard {
@@ -405,6 +491,7 @@ impl Coordinator {
             banking,
             shards: v,
             policy,
+            non_finite,
             persist: persist_shared,
             pushes_accepted: metrics.counter("pushes_accepted"),
             pushes_dropped: metrics.counter("pushes_dropped"),
@@ -414,6 +501,7 @@ impl Coordinator {
             stat_queries: metrics.counter(names::STAT_QUERIES),
             multi_snapshot_entries: metrics.counter(names::MULTI_SNAPSHOT_ENTRIES),
             query_streams: metrics.counter(names::QUERY_STREAMS_MATCHED),
+            non_finite_rejected: metrics.counter(names::NON_FINITE_REJECTED),
             push_batch_size: metrics.histogram("push_batch_size"),
             metrics,
             buffers: BufferPool::new(64),
@@ -468,6 +556,18 @@ impl Coordinator {
     /// protocol v2's hot ops address it by). Errors on duplicates or
     /// invalid specs.
     pub fn register(&self, name: &str, dim: usize, spec: AveragerSpec) -> Result<u64, String> {
+        self.register_with_policy(name, dim, spec, None)
+    }
+
+    /// As [`Coordinator::register`], with a per-stream NaN/Inf policy
+    /// override (`None` inherits the coordinator default).
+    pub fn register_with_policy(
+        &self,
+        name: &str,
+        dim: usize,
+        spec: AveragerSpec,
+        non_finite: Option<NonFinitePolicy>,
+    ) -> Result<u64, String> {
         if dim == 0 {
             return Err("dim must be >= 1".into());
         }
@@ -496,6 +596,9 @@ impl Coordinator {
             dim,
             spec: spec.clone(),
             dropped: AtomicU64::new(0),
+            non_finite: non_finite.unwrap_or(self.non_finite),
+            strikes: AtomicU64::new(0),
+            poisoned: AtomicBool::new(false),
             backing,
         });
         let mut map = self.streams.write().expect("streams lock");
@@ -723,13 +826,74 @@ impl Coordinator {
             .collect()
     }
 
+    /// Enforce the stream's NaN/Inf policy on a validated flat batch.
+    /// Returns the (possibly filtered) sample count to enqueue; `Ok(0)`
+    /// means every sample was skipped under `ignore` and there is
+    /// nothing left to ship.
+    fn screen_non_finite(
+        &self,
+        slot: &StreamSlot,
+        count: usize,
+        data: &mut PooledBuf,
+    ) -> Result<usize, String> {
+        match slot.non_finite {
+            NonFinitePolicy::Propagate => Ok(count),
+            NonFinitePolicy::Reject => {
+                if data.iter().all(|v| v.is_finite()) {
+                    Ok(count)
+                } else {
+                    self.non_finite_rejected.add(count as u64);
+                    Err(format!(
+                        "stream '{}': batch contains a non-finite (NaN/Inf) component \
+                         (policy reject)",
+                        slot.name
+                    ))
+                }
+            }
+            NonFinitePolicy::Ignore => {
+                if data.iter().all(|v| v.is_finite()) {
+                    return Ok(count);
+                }
+                // Compact the finite samples in place (a sample is
+                // skipped if ANY of its dims is non-finite — half a
+                // sample would skew the estimate worse than none).
+                let dim = slot.dim;
+                let vec = data.as_mut_vec();
+                let mut kept = 0usize;
+                for i in 0..count {
+                    let src = i * dim;
+                    if vec[src..src + dim].iter().all(|v| v.is_finite()) {
+                        vec.copy_within(src..src + dim, kept * dim);
+                        kept += 1;
+                    }
+                }
+                vec.truncate(kept * dim);
+                self.non_finite_rejected.add((count - kept) as u64);
+                Ok(kept)
+            }
+        }
+    }
+
     /// Shared backpressure-aware enqueue of a (possibly batched) push.
     fn enqueue(
         &self,
         slot: Arc<StreamSlot>,
         count: usize,
-        data: PooledBuf,
+        mut data: PooledBuf,
     ) -> Result<PushOutcome, String> {
+        if slot.poisoned.load(Ordering::Relaxed) {
+            return Err(format!(
+                "stream '{}': isolated by the poison-stream policy \
+                 (its batches repeatedly killed a shard worker)",
+                slot.name
+            ));
+        }
+        let count = self.screen_non_finite(&slot, count, &mut data)?;
+        if count == 0 {
+            // Every sample was skipped under `ignore`: the batch is
+            // handled, nothing ships.
+            return Ok(PushOutcome::Accepted);
+        }
         let shard = self.shard_for(&slot);
         let msg = ShardMsg::Push {
             stream: Arc::clone(&slot),
@@ -756,7 +920,13 @@ impl Coordinator {
                 Ok(()) => PushOutcome::Accepted,
                 Err(TrySendError::Full(_)) => {
                     self.pushes_rejected.add(count as u64);
-                    return Err(format!("stream '{}': ingest queue full", slot.name));
+                    // The marker makes this a structured `Overloaded`
+                    // wire outcome (retry-after-backoff) on both
+                    // protocols instead of an opaque fatal error.
+                    return Err(format!(
+                        "{OVERLOAD_MARKER} stream '{}': ingest queue full",
+                        slot.name
+                    ));
                 }
                 Err(TrySendError::Disconnected(_)) => return Err("shard down".into()),
             },
@@ -793,7 +963,7 @@ impl Coordinator {
         let (t, window_len, has_value) = match &slot.backing {
             Backing::Banked { pub_row, .. } => pub_row.read_into(&mut buf),
             Backing::Slot { state } => {
-                let st = state.lock().expect("stream lock");
+                let st = lock_state(state);
                 (st.t(), st.window_len(), st.value_into(&mut buf))
             }
         };
@@ -848,7 +1018,7 @@ impl Coordinator {
                         bank.row_floats,
                     ),
                     Backing::Slot { state } => {
-                        let st = state.lock().expect("stream lock");
+                        let st = lock_state(state);
                         (slot.name.to_string(), st.applied, dropped, st.memory_floats())
                     }
                 }
@@ -876,7 +1046,7 @@ impl Coordinator {
                 bank.stat_row(*row, *gen, &mut mean, &mut variance)?
             }
             Backing::Slot { state } => {
-                let st = state.lock().expect("stream lock");
+                let st = lock_state(state);
                 (
                     st.t(),
                     st.window_len(),
@@ -1105,6 +1275,8 @@ impl Coordinator {
             banking: cfg.banked,
             persist: Some(pcfg.clone()),
             pin_cores: cfg.pin_cores,
+            non_finite: cfg.non_finite,
+            poison_threshold: cfg.poison_threshold,
         })?;
         let replayed_counter = c.metrics.counter(names::RECOVERY_REPLAYED_BATCHES);
         let mut report = RecoveryReport {
@@ -1135,6 +1307,7 @@ impl Coordinator {
             if !summary.clean {
                 report.wal_clean = false;
             }
+            report.wal_skipped_tails += summary.skipped_tails;
         }
         c.sync()?;
         // Config-declared streams the snapshot/WAL did not already have.
@@ -1144,7 +1317,7 @@ impl Coordinator {
                 map.by_name.contains_key(&s.name)
             };
             if !exists {
-                c.register(&s.name, s.dim, s.spec.clone())?;
+                c.register_with_policy(&s.name, s.dim, s.spec.clone(), s.non_finite)?;
             }
         }
         // Compact: a fresh checkpoint supersedes everything replayed;
@@ -1211,7 +1384,7 @@ impl Coordinator {
         let slot = self.slot(name)?;
         match &slot.backing {
             Backing::Banked { bank, row, gen, .. } => bank.import_row(*row, *gen, dec),
-            Backing::Slot { state } => state.lock().expect("stream lock").import_state(dec),
+            Backing::Slot { state } => lock_state(state).import_state(dec),
         }
     }
 
@@ -1294,7 +1467,7 @@ impl Coordinator {
         let mut enc = Enc::new();
         match &slot.backing {
             Backing::Banked { bank, row, gen, .. } => bank.export_row(*row, *gen, &mut enc)?,
-            Backing::Slot { state } => state.lock().expect("stream lock").export_state(&mut enc),
+            Backing::Slot { state } => lock_state(state).export_state(&mut enc),
         }
         Ok(codec::frame_state(enc.as_bytes()))
     }
@@ -1319,10 +1492,7 @@ impl Coordinator {
             Backing::Banked { bank, row, gen, .. } => {
                 bank.import_row(*row, *gen, &mut Dec::new(payload))?
             }
-            Backing::Slot { state } => state
-                .lock()
-                .expect("stream lock")
-                .import_state(&mut Dec::new(payload))?,
+            Backing::Slot { state } => lock_state(state).import_state(&mut Dec::new(payload))?,
         }
         Ok(self.snapshot_slot(slot)?.t)
     }
@@ -1349,13 +1519,20 @@ impl Coordinator {
             Backing::Banked { bank, row, gen, .. } => {
                 bank.merge_row(*row, *gen, &slot.spec, &mut Dec::new(payload))?
             }
-            Backing::Slot { state } => state
-                .lock()
-                .expect("stream lock")
-                .merge_state(&mut Dec::new(payload))?,
+            Backing::Slot { state } => lock_state(state).merge_state(&mut Dec::new(payload))?,
         }
         Ok(self.snapshot_slot(slot)?.t)
     }
+}
+
+/// Stream-state lock that survives a panicking writer. Supervision
+/// restarts a shard worker that dies mid-apply, and the poisoned mutex
+/// it may leave behind must not cascade a panic into every snapshot,
+/// export, and checkpoint path — availability first: the state holds
+/// whatever the estimator committed before the panic, which is exactly
+/// what an anytime read should report.
+fn lock_state(state: &Mutex<StreamState>) -> std::sync::MutexGuard<'_, StreamState> {
+    state.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Shared batch validation: `len` must split into exactly `count`
@@ -1411,13 +1588,19 @@ const DRAIN_BATCH: usize = 1024;
 /// bounded-window groups; the loop wakes at the group deadline when
 /// idle and forces a commit before any sync/shutdown ack, so grouping
 /// changes fsync *timing* only, never the ack guarantees.
+/// The queue, WAL writer, and bank staging map are borrowed from the
+/// supervision frame around this loop (see [`supervisor::supervise`]):
+/// a panic unwinds out of here, the supervisor quarantines the
+/// [`supervisor::InFlight`] message and calls the loop again with
+/// everything else intact — queued messages, staged bank jobs, and the
+/// open WAL all survive the restart.
 fn shard_loop(
-    rx: Receiver<ShardMsg>,
-    instruments: ShardInstruments,
-    mut wal: Option<wal::WalWriter>,
+    rx: &Receiver<ShardMsg>,
+    instruments: &ShardInstruments,
+    wal: &mut Option<wal::WalWriter>,
+    stage: &mut HashMap<usize, (Arc<Bank>, Vec<BankJob>)>,
+    inflight: &supervisor::InFlight<(Arc<StreamSlot>, u64)>,
 ) {
-    // Staging reused across cycles, keyed by bank index.
-    let mut stage: HashMap<usize, (Arc<Bank>, Vec<BankJob>)> = HashMap::new();
     loop {
         // With an open WAL group, block only until its commit deadline:
         // an idle shard must still sync acked appends within the window.
@@ -1452,6 +1635,17 @@ fn shard_loop(
                     data,
                 }) => {
                     drained += 1;
+                    // Supervision: mark this batch in flight until it is
+                    // staged/applied — a panic anywhere in between
+                    // quarantines exactly this batch. The chaos panic
+                    // injects BEFORE the WAL append or any state
+                    // mutation, so a quarantined batch never happened on
+                    // either the live or the recovery side (keeping
+                    // post-recovery snapshots bitwise-identical).
+                    inflight.begin((Arc::clone(&stream), count as u64));
+                    if chaos::armed() {
+                        chaos::maybe_worker_panic(&stream.name);
+                    }
                     if let Some(w) = wal.as_mut() {
                         // An append failure degrades durability, not
                         // availability: the batch still applies (it was
@@ -1479,13 +1673,19 @@ fn shard_loop(
                             });
                         }
                         Backing::Slot { state } => {
-                            let mut st = state.lock().expect("stream lock");
+                            // Poison recovery, not .expect: a previous
+                            // incarnation may have panicked mid-apply
+                            // while holding this lock; the state holds
+                            // whatever the estimator committed and must
+                            // stay readable/appendable.
+                            let mut st = lock_state(state);
                             // Shape validated at push; a failure here means
                             // a register/unregister race replaced the
                             // stream — count it.
                             let _ = st.apply_many(&data, count);
                         }
                     }
+                    inflight.clear();
                 }
                 Some(ShardMsg::WalRegister { name, dim, spec }) => {
                     drained += 1;
@@ -1509,7 +1709,7 @@ fn shard_loop(
                     // Quiesce: everything drained so far this cycle must
                     // be applied before the export, so the WAL position
                     // and the exported state describe the same boundary.
-                    flush_stage(&mut stage, &instruments);
+                    flush_stage(stage, instruments);
                     let result = match wal.as_mut() {
                         Some(w) => {
                             let _ = w.flush();
@@ -1533,7 +1733,7 @@ fn shard_loop(
                 Err(_) => break,
             }
         }
-        flush_stage(&mut stage, &instruments);
+        flush_stage(stage, instruments);
         instruments.drain_cycles.inc();
         // Durable-ack contract: a sync barrier (and shutdown) promises
         // everything before it is applied AND — under fsync — on disk,
@@ -1628,7 +1828,7 @@ fn build_shard_section(
         enc.put_u32(s.dim as u32);
         enc.put_str(&s.spec.label());
         let mut tmp = Enc::new();
-        state.lock().expect("stream lock").export_state(&mut tmp);
+        lock_state(state).export_state(&mut tmp);
         enc.put_bytes(tmp.as_bytes());
     }
     Ok(enc.into_bytes())
@@ -1906,6 +2106,7 @@ mod tests {
                 name: "bn".into(),
                 dim: 4,
                 spec: gea(),
+                non_finite: None,
             }],
             ..Default::default()
         };
@@ -2201,6 +2402,7 @@ mod tests {
             banking: true,
             persist: None,
             pin_cores: true,
+            ..Default::default()
         })
         .unwrap();
         c.register("w", 3, gea()).unwrap();
@@ -2212,5 +2414,163 @@ mod tests {
         // On Linux both workers pin; elsewhere the counter stays 0.
         let pinned = c.metrics().counter("shards_pinned").get();
         assert!(pinned <= 2);
+    }
+
+    /// Every estimator family, for the hygiene sweep: 4 with planar
+    /// banks (exp/mean/gea/awa) and 4 on the slot fallback
+    /// (true/raw/restart/eh).
+    fn all_family_specs() -> Vec<AveragerSpec> {
+        let grow = WindowKind::Growing { c: 0.5 };
+        vec![
+            AveragerSpec::Exp { gamma: 0.1 },
+            AveragerSpec::ExpK { k: 16 },
+            AveragerSpec::Gea { c: 0.5 },
+            AveragerSpec::Awa {
+                window: grow,
+                accumulators: 3,
+            },
+            AveragerSpec::True { window: grow },
+            AveragerSpec::Raw {
+                c: 0.5,
+                total_steps: 100,
+            },
+            AveragerSpec::Restart { window: grow },
+            AveragerSpec::Eh {
+                window: grow,
+                eps: 0.1,
+            },
+        ]
+    }
+
+    #[test]
+    fn non_finite_reject_refuses_batches_for_every_family() {
+        for banked in [true, false] {
+            let c = Coordinator::with_banking(2, 64, BackpressurePolicy::Block, banked);
+            for (i, spec) in all_family_specs().into_iter().enumerate() {
+                let name = format!("s{i}");
+                c.register(&name, 2, spec).unwrap();
+                // Finite data flows.
+                c.push(&name, vec![1.0, 2.0]).unwrap();
+                // Any non-finite component refuses the whole batch.
+                let err = c.push(&name, vec![1.0, f64::NAN]).unwrap_err();
+                assert!(err.contains("non-finite"), "{err}");
+                let err = c
+                    .push_many(&name, 2, &[1.0, 2.0, f64::INFINITY, 3.0])
+                    .unwrap_err();
+                assert!(err.contains("non-finite"), "{err}");
+                c.sync().unwrap();
+                // Only the clean push landed; the estimate (where the
+                // family publishes one this early) stays finite.
+                let snap = c.snapshot(&name).unwrap();
+                assert_eq!(snap.t, 1, "family {i} banked={banked}");
+                if let Some(v) = snap.value {
+                    assert!(v.iter().all(|x| x.is_finite()));
+                }
+            }
+            assert!(c.metrics().counter(names::NON_FINITE_REJECTED).get() >= 24);
+        }
+    }
+
+    #[test]
+    fn non_finite_ignore_skips_bad_samples_and_keeps_the_rest() {
+        let c = Coordinator::new(2, 64, BackpressurePolicy::Block);
+        c.register_with_policy("w", 2, gea(), Some(NonFinitePolicy::Ignore))
+            .unwrap();
+        // Samples 1 and 3 are clean; 2 has a NaN component, 4 is Inf.
+        let batch = [
+            1.0,
+            2.0,
+            f64::NAN,
+            5.0,
+            3.0,
+            4.0,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+        ];
+        assert_eq!(c.push_many("w", 4, &batch).unwrap(), PushOutcome::Accepted);
+        // An all-bad batch is handled without shipping anything.
+        assert_eq!(
+            c.push_many("w", 1, &[f64::NAN, f64::NAN]).unwrap(),
+            PushOutcome::Accepted
+        );
+        c.sync().unwrap();
+        assert_eq!(c.snapshot("w").unwrap().t, 2, "two clean samples kept");
+        assert_eq!(c.metrics().counter(names::NON_FINITE_REJECTED).get(), 3);
+        // The surviving samples applied in order, exactly as if pushed
+        // alone.
+        let r = Coordinator::new(1, 16, BackpressurePolicy::Block);
+        r.register("w", 2, gea()).unwrap();
+        r.push_many("w", 2, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        r.sync().unwrap();
+        let got = c.snapshot("w").unwrap().value.unwrap();
+        let want = r.snapshot("w").unwrap().value.unwrap();
+        assert_eq!(&got[..], &want[..]);
+    }
+
+    #[test]
+    fn non_finite_propagate_keeps_prehygiene_behaviour() {
+        let c = Coordinator::new(1, 16, BackpressurePolicy::Block);
+        c.register_with_policy("w", 1, gea(), Some(NonFinitePolicy::Propagate))
+            .unwrap();
+        c.push("w", vec![1.0]).unwrap();
+        c.push("w", vec![f64::NAN]).unwrap();
+        c.sync().unwrap();
+        let snap = c.snapshot("w").unwrap();
+        assert_eq!(snap.t, 2);
+        assert!(snap.value.unwrap()[0].is_nan(), "NaN flowed through");
+        assert_eq!(c.metrics().counter(names::NON_FINITE_REJECTED).get(), 0);
+    }
+
+    #[test]
+    fn supervisor_restarts_workers_and_poisons_repeat_offenders() {
+        // Chaos panics are scoped to this test's streams by prefix, so
+        // parallel tests in this process never see an injected fault;
+        // the harness-wide mutex keeps other arming tests off the plan.
+        let _guard = chaos::test_mutex().lock().unwrap_or_else(|e| e.into_inner());
+        let c = Coordinator::with_options(CoordinatorOptions {
+            shards: 1,
+            queue_capacity: 64,
+            poison_threshold: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        c.register("poisoncore/bad", 1, gea()).unwrap();
+        c.register("healthy", 1, gea()).unwrap();
+        chaos::arm(chaos::ChaosPlan {
+            seed: 0x5EED,
+            panic_per_mille: 1000,
+            panic_prefix: Some("poisoncore/"),
+            ..Default::default()
+        });
+        // Every batch for the poisoned stream kills the worker; the
+        // supervisor restarts it and, at the threshold, isolates the
+        // stream. Healthy traffic on the same shard keeps flowing.
+        let mut rejected = None;
+        for i in 0..10 {
+            c.push("healthy", vec![i as f64]).unwrap();
+            if let Err(e) = c.push("poisoncore/bad", vec![1.0]) {
+                rejected = Some(e);
+                break;
+            }
+            // Each push needs its panic processed before the next so
+            // strikes accumulate deterministically.
+            while c.metrics().counter(names::QUARANTINED_BATCHES).get() < i + 1 {
+                std::thread::yield_now();
+            }
+        }
+        chaos::disarm();
+        let err = rejected.expect("stream isolated before 10 pushes");
+        assert!(err.contains("poison"), "{err}");
+        assert_eq!(c.metrics().counter(names::QUARANTINED_BATCHES).get(), 3);
+        assert!(c.metrics().counter(names::SHARD_RESTARTS).get() >= 3);
+        assert_eq!(c.metrics().counter(names::POISONED_STREAMS).get(), 1);
+        // Anytime availability: the shard survived, healthy traffic all
+        // applied, and the poisoned stream still answers snapshots.
+        c.push("healthy", vec![42.0]).unwrap();
+        c.sync().unwrap();
+        assert!(c.snapshot("healthy").unwrap().t >= 2);
+        assert_eq!(c.snapshot("poisoncore/bad").unwrap().t, 0);
+        // The quarantined samples surface as drops, not silence.
+        assert_eq!(c.snapshot("poisoncore/bad").unwrap().dropped, 3);
     }
 }

@@ -49,8 +49,9 @@ mod core;
 pub mod protocol;
 pub mod server;
 pub mod stream;
+pub mod supervisor;
 
 pub use self::core::{CheckpointReport, Coordinator, PushOutcome, RecoveryReport, Snapshot};
-pub use client::{Client, ClientError};
+pub use client::{Client, ClientError, RetryPolicy, RetryingClient};
 pub use protocol::{MultiOutcome, ProtocolChoice, StatEntry, StatOutcome, StreamInfo};
-pub use server::Server;
+pub use server::{Server, ServerOptions};

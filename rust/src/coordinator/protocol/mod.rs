@@ -65,6 +65,13 @@ pub const HELLO_MAGIC: &[u8; 4] = b"ATAH";
 /// self-healing — so both ends reference this constant.
 pub const STALE_HANDLE_MARKER: &str = "no stream with handle";
 
+/// Marker prefix the coordinator puts on queue-full errors under the
+/// `reject` backpressure policy. The server maps any error carrying it
+/// to the structured [`Response::Overloaded`] outcome (retry after
+/// backoff) instead of the terminal [`Response::Err`]; like
+/// [`STALE_HANDLE_MARKER`], both ends reference this constant.
+pub const OVERLOAD_MARKER: &str = "overloaded:";
+
 /// The codec a connection speaks after negotiation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Wire {
@@ -339,6 +346,12 @@ impl Request {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
     Err(String),
+    /// Structured backpressure: the server is shedding load (ingest
+    /// queue full under `reject`, or draining for shutdown). Unlike
+    /// [`Response::Err`] this is a *retryable* outcome — clients should
+    /// back off and resend, and [`crate::coordinator::client`]'s
+    /// retrying wrapper does exactly that.
+    Overloaded(String),
     Pong,
     Registered {
         handle: u64,
@@ -489,6 +502,24 @@ mod tests {
         assert_eq!(parse_hello(b"ATAH"), None); // missing version
         assert_eq!(parse_hello(b"ATAH\x02\x00\x00"), None); // trailing byte
         assert_eq!(parse_hello(br#"{"op":"ping"}"#), None); // legacy JSON
+    }
+
+    #[test]
+    fn overloaded_roundtrips_on_both_codecs_under_any_op() {
+        let resp = Response::Overloaded("overloaded: stream 'w': ingest queue full".to_string());
+        for wire in [Wire::V1Json, Wire::V2Binary] {
+            // Overloaded, like Err, must decode regardless of which op
+            // the client thinks it is waiting on.
+            for kind in [OpKind::Push, OpKind::MultiPush, OpKind::Snapshot, OpKind::Sync] {
+                let mut buf = Vec::new();
+                encode_response(wire, 7, &resp, &mut buf).unwrap();
+                let (seq, got) = decode_response(wire, kind, &buf).unwrap();
+                if wire == Wire::V2Binary {
+                    assert_eq!(seq, 7);
+                }
+                assert_eq!(got, resp, "{wire:?}/{kind:?}");
+            }
+        }
     }
 
     #[test]

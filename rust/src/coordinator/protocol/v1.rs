@@ -322,6 +322,17 @@ pub fn err_response(msg: &str) -> Json {
 pub fn response_to_json(resp: &Response) -> Json {
     match resp {
         Response::Err(msg) => err_response(msg),
+        Response::Overloaded(msg) => {
+            // Legacy-decodable backpressure: the envelope is an ordinary
+            // error (old clients fail the op with the message), plus an
+            // "overloaded" flag new clients key retry-after-backoff on.
+            let mut map = match err_response(msg) {
+                Json::Obj(m) => m,
+                _ => unreachable!("err_response builds objects"),
+            };
+            map.insert("overloaded".to_string(), Json::Bool(true));
+            Json::Obj(map)
+        }
         Response::Pong => ok_response(vec![("pong", Json::Bool(true))]),
         Response::Registered { handle } => {
             // The legacy register ack plus the (ignored-by-old-clients)
@@ -472,12 +483,18 @@ pub fn response_from_json(kind: OpKind, j: &Json) -> Result<Response, String> {
     match j.get("ok").and_then(Json::as_bool) {
         Some(true) => {}
         Some(false) => {
-            return Ok(Response::Err(
-                j.get("error")
-                    .and_then(Json::as_str)
-                    .unwrap_or("unknown server error")
-                    .to_string(),
-            ))
+            let msg = j
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown server error")
+                .to_string();
+            return Ok(
+                if j.get("overloaded").and_then(Json::as_bool) == Some(true) {
+                    Response::Overloaded(msg)
+                } else {
+                    Response::Err(msg)
+                },
+            );
         }
         None => return Err("malformed response (no 'ok')".into()),
     }
@@ -879,6 +896,27 @@ mod tests {
         };
         let j = response_to_json(&resp);
         assert_eq!(response_from_json(OpKind::MultiSnapshot, &j).unwrap(), resp);
+    }
+
+    #[test]
+    fn overloaded_is_a_flagged_error_envelope() {
+        let j = response_to_json(&Response::Overloaded("queue full".into()));
+        // Old clients see a plain structured error...
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("error").and_then(Json::as_str), Some("queue full"));
+        // ...new clients see the retryable outcome, under any op kind.
+        for kind in [OpKind::Push, OpKind::Sync] {
+            assert_eq!(
+                response_from_json(kind, &j).unwrap(),
+                Response::Overloaded("queue full".into())
+            );
+        }
+        // An unflagged error still decodes as terminal.
+        let e = err_response("queue full");
+        assert_eq!(
+            response_from_json(OpKind::Push, &e).unwrap(),
+            Response::Err("queue full".into())
+        );
     }
 
     #[test]

@@ -57,6 +57,10 @@ const OP_MULTI_SNAPSHOT: u8 = 16;
 
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
+/// Retryable backpressure ([`Response::Overloaded`]): same layout as
+/// `STATUS_ERR` (message only, no op tag), distinct status so clients
+/// can tell shed load from a terminal failure.
+const STATUS_OVERLOADED: u8 = 2;
 
 fn op_tag(kind: OpKind) -> u8 {
     match kind {
@@ -354,10 +358,14 @@ pub fn encode_response(seq: u64, resp: &Response, out: &mut Vec<u8>) -> Result<(
             e.put_u8(STATUS_ERR);
             e.put_str(msg);
         }
+        Response::Overloaded(msg) => {
+            e.put_u8(STATUS_OVERLOADED);
+            e.put_str(msg);
+        }
         ok => {
             e.put_u8(STATUS_OK);
             match ok {
-                Response::Err(_) => unreachable!("handled above"),
+                Response::Err(_) | Response::Overloaded(_) => unreachable!("handled above"),
                 Response::Pong => e.put_u8(OP_PING),
                 Response::Registered { handle } => {
                     e.put_u8(OP_REGISTER);
@@ -502,7 +510,7 @@ pub fn decode_response(kind: OpKind, payload: &[u8]) -> Result<(u64, Response), 
     let mut d = Dec::new(payload);
     let seq = d.get_u64()?;
     let status = d.get_u8()?;
-    if status == STATUS_ERR {
+    if status == STATUS_ERR || status == STATUS_OVERLOADED {
         let msg = d.get_str()?;
         if d.remaining() != 0 {
             return Err(format!(
@@ -510,7 +518,12 @@ pub fn decode_response(kind: OpKind, payload: &[u8]) -> Result<(u64, Response), 
                 d.remaining()
             ));
         }
-        return Ok((seq, Response::Err(msg)));
+        let resp = if status == STATUS_OVERLOADED {
+            Response::Overloaded(msg)
+        } else {
+            Response::Err(msg)
+        };
+        return Ok((seq, resp));
     }
     if status != STATUS_OK {
         return Err(format!("unknown response status {status}"));

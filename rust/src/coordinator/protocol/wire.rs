@@ -57,6 +57,69 @@ pub fn read_frame_into(r: &mut impl Read, buf: &mut Vec<u8>) -> std::io::Result<
     Ok(Some(()))
 }
 
+/// Outcome of [`read_frame_idle`] — like [`read_frame_into`] but with
+/// a socket read timeout treated as *idleness* when it strikes before
+/// the frame's first byte (the stream is still at a clean boundary, so
+/// the caller may keep waiting) and as a hard error mid-frame (the
+/// peer stalled inside a frame; resuming is impossible).
+#[derive(Debug, PartialEq, Eq)]
+pub enum FrameRead {
+    /// A complete frame payload is in the buffer.
+    Frame,
+    /// Clean EOF at a frame boundary.
+    Eof,
+    /// The socket read timeout elapsed before any byte of the next
+    /// frame arrived. The stream is intact; retry or enforce an idle
+    /// deadline.
+    Idle,
+}
+
+/// Read one frame's payload into `buf` on a socket with a read
+/// timeout. Timeouts before the first byte report [`FrameRead::Idle`];
+/// a timeout (or EOF) after the frame started is an error — the frame
+/// boundary is lost and the connection cannot continue.
+pub fn read_frame_idle(r: &mut impl Read, buf: &mut Vec<u8>) -> std::io::Result<FrameRead> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(FrameRead::Eof)
+                } else {
+                    Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "EOF inside a frame length prefix",
+                    ))
+                };
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if got == 0
+                    && matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+            {
+                return Ok(FrameRead::Idle);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds MAX_FRAME"),
+        ));
+    }
+    buf.clear();
+    buf.resize(len, 0);
+    r.read_exact(buf)?;
+    Ok(FrameRead::Frame)
+}
+
 /// Largest capacity worth keeping in a long-lived frame buffer between
 /// frames. `read_frame_into`/encode paths grow a reused buffer to each
 /// frame's size; without a trim, ONE outsized state-transfer frame
@@ -159,6 +222,47 @@ mod tests {
             big.capacity() <= BUF_HIGH_WATER * 2,
             "outsized capacity released (got {})",
             big.capacity()
+        );
+    }
+
+    #[test]
+    fn read_frame_idle_distinguishes_boundary_timeouts() {
+        // A reader that times out immediately (zero bytes): idleness.
+        struct TimeoutReader;
+        impl Read for TimeoutReader {
+            fn read(&mut self, _b: &mut [u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "t/o"))
+            }
+        }
+        let mut buf = Vec::new();
+        assert_eq!(
+            read_frame_idle(&mut TimeoutReader, &mut buf).unwrap(),
+            FrameRead::Idle
+        );
+        // A timeout after the prefix started: hard error.
+        struct PartialThenTimeout(Vec<u8>);
+        impl Read for PartialThenTimeout {
+            fn read(&mut self, b: &mut [u8]) -> std::io::Result<usize> {
+                if self.0.is_empty() {
+                    return Err(std::io::Error::new(std::io::ErrorKind::TimedOut, "t/o"));
+                }
+                b[0] = self.0.remove(0);
+                Ok(1)
+            }
+        }
+        assert!(read_frame_idle(&mut PartialThenTimeout(vec![0, 0]), &mut buf).is_err());
+        // Complete frames and clean EOF still work.
+        let mut wire = Vec::new();
+        write_frame_bytes(&mut wire, b"hi").unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        assert_eq!(
+            read_frame_idle(&mut cursor, &mut buf).unwrap(),
+            FrameRead::Frame
+        );
+        assert_eq!(&buf, b"hi");
+        assert_eq!(
+            read_frame_idle(&mut cursor, &mut buf).unwrap(),
+            FrameRead::Eof
         );
     }
 

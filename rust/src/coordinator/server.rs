@@ -13,15 +13,74 @@
 use super::core::{Coordinator, PushOutcome};
 use super::protocol::{
     self, v1, wire, ProtocolChoice, Request, Response, StatEntry, StatOutcome, StreamInfo,
-    StreamRef, Wire,
+    StreamRef, Wire, OVERLOAD_MARKER,
 };
 use crate::averagers::AveragerSpec;
+use crate::config::ServiceConfig;
 use crate::metrics::{names, Counter};
+use crate::testkit::chaos;
 use crate::util::json::Json;
 use crate::util::pool::{BufferPool, ThreadPool};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Survivability knobs for a server instance (see the `[service]`
+/// config section; `0` disables a knob).
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOptions {
+    /// Wire codec policy.
+    pub choice: ProtocolChoice,
+    /// A peer that stalls *mid-frame* longer than this is disconnected
+    /// (its frame boundary is unrecoverable). Between frames the same
+    /// interval is the idle-poll granularity. 0 = block forever.
+    pub read_timeout_ms: u64,
+    /// Socket write deadline: a peer that stops reading its socket must
+    /// error out of `write_all` instead of pinning a handler (or slow
+    /// pool) thread forever. 0 = block forever.
+    pub write_timeout_ms: u64,
+    /// A connection with no complete frame for this long is closed
+    /// (requires `read_timeout_ms > 0` to be enforceable). 0 = never.
+    pub idle_timeout_ms: u64,
+    /// Admission gate: refuse new connections beyond this many live
+    /// ones — close immediately, count `wire_connections_rejected`.
+    /// 0 = unlimited.
+    pub max_connections: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            choice: ProtocolChoice::Auto,
+            read_timeout_ms: 30_000,
+            write_timeout_ms: 30_000,
+            idle_timeout_ms: 0,
+            max_connections: 0,
+        }
+    }
+}
+
+impl ServerOptions {
+    /// The survivability knobs a `[service]` config section carries.
+    pub fn from_config(cfg: &ServiceConfig) -> ServerOptions {
+        ServerOptions {
+            choice: cfg.protocol,
+            read_timeout_ms: cfg.read_timeout_ms,
+            write_timeout_ms: cfg.write_timeout_ms,
+            idle_timeout_ms: cfg.idle_timeout_ms,
+            max_connections: cfg.max_connections,
+        }
+    }
+
+    fn read_timeout(&self) -> Option<Duration> {
+        (self.read_timeout_ms > 0).then(|| Duration::from_millis(self.read_timeout_ms))
+    }
+
+    fn write_timeout(&self) -> Option<Duration> {
+        (self.write_timeout_ms > 0).then(|| Duration::from_millis(self.write_timeout_ms))
+    }
+}
 
 /// A running TCP server; drop (or call [`Server::shutdown`]) to stop.
 pub struct Server {
@@ -31,6 +90,9 @@ pub struct Server {
     /// unblock their handler threads (which otherwise sit in a blocking
     /// read). Handlers deregister on exit, so this holds only live fds.
     conns: ConnRegistry,
+    coordinator: Arc<Coordinator>,
+    frames_in: Arc<Counter>,
+    frames_out: Arc<Counter>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -39,7 +101,11 @@ type ConnRegistry = Arc<Mutex<std::collections::HashMap<u64, TcpStream>>>;
 /// Per-server state shared by every connection handler.
 struct ConnShared {
     coordinator: Arc<Coordinator>,
-    choice: ProtocolChoice,
+    opts: ServerOptions,
+    /// Server-wide stop/drain flag: idle connections close themselves
+    /// when they see it, so a graceful drain settles without waiting
+    /// for the force-close.
+    stop: Arc<AtomicBool>,
     /// Pooled frame read/encode scratch, shared across connections and
     /// the out-of-order completion jobs — connection churn and response
     /// encoding reuse parked byte buffers instead of allocating.
@@ -53,6 +119,8 @@ struct ConnShared {
     conns_v1: Arc<Counter>,
     conns_v2: Arc<Counter>,
     oversized: Arc<Counter>,
+    deadline_closes: Arc<Counter>,
+    overloaded: Arc<Counter>,
 }
 
 impl Server {
@@ -77,6 +145,26 @@ impl Server {
         workers: usize,
         choice: ProtocolChoice,
     ) -> Result<Server, String> {
+        Server::start_with_options(
+            addr,
+            coordinator,
+            workers,
+            ServerOptions {
+                choice,
+                ..ServerOptions::default()
+            },
+        )
+    }
+
+    /// As [`Server::start`] with the full survivability knob set:
+    /// read/write/idle deadlines and the max-connections admission
+    /// gate.
+    pub fn start_with_options(
+        addr: &str,
+        coordinator: Arc<Coordinator>,
+        workers: usize,
+        opts: ServerOptions,
+    ) -> Result<Server, String> {
         let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
         let local = listener.local_addr().map_err(|e| e.to_string())?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -89,19 +177,26 @@ impl Server {
         let conns_v1 = coordinator.metrics().counter(names::CONNECTIONS_V1);
         let conns_v2 = coordinator.metrics().counter(names::CONNECTIONS_V2);
         let oversized = coordinator.metrics().counter(names::OVERSIZED_RESPONSES);
+        let rejected = coordinator.metrics().counter(names::CONNECTIONS_REJECTED);
+        let deadline_closes = coordinator.metrics().counter(names::DEADLINE_CLOSES);
+        let overloaded = coordinator.metrics().counter(names::OVERLOADED_RESPONSES);
+        let server_coordinator = Arc::clone(&coordinator);
         let shared = Arc::new(ConnShared {
             coordinator,
-            choice,
+            opts,
+            stop: stop.clone(),
             bytes: BufferPool::new(64),
             // One barrier slot per connection-handler thread: a slow
             // checkpoint on one connection must not head-of-line block
             // another connection's instant sync.
             slow: Mutex::new(ThreadPool::new(workers.max(2))),
-            frames_in,
-            frames_out,
+            frames_in: frames_in.clone(),
+            frames_out: frames_out.clone(),
             conns_v1,
             conns_v2,
             oversized,
+            deadline_closes,
+            overloaded,
         });
         let accept_thread = std::thread::Builder::new()
             .name("ata-accept".to_string())
@@ -117,6 +212,18 @@ impl Server {
                     }
                     match conn {
                         Ok(stream) => {
+                            // Admission gate: beyond the cap the only
+                            // protocol-independent signal is a close —
+                            // the peer has not negotiated a codec yet,
+                            // so no structured frame can be promised.
+                            if opts.max_connections > 0
+                                && conns2.lock().expect("conn registry").len()
+                                    >= opts.max_connections
+                            {
+                                rejected.inc();
+                                drop(stream);
+                                continue;
+                            }
                             // Request/response framing: without NODELAY the
                             // 4-byte length prefix waits on delayed ACKs
                             // (~40ms per roundtrip — measured in
@@ -145,11 +252,18 @@ impl Server {
                 // (its queued jobs write to closed sockets and bail).
             })
             .map_err(|e| e.to_string())?;
-        crate::log_info!("server", "listening on {local} (protocol {})", choice.label());
+        crate::log_info!(
+            "server",
+            "listening on {local} (protocol {})",
+            opts.choice.label()
+        );
         Ok(Server {
             addr: local,
             stop,
             conns,
+            coordinator: server_coordinator,
+            frames_in,
+            frames_out,
             accept_thread: Some(accept_thread),
         })
     }
@@ -161,9 +275,63 @@ impl Server {
 
     /// Stop accepting, force-close live connections, join all threads.
     pub fn shutdown(&mut self) {
-        if self.stop.swap(true, Ordering::SeqCst) {
+        let already = self.stop.swap(true, Ordering::SeqCst);
+        if already && self.accept_thread.is_none() {
             return;
         }
+        self.close_and_join();
+        crate::log_info!("server", "shut down");
+    }
+
+    /// Graceful drain: stop accepting, give in-flight frames up to
+    /// `grace` to settle (idle connections close themselves at their
+    /// next poll tick), force a WAL group commit, then close whatever
+    /// is left and join all threads.
+    ///
+    /// Settlement means the server owes no responses: every frame read
+    /// was answered (or its connection is gone). Peers that keep their
+    /// connections open past `grace` are force-closed like a plain
+    /// [`Server::shutdown`] — by then each has either been answered or
+    /// never sent a frame.
+    pub fn drain(&mut self, grace: Duration) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            // A concurrent shutdown/drain already ran; just make sure
+            // the threads are joined.
+            self.close_and_join();
+            return;
+        }
+        // Wake the blocking accept so the listener closes (new connects
+        // are refused from here on).
+        let _ = TcpStream::connect(self.addr);
+        let deadline = Instant::now() + grace;
+        let mut last = (u64::MAX, u64::MAX);
+        while Instant::now() < deadline {
+            if self.conns.lock().expect("conn registry").is_empty() {
+                break;
+            }
+            let now = (self.frames_in.get(), self.frames_out.get());
+            // Settled: nothing new arrived since the last tick and every
+            // read frame has its response out. (Counters are equal at
+            // quiescence because hellos are answered too; a connection
+            // that died mid-response deregisters and stops counting.)
+            if now == last && now.0 <= now.1 {
+                break;
+            }
+            last = now;
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        // Durability floor for whatever was acked: force the WAL group
+        // commit before the process exits.
+        if let Err(e) = self.coordinator.sync() {
+            crate::log_warn!("server", "drain: final sync failed: {e}");
+        }
+        self.close_and_join();
+        crate::log_info!("server", "drained and shut down");
+    }
+
+    /// Force-close live connections and join the accept thread (which
+    /// in turn joins the handler pool). Idempotent.
+    fn close_and_join(&mut self) {
         // Unblock handlers stuck in read_frame on live connections.
         {
             let guard = self.conns.lock().expect("conn registry");
@@ -176,7 +344,6 @@ impl Server {
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
         }
-        crate::log_info!("server", "shut down");
     }
 }
 
@@ -235,19 +402,80 @@ fn send_response(
     }
 }
 
+/// Read the next frame under the connection's deadlines. Returns
+/// `false` when the connection should close (EOF, error, idle/deadline
+/// expiry, or server drain while idle).
+fn read_with_deadlines(
+    reader: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    shared: &ConnShared,
+    peer: &str,
+    last_frame: &mut Instant,
+) -> bool {
+    loop {
+        match wire::read_frame_idle(reader, buf) {
+            Ok(wire::FrameRead::Frame) => {
+                *last_frame = Instant::now();
+                shared.frames_in.inc();
+                return true;
+            }
+            Ok(wire::FrameRead::Eof) => return false,
+            Ok(wire::FrameRead::Idle) => {
+                // Still at a clean frame boundary. Close if the server
+                // is draining, or the idle budget (shrunk by any armed
+                // chaos clock skew) is spent; otherwise keep waiting.
+                if shared.stop.load(Ordering::SeqCst) {
+                    return false;
+                }
+                let idle = last_frame.elapsed() + chaos::clock_skew();
+                if shared.opts.idle_timeout_ms > 0
+                    && idle >= Duration::from_millis(shared.opts.idle_timeout_ms)
+                {
+                    shared.deadline_closes.inc();
+                    crate::log_debug!(
+                        "server",
+                        "{peer}: idle {}ms exceeds the idle timeout — closing",
+                        idle.as_millis()
+                    );
+                    return false;
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Mid-frame stall past the read deadline: the frame
+                // boundary is lost, the connection cannot continue.
+                shared.deadline_closes.inc();
+                crate::log_debug!("server", "{peer}: read deadline expired mid-frame");
+                return false;
+            }
+            Err(e) => {
+                crate::log_debug!("server", "{peer}: read error: {e}");
+                return false;
+            }
+        }
+    }
+}
+
 fn handle_connection(mut reader: TcpStream, shared: &Arc<ConnShared>) {
     let peer = reader
         .peer_addr()
         .map(|a| a.to_string())
         .unwrap_or_else(|_| "?".to_string());
     crate::log_debug!("server", "connection from {peer}");
+    // Bounded reads: `read_frame_idle` turns boundary timeouts into
+    // idle polls and mid-frame timeouts into deadline closes.
+    let _ = reader.set_read_timeout(shared.opts.read_timeout());
     let writer = match reader.try_clone() {
         Ok(w) => {
             // Bounded writes: offloaded barrier responses run on a
             // SHARED pool, so a peer that stops reading its socket must
             // error out of write_all instead of pinning a pool thread
             // (and with it every other connection's barriers) forever.
-            let _ = w.set_write_timeout(Some(std::time::Duration::from_secs(30)));
+            let _ = w.set_write_timeout(shared.opts.write_timeout());
             Arc::new(Mutex::new(w))
         }
         Err(e) => {
@@ -257,23 +485,24 @@ fn handle_connection(mut reader: TcpStream, shared: &Arc<ConnShared>) {
     };
     let mut rbuf = shared.bytes.take_empty();
     let mut wbuf = shared.bytes.take_empty();
+    let mut last_frame = Instant::now();
 
     // ---- First frame: a hello, or a legacy v1 peer's first request ----
-    match wire::read_frame_into(&mut reader, rbuf.as_mut_vec()) {
-        Ok(Some(())) => {}
-        Ok(None) => return, // connected and left
-        Err(e) => {
-            crate::log_debug!("server", "{peer}: read error: {e}");
-            return;
-        }
+    if !read_with_deadlines(
+        &mut reader,
+        rbuf.as_mut_vec(),
+        shared,
+        &peer,
+        &mut last_frame,
+    ) {
+        return;
     }
-    shared.frames_in.inc();
     let wp: Wire;
     // `true` while rbuf still holds an unprocessed request (the legacy
     // auto-detect path: the first frame IS the first request).
     let mut pending_first = false;
     if let Some(client_max) = protocol::parse_hello(&rbuf) {
-        let chosen = match shared.choice {
+        let chosen = match shared.opts.choice {
             ProtocolChoice::V1 => protocol::WIRE_V1,
             ProtocolChoice::Auto => client_max.clamp(protocol::WIRE_V1, protocol::WIRE_V2),
             // Strict: commit to v2; a client that cannot follow fails
@@ -289,7 +518,7 @@ fn handle_connection(mut reader: TcpStream, shared: &Arc<ConnShared>) {
             return;
         }
         shared.frames_out.inc();
-    } else if shared.choice == ProtocolChoice::V2 {
+    } else if shared.opts.choice == ProtocolChoice::V2 {
         // Strict v2 server, no hello: reject readably — the peer is a
         // JSON speaker, so the error frame is JSON.
         let err = v1::err_response(
@@ -317,16 +546,24 @@ fn handle_connection(mut reader: TcpStream, shared: &Arc<ConnShared>) {
         }
         wire::trim_buf(wbuf.as_mut_vec());
         if !pending_first {
-            match wire::read_frame_into(&mut reader, rbuf.as_mut_vec()) {
-                Ok(Some(())) => shared.frames_in.inc(),
-                Ok(None) => break, // clean EOF
-                Err(e) => {
-                    crate::log_debug!("server", "{peer}: read error: {e}");
-                    break;
-                }
+            if !read_with_deadlines(
+                &mut reader,
+                rbuf.as_mut_vec(),
+                shared,
+                &peer,
+                &mut last_frame,
+            ) {
+                break;
             }
         }
         pending_first = false;
+        // Chaos: a reset server drops the connection after reading a
+        // frame and before answering it — the worst spot for a client
+        // (it cannot tell whether the request was applied).
+        if chaos::armed() && chaos::conn_reset() {
+            crate::log_debug!("server", "{peer}: chaos connection reset");
+            break;
+        }
         match protocol::decode_request(wp, &rbuf) {
             Ok((seq, req)) => {
                 // v2 barrier ops complete on the side pool so pipelined
@@ -343,9 +580,10 @@ fn handle_connection(mut reader: TcpStream, shared: &Arc<ConnShared>) {
                     let pool = shared.bytes.clone();
                     let frames_out = Arc::clone(&shared.frames_out);
                     let oversized = Arc::clone(&shared.oversized);
+                    let overloaded = Arc::clone(&shared.overloaded);
                     let w = Arc::clone(&writer);
                     shared.slow.lock().expect("slow pool").execute(move || {
-                        let resp = dispatch(req, &coordinator);
+                        let resp = overload_map(dispatch(req, &coordinator), &overloaded);
                         let mut buf = pool.take_empty();
                         let _ = send_response(
                             &frames_out,
@@ -358,7 +596,8 @@ fn handle_connection(mut reader: TcpStream, shared: &Arc<ConnShared>) {
                         );
                     });
                 } else {
-                    let resp = dispatch(req, &shared.coordinator);
+                    let resp =
+                        overload_map(dispatch(req, &shared.coordinator), &shared.overloaded);
                     if !send_response(
                         &shared.frames_out,
                         &shared.oversized,
@@ -395,6 +634,20 @@ fn handle_connection(mut reader: TcpStream, shared: &Arc<ConnShared>) {
                 }
             }
         }
+    }
+}
+
+/// Map a coordinator queue-full error (tagged with [`OVERLOAD_MARKER`])
+/// to the structured retryable [`Response::Overloaded`] outcome. Both
+/// codecs encode it distinctly, so clients can tell shed load (back
+/// off and resend) from a terminal error.
+fn overload_map(resp: Response, overloaded: &Counter) -> Response {
+    match resp {
+        Response::Err(e) if e.contains(OVERLOAD_MARKER) => {
+            overloaded.inc();
+            Response::Overloaded(e)
+        }
+        other => other,
     }
 }
 

@@ -1,0 +1,187 @@
+//! Shard-worker supervision: run a worker loop under `catch_unwind`,
+//! quarantine whatever batch was in flight when it died, restart the
+//! loop, and feed the caller's poison-stream policy.
+//!
+//! The supervisor is generic over the quarantine token so it stays
+//! decoupled from the coordinator's private slot types: the worker
+//! marks the message it is about to process via [`InFlight`], clears
+//! the mark once the message is safely applied or staged, and on a
+//! panic the supervisor hands the marooned token to the caller's
+//! attribution callback (which bumps per-stream strike counts and
+//! isolates repeat offenders instead of letting one stream take the
+//! whole shard down).
+//!
+//! A worker that panics *outside* any message (torn internal state,
+//! bugs in checkpoint handling) restarts without attribution; the
+//! restart counter still makes the churn visible to operators. The
+//! queue, the WAL writer, and the bank staging map are owned by the
+//! frame *around* [`supervise`], so a restart loses none of the
+//! already-acknowledged work they hold.
+
+use crate::metrics::Counter;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
+
+/// The message a worker is currently processing (`None` between
+/// messages). The mutex is uncontended (worker and supervisor are the
+/// same thread) and recovers from poisoning by construction — being
+/// poisoned mid-panic is its normal operating condition.
+pub struct InFlight<T> {
+    cell: Mutex<Option<T>>,
+}
+
+impl<T> InFlight<T> {
+    pub fn new() -> InFlight<T> {
+        InFlight {
+            cell: Mutex::new(None),
+        }
+    }
+
+    /// Mark `token` as being processed.
+    pub fn begin(&self, token: T) {
+        *self.lock() = Some(token);
+    }
+
+    /// The message was applied (or staged) — nothing left to quarantine.
+    pub fn clear(&self) {
+        *self.lock() = None;
+    }
+
+    fn take(&self) -> Option<T> {
+        self.lock().take()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Option<T>> {
+        self.cell.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl<T> Default for InFlight<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Supervision counters (shared with the coordinator's registry).
+pub struct Supervisor {
+    /// Worker restarts after a panic.
+    pub restarts: Arc<Counter>,
+    /// In-flight batches quarantined by those panics.
+    pub quarantined: Arc<Counter>,
+}
+
+/// Run `body` (one worker incarnation) until it returns cleanly,
+/// restarting it after every panic. Each restart quarantines the
+/// in-flight token, if the panic struck mid-message, and reports it to
+/// `attribute`.
+pub fn supervise<T, F, Q>(worker: &str, sup: &Supervisor, mut attribute: Q, mut body: F)
+where
+    F: FnMut(&InFlight<T>),
+    Q: FnMut(T),
+{
+    let inflight = InFlight::new();
+    loop {
+        match catch_unwind(AssertUnwindSafe(|| body(&inflight))) {
+            Ok(()) => break,
+            Err(payload) => {
+                sup.restarts.inc();
+                crate::log_warn!(
+                    "supervisor",
+                    "{worker} panicked ({}); restarting",
+                    panic_message(payload.as_ref())
+                );
+                if let Some(token) = inflight.take() {
+                    sup.quarantined.inc();
+                    attribute(token);
+                }
+            }
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&'static str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn sup() -> Supervisor {
+        Supervisor {
+            restarts: Arc::new(Counter::new()),
+            quarantined: Arc::new(Counter::new()),
+        }
+    }
+
+    #[test]
+    fn clean_exit_runs_once() {
+        let s = sup();
+        let runs = AtomicU64::new(0);
+        supervise(
+            "w",
+            &s,
+            |_t: u64| {},
+            |_inflight| {
+                runs.fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(runs.load(Ordering::Relaxed), 1);
+        assert_eq!(s.restarts.get(), 0);
+        assert_eq!(s.quarantined.get(), 0);
+    }
+
+    #[test]
+    fn panics_restart_and_attribute_the_inflight_token() {
+        let s = sup();
+        let runs = AtomicU64::new(0);
+        let mut quarantined: Vec<u64> = Vec::new();
+        supervise(
+            "w",
+            &s,
+            |t: u64| quarantined.push(t),
+            |inflight| {
+                let n = runs.fetch_add(1, Ordering::Relaxed);
+                match n {
+                    // Incarnation 0 dies mid-message 7; incarnation 1
+                    // dies between messages; incarnation 2 exits clean.
+                    0 => {
+                        inflight.begin(7);
+                        panic!("boom in message");
+                    }
+                    1 => panic!("boom between messages"),
+                    _ => {}
+                }
+            },
+        );
+        assert_eq!(runs.load(Ordering::Relaxed), 3);
+        assert_eq!(s.restarts.get(), 2);
+        assert_eq!(s.quarantined.get(), 1);
+        assert_eq!(quarantined, vec![7]);
+    }
+
+    #[test]
+    fn cleared_tokens_are_not_quarantined() {
+        let s = sup();
+        let first = AtomicU64::new(0);
+        supervise(
+            "w",
+            &s,
+            |_t: u64| panic!("must not attribute a cleared token"),
+            |inflight| {
+                if first.fetch_add(1, Ordering::Relaxed) == 0 {
+                    inflight.begin(1);
+                    inflight.clear();
+                    panic!("after clear");
+                }
+            },
+        );
+        assert_eq!(s.restarts.get(), 1);
+        assert_eq!(s.quarantined.get(), 0);
+    }
+}

@@ -16,7 +16,7 @@
 
 use ata::averagers::{staleness_report, AveragerSpec};
 use ata::config::{ExperimentFile, PersistConfig, ServiceConfig};
-use ata::coordinator::{Client, ClientError, Coordinator, ProtocolChoice, Server};
+use ata::coordinator::{Client, ClientError, Coordinator, ProtocolChoice, Server, ServerOptions};
 use ata::persist::checkpoint::Checkpointer;
 use ata::linreg::{run_experiment, EvalSchedule, ExperimentConfig};
 use ata::report;
@@ -185,6 +185,11 @@ fn cmd_serve(args: &[String]) -> Result<(), CliRunError> {
         );
     let p = parse_with(&spec, args)?;
 
+    // Block SIGTERM/SIGINT before ANY worker thread spawns: the mask is
+    // inherited, so a process-directed termination signal queues on the
+    // signalfd instead of killing an arbitrary shard or handler thread.
+    let watcher = ata::util::signal::termination_watcher();
+
     let mut cfg = if !p.str("config").is_empty() {
         ServiceConfig::load(&p.str("config"))?
     } else {
@@ -229,20 +234,32 @@ fn cmd_serve(args: &[String]) -> Result<(), CliRunError> {
                 move || c.checkpoint().map(|_| ()),
             )
         });
-    let _server = Server::start_with(
+    let mut server = Server::start_with_options(
         &cfg.addr,
         coordinator,
         p.usize("workers").map_err(|e| e.to_string())?,
-        cfg.protocol,
+        ServerOptions::from_config(&cfg),
     )?;
     eprintln!(
-        "serving on {} (protocol {}) — Ctrl-C to stop",
+        "serving on {} (protocol {}) — Ctrl-C or SIGTERM to drain and stop",
         cfg.addr,
         cfg.protocol.label()
     );
-    // Block forever; the process is killed externally.
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    match watcher {
+        Some(w) => {
+            let sig = w.wait();
+            eprintln!("{} received — draining connections", sig.label());
+            // Drain: stop accepting, let in-flight frames settle, force
+            // a WAL group commit, then close. The grace bounds how long
+            // a stalled peer can hold up the exit.
+            server.drain(std::time::Duration::from_secs(5));
+            eprintln!("drained; exiting");
+            Ok(())
+        }
+        // No signal support on this target: block until killed.
+        None => loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        },
     }
 }
 

@@ -79,6 +79,26 @@ pub mod names {
     pub const STAT_QUERIES: &str = "stat_queries";
     pub const MULTI_SNAPSHOT_ENTRIES: &str = "multi_snapshot_entries";
     pub const QUERY_STREAMS_MATCHED: &str = "query_streams_matched";
+    /// Shard workers restarted by the supervisor after a panic.
+    pub const SHARD_RESTARTS: &str = "shard_restarts";
+    /// In-flight batches dropped (quarantined) because their apply
+    /// panicked; each is also attributed to its stream for the
+    /// poison-stream policy.
+    pub const QUARANTINED_BATCHES: &str = "quarantined_batches";
+    /// Streams isolated by the poison-stream policy after repeatedly
+    /// killing their shard worker.
+    pub const POISONED_STREAMS: &str = "poisoned_streams";
+    /// Samples refused (policy `reject`) or silently skipped (policy
+    /// `ignore`) because they contained a NaN/Inf component.
+    pub const NON_FINITE_REJECTED: &str = "non_finite_rejected";
+    /// Connections refused by the `max_connections` admission gate.
+    pub const CONNECTIONS_REJECTED: &str = "wire_connections_rejected";
+    /// Connections closed because a read deadline or idle timeout
+    /// expired.
+    pub const DEADLINE_CLOSES: &str = "wire_deadline_closes";
+    /// Structured `Overloaded` responses returned to peers (reject
+    /// backpressure policy or drain refusals).
+    pub const OVERLOADED_RESPONSES: &str = "wire_overloaded_responses";
 }
 
 /// Monotone event counter. The atomic is padded to its own cache line:

@@ -41,6 +41,7 @@
 
 use super::codec::{crc32, Dec, Enc, FORMAT_VERSION, WAL_MAGIC};
 use crate::metrics::Counter;
+use crate::testkit::chaos;
 use std::fs::{self, File, OpenOptions};
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
@@ -288,9 +289,7 @@ impl WalWriter {
     /// Fsync the file and settle the open group's accounting.
     fn sync_group(&mut self) -> Result<(), String> {
         let t0 = Instant::now();
-        self.file
-            .sync_data()
-            .map_err(|e| format!("WAL fsync: {e}"))?;
+        sync_data_chaos(&self.file).map_err(|e| format!("WAL fsync: {e}"))?;
         self.fsync_nanos.add(t0.elapsed().as_nanos() as u64);
         self.settle_group();
         Ok(())
@@ -364,17 +363,28 @@ impl WalWriter {
             .extend_from_slice(&(payload.len() as u32).to_le_bytes());
         self.frame.extend_from_slice(&crc32(payload).to_le_bytes());
         self.frame.extend_from_slice(payload);
-        self.file
-            .write_all(&self.frame)
-            .map_err(|e| format!("WAL append: {e}"))?;
+        let written = if let Some(torn) = chaos::torn_write(self.frame.len()) {
+            // Chaos: leave a genuinely torn prefix on disk — exactly
+            // what a crash mid-write leaves — and report the failure.
+            let _ = self.file.write_all(&self.frame[..torn]);
+            Err(format!(
+                "WAL append: chaos tear after {torn}/{} bytes",
+                self.frame.len()
+            ))
+        } else {
+            self.file
+                .write_all(&self.frame)
+                .map_err(|e| format!("WAL append: {e}"))
+        };
+        if let Err(e) = written {
+            return self.heal_torn_tail(e);
+        }
         self.offset += self.frame.len() as u64;
         self.appended_bytes.add(self.frame.len() as u64);
         if self.fsync {
             if self.group_commit_micros == 0 {
                 let t0 = Instant::now();
-                self.file
-                    .sync_data()
-                    .map_err(|e| format!("WAL fsync: {e}"))?;
+                sync_data_chaos(&self.file).map_err(|e| format!("WAL fsync: {e}"))?;
                 self.fsync_nanos.add(t0.elapsed().as_nanos() as u64);
             } else {
                 // Defer: join (or open) the group; sync only once the
@@ -391,6 +401,20 @@ impl WalWriter {
             self.rotate()?;
         }
         Ok(())
+    }
+
+    /// A failed append leaves this segment's tail torn: anything
+    /// appended after it would sit past an unparseable frame and be
+    /// unreachable at replay. Rotating to a fresh segment restores a
+    /// clean frame boundary, bounding the loss to exactly the one
+    /// record whose append already failed (and was counted upstream).
+    /// Replay skips a sealed segment's corrupt tail and resumes at the
+    /// next header ([`ReplaySummary::skipped_tails`]).
+    fn heal_torn_tail(&mut self, err: String) -> Result<(), String> {
+        match self.rotate() {
+            Ok(()) => Err(err),
+            Err(rot) => Err(format!("{err}; rotation after torn append failed: {rot}")),
+        }
     }
 
     /// Flush written bytes to the OS (cheap; full durability needs the
@@ -425,6 +449,15 @@ impl WalWriter {
     }
 }
 
+/// `sync_data` with the chaos fsync-fault hook in front (an injected
+/// error or stall — one disarmed atomic load in production).
+fn sync_data_chaos(file: &File) -> std::io::Result<()> {
+    if let Some(e) = chaos::fsync_fault() {
+        return Err(e);
+    }
+    file.sync_data()
+}
+
 fn open_segment(dir: &Path, seq: u64) -> Result<(File, u64), String> {
     let path = segment_path(dir, seq);
     let mut file = OpenOptions::new()
@@ -445,9 +478,15 @@ fn open_segment(dir: &Path, seq: u64) -> Result<(File, u64), String> {
 pub struct ReplaySummary {
     /// Records decoded and handed to the callback.
     pub records: u64,
-    /// `false` when the walk stopped at a torn/corrupt record (the
-    /// crash-truncated tail) rather than a clean end.
+    /// `false` when the walk hit a torn/corrupt record anywhere (the
+    /// crash-truncated tail, or a sealed segment's torn tail).
     pub clean: bool,
+    /// Corrupt tails of NON-final segments the walk skipped past. A
+    /// failed append rotates the writer to a fresh segment
+    /// ([`WalWriter`] heals its frame boundary), so a mid-walk tear is
+    /// a bounded, already-counted loss — the walk resumes at the next
+    /// segment header instead of abandoning every record after it.
+    pub skipped_tails: u64,
 }
 
 /// Replay every intact record at or after `from`, in order, through
@@ -474,14 +513,14 @@ pub fn replay_bounded(
     let mut summary = ReplaySummary {
         records: 0,
         clean: true,
+        skipped_tails: 0,
     };
-    for seq in list_segments(dir) {
-        if seq < from.segment {
-            continue;
-        }
-        if seq > max_segment {
-            break;
-        }
+    let seqs: Vec<u64> = list_segments(dir)
+        .into_iter()
+        .filter(|&seq| seq >= from.segment && seq <= max_segment)
+        .collect();
+    for (i, &seq) in seqs.iter().enumerate() {
+        let last_segment = i + 1 == seqs.len();
         let path = segment_path(dir, seq);
         let mut bytes = Vec::new();
         File::open(&path)
@@ -509,13 +548,24 @@ pub fn replay_bounded(
         };
         let seg = &bytes[start..];
         let mut pos = 0usize;
+        // A corrupt record ends THIS segment's walk. In the final
+        // segment that is the crash point and the walk is over; in a
+        // sealed (non-final) segment it is a torn tail the writer
+        // rotated away from — count it and resume at the next segment,
+        // so one torn append cannot swallow every record after it.
+        let corrupt = |summary: &mut ReplaySummary| {
+            summary.clean = false;
+            if !last_segment {
+                summary.skipped_tails += 1;
+            }
+        };
         loop {
             if pos == seg.len() {
                 break; // clean end of segment
             }
             if seg.len() - pos < 8 {
-                summary.clean = false; // torn frame header
-                return Ok(summary);
+                corrupt(&mut summary); // torn frame header
+                break;
             }
             let len =
                 u32::from_le_bytes([seg[pos], seg[pos + 1], seg[pos + 2], seg[pos + 3]]) as usize;
@@ -523,13 +573,13 @@ pub fn replay_bounded(
                 u32::from_le_bytes([seg[pos + 4], seg[pos + 5], seg[pos + 6], seg[pos + 7]]);
             let body = pos + 8;
             if seg.len() - body < len {
-                summary.clean = false; // torn payload
-                return Ok(summary);
+                corrupt(&mut summary); // torn payload
+                break;
             }
             let payload = &seg[body..body + len];
             if crc32(payload) != want_crc {
-                summary.clean = false; // bit flip
-                return Ok(summary);
+                corrupt(&mut summary); // bit flip
+                break;
             }
             match WalRecord::decode(&mut Dec::new(payload)) {
                 Ok(rec) => {
@@ -537,8 +587,8 @@ pub fn replay_bounded(
                     sink(rec);
                 }
                 Err(_) => {
-                    summary.clean = false; // undecodable payload
-                    return Ok(summary);
+                    corrupt(&mut summary); // undecodable payload
+                    break;
                 }
             }
             pos = body + len;
@@ -790,5 +840,98 @@ mod tests {
         fs::write(&seg, &pristine).unwrap();
         let summary = replay(&dir, start, |_| {}).unwrap();
         assert!(summary.clean && summary.records == 5);
+    }
+
+    #[test]
+    fn torn_append_rotates_and_replay_resumes_at_the_next_segment() {
+        let _g = chaos::test_mutex().lock().unwrap_or_else(|e| e.into_inner());
+        let dir = temp_dir("wal-torn-heal");
+        let (ab, fs_) = counters();
+        let mut w = WalWriter::open(&dir, 1 << 20, false, ab, fs_).unwrap();
+        let start = w.position();
+        w.append(&push("s", &[1.0])).unwrap();
+        w.append(&push("s", &[2.0])).unwrap();
+        chaos::arm(chaos::ChaosPlan {
+            seed: 0x70AD,
+            torn_write_per_mille: 1000,
+            ..Default::default()
+        });
+        let err = w.append(&push("s", &[3.0])).unwrap_err();
+        chaos::disarm();
+        assert!(err.contains("chaos tear"), "{err}");
+        assert_eq!(chaos::injected(chaos::Site::TornWrite), 1);
+        // The writer healed by rotating: later appends land in a fresh
+        // segment behind a clean frame boundary.
+        assert_eq!(w.position().segment, start.segment + 1);
+        w.append(&push("s", &[4.0])).unwrap();
+        w.append(&push("s", &[5.0])).unwrap();
+        w.flush().unwrap();
+        let mut got = Vec::new();
+        let summary = replay(&dir, start, |r| got.push(r)).unwrap();
+        assert_eq!(summary.records, 4, "only the torn record is lost");
+        assert_eq!(
+            got,
+            vec![
+                push("s", &[1.0]),
+                push("s", &[2.0]),
+                push("s", &[4.0]),
+                push("s", &[5.0]),
+            ]
+        );
+        // A zero-length tear leaves segment 0 physically intact; any
+        // longer tear leaves a corrupt tail the walk must skip past.
+        let torn_bytes: usize = err
+            .split("tear after ")
+            .nth(1)
+            .and_then(|s| s.split('/').next())
+            .and_then(|s| s.parse().ok())
+            .expect("tear size in error message");
+        if torn_bytes > 0 {
+            assert!(!summary.clean);
+            assert_eq!(summary.skipped_tails, 1);
+        } else {
+            assert!(summary.clean);
+        }
+    }
+
+    #[test]
+    fn fsync_faults_surface_but_never_wedge_the_writer() {
+        let _g = chaos::test_mutex().lock().unwrap_or_else(|e| e.into_inner());
+        let dir = temp_dir("wal-fsync-fault");
+        let (ab, fs_) = counters();
+        // Per-append fsync mode: the injected failure surfaces from the
+        // append itself (the bytes are written; durability degraded).
+        let mut w = WalWriter::open(&dir, 1 << 20, true, ab, fs_).unwrap();
+        let start = w.position();
+        chaos::arm(chaos::ChaosPlan {
+            seed: 0xF5C,
+            fsync_error_per_mille: 1000,
+            ..Default::default()
+        });
+        let err = w.append(&push("s", &[1.0])).unwrap_err();
+        assert!(err.contains("fsync"), "{err}");
+        chaos::disarm();
+        w.append(&push("s", &[2.0])).unwrap();
+        // Group-commit mode: the commit fails, the group stays dirty,
+        // and the next (healthy) commit settles it.
+        let (commits, appends) = counters();
+        w.set_group_commit(500_000, commits, appends, Arc::new(Counter::new()));
+        w.append(&push("s", &[3.0])).unwrap();
+        assert!(w.dirty());
+        chaos::arm(chaos::ChaosPlan {
+            seed: 0xF5C,
+            fsync_error_per_mille: 1000,
+            ..Default::default()
+        });
+        assert!(w.commit(true).is_err());
+        chaos::disarm();
+        assert!(w.dirty(), "a failed group commit must not drop the group");
+        assert!(w.commit(true).unwrap());
+        assert!(!w.dirty());
+        // Every append made it to disk despite the sync faults.
+        let mut n = 0u64;
+        let summary = replay(&dir, start, |_| n += 1).unwrap();
+        assert!(summary.clean);
+        assert_eq!(n, 3);
     }
 }

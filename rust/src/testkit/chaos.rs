@@ -1,0 +1,288 @@
+//! Deterministic chaos harness: seeded fault injection for the
+//! survivability soak tests.
+//!
+//! The hooks are compiled into the production crate (there is no
+//! `cfg(test)` gating — integration tests link the same library the
+//! binary does) but cost one relaxed atomic load while disarmed, so
+//! they are free on the hot path in normal operation.
+//!
+//! Determinism: every fault decision is a pure function of
+//! `(plan.seed, site, n)` where `n` counts decisions *at that site*.
+//! Thread interleaving can reorder which operation hits decision `n`,
+//! but the fault schedule per site is identical across runs of the same
+//! plan, which is what the soak's invariant assertions need to be
+//! replayable from a seed.
+//!
+//! Fault kinds map onto the failure modes the survivability layer
+//! defends against:
+//!
+//! * [`Site::TornWrite`] — a WAL framed append is truncated mid-record
+//!   (recovery must stop cleanly at the tear).
+//! * [`Site::FsyncError`] / [`Site::FsyncDelay`] — the durability
+//!   syscall fails or stalls (availability-over-durability accounting).
+//! * [`Site::ConnReset`] — the server drops a connection mid-stream
+//!   (the retrying client must reconnect and re-handshake).
+//! * [`Site::WorkerPanic`] — a shard worker dies mid-batch (the
+//!   supervisor must quarantine, restart, and keep the rest serving).
+//!
+//! Clock-skewed deadlines are modelled as a constant skew the server
+//! adds to its idle/read deadline arithmetic while armed.
+
+use crate::rng::{RngCore, SplitMix64};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Seeded fault plan: each probability is per-mille (0..=1000) per
+/// decision at that site.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ChaosPlan {
+    pub seed: u64,
+    /// Probability a WAL framed write is torn (partially written).
+    pub torn_write_per_mille: u16,
+    /// Probability a WAL fsync returns an I/O error.
+    pub fsync_error_per_mille: u16,
+    /// Probability a WAL fsync stalls for `fsync_delay_micros`.
+    pub fsync_delay_per_mille: u16,
+    /// Stall applied when an fsync delay fires.
+    pub fsync_delay_micros: u64,
+    /// Probability the server resets a connection before reading the
+    /// next frame.
+    pub conn_reset_per_mille: u16,
+    /// Probability a shard worker panics before applying a push batch.
+    pub panic_per_mille: u16,
+    /// Restrict worker-panic injection to streams whose name starts
+    /// with this prefix (None = every stream is eligible). Lets tests
+    /// sharing a process target their own streams only.
+    pub panic_prefix: Option<&'static str>,
+    /// Constant skew added to server deadline arithmetic while armed.
+    pub clock_skew_ms: u64,
+}
+
+/// Fault-injection sites; each has an independent decision stream and
+/// an injected-fault counter.
+#[derive(Clone, Copy, Debug)]
+pub enum Site {
+    TornWrite = 0,
+    FsyncError = 1,
+    FsyncDelay = 2,
+    ConnReset = 3,
+    WorkerPanic = 4,
+}
+
+const SITES: usize = 5;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<ChaosPlan>> = Mutex::new(None);
+static DECISIONS: [AtomicU64; SITES] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+static INJECTED: [AtomicU64; SITES] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+/// Install `plan` and arm every hook. Resets decision/injection
+/// counters so consecutive soak phases start from a clean schedule.
+pub fn arm(plan: ChaosPlan) {
+    let mut guard = lock_plan();
+    for i in 0..SITES {
+        DECISIONS[i].store(0, Ordering::Relaxed);
+        INJECTED[i].store(0, Ordering::Relaxed);
+    }
+    *guard = Some(plan);
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm all hooks (the plan is dropped; counters keep their totals
+/// for post-mortem assertions).
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+    *lock_plan() = None;
+}
+
+/// Cheap hot-path guard: is a chaos plan armed?
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Acquire)
+}
+
+/// Faults injected so far at `site` (survives `disarm`).
+pub fn injected(site: Site) -> u64 {
+    INJECTED[site as usize].load(Ordering::Relaxed)
+}
+
+fn lock_plan() -> std::sync::MutexGuard<'static, Option<ChaosPlan>> {
+    // The chaos harness must keep working after a test thread panicked
+    // while holding the lock (that is the whole point of the exercise).
+    PLAN.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Draw decision `n` for `site`: a raw u64 that is a pure function of
+/// `(seed, site, n)`. Returns `None` while disarmed.
+fn draw(site: Site) -> Option<(ChaosPlan, u64)> {
+    if !armed() {
+        return None;
+    }
+    let plan = (*lock_plan())?;
+    let n = DECISIONS[site as usize].fetch_add(1, Ordering::Relaxed);
+    let raw = SplitMix64::new(plan.seed)
+        .split(site as u64)
+        .split(n)
+        .next_u64();
+    Some((plan, raw))
+}
+
+fn fire(site: Site, per_mille: u16, raw: u64) -> bool {
+    if raw % 1000 < per_mille as u64 {
+        INJECTED[site as usize].fetch_add(1, Ordering::Relaxed);
+        true
+    } else {
+        false
+    }
+}
+
+/// WAL hook: should this framed append of `len` bytes be torn?
+/// Returns how many bytes to actually write (strictly less than `len`)
+/// before reporting an I/O error, simulating a crash mid-write.
+pub fn torn_write(len: usize) -> Option<usize> {
+    let (plan, raw) = draw(Site::TornWrite)?;
+    if len == 0 || !fire(Site::TornWrite, plan.torn_write_per_mille, raw) {
+        return None;
+    }
+    Some((raw >> 16) as usize % len)
+}
+
+/// WAL hook: fault the next fsync? `Some(err)` simulates the syscall
+/// failing; a delay-only fault sleeps here and returns `None`.
+pub fn fsync_fault() -> Option<std::io::Error> {
+    if let Some((plan, raw)) = draw(Site::FsyncDelay) {
+        if plan.fsync_delay_micros > 0 && fire(Site::FsyncDelay, plan.fsync_delay_per_mille, raw) {
+            std::thread::sleep(Duration::from_micros(plan.fsync_delay_micros));
+        }
+    }
+    let (plan, raw) = draw(Site::FsyncError)?;
+    if fire(Site::FsyncError, plan.fsync_error_per_mille, raw) {
+        return Some(std::io::Error::other("chaos: injected fsync failure"));
+    }
+    None
+}
+
+/// Server hook: reset this connection before reading the next frame?
+pub fn conn_reset() -> bool {
+    match draw(Site::ConnReset) {
+        Some((plan, raw)) => fire(Site::ConnReset, plan.conn_reset_per_mille, raw),
+        None => false,
+    }
+}
+
+/// Shard-loop hook: panic *before* the batch for `stream` reaches the
+/// WAL or the estimator. Injecting ahead of any mutation keeps live
+/// state and the recovery replay bitwise-identical — the quarantined
+/// batch simply never happened on either side.
+pub fn maybe_worker_panic(stream: &str) {
+    if !armed() {
+        return;
+    }
+    // Eligibility check before drawing, so a prefix filter does not
+    // consume decisions for streams it never targets.
+    match *lock_plan() {
+        Some(plan) => {
+            if let Some(prefix) = plan.panic_prefix {
+                if !stream.starts_with(prefix) {
+                    return;
+                }
+            }
+        }
+        None => return,
+    }
+    if let Some((plan, raw)) = draw(Site::WorkerPanic) {
+        if fire(Site::WorkerPanic, plan.panic_per_mille, raw) {
+            panic!("chaos: injected worker panic on stream '{stream}'");
+        }
+    }
+}
+
+/// Serializes tests that arm the (process-global) harness. Any test —
+/// in this module or elsewhere in the crate — that calls [`arm`] must
+/// hold this lock for its duration, or a concurrent `arm`/`disarm`
+/// would rewrite its fault schedule mid-flight.
+pub fn test_mutex() -> &'static Mutex<()> {
+    static M: Mutex<()> = Mutex::new(());
+    &M
+}
+
+/// Constant deadline skew the server applies while armed (models a
+/// wall-clock jump shrinking every in-flight deadline).
+pub fn clock_skew() -> Duration {
+    if !armed() {
+        return Duration::ZERO;
+    }
+    match *lock_plan() {
+        Some(plan) => Duration::from_millis(plan.clock_skew_ms),
+        None => Duration::ZERO,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+
+    #[test]
+    fn disarmed_hooks_are_inert() {
+        let _g = test_mutex().lock().unwrap_or_else(|e| e.into_inner());
+        disarm();
+        assert!(torn_write(128).is_none());
+        assert!(fsync_fault().is_none());
+        assert!(!conn_reset());
+        maybe_worker_panic("s"); // must not panic
+        assert_eq!(clock_skew(), Duration::ZERO);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_per_site() {
+        let _g = test_mutex().lock().unwrap_or_else(|e| e.into_inner());
+        let plan = ChaosPlan {
+            seed: 0xC4A05,
+            torn_write_per_mille: 500,
+            ..Default::default()
+        };
+        arm(plan);
+        let a: Vec<Option<usize>> = (0..64).map(|_| torn_write(100)).collect();
+        arm(plan); // re-arm resets the decision counters
+        let b: Vec<Option<usize>> = (0..64).map(|_| torn_write(100)).collect();
+        disarm();
+        assert_eq!(a, b);
+        assert!(a.iter().any(Option::is_some), "p=0.5 over 64 draws");
+        assert!(a.iter().any(Option::is_none));
+        // Tears are strictly shorter than the record.
+        for t in a.into_iter().flatten() {
+            assert!(t < 100);
+        }
+    }
+
+    #[test]
+    fn injection_counters_track_fires() {
+        let _g = test_mutex().lock().unwrap_or_else(|e| e.into_inner());
+        arm(ChaosPlan {
+            seed: 7,
+            conn_reset_per_mille: 1000,
+            clock_skew_ms: 250,
+            ..Default::default()
+        });
+        assert!(conn_reset());
+        assert!(conn_reset());
+        assert_eq!(injected(Site::ConnReset), 2);
+        assert_eq!(clock_skew(), Duration::from_millis(250));
+        disarm();
+        assert_eq!(injected(Site::ConnReset), 2);
+    }
+}

@@ -17,6 +17,8 @@
 //! });
 //! ```
 
+pub mod chaos;
+
 use crate::rng::{RngCore, SplitMix64, Xoshiro256};
 
 /// Random case generator handed to property bodies.

@@ -12,6 +12,8 @@
 //!   shards, service connections).
 //! * [`cpu`] — cache-line padding and opt-in shard→core pinning (raw
 //!   `sched_setaffinity`, graceful no-op off Linux).
+//! * [`signal`] — graceful-termination signal watching (raw
+//!   `rt_sigprocmask` + `signalfd4`, graceful no-op off Linux).
 //! * [`fmt`] — human-readable number/duration/bytes formatting for reports.
 
 pub mod cli;
@@ -20,3 +22,4 @@ pub mod fmt;
 pub mod json;
 pub mod logging;
 pub mod pool;
+pub mod signal;

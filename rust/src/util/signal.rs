@@ -1,0 +1,205 @@
+//! Graceful-termination signals without `libc`: block `SIGTERM` and
+//! `SIGINT`, then wait for one on a `signalfd` so the serve loop can
+//! drain connections and force a final WAL commit instead of dying
+//! mid-frame.
+//!
+//! Like [`crate::util::cpu`], this talks to the kernel directly
+//! (`rt_sigprocmask` + `signalfd4` + `read`) on Linux x86_64/aarch64
+//! and degrades gracefully elsewhere: [`termination_watcher`] returns
+//! `None` and the caller keeps the old block-until-killed behaviour.
+//!
+//! Ordering matters: create the watcher **before** spawning worker
+//! threads. The signal mask is inherited by threads spawned afterwards,
+//! so a process-directed `SIGTERM` stays queued on the `signalfd`
+//! instead of being delivered to (and killing) an arbitrary worker.
+
+/// Which termination signal arrived.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TermSignal {
+    /// `SIGINT` (Ctrl-C).
+    Interrupt,
+    /// `SIGTERM` (orchestrator shutdown).
+    Terminate,
+}
+
+impl TermSignal {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TermSignal::Interrupt => "SIGINT",
+            TermSignal::Terminate => "SIGTERM",
+        }
+    }
+}
+
+const SIGINT: u32 = 2;
+const SIGTERM: u32 = 15;
+
+/// A blocked-signal file descriptor; [`TermWatcher::wait`] blocks until
+/// `SIGTERM`/`SIGINT` arrives.
+pub struct TermWatcher {
+    fd: i32,
+}
+
+/// Block `SIGTERM`+`SIGINT` for this thread (and every thread spawned
+/// after) and open a `signalfd` watching them. `None` on unsupported
+/// targets or kernel refusal — callers fall back to plain
+/// block-until-killed.
+pub fn termination_watcher() -> Option<TermWatcher> {
+    imp::open().map(|fd| TermWatcher { fd })
+}
+
+impl TermWatcher {
+    /// Block until a termination signal arrives. On an unexpected
+    /// `signalfd` read failure the thread parks forever — identical to
+    /// the pre-signal-handling behaviour (external kill).
+    pub fn wait(&self) -> TermSignal {
+        imp::wait(self.fd)
+    }
+}
+
+impl Drop for TermWatcher {
+    fn drop(&mut self) {
+        imp::close(self.fd);
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod imp {
+    use super::{TermSignal, SIGINT, SIGTERM};
+
+    #[cfg(target_arch = "x86_64")]
+    mod nr {
+        pub const READ: isize = 0;
+        pub const CLOSE: isize = 3;
+        pub const RT_SIGPROCMASK: isize = 14;
+        pub const SIGNALFD4: isize = 289;
+    }
+    #[cfg(target_arch = "aarch64")]
+    mod nr {
+        pub const READ: isize = 63;
+        pub const CLOSE: isize = 57;
+        pub const RT_SIGPROCMASK: isize = 135;
+        pub const SIGNALFD4: isize = 74;
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall4(n: isize, a: usize, b: usize, c: usize, d: usize) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") n => ret,
+            in("rdi") a,
+            in("rsi") b,
+            in("rdx") c,
+            in("r10") d,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall4(n: isize, a: usize, b: usize, c: usize, d: usize) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "svc 0",
+            in("x8") n,
+            inlateout("x0") a => ret,
+            in("x1") b,
+            in("x2") c,
+            in("x3") d,
+            options(nostack)
+        );
+        ret
+    }
+
+    /// The kernel sigset: a u64 bitmask, bit `signo - 1`.
+    const MASK: u64 = (1 << (SIGINT - 1)) | (1 << (SIGTERM - 1));
+    const SIG_BLOCK: usize = 0;
+    const SIGSET_LEN: usize = 8;
+    const EINTR: isize = -4;
+
+    pub fn open() -> Option<i32> {
+        let mask = MASK;
+        let mask_ptr = &mask as *const u64 as usize;
+        // rt_sigprocmask(SIG_BLOCK, &mask, NULL, 8)
+        let ret = unsafe { syscall4(nr::RT_SIGPROCMASK, SIG_BLOCK, mask_ptr, 0, SIGSET_LEN) };
+        if ret != 0 {
+            return None;
+        }
+        // signalfd4(-1 /* new fd */, &mask, 8, 0 /* no flags */)
+        let fd = unsafe { syscall4(nr::SIGNALFD4, usize::MAX, mask_ptr, SIGSET_LEN, 0) };
+        (fd >= 0).then_some(fd as i32)
+    }
+
+    pub fn wait(fd: i32) -> TermSignal {
+        // struct signalfd_siginfo is 128 bytes; ssi_signo is the
+        // leading u32. Partial reads never happen (the kernel returns
+        // whole records).
+        let mut buf = [0u8; 128];
+        loop {
+            let ret = unsafe {
+                syscall4(nr::READ, fd as usize, buf.as_mut_ptr() as usize, buf.len(), 0)
+            };
+            if ret == EINTR {
+                continue;
+            }
+            if ret != buf.len() as isize {
+                // Unreadable signalfd: behave like the old serve loop
+                // and simply block until the process is killed.
+                loop {
+                    std::thread::park();
+                }
+            }
+            let signo = u32::from_ne_bytes([buf[0], buf[1], buf[2], buf[3]]);
+            return match signo {
+                SIGINT => TermSignal::Interrupt,
+                _ => TermSignal::Terminate,
+            };
+        }
+    }
+
+    pub fn close(fd: i32) {
+        unsafe {
+            syscall4(nr::CLOSE, fd as usize, 0, 0, 0);
+        }
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod imp {
+    use super::TermSignal;
+
+    pub fn open() -> Option<i32> {
+        None
+    }
+
+    pub fn wait(_fd: i32) -> TermSignal {
+        // Unreachable: open() never hands out a watcher here.
+        loop {
+            std::thread::park();
+        }
+    }
+
+    pub fn close(_fd: i32) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: no test creates a watcher — blocking SIGINT/SIGTERM
+    // process-wide would leak into every other test in the harness
+    // (they share one process) and make the suite unkillable with
+    // Ctrl-C. The syscall path is exercised end-to-end by the serve
+    // binary; here we only pin the pure pieces.
+
+    #[test]
+    fn labels_and_signal_numbers() {
+        assert_eq!(TermSignal::Interrupt.label(), "SIGINT");
+        assert_eq!(TermSignal::Terminate.label(), "SIGTERM");
+        assert_eq!(SIGINT, 2);
+        assert_eq!(SIGTERM, 15);
+    }
+}

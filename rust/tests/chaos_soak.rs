@@ -1,0 +1,334 @@
+//! Deterministic chaos soak: the full service stack (durable
+//! coordinator → TCP server → retrying client) runs under a seeded
+//! fault plan — torn WAL writes, fsync errors and stalls, connection
+//! resets, shard-worker panics — and must keep its accounting exact:
+//!
+//! * every acknowledged sample is either applied to live state or
+//!   surfaced in the drop counters (nothing vanishes silently);
+//! * recovery loses exactly the torn-away WAL records and nothing else;
+//! * recovering the same state directory twice yields bitwise-identical
+//!   snapshots.
+//!
+//! Chaos state is process-global, so every test that arms a plan holds
+//! [`chaos::test_mutex`] — which is also why all chaos-driven
+//! integration tests live in this one binary.
+
+use ata::config::{BackpressurePolicy, PersistConfig, ServiceConfig};
+use ata::coordinator::{
+    Client, ClientError, Coordinator, ProtocolChoice, RetryPolicy, RetryingClient, Server,
+    ServerOptions,
+};
+use ata::testkit::chaos;
+use ata::testkit::temp_dir;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Streams under chaos get this prefix so worker-panic injection
+/// (scoped via `panic_prefix`) can never leak onto another test's
+/// streams if more tests join this binary.
+const SOAK_PREFIX: &str = "soak/";
+
+fn soak_cfg(dir: &Path, shards: usize, queue: usize, policy: BackpressurePolicy) -> ServiceConfig {
+    ServiceConfig {
+        shards,
+        queue_capacity: queue,
+        backpressure: policy,
+        // Injected panics must not poison a stream mid-soak — a
+        // poisoned stream rejects pushes with a fatal (non-retryable)
+        // error and the accounting below assumes every stream stays
+        // writable. The poison policy has its own unit test.
+        poison_threshold: 1_000_000,
+        persist: Some(PersistConfig {
+            dir: dir.display().to_string(),
+            // Small segments so the soak crosses many rotation
+            // boundaries (torn-append healing rotates too).
+            segment_bytes: 8 << 10,
+            // Real fsyncs so the fsync-error and fsync-stall sites are
+            // actually reached; per-append mode (no group commit) keeps
+            // shutdown trivially flush-free.
+            fsync: true,
+            checkpoint_interval_ms: 0,
+            group_commit_micros: 0,
+        }),
+        ..Default::default()
+    }
+}
+
+/// Deterministic sample: stream `s`, batch `b`, slot `i`.
+fn sample(s: usize, b: usize, i: usize) -> f64 {
+    ((s as f64) * 1.3 + (b as f64) * 0.17 + (i as f64) * 0.71).sin() * 2.0
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn counter(doc: &ata::util::json::Json, name: &str) -> u64 {
+    doc.get(&format!("counter.{name}"))
+        .and_then(|v| v.as_u64())
+        .unwrap_or(0)
+}
+
+/// The soak proper: ~240 fixed-size batches through a retrying client
+/// while every fault site fires, then exact accounting + recovery.
+#[test]
+fn seeded_chaos_soak_keeps_accounting_exact_and_recovers_deterministically() {
+    let _guard = chaos::test_mutex().lock().unwrap_or_else(|e| e.into_inner());
+    chaos::disarm();
+    let dir = temp_dir("chaos-soak");
+    let cfg = soak_cfg(&dir, 2, 256, BackpressurePolicy::Block);
+    let coordinator = Arc::new(Coordinator::from_config(&cfg).expect("durable coordinator"));
+    let server = Server::start_with_options(
+        "127.0.0.1:0",
+        Arc::clone(&coordinator),
+        4,
+        ServerOptions::default(),
+    )
+    .expect("server");
+    let addr = server.addr().to_string();
+
+    let streams: Vec<String> = (0..4).map(|s| format!("{SOAK_PREFIX}{s}")).collect();
+    let specs = ["gea(c=0.5)", "awa3(c=0.5)", "true(k=9)", "gea(c=0.25)"];
+    const DIM: usize = 3;
+    const BATCH: usize = 5; // samples per push — fixed, so losses
+                            // convert to sample counts exactly.
+    const BATCHES: usize = 240;
+
+    let mut rc = RetryingClient::with_policy(
+        &addr,
+        ProtocolChoice::Auto,
+        RetryPolicy {
+            max_attempts: 8,
+            base_backoff_ms: 1,
+            max_backoff_ms: 20,
+            seed: 0xDECAF,
+        },
+    );
+    // Register (and make durable) before arming: the WAL register
+    // records must survive so recovery re-creates every stream.
+    for (s, name) in streams.iter().enumerate() {
+        rc.register(name, DIM, specs[s]).expect("register");
+    }
+    rc.sync().expect("pre-chaos sync");
+
+    chaos::arm(chaos::ChaosPlan {
+        seed: 0x50AB_2026,
+        torn_write_per_mille: 60,
+        fsync_error_per_mille: 50,
+        fsync_delay_per_mille: 80,
+        fsync_delay_micros: 300,
+        conn_reset_per_mille: 40,
+        panic_per_mille: 35,
+        panic_prefix: Some(SOAK_PREFIX),
+        clock_skew_ms: 0,
+    });
+
+    // Drive the soak. An Ok push is *acknowledged*; an Err push (the
+    // connection died after the frame went out) is *unknown-outcome* —
+    // with this fault plan the reset strikes before dispatch, so those
+    // batches were not applied, and the accounting below can be exact.
+    let mut acked_samples: u64 = 0;
+    let mut unknown_batches: u64 = 0;
+    let mut last_t = vec![0u64; streams.len()];
+    for b in 0..BATCHES {
+        let s = b % streams.len();
+        let data: Vec<f64> = (0..BATCH * DIM).map(|i| sample(s, b, i)).collect();
+        match rc.push_many(&streams[s], BATCH, &data) {
+            Ok((accepted, dropped)) => {
+                assert_eq!(accepted as usize, BATCH, "block policy accepts whole batches");
+                assert_eq!(dropped, 0);
+                acked_samples += accepted;
+            }
+            Err(ClientError::Io(_)) => unknown_batches += 1,
+            Err(e) => panic!("batch {b}: unexpected fatal error: {e}"),
+        }
+        // Anytime availability: estimates stay queryable mid-chaos and
+        // per-stream applied counts never move backwards.
+        if b % 40 == 20 {
+            let snap = rc.snapshot(&streams[s]).expect("snapshot under chaos");
+            assert!(snap.t >= last_t[s], "applied count went backwards");
+            last_t[s] = snap.t;
+        }
+    }
+    chaos::disarm();
+    let torn = chaos::injected(chaos::Site::TornWrite);
+    let panics = chaos::injected(chaos::Site::WorkerPanic);
+    let resets = chaos::injected(chaos::Site::ConnReset);
+    let fsync_errs = chaos::injected(chaos::Site::FsyncError);
+    // The fixed seed pins the whole schedule; at these rates the first
+    // firing of every site lands well inside a ~240-decision soak.
+    assert!(torn > 0, "no torn writes injected");
+    assert!(panics > 0, "no worker panics injected");
+    assert!(resets > 0, "no connection resets injected");
+    assert!(fsync_errs > 0, "no fsync errors injected");
+    assert!(unknown_batches > 0, "resets should have killed some pushes");
+    assert!(rc.reconnects() > 1, "resets should have forced reconnects");
+
+    // Settle and take the live truth directly from the coordinator.
+    rc.sync().expect("post-chaos sync");
+    drop(rc);
+    let mut live_t: u64 = 0;
+    let mut live_dropped: u64 = 0;
+    for name in &streams {
+        let snap = coordinator.snapshot(name).expect("live snapshot");
+        live_t += snap.t;
+        live_dropped += snap.dropped;
+    }
+    // Invariant 1 — nothing vanishes: every acknowledged sample is in
+    // live state or in the drop counters, and nothing else is.
+    assert_eq!(
+        live_t + live_dropped,
+        acked_samples,
+        "acked samples must equal applied + dropped"
+    );
+    // Invariant 2 — drops are exactly the quarantined panic batches.
+    assert_eq!(live_dropped, panics * BATCH as u64);
+    let metrics = coordinator.metrics().export();
+    assert_eq!(counter(&metrics, "shard_restarts"), panics);
+    assert_eq!(counter(&metrics, "quarantined_batches"), panics);
+    assert_eq!(counter(&metrics, "poisoned_streams"), 0);
+
+    // Tear the stack down cleanly and recover from disk.
+    drop(server);
+    drop(coordinator);
+    let (recovered, report) = Coordinator::recover(&cfg).expect("recover");
+    let mut recovered_t: u64 = 0;
+    let mut first: Vec<(u64, Option<Vec<u64>>)> = Vec::new();
+    for name in &streams {
+        let snap = recovered.snapshot(name).expect("recovered snapshot");
+        recovered_t += snap.t;
+        first.push((snap.t, snap.value.as_deref().map(bits)));
+    }
+    // Invariant 3 — recovery loses exactly the torn-away WAL records:
+    // each torn append was one whole batch, applied live but healed
+    // (rotated) out of the log.
+    assert_eq!(
+        recovered_t,
+        live_t - torn * BATCH as u64,
+        "recovery must lose exactly the torn appends \
+         (report: {report:?})"
+    );
+    // Torn tails are either skipped mid-log or end the final segment;
+    // zero-byte tears leave the log clean. All are legal — just
+    // bounded.
+    assert!(report.wal_skipped_tails <= torn);
+    drop(recovered);
+
+    // Invariant 4 — recovery is deterministic: a second recovery (now
+    // reading the first one's checkpoint) reproduces every estimate
+    // bit for bit.
+    let (again, _) = Coordinator::recover(&cfg).expect("second recover");
+    for (name, (t, value)) in streams.iter().zip(&first) {
+        let snap = again.snapshot(name).expect("re-recovered snapshot");
+        assert_eq!(snap.t, *t, "{name}: applied count changed across recoveries");
+        assert_eq!(
+            snap.value.as_deref().map(bits).as_ref(),
+            value.as_ref(),
+            "{name}: estimate changed across recoveries"
+        );
+    }
+}
+
+/// A disk that stalls 15 ms per fsync turns a 2-deep Reject queue into
+/// a deterministic overload: plain clients on both protocol
+/// generations must see the structured `Overloaded` rejection (not a
+/// generic error), the server must count it, and a retrying client
+/// must ride it out with backoff instead of failing.
+#[test]
+fn slow_disk_overload_sheds_load_and_retrying_client_rides_it_out() {
+    let _guard = chaos::test_mutex().lock().unwrap_or_else(|e| e.into_inner());
+    chaos::disarm();
+    let dir = temp_dir("chaos-overload");
+    let cfg = soak_cfg(&dir, 1, 2, BackpressurePolicy::Reject);
+    let coordinator = Arc::new(Coordinator::from_config(&cfg).expect("durable coordinator"));
+    let server = Server::start_with_options(
+        "127.0.0.1:0",
+        Arc::clone(&coordinator),
+        4,
+        ServerOptions::default(),
+    )
+    .expect("server");
+    let addr = server.addr().to_string();
+
+    let mut v2 = Client::connect_with(&addr, ProtocolChoice::V2).expect("v2 client");
+    v2.register("ov", 1, "gea(c=0.5)").expect("register");
+    v2.sync().expect("sync");
+
+    // Every WAL append now stalls 15 ms, so the single shard worker
+    // drains at most ~66 batches/s while clients push thousands — the
+    // queue overflows on schedule, no timing luck involved.
+    chaos::arm(chaos::ChaosPlan {
+        seed: 0x510_D15C,
+        fsync_delay_per_mille: 1000,
+        fsync_delay_micros: 15_000,
+        ..Default::default()
+    });
+
+    let mut acked: u64 = 0;
+    let mut shed_v2: u64 = 0;
+    for b in 0..60 {
+        match v2.push_many("ov", 2, &[b as f64, b as f64 + 0.5]) {
+            Ok((accepted, dropped)) => {
+                assert_eq!((accepted, dropped), (2, 0));
+                acked += accepted;
+            }
+            Err(ClientError::Overloaded(_)) => shed_v2 += 1,
+            Err(e) => panic!("v2 push {b}: expected Overloaded, got: {e}"),
+        }
+    }
+    assert!(shed_v2 > 0, "a 2-deep queue behind a 15ms disk must shed load");
+
+    // The v1 JSON protocol surfaces the same structured rejection.
+    let mut v1 = Client::connect_with(&addr, ProtocolChoice::V1).expect("v1 client");
+    let mut shed_v1: u64 = 0;
+    for b in 0..60 {
+        match v1.push_many("ov", 2, &[b as f64, b as f64 + 0.25]) {
+            Ok((accepted, _)) => acked += accepted,
+            Err(ClientError::Overloaded(_)) => shed_v1 += 1,
+            Err(e) => panic!("v1 push {b}: expected Overloaded, got: {e}"),
+        }
+    }
+    assert!(shed_v1 > 0, "v1 must see structured overload too");
+
+    // A retrying client pushes through the same storm: every batch
+    // lands eventually, with backoff sleeps recorded along the way.
+    let mut rc = RetryingClient::with_policy(
+        &addr,
+        ProtocolChoice::Auto,
+        RetryPolicy {
+            max_attempts: 200,
+            base_backoff_ms: 2,
+            max_backoff_ms: 40,
+            seed: 0xBACC_0FF,
+        },
+    );
+    for b in 0..8 {
+        let (accepted, dropped) = rc
+            .push_many("ov", 2, &[b as f64 * 1.5, b as f64 * 1.5 + 1.0])
+            .expect("retrying client must outlast the overload");
+        assert_eq!((accepted, dropped), (2, 0));
+        acked += accepted;
+    }
+    assert!(
+        rc.overload_backoffs() > 0,
+        "the storm should have forced at least one overload backoff"
+    );
+
+    chaos::disarm();
+    v2.sync().expect("drain");
+    // Reject never half-applies: applied == acked exactly, and the
+    // server counted every structured rejection it sent.
+    let snap = v2.snapshot("ov").expect("snapshot");
+    assert_eq!(snap.t, acked, "Reject must be all-or-nothing per batch");
+    let doc = v2.metrics().expect("metrics");
+    let shed_seen = doc
+        .get("metrics")
+        .map(|m| counter(m, "wire_overloaded_responses"))
+        .unwrap_or(0);
+    assert!(
+        shed_seen >= shed_v2 + shed_v1,
+        "server must count shed responses ({shed_seen} < {})",
+        shed_v2 + shed_v1
+    );
+    drop(server);
+}

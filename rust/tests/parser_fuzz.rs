@@ -553,3 +553,79 @@ fn v2_frames_over_a_live_connection_never_kill_the_server() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Chaos harness decision streams (the panic/reset fault kinds ride the
+// fuzz smoke too: random rates, fixed seeds, bounded decisions)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chaos_fault_decisions_are_deterministic_bounded_and_scoped() {
+    use ata::testkit::chaos;
+    // Chaos state is process-global: serialize with every other
+    // chaos-arming test in this binary.
+    let _guard = chaos::test_mutex().lock().unwrap_or_else(|e| e.into_inner());
+    Runner::new("chaos decision streams", 0xC4A5).run(60, |g| {
+        let seed = g.u64();
+        let torn_p = g.usize_range(0, 1001) as u16;
+        let reset_p = g.usize_range(0, 1001) as u16;
+        let plan = chaos::ChaosPlan {
+            seed,
+            torn_write_per_mille: torn_p,
+            conn_reset_per_mille: reset_p,
+            ..Default::default()
+        };
+        let draw = |n: usize| -> (Vec<Option<usize>>, Vec<bool>) {
+            chaos::arm(plan);
+            let torn: Vec<Option<usize>> = (0..n).map(|_| chaos::torn_write(64)).collect();
+            let resets: Vec<bool> = (0..n).map(|_| chaos::conn_reset()).collect();
+            (torn, resets)
+        };
+        let n = g.usize_range(1, 200);
+        let (torn_a, resets_a) = draw(n);
+        // Bounded: a tear is always a strict prefix of the frame.
+        for t in torn_a.iter().flatten() {
+            if *t >= 64 {
+                return Err(format!("tear offset {t} >= frame len 64"));
+            }
+        }
+        // Rate endpoints are exact, not probabilistic.
+        let fired = torn_a.iter().filter(|t| t.is_some()).count();
+        match torn_p {
+            0 if fired != 0 => return Err("p=0 fired".into()),
+            1000 if fired != n => return Err("p=1000 missed".into()),
+            _ => {}
+        }
+        if chaos::injected(chaos::Site::TornWrite) != fired as u64 {
+            return Err("injected counter disagrees with observed fires".into());
+        }
+        // Deterministic: re-arming the identical plan replays the
+        // identical decision stream, fire for fire.
+        let (torn_b, resets_b) = draw(n);
+        if torn_a != torn_b || resets_a != resets_b {
+            return Err(format!("decision stream not reproducible (seed {seed:#x})"));
+        }
+        // Scoped worker panics: a non-matching stream never panics, a
+        // matching one at p=1000 always does, and disarm silences all.
+        chaos::arm(chaos::ChaosPlan {
+            seed,
+            panic_per_mille: 1000,
+            panic_prefix: Some("fz/"),
+            ..Default::default()
+        });
+        chaos::maybe_worker_panic("other/stream"); // must not panic
+        let hit = std::panic::catch_unwind(|| chaos::maybe_worker_panic("fz/stream"));
+        if hit.is_ok() {
+            return Err("prefix-matched panic site did not fire at p=1000".into());
+        }
+        if chaos::injected(chaos::Site::WorkerPanic) != 1 {
+            return Err("panic injection not counted".into());
+        }
+        chaos::disarm();
+        if chaos::torn_write(64).is_some() || chaos::conn_reset() {
+            return Err("disarmed hooks still firing".into());
+        }
+        Ok(())
+    });
+    chaos::disarm();
+}

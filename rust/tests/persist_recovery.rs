@@ -931,3 +931,72 @@ fn wal_truncation_never_panics_and_never_loses_surviving_batches() {
     let _ = std::fs::remove_dir_all(&dir);
     let _ = std::fs::remove_dir_all(&pristine);
 }
+
+// ---------------------------------------------------------------------------
+// Graceful drain: the shutdown path must close the group-commit window
+// ---------------------------------------------------------------------------
+
+/// `Server::drain` promises that every acked push is on disk when it
+/// returns: it runs the sync barrier, and the barrier forces an open
+/// WAL group commit. With a near-1s commit window and no explicit
+/// client sync, the drain is the *only* thing standing between these
+/// acks and the recovery losing them — the recovered estimates must
+/// come back bit for bit.
+#[test]
+fn drain_closes_the_group_commit_window_and_recovers_bitwise() {
+    use ata::coordinator::{Client, Server, ServerOptions};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let dir = temp_dir("persist-drain-commit");
+    let mut cfg = persist_cfg(&dir, 2);
+    if let Some(p) = cfg.persist.as_mut() {
+        p.fsync = true;
+        p.group_commit_micros = 900_000;
+    }
+    let coordinator = Arc::new(Coordinator::from_config(&cfg).expect("durable coordinator"));
+    let mut server = Server::start_with_options(
+        "127.0.0.1:0",
+        Arc::clone(&coordinator),
+        2,
+        ServerOptions::default(),
+    )
+    .expect("server");
+    {
+        let mut cl = Client::connect(&server.addr().to_string()).expect("client");
+        cl.register("drained", 2, "gea(c=0.5)").expect("register");
+        for b in 0..10u64 {
+            cl.push_many("drained", 4, &flat_batch(0, b * 4, 4, 2))
+                .expect("push");
+        }
+        // Deliberately NO client sync: the acks sit inside the open
+        // group-commit window when the drain begins.
+    }
+    server.drain(Duration::from_secs(5));
+    let live = coordinator.snapshot("drained").expect("live snapshot");
+    assert_eq!(live.t, 40);
+    let live_bits: Vec<u64> = live
+        .value
+        .as_deref()
+        .expect("estimate")
+        .iter()
+        .map(|x| x.to_bits())
+        .collect();
+    drop(server);
+    drop(coordinator);
+
+    let (recovered, report) = Coordinator::recover(&cfg).expect("recover");
+    assert!(report.wal_clean, "clean shutdown must leave a clean WAL");
+    assert_eq!(report.replayed_samples, 40, "{report:?}");
+    let got = recovered.snapshot("drained").expect("recovered snapshot");
+    assert_eq!(got.t, live.t);
+    let got_bits: Vec<u64> = got
+        .value
+        .as_deref()
+        .expect("estimate")
+        .iter()
+        .map(|x| x.to_bits())
+        .collect();
+    assert_eq!(got_bits, live_bits, "recovery must be bitwise-identical");
+    let _ = std::fs::remove_dir_all(&dir);
+}

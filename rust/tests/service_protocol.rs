@@ -5,10 +5,11 @@ use ata::config::BackpressurePolicy;
 use ata::coordinator::protocol::{
     self, wire, MultiOutcome, OpKind, ProtocolChoice, Request, Response, StreamRef, Wire,
 };
-use ata::coordinator::{Client, ClientError, Coordinator, Server};
+use ata::coordinator::{Client, ClientError, Coordinator, Server, ServerOptions};
 use ata::util::json::Json;
 use std::net::TcpStream;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn start_server() -> (Server, String) {
     start_server_with(ProtocolChoice::Auto)
@@ -946,4 +947,194 @@ fn wire_metrics_count_connections_and_frames() {
     assert_eq!(m.counter("wire_connections_v1").get(), 1);
     assert!(m.counter("wire_frames_in").get() >= 3);
     assert!(m.counter("wire_frames_out").get() >= 3);
+}
+
+// ---------------------------------------------------------------------------
+// Survivability: graceful drain, admission gate, deadlines, and the
+// half-closed-socket client regression
+// ---------------------------------------------------------------------------
+
+/// Graceful drain with live v1 and v2 producers mid-flight: every frame
+/// the server read is answered and applied; every frame it never read
+/// is cleanly refused (EOF — never a silent half-apply). The per-stream
+/// applied counts must therefore equal the clients' acked counts
+/// exactly, on both protocol generations at once.
+#[test]
+fn drain_settles_inflight_frames_on_both_protocols() {
+    let c = Arc::new(Coordinator::new(2, 256, BackpressurePolicy::Block));
+    let mut server =
+        Server::start_with_options("127.0.0.1:0", Arc::clone(&c), 4, ServerOptions::default())
+            .expect("server");
+    let addr = server.addr().to_string();
+    {
+        let mut setup = Client::connect(&addr).unwrap();
+        for s in ["drain/v1", "drain/v2a", "drain/v2b"] {
+            setup.register(s, 1, "gea(c=0.5)").unwrap();
+        }
+    }
+    // v1 producer: sequential push_many until the drain cuts it off.
+    let v1_addr = addr.clone();
+    let v1 = std::thread::spawn(move || -> u64 {
+        let mut cl = match Client::connect_with(&v1_addr, ProtocolChoice::V1) {
+            Ok(cl) => cl,
+            Err(_) => return 0,
+        };
+        let mut acked = 0u64;
+        loop {
+            match cl.push_many("drain/v1", 3, &[1.0, 2.0, 3.0]) {
+                Ok((accepted, _)) => acked += accepted,
+                Err(_) => return acked,
+            }
+        }
+    });
+    // v2 producer: multi_push windows (two streams per frame).
+    let v2_addr = addr.clone();
+    let v2 = std::thread::spawn(move || -> (u64, u64) {
+        let mut cl = match Client::connect_with(&v2_addr, ProtocolChoice::V2) {
+            Ok(cl) => cl,
+            Err(_) => return (0, 0),
+        };
+        let (mut a, mut b) = (0u64, 0u64);
+        loop {
+            let out = match cl.multi_push(&[
+                ("drain/v2a", 2, &[1.0, 2.0][..]),
+                ("drain/v2b", 2, &[3.0, 4.0][..]),
+            ]) {
+                Ok(out) => out,
+                Err(_) => return (a, b),
+            };
+            if matches!(out[0], MultiOutcome::Accepted) {
+                a += 2;
+            }
+            if matches!(out[1], MultiOutcome::Accepted) {
+                b += 2;
+            }
+        }
+    });
+    std::thread::sleep(Duration::from_millis(40));
+    server.drain(Duration::from_secs(5));
+    let v1_acked = v1.join().expect("v1 producer");
+    let (v2a_acked, v2b_acked) = v2.join().expect("v2 producer");
+    // Drain already ran the sync barrier; the coordinator's applied
+    // counts are final and must match the ack ledgers exactly.
+    assert_eq!(c.snapshot("drain/v1").unwrap().t, v1_acked);
+    assert_eq!(c.snapshot("drain/v2a").unwrap().t, v2a_acked);
+    assert_eq!(c.snapshot("drain/v2b").unwrap().t, v2b_acked);
+    assert!(
+        v1_acked + v2a_acked + v2b_acked > 0,
+        "producers never got going before the drain"
+    );
+    // The listener is gone: no new connections after drain.
+    assert!(Client::connect(&addr).is_err() || {
+        // A TIME_WAIT accept can sneak in on some kernels; a ping must
+        // still fail against the stopped server.
+        let mut cl = Client::connect(&addr).unwrap();
+        cl.ping().is_err()
+    });
+}
+
+/// The admission gate refuses connections beyond `max_connections`
+/// (closed pre-handshake, counted) and frees capacity when a client
+/// leaves.
+#[test]
+fn admission_gate_rejects_and_recovers_capacity() {
+    let c = Arc::new(Coordinator::new(1, 64, BackpressurePolicy::Block));
+    let server = Server::start_with_options(
+        "127.0.0.1:0",
+        Arc::clone(&c),
+        2,
+        ServerOptions {
+            max_connections: 1,
+            ..Default::default()
+        },
+    )
+    .expect("server");
+    let addr = server.addr().to_string();
+    let mut first = Client::connect(&addr).expect("first connection admitted");
+    first.ping().expect("ping");
+    // Beyond the cap: the socket is closed before any handshake, so
+    // connect (which awaits the hello ack) fails cleanly.
+    let second = Client::connect(&addr);
+    assert!(second.is_err(), "second connection must be refused");
+    assert!(c.metrics().counter("wire_connections_rejected").get() >= 1);
+    // Capacity returns once the admitted client hangs up.
+    drop(first);
+    let deadline = Instant::now() + Duration::from_secs(3);
+    loop {
+        if let Ok(mut cl) = Client::connect(&addr) {
+            if cl.ping().is_ok() {
+                break;
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "capacity never freed after the admitted client left"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    drop(server);
+}
+
+/// A connection that goes quiet past the idle deadline is reaped (and
+/// counted) instead of pinning a handler slot forever.
+#[test]
+fn idle_connections_are_reaped_by_the_deadline() {
+    let c = Arc::new(Coordinator::new(1, 64, BackpressurePolicy::Block));
+    let server = Server::start_with_options(
+        "127.0.0.1:0",
+        Arc::clone(&c),
+        2,
+        ServerOptions {
+            read_timeout_ms: 40,
+            idle_timeout_ms: 120,
+            ..Default::default()
+        },
+    )
+    .expect("server");
+    let mut cl = Client::connect(&server.addr().to_string()).expect("client");
+    cl.ping().expect("ping while fresh");
+    // Go quiet for well past the idle deadline; the server must close.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    std::thread::sleep(Duration::from_millis(400));
+    loop {
+        if cl.ping().is_err() {
+            break;
+        }
+        assert!(Instant::now() < deadline, "idle connection never reaped");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(c.metrics().counter("wire_deadline_closes").get() >= 1);
+    drop(server);
+}
+
+/// Regression: a half-closed socket (peer accepts, then never answers)
+/// must surface `ClientError::Io` via the read timeout instead of
+/// blocking a pipelined read forever.
+#[test]
+fn client_read_timeout_surfaces_io_instead_of_hanging() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("stub listener");
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        // Accept, read (so client writes succeed), answer nothing.
+        if let Ok((mut s, _)) = listener.accept() {
+            let mut sink = [0u8; 1024];
+            use std::io::Read as _;
+            while matches!(s.read(&mut sink), Ok(n) if n > 0) {}
+        }
+    });
+    // V1 skips the hello round-trip, so connect succeeds against the
+    // mute peer and the first real op is what must not hang.
+    let mut cl = Client::connect_with(&addr, ProtocolChoice::V1).expect("connect");
+    cl.set_timeout(Some(Duration::from_millis(200))).unwrap();
+    let start = Instant::now();
+    let err = cl.ping().expect_err("mute server must not look healthy");
+    assert!(
+        matches!(err, ClientError::Io(_)),
+        "want Io timeout, got: {err}"
+    );
+    assert!(
+        start.elapsed() < Duration::from_secs(5),
+        "read returned only after {:?} — effectively a hang",
+        start.elapsed()
+    );
 }
