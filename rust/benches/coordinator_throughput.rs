@@ -19,6 +19,13 @@ use std::time::Instant;
 fn main() {
     let mut bench = Bench::from_args("ingest");
     let quick = std::env::args().any(|a| a == "--quick");
+    // Tracing sample rate for every coordinator this suite builds:
+    // ATA_OBS_SAMPLE_PER_MILLE (default 0 = disarmed — what committed
+    // baselines measure). The CI overhead sweep runs 0 / 10 / 1000 and
+    // the rate is embedded in bench_env so bench-compare flags
+    // cross-rate comparisons.
+    let obs_rate = ata::benchkit::obs_sample_per_mille();
+    let tune = |c: &Coordinator| c.obs().set_sample_per_mille(obs_rate);
     let d = 256usize;
     let n_streams = 16usize;
     let pushes: u64 = if quick { 20_000 } else { 200_000 };
@@ -29,6 +36,7 @@ fn main() {
     for shards in [1usize, 2, 4, 8] {
         for policy in [BackpressurePolicy::Block, BackpressurePolicy::DropNewest] {
             let c = Coordinator::new(shards, 4096, policy);
+            tune(&c);
             for i in 0..n_streams {
                 c.register(&format!("s{i}"), d, AveragerSpec::Gea { c: 0.5 })
                     .unwrap();
@@ -65,6 +73,7 @@ fn main() {
         // size; the per-sample path pays channel + dispatch + alloc per
         // sample. batch=1 doubles as the non-regression guard.
         let c = Coordinator::new(4, 4096, BackpressurePolicy::Block);
+        tune(&c);
         c.register("hot", d, AveragerSpec::Gea { c: 0.5 }).unwrap();
         let x = vec![0.5f64; d];
         bench.bench_elements("push per-sample baseline", 1, || {
@@ -110,6 +119,7 @@ fn main() {
                         BackpressurePolicy::Block,
                         banked,
                     );
+                    tune(&c);
                     let names: Vec<String> =
                         (0..n_streams).map(|i| format!("s{i}")).collect();
                     for name in &names {
@@ -146,6 +156,7 @@ fn main() {
     bench.section("snapshot latency while ingesting (4 shards, block)");
     {
         let c = Arc::new(Coordinator::new(4, 4096, BackpressurePolicy::Block));
+        tune(&c);
         c.register("hot", d, AveragerSpec::parse("awa3(c=0.5)").unwrap())
             .unwrap();
         let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -169,6 +180,7 @@ fn main() {
     bench.section("TCP service round-trips (localhost)");
     {
         let c = Arc::new(Coordinator::new(2, 4096, BackpressurePolicy::Block));
+        tune(&c);
         let server = Server::start("127.0.0.1:0", c, 4).expect("server");
         let addr = server.addr().to_string();
         let mut cl = Client::connect(&addr).expect("client");

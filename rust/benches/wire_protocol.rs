@@ -35,19 +35,19 @@ fn main() {
     };
     let mut buf = Vec::new();
     bench.bench_elements("v1 json   encode push_many", 256, || {
-        protocol::encode_request(Wire::V1Json, 1, &req_v1, &mut buf).unwrap();
+        protocol::encode_request(Wire::V1Json, 1, 0, &req_v1, &mut buf).unwrap();
         buf.len()
     });
-    protocol::encode_request(Wire::V1Json, 1, &req_v1, &mut buf).unwrap();
+    protocol::encode_request(Wire::V1Json, 1, 0, &req_v1, &mut buf).unwrap();
     let v1_frame = buf.clone();
     bench.bench_elements("v1 json   decode push_many", 256, || {
         protocol::decode_request(Wire::V1Json, &v1_frame).unwrap()
     });
     bench.bench_elements("v2 binary encode push_many", 256, || {
-        protocol::encode_request(Wire::V2Binary, 1, &req_v2, &mut buf).unwrap();
+        protocol::encode_request(Wire::V2Binary, 1, 0, &req_v2, &mut buf).unwrap();
         buf.len()
     });
-    protocol::encode_request(Wire::V2Binary, 1, &req_v2, &mut buf).unwrap();
+    protocol::encode_request(Wire::V2Binary, 1, 0, &req_v2, &mut buf).unwrap();
     let v2_frame = buf.clone();
     bench.bench_elements("v2 binary decode push_many", 256, || {
         protocol::decode_request(Wire::V2Binary, &v2_frame).unwrap()
@@ -64,14 +64,14 @@ fn main() {
         value: Some(data.clone()),
     };
     bench.bench_elements("v1 json   encode snapshot", 256, || {
-        protocol::encode_response(Wire::V1Json, 1, &snap, &mut buf).unwrap();
+        protocol::encode_response(Wire::V1Json, 1, 0, &snap, &mut buf).unwrap();
         buf.len()
     });
     bench.bench_elements("v2 binary encode snapshot", 256, || {
-        protocol::encode_response(Wire::V2Binary, 1, &snap, &mut buf).unwrap();
+        protocol::encode_response(Wire::V2Binary, 1, 0, &snap, &mut buf).unwrap();
         buf.len()
     });
-    protocol::encode_response(Wire::V2Binary, 1, &snap, &mut buf).unwrap();
+    protocol::encode_response(Wire::V2Binary, 1, 0, &snap, &mut buf).unwrap();
     let v2_snap = buf.clone();
     bench.bench_elements("v2 binary decode snapshot", 256, || {
         protocol::decode_response(Wire::V2Binary, OpKind::Snapshot, &v2_snap).unwrap()

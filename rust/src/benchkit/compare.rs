@@ -62,6 +62,12 @@ pub struct Report {
     /// machine, cpu count, or compiled target features). Informational:
     /// the comparison still runs, but the report calls it out.
     pub env_mismatch: bool,
+    /// `(baseline, current)` trace sampling rates when the two dumps
+    /// were measured at DIFFERENT rates — an armed-vs-disarmed tracing
+    /// comparison measures observability overhead, not a code change,
+    /// so the report warns about it by name. `None` when the rates
+    /// match or either dump predates the field.
+    pub sample_rate_mismatch: Option<(u32, u32)>,
 }
 
 impl Report {
@@ -88,6 +94,12 @@ impl Report {
         );
         if self.env_mismatch {
             out.push_str("WARNING: bench_env differs between baseline and current run\n");
+        }
+        if let Some((base, cur)) = self.sample_rate_mismatch {
+            out.push_str(&format!(
+                "WARNING: trace sampling rates differ (baseline {base}/1000, current \
+                 {cur}/1000) — deltas include observability overhead, not just code changes\n"
+            ));
         }
         for d in &self.deltas {
             let flag = if d.regressed(self.threshold) {
@@ -168,6 +180,16 @@ pub fn compare(baseline: &Json, current: &Json, threshold: f64) -> Result<Report
         // Older baselines predate the bench_env block; don't warn on them.
         _ => false,
     };
+    let rate_of = |doc: &Json| {
+        doc.get("bench_env")
+            .and_then(|e| e.get("obs_sample_per_mille"))
+            .and_then(Json::as_u64)
+            .map(|v| v as u32)
+    };
+    let sample_rate_mismatch = match (rate_of(baseline), rate_of(current)) {
+        (Some(a), Some(b)) if a != b => Some((a, b)),
+        _ => None,
+    };
     let cur: Vec<(String, f64)> = throughputs(current);
     let mut deltas = Vec::new();
     let mut missing = Vec::new();
@@ -187,6 +209,7 @@ pub fn compare(baseline: &Json, current: &Json, threshold: f64) -> Result<Report
         deltas,
         missing,
         env_mismatch,
+        sample_rate_mismatch,
     })
 }
 
@@ -293,5 +316,37 @@ mod tests {
         assert!(r.env_mismatch);
         assert!(r.passed());
         assert!(r.render().contains("WARNING"));
+    }
+
+    #[test]
+    fn cross_sample_rate_comparison_warns_by_name() {
+        let env = |rate: f64| {
+            Json::obj(vec![
+                ("cpus", Json::Num(8.0)),
+                ("obs_sample_per_mille", Json::Num(rate)),
+            ])
+        };
+        let mut base = doc("ingest", vec![("a", 100.0)], vec![]);
+        let mut cur = doc("ingest", vec![("a", 100.0)], vec![]);
+        if let Json::Obj(m) = &mut base {
+            m.insert("bench_env".to_string(), env(0.0));
+        }
+        if let Json::Obj(m) = &mut cur {
+            m.insert("bench_env".to_string(), env(1000.0));
+        }
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD).unwrap();
+        assert_eq!(r.sample_rate_mismatch, Some((0, 1000)));
+        assert!(r.render().contains("trace sampling rates differ"));
+        assert!(r.passed(), "rate mismatch warns, never fails the guard");
+
+        // Matching rates (and dumps predating the field) stay silent.
+        if let Json::Obj(m) = &mut cur {
+            m.insert("bench_env".to_string(), env(0.0));
+        }
+        let r = compare(&base, &cur, DEFAULT_THRESHOLD).unwrap();
+        assert_eq!(r.sample_rate_mismatch, None);
+        let legacy = doc("ingest", vec![("a", 100.0)], vec![]);
+        let r = compare(&legacy, &cur, DEFAULT_THRESHOLD).unwrap();
+        assert_eq!(r.sample_rate_mismatch, None);
     }
 }

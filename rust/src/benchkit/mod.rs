@@ -40,9 +40,24 @@ fn target_features() -> Vec<&'static str> {
     out
 }
 
+/// The trace sampling rate bench runs execute under, from the
+/// `ATA_OBS_SAMPLE_PER_MILLE` env var (0 = tracing disarmed — the
+/// default for benches, and what committed baselines are measured at).
+/// Bench targets that build a `Coordinator` should apply this rate;
+/// the CI overhead sweep sets 0 / 10 / 1000 and diffs the dumps.
+pub fn obs_sample_per_mille() -> u32 {
+    std::env::var("ATA_OBS_SAMPLE_PER_MILLE")
+        .ok()
+        .and_then(|s| s.trim().parse::<u32>().ok())
+        .map(|v| v.min(1000))
+        .unwrap_or(0)
+}
+
 /// Machine/build description embedded in every `BENCH_<suite>.json` so a
 /// committed baseline is self-describing: comparisons across different
 /// machines or build flags can be spotted instead of silently trusted.
+/// Includes the trace sampling rate — a dump measured with tracing armed
+/// must never be silently compared against a disarmed baseline.
 pub fn bench_env() -> Json {
     Json::obj(vec![
         ("cpus", Json::Num(crate::util::cpu::logical_cpus() as f64)),
@@ -58,6 +73,10 @@ pub fn bench_env() -> Json {
             ),
         ),
         ("debug_build", Json::Bool(cfg!(debug_assertions))),
+        (
+            "obs_sample_per_mille",
+            Json::Num(obs_sample_per_mille() as f64),
+        ),
     ])
 }
 
@@ -398,6 +417,9 @@ mod tests {
         let env = j.get("bench_env").expect("bench_env block");
         assert!(env.get("cpus").and_then(Json::as_f64).unwrap() >= 1.0);
         assert!(env.get("target_features").and_then(Json::as_arr).is_some());
+        // The trace sampling rate is always embedded (0 when the env var
+        // is unset) so bench-compare can flag cross-rate comparisons.
+        assert!(env.get("obs_sample_per_mille").and_then(Json::as_f64).is_some());
         let timing = j.get("timing").expect("timing block");
         assert_eq!(timing.get("batches").and_then(Json::as_f64), Some(4.0));
         let metrics = j.get("metrics").and_then(Json::as_arr).unwrap();

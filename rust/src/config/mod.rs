@@ -259,6 +259,34 @@ impl Default for PersistConfig {
     }
 }
 
+/// Observability section of the coordinator service (`[obs]`).
+///
+/// Always present (it has safe defaults); controls the tracing sample
+/// rate, the per-shard flight-recorder ring size and the recent-span
+/// log retained for `introspect`. See the `obs` module for the
+/// overhead model: a disarmed trace costs one relaxed atomic load.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Spans sampled per 1000 requests (0 = tracing disarmed,
+    /// >= 1000 = every request). Default 10 (1 %).
+    pub sample_per_mille: u32,
+    /// Per-shard flight-recorder ring capacity in events (rounded up
+    /// to a power of two by the recorder).
+    pub ring_size: usize,
+    /// Completed sampled spans retained for `introspect`.
+    pub span_log: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            sample_per_mille: 10,
+            ring_size: 4096,
+            span_log: 256,
+        }
+    }
+}
+
 /// Coordinator service configuration.
 ///
 /// ```toml
@@ -283,6 +311,11 @@ impl Default for PersistConfig {
 /// fsync = false
 /// checkpoint_interval_ms = 0 # 0 = manual checkpoints only
 /// group_commit_micros = 0    # batch fsyncs across shards (0 = off)
+///
+/// [obs]
+/// sample_per_mille = 10      # trace 1% of requests (0 = off, 1000 = all)
+/// ring_size = 4096           # per-shard flight-recorder events
+/// span_log = 256             # completed spans kept for introspect
 ///
 /// [[stream]]
 /// name = "layer0.weight"
@@ -326,6 +359,9 @@ pub struct ServiceConfig {
     /// attributed to one stream, the stream is isolated (further pushes
     /// rejected) instead of letting it keep killing its shard worker.
     pub poison_threshold: u32,
+    /// Observability plane: tracing sample rate, flight-recorder ring
+    /// size, span-log retention (`[obs]`; defaults are always safe).
+    pub obs: ObsConfig,
     pub streams: Vec<StreamConfig>,
 }
 
@@ -346,6 +382,7 @@ impl Default for ServiceConfig {
             max_connections: 0,
             non_finite: NonFinitePolicy::Reject,
             poison_threshold: 3,
+            obs: ObsConfig::default(),
             streams: Vec::new(),
         }
     }
@@ -452,6 +489,16 @@ impl ServiceConfig {
         } else if doc.get_path("persist").is_some() {
             return Err("persist section requires persist.dir".into());
         }
+        if let Some(v) = doc.get_path("obs.sample_per_mille") {
+            cfg.obs.sample_per_mille =
+                v.as_u64().ok_or("obs.sample_per_mille must be an integer")? as u32;
+        }
+        if let Some(v) = doc.get_path("obs.ring_size") {
+            cfg.obs.ring_size = v.as_u64().ok_or("obs.ring_size must be an integer")? as usize;
+        }
+        if let Some(v) = doc.get_path("obs.span_log") {
+            cfg.obs.span_log = v.as_u64().ok_or("obs.span_log must be an integer")? as usize;
+        }
         if let Some(arr) = doc.get_path("stream").and_then(Toml::as_arr) {
             for s in arr {
                 let name = s
@@ -515,6 +562,15 @@ impl ServiceConfig {
             if p.group_commit_micros > 1_000_000 {
                 return Err("persist.group_commit_micros must be <= 1000000 (1s)".into());
             }
+        }
+        if self.obs.sample_per_mille > 1000 {
+            return Err("obs.sample_per_mille must be <= 1000".into());
+        }
+        if self.obs.ring_size == 0 || self.obs.ring_size > (1 << 20) {
+            return Err("obs.ring_size must be in [1, 1048576]".into());
+        }
+        if self.obs.span_log == 0 || self.obs.span_log > 65_536 {
+            return Err("obs.span_log must be in [1, 65536]".into());
         }
         let mut seen = std::collections::BTreeSet::new();
         for s in &self.streams {
@@ -727,6 +783,31 @@ non_finite = "propagate"
         assert!(
             ServiceConfig::from_toml_text("[service]\nread_timeout_ms = 90000000000").is_err()
         );
+    }
+
+    #[test]
+    fn obs_section_parses_and_validates() {
+        // Defaults: 1% sampling, 4k ring, 256 spans.
+        let d = ServiceConfig::default().obs;
+        assert_eq!(d.sample_per_mille, 10);
+        assert_eq!(d.ring_size, 4096);
+        assert_eq!(d.span_log, 256);
+        assert_eq!(ServiceConfig::from_toml_text("").unwrap().obs, d);
+        let text = r#"
+[obs]
+sample_per_mille = 1000
+ring_size = 128
+span_log = 16
+"#;
+        let cfg = ServiceConfig::from_toml_text(text).unwrap();
+        assert_eq!(cfg.obs.sample_per_mille, 1000);
+        assert_eq!(cfg.obs.ring_size, 128);
+        assert_eq!(cfg.obs.span_log, 16);
+        // Out-of-range knobs are refused.
+        assert!(ServiceConfig::from_toml_text("[obs]\nsample_per_mille = 1001").is_err());
+        assert!(ServiceConfig::from_toml_text("[obs]\nring_size = 0").is_err());
+        assert!(ServiceConfig::from_toml_text("[obs]\nring_size = 2097152").is_err());
+        assert!(ServiceConfig::from_toml_text("[obs]\nspan_log = 0").is_err());
     }
 
     #[test]

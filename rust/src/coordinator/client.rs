@@ -22,6 +22,7 @@ use super::protocol::{
     self, wire, MultiOutcome, OpKind, ProtocolChoice, Request, Response, StatEntry, StatOutcome,
     StreamInfo, StreamRef, Wire,
 };
+use crate::obs::{self, introspect::IntrospectReport};
 use crate::util::json::Json;
 use crate::util::pool::PooledBuf;
 use std::collections::HashMap;
@@ -112,6 +113,9 @@ pub struct Client {
     /// Reused encode/read scratch: steady-state requests allocate only
     /// what the payload itself needs.
     buf: Vec<u8>,
+    /// Trace id echoed by the most recent response (0 before the first
+    /// round-trip). See [`Client::last_trace_id`].
+    last_trace: u64,
 }
 
 impl Client {
@@ -137,6 +141,7 @@ impl Client {
             next_seq: 1,
             handles: HashMap::new(),
             buf: Vec::new(),
+            last_trace: 0,
         };
         if choice == ProtocolChoice::V1 {
             return Ok(c); // legacy mode: no hello (pre-v2 servers drop on one)
@@ -192,12 +197,14 @@ impl Client {
             .map_err(|e| ClientError::Io(e.to_string()))
     }
 
-    /// Encode and send `req`; returns the (seq, op) bookkeeping the
-    /// response collector needs. Does NOT wait for the response.
+    /// Encode and send `req` with a freshly minted trace id; returns
+    /// the (seq, op) bookkeeping the response collector needs. Does NOT
+    /// wait for the response.
     fn send_request(&mut self, req: &Request) -> Result<(u64, OpKind), ClientError> {
         let seq = self.next_seq;
         self.next_seq += 1;
-        protocol::encode_request(self.wire, seq, req, &mut self.buf)
+        let trace = obs::mint_trace_id();
+        protocol::encode_request(self.wire, seq, trace, req, &mut self.buf)
             .map_err(ClientError::Protocol)?;
         wire::write_frame_bytes(&mut self.stream, &self.buf).map_err(send_error)?;
         Ok((seq, req.kind()))
@@ -206,6 +213,7 @@ impl Client {
     /// Receive ONE response frame for an op of the given kind, whatever
     /// request it answers; returns `(seq, response)` with error frames
     /// still inline (the pipelined collectors match seqs themselves).
+    /// The echoed trace id lands in [`Client::last_trace_id`].
     fn recv_any(&mut self, kind: OpKind) -> Result<(u64, Response), ClientError> {
         // Trim before reuse: one outsized frame (a 64 MiB state
         // transfer) must not pin its capacity for the client lifetime.
@@ -215,7 +223,12 @@ impl Client {
             Ok(None) => return Err(ClientError::Io("server closed connection".into())),
             Err(e) => return Err(ClientError::Io(format!("recv: {e}"))),
         }
-        protocol::decode_response(self.wire, kind, &self.buf).map_err(ClientError::Protocol)
+        let (seq, trace, resp) =
+            protocol::decode_response(self.wire, kind, &self.buf).map_err(ClientError::Protocol)?;
+        if trace != 0 {
+            self.last_trace = trace;
+        }
+        Ok((seq, resp))
     }
 
     /// Receive the response for `seq` (single-request-in-flight path).
@@ -321,13 +334,14 @@ impl Client {
     ) -> Result<(u64, OpKind), ClientError> {
         let seq = self.next_seq;
         self.next_seq += 1;
+        let trace = obs::mint_trace_id();
         match sref {
             StreamRef::Handle(handle) => {
-                protocol::v2::encode_push_many(seq, *handle, count, samples, &mut self.buf)
+                protocol::v2::encode_push_many(seq, trace, *handle, count, samples, &mut self.buf)
                     .map_err(ClientError::Protocol)?;
             }
             StreamRef::Name(name) => {
-                let json = protocol::v1::push_many_to_json(name, count, samples);
+                let json = protocol::v1::push_many_to_json(name, count, samples, trace);
                 self.buf.clear();
                 self.buf.extend_from_slice(json.encode().as_bytes());
             }
@@ -549,7 +563,8 @@ impl Client {
             // caller's slices.
             let seq = self.next_seq;
             self.next_seq += 1;
-            protocol::v2::encode_multi_push(seq, &wire_entries, &mut self.buf)
+            let trace = obs::mint_trace_id();
+            protocol::v2::encode_multi_push(seq, trace, &wire_entries, &mut self.buf)
                 .map_err(ClientError::Protocol)?;
             wire::write_frame_bytes(&mut self.stream, &self.buf).map_err(send_error)?;
             match self.recv_response(seq, OpKind::MultiPush)? {
@@ -615,6 +630,34 @@ impl Client {
     pub fn metrics(&mut self) -> Result<Json, ClientError> {
         match self.roundtrip(&Request::Metrics)? {
             Response::Metrics { body } => Ok(body),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// The trace id the server echoed on the most recently received
+    /// response (0 before the first round-trip). Every request this
+    /// client sends carries a freshly minted trace id; the echo lets a
+    /// caller correlate its last op with server-side span records,
+    /// flight-recorder events, and `trace_id=` log lines.
+    pub fn last_trace_id(&self) -> u64 {
+        self.last_trace
+    }
+
+    /// Live introspection report: per-shard queue depth and restarts,
+    /// per-bank occupancy, per-stream health, recent flight-recorder
+    /// events, and recent completed trace spans. Powers `ata top`.
+    pub fn introspect(&mut self) -> Result<IntrospectReport, ClientError> {
+        match self.roundtrip(&Request::Introspect)? {
+            Response::Introspection { report } => Ok(report),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// The server's whole metrics registry rendered in Prometheus text
+    /// exposition format (the server refreshes derived gauges first).
+    pub fn metrics_prometheus(&mut self) -> Result<String, ClientError> {
+        match self.roundtrip(&Request::MetricsProm)? {
+            Response::MetricsText { text } => Ok(text),
             other => Err(unexpected(&other)),
         }
     }
@@ -969,6 +1012,16 @@ impl RetryingClient {
     /// Server metrics document (read — always safe to retry).
     pub fn metrics(&mut self) -> Result<Json, ClientError> {
         self.with_retry(|c| c.metrics())
+    }
+
+    /// Live introspection report (read — always safe to retry).
+    pub fn introspect(&mut self) -> Result<IntrospectReport, ClientError> {
+        self.with_retry(|c| c.introspect())
+    }
+
+    /// Prometheus text exposition (read — always safe to retry).
+    pub fn metrics_prometheus(&mut self) -> Result<String, ClientError> {
+        self.with_retry(|c| c.metrics_prometheus())
     }
 
     /// Analytics query (read — always safe to retry).

@@ -11,6 +11,9 @@ use crate::analytics::{self, Query, QueryResult, StatSnapshot};
 use crate::averagers::{banked, AveragerSpec};
 use crate::config::{BackpressurePolicy, NonFinitePolicy, PersistConfig, ServiceConfig};
 use crate::metrics::{names, Counter, Histogram, Registry};
+use crate::obs::introspect::{BankReport, IntrospectReport, ShardReport, StreamReport};
+use crate::obs::recorder::{EventKind, FlightRecorder};
+use crate::obs::{Obs, Span, Stage};
 use crate::persist::codec::{self, Dec, Enc};
 use crate::persist::{checkpoint as snapfile, wal};
 use crate::testkit::chaos;
@@ -51,6 +54,22 @@ pub struct Snapshot {
     pub dropped: u64,
 }
 
+/// Per-request trace context the serving layer threads through the
+/// ingest entry points: the request's trace id (0 = untraced) and, for
+/// the sampled subset, the live [`Span`] the pipeline stages land in.
+#[derive(Clone, Default)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub span: Option<Arc<Span>>,
+}
+
+impl TraceCtx {
+    /// An untraced context (internal callers, tests, replay).
+    pub fn none() -> TraceCtx {
+        TraceCtx::default()
+    }
+}
+
 enum ShardMsg {
     /// `count` consecutive samples packed flat in `data` (one sample on
     /// the `push` path, a whole client batch on the `push_many` path —
@@ -59,6 +78,10 @@ enum ShardMsg {
         stream: Arc<StreamSlot>,
         count: usize,
         data: PooledBuf,
+        /// Trace id of the request that enqueued this batch (0 = none).
+        trace_id: u64,
+        /// Sampled span plus its enqueue instant (queue-wait baseline).
+        span: Option<(Arc<Span>, Instant)>,
     },
     /// Barrier: ack once every message enqueued before it is applied.
     Sync(SyncSender<()>),
@@ -135,6 +158,21 @@ struct StreamSlot {
 struct Shard {
     sender: SyncSender<ShardMsg>,
     handle: Option<thread::JoinHandle<()>>,
+}
+
+/// Per-shard introspection vitals: lock-free atomics the worker (and
+/// the enqueue path) publish into and [`Coordinator::introspect`] reads
+/// without touching any queue or state lock.
+#[derive(Default)]
+struct ShardPub {
+    /// Push batches sitting in the shard queue right now (incremented
+    /// on every successful enqueue, decremented at worker pickup).
+    depth: AtomicU64,
+    /// Worker incarnations: 1 after a clean boot, +1 per panic restart.
+    worker_starts: AtomicU64,
+    /// WAL write position at the last drain boundary (0/0 = no WAL).
+    wal_segment: AtomicU64,
+    wal_offset: AtomicU64,
 }
 
 /// The stream registry: one map per addressing mode, always mutated
@@ -234,6 +272,12 @@ pub struct CoordinatorOptions {
     /// Quarantined batches attributed to one stream before the
     /// poison-stream policy isolates it (min 1 enforced).
     pub poison_threshold: u32,
+    /// Per-mille of push requests that record a trace span (0 = off).
+    pub obs_sample_per_mille: u32,
+    /// Per-shard flight-recorder ring capacity (events).
+    pub obs_ring_size: usize,
+    /// Completed trace spans retained for introspection.
+    pub obs_span_log: usize,
 }
 
 impl Default for CoordinatorOptions {
@@ -248,6 +292,9 @@ impl Default for CoordinatorOptions {
             pin_cores: false,
             non_finite: NonFinitePolicy::Reject,
             poison_threshold: 3,
+            obs_sample_per_mille: 10,
+            obs_ring_size: 4096,
+            obs_span_log: 256,
         }
     }
 }
@@ -308,6 +355,12 @@ pub struct Coordinator {
     non_finite_rejected: Arc<Counter>,
     /// Distribution of samples-per-message on the ingest path.
     push_batch_size: Arc<Histogram>,
+    /// Tracing/sampling state and the stage histogram family.
+    obs: Arc<Obs>,
+    /// Per-shard introspection vitals (same index as `shards`).
+    shard_pubs: Vec<Arc<ShardPub>>,
+    /// Per-shard flight recorders (same index as `shards`).
+    recorders: Vec<Arc<FlightRecorder>>,
 }
 
 impl Coordinator {
@@ -326,6 +379,9 @@ impl Coordinator {
             pin_cores: cfg.pin_cores,
             non_finite: cfg.non_finite,
             poison_threshold: cfg.poison_threshold,
+            obs_sample_per_mille: cfg.obs.sample_per_mille,
+            obs_ring_size: cfg.obs.ring_size,
+            obs_span_log: cfg.obs.span_log,
         })?;
         for s in &cfg.streams {
             c.register_with_policy(&s.name, s.dim, s.spec.clone(), s.non_finite)?;
@@ -386,10 +442,14 @@ impl Coordinator {
             pin_cores,
             non_finite,
             poison_threshold,
+            obs_sample_per_mille,
+            obs_ring_size,
+            obs_span_log,
         } = opts;
         let persist = persist.as_ref();
         let shards = shards.max(1);
         let metrics = Registry::new();
+        let obs = Arc::new(Obs::new(&metrics, obs_sample_per_mille, obs_span_log));
         let instruments = ShardInstruments {
             drain_cycles: metrics.counter("drain_cycles"),
             bank_rows_published: metrics.counter("bank_rows_published"),
@@ -407,9 +467,16 @@ impl Coordinator {
         let poisoned_counter = metrics.counter(names::POISONED_STREAMS);
         let poison_threshold = poison_threshold.max(1) as u64;
         let mut v = Vec::with_capacity(shards);
+        let mut shard_pubs = Vec::with_capacity(shards);
+        let mut recorders = Vec::with_capacity(shards);
         for i in 0..shards {
             let (tx, rx) = sync_channel::<ShardMsg>(queue_capacity.max(1));
             let inst = instruments.clone();
+            let shard_pub = Arc::new(ShardPub::default());
+            let recorder = Arc::new(FlightRecorder::new(i as u16, obs_ring_size));
+            shard_pubs.push(Arc::clone(&shard_pub));
+            recorders.push(Arc::clone(&recorder));
+            let shard_obs = Arc::clone(&obs);
             let shard_wal = match (persist, &persist_shared) {
                 (Some(p), Some(ps)) => {
                     let mut w = wal::WalWriter::open(
@@ -436,6 +503,12 @@ impl Coordinator {
             let sup = supervisor::Supervisor {
                 restarts: Arc::clone(&restarts_counter),
                 quarantined: Arc::clone(&quarantined_counter),
+                // Panic forensics: the last things this shard did, from
+                // its flight recorder, ride along with the panic report.
+                dump: Some(Box::new({
+                    let recorder = Arc::clone(&recorder);
+                    move || recorder.dump(32)
+                })),
             };
             let poisoned_streams = Arc::clone(&poisoned_counter);
             let handle = thread::Builder::new()
@@ -455,27 +528,54 @@ impl Coordinator {
                     // panicked mid-processing is quarantined.
                     let mut wal = shard_wal;
                     let mut stage: HashMap<usize, (Arc<Bank>, Vec<BankJob>)> = HashMap::new();
-                    let attribute = move |(slot, count): (Arc<StreamSlot>, u64)| {
-                        let strikes = slot.strikes.fetch_add(1, Ordering::Relaxed) + 1;
-                        // The quarantined samples are lost to the live
-                        // state; surface them with the drop accounting.
-                        slot.dropped.fetch_add(count, Ordering::Relaxed);
-                        if strikes >= poison_threshold
-                            && !slot.poisoned.swap(true, Ordering::Relaxed)
-                        {
-                            poisoned_streams.inc();
-                            crate::log_warn!(
-                                "supervisor",
-                                "stream '{}' isolated after {strikes} worker-killing batches",
-                                slot.name
+                    let attribute = {
+                        let recorder = Arc::clone(&recorder);
+                        move |(slot, count, trace_id): (Arc<StreamSlot>, u64, u64)| {
+                            let strikes = slot.strikes.fetch_add(1, Ordering::Relaxed) + 1;
+                            // The quarantined samples are lost to the live
+                            // state; surface them with the drop accounting.
+                            slot.dropped.fetch_add(count, Ordering::Relaxed);
+                            recorder.record(
+                                EventKind::Quarantine,
+                                trace_id,
+                                slot.handle,
+                                strikes,
                             );
+                            if strikes >= poison_threshold
+                                && !slot.poisoned.swap(true, Ordering::Relaxed)
+                            {
+                                poisoned_streams.inc();
+                                recorder.record(
+                                    EventKind::Poison,
+                                    trace_id,
+                                    slot.handle,
+                                    strikes,
+                                );
+                                crate::log_kv!(
+                                    crate::util::logging::Level::Warn,
+                                    "supervisor",
+                                    { "trace_id" => trace_id, "stream" => slot.name },
+                                    "stream isolated after {strikes} worker-killing batches"
+                                );
+                            }
                         }
                     };
                     supervisor::supervise(
                         &format!("ata-shard-{i}"),
                         &sup,
                         attribute,
-                        |inflight| shard_loop(&rx, &inst, &mut wal, &mut stage, inflight),
+                        |inflight| {
+                            shard_loop(
+                                &rx,
+                                &inst,
+                                &mut wal,
+                                &mut stage,
+                                inflight,
+                                &shard_obs,
+                                &shard_pub,
+                                &recorder,
+                            )
+                        },
                     );
                 })
                 .expect("spawn shard");
@@ -506,7 +606,15 @@ impl Coordinator {
             metrics,
             buffers: BufferPool::new(64),
             snap_buffers: BufferPool::new(64),
+            obs,
+            shard_pubs,
+            recorders,
         })
+    }
+
+    /// The tracing/sampling plane (shared with the serving layer).
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs
     }
 
     /// Service metrics registry.
@@ -515,9 +623,12 @@ impl Coordinator {
     }
 
     /// Snapshot every instrument as JSON (the wire `metrics` op),
-    /// refreshing the derived buffer-pool gauges first: the pools count
-    /// hits/misses internally (lock-free), and this is the one place
-    /// they surface.
+    /// refreshing the derived gauges first: buffer pools count
+    /// hits/misses internally (lock-free), and the queue-depth /
+    /// bank-occupancy / flight-event gauges live in per-shard atomics —
+    /// this is the one place any of them surface. Every metrics
+    /// consumer (wire op, CLI, benches) must come through here, never
+    /// `Registry::export` directly, or it reads stale gauges.
     pub fn export_metrics(&self) -> Json {
         let hits = self.buffers.hits() + self.snap_buffers.hits();
         let misses = self.buffers.misses() + self.snap_buffers.misses();
@@ -529,7 +640,92 @@ impl Coordinator {
         } else {
             hits as f64 / total as f64
         });
+        let (mut depth_total, mut depth_max, mut events) = (0u64, 0u64, 0u64);
+        for (p, r) in self.shard_pubs.iter().zip(&self.recorders) {
+            let d = p.depth.load(Ordering::Relaxed);
+            depth_total += d;
+            depth_max = depth_max.max(d);
+            events += r.recorded();
+        }
+        self.metrics
+            .gauge(names::QUEUE_DEPTH_TOTAL)
+            .set(depth_total as f64);
+        self.metrics
+            .gauge(names::QUEUE_DEPTH_MAX)
+            .set(depth_max as f64);
+        self.metrics.gauge(names::FLIGHT_EVENTS).set(events as f64);
+        let rows: usize = {
+            let banks = self.banks.lock().expect("banks lock");
+            banks.values().map(|b| b.active_rows()).sum()
+        };
+        self.metrics.gauge(names::BANK_ROWS).set(rows as f64);
         self.metrics.export()
+    }
+
+    /// Point-in-time introspection report — the wire `introspect` op
+    /// and the `ata top` dashboard. Lock-free against ingest except for
+    /// the registry read guard and the (cold) banks mutex.
+    pub fn introspect(&self) -> IntrospectReport {
+        let shards = self
+            .shard_pubs
+            .iter()
+            .zip(&self.recorders)
+            .enumerate()
+            .map(|(i, (p, r))| ShardReport {
+                shard: i as u16,
+                queue_depth: p.depth.load(Ordering::Relaxed),
+                worker_starts: p.worker_starts.load(Ordering::Relaxed),
+                wal_segment: p.wal_segment.load(Ordering::Relaxed),
+                wal_offset: p.wal_offset.load(Ordering::Relaxed),
+                events_recorded: r.recorded(),
+            })
+            .collect();
+        let mut banks: Vec<BankReport> = {
+            let reg = self.banks.lock().expect("banks lock");
+            reg.values()
+                .map(|b| BankReport {
+                    index: b.index as u64,
+                    dim: b.dim as u64,
+                    rows: b.active_rows() as u64,
+                    row_floats: b.row_floats as u64,
+                })
+                .collect()
+        };
+        banks.sort_by_key(|b| b.index);
+        let mut streams: Vec<StreamReport> = {
+            let map = self.streams.read().expect("streams lock");
+            map.by_name
+                .values()
+                .map(|s| StreamReport {
+                    name: s.name.to_string(),
+                    handle: s.handle,
+                    dropped: s.dropped.load(Ordering::Relaxed),
+                    strikes: s.strikes.load(Ordering::Relaxed),
+                    poisoned: s.poisoned.load(Ordering::Relaxed),
+                })
+                .collect()
+        };
+        streams.sort_by(|a, b| a.name.cmp(&b.name));
+        // Merge the per-shard rings, time-ordered, newest-biased: the
+        // rings share a construction instant, so cross-shard `at_nanos`
+        // are comparable to well under a drain cycle.
+        const EVENT_LIMIT: usize = 128;
+        let mut events: Vec<crate::obs::recorder::Event> = Vec::new();
+        for r in &self.recorders {
+            events.extend(r.snapshot(EVENT_LIMIT));
+        }
+        events.sort_by_key(|e| e.at_nanos);
+        if events.len() > EVENT_LIMIT {
+            events.drain(..events.len() - EVENT_LIMIT);
+        }
+        IntrospectReport {
+            sample_per_mille: self.obs.sample_per_mille(),
+            shards,
+            banks,
+            streams,
+            events,
+            spans: self.obs.recent_spans(32),
+        }
     }
 
     /// The bank stripe for `(spec, dim)` on `shard`, if the spec has a
@@ -711,27 +907,55 @@ impl Coordinator {
     /// Every stream pins to one shard by name hash (its ordering
     /// queue). Banked streams were registered into the bank stripe of
     /// that same shard, so each bank is drained by exactly one worker.
+    fn shard_index(&self, slot: &StreamSlot) -> usize {
+        fnv1a(slot.name.as_bytes()) as usize % self.shards.len()
+    }
+
     fn shard_for(&self, slot: &StreamSlot) -> &Shard {
-        let idx = fnv1a(slot.name.as_bytes()) as usize;
-        &self.shards[idx % self.shards.len()]
+        &self.shards[self.shard_index(slot)]
     }
 
     /// Push one sample. Behaviour under a full shard queue follows the
     /// backpressure policy: `Block` waits, `DropNewest` returns
     /// `Dropped`, `Reject` returns an error.
     pub fn push(&self, name: &str, data: Vec<f64>) -> Result<PushOutcome, String> {
+        self.push_traced(name, data, &TraceCtx::none())
+    }
+
+    /// As [`Coordinator::push`] with the request's trace context.
+    pub fn push_traced(
+        &self,
+        name: &str,
+        data: Vec<f64>,
+        ctx: &TraceCtx,
+    ) -> Result<PushOutcome, String> {
         let slot = self.slot(name)?;
-        self.push_slot(slot, data)
+        self.push_slot(slot, data, ctx)
     }
 
     /// Handle-addressed [`Coordinator::push`] — the protocol v2 hot
     /// path: one u64 map hit, no string hashing.
     pub fn push_handle(&self, handle: u64, data: Vec<f64>) -> Result<PushOutcome, String> {
-        let slot = self.slot_h(handle)?;
-        self.push_slot(slot, data)
+        self.push_handle_traced(handle, data, &TraceCtx::none())
     }
 
-    fn push_slot(&self, slot: Arc<StreamSlot>, data: Vec<f64>) -> Result<PushOutcome, String> {
+    /// As [`Coordinator::push_handle`] with the request's trace context.
+    pub fn push_handle_traced(
+        &self,
+        handle: u64,
+        data: Vec<f64>,
+        ctx: &TraceCtx,
+    ) -> Result<PushOutcome, String> {
+        let slot = self.slot_h(handle)?;
+        self.push_slot(slot, data, ctx)
+    }
+
+    fn push_slot(
+        &self,
+        slot: Arc<StreamSlot>,
+        data: Vec<f64>,
+        ctx: &TraceCtx,
+    ) -> Result<PushOutcome, String> {
         // Early shape validation (lock-free: dim is immutable) so callers
         // get an error even under DropNewest (the worker re-validates).
         if data.len() != slot.dim {
@@ -742,7 +966,7 @@ impl Coordinator {
                 slot.dim
             ));
         }
-        self.enqueue(slot, 1, PooledBuf::unpooled(data))
+        self.enqueue(slot, 1, PooledBuf::unpooled(data), ctx)
     }
 
     /// Push `count` consecutive samples packed flat in `data` as ONE
@@ -756,7 +980,7 @@ impl Coordinator {
         let slot = self.slot(name)?;
         check_batch(&slot, count, data.len())?;
         let buf = self.buffers.take(data);
-        self.enqueue(slot, count, buf)
+        self.enqueue(slot, count, buf, &TraceCtx::none())
     }
 
     /// As [`Coordinator::push_many`], but takes ownership of an
@@ -770,9 +994,21 @@ impl Coordinator {
         count: usize,
         data: Vec<f64>,
     ) -> Result<PushOutcome, String> {
+        self.push_many_owned_traced(name, count, data, &TraceCtx::none())
+    }
+
+    /// As [`Coordinator::push_many_owned`] with the request's trace
+    /// context.
+    pub fn push_many_owned_traced(
+        &self,
+        name: &str,
+        count: usize,
+        data: Vec<f64>,
+        ctx: &TraceCtx,
+    ) -> Result<PushOutcome, String> {
         let slot = self.slot(name)?;
         check_batch(&slot, count, data.len())?;
-        self.enqueue(slot, count, PooledBuf::unpooled(data))
+        self.enqueue(slot, count, PooledBuf::unpooled(data), ctx)
     }
 
     /// Handle-addressed [`Coordinator::push_many_owned`].
@@ -782,9 +1018,21 @@ impl Coordinator {
         count: usize,
         data: Vec<f64>,
     ) -> Result<PushOutcome, String> {
+        self.push_many_handle_owned_traced(handle, count, data, &TraceCtx::none())
+    }
+
+    /// As [`Coordinator::push_many_handle_owned`] with the request's
+    /// trace context.
+    pub fn push_many_handle_owned_traced(
+        &self,
+        handle: u64,
+        count: usize,
+        data: Vec<f64>,
+        ctx: &TraceCtx,
+    ) -> Result<PushOutcome, String> {
         let slot = self.slot_h(handle)?;
         check_batch(&slot, count, data.len())?;
-        self.enqueue(slot, count, PooledBuf::unpooled(data))
+        self.enqueue(slot, count, PooledBuf::unpooled(data), ctx)
     }
 
     /// Staged multi-stream push — the wire `multi_push` op. All entry
@@ -796,6 +1044,16 @@ impl Coordinator {
     /// application order is entry order, exactly as if each entry had
     /// been its own `push_many`.
     pub fn multi_push(&self, entries: Vec<MultiPushEntry>) -> Vec<MultiOutcome> {
+        self.multi_push_traced(entries, &TraceCtx::none())
+    }
+
+    /// As [`Coordinator::multi_push`] with the request's trace context
+    /// (one span covers the whole frame; first-filled stages win).
+    pub fn multi_push_traced(
+        &self,
+        entries: Vec<MultiPushEntry>,
+        ctx: &TraceCtx,
+    ) -> Vec<MultiOutcome> {
         self.multi_push_entries.add(entries.len() as u64);
         let slots: Vec<Option<Arc<StreamSlot>>> = {
             let map = self.streams.read().expect("streams lock");
@@ -817,7 +1075,7 @@ impl Coordinator {
                 if let Err(err) = check_batch(&slot, e.count, e.data.len()) {
                     return MultiOutcome::Rejected(err);
                 }
-                match self.enqueue(slot, e.count, PooledBuf::unpooled(e.data)) {
+                match self.enqueue(slot, e.count, PooledBuf::unpooled(e.data), ctx) {
                     Ok(PushOutcome::Accepted) => MultiOutcome::Accepted,
                     Ok(PushOutcome::Dropped) => MultiOutcome::Dropped,
                     Err(err) => MultiOutcome::Rejected(err),
@@ -880,6 +1138,7 @@ impl Coordinator {
         slot: Arc<StreamSlot>,
         count: usize,
         mut data: PooledBuf,
+        ctx: &TraceCtx,
     ) -> Result<PushOutcome, String> {
         if slot.poisoned.load(Ordering::Relaxed) {
             return Err(format!(
@@ -894,11 +1153,16 @@ impl Coordinator {
             // handled, nothing ships.
             return Ok(PushOutcome::Accepted);
         }
-        let shard = self.shard_for(&slot);
+        let idx = self.shard_index(&slot);
+        let shard = &self.shards[idx];
+        let handle = slot.handle;
         let msg = ShardMsg::Push {
             stream: Arc::clone(&slot),
             count,
             data,
+            trace_id: ctx.trace_id,
+            // The enqueue instant baselines the queue-wait stage.
+            span: ctx.span.as_ref().map(|s| (Arc::clone(s), Instant::now())),
         };
         let outcome = match self.policy {
             BackpressurePolicy::Block => {
@@ -912,6 +1176,12 @@ impl Coordinator {
                     // producer path, even under backpressure.
                     slot.dropped.fetch_add(count as u64, Ordering::Relaxed);
                     self.pushes_dropped.add(count as u64);
+                    self.recorders[idx].record(
+                        EventKind::Drop,
+                        ctx.trace_id,
+                        handle,
+                        count as u64,
+                    );
                     PushOutcome::Dropped
                 }
                 Err(TrySendError::Disconnected(_)) => return Err("shard down".into()),
@@ -920,6 +1190,12 @@ impl Coordinator {
                 Ok(()) => PushOutcome::Accepted,
                 Err(TrySendError::Full(_)) => {
                     self.pushes_rejected.add(count as u64);
+                    self.recorders[idx].record(
+                        EventKind::Overload,
+                        ctx.trace_id,
+                        handle,
+                        count as u64,
+                    );
                     // The marker makes this a structured `Overloaded`
                     // wire outcome (retry-after-backoff) on both
                     // protocols instead of an opaque fatal error.
@@ -932,6 +1208,7 @@ impl Coordinator {
             },
         };
         if outcome == PushOutcome::Accepted {
+            self.shard_pubs[idx].depth.fetch_add(1, Ordering::Relaxed);
             self.pushes_accepted.add(count as u64);
             self.push_batch_size.record(count as u64);
         }
@@ -1277,6 +1554,9 @@ impl Coordinator {
             pin_cores: cfg.pin_cores,
             non_finite: cfg.non_finite,
             poison_threshold: cfg.poison_threshold,
+            obs_sample_per_mille: cfg.obs.sample_per_mille,
+            obs_ring_size: cfg.obs.ring_size,
+            obs_span_log: cfg.obs.span_log,
         })?;
         let replayed_counter = c.metrics.counter(names::RECOVERY_REPLAYED_BATCHES);
         let mut report = RecoveryReport {
@@ -1427,19 +1707,22 @@ impl Coordinator {
                     }
                 };
                 let buf = pool.take(&data);
-                let shard = self.shard_for(&slot);
-                if shard
+                let idx = self.shard_index(&slot);
+                if self.shards[idx]
                     .sender
                     .send(ShardMsg::Push {
                         stream: slot,
                         count,
                         data: buf,
+                        trace_id: 0,
+                        span: None,
                     })
                     .is_err()
                 {
                     crate::log_warn!("persist", "replay push to '{stream}': shard down");
                     return;
                 }
+                self.shard_pubs[idx].depth.fetch_add(1, Ordering::Relaxed);
                 report.replayed_batches += 1;
                 report.replayed_samples += count as u64;
                 replayed.inc();
@@ -1594,13 +1877,23 @@ const DRAIN_BATCH: usize = 1024;
 /// [`supervisor::InFlight`] message and calls the loop again with
 /// everything else intact — queued messages, staged bank jobs, and the
 /// open WAL all survive the restart.
+#[allow(clippy::too_many_arguments)]
 fn shard_loop(
     rx: &Receiver<ShardMsg>,
     instruments: &ShardInstruments,
     wal: &mut Option<wal::WalWriter>,
     stage: &mut HashMap<usize, (Arc<Bank>, Vec<BankJob>)>,
-    inflight: &supervisor::InFlight<(Arc<StreamSlot>, u64)>,
+    inflight: &supervisor::InFlight<(Arc<StreamSlot>, u64, u64)>,
+    obs: &Obs,
+    shard_pub: &ShardPub,
+    recorder: &FlightRecorder,
 ) {
+    shard_pub.worker_starts.fetch_add(1, Ordering::Relaxed);
+    // Sampled spans whose WAL append joined an open group commit: their
+    // fsync-settle stage completes when the shared fsync lands. Owned by
+    // the incarnation — a panic loses them (tracing is best-effort; only
+    // fully-completed spans ever retire).
+    let mut settling: Vec<(Arc<Span>, Instant)> = Vec::new();
     loop {
         // With an open WAL group, block only until its commit deadline:
         // an idle shard must still sync acked appends within the window.
@@ -1614,6 +1907,9 @@ fn shard_loop(
                             crate::log_warn!("persist", "WAL group commit: {e}");
                         }
                     }
+                    // The group's shared fsync (attempt) happened: the
+                    // spans that were waiting on it have settled.
+                    settle_spans(obs, &mut settling);
                     continue;
                 }
                 Err(RecvTimeoutError::Disconnected) => break,
@@ -1627,14 +1923,23 @@ fn shard_loop(
         let mut shutdown = false;
         let mut drained = 0usize;
         let mut msg = Some(first);
+        // Sampled spans staged into banks this cycle: their apply stage
+        // completes at the cycle's flush.
+        let mut pending_apply: Vec<(Arc<Span>, Instant)> = Vec::new();
         loop {
             match msg.take() {
                 Some(ShardMsg::Push {
                     stream,
                     count,
                     data,
+                    trace_id,
+                    span,
                 }) => {
                     drained += 1;
+                    shard_pub.depth.fetch_sub(1, Ordering::Relaxed);
+                    if let Some((sp, enq)) = &span {
+                        obs.record_stage_since(sp, Stage::QueueWait, *enq);
+                    }
                     // Supervision: mark this batch in flight until it is
                     // staged/applied — a panic anywhere in between
                     // quarantines exactly this batch. The chaos panic
@@ -1642,11 +1947,14 @@ fn shard_loop(
                     // mutation, so a quarantined batch never happened on
                     // either the live or the recovery side (keeping
                     // post-recovery snapshots bitwise-identical).
-                    inflight.begin((Arc::clone(&stream), count as u64));
+                    inflight.begin((Arc::clone(&stream), count as u64, trace_id));
                     if chaos::armed() {
                         chaos::maybe_worker_panic(&stream.name);
                     }
+                    recorder.record(EventKind::Push, trace_id, stream.handle, count as u64);
                     if let Some(w) = wal.as_mut() {
+                        let seg_before = w.position().segment;
+                        let t0 = span.as_ref().map(|_| Instant::now());
                         // An append failure degrades durability, not
                         // availability: the batch still applies (it was
                         // already acknowledged at enqueue), but the loss
@@ -1655,10 +1963,37 @@ fn shard_loop(
                             instruments.wal_append_errors.inc();
                             crate::log_warn!(
                                 "persist",
-                                "WAL append failed for '{}': {e}",
+                                "WAL append failed for '{}' trace_id={trace_id}: {e}",
                                 stream.name
                             );
                         }
+                        if let (Some(t0), Some((sp, _))) = (t0, &span) {
+                            obs.record_stage_since(sp, Stage::WalAppend, t0);
+                            if w.dirty() {
+                                // Joined an open commit group: settles
+                                // when the shared fsync lands.
+                                settling.push((Arc::clone(sp), Instant::now()));
+                            } else {
+                                // Synced inline (per-append fsync, or
+                                // fsync off): already settled.
+                                obs.record_stage(sp, Stage::FsyncSettle, 1);
+                            }
+                        }
+                        let seg_now = w.position().segment;
+                        if seg_now != seg_before {
+                            recorder.record(
+                                EventKind::WalRotation,
+                                trace_id,
+                                stream.handle,
+                                seg_now,
+                            );
+                        }
+                    } else if let Some((sp, _)) = &span {
+                        // No WAL: both durability stages are trivially
+                        // complete (1ns = filled-and-empty), so sampled
+                        // spans still retire with all six stages.
+                        obs.record_stage(sp, Stage::WalAppend, 1);
+                        obs.record_stage(sp, Stage::FsyncSettle, 1);
                     }
                     match &stream.backing {
                         Backing::Banked { bank, row, gen, .. } => {
@@ -1671,8 +2006,12 @@ fn shard_loop(
                                 count: count as u32,
                                 data,
                             });
+                            if let Some((sp, _)) = &span {
+                                pending_apply.push((Arc::clone(sp), Instant::now()));
+                            }
                         }
                         Backing::Slot { state } => {
+                            let t0 = span.as_ref().map(|_| Instant::now());
                             // Poison recovery, not .expect: a previous
                             // incarnation may have panicked mid-apply
                             // while holding this lock; the state holds
@@ -1683,6 +2022,10 @@ fn shard_loop(
                             // a register/unregister race replaced the
                             // stream — count it.
                             let _ = st.apply_many(&data, count);
+                            drop(st);
+                            if let (Some(t0), Some((sp, _))) = (t0, &span) {
+                                obs.record_stage_since(sp, Stage::Apply, t0);
+                            }
                         }
                     }
                     inflight.clear();
@@ -1706,6 +2049,7 @@ fn shard_loop(
                     }
                 }
                 Some(ShardMsg::Checkpoint { slots, ack }) => {
+                    recorder.record(EventKind::Checkpoint, 0, 0, slots.len() as u64);
                     // Quiesce: everything drained so far this cycle must
                     // be applied before the export, so the WAL position
                     // and the exported state describe the same boundary.
@@ -1735,6 +2079,11 @@ fn shard_loop(
         }
         flush_stage(stage, instruments);
         instruments.drain_cycles.inc();
+        // The cycle's staged bank jobs are applied: banked spans' apply
+        // stage ends here (the paper-facing estimate is now current).
+        for (sp, since) in pending_apply.drain(..) {
+            obs.record_stage_since(&sp, Stage::Apply, since);
+        }
         // Durable-ack contract: a sync barrier (and shutdown) promises
         // everything before it is applied AND — under fsync — on disk,
         // so any open WAL group commits before the acks fire. No-op
@@ -1747,12 +2096,32 @@ fn shard_loop(
                 }
             }
         }
+        // Drain-boundary publication: introspection reads these without
+        // touching the queue or the WAL writer.
+        if let Some(w) = wal.as_ref() {
+            if !w.dirty() {
+                // Whatever group the settling spans were waiting on has
+                // committed (barrier above, or inline during appends).
+                settle_spans(obs, &mut settling);
+            }
+            let pos = w.position();
+            shard_pub.wal_segment.store(pos.segment, Ordering::Relaxed);
+            shard_pub.wal_offset.store(pos.offset, Ordering::Relaxed);
+        }
         for ack in acks {
             let _ = ack.send(());
         }
         if shutdown {
             break;
         }
+    }
+}
+
+/// Complete the fsync-settle stage of every span that was waiting on a
+/// WAL group commit (the group's shared fsync just happened).
+fn settle_spans(obs: &Obs, settling: &mut Vec<(Arc<Span>, Instant)>) {
+    for (sp, since) in settling.drain(..) {
+        obs.record_stage_since(&sp, Stage::FsyncSettle, since);
     }
 }
 
@@ -2572,5 +2941,147 @@ mod tests {
         assert_eq!(c.snapshot("poisoncore/bad").unwrap().t, 0);
         // The quarantined samples surface as drops, not silence.
         assert_eq!(c.snapshot("poisoncore/bad").unwrap().dropped, 3);
+    }
+
+    #[test]
+    fn introspect_reports_shards_banks_streams_and_events() {
+        let c = Coordinator::new(2, 64, BackpressurePolicy::Block);
+        c.register("a", 2, gea()).unwrap();
+        c.register(
+            "b",
+            1,
+            AveragerSpec::True {
+                window: WindowKind::Fixed { k: 2 },
+            },
+        )
+        .unwrap();
+        for i in 0..5 {
+            c.push("a", vec![i as f64, 2.0]).unwrap();
+            c.push("b", vec![3.0]).unwrap();
+        }
+        c.sync().unwrap();
+        let r = c.introspect();
+        assert_eq!(r.sample_per_mille, c.obs().sample_per_mille());
+        assert_eq!(r.shards.len(), 2);
+        assert!(r.shards.iter().all(|s| s.worker_starts == 1));
+        assert!(
+            r.shards.iter().all(|s| s.queue_depth == 0),
+            "queues drained after sync: {:?}",
+            r.shards
+        );
+        assert_eq!(r.streams.len(), 2, "both streams reported");
+        assert_eq!(r.streams[0].name, "a", "streams sorted by name");
+        assert_ne!(r.streams[0].handle, 0);
+        assert!(!r.banks.is_empty(), "the gea stream is bank-backed");
+        assert_eq!(
+            r.banks.iter().map(|b| b.rows).sum::<u64>(),
+            1,
+            "one banked stream occupies one row"
+        );
+        let pushes = r
+            .events
+            .iter()
+            .filter(|e| e.kind == EventKind::Push)
+            .count();
+        assert_eq!(pushes, 10, "every applied batch left a push event");
+        assert!(
+            r.events.windows(2).all(|w| w[0].at_nanos <= w[1].at_nanos),
+            "merged events are time-ordered"
+        );
+        assert_eq!(
+            r.shards.iter().map(|s| s.events_recorded).sum::<u64>(),
+            r.events.len() as u64,
+            "nothing wrapped yet, so the merge saw every event"
+        );
+        // Both wire codecs carry the live report losslessly.
+        use crate::persist::codec::{Dec, Enc};
+        let mut enc = Enc::new();
+        r.encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let back = crate::obs::introspect::IntrospectReport::decode(&mut Dec::new(&bytes)).unwrap();
+        assert_eq!(back, r);
+        let back = crate::obs::introspect::IntrospectReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn traced_push_retires_spans_with_all_six_stages() {
+        let c = Coordinator::new(2, 64, BackpressurePolicy::Block);
+        c.obs().set_sample_per_mille(1000);
+        c.register("banked", 1, gea()).unwrap();
+        c.register(
+            "slot",
+            1,
+            AveragerSpec::True {
+                window: WindowKind::Fixed { k: 4 },
+            },
+        )
+        .unwrap();
+        // Drive both backing paths: the bank staging path measures apply
+        // at the drain boundary, the slot path measures it inline.
+        for (name, trace) in [("banked", 41u64), ("slot", 42u64)] {
+            let t0 = Instant::now();
+            let span = c.obs().begin_span(trace);
+            let ctx = TraceCtx {
+                trace_id: trace,
+                span: Some(Arc::clone(&span)),
+            };
+            c.push_traced(name, vec![1.0], &ctx).unwrap();
+            // The serving layer's bracketing stages, simulated here.
+            c.obs().record_stage_since(&span, Stage::Admission, t0);
+            c.obs().record_stage_since(&span, Stage::AckWrite, t0);
+            c.sync().unwrap();
+        }
+        let spans = c.obs().recent_spans(0);
+        assert_eq!(spans.len(), 2, "both spans retired: {spans:?}");
+        assert_eq!(spans[0].trace_id, 41);
+        assert_eq!(spans[1].trace_id, 42);
+        for rec in &spans {
+            for (i, &ns) in rec.stage_ns.iter().enumerate() {
+                assert!(ns > 0, "stage {i} unfilled in {rec:?}");
+            }
+        }
+        // The per-stage histograms absorbed every recorded stage.
+        for stage in Stage::ALL {
+            let h = c.metrics().histogram(&crate::obs::stage_hist_name(stage));
+            assert_eq!(h.count(), 2, "{}", stage.name());
+        }
+        assert_eq!(c.metrics().counter(names::TRACE_SPANS_SAMPLED).get(), 2);
+        assert_eq!(c.metrics().counter(names::TRACE_SPANS_COMPLETED).get(), 2);
+        // Push events carry the trace id into the flight recorder.
+        let r = c.introspect();
+        assert!(r
+            .events
+            .iter()
+            .any(|e| e.kind == EventKind::Push && e.trace_id == 41));
+        assert!(r
+            .events
+            .iter()
+            .any(|e| e.kind == EventKind::Push && e.trace_id == 42));
+        // And the retired spans ride along in the introspection report.
+        assert_eq!(r.spans.len(), 2);
+    }
+
+    #[test]
+    fn export_metrics_refreshes_observability_gauges() {
+        let c = Coordinator::new(1, 64, BackpressurePolicy::Block);
+        c.register("g", 1, gea()).unwrap();
+        for i in 0..8 {
+            c.push("g", vec![i as f64]).unwrap();
+        }
+        c.sync().unwrap();
+        let m = c.export_metrics();
+        let gauge = |name: &str| {
+            m.get(&format!("gauge.{name}"))
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| panic!("gauge {name} missing from export"))
+        };
+        assert_eq!(gauge(names::QUEUE_DEPTH_TOTAL), 0.0, "drained after sync");
+        assert_eq!(gauge(names::QUEUE_DEPTH_MAX), 0.0);
+        assert!(
+            gauge(names::FLIGHT_EVENTS) >= 8.0,
+            "flight recorder saw the pushes"
+        );
+        assert_eq!(gauge(names::BANK_ROWS), 1.0, "one live banked row");
     }
 }

@@ -49,6 +49,7 @@ pub mod wire;
 pub use v1::{err_response, ok_response, PROTOCOL_VERSION};
 pub use wire::{read_frame, read_frame_into, write_frame, write_frame_bytes, MAX_FRAME};
 
+use crate::obs::introspect::IntrospectReport;
 use crate::util::json::Json;
 
 /// Version tag of the legacy JSON codec.
@@ -293,6 +294,13 @@ pub enum Request {
     MultiSnapshot {
         streams: Vec<StreamRef>,
     },
+    /// Live introspection snapshot: per-shard queue/WAL state, bank
+    /// occupancy, per-stream health, recent flight-recorder events and
+    /// retired trace spans. The backing op of `ata top`.
+    Introspect,
+    /// Whole metrics registry rendered in Prometheus text exposition
+    /// format (the scrape payload; JSON stays on the `metrics` op).
+    MetricsProm,
 }
 
 /// Which op a request is — used to pick v2 tags and to interpret v1
@@ -316,6 +324,8 @@ pub enum OpKind {
     MergeState,
     Query,
     MultiSnapshot,
+    Introspect,
+    MetricsProm,
 }
 
 impl Request {
@@ -337,6 +347,8 @@ impl Request {
             Request::MergeState { .. } => OpKind::MergeState,
             Request::Query { .. } => OpKind::Query,
             Request::MultiSnapshot { .. } => OpKind::MultiSnapshot,
+            Request::Introspect => OpKind::Introspect,
+            Request::MetricsProm => OpKind::MetricsProm,
         }
     }
 }
@@ -415,75 +427,117 @@ pub enum Response {
     MultiStats {
         stats: Vec<StatOutcome>,
     },
+    /// `introspect` answer: the full observability snapshot.
+    Introspection {
+        report: IntrospectReport,
+    },
+    /// `metrics_prom` answer: Prometheus text exposition of the whole
+    /// metrics registry.
+    MetricsText {
+        text: String,
+    },
+}
+
+/// Pull an optional `trace_id` off a v1 JSON envelope. Wide ids travel
+/// as decimal strings (JSON numbers are f64 — u64 ids above 2^53 would
+/// silently round), but a plain number is accepted from hand-rolled
+/// peers. Absent or malformed → 0 (untraced).
+fn v1_trace(json: &Json) -> u64 {
+    match json.get("trace_id") {
+        Some(Json::Str(s)) => s.parse().unwrap_or(0),
+        Some(other) => other.as_u64().unwrap_or(0),
+        None => 0,
+    }
+}
+
+/// Stamp a non-zero `trace_id` onto a v1 JSON envelope (request or
+/// response). Zero means untraced and stays off the wire, so legacy
+/// peers see byte-identical frames.
+fn v1_stamp_trace(json: &mut Json, trace: u64) {
+    if trace != 0 {
+        if let Json::Obj(map) = json {
+            map.insert("trace_id".to_string(), Json::Str(trace.to_string()));
+        }
+    }
 }
 
 /// Encode a request for the negotiated codec into `out` (cleared
 /// first; pooled buffers keep their allocation). `seq` is ignored by
-/// v1, which has no pipelining ids.
+/// v1, which has no pipelining ids. `trace` is the request's trace id
+/// (0 = untraced): a v2 header field, a `trace_id` envelope key on v1.
 pub fn encode_request(
     wire: Wire,
     seq: u64,
+    trace: u64,
     req: &Request,
     out: &mut Vec<u8>,
 ) -> Result<(), String> {
     match wire {
         Wire::V1Json => {
-            let json = v1::request_to_json(req)?;
+            let mut json = v1::request_to_json(req)?;
+            v1_stamp_trace(&mut json, trace);
             out.clear();
             out.extend_from_slice(json.encode().as_bytes());
             Ok(())
         }
-        Wire::V2Binary => v2::encode_request(seq, req, out),
+        Wire::V2Binary => v2::encode_request(seq, trace, req, out),
     }
 }
 
-/// Decode a request payload; v1 requests report `seq = 0`.
-pub fn decode_request(wire: Wire, payload: &[u8]) -> Result<(u64, Request), String> {
+/// Decode a request payload into `(seq, trace, request)`; v1 requests
+/// report `seq = 0`, and either codec reports `trace = 0` when the peer
+/// sent no trace id (the server mints one at admission in that case).
+pub fn decode_request(wire: Wire, payload: &[u8]) -> Result<(u64, u64, Request), String> {
     match wire {
         Wire::V1Json => {
             let text =
                 std::str::from_utf8(payload).map_err(|_| "request is not UTF-8".to_string())?;
             let json = Json::parse(text).map_err(|e| e.to_string())?;
-            Ok((0, v1::request_from_json(&json)?))
+            Ok((0, v1_trace(&json), v1::request_from_json(&json)?))
         }
         Wire::V2Binary => v2::decode_request(payload),
     }
 }
 
 /// Encode a response for the negotiated codec into `out` (cleared
-/// first). `seq` must echo the request's id (ignored by v1).
+/// first). `seq` must echo the request's id (ignored by v1); `trace`
+/// must echo the request's trace id so clients can correlate acks with
+/// traces without bookkeeping.
 pub fn encode_response(
     wire: Wire,
     seq: u64,
+    trace: u64,
     resp: &Response,
     out: &mut Vec<u8>,
 ) -> Result<(), String> {
     match wire {
         Wire::V1Json => {
-            let json = v1::response_to_json(resp);
+            let mut json = v1::response_to_json(resp);
+            v1_stamp_trace(&mut json, trace);
             out.clear();
             out.extend_from_slice(json.encode().as_bytes());
             Ok(())
         }
-        Wire::V2Binary => v2::encode_response(seq, resp, out),
+        Wire::V2Binary => v2::encode_response(seq, trace, resp, out),
     }
 }
 
-/// Decode a response payload. `kind` names the op the response answers:
-/// v1 responses carry no op marker at all, and a v2 success frame's op
-/// tag is cross-checked against it (a mismatch means the pipeline
-/// bookkeeping is broken). v1 responses report `seq = 0`.
+/// Decode a response payload into `(seq, trace, response)`. `kind`
+/// names the op the response answers: v1 responses carry no op marker
+/// at all, and a v2 success frame's op tag is cross-checked against it
+/// (a mismatch means the pipeline bookkeeping is broken). v1 responses
+/// report `seq = 0`.
 pub fn decode_response(
     wire: Wire,
     kind: OpKind,
     payload: &[u8],
-) -> Result<(u64, Response), String> {
+) -> Result<(u64, u64, Response), String> {
     match wire {
         Wire::V1Json => {
             let text =
                 std::str::from_utf8(payload).map_err(|_| "response is not UTF-8".to_string())?;
             let json = Json::parse(text).map_err(|e| e.to_string())?;
-            Ok((0, v1::response_from_json(kind, &json)?))
+            Ok((0, v1_trace(&json), v1::response_from_json(kind, &json)?))
         }
         Wire::V2Binary => v2::decode_response(kind, payload),
     }
@@ -512,13 +566,94 @@ mod tests {
             // the client thinks it is waiting on.
             for kind in [OpKind::Push, OpKind::MultiPush, OpKind::Snapshot, OpKind::Sync] {
                 let mut buf = Vec::new();
-                encode_response(wire, 7, &resp, &mut buf).unwrap();
-                let (seq, got) = decode_response(wire, kind, &buf).unwrap();
+                encode_response(wire, 7, 0, &resp, &mut buf).unwrap();
+                let (seq, trace, got) = decode_response(wire, kind, &buf).unwrap();
                 if wire == Wire::V2Binary {
                     assert_eq!(seq, 7);
                 }
+                assert_eq!(trace, 0, "untraced stays untraced");
                 assert_eq!(got, resp, "{wire:?}/{kind:?}");
             }
+        }
+    }
+
+    #[test]
+    fn trace_ids_ride_both_codecs_and_default_to_zero() {
+        // Wide ids (> 2^53) must survive v1's f64 JSON numbers — they
+        // travel as decimal strings.
+        let trace = u64::MAX - 12345;
+        let req = Request::Push {
+            stream: StreamRef::Name("w".to_string()),
+            data: vec![1.0, 2.0],
+        };
+        let resp = Response::Pushed { accepted: true };
+        for wire in [Wire::V1Json, Wire::V2Binary] {
+            let mut buf = Vec::new();
+            encode_request(wire, 3, trace, &req, &mut buf).unwrap();
+            let (_, got_trace, got_req) = decode_request(wire, &buf).unwrap();
+            assert_eq!(got_trace, trace, "{wire:?}");
+            assert_eq!(got_req, req, "{wire:?}");
+
+            encode_response(wire, 3, trace, &resp, &mut buf).unwrap();
+            let (_, got_trace, got_resp) = decode_response(wire, OpKind::Push, &buf).unwrap();
+            assert_eq!(got_trace, trace, "{wire:?}");
+            assert_eq!(got_resp, resp, "{wire:?}");
+
+            // trace = 0 means untraced: v1 must not even emit the key,
+            // so legacy peers see byte-identical frames.
+            encode_request(wire, 3, 0, &req, &mut buf).unwrap();
+            if wire == Wire::V1Json {
+                assert!(!String::from_utf8_lossy(&buf).contains("trace_id"));
+            }
+            let (_, got_trace, _) = decode_request(wire, &buf).unwrap();
+            assert_eq!(got_trace, 0);
+        }
+    }
+
+    #[test]
+    fn introspect_and_metrics_prom_roundtrip_on_both_codecs() {
+        for wire in [Wire::V1Json, Wire::V2Binary] {
+            for req in [Request::Introspect, Request::MetricsProm] {
+                let mut buf = Vec::new();
+                encode_request(wire, 11, 0, &req, &mut buf).unwrap();
+                let (_, _, got) = decode_request(wire, &buf).unwrap();
+                assert_eq!(got, req, "{wire:?}");
+            }
+            let resp = Response::MetricsText {
+                text: "# TYPE ata_pushes_total counter\nata_pushes_total 7\n".to_string(),
+            };
+            let mut buf = Vec::new();
+            encode_response(wire, 11, 0, &resp, &mut buf).unwrap();
+            let (_, _, got) = decode_response(wire, OpKind::MetricsProm, &buf).unwrap();
+            assert_eq!(got, resp, "{wire:?}");
+
+            let resp = Response::Introspection {
+                report: IntrospectReport {
+                    sample_per_mille: 10,
+                    shards: vec![crate::obs::introspect::ShardReport {
+                        shard: 0,
+                        queue_depth: 2,
+                        worker_starts: 1,
+                        wal_segment: 3,
+                        wal_offset: 4096,
+                        events_recorded: 17,
+                    }],
+                    banks: Vec::new(),
+                    streams: vec![crate::obs::introspect::StreamReport {
+                        name: "w".to_string(),
+                        handle: u64::MAX - 2,
+                        dropped: 0,
+                        strikes: 0,
+                        poisoned: false,
+                    }],
+                    events: Vec::new(),
+                    spans: Vec::new(),
+                },
+            };
+            let mut buf = Vec::new();
+            encode_response(wire, 12, 0, &resp, &mut buf).unwrap();
+            let (_, _, got) = decode_response(wire, OpKind::Introspect, &buf).unwrap();
+            assert_eq!(got, resp, "{wire:?}");
         }
     }
 

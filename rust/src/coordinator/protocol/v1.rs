@@ -15,6 +15,7 @@
 //! wire format).
 
 use super::{OpKind, Request, Response, StatEntry, StatOutcome, StreamInfo, StreamRef};
+use crate::obs::introspect::IntrospectReport;
 use crate::persist::codec;
 use crate::util::json::Json;
 
@@ -146,6 +147,8 @@ pub fn request_to_json(req: &Request) -> Result<Json, String> {
                 ("streams", Json::Arr(names)),
             ]
         }
+        Request::Introspect => vec![("op", Json::Str("introspect".into()))],
+        Request::MetricsProm => vec![("op", Json::Str("metrics_prom".into()))],
     };
     fields.push(("v", Json::Num(PROTOCOL_VERSION as f64)));
     Ok(Json::obj(fields))
@@ -154,14 +157,20 @@ pub fn request_to_json(req: &Request) -> Result<Json, String> {
 /// Borrowed fast-path builder for the hot `push_many` op: the envelope
 /// straight from the caller's slice, skipping the owned [`Request`]
 /// intermediate. Identical to encoding `Request::PushMany` by name.
-pub fn push_many_to_json(stream: &str, count: usize, data: &[f64]) -> Json {
-    Json::obj(vec![
+/// A nonzero `trace` rides along as the optional `trace_id` key; zero
+/// keeps the envelope byte-identical to pre-tracing clients.
+pub fn push_many_to_json(stream: &str, count: usize, data: &[f64], trace: u64) -> Json {
+    let mut fields = vec![
         ("op", Json::Str("push_many".into())),
         ("stream", Json::Str(stream.to_string())),
         ("count", Json::Num(count as f64)),
         ("data", Json::nums(data)),
         ("v", Json::Num(PROTOCOL_VERSION as f64)),
-    ])
+    ];
+    if trace != 0 {
+        fields.push(("trace_id", Json::Str(trace.to_string())));
+    }
+    Json::obj(fields)
 }
 
 /// Decode a legacy JSON request envelope.
@@ -295,6 +304,8 @@ pub fn request_from_json(j: &Json) -> Result<Request, String> {
                 })
                 .collect::<Result<Vec<_>, _>>()?,
         }),
+        "introspect" => Ok(Request::Introspect),
+        "metrics_prom" => Ok(Request::MetricsProm),
         other => Err(format!("unknown op '{other}'")),
     }
 }
@@ -465,6 +476,13 @@ pub fn response_to_json(resp: &Response) -> Json {
                     .collect(),
             ),
         )]),
+        // The report nests under its own key: its field names
+        // ("streams", "sample_per_mille", ...) must not collide with
+        // envelope-level conventions other ops established.
+        Response::Introspection { report } => {
+            ok_response(vec![("introspect", report.to_json())])
+        }
+        Response::MetricsText { text } => ok_response(vec![("text", Json::Str(text.clone()))]),
     }
 }
 
@@ -640,6 +658,19 @@ pub fn response_from_json(kind: OpKind, j: &Json) -> Result<Response, String> {
                 })
                 .collect::<Result<Vec<_>, _>>()?,
         }),
+        OpKind::Introspect => Ok(Response::Introspection {
+            report: IntrospectReport::from_json(
+                j.get("introspect")
+                    .ok_or("introspect response missing 'introspect'")?,
+            )?,
+        }),
+        OpKind::MetricsProm => Ok(Response::MetricsText {
+            text: j
+                .get("text")
+                .and_then(Json::as_str)
+                .ok_or("metrics_prom response missing 'text'")?
+                .to_string(),
+        }),
     }
 }
 
@@ -693,6 +724,8 @@ mod tests {
             Request::MultiSnapshot {
                 streams: vec![nref("a"), nref("b")],
             },
+            Request::Introspect,
+            Request::MetricsProm,
         ];
         for r in reqs {
             let j = request_to_json(&r).unwrap();
@@ -709,7 +742,7 @@ mod tests {
     #[test]
     fn borrowed_push_many_builder_matches_owned_encoding() {
         let data = vec![1.0, 2.0, 3.0, 4.0];
-        let fast = push_many_to_json("w", 2, &data);
+        let fast = push_many_to_json("w", 2, &data, 0);
         let owned = request_to_json(&Request::PushMany {
             stream: nref("w"),
             count: 2,
@@ -717,6 +750,16 @@ mod tests {
         })
         .unwrap();
         assert_eq!(fast, owned);
+
+        // A nonzero trace rides the optional trace_id key as a decimal
+        // string; zero leaves the envelope byte-identical to the owned
+        // encoding above.
+        let traced = push_many_to_json("w", 2, &data, u64::MAX - 3);
+        assert_eq!(
+            traced.get("trace_id").and_then(Json::as_str),
+            Some((u64::MAX - 3).to_string().as_str())
+        );
+        assert!(fast.get("trace_id").is_none());
     }
 
     #[test]
@@ -896,6 +939,47 @@ mod tests {
         };
         let j = response_to_json(&resp);
         assert_eq!(response_from_json(OpKind::MultiSnapshot, &j).unwrap(), resp);
+    }
+
+    #[test]
+    fn introspection_nests_under_its_own_key_and_roundtrips() {
+        let resp = Response::Introspection {
+            report: IntrospectReport {
+                sample_per_mille: 10,
+                shards: vec![crate::obs::introspect::ShardReport {
+                    shard: 0,
+                    queue_depth: 3,
+                    worker_starts: 1,
+                    wal_segment: 2,
+                    wal_offset: 4096,
+                    events_recorded: 11,
+                }],
+                banks: Vec::new(),
+                streams: vec![crate::obs::introspect::StreamReport {
+                    name: "w".into(),
+                    // Above 2^53: must survive the JSON envelope.
+                    handle: (1u64 << 60) | 77,
+                    dropped: 1,
+                    strikes: 0,
+                    poisoned: false,
+                }],
+                events: Vec::new(),
+                spans: Vec::new(),
+            },
+        };
+        let j = response_to_json(&resp);
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        // Report fields stay off the envelope top level ("streams" is
+        // the list op's key and must not be shadowed).
+        assert!(j.get("streams").is_none());
+        assert!(j.get("introspect").is_some());
+        assert_eq!(response_from_json(OpKind::Introspect, &j).unwrap(), resp);
+
+        let resp = Response::MetricsText {
+            text: "# TYPE ata_pushes_total counter\nata_pushes_total 7\n".into(),
+        };
+        let j = response_to_json(&resp);
+        assert_eq!(response_from_json(OpKind::MetricsProm, &j).unwrap(), resp);
     }
 
     #[test]

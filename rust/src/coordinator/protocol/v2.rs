@@ -8,19 +8,24 @@
 //! ## Request frame payload
 //!
 //! ```text
-//! [seq: u64] [op: u8] [op-specific fields]
+//! [seq: u64] [trace: u64] [op: u8] [op-specific fields]
 //! ```
 //!
 //! `seq` is the client-chosen pipelining id; the matching response
-//! echoes it. Hot ops carry the `u64` stream handle `register` /
-//! `resolve` returned instead of a name.
+//! echoes it. `trace` is the request's trace id (0 = untraced; the
+//! server mints one at admission so every request is correlatable).
+//! Hot ops carry the `u64` stream handle `register` / `resolve`
+//! returned instead of a name.
 //!
 //! ## Response frame payload
 //!
 //! ```text
-//! [seq: u64] [status: u8]            status 1 (error): [message: str]
-//!                                    status 0 (ok):    [op: u8] [body]
+//! [seq: u64] [trace: u64] [status: u8]   status 1 (error): [message: str]
+//!                                        status 0 (ok):    [op: u8] [body]
 //! ```
+//!
+//! The echoed trace id lets a client tie an ack to a trace without any
+//! bookkeeping of its own (and debug tooling grep a tcpdump by id).
 //!
 //! The op tag on success frames lets a pipelined client cross-check
 //! that the response it matched by id answers the op it recorded.
@@ -34,6 +39,7 @@ use super::{
     MultiOutcome, MultiPushEntry, OpKind, Request, Response, StatEntry, StatOutcome, StreamInfo,
     StreamRef,
 };
+use crate::obs::introspect::IntrospectReport;
 use crate::persist::codec::{Dec, Enc};
 use crate::util::json::Json;
 
@@ -54,6 +60,8 @@ const OP_RESTORE: u8 = 13;
 const OP_MERGE_STATE: u8 = 14;
 const OP_QUERY: u8 = 15;
 const OP_MULTI_SNAPSHOT: u8 = 16;
+const OP_INTROSPECT: u8 = 17;
+const OP_METRICS_PROM: u8 = 18;
 
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
@@ -80,6 +88,19 @@ fn op_tag(kind: OpKind) -> u8 {
         OpKind::MergeState => OP_MERGE_STATE,
         OpKind::Query => OP_QUERY,
         OpKind::MultiSnapshot => OP_MULTI_SNAPSHOT,
+        OpKind::Introspect => OP_INTROSPECT,
+        OpKind::MetricsProm => OP_METRICS_PROM,
+    }
+}
+
+/// Best-effort trace id of a v2 frame whose body failed to decode: the
+/// trace rides at a fixed offset (bytes 8..16 of both request and
+/// response payloads), so even a malformed frame's error response can
+/// echo it. Too-short frames report 0 (untraced).
+pub fn peek_trace(payload: &[u8]) -> u64 {
+    match payload.get(8..16) {
+        Some(b) => u64::from_le_bytes(b.try_into().expect("8-byte slice")),
+        None => 0,
     }
 }
 
@@ -138,16 +159,19 @@ fn handle_of(r: &StreamRef) -> Result<u64, String> {
 
 /// Encode a request into `out` (cleared first; the allocation is
 /// reused, so pooled buffers stay pooled).
-pub fn encode_request(seq: u64, req: &Request, out: &mut Vec<u8>) -> Result<(), String> {
+pub fn encode_request(seq: u64, trace: u64, req: &Request, out: &mut Vec<u8>) -> Result<(), String> {
     let mut e = Enc::with_buf(std::mem::take(out));
     e.put_u64(seq);
+    e.put_u64(trace);
     e.put_u8(op_tag(req.kind()));
     match req {
         Request::Ping
         | Request::Sync
         | Request::Metrics
         | Request::ListStreams
-        | Request::Checkpoint => {}
+        | Request::Checkpoint
+        | Request::Introspect
+        | Request::MetricsProm => {}
         Request::Register { stream, dim, spec } => {
             e.put_str(stream);
             e.put_u32(u32_field("dim", *dim)?);
@@ -213,6 +237,7 @@ pub fn encode_request(seq: u64, req: &Request, out: &mut Vec<u8>) -> Result<(), 
 /// `Request::PushMany { stream: Handle(handle), .. }`.
 pub fn encode_push_many(
     seq: u64,
+    trace: u64,
     handle: u64,
     count: usize,
     data: &[f64],
@@ -222,6 +247,7 @@ pub fn encode_push_many(
     let len = u32_field("batch length", data.len())?;
     let mut e = Enc::with_buf(std::mem::take(out));
     e.put_u64(seq);
+    e.put_u64(trace);
     e.put_u8(OP_PUSH_MANY);
     e.put_u64(handle);
     e.put_u32(count);
@@ -236,12 +262,14 @@ pub fn encode_push_many(
 /// encoding the equivalent [`Request::MultiPush`].
 pub fn encode_multi_push(
     seq: u64,
+    trace: u64,
     entries: &[(u64, usize, &[f64])],
     out: &mut Vec<u8>,
 ) -> Result<(), String> {
     let n = u32_field("entry count", entries.len())?;
     let mut e = Enc::with_buf(std::mem::take(out));
     e.put_u64(seq);
+    e.put_u64(trace);
     e.put_u8(OP_MULTI_PUSH);
     e.put_u32(n);
     for (handle, count, data) in entries {
@@ -254,10 +282,11 @@ pub fn encode_multi_push(
     Ok(())
 }
 
-/// Decode a request payload into `(seq, request)`.
-pub fn decode_request(payload: &[u8]) -> Result<(u64, Request), String> {
+/// Decode a request payload into `(seq, trace, request)`.
+pub fn decode_request(payload: &[u8]) -> Result<(u64, u64, Request), String> {
     let mut d = Dec::new(payload);
     let seq = d.get_u64()?;
+    let trace = d.get_u64()?;
     let op = d.get_u8()?;
     let req = match op {
         OP_PING => Request::Ping,
@@ -338,6 +367,8 @@ pub fn decode_request(payload: &[u8]) -> Result<(u64, Request), String> {
             }
             Request::MultiSnapshot { streams }
         }
+        OP_INTROSPECT => Request::Introspect,
+        OP_METRICS_PROM => Request::MetricsProm,
         other => return Err(format!("unknown v2 op tag {other}")),
     };
     if d.remaining() != 0 {
@@ -346,13 +377,20 @@ pub fn decode_request(payload: &[u8]) -> Result<(u64, Request), String> {
             d.remaining()
         ));
     }
-    Ok((seq, req))
+    Ok((seq, trace, req))
 }
 
-/// Encode a response into `out` (cleared first).
-pub fn encode_response(seq: u64, resp: &Response, out: &mut Vec<u8>) -> Result<(), String> {
+/// Encode a response into `out` (cleared first). `trace` echoes the
+/// request's trace id.
+pub fn encode_response(
+    seq: u64,
+    trace: u64,
+    resp: &Response,
+    out: &mut Vec<u8>,
+) -> Result<(), String> {
     let mut e = Enc::with_buf(std::mem::take(out));
     e.put_u64(seq);
+    e.put_u64(trace);
     match resp {
         Response::Err(msg) => {
             e.put_u8(STATUS_ERR);
@@ -496,6 +534,14 @@ pub fn encode_response(seq: u64, resp: &Response, out: &mut Vec<u8>) -> Result<(
                         }
                     }
                 }
+                Response::Introspection { report } => {
+                    e.put_u8(OP_INTROSPECT);
+                    report.encode(&mut e);
+                }
+                Response::MetricsText { text } => {
+                    e.put_u8(OP_METRICS_PROM);
+                    e.put_str(text);
+                }
             }
         }
     }
@@ -503,12 +549,14 @@ pub fn encode_response(seq: u64, resp: &Response, out: &mut Vec<u8>) -> Result<(
     Ok(())
 }
 
-/// Decode a response payload into `(seq, response)`, cross-checking a
-/// success frame's op tag against the op `kind` the caller recorded for
-/// that seq (error frames carry no tag and decode for any kind).
-pub fn decode_response(kind: OpKind, payload: &[u8]) -> Result<(u64, Response), String> {
+/// Decode a response payload into `(seq, trace, response)`,
+/// cross-checking a success frame's op tag against the op `kind` the
+/// caller recorded for that seq (error frames carry no tag and decode
+/// for any kind).
+pub fn decode_response(kind: OpKind, payload: &[u8]) -> Result<(u64, u64, Response), String> {
     let mut d = Dec::new(payload);
     let seq = d.get_u64()?;
+    let trace = d.get_u64()?;
     let status = d.get_u8()?;
     if status == STATUS_ERR || status == STATUS_OVERLOADED {
         let msg = d.get_str()?;
@@ -523,7 +571,7 @@ pub fn decode_response(kind: OpKind, payload: &[u8]) -> Result<(u64, Response), 
         } else {
             Response::Err(msg)
         };
-        return Ok((seq, resp));
+        return Ok((seq, trace, resp));
     }
     if status != STATUS_OK {
         return Err(format!("unknown response status {status}"));
@@ -647,6 +695,10 @@ pub fn decode_response(kind: OpKind, payload: &[u8]) -> Result<(u64, Response), 
             }
             Response::MultiStats { stats }
         }
+        OP_INTROSPECT => Response::Introspection {
+            report: IntrospectReport::decode(&mut d)?,
+        },
+        OP_METRICS_PROM => Response::MetricsText { text: d.get_str()? },
         other => return Err(format!("unknown v2 response op tag {other}")),
     };
     if d.remaining() != 0 {
@@ -655,7 +707,7 @@ pub fn decode_response(kind: OpKind, payload: &[u8]) -> Result<(u64, Response), 
             d.remaining()
         ));
     }
-    Ok((seq, resp))
+    Ok((seq, trace, resp))
 }
 
 #[cfg(test)]
@@ -724,13 +776,18 @@ mod tests {
             Request::MultiSnapshot {
                 streams: vec![href(1), href(u64::MAX), href(3)],
             },
+            Request::Introspect,
+            Request::MetricsProm,
         ];
         for (i, r) in reqs.into_iter().enumerate() {
             let seq = 1000 + i as u64;
+            let trace = u64::MAX - i as u64;
             let mut buf = Vec::new();
-            encode_request(seq, &r, &mut buf).unwrap();
-            let (got_seq, back) = decode_request(&buf).unwrap();
+            encode_request(seq, trace, &r, &mut buf).unwrap();
+            let (got_seq, got_trace, back) = decode_request(&buf).unwrap();
             assert_eq!(got_seq, seq);
+            assert_eq!(got_trace, trace);
+            assert_eq!(peek_trace(&buf), trace);
             assert_eq!(back, r);
         }
     }
@@ -858,33 +915,82 @@ mod tests {
                     ],
                 },
             ),
+            (
+                OpKind::Introspect,
+                Response::Introspection {
+                    report: IntrospectReport {
+                        sample_per_mille: 1000,
+                        shards: vec![crate::obs::introspect::ShardReport {
+                            shard: 1,
+                            queue_depth: 0,
+                            worker_starts: 2,
+                            wal_segment: 5,
+                            wal_offset: 77,
+                            events_recorded: 9,
+                        }],
+                        banks: vec![crate::obs::introspect::BankReport {
+                            index: 0,
+                            dim: 4,
+                            rows: 2,
+                            row_floats: 12,
+                        }],
+                        streams: vec![crate::obs::introspect::StreamReport {
+                            name: "w".into(),
+                            handle: u64::MAX - 1,
+                            dropped: 3,
+                            strikes: 1,
+                            poisoned: false,
+                        }],
+                        events: Vec::new(),
+                        spans: Vec::new(),
+                    },
+                },
+            ),
+            (
+                OpKind::MetricsProm,
+                Response::MetricsText {
+                    text: "# TYPE ata_pushes_total counter\nata_pushes_total 7\n".into(),
+                },
+            ),
         ];
         for (kind, resp) in cases {
             let mut buf = Vec::new();
-            encode_response(5, &resp, &mut buf).unwrap();
-            let (seq, back) = decode_response(kind, &buf).unwrap();
+            encode_response(5, 99, &resp, &mut buf).unwrap();
+            let (seq, trace, back) = decode_response(kind, &buf).unwrap();
             assert_eq!(seq, 5);
+            assert_eq!(trace, 99);
+            assert_eq!(peek_trace(&buf), 99);
             assert_eq!(back, resp);
         }
-        // Error frames decode under any kind.
+        // Error frames decode under any kind, echoing the trace.
         let mut buf = Vec::new();
-        encode_response(9, &Response::Err("boom".into()), &mut buf).unwrap();
+        encode_response(9, 42, &Response::Err("boom".into()), &mut buf).unwrap();
         for kind in [OpKind::Ping, OpKind::Snapshot, OpKind::MultiPush] {
             assert_eq!(
                 decode_response(kind, &buf).unwrap(),
-                (9, Response::Err("boom".into()))
+                (9, 42, Response::Err("boom".into()))
             );
         }
+    }
+
+    #[test]
+    fn peek_trace_tolerates_short_frames() {
+        assert_eq!(peek_trace(&[]), 0);
+        assert_eq!(peek_trace(&[0u8; 15]), 0);
+        let mut buf = Vec::new();
+        encode_request(1, 0xABCD, &Request::Ping, &mut buf).unwrap();
+        assert_eq!(peek_trace(&buf), 0xABCD);
     }
 
     #[test]
     fn borrowed_fast_paths_are_byte_identical_to_owned_encoding() {
         let data = vec![1.5, -2.5, 3.25, -4.75];
         let mut fast = Vec::new();
-        encode_push_many(42, 7, 2, &data, &mut fast).unwrap();
+        encode_push_many(42, 17, 7, 2, &data, &mut fast).unwrap();
         let mut owned = Vec::new();
         encode_request(
             42,
+            17,
             &Request::PushMany {
                 stream: href(7),
                 count: 2,
@@ -896,9 +1002,10 @@ mod tests {
         assert_eq!(fast, owned);
 
         let entries = [(1u64, 1usize, &data[..2]), (2u64, 2usize, &data[..])];
-        encode_multi_push(43, &entries, &mut fast).unwrap();
+        encode_multi_push(43, 18, &entries, &mut fast).unwrap();
         encode_request(
             43,
+            18,
             &Request::MultiPush {
                 entries: entries
                     .iter()
@@ -920,6 +1027,7 @@ mod tests {
         let mut buf = Vec::new();
         let err = encode_request(
             1,
+            0,
             &Request::Push {
                 stream: StreamRef::Name("w".into()),
                 data: vec![1.0],
@@ -933,13 +1041,14 @@ mod tests {
     #[test]
     fn trailing_and_truncated_bytes_are_errors() {
         let mut buf = Vec::new();
-        encode_request(3, &Request::Ping, &mut buf).unwrap();
+        encode_request(3, 0, &Request::Ping, &mut buf).unwrap();
         let mut padded = buf.clone();
         padded.push(0);
         assert!(decode_request(&padded).is_err());
         // Every truncation of a data-bearing frame errors, never panics.
         encode_request(
             4,
+            0,
             &Request::PushMany {
                 stream: href(1),
                 count: 2,
@@ -956,7 +1065,7 @@ mod tests {
     #[test]
     fn op_tag_mismatch_is_a_pipeline_error() {
         let mut buf = Vec::new();
-        encode_response(2, &Response::Pong, &mut buf).unwrap();
+        encode_response(2, 0, &Response::Pong, &mut buf).unwrap();
         let err = decode_response(OpKind::Snapshot, &buf).unwrap_err();
         assert!(err.contains("pipeline"), "{err}");
     }
@@ -967,6 +1076,7 @@ mod tests {
         // must fail on exhausted input without a giant pre-reservation.
         let mut e = Enc::new();
         e.put_u64(1);
+        e.put_u64(0); // trace
         e.put_u8(OP_MULTI_PUSH);
         e.put_u32(u32::MAX);
         e.put_u64(7); // one partial entry

@@ -10,14 +10,15 @@
 //! latency, while v1 connections keep the strict request→response
 //! order legacy clients match positionally.
 
-use super::core::{Coordinator, PushOutcome};
+use super::core::{Coordinator, PushOutcome, TraceCtx};
 use super::protocol::{
-    self, v1, wire, ProtocolChoice, Request, Response, StatEntry, StatOutcome, StreamInfo,
+    self, v1, v2, wire, ProtocolChoice, Request, Response, StatEntry, StatOutcome, StreamInfo,
     StreamRef, Wire, OVERLOAD_MARKER,
 };
 use crate::averagers::AveragerSpec;
 use crate::config::ServiceConfig;
 use crate::metrics::{names, Counter};
+use crate::obs::{self, Stage};
 use crate::testkit::chaos;
 use crate::util::json::Json;
 use crate::util::pool::{BufferPool, ThreadPool};
@@ -363,16 +364,18 @@ fn send_frame(writer: &Mutex<TcpStream>, payload: &[u8]) -> std::io::Result<()> 
 /// that exceeds `MAX_FRAME` is replaced by a structured error frame
 /// (same seq) — writing it would kill the peer's read loop. Returns
 /// `false` when the socket is gone.
+#[allow(clippy::too_many_arguments)]
 fn send_response(
     frames_out: &Counter,
     oversized: &Counter,
     writer: &Mutex<TcpStream>,
     wp: Wire,
     seq: u64,
+    trace: u64,
     resp: &Response,
     buf: &mut Vec<u8>,
 ) -> bool {
-    let encoded = protocol::encode_response(wp, seq, resp, buf);
+    let encoded = protocol::encode_response(wp, seq, trace, resp, buf);
     let too_big = buf.len() > wire::MAX_FRAME;
     if encoded.is_err() || too_big {
         if too_big {
@@ -386,7 +389,7 @@ fn send_response(
                 wire::MAX_FRAME
             ),
         };
-        if protocol::encode_response(wp, seq, &Response::Err(msg), buf).is_err() {
+        if protocol::encode_response(wp, seq, trace, &Response::Err(msg), buf).is_err() {
             return false;
         }
     }
@@ -557,6 +560,10 @@ fn handle_connection(mut reader: TcpStream, shared: &Arc<ConnShared>) {
             }
         }
         pending_first = false;
+        // Admission clock: read once per frame (negligible against the
+        // socket syscall) so a sampled span can charge decode + routing
+        // to the admission stage.
+        let t_admitted = Instant::now();
         // Chaos: a reset server drops the connection after reading a
         // frame and before answering it — the worst spot for a client
         // (it cannot tell whether the request was applied).
@@ -565,7 +572,28 @@ fn handle_connection(mut reader: TcpStream, shared: &Arc<ConnShared>) {
             break;
         }
         match protocol::decode_request(wp, &rbuf) {
-            Ok((seq, req)) => {
+            Ok((seq, mut trace, req)) => {
+                // Request tracing: push-family ops get a trace id —
+                // the client's, or one minted here at admission for
+                // legacy/v1 peers — echoed back in the ack. Span
+                // recording stays behind the sampler (one relaxed
+                // load when tracing is disarmed).
+                let obs = shared.coordinator.obs();
+                let mut ctx = TraceCtx::none();
+                if matches!(
+                    req,
+                    Request::Push { .. } | Request::PushMany { .. } | Request::MultiPush { .. }
+                ) {
+                    if trace == 0 {
+                        trace = obs::mint_trace_id();
+                    }
+                    ctx.trace_id = trace;
+                    if obs.should_sample() {
+                        let span = obs.begin_span(trace);
+                        obs.record_stage_since(&span, Stage::Admission, t_admitted);
+                        ctx.span = Some(span);
+                    }
+                }
                 // v2 barrier ops complete on the side pool so pipelined
                 // pushes behind them are answered immediately; v1 has
                 // no ids, so everything stays strictly in order.
@@ -583,7 +611,10 @@ fn handle_connection(mut reader: TcpStream, shared: &Arc<ConnShared>) {
                     let overloaded = Arc::clone(&shared.overloaded);
                     let w = Arc::clone(&writer);
                     shared.slow.lock().expect("slow pool").execute(move || {
-                        let resp = overload_map(dispatch(req, &coordinator), &overloaded);
+                        let resp = overload_map(
+                            dispatch(req, &coordinator, &TraceCtx::none()),
+                            &overloaded,
+                        );
                         let mut buf = pool.take_empty();
                         let _ = send_response(
                             &frames_out,
@@ -591,22 +622,52 @@ fn handle_connection(mut reader: TcpStream, shared: &Arc<ConnShared>) {
                             &w,
                             wp,
                             seq,
+                            trace,
                             &resp,
                             buf.as_mut_vec(),
                         );
                     });
                 } else {
-                    let resp =
-                        overload_map(dispatch(req, &shared.coordinator), &shared.overloaded);
-                    if !send_response(
+                    let resp = overload_map(
+                        dispatch(req, &shared.coordinator, &ctx),
+                        &shared.overloaded,
+                    );
+                    // Traced-scope failures carry their trace id as a
+                    // structured field: grep `trace_id=<id>` walks the
+                    // request from this line into span records and the
+                    // flight-recorder ring.
+                    if ctx.trace_id != 0 {
+                        match &resp {
+                            Response::Err(e) => crate::log_kv!(
+                                crate::util::logging::Level::Debug,
+                                "server",
+                                { "trace_id" => ctx.trace_id, "peer" => peer },
+                                "push rejected: {e}"
+                            ),
+                            Response::Overloaded(_) => crate::log_kv!(
+                                crate::util::logging::Level::Debug,
+                                "server",
+                                { "trace_id" => ctx.trace_id, "peer" => peer },
+                                "push shed (overloaded)"
+                            ),
+                            _ => {}
+                        }
+                    }
+                    let t_ack = ctx.span.as_ref().map(|_| Instant::now());
+                    let sent = send_response(
                         &shared.frames_out,
                         &shared.oversized,
                         &writer,
                         wp,
                         seq,
+                        trace,
                         &resp,
                         wbuf.as_mut_vec(),
-                    ) {
+                    );
+                    if let (Some(span), Some(t0)) = (ctx.span.as_ref(), t_ack) {
+                        obs.record_stage_since(span, Stage::AckWrite, t0);
+                    }
+                    if !sent {
                         break;
                     }
                 }
@@ -615,18 +676,29 @@ fn handle_connection(mut reader: TcpStream, shared: &Arc<ConnShared>) {
                 // Framing is intact (the frame layer delivered a whole
                 // payload), so a garbage request gets a structured
                 // error and the connection lives on. Under v2 the seq
-                // is echoed when the header was readable.
-                let seq = if wp == Wire::V2Binary && rbuf.len() >= 8 {
-                    u64::from_le_bytes(rbuf[..8].try_into().expect("8 bytes"))
+                // (and trace id — both ride at fixed offsets) is echoed
+                // when the header was readable.
+                let (seq, trace) = if wp == Wire::V2Binary && rbuf.len() >= 8 {
+                    (
+                        u64::from_le_bytes(rbuf[..8].try_into().expect("8 bytes")),
+                        v2::peek_trace(&rbuf),
+                    )
                 } else {
-                    0
+                    (0, 0)
                 };
+                crate::log_kv!(
+                    crate::util::logging::Level::Debug,
+                    "server",
+                    { "trace_id" => trace, "peer" => peer },
+                    "undecodable request: {e}"
+                );
                 if !send_response(
                     &shared.frames_out,
                     &shared.oversized,
                     &writer,
                     wp,
                     seq,
+                    trace,
                     &Response::Err(e),
                     wbuf.as_mut_vec(),
                 ) {
@@ -652,7 +724,9 @@ fn overload_map(resp: Response, overloaded: &Counter) -> Response {
 }
 
 /// Execute one request against the coordinator (codec-independent).
-fn dispatch(req: Request, c: &Coordinator) -> Response {
+/// `ctx` carries the request's trace id and sampled span, threaded
+/// through the push-family ops into the shard pipeline.
+fn dispatch(req: Request, c: &Coordinator, ctx: &TraceCtx) -> Response {
     match req {
         Request::Ping => Response::Pong,
         Request::Register { stream, dim, spec } => {
@@ -667,8 +741,8 @@ fn dispatch(req: Request, c: &Coordinator) -> Response {
         },
         Request::Push { stream, data } => {
             let outcome = match &stream {
-                StreamRef::Name(n) => c.push(n, data),
-                StreamRef::Handle(h) => c.push_handle(*h, data),
+                StreamRef::Name(n) => c.push_traced(n, data, ctx),
+                StreamRef::Handle(h) => c.push_handle_traced(*h, data, ctx),
             };
             match outcome {
                 Ok(PushOutcome::Accepted) => Response::Pushed { accepted: true },
@@ -688,8 +762,8 @@ fn dispatch(req: Request, c: &Coordinator) -> Response {
             // declared dim; v1 additionally pre-rejected ragged frames
             // at parse time, keeping its legacy error text.)
             let outcome = match &stream {
-                StreamRef::Name(n) => c.push_many_owned(n, count, data),
-                StreamRef::Handle(h) => c.push_many_handle_owned(*h, count, data),
+                StreamRef::Name(n) => c.push_many_owned_traced(n, count, data, ctx),
+                StreamRef::Handle(h) => c.push_many_handle_owned_traced(*h, count, data, ctx),
             };
             match outcome {
                 Ok(PushOutcome::Accepted) => Response::PushedMany {
@@ -704,7 +778,7 @@ fn dispatch(req: Request, c: &Coordinator) -> Response {
             }
         }
         Request::MultiPush { entries } => Response::MultiPushed {
-            outcomes: c.multi_push(entries),
+            outcomes: c.multi_push_traced(entries, ctx),
         },
         Request::Snapshot { stream } => {
             let snap = match &stream {
@@ -833,5 +907,17 @@ fn dispatch(req: Request, c: &Coordinator) -> Response {
                 })
                 .collect(),
         },
+        Request::Introspect => Response::Introspection {
+            report: c.introspect(),
+        },
+        Request::MetricsProm => {
+            // Refresh the derived gauges (queue depth, bank occupancy,
+            // flight-event totals) before rendering — a scrape must
+            // never see boot-time zeros.
+            let _ = c.export_metrics();
+            Response::MetricsText {
+                text: crate::obs::prom::render(c.metrics()),
+            }
+        }
     }
 }

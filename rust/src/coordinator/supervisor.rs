@@ -68,6 +68,11 @@ pub struct Supervisor {
     pub restarts: Arc<Counter>,
     /// In-flight batches quarantined by those panics.
     pub quarantined: Arc<Counter>,
+    /// Flight-recorder dump hook: called after each panic, before the
+    /// restart, and its non-empty output is logged — so the last things
+    /// the worker did ride along with the panic report. `None` = no
+    /// recorder attached (tests, bare coordinators).
+    pub dump: Option<Box<dyn Fn() -> String + Send>>,
 }
 
 /// Run `body` (one worker incarnation) until it returns cleanly,
@@ -90,6 +95,15 @@ where
                     "{worker} panicked ({}); restarting",
                     panic_message(payload.as_ref())
                 );
+                if let Some(dump) = &sup.dump {
+                    let tail = dump();
+                    if !tail.is_empty() {
+                        crate::log_warn!(
+                            "supervisor",
+                            "{worker} flight-recorder tail:\n{tail}"
+                        );
+                    }
+                }
                 if let Some(token) = inflight.take() {
                     sup.quarantined.inc();
                     attribute(token);
@@ -116,6 +130,7 @@ mod tests {
         Supervisor {
             restarts: Arc::new(Counter::new()),
             quarantined: Arc::new(Counter::new()),
+            dump: None,
         }
     }
 
@@ -163,6 +178,35 @@ mod tests {
         assert_eq!(s.restarts.get(), 2);
         assert_eq!(s.quarantined.get(), 1);
         assert_eq!(quarantined, vec![7]);
+    }
+
+    #[test]
+    fn dump_hook_fires_on_each_panic() {
+        let dumps = Arc::new(AtomicU64::new(0));
+        let s = Supervisor {
+            restarts: Arc::new(Counter::new()),
+            quarantined: Arc::new(Counter::new()),
+            dump: Some(Box::new({
+                let dumps = Arc::clone(&dumps);
+                move || {
+                    dumps.fetch_add(1, Ordering::Relaxed);
+                    "  [0ns shard 0] push trace_id=1 handle=2 arg=3\n".to_string()
+                }
+            })),
+        };
+        let runs = AtomicU64::new(0);
+        supervise(
+            "w",
+            &s,
+            |_t: u64| {},
+            |_inflight| {
+                if runs.fetch_add(1, Ordering::Relaxed) < 2 {
+                    panic!("boom");
+                }
+            },
+        );
+        assert_eq!(dumps.load(Ordering::Relaxed), 2, "one dump per panic");
+        assert_eq!(s.restarts.get(), 2);
     }
 
     #[test]

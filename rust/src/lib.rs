@@ -122,6 +122,7 @@ pub mod config;
 pub mod coordinator;
 pub mod linreg;
 pub mod metrics;
+pub mod obs;
 pub mod persist;
 pub mod report;
 pub mod rng;

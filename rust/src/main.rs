@@ -4,7 +4,9 @@
 //! ata experiment [--config f.toml] [--figure fig3] [--c 0.5] [--k 100]
 //!                [--runs 100] [--csv out.csv] [--json out.json]
 //! ata serve      [--config svc.toml] [--addr 127.0.0.1:7311]
-//! ata client     <ping|list|snapshot|metrics> [--addr ...] [--stream s]
+//! ata client     <ping|list|snapshot|metrics|prom> [--addr ...] [--stream s]
+//! ata top        [--addr ...] [--interval-ms 1000] [--once]
+//!                                       # live introspection dashboard
 //! ata query      [--prefix p] [--streams a,b] [--z 1.96] [--top-k 5]
 //!                [--aggregate]          # moment stats + confidence bands
 //! ata checkpoint [--addr ...]           # snapshot a running service
@@ -65,6 +67,7 @@ fn top_help() -> String {
          \x20 experiment   run the paper's §4 experiments (figures 2/3 or a config)\n\
          \x20 serve        start the averaging coordinator TCP service\n\
          \x20 client       talk to a running service\n\
+         \x20 top          live introspection dashboard (shards, banks, streams, traces)\n\
          \x20 query        anytime analytics: mean ± band, ESS, top-K deviants\n\
          \x20 checkpoint   snapshot a running durable service over the wire\n\
          \x20 restore      offline crash recovery of a persist directory\n\
@@ -85,6 +88,7 @@ fn run(args: &[String]) -> Result<(), CliRunError> {
         "experiment" => cmd_experiment(rest),
         "serve" => cmd_serve(rest),
         "client" => cmd_client(rest),
+        "top" => cmd_top(rest),
         "query" => cmd_query(rest),
         "checkpoint" => cmd_checkpoint(rest),
         "restore" => cmd_restore(rest),
@@ -410,7 +414,7 @@ fn cmd_restore(args: &[String]) -> Result<(), CliRunError> {
 
 fn cmd_client(args: &[String]) -> Result<(), CliRunError> {
     let spec = CommandSpec::new("client", "talk to a running coordinator service")
-        .positional("action", "ping | list | snapshot | metrics")
+        .positional("action", "ping | list | snapshot | metrics | prom")
         .opt("addr", "127.0.0.1:7311", "server address")
         .opt("stream", "", "stream name (snapshot)")
         .opt(
@@ -456,9 +460,143 @@ fn cmd_client(args: &[String]) -> Result<(), CliRunError> {
         "metrics" => {
             println!("{}", client.metrics()?.encode_pretty());
         }
+        "prom" => {
+            // Prometheus text exposition — pipe to a file and point a
+            // scraper at it, or eyeball the families directly.
+            print!("{}", client.metrics_prometheus()?);
+        }
         other => return Err(format!("unknown action '{other}'").into()),
     }
     Ok(())
+}
+
+fn cmd_top(args: &[String]) -> Result<(), CliRunError> {
+    let spec = CommandSpec::new(
+        "top",
+        "live introspection dashboard: shards, banks, streams, flight events, trace spans",
+    )
+    .opt("addr", "127.0.0.1:7311", "server address")
+    .opt("protocol", "auto", "wire codec: auto | v1 | v2")
+    .opt("interval-ms", "1000", "refresh interval")
+    .opt("events", "10", "flight-recorder events to show")
+    .opt("spans", "5", "recent trace spans to show")
+    .flag("once", "print one snapshot and exit (no screen clearing)");
+    let p = parse_with(&spec, args)?;
+    let mut client = Client::connect_with(
+        &p.str("addr"),
+        ProtocolChoice::parse(&p.str("protocol"))?,
+    )?;
+    let interval = std::time::Duration::from_millis(
+        p.u64("interval-ms").map_err(|e| e.to_string())?.max(100),
+    );
+    let events = p.usize("events").map_err(|e| e.to_string())?;
+    let spans = p.usize("spans").map_err(|e| e.to_string())?;
+    let once = p.flag("once");
+    loop {
+        let report = client.introspect()?;
+        if !once {
+            // Clear + home; repaint in place like top(1).
+            print!("\x1b[2J\x1b[H");
+        }
+        print!("{}", render_top(&report, &p.str("addr"), events, spans));
+        if once {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+/// Render one `ata top` frame from an introspection report.
+fn render_top(
+    r: &ata::obs::introspect::IntrospectReport,
+    addr: &str,
+    events: usize,
+    spans: usize,
+) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let queued: u64 = r.shards.iter().map(|s| s.queue_depth).sum();
+    let restarts: u64 = r.shards.iter().map(|s| s.worker_starts.saturating_sub(1)).sum();
+    let _ = writeln!(
+        out,
+        "ata top — {addr}  trace sampling {}/1000  queued {queued}  restarts {restarts}",
+        r.sample_per_mille
+    );
+    let _ = writeln!(
+        out,
+        "\nSHARD  QUEUE  STARTS  WAL seg@off        EVENTS"
+    );
+    for s in &r.shards {
+        let _ = writeln!(
+            out,
+            "{:>5}  {:>5}  {:>6}  {:>8}@{:<8}  {:>6}",
+            s.shard, s.queue_depth, s.worker_starts, s.wal_segment, s.wal_offset,
+            s.events_recorded
+        );
+    }
+    if !r.banks.is_empty() {
+        let _ = writeln!(out, "\nBANK   DIM    ROWS   FLOATS");
+        for b in &r.banks {
+            let _ = writeln!(
+                out,
+                "{:>4}  {:>4}  {:>5}  {:>7}",
+                b.index, b.dim, b.rows, b.row_floats
+            );
+        }
+    }
+    if !r.streams.is_empty() {
+        let _ = writeln!(out, "\nSTREAM            HANDLE  DROPPED  STRIKES  HEALTH");
+        for s in &r.streams {
+            let _ = writeln!(
+                out,
+                "{:<16}  {:>6}  {:>7}  {:>7}  {}",
+                s.name,
+                s.handle,
+                s.dropped,
+                s.strikes,
+                if s.poisoned { "POISONED" } else { "ok" }
+            );
+        }
+    }
+    if events > 0 && !r.events.is_empty() {
+        let _ = writeln!(out, "\nRECENT EVENTS (newest last)");
+        let skip = r.events.len().saturating_sub(events);
+        for e in &r.events[skip..] {
+            let _ = writeln!(
+                out,
+                "  {:<11} shard={} trace_id={} handle={} arg={}",
+                e.kind.label(),
+                e.shard,
+                e.trace_id,
+                e.handle,
+                e.arg
+            );
+        }
+    }
+    if spans > 0 && !r.spans.is_empty() {
+        let _ = writeln!(out, "\nRECENT TRACE SPANS (µs per stage, newest last)");
+        let _ = writeln!(
+            out,
+            "  {:<20} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+            "TRACE", "admit", "queue", "apply", "wal", "fsync", "ack"
+        );
+        let skip = r.spans.len().saturating_sub(spans);
+        for s in &r.spans[skip..] {
+            let us = |ns: u64| ns as f64 / 1_000.0;
+            let _ = writeln!(
+                out,
+                "  {:<20} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>9.1}",
+                s.trace_id,
+                us(s.stage_ns[0]),
+                us(s.stage_ns[1]),
+                us(s.stage_ns[2]),
+                us(s.stage_ns[3]),
+                us(s.stage_ns[4]),
+                us(s.stage_ns[5])
+            );
+        }
+    }
+    out
 }
 
 fn cmd_artifacts(args: &[String]) -> Result<(), CliRunError> {

@@ -99,6 +99,23 @@ pub mod names {
     /// Structured `Overloaded` responses returned to peers (reject
     /// backpressure policy or drain refusals).
     pub const OVERLOADED_RESPONSES: &str = "wire_overloaded_responses";
+    /// Requests whose span was sampled into the per-stage latency
+    /// histograms (see `obs`; rate set by `obs.sample_per_mille`).
+    pub const TRACE_SPANS_SAMPLED: &str = "trace_spans_sampled";
+    /// Sampled spans that completed all six stages and were retired
+    /// into the recent-span log.
+    pub const TRACE_SPANS_COMPLETED: &str = "trace_spans_completed";
+    /// Flight-recorder events recorded across all shard rings.
+    pub const FLIGHT_EVENTS: &str = "flight_events";
+    /// Deepest shard queue observed at the last drain boundary /
+    /// metrics refresh (`gauge.*`).
+    pub const QUEUE_DEPTH_MAX: &str = "queue_depth_max";
+    /// Total samples waiting in shard queues at the last refresh
+    /// (`gauge.*`).
+    pub const QUEUE_DEPTH_TOTAL: &str = "queue_depth_total";
+    /// Rows currently resident across all banks (`gauge.*`), refreshed
+    /// at drain boundaries and by `Coordinator::export_metrics`.
+    pub const BANK_ROWS: &str = "bank_rows";
 }
 
 /// Monotone event counter. The atomic is padded to its own cache line:
@@ -197,6 +214,22 @@ impl Histogram {
         self.sum.load(Ordering::Relaxed) as f64 / c as f64
     }
 
+    /// Sum of all recorded values (saturating semantics are fine for
+    /// latency totals; wraps only after ~580 years of nanoseconds).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot the raw bucket counts. Bucket `i` covers values in
+    /// `[2^i, 2^(i+1))` (bucket 0 also absorbs values < 1). Used by the
+    /// Prometheus renderer to emit cumulative `le` buckets.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+
     /// Approximate quantile `q ∈ [0,1]`: returns the geometric midpoint of
     /// the bucket containing the q-th sample.
     pub fn quantile(&self, q: f64) -> f64 {
@@ -284,12 +317,34 @@ impl Registry {
                         ("count", Json::Num(v.count() as f64)),
                         ("mean", Json::Num(v.mean())),
                         ("p50", Json::Num(v.quantile(0.5))),
+                        ("p90", Json::Num(v.quantile(0.9))),
                         ("p99", Json::Num(v.quantile(0.99))),
+                        ("p999", Json::Num(v.quantile(0.999))),
                     ]),
                 );
             }
         }
         Json::Obj(obj)
+    }
+
+    /// Snapshot every counter as `(name, value)`, sorted by name.
+    pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
+        let m = self.inner.counters.lock().expect("metrics lock");
+        m.iter().map(|(k, v)| (k.clone(), v.get())).collect()
+    }
+
+    /// Snapshot every gauge as `(name, value)`, sorted by name.
+    pub fn gauges_snapshot(&self) -> Vec<(String, f64)> {
+        let m = self.inner.gauges.lock().expect("metrics lock");
+        m.iter().map(|(k, v)| (k.clone(), v.get())).collect()
+    }
+
+    /// Snapshot every histogram as `(name, handle)`, sorted by name.
+    /// Handles are `Arc`s, so callers read bucket counts without
+    /// holding the registry lock.
+    pub fn histograms_snapshot(&self) -> Vec<(String, Arc<Histogram>)> {
+        let m = self.inner.histograms.lock().expect("metrics lock");
+        m.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
     }
 }
 
@@ -355,6 +410,73 @@ mod tests {
         h.record(u64::MAX);
         assert_eq!(h.count(), 2);
         assert!(h.quantile(0.0) >= 1.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_vs_sorted_oracle() {
+        // Bucket-accuracy contract: for factor-2 buckets, the reported
+        // quantile must fall within [oracle/2, oracle*2] of the exact
+        // sorted-sample quantile (bucket midpoint vs any member of the
+        // same bucket is at most one octave apart).
+        use crate::rng::{RngCore, SplitMix64};
+        let mut rng = SplitMix64::new(0xA17A);
+        let h = Histogram::new();
+        let mut samples = Vec::with_capacity(10_000);
+        for _ in 0..10_000 {
+            // Log-uniform over roughly [1, 2^40): a skewed latency shape.
+            let v = 1u64 << (rng.next_u64() % 40);
+            let v = v + rng.next_u64() % v.max(1);
+            h.record(v);
+            samples.push(v);
+        }
+        samples.sort_unstable();
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let got = h.quantile(q);
+            let idx = (((samples.len() as f64) * q).ceil() as usize)
+                .max(1)
+                .min(samples.len())
+                - 1;
+            let oracle = samples[idx] as f64;
+            assert!(
+                got >= oracle / 2.0 && got <= oracle * 2.0,
+                "q={q}: got {got}, oracle {oracle}"
+            );
+        }
+        let exact_mean = samples.iter().map(|&v| v as f64).sum::<f64>() / samples.len() as f64;
+        assert!((h.mean() - exact_mean).abs() < 1e-6 * exact_mean.max(1.0));
+    }
+
+    #[test]
+    fn bucket_counts_snapshot_matches_records() {
+        let h = Histogram::new();
+        h.record(1); // bucket 0
+        h.record(3); // bucket 1
+        h.record(3); // bucket 1
+        let buckets = h.bucket_counts();
+        assert_eq!(buckets.len(), 64);
+        assert_eq!(buckets[0], 1);
+        assert_eq!(buckets[1], 2);
+        assert_eq!(buckets.iter().sum::<u64>(), h.count());
+        assert_eq!(h.sum(), 7);
+    }
+
+    #[test]
+    fn registry_snapshots_enumerate_everything() {
+        let reg = Registry::new();
+        reg.counter("b_ctr").inc();
+        reg.counter("a_ctr").add(2);
+        reg.gauge("g").set(4.5);
+        reg.histogram("h").record(9);
+        let counters = reg.counters_snapshot();
+        assert_eq!(
+            counters,
+            vec![("a_ctr".to_string(), 2), ("b_ctr".to_string(), 1)]
+        );
+        assert_eq!(reg.gauges_snapshot(), vec![("g".to_string(), 4.5)]);
+        let hists = reg.histograms_snapshot();
+        assert_eq!(hists.len(), 1);
+        assert_eq!(hists[0].0, "h");
+        assert_eq!(hists[0].1.count(), 1);
     }
 
     #[test]

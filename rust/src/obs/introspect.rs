@@ -1,0 +1,533 @@
+//! The `introspect` wire op's payload: a structured point-in-time
+//! report of the coordinator's moving parts — per-shard queue depth and
+//! worker churn, per-bank occupancy, per-stream health, plus the most
+//! recent flight-recorder events and retired trace spans.
+//!
+//! The report has two codecs, mirroring the protocol split: a compact
+//! binary form on the persist `Enc`/`Dec` primitives (v2) and a JSON
+//! form (v1). Both round-trip losslessly; handles and trace ids travel
+//! as decimal strings in JSON because they exceed 2^53.
+
+use crate::obs::recorder::Event;
+use crate::obs::SpanRecord;
+use crate::obs::STAGES;
+use crate::persist::codec::{Dec, Enc};
+use crate::util::json::Json;
+
+/// One shard worker's vitals.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardReport {
+    pub shard: u16,
+    /// Batches sitting in the shard queue right now.
+    pub queue_depth: u64,
+    /// Worker incarnations (1 = never restarted; each panic adds one).
+    pub worker_starts: u64,
+    /// WAL write position at the last drain boundary (0/0 = no WAL).
+    pub wal_segment: u64,
+    pub wal_offset: u64,
+    /// Flight-recorder events since boot (not capped by ring capacity).
+    pub events_recorded: u64,
+}
+
+/// One planar bank's occupancy.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BankReport {
+    pub index: u64,
+    pub dim: u64,
+    /// Live rows (registered streams backed by this bank).
+    pub rows: u64,
+    /// f64 slots per row (dim × accumulators).
+    pub row_floats: u64,
+}
+
+/// One stream's health counters.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StreamReport {
+    pub name: String,
+    pub handle: u64,
+    pub dropped: u64,
+    pub strikes: u64,
+    pub poisoned: bool,
+}
+
+/// The full introspection snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntrospectReport {
+    /// Current trace sampling rate (per-mille).
+    pub sample_per_mille: u32,
+    pub shards: Vec<ShardReport>,
+    pub banks: Vec<BankReport>,
+    pub streams: Vec<StreamReport>,
+    /// Most recent flight-recorder events across all shards, merged and
+    /// time-ordered, newest last (bounded by the requested limit).
+    pub events: Vec<Event>,
+    /// Most recent retired trace spans, oldest first.
+    pub spans: Vec<SpanRecord>,
+}
+
+/// Hostile-count guard: a decoded element count must be plausible for
+/// the bytes actually remaining (`min_len` bytes per element), so a
+/// forged count cannot drive a huge allocation before the decode fails.
+fn checked_count(dec: &Dec<'_>, count: usize, min_len: usize) -> Result<usize, String> {
+    if count.saturating_mul(min_len) > dec.remaining() {
+        return Err(format!(
+            "introspect: count {count} needs at least {} bytes, {} remain",
+            count.saturating_mul(min_len),
+            dec.remaining()
+        ));
+    }
+    Ok(count)
+}
+
+impl IntrospectReport {
+    /// Binary form (the v2 codec): sections in struct order, each a
+    /// `u32` count followed by fixed-layout records.
+    pub fn encode(&self, enc: &mut Enc) {
+        enc.put_u32(self.sample_per_mille);
+        enc.put_u32(self.shards.len() as u32);
+        for s in &self.shards {
+            enc.put_u16(s.shard);
+            enc.put_u64(s.queue_depth);
+            enc.put_u64(s.worker_starts);
+            enc.put_u64(s.wal_segment);
+            enc.put_u64(s.wal_offset);
+            enc.put_u64(s.events_recorded);
+        }
+        enc.put_u32(self.banks.len() as u32);
+        for b in &self.banks {
+            enc.put_u64(b.index);
+            enc.put_u64(b.dim);
+            enc.put_u64(b.rows);
+            enc.put_u64(b.row_floats);
+        }
+        enc.put_u32(self.streams.len() as u32);
+        for s in &self.streams {
+            enc.put_str(&s.name);
+            enc.put_u64(s.handle);
+            enc.put_u64(s.dropped);
+            enc.put_u64(s.strikes);
+            enc.put_u8(s.poisoned as u8);
+        }
+        enc.put_u32(self.events.len() as u32);
+        for e in &self.events {
+            e.encode(enc);
+        }
+        enc.put_u32(self.spans.len() as u32);
+        for sp in &self.spans {
+            enc.put_u64(sp.trace_id);
+            for ns in sp.stage_ns {
+                enc.put_u64(ns);
+            }
+        }
+    }
+
+    /// Decode the binary form; errors (never panics) on truncation,
+    /// forged counts, or unknown event kinds.
+    pub fn decode(dec: &mut Dec<'_>) -> Result<IntrospectReport, String> {
+        let sample_per_mille = dec.get_u32()?;
+        let n = checked_count(dec, dec.get_u32()? as usize, 42)?;
+        let mut shards = Vec::with_capacity(n);
+        for _ in 0..n {
+            shards.push(ShardReport {
+                shard: dec.get_u16()?,
+                queue_depth: dec.get_u64()?,
+                worker_starts: dec.get_u64()?,
+                wal_segment: dec.get_u64()?,
+                wal_offset: dec.get_u64()?,
+                events_recorded: dec.get_u64()?,
+            });
+        }
+        let n = checked_count(dec, dec.get_u32()? as usize, 32)?;
+        let mut banks = Vec::with_capacity(n);
+        for _ in 0..n {
+            banks.push(BankReport {
+                index: dec.get_u64()?,
+                dim: dec.get_u64()?,
+                rows: dec.get_u64()?,
+                row_floats: dec.get_u64()?,
+            });
+        }
+        let n = checked_count(dec, dec.get_u32()? as usize, 29)?;
+        let mut streams = Vec::with_capacity(n);
+        for _ in 0..n {
+            streams.push(StreamReport {
+                name: dec.get_str()?,
+                handle: dec.get_u64()?,
+                dropped: dec.get_u64()?,
+                strikes: dec.get_u64()?,
+                poisoned: dec.get_u8()? != 0,
+            });
+        }
+        let n = checked_count(
+            dec,
+            dec.get_u32()? as usize,
+            crate::obs::recorder::EVENT_ENCODED_LEN,
+        )?;
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            events.push(Event::decode(dec)?);
+        }
+        let n = checked_count(dec, dec.get_u32()? as usize, 8 * (1 + STAGES))?;
+        let mut spans = Vec::with_capacity(n);
+        for _ in 0..n {
+            let trace_id = dec.get_u64()?;
+            let mut stage_ns = [0u64; STAGES];
+            for ns in &mut stage_ns {
+                *ns = dec.get_u64()?;
+            }
+            spans.push(SpanRecord { trace_id, stage_ns });
+        }
+        Ok(IntrospectReport {
+            sample_per_mille,
+            shards,
+            banks,
+            streams,
+            events,
+            spans,
+        })
+    }
+
+    /// JSON form (the v1 codec). Handles and trace ids are decimal
+    /// strings: they exceed 2^53 and would shear in an f64.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sample_per_mille", Json::Num(self.sample_per_mille as f64)),
+            (
+                "shards",
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("shard", Json::Num(s.shard as f64)),
+                                ("queue_depth", Json::Num(s.queue_depth as f64)),
+                                ("worker_starts", Json::Num(s.worker_starts as f64)),
+                                ("wal_segment", Json::Num(s.wal_segment as f64)),
+                                ("wal_offset", Json::Num(s.wal_offset as f64)),
+                                ("events_recorded", Json::Num(s.events_recorded as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "banks",
+                Json::Arr(
+                    self.banks
+                        .iter()
+                        .map(|b| {
+                            Json::obj(vec![
+                                ("index", Json::Num(b.index as f64)),
+                                ("dim", Json::Num(b.dim as f64)),
+                                ("rows", Json::Num(b.rows as f64)),
+                                ("row_floats", Json::Num(b.row_floats as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "streams",
+                Json::Arr(
+                    self.streams
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("name", Json::Str(s.name.clone())),
+                                ("handle", Json::Str(s.handle.to_string())),
+                                ("dropped", Json::Num(s.dropped as f64)),
+                                ("strikes", Json::Num(s.strikes as f64)),
+                                ("poisoned", Json::Bool(s.poisoned)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "events",
+                Json::Arr(
+                    self.events
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("kind", Json::Str(e.kind.label().to_string())),
+                                ("shard", Json::Num(e.shard as f64)),
+                                ("trace_id", Json::Str(e.trace_id.to_string())),
+                                ("handle", Json::Str(e.handle.to_string())),
+                                ("arg", Json::Num(e.arg as f64)),
+                                ("at_nanos", Json::Num(e.at_nanos as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "spans",
+                Json::Arr(
+                    self.spans
+                        .iter()
+                        .map(|sp| {
+                            Json::obj(vec![
+                                ("trace_id", Json::Str(sp.trace_id.to_string())),
+                                (
+                                    "stage_ns",
+                                    Json::Arr(
+                                        sp.stage_ns
+                                            .iter()
+                                            .map(|&ns| Json::Num(ns as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse the JSON form; tolerant of field order, strict on shape.
+    pub fn from_json(j: &Json) -> Result<IntrospectReport, String> {
+        let sample_per_mille = j
+            .get("sample_per_mille")
+            .and_then(Json::as_u64)
+            .ok_or("introspect: missing sample_per_mille")? as u32;
+        let mut shards = Vec::new();
+        for s in arr(j, "shards")? {
+            shards.push(ShardReport {
+                shard: num(s, "shard")? as u16,
+                queue_depth: num(s, "queue_depth")?,
+                worker_starts: num(s, "worker_starts")?,
+                wal_segment: num(s, "wal_segment")?,
+                wal_offset: num(s, "wal_offset")?,
+                events_recorded: num(s, "events_recorded")?,
+            });
+        }
+        let mut banks = Vec::new();
+        for b in arr(j, "banks")? {
+            banks.push(BankReport {
+                index: num(b, "index")?,
+                dim: num(b, "dim")?,
+                rows: num(b, "rows")?,
+                row_floats: num(b, "row_floats")?,
+            });
+        }
+        let mut streams = Vec::new();
+        for s in arr(j, "streams")? {
+            streams.push(StreamReport {
+                name: s
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or("introspect: stream missing name")?
+                    .to_string(),
+                handle: id64(s, "handle")?,
+                dropped: num(s, "dropped")?,
+                strikes: num(s, "strikes")?,
+                poisoned: s.get("poisoned").and_then(Json::as_bool).unwrap_or(false),
+            });
+        }
+        let mut events = Vec::new();
+        for e in arr(j, "events")? {
+            let label = e
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or("introspect: event missing kind")?;
+            let kind = kind_of(label)?;
+            events.push(Event {
+                kind,
+                shard: num(e, "shard")? as u16,
+                trace_id: id64(e, "trace_id")?,
+                handle: id64(e, "handle")?,
+                arg: num(e, "arg")?,
+                at_nanos: num(e, "at_nanos")?,
+            });
+        }
+        let mut spans = Vec::new();
+        for sp in arr(j, "spans")? {
+            let ns_arr = sp
+                .get("stage_ns")
+                .and_then(Json::as_arr)
+                .ok_or("introspect: span missing stage_ns")?;
+            if ns_arr.len() != STAGES {
+                return Err(format!(
+                    "introspect: span has {} stages, expected {STAGES}",
+                    ns_arr.len()
+                ));
+            }
+            let mut stage_ns = [0u64; STAGES];
+            for (slot, v) in stage_ns.iter_mut().zip(ns_arr) {
+                *slot = v.as_u64().ok_or("introspect: bad stage_ns entry")?;
+            }
+            spans.push(SpanRecord {
+                trace_id: id64(sp, "trace_id")?,
+                stage_ns,
+            });
+        }
+        Ok(IntrospectReport {
+            sample_per_mille,
+            shards,
+            banks,
+            streams,
+            events,
+            spans,
+        })
+    }
+}
+
+fn arr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json], String> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("introspect: missing array '{key}'"))
+}
+
+fn num(j: &Json, key: &str) -> Result<u64, String> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| format!("introspect: missing number '{key}'"))
+}
+
+/// A u64 id that may arrive as a decimal string (canonical — survives
+/// f64 shearing) or, from lenient peers, a plain number.
+fn id64(j: &Json, key: &str) -> Result<u64, String> {
+    match j.get(key) {
+        Some(Json::Str(s)) => s
+            .parse::<u64>()
+            .map_err(|_| format!("introspect: bad id in '{key}'")),
+        Some(v) => v
+            .as_u64()
+            .ok_or_else(|| format!("introspect: bad id in '{key}'")),
+        None => Err(format!("introspect: missing id '{key}'")),
+    }
+}
+
+fn kind_of(label: &str) -> Result<crate::obs::recorder::EventKind, String> {
+    use crate::obs::recorder::EventKind;
+    for k in [
+        EventKind::Push,
+        EventKind::Drop,
+        EventKind::Quarantine,
+        EventKind::Poison,
+        EventKind::Overload,
+        EventKind::WalRotation,
+        EventKind::Checkpoint,
+    ] {
+        if k.label() == label {
+            return Ok(k);
+        }
+    }
+    Err(format!("introspect: unknown event kind '{label}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::EventKind;
+
+    fn sample() -> IntrospectReport {
+        IntrospectReport {
+            sample_per_mille: 10,
+            shards: vec![
+                ShardReport {
+                    shard: 0,
+                    queue_depth: 3,
+                    worker_starts: 1,
+                    wal_segment: 2,
+                    wal_offset: 4096,
+                    events_recorded: 77,
+                },
+                ShardReport {
+                    shard: 1,
+                    queue_depth: 0,
+                    worker_starts: 4,
+                    wal_segment: 0,
+                    wal_offset: 0,
+                    events_recorded: 0,
+                },
+            ],
+            banks: vec![BankReport {
+                index: 0,
+                dim: 8,
+                rows: 12,
+                row_floats: 48,
+            }],
+            streams: vec![StreamReport {
+                name: "grad".into(),
+                handle: u64::MAX - 3,
+                dropped: 9,
+                strikes: 2,
+                poisoned: true,
+            }],
+            events: vec![Event {
+                kind: EventKind::Quarantine,
+                shard: 1,
+                trace_id: u64::MAX - 1,
+                handle: u64::MAX - 3,
+                arg: 2,
+                at_nanos: 123_456,
+            }],
+            spans: vec![SpanRecord {
+                trace_id: u64::MAX - 1,
+                stage_ns: [1, 2, 3, 4, 5, 6],
+            }],
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let r = sample();
+        let mut enc = Enc::new();
+        r.encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut dec = Dec::new(&bytes);
+        let got = IntrospectReport::decode(&mut dec).unwrap();
+        assert_eq!(got, r);
+        assert_eq!(dec.remaining(), 0);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_wide_ids() {
+        let r = sample();
+        let text = r.to_json().encode();
+        let back = IntrospectReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r, "u64 ids above 2^53 must survive JSON");
+        // The wide ids really did travel as strings.
+        assert!(text.contains(&format!("\"{}\"", u64::MAX - 3)), "{text}");
+    }
+
+    #[test]
+    fn hostile_binary_never_panics() {
+        let r = sample();
+        let mut enc = Enc::new();
+        r.encode(&mut enc);
+        let bytes = enc.into_bytes();
+        // Every truncation errors cleanly.
+        for cut in 0..bytes.len() {
+            assert!(IntrospectReport::decode(&mut Dec::new(&bytes[..cut])).is_err());
+        }
+        // A forged section count cannot drive a huge allocation.
+        let mut forged = bytes.clone();
+        forged[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(IntrospectReport::decode(&mut Dec::new(&forged)).is_err());
+    }
+
+    #[test]
+    fn empty_report_roundtrips() {
+        let r = IntrospectReport {
+            sample_per_mille: 0,
+            shards: vec![],
+            banks: vec![],
+            streams: vec![],
+            events: vec![],
+            spans: vec![],
+        };
+        let mut enc = Enc::new();
+        r.encode(&mut enc);
+        let bytes = enc.into_bytes();
+        assert_eq!(
+            IntrospectReport::decode(&mut Dec::new(&bytes)).unwrap(),
+            r
+        );
+        let back = IntrospectReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+    }
+}

@@ -1,0 +1,358 @@
+//! Flight-recorder observability: request tracing, per-stage latency
+//! histograms, a lock-free event ring, and the introspection plane.
+//!
+//! The system's contract about *itself* mirrors the paper's contract
+//! about the stream: anytime, constant-overhead answers. Everything in
+//! this module is always-on and costs one relaxed atomic load on the
+//! hot path while disarmed (sample rate 0), exactly like the chaos
+//! harness's hooks:
+//!
+//! * **Tracing** ([`mint_trace_id`], [`Span`]) — every request carries a
+//!   `u64` trace id, minted at the client (or at admission for legacy
+//!   v1 peers) and echoed in the ack. A *sampled* subset of push
+//!   requests additionally records a [`Span`]: six stage latencies
+//!   (admission → queue-wait → apply → WAL append → fsync-settle →
+//!   ack-write), each costing one `Instant` read when armed.
+//! * **Stage histograms** — each recorded stage also lands in a fixed
+//!   `stage_latency_<stage>` log-bucketed histogram family in the
+//!   metrics registry, exported with p50/p90/p99/p999.
+//! * **Flight recorder** ([`recorder::FlightRecorder`]) — a per-shard
+//!   fixed-size ring of compact binary events (push/drop/quarantine/
+//!   poison/overload/WAL-rotation/checkpoint) with trace id and stream
+//!   handle; dumped by the supervisor on panic and snapshottable on
+//!   demand through the `introspect` wire op.
+//! * **Exposition** ([`prom`]) — Prometheus text-format rendering of
+//!   the whole registry, served alongside the JSON `metrics` op.
+
+pub mod introspect;
+pub mod prom;
+pub mod recorder;
+
+use crate::metrics::{Histogram, Registry};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// The six stages a traced push moves through, in pipeline order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Frame decoded → batch handed to the shard queue.
+    Admission = 0,
+    /// Sat in the shard queue waiting for the drain cycle.
+    QueueWait = 1,
+    /// Estimator apply (bank row or slot recurrence).
+    Apply = 2,
+    /// WAL append (framing + write; inline fsync when not grouped).
+    WalAppend = 3,
+    /// Waited dirty for the WAL group commit's shared fsync.
+    FsyncSettle = 4,
+    /// Response encode + socket write back to the peer.
+    AckWrite = 5,
+}
+
+/// Number of span stages.
+pub const STAGES: usize = 6;
+
+impl Stage {
+    /// All stages in pipeline order.
+    pub const ALL: [Stage; STAGES] = [
+        Stage::Admission,
+        Stage::QueueWait,
+        Stage::Apply,
+        Stage::WalAppend,
+        Stage::FsyncSettle,
+        Stage::AckWrite,
+    ];
+
+    /// Canonical lowercase name (metric suffix and wire label).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::QueueWait => "queue_wait",
+            Stage::Apply => "apply",
+            Stage::WalAppend => "wal_append",
+            Stage::FsyncSettle => "fsync_settle",
+            Stage::AckWrite => "ack_write",
+        }
+    }
+}
+
+/// Histogram name of one stage's latency family (`stage_latency_apply`…).
+pub fn stage_hist_name(stage: Stage) -> String {
+    format!("stage_latency_{}", stage.name())
+}
+
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(0);
+
+/// Mint a process-unique trace id: time-seeded (SplitMix64 of the boot
+/// nanos) so ids from different client processes do not collide in
+/// aggregated logs, then sequential — one relaxed `fetch_add` per
+/// request. Never returns 0 (the "no trace" sentinel).
+pub fn mint_trace_id() -> u64 {
+    let mut id = NEXT_TRACE.fetch_add(1, Ordering::Relaxed);
+    if id == 0 {
+        // First mint in this process: seed the space off the clock.
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x9E37_79B9_7F4A_7C15);
+        use crate::rng::RngCore as _;
+        let seeded = crate::rng::SplitMix64::new(nanos).next_u64() | 1;
+        // Racing first-minters both try the swap; losers just use their
+        // fetch_add offset from the winner's seed.
+        let _ = NEXT_TRACE.compare_exchange(1, seeded, Ordering::Relaxed, Ordering::Relaxed);
+        id = NEXT_TRACE.fetch_add(1, Ordering::Relaxed);
+    }
+    id.max(1)
+}
+
+/// A completed (or in-flight) sampled span: the trace id plus the six
+/// stage latencies in nanoseconds. Shared `Arc` between the connection
+/// handler (admission, ack-write) and the shard worker (queue-wait,
+/// apply, WAL append, fsync-settle); whoever fills the final stage
+/// retires it into the span log.
+pub struct Span {
+    pub trace_id: u64,
+    stage_ns: [AtomicU64; STAGES],
+    /// Bitmask of filled stages; the span retires at 0b111111.
+    filled: AtomicU32,
+}
+
+/// Every stage filled.
+const ALL_STAGES_MASK: u32 = (1 << STAGES as u32) - 1;
+
+/// A retired span as plain data (the span log / wire form).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanRecord {
+    pub trace_id: u64,
+    /// Nanoseconds per stage, indexed by [`Stage`] discriminant.
+    pub stage_ns: [u64; STAGES],
+}
+
+impl Span {
+    fn new(trace_id: u64) -> Span {
+        Span {
+            trace_id,
+            stage_ns: Default::default(),
+            filled: AtomicU32::new(0),
+        }
+    }
+
+    /// Nanos recorded for `stage` so far (0 = unfilled).
+    pub fn stage_nanos(&self, stage: Stage) -> u64 {
+        self.stage_ns[stage as usize].load(Ordering::Relaxed)
+    }
+
+    fn snapshot(&self) -> SpanRecord {
+        let mut stage_ns = [0u64; STAGES];
+        for (i, s) in self.stage_ns.iter().enumerate() {
+            stage_ns[i] = s.load(Ordering::Relaxed);
+        }
+        SpanRecord {
+            trace_id: self.trace_id,
+            stage_ns,
+        }
+    }
+}
+
+/// Sampling + span bookkeeping + the stage histogram family. One per
+/// coordinator, shared (`Arc`) with the server and every shard worker.
+pub struct Obs {
+    /// Per-mille of push requests that record a span (0 = disarmed,
+    /// 1000 = every request).
+    sample_per_mille: AtomicU32,
+    /// Round-robin sampling cursor (deterministic 1-in-N, not random:
+    /// the overhead bound must hold for every request, and a counter is
+    /// cheaper than an RNG).
+    cursor: AtomicU64,
+    /// Spans sampled since boot.
+    sampled: Arc<crate::metrics::Counter>,
+    /// Spans whose six stages all completed and were retired to the log.
+    completed: Arc<crate::metrics::Counter>,
+    /// One histogram per stage, indexed by [`Stage`] discriminant, and
+    /// registered as `stage_latency_<stage>` so they ride the normal
+    /// registry export.
+    stage_hists: [Arc<Histogram>; STAGES],
+    /// Most recent retired spans (bounded; oldest evicted).
+    span_log: Mutex<std::collections::VecDeque<SpanRecord>>,
+    span_log_cap: usize,
+}
+
+impl Obs {
+    /// Build against `registry`, registering the stage histogram family
+    /// and the trace counters.
+    pub fn new(registry: &Registry, sample_per_mille: u32, span_log_cap: usize) -> Obs {
+        let stage_hists = Stage::ALL.map(|s| registry.histogram(&stage_hist_name(s)));
+        Obs {
+            sample_per_mille: AtomicU32::new(sample_per_mille.min(1000)),
+            cursor: AtomicU64::new(0),
+            sampled: registry.counter(crate::metrics::names::TRACE_SPANS_SAMPLED),
+            completed: registry.counter(crate::metrics::names::TRACE_SPANS_COMPLETED),
+            stage_hists,
+            span_log: Mutex::new(std::collections::VecDeque::new()),
+            span_log_cap: span_log_cap.max(1),
+        }
+    }
+
+    /// Current sample rate in per-mille.
+    pub fn sample_per_mille(&self) -> u32 {
+        self.sample_per_mille.load(Ordering::Relaxed)
+    }
+
+    /// Change the sample rate at runtime.
+    pub fn set_sample_per_mille(&self, per_mille: u32) {
+        self.sample_per_mille
+            .store(per_mille.min(1000), Ordering::Relaxed);
+    }
+
+    /// Decide whether this request records a span. Disarmed cost: ONE
+    /// relaxed load. Armed cost: one relaxed `fetch_add` and a compare
+    /// (deterministic 1-in-⌈1000/rate⌉ round-robin).
+    #[inline]
+    pub fn should_sample(&self) -> bool {
+        let rate = self.sample_per_mille.load(Ordering::Relaxed);
+        if rate == 0 {
+            return false;
+        }
+        if rate >= 1000 {
+            return true;
+        }
+        // Sample when the cursor crosses a multiple of 1000 in rate-steps:
+        // exactly `rate` of every 1000 requests, evenly spaced.
+        let n = self.cursor.fetch_add(1, Ordering::Relaxed);
+        (n.wrapping_mul(rate as u64)) % 1000 < rate as u64
+    }
+
+    /// Begin a sampled span for `trace_id`. Call only when
+    /// [`Obs::should_sample`] said yes.
+    pub fn begin_span(&self, trace_id: u64) -> Arc<Span> {
+        self.sampled.inc();
+        Arc::new(Span::new(trace_id))
+    }
+
+    /// Record `stage` as `elapsed_ns` on `span`: lands in the stage's
+    /// histogram, and retires the span to the log when it was the last
+    /// unfilled stage. Double-fills keep the first value.
+    pub fn record_stage(&self, span: &Arc<Span>, stage: Stage, elapsed_ns: u64) {
+        let bit = 1u32 << stage as u32;
+        let prev = span.filled.fetch_or(bit, Ordering::AcqRel);
+        if prev & bit != 0 {
+            return; // already filled (restarted worker re-applying)
+        }
+        // Clamp to >=1 so "filled with 0ns" stays distinguishable from
+        // unfilled in the record.
+        span.stage_ns[stage as usize].store(elapsed_ns.max(1), Ordering::Relaxed);
+        self.stage_hists[stage as usize].record(elapsed_ns.max(1));
+        if prev | bit == ALL_STAGES_MASK {
+            self.completed.inc();
+            let rec = span.snapshot();
+            let mut log = self.span_log.lock().unwrap_or_else(|e| e.into_inner());
+            if log.len() >= self.span_log_cap {
+                log.pop_front();
+            }
+            log.push_back(rec);
+        }
+    }
+
+    /// Convenience: record `stage` as the time since `start`.
+    #[inline]
+    pub fn record_stage_since(&self, span: &Arc<Span>, stage: Stage, start: Instant) {
+        self.record_stage(span, stage, start.elapsed().as_nanos() as u64);
+    }
+
+    /// The most recent retired spans, oldest first (bounded by the
+    /// configured log capacity; `limit = 0` means all).
+    pub fn recent_spans(&self, limit: usize) -> Vec<SpanRecord> {
+        let log = self.span_log.lock().unwrap_or_else(|e| e.into_inner());
+        let n = if limit == 0 { log.len() } else { limit.min(log.len()) };
+        log.iter().skip(log.len() - n).cloned().collect()
+    }
+
+    /// One stage histogram (tests and the introspection plane).
+    pub fn stage_histogram(&self, stage: Stage) -> &Arc<Histogram> {
+        &self.stage_hists[stage as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(rate: u32) -> Obs {
+        Obs::new(&Registry::new(), rate, 8)
+    }
+
+    #[test]
+    fn trace_ids_unique_and_nonzero() {
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..1000 {
+            let id = mint_trace_id();
+            assert_ne!(id, 0);
+            assert!(seen.insert(id), "duplicate trace id {id}");
+        }
+    }
+
+    #[test]
+    fn sampling_rates() {
+        assert!(!obs(0).should_sample());
+        let all = obs(1000);
+        assert!((0..100).all(|_| all.should_sample()));
+        // 1% : exactly 10 of every 1000 decisions sample.
+        let one_pct = obs(10);
+        let hits = (0..10_000).filter(|_| one_pct.should_sample()).count();
+        assert_eq!(hits, 100, "deterministic 1% sampling");
+        // Runtime rate change takes effect.
+        let o = obs(0);
+        o.set_sample_per_mille(1000);
+        assert!(o.should_sample());
+    }
+
+    #[test]
+    fn span_retires_after_all_six_stages() {
+        let reg = Registry::new();
+        let o = Obs::new(&reg, 1000, 8);
+        assert!(o.should_sample());
+        let span = o.begin_span(42);
+        for (i, stage) in Stage::ALL.iter().enumerate() {
+            assert_eq!(o.recent_spans(0).len(), 0, "not retired before stage {i}");
+            o.record_stage(&span, *stage, 100 * (i as u64 + 1));
+        }
+        let spans = o.recent_spans(0);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].trace_id, 42);
+        assert!(spans[0].stage_ns.iter().all(|&ns| ns > 0));
+        assert_eq!(spans[0].stage_ns[Stage::AckWrite as usize], 600);
+        // Each stage landed in its histogram.
+        for stage in Stage::ALL {
+            assert_eq!(o.stage_histogram(stage).count(), 1, "{}", stage.name());
+        }
+        // Double-fill keeps the first value and does not re-retire.
+        o.record_stage(&span, Stage::Apply, 9_999_999);
+        assert_eq!(o.recent_spans(0).len(), 1);
+        assert_eq!(span.stage_nanos(Stage::Apply), 300);
+    }
+
+    #[test]
+    fn span_log_bounded() {
+        let reg = Registry::new();
+        let o = Obs::new(&reg, 1000, 4);
+        for t in 0..10u64 {
+            let span = o.begin_span(t + 1);
+            for stage in Stage::ALL {
+                o.record_stage(&span, stage, 1);
+            }
+        }
+        let spans = o.recent_spans(0);
+        assert_eq!(spans.len(), 4, "log capped at capacity");
+        assert_eq!(spans.last().unwrap().trace_id, 10, "newest kept");
+        assert_eq!(o.recent_spans(2).len(), 2);
+    }
+
+    #[test]
+    fn zero_elapsed_is_recorded_as_filled() {
+        let o = obs(1000);
+        let span = o.begin_span(7);
+        o.record_stage(&span, Stage::FsyncSettle, 0);
+        assert_eq!(span.stage_nanos(Stage::FsyncSettle), 1);
+    }
+}

@@ -1,0 +1,236 @@
+//! Prometheus text-format exposition (version 0.0.4) for the metrics
+//! [`Registry`], served alongside the JSON `metrics` op.
+//!
+//! Rendering rules:
+//!
+//! * every instrument is prefixed `ata_` and name-sanitized to
+//!   `[a-zA-Z0-9_]`;
+//! * counters → `# TYPE ata_x counter`, gauges → `gauge` (non-finite
+//!   gauge values render as `NaN`/`+Inf`/`-Inf`, which the text format
+//!   permits);
+//! * histograms → native `histogram` type with cumulative `le` buckets
+//!   at each power-of-two boundary that holds samples (plus `+Inf`),
+//!   `_sum` and `_count`;
+//! * the per-stage latency family (`stage_latency_<stage>` in the
+//!   registry) is folded into a single `ata_stage_latency_ns` metric
+//!   with a `stage` label, so dashboards can aggregate or facet by
+//!   stage without regex gymnastics.
+
+use crate::metrics::Registry;
+use crate::obs::Stage;
+
+/// Render the whole registry in Prometheus text format.
+pub fn render(registry: &Registry) -> String {
+    let mut out = String::with_capacity(4096);
+
+    for (name, value) in registry.counters_snapshot() {
+        let name = sanitize(&name);
+        out.push_str(&format!("# TYPE ata_{name} counter\n"));
+        out.push_str(&format!("ata_{name} {value}\n"));
+    }
+
+    for (name, value) in registry.gauges_snapshot() {
+        let name = sanitize(&name);
+        out.push_str(&format!("# TYPE ata_{name} gauge\n"));
+        out.push_str(&format!("ata_{name} {}\n", fmt_f64(value)));
+    }
+
+    let mut stage_hists = Vec::new();
+    for (name, hist) in registry.histograms_snapshot() {
+        if let Some(stage) = stage_of(&name) {
+            stage_hists.push((stage, hist));
+            continue;
+        }
+        let name = sanitize(&name);
+        out.push_str(&format!("# TYPE ata_{name} histogram\n"));
+        render_histogram(&mut out, &format!("ata_{name}"), "", &hist);
+    }
+
+    if !stage_hists.is_empty() {
+        out.push_str("# TYPE ata_stage_latency_ns histogram\n");
+        // Registry snapshots are name-sorted; re-sort into pipeline
+        // (stage-declaration) order so the exposition reads causally.
+        stage_hists.sort_by_key(|(s, _)| *s as u8);
+        for (stage, hist) in &stage_hists {
+            let label = format!("stage=\"{}\"", stage.name());
+            render_histogram(&mut out, "ata_stage_latency_ns", &label, hist);
+        }
+    }
+
+    out
+}
+
+/// Emit `_bucket`/`_sum`/`_count` lines for one histogram. `extra` is a
+/// pre-rendered label (or empty) merged with the `le` label.
+fn render_histogram(out: &mut String, name: &str, extra: &str, hist: &crate::metrics::Histogram) {
+    let buckets = hist.bucket_counts();
+    let mut cumulative = 0u64;
+    for (i, &n) in buckets.iter().enumerate() {
+        if n == 0 {
+            continue; // sparse: only boundaries that hold samples
+        }
+        cumulative += n;
+        let le = (1u128 << (i + 1)) - 1; // bucket i covers [2^i, 2^(i+1))
+        let labels = join_labels(extra, &format!("le=\"{le}\""));
+        out.push_str(&format!("{name}_bucket{{{labels}}} {cumulative}\n"));
+    }
+    let labels = join_labels(extra, "le=\"+Inf\"");
+    out.push_str(&format!("{name}_bucket{{{labels}}} {cumulative}\n"));
+    if extra.is_empty() {
+        out.push_str(&format!("{name}_sum {}\n", hist.sum()));
+        out.push_str(&format!("{name}_count {}\n", hist.count()));
+    } else {
+        out.push_str(&format!("{name}_sum{{{extra}}} {}\n", hist.sum()));
+        out.push_str(&format!("{name}_count{{{extra}}} {}\n", hist.count()));
+    }
+}
+
+fn join_labels(a: &str, b: &str) -> String {
+    if a.is_empty() {
+        b.to_string()
+    } else {
+        format!("{a},{b}")
+    }
+}
+
+/// Map a registry histogram name back to its pipeline stage, if it is
+/// one of the `stage_latency_*` family minted by [`crate::obs::Obs`].
+fn stage_of(name: &str) -> Option<Stage> {
+    let suffix = name.strip_prefix("stage_latency_")?;
+    Stage::ALL.into_iter().find(|s| s.name() == suffix)
+}
+
+/// Prometheus metric names allow `[a-zA-Z0-9_:]`; we keep to the
+/// conservative subset and fold anything else to `_`.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect()
+}
+
+/// Format an f64 the way Prometheus text format expects.
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::stage_hist_name;
+
+    /// Minimal exposition-format checker: every non-comment line is
+    /// `name{labels} value` or `name value`, labels are `k="v"` pairs,
+    /// value parses as f64 (or NaN/±Inf). Returns metric family names.
+    fn parse_families(text: &str) -> Vec<String> {
+        let mut families = Vec::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let fam = it.next().expect("family name");
+                let kind = it.next().expect("family kind");
+                assert!(
+                    matches!(kind, "counter" | "gauge" | "histogram"),
+                    "bad kind: {line}"
+                );
+                families.push(fam.to_string());
+                continue;
+            }
+            assert!(!line.starts_with('#'), "unexpected comment: {line}");
+            let (name_part, value) = line.rsplit_once(' ').expect("name value");
+            let bare = match name_part.find('{') {
+                Some(open) => {
+                    assert!(name_part.ends_with('}'), "unclosed labels: {line}");
+                    let labels = &name_part[open + 1..name_part.len() - 1];
+                    for pair in labels.split(',') {
+                        let (k, v) = pair.split_once('=').expect("label pair");
+                        assert!(!k.is_empty() && v.starts_with('"') && v.ends_with('"'));
+                    }
+                    &name_part[..open]
+                }
+                None => name_part,
+            };
+            assert!(
+                bare.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                "bad metric name: {bare}"
+            );
+            assert!(
+                matches!(value, "NaN" | "+Inf" | "-Inf") || value.parse::<f64>().is_ok(),
+                "bad value: {line}"
+            );
+        }
+        families
+    }
+
+    #[test]
+    fn renders_counters_gauges_histograms() {
+        let reg = Registry::new();
+        reg.counter("pushes").add(42);
+        reg.gauge("depth").set(3.5);
+        reg.gauge("empty").set(f64::NAN);
+        let h = reg.histogram("lat");
+        h.record(3);
+        h.record(100);
+        let text = render(&reg);
+        let families = parse_families(&text);
+        assert!(families.contains(&"ata_pushes".to_string()));
+        assert!(families.contains(&"ata_depth".to_string()));
+        assert!(families.contains(&"ata_lat".to_string()));
+        assert!(text.contains("ata_pushes 42\n"));
+        assert!(text.contains("ata_depth 3.5\n"));
+        assert!(text.contains("ata_empty NaN\n"));
+        // value 3 → bucket [2,4) → le=3 cumulative 1; 100 → [64,128) → le=127.
+        assert!(text.contains("ata_lat_bucket{le=\"3\"} 1\n"), "{text}");
+        assert!(text.contains("ata_lat_bucket{le=\"127\"} 2\n"), "{text}");
+        assert!(text.contains("ata_lat_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("ata_lat_sum 103\n"));
+        assert!(text.contains("ata_lat_count 2\n"));
+    }
+
+    #[test]
+    fn stage_family_folds_under_one_name_with_labels() {
+        let reg = Registry::new();
+        for s in Stage::ALL {
+            reg.histogram(&stage_hist_name(s)).record(1 + s as u64);
+        }
+        let text = render(&reg);
+        let families = parse_families(&text);
+        assert_eq!(
+            families
+                .iter()
+                .filter(|f| f.starts_with("ata_stage_latency"))
+                .count(),
+            1,
+            "one folded family, not six: {families:?}"
+        );
+        for s in Stage::ALL {
+            let want = format!("ata_stage_latency_ns_count{{stage=\"{}\"}} 1\n", s.name());
+            assert!(text.contains(&want), "missing {want} in:\n{text}");
+        }
+        // Declaration order (admission first), not alphabetical.
+        let adm = text.find("stage=\"admission\"").unwrap();
+        let ack = text.find("stage=\"ack_write\"").unwrap();
+        assert!(adm < ack, "stages out of pipeline order");
+    }
+
+    #[test]
+    fn sanitizes_hostile_names() {
+        let reg = Registry::new();
+        reg.counter("weird-name.with:stuff").inc();
+        let text = render(&reg);
+        parse_families(&text);
+        assert!(text.contains("ata_weird_name_with_stuff 1\n"));
+    }
+
+    #[test]
+    fn empty_registry_renders_empty() {
+        assert_eq!(render(&Registry::new()), "");
+    }
+}

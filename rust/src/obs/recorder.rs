@@ -1,0 +1,367 @@
+//! Lock-free flight recorder: a fixed-size ring of compact binary
+//! events, one per shard.
+//!
+//! Writers claim a slot with one `fetch_add` on the head and publish
+//! through a per-slot sequence (odd while writing, even when stable),
+//! so concurrent writers never block and a snapshot can detect and skip
+//! a slot that was mid-write — the classic seqlock, per slot. The ring
+//! keeps the most recent `capacity` events; older ones are overwritten.
+//!
+//! Events are compact (five words) and carry the trace id and stream
+//! handle, so a panic dump or an `introspect` snapshot can answer
+//! "what were the last 4k things this shard did, and on whose behalf?"
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// What happened. Wire-stable discriminants (the event binary codec and
+/// the v2 `introspect` op ship them as `u8`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A push batch was applied; `arg` = sample count.
+    Push = 1,
+    /// A batch was dropped (backpressure); `arg` = sample count.
+    Drop = 2,
+    /// A batch was quarantined by a worker panic; `arg` = strike count.
+    Quarantine = 3,
+    /// A stream crossed the poison threshold and was isolated.
+    Poison = 4,
+    /// A request was refused with an overload rejection.
+    Overload = 5,
+    /// The shard's WAL rotated to a new segment; `arg` = new segment.
+    WalRotation = 6,
+    /// A checkpoint captured this shard; `arg` = streams captured.
+    Checkpoint = 7,
+}
+
+impl EventKind {
+    /// Decode a wire discriminant.
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        match v {
+            1 => Some(EventKind::Push),
+            2 => Some(EventKind::Drop),
+            3 => Some(EventKind::Quarantine),
+            4 => Some(EventKind::Poison),
+            5 => Some(EventKind::Overload),
+            6 => Some(EventKind::WalRotation),
+            7 => Some(EventKind::Checkpoint),
+            _ => None,
+        }
+    }
+
+    /// Human label (`ata top`, panic dumps).
+    pub fn label(self) -> &'static str {
+        match self {
+            EventKind::Push => "push",
+            EventKind::Drop => "drop",
+            EventKind::Quarantine => "quarantine",
+            EventKind::Poison => "poison",
+            EventKind::Overload => "overload",
+            EventKind::WalRotation => "wal_rotation",
+            EventKind::Checkpoint => "checkpoint",
+        }
+    }
+}
+
+/// One recorded event, as plain data.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Which shard recorded it.
+    pub shard: u16,
+    /// Trace id of the request that caused it (0 = untraced).
+    pub trace_id: u64,
+    /// Stream handle involved (0 = none).
+    pub handle: u64,
+    /// Kind-specific argument (count, strike, segment …).
+    pub arg: u64,
+    /// Nanoseconds since the recorder was created.
+    pub at_nanos: u64,
+}
+
+/// Byte length of one encoded event (see [`Event::encode`]).
+pub const EVENT_ENCODED_LEN: usize = 1 + 2 + 8 + 8 + 8 + 8;
+
+impl Event {
+    /// Compact binary form: `[kind u8][shard u16][trace u64][handle u64]
+    /// [arg u64][at_nanos u64]`, little-endian.
+    pub fn encode(&self, enc: &mut crate::persist::codec::Enc) {
+        enc.put_u8(self.kind as u8);
+        enc.put_u16(self.shard);
+        enc.put_u64(self.trace_id);
+        enc.put_u64(self.handle);
+        enc.put_u64(self.arg);
+        enc.put_u64(self.at_nanos);
+    }
+
+    /// Decode one event; errors (never panics) on truncation or an
+    /// unknown kind tag.
+    pub fn decode(dec: &mut crate::persist::codec::Dec<'_>) -> Result<Event, String> {
+        let tag = dec.get_u8()?;
+        let kind =
+            EventKind::from_u8(tag).ok_or_else(|| format!("unknown flight event kind {tag}"))?;
+        Ok(Event {
+            kind,
+            shard: dec.get_u16()?,
+            trace_id: dec.get_u64()?,
+            handle: dec.get_u64()?,
+            arg: dec.get_u64()?,
+            at_nanos: dec.get_u64()?,
+        })
+    }
+}
+
+/// One ring slot: a seqlock word plus the event packed into four words.
+/// `seq` is odd while a writer owns the slot; a reader accepts the slot
+/// only when it observes the same even `seq` before and after copying.
+#[derive(Default)]
+struct Slot {
+    seq: AtomicU64,
+    meta: AtomicU64, // kind (low 8) | shard (next 16)
+    trace_id: AtomicU64,
+    handle: AtomicU64,
+    arg: AtomicU64,
+    at_nanos: AtomicU64,
+}
+
+/// The per-shard ring. All writes are wait-free (`fetch_add` + plain
+/// stores); snapshots are lock-free and skip torn slots.
+pub struct FlightRecorder {
+    shard: u16,
+    slots: Vec<Slot>,
+    head: AtomicU64,
+    epoch: Instant,
+}
+
+impl FlightRecorder {
+    /// A ring holding the most recent `capacity` events (rounded up to
+    /// a power of two, minimum 8).
+    pub fn new(shard: u16, capacity: usize) -> FlightRecorder {
+        let cap = capacity.max(8).next_power_of_two();
+        FlightRecorder {
+            shard,
+            slots: (0..cap).map(|_| Slot::default()).collect(),
+            head: AtomicU64::new(0),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Ring capacity (events retained).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Events recorded since creation (not capped by capacity).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Record one event. Wait-free; overwrites the oldest slot when the
+    /// ring is full.
+    ///
+    /// Two writers can only collide on a slot when one has been lapped —
+    /// stalled for a full ring revolution while another claimed the same
+    /// slot `capacity` events later. A plain seqlock bump would go
+    /// *even* during the second writer's store phase and let a reader
+    /// accept the torn interleaving, so the claim is a CAS instead: the
+    /// loser skips its write (the recorder is best-effort by design) and
+    /// every publish value `2n+2` is unique to its event index, which
+    /// makes the reader's before/after compare immune to ABA.
+    pub fn record(&self, kind: EventKind, trace_id: u64, handle: u64, arg: u64) {
+        let n = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(n as usize) & (self.slots.len() - 1)];
+        let cur = slot.seq.load(Ordering::Relaxed);
+        if cur & 1 == 1 {
+            return; // lapped a stalled writer: drop this event
+        }
+        // Claim: advance to this event's odd phase.
+        if slot
+            .seq
+            .compare_exchange(cur, 2 * n + 1, Ordering::AcqRel, Ordering::Relaxed)
+            .is_err()
+        {
+            return; // raced another claimant: drop
+        }
+        slot.meta.store(
+            (kind as u8 as u64) | ((self.shard as u64) << 8),
+            Ordering::Relaxed,
+        );
+        slot.trace_id.store(trace_id, Ordering::Relaxed);
+        slot.handle.store(handle, Ordering::Relaxed);
+        slot.arg.store(arg, Ordering::Relaxed);
+        slot.at_nanos
+            .store(self.epoch.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        // Publish: this event's even phase (unique per index).
+        slot.seq.store(2 * n + 2, Ordering::Release);
+    }
+
+    /// Snapshot the most recent events, oldest first, skipping any slot
+    /// a writer was mid-flight in. `limit = 0` means the whole ring.
+    pub fn snapshot(&self, limit: usize) -> Vec<Event> {
+        let head = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let want = if limit == 0 { cap } else { (limit as u64).min(cap) };
+        let live = head.min(want);
+        let mut out = Vec::with_capacity(live as usize);
+        for n in (head - live)..head {
+            let slot = &self.slots[(n as usize) & (self.slots.len() - 1)];
+            let before = slot.seq.load(Ordering::Acquire);
+            if before & 1 == 1 {
+                continue; // writer mid-flight
+            }
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let ev = Event {
+                kind: match EventKind::from_u8((meta & 0xFF) as u8) {
+                    Some(k) => k,
+                    None => continue, // never-written slot
+                },
+                shard: ((meta >> 8) & 0xFFFF) as u16,
+                trace_id: slot.trace_id.load(Ordering::Relaxed),
+                handle: slot.handle.load(Ordering::Relaxed),
+                arg: slot.arg.load(Ordering::Relaxed),
+                at_nanos: slot.at_nanos.load(Ordering::Relaxed),
+            };
+            if slot.seq.load(Ordering::Acquire) != before {
+                continue; // torn: overwritten while copying
+            }
+            out.push(ev);
+        }
+        out
+    }
+
+    /// Render the newest `limit` events as log lines (the supervisor's
+    /// panic dump).
+    pub fn dump(&self, limit: usize) -> String {
+        let events = self.snapshot(limit);
+        let mut out = String::with_capacity(events.len() * 64);
+        for e in &events {
+            out.push_str(&format!(
+                "  [{:>12}ns shard {}] {} trace_id={} handle={} arg={}\n",
+                e.at_nanos,
+                e.shard,
+                e.kind.label(),
+                e.trace_id,
+                e.handle,
+                e.arg
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::codec::{Dec, Enc};
+    use std::sync::Arc;
+
+    #[test]
+    fn records_and_snapshots_in_order() {
+        let r = FlightRecorder::new(3, 16);
+        for i in 0..5u64 {
+            r.record(EventKind::Push, 100 + i, 7, i);
+        }
+        let events = r.snapshot(0);
+        assert_eq!(events.len(), 5);
+        for (i, e) in events.iter().enumerate() {
+            assert_eq!(e.kind, EventKind::Push);
+            assert_eq!(e.shard, 3);
+            assert_eq!(e.trace_id, 100 + i as u64);
+            assert_eq!(e.arg, i as u64);
+        }
+        // at_nanos is nondecreasing.
+        assert!(events.windows(2).all(|w| w[0].at_nanos <= w[1].at_nanos));
+        assert_eq!(r.snapshot(2).len(), 2);
+        assert_eq!(r.snapshot(2)[0].trace_id, 103);
+    }
+
+    #[test]
+    fn ring_wraps_keeping_the_newest() {
+        let r = FlightRecorder::new(0, 8); // capacity 8
+        assert_eq!(r.capacity(), 8);
+        for i in 0..100u64 {
+            r.record(EventKind::Drop, i, 0, 0);
+        }
+        assert_eq!(r.recorded(), 100);
+        let events = r.snapshot(0);
+        assert_eq!(events.len(), 8, "ring holds exactly capacity");
+        let ids: Vec<u64> = events.iter().map(|e| e.trace_id).collect();
+        assert_eq!(ids, (92..100).collect::<Vec<u64>>(), "newest survive");
+    }
+
+    #[test]
+    fn concurrent_writers_never_produce_torn_events() {
+        // Property: every snapshotted event must be one a writer
+        // actually wrote — trace_id encodes (writer, i) and arg must
+        // equal trace_id ^ MARK, which a torn interleaving of two
+        // writers' stores would violate.
+        const MARK: u64 = 0xDEAD_BEEF_CAFE_F00D;
+        let r = Arc::new(FlightRecorder::new(1, 64));
+        let mut handles = Vec::new();
+        for w in 0..4u64 {
+            let r = Arc::clone(&r);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..5_000u64 {
+                    let id = (w << 32) | i;
+                    r.record(EventKind::Push, id, id ^ MARK, id ^ MARK);
+                }
+            }));
+        }
+        let reader = {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || {
+                let mut checked = 0u64;
+                for _ in 0..200 {
+                    for e in r.snapshot(0) {
+                        assert_eq!(e.handle, e.trace_id ^ MARK, "torn event surfaced");
+                        assert_eq!(e.arg, e.trace_id ^ MARK, "torn event surfaced");
+                        checked += 1;
+                    }
+                }
+                checked
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(reader.join().unwrap() > 0, "reader saw events");
+        assert_eq!(r.recorded(), 20_000);
+        let final_events = r.snapshot(0);
+        assert_eq!(final_events.len(), 64, "full ring after the storm");
+    }
+
+    #[test]
+    fn event_codec_roundtrip_and_hostile_decode() {
+        let ev = Event {
+            kind: EventKind::Quarantine,
+            shard: 9,
+            trace_id: u64::MAX - 1,
+            handle: 0x1234_5678_9ABC_DEF0,
+            arg: 3,
+            at_nanos: 1_000_000,
+        };
+        let mut enc = Enc::new();
+        ev.encode(&mut enc);
+        assert_eq!(enc.len(), EVENT_ENCODED_LEN);
+        let bytes = enc.into_bytes();
+        let got = Event::decode(&mut Dec::new(&bytes)).unwrap();
+        assert_eq!(got, ev);
+        // Unknown kind and truncations error, never panic.
+        let mut bad = bytes.clone();
+        bad[0] = 0xEE;
+        assert!(Event::decode(&mut Dec::new(&bad)).is_err());
+        for cut in 0..bytes.len() {
+            assert!(Event::decode(&mut Dec::new(&bytes[..cut])).is_err());
+        }
+    }
+
+    #[test]
+    fn dump_renders_lines() {
+        let r = FlightRecorder::new(2, 8);
+        r.record(EventKind::Poison, 11, 22, 33);
+        let dump = r.dump(8);
+        assert!(dump.contains("poison"), "{dump}");
+        assert!(dump.contains("trace_id=11"), "{dump}");
+        assert!(dump.contains("shard 2"), "{dump}");
+    }
+}

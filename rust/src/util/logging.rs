@@ -3,6 +3,14 @@
 //! Global logger with a runtime-settable level (default `Info`, overridable
 //! via the `ATA_LOG` environment variable: `error|warn|info|debug|trace`).
 //! Thread-safe; writes to stderr so reports on stdout stay clean.
+//!
+//! Structured fields ride as a `key=value` suffix after the message
+//! ([`emit_kv`] / the [`crate::log_kv!`] macro); traced scopes attach
+//! `trace_id=...` this way so a grep for one request's trace id walks
+//! its whole lifecycle. `ATA_LOG_FORMAT=json` (or
+//! [`set_format`]`(Format::Json)`) switches every line to one JSON
+//! object — same fields, machine-parseable, still one `write_all` per
+//! line so concurrent threads never interleave mid-record.
 
 use std::fmt;
 use std::io::Write;
@@ -89,22 +97,136 @@ pub fn enabled(level: Level) -> bool {
     level <= max_level()
 }
 
-/// Core emit function — prefer the [`crate::log_info!`]-style macros.
-pub fn emit(level: Level, module: &str, msg: fmt::Arguments<'_>) {
+/// Output format for every log line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// `[secs.millis LEVEL module] message key=value ...`
+    Text = 0,
+    /// One JSON object per line: `{"ts":...,"level":...,"module":...,
+    /// "msg":...,"key":"value",...}` — field values are rendered to
+    /// strings, so wide u64s (trace ids) survive any JSON consumer.
+    Json = 1,
+}
+
+static FORMAT: AtomicU8 = AtomicU8::new(u8::MAX); // u8::MAX = uninitialized
+
+fn init_format_from_env() -> u8 {
+    let fmt = match std::env::var("ATA_LOG_FORMAT").ok().as_deref() {
+        Some(s) if s.eq_ignore_ascii_case("json") => Format::Json,
+        _ => Format::Text,
+    };
+    let v = fmt as u8;
+    FORMAT.store(v, Ordering::Relaxed);
+    v
+}
+
+/// Current output format (`ATA_LOG_FORMAT=json` selects JSON).
+pub fn format() -> Format {
+    let v = FORMAT.load(Ordering::Relaxed);
+    let v = if v == u8::MAX {
+        init_format_from_env()
+    } else {
+        v
+    };
+    if v == Format::Json as u8 {
+        Format::Json
+    } else {
+        Format::Text
+    }
+}
+
+/// Override the output format programmatically (wins over the env var).
+pub fn set_format(fmt: Format) {
+    FORMAT.store(fmt as u8, Ordering::Relaxed);
+}
+
+/// Minimal JSON string escaping for log fields (quotes, backslashes,
+/// control characters) — enough for any `Display` rendering.
+fn json_escape_into(out: &mut String, s: &str) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Render one log record in the active format. Separated from the
+/// stderr write so tests can assert on the exact line shape.
+pub fn render_line(
+    format: Format,
+    secs: u64,
+    millis: u32,
+    level: Level,
+    module: &str,
+    msg: &str,
+    fields: &[(&str, String)],
+) -> String {
+    match format {
+        Format::Text => {
+            let mut line = format!("[{secs}.{millis:03} {} {module}] {msg}", level.tag());
+            for (k, v) in fields {
+                line.push(' ');
+                line.push_str(k);
+                line.push('=');
+                line.push_str(v);
+            }
+            line.push('\n');
+            line
+        }
+        Format::Json => {
+            let mut line = String::with_capacity(96);
+            line.push_str(&format!("{{\"ts\":{secs}.{millis:03},\"level\":\"{level}\","));
+            line.push_str("\"module\":");
+            json_escape_into(&mut line, module);
+            line.push_str(",\"msg\":");
+            json_escape_into(&mut line, msg);
+            for (k, v) in fields {
+                line.push(',');
+                json_escape_into(&mut line, k);
+                line.push(':');
+                json_escape_into(&mut line, v);
+            }
+            line.push_str("}\n");
+            line
+        }
+    }
+}
+
+/// Core structured emit — message plus `key=value` fields. Prefer the
+/// [`crate::log_kv!`] macro at call sites.
+pub fn emit_kv(level: Level, module: &str, msg: fmt::Arguments<'_>, fields: &[(&str, String)]) {
     if !enabled(level) {
         return;
     }
     let now = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .unwrap_or_default();
-    let secs = now.as_secs();
-    let millis = now.subsec_millis();
-    // Single write so concurrent threads do not interleave mid-line.
-    let line = format!(
-        "[{secs}.{millis:03} {} {module}] {msg}\n",
-        level.tag()
+    let line = render_line(
+        format(),
+        now.as_secs(),
+        now.subsec_millis(),
+        level,
+        module,
+        &msg.to_string(),
+        fields,
     );
+    // Single write so concurrent threads do not interleave mid-line.
     let _ = std::io::stderr().write_all(line.as_bytes());
+}
+
+/// Core emit function — prefer the [`crate::log_info!`]-style macros.
+pub fn emit(level: Level, module: &str, msg: fmt::Arguments<'_>) {
+    emit_kv(level, module, msg, &[]);
 }
 
 /// `log_error!(module, fmt, args...)`
@@ -139,6 +261,24 @@ macro_rules! log_debug {
     };
 }
 
+/// Structured log line with `key=value` fields:
+/// `log_kv!(Level::Info, module, { "trace_id" => trace, "peer" => addr }, fmt, args...)`.
+/// Field values are rendered via `Display`; under `ATA_LOG_FORMAT=json`
+/// each becomes a string field of the line's JSON object.
+#[macro_export]
+macro_rules! log_kv {
+    ($level:expr, $module:expr, { $($k:literal => $v:expr),* $(,)? }, $($arg:tt)*) => {
+        if $crate::util::logging::enabled($level) {
+            $crate::util::logging::emit_kv(
+                $level,
+                $module,
+                format_args!($($arg)*),
+                &[$(($k, ::std::string::ToString::to_string(&$v))),*],
+            )
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,4 +309,50 @@ mod tests {
         assert!(enabled(Level::Debug));
         set_level(Level::Info); // restore default-ish for other tests
     }
+
+    #[test]
+    fn text_lines_append_key_value_suffix() {
+        let fields = vec![
+            ("trace_id", "18446744073709551615".to_string()),
+            ("shard", "3".to_string()),
+        ];
+        let line = render_line(Format::Text, 12, 7, Level::Info, "coordinator", "drained", &fields);
+        assert_eq!(
+            line,
+            "[12.007 INFO  coordinator] drained trace_id=18446744073709551615 shard=3\n"
+        );
+        // No fields → byte-identical to the historical plain format.
+        let bare = render_line(Format::Text, 12, 7, Level::Info, "coordinator", "drained", &[]);
+        assert_eq!(bare, "[12.007 INFO  coordinator] drained\n");
+    }
+
+    #[test]
+    fn json_lines_are_one_parseable_object_each() {
+        let fields = vec![("trace_id", "41".to_string())];
+        let line = render_line(
+            Format::Json,
+            9,
+            42,
+            Level::Warn,
+            "coordinator::server",
+            "panic \"boom\"\nquarantined",
+            &fields,
+        );
+        assert!(line.ends_with('\n'));
+        assert_eq!(line.matches('\n').count(), 1, "one record, one line");
+        let parsed = crate::util::json::Json::parse(line.trim_end()).expect("valid JSON");
+        assert_eq!(parsed.get("level").and_then(Json::as_str), Some("WARN"));
+        assert_eq!(
+            parsed.get("module").and_then(Json::as_str),
+            Some("coordinator::server")
+        );
+        assert_eq!(
+            parsed.get("msg").and_then(Json::as_str),
+            Some("panic \"boom\"\nquarantined")
+        );
+        assert_eq!(parsed.get("trace_id").and_then(Json::as_str), Some("41"));
+        assert_eq!(parsed.get("ts").and_then(Json::as_f64), Some(9.042));
+    }
+
+    use crate::util::json::Json;
 }

@@ -18,6 +18,7 @@ use ata::coordinator::{
     Client, ClientError, Coordinator, ProtocolChoice, RetryPolicy, RetryingClient, Server,
     ServerOptions,
 };
+use ata::obs::recorder::EventKind;
 use ata::testkit::chaos;
 use ata::testkit::temp_dir;
 use std::path::Path;
@@ -330,5 +331,62 @@ fn slow_disk_overload_sheds_load_and_retrying_client_rides_it_out() {
         "server must count shed responses ({shed_seen} < {})",
         shed_v2 + shed_v1
     );
+    drop(server);
+}
+
+/// Forensics: when an injected worker panic quarantines a batch, the
+/// flight-recorder ring the panic handler dumps must still hold that
+/// batch's trace_id — the whole point of the recorder is that the
+/// operator can join the panic report back to the request that died.
+/// End-to-end: the trace is minted by the client, echoed in the ack,
+/// and must reappear on the `quarantine` event in the introspect
+/// snapshot of the same ring.
+#[test]
+fn quarantining_panic_leaves_its_trace_in_the_flight_ring() {
+    let _guard = chaos::test_mutex().lock().unwrap_or_else(|e| e.into_inner());
+    chaos::disarm();
+    let c = Arc::new(Coordinator::new(1, 64, BackpressurePolicy::Block));
+    let server =
+        Server::start_with_options("127.0.0.1:0", Arc::clone(&c), 2, ServerOptions::default())
+            .expect("server");
+    let addr = server.addr().to_string();
+    let mut cl = Client::connect(&addr).expect("client");
+    let stream = format!("{SOAK_PREFIX}trace");
+    cl.register(&stream, 2, "gea(c=0.5)").expect("register");
+    cl.sync().expect("pre-chaos sync");
+
+    // Every prefixed batch panics its worker mid-apply — one push, one
+    // deterministic quarantine.
+    chaos::arm(chaos::ChaosPlan {
+        seed: 0x7AC3_D00D,
+        panic_per_mille: 1000,
+        panic_prefix: Some(SOAK_PREFIX),
+        ..Default::default()
+    });
+    cl.push_many(&stream, 2, &[1.0, 2.0, 3.0, 4.0])
+        .expect("block policy acks at enqueue, before the panic");
+    let trace = cl.last_trace_id();
+    assert_ne!(trace, 0, "the ack must echo the minted trace");
+    cl.sync().expect("post-panic sync");
+    chaos::disarm();
+    assert!(
+        chaos::injected(chaos::Site::WorkerPanic) > 0,
+        "the prefixed batch must have panicked its worker"
+    );
+
+    // The ring the panic handler dumped is the same one introspect
+    // snapshots: the quarantine event carries the request's trace.
+    let report = cl.introspect().expect("introspect");
+    assert!(
+        report
+            .events
+            .iter()
+            .any(|e| e.kind == EventKind::Quarantine && e.trace_id == trace),
+        "quarantine event with trace_id={trace} missing from ring: {:?}",
+        report.events
+    );
+    // And the batch's samples are surfaced as drops, not vanished.
+    let snap = cl.snapshot(&stream).expect("snapshot");
+    assert_eq!((snap.t, snap.dropped), (0, 2));
     drop(server);
 }

@@ -292,7 +292,7 @@ fn arb_v2_request(g: &mut Gen) -> Request {
     let data = |g: &mut Gen, n: usize| -> Vec<f64> {
         (0..n).map(|_| g.f64_range(-1e6, 1e6)).collect()
     };
-    match g.usize_range(0, 11) {
+    match g.usize_range(0, 13) {
         0 => Request::Ping,
         1 => Request::Register {
             stream: format!("s{}", g.usize_range(0, 1000)),
@@ -354,6 +354,8 @@ fn arb_v2_request(g: &mut Gen) -> Request {
                 .map(|_| StreamRef::Handle(g.u64()))
                 .collect(),
         },
+        11 => Request::Introspect,
+        12 => Request::MetricsProm,
         _ => Request::ExportState {
             stream: StreamRef::Handle(g.u64()),
         },
@@ -376,6 +378,8 @@ fn v2_decoder_never_panics_on_garbage() {
             OpKind::ExportState,
             OpKind::Query,
             OpKind::MultiSnapshot,
+            OpKind::Introspect,
+            OpKind::MetricsProm,
         ] {
             let _ = protocol::decode_response(Wire::V2Binary, kind, &bytes);
         }
@@ -424,11 +428,12 @@ fn v2_analytics_responses_roundtrip_and_mutations_never_panic() {
             _ => OpKind::MultiSnapshot,
         };
         let mut buf = Vec::new();
-        protocol::encode_response(Wire::V2Binary, 7, &resp, &mut buf)
+        let trace = g.u64();
+        protocol::encode_response(Wire::V2Binary, 7, trace, &resp, &mut buf)
             .map_err(|e| e.to_string())?;
-        let (seq, back) =
+        let (seq, got_trace, back) =
             protocol::decode_response(Wire::V2Binary, kind, &buf).map_err(|e| e.to_string())?;
-        if seq != 7 || back != resp {
+        if seq != 7 || got_trace != trace || back != resp {
             return Err(format!("roundtrip mismatch: {back:?} vs {resp:?}"));
         }
         // Truncations and bit flips error, never panic.
@@ -455,12 +460,13 @@ fn v2_request_roundtrip_and_mutations_never_panic() {
     Runner::new("v2 request roundtrip", 0xFB).run(300, |g| {
         let req = arb_v2_request(g);
         let seq = g.u64();
+        let trace = g.u64();
         let mut buf = Vec::new();
-        protocol::encode_request(Wire::V2Binary, seq, &req, &mut buf)
+        protocol::encode_request(Wire::V2Binary, seq, trace, &req, &mut buf)
             .map_err(|e| e.to_string())?;
-        let (got_seq, back) =
+        let (got_seq, got_trace, back) =
             protocol::decode_request(Wire::V2Binary, &buf).map_err(|e| e.to_string())?;
-        if got_seq != seq || back != req {
+        if got_seq != seq || got_trace != trace || back != req {
             return Err(format!("roundtrip mismatch: {back:?} vs {req:?}"));
         }
         // A random mutation of a valid frame must decode-or-error,
@@ -550,6 +556,165 @@ fn v2_frames_over_a_live_connection_never_kill_the_server() {
         protocol::read_frame_into(&mut check, &mut buf)
             .map_err(|e| e.to_string())?
             .ok_or("server gone after garbage session")?;
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Observability codecs: flight-recorder events and the introspect report
+// ---------------------------------------------------------------------------
+
+use ata::obs::introspect::{BankReport, IntrospectReport, ShardReport, StreamReport};
+use ata::obs::recorder::{Event, EventKind, EVENT_ENCODED_LEN};
+use ata::obs::SpanRecord;
+
+fn arb_event(g: &mut Gen) -> Event {
+    let kinds = [
+        EventKind::Push,
+        EventKind::Drop,
+        EventKind::Quarantine,
+        EventKind::Poison,
+        EventKind::Overload,
+        EventKind::WalRotation,
+        EventKind::Checkpoint,
+    ];
+    Event {
+        kind: *g.choose(&kinds[..]),
+        shard: (g.u64() & 0xFFFF) as u16,
+        trace_id: g.u64(),
+        handle: g.u64(),
+        arg: g.u64(),
+        at_nanos: g.u64(),
+    }
+}
+
+/// Count-like report fields ride the JSON codec as plain numbers, so
+/// their roundtrip contract only covers the f64-exact integer domain
+/// (< 2^53) — ids (`trace_id`, `handle`) travel as decimal strings and
+/// keep full u64 range. The generator mirrors that split.
+const MAX_SAFE_COUNT: u64 = (1 << 53) - 1;
+
+fn arb_introspect(g: &mut Gen) -> IntrospectReport {
+    IntrospectReport {
+        sample_per_mille: (g.u64() % 1001) as u32,
+        shards: (0..g.usize_range(0, 4))
+            .map(|i| ShardReport {
+                shard: i as u16,
+                queue_depth: g.u64() & 0xFFFF,
+                worker_starts: g.u64() & 0xFF,
+                wal_segment: g.u64() & MAX_SAFE_COUNT,
+                wal_offset: g.u64() & MAX_SAFE_COUNT,
+                events_recorded: g.u64() & MAX_SAFE_COUNT,
+            })
+            .collect(),
+        banks: (0..g.usize_range(0, 3))
+            .map(|i| BankReport {
+                index: i as u64,
+                dim: g.u64() & 0xFFF,
+                rows: g.u64() & 0xFFFF,
+                row_floats: g.u64() & MAX_SAFE_COUNT,
+            })
+            .collect(),
+        streams: (0..g.usize_range(0, 4))
+            .map(|_| StreamReport {
+                name: arb_string(g),
+                handle: g.u64(),
+                dropped: g.u64() & MAX_SAFE_COUNT,
+                strikes: g.u64() & 0xFF,
+                poisoned: g.bool(0.3),
+            })
+            .collect(),
+        events: (0..g.usize_range(0, 5))
+            .map(|_| {
+                let mut e = arb_event(g);
+                e.arg &= MAX_SAFE_COUNT;
+                e.at_nanos &= MAX_SAFE_COUNT;
+                e
+            })
+            .collect(),
+        spans: (0..g.usize_range(0, 3))
+            .map(|_| SpanRecord {
+                trace_id: g.u64(),
+                stage_ns: [
+                    g.u64() & MAX_SAFE_COUNT,
+                    g.u64() & MAX_SAFE_COUNT,
+                    g.u64() & MAX_SAFE_COUNT,
+                    g.u64() & MAX_SAFE_COUNT,
+                    g.u64() & MAX_SAFE_COUNT,
+                    g.u64() & MAX_SAFE_COUNT,
+                ],
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn flight_event_codec_roundtrips_and_survives_garbage() {
+    Runner::new("flight event codec fuzz", 0xE1).run(300, |g| {
+        // Valid events round-trip at the documented encoded length.
+        let ev = arb_event(g);
+        let mut enc = Enc::new();
+        ev.encode(&mut enc);
+        let bytes = enc.into_bytes();
+        if bytes.len() != EVENT_ENCODED_LEN {
+            return Err(format!("encoded {} bytes, expected {EVENT_ENCODED_LEN}", bytes.len()));
+        }
+        let back = Event::decode(&mut Dec::new(&bytes)).map_err(|e| e.to_string())?;
+        if back != ev {
+            return Err(format!("{back:?} != {ev:?}"));
+        }
+        // Truncations error (never panic) — the decoder bounds-checks.
+        let cut = g.usize_range(0, bytes.len() - 1);
+        if Event::decode(&mut Dec::new(&bytes[..cut])).is_ok() {
+            return Err(format!("truncated event (cut {cut}) decoded"));
+        }
+        // A corrupted kind tag is a structured error, not a panic, and
+        // arbitrary byte soup never panics either.
+        let mut bad = bytes.clone();
+        bad[0] = (g.u64() & 0xFF) as u8;
+        let _ = Event::decode(&mut Dec::new(&bad));
+        let soup = arb_bytes(g, 64);
+        let _ = Event::decode(&mut Dec::new(&soup));
+        Ok(())
+    });
+}
+
+#[test]
+fn introspect_report_codecs_roundtrip_and_survive_mutations() {
+    Runner::new("introspect codec fuzz", 0xE2).run(120, |g| {
+        let report = arb_introspect(g);
+        // Binary codec (the v2 wire form).
+        let mut enc = Enc::new();
+        report.encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let back =
+            IntrospectReport::decode(&mut Dec::new(&bytes)).map_err(|e| e.to_string())?;
+        if back != report {
+            return Err("binary roundtrip mismatch".into());
+        }
+        // JSON codec (the v1 envelope form) — wide u64s must survive.
+        let back = IntrospectReport::from_json(&report.to_json()).map_err(|e| e.to_string())?;
+        if back != report {
+            return Err("json roundtrip mismatch".into());
+        }
+        // Mutations of the binary form error-or-decode, never panic.
+        let mut mutated = bytes.clone();
+        match g.usize_range(0, 2) {
+            0 => {
+                let cut = g.usize_range(0, mutated.len());
+                mutated.truncate(cut);
+            }
+            _ => {
+                if !mutated.is_empty() {
+                    let at = g.usize_range(0, mutated.len() - 1);
+                    mutated[at] ^= 1 << g.usize_range(0, 7);
+                }
+            }
+        }
+        let _ = IntrospectReport::decode(&mut Dec::new(&mutated));
+        // Byte soup through the whole response decoder for this op.
+        let soup = arb_bytes(g, 200);
+        let _ = protocol::decode_response(Wire::V2Binary, OpKind::Introspect, &soup);
         Ok(())
     });
 }

@@ -48,7 +48,11 @@ impl RawV2 {
     }
 
     fn send(&mut self, seq: u64, req: &Request) {
-        protocol::encode_request(Wire::V2Binary, seq, req, &mut self.buf).expect("encode");
+        self.send_traced(seq, 0, req);
+    }
+
+    fn send_traced(&mut self, seq: u64, trace: u64, req: &Request) {
+        protocol::encode_request(Wire::V2Binary, seq, trace, req, &mut self.buf).expect("encode");
         wire::write_frame_bytes(&mut self.s, &self.buf).expect("send frame");
     }
 
@@ -57,6 +61,11 @@ impl RawV2 {
     }
 
     fn recv(&mut self, kind: OpKind) -> (u64, Response) {
+        let (seq, _trace, resp) = self.recv_traced(kind);
+        (seq, resp)
+    }
+
+    fn recv_traced(&mut self, kind: OpKind) -> (u64, u64, Response) {
         wire::read_frame_into(&mut self.s, &mut self.buf)
             .expect("recv io")
             .expect("recv frame");
@@ -492,7 +501,7 @@ fn pipelined_requests_complete_out_of_order() {
             501 => OpKind::Ping,
             other => panic!("unexpected seq {other}"),
         };
-        let (got, resp) = protocol::decode_response(Wire::V2Binary, kind, &raw.buf).unwrap();
+        let (got, _trace, resp) = protocol::decode_response(Wire::V2Binary, kind, &raw.buf).unwrap();
         assert_eq!(got, seq);
         match seq {
             100 => assert_eq!(
@@ -1136,5 +1145,140 @@ fn client_read_timeout_surfaces_io_instead_of_hanging() {
         start.elapsed() < Duration::from_secs(5),
         "read returned only after {:?} — effectively a hang",
         start.elapsed()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Observability plane: introspect equivalence, trace echo, exported gauges
+// ---------------------------------------------------------------------------
+
+/// The `introspect` op must return the same structural report on both
+/// protocol generations — the v1 JSON projection and the v2 binary
+/// codec describe one coordinator. Only the timing-sensitive tails
+/// (flight events, span log) may drift between the two calls.
+#[test]
+fn introspect_reports_match_across_protocols() {
+    let (_server, addr) = seed_analytics_server();
+    let mut v2 = Client::connect(&addr).expect("v2");
+    let mut v1 = Client::connect_with(&addr, ProtocolChoice::V1).expect("v1");
+    let r2 = v2.introspect().expect("v2 introspect");
+    let r1 = v1.introspect().expect("v1 introspect");
+    assert_eq!(r1.sample_per_mille, r2.sample_per_mille);
+    assert_eq!(r1.shards.len(), r2.shards.len());
+    for (a, b) in r1.shards.iter().zip(&r2.shards) {
+        assert_eq!(a, b, "shard vitals must agree across codecs");
+        assert_eq!(a.queue_depth, 0, "post-sync queues are empty");
+    }
+    assert_eq!(r1.banks, r2.banks);
+    assert_eq!(r1.streams, r2.streams);
+    let names: Vec<&str> = r2.streams.iter().map(|s| s.name.as_str()).collect();
+    for want in ["q/gea", "q/awa", "q/true", "other"] {
+        assert!(names.contains(&want), "{want} missing from {names:?}");
+    }
+    // The seeded pushes left real flight events behind, on both wires.
+    assert!(!r2.events.is_empty(), "pushes must leave flight events");
+    assert!(!r1.events.is_empty());
+}
+
+/// The trace_id stamped on a request comes back on its ack — byte-level
+/// on v2 (success AND error responses), and through the client's
+/// `last_trace_id` ledger on both generations.
+#[test]
+fn trace_ids_round_trip_in_acks_on_both_wires() {
+    let (_server, addr) = start_server();
+    let mut raw = RawV2::connect(&addr);
+    let trace = 0xDEAD_BEEF_CAFE_F00Du64;
+    raw.send_traced(
+        3,
+        trace,
+        &Request::Register {
+            stream: "t".into(),
+            dim: 1,
+            spec: "gea(c=0.5)".into(),
+        },
+    );
+    let (seq, got, resp) = raw.recv_traced(OpKind::Register);
+    assert_eq!((seq, got), (3, trace));
+    let Response::Registered { handle } = resp else {
+        panic!("expected Registered, got {resp:?}");
+    };
+    raw.send_traced(
+        4,
+        trace + 1,
+        &Request::PushMany {
+            stream: StreamRef::Handle(handle),
+            count: 2,
+            data: vec![1.0, 2.0],
+        },
+    );
+    let (_, got, resp) = raw.recv_traced(OpKind::PushMany);
+    assert_eq!(got, trace + 1);
+    assert!(matches!(resp, Response::PushedMany { accepted: 2, .. }));
+    // Error acks keep the trace too — that is what makes a failed
+    // request greppable end to end.
+    raw.send_traced(
+        5,
+        trace + 2,
+        &Request::PushMany {
+            stream: StreamRef::Handle(handle + 999),
+            count: 1,
+            data: vec![1.0],
+        },
+    );
+    let (_, got, resp) = raw.recv_traced(OpKind::PushMany);
+    assert_eq!(got, trace + 2);
+    assert!(matches!(resp, Response::Err(_)));
+    // Client level: every request mints a trace and the server's echo
+    // lands in last_trace_id, on both protocol generations.
+    for choice in [ProtocolChoice::V2, ProtocolChoice::V1] {
+        let mut cl = Client::connect_with(&addr, choice).expect("connect");
+        assert_eq!(cl.last_trace_id(), 0, "no echo before the first op");
+        cl.push_many("t", 2, &[3.0, 4.0]).expect("push");
+        assert_ne!(cl.last_trace_id(), 0, "{choice:?} ack must echo a trace");
+    }
+}
+
+/// Regression: derived gauges (queue depth, bank occupancy, flight
+/// events) must never read as boot-time zeros over the wire after real
+/// activity — every metrics consumer routes through
+/// `Coordinator::export_metrics`. The Prometheus projection must carry
+/// the new observability families with the same refreshed values.
+#[test]
+fn exported_gauges_and_prometheus_text_reflect_activity() {
+    let (_server, addr) = seed_analytics_server();
+    let mut cl = Client::connect(&addr).expect("connect");
+    let doc = cl.metrics().expect("metrics");
+    let m = doc.get("metrics").expect("registry export");
+    let gauge = |name: &str| {
+        m.get(&format!("gauge.{name}"))
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("missing gauge {name}"))
+    };
+    assert!(
+        gauge("flight_events") > 0.0,
+        "pushes must leave flight events"
+    );
+    assert!(gauge("bank_rows") >= 1.0, "banked streams occupy rows");
+    assert_eq!(
+        gauge("queue_depth_total"),
+        0.0,
+        "post-sync queues are empty"
+    );
+    let text = cl.metrics_prometheus().expect("prom");
+    for family in [
+        "ata_stage_latency_ns",
+        "ata_flight_events",
+        "ata_queue_depth_total",
+        "ata_bank_rows",
+        "ata_trace_spans_sampled",
+    ] {
+        assert!(
+            text.contains(&format!("# TYPE {family} ")),
+            "family {family} missing from exposition:\n{text}"
+        );
+    }
+    assert!(
+        !text.contains("ata_flight_events 0\n"),
+        "scrape saw a stale zero gauge:\n{text}"
     );
 }
