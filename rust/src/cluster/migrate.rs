@@ -1,0 +1,231 @@
+//! Live stream migration: move one stream between cluster nodes while
+//! pushes keep flowing, without losing or double-counting a sample.
+//!
+//! The dance, in order:
+//!
+//! 1. **Mark** — settle the source (`sync`) and capture its shard's
+//!    committed WAL position `P0` *before* exporting. Every sample the
+//!    export misses is, by construction, in the WAL at or after `P0`.
+//! 2. **Copy** — `export_state` on the source, `restore` on the target
+//!    (the PR 3 state codec: framed, CRC-protected, estimator-exact).
+//!    The restore's returned `t` is the sample count the copy carries.
+//! 3. **Switch** — pin the stream to the target in the ring and
+//!    announce. From this ring version on, routers send the stream's
+//!    pushes to the target. In-flight pushes racing the switch land on
+//!    the source and become delta.
+//! 4. **Drain** — settle the source again; its final `t` minus the
+//!    restored `t` is exactly how many samples the copy is missing.
+//! 5. **Delta** — replay the source shard's WAL from `P0`, collect the
+//!    stream's samples, and push the **last** `delta` of them to the
+//!    target. Records in `(P0, export]` are double-covered by the
+//!    export; taking the tail discards exactly that overlap, so the
+//!    target ends at the source's final `t` with the same sample
+//!    sequence (same order — WAL order is apply order per stream).
+//!
+//! The source's copy stays registered but frozen (the wire protocol has
+//! no remote unregister); the router's placement filter excludes it
+//! from federated queries, and its handles on old clients keep working
+//! for reads until operators retire it at the next restart.
+
+use super::ring::fnv1a;
+use super::router::Router;
+use crate::persist::wal::{self, WalPosition, WalRecord};
+use std::path::Path;
+
+/// The shard a stream's pushes are logged under — the coordinator's
+/// FNV-1a placement, reproduced so migration can replay exactly one
+/// shard's WAL. Must match `Coordinator::shard_of`.
+pub fn shard_for_stream(stream: &str, shards: usize) -> usize {
+    fnv1a(stream.as_bytes()) as usize % shards.max(1)
+}
+
+/// What a completed migration did.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MigrationReport {
+    pub stream: String,
+    /// Source node id (`from == to` means the ring already placed the
+    /// stream on the target: no-op).
+    pub from: String,
+    pub to: String,
+    /// Samples the export missed and the WAL delta replayed.
+    pub delta_samples: u64,
+    /// Ring version after the pin + announce.
+    pub ring_version: u64,
+}
+
+/// Where a migration currently is — handed to the observer of
+/// [`migrate_stream_observed`] at the two spots concurrent pushes race
+/// the move. Tests inject pushes here to pin down the dedup math
+/// deterministically; production code uses [`migrate_stream`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MigratePhase {
+    /// `P0` is captured, the export has not run: a push landing now is
+    /// **double-covered** (in the WAL delta range AND in the export)
+    /// and must be deduplicated by the tail-take.
+    BeforeExport,
+    /// The copy is restored, the ring pin has not landed: a push
+    /// landing now is missed by the export entirely — pure delta.
+    BeforeSwitch,
+}
+
+/// Move `stream` onto `target_id`. `dim`/`spec` must match the
+/// stream's registration (the target re-registers it). `source_wal`
+/// gives delta replay access to the *source node's* WAL root
+/// (`<persist.dir>/wal`) and its shard count; pass `None` only when
+/// the stream is quiescent (no pushes during the migration) — a
+/// non-empty delta without WAL access is an error, never silent loss.
+pub fn migrate_stream(
+    router: &mut Router,
+    stream: &str,
+    target_id: &str,
+    dim: usize,
+    spec: &str,
+    source_wal: Option<(&Path, usize)>,
+) -> Result<MigrationReport, String> {
+    migrate_stream_observed(router, stream, target_id, dim, spec, source_wal, |_| Ok(()))
+}
+
+/// As [`migrate_stream`], with an observer called at each
+/// [`MigratePhase`] boundary — the injection seam the federation tests
+/// use to land pushes at the worst possible moments and then prove the
+/// sample accounting is still exact.
+pub fn migrate_stream_observed(
+    router: &mut Router,
+    stream: &str,
+    target_id: &str,
+    dim: usize,
+    spec: &str,
+    source_wal: Option<(&Path, usize)>,
+    mut observer: impl FnMut(MigratePhase) -> Result<(), String>,
+) -> Result<MigrationReport, String> {
+    if router.ring().node(target_id).is_none() {
+        return Err(format!("migrate: no node '{target_id}' in ring"));
+    }
+    let src_id = router.route(stream)?;
+    if src_id == target_id {
+        return Ok(MigrationReport {
+            stream: stream.to_string(),
+            from: src_id,
+            to: target_id.to_string(),
+            delta_samples: 0,
+            ring_version: router.ring().version(),
+        });
+    }
+
+    // 1. Mark: settle, then capture the shard's committed WAL position
+    // BEFORE the export — the replay lower bound.
+    let src = router.client_for(&src_id)?;
+    src.sync().map_err(|e| format!("migrate: sync {src_id}: {e}"))?;
+    let p0 = match source_wal {
+        Some((_, shards)) => {
+            let shard = shard_for_stream(stream, shards);
+            let intro = src
+                .introspect()
+                .map_err(|e| format!("migrate: introspect {src_id}: {e}"))?;
+            let s = intro
+                .shards
+                .get(shard)
+                .ok_or_else(|| format!("migrate: {src_id} has no shard {shard}"))?;
+            Some(WalPosition {
+                segment: s.wal_segment,
+                offset: s.wal_offset,
+            })
+        }
+        None => None,
+    };
+    observer(MigratePhase::BeforeExport)?;
+
+    // 2. Copy.
+    let src = router.client_for(&src_id)?;
+    let state = src
+        .export_state(stream)
+        .map_err(|e| format!("migrate: export '{stream}' from {src_id}: {e}"))?;
+    let dst = router.client_for(target_id)?;
+    if let Err(e) = dst.register(stream, dim, spec) {
+        // Already present on the target (a retried migration): fine as
+        // long as the name resolves — restore overwrites the state.
+        dst.resolve(stream)
+            .map_err(|_| format!("migrate: register '{stream}' on {target_id}: {e}"))?;
+    }
+    let t_restored = dst
+        .restore(stream, &state)
+        .map_err(|e| format!("migrate: restore '{stream}' on {target_id}: {e}"))?;
+    observer(MigratePhase::BeforeSwitch)?;
+
+    // 3. Switch: pin + announce. New pushes now route to the target.
+    router.ring_mut().pin(stream, target_id)?;
+    let (_, ring_version) = router.announce()?;
+
+    // 4. Drain the source and measure the delta.
+    let src = router.client_for(&src_id)?;
+    src.sync().map_err(|e| format!("migrate: sync {src_id}: {e}"))?;
+    let t_final = src
+        .snapshot(stream)
+        .map_err(|e| format!("migrate: snapshot '{stream}' on {src_id}: {e}"))?
+        .t;
+    let delta = t_final.saturating_sub(t_restored);
+    if delta == 0 {
+        return Ok(MigrationReport {
+            stream: stream.to_string(),
+            from: src_id,
+            to: target_id.to_string(),
+            delta_samples: 0,
+            ring_version,
+        });
+    }
+    let Some(((wal_root, shards), p0)) = source_wal.zip(p0) else {
+        return Err(format!(
+            "migrate: '{stream}' took {delta} pushes during the copy and no source WAL \
+             was provided — delta replay impossible, refusing to lose them"
+        ));
+    };
+
+    // 5. Delta replay: the stream's samples at or after P0, tail-dedup'd
+    // against what the export already carries.
+    let shard_dir = wal_root.join(format!("shard-{}", shard_for_stream(stream, shards)));
+    let mut flat: Vec<f64> = Vec::new();
+    wal::replay_bounded(&shard_dir, p0, u64::MAX, |rec| {
+        if let WalRecord::Push {
+            stream: s, data, ..
+        } = rec
+        {
+            if s == stream {
+                flat.extend_from_slice(&data);
+            }
+        }
+    })
+    .map_err(|e| format!("migrate: replay {}: {e}", shard_dir.display()))?;
+    if dim == 0 {
+        return Err("migrate: dim must be >= 1".into());
+    }
+    let need = (delta as usize)
+        .checked_mul(dim)
+        .ok_or("migrate: delta overflow")?;
+    if flat.len() < need {
+        return Err(format!(
+            "migrate: WAL delta for '{stream}' holds {} samples, need {delta} — early \
+             segments were checkpoint-truncated during the migration",
+            flat.len() / dim
+        ));
+    }
+    let tail = &flat[flat.len() - need..];
+    let dst = router.client_for(target_id)?;
+    let (accepted, dropped) = dst
+        .push_many(stream, delta as usize, tail)
+        .map_err(|e| format!("migrate: delta push '{stream}' to {target_id}: {e}"))?;
+    if dropped > 0 || accepted != delta {
+        return Err(format!(
+            "migrate: delta push accepted {accepted}/{delta} ({dropped} dropped) — \
+             target shed load mid-delta; re-run the migration"
+        ));
+    }
+    dst.sync()
+        .map_err(|e| format!("migrate: sync {target_id}: {e}"))?;
+    Ok(MigrationReport {
+        stream: stream.to_string(),
+        from: src_id,
+        to: target_id.to_string(),
+        delta_samples: delta,
+        ring_version,
+    })
+}

@@ -1,0 +1,35 @@
+//! Cluster federation: N single-process coordinators as one service.
+//!
+//! Four cooperating pieces, each usable on its own:
+//!
+//! - [`ring`] — the versioned consistent-hash placement map exchanged
+//!   over the `cluster_hello` wire op (highest version wins).
+//! - [`router`] — a client-side scatter-gather layer that places
+//!   streams on nodes via the ring, fans `multi_push` / `query` /
+//!   `multi_snapshot` across [`crate::coordinator::RetryingClient`]
+//!   connections, and merges results with the ESS-weighted pooling in
+//!   [`crate::analytics`].
+//! - [`shipper`] / [`standby`] — WAL-shipping replication: the shipper
+//!   tails a node's WAL up to group-commit boundaries and streams raw
+//!   segment bytes to a warm standby over `wal_ship`; the standby
+//!   appends them verbatim and, on promotion, replays through the
+//!   corruption-tolerant [`crate::coordinator::Coordinator::recover`]
+//!   path — so a promoted standby reports **bitwise-identical** stats
+//!   up to the last shipped group-commit boundary.
+//! - [`migrate`] — live stream migration: export → restore on the
+//!   target → pin the ring (atomic switch) → replay the WAL delta, with
+//!   PR 4's stale-handle self-healing carrying clients across the move.
+
+pub mod migrate;
+pub mod ring;
+pub mod router;
+pub mod shipper;
+pub mod standby;
+
+pub use migrate::{
+    migrate_stream, migrate_stream_observed, shard_for_stream, MigratePhase, MigrationReport,
+};
+pub use ring::{HashRing, NodeEntry};
+pub use router::{FederatedQuery, Router};
+pub use shipper::{ShipReport, Shipper};
+pub use standby::Standby;

@@ -1,0 +1,494 @@
+//! Versioned consistent-hash ring: the cluster's stream-placement map.
+//!
+//! Every stream name hashes onto a 64-bit circle; each node contributes
+//! `vnodes` points (virtual nodes) so placement stays balanced as nodes
+//! join and leave. A stream is served by the first node point at or
+//! after its hash (wrapping). Explicit **pins** override hashing — the
+//! migration path parks a moving stream on its target node without
+//! disturbing everything else's placement.
+//!
+//! The ring is **versioned**: every mutation bumps `version`, and the
+//! `cluster_hello` wire op carries the encoded ring so peers converge on
+//! the newest one (highest version wins — see
+//! `Coordinator::offer_ring`). The codec mirrors the persist framing
+//! discipline: magic + format version up front, checked counts, and a
+//! decode that errors (never panics) on truncation, forged counts, or
+//! trailing bytes.
+
+use crate::persist::codec::{Dec, Enc};
+
+/// Ring codec magic ("ATAR" — Anytime Tail Averaging Ring).
+pub const RING_MAGIC: &[u8; 4] = b"ATAR";
+
+/// Ring codec format version. A frame with a *different* version is
+/// rejected with a structured error naming both sides, so ring layout
+/// can evolve without silent misparses.
+pub const RING_FORMAT_VERSION: u16 = 1;
+
+/// Default virtual nodes per physical node (config `cluster.vnodes`).
+pub const DEFAULT_VNODES: u32 = 64;
+
+/// FNV-1a 64-bit — the same mixing the coordinator uses for
+/// stream→shard placement, applied here to the ring circle. Local copy:
+/// the ring must hash identically on every node regardless of which
+/// subsystems they compile.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// One physical node's directory entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeEntry {
+    /// Stable node id (config `cluster.node.id`).
+    pub id: String,
+    /// Dialable address (`host:port`).
+    pub addr: String,
+}
+
+/// The versioned placement map.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HashRing {
+    /// Monotone mutation counter; `cluster_hello` exchanges keep the
+    /// highest version seen.
+    version: u64,
+    /// Virtual nodes per physical node.
+    vnodes: u32,
+    nodes: Vec<NodeEntry>,
+    /// Explicit stream→node overrides (sorted by stream name), applied
+    /// before hashing. The migration path's atomic handle switch.
+    pins: Vec<(String, String)>,
+    /// Derived: sorted `(hash point, node index)` circle. Rebuilt on
+    /// every mutation and after decode; never serialized.
+    points: Vec<(u64, u32)>,
+}
+
+impl Default for HashRing {
+    fn default() -> Self {
+        HashRing::new(DEFAULT_VNODES)
+    }
+}
+
+impl HashRing {
+    /// An empty ring (version 0) with `vnodes` points per node.
+    pub fn new(vnodes: u32) -> HashRing {
+        HashRing {
+            version: 0,
+            vnodes: vnodes.max(1),
+            nodes: Vec::new(),
+            pins: Vec::new(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn vnodes(&self) -> u32 {
+        self.vnodes
+    }
+
+    pub fn nodes(&self) -> &[NodeEntry] {
+        &self.nodes
+    }
+
+    pub fn pins(&self) -> &[(String, String)] {
+        &self.pins
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Look up a node entry by id.
+    pub fn node(&self, id: &str) -> Option<&NodeEntry> {
+        self.nodes.iter().find(|n| n.id == id)
+    }
+
+    /// Add a node (errors on a duplicate id); bumps the version.
+    pub fn add_node(&mut self, id: &str, addr: &str) -> Result<(), String> {
+        if id.is_empty() {
+            return Err("ring: node id must be non-empty".into());
+        }
+        if self.node(id).is_some() {
+            return Err(format!("ring: node '{id}' already present"));
+        }
+        self.nodes.push(NodeEntry {
+            id: id.to_string(),
+            addr: addr.to_string(),
+        });
+        self.bump();
+        Ok(())
+    }
+
+    /// Remove a node and any pins parked on it; bumps the version.
+    pub fn remove_node(&mut self, id: &str) -> Result<(), String> {
+        let before = self.nodes.len();
+        self.nodes.retain(|n| n.id != id);
+        if self.nodes.len() == before {
+            return Err(format!("ring: no node '{id}'"));
+        }
+        self.pins.retain(|(_, node)| node != id);
+        self.bump();
+        Ok(())
+    }
+
+    /// Repoint a node id at a new address — the failover primitive: the
+    /// dead node's id keeps its hash points (so placement is stable) but
+    /// now dials the promoted standby. Bumps the version.
+    pub fn replace_addr(&mut self, id: &str, addr: &str) -> Result<(), String> {
+        let node = self
+            .nodes
+            .iter_mut()
+            .find(|n| n.id == id)
+            .ok_or_else(|| format!("ring: no node '{id}'"))?;
+        node.addr = addr.to_string();
+        self.bump();
+        Ok(())
+    }
+
+    /// Pin `stream` to `node_id`, overriding hash placement (the
+    /// migration switch). Re-pinning an already-pinned stream moves it.
+    /// Bumps the version.
+    pub fn pin(&mut self, stream: &str, node_id: &str) -> Result<(), String> {
+        if self.node(node_id).is_none() {
+            return Err(format!("ring: cannot pin to unknown node '{node_id}'"));
+        }
+        match self.pins.binary_search_by(|(s, _)| s.as_str().cmp(stream)) {
+            Ok(i) => self.pins[i].1 = node_id.to_string(),
+            Err(i) => self
+                .pins
+                .insert(i, (stream.to_string(), node_id.to_string())),
+        }
+        self.bump();
+        Ok(())
+    }
+
+    /// Remove a pin (no-op error if absent); bumps the version.
+    pub fn unpin(&mut self, stream: &str) -> Result<(), String> {
+        match self.pins.binary_search_by(|(s, _)| s.as_str().cmp(stream)) {
+            Ok(i) => {
+                self.pins.remove(i);
+                self.bump();
+                Ok(())
+            }
+            Err(_) => Err(format!("ring: no pin for '{stream}'")),
+        }
+    }
+
+    fn bump(&mut self) {
+        self.version += 1;
+        self.rebuild();
+    }
+
+    /// Rebuild the derived hash circle from the node list.
+    fn rebuild(&mut self) {
+        self.points.clear();
+        self.points
+            .reserve(self.nodes.len() * self.vnodes as usize);
+        for (i, n) in self.nodes.iter().enumerate() {
+            for v in 0..self.vnodes {
+                let key = format!("{}#{v}", n.id);
+                self.points.push((fnv1a(key.as_bytes()), i as u32));
+            }
+        }
+        // Ties (hash collisions across nodes) break by node index so
+        // every peer derives the identical circle.
+        self.points.sort_unstable();
+    }
+
+    /// The node serving `stream`: its pin if one exists, else the first
+    /// hash point at or after the stream's hash (wrapping). `None` only
+    /// on an empty ring.
+    pub fn route(&self, stream: &str) -> Option<&NodeEntry> {
+        if let Ok(i) = self.pins.binary_search_by(|(s, _)| s.as_str().cmp(stream)) {
+            // A pin to a since-removed node cannot linger (remove_node
+            // clears them), so this lookup always lands.
+            return self.node(&self.pins[i].1);
+        }
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = fnv1a(stream.as_bytes());
+        let i = match self.points.binary_search_by(|&(p, _)| p.cmp(&h)) {
+            Ok(i) => i,
+            Err(i) if i == self.points.len() => 0, // wrap
+            Err(i) => i,
+        };
+        self.nodes.get(self.points[i].1 as usize)
+    }
+
+    /// Binary form: `"ATAR"` + format `u16` + version + vnodes + node
+    /// list + pin list, little-endian on the persist primitives.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut enc = Enc::new();
+        for &b in RING_MAGIC {
+            enc.put_u8(b);
+        }
+        enc.put_u16(RING_FORMAT_VERSION);
+        enc.put_u64(self.version);
+        enc.put_u32(self.vnodes);
+        enc.put_u32(self.nodes.len() as u32);
+        for n in &self.nodes {
+            enc.put_str(&n.id);
+            enc.put_str(&n.addr);
+        }
+        enc.put_u32(self.pins.len() as u32);
+        for (stream, node) in &self.pins {
+            enc.put_str(stream);
+            enc.put_str(node);
+        }
+        enc.into_bytes()
+    }
+
+    /// Decode a ring frame; errors (never panics) on a bad magic, a
+    /// foreign format version, truncation, forged counts, or trailing
+    /// bytes.
+    pub fn decode(bytes: &[u8]) -> Result<HashRing, String> {
+        if bytes.len() < 4 || &bytes[..4] != RING_MAGIC {
+            return Err("ring: bad magic (not a ring frame)".into());
+        }
+        let mut dec = Dec::new(&bytes[4..]);
+        let format = dec.get_u16()?;
+        if format != RING_FORMAT_VERSION {
+            return Err(format!(
+                "ring: unsupported format version {format} (this peer speaks {RING_FORMAT_VERSION})"
+            ));
+        }
+        let version = dec.get_u64()?;
+        let vnodes = dec.get_u32()?;
+        if vnodes == 0 {
+            return Err("ring: vnodes must be >= 1".into());
+        }
+        // Hostile-count guard: every node/pin record carries two
+        // length-prefixed strings (>= 8 bytes), so a forged count cannot
+        // drive a huge allocation before the decode fails.
+        let checked = |dec: &Dec<'_>, count: usize| -> Result<usize, String> {
+            if count.saturating_mul(8) > dec.remaining() {
+                return Err(format!(
+                    "ring: count {count} needs at least {} bytes, {} remain",
+                    count.saturating_mul(8),
+                    dec.remaining()
+                ));
+            }
+            Ok(count)
+        };
+        let n = checked(&dec, dec.get_u32()? as usize)?;
+        let mut nodes = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = dec.get_str()?;
+            let addr = dec.get_str()?;
+            if id.is_empty() {
+                return Err("ring: node id must be non-empty".into());
+            }
+            if nodes.iter().any(|e: &NodeEntry| e.id == id) {
+                return Err(format!("ring: duplicate node id '{id}'"));
+            }
+            nodes.push(NodeEntry { id, addr });
+        }
+        let n = checked(&dec, dec.get_u32()? as usize)?;
+        let mut pins: Vec<(String, String)> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let stream = dec.get_str()?;
+            let node = dec.get_str()?;
+            if nodes.iter().all(|e| e.id != node) {
+                return Err(format!("ring: pin '{stream}' targets unknown node '{node}'"));
+            }
+            pins.push((stream, node));
+        }
+        if dec.remaining() != 0 {
+            return Err(format!("ring: {} trailing bytes", dec.remaining()));
+        }
+        pins.sort();
+        let mut ring = HashRing {
+            version,
+            vnodes,
+            nodes,
+            pins,
+            points: Vec::new(),
+        };
+        ring.rebuild();
+        Ok(ring)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three() -> HashRing {
+        let mut r = HashRing::new(64);
+        r.add_node("a", "127.0.0.1:1001").unwrap();
+        r.add_node("b", "127.0.0.1:1002").unwrap();
+        r.add_node("c", "127.0.0.1:1003").unwrap();
+        r
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_total() {
+        let r = three();
+        for i in 0..200 {
+            let name = format!("stream/{i}");
+            let first = r.route(&name).unwrap().id.clone();
+            assert_eq!(r.route(&name).unwrap().id, first);
+        }
+        assert!(HashRing::new(8).route("x").is_none(), "empty ring routes nowhere");
+    }
+
+    #[test]
+    fn placement_is_roughly_balanced() {
+        let r = three();
+        let mut counts = std::collections::HashMap::new();
+        for i in 0..3000 {
+            let id = r.route(&format!("s{i}")).unwrap().id.clone();
+            *counts.entry(id).or_insert(0usize) += 1;
+        }
+        assert_eq!(counts.len(), 3, "every node serves some streams");
+        for (id, n) in &counts {
+            assert!(
+                (400..=1800).contains(n),
+                "node {id} got {n}/3000 streams — badly unbalanced"
+            );
+        }
+    }
+
+    #[test]
+    fn removing_a_node_moves_only_its_streams() {
+        let r = three();
+        let before: Vec<(String, String)> = (0..500)
+            .map(|i| {
+                let name = format!("s{i}");
+                let id = r.route(&name).unwrap().id.clone();
+                (name, id)
+            })
+            .collect();
+        let mut r2 = r.clone();
+        r2.remove_node("b").unwrap();
+        for (name, old) in &before {
+            let new = r2.route(name).unwrap().id.clone();
+            if old != "b" {
+                assert_eq!(&new, old, "{name} moved although its node survived");
+            } else {
+                assert_ne!(new, "b");
+            }
+        }
+    }
+
+    #[test]
+    fn pins_override_hashing_and_versions_bump() {
+        let mut r = three();
+        let v0 = r.version();
+        let name = "pinned/stream";
+        let hashed = r.route(name).unwrap().id.clone();
+        let target = if hashed == "a" { "b" } else { "a" };
+        r.pin(name, target).unwrap();
+        assert_eq!(r.route(name).unwrap().id, target);
+        assert!(r.version() > v0, "pin must re-version the ring");
+        r.unpin(name).unwrap();
+        assert_eq!(r.route(name).unwrap().id, hashed);
+        assert!(r.pin(name, "ghost").is_err());
+        assert!(r.unpin("never-pinned").is_err());
+    }
+
+    #[test]
+    fn failover_repoints_without_moving_streams() {
+        let mut r = three();
+        let placements: Vec<String> = (0..200)
+            .map(|i| r.route(&format!("s{i}")).unwrap().id.clone())
+            .collect();
+        let v0 = r.version();
+        r.replace_addr("b", "127.0.0.1:2002").unwrap();
+        assert!(r.version() > v0);
+        assert_eq!(r.node("b").unwrap().addr, "127.0.0.1:2002");
+        for (i, old) in placements.iter().enumerate() {
+            assert_eq!(&r.route(&format!("s{i}")).unwrap().id, old);
+        }
+        assert!(r.replace_addr("ghost", "x").is_err());
+    }
+
+    #[test]
+    fn codec_roundtrips_bytewise() {
+        let mut r = three();
+        r.pin("moving/stream", "c").unwrap();
+        let bytes = r.encode();
+        let back = HashRing::decode(&bytes).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.encode(), bytes, "re-encode is byte-identical");
+        // Routing survives the trip.
+        for i in 0..100 {
+            let name = format!("s{i}");
+            assert_eq!(
+                back.route(&name).map(|n| &n.id),
+                r.route(&name).map(|n| &n.id)
+            );
+        }
+    }
+
+    #[test]
+    fn hostile_decode_errors_never_panics() {
+        let r = three();
+        let bytes = r.encode();
+        // Every truncation errors.
+        for cut in 0..bytes.len() {
+            assert!(HashRing::decode(&bytes[..cut]).is_err(), "cut {cut} decoded");
+        }
+        // Trailing bytes are an error.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(HashRing::decode(&long).is_err());
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(HashRing::decode(&bad).is_err());
+        // Foreign format version names both sides.
+        let mut foreign = bytes.clone();
+        foreign[4..6].copy_from_slice(&99u16.to_le_bytes());
+        let err = HashRing::decode(&foreign).unwrap_err();
+        assert!(err.contains("99") && err.contains('1'), "{err}");
+        // A forged node count cannot drive a huge allocation.
+        let mut forged = bytes.clone();
+        forged[18..22].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(HashRing::decode(&forged).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_inconsistent_rings() {
+        // Duplicate node ids, via a hand-built frame.
+        let mut enc = crate::persist::codec::Enc::new();
+        for &b in RING_MAGIC {
+            enc.put_u8(b);
+        }
+        enc.put_u16(RING_FORMAT_VERSION);
+        enc.put_u64(1);
+        enc.put_u32(4);
+        enc.put_u32(2);
+        for _ in 0..2 {
+            enc.put_str("a");
+            enc.put_str("x");
+        }
+        enc.put_u32(0);
+        let err = HashRing::decode(&enc.into_bytes()).unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+        // A pin to an unknown node is rejected.
+        let mut enc = crate::persist::codec::Enc::new();
+        for &b in RING_MAGIC {
+            enc.put_u8(b);
+        }
+        enc.put_u16(RING_FORMAT_VERSION);
+        enc.put_u64(1);
+        enc.put_u32(4);
+        enc.put_u32(1);
+        enc.put_str("a");
+        enc.put_str("x");
+        enc.put_u32(1);
+        enc.put_str("s");
+        enc.put_str("ghost");
+        let err = HashRing::decode(&enc.into_bytes()).unwrap_err();
+        assert!(err.contains("unknown node"), "{err}");
+    }
+}

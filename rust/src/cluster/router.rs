@@ -1,0 +1,328 @@
+//! Scatter-gather router: one logical service over N coordinators.
+//!
+//! The router owns a [`HashRing`] and a lazily dialed
+//! [`RetryingClient`] per node. Placement ops (`register`, pushes,
+//! per-stream snapshots) go to exactly the node the ring routes the
+//! stream to; fan-in ops (`multi_push`, `multi_snapshot`) split one
+//! call into per-node sub-batches and reassemble results in input
+//! order; `query` fans out to *every* node and merges with the same
+//! ESS-weighted pooling ([`crate::analytics::aggregate`]) a single
+//! node applies to its own streams — so a federated query equals the
+//! single-node answer on the union of streams, to floating-point
+//! associativity (the N-way merge property the analytics tests pin
+//! down).
+//!
+//! ## Ring convergence
+//!
+//! [`Router::announce`] gossips the encoded ring to every member over
+//! the `cluster_hello` op. Receivers keep the higher version and reply
+//! with their winner, so a router that was offline during a failover
+//! learns the newer ring on its next announce — and a router carrying
+//! the newest ring (after [`Router::failover`] or a migration pin)
+//! spreads it in one round. Connections are re-dialed whenever the
+//! ring's address for a node changes, so a failover's
+//! [`HashRing::replace_addr`] is all it takes to repoint traffic.
+
+use super::ring::HashRing;
+use crate::analytics::{self, StatSnapshot};
+use crate::config::{ClientConfig, ClusterConfig};
+use crate::coordinator::{MultiOutcome, ProtocolChoice, RetryPolicy, RetryingClient, StatEntry};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+/// Merged answer of a federated `query`.
+pub struct FederatedQuery {
+    /// Per-stream stats: top-K deviation order when `top_k > 0`, else
+    /// name-sorted (matching the single-node op).
+    pub stats: Vec<StatEntry>,
+    /// ESS-weighted cross-cluster pool (when requested and non-empty).
+    pub aggregate: Option<StatEntry>,
+    /// Streams the pool absorbed.
+    pub aggregated: usize,
+}
+
+/// One logical client over a cluster of coordinators.
+pub struct Router {
+    ring: HashRing,
+    choice: ProtocolChoice,
+    policy: RetryPolicy,
+    /// node id → (address it was dialed at, connection). The address is
+    /// kept so a ring update that repoints a node id (failover) drops
+    /// the stale connection instead of talking to the corpse.
+    conns: HashMap<String, (String, RetryingClient)>,
+}
+
+impl Router {
+    /// Build from the `[cluster]` / `[client]` config sections.
+    pub fn from_config(cluster: &ClusterConfig, client: &ClientConfig) -> Result<Router, String> {
+        let mut ring = HashRing::new(cluster.vnodes);
+        for n in &cluster.nodes {
+            ring.add_node(&n.id, &n.addr)?;
+        }
+        if ring.is_empty() {
+            return Err("router: [cluster] has no nodes".into());
+        }
+        Ok(Router::with_ring(ring, RetryPolicy::from_config(client)))
+    }
+
+    /// Wrap an explicit ring (tests, tools).
+    pub fn with_ring(ring: HashRing, policy: RetryPolicy) -> Router {
+        Router {
+            ring,
+            choice: ProtocolChoice::Auto,
+            policy,
+            conns: HashMap::new(),
+        }
+    }
+
+    pub fn ring(&self) -> &HashRing {
+        &self.ring
+    }
+
+    /// Mutable ring access (migration pins, membership edits). The next
+    /// [`Router::announce`] spreads the bumped version.
+    pub fn ring_mut(&mut self) -> &mut HashRing {
+        &mut self.ring
+    }
+
+    /// The node id serving `stream` under the current ring.
+    pub fn route(&self, stream: &str) -> Result<String, String> {
+        self.ring
+            .route(stream)
+            .map(|n| n.id.clone())
+            .ok_or_else(|| "router: ring is empty".into())
+    }
+
+    /// The (lazily dialed) connection to `node_id`, re-dialed if the
+    /// ring moved the id to a new address since last use.
+    pub fn client_for(&mut self, node_id: &str) -> Result<&mut RetryingClient, String> {
+        let addr = self
+            .ring
+            .node(node_id)
+            .ok_or_else(|| format!("router: no node '{node_id}' in ring"))?
+            .addr
+            .clone();
+        if self
+            .conns
+            .get(node_id)
+            .is_some_and(|(dialed, _)| *dialed != addr)
+        {
+            self.conns.remove(node_id);
+        }
+        let choice = self.choice;
+        let policy = self.policy;
+        let (_, c) = self
+            .conns
+            .entry(node_id.to_string())
+            .or_insert_with(|| (addr.clone(), RetryingClient::with_policy(&addr, choice, policy)));
+        Ok(c)
+    }
+
+    /// Register `stream` on the node the ring places it on.
+    pub fn register(&mut self, stream: &str, dim: usize, spec: &str) -> Result<u64, String> {
+        let node = self.route(stream)?;
+        self.client_for(&node)?
+            .register(stream, dim, spec)
+            .map_err(|e| format!("register '{stream}' on {node}: {e}"))
+    }
+
+    /// Barrier on every ring node (all prior routed pushes applied).
+    pub fn sync(&mut self) -> Result<(), String> {
+        for id in self.node_ids() {
+            self.client_for(&id)?
+                .sync()
+                .map_err(|e| format!("sync {id}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Fan-in push across the cluster: split `batches` by routed node,
+    /// one `multi_push` frame per node, outcomes reassembled in input
+    /// order. A node that fails terminally fails the whole call (its
+    /// entries' fate is unknown — see `RetryingClient::multi_push`).
+    pub fn multi_push(
+        &mut self,
+        batches: &[(&str, usize, &[f64])],
+    ) -> Result<Vec<MultiOutcome>, String> {
+        let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, (stream, _, _)) in batches.iter().enumerate() {
+            groups.entry(self.route(stream)?).or_default().push(i);
+        }
+        let mut out: Vec<Option<MultiOutcome>> = (0..batches.len()).map(|_| None).collect();
+        for (node, indices) in groups {
+            let sub: Vec<(&str, usize, &[f64])> = indices.iter().map(|&i| batches[i]).collect();
+            let outcomes = self
+                .client_for(&node)?
+                .multi_push(&sub)
+                .map_err(|e| format!("multi_push to {node}: {e}"))?;
+            if outcomes.len() != indices.len() {
+                return Err(format!(
+                    "multi_push to {node}: {} outcomes for {} entries",
+                    outcomes.len(),
+                    indices.len()
+                ));
+            }
+            for (&i, o) in indices.iter().zip(outcomes) {
+                out[i] = Some(o);
+            }
+        }
+        Ok(out
+            .into_iter()
+            .map(|o| o.expect("every batch routed"))
+            .collect())
+    }
+
+    /// Fan-in stat read across the cluster, per-entry results in input
+    /// order (a missing stream errors only its own entry, like the
+    /// single-node op).
+    pub fn multi_snapshot(
+        &mut self,
+        streams: &[&str],
+    ) -> Result<Vec<Result<StatEntry, String>>, String> {
+        let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, stream) in streams.iter().enumerate() {
+            groups.entry(self.route(stream)?).or_default().push(i);
+        }
+        let mut out: Vec<Option<Result<StatEntry, String>>> =
+            (0..streams.len()).map(|_| None).collect();
+        for (node, indices) in groups {
+            let sub: Vec<&str> = indices.iter().map(|&i| streams[i]).collect();
+            let results = self
+                .client_for(&node)?
+                .multi_snapshot(&sub)
+                .map_err(|e| format!("multi_snapshot on {node}: {e}"))?;
+            if results.len() != indices.len() {
+                return Err(format!(
+                    "multi_snapshot on {node}: {} results for {} entries",
+                    results.len(),
+                    indices.len()
+                ));
+            }
+            for (&i, r) in indices.iter().zip(results) {
+                out[i] = Some(r);
+            }
+        }
+        Ok(out
+            .into_iter()
+            .map(|o| o.expect("every stream routed"))
+            .collect())
+    }
+
+    /// Federated analytics query: fetch every node's raw per-stream
+    /// stats (unaggregated — pooling must happen exactly once, here),
+    /// then pool and rank cluster-wide with the same
+    /// [`analytics::aggregate`] / [`analytics::top_k_by_deviation`] a
+    /// single node uses, so the merged answer equals a single node
+    /// holding the union of streams.
+    pub fn query(
+        &mut self,
+        prefix: &str,
+        z: f64,
+        top_k: usize,
+        aggregate: bool,
+    ) -> Result<FederatedQuery, String> {
+        let mut per_node: Vec<(String, Vec<StatEntry>)> = Vec::new();
+        for id in self.node_ids() {
+            let (stats, _) = self
+                .client_for(&id)?
+                .query(prefix, z, 0, false)
+                .map_err(|e| format!("query on {id}: {e}"))?;
+            per_node.push((id, stats));
+        }
+        // Placement filter: count each stream exactly once, from the
+        // node the ring routes it to. A migrated stream's frozen source
+        // copy (there is no remote unregister) is silently excluded the
+        // moment the pin lands, so the pool never double-counts it.
+        let mut entries: Vec<StatEntry> = Vec::new();
+        for (id, stats) in per_node {
+            for e in stats {
+                if self.route(&e.stream)? == id {
+                    entries.push(e);
+                }
+            }
+        }
+        entries.sort_by(|a, b| a.stream.cmp(&b.stream));
+        let snaps: Vec<StatSnapshot> = entries
+            .iter()
+            .map(|e| {
+                StatSnapshot::from_moments(
+                    Arc::from(e.stream.as_str()),
+                    e.t,
+                    e.effective_window,
+                    e.ess,
+                    e.mean.clone(),
+                    e.variance.clone(),
+                    z,
+                )
+            })
+            .collect();
+        let (pooled, aggregated) = analytics::aggregate(&snaps, z);
+        let stats = if top_k > 0 {
+            match &pooled {
+                Some(p) => analytics::top_k_by_deviation(snaps, p, top_k)
+                    .iter()
+                    .map(StatEntry::from_snapshot)
+                    .collect(),
+                None => entries,
+            }
+        } else {
+            entries
+        };
+        Ok(FederatedQuery {
+            stats,
+            aggregate: if aggregate {
+                pooled.as_ref().map(StatEntry::from_snapshot)
+            } else {
+                None
+            },
+            aggregated,
+        })
+    }
+
+    /// Gossip the ring to every member; adopt any higher-version reply.
+    /// Unreachable nodes are skipped (gossip is best-effort — the next
+    /// announce or any `cluster_hello` exchange catches them up).
+    /// Returns `(nodes reached, ring version after the round)`.
+    pub fn announce(&mut self) -> Result<(usize, u64), String> {
+        let mut reached = 0usize;
+        let mut newest: Option<HashRing> = None;
+        let encoded = self.ring.encode();
+        for id in self.node_ids() {
+            let Ok(c) = self.client_for(&id) else {
+                continue;
+            };
+            let Ok(reply) = c.cluster_hello(&encoded) else {
+                continue;
+            };
+            reached += 1;
+            if reply.is_empty() {
+                continue;
+            }
+            let theirs = HashRing::decode(&reply)?;
+            let best = newest.as_ref().map_or(self.ring.version(), HashRing::version);
+            if theirs.version() > best {
+                newest = Some(theirs);
+            }
+        }
+        if let Some(r) = newest {
+            self.ring = r;
+        }
+        Ok((reached, self.ring.version()))
+    }
+
+    /// Failover: repoint `dead_id` at `standby_addr` (a promoted
+    /// [`super::standby::Standby`]), drop the stale connection, and
+    /// spread the re-versioned ring. Placement is untouched — the id
+    /// keeps its hash points — so only the address changes. Returns the
+    /// new ring version.
+    pub fn failover(&mut self, dead_id: &str, standby_addr: &str) -> Result<u64, String> {
+        self.ring.replace_addr(dead_id, standby_addr)?;
+        self.conns.remove(dead_id);
+        let (_, version) = self.announce()?;
+        Ok(version)
+    }
+
+    fn node_ids(&self) -> Vec<String> {
+        self.ring.nodes().iter().map(|n| n.id.clone()).collect()
+    }
+}

@@ -1,0 +1,227 @@
+//! WAL-shipping replication: stream a coordinator's per-shard logs to
+//! a warm standby, byte-for-byte.
+//!
+//! The shipper tails each shard's WAL directory and forwards raw
+//! segment bytes over the v2 `wal_ship` op to a [`super::standby`]
+//! listener, which appends them to an identical on-disk layout. Because
+//! the bytes are verbatim (headers, frames, CRCs and all), failover is
+//! just [`crate::coordinator::Coordinator::recover`] over the standby's
+//! directory: the corruption-tolerant replay truncates any half-shipped
+//! trailing frame, so the promoted node's stats are bitwise-identical
+//! to the primary's at the last fully shipped record boundary.
+//!
+//! ## The safe-to-ship horizon
+//!
+//! The shipper never reads past [`Coordinator::wal_positions`] — the
+//! committed position each shard worker publishes at its drain
+//! boundary (with group commit, that position only advances when the
+//! group's fsync has landed). Shipping the raw file tail instead could
+//! hand the standby records the primary never acknowledged.
+//!
+//! ## Self-healing acks
+//!
+//! Every `wal_ship` ack carries the standby's ACTUAL file length for
+//! that segment. A mismatch (standby restarted, a previous shipper got
+//! partway) just moves the cursor to the acked position and re-ships
+//! from there; an empty-chunk probe fetches the position without
+//! writing. Appends are conditional on the offset server-side, so a
+//! retried chunk after an ambiguous failure can never double-append.
+//!
+//! ## Limitation
+//!
+//! Shipping must begin before any checkpoint truncates a shard's early
+//! segments ([`crate::persist::wal::truncate_before`]): a truncated
+//! prefix that was never shipped cannot be recovered from the standby.
+//! Deployments that checkpoint should start the shipper with the
+//! service (the `[cluster].standby_addr` config does).
+
+use crate::coordinator::client::ClientError;
+use crate::coordinator::{Coordinator, RetryingClient};
+use crate::persist::wal;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Bytes per `wal_ship` frame. Well under the 64 MiB frame cap while
+/// still amortizing the round-trip over a large chunk.
+const CHUNK_BYTES: usize = 1 << 20;
+
+/// Outcome of one [`Shipper::ship_once`] pass over every shard.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShipReport {
+    /// `wal_ship` frames carrying bytes that were acked this pass.
+    pub chunks: u64,
+    /// WAL bytes newly acked by the standby this pass.
+    pub bytes: u64,
+    /// Committed-but-unshipped bytes remaining after the pass (0 when
+    /// the standby is fully caught up to the commit horizon).
+    pub lag_bytes: u64,
+}
+
+/// Ships one coordinator's WAL to one standby. Single-threaded driver:
+/// call [`Shipper::ship_once`] in a loop (or hand it to
+/// [`Shipper::run`] with an interval and a stop flag).
+pub struct Shipper {
+    coordinator: Arc<Coordinator>,
+    standby: RetryingClient,
+    /// Standby's acked `(segment, offset)` per shard, learned from
+    /// probes and acks; `None` until first contact for that shard.
+    cursors: HashMap<usize, (u64, u64)>,
+    chunk_bytes: usize,
+}
+
+impl Shipper {
+    /// Wrap `coordinator` (must be persistent — the WAL is the thing
+    /// being shipped) with a retrying connection to the standby.
+    pub fn new(coordinator: Arc<Coordinator>, standby: RetryingClient) -> Result<Shipper, String> {
+        if coordinator.wal_dir_path(0).is_none() {
+            return Err("wal shipping requires a [persist] section".into());
+        }
+        Ok(Shipper {
+            coordinator,
+            standby,
+            cursors: HashMap::new(),
+            chunk_bytes: CHUNK_BYTES,
+        })
+    }
+
+    /// Override the chunk size (tests exercise multi-chunk segments
+    /// without multi-megabyte fixtures).
+    pub fn set_chunk_bytes(&mut self, bytes: usize) {
+        self.chunk_bytes = bytes.max(1);
+    }
+
+    /// Ship every shard up to its committed horizon. Transport errors
+    /// abort the pass (the retrying client has already backed off); the
+    /// next pass resumes from the standby's acked positions.
+    pub fn ship_once(&mut self) -> Result<ShipReport, String> {
+        let mut report = ShipReport::default();
+        let targets = self.coordinator.wal_positions();
+        for (shard, &(tseg, toff)) in targets.iter().enumerate() {
+            if tseg == 0 && toff == 0 {
+                continue; // nothing committed yet (or no WAL activity)
+            }
+            let dir = self
+                .coordinator
+                .wal_dir_path(shard)
+                .ok_or("persist section vanished")?;
+            for seg in wal::list_segments(&dir) {
+                if seg > tseg {
+                    break; // beyond the committed horizon
+                }
+                // Sealed segments ship to their full length; the
+                // committed segment only up to the committed offset.
+                let limit = if seg == tseg {
+                    toff
+                } else {
+                    wal::segment_len(&dir, seg)?
+                };
+                // Skip segments the standby is known to hold in full.
+                if let Some(&(cseg, coff)) = self.cursors.get(&shard) {
+                    if seg < cseg || (seg == cseg && coff >= limit) {
+                        continue;
+                    }
+                }
+                let mut cur = match self.cursors.get(&shard) {
+                    Some(&(cseg, coff)) if cseg == seg => coff,
+                    _ => self.probe(shard, seg)?,
+                };
+                let mut stalls = 0u32;
+                while cur < limit {
+                    let want = ((limit - cur) as usize).min(self.chunk_bytes);
+                    let (bytes, _) = wal::read_segment_chunk(&dir, seg, cur, want)?;
+                    if bytes.is_empty() {
+                        break; // raced a truncation; re-resolve next pass
+                    }
+                    let sealed = seg < tseg;
+                    let done = sealed && cur + bytes.len() as u64 >= limit;
+                    let (_, acked) = self
+                        .standby
+                        .wal_ship(shard as u16, seg, cur, &bytes, done)
+                        .map_err(|e: ClientError| format!("wal_ship shard {shard}: {e}"))?;
+                    if acked > cur {
+                        stalls = 0;
+                        report.chunks += 1;
+                        report.bytes += acked - cur;
+                        self.coordinator.note_wal_ship(shard, acked - cur);
+                    } else {
+                        // The standby refused (offset mismatch): adopt
+                        // its position and re-ship from there. Refusing
+                        // an offset it just reported means something is
+                        // appending to its files behind our back.
+                        stalls += 1;
+                        if stalls > 2 {
+                            return Err(format!(
+                                "standby refuses progress on shard {shard} segment {seg} \
+                                 at offset {cur} (acked {acked})"
+                            ));
+                        }
+                    }
+                    cur = acked;
+                    self.cursors.insert(shard, (seg, cur));
+                }
+            }
+            report.lag_bytes += self.shard_lag(&dir, shard, tseg, toff)?;
+        }
+        self.coordinator.set_ship_lag(report.lag_bytes);
+        Ok(report)
+    }
+
+    /// Committed-but-unshipped bytes for one shard, exact across
+    /// segment boundaries.
+    fn shard_lag(&self, dir: &std::path::Path, shard: usize, tseg: u64, toff: u64) -> Result<u64, String> {
+        let (cseg, coff) = self.cursors.get(&shard).copied().unwrap_or((0, 0));
+        let mut lag = 0u64;
+        for seg in wal::list_segments(dir) {
+            if seg > tseg {
+                break;
+            }
+            if seg < cseg {
+                continue;
+            }
+            let limit = if seg == tseg {
+                toff
+            } else {
+                wal::segment_len(dir, seg)?
+            };
+            let from = if seg == cseg { coff } else { 0 };
+            lag += limit.saturating_sub(from);
+        }
+        Ok(lag)
+    }
+
+    /// Ask the standby where segment `seg` of `shard` currently ends.
+    fn probe(&mut self, shard: usize, seg: u64) -> Result<u64, String> {
+        let (_, acked) = self
+            .standby
+            .wal_ship(shard as u16, seg, 0, &[], false)
+            .map_err(|e: ClientError| format!("wal_ship probe shard {shard}: {e}"))?;
+        self.cursors.insert(shard, (seg, acked));
+        Ok(acked)
+    }
+
+    /// Background driver: ship every `interval` until `stop` flips,
+    /// then run ONE more pass — so a server that drains (final group
+    /// commit) and then stops replication gets those last bytes out.
+    /// Transport errors are absorbed (the standby being briefly down
+    /// must not kill replication forever); the pass after it returns
+    /// resumes from acked positions.
+    pub fn run(mut self, interval: Duration, stop: Arc<AtomicBool>) {
+        loop {
+            let stopping = stop.load(Ordering::Relaxed);
+            if let Err(e) = self.ship_once() {
+                crate::log_kv!(
+                    crate::util::logging::Level::Warn,
+                    "cluster",
+                    {},
+                    "wal ship pass failed: {e}"
+                );
+            }
+            if stopping {
+                return;
+            }
+            std::thread::sleep(interval);
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! Warm-standby receiver for WAL-shipping replication.
+//!
+//! A [`Standby`] is the *receiving half* of [`super::shipper`]: a tiny
+//! v2-only TCP listener that appends shipped WAL segment bytes to the
+//! same on-disk layout a live coordinator writes
+//! (`<dir>/wal/shard-<n>/seg-XXXXXXXX.wal`), so promotion is nothing
+//! but [`Coordinator::recover`] over the standby's directory. It is
+//! deliberately **not** a coordinator: it holds no estimator state, so
+//! it costs a few kilobytes until the moment it is needed.
+//!
+//! ## Conditional appends
+//!
+//! Every `wal_ship` frame names the offset it expects to land at. The
+//! standby appends only when that offset equals the segment file's
+//! current length, and *always* acks the actual length — so a shipper
+//! retry after an ambiguous failure (bytes written, ack lost) is
+//! refused and resynced instead of double-appended, and a stale
+//! shipper can never tear the replica.
+//!
+//! ## Promotion
+//!
+//! [`Standby::promote`] stops the listener and runs the standard
+//! corruption-tolerant recovery over the received logs. Any trailing
+//! half-shipped frame is truncated exactly like a torn local write,
+//! leaving stats bitwise-identical to the primary's at the last fully
+//! shipped record boundary. The caller is responsible for fencing the
+//! old primary first (kill it, or at minimum stop its shipper).
+
+use crate::config::ServiceConfig;
+use crate::coordinator::protocol::{self, wire, Request, Response, Wire};
+use crate::coordinator::{Coordinator, RecoveryReport};
+use crate::metrics::names;
+use crate::persist::wal;
+use std::fs::{self, OpenOptions};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Listener state shared with connection threads.
+struct StandbyShared {
+    dir: PathBuf,
+    /// Serializes segment appends; correctness needs per-file ordering
+    /// and one shipper is the only real traffic, so one lock is fine.
+    write_lock: Mutex<()>,
+    /// Newest encoded ring gossiped to this standby (empty = none).
+    ring: Mutex<Vec<u8>>,
+    received_bytes: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// A running standby listener. Droppable handle: [`Standby::stop`] or
+/// [`Standby::promote`] shut the accept loop down cleanly.
+pub struct Standby {
+    shared: Arc<StandbyShared>,
+    addr: std::net::SocketAddr,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl Standby {
+    /// Bind `addr` (port 0 picks a free port — tests) and start
+    /// accepting shipper connections, persisting under `dir`.
+    pub fn start(addr: &str, dir: &Path) -> Result<Standby, String> {
+        fs::create_dir_all(dir)
+            .map_err(|e| format!("standby: create {}: {e}", dir.display()))?;
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| format!("standby: bind {addr}: {e}"))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| format!("standby: local_addr: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("standby: nonblocking: {e}"))?;
+        let shared = Arc::new(StandbyShared {
+            dir: dir.to_path_buf(),
+            write_lock: Mutex::new(()),
+            ring: Mutex::new(Vec::new()),
+            received_bytes: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept_thread = std::thread::Builder::new()
+            .name("ata-standby".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .map_err(|e| format!("standby: spawn: {e}"))?;
+        Ok(Standby {
+            shared,
+            addr: local,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The bound address (resolved port when started with port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Total WAL bytes appended since start.
+    pub fn received_bytes(&self) -> u64 {
+        self.shared.received_bytes.load(Ordering::Relaxed)
+    }
+
+    /// The newest ring gossiped to this standby (empty = none yet).
+    pub fn ring(&self) -> Vec<u8> {
+        self.shared.ring.lock().expect("standby ring lock").clone()
+    }
+
+    /// Stop accepting and join the accept loop. In-flight connection
+    /// threads finish their current frame and exit on the next read.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Failover: stop the listener and recover a full coordinator from
+    /// the shipped logs. `cfg` supplies everything *except* the state
+    /// directory, which is forced to this standby's — shard count and
+    /// estimator wiring must match the primary's config for the WAL to
+    /// replay onto the same shards. Bumps the failover counter on the
+    /// promoted node's registry.
+    ///
+    /// The caller must fence the primary (or its shipper) first: a
+    /// shipper that keeps appending after recovery has read the files
+    /// would go unnoticed until the next promotion.
+    pub fn promote(
+        mut self,
+        mut cfg: ServiceConfig,
+    ) -> Result<(Coordinator, RecoveryReport), String> {
+        self.shutdown();
+        let dir = self.shared.dir.clone();
+        let Some(p) = cfg.persist.as_mut() else {
+            return Err("standby promote: config has no [persist] section".into());
+        };
+        p.dir = dir.display().to_string();
+        let (c, report) = Coordinator::recover(&cfg)?;
+        c.metrics().counter(names::CLUSTER_FAILOVERS).inc();
+        Ok((c, report))
+    }
+}
+
+impl Drop for Standby {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<StandbyShared>) {
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((sock, _)) => {
+                let conn_shared = Arc::clone(&shared);
+                let _ = std::thread::Builder::new()
+                    .name("ata-standby-conn".into())
+                    .spawn(move || handle_connection(sock, conn_shared));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                crate::log_kv!(
+                    crate::util::logging::Level::Warn,
+                    "cluster",
+                    {},
+                    "standby accept error: {e}"
+                );
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn handle_connection(mut sock: TcpStream, shared: Arc<StandbyShared>) {
+    // Reads poll so the thread notices `stop` within a timeout even on
+    // an idle connection.
+    let _ = sock.set_read_timeout(Some(Duration::from_millis(250)));
+    let mut rbuf = Vec::new();
+    let mut wbuf = Vec::new();
+
+    // The standby speaks v2 only: first frame must be a hello.
+    if !read_polling(&mut sock, &mut rbuf, &shared) {
+        return;
+    }
+    if protocol::parse_hello(&rbuf).is_none() {
+        return; // legacy JSON peer — not a shipper, drop it
+    }
+    if protocol::write_frame_bytes(&mut sock, &protocol::hello_frame(protocol::WIRE_V2)).is_err() {
+        return;
+    }
+
+    loop {
+        if !read_polling(&mut sock, &mut rbuf, &shared) {
+            return;
+        }
+        let (seq, trace, req) = match protocol::decode_request(Wire::V2Binary, &rbuf) {
+            Ok(t) => t,
+            Err(_) => return, // framing is broken; nothing sane to ack
+        };
+        let resp = dispatch(&shared, req);
+        wbuf.clear();
+        if protocol::encode_response(Wire::V2Binary, seq, trace, &resp, &mut wbuf).is_err() {
+            return;
+        }
+        if protocol::write_frame_bytes(&mut sock, &wbuf).is_err() {
+            return;
+        }
+    }
+}
+
+/// Read one frame, treating frame-boundary read timeouts as stop-flag
+/// polls ([`wire::read_frame_idle`] keeps a mid-frame timeout a hard
+/// error — resuming there would desync the stream; the shipper just
+/// reconnects and resyncs by probe). Returns `true` on a frame, `false`
+/// on EOF, error, or stop.
+fn read_polling(sock: &mut TcpStream, buf: &mut Vec<u8>, shared: &StandbyShared) -> bool {
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            return false;
+        }
+        match wire::read_frame_idle(sock, buf) {
+            Ok(wire::FrameRead::Frame) => return true,
+            Ok(wire::FrameRead::Idle) => continue,
+            Ok(wire::FrameRead::Eof) | Err(_) => return false,
+        }
+    }
+}
+
+fn dispatch(shared: &StandbyShared, req: Request) -> Response {
+    match req {
+        Request::Ping => Response::Pong,
+        Request::WalShip {
+            shard,
+            segment,
+            offset,
+            done,
+            bytes,
+        } => wal_append(shared, shard, segment, offset, done, &bytes),
+        Request::ClusterHello { ring } => cluster_hello(shared, &ring),
+        other => Response::Err(format!(
+            "standby: unsupported op {:?} (this node only replicates; promote it first)",
+            other.kind()
+        )),
+    }
+}
+
+/// Conditionally append `bytes` at `offset` of the shard's segment
+/// file; ack the file's resulting length either way.
+fn wal_append(
+    shared: &StandbyShared,
+    shard: u16,
+    segment: u64,
+    offset: u64,
+    done: bool,
+    bytes: &[u8],
+) -> Response {
+    let _guard = shared.write_lock.lock().expect("standby write lock");
+    let dir = shared
+        .dir
+        .join("wal")
+        .join(format!("shard-{shard}"));
+    if let Err(e) = fs::create_dir_all(&dir) {
+        return Response::Err(format!("standby: create {}: {e}", dir.display()));
+    }
+    let path = wal::segment_file(&dir, segment);
+    let cur = fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    if bytes.is_empty() {
+        // Position probe.
+        return Response::WalShipped {
+            shard,
+            segment,
+            offset: cur,
+        };
+    }
+    if offset != cur {
+        // Refuse without writing; the ack carries the real position and
+        // the shipper resyncs. This is what makes retries idempotent.
+        return Response::WalShipped {
+            shard,
+            segment,
+            offset: cur,
+        };
+    }
+    let file = OpenOptions::new().create(true).append(true).open(&path);
+    let mut file = match file {
+        Ok(f) => f,
+        Err(e) => return Response::Err(format!("standby: open {}: {e}", path.display())),
+    };
+    if let Err(e) = file.write_all(bytes) {
+        return Response::Err(format!("standby: append {}: {e}", path.display()));
+    }
+    if done {
+        // Sealed segment boundary: make it durable before acking, so a
+        // standby crash cannot silently lose a whole sealed segment the
+        // shipper believes is replicated.
+        if let Err(e) = file.sync_data() {
+            return Response::Err(format!("standby: fsync {}: {e}", path.display()));
+        }
+    }
+    shared
+        .received_bytes
+        .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+    Response::WalShipped {
+        shard,
+        segment,
+        offset: cur + bytes.len() as u64,
+    }
+}
+
+/// Same higher-version-wins gossip as
+/// [`Coordinator::offer_ring`], so routers keep a standby's ring
+/// current and a promoted node starts from the newest membership.
+fn cluster_hello(shared: &StandbyShared, offered: &[u8]) -> Response {
+    let mut current = shared.ring.lock().expect("standby ring lock");
+    if offered.is_empty() {
+        return Response::ClusterRing {
+            ring: current.clone(),
+        };
+    }
+    let offered_ring = match crate::cluster::HashRing::decode(offered) {
+        Ok(r) => r,
+        Err(e) => return Response::Err(e),
+    };
+    let adopt = if current.is_empty() {
+        true
+    } else {
+        match crate::cluster::HashRing::decode(&current) {
+            Ok(cur) => offered_ring.version() > cur.version(),
+            Err(_) => true, // our copy is somehow corrupt — replace it
+        }
+    };
+    if adopt {
+        *current = offered.to_vec();
+    }
+    Response::ClusterRing {
+        ring: current.clone(),
+    }
+}

@@ -287,6 +287,74 @@ impl Default for ObsConfig {
     }
 }
 
+/// Client retry/backoff section (`[client]`).
+///
+/// Always present (safe defaults mirroring `RetryPolicy`); resolved
+/// onto retrying connections by `RetryPolicy::from_config` — the
+/// router, the WAL shipper, and `ata client --retry` all honor it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClientConfig {
+    /// Attempts per operation (>= 1; the first try counts).
+    pub max_attempts: u32,
+    /// First backoff sleep in milliseconds.
+    pub base_backoff_ms: u64,
+    /// Backoff cap in milliseconds (decorrelated jitter grows toward it).
+    pub max_backoff_ms: u64,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            max_attempts: 6,
+            base_backoff_ms: 10,
+            max_backoff_ms: 2_000,
+        }
+    }
+}
+
+/// One peer node in the cluster ring (`[[cluster.node]]`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterNode {
+    /// Stable node identity — ring placement hashes this, NOT the
+    /// address, so failover can repoint an id at a standby's address
+    /// without moving any streams.
+    pub id: String,
+    /// The node's coordinator service address.
+    pub addr: String,
+}
+
+/// Cluster federation section (`[cluster]`).
+///
+/// Present only when this deployment is federated: declares the member
+/// nodes (every node carries the same list), which member THIS process
+/// is, and optionally a warm standby to ship this node's WAL to.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterConfig {
+    /// Which `[[cluster.node]]` entry this process is.
+    pub node_id: String,
+    /// Virtual nodes per physical node on the hash ring.
+    pub vnodes: u32,
+    /// The member nodes (id + addr each).
+    pub nodes: Vec<ClusterNode>,
+    /// Replication target: this node's WAL is shipped to a standby
+    /// listener at this address (None = no replication).
+    pub standby_addr: Option<String>,
+    /// WAL ship cycle interval in milliseconds.
+    pub ship_interval_ms: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            node_id: String::new(),
+            vnodes: 64,
+            nodes: Vec::new(),
+            standby_addr: None,
+            ship_interval_ms: 200,
+        }
+    }
+}
+
 /// Coordinator service configuration.
 ///
 /// ```toml
@@ -316,6 +384,25 @@ impl Default for ObsConfig {
 /// sample_per_mille = 10      # trace 1% of requests (0 = off, 1000 = all)
 /// ring_size = 4096           # per-shard flight-recorder events
 /// span_log = 256             # completed spans kept for introspect
+///
+/// [client]
+/// max_attempts = 6           # tries per op (first try counts)
+/// base_backoff_ms = 10       # first retry sleep
+/// max_backoff_ms = 2000      # jittered backoff cap
+///
+/// [cluster]
+/// node_id = "a"              # which [[cluster.node]] this process is
+/// vnodes = 64                # virtual nodes per member on the ring
+/// standby_addr = "127.0.0.1:7411"  # ship this node's WAL here
+/// ship_interval_ms = 200
+///
+/// [[cluster.node]]
+/// id = "a"
+/// addr = "127.0.0.1:7311"
+///
+/// [[cluster.node]]
+/// id = "b"
+/// addr = "127.0.0.1:7312"
 ///
 /// [[stream]]
 /// name = "layer0.weight"
@@ -362,6 +449,11 @@ pub struct ServiceConfig {
     /// Observability plane: tracing sample rate, flight-recorder ring
     /// size, span-log retention (`[obs]`; defaults are always safe).
     pub obs: ObsConfig,
+    /// Client retry/backoff knobs (`[client]`; defaults are always
+    /// safe) for every retrying connection this process opens.
+    pub client: ClientConfig,
+    /// Cluster federation (`[cluster]`; None = standalone node).
+    pub cluster: Option<ClusterConfig>,
     pub streams: Vec<StreamConfig>,
 }
 
@@ -383,6 +475,8 @@ impl Default for ServiceConfig {
             non_finite: NonFinitePolicy::Reject,
             poison_threshold: 3,
             obs: ObsConfig::default(),
+            client: ClientConfig::default(),
+            cluster: None,
             streams: Vec::new(),
         }
     }
@@ -499,6 +593,63 @@ impl ServiceConfig {
         if let Some(v) = doc.get_path("obs.span_log") {
             cfg.obs.span_log = v.as_u64().ok_or("obs.span_log must be an integer")? as usize;
         }
+        if let Some(v) = doc.get_path("client.max_attempts") {
+            cfg.client.max_attempts =
+                v.as_u64().ok_or("client.max_attempts must be an integer")? as u32;
+        }
+        if let Some(v) = doc.get_path("client.base_backoff_ms") {
+            cfg.client.base_backoff_ms = v
+                .as_u64()
+                .ok_or("client.base_backoff_ms must be an integer")?;
+        }
+        if let Some(v) = doc.get_path("client.max_backoff_ms") {
+            cfg.client.max_backoff_ms = v
+                .as_u64()
+                .ok_or("client.max_backoff_ms must be an integer")?;
+        }
+        if let Some(v) = doc.get_path("cluster.node_id") {
+            let mut cl = ClusterConfig {
+                node_id: v
+                    .as_str()
+                    .ok_or("cluster.node_id must be a string")?
+                    .to_string(),
+                ..Default::default()
+            };
+            if let Some(v) = doc.get_path("cluster.vnodes") {
+                cl.vnodes = v.as_u64().ok_or("cluster.vnodes must be an integer")? as u32;
+            }
+            if let Some(v) = doc.get_path("cluster.standby_addr") {
+                cl.standby_addr = Some(
+                    v.as_str()
+                        .ok_or("cluster.standby_addr must be a string")?
+                        .to_string(),
+                );
+            }
+            if let Some(v) = doc.get_path("cluster.ship_interval_ms") {
+                cl.ship_interval_ms = v
+                    .as_u64()
+                    .ok_or("cluster.ship_interval_ms must be an integer")?;
+            }
+            if let Some(arr) = doc.get_path("cluster.node").and_then(Toml::as_arr) {
+                for n in arr {
+                    cl.nodes.push(ClusterNode {
+                        id: n
+                            .get_path("id")
+                            .and_then(Toml::as_str)
+                            .ok_or("cluster.node.id required")?
+                            .to_string(),
+                        addr: n
+                            .get_path("addr")
+                            .and_then(Toml::as_str)
+                            .ok_or("cluster.node.addr required")?
+                            .to_string(),
+                    });
+                }
+            }
+            cfg.cluster = Some(cl);
+        } else if doc.get_path("cluster").is_some() {
+            return Err("cluster section requires cluster.node_id".into());
+        }
         if let Some(arr) = doc.get_path("stream").and_then(Toml::as_arr) {
             for s in arr {
                 let name = s
@@ -571,6 +722,41 @@ impl ServiceConfig {
         }
         if self.obs.span_log == 0 || self.obs.span_log > 65_536 {
             return Err("obs.span_log must be in [1, 65536]".into());
+        }
+        if self.client.max_attempts == 0 || self.client.max_attempts > 100 {
+            return Err("client.max_attempts must be in [1, 100]".into());
+        }
+        if self.client.base_backoff_ms == 0 {
+            return Err("client.base_backoff_ms must be >= 1".into());
+        }
+        if self.client.max_backoff_ms < self.client.base_backoff_ms {
+            return Err("client.max_backoff_ms must be >= client.base_backoff_ms".into());
+        }
+        if let Some(cl) = &self.cluster {
+            if cl.vnodes == 0 || cl.vnodes > 4096 {
+                return Err("cluster.vnodes must be in [1, 4096]".into());
+            }
+            if cl.nodes.is_empty() {
+                return Err("cluster requires at least one [[cluster.node]]".into());
+            }
+            let mut ids = std::collections::BTreeSet::new();
+            for n in &cl.nodes {
+                if n.id.is_empty() {
+                    return Err("cluster.node.id must not be empty".into());
+                }
+                if n.addr.is_empty() {
+                    return Err(format!("cluster node '{}' has an empty addr", n.id));
+                }
+                if !ids.insert(&n.id) {
+                    return Err(format!("duplicate cluster node id '{}'", n.id));
+                }
+            }
+            if !cl.nodes.iter().any(|n| n.id == cl.node_id) {
+                return Err(format!(
+                    "cluster.node_id '{}' is not among the [[cluster.node]] entries",
+                    cl.node_id
+                ));
+            }
         }
         let mut seen = std::collections::BTreeSet::new();
         for s in &self.streams {
@@ -808,6 +994,82 @@ span_log = 16
         assert!(ServiceConfig::from_toml_text("[obs]\nring_size = 0").is_err());
         assert!(ServiceConfig::from_toml_text("[obs]\nring_size = 2097152").is_err());
         assert!(ServiceConfig::from_toml_text("[obs]\nspan_log = 0").is_err());
+    }
+
+    #[test]
+    fn client_section_parses_and_validates() {
+        // Defaults mirror RetryPolicy::default().
+        let d = ServiceConfig::default().client;
+        assert_eq!(d.max_attempts, 6);
+        assert_eq!(d.base_backoff_ms, 10);
+        assert_eq!(d.max_backoff_ms, 2_000);
+        assert_eq!(ServiceConfig::from_toml_text("").unwrap().client, d);
+        let text = r#"
+[client]
+max_attempts = 3
+base_backoff_ms = 25
+max_backoff_ms = 500
+"#;
+        let cfg = ServiceConfig::from_toml_text(text).unwrap();
+        assert_eq!(cfg.client.max_attempts, 3);
+        assert_eq!(cfg.client.base_backoff_ms, 25);
+        assert_eq!(cfg.client.max_backoff_ms, 500);
+        // Degenerate knobs are refused, mirroring [persist].
+        assert!(ServiceConfig::from_toml_text("[client]\nmax_attempts = 0").is_err());
+        assert!(ServiceConfig::from_toml_text("[client]\nmax_attempts = 101").is_err());
+        assert!(ServiceConfig::from_toml_text("[client]\nbase_backoff_ms = 0").is_err());
+        let inverted = "[client]\nbase_backoff_ms = 100\nmax_backoff_ms = 50";
+        assert!(ServiceConfig::from_toml_text(inverted).is_err());
+    }
+
+    #[test]
+    fn cluster_section_parses_and_validates() {
+        let text = r#"
+[cluster]
+node_id = "a"
+vnodes = 32
+standby_addr = "127.0.0.1:7411"
+ship_interval_ms = 50
+
+[[cluster.node]]
+id = "a"
+addr = "127.0.0.1:7311"
+
+[[cluster.node]]
+id = "b"
+addr = "127.0.0.1:7312"
+"#;
+        let cl = ServiceConfig::from_toml_text(text).unwrap().cluster.unwrap();
+        assert_eq!(cl.node_id, "a");
+        assert_eq!(cl.vnodes, 32);
+        assert_eq!(cl.standby_addr.as_deref(), Some("127.0.0.1:7411"));
+        assert_eq!(cl.ship_interval_ms, 50);
+        assert_eq!(cl.nodes.len(), 2);
+        assert_eq!(cl.nodes[1].id, "b");
+        // Absent section → standalone.
+        assert!(ServiceConfig::from_toml_text("").unwrap().cluster.is_none());
+        // A cluster section without a node identity is an error.
+        assert!(ServiceConfig::from_toml_text("[cluster]\nvnodes = 8").is_err());
+        // node_id must be a declared member.
+        let ghost = "[cluster]\nnode_id = \"z\"\n[[cluster.node]]\nid = \"a\"\naddr = \"x:1\"";
+        assert!(ServiceConfig::from_toml_text(ghost).is_err());
+        // Duplicate ids, empty addrs, degenerate vnode counts refused.
+        let dup = r#"
+[cluster]
+node_id = "a"
+[[cluster.node]]
+id = "a"
+addr = "x:1"
+[[cluster.node]]
+id = "a"
+addr = "x:2"
+"#;
+        assert!(ServiceConfig::from_toml_text(dup).is_err());
+        let nonodes = "[cluster]\nnode_id = \"a\"";
+        assert!(ServiceConfig::from_toml_text(nonodes).is_err());
+        let badvn =
+            "[cluster]\nnode_id = \"a\"\nvnodes = 0\n[[cluster.node]]\nid = \"a\"\naddr = \"x:1\"";
+        assert!(ServiceConfig::from_toml_text(badvn).is_err());
     }
 
     #[test]

@@ -788,6 +788,50 @@ impl Client {
             .collect())
     }
 
+    /// Ship a raw WAL byte chunk to a standby's replication listener
+    /// (v2 only). `offset` is the byte position this chunk starts at in
+    /// segment `segment` of shard `shard`'s log; `done` marks the final
+    /// chunk of a sealed segment (the standby fsyncs on it). Returns
+    /// the standby's `(segment, acked_offset)` — its actual file length
+    /// after the call. An ack that disagrees with `offset + len` means
+    /// the standby had different bytes (restart, prior partial ship);
+    /// the shipper adopts the acked position and re-ships from there.
+    /// An EMPTY chunk is a pure position probe.
+    pub fn wal_ship(
+        &mut self,
+        shard: u16,
+        segment: u64,
+        offset: u64,
+        bytes: &[u8],
+        done: bool,
+    ) -> Result<(u64, u64), ClientError> {
+        match self.roundtrip(&Request::WalShip {
+            shard,
+            segment,
+            offset,
+            done,
+            bytes: bytes.to_vec(),
+        })? {
+            Response::WalShipped {
+                segment, offset, ..
+            } => Ok((segment, offset)),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Cluster ring gossip (v2 only): offer an encoded ring, receive
+    /// back whichever of the two rings carries the higher version (the
+    /// peer adopts ours if newer). An empty offer is a pure query for
+    /// the peer's current ring (empty reply = peer is not federated).
+    pub fn cluster_hello(&mut self, ring: &[u8]) -> Result<Vec<u8>, ClientError> {
+        match self.roundtrip(&Request::ClusterHello {
+            ring: ring.to_vec(),
+        })? {
+            Response::ClusterRing { ring } => Ok(ring),
+            other => Err(unexpected(&other)),
+        }
+    }
+
     /// Registered stream names (sorted server-side).
     pub fn list_streams(&mut self) -> Result<Vec<String>, ClientError> {
         Ok(self
@@ -836,6 +880,20 @@ impl Default for RetryPolicy {
             base_backoff_ms: 10,
             max_backoff_ms: 2_000,
             seed: 0x5EED_CAFE,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Resolve a validated `[client]` config section onto a policy
+    /// (the jitter seed stays at its default — reproducible schedules
+    /// are a test concern, not a config knob).
+    pub fn from_config(cfg: &crate::config::ClientConfig) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: cfg.max_attempts,
+            base_backoff_ms: cfg.base_backoff_ms,
+            max_backoff_ms: cfg.max_backoff_ms,
+            ..RetryPolicy::default()
         }
     }
 }
@@ -1040,9 +1098,100 @@ impl RetryingClient {
         self.with_retry(|c| c.list_streams())
     }
 
+    /// Fan-in stat read (read — always safe to retry).
+    pub fn multi_snapshot(
+        &mut self,
+        streams: &[&str],
+    ) -> Result<Vec<Result<StatEntry, String>>, ClientError> {
+        self.with_retry(|c| c.multi_snapshot(streams))
+    }
+
+    /// Export a stream's estimator state (read — always safe to retry).
+    pub fn export_state(&mut self, stream: &str) -> Result<Vec<u8>, ClientError> {
+        self.with_retry(|c| c.export_state(stream))
+    }
+
+    /// Replace a stream's state from an exported payload (idempotent —
+    /// restoring the same payload twice lands the same state, so it is
+    /// safe to retry; contrast `merge_state`, which is NOT wrapped here
+    /// because a retried merge double-counts).
+    pub fn restore(&mut self, stream: &str, state: &[u8]) -> Result<u64, ClientError> {
+        self.with_retry(|c| c.restore(stream, state))
+    }
+
+    /// Ship a WAL chunk to a standby (idempotent — the standby appends
+    /// only when `offset` equals its file length, so a replayed chunk
+    /// after an ambiguous failure acks the position without
+    /// double-appending; always safe to retry).
+    pub fn wal_ship(
+        &mut self,
+        shard: u16,
+        segment: u64,
+        offset: u64,
+        bytes: &[u8],
+        done: bool,
+    ) -> Result<(u64, u64), ClientError> {
+        self.with_retry(|c| c.wal_ship(shard, segment, offset, bytes, done))
+    }
+
+    /// Cluster ring gossip (idempotent — version comparison makes
+    /// re-offering the same ring a no-op; always safe to retry).
+    pub fn cluster_hello(&mut self, ring: &[u8]) -> Result<Vec<u8>, ClientError> {
+        self.with_retry(|c| c.cluster_hello(ring))
+    }
+
     /// Push one sample with push retry semantics (see type docs).
     pub fn push(&mut self, stream: &str, data: &[f64]) -> Result<bool, ClientError> {
         self.push_many(stream, 1, data).map(|(accepted, _)| accepted > 0)
+    }
+
+    /// Fan-in push with push retry semantics: connection establishment
+    /// failures and `Overloaded` rejections retry (nothing was
+    /// applied); a connection that dies once the call is in flight
+    /// reports [`ClientError::Io`] — some entries may already be
+    /// applied (especially under the v1 sequential degradation), so
+    /// retrying could double-apply.
+    pub fn multi_push(
+        &mut self,
+        batches: &[(&str, usize, &[f64])],
+    ) -> Result<Vec<MultiOutcome>, ClientError> {
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            let c = match self.connected() {
+                Ok(c) => c,
+                Err(ClientError::Io(e)) => {
+                    self.inner = None;
+                    if attempt >= self.policy.max_attempts.max(1) {
+                        return Err(ClientError::Io(e));
+                    }
+                    self.backoff();
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            match c.multi_push(batches) {
+                Ok(v) => {
+                    self.prev_backoff_ms = self.policy.base_backoff_ms;
+                    return Ok(v);
+                }
+                Err(ClientError::Overloaded(e)) => {
+                    if attempt >= self.policy.max_attempts.max(1) {
+                        return Err(ClientError::Overloaded(e));
+                    }
+                    self.overload_backoffs += 1;
+                    self.backoff();
+                }
+                Err(ClientError::Io(e)) => {
+                    self.inner = None;
+                    return Err(ClientError::Io(format!(
+                        "connection died during multi_push — entries may or may not be \
+                         applied server-side; not retrying ({e})"
+                    )));
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     /// Push a batch with push retry semantics: retry on pre-send

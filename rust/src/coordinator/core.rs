@@ -173,6 +173,11 @@ struct ShardPub {
     /// WAL write position at the last drain boundary (0/0 = no WAL).
     wal_segment: AtomicU64,
     wal_offset: AtomicU64,
+    /// WAL position recovery replayed up to (0/0 = never recovered).
+    /// On a promoted standby this is exactly how far replication had
+    /// shipped, so `ata top` can show standby lag per shard.
+    wal_replay_segment: AtomicU64,
+    wal_replay_offset: AtomicU64,
 }
 
 /// The stream registry: one map per addressing mode, always mutated
@@ -361,6 +366,12 @@ pub struct Coordinator {
     shard_pubs: Vec<Arc<ShardPub>>,
     /// Per-shard flight recorders (same index as `shards`).
     recorders: Vec<Arc<FlightRecorder>>,
+    /// Corrupt mid-WAL tails skipped during recovery (surfaced through
+    /// `introspect` so standby replay loss is observable in `ata top`).
+    wal_skipped_tails: AtomicU64,
+    /// Newest cluster ring this node has seen (encoded bytes, empty =
+    /// not federated). Written by the `cluster_hello` gossip op.
+    cluster_ring: Mutex<Vec<u8>>,
 }
 
 impl Coordinator {
@@ -609,6 +620,8 @@ impl Coordinator {
             obs,
             shard_pubs,
             recorders,
+            wal_skipped_tails: AtomicU64::new(0),
+            cluster_ring: Mutex::new(Vec::new()),
         })
     }
 
@@ -677,6 +690,8 @@ impl Coordinator {
                 worker_starts: p.worker_starts.load(Ordering::Relaxed),
                 wal_segment: p.wal_segment.load(Ordering::Relaxed),
                 wal_offset: p.wal_offset.load(Ordering::Relaxed),
+                wal_replay_segment: p.wal_replay_segment.load(Ordering::Relaxed),
+                wal_replay_offset: p.wal_replay_offset.load(Ordering::Relaxed),
                 events_recorded: r.recorded(),
             })
             .collect();
@@ -720,12 +735,96 @@ impl Coordinator {
         }
         IntrospectReport {
             sample_per_mille: self.obs.sample_per_mille(),
+            wal_skipped_tails: self.wal_skipped_tails.load(Ordering::Relaxed),
             shards,
             banks,
             streams,
             events,
             spans: self.obs.recent_spans(32),
         }
+    }
+
+    /// Cluster ring gossip (the wire `cluster_hello` op): compare the
+    /// offered encoded ring against the newest one this node has seen,
+    /// adopt whichever carries the higher version, and return the
+    /// winner — so any two nodes that exchange hellos converge on the
+    /// newest ring regardless of who initiated. An empty offer is a
+    /// pure query (returns the current ring, empty = not federated).
+    /// Adoption bumps the ring-version gauge and records a
+    /// flight-recorder event for the `ata top` event feed.
+    pub fn offer_ring(&self, offered: &[u8]) -> Result<Vec<u8>, String> {
+        let mut current = self.cluster_ring.lock().expect("cluster ring lock");
+        if offered.is_empty() {
+            return Ok(current.clone());
+        }
+        let offered_ring = crate::cluster::HashRing::decode(offered)?;
+        let adopt = if current.is_empty() {
+            true
+        } else {
+            let cur = crate::cluster::HashRing::decode(&current)?;
+            offered_ring.version() > cur.version()
+        };
+        if adopt {
+            *current = offered.to_vec();
+            self.metrics
+                .gauge(names::CLUSTER_RING_VERSION)
+                .set(offered_ring.version() as f64);
+            if let Some(r) = self.recorders.first() {
+                r.record(EventKind::RingUpdate, 0, 0, offered_ring.version());
+            }
+        }
+        Ok(current.clone())
+    }
+
+    /// Committed WAL position per shard — the last drain-boundary
+    /// publish, meaning everything at or before it is both applied and
+    /// appended. This is the replication shipper's safe-to-ship
+    /// horizon: shipping past it could expose a standby to records the
+    /// primary had not yet acknowledged.
+    pub fn wal_positions(&self) -> Vec<(u64, u64)> {
+        self.shard_pubs
+            .iter()
+            .map(|p| {
+                (
+                    p.wal_segment.load(Ordering::Relaxed),
+                    p.wal_offset.load(Ordering::Relaxed),
+                )
+            })
+            .collect()
+    }
+
+    /// WAL directory for `shard` when persistence is configured (the
+    /// replication shipper reads segment bytes straight from disk).
+    pub fn wal_dir_path(&self, shard: usize) -> Option<PathBuf> {
+        self.persist.as_ref().map(|p| p.wal_dir(shard))
+    }
+
+    /// Worker shard count.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Observability hook for the replication shipper (which lives
+    /// outside the coordinator): count shipped WAL bytes and drop a
+    /// flight-recorder event on the shard's ring.
+    pub fn note_wal_ship(&self, shard: usize, bytes: u64) {
+        self.metrics.counter(names::WAL_SHIPPED_BYTES).add(bytes);
+        if let Some(r) = self.recorders.get(shard) {
+            r.record(EventKind::WalShip, 0, shard as u64, bytes);
+        }
+    }
+
+    /// Publish the replication lag gauge (committed-but-unshipped WAL
+    /// bytes across all shards), set by the shipper after each pass.
+    pub fn set_ship_lag(&self, lag: u64) {
+        self.metrics.gauge(names::WAL_SHIP_LAG_BYTES).set(lag as f64);
+    }
+
+    /// The shard a stream name hashes to — the same FNV-1a placement
+    /// the ingest path uses, exposed so live migration can replay
+    /// exactly one shard's WAL delta for a stream.
+    pub fn shard_of(&self, name: &str) -> usize {
+        fnv1a(name.as_bytes()) as usize % self.shards.len()
     }
 
     /// The bank stripe for `(spec, dim)` on `shard`, if the spec has a
@@ -1588,7 +1687,17 @@ impl Coordinator {
                 report.wal_clean = false;
             }
             report.wal_skipped_tails += summary.skipped_tails;
+            // Publish how far this shard's log replayed. On a promoted
+            // standby this is exactly the position replication had
+            // shipped to, so `ata top` shows per-shard standby lag.
+            if let Some(p) = c.shard_pubs.get(*old_id) {
+                let end = wal::segment_len(path, *max_seg).unwrap_or(0);
+                p.wal_replay_segment.store(*max_seg, Ordering::Relaxed);
+                p.wal_replay_offset.store(end, Ordering::Relaxed);
+            }
         }
+        c.wal_skipped_tails
+            .store(report.wal_skipped_tails, Ordering::Relaxed);
         c.sync()?;
         // Config-declared streams the snapshot/WAL did not already have.
         for s in &cfg.streams {

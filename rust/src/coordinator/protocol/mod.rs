@@ -301,6 +301,29 @@ pub enum Request {
     /// Whole metrics registry rendered in Prometheus text exposition
     /// format (the scrape payload; JSON stays on the `metrics` op).
     MetricsProm,
+    /// Replication transport: raw WAL segment bytes for one shard,
+    /// starting at `offset` within segment file `segment`. The standby
+    /// appends them verbatim when (and only when) `offset` equals its
+    /// current file length, and always acks its actual file length —
+    /// so a disagreeing shipper resyncs off the ack instead of
+    /// corrupting the replica. `done` marks the sealed end of a
+    /// segment (the standby may fsync and the shipper moves on).
+    /// Empty `bytes` is a position probe. v2 only.
+    WalShip {
+        shard: u16,
+        segment: u64,
+        offset: u64,
+        done: bool,
+        bytes: Vec<u8>,
+    },
+    /// Cluster membership handshake extension: carries an encoded
+    /// [`crate::cluster::HashRing`] (empty = pure query). The receiver
+    /// keeps the higher-versioned of its ring and the offered one and
+    /// answers with the winner, so rings converge gossip-style. v2
+    /// only.
+    ClusterHello {
+        ring: Vec<u8>,
+    },
 }
 
 /// Which op a request is — used to pick v2 tags and to interpret v1
@@ -326,6 +349,8 @@ pub enum OpKind {
     MultiSnapshot,
     Introspect,
     MetricsProm,
+    WalShip,
+    ClusterHello,
 }
 
 impl Request {
@@ -349,6 +374,8 @@ impl Request {
             Request::MultiSnapshot { .. } => OpKind::MultiSnapshot,
             Request::Introspect => OpKind::Introspect,
             Request::MetricsProm => OpKind::MetricsProm,
+            Request::WalShip { .. } => OpKind::WalShip,
+            Request::ClusterHello { .. } => OpKind::ClusterHello,
         }
     }
 }
@@ -435,6 +462,21 @@ pub enum Response {
     /// metrics registry.
     MetricsText {
         text: String,
+    },
+    /// `wal_ship` ack: the standby's actual file position for the
+    /// shipped shard/segment after the append (its file length). When
+    /// it differs from `offset + bytes.len()` of the request, the
+    /// standby refused the write and the shipper must resync from the
+    /// acked offset.
+    WalShipped {
+        shard: u16,
+        segment: u64,
+        offset: u64,
+    },
+    /// `cluster_hello` answer: the receiver's (possibly just-updated)
+    /// encoded ring — always the highest version either side has seen.
+    ClusterRing {
+        ring: Vec<u8>,
     },
 }
 
@@ -630,12 +672,15 @@ mod tests {
             let resp = Response::Introspection {
                 report: IntrospectReport {
                     sample_per_mille: 10,
+                    wal_skipped_tails: 1,
                     shards: vec![crate::obs::introspect::ShardReport {
                         shard: 0,
                         queue_depth: 2,
                         worker_starts: 1,
                         wal_segment: 3,
                         wal_offset: 4096,
+                        wal_replay_segment: 2,
+                        wal_replay_offset: 128,
                         events_recorded: 17,
                     }],
                     banks: Vec::new(),
@@ -654,6 +699,54 @@ mod tests {
             encode_response(wire, 12, 0, &resp, &mut buf).unwrap();
             let (_, _, got) = decode_response(wire, OpKind::Introspect, &buf).unwrap();
             assert_eq!(got, resp, "{wire:?}");
+        }
+    }
+
+    #[test]
+    fn cluster_ops_roundtrip_on_v2_and_error_on_v1() {
+        let reqs = [
+            Request::WalShip {
+                shard: 3,
+                segment: 7,
+                offset: 4096,
+                done: true,
+                bytes: vec![1, 2, 3, 0xFF],
+            },
+            Request::ClusterHello {
+                ring: b"ATAR-ish bytes".to_vec(),
+            },
+        ];
+        let resps = [
+            (
+                OpKind::WalShip,
+                Response::WalShipped {
+                    shard: 3,
+                    segment: 7,
+                    offset: 4100,
+                },
+            ),
+            (
+                OpKind::ClusterHello,
+                Response::ClusterRing {
+                    ring: b"ATAR-ish bytes".to_vec(),
+                },
+            ),
+        ];
+        let mut buf = Vec::new();
+        for req in &reqs {
+            encode_request(Wire::V2Binary, 21, 9, req, &mut buf).unwrap();
+            let (seq, trace, got) = decode_request(Wire::V2Binary, &buf).unwrap();
+            assert_eq!((seq, trace), (21, 9));
+            assert_eq!(&got, req);
+            // The replication ops are v2-only: v1 encode is a
+            // structured error, never a silent misframe.
+            let err = encode_request(Wire::V1Json, 21, 9, req, &mut buf).unwrap_err();
+            assert!(err.contains("protocol v2"), "{err}");
+        }
+        for (kind, resp) in &resps {
+            encode_response(Wire::V2Binary, 21, 9, resp, &mut buf).unwrap();
+            let (_, _, got) = decode_response(Wire::V2Binary, *kind, &buf).unwrap();
+            assert_eq!(&got, resp);
         }
     }
 

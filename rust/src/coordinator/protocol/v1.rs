@@ -103,6 +103,12 @@ pub fn request_to_json(req: &Request) -> Result<Json, String> {
         Request::MultiPush { .. } => {
             return Err("multi_push requires protocol v2".into());
         }
+        Request::WalShip { .. } => {
+            return Err("wal_ship requires protocol v2".into());
+        }
+        Request::ClusterHello { .. } => {
+            return Err("cluster_hello requires protocol v2".into());
+        }
         Request::Snapshot { stream } => vec![
             ("op", Json::Str("snapshot".into())),
             ("stream", Json::Str(name_of(stream)?.to_string())),
@@ -372,6 +378,8 @@ pub fn response_to_json(resp: &Response) -> Json {
             ("dropped", Json::Num(*dropped as f64)),
         ]),
         Response::MultiPushed { .. } => err_response("multi_push requires protocol v2"),
+        Response::WalShipped { .. } => err_response("wal_ship requires protocol v2"),
+        Response::ClusterRing { .. } => err_response("cluster_hello requires protocol v2"),
         Response::Snap {
             stream,
             t,
@@ -552,6 +560,8 @@ pub fn response_from_json(kind: OpKind, j: &Json) -> Result<Response, String> {
             dropped: j.get("dropped").and_then(Json::as_u64).unwrap_or(0),
         }),
         OpKind::MultiPush => Err("multi_push responses require protocol v2".into()),
+        OpKind::WalShip => Err("wal_ship responses require protocol v2".into()),
+        OpKind::ClusterHello => Err("cluster_hello responses require protocol v2".into()),
         OpKind::Snapshot => {
             let value = match j.get("value") {
                 Some(Json::Null) | None => None,
@@ -771,6 +781,20 @@ mod tests {
         .unwrap_err();
         assert!(err.contains("name"), "{err}");
         assert!(request_to_json(&Request::MultiPush { entries: vec![] }).is_err());
+        // The cluster replication ops are v2-only in both directions.
+        let err = request_to_json(&Request::WalShip {
+            shard: 0,
+            segment: 1,
+            offset: 0,
+            done: false,
+            bytes: vec![1],
+        })
+        .unwrap_err();
+        assert!(err.contains("protocol v2"), "{err}");
+        let err = request_to_json(&Request::ClusterHello { ring: vec![] }).unwrap_err();
+        assert!(err.contains("protocol v2"), "{err}");
+        assert!(response_from_json(OpKind::WalShip, &ok_response(vec![])).is_err());
+        assert!(response_from_json(OpKind::ClusterHello, &ok_response(vec![])).is_err());
     }
 
     #[test]
@@ -946,12 +970,15 @@ mod tests {
         let resp = Response::Introspection {
             report: IntrospectReport {
                 sample_per_mille: 10,
+                wal_skipped_tails: 3,
                 shards: vec![crate::obs::introspect::ShardReport {
                     shard: 0,
                     queue_depth: 3,
                     worker_starts: 1,
                     wal_segment: 2,
                     wal_offset: 4096,
+                    wal_replay_segment: 1,
+                    wal_replay_offset: 512,
                     events_recorded: 11,
                 }],
                 banks: Vec::new(),

@@ -62,6 +62,8 @@ const OP_QUERY: u8 = 15;
 const OP_MULTI_SNAPSHOT: u8 = 16;
 const OP_INTROSPECT: u8 = 17;
 const OP_METRICS_PROM: u8 = 18;
+const OP_WAL_SHIP: u8 = 19;
+const OP_CLUSTER_HELLO: u8 = 20;
 
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
@@ -90,6 +92,8 @@ fn op_tag(kind: OpKind) -> u8 {
         OpKind::MultiSnapshot => OP_MULTI_SNAPSHOT,
         OpKind::Introspect => OP_INTROSPECT,
         OpKind::MetricsProm => OP_METRICS_PROM,
+        OpKind::WalShip => OP_WAL_SHIP,
+        OpKind::ClusterHello => OP_CLUSTER_HELLO,
     }
 }
 
@@ -226,6 +230,20 @@ pub fn encode_request(seq: u64, trace: u64, req: &Request, out: &mut Vec<u8>) ->
                 e.put_u64(handle_of(s)?);
             }
         }
+        Request::WalShip {
+            shard,
+            segment,
+            offset,
+            done,
+            bytes,
+        } => {
+            e.put_u16(*shard);
+            e.put_u64(*segment);
+            e.put_u64(*offset);
+            e.put_u8(*done as u8);
+            e.put_bytes(bytes);
+        }
+        Request::ClusterHello { ring } => e.put_bytes(ring),
     }
     *out = e.into_bytes();
     Ok(())
@@ -369,6 +387,22 @@ pub fn decode_request(payload: &[u8]) -> Result<(u64, u64, Request), String> {
         }
         OP_INTROSPECT => Request::Introspect,
         OP_METRICS_PROM => Request::MetricsProm,
+        OP_WAL_SHIP => {
+            let shard = d.get_u16()?;
+            let segment = d.get_u64()?;
+            let offset = d.get_u64()?;
+            let done = d.get_u8()? != 0;
+            Request::WalShip {
+                shard,
+                segment,
+                offset,
+                done,
+                bytes: d.get_bytes()?.to_vec(),
+            }
+        }
+        OP_CLUSTER_HELLO => Request::ClusterHello {
+            ring: d.get_bytes()?.to_vec(),
+        },
         other => return Err(format!("unknown v2 op tag {other}")),
     };
     if d.remaining() != 0 {
@@ -542,6 +576,20 @@ pub fn encode_response(
                     e.put_u8(OP_METRICS_PROM);
                     e.put_str(text);
                 }
+                Response::WalShipped {
+                    shard,
+                    segment,
+                    offset,
+                } => {
+                    e.put_u8(OP_WAL_SHIP);
+                    e.put_u16(*shard);
+                    e.put_u64(*segment);
+                    e.put_u64(*offset);
+                }
+                Response::ClusterRing { ring } => {
+                    e.put_u8(OP_CLUSTER_HELLO);
+                    e.put_bytes(ring);
+                }
             }
         }
     }
@@ -699,6 +747,14 @@ pub fn decode_response(kind: OpKind, payload: &[u8]) -> Result<(u64, u64, Respon
             report: IntrospectReport::decode(&mut d)?,
         },
         OP_METRICS_PROM => Response::MetricsText { text: d.get_str()? },
+        OP_WAL_SHIP => Response::WalShipped {
+            shard: d.get_u16()?,
+            segment: d.get_u64()?,
+            offset: d.get_u64()?,
+        },
+        OP_CLUSTER_HELLO => Response::ClusterRing {
+            ring: d.get_bytes()?.to_vec(),
+        },
         other => return Err(format!("unknown v2 response op tag {other}")),
     };
     if d.remaining() != 0 {
@@ -778,6 +834,24 @@ mod tests {
             },
             Request::Introspect,
             Request::MetricsProm,
+            Request::WalShip {
+                shard: 2,
+                segment: 11,
+                offset: 8192,
+                done: false,
+                bytes: vec![0x41, 0x54, 0x41, 0x57, 0x00, 0xFF],
+            },
+            Request::WalShip {
+                shard: 0,
+                segment: 0,
+                offset: 0,
+                done: true,
+                bytes: vec![], // position probe
+            },
+            Request::ClusterHello {
+                ring: vec![0x41, 0x54, 0x41, 0x52, 1, 0],
+            },
+            Request::ClusterHello { ring: vec![] }, // ring query
         ];
         for (i, r) in reqs.into_iter().enumerate() {
             let seq = 1000 + i as u64;
@@ -920,12 +994,15 @@ mod tests {
                 Response::Introspection {
                     report: IntrospectReport {
                         sample_per_mille: 1000,
+                        wal_skipped_tails: 2,
                         shards: vec![crate::obs::introspect::ShardReport {
                             shard: 1,
                             queue_depth: 0,
                             worker_starts: 2,
                             wal_segment: 5,
                             wal_offset: 77,
+                            wal_replay_segment: 4,
+                            wal_replay_offset: 6,
                             events_recorded: 9,
                         }],
                         banks: vec![crate::obs::introspect::BankReport {
@@ -950,6 +1027,20 @@ mod tests {
                 OpKind::MetricsProm,
                 Response::MetricsText {
                     text: "# TYPE ata_pushes_total counter\nata_pushes_total 7\n".into(),
+                },
+            ),
+            (
+                OpKind::WalShip,
+                Response::WalShipped {
+                    shard: 2,
+                    segment: 11,
+                    offset: 8198,
+                },
+            ),
+            (
+                OpKind::ClusterHello,
+                Response::ClusterRing {
+                    ring: vec![0x41, 0x54, 0x41, 0x52, 1, 0],
                 },
             ),
         ];

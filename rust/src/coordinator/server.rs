@@ -919,5 +919,16 @@ fn dispatch(req: Request, c: &Coordinator, ctx: &TraceCtx) -> Response {
                 text: crate::obs::prom::render(c.metrics()),
             }
         }
+        // WAL shipping targets a standby's replication listener
+        // (`cluster::standby`), never a full coordinator: accepting
+        // foreign WAL bytes here would interleave a remote log with
+        // this node's own appends.
+        Request::WalShip { .. } => {
+            Response::Err("wal_ship: this node is not a standby".into())
+        }
+        Request::ClusterHello { ring } => match c.offer_ring(&ring) {
+            Ok(ring) => Response::ClusterRing { ring },
+            Err(e) => Response::Err(e),
+        },
     }
 }

@@ -118,6 +118,7 @@
 pub mod analytics;
 pub mod averagers;
 pub mod benchkit;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod linreg;

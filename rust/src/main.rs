@@ -11,6 +11,10 @@
 //!                [--aggregate]          # moment stats + confidence bands
 //! ata checkpoint [--addr ...]           # snapshot a running service
 //! ata restore    --dir state [...]      # offline crash recovery + report
+//! ata route      <announce|place|register|query|snapshot|migrate> --config svc.toml [...]
+//!                                       # scatter-gather over a [cluster] ring
+//! ata standby    --addr 127.0.0.1:7411 --dir standby-state
+//!                                       # warm WAL-replication standby
 //! ata artifacts  [--dir artifacts]      # validate AOT artifacts load+run
 //! ata weights    --spec "gea(c=0.5)" --t 200   # weight-profile analysis
 //! ata bench-compare <baseline.json> <current.json> [--threshold 0.15]
@@ -71,6 +75,8 @@ fn top_help() -> String {
          \x20 query        anytime analytics: mean ± band, ESS, top-K deviants\n\
          \x20 checkpoint   snapshot a running durable service over the wire\n\
          \x20 restore      offline crash recovery of a persist directory\n\
+         \x20 route        federated client over a [cluster] consistent-hash ring\n\
+         \x20 standby      warm standby receiving WAL-shipping replication\n\
          \x20 artifacts    validate the AOT artifacts (load + execute)\n\
          \x20 weights      weight/staleness analysis of an averager spec\n\
          \x20 bench-compare  diff a fresh BENCH json against a committed baseline\n\n\
@@ -92,6 +98,8 @@ fn run(args: &[String]) -> Result<(), CliRunError> {
         "query" => cmd_query(rest),
         "checkpoint" => cmd_checkpoint(rest),
         "restore" => cmd_restore(rest),
+        "route" => cmd_route(rest),
+        "standby" => cmd_standby(rest),
         "artifacts" => cmd_artifacts(rest),
         "weights" => cmd_weights(rest),
         "bench-compare" => cmd_bench_compare(rest),
@@ -238,6 +246,31 @@ fn cmd_serve(args: &[String]) -> Result<(), CliRunError> {
                 move || c.checkpoint().map(|_| ()),
             )
         });
+    // WAL-shipping replication, when this node has a standby configured:
+    // a background thread tails committed WAL positions and streams raw
+    // segment bytes to the standby's listener.
+    let ship_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let shipper_thread = match cfg.cluster.as_ref().and_then(|cl| cl.standby_addr.clone()) {
+        Some(standby_addr) if cfg.persist.is_some() => {
+            let interval = std::time::Duration::from_millis(
+                cfg.cluster.as_ref().map_or(200, |cl| cl.ship_interval_ms).max(10),
+            );
+            let standby = ata::coordinator::RetryingClient::connect(&standby_addr);
+            let shipper =
+                ata::cluster::Shipper::new(Arc::clone(&coordinator), standby)?;
+            let stop = Arc::clone(&ship_stop);
+            eprintln!("shipping WAL to standby {standby_addr} every {interval:?}");
+            Some(std::thread::spawn(move || shipper.run(interval, stop)))
+        }
+        Some(_) => {
+            return Err(
+                "[cluster].standby_addr requires a [persist] section (the WAL is what ships)"
+                    .to_string()
+                    .into(),
+            )
+        }
+        None => None,
+    };
     let mut server = Server::start_with_options(
         &cfg.addr,
         coordinator,
@@ -257,6 +290,12 @@ fn cmd_serve(args: &[String]) -> Result<(), CliRunError> {
             // a WAL group commit, then close. The grace bounds how long
             // a stalled peer can hold up the exit.
             server.drain(std::time::Duration::from_secs(5));
+            // Stop replication AFTER the drain so the final group
+            // commit's bytes get one last shipping pass.
+            ship_stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            if let Some(t) = shipper_thread {
+                let _ = t.join();
+            }
             eprintln!("drained; exiting");
             Ok(())
         }
@@ -412,6 +451,154 @@ fn cmd_restore(args: &[String]) -> Result<(), CliRunError> {
     Ok(())
 }
 
+fn cmd_route(args: &[String]) -> Result<(), CliRunError> {
+    let spec = CommandSpec::new(
+        "route",
+        "federated client: place streams on a [cluster] ring, scatter-gather ops across nodes",
+    )
+    .positional("action", "announce | place | register | query | snapshot | migrate")
+    .req("config", "TOML service config with [cluster] (and optionally [client]) sections")
+    .opt("stream", "", "stream name (place, register, migrate)")
+    .opt("streams", "", "comma-separated stream list (snapshot)")
+    .opt("dim", "1", "stream dimensionality (register, migrate)")
+    .opt("spec", "gea(c=0.5)", "averager spec (register, migrate)")
+    .opt("to", "", "target node id (migrate)")
+    .opt("wal-dir", "", "source node's WAL root <persist.dir>/wal (migrate delta replay)")
+    .opt("src-shards", "0", "source node's shard count (migrate; 0 = no delta replay)")
+    .opt("prefix", "", "stream-name prefix filter (query)")
+    .opt("z", "1.96", "confidence-band multiplier (query)")
+    .opt("top-k", "0", "keep only the K most deviant streams (query; 0 = all)")
+    .flag("aggregate", "also report the cluster-wide pooled aggregate (query)");
+    let p = parse_with(&spec, args)?;
+    let cfg = ServiceConfig::load(&p.str("config"))?;
+    let Some(cluster) = cfg.cluster.as_ref() else {
+        return Err("route requires a [cluster] section in the config".to_string().into());
+    };
+    let mut router = ata::cluster::Router::from_config(cluster, &cfg.client)?;
+    match p.positional(0).unwrap_or("") {
+        "announce" => {
+            let (reached, version) = router.announce()?;
+            println!(
+                "announced ring v{version} to {reached}/{} nodes",
+                router.ring().nodes().len()
+            );
+        }
+        "place" => {
+            let stream = required(&p, "stream")?;
+            let id = router.route(&stream)?;
+            let addr = router.ring().node(&id).map(|n| n.addr.clone()).unwrap_or_default();
+            println!("{stream} -> {id} ({addr})");
+        }
+        "register" => {
+            let stream = required(&p, "stream")?;
+            let handle = router.register(
+                &stream,
+                p.usize("dim").map_err(|e| e.to_string())?,
+                &p.str("spec"),
+            )?;
+            println!("registered {stream} on {} (handle {handle})", router.route(&stream)?);
+        }
+        "query" => {
+            let q = router.query(
+                &p.str("prefix"),
+                p.f64("z").map_err(|e| e.to_string())?,
+                p.usize("top-k").map_err(|e| e.to_string())?,
+                p.flag("aggregate"),
+            )?;
+            if q.stats.is_empty() {
+                println!("no streams matched");
+            }
+            for s in &q.stats {
+                print_stat(s);
+            }
+            if let Some(a) = &q.aggregate {
+                println!("-- pooled over {} streams", q.aggregated);
+                print_stat(a);
+            }
+        }
+        "snapshot" => {
+            let streams = p.str("streams");
+            let names: Vec<&str> = streams
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .collect();
+            if names.is_empty() {
+                return Err("snapshot requires --streams".to_string().into());
+            }
+            for (name, r) in names.iter().zip(router.multi_snapshot(&names)?) {
+                match r {
+                    Ok(s) => print_stat(&s),
+                    Err(e) => println!("{name}\terror: {e}"),
+                }
+            }
+        }
+        "migrate" => {
+            let stream = required(&p, "stream")?;
+            let to = required(&p, "to")?;
+            let wal_dir = p.str("wal-dir");
+            let src_shards = p.usize("src-shards").map_err(|e| e.to_string())?;
+            let source_wal = if !wal_dir.is_empty() && src_shards > 0 {
+                Some((std::path::Path::new(&wal_dir), src_shards))
+            } else {
+                None
+            };
+            let report = ata::cluster::migrate_stream(
+                &mut router,
+                &stream,
+                &to,
+                p.usize("dim").map_err(|e| e.to_string())?,
+                &p.str("spec"),
+                source_wal,
+            )?;
+            println!(
+                "migrated {} from {} to {} (delta {} samples, ring v{})",
+                report.stream, report.from, report.to, report.delta_samples, report.ring_version
+            );
+        }
+        other => return Err(format!("unknown action '{other}'").into()),
+    }
+    Ok(())
+}
+
+fn required(p: &ata::util::cli::Parsed, key: &str) -> Result<String, CliRunError> {
+    let v = p.str(key);
+    if v.is_empty() {
+        return Err(format!("this action requires --{key}").into());
+    }
+    Ok(v)
+}
+
+fn cmd_standby(args: &[String]) -> Result<(), CliRunError> {
+    let spec = CommandSpec::new(
+        "standby",
+        "warm standby: receive WAL-shipping replication until promoted",
+    )
+    .opt("addr", "127.0.0.1:7411", "replication listen address")
+    .req("dir", "directory for the replicated state (becomes persist.dir on promotion)");
+    let p = parse_with(&spec, args)?;
+    let watcher = ata::util::signal::termination_watcher();
+    let standby = ata::cluster::Standby::start(&p.str("addr"), std::path::Path::new(&p.str("dir")))?;
+    eprintln!(
+        "standby on {} replicating into {} — promote by pointing `ata serve`'s \
+         [persist].dir at it (recovery replays the shipped WAL); Ctrl-C to stop",
+        standby.addr(),
+        p.str("dir")
+    );
+    match watcher {
+        Some(w) => {
+            let sig = w.wait();
+            let received = standby.received_bytes();
+            standby.stop();
+            eprintln!("{} received — standby stopped ({received} WAL bytes replicated)", sig.label());
+            Ok(())
+        }
+        None => loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        },
+    }
+}
+
 fn cmd_client(args: &[String]) -> Result<(), CliRunError> {
     let spec = CommandSpec::new("client", "talk to a running coordinator service")
         .positional("action", "ping | list | snapshot | metrics | prom")
@@ -519,18 +706,28 @@ fn render_top(
     let restarts: u64 = r.shards.iter().map(|s| s.worker_starts.saturating_sub(1)).sum();
     let _ = writeln!(
         out,
-        "ata top — {addr}  trace sampling {}/1000  queued {queued}  restarts {restarts}",
-        r.sample_per_mille
+        "ata top — {addr}  trace sampling {}/1000  queued {queued}  restarts {restarts}{}",
+        r.sample_per_mille,
+        if r.wal_skipped_tails > 0 {
+            format!("  wal_skipped_tails {}", r.wal_skipped_tails)
+        } else {
+            String::new()
+        }
     );
+    // REPLAY is the WAL position recovery replayed up to at boot. On a
+    // promoted standby, WAL minus REPLAY at promotion time is exactly
+    // the acked-but-unshipped loss; on a long-lived primary the pair
+    // shows how much log a failover would have to replay.
     let _ = writeln!(
         out,
-        "\nSHARD  QUEUE  STARTS  WAL seg@off        EVENTS"
+        "\nSHARD  QUEUE  STARTS  WAL seg@off        REPLAY seg@off     EVENTS"
     );
     for s in &r.shards {
         let _ = writeln!(
             out,
-            "{:>5}  {:>5}  {:>6}  {:>8}@{:<8}  {:>6}",
+            "{:>5}  {:>5}  {:>6}  {:>8}@{:<8}  {:>8}@{:<8}  {:>6}",
             s.shard, s.queue_depth, s.worker_starts, s.wal_segment, s.wal_offset,
+            s.wal_replay_segment, s.wal_replay_offset,
             s.events_recorded
         );
     }

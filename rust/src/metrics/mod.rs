@@ -116,6 +116,18 @@ pub mod names {
     /// Rows currently resident across all banks (`gauge.*`), refreshed
     /// at drain boundaries and by `Coordinator::export_metrics`.
     pub const BANK_ROWS: &str = "bank_rows";
+    /// Version of the newest cluster ring this node has adopted
+    /// (`gauge.*`; 0 = not federated). Bumped by `cluster_hello`.
+    pub const CLUSTER_RING_VERSION: &str = "cluster_ring_version";
+    /// Raw WAL bytes the replication shipper has streamed to the
+    /// standby (acknowledged appends only).
+    pub const WAL_SHIPPED_BYTES: &str = "wal_shipped_bytes";
+    /// Committed-but-unshipped WAL bytes at the last ship cycle
+    /// (`gauge.*`) — the standby's worst-case failover loss.
+    pub const WAL_SHIP_LAG_BYTES: &str = "wal_ship_lag_bytes";
+    /// Failovers executed: a standby promoted into a dead node's slot
+    /// (counted on the node driving the ring update).
+    pub const CLUSTER_FAILOVERS: &str = "cluster_failovers";
 }
 
 /// Monotone event counter. The atomic is padded to its own cache line:

@@ -25,6 +25,12 @@ pub struct ShardReport {
     /// WAL write position at the last drain boundary (0/0 = no WAL).
     pub wal_segment: u64,
     pub wal_offset: u64,
+    /// WAL position recovery replayed from at boot (0/0 = fresh boot or
+    /// no WAL). Together with the live write position this makes
+    /// replica/standby lag observable: a warm standby's shipped bytes
+    /// can be compared against `wal_segment`/`wal_offset` here.
+    pub wal_replay_segment: u64,
+    pub wal_replay_offset: u64,
     /// Flight-recorder events since boot (not capped by ring capacity).
     pub events_recorded: u64,
 }
@@ -55,6 +61,11 @@ pub struct StreamReport {
 pub struct IntrospectReport {
     /// Current trace sampling rate (per-mille).
     pub sample_per_mille: u32,
+    /// Corrupt non-final WAL segment tails skipped by the last recovery
+    /// (`RecoveryReport.wal_skipped_tails`, previously only reachable
+    /// from the recovery return value). Non-zero means the WAL lost
+    /// records mid-history at boot — worth an operator's attention.
+    pub wal_skipped_tails: u64,
     pub shards: Vec<ShardReport>,
     pub banks: Vec<BankReport>,
     pub streams: Vec<StreamReport>,
@@ -84,6 +95,7 @@ impl IntrospectReport {
     /// `u32` count followed by fixed-layout records.
     pub fn encode(&self, enc: &mut Enc) {
         enc.put_u32(self.sample_per_mille);
+        enc.put_u64(self.wal_skipped_tails);
         enc.put_u32(self.shards.len() as u32);
         for s in &self.shards {
             enc.put_u16(s.shard);
@@ -91,6 +103,8 @@ impl IntrospectReport {
             enc.put_u64(s.worker_starts);
             enc.put_u64(s.wal_segment);
             enc.put_u64(s.wal_offset);
+            enc.put_u64(s.wal_replay_segment);
+            enc.put_u64(s.wal_replay_offset);
             enc.put_u64(s.events_recorded);
         }
         enc.put_u32(self.banks.len() as u32);
@@ -125,7 +139,8 @@ impl IntrospectReport {
     /// forged counts, or unknown event kinds.
     pub fn decode(dec: &mut Dec<'_>) -> Result<IntrospectReport, String> {
         let sample_per_mille = dec.get_u32()?;
-        let n = checked_count(dec, dec.get_u32()? as usize, 42)?;
+        let wal_skipped_tails = dec.get_u64()?;
+        let n = checked_count(dec, dec.get_u32()? as usize, 58)?;
         let mut shards = Vec::with_capacity(n);
         for _ in 0..n {
             shards.push(ShardReport {
@@ -134,6 +149,8 @@ impl IntrospectReport {
                 worker_starts: dec.get_u64()?,
                 wal_segment: dec.get_u64()?,
                 wal_offset: dec.get_u64()?,
+                wal_replay_segment: dec.get_u64()?,
+                wal_replay_offset: dec.get_u64()?,
                 events_recorded: dec.get_u64()?,
             });
         }
@@ -179,6 +196,7 @@ impl IntrospectReport {
         }
         Ok(IntrospectReport {
             sample_per_mille,
+            wal_skipped_tails,
             shards,
             banks,
             streams,
@@ -193,6 +211,10 @@ impl IntrospectReport {
         Json::obj(vec![
             ("sample_per_mille", Json::Num(self.sample_per_mille as f64)),
             (
+                "wal_skipped_tails",
+                Json::Num(self.wal_skipped_tails as f64),
+            ),
+            (
                 "shards",
                 Json::Arr(
                     self.shards
@@ -204,6 +226,14 @@ impl IntrospectReport {
                                 ("worker_starts", Json::Num(s.worker_starts as f64)),
                                 ("wal_segment", Json::Num(s.wal_segment as f64)),
                                 ("wal_offset", Json::Num(s.wal_offset as f64)),
+                                (
+                                    "wal_replay_segment",
+                                    Json::Num(s.wal_replay_segment as f64),
+                                ),
+                                (
+                                    "wal_replay_offset",
+                                    Json::Num(s.wal_replay_offset as f64),
+                                ),
                                 ("events_recorded", Json::Num(s.events_recorded as f64)),
                             ])
                         })
@@ -292,6 +322,7 @@ impl IntrospectReport {
             .get("sample_per_mille")
             .and_then(Json::as_u64)
             .ok_or("introspect: missing sample_per_mille")? as u32;
+        let wal_skipped_tails = num(j, "wal_skipped_tails")?;
         let mut shards = Vec::new();
         for s in arr(j, "shards")? {
             shards.push(ShardReport {
@@ -300,6 +331,8 @@ impl IntrospectReport {
                 worker_starts: num(s, "worker_starts")?,
                 wal_segment: num(s, "wal_segment")?,
                 wal_offset: num(s, "wal_offset")?,
+                wal_replay_segment: num(s, "wal_replay_segment")?,
+                wal_replay_offset: num(s, "wal_replay_offset")?,
                 events_recorded: num(s, "events_recorded")?,
             });
         }
@@ -365,6 +398,7 @@ impl IntrospectReport {
         }
         Ok(IntrospectReport {
             sample_per_mille,
+            wal_skipped_tails,
             shards,
             banks,
             streams,
@@ -410,6 +444,8 @@ fn kind_of(label: &str) -> Result<crate::obs::recorder::EventKind, String> {
         EventKind::Overload,
         EventKind::WalRotation,
         EventKind::Checkpoint,
+        EventKind::WalShip,
+        EventKind::RingUpdate,
     ] {
         if k.label() == label {
             return Ok(k);
@@ -426,6 +462,7 @@ mod tests {
     fn sample() -> IntrospectReport {
         IntrospectReport {
             sample_per_mille: 10,
+            wal_skipped_tails: 1,
             shards: vec![
                 ShardReport {
                     shard: 0,
@@ -433,6 +470,8 @@ mod tests {
                     worker_starts: 1,
                     wal_segment: 2,
                     wal_offset: 4096,
+                    wal_replay_segment: 1,
+                    wal_replay_offset: 262,
                     events_recorded: 77,
                 },
                 ShardReport {
@@ -441,6 +480,8 @@ mod tests {
                     worker_starts: 4,
                     wal_segment: 0,
                     wal_offset: 0,
+                    wal_replay_segment: 0,
+                    wal_replay_offset: 0,
                     events_recorded: 0,
                 },
             ],
@@ -504,9 +545,11 @@ mod tests {
         for cut in 0..bytes.len() {
             assert!(IntrospectReport::decode(&mut Dec::new(&bytes[..cut])).is_err());
         }
-        // A forged section count cannot drive a huge allocation.
+        // A forged section count cannot drive a huge allocation (the
+        // shard count sits after sample_per_mille: u32 and
+        // wal_skipped_tails: u64).
         let mut forged = bytes.clone();
-        forged[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        forged[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(IntrospectReport::decode(&mut Dec::new(&forged)).is_err());
     }
 
@@ -514,6 +557,7 @@ mod tests {
     fn empty_report_roundtrips() {
         let r = IntrospectReport {
             sample_per_mille: 0,
+            wal_skipped_tails: 0,
             shards: vec![],
             banks: vec![],
             streams: vec![],

@@ -32,6 +32,12 @@ pub enum EventKind {
     WalRotation = 6,
     /// A checkpoint captured this shard; `arg` = streams captured.
     Checkpoint = 7,
+    /// The replication shipper moved this shard's replica position;
+    /// `arg` = bytes shipped in the batch.
+    WalShip = 8,
+    /// The node adopted a newer cluster ring (`cluster_hello` or a
+    /// failover repoint); `arg` = the new ring version.
+    RingUpdate = 9,
 }
 
 impl EventKind {
@@ -45,6 +51,8 @@ impl EventKind {
             5 => Some(EventKind::Overload),
             6 => Some(EventKind::WalRotation),
             7 => Some(EventKind::Checkpoint),
+            8 => Some(EventKind::WalShip),
+            9 => Some(EventKind::RingUpdate),
             _ => None,
         }
     }
@@ -59,6 +67,8 @@ impl EventKind {
             EventKind::Overload => "overload",
             EventKind::WalRotation => "wal_rotation",
             EventKind::Checkpoint => "checkpoint",
+            EventKind::WalShip => "wal_ship",
+            EventKind::RingUpdate => "ring_update",
         }
     }
 }

@@ -351,3 +351,90 @@ fn stat_snapshots_survive_state_transfer_bitwise() {
         }
     }
 }
+
+/// The federation router's merge contract: pooling per-node partial
+/// aggregates (scatter-gather over simulated cluster partitions) must
+/// equal the flat single-node pool over the union of streams, to
+/// 1e-12, for any partition of the streams into nodes and any arrival
+/// order — with every estimator family contributing real streamed
+/// moments, not synthetic ones.
+#[test]
+fn aggregate_is_partition_and_permutation_invariant() {
+    let d = 2usize;
+    // One snapshot per estimator family, from genuinely streamed data.
+    let snaps: Vec<StatSnapshot> = all_specs()
+        .iter()
+        .enumerate()
+        .map(|(j, spec)| {
+            let n = 40 + 17 * j;
+            let mut avg = spec.build(d).unwrap();
+            let mut flat = Vec::with_capacity(n * d);
+            for t in 1..=n as u64 {
+                for i in 0..d {
+                    flat.push(sample(t, i) + j as f64 * 0.3);
+                }
+            }
+            avg.observe_many(&flat, n);
+            let (mut mean, mut var) = (vec![0.0; d], vec![0.0; d]);
+            let ess = avg.moments_into(&mut mean, &mut var).expect("moments");
+            StatSnapshot::from_moments(
+                Arc::from(format!("p{j}").as_str()),
+                n as u64,
+                ess,
+                ess,
+                mean,
+                var,
+                DEFAULT_Z,
+            )
+        })
+        .collect();
+    let (flat_agg, flat_n) = analytics::aggregate(&snaps, DEFAULT_Z);
+    let flat_agg = flat_agg.expect("flat aggregate");
+    assert_eq!(flat_n, snaps.len(), "every family pools");
+
+    Runner::new("N-way partition invariance", 0x9A57).run(60, |g| {
+        // A scatter order the router might see...
+        let mut perm: Vec<StatSnapshot> = snaps.clone();
+        for i in (1..perm.len()).rev() {
+            perm.swap(i, g.usize_range(0, i));
+        }
+        // ...split across 1..=4 simulated nodes.
+        let nodes = g.usize_range(1, 4);
+        let mut groups: Vec<Vec<StatSnapshot>> = vec![Vec::new(); nodes];
+        for s in &perm {
+            groups[g.usize_range(0, nodes - 1)].push(s.clone());
+        }
+        // Per-node partial pools, then the pool of pools.
+        let mut partials: Vec<StatSnapshot> = Vec::new();
+        for group in groups.iter().filter(|gr| !gr.is_empty()) {
+            let (p, pooled) = analytics::aggregate(group, DEFAULT_Z);
+            if pooled != group.len() {
+                return Err(format!("partial pooled {pooled} of {}", group.len()));
+            }
+            partials.push(p.ok_or("partial aggregate missing")?);
+        }
+        let (two_level, _) = analytics::aggregate(&partials, DEFAULT_Z);
+        let two_level = two_level.ok_or("two-level aggregate missing")?;
+        // And the permuted one-level pool.
+        let (permuted, _) = analytics::aggregate(&perm, DEFAULT_Z);
+        let permuted = permuted.ok_or("permuted aggregate missing")?;
+        for (m, what) in [(&two_level, "two-level"), (&permuted, "permuted")] {
+            ata::testkit::assert_close(m.ess, flat_agg.ess, 1e-12, &format!("{what} ess"))?;
+            for i in 0..d {
+                ata::testkit::assert_close(
+                    m.mean[i],
+                    flat_agg.mean[i],
+                    1e-12,
+                    &format!("{what} mean[{i}]"),
+                )?;
+                ata::testkit::assert_close(
+                    m.variance[i],
+                    flat_agg.variance[i],
+                    1e-12,
+                    &format!("{what} var[{i}]"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,543 @@
+//! Cluster federation end-to-end: scatter-gather routing equivalence,
+//! WAL-shipping replication with bitwise-exact failover, a 3-node
+//! kill-and-failover soak under chaos, and deterministic live stream
+//! migration with pushes injected at the worst possible moments.
+
+use ata::averagers::AveragerSpec;
+use ata::cluster::{migrate_stream_observed, HashRing, MigratePhase, Router, Shipper, Standby};
+use ata::config::{BackpressurePolicy, PersistConfig, ServiceConfig};
+use ata::coordinator::{
+    Coordinator, MultiOutcome, ProtocolChoice, RetryPolicy, RetryingClient, Server,
+};
+use ata::metrics::names;
+use ata::testkit::{chaos, temp_dir};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Every estimator family in its wire spec-string form (mirrors
+/// `all_specs()` in persist_recovery.rs — both window kinds where
+/// applicable, banked and slotted).
+fn all_spec_strings() -> Vec<&'static str> {
+    vec![
+        "exp(g=0.9)",
+        "expk(k=10)",
+        "gea(c=0.5)",
+        "awa2(k=7)",
+        "awa3(c=0.4)",
+        "true(k=9)",
+        "true(c=0.5)",
+        "raw(c=0.5,T=200)",
+        "restart(k=6)",
+        "eh(k=50,eps=0.1)",
+    ]
+}
+
+/// Deterministic sample value for stream `s`, step `t`, dimension `i`.
+fn sample(s: usize, t: u64, i: usize) -> f64 {
+    (((t as f64) * 0.37 + (s as f64) * 1.7 + (i as f64) * 0.41).sin()) * 3.0
+}
+
+fn flat_batch(s: usize, start_t: u64, count: usize, d: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(count * d);
+    for k in 0..count {
+        for i in 0..d {
+            out.push(sample(s, start_t + k as u64, i));
+        }
+    }
+    out
+}
+
+fn close(a: &[f64], b: &[f64], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-12 * y.abs().max(1.0),
+            "{ctx}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+/// Tight backoff so retry storms in tests resolve in milliseconds.
+fn fast_policy(seed: u64) -> RetryPolicy {
+    RetryPolicy {
+        max_attempts: 10,
+        base_backoff_ms: 1,
+        max_backoff_ms: 20,
+        seed,
+    }
+}
+
+fn persist_cfg(dir: &Path, shards: usize) -> ServiceConfig {
+    ServiceConfig {
+        shards,
+        queue_capacity: 256,
+        persist: Some(PersistConfig {
+            dir: dir.display().to_string(),
+            segment_bytes: 16 << 10,
+            fsync: false,
+            checkpoint_interval_ms: 0,
+            group_commit_micros: 0,
+        }),
+        ..Default::default()
+    }
+}
+
+fn in_memory() -> Arc<Coordinator> {
+    Arc::new(Coordinator::new(2, 256, BackpressurePolicy::Block))
+}
+
+fn serve(c: &Arc<Coordinator>) -> Server {
+    Server::start_with("127.0.0.1:0", Arc::clone(c), 2, ProtocolChoice::Auto).expect("server")
+}
+
+fn client(addr: &str, seed: u64) -> RetryingClient {
+    RetryingClient::with_policy(addr, ProtocolChoice::Auto, fast_policy(seed))
+}
+
+fn value_bits(snap: &ata::coordinator::Snapshot) -> Vec<u64> {
+    snap.value
+        .as_ref()
+        .expect("snapshot has a value")
+        .iter()
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// 1. Federated scatter-gather == single node holding the union of streams
+// ---------------------------------------------------------------------------
+
+#[test]
+fn federated_scatter_gather_matches_single_node() {
+    let nodes: Vec<Arc<Coordinator>> = (0..3).map(|_| in_memory()).collect();
+    let servers: Vec<Server> = nodes.iter().map(serve).collect();
+    let reference = in_memory();
+    let ref_server = serve(&reference);
+
+    let mut ring = HashRing::new(64);
+    for (i, s) in servers.iter().enumerate() {
+        ring.add_node(&format!("n{i}"), &s.addr().to_string())
+            .expect("add node");
+    }
+    let mut router = Router::with_ring(ring, fast_policy(0xFED1));
+    let mut ref_cl = client(&ref_server.addr().to_string(), 0xFED2);
+
+    let specs = all_spec_strings();
+    let d = 3;
+    let names: Vec<String> = (0..specs.len()).map(|i| format!("fed/s{i:02}")).collect();
+    for (name, spec) in names.iter().zip(&specs) {
+        router.register(name, d, spec).expect("routed register");
+        ref_cl.register(name, d, spec).expect("reference register");
+    }
+    // The hash placement must actually federate: the streams may not
+    // all land on one node or the test would prove nothing.
+    let placed: std::collections::BTreeSet<String> = names
+        .iter()
+        .map(|n| router.route(n).expect("route"))
+        .collect();
+    assert!(
+        placed.len() >= 2,
+        "10 streams should spread over >1 of 3 nodes, got {placed:?}"
+    );
+
+    let mut t0 = 0u64;
+    for round in 0..3usize {
+        let count = 5 + round;
+        let data: Vec<Vec<f64>> = (0..names.len())
+            .map(|s| flat_batch(s, t0, count, d))
+            .collect();
+        let batches: Vec<(&str, usize, &[f64])> = names
+            .iter()
+            .zip(&data)
+            .map(|(n, b)| (n.as_str(), count, b.as_slice()))
+            .collect();
+        for o in router.multi_push(&batches).expect("federated multi_push") {
+            assert_eq!(o, MultiOutcome::Accepted, "federated push outcome");
+        }
+        for o in ref_cl.multi_push(&batches).expect("reference multi_push") {
+            assert_eq!(o, MultiOutcome::Accepted, "reference push outcome");
+        }
+        t0 += count as u64;
+    }
+    router.sync().expect("federated sync");
+    ref_cl.sync().expect("reference sync");
+
+    // Per-stream reads: fan-in multi_snapshot must equal the reference,
+    // entry for entry, to 1e-12 on every statistical field.
+    let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    let fed = router.multi_snapshot(&name_refs).expect("federated snaps");
+    let single = ref_cl.multi_snapshot(&name_refs).expect("reference snaps");
+    for ((name, f), s) in names.iter().zip(&fed).zip(&single) {
+        let f = f.as_ref().expect("federated entry ok");
+        let s = s.as_ref().expect("reference entry ok");
+        assert_eq!(f.stream, *name);
+        assert_eq!(f.t, s.t, "{name}: sample count");
+        close(&[f.ess], &[s.ess], &format!("{name}: ess"));
+        close(
+            &[f.effective_window],
+            &[s.effective_window],
+            &format!("{name}: window"),
+        );
+        close(&f.mean, &s.mean, &format!("{name}: mean"));
+        close(&f.variance, &s.variance, &format!("{name}: variance"));
+        close(&f.band, &s.band, &format!("{name}: band"));
+    }
+
+    // Federated analytics query: same streams, same ESS-weighted pool.
+    let fq = router.query("fed/", 2.0, 0, true).expect("federated query");
+    let (rstats, ragg) = ref_cl.query("fed/", 2.0, 0, true).expect("reference query");
+    assert_eq!(fq.stats.len(), rstats.len(), "query row count");
+    assert_eq!(fq.aggregated, rstats.len(), "pool absorbed every stream");
+    for (f, r) in fq.stats.iter().zip(&rstats) {
+        assert_eq!(f.stream, r.stream, "query row order");
+        close(&f.mean, &r.mean, &format!("query {}: mean", f.stream));
+    }
+    let fagg = fq.aggregate.expect("federated aggregate");
+    let ragg = ragg.expect("reference aggregate");
+    close(&fagg.mean, &ragg.mean, "aggregate mean");
+    close(&fagg.variance, &ragg.variance, "aggregate variance");
+    close(&[fagg.ess], &[ragg.ess], "aggregate ess");
+
+    // Top-K deviation ranking must agree on the ordering too.
+    let ftop = router.query("fed/", 2.0, 3, false).expect("federated top-k");
+    let (rtop, _) = ref_cl.query("fed/", 2.0, 3, false).expect("reference top-k");
+    let fnames: Vec<&str> = ftop.stats.iter().map(|e| e.stream.as_str()).collect();
+    let rnames: Vec<&str> = rtop.stats.iter().map(|e| e.stream.as_str()).collect();
+    assert_eq!(fnames, rnames, "top-k order");
+}
+
+// ---------------------------------------------------------------------------
+// 2. WAL shipping → promote: bitwise-identical stats at the shipped
+//    boundary, acked-but-unshipped loss exactly accounted
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ship_and_promote_restores_shipped_boundary_bitwise() {
+    let dir_p = temp_dir("fed-ship-primary");
+    let dir_s = temp_dir("fed-ship-standby");
+    let cfg = persist_cfg(&dir_p, 2);
+    let primary = Arc::new(Coordinator::from_config(&cfg).expect("primary"));
+
+    let d = 2;
+    let names: Vec<String> = (0..all_spec_strings().len())
+        .map(|i| format!("rep/s{i:02}"))
+        .collect();
+    for (s, (name, spec)) in names.iter().zip(all_spec_strings()).enumerate() {
+        let spec = AveragerSpec::parse(spec).expect("spec");
+        primary.register(name, d, spec).expect("register");
+        primary
+            .push_many(name, 30, &flat_batch(s, 0, 30, d))
+            .expect("phase-1 push");
+    }
+    primary.sync().expect("sync phase 1");
+
+    let standby = Standby::start("127.0.0.1:0", &dir_s).expect("standby");
+    let mut shipper = Shipper::new(
+        Arc::clone(&primary),
+        client(&standby.addr().to_string(), 0x51319),
+    )
+    .expect("shipper");
+    // Tiny chunks: every segment crosses many wal_ship frames, so the
+    // conditional-append resync path is actually exercised.
+    shipper.set_chunk_bytes(64);
+    let report = shipper.ship_once().expect("ship pass");
+    assert!(report.bytes > 0, "phase 1 must ship bytes");
+    assert!(report.chunks > 1, "64-byte chunks must take several frames");
+    assert_eq!(report.lag_bytes, 0, "shipped to the committed horizon");
+    assert_eq!(
+        standby.received_bytes(),
+        report.bytes,
+        "standby accounting matches the shipper's"
+    );
+
+    // A second pass with nothing new is a no-op (cursors, not re-ships).
+    let idle = shipper.ship_once().expect("idle pass");
+    assert_eq!((idle.chunks, idle.bytes, idle.lag_bytes), (0, 0, 0));
+
+    // The standby is not a coordinator: data-plane ops are refused.
+    let mut probe = client(&standby.addr().to_string(), 0x51320);
+    probe.ping().expect("standby answers ping");
+    let err = probe.list_streams().expect_err("standby refuses data ops");
+    assert!(
+        err.to_string().contains("unsupported op"),
+        "refusal names the op: {err}"
+    );
+
+    // Ground truth at the shipped boundary.
+    let shipped: Vec<(u64, Vec<u64>)> = names
+        .iter()
+        .map(|n| {
+            let s = primary.snapshot(n).expect("snapshot");
+            (s.t, value_bits(&s))
+        })
+        .collect();
+
+    // Phase 2: acked on the primary but never shipped.
+    for (s, name) in names.iter().enumerate() {
+        primary
+            .push_many(name, 7, &flat_batch(s, 30, 7, d))
+            .expect("phase-2 push");
+    }
+    primary.sync().expect("sync phase 2");
+    let t_lost = 7u64;
+
+    // Kill the primary without another ship pass, then promote.
+    drop(shipper);
+    drop(primary);
+    let (promoted, recovery) = standby.promote(persist_cfg(&dir_p, 2)).expect("promote");
+    assert!(recovery.wal_clean, "shipped WAL replays clean");
+    assert!(recovery.replayed_samples > 0, "replay did the rebuild");
+
+    for (name, (t1, bits)) in names.iter().zip(&shipped) {
+        let snap = promoted.snapshot(name).expect("promoted snapshot");
+        assert_eq!(*t1, 30, "{name}: shipped boundary is end of phase 1");
+        assert_eq!(
+            snap.t,
+            37 - t_lost,
+            "{name}: loss is exactly the acked-but-unshipped phase 2"
+        );
+        assert_eq!(
+            value_bits(&snap),
+            *bits,
+            "{name}: promoted stats are bitwise-identical at the shipped boundary"
+        );
+    }
+
+    // The promoted node exposes where replay started (standby lag
+    // observability) and counts the failover.
+    let intro = promoted.introspect();
+    assert_eq!(intro.wal_skipped_tails, 0, "no mid-WAL corruption");
+    assert!(
+        intro
+            .shards
+            .iter()
+            .any(|s| s.wal_replay_segment > 0 || s.wal_replay_offset > 0),
+        "replay position surfaced in introspect"
+    );
+    assert_eq!(
+        promoted
+            .metrics()
+            .counter(names::CLUSTER_FAILOVERS)
+            .get(),
+        1
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3. Three nodes, chaos, kill n0, promote its standby, repoint the ring
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kill_and_failover_under_chaos_keeps_ring_and_stats() {
+    let _guard = chaos::test_mutex().lock().unwrap_or_else(|e| e.into_inner());
+    chaos::disarm();
+
+    let dir0 = temp_dir("fed-chaos-primary");
+    let dir_s = temp_dir("fed-chaos-standby");
+    let c0 = Arc::new(Coordinator::from_config(&persist_cfg(&dir0, 2)).expect("n0"));
+    let c1 = in_memory();
+    let c2 = in_memory();
+    let s0 = serve(&c0);
+    let s1 = serve(&c1);
+    let s2 = serve(&c2);
+
+    let mut ring = HashRing::new(64);
+    ring.add_node("n0", &s0.addr().to_string()).expect("n0");
+    ring.add_node("n1", &s1.addr().to_string()).expect("n1");
+    ring.add_node("n2", &s2.addr().to_string()).expect("n2");
+    let mut router = Router::with_ring(ring, fast_policy(0xC0A5));
+    let v0 = router.ring().version();
+
+    let d = 2;
+    let names: Vec<String> = (0..24).map(|i| format!("ko/s{i:02}")).collect();
+    for name in &names {
+        router.register(name, d, "gea(c=0.5)").expect("register");
+    }
+    let on_n0: Vec<String> = names
+        .iter()
+        .filter(|n| router.route(n).expect("route") == "n0")
+        .cloned()
+        .collect();
+    assert!(
+        !on_n0.is_empty(),
+        "24 streams over 3 nodes must place some on n0"
+    );
+
+    // Connection resets only: the retrying client rides them out, and
+    // exactness is judged against what actually landed on n0 (captured
+    // after disarm), so duplicated retries cannot fail the test.
+    chaos::arm(chaos::ChaosPlan {
+        seed: 0xFA110FF,
+        conn_reset_per_mille: 80,
+        ..Default::default()
+    });
+    let mut t0 = 0u64;
+    for round in 0..40usize {
+        let count = 1 + round % 3;
+        let data: Vec<Vec<f64>> = (0..names.len())
+            .map(|s| flat_batch(s, t0, count, d))
+            .collect();
+        let batches: Vec<(&str, usize, &[f64])> = names
+            .iter()
+            .zip(&data)
+            .map(|(n, b)| (n.as_str(), count, b.as_slice()))
+            .collect();
+        router.multi_push(&batches).expect("push under chaos");
+        t0 += count as u64;
+    }
+    chaos::disarm();
+    router.sync().expect("settle after chaos");
+
+    // Ground truth from n0 itself, then replicate and kill it.
+    let truth: Vec<(String, u64, Vec<u64>)> = on_n0
+        .iter()
+        .map(|n| {
+            let s = c0.snapshot(n).expect("n0 snapshot");
+            (n.clone(), s.t, value_bits(&s))
+        })
+        .collect();
+    let standby = Standby::start("127.0.0.1:0", &dir_s).expect("standby");
+    let mut shipper =
+        Shipper::new(Arc::clone(&c0), client(&standby.addr().to_string(), 0x5311)).expect("shipper");
+    let report = shipper.ship_once().expect("ship");
+    assert_eq!(report.lag_bytes, 0, "fully caught up before the kill");
+    drop(shipper);
+    drop(s0);
+    drop(c0);
+
+    let (promoted, _) = standby.promote(persist_cfg(&dir0, 2)).expect("promote");
+    let promoted = Arc::new(promoted);
+    let new_s0 = serve(&promoted);
+
+    // Repoint the ring: same node id, new address, bumped version,
+    // gossiped to the survivors in the same call.
+    let v1 = router
+        .failover("n0", &new_s0.addr().to_string())
+        .expect("failover");
+    assert!(v1 > v0, "failover re-versions the ring ({v0} -> {v1})");
+
+    // The routed reads now come off the promoted node, bit-for-bit.
+    for (name, t, bits) in &truth {
+        assert_eq!(router.route(name).expect("route"), "n0", "{name}: placement unchanged");
+        let snap = client(&new_s0.addr().to_string(), 0x5312)
+            .snapshot(name)
+            .expect("promoted snapshot");
+        assert_eq!(snap.t, *t, "{name}: t survives failover");
+        assert_eq!(value_bits(&snap), *bits, "{name}: bitwise across failover");
+    }
+    // Fan-in still covers every stream, including the failed-over ones.
+    let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    for (name, entry) in names.iter().zip(router.multi_snapshot(&name_refs).expect("snaps")) {
+        entry.unwrap_or_else(|e| panic!("{name}: post-failover snapshot: {e}"));
+    }
+    // Survivors learned the new ring version via the gossip round.
+    let prom_text = client(&s1.addr().to_string(), 0x5313)
+        .metrics_prometheus()
+        .expect("n1 prometheus");
+    assert!(
+        prom_text.contains(names::CLUSTER_RING_VERSION),
+        "ring version gauge exported on survivors"
+    );
+    assert_eq!(
+        promoted.metrics().counter(names::CLUSTER_FAILOVERS).get(),
+        1
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 4. Live migration with pushes landing at both race points
+// ---------------------------------------------------------------------------
+
+#[test]
+fn live_migration_dedups_delta_exactly_under_concurrent_pushes() {
+    let dir0 = temp_dir("fed-mig-src");
+    let src_shards = 2usize;
+    let c0 = Arc::new(Coordinator::from_config(&persist_cfg(&dir0, src_shards)).expect("n0"));
+    let c1 = in_memory();
+    let s0 = serve(&c0);
+    let s1 = serve(&c1);
+
+    let mut ring = HashRing::new(64);
+    ring.add_node("n0", &s0.addr().to_string()).expect("n0");
+    ring.add_node("n1", &s1.addr().to_string()).expect("n1");
+    let mut router = Router::with_ring(ring, fast_policy(0x316));
+
+    // A banked estimator, and a name the ring places on the source.
+    let d = 2;
+    let spec = "awa3(k=16)";
+    let name = (0..64)
+        .map(|i| format!("mig/s{i:02}"))
+        .find(|n| router.route(n).expect("route") == "n0")
+        .expect("some name routes to n0");
+    router.register(&name, d, spec).expect("register");
+
+    let base = 20usize;
+    let batch0 = flat_batch(0, 0, base, d);
+    let batches: Vec<(&str, usize, &[f64])> = vec![(name.as_str(), base, batch0.as_slice())];
+    router.multi_push(&batches).expect("base push");
+    router.sync().expect("base sync");
+
+    // A writer that keeps pushing straight at the source mid-migration:
+    // 7 samples land before the export (double-covered: they are in the
+    // WAL delta range AND in the exported state) and 5 after the
+    // restore (pure delta). The tail-take must dedup to exactly 5.
+    let mut writer = client(&s0.addr().to_string(), 0xA11CE);
+    let wal_root = dir0.join("wal");
+    let report = migrate_stream_observed(
+        &mut router,
+        &name,
+        "n1",
+        d,
+        spec,
+        Some((wal_root.as_path(), src_shards)),
+        |phase| {
+            let (start, count) = match phase {
+                MigratePhase::BeforeExport => (base as u64, 7usize),
+                MigratePhase::BeforeSwitch => (base as u64 + 7, 5usize),
+            };
+            let data = flat_batch(0, start, count, d);
+            let (accepted, dropped) = writer
+                .push_many(&name, count, &data)
+                .map_err(|e| format!("racing push: {e}"))?;
+            if accepted != count as u64 || dropped > 0 {
+                return Err(format!("racing push shed: {accepted}/{count}"));
+            }
+            writer.sync().map_err(|e| format!("racing sync: {e}"))
+        },
+    )
+    .expect("migration");
+
+    assert_eq!(report.from, "n0");
+    assert_eq!(report.to, "n1");
+    assert_eq!(
+        report.delta_samples, 5,
+        "exactly the post-restore pushes replay; the pre-export ones dedup"
+    );
+    assert_eq!(router.route(&name).expect("route"), "n1", "pin switched placement");
+    assert_eq!(router.ring().version(), report.ring_version);
+
+    // Target carries the full history; source froze at the same point.
+    let total = base as u64 + 12;
+    let src_snap = c0.snapshot(&name).expect("source snapshot");
+    let dst_snap = c1.snapshot(&name).expect("target snapshot");
+    assert_eq!(src_snap.t, total, "source saw every racing push");
+    assert_eq!(dst_snap.t, total, "target caught up to the source exactly");
+    let src_val: Vec<f64> = src_snap.value.as_ref().expect("src value").to_vec();
+    let dst_val: Vec<f64> = dst_snap.value.as_ref().expect("dst value").to_vec();
+    close(&dst_val, &src_val, "migrated estimate");
+
+    // New pushes land on the target only.
+    let after = flat_batch(0, total, 1, d);
+    let post: Vec<(&str, usize, &[f64])> = vec![(name.as_str(), 1, after.as_slice())];
+    router.multi_push(&post).expect("post-migration push");
+    router.sync().expect("post-migration sync");
+    assert_eq!(c1.snapshot(&name).expect("target").t, total + 1);
+    assert_eq!(c0.snapshot(&name).expect("source").t, total, "source is frozen");
+
+    // The federated view counts the stream once, from its new home
+    // (the frozen source copy is placement-filtered out).
+    let fq = router.query("mig/", 2.0, 0, true).expect("federated query");
+    assert_eq!(fq.stats.len(), 1, "one row for the migrated stream");
+    assert_eq!(fq.stats[0].t, total + 1, "the row is the target's copy");
+    assert_eq!(fq.aggregated, 1);
+}

@@ -292,7 +292,7 @@ fn arb_v2_request(g: &mut Gen) -> Request {
     let data = |g: &mut Gen, n: usize| -> Vec<f64> {
         (0..n).map(|_| g.f64_range(-1e6, 1e6)).collect()
     };
-    match g.usize_range(0, 13) {
+    match g.usize_range(0, 15) {
         0 => Request::Ping,
         1 => Request::Register {
             stream: format!("s{}", g.usize_range(0, 1000)),
@@ -356,6 +356,16 @@ fn arb_v2_request(g: &mut Gen) -> Request {
         },
         11 => Request::Introspect,
         12 => Request::MetricsProm,
+        13 => Request::WalShip {
+            shard: (g.u64() & 0xFFFF) as u16,
+            segment: g.u64(),
+            offset: g.u64(),
+            done: g.bool(0.5),
+            bytes: arb_bytes(g, 96),
+        },
+        14 => Request::ClusterHello {
+            ring: arb_bytes(g, 96),
+        },
         _ => Request::ExportState {
             stream: StreamRef::Handle(g.u64()),
         },
@@ -380,6 +390,8 @@ fn v2_decoder_never_panics_on_garbage() {
             OpKind::MultiSnapshot,
             OpKind::Introspect,
             OpKind::MetricsProm,
+            OpKind::WalShip,
+            OpKind::ClusterHello,
         ] {
             let _ = protocol::decode_response(Wire::V2Binary, kind, &bytes);
         }
@@ -577,6 +589,8 @@ fn arb_event(g: &mut Gen) -> Event {
         EventKind::Overload,
         EventKind::WalRotation,
         EventKind::Checkpoint,
+        EventKind::WalShip,
+        EventKind::RingUpdate,
     ];
     Event {
         kind: *g.choose(&kinds[..]),
@@ -597,6 +611,7 @@ const MAX_SAFE_COUNT: u64 = (1 << 53) - 1;
 fn arb_introspect(g: &mut Gen) -> IntrospectReport {
     IntrospectReport {
         sample_per_mille: (g.u64() % 1001) as u32,
+        wal_skipped_tails: g.u64() & MAX_SAFE_COUNT,
         shards: (0..g.usize_range(0, 4))
             .map(|i| ShardReport {
                 shard: i as u16,
@@ -604,6 +619,8 @@ fn arb_introspect(g: &mut Gen) -> IntrospectReport {
                 worker_starts: g.u64() & 0xFF,
                 wal_segment: g.u64() & MAX_SAFE_COUNT,
                 wal_offset: g.u64() & MAX_SAFE_COUNT,
+                wal_replay_segment: g.u64() & MAX_SAFE_COUNT,
+                wal_replay_offset: g.u64() & MAX_SAFE_COUNT,
                 events_recorded: g.u64() & MAX_SAFE_COUNT,
             })
             .collect(),
@@ -716,6 +733,96 @@ fn introspect_report_codecs_roundtrip_and_survive_mutations() {
         let soup = arb_bytes(g, 200);
         let _ = protocol::decode_response(Wire::V2Binary, OpKind::Introspect, &soup);
         Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Cluster ring codec: the placement map that rides `cluster_hello`
+// ---------------------------------------------------------------------------
+
+use ata::cluster::ring::{HashRing, RING_FORMAT_VERSION, RING_MAGIC};
+
+fn arb_ring(g: &mut Gen) -> HashRing {
+    let mut ring = HashRing::new(g.usize_range(1, 8) as u32);
+    let n_nodes = g.usize_range(1, 5);
+    for i in 0..n_nodes {
+        ring.add_node(&format!("node-{i}"), &format!("10.0.0.{i}:741{i}"))
+            .expect("unique id");
+    }
+    for p in 0..g.usize_range(0, 4) {
+        let target = format!("node-{}", g.usize_range(0, n_nodes - 1));
+        ring.pin(&format!("pinned/s{p}"), &target).expect("pin");
+    }
+    if g.bool(0.3) {
+        // Exercise the failover primitive in the encoded form too.
+        ring.replace_addr("node-0", "10.9.9.9:7499").expect("repoint");
+    }
+    ring
+}
+
+#[test]
+fn ring_codec_roundtrips_and_mutations_error_never_panic() {
+    Runner::new("ring codec fuzz", 0xE3).run(200, |g| {
+        let ring = arb_ring(g);
+        let bytes = ring.encode();
+        let back = HashRing::decode(&bytes).map_err(|e| e.to_string())?;
+        // The encoding is canonical: re-encoding the decoded ring must
+        // reproduce the exact bytes (this is what version gossip
+        // compares and ships).
+        if back.encode() != bytes {
+            return Err("ring re-encode is not canonical".into());
+        }
+        if back.version() != ring.version() {
+            return Err(format!("version {} != {}", back.version(), ring.version()));
+        }
+        // Placement survives the trip: pins and hashed streams alike.
+        for s in ["a", "stream/b", "pinned/s0", "é😀"] {
+            let want = ring.route(s).map(|n| n.id.clone());
+            let got = back.route(s).map(|n| n.id.clone());
+            if want != got {
+                return Err(format!("route('{s}') moved across the codec: {want:?} vs {got:?}"));
+            }
+        }
+        // Truncation at any proper prefix errors, never panics.
+        let cut = g.usize_range(0, bytes.len() - 1);
+        if HashRing::decode(&bytes[..cut]).is_ok() {
+            return Err(format!("truncated ring (cut {cut}/{}) decoded", bytes.len()));
+        }
+        // Single-byte corruption decodes-or-errors, never panics, and
+        // never produces a giant allocation (hostile counts are checked
+        // against the bytes actually remaining).
+        let mut bad = bytes.clone();
+        let at = g.usize_range(0, bad.len() - 1);
+        bad[at] ^= 1 << g.usize_range(0, 7);
+        let _ = HashRing::decode(&bad);
+        Ok(())
+    });
+}
+
+#[test]
+fn ring_decode_rejects_garbage_and_version_mismatch() {
+    Runner::new("ring hostile decode", 0xE4).run(300, |g| {
+        // Byte soup never panics; without the magic it must error.
+        let soup = arb_bytes(g, 200);
+        if !soup.starts_with(RING_MAGIC) && HashRing::decode(&soup).is_ok() {
+            return Err(format!("decoded {} bytes of soup without magic", soup.len()));
+        }
+        // A frame from a "future" peer: right magic, newer format
+        // version. The decoder must refuse it with a structured error
+        // (mixed-version clusters fail loud, not by misparsing).
+        let mut enc = Enc::new();
+        for &b in RING_MAGIC {
+            enc.put_u8(b);
+        }
+        let future = RING_FORMAT_VERSION + 1 + (g.u64() & 0xFF) as u16;
+        enc.put_u16(future);
+        let mut frame = enc.into_bytes();
+        frame.extend(arb_bytes(g, 64));
+        match HashRing::decode(&frame) {
+            Ok(_) => Err("decoded a future format version".into()),
+            Err(e) if e.contains("format version") => Ok(()),
+            Err(e) => Err(format!("wrong refusal for version mismatch: {e}")),
+        }
     });
 }
 
