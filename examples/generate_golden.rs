@@ -39,6 +39,8 @@ fn labels() -> Vec<String> {
         format!("raw(c=0.5,T={TOTAL_STEPS})"),
         "restart(k=25)".into(),
         "restart(c=0.5)".into(),
+        "twotail(r=0.25)".into(),
+        "twotail(r=0.5)".into(),
     ]
 }
 

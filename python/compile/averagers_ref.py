@@ -313,6 +313,68 @@ class RestartTail:
         return var, float(self.n_published)
 
 
+class TwoTailRef:
+    """Two-Tailed Averaging (Melis 2022, arXiv 2209.12581).
+
+    A long uniform tail plus a short challenger restarted at every
+    maturity event (`n_s >= max(2, r*n_l)`); the challenger is promoted
+    when its estimated squared error (sample variance over length) is
+    strictly lower. Mirrors `rust/src/averagers/two_tail.rs` digit for
+    digit: reciprocal-multiply mean updates (`(x - m) * (1/n)`), the
+    `s / n / d` division order of `tt_est_err` (d=1 here, so the final
+    division is a no-op), and the same strict `<` promotion test.
+    """
+
+    def __init__(self, r):
+        assert 0.0 < r < 1.0
+        self.r = r
+        self.long = 0.0
+        self.long2 = 0.0  # long tail's running mean of x²
+        self.n_l = 0
+        self.short = 0.0
+        self.short2 = 0.0  # challenger's running mean of x²
+        self.n_s = 0
+        self.t = 0
+        self.switches = 0
+
+    def _mature(self):
+        return self.n_s >= 2 and float(self.n_s) >= self.r * float(self.n_l)
+
+    @staticmethod
+    def _est_err(m, m2, n):
+        return max(m2 - m * m, 0.0) / n
+
+    def observe(self, x):
+        self.t += 1
+        self.n_l += 1
+        self.n_s += 1
+        inv = 1.0 / self.n_l
+        self.long += (x - self.long) * inv
+        self.long2 += (x * x - self.long2) * inv
+        inv = 1.0 / self.n_s
+        self.short += (x - self.short) * inv
+        self.short2 += (x * x - self.short2) * inv
+        if self._mature():
+            err_l = self._est_err(self.long, self.long2, self.n_l)
+            err_s = self._est_err(self.short, self.short2, self.n_s)
+            if err_s < err_l:
+                self.long = self.short
+                self.long2 = self.short2
+                self.n_l = self.n_s
+                self.switches += 1
+            self.short = 0.0
+            self.short2 = 0.0
+            self.n_s = 0
+
+    def value(self):
+        return self.long if self.t > 0 else None
+
+    def moments(self):
+        if self.t == 0:
+            return None
+        return max(self.long2 - self.long * self.long, 0.0), float(self.n_l)
+
+
 def stream(t):
     """Deterministic, irrational-frequency test stream (no RNG needed)."""
     return math.sin(0.37 * t) * 10.0 + math.cos(1.7 * t)
@@ -333,6 +395,8 @@ def build_estimators(total_steps):
         "raw(c=0.5,T=%d)" % total_steps: RawTail(0.5, total_steps),
         "restart(k=25)": RestartTail(("fixed", 25)),
         "restart(c=0.5)": RestartTail(("growing", 0.5)),
+        "twotail(r=0.25)": TwoTailRef(0.25),
+        "twotail(r=0.5)": TwoTailRef(0.5),
     }
 
 

@@ -1,0 +1,98 @@
+"""Numeric comparator for the cross-language golden file.
+
+Usage:
+    python3 python/compile/compare_golden.py BASELINE CANDIDATE [--tol 1e-9]
+
+Compares two golden documents (one written by `python -m
+compile.averagers_ref`, the other by `cargo run --example
+generate_golden`) structurally and numerically instead of byte-wise:
+the two writers pretty-print floats differently, so a text diff would
+always fire. Checks
+
+  * scalar metadata (`total_steps`, `checkpoints`, `stream`) exactly,
+  * the label set of `traces` and `moments` exactly (a missing or extra
+    estimator is drift, not round-off),
+  * every trace value and every `[variance, ess]` moment pair to a
+    relative tolerance (default 1e-9, matching the Rust golden tests),
+  * null-vs-number mismatches (an estimator publishing earlier or later
+    than its mirror).
+
+Exits 0 when the documents agree, 1 with a per-label report otherwise.
+"""
+
+import argparse
+import json
+import sys
+
+
+def close(a, b, tol):
+    return abs(a - b) <= tol * max(abs(a), abs(b), 1.0)
+
+
+def compare_cell(a, b, tol):
+    """One checkpoint cell: null, number, or [var, ess]."""
+    if a is None or b is None:
+        return a is None and b is None
+    if isinstance(a, list) or isinstance(b, list):
+        if not (isinstance(a, list) and isinstance(b, list) and len(a) == len(b)):
+            return False
+        return all(close(x, y, tol) for x, y in zip(a, b))
+    return close(a, b, tol)
+
+
+def compare_section(name, base, cand, tol, errors):
+    missing = sorted(set(base) - set(cand))
+    extra = sorted(set(cand) - set(base))
+    if missing:
+        errors.append(f"{name}: labels only in baseline: {missing}")
+    if extra:
+        errors.append(f"{name}: labels only in candidate: {extra}")
+    for label in sorted(set(base) & set(cand)):
+        rows_a, rows_b = base[label], cand[label]
+        if len(rows_a) != len(rows_b):
+            errors.append(
+                f"{name}/{label}: {len(rows_a)} vs {len(rows_b)} checkpoints"
+            )
+            continue
+        for i, (a, b) in enumerate(zip(rows_a, rows_b)):
+            if not compare_cell(a, b, tol):
+                errors.append(f"{name}/{label}[{i}]: {a!r} vs {b!r}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--tol", type=float, default=1e-9)
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.candidate) as f:
+        cand = json.load(f)
+
+    errors = []
+    for key in ("total_steps", "checkpoints", "stream"):
+        if base.get(key) != cand.get(key):
+            errors.append(f"{key}: {base.get(key)!r} vs {cand.get(key)!r}")
+    compare_section("traces", base.get("traces", {}), cand.get("traces", {}),
+                    args.tol, errors)
+    compare_section("moments", base.get("moments", {}), cand.get("moments", {}),
+                    args.tol, errors)
+
+    if errors:
+        print(f"golden drift: {len(errors)} mismatch(es)", file=sys.stderr)
+        for e in errors[:50]:
+            print(f"  {e}", file=sys.stderr)
+        if len(errors) > 50:
+            print(f"  ... and {len(errors) - 50} more", file=sys.stderr)
+        return 1
+    n = sum(len(v) for v in base.get("traces", {}).values())
+    m = sum(len(v) for v in base.get("moments", {}).values())
+    print(f"golden match: {len(base.get('traces', {}))} labels, "
+          f"{n} values + {m} moment cells within {args.tol:g}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

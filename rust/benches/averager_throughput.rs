@@ -29,6 +29,7 @@ fn specs(total: u64) -> Vec<AveragerSpec> {
             c: 0.5,
             total_steps: total,
         },
+        AveragerSpec::TwoTail { r: 0.5 },
     ]
 }
 
@@ -91,6 +92,7 @@ fn main() {
             AveragerSpec::Restart {
                 window: WindowKind::Fixed { k: 128 },
             },
+            AveragerSpec::TwoTail { r: 0.5 },
         ];
         for spec in sweep_specs {
             for batch in [1usize, 8, 64, 512] {

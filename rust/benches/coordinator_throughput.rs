@@ -87,6 +87,19 @@ fn main() {
             });
             c.sync().unwrap();
         }
+        // The adaptive-tail family in the same sweep: its run-fused tails
+        // pay at most one maturity-boundary split per batch on top of the
+        // planar mean kernels.
+        c.register("hot-tt", d, AveragerSpec::TwoTail { r: 0.5 }).unwrap();
+        for batch in [1usize, 64, 512] {
+            let flat = vec![0.5f64; batch * d];
+            bench.bench_elements(
+                &format!("push_many twotail batch={batch}"),
+                batch as u64,
+                || c.push_many("hot-tt", batch, &flat).unwrap(),
+            );
+            c.sync().unwrap();
+        }
     }
 
     bench.section("planar bank sweep: streams x batch, banked vs per-slot (8 shards, block, d=32)");

@@ -18,7 +18,7 @@ fn main() {
     let d = 16usize;
 
     bench.section(&format!(
-        "in-process analytics: d={d}, mixed banked (gea) + slot (true) streams"
+        "in-process analytics: d={d}, mixed banked (gea/twotail) + slot (true) streams"
     ));
     for &n_streams in &[16usize, 256, 4096] {
         let case = format!("s={n_streams}");
@@ -28,9 +28,12 @@ fn main() {
         let c = Coordinator::new(4, 4096, BackpressurePolicy::Block);
         let mut handles = Vec::with_capacity(n_streams);
         for i in 0..n_streams {
-            // Every 8th stream exercises the slot fallback path.
+            // Every 8th stream exercises the slot fallback path; another
+            // eighth runs the adaptive two-tailed bank.
             let spec = if i % 8 == 7 {
                 AveragerSpec::parse("true(k=32)").unwrap()
+            } else if i % 8 == 3 {
+                AveragerSpec::TwoTail { r: 0.5 }
             } else {
                 AveragerSpec::Gea { c: 0.5 }
             };

@@ -108,6 +108,19 @@ impl StatSnapshot {
     pub fn has_samples(&self) -> bool {
         self.ess > 0.0
     }
+
+    /// Whether the snapshot can participate in a Chan combine: a
+    /// positive *finite* ESS and fully finite moment columns. A
+    /// never-pushed stream (`ess == 0`, zeroed — possibly zero-length —
+    /// moment columns) and corrupt inputs (NaN/∞ ESS or moments, e.g.
+    /// from a misbehaving federation peer) are all identity elements
+    /// for [`merge_snapshots`] rather than crashes or NaN poison.
+    pub fn is_poolable(&self) -> bool {
+        self.ess > 0.0
+            && self.ess.is_finite()
+            && self.mean.iter().all(|v| v.is_finite())
+            && self.variance.iter().all(|v| v.is_finite())
+    }
 }
 
 /// Parallel-Welford (Chan et al.) combine of two stat snapshots,
@@ -125,13 +138,18 @@ impl StatSnapshot {
 /// is the sum — exact for independent streams. Associative up to
 /// floating-point round-off; empty sides are identity elements.
 pub fn merge_snapshots(a: &StatSnapshot, b: &StatSnapshot, z: f64) -> StatSnapshot {
-    assert_eq!(a.dim(), b.dim(), "cannot merge stats of different dims");
-    if !a.has_samples() {
+    // Identity sides are exempt from the dim check and must bail out
+    // BEFORE it: a never-pushed stream's snapshot may carry zero-length
+    // moment columns (dim 0), and a zero/NaN-ESS side must not reach
+    // the combine arithmetic where `na·var_a` would turn the populated
+    // pool's variance into NaN and degrade its band to zero width.
+    if !a.is_poolable() {
         return b.clone();
     }
-    if !b.has_samples() {
+    if !b.is_poolable() {
         return a.clone();
     }
+    assert_eq!(a.dim(), b.dim(), "cannot merge stats of different dims");
     let (na, nb) = (a.ess, b.ess);
     let n = na + nb;
     let d = a.dim();
@@ -162,7 +180,7 @@ pub fn aggregate(stats: &[StatSnapshot], z: f64) -> (Option<StatSnapshot>, usize
     let mut acc: Option<StatSnapshot> = None;
     let mut pooled = 0usize;
     for s in stats {
-        if !s.has_samples() {
+        if !s.is_poolable() {
             continue;
         }
         match &acc {

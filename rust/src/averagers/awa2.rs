@@ -1,7 +1,7 @@
 //! Anytime window average with two accumulators (paper §3.1–3.2).
 
 use super::kernels;
-use super::{Averager, WindowKind};
+use super::{Averager, MergeOutcome, WindowKind};
 use crate::persist::codec::{self, Dec, Enc};
 
 /// AWA with one *old* and one *recent* accumulator — the paper's `awa`.
@@ -336,7 +336,7 @@ impl Averager for Awa2 {
     /// across the merged clocks is the documented approximation; a
     /// pending flush fires immediately if the pooled recent group
     /// crosses its threshold.)
-    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<MergeOutcome, String> {
         codec::check_header(dec, codec::tag::AWA2, self.d)?;
         codec::check_window(dec, &self.kind)?;
         let t = dec.get_u64()?;
@@ -348,7 +348,7 @@ impl Averager for Awa2 {
         let old2 = codec::get_state_vec(dec, self.d)?;
         let recent2 = codec::get_state_vec(dec, self.d)?;
         if t == 0 {
-            return Ok(());
+            return Ok(MergeOutcome::KeptSelf);
         }
         if self.t == 0 {
             self.old_phys = 0;
@@ -360,7 +360,7 @@ impl Averager for Awa2 {
             self.n0 = n0;
             self.n1 = n1;
             self.flushes = flushes;
-            return Ok(());
+            return Ok(MergeOutcome::TookPeer);
         }
         let d = self.d;
         // Pool the x² means with the same pre-merge counts as the means.
@@ -377,7 +377,7 @@ impl Averager for Awa2 {
         if self.n1 > 0 && self.should_flush() {
             self.flush();
         }
-        Ok(())
+        Ok(MergeOutcome::Pooled)
     }
 
     fn window_len(&self) -> f64 {

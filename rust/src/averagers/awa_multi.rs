@@ -3,7 +3,7 @@
 
 use super::awa2::{awa_ess, combine_gamma};
 use super::kernels;
-use super::{Averager, WindowKind};
+use super::{Averager, MergeOutcome, WindowKind};
 use crate::persist::codec::{self, Dec, Enc};
 
 /// AWA with `z` recent accumulators plus one old accumulator (`z+1` total).
@@ -459,14 +459,14 @@ impl Averager for AwaMulti {
     /// are exact means of the unioned chunks. (Chunk *boundaries* across
     /// the merged clocks are the documented approximation; a pending
     /// shift fires if the pooled newest chunk crosses its threshold.)
-    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<MergeOutcome, String> {
         let (t, counts, shifts, slots, slots2) = self.parse_state(dec)?;
         if t == 0 {
-            return Ok(());
+            return Ok(MergeOutcome::KeptSelf);
         }
         if self.t == 0 {
             self.load_state(t, counts, shifts, &slots, &slots2);
-            return Ok(());
+            return Ok(MergeOutcome::TookPeer);
         }
         let d = self.d;
         for i in 0..=self.z {
@@ -485,7 +485,7 @@ impl Averager for AwaMulti {
         if self.should_shift() {
             self.shift();
         }
-        Ok(())
+        Ok(MergeOutcome::Pooled)
     }
 
     fn window_len(&self) -> f64 {

@@ -28,6 +28,7 @@ use super::awa_multi::weighted_sum_into;
 use super::exp::exp_ess;
 use super::gea::solve_gamma;
 use super::kernels;
+use super::two_tail;
 use super::{AveragerSpec, WindowKind};
 use crate::persist::codec::{self, Dec, Enc};
 
@@ -140,6 +141,10 @@ pub fn build_bank(spec: &AveragerSpec, d: usize) -> Option<Box<dyn BankState>> {
             } else {
                 Box::new(AwaMultiBank::new(d, window, accumulators - 1))
             };
+            Some(b)
+        }
+        AveragerSpec::TwoTail { r } if r > 0.0 && r < 1.0 && r.is_finite() => {
+            let b: Box<dyn BankState> = Box::new(TwoTailBank::new(d, r));
             Some(b)
         }
         _ => None,
@@ -1141,6 +1146,195 @@ impl BankState for AwaMultiBank {
     }
 }
 
+// ---------------------------------------------------------------------------
+// TwoTailBank — planar TwoTail
+// ---------------------------------------------------------------------------
+
+/// Planar [`super::TwoTail`]: four `rows × d` arenas (the long and short
+/// running means plus their `x²` twins) with `N_l`/`N_s`/`t`/promotion
+/// scalar lanes. Batches delegate to the *same* free functions the slot
+/// estimator runs ([`two_tail`]'s run-fused fold with a switch check at
+/// each maturity boundary), so bank rows are bit-identical to slot
+/// streams by construction, not just to tolerance.
+pub struct TwoTailBank {
+    r: f64,
+    d: usize,
+    long: Vec<f64>,
+    /// Parallel `x²` arena for the long tail.
+    long2: Vec<f64>,
+    short: Vec<f64>,
+    /// Parallel `x²` arena for the short tail.
+    short2: Vec<f64>,
+    n_l: Vec<u64>,
+    n_s: Vec<u64>,
+    t: Vec<u64>,
+    switches: Vec<u64>,
+    read_offs: Vec<usize>,
+}
+
+impl TwoTailBank {
+    pub fn new(d: usize, r: f64) -> TwoTailBank {
+        TwoTailBank {
+            r,
+            d,
+            long: Vec::new(),
+            long2: Vec::new(),
+            short: Vec::new(),
+            short2: Vec::new(),
+            n_l: Vec::new(),
+            n_s: Vec::new(),
+            t: Vec::new(),
+            switches: Vec::new(),
+            read_offs: Vec::new(),
+        }
+    }
+}
+
+impl BankState for TwoTailBank {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn rows(&self) -> usize {
+        self.t.len()
+    }
+
+    fn row_stride(&self) -> usize {
+        4 * self.d
+    }
+
+    fn push_row(&mut self) -> usize {
+        self.long.resize(self.long.len() + self.d, 0.0);
+        self.long2.resize(self.long2.len() + self.d, 0.0);
+        self.short.resize(self.short.len() + self.d, 0.0);
+        self.short2.resize(self.short2.len() + self.d, 0.0);
+        self.n_l.push(0);
+        self.n_s.push(0);
+        self.t.push(0);
+        self.switches.push(0);
+        self.t.len() - 1
+    }
+
+    fn reset_row(&mut self, row: usize) {
+        let off = row * self.d;
+        for arena in [
+            &mut self.long,
+            &mut self.long2,
+            &mut self.short,
+            &mut self.short2,
+        ] {
+            arena[off..off + self.d].iter_mut().for_each(|v| *v = 0.0);
+        }
+        self.n_l[row] = 0;
+        self.n_s[row] = 0;
+        self.t[row] = 0;
+        self.switches[row] = 0;
+    }
+
+    fn apply_batches(&mut self, batches: &[RowBatch<'_>]) {
+        let d = self.d;
+        for b in batches {
+            let off = b.row * d;
+            two_tail::tt_observe_many(
+                self.r,
+                &mut self.long[off..off + d],
+                &mut self.long2[off..off + d],
+                &mut self.n_l[b.row],
+                &mut self.short[off..off + d],
+                &mut self.short2[off..off + d],
+                &mut self.n_s[b.row],
+                &mut self.t[b.row],
+                &mut self.switches[b.row],
+                b.data,
+                b.count,
+            );
+        }
+    }
+
+    fn t(&self, row: usize) -> u64 {
+        self.t[row]
+    }
+
+    fn window_len(&self, row: usize) -> f64 {
+        (self.n_l[row] as f64).max(1.0)
+    }
+
+    fn values_rows_into(&mut self, rows: &[usize], out: &mut [f64], present: &mut [bool]) {
+        self.read_offs.clear();
+        for (j, &row) in rows.iter().enumerate() {
+            present[j] = self.t[row] > 0;
+            self.read_offs.push(row * self.d);
+        }
+        kernels::copy_rows_into(out, &self.long, self.d, &self.read_offs);
+    }
+
+    fn value_row_into(&self, row: usize, out: &mut [f64]) -> bool {
+        if self.t[row] == 0 {
+            return false;
+        }
+        let off = row * self.d;
+        out.copy_from_slice(&self.long[off..off + self.d]);
+        true
+    }
+
+    fn moments_row_into(
+        &self,
+        row: usize,
+        mean: &mut [f64],
+        variance: &mut [f64],
+    ) -> Option<f64> {
+        if self.t[row] == 0 {
+            return None;
+        }
+        let off = row * self.d;
+        mean.copy_from_slice(&self.long[off..off + self.d]);
+        kernels::variance_from_raw(mean, &self.long2[off..off + self.d], variance);
+        Some(self.n_l[row] as f64)
+    }
+
+    fn export_rows(&self, rows: &[usize], enc: &mut Enc) {
+        let d = self.d;
+        for &row in rows {
+            enc.put_u8(codec::tag::TWO_TAIL);
+            enc.put_u32(d as u32);
+            enc.put_f64(self.r);
+            enc.put_u64(self.t[row]);
+            enc.put_u64(self.n_l[row]);
+            enc.put_u64(self.n_s[row]);
+            enc.put_u64(self.switches[row]);
+            let off = row * d;
+            enc.put_f64_slice(&self.long[off..off + d]);
+            enc.put_f64_slice(&self.short[off..off + d]);
+            enc.put_f64_slice(&self.long2[off..off + d]);
+            enc.put_f64_slice(&self.short2[off..off + d]);
+        }
+    }
+
+    fn import_row(&mut self, row: usize, dec: &mut Dec<'_>) -> Result<(), String> {
+        let d = self.d;
+        codec::check_header(dec, codec::tag::TWO_TAIL, d)?;
+        codec::check_param("r", dec.get_f64()?, self.r)?;
+        let t = dec.get_u64()?;
+        let n_l = dec.get_u64()?;
+        let n_s = dec.get_u64()?;
+        let switches = dec.get_u64()?;
+        let long = codec::get_state_vec(dec, d)?;
+        let short = codec::get_state_vec(dec, d)?;
+        let long2 = codec::get_state_vec(dec, d)?;
+        let short2 = codec::get_state_vec(dec, d)?;
+        let off = row * d;
+        self.long[off..off + d].copy_from_slice(&long);
+        self.short[off..off + d].copy_from_slice(&short);
+        self.long2[off..off + d].copy_from_slice(&long2);
+        self.short2[off..off + d].copy_from_slice(&short2);
+        self.t[row] = t;
+        self.n_l[row] = n_l;
+        self.n_s[row] = n_s;
+        self.switches[row] = switches;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1170,6 +1364,8 @@ mod tests {
                 window: WindowKind::Growing { c: 0.5 },
                 accumulators: 4,
             },
+            AveragerSpec::TwoTail { r: 0.5 },
+            AveragerSpec::TwoTail { r: 0.25 },
         ]
     }
 

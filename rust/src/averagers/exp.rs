@@ -1,7 +1,7 @@
 //! Fixed-decay exponential average (paper Eq. 2, the `expk` baseline).
 
 use super::kernels;
-use super::{Averager, WindowKind};
+use super::{Averager, MergeOutcome, WindowKind};
 use crate::persist::codec::{self, Dec, Enc};
 
 /// Exponential moving average `x̄_t = γ·x̄_{t−1} + (1−γ)·x_t`.
@@ -191,7 +191,7 @@ impl Averager for ExpAverage {
     /// the raw recursion satisfies `ema = w·x̄`, the merged raw state is
     /// simply `(ema_a + ema_b)` rescaled to the merged mass `1 −
     /// γ^(t_a+t_b)`.
-    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<MergeOutcome, String> {
         codec::check_header(dec, codec::tag::EXP, self.ema.len())?;
         codec::check_param("gamma", dec.get_f64()?, self.gamma)?;
         let t = dec.get_u64()?;
@@ -199,14 +199,14 @@ impl Averager for ExpAverage {
         let ema = codec::get_state_vec(dec, self.ema.len())?;
         let ema2 = codec::get_state_vec(dec, self.ema.len())?;
         if t == 0 {
-            return Ok(());
+            return Ok(MergeOutcome::KeptSelf);
         }
         if self.t == 0 {
             self.t = t;
             self.gamma_pow_t = gamma_pow_t;
             self.ema = ema;
             self.ema2 = ema2;
-            return Ok(());
+            return Ok(MergeOutcome::TookPeer);
         }
         let mass = (1.0 - self.gamma_pow_t) + (1.0 - gamma_pow_t);
         let merged_pow = self.gamma_pow_t * gamma_pow_t;
@@ -221,7 +221,7 @@ impl Averager for ExpAverage {
         }
         self.t += t;
         self.gamma_pow_t = merged_pow;
-        Ok(())
+        Ok(MergeOutcome::Pooled)
     }
 
     fn window_len(&self) -> f64 {

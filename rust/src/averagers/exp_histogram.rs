@@ -14,7 +14,7 @@
 //! is exactly the trade the paper's Figure-2/3 methods improve on. The
 //! `ablation_baselines` bench quantifies accuracy-vs-memory against AWA.
 
-use super::{Averager, WindowKind};
+use super::{Averager, MergeOutcome, WindowKind};
 use crate::persist::codec::{self, Dec, Enc};
 use std::collections::VecDeque;
 
@@ -281,14 +281,11 @@ impl Averager for EhWindow {
     /// Precedence merge: bucket boundaries are positional within one
     /// stream's history, so histograms from different shards cannot be
     /// pooled — the longer stream's state wins.
-    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<MergeOutcome, String> {
         let mut other =
             EhWindow::new(self.d, self.kind, self.eps).expect("own params are valid");
         other.import_state(dec)?;
-        if other.t > self.t {
-            *self = other;
-        }
-        Ok(())
+        Ok(super::resolve_precedence(self, other))
     }
 
     fn window_len(&self) -> f64 {

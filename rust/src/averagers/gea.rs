@@ -1,7 +1,7 @@
 //! Growing exponential average (paper §2, Eqs. 3–4 — the `exp` method).
 
 use super::kernels;
-use super::{Averager, WindowKind};
+use super::{Averager, MergeOutcome, WindowKind};
 use crate::persist::codec::{self, Dec, Enc};
 
 /// Exponential average whose decay `γ_t` is re-solved at every step so that
@@ -210,7 +210,7 @@ impl Averager for GrowingExp {
     /// `x̄ = (x̄_a/v_a + x̄_b/v_b)/(1/v_a + 1/v_b)` is exact and the
     /// merged variance factor is the harmonic combination
     /// `1/(1/v_a + 1/v_b)` — the merged state's `v` stays a true Σα².
-    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<MergeOutcome, String> {
         codec::check_header(dec, codec::tag::GEA, self.avg.len())?;
         codec::check_param("c", dec.get_f64()?, self.c)?;
         let t = dec.get_u64()?;
@@ -218,14 +218,14 @@ impl Averager for GrowingExp {
         let avg = codec::get_state_vec(dec, self.avg.len())?;
         let avg2 = codec::get_state_vec(dec, self.avg.len())?;
         if t == 0 {
-            return Ok(());
+            return Ok(MergeOutcome::KeptSelf);
         }
         if self.t == 0 {
             self.t = t;
             self.v = v;
             self.avg = avg;
             self.avg2 = avg2;
-            return Ok(());
+            return Ok(MergeOutcome::TookPeer);
         }
         if !(self.v > 0.0) || !(v > 0.0) {
             return Err("gea merge requires positive variance factors".into());
@@ -243,7 +243,7 @@ impl Averager for GrowingExp {
         }
         self.v = inv;
         self.t += t;
-        Ok(())
+        Ok(MergeOutcome::Pooled)
     }
 
     fn window_len(&self) -> f64 {

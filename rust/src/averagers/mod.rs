@@ -15,6 +15,7 @@
 //! | [`RawTail`] | `3d` | **no** | growing | suffix fold past `t₀` | — (horizon-bound, slot fallback) | exact (tail-mean pool) | tail mean of `x²`; `ESS = n` (1 pre-start) | `raw` baseline |
 //! | [`RestartTail`] | `5d` | stale (one block) | fixed & growing | block-skipping runs | — (slot fallback) | precedence (longer stream wins) | per-block mean of `x²`; `ESS = N_published` | §1 block-restart baseline |
 //! | [`EhWindow`] | `2·(1/ε)·log(εk_t)·d` | yes (ε-approx) | fixed & growing | per-sample replay (structure-exact) | — (ragged state, slot fallback) | precedence (longer stream wins) | per-bucket `Σx²`; `ESS = C²/Σw²n` | Datar et al. [2002] baseline |
+//! | [`TwoTail`] | `4d` | yes | **self-selected** (switching rule) | run-fused tails between maturity boundaries | [`banked::TwoTailBank`] (`4d`) | precedence (longer stream wins) | long tail `E[x²]`; `ESS = N_long` exactly | Melis [2022] two-tailed averaging |
 //!
 //! The *moments / ESS* column is the analytics contract
 //! ([`Averager::moments_into`], [`crate::analytics`]): every estimator
@@ -77,6 +78,7 @@ mod gea;
 pub(crate) mod kernels;
 mod raw_tail;
 mod restart;
+mod two_tail;
 mod weights;
 mod window;
 
@@ -88,6 +90,7 @@ pub use exp_histogram::EhWindow;
 pub use gea::GrowingExp;
 pub use raw_tail::RawTail;
 pub use restart::RestartTail;
+pub use two_tail::{TwoTail, DEFAULT_RATIO};
 pub use weights::{reconstruct_weight_history, reconstruct_weights};
 pub use window::TrueWindow;
 
@@ -136,11 +139,62 @@ impl WindowKind {
     }
 }
 
+/// What [`Averager::merge_state`] actually did — the merge rule made
+/// explicit in the returned state instead of applied silently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeOutcome {
+    /// Both sides' accumulators were combined exactly (the estimator's
+    /// state is now the pooled state of the union of both streams).
+    Pooled,
+    /// Precedence applied and this side won: the peer's state was
+    /// discarded (it observed a shorter stream, or lost the
+    /// deterministic tie-break).
+    KeptSelf,
+    /// Precedence applied and the peer won: this estimator's state was
+    /// replaced wholesale by the peer's.
+    TookPeer,
+}
+
+/// The shared precedence rule for estimators whose window contents are
+/// positional and cannot be pooled (`true`/`restart`/`eh`/`twotail`):
+/// the side that observed the longer stream wins. Ties on `t` are
+/// broken by comparing the canonical exported payloads byte-wise (the
+/// lexicographically smaller payload wins; identical payloads keep
+/// self) — so `merge(a, b)` and `merge(b, a)` deterministically land on
+/// the same state regardless of argument order, which the wire-level
+/// shard roll-up relies on.
+pub(crate) fn resolve_precedence<A: Averager>(me: &mut A, other: A) -> MergeOutcome {
+    use std::cmp::Ordering;
+    let take_peer = match other.t().cmp(&me.t()) {
+        Ordering::Greater => true,
+        Ordering::Less => false,
+        Ordering::Equal => {
+            let mut mine = Enc::new();
+            me.export_state(&mut mine);
+            let mut theirs = Enc::new();
+            other.export_state(&mut theirs);
+            theirs.as_bytes() < mine.as_bytes()
+        }
+    };
+    if take_peer {
+        *me = other;
+        MergeOutcome::TookPeer
+    } else {
+        MergeOutcome::KeptSelf
+    }
+}
+
 /// A streaming tail-average estimator over `d`-dimensional samples.
 ///
-/// Estimators are *linear*: the reported value is always a weighted sum
-/// `Σ_i α_{i,t}·x_i` of the observed samples with `Σ_i α_{i,t} = 1`
-/// (verified generically by [`reconstruct_weights`] in the property tests).
+/// With one exception, estimators are *linear*: the reported value is a
+/// weighted sum `Σ_i α_{i,t}·x_i` of the observed samples with
+/// `Σ_i α_{i,t} = 1` (verified generically by [`reconstruct_weights`]
+/// in the property tests). The exception is [`TwoTail`], whose weight
+/// profile is data-dependent (the switching rule picks the tail with
+/// the lower estimated error) — it is still a uniform suffix mean at
+/// every instant, but which suffix depends on the stream, so it is
+/// covered by dedicated oracle tests instead of impulse-response
+/// weight reconstruction.
 pub trait Averager: Send {
     /// Estimator name (matches the paper's figure legends where possible).
     fn name(&self) -> &str;
@@ -213,10 +267,20 @@ pub trait Averager: Send {
     /// Merge a peer's exported state (same spec/dim; e.g. another
     /// shard's partial aggregate over a disjoint slice of the stream)
     /// into this one. Exactness is per-estimator — accumulator
-    /// estimators pool exactly (count-/variance-weighted), windowed
-    /// estimators keep the longer stream's state — see the module
-    /// table's *snapshot / merge* column.
-    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String>;
+    /// estimators pool exactly (count-/variance-weighted) and return
+    /// [`MergeOutcome::Pooled`]; windowed *precedence* estimators
+    /// (`true`/`restart`/`eh`/`twotail`) cannot pool their positional
+    /// window contents without the raw samples, so they keep whichever
+    /// state observed the longer stream and say which side won
+    /// ([`MergeOutcome::KeptSelf`] / [`MergeOutcome::TookPeer`]) — see
+    /// the module table's *snapshot / merge* column.
+    ///
+    /// Determinism contract: `merge(a, b)` and `merge(b, a)` end in the
+    /// same state. Exact poolers are commutative by construction (to
+    /// floating-point round-off); precedence estimators break `t` ties
+    /// by canonical payload byte order ([`resolve_precedence`]), so the
+    /// winner never depends on argument order.
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<MergeOutcome, String>;
 
     /// Current nominal window `k_t`.
     fn window_len(&self) -> f64;
@@ -293,6 +357,10 @@ pub enum AveragerSpec {
     /// DGIM exponential histogram (Datar et al. 2002): ε-approximate
     /// window mean in logarithmic memory.
     Eh { window: WindowKind, eps: f64 },
+    /// Two-tailed adaptive tail average (Melis 2022): the window is
+    /// selected online by the switching rule; `r` is the short/long
+    /// maturity ratio (`0 < r < 1`).
+    TwoTail { r: f64 },
 }
 
 impl AveragerSpec {
@@ -325,6 +393,7 @@ impl AveragerSpec {
             }
             AveragerSpec::Restart { window } => Ok(Box::new(RestartTail::new(d, window)?)),
             AveragerSpec::Eh { window, eps } => Ok(Box::new(EhWindow::new(d, window, eps)?)),
+            AveragerSpec::TwoTail { r } => Ok(Box::new(TwoTail::new(d, r)?)),
         }
     }
 
@@ -354,6 +423,7 @@ impl AveragerSpec {
                 WindowKind::Fixed { k } => format!("eh(k={k},eps={eps})"),
                 WindowKind::Growing { c } => format!("eh(c={c},eps={eps})"),
             },
+            AveragerSpec::TwoTail { r } => format!("twotail(r={r})"),
         }
     }
 
@@ -409,6 +479,13 @@ impl AveragerSpec {
             "eh" => Ok(AveragerSpec::Eh {
                 window: window()?,
                 eps: getf("eps")?,
+            }),
+            "twotail" => Ok(AveragerSpec::TwoTail {
+                r: if kv.contains_key("r") {
+                    getf("r")?
+                } else {
+                    two_tail::DEFAULT_RATIO
+                },
             }),
             h if h.starts_with("awa") => {
                 let accs: u32 = if h == "awa" {
@@ -485,6 +562,7 @@ mod tests {
                 window: WindowKind::Growing { c: 0.5 },
                 eps: 0.1,
             },
+            AveragerSpec::TwoTail { r: 0.5 },
         ];
         for spec in specs {
             let mut a = spec.build(3).expect("build");
@@ -504,6 +582,8 @@ mod tests {
         }
         .build(1)
         .is_err());
+        assert!(AveragerSpec::TwoTail { r: 1.0 }.build(1).is_err());
+        assert!(AveragerSpec::TwoTail { r: 0.0 }.build(1).is_err());
     }
 
     #[test]
@@ -522,6 +602,8 @@ mod tests {
             "restart(c=0.5)",
             "eh(k=100,eps=0.1)",
             "eh(c=0.5,eps=0.05)",
+            "twotail(r=0.5)",
+            "twotail(r=0.25)",
         ] {
             let spec = AveragerSpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
             // label→parse is stable for canonical labels
@@ -529,6 +611,11 @@ mod tests {
             assert!(relabel.is_ok(), "label {} reparses", spec.label());
             assert_eq!(relabel.unwrap(), spec);
         }
+        // Ratio defaults when omitted.
+        assert_eq!(
+            AveragerSpec::parse("twotail()").unwrap(),
+            AveragerSpec::TwoTail { r: DEFAULT_RATIO }
+        );
     }
 
     #[test]

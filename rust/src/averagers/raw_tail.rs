@@ -1,7 +1,7 @@
 //! Classic (non-anytime) tail average — the paper's `raw` baseline.
 
 use super::kernels;
-use super::{Averager, WindowKind};
+use super::{Averager, MergeOutcome, WindowKind};
 use crate::persist::codec::{self, Dec, Enc};
 
 /// The standard way to tail-average with O(d) memory: decide the horizon
@@ -201,10 +201,10 @@ impl Averager for RawTail {
     /// NOT additive — each shard measured its own progress toward the
     /// shared horizon — so `t` takes the maximum and the raw pre-start
     /// iterate follows the longer stream.
-    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<MergeOutcome, String> {
         let (t, n, mean, last, mean2) = self.parse_state(dec)?;
         if t == 0 {
-            return Ok(());
+            return Ok(MergeOutcome::KeptSelf);
         }
         if self.t == 0 {
             self.t = t;
@@ -212,7 +212,7 @@ impl Averager for RawTail {
             self.mean = mean;
             self.last = last;
             self.mean2 = mean2;
-            return Ok(());
+            return Ok(MergeOutcome::TookPeer);
         }
         if n > 0 {
             kernels::pool_means(&mut self.mean, &mean, self.n, n);
@@ -223,7 +223,7 @@ impl Averager for RawTail {
             self.last = last;
             self.t = t;
         }
-        Ok(())
+        Ok(MergeOutcome::Pooled)
     }
 
     fn window_len(&self) -> f64 {

@@ -14,7 +14,7 @@
 //! restarts). Memory: `2d` (current block + last published average).
 
 use super::kernels;
-use super::{Averager, WindowKind};
+use super::{Averager, MergeOutcome, WindowKind};
 use crate::persist::codec::{self, Dec, Enc};
 
 /// Block-restart tail average: constant memory, publishes the mean of
@@ -272,14 +272,11 @@ impl Averager for RestartTail {
     /// Precedence merge: block boundaries are positional (a block is a
     /// contiguous run of ONE stream), so partial blocks from different
     /// shards cannot be pooled — the longer stream's state wins.
-    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<MergeOutcome, String> {
         let mut other = RestartTail::new(self.cur.len(), self.kind)
             .expect("own window kind is valid");
         other.import_state(dec)?;
-        if other.t > self.t {
-            *self = other;
-        }
-        Ok(())
+        Ok(super::resolve_precedence(self, other))
     }
 
     fn window_len(&self) -> f64 {

@@ -1,0 +1,589 @@
+//! Two-Tailed Averaging (Melis 2022, arXiv 2209.12581): adaptive tail
+//! selection without the hand-tuned fraction.
+//!
+//! The source paper's anytime estimators track the mean of the last
+//! `k_t` samples for a *chosen* window schedule; picking the schedule
+//! is the remaining tuning knob. Two-Tailed Averaging removes it by
+//! running two uniform-weight suffix means concurrently:
+//!
+//! * a **long tail** over the last `N_l` samples (grows without bound
+//!   while it keeps winning), and
+//! * a **short tail** over the last `N_s` samples, restarted every
+//!   time it reaches a fixed fraction `r` of the long tail's length.
+//!
+//! Each time the short tail *matures* (`N_s ≥ max(2, r·N_l)`), the
+//! estimator compares both tails' estimated squared error — the
+//! standard-error proxy `var/ESS = (E[x²] − mean²)/N`, averaged over
+//! dimensions, exactly the signal [`Averager::moments_into`] already
+//! streams — and if the short tail's is strictly lower (the stream
+//! drifted, so old samples hurt more than extra averaging helps) the
+//! short tail is **promoted**: it becomes the new long tail. Either
+//! way the short tail restarts from zero. The reported value is always
+//! the long (winning) tail, so reads are anytime and O(d), and the
+//! currently-selected effective window is `N_l`.
+//!
+//! Memory: `4d` floats (mean + `E[x²]` twin, per tail) — constant in
+//! `t` like the paper's estimators. The switching rule is O(d) per
+//! maturity event and O(1) bookkeeping per sample.
+//!
+//! The estimator is deliberately *nonlinear*: its weights are
+//! data-dependent (which candidate window wins depends on the observed
+//! drift), so it is excluded from the impulse-response weight
+//! reconstruction tests that assume fixed weight profiles; its
+//! contracts are pinned by dedicated equivalence tests plus the
+//! brute-force switching-rule oracle in `averager_properties.rs`.
+
+use super::kernels;
+use super::{Averager, MergeOutcome};
+use crate::persist::codec::{self, Dec, Enc};
+
+/// Default short/long length ratio. The paper's switching rule is
+/// insensitive to the exact fraction as long as the short tail gets
+/// enough samples for a meaningful error estimate before comparison;
+/// 1/2 doubles the selected window between candidate lengths.
+pub const DEFAULT_RATIO: f64 = 0.5;
+
+/// Whether the short tail is mature enough to challenge the long tail:
+/// at least 2 samples (one sample has zero sample-variance — its error
+/// estimate is vacuously 0) and at least `r` of the long tail's length.
+#[inline]
+pub(crate) fn tt_mature(n_s: u64, n_l: u64, r: f64) -> bool {
+    n_s >= 2 && n_s as f64 >= r * n_l as f64
+}
+
+/// Samples until the NEXT maturity event if both tails advance
+/// together (they always do — every sample feeds both), starting from
+/// `(n_s, n_l)`. Exact: seeds from the closed form, then settles on
+/// the smallest `a ≥ 1` satisfying the actual predicate, so the fused
+/// batch path fires switch checks at bit-identical stream positions to
+/// the per-sample path.
+pub(crate) fn tt_samples_to_maturity(n_s: u64, n_l: u64, r: f64) -> u64 {
+    let need = r * n_l as f64 - n_s as f64;
+    let mut a = if need > 0.0 {
+        (need / (1.0 - r)).ceil() as u64
+    } else {
+        0
+    };
+    a = a.max(2u64.saturating_sub(n_s)).max(1);
+    while !tt_mature(n_s + a, n_l + a, r) {
+        a += 1;
+    }
+    while a > 1 && tt_mature(n_s + a - 1, n_l + a - 1, r) {
+        a -= 1;
+    }
+    a
+}
+
+/// Estimated squared error of a uniform `n`-sample tail with running
+/// mean `m` and running mean-of-squares `m2`: the per-dim sample
+/// variance `max(m2 − m², 0)` over `n` (variance of the mean), averaged
+/// across dimensions. Mirrored digit-for-digit by the python reference
+/// (`TwoTailRef.est_err`) — keep the operation order in sync.
+#[inline]
+pub(crate) fn tt_est_err(m: &[f64], m2: &[f64], n: u64) -> f64 {
+    let mut s = 0.0;
+    for i in 0..m.len() {
+        s += (m2[i] - m[i] * m[i]).max(0.0);
+    }
+    s / n as f64 / m.len() as f64
+}
+
+/// One maturity event: promote the short tail if its estimated squared
+/// error is strictly lower, then restart it. Operates on raw slices so
+/// the slot estimator and the planar bank run the identical code.
+pub(crate) fn tt_switch_check(
+    long: &mut [f64],
+    long2: &mut [f64],
+    n_l: &mut u64,
+    short: &mut [f64],
+    short2: &mut [f64],
+    n_s: &mut u64,
+    switches: &mut u64,
+) {
+    let err_l = tt_est_err(long, long2, *n_l);
+    let err_s = tt_est_err(short, short2, *n_s);
+    if err_s < err_l {
+        long.copy_from_slice(short);
+        long2.copy_from_slice(short2);
+        *n_l = *n_s;
+        *switches += 1;
+    }
+    short.iter_mut().for_each(|v| *v = 0.0);
+    short2.iter_mut().for_each(|v| *v = 0.0);
+    *n_s = 0;
+}
+
+/// Shared batch kernel: run-fused updates of both tails up to each
+/// maturity boundary, switch check at the boundary, repeat. Between
+/// boundaries there are no decision points, so whole runs fold through
+/// [`kernels::mean_update_run_fused`] (bit-identical to the per-sample
+/// recurrence) — the same shape as `RestartTail`'s block-skipping path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn tt_observe_many(
+    r: f64,
+    long: &mut [f64],
+    long2: &mut [f64],
+    n_l: &mut u64,
+    short: &mut [f64],
+    short2: &mut [f64],
+    n_s: &mut u64,
+    t: &mut u64,
+    switches: &mut u64,
+    data: &[f64],
+    count: usize,
+) {
+    let d = long.len();
+    debug_assert_eq!(data.len(), count * d, "batch shape mismatch");
+    let mut off = 0usize;
+    while off < count {
+        let boundary = tt_samples_to_maturity(*n_s, *n_l, r) as usize;
+        let take = boundary.min(count - off);
+        let run = &data[off * d..(off + take) * d];
+        kernels::mean_update_run_fused(long, long2, run, *n_l);
+        kernels::mean_update_run_fused(short, short2, run, *n_s);
+        *n_l += take as u64;
+        *n_s += take as u64;
+        *t += take as u64;
+        off += take;
+        if take == boundary {
+            tt_switch_check(long, long2, n_l, short, short2, n_s, switches);
+        }
+    }
+}
+
+/// Two-tailed adaptive tail average: anytime, constant memory, and no
+/// window schedule to tune — the effective window is selected online by
+/// the switching rule (see module docs).
+#[derive(Clone, Debug)]
+pub struct TwoTail {
+    /// Short/long length ratio at which the short tail matures.
+    r: f64,
+    /// Long (winning) tail: running mean, running `E[x²]`, length.
+    long: Vec<f64>,
+    long2: Vec<f64>,
+    n_l: u64,
+    /// Short (challenger) tail, restarted at every maturity event.
+    short: Vec<f64>,
+    short2: Vec<f64>,
+    n_s: u64,
+    t: u64,
+    /// Promotions so far (short tail won the error comparison).
+    switches: u64,
+    name: String,
+}
+
+impl TwoTail {
+    pub fn new(d: usize, r: f64) -> Result<TwoTail, String> {
+        if !(r > 0.0 && r < 1.0) || !r.is_finite() {
+            return Err(format!("twotail requires 0 < r < 1, got {r}"));
+        }
+        Ok(TwoTail {
+            r,
+            long: vec![0.0; d],
+            long2: vec![0.0; d],
+            n_l: 0,
+            short: vec![0.0; d],
+            short2: vec![0.0; d],
+            n_s: 0,
+            t: 0,
+            switches: 0,
+            name: format!("twotail(r={r})"),
+        })
+    }
+
+    /// The currently-selected effective window: the long tail's length.
+    pub fn selected_window(&self) -> u64 {
+        self.n_l
+    }
+
+    /// The challenger's current length (`< max(2, r·selected_window)`).
+    pub fn challenger_len(&self) -> u64 {
+        self.n_s
+    }
+
+    /// How many times the short tail won and was promoted.
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// The configured short/long maturity ratio.
+    pub fn ratio(&self) -> f64 {
+        self.r
+    }
+}
+
+impl Averager for TwoTail {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.long.len()
+    }
+
+    fn t(&self) -> u64 {
+        self.t
+    }
+
+    fn observe(&mut self, x: &[f64]) {
+        assert_eq!(x.len(), self.long.len(), "dimension mismatch");
+        self.t += 1;
+        self.n_l += 1;
+        self.n_s += 1;
+        kernels::mean_update_fused(&mut self.long, &mut self.long2, x, self.n_l as f64);
+        kernels::mean_update_fused(&mut self.short, &mut self.short2, x, self.n_s as f64);
+        if tt_mature(self.n_s, self.n_l, self.r) {
+            tt_switch_check(
+                &mut self.long,
+                &mut self.long2,
+                &mut self.n_l,
+                &mut self.short,
+                &mut self.short2,
+                &mut self.n_s,
+                &mut self.switches,
+            );
+        }
+    }
+
+    fn observe_many(&mut self, data: &[f64], count: usize) {
+        let d = self.long.len();
+        assert_eq!(data.len(), count * d, "batch shape mismatch");
+        if count == 0 {
+            return;
+        }
+        tt_observe_many(
+            self.r,
+            &mut self.long,
+            &mut self.long2,
+            &mut self.n_l,
+            &mut self.short,
+            &mut self.short2,
+            &mut self.n_s,
+            &mut self.t,
+            &mut self.switches,
+            data,
+            count,
+        );
+    }
+
+    fn value_into(&self, out: &mut [f64]) -> bool {
+        if self.t == 0 {
+            return false;
+        }
+        out.copy_from_slice(&self.long);
+        true
+    }
+
+    fn moments_into(&self, mean: &mut [f64], variance: &mut [f64]) -> Option<f64> {
+        if self.t == 0 {
+            return None;
+        }
+        mean.copy_from_slice(&self.long);
+        kernels::variance_from_raw(&self.long, &self.long2, variance);
+        // The long tail is a uniform suffix mean: ESS is exactly its
+        // sample count.
+        Some(self.n_l as f64)
+    }
+
+    /// Payload: `TWO_TAIL` tag, dim, ratio `r`, `t`, long length, short
+    /// length, promotions, then the long mean, short mean, and their
+    /// `x²` twins.
+    fn export_state(&self, enc: &mut Enc) {
+        enc.put_u8(codec::tag::TWO_TAIL);
+        enc.put_u32(self.long.len() as u32);
+        enc.put_f64(self.r);
+        enc.put_u64(self.t);
+        enc.put_u64(self.n_l);
+        enc.put_u64(self.n_s);
+        enc.put_u64(self.switches);
+        enc.put_f64_slice(&self.long);
+        enc.put_f64_slice(&self.short);
+        enc.put_f64_slice(&self.long2);
+        enc.put_f64_slice(&self.short2);
+    }
+
+    fn import_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+        let d = self.long.len();
+        codec::check_header(dec, codec::tag::TWO_TAIL, d)?;
+        codec::check_param("r", dec.get_f64()?, self.r)?;
+        let t = dec.get_u64()?;
+        let n_l = dec.get_u64()?;
+        let n_s = dec.get_u64()?;
+        let switches = dec.get_u64()?;
+        let long = codec::get_state_vec(dec, d)?;
+        let short = codec::get_state_vec(dec, d)?;
+        let long2 = codec::get_state_vec(dec, d)?;
+        let short2 = codec::get_state_vec(dec, d)?;
+        self.t = t;
+        self.n_l = n_l;
+        self.n_s = n_s;
+        self.switches = switches;
+        self.long = long;
+        self.short = short;
+        self.long2 = long2;
+        self.short2 = short2;
+        Ok(())
+    }
+
+    /// Precedence merge: tail boundaries are positional (a tail is a
+    /// contiguous suffix of ONE stream), so two shards' tails cannot be
+    /// pooled without the raw samples — the longer stream's state wins,
+    /// with the deterministic byte-order tie-break of
+    /// [`super::resolve_precedence`].
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<MergeOutcome, String> {
+        let mut other = TwoTail::new(self.long.len(), self.r).expect("own ratio is valid");
+        other.import_state(dec)?;
+        Ok(super::resolve_precedence(self, other))
+    }
+
+    fn window_len(&self) -> f64 {
+        (self.n_l as f64).max(1.0)
+    }
+
+    fn memory_floats(&self) -> usize {
+        self.long.len() + self.long2.len() + self.short.len() + self.short2.len()
+    }
+
+    fn reset(&mut self) {
+        self.long.iter_mut().for_each(|v| *v = 0.0);
+        self.long2.iter_mut().for_each(|v| *v = 0.0);
+        self.short.iter_mut().for_each(|v| *v = 0.0);
+        self.short2.iter_mut().for_each(|v| *v = 0.0);
+        self.n_l = 0;
+        self.n_s = 0;
+        self.t = 0;
+        self.switches = 0;
+    }
+
+    fn clone_box(&self) -> Box<dyn Averager> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t: u64, i: usize) -> f64 {
+        ((t as f64) * 0.379 + (i as f64) * 1.1).sin() * 3.0 + ((t as f64) * 0.05).cos()
+    }
+
+    #[test]
+    fn rejects_bad_ratio() {
+        assert!(TwoTail::new(1, 0.0).is_err());
+        assert!(TwoTail::new(1, 1.0).is_err());
+        assert!(TwoTail::new(1, -0.5).is_err());
+        assert!(TwoTail::new(1, f64::NAN).is_err());
+        assert!(TwoTail::new(1, 0.5).is_ok());
+    }
+
+    #[test]
+    fn first_sample_is_exact() {
+        let mut a = TwoTail::new(2, 0.5).unwrap();
+        assert!(a.value().is_none());
+        a.observe(&[3.0, -1.0]);
+        assert_eq!(a.value().unwrap(), vec![3.0, -1.0]);
+        assert_eq!(a.selected_window(), 1);
+    }
+
+    #[test]
+    fn constant_stream_is_fixed_point_with_zero_error() {
+        let mut a = TwoTail::new(1, 0.5).unwrap();
+        for _ in 0..200 {
+            a.observe_scalar(4.25);
+        }
+        assert_eq!(a.value_scalar().unwrap(), 4.25);
+        let (mut m, mut v) = ([0.0], [0.0]);
+        let ess = a.moments_into(&mut m, &mut v).unwrap();
+        assert_eq!(m[0], 4.25);
+        assert!(v[0].abs() < 1e-12, "constant stream variance {}", v[0]);
+        assert!(ess >= 1.0 && ess <= 200.0, "ess {ess}");
+    }
+
+    #[test]
+    fn stationary_stream_grows_the_long_tail() {
+        // No drift: extra averaging always helps, so the short tail
+        // should essentially never win and the selected window should
+        // track a constant fraction of the full history.
+        let mut a = TwoTail::new(1, 0.5).unwrap();
+        for t in 1..=2000u64 {
+            a.observe_scalar(sample(t, 0));
+        }
+        assert!(
+            a.selected_window() >= 500,
+            "stationary stream collapsed the window to {}",
+            a.selected_window()
+        );
+    }
+
+    #[test]
+    fn level_shift_drops_the_selected_window() {
+        // A hard level shift early in the stream: the long tail
+        // straddles the shift and carries its squared bias; once a
+        // short tail sits entirely in the new regime at a maturity
+        // check, the switching rule must promote it, shrinking the
+        // selected window to post-shift samples only. (The shift sits
+        // in the first sixth because checks are geometrically spaced —
+        // ×2 for r=0.5 — so a late shift can legitimately stay
+        // invisible until past the horizon: the paper's
+        // "once-in-a-while" optimality.)
+        let mut a = TwoTail::new(1, 0.5).unwrap();
+        for t in 1..=1000u64 {
+            let x = if t <= 150 { 0.0 } else { 50.0 } + sample(t, 0) * 0.1;
+            a.observe_scalar(x);
+        }
+        assert!(a.switches() > 0, "no promotion across a 50-sigma shift");
+        assert!(
+            a.selected_window() <= 850,
+            "selected window {} still straddles the shift",
+            a.selected_window()
+        );
+        let v = a.value_scalar().unwrap();
+        assert!(
+            (v - 50.0).abs() < 1.0,
+            "estimate {v} not tracking the new level"
+        );
+    }
+
+    #[test]
+    fn observe_many_matches_sequential_incl_switch_boundaries() {
+        let d = 3usize;
+        let total = 400usize;
+        let flat: Vec<f64> = (0..total)
+            .flat_map(|s| {
+                let t = s as u64 + 1;
+                // Mild drift so promotions actually happen mid-batch.
+                (0..d).map(move |i| sample(t, i) + t as f64 * 0.01)
+            })
+            .collect();
+        for r in [0.25, 0.5, 0.75] {
+            let mut seq = TwoTail::new(d, r).unwrap();
+            for x in flat.chunks_exact(d) {
+                seq.observe(x);
+            }
+            // Batch splits chosen to land both inside runs and exactly
+            // on maturity boundaries.
+            let mut bat = TwoTail::new(d, r).unwrap();
+            bat.observe_many(&flat[..6 * d], 6);
+            bat.observe_many(&flat[6 * d..7 * d], 1);
+            bat.observe_many(&flat[7 * d..250 * d], 243);
+            bat.observe_many(&flat[250 * d..], total - 250);
+            assert_eq!(seq.t(), bat.t());
+            assert_eq!(seq.selected_window(), bat.selected_window(), "r={r}");
+            assert_eq!(seq.switches(), bat.switches(), "r={r}");
+            let (sv, bv) = (seq.value().unwrap(), bat.value().unwrap());
+            for i in 0..d {
+                assert!(
+                    (sv[i] - bv[i]).abs() <= 1e-12 * sv[i].abs().max(1.0),
+                    "r={r} dim {i}: {} vs {}",
+                    sv[i],
+                    bv[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_constant_in_t() {
+        let mut a = TwoTail::new(4, 0.5).unwrap();
+        let m0 = a.memory_floats();
+        for t in 1..=500u64 {
+            a.observe(&[sample(t, 0), sample(t, 1), sample(t, 2), sample(t, 3)]);
+        }
+        assert_eq!(a.memory_floats(), m0);
+        assert_eq!(m0, 16, "4d floats for d=4");
+    }
+
+    #[test]
+    fn export_import_roundtrip_is_bitwise() {
+        let d = 2usize;
+        let mut a = TwoTail::new(d, 0.5).unwrap();
+        for t in 1..=137u64 {
+            a.observe(&[sample(t, 0), sample(t, 1) + t as f64 * 0.02]);
+        }
+        let mut enc = Enc::new();
+        a.export_state(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut b = TwoTail::new(d, 0.5).unwrap();
+        b.import_state(&mut Dec::new(&bytes)).unwrap();
+        let mut enc2 = Enc::new();
+        b.export_state(&mut enc2);
+        assert_eq!(bytes, enc2.into_bytes(), "export→import→export bytes");
+        // And the restored estimator continues identically.
+        for t in 138..=200u64 {
+            let x = [sample(t, 0), sample(t, 1) + t as f64 * 0.02];
+            a.observe(&x);
+            b.observe(&x);
+        }
+        assert_eq!(a.value().unwrap(), b.value().unwrap());
+        assert_eq!(a.selected_window(), b.selected_window());
+    }
+
+    #[test]
+    fn import_rejects_mismatched_ratio() {
+        let mut a = TwoTail::new(1, 0.5).unwrap();
+        a.observe_scalar(1.0);
+        let mut enc = Enc::new();
+        a.export_state(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut b = TwoTail::new(1, 0.25).unwrap();
+        let err = b.import_state(&mut Dec::new(&bytes)).unwrap_err();
+        assert!(err.contains('r'), "error names the parameter: {err}");
+    }
+
+    #[test]
+    fn merge_takes_longer_stream_and_reports_winner() {
+        let d = 1usize;
+        let mut a = TwoTail::new(d, 0.5).unwrap();
+        let mut b = TwoTail::new(d, 0.5).unwrap();
+        for t in 1..=50u64 {
+            a.observe_scalar(sample(t, 0));
+        }
+        for t in 1..=90u64 {
+            b.observe_scalar(sample(t, 0) + 1.0);
+        }
+        let mut enc = Enc::new();
+        b.export_state(&mut enc);
+        let bytes = enc.into_bytes();
+        let outcome = a.merge_state(&mut Dec::new(&bytes)).unwrap();
+        assert_eq!(outcome, MergeOutcome::TookPeer);
+        assert_eq!(a.t(), 90);
+        assert_eq!(a.value().unwrap(), b.value().unwrap());
+        // Merging the shorter stream back is a no-op and says so.
+        let mut enc_a = Enc::new();
+        let mut short = TwoTail::new(d, 0.5).unwrap();
+        for t in 1..=10u64 {
+            short.observe_scalar(sample(t, 0));
+        }
+        short.export_state(&mut enc_a);
+        let outcome = a.merge_state(&mut Dec::new(&enc_a.into_bytes())).unwrap();
+        assert_eq!(outcome, MergeOutcome::KeptSelf);
+        assert_eq!(a.t(), 90);
+    }
+
+    #[test]
+    fn maturity_schedule_is_exact() {
+        // The closed-form seed must land on the exact smallest boundary
+        // for awkward ratios (where ceil() of the float estimate can be
+        // off by one in either direction).
+        for &r in &[0.1, 0.25, 1.0 / 3.0, 0.5, 0.7, 0.9, 0.999] {
+            for n_l in [0u64, 1, 2, 3, 7, 100, 1000, 12345] {
+                for n_s in [0u64, 1, 2, 5] {
+                    if n_s > n_l {
+                        continue;
+                    }
+                    let a = tt_samples_to_maturity(n_s, n_l, r);
+                    assert!(a >= 1);
+                    assert!(
+                        tt_mature(n_s + a, n_l + a, r),
+                        "r={r} n_s={n_s} n_l={n_l}: a={a} not mature"
+                    );
+                    assert!(
+                        a == 1 || !tt_mature(n_s + a - 1, n_l + a - 1, r),
+                        "r={r} n_s={n_s} n_l={n_l}: a={a} not minimal"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,7 +1,7 @@
 //! Exact sliding-window average (the `truek`/`true` baseline).
 
 use super::kernels;
-use super::{Averager, WindowKind};
+use super::{Averager, MergeOutcome, WindowKind};
 use crate::persist::codec::{self, Dec, Enc};
 use std::collections::VecDeque;
 
@@ -230,13 +230,10 @@ impl Averager for TrueWindow {
     /// Precedence merge: the ring holds raw window samples that cannot
     /// be pooled across shards without interleaving order, so the state
     /// that observed the longer stream wins outright.
-    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<(), String> {
+    fn merge_state(&mut self, dec: &mut Dec<'_>) -> Result<MergeOutcome, String> {
         let mut other = TrueWindow::new(self.sum.len(), self.kind);
         other.import_state(dec)?;
-        if other.t > self.t {
-            *self = other;
-        }
-        Ok(())
+        Ok(super::resolve_precedence(self, other))
     }
 
     fn window_len(&self) -> f64 {

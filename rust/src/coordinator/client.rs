@@ -272,18 +272,24 @@ impl Client {
         }
     }
 
-    /// Whether `err` means the cached handle for `stream` went stale
-    /// (the stream was unregistered — and possibly re-registered under
-    /// a fresh handle — server-side). Drops the cache entry so the next
-    /// attempt re-resolves.
-    fn is_stale_handle(&mut self, stream: &str, err: &ClientError) -> bool {
+    /// Whether `err` means a cached handle went stale (the stream was
+    /// unregistered — and possibly re-registered under a fresh handle —
+    /// server-side). Flushes the WHOLE handle cache, not just this
+    /// stream's entry: handle spaces are seeded per coordinator
+    /// incarnation, so one stale rejection means every handle resolved
+    /// before the cutover (an unregister sweep, or a standby `promote()`
+    /// failover behind the same address) is dead too. Purging them all
+    /// now lets every stream's next op re-resolve and succeed on its
+    /// first attempt instead of burning a retry per stream — or failing
+    /// outright under a `max_attempts = 1` policy.
+    fn is_stale_handle(&mut self, _stream: &str, err: &ClientError) -> bool {
         if self.wire != Wire::V2Binary {
             return false;
         }
         match err {
-            ClientError::Server(msg) => {
-                msg.contains(protocol::STALE_HANDLE_MARKER)
-                    && self.handles.remove(stream).is_some()
+            ClientError::Server(msg) if msg.contains(protocol::STALE_HANDLE_MARKER) => {
+                self.handles.clear();
+                true
             }
             _ => false,
         }
@@ -582,7 +588,9 @@ impl Client {
                     for (&pos, outcome) in wire_pos.iter().zip(outcomes) {
                         if let MultiOutcome::Rejected(msg) = &outcome {
                             if msg.contains(protocol::STALE_HANDLE_MARKER) {
-                                self.handles.remove(batches[pos].0);
+                                // Whole-era purge, same rationale as
+                                // `is_stale_handle`.
+                                self.handles.clear();
                             }
                         }
                         out[pos] = Some(outcome);
@@ -737,7 +745,7 @@ impl Client {
     /// frame (handle-addressed under v2; name-addressed round-trip
     /// semantics under v1 ride the same op). Per-entry results in input
     /// order: a stale handle or unknown name errors only its own entry
-    /// (and purges the stale cache entry so the next call re-resolves).
+    /// (and flushes the handle cache so the next call re-resolves).
     pub fn multi_snapshot(
         &mut self,
         streams: &[&str],
@@ -772,7 +780,9 @@ impl Client {
                             StatOutcome::Stat(s) => Ok(s),
                             StatOutcome::Missing(e) => {
                                 if e.contains(protocol::STALE_HANDLE_MARKER) {
-                                    self.handles.remove(streams[pos]);
+                                    // Whole-era purge, same rationale as
+                                    // `is_stale_handle`.
+                                    self.handles.clear();
                                 }
                                 Err(e)
                             }

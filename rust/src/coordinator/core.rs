@@ -2894,8 +2894,8 @@ mod tests {
         assert!(pinned <= 2);
     }
 
-    /// Every estimator family, for the hygiene sweep: 4 with planar
-    /// banks (exp/mean/gea/awa) and 4 on the slot fallback
+    /// Every estimator family, for the hygiene sweep: 5 with planar
+    /// banks (exp/mean/gea/awa/twotail) and 4 on the slot fallback
     /// (true/raw/restart/eh).
     fn all_family_specs() -> Vec<AveragerSpec> {
         let grow = WindowKind::Growing { c: 0.5 };
@@ -2917,6 +2917,7 @@ mod tests {
                 window: grow,
                 eps: 0.1,
             },
+            AveragerSpec::TwoTail { r: 0.5 },
         ]
     }
 

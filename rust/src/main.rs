@@ -888,6 +888,15 @@ fn cmd_weights(args: &[String]) -> Result<(), CliRunError> {
         | AveragerSpec::True { window }
         | AveragerSpec::Restart { window }
         | AveragerSpec::Eh { window, .. } => window.k_at(t),
+        AveragerSpec::TwoTail { .. } => {
+            // twotail's weights are data-dependent (it switches tails on the
+            // observed variance), so there is no fixed profile to replay a
+            // unit impulse through.
+            let msg = "twotail has no fixed weight profile: the selected tail \
+                       is data-dependent; query the live stream's ess/window \
+                       via `ata query` instead";
+            return Err(msg.to_string().into());
+        }
     };
     let r = staleness_report(&aspec, t, k_t)?;
     println!("spec             : {}", aspec.label());

@@ -20,7 +20,7 @@
 //! background checkpointing: a named thread that invokes the supplied
 //! checkpoint closure every `interval`, stopping promptly on drop.
 
-use super::codec::{crc32, FORMAT_VERSION, SNAPSHOT_MAGIC};
+use super::codec::{crc32, FORMAT_VERSION, MIN_FORMAT_VERSION, SNAPSHOT_MAGIC};
 use std::fs;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
@@ -100,9 +100,10 @@ pub fn read_snapshot(path: &Path) -> Result<Vec<Vec<u8>>, String> {
         return Err("bad snapshot magic".into());
     }
     let version = u16::from_le_bytes([bytes[4], bytes[5]]);
-    if version != FORMAT_VERSION {
+    if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
         return Err(format!(
-            "snapshot format version {version} unsupported (this build speaks {FORMAT_VERSION})"
+            "snapshot format version {version} unsupported (this build speaks \
+             {MIN_FORMAT_VERSION}..={FORMAT_VERSION})"
         ));
     }
     let n = u32::from_le_bytes([bytes[6], bytes[7], bytes[8], bytes[9]]) as usize;

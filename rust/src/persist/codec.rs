@@ -40,7 +40,16 @@ pub const WAL_MAGIC: &[u8; 4] = b"ATAW";
 /// rejected with a version error instead of misparsing — a v1 persist
 /// directory needs the previous release to drain (checkpoint, export)
 /// before upgrading.
-pub const FORMAT_VERSION: u16 = 2;
+///
+/// v3: adds the `TWO_TAIL` estimator tag. Every v2 payload layout is
+/// unchanged, so v2 frames still decode ([`MIN_FORMAT_VERSION`]); only
+/// the envelope version written for NEW frames moved.
+pub const FORMAT_VERSION: u16 = 3;
+
+/// Oldest envelope version this build still decodes. v2 payloads are a
+/// strict subset of v3 (same layouts, fewer tags), so a v2 persist
+/// directory or exported state restores directly.
+pub const MIN_FORMAT_VERSION: u16 = 2;
 
 /// Estimator kind tags of the canonical state payloads.
 pub mod tag {
@@ -52,6 +61,7 @@ pub mod tag {
     pub const RAW_TAIL: u8 = 6;
     pub const RESTART: u8 = 7;
     pub const EH: u8 = 8;
+    pub const TWO_TAIL: u8 = 9;
 }
 
 /// Append-only little-endian byte writer.
@@ -292,9 +302,10 @@ pub fn unframe_state(bytes: &[u8]) -> Result<&[u8], String> {
         return Err("bad state magic (not an exported estimator state)".into());
     }
     let version = d.get_u16()?;
-    if version != FORMAT_VERSION {
+    if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
         return Err(format!(
-            "state format version {version} unsupported (this build speaks {FORMAT_VERSION})"
+            "state format version {version} unsupported (this build speaks \
+             {MIN_FORMAT_VERSION}..={FORMAT_VERSION})"
         ));
     }
     let len = d.get_u32()? as usize;

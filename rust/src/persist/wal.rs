@@ -39,7 +39,7 @@
 //! identical to per-append mode, so replay and recovery are oblivious
 //! to it.
 
-use super::codec::{crc32, Dec, Enc, FORMAT_VERSION, WAL_MAGIC};
+use super::codec::{crc32, Dec, Enc, FORMAT_VERSION, MIN_FORMAT_VERSION, WAL_MAGIC};
 use crate::metrics::Counter;
 use crate::testkit::chaos;
 use std::fs::{self, File, OpenOptions};
@@ -589,7 +589,8 @@ pub fn replay_bounded(
         // (the tail past it is unreadable by this build).
         if bytes.len() < HEADER_LEN as usize
             || &bytes[..4] != WAL_MAGIC
-            || u16::from_le_bytes([bytes[4], bytes[5]]) != FORMAT_VERSION
+            || !(MIN_FORMAT_VERSION..=FORMAT_VERSION)
+                .contains(&u16::from_le_bytes([bytes[4], bytes[5]]))
         {
             summary.clean = false;
             return Ok(summary);

@@ -352,6 +352,119 @@ fn stat_snapshots_survive_state_transfer_bitwise() {
     }
 }
 
+/// Regression (merge path bugfix): merging a never-pushed stream's
+/// snapshot into a populated pool must be an exact identity — no panic
+/// on the zero-length moment columns an unregistered-dim snapshot
+/// carries, no NaN variance, no degenerate (zero-width) band — in both
+/// argument orders, and `aggregate` must skip such inputs entirely.
+/// Before the fix, the dim assertion ran ahead of the empty-side
+/// guards (dim-0 empty snapshot → panic) and a NaN-moment side with
+/// positive ESS reached the combine arithmetic (pool → NaN).
+#[test]
+fn merging_empty_or_degenerate_snapshots_is_identity() {
+    // A genuinely populated pool from streamed data.
+    let d = 2usize;
+    let mut avg = AveragerSpec::Gea { c: 0.5 }.build(d).unwrap();
+    for t in 1..=80u64 {
+        avg.observe(&[sample(t, 0), sample(t, 1)]);
+    }
+    let (mut mean, mut var) = (vec![0.0; d], vec![0.0; d]);
+    let ess = avg.moments_into(&mut mean, &mut var).expect("moments");
+    let pool = StatSnapshot::from_moments(
+        Arc::from("pool"),
+        80,
+        ess,
+        ess,
+        mean,
+        var,
+        DEFAULT_Z,
+    );
+    assert!(pool.is_poolable());
+    assert!(pool.confidence_band.iter().all(|&b| b > 0.0));
+
+    // The degenerate inputs the serving path can produce or receive: a
+    // never-pushed stream (zero ESS, dim-matched zeros), the same with
+    // zero-length moment columns (snapshot taken before any dim was
+    // known), and corrupt federation payloads (NaN ESS / NaN variance
+    // with a positive ESS).
+    let empty_zeroed = StatSnapshot::from_moments(
+        Arc::from("never-pushed"),
+        0,
+        0.0,
+        0.0,
+        vec![0.0; d],
+        vec![0.0; d],
+        DEFAULT_Z,
+    );
+    let empty_dimless = StatSnapshot::from_moments(
+        Arc::from("never-pushed-dim0"),
+        0,
+        0.0,
+        0.0,
+        Vec::new(),
+        Vec::new(),
+        DEFAULT_Z,
+    );
+    let nan_ess = StatSnapshot::from_moments(
+        Arc::from("corrupt-ess"),
+        5,
+        5.0,
+        f64::NAN,
+        vec![1.0; d],
+        vec![1.0; d],
+        DEFAULT_Z,
+    );
+    let nan_var = StatSnapshot::from_moments(
+        Arc::from("corrupt-var"),
+        5,
+        5.0,
+        5.0,
+        vec![1.0; d],
+        vec![f64::NAN; d],
+        DEFAULT_Z,
+    );
+    for degenerate in [&empty_zeroed, &empty_dimless, &nan_ess, &nan_var] {
+        assert!(!degenerate.is_poolable(), "{}", degenerate.stream);
+        for merged in [
+            analytics::merge_snapshots(&pool, degenerate, DEFAULT_Z),
+            analytics::merge_snapshots(degenerate, &pool, DEFAULT_Z),
+        ] {
+            assert_eq!(
+                merged.ess.to_bits(),
+                pool.ess.to_bits(),
+                "{}: identity ess",
+                degenerate.stream
+            );
+            for i in 0..d {
+                assert_eq!(
+                    merged.mean[i].to_bits(),
+                    pool.mean[i].to_bits(),
+                    "{}: identity mean[{i}]",
+                    degenerate.stream
+                );
+                assert!(
+                    merged.variance[i].is_finite(),
+                    "{}: variance[{i}] = {}",
+                    degenerate.stream,
+                    merged.variance[i]
+                );
+                assert!(
+                    merged.confidence_band[i] > 0.0,
+                    "{}: band[{i}] collapsed to {}",
+                    degenerate.stream,
+                    merged.confidence_band[i]
+                );
+            }
+        }
+        // aggregate() skips it and reports only the real pool member.
+        let (agg, pooled) =
+            analytics::aggregate(&[pool.clone(), (*degenerate).clone()], DEFAULT_Z);
+        let agg = agg.expect("aggregate");
+        assert_eq!(pooled, 1, "{}", degenerate.stream);
+        assert!(agg.variance.iter().all(|v| v.is_finite()));
+    }
+}
+
 /// The federation router's merge contract: pooling per-node partial
 /// aggregates (scatter-gather over simulated cluster partitions) must
 /// equal the flat single-node pool over the union of streams, to

@@ -152,7 +152,7 @@ fn golden_covers_every_estimator_family() {
     let golden = load_golden();
     let traces = golden.get("traces").and_then(Json::as_obj).unwrap();
     let labels: Vec<&str> = traces.keys().map(String::as_str).collect();
-    for family in ["expk", "gea", "awa2", "awa3", "true", "raw"] {
+    for family in ["expk", "gea", "awa2", "awa3", "true", "raw", "restart", "twotail"] {
         assert!(
             labels.iter().any(|l| l.starts_with(family)),
             "golden file missing family '{family}' (have {labels:?})"

@@ -309,6 +309,226 @@ fn observe_many_over_random_splits_equals_sequential_observe() {
     });
 }
 
+/// Deterministic stream for the merge/oracle tests below.
+fn sample(t: u64, i: usize) -> f64 {
+    ((t as f64) * 0.379 + (i as f64) * 1.1).sin() * 3.0 + ((t as f64) * 0.05).cos()
+}
+
+fn export_bytes(a: &dyn Averager) -> Vec<u8> {
+    let mut enc = ata::persist::codec::Enc::new();
+    a.export_state(&mut enc);
+    enc.into_bytes()
+}
+
+/// `merge_state` must be deterministic regardless of argument order,
+/// and its returned [`MergeOutcome`] must name the winner explicitly.
+/// Poolers (exp/expk/gea/awa*/raw) absorb both sides' mass — the pooled
+/// value agrees across argument order to 1e-12 (floating-point pooling
+/// commutes only up to round-off). Precedence families (true/restart/
+/// eh/twotail) keep exactly one side — the surviving state must be
+/// BYTE-identical whichever side initiated the merge, including the
+/// equal-`t` tie, which resolves by canonical payload order rather than
+/// by who called whom.
+#[test]
+fn merge_is_order_independent_and_reports_the_winner() {
+    use ata::averagers::MergeOutcome;
+    use ata::persist::codec::Dec;
+    let specs: Vec<(AveragerSpec, bool)> = vec![
+        (AveragerSpec::Exp { gamma: 0.9 }, true),
+        (AveragerSpec::ExpK { k: 10 }, true),
+        (AveragerSpec::Gea { c: 0.5 }, true),
+        (
+            AveragerSpec::Awa {
+                window: WindowKind::Fixed { k: 7 },
+                accumulators: 2,
+            },
+            true,
+        ),
+        (
+            AveragerSpec::Awa {
+                window: WindowKind::Growing { c: 0.4 },
+                accumulators: 3,
+            },
+            true,
+        ),
+        (
+            AveragerSpec::Raw {
+                c: 0.5,
+                total_steps: 200,
+            },
+            true,
+        ),
+        (
+            AveragerSpec::True {
+                window: WindowKind::Fixed { k: 11 },
+            },
+            false,
+        ),
+        (
+            AveragerSpec::True {
+                window: WindowKind::Growing { c: 0.5 },
+            },
+            false,
+        ),
+        (
+            AveragerSpec::Restart {
+                window: WindowKind::Fixed { k: 7 },
+            },
+            false,
+        ),
+        (
+            AveragerSpec::Eh {
+                window: WindowKind::Fixed { k: 40 },
+                eps: 0.1,
+            },
+            false,
+        ),
+        (AveragerSpec::TwoTail { r: 0.5 }, false),
+    ];
+    let d = 2usize;
+    for (spec, pools) in specs {
+        let label = spec.label();
+        for (la, lb) in [(120u64, 180u64), (180, 120), (150, 150)] {
+            let ctx = format!("{label} la={la} lb={lb}");
+            // Two genuinely different streams.
+            let mut a = spec.build(d).unwrap();
+            let mut b = spec.build(d).unwrap();
+            for t in 1..=la {
+                a.observe(&[sample(t, 0), sample(t, 1)]);
+            }
+            for t in 1..=lb {
+                b.observe(&[sample(t + 17, 0) + 0.5, sample(t + 17, 1) - 0.25]);
+            }
+            let (bytes_a, bytes_b) = (export_bytes(&*a), export_bytes(&*b));
+
+            // Merge in both argument orders.
+            let mut ab = spec.build(d).unwrap();
+            ab.import_state(&mut Dec::new(&bytes_a)).unwrap();
+            let out_ab = ab.merge_state(&mut Dec::new(&bytes_b)).unwrap();
+            let mut ba = spec.build(d).unwrap();
+            ba.import_state(&mut Dec::new(&bytes_b)).unwrap();
+            let out_ba = ba.merge_state(&mut Dec::new(&bytes_a)).unwrap();
+
+            assert_eq!(ab.t(), ba.t(), "{ctx}: merged t");
+            if pools {
+                assert_eq!(out_ab, MergeOutcome::Pooled, "{ctx}");
+                assert_eq!(out_ba, MergeOutcome::Pooled, "{ctx}");
+                let (va, vb) = (ab.value().unwrap(), ba.value().unwrap());
+                assert_slice_close(&va, &vb, 1e-12, &ctx).unwrap();
+            } else {
+                assert_eq!(
+                    export_bytes(&*ab),
+                    export_bytes(&*ba),
+                    "{ctx}: precedence merge depends on argument order"
+                );
+                match (out_ab, out_ba) {
+                    // One side won; both orders agree on which.
+                    (MergeOutcome::TookPeer, MergeOutcome::KeptSelf)
+                    | (MergeOutcome::KeptSelf, MergeOutcome::TookPeer) => {}
+                    other => panic!("{ctx}: inconsistent winner flags {other:?}"),
+                }
+                // Longer stream always wins; only the equal-t tie falls
+                // through to the payload-order tie-break.
+                if la > lb {
+                    assert_eq!(out_ab, MergeOutcome::KeptSelf, "{ctx}");
+                } else if lb > la {
+                    assert_eq!(out_ab, MergeOutcome::TookPeer, "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+/// The two-tail switching rule against a brute-force oracle. Two
+/// claims, on synthetic drifting streams with KNOWN mean and noise:
+///
+/// 1. **Exactness**: the reported value is exactly the uniform mean of
+///    the last `selected_window()` samples — the estimator only ever
+///    *selects* a suffix, it never distorts it.
+/// 2. **Suboptimality**: the selected window's true squared error
+///    (known bias² + σ²/n) is within a constant factor of the best
+///    achievable over ALL suffix lengths, plus the rule's intrinsic
+///    bias-detection floor ~σ⁴/Δ² (a drift smaller than the noise on
+///    the tails' error estimates is invisible by design — the paper's
+///    var/ESS proxy, not a defect).
+///
+/// The claim is the paper's "once-in-a-while" optimality: maturity
+/// checks for ratio `r` are geometrically spaced (factor `1/(1−r)`), so
+/// a shift landing just after a late check stays legitimately invisible
+/// until the NEXT check. The test therefore places the shift early
+/// (first sixth) and runs long enough that every probed ratio gets
+/// post-shift checks before the horizon; r=0.75 (×4 check spacing) is
+/// probed only on stationary streams, where the claim is that the rule
+/// must NOT collapse the window. Bound constants empirically hold with
+/// ~10× margin over 15k randomized streams.
+#[test]
+fn two_tail_switching_rule_tracks_brute_force_oracle() {
+    use ata::averagers::TwoTail;
+    Runner::new("two-tail vs brute-force oracle", 0x77A1).run(20, |g| {
+        let total = g.usize_range(1200, 2000);
+        let sigma = g.f64_range(0.2, 1.0);
+        // Level shift of 4σ..12σ in the first sixth, or a stationary
+        // stream (the rule must NOT collapse the window).
+        let shifted = g.bool(0.7);
+        let r = if shifted {
+            [0.25, 0.5][g.usize_range(0, 1)]
+        } else {
+            [0.25, 0.5, 0.75][g.usize_range(0, 2)]
+        };
+        let s = g.usize_range(total / 8, total / 6);
+        let delta = g.f64_range(4.0, 12.0) * sigma;
+        let mut avg = TwoTail::new(1, r)?;
+        let mut xs: Vec<f64> = Vec::with_capacity(total);
+        for i in 1..=total {
+            let mu = if shifted && i > s { delta } else { 0.0 };
+            let x = mu + g.gaussian() * sigma;
+            xs.push(x);
+            avg.observe_scalar(x);
+        }
+        let ctx = format!(
+            "r={r} σ={sigma:.2} total={total} shift={}",
+            if shifted { format!("{delta:.2}@{s}") } else { "none".into() }
+        );
+
+        // 1. Exactness: value == mean of the last W raw samples.
+        let w = avg.selected_window() as usize;
+        if w == 0 || w > total {
+            return Err(format!("{ctx}: selected window {w} out of range"));
+        }
+        let direct: f64 = xs[total - w..].iter().sum::<f64>() / w as f64;
+        assert_close(
+            avg.value_scalar().unwrap(),
+            direct,
+            1e-9,
+            &format!("{ctx}: value vs brute-force suffix mean (W={w})"),
+        )?;
+
+        // 2. Suboptimality vs the best suffix, by the KNOWN moments.
+        let post = if shifted { total - s } else { total };
+        let err_of = |n: usize| -> f64 {
+            let bias = if n <= post {
+                0.0
+            } else {
+                delta * (n - post) as f64 / n as f64
+            };
+            bias * bias + sigma * sigma / n as f64
+        };
+        let best = (1..=total).map(err_of).fold(f64::INFINITY, f64::min);
+        let got = err_of(w);
+        let floor = if shifted {
+            4.0 * sigma.powi(4) / (delta * delta)
+        } else {
+            0.0
+        };
+        if got > 12.0 * best + floor + 1e-9 {
+            return Err(format!(
+                "{ctx}: selected W={w} err {got:.6} vs best {best:.6} (floor {floor:.6})"
+            ));
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn gea_effective_window_converges_for_random_c() {
     Runner::new("GEA k_eff/t → c", 0xA19).run(15, |g| {

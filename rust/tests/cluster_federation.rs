@@ -29,6 +29,7 @@ fn all_spec_strings() -> Vec<&'static str> {
         "raw(c=0.5,T=200)",
         "restart(k=6)",
         "eh(k=50,eps=0.1)",
+        "twotail(r=0.5)",
     ]
 }
 
@@ -137,7 +138,8 @@ fn federated_scatter_gather_matches_single_node() {
         .collect();
     assert!(
         placed.len() >= 2,
-        "10 streams should spread over >1 of 3 nodes, got {placed:?}"
+        "{} streams should spread over >1 of 3 nodes, got {placed:?}",
+        names.len()
     );
 
     let mut t0 = 0u64;
@@ -540,4 +542,118 @@ fn live_migration_dedups_delta_exactly_under_concurrent_pushes() {
     assert_eq!(fq.stats.len(), 1, "one row for the migrated stream");
     assert_eq!(fq.stats[0].t, total + 1, "the row is the target's copy");
     assert_eq!(fq.aggregated, 1);
+}
+
+// ---------------------------------------------------------------------------
+// 5. Standby promote mints a new handle era; one stale rejection must
+//    heal EVERY cached handle, not just the rejected stream's
+// ---------------------------------------------------------------------------
+
+#[test]
+fn promote_invalidates_all_cached_handles_in_one_purge() {
+    let dir_p = temp_dir("fed-era-primary");
+    let dir_s = temp_dir("fed-era-standby");
+    let primary = Arc::new(Coordinator::from_config(&persist_cfg(&dir_p, 2)).expect("primary"));
+    let server_p = serve(&primary);
+
+    let d = 2;
+    let names = ["era/true", "era/twotail", "era/gea"];
+    let specs = ["true(k=9)", "twotail(r=0.5)", "gea(c=0.5)"];
+    let mut cl = client(&server_p.addr().to_string(), 0xE7A1);
+    let era1: Vec<u64> = names
+        .iter()
+        .zip(specs)
+        .map(|(n, s)| cl.register(n, d, s).expect("era-1 register"))
+        .collect();
+    for (s, name) in names.iter().enumerate() {
+        let got = cl.push_many(name, 20, &flat_batch(s, 0, 20, d)).expect("era-1 push");
+        assert_eq!(got, (20, 0), "{name}");
+    }
+    cl.sync().expect("era-1 sync");
+
+    // Replicate, fence, promote: the standard failover dance.
+    let standby = Standby::start("127.0.0.1:0", &dir_s).expect("standby");
+    let mut shipper = Shipper::new(
+        Arc::clone(&primary),
+        client(&standby.addr().to_string(), 0xE7A2),
+    )
+    .expect("shipper");
+    let report = shipper.ship_once().expect("ship");
+    assert_eq!(report.lag_bytes, 0, "fully shipped before the kill");
+    drop(shipper);
+    drop(server_p);
+    drop(primary);
+    let (promoted, recovery) = standby.promote(persist_cfg(&dir_p, 2)).expect("promote");
+    assert!(recovery.wal_clean, "shipped WAL replays clean");
+    let promoted = Arc::new(promoted);
+    let server_n = serve(&promoted);
+
+    // The promoted incarnation minted a disjoint handle space: every
+    // era-1 handle is dead, not remapped onto the recovered streams.
+    let mut probe = client(&server_n.addr().to_string(), 0xE7A3);
+    for (name, h1) in names.iter().zip(&era1) {
+        let h2 = probe.resolve(name).expect("era-2 resolve");
+        assert_ne!(h2, *h1, "{name}: promoted node reused an era-1 handle");
+    }
+
+    // A client whose connection (and handle cache) outlives the next
+    // era flip — a failover behind a stable address. No retry budget,
+    // so recovery can only come from the breadth of the purge: the
+    // first stale rejection must flush the WHOLE cache (the entire
+    // handle era is dead), letting every other stream re-resolve by
+    // name on its first attempt. A per-stream purge would leave the
+    // other streams replaying dead handles and failing too.
+    let mut stale = RetryingClient::with_policy(
+        &server_n.addr().to_string(),
+        ProtocolChoice::Auto,
+        RetryPolicy {
+            max_attempts: 1,
+            ..fast_policy(0xE7A4)
+        },
+    );
+    for (s, name) in names.iter().enumerate() {
+        let got = stale.push_many(name, 1, &flat_batch(s, 20, 1, d)).expect("prime cache");
+        assert_eq!(got, (1, 0), "{name}: cache-priming push");
+    }
+    stale.sync().expect("prime sync");
+    // Era flip under the live connection: every stream re-registers in
+    // a fresh handle range (unregister + register is exactly what a
+    // recovery restart does to the handle space).
+    for (name, spec) in names.iter().zip(specs) {
+        promoted.unregister(name).expect("fence stream");
+        promoted
+            .register(name, d, AveragerSpec::parse(spec).expect("spec"))
+            .expect("era-3 register");
+    }
+
+    // The rejected push itself has no retry budget left, so the stale
+    // error surfaces — but it must take the whole cache with it.
+    let err = stale
+        .push_many(names[0], 1, &flat_batch(0, 21, 1, d))
+        .expect_err("dead era-2 handle with max_attempts=1");
+    assert!(
+        err.to_string().contains("handle"),
+        "structured stale-handle error, got: {err}"
+    );
+    // Every OTHER stream heals on its first attempt: its cache entry
+    // was flushed by the rejection above.
+    for (s, name) in names.iter().enumerate().skip(1) {
+        let got = stale
+            .push_many(name, 1, &flat_batch(s, 21, 1, d))
+            .unwrap_or_else(|e| panic!("{name}: first attempt after the purge: {e}"));
+        assert_eq!(got, (1, 0), "{name}: post-purge push");
+    }
+    // And the rejected stream itself heals on its next call.
+    let got = stale
+        .push_many(names[0], 1, &flat_batch(0, 21, 1, d))
+        .expect("rejected stream self-heals");
+    assert_eq!(got, (1, 0));
+    stale.sync().expect("era-3 sync");
+    for name in &names {
+        assert_eq!(
+            stale.snapshot(name).expect("era-3 snapshot").t,
+            1,
+            "{name}: exactly the post-flip push landed"
+        );
+    }
 }

@@ -11,7 +11,7 @@ use ata::testkit::{temp_dir, Runner};
 use std::path::Path;
 
 /// Every `AveragerSpec` variant (both window kinds where applicable) —
-/// the first four build planar banks, the rest fall back to slots.
+/// a mix of planar-bank and slot backings.
 fn all_specs() -> Vec<AveragerSpec> {
     vec![
         AveragerSpec::Exp { gamma: 0.9 },
@@ -42,6 +42,7 @@ fn all_specs() -> Vec<AveragerSpec> {
             window: WindowKind::Fixed { k: 50 },
             eps: 0.1,
         },
+        AveragerSpec::TwoTail { r: 0.5 },
     ]
 }
 
